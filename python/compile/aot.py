@@ -1,0 +1,169 @@
+"""AOT compile path: lower every model variant to HLO text artifacts.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<name>.hlo.txt  — one per variant
+  artifacts/manifest.txt    — one line per artifact: `key=value` pairs with
+                              input/output signatures the rust runtime
+                              parses (runtime/artifact.rs).
+
+Run once via `make artifacts`; python never executes at request time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.stencils import spec as stencil_spec
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(shapes) -> str:
+    if not isinstance(shapes, (tuple, list)):
+        shapes = (shapes,)
+
+    def one(s):
+        dt = {"float32": "f32", "float64": "f64", "int32": "i32"}[str(jnp.dtype(s.dtype))]
+        return f"{dt}[{','.join(str(d) for d in s.shape)}]"
+
+    return ",".join(one(s) for s in shapes)
+
+
+def poisson2d_nnz(g: int) -> int:
+    """NNZ of the 5-point Laplacian on a g x g grid (deterministic; the
+    rust generator sparse::gen::poisson2d produces the same structure)."""
+    return 5 * g * g - 4 * g
+
+
+class Builder:
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.lines = []
+
+    def emit(self, name: str, fn, args, return_tuple: bool = True, **meta):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered, return_tuple=return_tuple)
+        path = os.path.join(self.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *args)
+        kv = {
+            "name": name,
+            "in": _sig(args),
+            "out": _sig(out_shapes),
+            "tuple": "1" if return_tuple else "0",
+        }
+        kv.update({k: str(v) for k, v in meta.items()})
+        self.lines.append(" ".join(f"{k}={v}" for k, v in kv.items()))
+        print(f"  {name}: {len(text)} chars, in={kv['in']}")
+
+    def finish(self):
+        with open(os.path.join(self.outdir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+        print(f"wrote {len(self.lines)} artifacts + manifest to {self.outdir}")
+
+
+# Stencil artifact set executed by the rust runtime. interior sizes are
+# CPU-scale (paper-scale domains are covered by simgpu); `steps` is the
+# fused time-step count of the PERKS executable.
+STENCIL_SET = [
+    # (bench, interior, dtype, perks_steps)
+    ("2d5pt", (128, 128), "f32", 16),
+    # row-partitioned shard for the multi-device halo-exchange runtime
+    # (coordinator::multidev): two 64-row shards compose a 128x128 domain
+    ("2d5pt", (64, 128), "f32", 16),
+    ("2d9pt", (128, 128), "f32", 16),
+    ("2ds9pt", (128, 128), "f32", 16),
+    ("2d5pt", (64, 64), "f64", 16),
+    ("3d7pt", (32, 32, 32), "f32", 8),
+    ("3d27pt", (32, 32, 32), "f32", 8),
+]
+
+CG_GRID = 32  # poisson2d grid side: n = 1024
+CG_PERKS_ITERS = 8
+
+
+def build(outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    b = Builder(outdir)
+    dtypes = {"f32": jnp.float32, "f64": jnp.float64}
+
+    for bench, interior, dt, steps in STENCIL_SET:
+        dtype = dtypes[dt]
+        dims = "x".join(str(d) for d in interior)
+        fn, args = model.stencil_step_fn(bench, interior, dtype)
+        b.emit(
+            f"stencil_{bench}_{dims}_{dt}_step", fn, args,
+            kind="stencil_step", bench=bench, interior=dims, dtype=dt, steps=1,
+            radius=stencil_spec(bench).radius,
+        )
+        fn, args = model.stencil_perks_fn(bench, interior, steps, dtype)
+        b.emit(
+            f"stencil_{bench}_{dims}_{dt}_perks{steps}", fn, args,
+            kind="stencil_perks", bench=bench, interior=dims, dtype=dt, steps=steps,
+            radius=stencil_spec(bench).radius,
+        )
+        # Untupled ("raw") variants: single array output, so the rust
+        # host-loop can chain device buffers via execute_b without a host
+        # round trip — the fair non-PERKS baseline (launch overhead only).
+        def unwrap(f):
+            return lambda x: f(x)[0]
+
+        fn1, args1 = model.stencil_step_fn(bench, interior, dtype)
+        b.emit(
+            f"stencil_{bench}_{dims}_{dt}_step_raw", unwrap(fn1), args1,
+            return_tuple=False,
+            kind="stencil_step", bench=bench, interior=dims, dtype=dt, steps=1,
+            radius=stencil_spec(bench).radius,
+        )
+        fnk, argsk = model.stencil_perks_fn(bench, interior, steps, dtype)
+        b.emit(
+            f"stencil_{bench}_{dims}_{dt}_perks{steps}_raw", unwrap(fnk), argsk,
+            return_tuple=False,
+            kind="stencil_perks", bench=bench, interior=dims, dtype=dt, steps=steps,
+            radius=stencil_spec(bench).radius,
+        )
+
+    n = CG_GRID * CG_GRID
+    nnz = poisson2d_nnz(CG_GRID)
+    fn, args = model.cg_step_fn(n, nnz)
+    b.emit(f"cg_step_n{n}", fn, args, kind="cg_step", n=n, nnz=nnz, dtype="f32", iters=1)
+    fn, args = model.cg_perks_fn(n, nnz, CG_PERKS_ITERS)
+    b.emit(
+        f"cg_perks{CG_PERKS_ITERS}_n{n}", fn, args,
+        kind="cg_perks", n=n, nnz=nnz, dtype="f32", iters=CG_PERKS_ITERS,
+    )
+    fn, args = model.residual_fn(n, nnz)
+    b.emit(f"cg_residual_n{n}", fn, args, kind="cg_residual", n=n, nnz=nnz, dtype="f32")
+
+    b.finish()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

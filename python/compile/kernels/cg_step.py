@@ -1,0 +1,55 @@
+"""Layer-1 Pallas kernel: fused conjugate-gradient vector update.
+
+A CG iteration is SpMV (irregular; done at L2 with a gather/segment-add
+graph) followed by a chain of BLAS-1 ops: 2 dots, 2 axpys, 1 xpay. In the
+host-loop model each of those ops streams the vectors from device memory.
+This kernel fuses them into one pass with the vectors resident in VMEM —
+the CG analog of the paper's caching of the residual vector r (§III-B-2:
+cache priority r > A).
+
+Inputs:  x, r, p, ap : f[n]   rr_old : f[1]  (r.r from the previous step)
+Outputs: x', r', p'  : f[n]   rr_new : f[1]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cg_update_kernel(x_ref, r_ref, p_ref, ap_ref, rr_ref, xo_ref, ro_ref, po_ref, rro_ref):
+    x = x_ref[...]
+    r = r_ref[...]
+    p = p_ref[...]
+    ap = ap_ref[...]
+    rr_old = rr_ref[0]
+
+    pap = jnp.sum(p * ap)
+    alpha = rr_old / pap
+    x_new = x + alpha * p
+    r_new = r - alpha * ap
+    rr_new = jnp.sum(r_new * r_new)
+    beta = rr_new / rr_old
+    p_new = r_new + beta * p
+
+    xo_ref[...] = x_new
+    ro_ref[...] = r_new
+    po_ref[...] = p_new
+    rro_ref[...] = rr_new.reshape((1,))
+
+
+def cg_vector_update(x, r, p, ap, rr_old):
+    """Fused CG vector update; returns (x', r', p', rr_new)."""
+    n = x.shape[0]
+    dt = x.dtype
+    return pl.pallas_call(
+        _cg_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), dt),
+            jax.ShapeDtypeStruct((n,), dt),
+            jax.ShapeDtypeStruct((n,), dt),
+            jax.ShapeDtypeStruct((1,), dt),
+        ),
+        interpret=True,
+    )(x, r, p, ap, rr_old)

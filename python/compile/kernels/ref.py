@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness references: deliberately naive, no Pallas,
+no clever slicing — just weighted shifted adds on the padded array. pytest
+asserts the Pallas kernels (and transitively the AOT HLO executed from
+rust) match these to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.stencils import spec as stencil_spec
+
+
+def stencil_step_2d(x_pad, name: str):
+    """One Jacobi step of the named 2D stencil on a padded array.
+
+    `x_pad` has shape (H + 2r, W + 2r); the boundary ring of width r is a
+    Dirichlet boundary (left untouched); only the interior is updated.
+    """
+    s = stencil_spec(name)
+    r = s.radius
+    h = x_pad.shape[0] - 2 * r
+    w = x_pad.shape[1] - 2 * r
+    acc = jnp.zeros((h, w), dtype=x_pad.dtype)
+    for (dy, dx), wt in zip(s.offsets, s.weights()):
+        acc = acc + jnp.asarray(wt, dtype=x_pad.dtype) * x_pad[
+            r + dy : r + dy + h, r + dx : r + dx + w
+        ]
+    return x_pad.at[r : r + h, r : r + w].set(acc)
+
+
+def stencil_step_3d(x_pad, name: str):
+    """One Jacobi step of the named 3D stencil on a padded array."""
+    s = stencil_spec(name)
+    r = s.radius
+    d = x_pad.shape[0] - 2 * r
+    h = x_pad.shape[1] - 2 * r
+    w = x_pad.shape[2] - 2 * r
+    acc = jnp.zeros((d, h, w), dtype=x_pad.dtype)
+    for (dz, dy, dx), wt in zip(s.offsets, s.weights()):
+        acc = acc + jnp.asarray(wt, dtype=x_pad.dtype) * x_pad[
+            r + dz : r + dz + d, r + dy : r + dy + h, r + dx : r + dx + w
+        ]
+    return x_pad.at[r : r + d, r : r + h, r : r + w].set(acc)
+
+
+def stencil_multi_step(x_pad, name: str, steps: int):
+    """`steps` applications of the single-step oracle (any dims)."""
+    s = stencil_spec(name)
+    step = stencil_step_2d if s.dims == 2 else stencil_step_3d
+    for _ in range(steps):
+        x_pad = step(x_pad, name)
+    return x_pad
+
+
+def spmv_coo(data, cols, rows, x, n: int):
+    """Sparse matrix-vector product in COO-with-row-ids form.
+
+    This is the oracle for the L2 spmv graph: y[rows[k]] += data[k] * x[cols[k]].
+    """
+    return jnp.zeros((n,), dtype=x.dtype).at[rows].add(data * x[cols])
+
+
+def cg_vector_update(x, r, p, ap, rr_old):
+    """One fused CG vector update (everything after SpMV in a CG iteration).
+
+    alpha = rr_old / (p . Ap); x += alpha p; r -= alpha Ap;
+    rr_new = r . r; beta = rr_new / rr_old; p = r + beta p.
+    Returns (x', r', p', rr_new) with rr_new shaped (1,).
+    """
+    pap = jnp.sum(p * ap)
+    alpha = rr_old[0] / pap
+    x_new = x + alpha * p
+    r_new = r - alpha * ap
+    rr_new = jnp.sum(r_new * r_new)
+    beta = rr_new / rr_old[0]
+    p_new = r_new + beta * p
+    return x_new, r_new, p_new, rr_new.reshape((1,))
+
+
+def cg_iteration(data, cols, rows, x, r, p, rr, n: int):
+    """One full CG iteration: SpMV + fused vector update."""
+    ap = spmv_coo(data, cols, rows, p, n)
+    return cg_vector_update(x, r, p, ap, rr)

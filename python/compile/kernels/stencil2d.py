@@ -1,0 +1,121 @@
+"""Layer-1 Pallas kernels for 2D iterative stencils.
+
+Three kernels, mirroring the paper's execution models:
+
+* `step`      — one Jacobi step, whole padded domain as a single VMEM
+                block. This is the *baseline* building block: the host
+                (rust L3) re-invokes the lowered executable once per time
+                step, paying the device-memory round trip in between —
+                exactly the host-loop model of Fig 3 (left).
+* `persistent`— the PERKS kernel: the time loop lives *inside* the kernel
+                and the domain stays resident in VMEM across steps (the
+                register/shared-memory cache of Fig 3 right). The
+                loop-carried dependence of `lax.fori_loop` plays the role
+                of `grid.sync()`.
+* `tiled_step`— one Jacobi step with an explicit BlockSpec tiling: the
+                output is partitioned into (tile x tile) VMEM blocks and
+                each grid instance reads its tile + halo from the padded
+                input. This expresses the HBM<->VMEM schedule that the CUDA
+                code expressed with thread blocks + shared memory.
+
+All kernels use interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.stencils import spec as stencil_spec
+
+
+def _apply_2d(buf, name: str, h: int, w: int):
+    """Weighted shifted-adds over the interior of a padded 2D buffer."""
+    s = stencil_spec(name)
+    r = s.radius
+    acc = None
+    for (dy, dx), wt in zip(s.offsets, s.weights()):
+        term = jnp.asarray(wt, dtype=buf.dtype) * jax.lax.slice(
+            buf, (r + dy, r + dx), (r + dy + h, r + dx + w)
+        )
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _step_kernel(x_ref, o_ref, *, name: str):
+    r = stencil_spec(name).radius
+    h = x_ref.shape[0] - 2 * r
+    w = x_ref.shape[1] - 2 * r
+    buf = x_ref[...]
+    core = _apply_2d(buf, name, h, w)
+    o_ref[...] = jax.lax.dynamic_update_slice(buf, core, (r, r))
+
+
+def step(x_pad, name: str):
+    """One Jacobi step of the named 2D stencil (padded domain in, out)."""
+    return pl.pallas_call(
+        functools.partial(_step_kernel, name=name),
+        out_shape=jax.ShapeDtypeStruct(x_pad.shape, x_pad.dtype),
+        interpret=True,
+    )(x_pad)
+
+
+def _persistent_kernel(x_ref, o_ref, *, name: str, steps: int):
+    r = stencil_spec(name).radius
+    h = x_ref.shape[0] - 2 * r
+    w = x_ref.shape[1] - 2 * r
+    # Load once from HBM-analog; the fori_loop carries the domain through
+    # VMEM for all `steps` — this is the PERKS cache residency.
+    buf = x_ref[...]
+
+    def body(_, b):
+        core = _apply_2d(b, name, h, w)
+        return jax.lax.dynamic_update_slice(b, core, (r, r))
+
+    o_ref[...] = jax.lax.fori_loop(0, steps, body, buf)
+
+
+def persistent(x_pad, name: str, steps: int):
+    """`steps` Jacobi steps inside ONE kernel (the PERKS execution model)."""
+    return pl.pallas_call(
+        functools.partial(_persistent_kernel, name=name, steps=steps),
+        out_shape=jax.ShapeDtypeStruct(x_pad.shape, x_pad.dtype),
+        interpret=True,
+    )(x_pad)
+
+
+def _tiled_kernel(x_ref, o_ref, *, name: str, tile: int):
+    s = stencil_spec(name)
+    r = s.radius
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    # Read this tile plus its halo ring from the full padded input. The
+    # load is the HBM->VMEM transfer the CUDA kernel did into shared mem.
+    blk = x_ref[pl.dslice(ti * tile, tile + 2 * r), pl.dslice(tj * tile, tile + 2 * r)]
+    o_ref[...] = _apply_2d(blk, name, tile, tile)
+
+
+def tiled_step(x_pad, name: str, tile: int):
+    """One step with explicit (tile x tile) output blocking.
+
+    Returns the *interior* (H x W) array; the caller re-pads. Interior
+    dimensions must be divisible by `tile`.
+    """
+    s = stencil_spec(name)
+    r = s.radius
+    h = x_pad.shape[0] - 2 * r
+    w = x_pad.shape[1] - 2 * r
+    assert h % tile == 0 and w % tile == 0, (h, w, tile)
+    grid = (h // tile, w // tile)
+    return pl.pallas_call(
+        functools.partial(_tiled_kernel, name=name, tile=tile),
+        grid=grid,
+        in_specs=[pl.BlockSpec(x_pad.shape, lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x_pad.dtype),
+        interpret=True,
+    )(x_pad)

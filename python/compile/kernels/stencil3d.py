@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernels for 3D iterative stencils.
+
+Same structure as stencil2d: `step` (baseline, one step per kernel
+invocation) and `persistent` (PERKS: in-kernel time loop, domain resident
+in VMEM). 3D domains are small in the executed path (the simulator covers
+paper-scale 256^3 domains); see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.stencils import spec as stencil_spec
+
+
+def _apply_3d(buf, name: str, d: int, h: int, w: int):
+    s = stencil_spec(name)
+    r = s.radius
+    acc = None
+    for (dz, dy, dx), wt in zip(s.offsets, s.weights()):
+        term = jnp.asarray(wt, dtype=buf.dtype) * jax.lax.slice(
+            buf, (r + dz, r + dy, r + dx), (r + dz + d, r + dy + h, r + dx + w)
+        )
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _interior(x_ref):
+    return tuple(s for s in x_ref.shape)
+
+
+def _step_kernel(x_ref, o_ref, *, name: str):
+    r = stencil_spec(name).radius
+    d, h, w = (s - 2 * r for s in x_ref.shape)
+    buf = x_ref[...]
+    core = _apply_3d(buf, name, d, h, w)
+    o_ref[...] = jax.lax.dynamic_update_slice(buf, core, (r, r, r))
+
+
+def step(x_pad, name: str):
+    """One Jacobi step of the named 3D stencil (padded domain in, out)."""
+    return pl.pallas_call(
+        functools.partial(_step_kernel, name=name),
+        out_shape=jax.ShapeDtypeStruct(x_pad.shape, x_pad.dtype),
+        interpret=True,
+    )(x_pad)
+
+
+def _persistent_kernel(x_ref, o_ref, *, name: str, steps: int):
+    r = stencil_spec(name).radius
+    d, h, w = (s - 2 * r for s in x_ref.shape)
+    buf = x_ref[...]
+
+    def body(_, b):
+        core = _apply_3d(b, name, d, h, w)
+        return jax.lax.dynamic_update_slice(b, core, (r, r, r))
+
+    o_ref[...] = jax.lax.fori_loop(0, steps, body, buf)
+
+
+def persistent(x_pad, name: str, steps: int):
+    """`steps` Jacobi steps inside ONE kernel (the PERKS execution model)."""
+    return pl.pallas_call(
+        functools.partial(_persistent_kernel, name=name, steps=steps),
+        out_shape=jax.ShapeDtypeStruct(x_pad.shape, x_pad.dtype),
+        interpret=True,
+    )(x_pad)

@@ -1,0 +1,137 @@
+"""Layer-2 JAX compute graphs for the PERKS reproduction.
+
+Each public function returns a *jittable* function plus its example
+arguments, ready for AOT lowering by `aot.py`. Two execution models per
+solver, mirroring Fig 3 of the paper:
+
+* `*_step`  — ONE time step / iteration. The rust coordinator re-invokes
+              the lowered executable N times (host-loop model); every
+              invocation round-trips the state through device memory.
+* `*_perks` — N steps fused into one executable via `lax.fori_loop`
+              around the persistent Pallas kernel; state stays on-chip.
+
+Python here is build-time only: these graphs are lowered once to HLO text
+and never imported at runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import cg_step as cg_kernels
+from compile.kernels import stencil2d, stencil3d
+from compile.stencils import spec as stencil_spec
+
+
+# --------------------------------------------------------------------------
+# Stencils
+# --------------------------------------------------------------------------
+
+def padded_shape(name: str, interior):
+    r = stencil_spec(name).radius
+    return tuple(s + 2 * r for s in interior)
+
+
+def stencil_step_fn(name: str, interior, dtype=jnp.float32):
+    """One stencil step: padded domain -> padded domain (tuple of 1)."""
+    s = stencil_spec(name)
+    mod = stencil2d if s.dims == 2 else stencil3d
+    shape = padded_shape(name, interior)
+
+    def fn(x_pad):
+        return (mod.step(x_pad, name),)
+
+    return fn, (jax.ShapeDtypeStruct(shape, dtype),)
+
+
+def stencil_perks_fn(name: str, interior, steps: int, dtype=jnp.float32):
+    """`steps` stencil steps in one executable (PERKS execution model).
+
+    The time loop is *inside* the Pallas kernel, so the domain stays in
+    VMEM across steps; the fori_loop dependence is the device-wide barrier.
+    """
+    s = stencil_spec(name)
+    mod = stencil2d if s.dims == 2 else stencil3d
+    shape = padded_shape(name, interior)
+
+    def fn(x_pad):
+        return (mod.persistent(x_pad, name, steps),)
+
+    return fn, (jax.ShapeDtypeStruct(shape, dtype),)
+
+
+# --------------------------------------------------------------------------
+# Conjugate gradient
+# --------------------------------------------------------------------------
+
+def spmv(data, cols, rows, x, n: int):
+    """L2 SpMV graph: COO-with-row-ids gather + segment add.
+
+    The rust substrate implements merge-based SpMV for the CPU hot path;
+    this graph is its XLA-side counterpart feeding the fused Pallas update.
+    """
+    return jnp.zeros((n,), dtype=x.dtype).at[rows].add(data * x[cols])
+
+
+def cg_step_fn(n: int, nnz: int, dtype=jnp.float32):
+    """One CG iteration: (data, cols, rows, x, r, p, rr) -> (x, r, p, rr)."""
+
+    def fn(data, cols, rows, x, r, p, rr):
+        ap = spmv(data, cols, rows, p, n)
+        x2, r2, p2, rr2 = cg_kernels.cg_vector_update(x, r, p, ap, rr)
+        return (x2, r2, p2, rr2)
+
+    args = (
+        jax.ShapeDtypeStruct((nnz,), dtype),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), dtype),
+        jax.ShapeDtypeStruct((n,), dtype),
+        jax.ShapeDtypeStruct((n,), dtype),
+        jax.ShapeDtypeStruct((1,), dtype),
+    )
+    return fn, args
+
+
+def cg_perks_fn(n: int, nnz: int, iters: int, dtype=jnp.float32):
+    """`iters` CG iterations fused into one executable.
+
+    Matrix data (the paper's cached A) and the vectors (cached r/p/x) are
+    loop-invariant resp. loop-carried: XLA keeps them device-resident for
+    the whole batch of iterations — the PERKS model for Krylov solvers.
+    """
+
+    def fn(data, cols, rows, x, r, p, rr):
+        def body(_, state):
+            x, r, p, rr = state
+            ap = spmv(data, cols, rows, p, n)
+            return cg_kernels.cg_vector_update(x, r, p, ap, rr)
+
+        x2, r2, p2, rr2 = jax.lax.fori_loop(0, iters, body, (x, r, p, rr))
+        return (x2, r2, p2, rr2)
+
+    _, args = cg_step_fn(n, nnz, dtype)
+    return fn, args
+
+
+# --------------------------------------------------------------------------
+# Residual helper (used by the e2e example to verify convergence on-device)
+# --------------------------------------------------------------------------
+
+def residual_fn(n: int, nnz: int, dtype=jnp.float32):
+    """||b - Ax||^2 for convergence checking: returns a (1,) array."""
+
+    def fn(data, cols, rows, x, b):
+        ax = spmv(data, cols, rows, x, n)
+        d = b - ax
+        return (jnp.sum(d * d).reshape((1,)),)
+
+    args = (
+        jax.ShapeDtypeStruct((nnz,), dtype),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), dtype),
+        jax.ShapeDtypeStruct((n,), dtype),
+    )
+    return fn, args

@@ -1,0 +1,120 @@
+"""Canonical stencil benchmark catalog (Table III of the PERKS paper).
+
+This module is the single source of truth on the python side for the 13
+stencil benchmarks: their dimensionality, neighbourhood pattern, radius and
+— critically — the exact (offset, weight) list. The rust substrate
+(`rust/src/stencil/shape.rs`) mirrors the same construction so that the jnp
+oracle, the Pallas kernels, the AOT-lowered HLO and the rust CPU gold
+executor all compute bit-identical Jacobi updates.
+
+Weight rule (deterministic, language-independent): offsets are sorted
+lexicographically; weight_i = (i + 1) / sum_j (j + 1). Weights sum to 1 so
+repeated Jacobi application stays bounded (convex combination).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class StencilSpec:
+    name: str
+    dims: int  # 2 or 3
+    radius: int
+    # list of integer offset tuples, sorted lexicographically; len == points
+    offsets: tuple
+    flops_per_cell: int  # as reported in Table III
+
+    @property
+    def points(self) -> int:
+        return len(self.offsets)
+
+    def weights(self) -> list:
+        n = len(self.offsets)
+        total = n * (n + 1) // 2
+        return [(i + 1) / total for i in range(n)]
+
+
+def _star2d(radius: int):
+    offs = {(0, 0)}
+    for r in range(1, radius + 1):
+        offs |= {(r, 0), (-r, 0), (0, r), (0, -r)}
+    return tuple(sorted(offs))
+
+
+def _box2d(radius: int):
+    offs = set(itertools.product(range(-radius, radius + 1), repeat=2))
+    return tuple(sorted(offs))
+
+
+def _star3d(radius: int):
+    offs = {(0, 0, 0)}
+    for r in range(1, radius + 1):
+        offs |= {(r, 0, 0), (-r, 0, 0), (0, r, 0), (0, -r, 0), (0, 0, r), (0, 0, -r)}
+    return tuple(sorted(offs))
+
+
+def _box3d(radius: int):
+    offs = set(itertools.product(range(-radius, radius + 1), repeat=3))
+    return tuple(sorted(offs))
+
+
+def _faces_edges3d():
+    """19-point 3D Poisson stencil: center + 6 faces + 12 edges."""
+    offs = set()
+    for o in itertools.product((-1, 0, 1), repeat=3):
+        if sum(abs(v) for v in o) <= 2:
+            offs.add(o)
+    return tuple(sorted(offs))
+
+
+def _pt17_3d():
+    """17-point order-1 3D stencil: center + 6 faces + 8 corners + (0,0,+-2).
+
+    The literature (Rawat et al.) is not prescriptive about the exact
+    17-point neighbourhood; we fix a symmetric definition with 2*17=34
+    flops/cell to match Table III and document it here. DESIGN.md records
+    this as a (benign) substitution.
+    """
+    offs = {(0, 0, 0), (0, 0, 2), (0, 0, -2)}
+    for o in itertools.product((-1, 1), repeat=3):
+        offs.add(o)
+    for o in ((1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1), (0, 0, -1)):
+        offs.add(o)
+    return tuple(sorted(offs))
+
+
+CATALOG: dict = {}
+
+
+def _reg(name, dims, radius, offsets, flops):
+    CATALOG[name] = StencilSpec(name, dims, radius, offsets, flops)
+
+
+_reg("2d5pt", 2, 1, _star2d(1), 10)
+_reg("2ds9pt", 2, 2, _star2d(2), 18)
+_reg("2d13pt", 2, 3, _star2d(3), 26)
+_reg("2d17pt", 2, 4, _star2d(4), 34)
+_reg("2d21pt", 2, 5, _star2d(5), 42)
+_reg("2ds25pt", 2, 6, _star2d(6), 59)
+_reg("2d9pt", 2, 1, _box2d(1), 18)
+_reg("2d25pt", 2, 2, _box2d(2), 50)
+_reg("3d7pt", 3, 1, _star3d(1), 14)
+_reg("3d13pt", 3, 2, _star3d(2), 26)
+_reg("3d17pt", 3, 2, _pt17_3d(), 34)
+_reg("3d27pt", 3, 1, _box3d(1), 54)
+_reg("poisson", 3, 1, _faces_edges3d(), 38)
+
+
+def spec(name: str) -> StencilSpec:
+    return CATALOG[name]
+
+
+def names_2d():
+    return [n for n, s in CATALOG.items() if s.dims == 2]
+
+
+def names_3d():
+    return [n for n, s in CATALOG.items() if s.dims == 3]

@@ -1,0 +1,70 @@
+"""L2 model graphs: execution-model equivalence at the JAX level."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, stencils
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("name", ["2d5pt", "2d9pt", "2ds25pt"])
+def test_stencil_perks_equals_iterated_step(name):
+    steps = 5
+    fn_step, (spec_in,) = model.stencil_step_fn(name, (12, 16))
+    fn_perks, _ = model.stencil_perks_fn(name, (12, 16), steps)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(spec_in.shape), jnp.float32)
+    want = x
+    for _ in range(steps):
+        (want,) = fn_step(want)
+    (got,) = fn_perks(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["3d7pt", "poisson"])
+def test_stencil_3d_model_matches_oracle(name):
+    fn, (spec_in,) = model.stencil_perks_fn(name, (6, 6, 6), 3)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(spec_in.shape), jnp.float32)
+    (got,) = fn(x)
+    want = ref.stencil_multi_step(x, name, 3)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_padded_shape_accounts_radius():
+    assert model.padded_shape("2ds25pt", (10, 10)) == (22, 22)  # radius 6
+    assert model.padded_shape("3d7pt", (4, 4, 4)) == (6, 6, 6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=64),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_spmv_property_random_coo(n, seed):
+    rng = np.random.default_rng(seed)
+    nnz = 3 * n
+    rows = jnp.asarray(np.sort(rng.integers(0, n, nnz)).astype(np.int32))
+    cols = jnp.asarray(rng.integers(0, n, nnz).astype(np.int32))
+    data = jnp.asarray(rng.standard_normal(nnz), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = model.spmv(data, cols, rows, x, n)
+    dense = np.zeros((n, n), np.float64)
+    for r, c, v in zip(np.asarray(rows), np.asarray(cols), np.asarray(data)):
+        dense[r, c] += v
+    np.testing.assert_allclose(got, dense @ np.asarray(x, np.float64), rtol=3e-4, atol=3e-4)
+
+
+def test_jit_compile_all_graph_kinds():
+    """Every graph kind used by aot.py must trace + jit cleanly."""
+    for fn, args in [
+        model.stencil_step_fn("2d5pt", (8, 8)),
+        model.stencil_perks_fn("2d9pt", (8, 8), 4),
+        model.cg_step_fn(64, 256),
+        model.cg_perks_fn(64, 256, 4),
+        model.residual_fn(64, 256),
+    ]:
+        jax.jit(fn).lower(*args)  # lowering implies successful trace

@@ -1,0 +1,109 @@
+"""Pallas 2D stencil kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, dtypes and benchmarks; fixed-seed numpy data.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import stencils
+from compile.kernels import ref, stencil2d
+
+BENCH_2D = stencils.names_2d()
+
+
+def _domain(name, h, w, dtype, seed=0):
+    r = stencils.spec(name).radius
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((h + 2 * r, w + 2 * r)), dtype=dtype)
+
+
+@pytest.mark.parametrize("name", BENCH_2D)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_step_matches_ref(name, dtype):
+    x = _domain(name, 24, 20, dtype)
+    got = stencil2d.step(x, name)
+    want = ref.stencil_step_2d(x, name)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("name", BENCH_2D)
+def test_step_preserves_boundary(name):
+    x = _domain(name, 16, 16, jnp.float32)
+    r = stencils.spec(name).radius
+    got = np.asarray(stencil2d.step(x, name))
+    xn = np.asarray(x)
+    # Dirichlet ring untouched
+    np.testing.assert_array_equal(got[:r, :], xn[:r, :])
+    np.testing.assert_array_equal(got[-r:, :], xn[-r:, :])
+    np.testing.assert_array_equal(got[:, :r], xn[:, :r])
+    np.testing.assert_array_equal(got[:, -r:], xn[:, -r:])
+
+
+@pytest.mark.parametrize("name", BENCH_2D)
+@pytest.mark.parametrize("steps", [1, 2, 5])
+def test_persistent_equals_iterated_step(name, steps):
+    """The PERKS kernel (in-kernel time loop) must equal `steps` baseline
+    invocations — the execution models are numerically interchangeable."""
+    x = _domain(name, 16, 12, jnp.float32)
+    got = stencil2d.persistent(x, name, steps)
+    want = x
+    for _ in range(steps):
+        want = stencil2d.step(want, name)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", BENCH_2D)
+@pytest.mark.parametrize("steps", [3])
+def test_persistent_matches_ref_multi(name, steps):
+    x = _domain(name, 12, 16, jnp.float64)
+    got = stencil2d.persistent(x, name, steps)
+    want = ref.stencil_multi_step(x, name, steps)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("name", ["2d5pt", "2d9pt", "2ds9pt"])
+@pytest.mark.parametrize("tile", [4, 8])
+def test_tiled_step_matches_ref_interior(name, tile):
+    r = stencils.spec(name).radius
+    x = _domain(name, 16, 24, jnp.float32)
+    got = stencil2d.tiled_step(x, name, tile)
+    want = ref.stencil_step_2d(x, name)[r:-r, r:-r]
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    name=st.sampled_from(BENCH_2D),
+    h=st.integers(min_value=1, max_value=20),
+    w=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_step_matches_ref_property(name, h, w, seed):
+    x = _domain(name, h, w, jnp.float32, seed)
+    got = stencil2d.step(x, name)
+    want = ref.stencil_step_2d(x, name)
+    np.testing.assert_allclose(got, want, rtol=2e-6, atol=2e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    name=st.sampled_from(["2d5pt", "2d9pt", "2d25pt"]),
+    steps=st.integers(min_value=1, max_value=8),
+)
+def test_persistent_property(name, steps):
+    x = _domain(name, 10, 10, jnp.float64, seed=steps)
+    got = stencil2d.persistent(x, name, steps)
+    want = ref.stencil_multi_step(x, name, steps)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_jacobi_weights_contract_to_fixed_point():
+    """Convex weights => repeated application converges toward constant
+    fields' fixed point: a constant domain is exactly invariant."""
+    x = jnp.full((18, 18), 3.25, dtype=jnp.float32)
+    got = stencil2d.persistent(x, "2d5pt", 10)
+    np.testing.assert_allclose(got, x, rtol=1e-6)

@@ -1,0 +1,70 @@
+"""Pallas 3D stencil kernels vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import stencils
+from compile.kernels import ref, stencil3d
+
+BENCH_3D = stencils.names_3d()
+
+
+def _domain(name, d, h, w, dtype, seed=0):
+    r = stencils.spec(name).radius
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal((d + 2 * r, h + 2 * r, w + 2 * r)), dtype=dtype
+    )
+
+
+@pytest.mark.parametrize("name", BENCH_3D)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_step_matches_ref(name, dtype):
+    x = _domain(name, 8, 10, 6, dtype)
+    got = stencil3d.step(x, name)
+    want = ref.stencil_step_3d(x, name)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("name", BENCH_3D)
+def test_step_preserves_boundary(name):
+    x = _domain(name, 6, 6, 6, jnp.float32)
+    r = stencils.spec(name).radius
+    got = np.asarray(stencil3d.step(x, name))
+    xn = np.asarray(x)
+    np.testing.assert_array_equal(got[:r], xn[:r])
+    np.testing.assert_array_equal(got[-r:], xn[-r:])
+    np.testing.assert_array_equal(got[:, :r, :], xn[:, :r, :])
+    np.testing.assert_array_equal(got[:, :, -r:], xn[:, :, -r:])
+
+
+@pytest.mark.parametrize("name", BENCH_3D)
+@pytest.mark.parametrize("steps", [1, 3])
+def test_persistent_equals_iterated_step(name, steps):
+    x = _domain(name, 6, 8, 6, jnp.float64)
+    got = stencil3d.persistent(x, name, steps)
+    want = ref.stencil_multi_step(x, name, steps)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    name=st.sampled_from(BENCH_3D),
+    d=st.integers(min_value=1, max_value=8),
+    h=st.integers(min_value=1, max_value=8),
+    w=st.integers(min_value=1, max_value=8),
+)
+def test_step_property(name, d, h, w):
+    x = _domain(name, d, h, w, jnp.float32, seed=d * 64 + h * 8 + w)
+    got = stencil3d.step(x, name)
+    want = ref.stencil_step_3d(x, name)
+    np.testing.assert_allclose(got, want, rtol=2e-6, atol=2e-6)
+
+
+def test_constant_field_invariant():
+    x = jnp.full((10, 10, 10), -1.5, dtype=jnp.float32)
+    got = stencil3d.persistent(x, "3d7pt", 5)
+    np.testing.assert_allclose(got, x, rtol=1e-6)

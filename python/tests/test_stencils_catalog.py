@@ -1,0 +1,63 @@
+"""Catalog invariants: the 13 benchmarks of Table III."""
+
+import pytest
+
+from compile import stencils
+
+
+def test_catalog_has_all_13_benchmarks():
+    assert len(stencils.CATALOG) == 13
+
+
+@pytest.mark.parametrize("name", list(stencils.CATALOG))
+def test_offsets_sorted_and_unique(name):
+    s = stencils.spec(name)
+    assert list(s.offsets) == sorted(set(s.offsets))
+
+
+@pytest.mark.parametrize("name", list(stencils.CATALOG))
+def test_offsets_within_radius(name):
+    s = stencils.spec(name)
+    for off in s.offsets:
+        assert len(off) == s.dims
+        assert all(abs(d) <= s.radius for d in off), (name, off)
+
+
+@pytest.mark.parametrize("name", list(stencils.CATALOG))
+def test_center_included(name):
+    s = stencils.spec(name)
+    assert tuple([0] * s.dims) in s.offsets
+
+
+@pytest.mark.parametrize("name", list(stencils.CATALOG))
+def test_weights_convex(name):
+    s = stencils.spec(name)
+    w = s.weights()
+    assert len(w) == s.points
+    assert abs(sum(w) - 1.0) < 1e-12
+    assert all(x > 0 for x in w)
+
+
+@pytest.mark.parametrize(
+    "name,points",
+    [
+        ("2d5pt", 5), ("2ds9pt", 9), ("2d13pt", 13), ("2d17pt", 17),
+        ("2d21pt", 21), ("2ds25pt", 25), ("2d9pt", 9), ("2d25pt", 25),
+        ("3d7pt", 7), ("3d13pt", 13), ("3d17pt", 17), ("3d27pt", 27),
+        ("poisson", 19),
+    ],
+)
+def test_point_counts_match_names(name, points):
+    assert stencils.spec(name).points == points
+
+
+@pytest.mark.parametrize("name", list(stencils.CATALOG))
+def test_flops_match_table_iii(name):
+    # Table III reports FLOPs/cell; for all but 2ds25pt (59) and 3d27pt (54)
+    # and 2d9pt-family that's 2*points (one fma pair per point).
+    table = {
+        "2d5pt": 10, "2ds9pt": 18, "2d13pt": 26, "2d17pt": 34, "2d21pt": 42,
+        "2ds25pt": 59, "2d9pt": 18, "2d25pt": 50, "3d7pt": 14, "3d13pt": 26,
+        "3d17pt": 34, "3d27pt": 54, "poisson": 38,
+    }
+    assert stencils.spec(name).flops_per_cell == table[name]

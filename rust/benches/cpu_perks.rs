@@ -1,0 +1,61 @@
+//! Persistent-threads CPU bench: the PERKS execution model measured
+//! physically (thread-local slabs = on-chip cache, shared array = global
+//! memory, GridBarrier = grid.sync). Sweeps domain size to expose the
+//! strong-scaling effect: the smaller the per-thread state relative to
+//! the core's cache, the larger the PERKS win — Fig 6's mechanism.
+//!
+//! Run: `cargo bench --bench cpu_perks`
+
+use perks::stencil::{parallel, shape, Domain};
+use perks::util::fmt::{bytes, secs, Table};
+use perks::util::stats::{median, time_n};
+
+fn main() {
+    let threads = 8;
+    let steps = 32;
+    println!("CPU persistent-threads PERKS (threads={threads}, steps={steps}, median of 3)\n");
+    let mut t = Table::new(&[
+        "bench",
+        "domain",
+        "host-loop",
+        "persistent",
+        "speedup",
+        "traffic host-loop",
+        "traffic persistent",
+    ]);
+    let cases = [
+        ("2d5pt", vec![256usize, 256]),
+        ("2d5pt", vec![512, 512]),
+        ("2d5pt", vec![1024, 1024]),
+        ("2d9pt", vec![512, 512]),
+        ("2ds9pt", vec![512, 512]),
+        ("3d7pt", vec![64, 64, 64]),
+        ("3d27pt", vec![64, 64, 64]),
+        ("poisson", vec![64, 64, 64]),
+    ];
+    for (bench, interior) in cases {
+        let s = shape::spec(bench).unwrap();
+        let mut d = Domain::for_spec(&s, &interior).unwrap();
+        d.randomize(3);
+        let th = median(&time_n(3, || {
+            parallel::host_loop(&s, &d, steps, threads).unwrap();
+        }));
+        let tp = median(&time_n(3, || {
+            parallel::persistent(&s, &d, steps, threads).unwrap();
+        }));
+        let rep_h = parallel::host_loop(&s, &d, steps, threads).unwrap();
+        let rep_p = parallel::persistent(&s, &d, steps, threads).unwrap();
+        t.row(&[
+            bench.to_string(),
+            interior.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x"),
+            secs(th),
+            secs(tp),
+            format!("{:.2}x", th / tp),
+            bytes(rep_h.global_bytes as f64),
+            bytes(rep_p.global_bytes as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\npersistent threads exchange only slab boundaries through the shared");
+    println!("array; host-loop round-trips the whole domain every step.");
+}

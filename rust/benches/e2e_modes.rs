@@ -1,0 +1,97 @@
+//! Measured end-to-end bench: the three execution models through the real
+//! PJRT stack, for every stencil artifact family plus CG. This is the
+//! *measured* counterpart of the simulated Figs 5-7: the speedup SHAPE
+//! (persistent > resident > host-loop; deeper fusion on smaller state)
+//! must reproduce even though the substrate is CPU PJRT, not an A100.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench e2e_modes`
+
+use perks::coordinator::{CgDriver, ExecMode, StencilDriver};
+use perks::runtime::{HostTensor, Runtime};
+use perks::sparse::gen;
+use perks::stencil::{self, Domain};
+use perks::util::fmt::{secs, Table};
+use perks::util::stats::{median, time_n};
+
+fn main() {
+    let rt = match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: artifacts not available ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    println!("E2E execution-model comparison on {} (median of 5)\n", rt.platform());
+
+    let families = [
+        ("2d5pt", "128x128", "f32", 64usize),
+        ("2d9pt", "128x128", "f32", 64),
+        ("2ds9pt", "128x128", "f32", 64),
+        ("2d5pt", "64x64", "f64", 64),
+        ("3d7pt", "32x32x32", "f32", 32),
+        ("3d27pt", "32x32x32", "f32", 32),
+    ];
+    let mut t = Table::new(&[
+        "bench",
+        "host-loop",
+        "resident",
+        "persistent",
+        "PERKS vs host-loop",
+        "PERKS vs resident",
+    ]);
+    for (bench, interior, dtype, steps) in families {
+        let driver = match StencilDriver::new(&rt, bench, interior, dtype) {
+            Ok(d) => d,
+            Err(_) => continue,
+        };
+        let spec = stencil::spec(bench).unwrap();
+        let dims: Vec<usize> = interior.split('x').map(|d| d.parse().unwrap()).collect();
+        let mut dom = Domain::for_spec(&spec, &dims).unwrap();
+        dom.randomize(11);
+        let padded: Vec<usize> = if spec.dims == 2 {
+            vec![dom.padded[1], dom.padded[2]]
+        } else {
+            dom.padded.to_vec()
+        };
+        let x0 = match dtype {
+            "f64" => HostTensor::f64(&padded, dom.data.clone()),
+            _ => HostTensor::f32(&padded, dom.to_f32()),
+        };
+        let measure = |mode: ExecMode| {
+            let times = time_n(5, || {
+                driver.run(mode, &x0, steps).unwrap();
+            });
+            median(&times)
+        };
+        let h = measure(ExecMode::HostLoop);
+        let r = measure(ExecMode::HostLoopResident);
+        let p = measure(ExecMode::Persistent);
+        t.row(&[
+            format!("{bench} {interior} {dtype}"),
+            secs(h),
+            secs(r),
+            secs(p),
+            format!("{:.2}x", h / p),
+            format!("{:.2}x", r / p),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // CG
+    println!("\nCG n=1024 (poisson 32x32), 64 iterations:");
+    if let Ok(driver) = CgDriver::new(&rt, 1024) {
+        let a = gen::poisson2d(32);
+        let (data, cols, rows) = a.to_coo_f32();
+        let data = HostTensor::f32(&[driver.nnz], data);
+        let cols = HostTensor::i32(&[driver.nnz], cols);
+        let rows = HostTensor::i32(&[driver.nnz], rows);
+        let b: Vec<f32> = gen::rhs(1024, 7).iter().map(|&v| v as f32).collect();
+        let mh = median(&time_n(5, || {
+            driver.run(ExecMode::HostLoop, &data, &cols, &rows, &b, 64).unwrap();
+        }));
+        let mp = median(&time_n(5, || {
+            driver.run(ExecMode::Persistent, &data, &cols, &rows, &b, 64).unwrap();
+        }));
+        println!("  host-loop {}   persistent {}   speedup {:.2}x", secs(mh), secs(mp), mh / mp);
+    }
+}

@@ -1,0 +1,69 @@
+//! Fig 1: performance + unused on-chip resources vs TB/SMX for the 2d9pt
+//! dp stencil (3072^2) on A100. Regenerates both axes of the paper's
+//! motivational figure and the 1.66x projected-speedup annotation.
+//!
+//! Run: `cargo bench --bench fig1_occupancy`
+
+use perks::simgpu::concurrency;
+use perks::simgpu::device::a100;
+use perks::simgpu::occupancy::{self, KernelResources};
+use perks::simgpu::perfmodel::{self, CacheSplit, StencilScenario, TileGeom};
+use perks::util::fmt::Table;
+
+fn main() {
+    let dev = a100();
+    // 2d9pt dp baseline kernel: 256 threads, 30 regs, one staged smem
+    // plane block
+    let kr = KernelResources { threads_per_tb: 256, regs_per_thread: 30, smem_per_tb: 18 * 1024 };
+    let scenario = StencilScenario {
+        cells: 3072.0 * 3072.0,
+        elem: 8,
+        radius: 1,
+        steps: 20,
+        kernel_smem_per_cell: 2.0,
+    };
+    let tile = TileGeom::tile_2d(256, 128);
+    let peak_gcells = 74.6; // paper's measured peak for this kernel
+    let c_hw = concurrency::c_hw_blended(&dev, 0.5);
+
+    println!("Fig 1 — dp 2d9pt 3072^2 on A100: perf + unused resources vs TB/SMX\n");
+    let mut t = Table::new(&[
+        "TB/SMX",
+        "GCells/s",
+        "unused smem",
+        "unused regs",
+        "unused total",
+        "projected PERKS speedup",
+    ]);
+    for tb in 1..=8 {
+        let Some(occ) = occupancy::occupancy(&dev, &kr, tb) else {
+            println!("TB/SMX={tb}: does not fit");
+            continue;
+        };
+        // efficiency at this occupancy (per-TB ILP ~ 5000 independent
+        // bytes: the dp 2d9pt kernel is heavily unrolled, so even one TB
+        // keeps ~83% of peak — the paper's 62.0/74.6 at TB/SMX=1)
+        let c_sw = 5000.0 * tb as f64;
+        let eff = concurrency::efficiency(c_sw, c_hw);
+        let gcells = peak_gcells * eff;
+        // PERKS projection: cache as much of the domain as the freed
+        // resources allow
+        let split = CacheSplit {
+            sm_bytes: occ.free_smem_bytes_device(&dev) as f64,
+            reg_bytes: occ.free_reg_bytes_device(&dev) as f64 * 0.73,
+        };
+        let speedup = perfmodel::speedup(&dev, &scenario, &split, &tile, 1.0)
+            * perfmodel::EFF_BASELINE; // projection, not measured: no perks derate
+        t.row(&[
+            tb.to_string(),
+            format!("{gcells:.1}"),
+            perks::util::fmt::bytes(occ.free_smem_bytes_device(&dev) as f64),
+            perks::util::fmt::bytes(occ.free_reg_bytes_device(&dev) as f64),
+            perks::util::fmt::bytes(occ.free_bytes_device(&dev) as f64),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\npaper: perf drops 74.6 -> 62.0 GCells/s as TB/SMX -> 1 while >11.2 MB");
+    println!("of on-chip memory frees up; caching there projects ~1.66x speedup.");
+}

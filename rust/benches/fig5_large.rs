@@ -1,0 +1,16 @@
+//! Fig 5: PERKS speedup for all 13 stencil benchmarks at Table IV
+//! (device-saturating) domain sizes, A100 + V100, sp and dp.
+//!
+//! Run: `cargo bench --bench fig5_large`
+
+use perks::harness;
+use perks::simgpu::device::{a100, v100};
+
+fn main() {
+    for (elem, name) in [(4usize, "single precision"), (8, "double precision")] {
+        println!("Fig 5 — large domains, {name}\n");
+        print!("{}", harness::render_stencil_speedups(&[a100(), v100()], elem, false));
+        println!();
+    }
+    println!("paper: geomean 1.58x (A100 2D), 2.01x (V100 2D), 1.10x (A100 3D), 1.29x (V100 3D)");
+}

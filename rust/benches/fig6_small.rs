@@ -1,0 +1,16 @@
+//! Fig 6: PERKS speedup for small (fully-cacheable) domains — the strong
+//! scaling case — A100 + V100, sp and dp.
+//!
+//! Run: `cargo bench --bench fig6_small`
+
+use perks::harness;
+use perks::simgpu::device::{a100, v100};
+
+fn main() {
+    for (elem, name) in [(4usize, "single precision"), (8, "double precision")] {
+        println!("Fig 6 — small (fully cached) domains, {name}\n");
+        print!("{}", harness::render_stencil_speedups(&[a100(), v100()], elem, true));
+        println!();
+    }
+    println!("paper: 2D small domains 2.48x (A100) / 3.15x (V100); 3D 1.45x / 1.94x");
+}

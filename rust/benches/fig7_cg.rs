@@ -1,0 +1,20 @@
+//! Fig 7: PERKS CG speedup over the Ginkgo-like baseline + the baseline's
+//! sustained memory bandwidth, for the 20 Table V dataset analogs, split
+//! by L2 capacity, on A100 and V100, sp and dp.
+//!
+//! Run: `cargo bench --bench fig7_cg`
+
+use perks::harness;
+use perks::simgpu::device::{a100, v100};
+
+fn main() {
+    for dev in [a100(), v100()] {
+        for (elem, name) in [(4usize, "single"), (8, "double")] {
+            println!("Fig 7 — CG on {} ({name} precision)\n", dev.name);
+            print!("{}", harness::render_fig7(&dev, elem));
+            println!();
+        }
+    }
+    println!("paper: within-L2 geomeans 4.55/4.87x (A100 sp/dp), 4.32/5.05x (V100);");
+    println!("beyond-L2 1.30/1.15x (A100), 1.44/1.59x (V100).");
+}

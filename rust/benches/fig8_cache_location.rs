@@ -1,0 +1,16 @@
+//! Fig 8: where to cache — IMP / SM / REG / BTH heatmap per stencil
+//! benchmark (speedup over the SM-OPT baseline), A100 and V100.
+//!
+//! Run: `cargo bench --bench fig8_cache_location`
+
+use perks::harness;
+use perks::simgpu::device::{a100, v100};
+
+fn main() {
+    for dev in [a100(), v100()] {
+        println!("Fig 8 — cache-location heatmap on {} (dp, large domains)\n", dev.name);
+        print!("{}", harness::render_fig8(&dev, 8));
+        println!();
+    }
+    println!("paper: BTH usually best; higher-order stencils prefer SM (register pressure).");
+}

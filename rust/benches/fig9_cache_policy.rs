@@ -1,0 +1,19 @@
+//! Fig 9: what to cache in CG — IMP / VEC / MAT / MIX policy heatmap over
+//! the Table V datasets, A100 and V100.
+//!
+//! Run: `cargo bench --bench fig9_cache_policy`
+
+use perks::harness;
+use perks::simgpu::device::{a100, v100};
+
+fn main() {
+    for dev in [a100(), v100()] {
+        for (elem, name) in [(4usize, "single"), (8, "double")] {
+            println!("Fig 9 — CG policy heatmap on {} ({name} precision)\n", dev.name);
+            print!("{}", harness::render_fig9(&dev, elem));
+            println!();
+        }
+    }
+    println!("paper: IMP already 3.61x within L2 / 1.19x beyond; the greedy");
+    println!("largest-arrays-first policy (MIX) is usually best.");
+}

@@ -1,0 +1,115 @@
+//! Whole-stack hot-path profile (EXPERIMENTS.md §Perf).
+//!
+//! Measures the L3 hot paths in isolation so optimization deltas are
+//! attributable: stencil cell-update kernels (gold + banded), merge SpMV,
+//! CG vector passes, and PJRT literal marshalling.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use perks::sparse::gen;
+use perks::spmv::merge;
+use perks::stencil::{gold, parallel, shape, Domain};
+use perks::util::fmt::Table;
+use perks::util::rng::Rng;
+use perks::util::stats::{median, time_n};
+
+fn main() {
+    let mut t = Table::new(&["hot path", "work", "median", "rate"]);
+
+    // 1. gold stencil step (the reference cell-update kernel)
+    for bench in ["2d5pt", "2d25pt", "3d7pt"] {
+        let s = shape::spec(bench).unwrap();
+        let interior: Vec<usize> = if s.dims == 2 { vec![512, 512] } else { vec![64, 64, 64] };
+        let mut d = Domain::for_spec(&s, &interior).unwrap();
+        d.randomize(3);
+        let cells = d.interior_cells() as f64;
+        let m = median(&time_n(5, || {
+            std::hint::black_box(gold::run(&s, &d, 1).unwrap());
+        }));
+        t.row(&[
+            format!("gold {bench}"),
+            format!("{:.2}M cells/step", cells / 1e6),
+            perks::util::fmt::secs(m),
+            format!("{:.1} MCells/s", cells / m / 1e6),
+        ]);
+    }
+
+    // 2. persistent-threads executor (per-step rate)
+    {
+        let s = shape::spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[512, 512]).unwrap();
+        d.randomize(4);
+        let steps = 16;
+        let m = median(&time_n(3, || {
+            parallel::persistent(&s, &d, steps, 4).unwrap();
+        }));
+        let cells = d.interior_cells() as f64 * steps as f64;
+        t.row(&[
+            "persistent 2d5pt x16".into(),
+            format!("{:.2}M cells", cells / 1e6),
+            perks::util::fmt::secs(m),
+            format!("{:.1} MCells/s", cells / m / 1e6),
+        ]);
+    }
+
+    // 3. merge SpMV
+    {
+        let a = gen::clustered_spd(200_000, 25, 120, 7).unwrap();
+        let plan = merge::MergePlan::new(&a, 32);
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.f64()).collect();
+        let mut y = vec![0.0; a.n_rows];
+        let m = median(&time_n(5, || merge::spmv(&a, &plan, &x, &mut y)));
+        t.row(&[
+            "merge spmv (seq)".into(),
+            format!("{:.2}M nnz", a.nnz() as f64 / 1e6),
+            perks::util::fmt::secs(m),
+            format!("{:.1} Mnnz/s", a.nnz() as f64 / m / 1e6),
+        ]);
+    }
+
+    // 4. CG fused vector pass (the L3 analog of the pallas kernel)
+    {
+        let n = 1_000_000usize;
+        let mut rng = Rng::new(2);
+        let mut x = vec![0.0f64; n];
+        let mut r: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let p: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let ap: Vec<f64> = (0..n).map(|_| rng.f64() + 1.0).collect();
+        let m = median(&time_n(5, || {
+            let alpha = 0.01;
+            let mut rr = 0.0;
+            for i in 0..n {
+                x[i] += alpha * p[i];
+                let ri = r[i] - alpha * ap[i];
+                r[i] = ri;
+                rr += ri * ri;
+            }
+            std::hint::black_box(rr);
+        }));
+        t.row(&[
+            "cg fused pass".into(),
+            format!("{n} elems"),
+            perks::util::fmt::secs(m),
+            format!("{:.2} GB/s", (n * 8 * 5) as f64 / m / 1e9),
+        ]);
+    }
+
+    // 5. PJRT literal marshalling (runtime edge)
+    {
+        use perks::runtime::{HostTensor, TensorSpec};
+        let spec = TensorSpec::new(perks::runtime::DType::F32, &[1024, 1024]);
+        let t0 = HostTensor::zeros(&spec);
+        let m = median(&time_n(5, || {
+            std::hint::black_box(t0.to_literal().unwrap());
+        }));
+        t.row(&[
+            "host->literal 4MB".into(),
+            "1024x1024 f32".into(),
+            perks::util::fmt::secs(m),
+            format!("{:.2} GB/s", 4e6 / m / 1e9),
+        ]);
+    }
+
+    print!("{}", t.render());
+}

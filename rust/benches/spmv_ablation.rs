@@ -1,0 +1,71 @@
+//! SpMV ablation (§V-C): merge-based SpMV vs the naive row-split baseline
+//! under row-length skew, and the cached-plan vs re-searched-plan delta
+//! that motivates the paper's workload-caching policies.
+//!
+//! Run: `cargo bench --bench spmv_ablation`
+
+use perks::sparse::csr::Csr;
+use perks::sparse::gen;
+use perks::spmv::{merge, naive};
+use perks::util::fmt::{secs, Table};
+use perks::util::rng::Rng;
+use perks::util::stats::{median, time_n};
+
+fn skewed_matrix(n: usize, seed: u64) -> Csr {
+    // adversarial skew: the first few rows hold most of the nonzeros, so
+    // a contiguous row split gives one worker nearly all the work —
+    // merge-path's target case (naive row-split serializes on thread 0)
+    let mut rng = Rng::new(seed);
+    let mut trip = Vec::new();
+    for i in 0..8.min(n) {
+        for _ in 0..n / 2 {
+            let j = rng.index(n);
+            trip.push((i, j, 1.0 + rng.f64()));
+        }
+    }
+    for i in 8..n {
+        trip.push((i, rng.index(n), 1.0 + rng.f64()));
+        trip.push((i, i, 10.0));
+    }
+    Csr::from_coo(n, n, trip).unwrap()
+}
+
+fn main() {
+    let threads = 8;
+    println!("SpMV ablation (threads = {threads}, median of 9)\n");
+    let mut t = Table::new(&[
+        "matrix",
+        "nnz",
+        "naive row-split",
+        "merge-path",
+        "merge speedup",
+        "plan search cost",
+    ]);
+    let cases: Vec<(String, Csr)> = vec![
+        ("poisson2d 512 (uniform)".into(), gen::poisson2d(512)),
+        ("clustered fem 100k".into(), gen::clustered_spd(100_000, 40, 200, 3).unwrap()),
+        ("skewed 100k (8 hot rows)".into(), skewed_matrix(100_000, 5)),
+    ];
+    for (name, a) in &cases {
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.f64()).collect();
+        let mut y = vec![0.0; a.n_rows];
+        let tn = median(&time_n(9, || naive::spmv_parallel(a, &x, &mut y, threads)));
+        let plan = merge::MergePlan::new(a, threads * 8);
+        let tm = median(&time_n(9, || merge::spmv_parallel(a, &plan, &x, &mut y)));
+        let tp = median(&time_n(9, || {
+            std::hint::black_box(merge::MergePlan::new(a, threads * 8));
+        }));
+        t.row(&[
+            name.clone(),
+            a.nnz().to_string(),
+            secs(tn),
+            secs(tm),
+            format!("{:.2}x", tn / tm),
+            secs(tp),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nplan-search cost is what the paper's TB-level workload caching avoids");
+    println!("re-paying every iteration.");
+}

@@ -1,0 +1,48 @@
+//! Table IV: minimum domain sizes that saturate the device, per benchmark
+//! x precision x device, from the Little's-law saturation model (see
+//! simgpu::occupancy), printed next to the paper's empirical sizes.
+//!
+//! Run: `cargo bench --bench table4_domains`
+
+use perks::simgpu::device::{a100, v100};
+use perks::simgpu::occupancy::{min_domain_2d, min_domain_3d};
+use perks::stencil::shape::catalog;
+use perks::util::fmt::Table;
+
+fn paper_a100_sp(bench: &str) -> &'static str {
+    match bench {
+        "2d5pt" | "2ds9pt" | "2d13pt" | "2d17pt" | "2d21pt" | "2d25pt" => "4608x3072",
+        "2ds25pt" => "4608x4608",
+        "2d9pt" => "3072x3072",
+        _ => "256x288x256",
+    }
+}
+
+fn main() {
+    println!("Table IV — minimum saturating domain sizes (model vs paper)\n");
+    for (elem, prec) in [(4usize, "single"), (8, "double")] {
+        let mut t = Table::new(&["bench", "A100 (model)", "V100 (model)", "A100 paper (sp)"]);
+        for s in catalog() {
+            let (fa, fv) = if s.dims == 2 {
+                let (ax, ay) = min_domain_2d(&a100(), elem, s.radius);
+                let (vx, vy) = min_domain_2d(&v100(), elem, s.radius);
+                (format!("{ax}x{ay}"), format!("{vx}x{vy}"))
+            } else {
+                let (ax, ay, az) = min_domain_3d(&a100(), elem, s.radius);
+                let (vx, vy, vz) = min_domain_3d(&v100(), elem, s.radius);
+                (format!("{ax}x{ay}x{az}"), format!("{vx}x{vy}x{vz}"))
+            };
+            t.row(&[
+                s.name.to_string(),
+                fa,
+                fv,
+                if elem == 4 { paper_a100_sp(s.name).to_string() } else { "-".into() },
+            ]);
+        }
+        println!("{prec} precision:");
+        print!("{}", t.render());
+        println!();
+    }
+    println!("the model reproduces the magnitudes and the A100>V100, sp>dp ordering;");
+    println!("the paper's exact values are empirical per-benchmark tunings.");
+}

@@ -1,0 +1,329 @@
+//! Further Krylov solvers from the paper's motivation (§I cites CG, BiCG
+//! and GMRES as the iterative families PERKS targets): Jacobi-
+//! preconditioned CG and BiCGstab, each under both execution models.
+//!
+//! The PERKS treatment is identical to `solver.rs`: hoist loop-invariant
+//! data (merge plan, preconditioner diagonal), fuse the BLAS-1 passes.
+//! Host-loop rebuilds/streams them per iteration. Iterates are identical
+//! across models (tested).
+
+use crate::error::{Error, Result};
+use crate::sparse::csr::Csr;
+use crate::spmv::merge::{self, MergePlan};
+
+/// Execution model (re-exported shape of `stationary::Model`).
+pub use crate::cg::stationary::Model;
+
+/// Result of a Krylov solve.
+#[derive(Clone, Debug)]
+pub struct KrylovResult {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub rr_final: f64,
+    pub converged: bool,
+    pub wall_seconds: f64,
+    /// Loop-invariant rebuilds (plan + preconditioner): 1 for persistent.
+    pub invariant_builds: usize,
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn jacobi_diag(a: &Csr) -> Result<Vec<f64>> {
+    (0..a.n_rows)
+        .map(|r| {
+            a.get(r, r)
+                .filter(|&d| d != 0.0)
+                .map(|d| 1.0 / d)
+                .ok_or_else(|| Error::Solver(format!("zero/missing diagonal at row {r}")))
+        })
+        .collect()
+}
+
+/// Jacobi-preconditioned CG. `model` decides whether the merge plan and
+/// the preconditioner are cached (persistent) or rebuilt per iteration.
+pub fn pcg(a: &Csr, b: &[f64], tol: f64, max_iters: usize, model: Model) -> Result<KrylovResult> {
+    if b.len() != a.n_rows {
+        return Err(Error::Solver("rhs size mismatch".into()));
+    }
+    let n = a.n_rows;
+    let t0 = std::time::Instant::now();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut invariant_builds = 0;
+    let mut cached: Option<(MergePlan, Vec<f64>)> = None;
+    let mut get_invariants = |a: &Csr| -> Result<(MergePlan, Vec<f64>)> {
+        if model == Model::Persistent {
+            if cached.is_none() {
+                invariant_builds += 1;
+                cached = Some((MergePlan::new(a, 16), jacobi_diag(a)?));
+            }
+            Ok(cached.clone().unwrap())
+        } else {
+            invariant_builds += 1;
+            Ok((MergePlan::new(a, 16), jacobi_diag(a)?))
+        }
+    };
+    let (_, minv) = get_invariants(a)?;
+    let mut z: Vec<f64> = r.iter().zip(&minv).map(|(ri, mi)| ri * mi).collect();
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let bb = dot(b, b);
+    let threshold = tol * tol * bb;
+    let mut ap = vec![0.0; n];
+    let mut iters = 0;
+    let mut rr = dot(&r, &r);
+    while iters < max_iters && rr > threshold && rr > 0.0 {
+        let (plan, minv) = get_invariants(a)?;
+        merge::spmv(a, &plan, &p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 {
+            return Err(Error::Solver(format!("not positive definite (pAp={pap})")));
+        }
+        let alpha = rz / pap;
+        match model {
+            Model::Persistent => {
+                // fused: x, r updates + rr in one pass; z + rz in another
+                rr = 0.0;
+                for i in 0..n {
+                    x[i] += alpha * p[i];
+                    let ri = r[i] - alpha * ap[i];
+                    r[i] = ri;
+                    rr += ri * ri;
+                }
+                let mut rz_new = 0.0;
+                for i in 0..n {
+                    let zi = r[i] * minv[i];
+                    z[i] = zi;
+                    rz_new += r[i] * zi;
+                }
+                let beta = rz_new / rz;
+                rz = rz_new;
+                for i in 0..n {
+                    p[i] = z[i] + beta * p[i];
+                }
+            }
+            Model::HostLoop => {
+                // separate streamed passes
+                for i in 0..n {
+                    x[i] += alpha * p[i];
+                }
+                for i in 0..n {
+                    r[i] -= alpha * ap[i];
+                }
+                rr = dot(&r, &r);
+                for i in 0..n {
+                    z[i] = r[i] * minv[i];
+                }
+                let rz_new = dot(&r, &z);
+                let beta = rz_new / rz;
+                rz = rz_new;
+                for i in 0..n {
+                    p[i] = z[i] + beta * p[i];
+                }
+            }
+        }
+        iters += 1;
+    }
+    Ok(KrylovResult {
+        x,
+        iters,
+        rr_final: rr,
+        converged: rr <= threshold,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        invariant_builds,
+    })
+}
+
+/// BiCGstab (works for general nonsymmetric systems; here used as the
+/// paper's BiCG-family representative). Same model split as `pcg`.
+pub fn bicgstab(
+    a: &Csr,
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+    model: Model,
+) -> Result<KrylovResult> {
+    if b.len() != a.n_rows {
+        return Err(Error::Solver("rhs size mismatch".into()));
+    }
+    let n = a.n_rows;
+    let t0 = std::time::Instant::now();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let r0 = b.to_vec();
+    let mut p = r.clone();
+    let mut v = vec![0.0; n];
+    let mut s = vec![0.0; n];
+    let mut t = vec![0.0; n];
+    let mut rho = dot(&r0, &r);
+    let bb = dot(b, b);
+    let threshold = tol * tol * bb;
+    let mut invariant_builds = 0;
+    let plan_cached = if model == Model::Persistent {
+        invariant_builds += 1;
+        Some(MergePlan::new(a, 16))
+    } else {
+        None
+    };
+    let mut iters = 0;
+    let mut rr = dot(&r, &r);
+    while iters < max_iters && rr > threshold && rr > 0.0 {
+        let plan = match &plan_cached {
+            Some(p) => p.clone(),
+            None => {
+                invariant_builds += 1;
+                MergePlan::new(a, 16)
+            }
+        };
+        merge::spmv(a, &plan, &p, &mut v);
+        let alpha = rho / dot(&r0, &v);
+        if !alpha.is_finite() {
+            return Err(Error::Solver("breakdown: r0.v == 0".into()));
+        }
+        for i in 0..n {
+            s[i] = r[i] - alpha * v[i];
+        }
+        merge::spmv(a, &plan, &s, &mut t);
+        let tt = dot(&t, &t);
+        let omega = if tt > 0.0 { dot(&t, &s) / tt } else { 0.0 };
+        rr = 0.0;
+        for i in 0..n {
+            x[i] += alpha * p[i] + omega * s[i];
+            let ri = s[i] - omega * t[i];
+            r[i] = ri;
+            rr += ri * ri;
+        }
+        let rho_new = dot(&r0, &r);
+        let beta = (rho_new / rho) * (alpha / omega.max(1e-300));
+        rho = rho_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * (p[i] - omega * v[i]);
+        }
+        iters += 1;
+    }
+    Ok(KrylovResult {
+        x,
+        iters,
+        rr_final: rr,
+        converged: rr <= threshold,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        invariant_builds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::check::{allclose, Prop};
+
+    #[test]
+    fn pcg_converges_faster_than_plain_cg_on_skewed_diagonal() {
+        // scale rows so the condition number hurts plain CG; Jacobi
+        // preconditioning equalizes
+        let base = gen::poisson2d(12);
+        let n = base.n_rows;
+        let mut trip = Vec::new();
+        for row in 0..n {
+            let scale = 1.0 + (row % 7) as f64 * 4.0;
+            let (cols, vals) = base.row(row);
+            for (&c, &v) in cols.iter().zip(vals) {
+                // symmetric scaling keeps SPD
+                let s = scale * (1.0 + (c % 7) as f64 * 4.0);
+                trip.push((row, c, v * s.sqrt()));
+            }
+        }
+        let a = crate::sparse::csr::Csr::from_coo(n, n, trip).unwrap();
+        let b = gen::rhs(n, 3);
+        let plain = crate::cg::solve_persistent(
+            &a,
+            &b,
+            &crate::cg::CgOptions { max_iters: 3000, tol: 1e-8, ..Default::default() },
+        )
+        .unwrap();
+        let pre = pcg(&a, &b, 1e-8, 3000, Model::Persistent).unwrap();
+        assert!(pre.converged);
+        assert!(
+            pre.iters <= plain.iters,
+            "PCG {} should not exceed CG {}",
+            pre.iters,
+            plain.iters
+        );
+    }
+
+    #[test]
+    fn pcg_models_identical_iterates() {
+        let a = gen::clustered_spd(300, 7, 20, 11).unwrap();
+        let b = gen::rhs(300, 5);
+        let h = pcg(&a, &b, 0.0, 40, Model::HostLoop).unwrap();
+        let p = pcg(&a, &b, 0.0, 40, Model::Persistent).unwrap();
+        if let Prop::Fail(m) = allclose(&h.x, &p.x, 1e-10, 1e-10) {
+            panic!("{m}");
+        }
+        assert_eq!(p.invariant_builds, 1);
+        assert!(h.invariant_builds > 40);
+    }
+
+    #[test]
+    fn pcg_solution_satisfies_system() {
+        let a = gen::poisson2d(10);
+        let b = gen::rhs(a.n_rows, 2);
+        let res = pcg(&a, &b, 1e-10, 5000, Model::Persistent).unwrap();
+        assert!(res.converged);
+        let mut ax = vec![0.0; a.n_rows];
+        a.spmv_gold(&res.x, &mut ax);
+        if let Prop::Fail(m) = allclose(&ax, &b, 1e-5, 1e-5) {
+            panic!("{m}");
+        }
+    }
+
+    #[test]
+    fn bicgstab_solves_spd_and_matches_models() {
+        let a = gen::poisson2d(8);
+        let b = gen::rhs(a.n_rows, 7);
+        let h = bicgstab(&a, &b, 1e-9, 2000, Model::HostLoop).unwrap();
+        let p = bicgstab(&a, &b, 1e-9, 2000, Model::Persistent).unwrap();
+        assert!(h.converged && p.converged);
+        let mut ax = vec![0.0; a.n_rows];
+        a.spmv_gold(&p.x, &mut ax);
+        if let Prop::Fail(m) = allclose(&ax, &b, 1e-4, 1e-4) {
+            panic!("{m}");
+        }
+        assert_eq!(p.invariant_builds, 1);
+    }
+
+    #[test]
+    fn bicgstab_solves_nonsymmetric() {
+        // upwind-ish convection-diffusion: nonsymmetric, CG would fail
+        let n = 100;
+        let mut trip = Vec::new();
+        for i in 0..n {
+            trip.push((i, i, 4.0));
+            if i > 0 {
+                trip.push((i, i - 1, -1.5)); // asymmetric couplings
+            }
+            if i + 1 < n {
+                trip.push((i, i + 1, -0.5));
+            }
+        }
+        let a = crate::sparse::csr::Csr::from_coo(n, n, trip).unwrap();
+        assert!(!a.is_symmetric(0.0));
+        let b = gen::rhs(n, 1);
+        let res = bicgstab(&a, &b, 1e-10, 2000, Model::Persistent).unwrap();
+        assert!(res.converged, "rr {}", res.rr_final);
+        let mut ax = vec![0.0; n];
+        a.spmv_gold(&res.x, &mut ax);
+        if let Prop::Fail(m) = allclose(&ax, &b, 1e-5, 1e-5) {
+            panic!("{m}");
+        }
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        let a = gen::poisson2d(4);
+        assert!(pcg(&a, &[1.0; 3], 1e-6, 10, Model::HostLoop).is_err());
+        assert!(bicgstab(&a, &[1.0; 3], 1e-6, 10, Model::HostLoop).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Conjugate-gradient solver substrate: host-loop (Ginkgo-like baseline)
+//! and persistent (PERKS) execution models, plus the §VI-G2 caching
+//! policies.
+
+pub mod krylov;
+pub mod policy;
+pub mod solver;
+pub mod stationary;
+
+pub use policy::{CgPolicy, CgTraffic};
+pub use solver::{solve_host_loop, solve_persistent, CgOptions, CgResult};

@@ -1,0 +1,148 @@
+//! CG caching policies (paper §VI-G2, Fig 9).
+//!
+//! Which data the persistent CG kernel pins in on-chip memory:
+//!
+//! * `Imp` — nothing explicitly; rely on L2 hits;
+//! * `Vec` — the residual/direction vectors (plus the TB-level workload
+//!   boundaries, as the paper's footnote 2 specifies);
+//! * `Mat` — the matrix A (plus TB- and thread-level workload boundaries);
+//! * `Mix` — vectors first, remaining capacity to the matrix.
+//!
+//! `traffic_per_iter` implements the per-iteration global-memory byte
+//! count for each policy; the simulator turns it into Fig 9's speedups.
+
+use crate::coordinator::caching::{self, CacheLocation, CachePlan};
+use crate::sparse::csr::Csr;
+
+/// The paper's four CG caching policies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CgPolicy {
+    Imp,
+    Vec,
+    Mat,
+    Mix,
+}
+
+impl CgPolicy {
+    pub fn all() -> [CgPolicy; 4] {
+        [CgPolicy::Imp, CgPolicy::Vec, CgPolicy::Mat, CgPolicy::Mix]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CgPolicy::Imp => "IMP",
+            CgPolicy::Vec => "VEC",
+            CgPolicy::Mat => "MAT",
+            CgPolicy::Mix => "MIX",
+        }
+    }
+}
+
+/// Per-iteration global-memory traffic of one CG iteration (merge SpMV +
+/// fused vector update), in bytes.
+///
+/// Accounting (per paper §III-B-2, with element size `elem`):
+/// * matrix A: 1 load of (vals + col idx) + row_ptr share;
+/// * residual r: 3 loads + 1 store; direction p: 3 loads + 1 store;
+///   solution x: 1 load + 1 store; Ap: 1 store + 2 loads;
+/// * workload (merge plan): TB-level boundaries re-searched (loads of
+///   row_ptr) unless cached.
+#[derive(Clone, Copy, Debug)]
+pub struct CgTraffic {
+    pub matrix_bytes: f64,
+    pub vector_bytes: f64,
+    pub workload_bytes: f64,
+}
+
+impl CgTraffic {
+    pub fn total(&self) -> f64 {
+        self.matrix_bytes + self.vector_bytes + self.workload_bytes
+    }
+}
+
+/// Uncached per-iteration traffic for a matrix (baseline).
+pub fn baseline_traffic(a: &Csr, elem: usize) -> CgTraffic {
+    let matrix = (a.nnz() * (elem + 4) + (a.n_rows + 1) * 4) as f64;
+    // r: 4, p: 4, x: 2, Ap: 3 passes of n*elem each
+    let vector = (13 * a.n_rows * elem) as f64;
+    // plan re-search: one pass over row_ptr
+    let workload = ((a.n_rows + 1) * 4) as f64;
+    CgTraffic { matrix_bytes: matrix, vector_bytes: vector, workload_bytes: workload }
+}
+
+/// Per-iteration traffic under a policy, given the on-chip capacity
+/// available for caching (bytes). Returns (traffic, plan).
+pub fn policy_traffic(
+    a: &Csr,
+    elem: usize,
+    policy: CgPolicy,
+    capacity_bytes: f64,
+) -> (CgTraffic, CachePlan) {
+    let base = baseline_traffic(a, elem);
+    let matrix_bytes = (a.nnz() * (elem + 4)) as f64;
+    let vector_bytes = (4 * a.n_rows * elem) as f64; // r, p, x, Ap resident set
+    let arrays = match policy {
+        CgPolicy::Imp => vec![],
+        CgPolicy::Vec => vec![caching::CacheableArray::new("vec", vector_bytes, 3.0, 1.0)],
+        CgPolicy::Mat => vec![caching::CacheableArray::new("mat", matrix_bytes, 1.0, 0.0)],
+        CgPolicy::Mix => vec![
+            caching::CacheableArray::new("vec", vector_bytes, 3.0, 1.0),
+            caching::CacheableArray::new("mat", matrix_bytes, 1.0, 0.0),
+        ],
+    };
+    let plan = caching::plan(CacheLocation::Both, &arrays, capacity_bytes * 0.6, capacity_bytes * 0.4);
+    // reduce traffic proportionally to the cached fraction of each class
+    let vec_frac = plan.allocation("vec").map(|al| al.fraction()).unwrap_or(0.0);
+    let mat_frac = plan.allocation("mat").map(|al| al.fraction()).unwrap_or(0.0);
+    // workload cache: VEC/MAT/MIX all cache the TB-level search result
+    let workload = if policy == CgPolicy::Imp { base.workload_bytes } else { 0.0 };
+    let traffic = CgTraffic {
+        matrix_bytes: base.matrix_bytes * (1.0 - mat_frac),
+        vector_bytes: base.vector_bytes * (1.0 - vec_frac),
+        workload_bytes: workload,
+    };
+    (traffic, plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn more_caching_less_traffic() {
+        let a = gen::poisson2d(32);
+        let cap = 1e6; // plenty for vectors, partial matrix
+        let base = baseline_traffic(&a, 4).total();
+        let imp = policy_traffic(&a, 4, CgPolicy::Imp, cap).0.total();
+        let vec = policy_traffic(&a, 4, CgPolicy::Vec, cap).0.total();
+        let mix = policy_traffic(&a, 4, CgPolicy::Mix, cap).0.total();
+        assert!(imp <= base);
+        assert!(vec < imp);
+        assert!(mix <= vec, "mix {mix} vec {vec}");
+    }
+
+    #[test]
+    fn vec_policy_fully_caches_small_vectors() {
+        let a = gen::poisson2d(16);
+        let cap = 1e9;
+        let (t, plan) = policy_traffic(&a, 4, CgPolicy::Vec, cap);
+        assert!((plan.allocation("vec").unwrap().fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(t.vector_bytes, 0.0);
+        // matrix untouched by VEC
+        assert!(t.matrix_bytes > 0.0);
+    }
+
+    #[test]
+    fn mix_prefers_vectors_then_matrix() {
+        let a = gen::poisson2d(32);
+        let vector_bytes = (4 * a.n_rows * 4) as f64;
+        // capacity = vectors + half the matrix
+        let matrix_bytes = (a.nnz() * 8) as f64;
+        let cap = vector_bytes + matrix_bytes / 2.0;
+        let (_, plan) = policy_traffic(&a, 4, CgPolicy::Mix, cap);
+        assert!((plan.allocation("vec").unwrap().fraction() - 1.0).abs() < 1e-9);
+        let mf = plan.allocation("mat").unwrap().fraction();
+        assert!(mf > 0.2 && mf < 0.8, "mat fraction {mf}");
+    }
+}

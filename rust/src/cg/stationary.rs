@@ -1,0 +1,238 @@
+//! Stationary iterative solvers (Jacobi, weighted Jacobi, Gauss-Seidel)
+//! — the other solver family the paper's introduction targets ("iterative
+//! stationary methods for solving systems of linear equations").
+//!
+//! Both run under the two execution models: `host_loop` re-derives the
+//! diagonal/splitting data every sweep (the relaunch analog) and streams
+//! each BLAS-1 pass separately; `persistent` hoists the invariant
+//! splitting data out of the loop and fuses the sweeps — the PERKS
+//! treatment. Identical iterates, different memory behaviour.
+
+use crate::error::{Error, Result};
+use crate::sparse::csr::Csr;
+
+/// Execution model for the stationary solvers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Model {
+    HostLoop,
+    Persistent,
+}
+
+/// Solve report.
+#[derive(Clone, Debug)]
+pub struct StationaryResult {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub residual_norm2: f64,
+    pub converged: bool,
+    pub wall_seconds: f64,
+    /// Times the diagonal/splitting arrays were (re)derived.
+    pub splitting_builds: usize,
+}
+
+fn diagonal(a: &Csr) -> Result<Vec<f64>> {
+    (0..a.n_rows)
+        .map(|r| {
+            a.get(r, r)
+                .filter(|&d| d != 0.0)
+                .ok_or_else(|| Error::Solver(format!("zero/missing diagonal at row {r}")))
+        })
+        .collect()
+}
+
+fn residual_norm2(a: &Csr, x: &[f64], b: &[f64], scratch: &mut [f64]) -> f64 {
+    a.spmv_gold(x, scratch);
+    scratch.iter().zip(b).map(|(ax, bi)| (bi - ax) * (bi - ax)).sum()
+}
+
+/// Weighted Jacobi: x' = x + w D^-1 (b - A x). `omega` in (0, 1];
+/// converges for diagonally dominant systems.
+pub fn jacobi(
+    a: &Csr,
+    b: &[f64],
+    omega: f64,
+    tol: f64,
+    max_iters: usize,
+    model: Model,
+) -> Result<StationaryResult> {
+    if b.len() != a.n_rows {
+        return Err(Error::Solver("rhs size mismatch".into()));
+    }
+    let t0 = std::time::Instant::now();
+    let n = a.n_rows;
+    let mut x = vec![0.0; n];
+    let mut ax = vec![0.0; n];
+    let bb: f64 = b.iter().map(|v| v * v).sum();
+    let threshold = tol * tol * bb;
+    let mut splitting_builds = 0;
+    // persistent: hoist the invariant diagonal out of the sweep loop
+    let diag_hoisted = if model == Model::Persistent {
+        splitting_builds += 1;
+        Some(diagonal(a)?)
+    } else {
+        None
+    };
+    let mut iters = 0;
+    let mut rr = f64::INFINITY;
+    while iters < max_iters {
+        let diag = match (&diag_hoisted, model) {
+            (Some(d), _) => d.clone(),
+            (None, _) => {
+                // host-loop: the relaunch analog re-derives the splitting
+                splitting_builds += 1;
+                diagonal(a)?
+            }
+        };
+        match model {
+            Model::HostLoop => {
+                // separate passes: spmv, residual, update, norm
+                a.spmv_gold(&x, &mut ax);
+                let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
+                for i in 0..n {
+                    x[i] += omega * r[i] / diag[i];
+                }
+                rr = r.iter().map(|v| v * v).sum();
+            }
+            Model::Persistent => {
+                // fused single pass
+                a.spmv_gold(&x, &mut ax);
+                rr = 0.0;
+                for i in 0..n {
+                    let ri = b[i] - ax[i];
+                    x[i] += omega * ri / diag[i];
+                    rr += ri * ri;
+                }
+            }
+        }
+        iters += 1;
+        if rr <= threshold {
+            break;
+        }
+    }
+    let final_rr = residual_norm2(a, &x, b, &mut ax);
+    Ok(StationaryResult {
+        x,
+        iters,
+        residual_norm2: final_rr,
+        converged: rr <= threshold,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        splitting_builds,
+    })
+}
+
+/// Gauss-Seidel: in-place forward sweep x_i = (b_i - sum_{j!=i} a_ij x_j)/a_ii.
+pub fn gauss_seidel(
+    a: &Csr,
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+    model: Model,
+) -> Result<StationaryResult> {
+    if b.len() != a.n_rows {
+        return Err(Error::Solver("rhs size mismatch".into()));
+    }
+    let t0 = std::time::Instant::now();
+    let n = a.n_rows;
+    let mut x = vec![0.0; n];
+    let mut scratch = vec![0.0; n];
+    let bb: f64 = b.iter().map(|v| v * v).sum();
+    let threshold = tol * tol * bb;
+    let mut splitting_builds = 0;
+    let diag_hoisted = if model == Model::Persistent {
+        splitting_builds += 1;
+        Some(diagonal(a)?)
+    } else {
+        None
+    };
+    let mut iters = 0;
+    let mut rr = f64::INFINITY;
+    while iters < max_iters {
+        let diag = match &diag_hoisted {
+            Some(d) => d.clone(),
+            None => {
+                splitting_builds += 1;
+                diagonal(a)?
+            }
+        };
+        for i in 0..n {
+            let (cols, vals) = a.row(i);
+            let mut acc = b[i];
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c != i {
+                    acc -= v * x[c];
+                }
+            }
+            x[i] = acc / diag[i];
+        }
+        rr = residual_norm2(a, &x, b, &mut scratch);
+        iters += 1;
+        if rr <= threshold {
+            break;
+        }
+    }
+    Ok(StationaryResult {
+        x,
+        iters,
+        residual_norm2: rr,
+        converged: rr <= threshold,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        splitting_builds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn jacobi_converges_on_poisson() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 4);
+        let r = jacobi(&a, &b, 0.8, 1e-6, 20_000, Model::Persistent).unwrap();
+        assert!(r.converged, "rr {}", r.residual_norm2);
+        let bb: f64 = b.iter().map(|v| v * v).sum();
+        assert!(r.residual_norm2 < 1e-10 * bb);
+    }
+
+    #[test]
+    fn models_walk_identical_iterates() {
+        let a = gen::clustered_spd(200, 5, 12, 3).unwrap();
+        let b = gen::rhs(200, 2);
+        let h = jacobi(&a, &b, 0.7, 0.0, 50, Model::HostLoop).unwrap();
+        let p = jacobi(&a, &b, 0.7, 0.0, 50, Model::Persistent).unwrap();
+        let diff = h.x.iter().zip(&p.x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-13, "{diff}");
+        assert_eq!(p.splitting_builds, 1);
+        assert_eq!(h.splitting_builds, 50);
+    }
+
+    #[test]
+    fn gauss_seidel_converges_faster_than_jacobi() {
+        let a = gen::poisson2d(10);
+        let b = gen::rhs(a.n_rows, 6);
+        let j = jacobi(&a, &b, 1.0, 1e-8, 50_000, Model::Persistent).unwrap();
+        let g = gauss_seidel(&a, &b, 1e-8, 50_000, Model::Persistent).unwrap();
+        assert!(j.converged && g.converged);
+        assert!(g.iters < j.iters, "GS {} vs Jacobi {}", g.iters, j.iters);
+    }
+
+    #[test]
+    fn zero_diagonal_rejected() {
+        let a = crate::sparse::csr::Csr::from_coo(2, 2, vec![(0, 1, 1.0), (1, 0, 1.0)]).unwrap();
+        assert!(jacobi(&a, &[1.0, 1.0], 1.0, 1e-6, 10, Model::Persistent).is_err());
+        assert!(gauss_seidel(&a, &[1.0, 1.0], 1e-6, 10, Model::HostLoop).is_err());
+    }
+
+    #[test]
+    fn solution_satisfies_system() {
+        let a = gen::poisson2d(8);
+        let b = gen::rhs(a.n_rows, 9);
+        let g = gauss_seidel(&a, &b, 1e-10, 100_000, Model::Persistent).unwrap();
+        let mut ax = vec![0.0; a.n_rows];
+        a.spmv_gold(&g.x, &mut ax);
+        for (axi, bi) in ax.iter().zip(&b) {
+            assert!((axi - bi).abs() < 1e-4, "{axi} vs {bi}");
+        }
+    }
+}

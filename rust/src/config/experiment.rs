@@ -1,0 +1,112 @@
+//! Typed experiment descriptions parsed from config files.
+//!
+//! The `perks` CLI and the bench harness both consume these; an example
+//! config lives at `examples/configs/quickstart.toml`.
+
+use crate::config::parser::Config;
+use crate::coordinator::ExecMode;
+use crate::error::{Error, Result};
+
+/// One stencil run job.
+#[derive(Clone, Debug)]
+pub struct StencilJob {
+    pub bench: String,
+    pub interior: String,
+    pub dtype: String,
+    pub steps: usize,
+    pub modes: Vec<ExecMode>,
+    pub repeats: usize,
+}
+
+impl StencilJob {
+    pub fn from_config(cfg: &Config, section: &str) -> Result<Self> {
+        let modes_raw = cfg.str_or(section, "modes", "all");
+        let modes = parse_modes(&modes_raw)?;
+        Ok(Self {
+            bench: cfg.str_or(section, "bench", "2d5pt"),
+            interior: cfg.str_or(section, "interior", "128x128"),
+            dtype: cfg.str_or(section, "dtype", "f32"),
+            steps: cfg.int_or(section, "steps", 64) as usize,
+            modes,
+            repeats: cfg.int_or(section, "repeats", 3) as usize,
+        })
+    }
+}
+
+/// Parse a mode list like "host-loop,persistent" or "all".
+pub fn parse_modes(s: &str) -> Result<Vec<ExecMode>> {
+    if s == "all" {
+        return Ok(ExecMode::all().to_vec());
+    }
+    s.split(',')
+        .map(|m| match m.trim() {
+            "host-loop" => Ok(ExecMode::HostLoop),
+            "host-loop-resident" | "resident" => Ok(ExecMode::HostLoopResident),
+            "persistent" | "perks" => Ok(ExecMode::Persistent),
+            other => Err(Error::Config(format!("unknown mode {other:?}"))),
+        })
+        .collect()
+}
+
+/// Top-level experiment config: which GPU to simulate, artifact dir, jobs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub device: String,
+    pub artifact_dir: String,
+    pub stencil_jobs: Vec<StencilJob>,
+}
+
+impl ExperimentConfig {
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let device = cfg.str_or("", "device", "A100");
+        let artifact_dir = cfg.str_or("", "artifacts", "artifacts");
+        let mut stencil_jobs = Vec::new();
+        for section in cfg.sections() {
+            if section.starts_with("stencil") && !section.is_empty() {
+                stencil_jobs.push(StencilJob::from_config(cfg, section)?);
+            }
+        }
+        Ok(Self { device, artifact_dir, stencil_jobs })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_config(&Config::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_experiment() {
+        let text = r#"
+            device = "V100"
+            artifacts = "artifacts"
+            [stencil.a]
+            bench = "2d9pt"
+            steps = 32
+            modes = "host-loop,persistent"
+            [stencil.b]
+            interior = "64x64"
+            dtype = "f64"
+        "#;
+        let cfg = Config::parse(text).unwrap();
+        let exp = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(exp.device, "V100");
+        assert_eq!(exp.stencil_jobs.len(), 2);
+        let a = &exp.stencil_jobs[0];
+        assert_eq!(a.bench, "2d9pt");
+        assert_eq!(a.steps, 32);
+        assert_eq!(a.modes, vec![ExecMode::HostLoop, ExecMode::Persistent]);
+        let b = &exp.stencil_jobs[1];
+        assert_eq!(b.dtype, "f64");
+        assert_eq!(b.modes.len(), 3);
+    }
+
+    #[test]
+    fn bad_mode_rejected() {
+        assert!(parse_modes("warp-speed").is_err());
+        assert_eq!(parse_modes("all").unwrap().len(), 3);
+    }
+}

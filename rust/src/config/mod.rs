@@ -1,0 +1,12 @@
+//! Experiment configuration system.
+//!
+//! No TOML/serde crates are available offline, so `parser` implements the
+//! small configuration dialect we need (sections, scalars, lists) from
+//! scratch, and `experiment` maps parsed values onto typed experiment
+//! descriptions used by the CLI and the bench harness.
+
+pub mod experiment;
+pub mod parser;
+
+pub use experiment::{ExperimentConfig, StencilJob};
+pub use parser::{Config, Value};

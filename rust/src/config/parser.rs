@@ -1,0 +1,263 @@
+//! Minimal TOML-subset configuration parser (built from scratch; no serde
+//! in the vendored dependency set).
+//!
+//! Supported syntax:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! steps = 1000
+//! ratio = 0.5
+//! flag = true
+//! sizes = [128, 256, 512]
+//! names = ["2d5pt", "2d9pt"]
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => Err(Error::Config(format!("expected int, got {other:?}"))),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => Err(Error::Config(format!("expected float, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    pub fn as_list(&self) -> Result<&[Value]> {
+        match self {
+            Value::List(v) => Ok(v),
+            other => Err(Error::Config(format!("expected list, got {other:?}"))),
+        }
+    }
+
+    fn parse_scalar(tok: &str) -> Result<Value> {
+        let tok = tok.trim();
+        if tok.starts_with('"') && tok.ends_with('"') && tok.len() >= 2 {
+            return Ok(Value::Str(tok[1..tok.len() - 1].to_string()));
+        }
+        match tok {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = tok.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = tok.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(Error::Config(format!("cannot parse value {tok:?}")))
+    }
+
+    fn parse(tok: &str) -> Result<Value> {
+        let tok = tok.trim();
+        if tok.starts_with('[') {
+            if !tok.ends_with(']') {
+                return Err(Error::Config(format!("unterminated list {tok:?}")));
+            }
+            let inner = tok[1..tok.len() - 1].trim();
+            if inner.is_empty() {
+                return Ok(Value::List(vec![]));
+            }
+            let items = split_top_level(inner)?
+                .into_iter()
+                .map(|s| Value::parse_scalar(&s))
+                .collect::<Result<Vec<_>>>()?;
+            return Ok(Value::List(items));
+        }
+        Value::parse_scalar(tok)
+    }
+}
+
+/// Split a list body on commas (no nested lists supported — flat only).
+fn split_top_level(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err(Error::Config(format!("unterminated string in {s:?}")));
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    Ok(out)
+}
+
+/// Parsed configuration: `section -> key -> value`. Keys outside any
+/// section land in the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!("line {}: bad section", lineno + 1)));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), Value::parse(v)?);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn require(&self, section: &str, key: &str) -> Result<&Value> {
+        self.get(section, key)
+            .ok_or_else(|| Error::Config(format!("missing [{section}] {key}")))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+
+    /// String with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Integer with default.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int().ok()).unwrap_or(default)
+    }
+
+    /// Float with default.
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # top comment
+        title = "perks"
+        [stencil]
+        bench = "2d5pt"   # inline comment
+        steps = 1000
+        ratio = 0.5
+        cache = true
+        sizes = [128, 256]
+        names = ["a", "b"]
+        [empty]
+    "#;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("", "title").unwrap().as_str().unwrap(), "perks");
+        assert_eq!(c.get("stencil", "bench").unwrap().as_str().unwrap(), "2d5pt");
+        assert_eq!(c.get("stencil", "steps").unwrap().as_int().unwrap(), 1000);
+        assert_eq!(c.get("stencil", "ratio").unwrap().as_float().unwrap(), 0.5);
+        assert!(c.get("stencil", "cache").unwrap().as_bool().unwrap());
+        let sizes = c.get("stencil", "sizes").unwrap().as_list().unwrap();
+        assert_eq!(sizes, &[Value::Int(128), Value::Int(256)]);
+        let names = c.get("stencil", "names").unwrap().as_list().unwrap();
+        assert_eq!(names[1].as_str().unwrap(), "b");
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.get("", "x").unwrap().as_float().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.str_or("s", "k", "d"), "d");
+        assert_eq!(c.int_or("s", "k", 7), 7);
+        assert_eq!(c.float_or("s", "k", 0.25), 0.25);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = [1, 2").is_err());
+        assert!(Config::parse("x = @garbage").is_err());
+    }
+
+    #[test]
+    fn require_missing() {
+        let c = Config::parse("").unwrap();
+        assert!(c.require("a", "b").is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Occupancy autotuner (paper §V-E-1: "an end-user only needs to reduce
+//! the device occupancy to minimum (while maintaining performance) via
+//! manual tuning of the kernel launch parameters or using auto-tuning
+//! tools").
+//!
+//! Two tuners:
+//! * `tune_occupancy` — over the simulator: find the minimum TB/SMX whose
+//!   modeled efficiency stays within `slack` of the saturated rate, and
+//!   report the capacity freed for caching;
+//! * `tune_threads` — over the CPU persistent-threads executor: measure a
+//!   small sweep and pick the thread count with the best wall time (used
+//!   by the examples and benches to avoid hardcoding 8).
+
+use crate::simgpu::concurrency;
+use crate::simgpu::device::DeviceSpec;
+use crate::simgpu::occupancy::{self, KernelResources};
+use crate::stencil::grid::Domain;
+use crate::stencil::parallel;
+use crate::stencil::shape::StencilSpec;
+
+/// Result of the simulator-side occupancy tuning.
+#[derive(Clone, Debug)]
+pub struct OccupancyChoice {
+    pub tb_per_smx: usize,
+    /// Modeled efficiency at that occupancy (1.0 = saturated).
+    pub efficiency: f64,
+    /// Bytes freed device-wide for PERKS caching.
+    pub freed_bytes: usize,
+}
+
+/// Find the minimum occupancy whose efficiency >= (1 - slack) of the
+/// saturated one, maximizing freed resources (the paper's procedure in
+/// §IV-D / Table II: drop to 1/4 occupancy while keeping performance).
+pub fn tune_occupancy(
+    dev: &DeviceSpec,
+    kr: &KernelResources,
+    ilp_bytes_per_tb: f64,
+    l2_hit_rate: f64,
+    slack: f64,
+) -> Option<OccupancyChoice> {
+    let c_hw = concurrency::c_hw_blended(dev, l2_hit_rate);
+    let max_tb = occupancy::max_tb_per_smx(dev, kr);
+    if max_tb == 0 {
+        return None;
+    }
+    let eff_at = |tb: usize| concurrency::efficiency(ilp_bytes_per_tb * tb as f64, c_hw);
+    let saturated = eff_at(max_tb);
+    let mut best: Option<OccupancyChoice> = None;
+    for tb in 1..=max_tb {
+        let eff = eff_at(tb);
+        if eff >= (1.0 - slack) * saturated {
+            let occ = occupancy::occupancy(dev, kr, tb)?;
+            best = Some(OccupancyChoice {
+                tb_per_smx: tb,
+                efficiency: eff,
+                freed_bytes: occ.free_bytes_device(dev),
+            });
+            break; // lowest TB/SMX satisfying the bound frees the most
+        }
+    }
+    best.or_else(|| {
+        let occ = occupancy::occupancy(dev, kr, max_tb)?;
+        Some(OccupancyChoice {
+            tb_per_smx: max_tb,
+            efficiency: saturated,
+            freed_bytes: occ.free_bytes_device(dev),
+        })
+    })
+}
+
+/// Result of the measured CPU thread tuning.
+#[derive(Clone, Debug)]
+pub struct ThreadChoice {
+    pub threads: usize,
+    pub wall_seconds: f64,
+    /// All measured (threads, seconds) points.
+    pub sweep: Vec<(usize, f64)>,
+}
+
+/// Measure the persistent executor over a thread sweep (powers of two up
+/// to `max_threads`) on a short calibration run and pick the fastest.
+pub fn tune_threads(
+    spec: &StencilSpec,
+    domain: &Domain,
+    calib_steps: usize,
+    max_threads: usize,
+) -> crate::error::Result<ThreadChoice> {
+    let mut sweep = Vec::new();
+    let mut t = 1;
+    while t <= max_threads {
+        let rep = parallel::persistent(spec, domain, calib_steps, t)?;
+        sweep.push((t, rep.wall_seconds));
+        t *= 2;
+    }
+    let &(threads, wall_seconds) = sweep
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("non-empty sweep");
+    Ok(ThreadChoice { threads, wall_seconds, sweep })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::a100;
+    use crate::stencil::shape;
+
+    #[test]
+    fn tuner_matches_table_ii_quarter_occupancy() {
+        // Table II: the sp 2d5pt kernel can drop to 1/4 of max occupancy
+        // (TB/SMX 2 of 8) while maintaining performance
+        let dev = a100();
+        let kr = KernelResources { threads_per_tb: 256, regs_per_thread: 32, smem_per_tb: 0 };
+        let choice = tune_occupancy(&dev, &kr, (2580.0 + 2048.0) * 4.0 / 5.0, 0.6, 0.05).unwrap();
+        assert!(choice.tb_per_smx <= 2, "tuner picked {}", choice.tb_per_smx);
+        assert!(choice.efficiency > 0.9);
+        assert!(choice.freed_bytes > 0);
+    }
+
+    #[test]
+    fn lower_occupancy_frees_more() {
+        let dev = a100();
+        let kr = KernelResources { threads_per_tb: 256, regs_per_thread: 32, smem_per_tb: 1024 };
+        // generous slack => TB/SMX = 1 => max freed
+        let loose = tune_occupancy(&dev, &kr, 1e9, 0.0, 0.5).unwrap();
+        assert_eq!(loose.tb_per_smx, 1);
+        let tight = tune_occupancy(&dev, &kr, 500.0, 0.0, 0.0).unwrap();
+        assert!(tight.tb_per_smx >= loose.tb_per_smx);
+        assert!(loose.freed_bytes >= tight.freed_bytes);
+    }
+
+    #[test]
+    fn kernel_too_fat_returns_none() {
+        let dev = a100();
+        let kr = KernelResources {
+            threads_per_tb: 2048,
+            regs_per_thread: 256,
+            smem_per_tb: usize::MAX / 2,
+        };
+        assert!(tune_occupancy(&dev, &kr, 1.0, 0.0, 0.1).is_none());
+    }
+
+    #[test]
+    fn thread_tuner_returns_a_measured_choice() {
+        let s = shape::spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[64, 64]).unwrap();
+        d.randomize(5);
+        let choice = tune_threads(&s, &d, 4, 4).unwrap();
+        assert!(choice.threads == 1 || choice.threads == 2 || choice.threads == 4);
+        assert_eq!(choice.sweep.len(), 3);
+        assert!(choice.wall_seconds <= choice.sweep[0].1 + 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! Device-wide barrier semantics for the CPU persistent-threads executor.
+//!
+//! The paper's persistent kernel synchronizes time steps with CUDA's grid
+//! sync. Our CPU analog (`stencil::parallel`) runs one OS thread per
+//! "thread block" for the whole solve; this module provides the grid-sync
+//! equivalent: a reusable barrier with generation counting, plus launch
+//! statistics so benches can report barrier cost vs relaunch cost
+//! (cf. Zhang et al. [32] in the paper: the two are comparable).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// A grid barrier: `sync()` blocks until all participants arrive.
+pub struct GridBarrier {
+    inner: Barrier,
+    generation: AtomicU64,
+    participants: usize,
+    /// Cumulative nanoseconds threads spent waiting (summed over threads).
+    wait_ns: AtomicU64,
+}
+
+impl GridBarrier {
+    pub fn new(participants: usize) -> Self {
+        Self {
+            inner: Barrier::new(participants),
+            generation: AtomicU64::new(0),
+            participants,
+            wait_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn participants(&self) -> usize {
+        self.participants
+    }
+
+    /// Block until all participants arrive; returns the completed
+    /// generation index (number of grid syncs so far).
+    pub fn sync(&self) -> u64 {
+        let t0 = std::time::Instant::now();
+        let res = self.inner.wait();
+        self.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if res.is_leader() {
+            self.generation.fetch_add(1, Ordering::Relaxed);
+        }
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    pub fn generations(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Total time threads spent blocked at the barrier (sum over threads).
+    pub fn total_wait(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.wait_ns.load(Ordering::Relaxed))
+    }
+}
+
+/// Serialized stderr-style progress log shared by persistent threads
+/// (ordinary printing interleaves; solver code must stay lock-free, so
+/// only coordinator-level events go through this).
+#[derive(Default)]
+pub struct EventLog {
+    events: Mutex<Vec<String>>,
+}
+
+impl EventLog {
+    pub fn push(&self, msg: impl Into<String>) {
+        self.events.lock().unwrap().push(msg.into());
+    }
+
+    pub fn drain(&self) -> Vec<String> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn barrier_synchronizes_counters() {
+        // Each thread increments a shared epoch counter only after sync;
+        // with a correct barrier no thread can run ahead.
+        let n = 4;
+        let steps = 50;
+        let barrier = Arc::new(GridBarrier::new(n));
+        let epoch = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let b = barrier.clone();
+                let e = epoch.clone();
+                std::thread::spawn(move || {
+                    for step in 0..steps {
+                        // everyone sees epoch == step * n threads' worth
+                        let seen = e.load(Ordering::SeqCst);
+                        assert!(seen >= (step as u64) * n as u64);
+                        e.fetch_add(1, Ordering::SeqCst);
+                        b.sync();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(epoch.load(Ordering::SeqCst), (n * steps) as u64);
+        assert_eq!(barrier.generations(), steps as u64);
+    }
+
+    #[test]
+    fn event_log_collects() {
+        let log = EventLog::default();
+        log.push("a");
+        log.push("b");
+        assert_eq!(log.drain(), vec!["a".to_string(), "b".to_string()]);
+        assert!(log.drain().is_empty());
+    }
+}

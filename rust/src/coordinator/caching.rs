@@ -1,0 +1,267 @@
+//! Caching policy engine (paper §III-B).
+//!
+//! Given the on-chip capacity freed by running at minimum occupancy and a
+//! description of the solver's arrays (how many bytes each loads/stores per
+//! time step), decide *what* to cache and *where* (shared memory analog,
+//! registers analog, or both). The paper's rules implemented here:
+//!
+//! * priority: data with no inter-TB dependency (interior) > data with
+//!   inter-TB dependency (TB boundary) > halo (never cached);
+//! * CG: residual vector r (3 loads + 1 store per step per element) before
+//!   matrix A (1 load) — i.e., rank arrays by traffic saved per cached byte;
+//! * greedy fill: arrays are divisible, so fractional caching is allowed
+//!   (the paper caches "a subset of the domain").
+
+/// Where cached data may live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheLocation {
+    /// No explicit caching: rely on L2 hits (paper policy "IMP").
+    Implicit,
+    /// Shared-memory only ("SM").
+    SharedOnly,
+    /// Register-file only ("REG").
+    RegOnly,
+    /// Both ("BTH"/"MIX").
+    Both,
+}
+
+impl CacheLocation {
+    pub fn all() -> [CacheLocation; 4] {
+        [
+            CacheLocation::Implicit,
+            CacheLocation::SharedOnly,
+            CacheLocation::RegOnly,
+            CacheLocation::Both,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheLocation::Implicit => "IMP",
+            CacheLocation::SharedOnly => "SM",
+            CacheLocation::RegOnly => "REG",
+            CacheLocation::Both => "BTH",
+        }
+    }
+}
+
+/// One cacheable array (or domain tier) of a solver.
+#[derive(Clone, Debug)]
+pub struct CacheableArray {
+    pub name: String,
+    /// Total size in bytes.
+    pub bytes: f64,
+    /// Global-memory bytes *loaded* per time step per byte of array if NOT
+    /// cached (e.g. 1.0 for a stencil domain; 3.0 for CG's r).
+    pub loads_per_step: f64,
+    /// Global-memory bytes *stored* per step per byte if not cached.
+    pub stores_per_step: f64,
+}
+
+impl CacheableArray {
+    pub fn new(name: &str, bytes: f64, loads: f64, stores: f64) -> Self {
+        Self { name: name.into(), bytes, loads_per_step: loads, stores_per_step: stores }
+    }
+
+    /// Traffic saved per cached byte per time step: caching eliminates both
+    /// the loads and the stores of the covered bytes.
+    pub fn density(&self) -> f64 {
+        self.loads_per_step + self.stores_per_step
+    }
+}
+
+/// A planned allocation for one array.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub name: String,
+    pub cached_bytes_sm: f64,
+    pub cached_bytes_reg: f64,
+    pub total_bytes: f64,
+}
+
+impl Allocation {
+    pub fn cached_bytes(&self) -> f64 {
+        self.cached_bytes_sm + self.cached_bytes_reg
+    }
+
+    pub fn fraction(&self) -> f64 {
+        if self.total_bytes == 0.0 {
+            0.0
+        } else {
+            self.cached_bytes() / self.total_bytes
+        }
+    }
+}
+
+/// The cache plan for a solver configuration.
+#[derive(Clone, Debug)]
+pub struct CachePlan {
+    pub location: CacheLocation,
+    pub allocations: Vec<Allocation>,
+    pub sm_capacity: f64,
+    pub reg_capacity: f64,
+}
+
+impl CachePlan {
+    pub fn cached_bytes(&self) -> f64 {
+        self.allocations.iter().map(|a| a.cached_bytes()).sum()
+    }
+
+    pub fn cached_bytes_sm(&self) -> f64 {
+        self.allocations.iter().map(|a| a.cached_bytes_sm).sum()
+    }
+
+    pub fn cached_bytes_reg(&self) -> f64 {
+        self.allocations.iter().map(|a| a.cached_bytes_reg).sum()
+    }
+
+    /// Traffic (bytes to global memory) saved per time step by this plan.
+    pub fn saved_bytes_per_step(&self, arrays: &[CacheableArray]) -> f64 {
+        self.allocations
+            .iter()
+            .map(|al| {
+                let arr = arrays.iter().find(|a| a.name == al.name).expect("array");
+                al.cached_bytes() * arr.density()
+            })
+            .sum()
+    }
+
+    pub fn allocation(&self, name: &str) -> Option<&Allocation> {
+        self.allocations.iter().find(|a| a.name == name)
+    }
+}
+
+/// Plan caching greedily by traffic density (paper §III-B-2).
+///
+/// `sm_capacity` / `reg_capacity` are the bytes freed for caching at the
+/// chosen occupancy. Arrays are sorted by `density()` descending and filled
+/// fractionally; shared memory is filled before registers for `Both`
+/// (registers carry the spill risk the paper warns about in §IV-E).
+pub fn plan(
+    location: CacheLocation,
+    arrays: &[CacheableArray],
+    sm_capacity: f64,
+    reg_capacity: f64,
+) -> CachePlan {
+    let (mut sm_free, mut reg_free) = match location {
+        CacheLocation::Implicit => (0.0, 0.0),
+        CacheLocation::SharedOnly => (sm_capacity, 0.0),
+        CacheLocation::RegOnly => (0.0, reg_capacity),
+        CacheLocation::Both => (sm_capacity, reg_capacity),
+    };
+    let mut order: Vec<&CacheableArray> = arrays.iter().collect();
+    // stable sort: equal densities keep input order (lets callers encode
+    // tie-breaking priorities positionally)
+    order.sort_by(|a, b| b.density().partial_cmp(&a.density()).unwrap());
+
+    let mut allocations = Vec::with_capacity(arrays.len());
+    for arr in order {
+        let mut remaining = arr.bytes;
+        let to_sm = remaining.min(sm_free);
+        sm_free -= to_sm;
+        remaining -= to_sm;
+        let to_reg = remaining.min(reg_free);
+        reg_free -= to_reg;
+        allocations.push(Allocation {
+            name: arr.name.clone(),
+            cached_bytes_sm: to_sm,
+            cached_bytes_reg: to_reg,
+            total_bytes: arr.bytes,
+        });
+    }
+    CachePlan { location, allocations, sm_capacity, reg_capacity }
+}
+
+/// The paper's stencil domain decomposition into cache tiers (§III-B-2):
+/// interior cells (no inter-TB dependency: caching saves 1 load + 1 store),
+/// TB-boundary cells (caching saves the load only; the store must still go
+/// to global memory for neighbors), halo (never cached).
+pub fn stencil_tiers(
+    interior_bytes: f64,
+    boundary_bytes: f64,
+    halo_bytes: f64,
+) -> Vec<CacheableArray> {
+    vec![
+        CacheableArray::new("interior", interior_bytes, 1.0, 1.0),
+        CacheableArray::new("tb-boundary", boundary_bytes, 1.0, 0.0),
+        // halo: zero density => never prioritized; listed for accounting
+        CacheableArray::new("halo", halo_bytes, 0.0, 0.0),
+    ]
+}
+
+/// The paper's CG arrays (§III-B-2): r has 3 loads + 1 store per iteration,
+/// A has 1 load. With equal tie priority, ordering is r > A as in the paper.
+pub fn cg_arrays(matrix_bytes: f64, vector_bytes: f64) -> Vec<CacheableArray> {
+    vec![
+        CacheableArray::new("r", vector_bytes, 3.0, 1.0),
+        CacheableArray::new("A", matrix_bytes, 1.0, 0.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn implicit_caches_nothing() {
+        let arrays = cg_arrays(1000.0, 100.0);
+        let p = plan(CacheLocation::Implicit, &arrays, 500.0, 500.0);
+        assert_eq!(p.cached_bytes(), 0.0);
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        let arrays = cg_arrays(1e9, 1e8);
+        for loc in CacheLocation::all() {
+            let p = plan(loc, &arrays, 1234.0, 567.0);
+            assert!(p.cached_bytes_sm() <= 1234.0 + 1e-9);
+            assert!(p.cached_bytes_reg() <= 567.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn cg_priority_r_before_a() {
+        // capacity only fits the vector: r must win (paper: cache r > A)
+        let arrays = cg_arrays(1000.0, 100.0);
+        let p = plan(CacheLocation::SharedOnly, &arrays, 100.0, 0.0);
+        assert_eq!(p.allocation("r").unwrap().cached_bytes(), 100.0);
+        assert_eq!(p.allocation("A").unwrap().cached_bytes(), 0.0);
+    }
+
+    #[test]
+    fn stencil_priority_interior_boundary_halo() {
+        let tiers = stencil_tiers(1000.0, 100.0, 50.0);
+        let p = plan(CacheLocation::Both, &tiers, 600.0, 500.0);
+        // interior fully cached first (density 2), then boundary (density 1)
+        assert_eq!(p.allocation("interior").unwrap().cached_bytes(), 1000.0);
+        assert_eq!(p.allocation("tb-boundary").unwrap().cached_bytes(), 100.0);
+        assert_eq!(p.allocation("halo").unwrap().cached_bytes(), 0.0);
+    }
+
+    #[test]
+    fn fractional_fill_when_capacity_short() {
+        let tiers = stencil_tiers(1000.0, 100.0, 0.0);
+        let p = plan(CacheLocation::SharedOnly, &tiers, 300.0, 0.0);
+        let i = p.allocation("interior").unwrap();
+        assert_eq!(i.cached_bytes(), 300.0);
+        assert!((i.fraction() - 0.3).abs() < 1e-12);
+        assert_eq!(p.allocation("tb-boundary").unwrap().cached_bytes(), 0.0);
+    }
+
+    #[test]
+    fn saved_traffic_accounting() {
+        let tiers = stencil_tiers(100.0, 0.0, 0.0);
+        let p = plan(CacheLocation::RegOnly, &tiers, 0.0, 100.0);
+        // interior density = 2 (load+store) => 200 bytes/step saved
+        assert_eq!(p.saved_bytes_per_step(&tiers), 200.0);
+    }
+
+    #[test]
+    fn both_fills_sm_before_reg() {
+        let tiers = stencil_tiers(150.0, 0.0, 0.0);
+        let p = plan(CacheLocation::Both, &tiers, 100.0, 100.0);
+        let i = p.allocation("interior").unwrap();
+        assert_eq!(i.cached_bytes_sm, 100.0);
+        assert_eq!(i.cached_bytes_reg, 50.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the PERKS execution model.
+//!
+//! * `executor` — host-loop vs persistent drivers over PJRT artifacts;
+//! * `caching`  — the paper's §III-B caching policy engine;
+//! * `barrier`  — grid-sync semantics for the CPU persistent-threads
+//!   substrate (`stencil::parallel`).
+
+pub mod autotune;
+pub mod barrier;
+pub mod caching;
+pub mod executor;
+pub mod multidev;
+pub mod profile;
+
+pub use caching::{CacheLocation, CachePlan, CacheableArray};
+pub use executor::{CgDriver, CgReport, ExecMode, RunReport, StencilDriver};
+pub use profile::AccessProfile;

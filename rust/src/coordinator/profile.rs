@@ -1,0 +1,213 @@
+//! Profile-guided caching-policy advisor (paper §III-B-2: "this step can
+//! be automated by using a dedicated profile-guided utility ... to aid the
+//! user in swiftly identifying an ideal caching policy, based on the
+//! access patterns and frequency of access of data arrays in the solver").
+//!
+//! Solvers record per-array access counters into an `AccessProfile`; the
+//! advisor ranks arrays by traffic-saved-per-cached-byte and emits a
+//! `CachePlan` through the §III-B planner, plus a human-readable report.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::caching::{self, CacheLocation, CachePlan, CacheableArray};
+
+/// Per-array access counters accumulated over some profiled window.
+#[derive(Clone, Debug, Default)]
+pub struct ArrayStats {
+    pub bytes: f64,
+    pub loads: u64,
+    pub stores: u64,
+    /// Steps/iterations observed, to normalize to per-step rates.
+    pub steps: u64,
+}
+
+impl ArrayStats {
+    /// Loads per byte per step.
+    pub fn load_rate(&self) -> f64 {
+        if self.bytes == 0.0 || self.steps == 0 {
+            return 0.0;
+        }
+        self.loads as f64 / self.bytes / self.steps as f64
+    }
+
+    pub fn store_rate(&self) -> f64 {
+        if self.bytes == 0.0 || self.steps == 0 {
+            return 0.0;
+        }
+        self.stores as f64 / self.bytes / self.steps as f64
+    }
+}
+
+/// The profile: a map from array name to counters.
+#[derive(Clone, Debug, Default)]
+pub struct AccessProfile {
+    arrays: BTreeMap<String, ArrayStats>,
+    steps: u64,
+}
+
+impl AccessProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare an array and its size in bytes.
+    pub fn declare(&mut self, name: &str, bytes: f64) {
+        self.arrays.entry(name.into()).or_default().bytes = bytes;
+    }
+
+    /// Record `n` bytes loaded from `name`.
+    pub fn load(&mut self, name: &str, n: u64) {
+        self.arrays.entry(name.into()).or_default().loads += n;
+    }
+
+    /// Record `n` bytes stored to `name`.
+    pub fn store(&mut self, name: &str, n: u64) {
+        self.arrays.entry(name.into()).or_default().stores += n;
+    }
+
+    /// Mark the end of one time step / iteration.
+    pub fn step(&mut self) {
+        self.steps += 1;
+    }
+
+    pub fn finish(mut self) -> Self {
+        for s in self.arrays.values_mut() {
+            s.steps = self.steps;
+        }
+        self
+    }
+
+    /// Convert to planner inputs, ranked by density.
+    pub fn cacheable_arrays(&self) -> Vec<CacheableArray> {
+        let mut v: Vec<CacheableArray> = self
+            .arrays
+            .iter()
+            .map(|(name, s)| CacheableArray::new(name, s.bytes, s.load_rate(), s.store_rate()))
+            .collect();
+        v.sort_by(|a, b| b.density().partial_cmp(&a.density()).unwrap());
+        v
+    }
+
+    /// Produce a recommended plan for the given capacities.
+    pub fn recommend(&self, sm_capacity: f64, reg_capacity: f64) -> CachePlan {
+        caching::plan(CacheLocation::Both, &self.cacheable_arrays(), sm_capacity, reg_capacity)
+    }
+
+    /// Human-readable advisory report.
+    pub fn report(&self, sm_capacity: f64, reg_capacity: f64) -> String {
+        let arrays = self.cacheable_arrays();
+        let plan = self.recommend(sm_capacity, reg_capacity);
+        let mut out = String::from("profile-guided caching advisory\n");
+        out.push_str(&format!(
+            "capacity: {} smem + {} regs\n",
+            crate::util::fmt::bytes(sm_capacity),
+            crate::util::fmt::bytes(reg_capacity)
+        ));
+        for a in &arrays {
+            let al = plan.allocation(&a.name).unwrap();
+            out.push_str(&format!(
+                "  {:<12} {:>12}  density {:.2}/step  -> cache {:.0}% ({} sm, {} reg)\n",
+                a.name,
+                crate::util::fmt::bytes(a.bytes),
+                a.density(),
+                al.fraction() * 100.0,
+                crate::util::fmt::bytes(al.cached_bytes_sm),
+                crate::util::fmt::bytes(al.cached_bytes_reg),
+            ));
+        }
+        out
+    }
+}
+
+/// Profile one CG iteration's array accesses (the paper's own example:
+/// r sees 3 loads + 1 store per element, A one load).
+pub fn profile_cg(n: usize, nnz: usize, elem: usize, iters: u64) -> AccessProfile {
+    let mut p = AccessProfile::new();
+    p.declare("A", (nnz * (elem + 4)) as f64);
+    p.declare("r", (n * elem) as f64);
+    p.declare("p", (n * elem) as f64);
+    p.declare("x", (n * elem) as f64);
+    for _ in 0..iters {
+        p.load("A", (nnz * (elem + 4)) as u64);
+        p.load("r", 3 * (n * elem) as u64);
+        p.store("r", (n * elem) as u64);
+        p.load("p", 3 * (n * elem) as u64);
+        p.store("p", (n * elem) as u64);
+        p.load("x", (n * elem) as u64);
+        p.store("x", (n * elem) as u64);
+        p.step();
+    }
+    p.finish()
+}
+
+/// Profile a stencil's tiers (interior/boundary/halo), matching
+/// `caching::stencil_tiers`.
+pub fn profile_stencil(interior_bytes: u64, boundary_bytes: u64, steps: u64) -> AccessProfile {
+    let mut p = AccessProfile::new();
+    p.declare("interior", interior_bytes as f64);
+    p.declare("boundary", boundary_bytes as f64);
+    for _ in 0..steps {
+        p.load("interior", interior_bytes);
+        p.store("interior", interior_bytes);
+        p.load("boundary", boundary_bytes);
+        p.step();
+    }
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cg_profile_ranks_r_above_a() {
+        // the paper's §III-B-2 conclusion: r > A
+        let p = profile_cg(1000, 10_000, 4, 5);
+        let arrays = p.cacheable_arrays();
+        let r_pos = arrays.iter().position(|a| a.name == "r").unwrap();
+        let a_pos = arrays.iter().position(|a| a.name == "A").unwrap();
+        assert!(r_pos < a_pos, "r must rank above A: {arrays:?}");
+        // r density = 4 (3 loads + 1 store), A density = 1
+        assert!((arrays[r_pos].density() - 4.0).abs() < 1e-9);
+        assert!((arrays[a_pos].density() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stencil_profile_ranks_interior_above_boundary() {
+        let p = profile_stencil(10_000, 1_000, 3);
+        let arrays = p.cacheable_arrays();
+        assert_eq!(arrays[0].name, "interior");
+        assert!((arrays[0].density() - 2.0).abs() < 1e-9);
+        assert!((arrays[1].density() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recommendation_respects_capacity_and_priority() {
+        let p = profile_cg(1000, 100_000, 4, 2);
+        // capacity fits exactly the three hot vectors (r, p at density 4,
+        // then x at 2): 3 * 4000 bytes
+        let plan = p.recommend(8000.0, 4000.0);
+        assert!(plan.cached_bytes() <= 12_000.0 + 1e-9);
+        let r = plan.allocation("r").unwrap();
+        let pv = plan.allocation("p").unwrap();
+        assert!((r.fraction() - 1.0).abs() < 1e-9);
+        assert!((pv.fraction() - 1.0).abs() < 1e-9);
+        let a = plan.allocation("A").unwrap();
+        assert_eq!(a.cached_bytes(), 0.0, "A must lose to the vectors");
+    }
+
+    #[test]
+    fn report_is_readable() {
+        let p = profile_cg(100, 1000, 4, 1);
+        let rep = p.report(4096.0, 1024.0);
+        assert!(rep.contains("advisory"));
+        assert!(rep.contains('A') && rep.contains('r'));
+    }
+
+    #[test]
+    fn empty_profile_recommends_nothing() {
+        let p = AccessProfile::new().finish();
+        let plan = p.recommend(1e6, 1e6);
+        assert_eq!(plan.cached_bytes(), 0.0);
+    }
+}

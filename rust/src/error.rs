@@ -1,0 +1,45 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the perks library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Error from the XLA / PJRT runtime layer.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// Filesystem / IO error (artifact loading, config files, traces).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed artifact manifest (see `runtime::manifest`).
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// Configuration parse / validation error.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Shape or dtype mismatch between host data and an artifact signature.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Solver-level failure (divergence, non-SPD matrix, ...).
+    #[error("solver: {0}")]
+    Solver(String),
+
+    /// Invalid argument to a library call.
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+}
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand for `Error::Invalid` with a formatted message.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::Invalid(msg.into())
+    }
+}

@@ -1,0 +1,244 @@
+//! CG experiment builders: the Fig 7 (speedup over Ginkgo + sustained BW)
+//! and Fig 9 (policy heatmap) rows.
+//!
+//! Iteration-time model (constants documented in DESIGN.md §5):
+//!
+//! * baseline (Ginkgo-like): `K_LAUNCHES` kernel launches per iteration
+//!   (SpMV, 2 dots, 2 axpy-likes + overhead) at `T_LAUNCH` each, plus the
+//!   uncached per-iteration traffic streamed at the effective bandwidth of
+//!   the level the working set fits in (L2 vs HBM);
+//! * PERKS: `K_SYNCS` grid barriers at `T_SYNC` each (Zhang et al.: barrier
+//!   cost ~ relaunch cost, but PERKS needs far fewer synchronization points
+//!   than the baseline needs launches, and fuses the BLAS-1 passes), plus
+//!   the policy-reduced traffic, with the cached share served from
+//!   smem/register bandwidth.
+
+use crate::cg::policy::CgPolicy;
+use crate::simgpu::device::DeviceSpec;
+use crate::sparse::datasets::Dataset;
+
+/// Launch / sync cost constants (seconds).
+pub const T_LAUNCH: f64 = 4.0e-6;
+pub const T_SYNC: f64 = 1.6e-6;
+/// Kernel launches per baseline CG iteration (Ginkgo's CG does SpMV + 4-6
+/// BLAS-1/reduction kernels).
+pub const K_LAUNCHES: f64 = 6.0;
+/// Grid syncs per PERKS CG iteration (after SpMV, after the dot, after
+/// the update).
+pub const K_SYNCS: f64 = 3.0;
+
+/// Effective streaming bandwidth for a working set of `bytes`.
+pub fn effective_bw(dev: &DeviceSpec, bytes: f64) -> f64 {
+    if bytes <= dev.l2_bytes as f64 {
+        // L2 streams ~3x HBM on these parts
+        3.0 * dev.gmem_bw
+    } else {
+        dev.gmem_bw
+    }
+}
+
+/// On-chip capacity available to the PERKS CG kernel for caching
+/// (minimum occupancy; merge-SpMV kernel is lean: ~40 regs, 2KB smem/TB).
+pub fn cg_cache_capacity(dev: &DeviceSpec) -> f64 {
+    let used_regs_per_smx = 128.0 * 40.0 * 4.0; // 128 threads x 40 regs
+    let used_smem_per_smx = 2048.0;
+    let free = (dev.regfile_per_smx() as f64 - used_regs_per_smx) * 0.73
+        + (dev.smem_per_smx() as f64 - used_smem_per_smx);
+    // only ~half the freed capacity is practically usable for irregular
+    // SpMV data (alignment, per-TB partitioning slack, the §IV-E register
+    // reuse inefficiency); calibrated against the paper's beyond-L2
+    // speedups (1.15-1.6x)
+    free * dev.smxs as f64 * 0.5
+}
+
+/// One Fig 7 / Fig 9 evaluation.
+#[derive(Clone, Debug)]
+pub struct CgRow {
+    pub code: &'static str,
+    pub name: &'static str,
+    pub rows: usize,
+    pub nnz: usize,
+    pub within_l2: bool,
+    /// Speedup per policy, ordered as CgPolicy::all().
+    pub speedups: Vec<(CgPolicy, f64)>,
+    /// Baseline ("Ginkgo") sustained bandwidth, bytes/s.
+    pub baseline_bw: f64,
+}
+
+impl CgRow {
+    pub fn best(&self) -> (CgPolicy, f64) {
+        *self
+            .speedups
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+    }
+
+    pub fn speedup(&self, p: CgPolicy) -> f64 {
+        self.speedups.iter().find(|(q, _)| *q == p).unwrap().1
+    }
+}
+
+/// Evaluate one dataset on one device at paper scale (`elem` = 4 for sp,
+/// 8 for dp). The matrix itself is only needed for its (rows, nnz), so we
+/// evaluate from the Table V entries directly.
+pub fn evaluate(dev: &DeviceSpec, ds: &Dataset, elem: usize) -> CgRow {
+    // build a tiny stand-in CSR with the paper's rows/nnz for the traffic
+    // accounting (policy_traffic only reads n_rows/nnz)
+    let a = CsrShape { n_rows: ds.paper_rows, nnz: ds.paper_nnz };
+    let working_set =
+        (a.nnz * (elem + 4) + (a.n_rows + 1) * 4 + 4 * a.n_rows * elem) as f64;
+    let within_l2 = working_set <= dev.l2_bytes as f64;
+    let bw = effective_bw(dev, working_set);
+
+    let base_traffic = baseline_traffic_bytes(&a, elem);
+    let t_base = K_LAUNCHES * T_LAUNCH + base_traffic / bw;
+    let baseline_bw = base_traffic / t_base;
+
+    let capacity = cg_cache_capacity(dev);
+    let speedups = CgPolicy::all()
+        .into_iter()
+        .map(|p| {
+            let traffic = policy_traffic_bytes(&a, elem, p, capacity);
+            // cached share is served from on-chip bandwidth — model it as
+            // free relative to HBM (smem BW >> HBM BW); the uncached share
+            // streams at `bw`.
+            let t_perks = K_SYNCS * T_SYNC + traffic / bw;
+            (p, t_base / t_perks)
+        })
+        .collect();
+    CgRow {
+        code: ds.code,
+        name: ds.name,
+        rows: ds.paper_rows,
+        nnz: ds.paper_nnz,
+        within_l2,
+        speedups,
+        baseline_bw,
+    }
+}
+
+/// Minimal shape carrier so we can account traffic without materializing
+/// multi-GB matrices.
+struct CsrShape {
+    n_rows: usize,
+    nnz: usize,
+}
+
+fn baseline_traffic_bytes(a: &CsrShape, elem: usize) -> f64 {
+    // matrix: vals+cols once, row_ptr once; vectors: 10 passes (Ginkgo
+    // already fuses some BLAS-1 work — it is a tuned baseline, not the
+    // naive 13-pass loop of cg::policy::baseline_traffic); workload
+    // search: one row_ptr pass
+    (a.nnz * (elem + 4) + (a.n_rows + 1) * 4) as f64
+        + (10 * a.n_rows * elem) as f64
+        + ((a.n_rows + 1) * 4) as f64
+}
+
+fn policy_traffic_bytes(a: &CsrShape, elem: usize, p: CgPolicy, capacity: f64) -> f64 {
+    // mirror cg::policy::policy_traffic but over the shape carrier;
+    // PERKS always fuses the BLAS-1 passes: 13 -> 8 vector passes
+    let matrix_stream = (a.nnz * (elem + 4) + (a.n_rows + 1) * 4) as f64;
+    let vector_stream = (8 * a.n_rows * elem) as f64;
+    let workload = ((a.n_rows + 1) * 4) as f64;
+    let matrix_bytes = (a.nnz * (elem + 4)) as f64;
+    let vector_bytes = (4 * a.n_rows * elem) as f64;
+    let (vec_frac, mat_frac) = match p {
+        CgPolicy::Imp => (0.0, 0.0),
+        CgPolicy::Vec => ((capacity / vector_bytes).min(1.0), 0.0),
+        CgPolicy::Mat => (0.0, (capacity / matrix_bytes).min(1.0)),
+        CgPolicy::Mix => {
+            let vf = (capacity / vector_bytes).min(1.0);
+            let rest = (capacity - vf * vector_bytes).max(0.0);
+            (vf, (rest / matrix_bytes).min(1.0))
+        }
+    };
+    let workload = if p == CgPolicy::Imp { workload } else { 0.0 };
+    matrix_stream * (1.0 - mat_frac) + vector_stream * (1.0 - vec_frac) + workload
+}
+
+/// All twenty Table V rows for a device/precision.
+pub fn fig7(dev: &DeviceSpec, elem: usize) -> Vec<CgRow> {
+    crate::sparse::datasets::table_v().iter().map(|d| evaluate(dev, d, elem)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::{a100, v100};
+    use crate::util::stats::geomean;
+
+    fn split_geomeans(dev: &DeviceSpec, elem: usize) -> (f64, f64) {
+        let rows = fig7(dev, elem);
+        let within: Vec<f64> =
+            rows.iter().filter(|r| r.within_l2).map(|r| r.best().1).collect();
+        let beyond: Vec<f64> =
+            rows.iter().filter(|r| !r.within_l2).map(|r| r.best().1).collect();
+        (geomean(&within), geomean(&beyond))
+    }
+
+    #[test]
+    fn fig7_shape_within_l2_much_faster() {
+        // paper: within-L2 speedups 4.3-5.1x, beyond 1.15-1.6x
+        for dev in [a100(), v100()] {
+            for elem in [4, 8] {
+                let (w, b) = split_geomeans(&dev, elem);
+                assert!(w > 2.0 && w < 10.0, "{} elem{elem}: within {w}", dev.name);
+                assert!(b > 1.0 && b < 2.5, "{} elem{elem}: beyond {b}", dev.name);
+                assert!(w > 2.0 * b, "{}: crossover missing {w} vs {b}", dev.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fig9_imp_gains_even_without_explicit_caching() {
+        // paper: IMP achieves 3.61x within L2, 1.19x beyond
+        let rows = fig7(&a100(), 8);
+        let within: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.within_l2)
+            .map(|r| r.speedup(CgPolicy::Imp))
+            .collect();
+        let g = geomean(&within);
+        assert!(g > 1.5, "IMP within L2 should already win: {g}");
+        let beyond: Vec<f64> = rows
+            .iter()
+            .filter(|r| !r.within_l2)
+            .map(|r| r.speedup(CgPolicy::Imp))
+            .collect();
+        let gb = geomean(&beyond);
+        assert!(gb > 1.0 && gb < 1.6, "IMP beyond L2 modest: {gb}");
+    }
+
+    #[test]
+    fn fig9_more_caching_more_speedup() {
+        // general tendency: MIX >= VEC >= IMP (paper §VI-G2 third point)
+        let rows = fig7(&a100(), 4);
+        let mut holds = 0;
+        for r in &rows {
+            if r.speedup(CgPolicy::Mix) + 1e-9 >= r.speedup(CgPolicy::Vec)
+                && r.speedup(CgPolicy::Vec) + 1e-9 >= r.speedup(CgPolicy::Imp)
+            {
+                holds += 1;
+            }
+        }
+        assert!(holds >= 18, "monotone policy ordering holds for {holds}/20");
+    }
+
+    #[test]
+    fn vec_insufficient_alone_for_large_sets() {
+        // §VI-G2: vectors are small; VEC ~ IMP for big matrices
+        let rows = fig7(&a100(), 8);
+        let big = rows.iter().find(|r| r.code == "D20").unwrap();
+        let vec_gain = big.speedup(CgPolicy::Vec) / big.speedup(CgPolicy::Imp);
+        assert!(vec_gain < 1.3, "VEC alone should be modest on D20: {vec_gain}");
+    }
+
+    #[test]
+    fn baseline_bw_below_device_peak() {
+        for r in fig7(&a100(), 8) {
+            assert!(r.baseline_bw < 3.0 * a100().gmem_bw * 1.01, "{}", r.code);
+            assert!(r.baseline_bw > 0.0);
+        }
+    }
+}

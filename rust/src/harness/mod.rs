@@ -1,0 +1,153 @@
+//! Bench harness: experiment builders + report emitters that regenerate
+//! every table and figure of the paper's evaluation (see DESIGN.md §5 for
+//! the index). The `benches/` binaries are thin wrappers over this module.
+
+pub mod cg_exp;
+pub mod stencil_exp;
+
+pub use cg_exp::{evaluate as cg_evaluate, fig7, CgRow};
+pub use stencil_exp::{speedup_row, StencilExperiment};
+
+use crate::cg::policy::CgPolicy;
+use crate::coordinator::caching::CacheLocation;
+use crate::simgpu::device::DeviceSpec;
+use crate::simgpu::perfmodel;
+use crate::util::fmt::Table;
+use crate::util::stats::geomean;
+
+/// Render the Fig 5 (large domains) or Fig 6 (small domains) table for a
+/// device pair.
+pub fn render_stencil_speedups(devs: &[DeviceSpec], elem: usize, small: bool) -> String {
+    let steps = 1000;
+    let eff = if small { perfmodel::EFF_PERKS_SMALL } else { perfmodel::EFF_PERKS_LARGE };
+    let mut header = vec!["bench".to_string(), "domain".to_string()];
+    for d in devs {
+        header.push(format!("{} speedup", d.name));
+        header.push(format!("{} best", d.name));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs);
+    let mut per_dev: Vec<Vec<f64>> = vec![Vec::new(); devs.len()];
+    let benches: Vec<&str> = stencil_exp::benches_2d()
+        .into_iter()
+        .chain(stencil_exp::benches_3d())
+        .collect();
+    for b in benches {
+        let mut cells = Vec::new();
+        let mut domain_str = String::new();
+        for (i, d) in devs.iter().enumerate() {
+            let exp = if small {
+                StencilExperiment::small(d, b, elem, steps)
+            } else {
+                StencilExperiment::large(d, b, elem, steps)
+            };
+            let row = speedup_row(d, &exp, eff);
+            per_dev[i].push(row.speedup);
+            if i == 0 {
+                domain_str = row
+                    .domain
+                    .iter()
+                    .map(|x| x.to_string())
+                    .collect::<Vec<_>>()
+                    .join("x");
+            }
+            cells.push(format!("{:.2}x", row.speedup));
+            cells.push(row.best_location.name().to_string());
+        }
+        let mut all = vec![b.to_string(), domain_str];
+        all.extend(cells);
+        t.row(&all);
+    }
+    let mut out = t.render();
+    for (i, d) in devs.iter().enumerate() {
+        out.push_str(&format!("{} geomean: {:.2}x\n", d.name, geomean(&per_dev[i])));
+    }
+    out
+}
+
+/// Render the Fig 8 cache-location heatmap for one device.
+pub fn render_fig8(dev: &DeviceSpec, elem: usize) -> String {
+    let mut t = Table::new(&["bench", "IMP", "SM", "REG", "BTH"]);
+    let benches: Vec<&str> = stencil_exp::benches_2d()
+        .into_iter()
+        .chain(stencil_exp::benches_3d())
+        .collect();
+    for b in benches {
+        let exp = StencilExperiment::large(dev, b, elem, 1000);
+        let rows = stencil_exp::location_row(dev, &exp, perfmodel::EFF_PERKS_LARGE);
+        let get = |loc: CacheLocation| {
+            rows.iter().find(|(l, _)| *l == loc).map(|(_, s)| format!("{s:.2}x")).unwrap()
+        };
+        t.row(&[
+            b.to_string(),
+            get(CacheLocation::Implicit),
+            get(CacheLocation::SharedOnly),
+            get(CacheLocation::RegOnly),
+            get(CacheLocation::Both),
+        ]);
+    }
+    t.render()
+}
+
+/// Render Fig 7 (CG speedup + sustained baseline BW) for one device.
+pub fn render_fig7(dev: &DeviceSpec, elem: usize) -> String {
+    let rows = fig7(dev, elem);
+    let mut t = Table::new(&["code", "name", "rows", "nnz", "L2", "best", "speedup", "ginkgo BW"]);
+    for r in &rows {
+        let (p, s) = r.best();
+        t.row(&[
+            r.code.to_string(),
+            r.name.to_string(),
+            r.rows.to_string(),
+            r.nnz.to_string(),
+            if r.within_l2 { "within".into() } else { "exceeds".to_string() },
+            p.name().to_string(),
+            format!("{s:.2}x"),
+            crate::util::fmt::gbps(r.baseline_bw),
+        ]);
+    }
+    let within: Vec<f64> = rows.iter().filter(|r| r.within_l2).map(|r| r.best().1).collect();
+    let beyond: Vec<f64> = rows.iter().filter(|r| !r.within_l2).map(|r| r.best().1).collect();
+    let mut out = t.render();
+    out.push_str(&format!(
+        "geomean within-L2: {:.2}x   beyond-L2: {:.2}x\n",
+        geomean(&within),
+        geomean(&beyond)
+    ));
+    out
+}
+
+/// Render Fig 9 (CG policy heatmap) for one device.
+pub fn render_fig9(dev: &DeviceSpec, elem: usize) -> String {
+    let rows = fig7(dev, elem);
+    let mut t = Table::new(&["code", "L2", "IMP", "VEC", "MAT", "MIX"]);
+    for r in &rows {
+        t.row(&[
+            r.code.to_string(),
+            if r.within_l2 { "w".into() } else { "x".to_string() },
+            format!("{:.2}x", r.speedup(CgPolicy::Imp)),
+            format!("{:.2}x", r.speedup(CgPolicy::Vec)),
+            format!("{:.2}x", r.speedup(CgPolicy::Mat)),
+            format!("{:.2}x", r.speedup(CgPolicy::Mix)),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::{a100, v100};
+
+    #[test]
+    fn renders_are_nonempty_and_have_all_benchmarks() {
+        let s = render_stencil_speedups(&[a100(), v100()], 8, false);
+        assert!(s.contains("2d5pt") && s.contains("poisson") && s.contains("geomean"));
+        let f8 = render_fig8(&a100(), 8);
+        assert_eq!(f8.lines().count(), 2 + 13);
+        let f7 = render_fig7(&a100(), 4);
+        assert!(f7.contains("D20") && f7.contains("geomean"));
+        let f9 = render_fig9(&v100(), 8);
+        assert_eq!(f9.lines().count(), 2 + 20);
+    }
+}

@@ -1,0 +1,32 @@
+//! # perks — Persistent Kernels for Iterative Memory-bound Applications
+//!
+//! A full reproduction of the PERKS execution model (Zhang et al.) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas stencil + fused CG kernels,
+//!   with the PERKS variant keeping the domain resident in VMEM across an
+//!   in-kernel time loop.
+//! * **L2** (`python/compile/model.py`): JAX solver graphs, AOT-lowered to
+//!   HLO text once (`make artifacts`).
+//! * **L3** (this crate): the execution-model runtime (host-loop vs
+//!   persistent), the caching policy engine, the GPU memory-hierarchy
+//!   simulator that regenerates the paper's figures, and the substrates the
+//!   paper depends on (stencil benchmarks, sparse matrices, merge-based
+//!   SpMV, a CG solver).
+//!
+//! See DESIGN.md for the architecture and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cg;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod harness;
+pub mod runtime;
+pub mod simgpu;
+pub mod sparse;
+pub mod spmv;
+pub mod stencil;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,344 @@
+//! `perks` CLI — the leader entrypoint.
+//!
+//! Subcommands (no external CLI crate in the vendored set; parsing is
+//! hand-rolled in `args`):
+//!
+//! * `info`                      — platform + artifact inventory
+//! * `run-stencil [--bench ..]`  — execute a stencil through PJRT under all
+//!                                 execution models and compare
+//! * `run-cg [--n ..]`           — execute CG through PJRT
+//! * `simulate <figN|tableN>`    — regenerate a paper table/figure
+//! * `cpu-perks [--bench ..]`    — persistent-threads CPU demonstration
+
+use perks::coordinator::{CgDriver, ExecMode, StencilDriver};
+use perks::harness;
+use perks::runtime::{HostTensor, Runtime};
+use perks::simgpu::device;
+use perks::sparse::gen;
+use perks::stencil::{self, parallel};
+use perks::util::fmt::{self, Table};
+use perks::{Error, Result};
+
+/// Minimal `--key value` argument map.
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::HashMap::new();
+        let mut key: Option<String> = None;
+        for a in it {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(k) = key.take() {
+                    flags.insert(k, "true".into());
+                }
+                key = Some(stripped.to_string());
+            } else if let Some(k) = key.take() {
+                flags.insert(k, a);
+            }
+        }
+        if let Some(k) = key.take() {
+            flags.insert(k, "true".into());
+        }
+        Args { cmd, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn int(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "info" => info(args),
+        "run-stencil" => run_stencil(args),
+        "run-cg" => run_cg(args),
+        "simulate" => simulate(args),
+        "cpu-perks" => cpu_perks(args),
+        "advise" => advise(args),
+        "tune" => tune(args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(Error::invalid(format!("unknown command {other:?} (try `perks help`)"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "perks — persistent-kernel execution model (paper reproduction)\n\
+         \n\
+         USAGE: perks <command> [--flag value ...]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 info                               platform + artifact inventory\n\
+         \x20 run-stencil  --bench 2d5pt --interior 128x128 --dtype f32 --steps 64\n\
+         \x20 run-cg       --n 1024 --iters 64\n\
+         \x20 cpu-perks    --bench 2d5pt --size 512 --steps 64 --threads 8\n\
+         \x20 simulate     <fig5|fig6|fig7|fig8|fig9> --device A100\n\
+         \x20 advise       --solver cg --n 150000 --nnz 1000000 --device A100\n\
+         \x20 tune         --bench 2d5pt --size 256 (CPU thread autotune)\n\
+         \n\
+         Artifacts are read from $PERKS_ARTIFACTS or ./artifacts (run\n\
+         `make artifacts` first)."
+    );
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let rt = Runtime::new(Runtime::default_dir())?;
+    println!("platform: {}", rt.platform());
+    println!("artifact dir: {}", rt.artifact_dir().display());
+    let mut t = Table::new(&["name", "kind", "inputs", "outputs"]);
+    for a in &rt.manifest.artifacts {
+        let ins: Vec<String> = a.inputs.iter().map(|s| s.to_string()).collect();
+        let outs: Vec<String> = a.outputs.iter().map(|s| s.to_string()).collect();
+        t.row(&[a.name.clone(), a.kind.clone(), ins.join(","), outs.join(",")]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn run_stencil(args: &Args) -> Result<()> {
+    let bench = args.get("bench", "2d5pt");
+    let interior = args.get("interior", "128x128");
+    let dtype = args.get("dtype", "f32");
+    let steps = args.int("steps", 64);
+
+    let rt = Runtime::new(Runtime::default_dir())?;
+    let driver = StencilDriver::new(&rt, &bench, &interior, &dtype)?;
+    let spec = stencil::spec(&bench).ok_or_else(|| Error::invalid("unknown bench"))?;
+    let dims: Vec<usize> =
+        interior.split('x').map(|d| d.parse().unwrap()).collect();
+    let mut dom = stencil::Domain::for_spec(&spec, &dims)?;
+    dom.randomize(42);
+    let x0 = match dtype.as_str() {
+        "f64" => HostTensor::f64(&padded_dims(&dom), dom.data.clone()),
+        _ => HostTensor::f32(&padded_dims(&dom), dom.to_f32()),
+    };
+
+    println!(
+        "stencil {bench} interior {interior} dtype {dtype} steps {steps} (fused {})",
+        driver.fused_steps
+    );
+    let mut t = Table::new(&["mode", "wall", "GCells/s", "launches", "host bytes"]);
+    let mut reference: Option<Vec<f64>> = None;
+    for mode in ExecMode::all() {
+        let report = driver.run(mode, &x0, steps)?;
+        let state = report.state[0].to_f64_vec()?;
+        match &reference {
+            None => reference = Some(state),
+            Some(r) => {
+                let max_diff = r
+                    .iter()
+                    .zip(&state)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max);
+                if max_diff > 1e-4 {
+                    return Err(Error::Solver(format!(
+                        "{}: diverged from host-loop by {max_diff}",
+                        mode.name()
+                    )));
+                }
+            }
+        }
+        t.row(&[
+            mode.name().to_string(),
+            fmt::secs(report.wall_seconds),
+            fmt::gcells(report.cells_per_sec(driver.interior_cells())),
+            report.invocations.to_string(),
+            fmt::bytes(report.host_bytes as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("all modes agree numerically ✓");
+    Ok(())
+}
+
+fn padded_dims(dom: &stencil::Domain) -> Vec<usize> {
+    if dom.interior[0] == 1 {
+        vec![dom.padded[1], dom.padded[2]]
+    } else {
+        dom.padded.to_vec()
+    }
+}
+
+fn run_cg(args: &Args) -> Result<()> {
+    let n = args.int("n", 1024);
+    let iters = args.int("iters", 64);
+    let g = (n as f64).sqrt() as usize;
+
+    let rt = Runtime::new(Runtime::default_dir())?;
+    let driver = CgDriver::new(&rt, n)?;
+    let a = gen::poisson2d(g);
+    if a.nnz() != driver.nnz {
+        return Err(Error::invalid(format!(
+            "generated nnz {} != artifact nnz {}",
+            a.nnz(),
+            driver.nnz
+        )));
+    }
+    let (data, cols, rows) = a.to_coo_f32();
+    let data = HostTensor::f32(&[driver.nnz], data);
+    let cols = HostTensor::i32(&[driver.nnz], cols);
+    let rows = HostTensor::i32(&[driver.nnz], rows);
+    let b: Vec<f32> = gen::rhs(n, 7).iter().map(|&v| v as f32).collect();
+
+    println!("cg n={n} nnz={} iters={iters} (fused {})", driver.nnz, driver.fused_iters);
+    let mut t = Table::new(&["mode", "wall", "iters/s", "launches", "rr_final", "true ||b-Ax||^2"]);
+    for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+        let rep = driver.run(mode, &data, &cols, &rows, &b, iters)?;
+        let resid = driver.residual(&data, &cols, &rows, &rep.x, &b)?;
+        t.row(&[
+            mode.name().to_string(),
+            fmt::secs(rep.wall_seconds),
+            format!("{:.0}", rep.iters as f64 / rep.wall_seconds),
+            rep.invocations.to_string(),
+            format!("{:.3e}", rep.rr),
+            format!("{resid:.3e}"),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cpu_perks(args: &Args) -> Result<()> {
+    let bench = args.get("bench", "2d5pt");
+    let size = args.int("size", 512);
+    let steps = args.int("steps", 64);
+    let threads = args.int("threads", 8);
+    let spec = stencil::spec(&bench).ok_or_else(|| Error::invalid("unknown bench"))?;
+    let interior: Vec<usize> =
+        if spec.dims == 2 { vec![size, size] } else { vec![size, size, size] };
+    let mut dom = stencil::Domain::for_spec(&spec, &interior)?;
+    dom.randomize(1);
+
+    println!("cpu persistent-threads demo: {bench} {size}^{} steps={steps} threads={threads}", spec.dims);
+    let h = parallel::host_loop(&spec, &dom, steps, threads)?;
+    let p = parallel::persistent(&spec, &dom, steps, threads)?;
+    let diff = h.result.max_abs_diff(&p.result);
+    let mut t = Table::new(&["mode", "wall", "GCells/s", "global traffic", "barrier wait"]);
+    let cells = dom.interior_cells() as f64 * steps as f64;
+    t.row(&[
+        "host-loop".into(),
+        fmt::secs(h.wall_seconds),
+        fmt::gcells(cells / h.wall_seconds),
+        fmt::bytes(h.global_bytes as f64),
+        "-".into(),
+    ]);
+    t.row(&[
+        "persistent (PERKS)".into(),
+        fmt::secs(p.wall_seconds),
+        fmt::gcells(cells / p.wall_seconds),
+        fmt::bytes(p.global_bytes as f64),
+        fmt::secs(p.barrier_wait.as_secs_f64()),
+    ]);
+    print!("{}", t.render());
+    println!("speedup: {:.2}x   max diff: {diff:.2e}", h.wall_seconds / p.wall_seconds);
+    Ok(())
+}
+
+fn advise(args: &Args) -> Result<()> {
+    use perks::coordinator::profile;
+    let dev_name = args.get("device", "A100");
+    let dev = device::by_name(&dev_name)
+        .ok_or_else(|| Error::invalid(format!("unknown device {dev_name:?}")))?;
+    let solver = args.get("solver", "cg");
+    let profile = match solver.as_str() {
+        "cg" => {
+            let n = args.int("n", 150_000);
+            let nnz = args.int("nnz", 1_000_000);
+            profile::profile_cg(n, nnz, 4, 10)
+        }
+        "stencil" => {
+            let interior = args.int("cells", 3072 * 3072) as u64 * 4;
+            profile::profile_stencil(interior, interior / 24, 10)
+        }
+        other => return Err(Error::invalid(format!("unknown solver {other:?}"))),
+    };
+    // capacity at minimum occupancy for a lean kernel
+    let kr = perks::simgpu::KernelResources {
+        threads_per_tb: 256,
+        regs_per_thread: 40,
+        smem_per_tb: 2048,
+    };
+    let occ = perks::simgpu::occupancy(&dev, &kr, 1)
+        .ok_or_else(|| Error::invalid("kernel does not fit"))?;
+    print!(
+        "{}",
+        profile.report(
+            occ.free_smem_bytes_device(&dev) as f64,
+            occ.free_reg_bytes_device(&dev) as f64 * 0.73
+        )
+    );
+    Ok(())
+}
+
+fn tune(args: &Args) -> Result<()> {
+    use perks::coordinator::autotune;
+    let bench = args.get("bench", "2d5pt");
+    let size = args.int("size", 256);
+    let spec = stencil::spec(&bench).ok_or_else(|| Error::invalid("unknown bench"))?;
+    let interior: Vec<usize> =
+        if spec.dims == 2 { vec![size, size] } else { vec![size, size, size] };
+    let mut dom = stencil::Domain::for_spec(&spec, &interior)?;
+    dom.randomize(1);
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let choice = autotune::tune_threads(&spec, &dom, 8, max)?;
+    println!("measured thread sweep ({bench}, {size}^{}):", spec.dims);
+    for (t, s) in &choice.sweep {
+        let marker = if *t == choice.threads { "  <- best" } else { "" };
+        println!("  {t:>3} threads: {}{marker}", fmt::secs(*s));
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let what = args.get("figure", "").to_string();
+    let what = if what.is_empty() {
+        // positional: `perks simulate fig5 --device A100` puts fig5 as a
+        // dangling flag-less token we stored nowhere; accept via --figure
+        // or first flagless arg handled here:
+        std::env::args().nth(2).unwrap_or_default()
+    } else {
+        what
+    };
+    let dev_name = args.get("device", "A100");
+    let dev = device::by_name(&dev_name)
+        .ok_or_else(|| Error::invalid(format!("unknown device {dev_name:?}")))?;
+    let elem = if args.get("dtype", "f64") == "f32" { 4 } else { 8 };
+    let devs = [device::a100(), device::v100()];
+    match what.as_str() {
+        "fig5" => print!("{}", harness::render_stencil_speedups(&devs, elem, false)),
+        "fig6" => print!("{}", harness::render_stencil_speedups(&devs, elem, true)),
+        "fig7" => print!("{}", harness::render_fig7(&dev, elem)),
+        "fig8" => print!("{}", harness::render_fig8(&dev, elem)),
+        "fig9" => print!("{}", harness::render_fig9(&dev, elem)),
+        other => {
+            return Err(Error::invalid(format!(
+                "unknown simulation {other:?}; fig1/fig2/table2/table4 live in `cargo bench`"
+            )))
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` -> `HloModuleProto::
+//! from_text_file` -> `compile` -> `execute`). Executables are cached per
+//! artifact name, and simple traffic metrics are kept so benches can report
+//! host<->device marshalling cost (the analog of the paper's global-memory
+//! round trip in the host-loop execution model).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::tensor::HostTensor;
+
+/// Cumulative runtime metrics (interior mutability: reads take `&self`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeMetrics {
+    /// Number of executable invocations (kernel launches).
+    pub invocations: u64,
+    /// Bytes marshalled host -> device (literal uploads).
+    pub bytes_in: u64,
+    /// Bytes marshalled device -> host (literal downloads).
+    pub bytes_out: u64,
+    /// Number of artifact compilations (cache misses).
+    pub compilations: u64,
+}
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    metrics: Rc<RefCell<RuntimeMetrics>>,
+}
+
+impl Executable {
+    /// Execute with host tensors, returning host tensors.
+    ///
+    /// Inputs are validated against the artifact signature. If the artifact
+    /// was lowered with `return_tuple=True` the single tuple result is
+    /// decomposed; otherwise the outputs are read positionally.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        {
+            let mut m = self.metrics.borrow_mut();
+            m.invocations += 1;
+            m.bytes_in += inputs.iter().map(|t| t.bytes() as u64).sum::<u64>();
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        self.collect_outputs(&result)
+    }
+
+    /// Execute reusing device buffers (no host round trip for inputs).
+    /// Used by the device-resident host-loop baseline with `raw` artifacts.
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        self.metrics.borrow_mut().invocations += 1;
+        Ok(self.exe.execute_b::<&xla::PjRtBuffer>(&inputs.iter().collect::<Vec<_>>())?)
+    }
+
+    /// Upload host tensors to device buffers by executing nothing: we use
+    /// `execute` with literals on the identity-free path; PJRT has no
+    /// direct host->buffer API in this crate version, so buffer chains are
+    /// seeded by the first `execute` call's outputs.
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        self.metrics.borrow_mut().invocations += 1;
+        Ok(self.exe.execute::<xla::Literal>(inputs)?)
+    }
+
+    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, spec) in inputs.iter().zip(&self.meta.inputs) {
+            t.check(spec)?;
+        }
+        Ok(())
+    }
+
+    /// Download + decompose results into host tensors.
+    pub fn collect_outputs(&self, result: &[Vec<xla::PjRtBuffer>]) -> Result<Vec<HostTensor>> {
+        let buffers = result
+            .first()
+            .ok_or_else(|| Error::Shape(format!("{}: empty result", self.meta.name)))?;
+        let mut outs = Vec::with_capacity(self.meta.outputs.len());
+        if self.meta.tupled {
+            let lit = buffers[0].to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            if parts.len() != self.meta.outputs.len() {
+                return Err(Error::Shape(format!(
+                    "{}: tuple arity {} != manifest outputs {}",
+                    self.meta.name,
+                    parts.len(),
+                    self.meta.outputs.len()
+                )));
+            }
+            for (part, spec) in parts.iter().zip(&self.meta.outputs) {
+                outs.push(HostTensor::from_literal(part, spec)?);
+            }
+        } else {
+            if buffers.len() != self.meta.outputs.len() {
+                return Err(Error::Shape(format!(
+                    "{}: got {} output buffers, manifest says {}",
+                    self.meta.name,
+                    buffers.len(),
+                    self.meta.outputs.len()
+                )));
+            }
+            for (buf, spec) in buffers.iter().zip(&self.meta.outputs) {
+                let lit = buf.to_literal_sync()?;
+                outs.push(HostTensor::from_literal(&lit, spec)?);
+            }
+        }
+        self.metrics.borrow_mut().bytes_out +=
+            outs.iter().map(|t| t.bytes() as u64).sum::<u64>();
+        Ok(outs)
+    }
+}
+
+/// The runtime: a PJRT CPU client + artifact registry + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    metrics: Rc<RefCell<RuntimeMetrics>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory (containing
+    /// `manifest.txt` and the `.hlo.txt` files).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+            metrics: Rc::new(RefCell::new(RuntimeMetrics::default())),
+        })
+    }
+
+    /// Resolve the default artifact directory: `$PERKS_ARTIFACTS` or
+    /// `./artifacts` relative to the working directory.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PERKS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once, cached) an executable by artifact name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.metrics.borrow_mut().compilations += 1;
+        let exe = Rc::new(Executable { meta, exe, metrics: self.metrics.clone() });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// One-shot convenience: load + run.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?.run(inputs)
+    }
+
+    pub fn metrics(&self) -> RuntimeMetrics {
+        *self.metrics.borrow()
+    }
+
+    pub fn reset_metrics(&self) {
+        *self.metrics.borrow_mut() = RuntimeMetrics::default();
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+}

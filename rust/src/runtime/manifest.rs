@@ -1,0 +1,280 @@
+//! Artifact manifest: the contract between the python AOT compile path and
+//! the rust runtime.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one line per
+//! artifact, each line a space-separated list of `key=value` pairs. The
+//! required keys are `name`, `kind`, `in`, `out`, `tuple`; solver-specific
+//! keys (`bench`, `interior`, `steps`, `n`, `nnz`, ...) ride along in
+//! `params`. Signatures look like `f32[130,130],i32[4992]`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Element type of a tensor in an artifact signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "f64" => Ok(DType::F64),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Manifest(format!("unknown dtype {other:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// Shape + dtype of one tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn new(dtype: DType, dims: &[usize]) -> Self {
+        Self { dtype, dims: dims.to_vec() }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    /// Parse a single `f32[130,130]` item.
+    fn parse_one(s: &str) -> Result<Self> {
+        let open = s.find('[').ok_or_else(|| Error::Manifest(format!("bad spec {s:?}")))?;
+        if !s.ends_with(']') {
+            return Err(Error::Manifest(format!("bad spec {s:?}")));
+        }
+        let dtype = DType::parse(&s[..open])?;
+        let inner = &s[open + 1..s.len() - 1];
+        let dims = if inner.is_empty() {
+            vec![]
+        } else {
+            inner
+                .split(',')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| Error::Manifest(format!("bad dim {d:?} in {s:?}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype, dims })
+    }
+
+    /// Parse a comma-separated signature like `f32[3,4],i32[7]`.
+    ///
+    /// Commas appear both between specs and inside brackets, so split on
+    /// `],` boundaries.
+    pub fn parse_sig(sig: &str) -> Result<Vec<Self>> {
+        if sig.is_empty() {
+            return Ok(vec![]);
+        }
+        let mut specs = Vec::new();
+        let mut rest = sig;
+        loop {
+            match rest.find(']') {
+                None => return Err(Error::Manifest(format!("unterminated spec in {sig:?}"))),
+                Some(end) => {
+                    specs.push(Self::parse_one(&rest[..=end])?);
+                    if end + 1 >= rest.len() {
+                        break;
+                    }
+                    if &rest[end + 1..end + 2] != "," {
+                        return Err(Error::Manifest(format!("bad separator in {sig:?}")));
+                    }
+                    rest = &rest[end + 2..];
+                }
+            }
+        }
+        Ok(specs)
+    }
+}
+
+impl std::fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", self.dtype.name(), dims.join(","))
+    }
+}
+
+/// One artifact as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    /// Path of the `.hlo.txt` file (resolved against the manifest dir).
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Whether the HLO root is a tuple (lowered with return_tuple=True).
+    pub tupled: bool,
+    /// Solver-specific key/values (bench, interior, steps, n, nnz, ...).
+    pub params: HashMap<String, String>,
+}
+
+impl ArtifactMeta {
+    /// Integer parameter accessor, e.g. `steps`, `n`, `nnz`, `radius`.
+    pub fn int(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| Error::Manifest(format!("{}: missing int param {key:?}", self.name)))
+    }
+
+    /// String parameter accessor.
+    pub fn str(&self, key: &str) -> Result<&str> {
+        self.params
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::Manifest(format!("{}: missing param {key:?}", self.name)))
+    }
+
+    fn parse_line(line: &str, dir: &Path) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for part in line.split_whitespace() {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| Error::Manifest(format!("bad pair {part:?}")))?;
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let take = |kv: &mut HashMap<String, String>, k: &str| -> Result<String> {
+            kv.remove(k).ok_or_else(|| Error::Manifest(format!("missing key {k:?} in {line:?}")))
+        };
+        let name = take(&mut kv, "name")?;
+        let kind = take(&mut kv, "kind")?;
+        let inputs = TensorSpec::parse_sig(&take(&mut kv, "in")?)?;
+        let outputs = TensorSpec::parse_sig(&take(&mut kv, "out")?)?;
+        let tupled = take(&mut kv, "tuple")? == "1";
+        let path = dir.join(format!("{name}.hlo.txt"));
+        Ok(Self { name, kind, path, inputs, outputs, tupled, params: kv })
+    }
+}
+
+/// Parsed manifest: ordered artifact list + name index.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            artifacts.push(ArtifactMeta::parse_line(line, dir)?);
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact named {name:?}")))
+    }
+
+    /// All artifacts of a given kind (e.g. "stencil_perks").
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sig_multi() {
+        let specs = TensorSpec::parse_sig("f32[3,4],i32[7],f64[1]").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0], TensorSpec::new(DType::F32, &[3, 4]));
+        assert_eq!(specs[1], TensorSpec::new(DType::I32, &[7]));
+        assert_eq!(specs[2], TensorSpec::new(DType::F64, &[1]));
+    }
+
+    #[test]
+    fn parse_sig_roundtrip_display() {
+        let s = "f32[130,130]";
+        let spec = &TensorSpec::parse_sig(s).unwrap()[0];
+        assert_eq!(spec.to_string(), s);
+    }
+
+    #[test]
+    fn parse_sig_rejects_garbage() {
+        assert!(TensorSpec::parse_sig("f32[3,4").is_err());
+        assert!(TensorSpec::parse_sig("u8[3]").is_err());
+        assert!(TensorSpec::parse_sig("f32[x]").is_err());
+    }
+
+    #[test]
+    fn spec_bytes() {
+        let spec = TensorSpec::new(DType::F64, &[10, 10]);
+        assert_eq!(spec.elements(), 100);
+        assert_eq!(spec.bytes(), 800);
+    }
+
+    #[test]
+    fn parse_manifest_line() {
+        let text = "name=a kind=stencil_step in=f32[10,10] out=f32[10,10] tuple=1 bench=2d5pt steps=1\n\
+                    # comment\n\
+                    name=b kind=cg_step in=f32[8],i32[8] out=f32[8] tuple=0 n=8 nnz=8\n";
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("a").unwrap();
+        assert!(a.tupled);
+        assert_eq!(a.str("bench").unwrap(), "2d5pt");
+        assert_eq!(a.int("steps").unwrap(), 1);
+        let b = m.get("b").unwrap();
+        assert!(!b.tupled);
+        assert_eq!(b.int("nnz").unwrap(), 8);
+        assert_eq!(b.path, Path::new("/tmp/a/b.hlo.txt"));
+        assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn by_kind_filters() {
+        let text = "name=a kind=x in=f32[1] out=f32[1] tuple=1\n\
+                    name=b kind=y in=f32[1] out=f32[1] tuple=1\n\
+                    name=c kind=x in=f32[1] out=f32[1] tuple=1\n";
+        let m = Manifest::parse(text, Path::new(".")).unwrap();
+        assert_eq!(m.by_kind("x").len(), 2);
+        assert_eq!(m.by_kind("z").len(), 0);
+    }
+}

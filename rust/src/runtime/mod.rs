@@ -1,0 +1,11 @@
+//! Runtime layer: loads AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`) and executes them on the PJRT CPU client.
+//! Python is never on this path.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Executable, Runtime, RuntimeMetrics};
+pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
+pub use tensor::HostTensor;

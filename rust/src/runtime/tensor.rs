@@ -1,0 +1,180 @@
+//! Host-side tensors and conversion to/from XLA `Literal`s.
+//!
+//! The coordinator's state lives in `HostTensor`s; the runtime marshals
+//! them across the PJRT boundary. Conversions validate against the
+//! artifact's `TensorSpec` so shape/dtype bugs surface as `Error::Shape`
+//! rather than runtime crashes inside XLA.
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{DType, TensorSpec};
+
+/// A host-resident tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    F64 { dims: Vec<usize>, data: Vec<f64> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor::F32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn f64(dims: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor::F64 { dims: dims.to_vec(), data }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor::I32 { dims: dims.to_vec(), data }
+    }
+
+    /// Zero-filled tensor matching a spec.
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        let n = spec.elements();
+        match spec.dtype {
+            DType::F32 => Self::f32(&spec.dims, vec![0.0; n]),
+            DType::F64 => Self::f64(&spec.dims, vec![0.0; n]),
+            DType::I32 => Self::i32(&spec.dims, vec![0; n]),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. }
+            | HostTensor::F64 { dims, .. }
+            | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::F64 { .. } => DType::F64,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn spec(&self) -> TensorSpec {
+        TensorSpec::new(self.dtype(), self.dims())
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype().size_bytes()
+    }
+
+    /// Borrow as f32 slice; errors on dtype mismatch.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => Err(Error::Shape(format!("expected f32, got {}", other.dtype().name()))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match self {
+            HostTensor::F64 { data, .. } => Ok(data),
+            other => Err(Error::Shape(format!("expected f64, got {}", other.dtype().name()))),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            other => Err(Error::Shape(format!("expected i32, got {}", other.dtype().name()))),
+        }
+    }
+
+    /// Any-float accessor as f64 (for metrics / comparisons).
+    pub fn to_f64_vec(&self) -> Result<Vec<f64>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data.iter().map(|&x| x as f64).collect()),
+            HostTensor::F64 { data, .. } => Ok(data.clone()),
+            HostTensor::I32 { data, .. } => Ok(data.iter().map(|&x| x as f64).collect()),
+        }
+    }
+
+    /// Validate this tensor against an artifact input spec.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype || self.dims() != spec.dims.as_slice() {
+            return Err(Error::Shape(format!(
+                "tensor {} does not match spec {}",
+                self.spec(),
+                spec
+            )));
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::F64 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims_i64)?)
+    }
+
+    /// Convert from an XLA literal, checking against `spec`.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        let out = match spec.dtype {
+            DType::F32 => Self::f32(&spec.dims, lit.to_vec::<f32>()?),
+            DType::F64 => Self::f64(&spec.dims, lit.to_vec::<f64>()?),
+            DType::I32 => Self::i32(&spec.dims, lit.to_vec::<i32>()?),
+        };
+        if out.elements() != spec.elements() {
+            return Err(Error::Shape(format!(
+                "literal has {} elements, spec {} wants {}",
+                out.elements(),
+                spec,
+                spec.elements()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_matches_spec() {
+        let spec = TensorSpec::new(DType::F64, &[3, 2]);
+        let t = HostTensor::zeros(&spec);
+        assert_eq!(t.dims(), &[3, 2]);
+        assert_eq!(t.bytes(), 48);
+        t.check(&spec).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_mismatch() {
+        let t = HostTensor::f32(&[4], vec![0.0; 4]);
+        assert!(t.check(&TensorSpec::new(DType::F32, &[5])).is_err());
+        assert!(t.check(&TensorSpec::new(DType::F64, &[4])).is_err());
+        assert!(t.check(&TensorSpec::new(DType::F32, &[4])).is_ok());
+    }
+
+    #[test]
+    fn accessors_typed() {
+        let t = HostTensor::i32(&[2], vec![1, 2]);
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.to_f64_vec().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn constructor_validates_len() {
+        HostTensor::f32(&[3], vec![0.0; 2]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Concurrency model (paper §IV-C/D): software-exposed concurrency vs the
+//! hardware concurrency required by Little's law, and the efficiency
+//! function E(C_sw, C_hw) of Eq 12, including the §IV-D L2-hit correction.
+
+use crate::simgpu::device::DeviceSpec;
+
+/// Data-access operation classes the paper models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    GlobalMem,
+    L2,
+    SharedMem,
+}
+
+/// Hardware concurrency C_hw(op) = THR(op) x L(op) (Eq 13), expressed in
+/// bytes in flight per SMX.
+pub fn c_hw_bytes(dev: &DeviceSpec, op: Op) -> f64 {
+    match op {
+        Op::GlobalMem => {
+            let bytes_per_cycle = dev.gmem_bw / dev.smxs as f64 / dev.clock_hz;
+            bytes_per_cycle * dev.gm_latency
+        }
+        Op::L2 => {
+            // L2 bandwidth ~ 3x global on these parts; latency lower
+            let bytes_per_cycle = 3.0 * dev.gmem_bw / dev.smxs as f64 / dev.clock_hz;
+            bytes_per_cycle * dev.l2_latency
+        }
+        Op::SharedMem => dev.smem_bytes_per_cycle * dev.sm_latency,
+    }
+}
+
+/// Software concurrency per SMX: independent in-flight bytes exposed by
+/// one thread block times TB/SMX.
+#[derive(Clone, Copy, Debug)]
+pub struct SwConcurrency {
+    /// Independent outstanding access bytes per thread (ILP x access size).
+    pub bytes_per_thread: f64,
+    pub threads_per_tb: usize,
+    pub tb_per_smx: usize,
+}
+
+impl SwConcurrency {
+    pub fn per_smx(&self) -> f64 {
+        self.bytes_per_thread * self.threads_per_tb as f64 * self.tb_per_smx as f64
+    }
+}
+
+/// Efficiency function (Eq 12): 1 when the software saturates the
+/// hardware, proportional shortfall otherwise.
+pub fn efficiency(c_sw: f64, c_hw: f64) -> f64 {
+    if c_hw <= 0.0 {
+        return 1.0;
+    }
+    (c_sw / c_hw).min(1.0)
+}
+
+/// §IV-D: when a fraction `l2_hit_rate` of the traffic hits in L2, the
+/// concurrency needed grows (L2 completes accesses faster than the GM
+/// pipeline, so more must be in flight to keep the same bandwidth).
+/// Blended requirement: (1-h) * C_hw(GM) + h * C_hw(L2-equivalent demand).
+pub fn c_hw_blended(dev: &DeviceSpec, l2_hit_rate: f64) -> f64 {
+    let gm = c_hw_bytes(dev, Op::GlobalMem);
+    let l2 = c_hw_bytes(dev, Op::L2);
+    (1.0 - l2_hit_rate) * gm + l2_hit_rate * l2
+}
+
+/// One row of the Table II analysis.
+#[derive(Clone, Debug)]
+pub struct ConcurrencyRow {
+    pub tb_per_smx: usize,
+    pub used_reg_bytes: usize,
+    pub unused_reg_bytes: usize,
+    pub gm_load_ops: usize,
+    pub gm_store_ops: usize,
+    pub efficiency: f64,
+    pub projected_gcells: f64,
+}
+
+/// Reproduce the Table II sweep for a kernel described by per-TB op counts
+/// (the paper's static analysis output: 2580 loads + 2048 stores per TB
+/// for the sp 2d5pt kernel on a 3072^2 domain) and a peak rate at full
+/// saturation.
+pub fn table_ii(
+    dev: &DeviceSpec,
+    regs_per_thread: usize,
+    threads_per_tb: usize,
+    loads_per_tb: usize,
+    stores_per_tb: usize,
+    peak_gcells: f64,
+    l2_hit_rate: f64,
+    tb_values: &[usize],
+) -> Vec<ConcurrencyRow> {
+    let c_hw = c_hw_blended(dev, l2_hit_rate);
+    tb_values
+        .iter()
+        .map(|&tb| {
+            let used = threads_per_tb * regs_per_thread * 4 * tb;
+            let c_sw = ((loads_per_tb + stores_per_tb) * tb) as f64 * 4.0 / 5.0;
+            // ops are counted per TB over the whole step; the in-flight
+            // window is ~1/5 of them (unrolled stream, IPT=8..10, two
+            // concurrent load streams) — calibrated so TB/SMX=1 lands at
+            // the paper's 68.5% of saturated
+            let e = efficiency(c_sw, c_hw);
+            ConcurrencyRow {
+                tb_per_smx: tb,
+                used_reg_bytes: used,
+                unused_reg_bytes: dev.regfile_per_smx().saturating_sub(used),
+                gm_load_ops: loads_per_tb * tb,
+                gm_store_ops: stores_per_tb * tb,
+                efficiency: e,
+                projected_gcells: peak_gcells * e,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::a100;
+
+    #[test]
+    fn little_law_magnitudes() {
+        let dev = a100();
+        let gm = c_hw_bytes(&dev, Op::GlobalMem);
+        // ~10 bytes/cycle/SMX x ~470 cycles => a few KB in flight per SMX
+        assert!((1_000.0..20_000.0).contains(&gm), "gm C_hw = {gm}");
+        let sm = c_hw_bytes(&dev, Op::SharedMem);
+        assert!(sm < gm, "smem needs less in-flight than gm");
+    }
+
+    #[test]
+    fn efficiency_saturates_at_one() {
+        assert_eq!(efficiency(10.0, 5.0), 1.0);
+        assert_eq!(efficiency(2.5, 5.0), 0.5);
+        assert_eq!(efficiency(0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn l2_hits_raise_required_concurrency() {
+        let dev = a100();
+        assert!(c_hw_blended(&dev, 0.8) > c_hw_blended(&dev, 0.0));
+    }
+
+    #[test]
+    fn table_ii_shape() {
+        // paper: TB/SMX 1 -> 94.75, 2 -> 133.24, 8 -> 138.29 GCells/s;
+        // i.e. 1 TB is ~68% of peak, 2 TB is ~96%, 8 TB saturated.
+        let dev = a100();
+        let rows = table_ii(&dev, 32, 256, 2580, 2048, 138.29, 0.6, &[1, 2, 8]);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].used_reg_bytes, 32 * 1024);
+        assert_eq!(rows[2].unused_reg_bytes, 0);
+        // calibration check: TB/SMX=1 lands near the paper's 68.5%
+        assert!(
+            (rows[0].efficiency - 0.685).abs() < 0.1,
+            "TB=1 efficiency {} should be ~0.685",
+            rows[0].efficiency
+        );
+        // monotone non-decreasing performance with occupancy
+        assert!(rows[0].projected_gcells <= rows[1].projected_gcells);
+        assert!(rows[1].projected_gcells <= rows[2].projected_gcells);
+        // TB=1 must show a visible gap; TB=8 saturated
+        assert!(rows[0].efficiency < 1.0);
+        assert!((rows[2].efficiency - 1.0).abs() < 1e-9);
+        // the op counts are the static-analysis numbers scaled by TB
+        assert_eq!(rows[1].gm_load_ops, 5160);
+        assert_eq!(rows[1].gm_store_ops, 4096);
+    }
+}

@@ -1,0 +1,173 @@
+//! GPU device catalog (Table I of the paper) plus the microarchitectural
+//! constants the concurrency model needs (clocks and latencies from the
+//! microbenchmarking literature the paper cites: Jia et al. for V100/T4,
+//! the A100 whitepaper, Mei & Chu for the memory hierarchy).
+
+/// Static description of one GPU.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub smxs: usize,
+    /// Register file capacity, total bytes (256 KiB / SMX on all three).
+    pub regfile_bytes: usize,
+    /// Shared-memory capacity usable as scratchpad, total bytes.
+    pub smem_bytes: usize,
+    pub l2_bytes: usize,
+    /// Device (global) memory bandwidth, bytes/s.
+    pub gmem_bw: f64,
+    /// SM clock, Hz.
+    pub clock_hz: f64,
+    /// Global-memory load latency, cycles.
+    pub gm_latency: f64,
+    /// L2 hit latency, cycles.
+    pub l2_latency: f64,
+    /// Shared-memory latency, cycles.
+    pub sm_latency: f64,
+    /// Shared-memory bandwidth per SMX, bytes/cycle (32 banks x 4 B).
+    pub smem_bytes_per_cycle: f64,
+    /// Max resident threads per SMX.
+    pub max_threads_per_smx: usize,
+    /// Max thread blocks per SMX.
+    pub max_tb_per_smx: usize,
+}
+
+impl DeviceSpec {
+    /// Register file bytes per SMX.
+    pub fn regfile_per_smx(&self) -> usize {
+        self.regfile_bytes / self.smxs
+    }
+
+    /// Shared memory bytes per SMX.
+    pub fn smem_per_smx(&self) -> usize {
+        self.smem_bytes / self.smxs
+    }
+
+    /// Aggregate shared-memory bandwidth, bytes/s.
+    pub fn smem_bw(&self) -> f64 {
+        self.smem_bytes_per_cycle * self.clock_hz * self.smxs as f64
+    }
+
+    /// Total on-chip capacity (RF + smem), bytes — the PERKS cache budget
+    /// upper bound (Fig 1's right axis).
+    pub fn onchip_bytes(&self) -> usize {
+        self.regfile_bytes + self.smem_bytes
+    }
+}
+
+/// Tesla P100 (Pascal) — Table I column 1.
+pub fn p100() -> DeviceSpec {
+    DeviceSpec {
+        name: "P100",
+        smxs: 56,
+        regfile_bytes: 14 * 1024 * 1024,
+        smem_bytes: 3_670_016, // 3.5 MiB
+        l2_bytes: 4 * 1024 * 1024,
+        gmem_bw: 720e9,
+        clock_hz: 1.33e9,
+        gm_latency: 570.0,
+        l2_latency: 260.0,
+        sm_latency: 24.0,
+        smem_bytes_per_cycle: 128.0,
+        max_threads_per_smx: 2048,
+        max_tb_per_smx: 32,
+    }
+}
+
+/// Tesla V100 (Volta) — Table I column 2.
+pub fn v100() -> DeviceSpec {
+    DeviceSpec {
+        name: "V100",
+        smxs: 80,
+        regfile_bytes: 20 * 1024 * 1024,
+        smem_bytes: 7_864_320, // 7.5 MiB (96 KiB/SMX)
+        l2_bytes: 6 * 1024 * 1024,
+        gmem_bw: 900e9,
+        clock_hz: 1.53e9,
+        gm_latency: 440.0,
+        l2_latency: 220.0,
+        sm_latency: 19.0,
+        smem_bytes_per_cycle: 128.0,
+        max_threads_per_smx: 2048,
+        max_tb_per_smx: 32,
+    }
+}
+
+/// A100 (Ampere) — Table I column 3.
+pub fn a100() -> DeviceSpec {
+    DeviceSpec {
+        name: "A100",
+        smxs: 108,
+        regfile_bytes: 27 * 1024 * 1024,
+        smem_bytes: 18_130_862, // 17.29 MiB (164 KiB/SMX usable)
+        l2_bytes: 40 * 1024 * 1024,
+        gmem_bw: 1555e9,
+        clock_hz: 1.41e9,
+        gm_latency: 470.0,
+        l2_latency: 200.0,
+        sm_latency: 19.0,
+        smem_bytes_per_cycle: 128.0,
+        max_threads_per_smx: 2048,
+        max_tb_per_smx: 32,
+    }
+}
+
+/// Look up by case-insensitive name.
+pub fn by_name(name: &str) -> Option<DeviceSpec> {
+    match name.to_ascii_uppercase().as_str() {
+        "P100" => Some(p100()),
+        "V100" => Some(v100()),
+        "A100" => Some(a100()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_i_features() {
+        // assert the catalog matches Table I of the paper
+        let p = p100();
+        assert_eq!(p.smxs, 56);
+        assert_eq!(p.regfile_bytes, 14 * 1024 * 1024);
+        assert_eq!(p.gmem_bw, 720e9);
+
+        let v = v100();
+        assert_eq!(v.smxs, 80);
+        assert_eq!(v.regfile_bytes, 20 * 1024 * 1024);
+        assert_eq!(v.l2_bytes, 6 * 1024 * 1024);
+        assert_eq!(v.gmem_bw, 900e9);
+
+        let a = a100();
+        assert_eq!(a.smxs, 108);
+        assert_eq!(a.regfile_bytes, 27 * 1024 * 1024);
+        assert_eq!(a.l2_bytes, 40 * 1024 * 1024);
+        assert_eq!(a.gmem_bw, 1555e9);
+        // 17.29 MB shared memory
+        assert!((a.smem_bytes as f64 / 1024.0 / 1024.0 - 17.29).abs() < 0.01);
+    }
+
+    #[test]
+    fn per_smx_resources_are_256k_regs() {
+        for d in [p100(), v100(), a100()] {
+            assert_eq!(d.regfile_per_smx(), 256 * 1024, "{}", d.name);
+        }
+        assert_eq!(v100().smem_per_smx(), 96 * 1024);
+    }
+
+    #[test]
+    fn smem_bw_exceeds_gmem_bw() {
+        // the premise of Eq 8: caching moves the bottleneck to a much
+        // faster level
+        for d in [p100(), v100(), a100()] {
+            assert!(d.smem_bw() > 5.0 * d.gmem_bw, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("a100").unwrap().name, "A100");
+        assert!(by_name("H100").is_none());
+    }
+}

@@ -1,0 +1,21 @@
+//! GPU memory-hierarchy simulator substrate.
+//!
+//! The paper's testbed (V100/A100 silicon) is not available here, so this
+//! module instantiates the paper's own analytical machinery with the
+//! published device parameters (Table I) and latency-literature constants:
+//!
+//! * `device` — Table I catalog;
+//! * `occupancy` — resource accounting (Fig 1) + Table IV saturation;
+//! * `concurrency` — Little's-law C_hw, efficiency function (Eq 12-13);
+//! * `perfmodel` — the roofline-style projection (Eqs 5-11);
+//! * `opt` — the Fig 2 optimization-level lineup.
+
+pub mod concurrency;
+pub mod device;
+pub mod occupancy;
+pub mod opt;
+pub mod perfmodel;
+
+pub use device::{a100, by_name, p100, v100, DeviceSpec};
+pub use occupancy::{occupancy, KernelResources, Occupancy};
+pub use perfmodel::{CacheSplit, StencilScenario, TileGeom};

@@ -1,0 +1,137 @@
+//! Optimization-level catalog for the Fig 2 motivation experiment.
+//!
+//! Fig 2 decomposes the per-step runtime of a 2d9pt dp stencil into the
+//! inter-step data movement (constant across implementations) and the
+//! compute part (shrinking as the implementation gets more optimized), and
+//! shows that the more optimized the kernel, the larger the speedup that
+//! caching (PERKS) yields. The catalog models each published baseline by
+//! its compute-time ratio relative to the memory time, and its traffic
+//! factor (temporal-blocking schemes AN5D/StencilGen already avoid part of
+//! the inter-step traffic).
+
+use crate::simgpu::device::DeviceSpec;
+use crate::simgpu::perfmodel::StencilScenario;
+
+/// One implementation of the Fig 2 lineup.
+#[derive(Clone, Copy, Debug)]
+pub struct OptLevel {
+    pub name: &'static str,
+    /// Compute time as a fraction of the (uncached) memory time.
+    pub compute_ratio: f64,
+    /// Fraction of the inter-step traffic this implementation still pays
+    /// (1.0 for everything but temporal blocking).
+    pub traffic_factor: f64,
+}
+
+/// The Fig 2 lineup, least to most optimized.
+pub fn catalog() -> Vec<OptLevel> {
+    vec![
+        OptLevel { name: "NAIVE", compute_ratio: 2.00, traffic_factor: 1.0 },
+        OptLevel { name: "NVCC-OPT", compute_ratio: 1.20, traffic_factor: 1.0 },
+        OptLevel { name: "SM-OPT", compute_ratio: 0.45, traffic_factor: 1.0 },
+        OptLevel { name: "SSAM", compute_ratio: 0.30, traffic_factor: 1.0 },
+        OptLevel { name: "AN5D", compute_ratio: 0.10, traffic_factor: 0.60 },
+        OptLevel { name: "STENCILGEN", compute_ratio: 0.08, traffic_factor: 0.55 },
+    ]
+}
+
+/// Per-run decomposition for Fig 2.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig2Row {
+    pub level: OptLevel,
+    pub traffic_seconds: f64,
+    pub compute_seconds: f64,
+    /// Speedup if 50% of the inter-step traffic were cached (the dashed
+    /// projection line of Fig 2).
+    pub speedup_cache_half: f64,
+}
+
+impl Fig2Row {
+    pub fn total_seconds(&self) -> f64 {
+        self.traffic_seconds + self.compute_seconds
+    }
+}
+
+/// Evaluate the lineup on a scenario (the paper: 2d9pt dp 3072^2, 20
+/// steps, A100).
+pub fn fig2(dev: &DeviceSpec, s: &StencilScenario) -> Vec<Fig2Row> {
+    let mem_time_full = 2.0 * s.steps as f64 * s.domain_bytes() / dev.gmem_bw;
+    catalog()
+        .into_iter()
+        .map(|level| {
+            let traffic = mem_time_full * level.traffic_factor;
+            let compute = mem_time_full * level.compute_ratio;
+            // caching half the domain halves the *remaining* traffic
+            let cached = traffic * 0.5 + compute;
+            Fig2Row {
+                level,
+                traffic_seconds: traffic,
+                compute_seconds: compute,
+                speedup_cache_half: (traffic + compute) / cached,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::a100;
+
+    fn scenario() -> StencilScenario {
+        StencilScenario {
+            cells: 3072.0 * 3072.0,
+            elem: 8,
+            radius: 1,
+            steps: 20,
+            kernel_smem_per_cell: 2.0,
+        }
+    }
+
+    #[test]
+    fn more_optimized_implies_more_caching_speedup() {
+        // the core claim of Fig 2 (and §III-A "Impact on Optimized
+        // Kernels"): speedup-if-cached grows monotonically with the
+        // optimization level
+        let rows = fig2(&a100(), &scenario());
+        for w in rows.windows(2) {
+            assert!(
+                w[1].speedup_cache_half >= w[0].speedup_cache_half,
+                "{} {} -> {} {}",
+                w[0].level.name,
+                w[0].speedup_cache_half,
+                w[1].level.name,
+                w[1].speedup_cache_half
+            );
+        }
+    }
+
+    #[test]
+    fn runtimes_shrink_with_optimization() {
+        let rows = fig2(&a100(), &scenario());
+        for w in rows.windows(2) {
+            assert!(w[1].total_seconds() <= w[0].total_seconds());
+        }
+    }
+
+    #[test]
+    fn traffic_time_constant_for_non_temporal_schemes() {
+        let rows = fig2(&a100(), &scenario());
+        let t0 = rows[0].traffic_seconds;
+        for r in rows.iter().take(4) {
+            assert_eq!(r.traffic_seconds, t0, "{}", r.level.name);
+        }
+        // temporal blocking reduces it
+        assert!(rows[4].traffic_seconds < t0);
+    }
+
+    #[test]
+    fn magnitudes_match_fig2_axis() {
+        // Fig 2's bars are ~2-6 ms for 20 steps; memory time alone:
+        // 2*20*75.5MB / 1555 GB/s = 1.94 ms
+        let rows = fig2(&a100(), &scenario());
+        let mem = rows[0].traffic_seconds;
+        assert!((mem * 1e3 - 1.94).abs() < 0.1, "mem time {} ms", mem * 1e3);
+        assert!(rows[0].total_seconds() * 1e3 < 10.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! The paper's roofline-style performance model (§IV, Eqs 5-11).
+//!
+//! Projects the best-case runtime of a PERKS kernel from the global-memory
+//! traffic after caching, the unavoidable halo traffic, and the shared-
+//! memory traffic of the cached portion; then applies the efficiency
+//! function to get expected measured performance. All byte accounting is
+//! explicit so unit tests can pin the worked examples of §IV-B.
+
+use crate::simgpu::device::DeviceSpec;
+
+/// One stencil experiment instance.
+#[derive(Clone, Copy, Debug)]
+pub struct StencilScenario {
+    /// Total domain cells (D / S(type)).
+    pub cells: f64,
+    /// Element size S(type) in bytes (4 = sp, 8 = dp).
+    pub elem: usize,
+    pub radius: usize,
+    /// Time steps N.
+    pub steps: usize,
+    /// Shared memory bytes the *kernel itself* moves per cell per step
+    /// (A_sm(KERNEL)/D/N): the SM-OPT baseline stages each input cell
+    /// through shared memory once => 1 load + 1 store.
+    pub kernel_smem_per_cell: f64,
+}
+
+impl StencilScenario {
+    pub fn domain_bytes(&self) -> f64 {
+        self.cells * self.elem as f64
+    }
+}
+
+/// How the cached bytes split between shared memory and registers
+/// (D_cache = D_cache_sm + D_cache_reg).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheSplit {
+    pub sm_bytes: f64,
+    pub reg_bytes: f64,
+}
+
+impl CacheSplit {
+    pub fn total(&self) -> f64 {
+        self.sm_bytes + self.reg_bytes
+    }
+}
+
+/// Thread-block tile geometry used for the halo-traffic estimate (Eq 9).
+#[derive(Clone, Copy, Debug)]
+pub struct TileGeom {
+    pub cells_per_tb: f64,
+    /// Perimeter cells of one tile (2(tx+ty) in 2D; surface in 3D).
+    pub perimeter_cells: f64,
+}
+
+impl TileGeom {
+    pub fn tile_2d(tx: usize, ty: usize) -> Self {
+        Self { cells_per_tb: (tx * ty) as f64, perimeter_cells: (2 * (tx + ty)) as f64 }
+    }
+
+    pub fn tile_3d(t: usize) -> Self {
+        Self { cells_per_tb: (t * t * t) as f64, perimeter_cells: (6 * t * t) as f64 }
+    }
+}
+
+/// Eq 5: total global-memory bytes over N steps given cached bytes.
+pub fn a_gm(s: &StencilScenario, cached_bytes: f64) -> f64 {
+    let d = s.domain_bytes();
+    let cached = cached_bytes.min(d);
+    let uncached = d - cached;
+    2.0 * s.steps as f64 * uncached + 2.0 * cached
+}
+
+/// Eq 6: time for global-memory traffic.
+pub fn t_gm(dev: &DeviceSpec, s: &StencilScenario, cached_bytes: f64) -> f64 {
+    a_gm(s, cached_bytes) / dev.gmem_bw
+}
+
+/// Eq 9: halo traffic of the cached region — boundary threads of cached
+/// TBs still load+store `radius` rings to global memory each step.
+pub fn a_gm_halo(s: &StencilScenario, cached_bytes: f64, tile: &TileGeom) -> f64 {
+    let cached_cells = (cached_bytes / s.elem as f64).min(s.cells);
+    let n_tbs = (cached_cells / tile.cells_per_tb).ceil();
+    let halo_cells_per_tb = tile.perimeter_cells * s.radius as f64;
+    2.0 * s.steps as f64 * n_tbs * halo_cells_per_tb * s.elem as f64
+}
+
+pub fn t_gm_halo(dev: &DeviceSpec, s: &StencilScenario, cached: f64, tile: &TileGeom) -> f64 {
+    a_gm_halo(s, cached, tile) / dev.gmem_bw
+}
+
+/// Eq 7: shared-memory bytes of the cached-in-smem portion across steps.
+pub fn a_sm_cache(s: &StencilScenario, sm_cached_bytes: f64) -> f64 {
+    2.0 * (s.steps.saturating_sub(1)) as f64 * sm_cached_bytes
+}
+
+/// A_sm(KERNEL): smem traffic the baseline kernel already does.
+pub fn a_sm_kernel(s: &StencilScenario) -> f64 {
+    s.kernel_smem_per_cell * s.cells * s.steps as f64 * s.elem as f64
+}
+
+/// Eq 8: shared-memory time.
+pub fn t_sm(dev: &DeviceSpec, s: &StencilScenario, split: &CacheSplit) -> f64 {
+    (a_sm_cache(s, split.sm_bytes) + a_sm_kernel(s)) / dev.smem_bw()
+}
+
+/// Eq 10: projected best-case PERKS runtime.
+pub fn t_perks(dev: &DeviceSpec, s: &StencilScenario, split: &CacheSplit, tile: &TileGeom) -> f64 {
+    let gm = t_gm(dev, s, split.total()) + t_gm_halo(dev, s, split.total(), tile);
+    gm.max(t_sm(dev, s, split))
+}
+
+/// Eq 11: projected peak performance in cells/s.
+pub fn projected_peak(
+    dev: &DeviceSpec,
+    s: &StencilScenario,
+    split: &CacheSplit,
+    tile: &TileGeom,
+) -> f64 {
+    s.cells * s.steps as f64 / t_perks(dev, s, split, tile)
+}
+
+/// Baseline (non-PERKS) time: the whole domain round-trips every step;
+/// `efficiency` is the fraction of peak bandwidth the tuned baseline
+/// sustains (well-saturated stencils reach ~85%). When the domain fits in
+/// L2 the baseline streams from L2 (~3x HBM) — this is why the paper's
+/// small-domain speedups are *lower* on A100 (40 MB L2 catches them) than
+/// on V100 (6 MB L2 does not).
+pub fn t_baseline(dev: &DeviceSpec, s: &StencilScenario, efficiency: f64) -> f64 {
+    // 1.5x, not the raw 3x L2 stream rate: the ping-pong output array and
+    // write-allocate churn keep the relaunched baseline from exploiting
+    // L2 fully (calibrated against Fig 6's A100-vs-V100 asymmetry).
+    let bw = if s.domain_bytes() <= dev.l2_bytes as f64 {
+        1.5 * dev.gmem_bw
+    } else {
+        dev.gmem_bw
+    };
+    2.0 * s.steps as f64 * s.domain_bytes() / bw / efficiency
+}
+
+/// Measured-performance calibration constants, from the paper's §VI-H:
+/// PERKS measures 64% of projected peak on large domains, 59% on small.
+pub const EFF_BASELINE: f64 = 0.85;
+pub const EFF_PERKS_LARGE: f64 = 0.64;
+pub const EFF_PERKS_SMALL: f64 = 0.59;
+
+/// Expected measured speedup of PERKS over the baseline for a scenario.
+/// `perks_eff` is the measured/projected calibration (§VI-H).
+pub fn speedup(
+    dev: &DeviceSpec,
+    s: &StencilScenario,
+    split: &CacheSplit,
+    tile: &TileGeom,
+    perks_eff: f64,
+) -> f64 {
+    let base = t_baseline(dev, s, EFF_BASELINE);
+    let perks = t_perks(dev, s, split, tile) / perks_eff;
+    base / perks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::a100;
+
+    /// §IV-B worked example 1: sp 2d5pt, D = 3072^2, cache 3072*2448,
+    /// N = 1000 => T_gm = 9900.70 us and P = 876.09 GCells/s.
+    #[test]
+    fn paper_worked_example_large_domain() {
+        let dev = a100();
+        let s = StencilScenario {
+            cells: 3072.0 * 3072.0,
+            elem: 4,
+            radius: 1,
+            steps: 1000,
+            kernel_smem_per_cell: 2.0,
+        };
+        let cached = 3072.0 * 2448.0 * 4.0;
+        let t = t_gm(&dev, &s, cached);
+        assert!(
+            (t * 1e6 - 9900.70).abs() < 5.0,
+            "T_gm = {} us, paper says 9900.70",
+            t * 1e6
+        );
+        // halo: paper counts 216 TBs x (136*2 + 256*2) cells x 2 x 2 / step
+        // our tile model with 256x136 tiles reproduces the same magnitude
+        let tile = TileGeom::tile_2d(256, 136);
+        let th = t_gm_halo(&dev, &s, cached, &tile);
+        assert!(
+            (th * 1e6 - 871.22).abs() < 90.0,
+            "T_halo = {} us, paper says 871.22",
+            th * 1e6
+        );
+        let split = CacheSplit { sm_bytes: cached / 2.0, reg_bytes: cached / 2.0 };
+        let p = projected_peak(&dev, &s, &split, &tile);
+        assert!(
+            (p / 1e9 - 876.09).abs() < 80.0,
+            "P = {} GCells/s, paper says 876.09",
+            p / 1e9
+        );
+        // paper measured 444.19 = 50.7% of projected; our calibrated
+        // estimate should land within a factor ~1.3 of that
+        let m = p * EFF_PERKS_LARGE;
+        assert!((m / 1e9 - 444.19).abs() < 150.0, "measured estimate {}", m / 1e9);
+    }
+
+    /// §IV-B worked example 2: fully cached small domain D = 3072*2448,
+    /// smem-bound => T_sm = 7.6 ms, P = 986.38 GCells/s.
+    #[test]
+    fn paper_worked_example_small_domain() {
+        let dev = a100();
+        let s = StencilScenario {
+            cells: 3072.0 * 2448.0,
+            elem: 4,
+            radius: 1,
+            steps: 1000,
+            kernel_smem_per_cell: 4.0, // the paper's baseline: D*1000*4 bytes
+        };
+        let sm_cached = 3072.0 * 1152.0 * 4.0;
+        let split = CacheSplit { sm_bytes: sm_cached, reg_bytes: s.domain_bytes() - sm_cached };
+        let t = t_sm(&dev, &s, &split);
+        assert!((t * 1e3 - 7.6).abs() < 1.5, "T_sm = {} ms, paper says 7.6", t * 1e3);
+        let tile = TileGeom::tile_2d(256, 136);
+        let p = projected_peak(&dev, &s, &split, &tile);
+        assert!(
+            (p / 1e9 - 986.38).abs() < 200.0,
+            "P = {} GCells/s, paper says 986.38",
+            p / 1e9
+        );
+    }
+
+    #[test]
+    fn eq5_identities() {
+        let s = StencilScenario {
+            cells: 1000.0,
+            elem: 4,
+            radius: 1,
+            steps: 10,
+            kernel_smem_per_cell: 2.0,
+        };
+        // no caching: 2*N*D
+        assert_eq!(a_gm(&s, 0.0), 2.0 * 10.0 * 4000.0);
+        // full caching: 2*D (one initial load + one final store)
+        assert_eq!(a_gm(&s, 4000.0), 2.0 * 4000.0);
+        // caching never increases traffic, monotone in cached bytes
+        let mut prev = f64::INFINITY;
+        for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let t = a_gm(&s, 4000.0 * frac);
+            assert!(t <= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn speedup_increases_with_cache_and_steps() {
+        let dev = a100();
+        let tile = TileGeom::tile_2d(256, 128);
+        let mk = |steps| StencilScenario {
+            cells: 3072.0 * 3072.0,
+            elem: 8,
+            radius: 1,
+            steps,
+            kernel_smem_per_cell: 2.0,
+        };
+        let s = mk(1000);
+        let half = CacheSplit { sm_bytes: s.domain_bytes() * 0.25, reg_bytes: s.domain_bytes() * 0.25 };
+        let full = CacheSplit { sm_bytes: s.domain_bytes() * 0.5, reg_bytes: s.domain_bytes() * 0.5 };
+        let s_half = speedup(&dev, &s, &half, &tile, EFF_PERKS_LARGE);
+        let s_full = speedup(&dev, &s, &full, &tile, EFF_PERKS_LARGE);
+        assert!(s_full > s_half, "{s_full} vs {s_half}");
+        assert!(s_half > 1.0, "PERKS should win: {s_half}");
+        // half-cached speedup in the paper's large-domain ballpark
+        assert!(s_half < 2.5, "{s_half}");
+        // note: fully caching 75 MB is not physically realizable on A100
+        // (35 MB on-chip); the harness never requests such splits, and
+        // the projection stays bounded regardless
+        assert!(s_full < 12.0, "{s_full}");
+    }
+
+    #[test]
+    fn smem_bound_when_fully_cached_with_heavy_kernel_traffic() {
+        let dev = a100();
+        let s = StencilScenario {
+            cells: 1024.0 * 1024.0,
+            elem: 4,
+            radius: 1,
+            steps: 1000,
+            kernel_smem_per_cell: 4.0,
+        };
+        let split = CacheSplit { sm_bytes: s.domain_bytes(), reg_bytes: 0.0 };
+        let tile = TileGeom::tile_2d(256, 128);
+        let gm_only = t_gm(&dev, &s, split.total()) + t_gm_halo(&dev, &s, split.total(), &tile);
+        assert!(t_perks(&dev, &s, &split, &tile) > gm_only, "bottleneck must move to smem");
+    }
+}

@@ -1,0 +1,243 @@
+//! Compressed Sparse Row matrices.
+//!
+//! The library's canonical sparse format: `row_ptr` (n+1), `cols` (nnz,
+//! sorted within each row), `vals` (nnz). Includes the COO-with-row-ids
+//! export used by the CG artifacts (whose signature the python side fixed)
+//! and SPD-structure validation for CG inputs.
+
+use crate::error::{Error, Result};
+
+/// A CSR matrix over f64 (converted to f32 at the PJRT edge).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from triplets; duplicates are summed, entries sorted per row.
+    pub fn from_coo(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> Result<Self> {
+        let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n_rows];
+        for (r, c, v) in triplets {
+            if r >= n_rows || c >= n_cols {
+                return Err(Error::invalid(format!("entry ({r},{c}) out of bounds")));
+            }
+            per_row[r].push((c, v));
+        }
+        let mut row_ptr = Vec::with_capacity(n_rows + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for row in per_row.iter_mut() {
+            row.sort_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row.len() {
+                let (c, mut v) = row[i];
+                let mut j = i + 1;
+                while j < row.len() && row[j].0 == c {
+                    v += row[j].1;
+                    j += 1;
+                }
+                cols.push(c);
+                vals.push(v);
+                i = j;
+            }
+            row_ptr.push(cols.len());
+        }
+        Ok(Self { n_rows, n_cols, row_ptr, cols, vals })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row slice accessors.
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let lo = self.row_ptr[r];
+        let hi = self.row_ptr[r + 1];
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Structural invariants: monotone row_ptr, sorted columns, bounds.
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.n_rows + 1 || self.row_ptr[0] != 0 {
+            return Err(Error::invalid("bad row_ptr head"));
+        }
+        if *self.row_ptr.last().unwrap() != self.nnz() || self.cols.len() != self.nnz() {
+            return Err(Error::invalid("row_ptr tail != nnz"));
+        }
+        for r in 0..self.n_rows {
+            if self.row_ptr[r] > self.row_ptr[r + 1] {
+                return Err(Error::invalid(format!("row_ptr not monotone at {r}")));
+            }
+            let (cols, _) = self.row(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::invalid(format!("row {r}: unsorted/dup columns")));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c >= self.n_cols {
+                    return Err(Error::invalid(format!("row {r}: col {c} out of bounds")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Symmetric in structure and values (within `tol`)?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                match self.get(c, r) {
+                    Some(vt) if (vt - v).abs() <= tol * (1.0 + v.abs()) => {}
+                    _ => return false,
+                }
+            }
+        }
+        true
+    }
+
+    /// Weak diagonal dominance (sufficient condition we use for generated
+    /// SPD matrices: symmetric + strictly dominant diag + positive diag).
+    pub fn is_diag_dominant(&self) -> bool {
+        (0..self.n_rows).all(|r| {
+            let (cols, vals) = self.row(r);
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c == r {
+                    diag = v;
+                } else {
+                    off += v.abs();
+                }
+            }
+            diag > 0.0 && diag >= off
+        })
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> Option<f64> {
+        let (cols, vals) = self.row(r);
+        cols.binary_search(&c).ok().map(|i| vals[i])
+    }
+
+    /// Dense y = A x (gold reference for the SpMV implementations).
+    pub fn spmv_gold(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Export to the COO-with-row-ids arrays the CG artifacts take:
+    /// (vals_f32, cols_i32, rows_i32), row-major, sorted within rows —
+    /// exactly the layout of the python `_poisson2d` test helper.
+    pub fn to_coo_f32(&self) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
+        let mut data = Vec::with_capacity(self.nnz());
+        let mut cols = Vec::with_capacity(self.nnz());
+        let mut rows = Vec::with_capacity(self.nnz());
+        for r in 0..self.n_rows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                data.push(v as f32);
+                cols.push(c as i32);
+                rows.push(r as i32);
+            }
+        }
+        (data, cols, rows)
+    }
+
+    /// Size of the matrix data in bytes at a given element size (CSR:
+    /// vals + cols index + row_ptr).
+    pub fn bytes(&self, elem: usize) -> usize {
+        self.nnz() * (elem + 4) + (self.n_rows + 1) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [2 -1 0; -1 2 -1; 0 -1 2]
+        Csr::from_coo(
+            3,
+            3,
+            vec![
+                (0, 0, 2.0),
+                (0, 1, -1.0),
+                (1, 0, -1.0),
+                (1, 1, 2.0),
+                (1, 2, -1.0),
+                (2, 1, -1.0),
+                (2, 2, 2.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let a = small();
+        a.validate().unwrap();
+        assert_eq!(a.nnz(), 7);
+        assert_eq!(a.get(1, 2), Some(-1.0));
+        assert_eq!(a.get(0, 2), None);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let a = Csr::from_coo(2, 2, vec![(0, 0, 1.0), (0, 0, 2.5)]).unwrap();
+        assert_eq!(a.get(0, 0), Some(3.5));
+        assert_eq!(a.nnz(), 1);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        assert!(Csr::from_coo(2, 2, vec![(2, 0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn symmetry_and_dominance() {
+        let a = small();
+        assert!(a.is_symmetric(0.0));
+        assert!(a.is_diag_dominant());
+        let b = Csr::from_coo(2, 2, vec![(0, 1, 1.0), (1, 1, 1.0)]).unwrap();
+        assert!(!b.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn spmv_gold_matches_dense() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        a.spmv_gold(&x, &mut y);
+        assert_eq!(y, [0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn coo_export_row_major_sorted() {
+        let a = small();
+        let (data, cols, rows) = a.to_coo_f32();
+        assert_eq!(rows, vec![0, 0, 1, 1, 1, 2, 2]);
+        assert_eq!(cols, vec![0, 1, 0, 1, 2, 1, 2]);
+        assert_eq!(data[0], 2.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Synthetic analogs of the paper's Table V SuiteSparse datasets.
+//!
+//! Each entry records the *paper's* rows/NNZ and a generator recipe that
+//! reproduces the row count exactly and the NNZ density approximately
+//! (within ~15%; CG/SpMV behaviour is governed by n, nnz and row
+//! clustering — DESIGN.md §2 documents the substitution). The catalog is
+//! scaled by `scale` so CI-sized runs stay fast while benches can run the
+//! full sizes.
+
+use crate::error::Result;
+use crate::sparse::csr::Csr;
+use crate::sparse::gen;
+
+/// One Table V dataset analog.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub code: &'static str,
+    pub name: &'static str,
+    /// Rows / NNZ as printed in Table V of the paper.
+    pub paper_rows: usize,
+    pub paper_nnz: usize,
+    /// Structure class used by the generator.
+    pub class: Class,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Grid Laplacian-like (very sparse, ~5 nnz/row): fv1, ecology2, ...
+    Grid2d,
+    /// 3D grid-like (~7 nnz/row): thermomech, G2_circuit, ...
+    Grid3d,
+    /// FEM-like clustered rows (dense rows, 50-200 nnz/row): crankseg, ...
+    Fem,
+}
+
+/// Table V, D1-D20.
+pub fn table_v() -> Vec<Dataset> {
+    use Class::*;
+    vec![
+        Dataset { code: "D1", name: "Trefethen_2000", paper_rows: 2_000, paper_nnz: 41_906, class: Fem },
+        Dataset { code: "D2", name: "msc01440", paper_rows: 1_440, paper_nnz: 46_270, class: Fem },
+        Dataset { code: "D3", name: "fv1", paper_rows: 9_604, paper_nnz: 85_264, class: Grid2d },
+        Dataset { code: "D4", name: "msc04515", paper_rows: 4_515, paper_nnz: 97_707, class: Fem },
+        Dataset { code: "D5", name: "Muu", paper_rows: 7_102, paper_nnz: 170_134, class: Fem },
+        Dataset { code: "D6", name: "crystm02", paper_rows: 13_965, paper_nnz: 322_905, class: Fem },
+        Dataset { code: "D7", name: "shallow_water2", paper_rows: 81_920, paper_nnz: 327_680, class: Grid2d },
+        Dataset { code: "D8", name: "finan512", paper_rows: 74_752, paper_nnz: 596_992, class: Grid3d },
+        Dataset { code: "D9", name: "cbuckle", paper_rows: 13_681, paper_nnz: 676_515, class: Fem },
+        Dataset { code: "D10", name: "G2_circuit", paper_rows: 150_102, paper_nnz: 726_674, class: Grid2d },
+        Dataset { code: "D11", name: "thermomech_dM", paper_rows: 204_316, paper_nnz: 1_423_116, class: Grid3d },
+        Dataset { code: "D12", name: "ecology2", paper_rows: 999_999, paper_nnz: 4_995_991, class: Grid2d },
+        Dataset { code: "D13", name: "tmt_sym", paper_rows: 726_713, paper_nnz: 5_080_961, class: Grid2d },
+        Dataset { code: "D14", name: "consph", paper_rows: 83_334, paper_nnz: 6_010_480, class: Fem },
+        Dataset { code: "D15", name: "crankseg_1", paper_rows: 52_804, paper_nnz: 10_614_210, class: Fem },
+        Dataset { code: "D16", name: "bmwcra_1", paper_rows: 148_770, paper_nnz: 10_644_002, class: Fem },
+        Dataset { code: "D17", name: "hood", paper_rows: 220_542, paper_nnz: 10_768_436, class: Fem },
+        Dataset { code: "D18", name: "BenElechi1", paper_rows: 245_874, paper_nnz: 13_150_496, class: Fem },
+        Dataset { code: "D19", name: "crankseg_2", paper_rows: 63_838, paper_nnz: 14_148_858, class: Fem },
+        Dataset { code: "D20", name: "af_1_k101", paper_rows: 503_625, paper_nnz: 17_550_675, class: Fem },
+    ]
+}
+
+impl Dataset {
+    /// Generate the analog matrix, optionally scaled down by `scale`
+    /// (rows and nnz divided by `scale`; density preserved).
+    pub fn generate(&self, scale: usize) -> Result<Csr> {
+        let scale = scale.max(1);
+        let n = (self.paper_rows / scale).max(64);
+        let nnz_target = (self.paper_nnz / scale).max(n);
+        let per_row = (nnz_target as f64 / n as f64).round() as usize;
+        let seed = 0xD5_u64
+            .wrapping_mul(31)
+            .wrapping_add(self.code.bytes().map(|b| b as u64).sum::<u64>());
+        match self.class {
+            Class::Grid2d => {
+                // nearest grid side reproducing n
+                let g = (n as f64).sqrt().round() as usize;
+                Ok(gen::poisson2d(g.max(8)))
+            }
+            Class::Grid3d => {
+                let g = (n as f64).cbrt().round() as usize;
+                Ok(gen::poisson3d(g.max(4)))
+            }
+            Class::Fem => gen::clustered_spd(n, per_row.max(3), (per_row * 4).max(16), seed),
+        }
+    }
+
+    /// Matrix footprint in bytes (CSR, f32 values) at paper scale — used
+    /// for the L2-capacity split in Fig 7/9.
+    pub fn paper_bytes_f32(&self) -> usize {
+        self.paper_nnz * 8 + (self.paper_rows + 1) * 4
+    }
+
+    /// Paper's Fig 7 splits datasets by whether the problem fits in L2.
+    /// With A100's 40 MB L2: D1-D11 are "within", D12-D20 "exceed" —
+    /// matching the paper's split at D11/D12.
+    pub fn within_l2(&self, l2_bytes: usize) -> bool {
+        self.paper_bytes_f32() <= l2_bytes
+    }
+}
+
+/// Find by code ("D7").
+pub fn by_code(code: &str) -> Option<Dataset> {
+    table_v().into_iter().find(|d| d.code == code)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_datasets() {
+        assert_eq!(table_v().len(), 20);
+    }
+
+    #[test]
+    fn l2_split_matches_paper_fig7() {
+        // Fig 7 splits D1..D11 (within L2) vs D12..D20 (exceed) on A100
+        let l2 = 40 * 1024 * 1024;
+        for d in table_v() {
+            let within = d.within_l2(l2);
+            let idx: usize = d.code[1..].parse().unwrap();
+            assert_eq!(within, idx <= 11, "{} ({} bytes)", d.code, d.paper_bytes_f32());
+        }
+    }
+
+    #[test]
+    fn generated_analogs_are_spd_and_sized() {
+        for code in ["D1", "D3", "D8", "D15"] {
+            let d = by_code(code).unwrap();
+            let a = d.generate(16).unwrap();
+            a.validate().unwrap();
+            assert!(a.is_symmetric(1e-12), "{code}");
+            assert!(a.is_diag_dominant(), "{code}");
+            // density within a factor ~2 of the paper's
+            let paper_density = d.paper_nnz as f64 / d.paper_rows as f64;
+            let got_density = a.nnz() as f64 / a.n_rows as f64;
+            assert!(
+                got_density / paper_density < 2.0 && paper_density / got_density < 2.5,
+                "{code}: paper {paper_density:.1} vs got {got_density:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn by_code_lookup() {
+        assert_eq!(by_code("D12").unwrap().name, "ecology2");
+        assert!(by_code("D99").is_none());
+    }
+}

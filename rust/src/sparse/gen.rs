@@ -1,0 +1,189 @@
+//! Synthetic sparse matrix generators.
+//!
+//! SuiteSparse itself is not available in this environment, so these
+//! generators produce SPD matrices with the same row counts and NNZ
+//! densities as the paper's Table V datasets (see `datasets.rs` for the
+//! catalog). All generated matrices are symmetric positive definite by
+//! construction (symmetric pattern + strict diagonal dominance with
+//! positive diagonal), so CG converges on them, matching the paper's
+//! dataset selection criterion.
+
+use crate::error::Result;
+use crate::sparse::csr::Csr;
+use crate::util::rng::Rng;
+
+/// 5-point Laplacian on a g x g grid (n = g^2, nnz = 5n - 4g).
+///
+/// Layout matches `python/tests/test_cg.py::_poisson2d` and the nnz
+/// formula in `compile/aot.py` exactly — the CG artifacts' shapes are
+/// derived from it.
+pub fn poisson2d(g: usize) -> Csr {
+    let n = g * g;
+    let mut trip = Vec::with_capacity(5 * n);
+    for i in 0..g {
+        for j in 0..g {
+            let row = i * g + j;
+            trip.push((row, row, 4.0));
+            if i > 0 {
+                trip.push((row, row - g, -1.0));
+            }
+            if i + 1 < g {
+                trip.push((row, row + g, -1.0));
+            }
+            if j > 0 {
+                trip.push((row, row - 1, -1.0));
+            }
+            if j + 1 < g {
+                trip.push((row, row + 1, -1.0));
+            }
+        }
+    }
+    Csr::from_coo(n, n, trip).expect("poisson2d construction")
+}
+
+/// 7-point Laplacian on a g^3 grid.
+pub fn poisson3d(g: usize) -> Csr {
+    let n = g * g * g;
+    let idx = |z: usize, y: usize, x: usize| (z * g + y) * g + x;
+    let mut trip = Vec::with_capacity(7 * n);
+    for z in 0..g {
+        for y in 0..g {
+            for x in 0..g {
+                let row = idx(z, y, x);
+                trip.push((row, row, 6.0));
+                if z > 0 {
+                    trip.push((row, idx(z - 1, y, x), -1.0));
+                }
+                if z + 1 < g {
+                    trip.push((row, idx(z + 1, y, x), -1.0));
+                }
+                if y > 0 {
+                    trip.push((row, idx(z, y - 1, x), -1.0));
+                }
+                if y + 1 < g {
+                    trip.push((row, idx(z, y + 1, x), -1.0));
+                }
+                if x > 0 {
+                    trip.push((row, idx(z, y, x - 1), -1.0));
+                }
+                if x + 1 < g {
+                    trip.push((row, idx(z, y, x + 1), -1.0));
+                }
+            }
+        }
+    }
+    Csr::from_coo(n, n, trip).expect("poisson3d construction")
+}
+
+/// Clustered SPD matrix approximating a FEM-style sparsity: `n` rows with
+/// about `avg_row_nnz` entries per row, off-diagonals clustered within a
+/// `window` of the diagonal (bandwidth locality like the paper's
+/// crankseg/bmwcra datasets). SPD by diagonal dominance.
+pub fn clustered_spd(n: usize, avg_row_nnz: usize, window: usize, seed: u64) -> Result<Csr> {
+    let mut rng = Rng::new(seed);
+    let per_side = avg_row_nnz.saturating_sub(1) / 2;
+    let window = window.max(per_side + 1);
+    let mut trip: Vec<(usize, usize, f64)> = Vec::with_capacity(n * (1 + 2 * per_side));
+    // off-diagonal pattern: for each row choose per_side partners ahead
+    for i in 0..n {
+        let hi = (i + window).min(n - 1);
+        if hi <= i {
+            continue;
+        }
+        for _ in 0..per_side {
+            let j = i + 1 + rng.index(hi - i);
+            let v = -(0.1 + rng.f64());
+            trip.push((i, j, v));
+            trip.push((j, i, v));
+        }
+    }
+    // diagonal: strict dominance (duplicates in trip are summed by from_coo,
+    // so compute row sums over the summed values after a first pass)
+    let pattern = Csr::from_coo(n, n, trip.iter().copied())?;
+    let mut diag = vec![0.0f64; n];
+    for r in 0..n {
+        let (_, vals) = pattern.row(r);
+        diag[r] = 1.0 + vals.iter().map(|v| v.abs()).sum::<f64>();
+    }
+    trip.extend((0..n).map(|i| (i, i, diag[i])));
+    Csr::from_coo(n, n, trip)
+}
+
+/// Tridiagonal SPD [-1, 2, -1] (the classic 1D Laplacian).
+pub fn tridiag(n: usize) -> Csr {
+    let mut trip = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        trip.push((i, i, 2.0));
+        if i > 0 {
+            trip.push((i, i - 1, -1.0));
+        }
+        if i + 1 < n {
+            trip.push((i, i + 1, -1.0));
+        }
+    }
+    Csr::from_coo(n, n, trip).expect("tridiag construction")
+}
+
+/// Deterministic right-hand side for solver tests/benches.
+pub fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f64() * 2.0 - 1.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson2d_matches_python_formula() {
+        for g in [4, 8, 16, 32] {
+            let a = poisson2d(g);
+            a.validate().unwrap();
+            assert_eq!(a.nnz(), 5 * g * g - 4 * g, "g={g}");
+            assert!(a.is_symmetric(0.0));
+            assert!(a.is_diag_dominant());
+        }
+    }
+
+    #[test]
+    fn poisson3d_structure() {
+        let a = poisson3d(5);
+        a.validate().unwrap();
+        assert_eq!(a.n_rows, 125);
+        assert!(a.is_symmetric(0.0));
+        assert!(a.is_diag_dominant());
+        // interior row has 7 entries
+        let mid = (2 * 5 + 2) * 5 + 2;
+        assert_eq!(a.row(mid).0.len(), 7);
+    }
+
+    #[test]
+    fn clustered_spd_is_spd_shaped() {
+        let a = clustered_spd(500, 9, 40, 7).unwrap();
+        a.validate().unwrap();
+        assert!(a.is_symmetric(1e-12));
+        assert!(a.is_diag_dominant());
+        let density = a.nnz() as f64 / 500.0;
+        assert!(
+            (density - 9.0).abs() < 3.0,
+            "density {density} too far from target 9"
+        );
+    }
+
+    #[test]
+    fn clustered_deterministic() {
+        let a = clustered_spd(100, 5, 10, 3).unwrap();
+        let b = clustered_spd(100, 5, 10, 3).unwrap();
+        assert_eq!(a, b);
+        let c = clustered_spd(100, 5, 10, 4).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tridiag_structure() {
+        let a = tridiag(10);
+        a.validate().unwrap();
+        assert_eq!(a.nnz(), 28);
+        assert!(a.is_symmetric(0.0));
+    }
+}

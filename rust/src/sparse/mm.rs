@@ -1,0 +1,135 @@
+//! MatrixMarket coordinate-format IO (subset: real, general/symmetric).
+//!
+//! Lets users bring actual SuiteSparse downloads into the CG benches when
+//! they have them; the bench harness falls back to the synthetic analogs
+//! otherwise.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::sparse::csr::Csr;
+
+/// Read a `.mtx` file (coordinate, real; `general` or `symmetric`).
+pub fn read(path: impl AsRef<Path>) -> Result<Csr> {
+    let file = std::fs::File::open(path)?;
+    read_from(std::io::BufReader::new(file))
+}
+
+pub fn read_from(reader: impl BufRead) -> Result<Csr> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::invalid("empty MatrixMarket file"))??;
+    let h = header.to_lowercase();
+    if !h.starts_with("%%matrixmarket matrix coordinate real") {
+        return Err(Error::invalid(format!("unsupported MatrixMarket header: {header}")));
+    }
+    let symmetric = h.contains("symmetric");
+
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| Error::invalid("missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| Error::invalid(format!("bad size line {size_line:?}"))))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(Error::invalid(format!("bad size line {size_line:?}")));
+    }
+    let (nr, nc, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut trip = Vec::with_capacity(if symmetric { 2 * nnz } else { nnz });
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it
+            .next()
+            .and_then(|x| x.parse().ok())
+            .ok_or_else(|| Error::invalid(format!("bad entry {t:?}")))?;
+        let c: usize = it
+            .next()
+            .and_then(|x| x.parse().ok())
+            .ok_or_else(|| Error::invalid(format!("bad entry {t:?}")))?;
+        let v: f64 = it.next().and_then(|x| x.parse().ok()).unwrap_or(1.0);
+        if r == 0 || c == 0 {
+            return Err(Error::invalid("MatrixMarket indices are 1-based"));
+        }
+        trip.push((r - 1, c - 1, v));
+        if symmetric && r != c {
+            trip.push((c - 1, r - 1, v));
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        return Err(Error::invalid(format!("expected {nnz} entries, found {seen}")));
+    }
+    Csr::from_coo(nr, nc, trip)
+}
+
+/// Write in `general` coordinate format.
+pub fn write(csr: &Csr, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "{} {} {}", csr.n_rows, csr.n_cols, csr.nnz())?;
+    for r in 0..csr.n_rows {
+        let (cols, vals) = csr.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            writeln!(f, "{} {} {v}", r + 1, c + 1)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let a = gen::poisson2d(6);
+        let path = std::env::temp_dir().join("perks_mm_roundtrip.mtx");
+        write(&a, &path).unwrap();
+        let b = read(&path).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn symmetric_expansion() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    2 2 3\n1 1 2.0\n2 1 -1.0\n2 2 2.0\n";
+        let a = read_from(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.get(0, 1), Some(-1.0));
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn rejects_bad_headers_and_counts() {
+        assert!(read_from(std::io::Cursor::new("%%MatrixMarket matrix array real\n1 1\n1.0\n"))
+            .is_err());
+        assert!(read_from(std::io::Cursor::new(
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n"
+        ))
+        .is_err());
+        assert!(read_from(std::io::Cursor::new(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n"
+        ))
+        .is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse-matrix substrate: CSR storage, MatrixMarket IO, synthetic
+//! generators, and the Table V dataset catalog (SuiteSparse analogs).
+
+pub mod csr;
+pub mod datasets;
+pub mod gen;
+pub mod mm;
+
+pub use csr::Csr;
+pub use datasets::{by_code, table_v, Dataset};

@@ -1,0 +1,312 @@
+//! Merge-based SpMV (Merrill & Garland, SC'16), implemented from scratch.
+//!
+//! The paper's CG solver replaces the naive SpMV with CUB's merge-based
+//! SpMV because its two-level *search* decomposition fits the PERKS
+//! caching scheme (§V-C): the coordinate path of length (n_rows + nnz) is
+//! split into equal shares, and a 2D binary search ("merge-path search")
+//! finds each share's (row, nonzero) start. The TB-level search results
+//! are exactly what the paper caches in its "workload" policies.
+//!
+//! This rust implementation is the CPU hot path of the CG substrate: the
+//! merge path is searched once per matrix (cacheable — the matrix is
+//! static across iterations, as the paper exploits), then each worker
+//! consumes its share with perfectly balanced work regardless of row
+//! length skew.
+
+use crate::sparse::csr::Csr;
+
+/// A merge-path coordinate: position on the (row-end, nonzero) diagonal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coord {
+    /// Index into `row_ptr[1..]` (i.e., current row).
+    pub row: usize,
+    /// Index into the nonzero arrays.
+    pub nz: usize,
+}
+
+/// 2D merge-path search: find the coordinate where `diagonal` splits the
+/// merge of `row_end[0..n_rows]` and the natural numbers `0..nnz`.
+///
+/// Standard merge-path: binary search the largest `row` such that
+/// `row_end[row'] <= diagonal - row' - 1` holds for all `row' < row`.
+pub fn merge_path_search(diagonal: usize, row_end: &[usize], nnz: usize) -> Coord {
+    let mut lo = diagonal.saturating_sub(nnz);
+    let mut hi = diagonal.min(row_end.len());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if row_end[mid] <= diagonal - mid - 1 {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    Coord { row: lo, nz: diagonal - lo }
+}
+
+/// The cached "TB-level search result" of the paper: share boundaries.
+#[derive(Clone, Debug)]
+pub struct MergePlan {
+    pub shares: Vec<Coord>,
+    pub n_rows: usize,
+    pub nnz: usize,
+}
+
+impl MergePlan {
+    /// Partition the merge path into `parts` equal shares.
+    pub fn new(csr: &Csr, parts: usize) -> Self {
+        let parts = parts.max(1);
+        let n = csr.n_rows;
+        let nnz = csr.nnz();
+        let path_len = n + nnz;
+        let row_end = &csr.row_ptr[1..];
+        let mut shares = Vec::with_capacity(parts + 1);
+        for p in 0..=parts {
+            let diagonal = (path_len * p) / parts;
+            shares.push(merge_path_search(diagonal, row_end, nnz));
+        }
+        Self { shares, n_rows: n, nnz }
+    }
+
+    /// Items (rows + nonzeros) in share `i` — balanced by construction.
+    pub fn share_items(&self, i: usize) -> usize {
+        let a = self.shares[i];
+        let b = self.shares[i + 1];
+        (b.row - a.row) + (b.nz - a.nz)
+    }
+
+    pub fn parts(&self) -> usize {
+        self.shares.len() - 1
+    }
+}
+
+/// Sequential consumption of one merge share: rows [start.row, end.row)
+/// are completed inside the share; a trailing partial row accumulates into
+/// `carry` which the caller combines (the "fixup" pass of the paper).
+fn consume_share(
+    csr: &Csr,
+    x: &[f64],
+    y: &mut [f64],
+    start: Coord,
+    end: Coord,
+) -> (usize, f64) {
+    let row_end = &csr.row_ptr[1..];
+    let mut row = start.row;
+    let mut nz = start.nz;
+    let mut acc = 0.0;
+    let vals = &csr.vals;
+    let cols = &csr.cols;
+    while row < end.row {
+        // finish this row: iterate the contiguous (val, col) segment so
+        // the compiler drops the per-element bounds checks
+        let hi = row_end[row];
+        for (v, &c) in vals[nz..hi].iter().zip(&cols[nz..hi]) {
+            acc += v * x[c];
+        }
+        nz = hi;
+        y[row] = acc;
+        acc = 0.0;
+        row += 1;
+    }
+    // partial tail row (completed by a later share / fixup)
+    for (v, &c) in vals[nz..end.nz].iter().zip(&cols[nz..end.nz]) {
+        acc += v * x[c];
+    }
+    (row, acc)
+}
+
+/// y = A x using the merge plan, sequential over shares (the share loop is
+/// embarrassingly parallel; `spmv_parallel` threads it).
+pub fn spmv(csr: &Csr, plan: &MergePlan, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(plan.n_rows, csr.n_rows);
+    y[..csr.n_rows].fill(0.0);
+    let mut carries: Vec<(usize, f64)> = Vec::with_capacity(plan.parts());
+    for i in 0..plan.parts() {
+        let (row, carry) = consume_share(csr, x, y, plan.shares[i], plan.shares[i + 1]);
+        carries.push((row, carry));
+    }
+    // fixup: add partial-row carries
+    for (row, carry) in carries {
+        if row < csr.n_rows && carry != 0.0 {
+            y[row] += carry;
+        }
+    }
+}
+
+/// Threaded variant: shares are distributed over at most
+/// `available_parallelism` OS threads (a share is the work *unit*; the
+/// thread count is the worker pool — spawning per share would drown the
+/// balanced work in spawn latency).
+pub fn spmv_parallel(csr: &Csr, plan: &MergePlan, x: &[f64], y: &mut [f64]) {
+    let parts = plan.parts();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(8)
+        .min(parts);
+    if parts == 1 || workers == 1 {
+        return spmv(csr, plan, x, y);
+    }
+    y[..csr.n_rows].fill(0.0);
+    // each share writes rows [start.row, end.row) — disjoint by
+    // construction; carries are combined after the join
+    let mut carries = vec![(0usize, 0.0f64); parts];
+    let y_ptr = SendPtr(y.as_mut_ptr());
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let y_ptr = y_ptr;
+            let shares = &plan.shares;
+            // worker w consumes shares [lo, hi) — balanced because the
+            // shares themselves are item-balanced
+            let lo = parts * w / workers;
+            let hi = parts * (w + 1) / workers;
+            handles.push(scope.spawn(move || {
+                // SAFETY: shares own disjoint complete-row ranges; the
+                // trailing partial row is returned as a carry, not written.
+                let y = unsafe {
+                    std::slice::from_raw_parts_mut(y_ptr.get(), csr.n_rows)
+                };
+                (lo..hi)
+                    .map(|i| consume_share(csr, x, y, shares[i], shares[i + 1]))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for (w, h) in handles.into_iter().enumerate() {
+            let lo = parts * w / workers;
+            for (i, c) in h.join().unwrap().into_iter().enumerate() {
+                carries[lo + i] = c;
+            }
+        }
+    });
+    for (row, carry) in carries {
+        if row < csr.n_rows && carry != 0.0 {
+            y[row] += carry;
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+
+impl SendPtr {
+    /// Method access forces whole-struct closure capture (a bare field
+    /// access would capture only the non-Send raw pointer under RFC 2229).
+    fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::check::{allclose, forall, Prop};
+    use crate::util::rng::Rng;
+
+    fn gold(csr: &Csr, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; csr.n_rows];
+        csr.spmv_gold(x, &mut y);
+        y
+    }
+
+    #[test]
+    fn matches_gold_poisson() {
+        let a = gen::poisson2d(16);
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..a.n_rows).map(|_| rng.f64()).collect();
+        let want = gold(&a, &x);
+        for parts in [1, 2, 7, 32] {
+            let plan = MergePlan::new(&a, parts);
+            let mut y = vec![0.0; a.n_rows];
+            spmv(&a, &plan, &x, &mut y);
+            if let Prop::Fail(m) = allclose(&y, &want, 1e-12, 1e-12) {
+                panic!("parts={parts}: {m}");
+            }
+            let mut yp = vec![0.0; a.n_rows];
+            spmv_parallel(&a, &plan, &x, &mut yp);
+            if let Prop::Fail(m) = allclose(&yp, &want, 1e-12, 1e-12) {
+                panic!("parallel parts={parts}: {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn handles_skewed_rows() {
+        // one huge row among tiny ones — naive row-split would imbalance;
+        // merge split must stay correct
+        let n = 64;
+        let mut trip = vec![];
+        for j in 0..n {
+            trip.push((0, j, 1.0 + j as f64));
+        }
+        for i in 1..n {
+            trip.push((i, i, 2.0));
+        }
+        let a = Csr::from_coo(n, n, trip).unwrap();
+        let x: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+        let want = gold(&a, &x);
+        let plan = MergePlan::new(&a, 8);
+        let mut y = vec![0.0; n];
+        spmv_parallel(&a, &plan, &x, &mut y);
+        if let Prop::Fail(m) = allclose(&y, &want, 1e-12, 1e-12) {
+            panic!("{m}");
+        }
+    }
+
+    #[test]
+    fn shares_are_balanced() {
+        let a = gen::clustered_spd(2000, 11, 50, 1).unwrap();
+        let parts = 16;
+        let plan = MergePlan::new(&a, parts);
+        let items: Vec<usize> = (0..parts).map(|i| plan.share_items(i)).collect();
+        let max = *items.iter().max().unwrap();
+        let min = *items.iter().min().unwrap();
+        // merge-path guarantee: shares differ by at most 1 item
+        assert!(max - min <= 1, "imbalance: {items:?}");
+    }
+
+    #[test]
+    fn search_endpoints() {
+        let a = gen::poisson2d(4);
+        let row_end = &a.row_ptr[1..];
+        let c0 = merge_path_search(0, row_end, a.nnz());
+        assert_eq!(c0, Coord { row: 0, nz: 0 });
+        let cend = merge_path_search(a.n_rows + a.nnz(), row_end, a.nnz());
+        assert_eq!(cend, Coord { row: a.n_rows, nz: a.nnz() });
+    }
+
+    #[test]
+    fn property_random_matrices_match_gold() {
+        forall(
+            0xC0FFEE,
+            15,
+            |rng| {
+                let n = 20 + rng.index(100);
+                let per_row = 3 + rng.index(8);
+                let a = gen::clustered_spd(n, per_row, 12, rng.next_u64()).unwrap();
+                let x: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0 - 1.0).collect();
+                let parts = 1 + rng.index(12);
+                (a, x, parts)
+            },
+            |(a, x, parts)| {
+                let want = gold(a, x);
+                let plan = MergePlan::new(a, *parts);
+                let mut y = vec![0.0; a.n_rows];
+                spmv_parallel(a, &plan, x, &mut y);
+                allclose(&y, &want, 1e-11, 1e-11)
+            },
+        );
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        // rows with zero entries exercise merge-path row advancement
+        let a = Csr::from_coo(5, 5, vec![(0, 0, 1.0), (4, 4, 2.0)]).unwrap();
+        let x = vec![1.0; 5];
+        let want = gold(&a, &x);
+        let plan = MergePlan::new(&a, 3);
+        let mut y = vec![0.0; 5];
+        spmv(&a, &plan, &x, &mut y);
+        assert_eq!(y, want);
+    }
+}

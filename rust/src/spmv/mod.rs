@@ -1,0 +1,7 @@
+//! SpMV substrate: merge-based SpMV (Merrill-Garland) as adopted by the
+//! paper's CG solver, plus the naive row-split baseline.
+
+pub mod merge;
+pub mod naive;
+
+pub use merge::{merge_path_search, Coord, MergePlan};

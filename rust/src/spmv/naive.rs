@@ -1,0 +1,67 @@
+//! Naive row-per-worker SpMV — the baseline the paper's CG sample used
+//! before adopting merge-based SpMV (§V-C). Kept as the comparison point
+//! for the SpMV ablation bench: it is simple but imbalanced under row-
+//! length skew.
+
+use crate::sparse::csr::Csr;
+use crate::stencil::parallel::partition;
+
+/// Sequential y = A x.
+pub fn spmv(csr: &Csr, x: &[f64], y: &mut [f64]) {
+    csr.spmv_gold(x, y);
+}
+
+/// Threaded y = A x with a row-block split (NOT work-balanced: a block
+/// holding dense rows dominates the critical path — this is the imbalance
+/// merge-path removes).
+pub fn spmv_parallel(csr: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
+    let bands = partition(csr.n_rows, threads.max(1));
+    // disjoint row ranges => disjoint y slices
+    let mut rest: &mut [f64] = y;
+    let mut slices: Vec<(usize, &mut [f64])> = Vec::with_capacity(bands.len());
+    let mut cut = 0;
+    for &(start, len) in &bands {
+        debug_assert_eq!(start, cut);
+        let (head, tail) = rest.split_at_mut(len);
+        slices.push((start, head));
+        rest = tail;
+        cut += len;
+    }
+    std::thread::scope(|scope| {
+        for (start, slice) in slices {
+            scope.spawn(move || {
+                for (i, out) in slice.iter_mut().enumerate() {
+                    let r = start + i;
+                    let lo = csr.row_ptr[r];
+                    let hi = csr.row_ptr[r + 1];
+                    let mut acc = 0.0;
+                    for k in lo..hi {
+                        acc += csr.vals[k] * x[csr.cols[k]];
+                    }
+                    *out = acc;
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let a = gen::poisson2d(12);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..a.n_rows).map(|_| rng.f64()).collect();
+        let mut want = vec![0.0; a.n_rows];
+        spmv(&a, &x, &mut want);
+        for threads in [1, 3, 8] {
+            let mut got = vec![0.0; a.n_rows];
+            spmv_parallel(&a, &x, &mut got, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+}

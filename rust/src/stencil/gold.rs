@@ -1,0 +1,179 @@
+//! Sequential CPU gold executor for the stencil benchmarks.
+//!
+//! This is the rust-side correctness oracle: the PJRT-executed artifacts
+//! (which came from the Pallas kernels, which were checked against the jnp
+//! oracle) must match this executor bit-for-bit in f64 and to float
+//! tolerance in f32 — closing the four-way gold chain described in
+//! DESIGN.md §6. It is also the baseline for the persistent-threads CPU
+//! executor in `parallel.rs`.
+
+use crate::error::Result;
+use crate::stencil::grid::Domain;
+use crate::stencil::shape::StencilSpec;
+
+/// Accumulate one interior row: `acc[i] = sum_k w[k] * src[base + d[k] + i]`.
+///
+/// The per-offset inner loops run over contiguous slices, which the
+/// compiler auto-vectorizes — this is the optimized form of the cell-
+/// update kernel (see EXPERIMENTS.md §Perf: ~5x over per-cell indexing).
+#[inline]
+pub(crate) fn accumulate_row(
+    acc: &mut [f64],
+    src: &[f64],
+    base: usize,
+    deltas: &[isize],
+    weights: &[f64],
+) {
+    acc.fill(0.0);
+    let n = acc.len();
+    for (&d, &w) in deltas.iter().zip(weights) {
+        let start = (base as isize + d) as usize;
+        let row = &src[start..start + n];
+        for (a, &s) in acc.iter_mut().zip(row) {
+            *a += w * s;
+        }
+    }
+}
+
+/// Linearized offsets for a padded geometry.
+pub(crate) fn linear_deltas(spec: &StencilSpec, py: usize, px: usize) -> Vec<isize> {
+    spec.offsets
+        .iter()
+        .map(|&(dz, dy, dx)| {
+            dz as isize * (py * px) as isize + dy as isize * px as isize + dx as isize
+        })
+        .collect()
+}
+
+/// Apply one Jacobi step of `spec` to `src`, writing into `dst`.
+/// `src` and `dst` must have identical geometry. The halo ring is copied
+/// through unchanged (Dirichlet boundary).
+pub fn step_into(spec: &StencilSpec, src: &Domain, dst: &mut Domain) -> Result<()> {
+    debug_assert_eq!(src.padded, dst.padded);
+    let weights = spec.weights();
+    let r = spec.radius;
+    let zr = src.z_range();
+    let (py, px) = (src.padded[1], src.padded[2]);
+    let deltas = linear_deltas(spec, py, px);
+    let width = px - 2 * r;
+    let plane = py * px;
+    let pz = src.padded[0];
+    // copy only the halo through (full-array copies dominated the profile
+    // at low orders — see EXPERIMENTS.md §Perf): z-halo planes, then the
+    // y-halo rows and x-halo columns of each interior plane
+    let zr_start = zr.start;
+    let zr_end = zr.end;
+    for z in 0..pz {
+        let p0 = z * plane;
+        if !(zr_start..zr_end).contains(&z) {
+            dst.data[p0..p0 + plane].copy_from_slice(&src.data[p0..p0 + plane]);
+            continue;
+        }
+        // top/bottom y-halo rows
+        dst.data[p0..p0 + r * px].copy_from_slice(&src.data[p0..p0 + r * px]);
+        let tail = p0 + (py - r) * px;
+        dst.data[tail..p0 + plane].copy_from_slice(&src.data[tail..p0 + plane]);
+        for y in r..py - r {
+            let row = p0 + y * px;
+            // x-halo columns
+            dst.data[row..row + r].copy_from_slice(&src.data[row..row + r]);
+            dst.data[row + px - r..row + px].copy_from_slice(&src.data[row + px - r..row + px]);
+            // interior: accumulate straight into dst (no staging buffer)
+            let base = row + r;
+            accumulate_row(&mut dst.data[base..base + width], &src.data, base, &deltas, &weights);
+        }
+    }
+    Ok(())
+}
+
+/// Advance `steps` Jacobi steps, ping-ponging two buffers; returns the
+/// final domain.
+pub fn run(spec: &StencilSpec, x0: &Domain, steps: usize) -> Result<Domain> {
+    let mut a = x0.clone();
+    let mut b = x0.clone();
+    for _ in 0..steps {
+        step_into(spec, &a, &mut b)?;
+        std::mem::swap(&mut a, &mut b);
+    }
+    Ok(a)
+}
+
+/// FLOP count for `steps` steps (for roofline estimates in benches).
+pub fn flops(spec: &StencilSpec, domain: &Domain, steps: usize) -> u64 {
+    domain.interior_cells() as u64 * spec.flops_per_cell as u64 * steps as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::shape::{catalog, spec};
+
+    #[test]
+    fn constant_field_is_fixed_point() {
+        // convex weights: a constant domain is exactly invariant
+        for s in catalog() {
+            let interior: Vec<usize> = if s.dims == 2 { vec![6, 6] } else { vec![4, 4, 4] };
+            let mut d = Domain::for_spec(&s, &interior).unwrap();
+            for v in d.data.iter_mut() {
+                *v = 2.5;
+            }
+            let out = run(&s, &d, 3).unwrap();
+            assert!(out.max_abs_diff(&d) < 1e-12, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn boundary_untouched() {
+        let s = spec("2d9pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(7);
+        let out = run(&s, &d, 5).unwrap();
+        let r = s.radius;
+        let (py, px) = (d.padded[1], d.padded[2]);
+        for y in 0..py {
+            for x in 0..px {
+                let on_halo = y < r || y >= py - r || x < r || x >= px - r;
+                if on_halo {
+                    assert_eq!(out.get(0, y, x), d.get(0, y, x));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn manual_2d5pt_single_cell() {
+        // 1x1 interior: new value = sum(w_i * neighbor_i) computed by hand
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[1, 1]).unwrap();
+        // padded 3x3; offsets sorted: (-1,0),(0,-1),(0,0),(0,1),(1,0) as
+        // (dy,dx); weights 1/15..5/15
+        d.set(0, 0, 1, 1.0); // (dy=-1)
+        d.set(0, 1, 0, 2.0); // (dx=-1)
+        d.set(0, 1, 1, 3.0); // center
+        d.set(0, 1, 2, 4.0); // (dx=+1)
+        d.set(0, 2, 1, 5.0); // (dy=+1)
+        let out = run(&s, &d, 1).unwrap();
+        let want =
+            (1.0 / 15.0) * 1.0 + (2.0 / 15.0) * 2.0 + (3.0 / 15.0) * 3.0 + (4.0 / 15.0) * 4.0
+                + (5.0 / 15.0) * 5.0;
+        assert!((out.get(0, 1, 1) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn steps_compose() {
+        let s = spec("3d7pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[4, 4, 4]).unwrap();
+        d.randomize(3);
+        let two = run(&s, &d, 2).unwrap();
+        let one = run(&s, &d, 1).unwrap();
+        let one_one = run(&s, &one, 1).unwrap();
+        assert!(two.max_abs_diff(&one_one) < 1e-15);
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let s = spec("2d5pt").unwrap();
+        let d = Domain::for_spec(&s, &[10, 10]).unwrap();
+        assert_eq!(flops(&s, &d, 3), 100 * 10 * 3);
+    }
+}

@@ -1,0 +1,161 @@
+//! Padded domain representation shared by the gold executor, the
+//! persistent-threads executor and the PJRT drivers.
+//!
+//! Domains are stored padded with a Dirichlet halo ring of width `radius`
+//! (matching the python side). 2D domains are represented as 3D with a
+//! depth of 1 and dz == 0 offsets, so one code path serves both.
+
+use crate::error::{Error, Result};
+use crate::stencil::shape::StencilSpec;
+use crate::util::rng::Rng;
+
+/// A padded, row-major domain (f64 internally; converted at the PJRT edge).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Domain {
+    /// Interior extents (d, h, w); d == 1 for 2D.
+    pub interior: [usize; 3],
+    pub radius: usize,
+    /// Padded extents.
+    pub padded: [usize; 3],
+    pub data: Vec<f64>,
+}
+
+impl Domain {
+    /// Create a zeroed padded domain. For 2D pass `[1, h, w]` and the 2D
+    /// padding is only applied to y/x.
+    pub fn zeros(interior: [usize; 3], radius: usize, dims: usize) -> Self {
+        let pad_z = if dims == 3 { 2 * radius } else { 0 };
+        let padded = [interior[0] + pad_z, interior[1] + 2 * radius, interior[2] + 2 * radius];
+        let data = vec![0.0; padded[0] * padded[1] * padded[2]];
+        Self { interior, radius, padded, data }
+    }
+
+    /// Create for a named benchmark spec with the given interior.
+    pub fn for_spec(spec: &StencilSpec, interior: &[usize]) -> Result<Self> {
+        let interior3 = match (spec.dims, interior.len()) {
+            (2, 2) => [1, interior[0], interior[1]],
+            (3, 3) => [interior[0], interior[1], interior[2]],
+            _ => {
+                return Err(Error::invalid(format!(
+                    "{}: interior rank {} does not match dims {}",
+                    spec.name,
+                    interior.len(),
+                    spec.dims
+                )))
+            }
+        };
+        Ok(Self::zeros(interior3, spec.radius, spec.dims))
+    }
+
+    /// Fill interior + halo with deterministic pseudo-random values.
+    pub fn randomize(&mut self, seed: u64) {
+        let mut rng = Rng::new(seed);
+        rng.fill_f64(&mut self.data);
+    }
+
+    pub fn idx(&self, z: usize, y: usize, x: usize) -> usize {
+        (z * self.padded[1] + y) * self.padded[2] + x
+    }
+
+    pub fn get(&self, z: usize, y: usize, x: usize) -> f64 {
+        self.data[self.idx(z, y, x)]
+    }
+
+    pub fn set(&mut self, z: usize, y: usize, x: usize, v: f64) {
+        let i = self.idx(z, y, x);
+        self.data[i] = v;
+    }
+
+    pub fn interior_cells(&self) -> usize {
+        self.interior.iter().product()
+    }
+
+    /// Z-range of the interior in padded coordinates.
+    pub fn z_range(&self) -> std::ops::Range<usize> {
+        let z0 = self.padded[0] - self.interior[0]; // 0 offset for 2D, radius for 3D
+        let start = (self.padded[0] - self.interior[0]) / 2;
+        debug_assert!(z0 == 0 || z0 == 2 * self.radius);
+        start..start + self.interior[0]
+    }
+
+    /// Export as f32 vec (for the PJRT f32 artifacts). 2D domains are
+    /// flattened to their (padded_y, padded_x) plane.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Import from f32 (must match padded size).
+    pub fn from_f32(&mut self, src: &[f32]) -> Result<()> {
+        if src.len() != self.data.len() {
+            return Err(Error::Shape(format!(
+                "domain has {} elements, source {}",
+                self.data.len(),
+                src.len()
+            )));
+        }
+        for (d, &s) in self.data.iter_mut().zip(src) {
+            *d = s as f64;
+        }
+        Ok(())
+    }
+
+    /// Max absolute difference over the whole padded array.
+    pub fn max_abs_diff(&self, other: &Domain) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::shape::spec;
+
+    #[test]
+    fn padding_2d() {
+        let s = spec("2ds9pt").unwrap(); // radius 2
+        let d = Domain::for_spec(&s, &[8, 10]).unwrap();
+        assert_eq!(d.padded, [1, 12, 14]);
+        assert_eq!(d.interior_cells(), 80);
+        assert_eq!(d.z_range(), 0..1);
+    }
+
+    #[test]
+    fn padding_3d() {
+        let s = spec("3d13pt").unwrap(); // radius 2
+        let d = Domain::for_spec(&s, &[4, 6, 8]).unwrap();
+        assert_eq!(d.padded, [8, 10, 12]);
+        assert_eq!(d.z_range(), 2..6);
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        let s = spec("2d5pt").unwrap();
+        assert!(Domain::for_spec(&s, &[4, 4, 4]).is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[4, 4]).unwrap();
+        d.randomize(42);
+        let f = d.to_f32();
+        let mut d2 = Domain::for_spec(&s, &[4, 4]).unwrap();
+        d2.from_f32(&f).unwrap();
+        assert!(d.max_abs_diff(&d2) < 1e-7);
+        assert!(d2.from_f32(&f[1..]).is_err());
+    }
+
+    #[test]
+    fn index_math() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[3, 3]).unwrap();
+        d.set(0, 1, 1, 5.0);
+        assert_eq!(d.get(0, 1, 1), 5.0);
+        assert_eq!(d.idx(0, 0, 0), 0);
+        assert_eq!(d.idx(0, 1, 0), 5);
+    }
+}

@@ -1,0 +1,13 @@
+//! Stencil substrate: the 13 benchmarks of Table III, a sequential CPU
+//! gold executor, and a persistent-threads CPU executor that demonstrates
+//! the PERKS execution model physically (thread-local slabs as the on-chip
+//! cache, a shared array as global memory, a grid barrier as grid.sync).
+
+pub mod gold;
+pub mod grid;
+pub mod parallel;
+pub mod shape;
+pub mod temporal;
+
+pub use grid::Domain;
+pub use shape::{catalog, spec, StencilSpec};

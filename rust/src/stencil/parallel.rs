@@ -1,0 +1,555 @@
+//! Persistent-threads CPU stencil executor.
+//!
+//! This substrate demonstrates the PERKS execution model *physically* on
+//! the CPU: OS threads play the role of thread blocks, per-thread slabs of
+//! the domain play the role of register/shared-memory caches (they stay
+//! hot in the core's L1/L2), the shared padded array plays the role of GPU
+//! global memory, and `coordinator::barrier::GridBarrier` plays the role
+//! of `grid.sync()`.
+//!
+//! Two modes, mirroring Fig 3 of the paper:
+//!
+//! * `host_loop` — threads are (re)spawned every time step and the whole
+//!   domain round-trips through the shared array: the traditional model.
+//! * `persistent` — threads are spawned once and keep their slab locally
+//!   across all steps; only the slab *boundary planes* are exchanged
+//!   through the shared array each step (plus one final full store).
+//!
+//! Both produce results identical to `gold::run`, which the tests assert.
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+use crate::coordinator::barrier::GridBarrier;
+use crate::error::{Error, Result};
+use crate::stencil::grid::Domain;
+use crate::stencil::shape::StencilSpec;
+
+/// Shared mutable grid with disjoint-region writes coordinated by the
+/// barrier protocol below (safety argument in `SharedGrid::slice_mut`).
+struct SharedGrid {
+    data: UnsafeCell<Vec<f64>>,
+    len: usize,
+}
+
+unsafe impl Sync for SharedGrid {}
+
+impl SharedGrid {
+    fn new(data: Vec<f64>) -> Self {
+        let len = data.len();
+        Self { data: UnsafeCell::new(data), len }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Read a range. Caller must guarantee no concurrent writer overlaps
+    /// the range (enforced by the band ownership + barrier protocol).
+    unsafe fn read(&self, range: std::ops::Range<usize>, dst: &mut [f64]) {
+        debug_assert!(range.end <= self.len && range.len() == dst.len());
+        let base = (*self.data.get()).as_ptr();
+        std::ptr::copy_nonoverlapping(base.add(range.start), dst.as_mut_ptr(), range.len());
+    }
+
+    /// Write a range. Caller must guarantee exclusive ownership of the
+    /// range between barriers.
+    unsafe fn write(&self, offset: usize, src: &[f64]) {
+        debug_assert!(offset + src.len() <= self.len);
+        let base = (*self.data.get()).as_mut_ptr();
+        std::ptr::copy_nonoverlapping(src.as_ptr(), base.add(offset), src.len());
+    }
+
+    fn into_inner(self) -> Vec<f64> {
+        self.data.into_inner()
+    }
+}
+
+/// Partition `count` planes into `parts` contiguous bands (first bands get
+/// the remainder). Returns (start, len) pairs; never empty bands.
+pub fn partition(count: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(count).max(1);
+    let base = count / parts;
+    let rem = count % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Geometry of the banded decomposition for one domain.
+struct Bands {
+    /// Axis 0 for 3D (z), axis 1 for 2D (y).
+    axis: usize,
+    /// Plane size in elements (stride between consecutive planes).
+    plane: usize,
+    /// Interior plane range start in padded coords (== radius for the
+    /// banded axis... 0-pad for 2D z).
+    first: usize,
+    bands: Vec<(usize, usize)>,
+}
+
+fn bands_for(domain: &Domain, spec: &StencilSpec, threads: usize) -> Bands {
+    if spec.dims == 3 {
+        Bands {
+            axis: 0,
+            plane: domain.padded[1] * domain.padded[2],
+            first: spec.radius,
+            bands: partition(domain.interior[0], threads),
+        }
+    } else {
+        Bands {
+            axis: 1,
+            plane: domain.padded[2],
+            first: spec.radius,
+            bands: partition(domain.interior[1], threads),
+        }
+    }
+}
+
+/// Report from a parallel run.
+#[derive(Debug)]
+pub struct ParallelReport {
+    pub result: Domain,
+    pub wall_seconds: f64,
+    pub threads: usize,
+    /// Bytes moved through the shared ("global") array, summed over
+    /// threads: the traffic the paper's Eq 5 accounts.
+    pub global_bytes: u64,
+    pub barrier_wait: std::time::Duration,
+}
+
+struct ThreadPlan {
+    /// Banded-axis plane range owned by this thread, padded coords.
+    band: std::ops::Range<usize>,
+    /// Slab (band + halo planes) element range in the padded array.
+    slab: std::ops::Range<usize>,
+}
+
+fn plans(geometry: &Bands, radius: usize, total_planes: usize, plane: usize) -> Vec<ThreadPlan> {
+    geometry
+        .bands
+        .iter()
+        .map(|&(s, l)| {
+            let b0 = geometry.first + s;
+            let b1 = b0 + l;
+            let s0 = b0.saturating_sub(radius);
+            let s1 = (b1 + radius).min(total_planes);
+            ThreadPlan { band: b0..b1, slab: s0 * plane..s1 * plane }
+        })
+        .collect()
+}
+
+/// Compute one Jacobi step for the planes `band` (padded coords along the
+/// banded axis) reading from `local` (a slab starting at plane
+/// `slab_first`), writing new interior values into `out` (band-sized).
+#[allow(clippy::too_many_arguments)]
+fn compute_band(
+    spec: &StencilSpec,
+    domain: &Domain,
+    local: &[f64],
+    slab_first: usize,
+    band: &std::ops::Range<usize>,
+    weights: &[f64],
+    axis: usize,
+    out: &mut [f64],
+) {
+    let r = spec.radius;
+    let (py, px) = (domain.padded[1], domain.padded[2]);
+    let plane = py * px;
+    let lidx = |z: usize, y: usize, x: usize| -> usize {
+        // local slab coordinates: banded axis shifted by slab_first
+        if axis == 0 {
+            (z - slab_first) * plane + y * px + x
+        } else {
+            (y - slab_first) * px + x
+        }
+    };
+    let _ = &lidx; // retained for the doc comment; rows go via slices now
+    let deltas = crate::stencil::gold::linear_deltas(spec, py, px);
+    let width = px - 2 * r;
+    let mut o = 0;
+    if axis == 0 {
+        for z in band.clone() {
+            for y in r..py - r {
+                let base = ((z - slab_first) * py + y) * px + r;
+                crate::stencil::gold::accumulate_row(
+                    &mut out[o..o + width],
+                    local,
+                    base,
+                    &deltas,
+                    weights,
+                );
+                o += width;
+            }
+        }
+    } else {
+        for y in band.clone() {
+            let base = (y - slab_first) * px + r;
+            crate::stencil::gold::accumulate_row(
+                &mut out[o..o + width],
+                local,
+                base,
+                &deltas,
+                weights,
+            );
+            o += width;
+        }
+    }
+}
+
+/// Scatter band results (interior columns only) into a full-width plane
+/// buffer `planes` whose first plane is `dst_first` (padded coords).
+fn scatter_band(
+    spec: &StencilSpec,
+    domain: &Domain,
+    band: &std::ops::Range<usize>,
+    axis: usize,
+    results: &[f64],
+    planes: &mut [f64],
+    dst_first: usize,
+) {
+    let r = spec.radius;
+    let (py, px) = (domain.padded[1], domain.padded[2]);
+    let plane = py * px;
+    let mut i = 0;
+    if axis == 0 {
+        for z in band.clone() {
+            for y in r..py - r {
+                for x in r..px - r {
+                    planes[(z - dst_first) * plane + y * px + x] = results[i];
+                    i += 1;
+                }
+            }
+        }
+    } else {
+        for y in band.clone() {
+            for x in r..px - r {
+                planes[(y - dst_first) * px + x] = results[i];
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Run `steps` Jacobi steps with persistent threads (the PERKS model).
+pub fn persistent(
+    spec: &StencilSpec,
+    x0: &Domain,
+    steps: usize,
+    threads: usize,
+) -> Result<ParallelReport> {
+    if threads == 0 {
+        return Err(Error::invalid("threads must be > 0"));
+    }
+    let geometry = bands_for(x0, spec, threads);
+    let r = spec.radius;
+    let plane = geometry.plane;
+    let total_planes = x0.data.len() / plane;
+    let plans = plans(&geometry, r, total_planes, plane);
+    let nthreads = plans.len();
+    let barrier = Arc::new(GridBarrier::new(nthreads));
+    let shared = Arc::new(SharedGrid::new(x0.data.clone()));
+    let weights = spec.weights();
+    let global_bytes = Arc::new(std::sync::atomic::AtomicU64::new(0));
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for plan in &plans {
+            let barrier = barrier.clone();
+            let shared = shared.clone();
+            let weights = weights.clone();
+            let global_bytes = global_bytes.clone();
+            let domain = x0;
+            let axis = geometry.axis;
+            scope.spawn(move || {
+                let slab_first = plan.slab.start / plane;
+                // --- initial load: slab (band + halos) from global ---
+                let mut local = vec![0.0f64; plan.slab.len()];
+                unsafe { shared.read(plan.slab.clone(), &mut local) };
+                let mut moved = (plan.slab.len() * 8) as u64;
+                // everyone must finish the initial load before anyone's
+                // first boundary store mutates the shared array
+                barrier.sync();
+
+                let band_planes = plan.band.len();
+                let interior_per_plane = if axis == 0 {
+                    (domain.padded[1] - 2 * r) * (domain.padded[2] - 2 * r)
+                } else {
+                    domain.padded[2] - 2 * r
+                };
+                let mut results = vec![0.0f64; band_planes * interior_per_plane];
+
+                for _ in 0..steps {
+                    compute_band(
+                        spec, domain, &local, slab_first, &plan.band, &weights, axis,
+                        &mut results,
+                    );
+                    // update local slab interior with new values
+                    let band_off = (plan.band.start - slab_first) * plane;
+                    let band_len = band_planes * plane;
+                    scatter_band(
+                        spec,
+                        domain,
+                        &plan.band,
+                        axis,
+                        &results,
+                        &mut local[band_off..band_off + band_len],
+                        plan.band.start,
+                    );
+                    // --- exchange: store only boundary planes to global ---
+                    let lo_planes = r.min(band_planes);
+                    let lo_start = plan.band.start * plane;
+                    unsafe {
+                        shared.write(
+                            lo_start,
+                            &local[band_off..band_off + lo_planes * plane],
+                        )
+                    };
+                    let hi_planes = r.min(band_planes);
+                    let hi_first = plan.band.end - hi_planes;
+                    let hi_off = (hi_first - slab_first) * plane;
+                    unsafe {
+                        shared.write(hi_first * plane, &local[hi_off..hi_off + hi_planes * plane])
+                    };
+                    moved += ((lo_planes + hi_planes) * plane * 8) as u64;
+                    barrier.sync();
+                    // --- load neighbor halo planes from global ---
+                    let halo_lo = plan.slab.start / plane..plan.band.start;
+                    if !halo_lo.is_empty() {
+                        let off = halo_lo.start * plane;
+                        let len = halo_lo.len() * plane;
+                        unsafe {
+                            shared.read(off..off + len, &mut local[..len]);
+                        }
+                        moved += (len * 8) as u64;
+                    }
+                    let halo_hi = plan.band.end..plan.slab.end / plane;
+                    if !halo_hi.is_empty() {
+                        let off = halo_hi.start * plane;
+                        let len = halo_hi.len() * plane;
+                        let loff = (halo_hi.start - slab_first) * plane;
+                        unsafe {
+                            shared.read(off..off + len, &mut local[loff..loff + len]);
+                        }
+                        moved += (len * 8) as u64;
+                    }
+                    // second barrier: nobody may overwrite boundary planes
+                    // (next step's store) before all neighbors read them
+                    barrier.sync();
+                }
+                // --- final store: whole band back to global ---
+                let band_off = (plan.band.start - slab_first) * plane;
+                let band_len = band_planes * plane;
+                unsafe {
+                    shared.write(
+                        plan.band.start * plane,
+                        &local[band_off..band_off + band_len],
+                    )
+                };
+                moved += (band_len * 8) as u64;
+                global_bytes.fetch_add(moved, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let shared = Arc::try_unwrap(shared).ok().expect("threads joined");
+    let mut result = x0.clone();
+    result.data = shared.into_inner();
+    Ok(ParallelReport {
+        result,
+        wall_seconds: wall,
+        threads: nthreads,
+        global_bytes: global_bytes.load(std::sync::atomic::Ordering::Relaxed),
+        barrier_wait: barrier.total_wait(),
+    })
+}
+
+/// Run `steps` Jacobi steps in the host-loop model: threads are respawned
+/// each step (kernel relaunch) and the full domain round-trips through the
+/// shared arrays.
+pub fn host_loop(
+    spec: &StencilSpec,
+    x0: &Domain,
+    steps: usize,
+    threads: usize,
+) -> Result<ParallelReport> {
+    if threads == 0 {
+        return Err(Error::invalid("threads must be > 0"));
+    }
+    let geometry = bands_for(x0, spec, threads);
+    let r = spec.radius;
+    let plane = geometry.plane;
+    let total_planes = x0.data.len() / plane;
+    let plans = plans(&geometry, r, total_planes, plane);
+    let nthreads = plans.len();
+    let weights = spec.weights();
+
+    let mut src = SharedGrid::new(x0.data.clone());
+    let mut dst = SharedGrid::new(x0.data.clone());
+    let mut global_bytes = 0u64;
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let src_ref = &src;
+        let dst_ref = &dst;
+        // kernel "launch": spawn, compute, join — the implicit barrier
+        std::thread::scope(|scope| {
+            for plan in &plans {
+                let weights = weights.clone();
+                let domain = x0;
+                let axis = geometry.axis;
+                scope.spawn(move || {
+                    // load slab from global each step
+                    let mut local = vec![0.0f64; plan.slab.len()];
+                    unsafe { src_ref.read(plan.slab.clone(), &mut local) };
+                    let slab_first = plan.slab.start / plane;
+                    let band_planes = plan.band.len();
+                    let interior_per_plane = if axis == 0 {
+                        (domain.padded[1] - 2 * r) * (domain.padded[2] - 2 * r)
+                    } else {
+                        domain.padded[2] - 2 * r
+                    };
+                    let mut results = vec![0.0f64; band_planes * interior_per_plane];
+                    compute_band(
+                        spec, domain, &local, slab_first, &plan.band, &weights, axis,
+                        &mut results,
+                    );
+                    // store whole band to global each step
+                    let band_off = (plan.band.start - slab_first) * plane;
+                    let band_len = band_planes * plane;
+                    let mut band_new = local[band_off..band_off + band_len].to_vec();
+                    scatter_band(
+                        spec,
+                        domain,
+                        &plan.band,
+                        axis,
+                        &results,
+                        &mut band_new,
+                        plan.band.start,
+                    );
+                    unsafe { dst_ref.write(plan.band.start * plane, &band_new) };
+                });
+            }
+        });
+        // each step: every thread loaded its slab and stored its band
+        global_bytes += plans
+            .iter()
+            .map(|p| (p.slab.len() + p.band.len() * plane) as u64 * 8)
+            .sum::<u64>();
+        // halo planes of dst keep the Dirichlet values: copy from src once
+        unsafe {
+            let mut halo_lo = vec![0.0; geometry.first * plane];
+            src.read(0..halo_lo.len(), &mut halo_lo);
+            dst.write(0, &halo_lo);
+            let tail_first = (geometry.first
+                + if geometry.axis == 0 { x0.interior[0] } else { x0.interior[1] })
+                * plane;
+            let tail_len = dst.len() - tail_first;
+            let mut halo_hi = vec![0.0; tail_len];
+            src.read(tail_first..tail_first + tail_len, &mut halo_hi);
+            dst.write(tail_first, &halo_hi);
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut result = x0.clone();
+    result.data = src.into_inner();
+    Ok(ParallelReport {
+        result,
+        wall_seconds: wall,
+        threads: nthreads,
+        global_bytes,
+        barrier_wait: std::time::Duration::ZERO,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::gold;
+    use crate::stencil::shape::spec;
+
+    fn check_matches_gold(name: &str, interior: &[usize], steps: usize, threads: usize) {
+        let s = spec(name).unwrap();
+        let mut d = Domain::for_spec(&s, interior).unwrap();
+        d.randomize(99);
+        let want = gold::run(&s, &d, steps).unwrap();
+        let got_p = persistent(&s, &d, steps, threads).unwrap();
+        assert!(
+            got_p.result.max_abs_diff(&want) < 1e-12,
+            "{name} persistent diverged: {}",
+            got_p.result.max_abs_diff(&want)
+        );
+        let got_h = host_loop(&s, &d, steps, threads).unwrap();
+        assert!(
+            got_h.result.max_abs_diff(&want) < 1e-12,
+            "{name} host_loop diverged: {}",
+            got_h.result.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn matches_gold_2d_various_threads() {
+        for threads in [1, 2, 3, 4] {
+            check_matches_gold("2d5pt", &[16, 16], 4, threads);
+        }
+    }
+
+    #[test]
+    fn matches_gold_2d_high_order() {
+        check_matches_gold("2ds25pt", &[20, 16], 3, 3); // radius 6
+        check_matches_gold("2d25pt", &[18, 14], 3, 2); // box radius 2
+    }
+
+    #[test]
+    fn matches_gold_3d() {
+        check_matches_gold("3d7pt", &[8, 8, 8], 3, 2);
+        check_matches_gold("3d13pt", &[8, 6, 6], 2, 3); // radius 2
+        check_matches_gold("poisson", &[6, 6, 6], 3, 2);
+    }
+
+    #[test]
+    fn more_threads_than_planes_is_clamped() {
+        check_matches_gold("2d5pt", &[4, 8], 2, 16);
+    }
+
+    #[test]
+    fn persistent_moves_less_global_traffic() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[64, 64]).unwrap();
+        d.randomize(1);
+        let steps = 16;
+        let p = persistent(&s, &d, steps, 4).unwrap();
+        let h = host_loop(&s, &d, steps, 4).unwrap();
+        // the PERKS claim, measured: persistent traffic « host-loop traffic
+        assert!(
+            (p.global_bytes as f64) < 0.35 * h.global_bytes as f64,
+            "persistent {} vs host {}",
+            p.global_bytes,
+            h.global_bytes
+        );
+    }
+
+    #[test]
+    fn partition_covers_exactly() {
+        for (count, parts) in [(10, 3), (7, 7), (5, 9), (1, 1), (100, 8)] {
+            let bands = partition(count, parts);
+            let total: usize = bands.iter().map(|&(_, l)| l).sum();
+            assert_eq!(total, count);
+            assert!(bands.iter().all(|&(_, l)| l > 0));
+            // contiguous
+            let mut next = 0;
+            for (s, l) in bands {
+                assert_eq!(s, next);
+                next = s + l;
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Stencil benchmark catalog (Table III) — exact mirror of
+//! `python/compile/stencils.py`.
+//!
+//! The weight rule is language-independent: offsets sorted
+//! lexicographically, `weight_i = (i+1) / sum_j (j+1)`. The jnp oracle, the
+//! Pallas kernels, the AOT HLO and this rust substrate therefore all apply
+//! the *same* Jacobi operator, which the integration tests assert across
+//! the PJRT boundary.
+
+/// Neighbourhood offset: (dz, dy, dx); dz == 0 for 2D stencils.
+pub type Offset = (i32, i32, i32);
+
+/// One benchmark of Table III.
+#[derive(Clone, Debug)]
+pub struct StencilSpec {
+    pub name: &'static str,
+    pub dims: usize,
+    pub radius: usize,
+    pub offsets: Vec<Offset>,
+    /// FLOPs/cell as reported in Table III.
+    pub flops_per_cell: u32,
+}
+
+impl StencilSpec {
+    pub fn points(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Deterministic convex weights (see module docs).
+    pub fn weights(&self) -> Vec<f64> {
+        let n = self.offsets.len();
+        let total = (n * (n + 1) / 2) as f64;
+        (0..n).map(|i| (i + 1) as f64 / total).collect()
+    }
+
+    /// Bytes touched per interior cell per step in the host-loop model:
+    /// one load of the cell + one store (spatial reuse of neighbours is
+    /// assumed perfect through on-chip memory, as in the paper's model).
+    pub fn bytes_per_cell(&self, elem_size: usize) -> usize {
+        2 * elem_size
+    }
+}
+
+fn sorted_dedup(mut offs: Vec<Offset>) -> Vec<Offset> {
+    offs.sort();
+    offs.dedup();
+    offs
+}
+
+fn star2d(radius: i32) -> Vec<Offset> {
+    let mut offs = vec![(0, 0, 0)];
+    for r in 1..=radius {
+        offs.extend_from_slice(&[(0, r, 0), (0, -r, 0), (0, 0, r), (0, 0, -r)]);
+    }
+    sorted_dedup(offs)
+}
+
+fn box2d(radius: i32) -> Vec<Offset> {
+    let mut offs = Vec::new();
+    for dy in -radius..=radius {
+        for dx in -radius..=radius {
+            offs.push((0, dy, dx));
+        }
+    }
+    sorted_dedup(offs)
+}
+
+fn star3d(radius: i32) -> Vec<Offset> {
+    let mut offs = vec![(0, 0, 0)];
+    for r in 1..=radius {
+        offs.extend_from_slice(&[
+            (r, 0, 0),
+            (-r, 0, 0),
+            (0, r, 0),
+            (0, -r, 0),
+            (0, 0, r),
+            (0, 0, -r),
+        ]);
+    }
+    sorted_dedup(offs)
+}
+
+fn box3d(radius: i32) -> Vec<Offset> {
+    let mut offs = Vec::new();
+    for dz in -radius..=radius {
+        for dy in -radius..=radius {
+            for dx in -radius..=radius {
+                offs.push((dz, dy, dx));
+            }
+        }
+    }
+    sorted_dedup(offs)
+}
+
+/// 19-point 3D Poisson: all |dz|+|dy|+|dx| <= 2 within the unit box.
+fn faces_edges3d() -> Vec<Offset> {
+    let mut offs = Vec::new();
+    for dz in -1..=1i32 {
+        for dy in -1..=1i32 {
+            for dx in -1..=1i32 {
+                if dz.abs() + dy.abs() + dx.abs() <= 2 {
+                    offs.push((dz, dy, dx));
+                }
+            }
+        }
+    }
+    sorted_dedup(offs)
+}
+
+/// 17-point 3D: center + 6 faces + 8 corners + (0,0,±2). See the python
+/// catalog for the rationale (Table III is not prescriptive here).
+fn pt17_3d() -> Vec<Offset> {
+    let mut offs = vec![(0, 0, 0), (0, 0, 2), (0, 0, -2)];
+    for &dz in &[-1i32, 1] {
+        for &dy in &[-1i32, 1] {
+            for &dx in &[-1i32, 1] {
+                offs.push((dz, dy, dx));
+            }
+        }
+    }
+    offs.extend_from_slice(&[(1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1), (0, 0, -1)]);
+    sorted_dedup(offs)
+}
+
+/// The 13 benchmarks of Table III, in the paper's order.
+pub fn catalog() -> Vec<StencilSpec> {
+    vec![
+        StencilSpec { name: "2d5pt", dims: 2, radius: 1, offsets: star2d(1), flops_per_cell: 10 },
+        StencilSpec { name: "2ds9pt", dims: 2, radius: 2, offsets: star2d(2), flops_per_cell: 18 },
+        StencilSpec { name: "2d13pt", dims: 2, radius: 3, offsets: star2d(3), flops_per_cell: 26 },
+        StencilSpec { name: "2d17pt", dims: 2, radius: 4, offsets: star2d(4), flops_per_cell: 34 },
+        StencilSpec { name: "2d21pt", dims: 2, radius: 5, offsets: star2d(5), flops_per_cell: 42 },
+        StencilSpec { name: "2ds25pt", dims: 2, radius: 6, offsets: star2d(6), flops_per_cell: 59 },
+        StencilSpec { name: "2d9pt", dims: 2, radius: 1, offsets: box2d(1), flops_per_cell: 18 },
+        StencilSpec { name: "2d25pt", dims: 2, radius: 2, offsets: box2d(2), flops_per_cell: 50 },
+        StencilSpec { name: "3d7pt", dims: 3, radius: 1, offsets: star3d(1), flops_per_cell: 14 },
+        StencilSpec { name: "3d13pt", dims: 3, radius: 2, offsets: star3d(2), flops_per_cell: 26 },
+        StencilSpec { name: "3d17pt", dims: 3, radius: 2, offsets: pt17_3d(), flops_per_cell: 34 },
+        StencilSpec { name: "3d27pt", dims: 3, radius: 1, offsets: box3d(1), flops_per_cell: 54 },
+        StencilSpec { name: "poisson", dims: 3, radius: 1, offsets: faces_edges3d(), flops_per_cell: 38 },
+    ]
+}
+
+/// Look up a benchmark by name.
+pub fn spec(name: &str) -> Option<StencilSpec> {
+    catalog().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_benchmarks() {
+        assert_eq!(catalog().len(), 13);
+    }
+
+    #[test]
+    fn point_counts_match_names() {
+        let expect = [
+            ("2d5pt", 5),
+            ("2ds9pt", 9),
+            ("2d13pt", 13),
+            ("2d17pt", 17),
+            ("2d21pt", 21),
+            ("2ds25pt", 25),
+            ("2d9pt", 9),
+            ("2d25pt", 25),
+            ("3d7pt", 7),
+            ("3d13pt", 13),
+            ("3d17pt", 17),
+            ("3d27pt", 27),
+            ("poisson", 19),
+        ];
+        for (name, pts) in expect {
+            assert_eq!(spec(name).unwrap().points(), pts, "{name}");
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        for s in catalog() {
+            let sum: f64 = s.weights().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "{}", s.name);
+            assert!(s.weights().iter().all(|&w| w > 0.0));
+        }
+    }
+
+    #[test]
+    fn offsets_sorted_unique_within_radius() {
+        for s in catalog() {
+            let mut sorted = s.offsets.clone();
+            sorted.sort();
+            sorted.dedup();
+            assert_eq!(sorted, s.offsets, "{}", s.name);
+            for &(dz, dy, dx) in &s.offsets {
+                assert!(dz.unsigned_abs() as usize <= s.radius);
+                assert!(dy.unsigned_abs() as usize <= s.radius);
+                assert!(dx.unsigned_abs() as usize <= s.radius);
+                if s.dims == 2 {
+                    assert_eq!(dz, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn center_present() {
+        for s in catalog() {
+            assert!(s.offsets.contains(&(0, 0, 0)), "{}", s.name);
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! Overlapped temporal blocking — the optimization family the paper
+//! positions PERKS as *orthogonal* to (§I, §II-C).
+//!
+//! With temporal blocking degree `bt`, each thread block loads its tile
+//! plus a halo of `bt * rad` layers and advances `bt` steps locally with
+//! redundant computation in the shrinking halo, so a device-wide exchange
+//! is needed only every `bt` steps. The cost is the redundant loads and
+//! computation in the overlap region (which is why high degrees stop
+//! paying off — the paper's argument for PERKS instead).
+//!
+//! This module implements overlapped temporal blocking for the CPU
+//! persistent-threads substrate, both standalone (relaunch every bt
+//! steps: the AN5D-style baseline) and *composed with* PERKS (persistent
+//! threads + temporal blocking inside each exchange epoch) — directly
+//! demonstrating the paper's claim that the two compose.
+
+use crate::error::{Error, Result};
+use crate::stencil::grid::Domain;
+use crate::stencil::gold;
+use crate::stencil::shape::StencilSpec;
+
+/// Redundant-computation accounting for one temporal-blocking epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapCost {
+    /// Cells computed per epoch including redundant halo work.
+    pub computed_cells: f64,
+    /// Useful cells per epoch (tile area x bt).
+    pub useful_cells: f64,
+}
+
+impl OverlapCost {
+    /// Redundancy ratio >= 1; grows with bt — the paper's limit on
+    /// temporal blocking degree.
+    pub fn redundancy(&self) -> f64 {
+        self.computed_cells / self.useful_cells
+    }
+}
+
+/// Analytic overlap cost for a 2D tile of (tx, ty) at degree `bt` and
+/// stencil radius `rad` (overlapped/trapezoidal tiling: at step k the
+/// computed region is the tile grown by (bt - k) * rad on each side).
+pub fn overlap_cost_2d(tx: usize, ty: usize, rad: usize, bt: usize) -> OverlapCost {
+    let mut computed = 0.0;
+    for k in 1..=bt {
+        let grow = (bt - k) * rad;
+        computed += ((tx + 2 * grow) * (ty + 2 * grow)) as f64;
+    }
+    OverlapCost { computed_cells: computed, useful_cells: (tx * ty * bt) as f64 }
+}
+
+/// One thread's slab advanced `bt` steps without any exchange, using an
+/// overlap halo of `bt * rad` planes. Returns the number of *computed*
+/// (including redundant) cell updates for accounting.
+///
+/// `slab` is a padded sub-domain of `full` covering the thread's band
+/// plus `bt * rad` halo planes each side (clamped at the domain edge,
+/// where the Dirichlet ring substitutes).
+fn advance_slab_2d(
+    spec: &StencilSpec,
+    full: &Domain,
+    slab: &mut [f64],
+    slab_first: usize, // first padded row held in `slab`
+    slab_rows: usize,
+    band: std::ops::Range<usize>, // rows this thread owns (padded coords)
+    bt: usize,
+) -> u64 {
+    let px = full.padded[2];
+    let r = spec.radius;
+    let weights = spec.weights();
+    let mut scratch = vec![0.0f64; slab.len()];
+    let mut computed = 0u64;
+    let top_edge = r; // first interior row of the global domain
+    let bot_edge = full.padded[1] - r; // one past last interior row
+    for k in 1..=bt {
+        let grow = (bt - k) * r;
+        // rows to compute this sub-step: band grown by `grow`, clamped to
+        // the global interior and to what the slab can source (slab rows
+        // shrink by r each sub-step from each un-clamped edge)
+        let lo = band.start.saturating_sub(grow).max(top_edge).max(slab_first + 1);
+        let hi = (band.end + grow).min(bot_edge).min(slab_first + slab_rows - 1);
+        scratch.copy_from_slice(slab);
+        for y in lo..hi {
+            let ly = y - slab_first;
+            for x in r..px - r {
+                let mut acc = 0.0;
+                for (&(_, dy, dx), &w) in spec.offsets.iter().zip(&weights) {
+                    let yy = (ly as i64 + dy as i64) as usize;
+                    let xx = (x as i64 + dx as i64) as usize;
+                    acc += w * slab[yy * px + xx];
+                }
+                scratch[ly * px + x] = acc;
+                computed += 1;
+            }
+        }
+        slab.copy_from_slice(&scratch);
+    }
+    computed
+}
+
+/// Report of a temporal-blocking run.
+#[derive(Debug)]
+pub struct TemporalReport {
+    pub result: Domain,
+    pub wall_seconds: f64,
+    /// Total cell updates including redundant overlap work.
+    pub computed_cells: u64,
+    /// Useful cell updates (interior x steps).
+    pub useful_cells: u64,
+    /// Bytes moved through the shared array.
+    pub global_bytes: u64,
+    pub epochs: usize,
+}
+
+impl TemporalReport {
+    pub fn redundancy(&self) -> f64 {
+        self.computed_cells as f64 / self.useful_cells as f64
+    }
+}
+
+/// Sequential overlapped temporal blocking over row-bands (2D only): the
+/// domain is split into `parts` bands; each epoch advances every band by
+/// `bt` steps independently (with redundant halo compute), then commits
+/// the bands back — the relaunch-per-epoch baseline.
+pub fn run_2d(
+    spec: &StencilSpec,
+    x0: &Domain,
+    steps: usize,
+    bt: usize,
+    parts: usize,
+) -> Result<TemporalReport> {
+    if spec.dims != 2 {
+        return Err(Error::invalid("temporal blocking implemented for 2D benchmarks"));
+    }
+    if bt == 0 || steps % bt != 0 {
+        return Err(Error::invalid(format!("steps {steps} not a multiple of bt {bt}")));
+    }
+    let r = spec.radius;
+    let px = x0.padded[2];
+    let py = x0.padded[1];
+    let bands = crate::stencil::parallel::partition(x0.interior[1], parts);
+    let t0 = std::time::Instant::now();
+    let mut cur = x0.clone();
+    let mut computed = 0u64;
+    let mut global_bytes = 0u64;
+    let epochs = steps / bt;
+    for _ in 0..epochs {
+        let mut next = cur.clone();
+        for &(s, len) in &bands {
+            let b0 = r + s;
+            let b1 = b0 + len;
+            // slab: band + bt*r halo rows each side (clamped)
+            let s0 = b0.saturating_sub(bt * r);
+            let s1 = (b1 + bt * r).min(py);
+            let mut slab = cur.data[s0 * px..s1 * px].to_vec();
+            global_bytes += (slab.len() * 8) as u64;
+            computed += advance_slab_2d(spec, &cur, &mut slab, s0, s1 - s0, b0..b1, bt);
+            // commit only the owned band
+            let off = (b0 - s0) * px;
+            next.data[b0 * px..b1 * px].copy_from_slice(&slab[off..off + (b1 - b0) * px]);
+            global_bytes += ((b1 - b0) * px * 8) as u64;
+        }
+        cur = next;
+    }
+    Ok(TemporalReport {
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        computed_cells: computed,
+        useful_cells: (x0.interior_cells() * steps) as u64,
+        global_bytes,
+        epochs,
+        result: cur,
+    })
+}
+
+/// Temporal blocking *composed with* PERKS: persistent bands keep their
+/// slab locally across epochs; only the `bt*r`-deep epoch halos are
+/// re-read and only the band boundary is re-published each epoch. Here we
+/// model it sequentially per band within an epoch (the parallel variant
+/// lives in `parallel.rs`; this one isolates the traffic accounting).
+pub fn run_2d_perks(
+    spec: &StencilSpec,
+    x0: &Domain,
+    steps: usize,
+    bt: usize,
+    parts: usize,
+) -> Result<TemporalReport> {
+    if spec.dims != 2 {
+        return Err(Error::invalid("temporal blocking implemented for 2D benchmarks"));
+    }
+    if bt == 0 || steps % bt != 0 {
+        return Err(Error::invalid(format!("steps {steps} not a multiple of bt {bt}")));
+    }
+    let r = spec.radius;
+    let px = x0.padded[2];
+    let py = x0.padded[1];
+    let bands = crate::stencil::parallel::partition(x0.interior[1], parts);
+    let t0 = std::time::Instant::now();
+    let mut cur = x0.clone();
+    let mut computed = 0u64;
+    let mut global_bytes = 0u64;
+    let epochs = steps / bt;
+    // persistent local slabs: loaded once
+    let mut slabs: Vec<(usize, usize, Vec<f64>)> = bands
+        .iter()
+        .map(|&(s, len)| {
+            let b0 = r + s;
+            let b1 = b0 + len;
+            let s0 = b0.saturating_sub(bt * r);
+            let s1 = (b1 + bt * r).min(py);
+            global_bytes += ((s1 - s0) * px * 8) as u64;
+            (s0, s1, cur.data[s0 * px..s1 * px].to_vec())
+        })
+        .collect();
+    for _ in 0..epochs {
+        let mut next = cur.clone();
+        for (i, &(s, len)) in bands.iter().enumerate() {
+            let b0 = r + s;
+            let b1 = b0 + len;
+            let (s0, s1, slab) = &mut slabs[i];
+            // refresh only the halo rows from global (PERKS keeps the band)
+            let lo_halo = *s0..b0;
+            let hi_halo = b1..*s1;
+            for range in [lo_halo, hi_halo] {
+                if !range.is_empty() {
+                    let off = (range.start - *s0) * px;
+                    let len = range.len() * px;
+                    slab[off..off + len]
+                        .copy_from_slice(&cur.data[range.start * px..range.start * px + len]);
+                    global_bytes += (len * 8) as u64;
+                }
+            }
+            computed += advance_slab_2d(spec, &cur, slab, *s0, *s1 - *s0, b0..b1, bt);
+            // publish only the boundary rows needed by neighbor halos
+            let publish = (bt * r).min(b1 - b0);
+            let top = b0..b0 + publish;
+            let bot = b1 - publish..b1;
+            for range in [top, bot] {
+                let off = (range.start - *s0) * px;
+                let len = range.len() * px;
+                next.data[range.start * px..range.start * px + len]
+                    .copy_from_slice(&slab[off..off + len]);
+                global_bytes += (len * 8) as u64;
+            }
+        }
+        cur = next;
+    }
+    // final commit of full bands
+    for (i, &(s, len)) in bands.iter().enumerate() {
+        let b0 = r + s;
+        let b1 = b0 + len;
+        let (s0, _, slab) = &slabs[i];
+        let off = (b0 - s0) * px;
+        cur.data[b0 * px..b1 * px].copy_from_slice(&slab[off..off + (b1 - b0) * px]);
+        global_bytes += ((b1 - b0) * px * 8) as u64;
+    }
+    Ok(TemporalReport {
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        computed_cells: computed,
+        useful_cells: (x0.interior_cells() * steps) as u64,
+        global_bytes,
+        epochs,
+        result: cur,
+    })
+}
+
+/// Validate a temporal-blocking run against the gold executor.
+pub fn check_against_gold(
+    spec: &StencilSpec,
+    x0: &Domain,
+    steps: usize,
+    report: &TemporalReport,
+) -> Result<f64> {
+    let want = gold::run(spec, x0, steps)?;
+    Ok(report.result.max_abs_diff(&want))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::shape::spec;
+
+    fn domain(name: &str, h: usize, w: usize, seed: u64) -> (StencilSpec, Domain) {
+        let s = spec(name).unwrap();
+        let mut d = Domain::for_spec(&s, &[h, w]).unwrap();
+        d.randomize(seed);
+        (s, d)
+    }
+
+    #[test]
+    fn temporal_blocking_matches_gold() {
+        for (name, bt, parts) in
+            [("2d5pt", 2, 3), ("2d5pt", 4, 2), ("2d9pt", 2, 4), ("2ds9pt", 3, 2)]
+        {
+            let (s, d) = domain(name, 24, 20, 5);
+            let rep = run_2d(&s, &d, 12, bt, parts).unwrap();
+            let diff = check_against_gold(&s, &d, 12, &rep).unwrap();
+            assert!(diff < 1e-12, "{name} bt={bt}: {diff}");
+        }
+    }
+
+    #[test]
+    fn perks_composition_matches_gold() {
+        for (name, bt, parts) in [("2d5pt", 2, 3), ("2d5pt", 4, 2), ("2d9pt", 2, 2)] {
+            let (s, d) = domain(name, 24, 20, 7);
+            let rep = run_2d_perks(&s, &d, 12, bt, parts).unwrap();
+            let diff = check_against_gold(&s, &d, 12, &rep).unwrap();
+            assert!(diff < 1e-12, "{name} bt={bt} perks: {diff}");
+        }
+    }
+
+    #[test]
+    fn bt1_equals_plain_blocking() {
+        let (s, d) = domain("2d5pt", 16, 16, 3);
+        let rep = run_2d(&s, &d, 4, 1, 2).unwrap();
+        assert!(check_against_gold(&s, &d, 4, &rep).unwrap() < 1e-12);
+        // no overlap at bt=1: zero redundancy
+        assert!((rep.redundancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn redundancy_grows_with_bt() {
+        // the paper's limit on temporal blocking: overlap work grows
+        let c2 = overlap_cost_2d(64, 64, 1, 2).redundancy();
+        let c4 = overlap_cost_2d(64, 64, 1, 4).redundancy();
+        let c8 = overlap_cost_2d(64, 64, 1, 8).redundancy();
+        assert!(c2 < c4 && c4 < c8, "{c2} {c4} {c8}");
+        assert!(c2 > 1.0);
+        // higher radius amplifies the overlap
+        let r2 = overlap_cost_2d(64, 64, 2, 4).redundancy();
+        assert!(r2 > c4);
+    }
+
+    #[test]
+    fn measured_redundancy_matches_analytic_direction() {
+        let (s, d) = domain("2d5pt", 32, 32, 9);
+        let r2 = run_2d(&s, &d, 8, 2, 2).unwrap().redundancy();
+        let r4 = run_2d(&s, &d, 8, 4, 2).unwrap().redundancy();
+        assert!(r4 > r2, "{r4} vs {r2}");
+    }
+
+    #[test]
+    fn perks_composition_reduces_traffic() {
+        let (s, d) = domain("2d5pt", 64, 64, 1);
+        let plain = run_2d(&s, &d, 16, 4, 4).unwrap();
+        let perks = run_2d_perks(&s, &d, 16, 4, 4).unwrap();
+        assert!(
+            (perks.global_bytes as f64) < 0.8 * plain.global_bytes as f64,
+            "perks {} vs plain {}",
+            perks.global_bytes,
+            plain.global_bytes
+        );
+        // identical numerics
+        assert!(perks.result.max_abs_diff(&plain.result) < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let (s, d) = domain("2d5pt", 8, 8, 1);
+        assert!(run_2d(&s, &d, 5, 2, 2).is_err()); // 5 % 2 != 0
+        assert!(run_2d(&s, &d, 4, 0, 2).is_err());
+        let s3 = spec("3d7pt").unwrap();
+        let d3 = Domain::for_spec(&s3, &[4, 4, 4]).unwrap();
+        assert!(run_2d(&s3, &d3, 4, 2, 2).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest`/`quickcheck` are not in the vendored dependency set, so this
+//! module provides the subset we need: run a property against N generated
+//! cases from a deterministic RNG and, on failure, report the seed and a
+//! debug dump of the failing case so it can be replayed exactly.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a property over one case.
+pub enum Prop {
+    Pass,
+    Fail(String),
+}
+
+impl Prop {
+    pub fn check(ok: bool, msg: impl Into<String>) -> Prop {
+        if ok {
+            Prop::Pass
+        } else {
+            Prop::Fail(msg.into())
+        }
+    }
+}
+
+impl From<bool> for Prop {
+    fn from(b: bool) -> Self {
+        if b {
+            Prop::Pass
+        } else {
+            Prop::Fail("property returned false".into())
+        }
+    }
+}
+
+/// Run `prop` over `cases` values produced by `gen`, seeded deterministically.
+///
+/// Panics with the seed, case index and case debug dump on first failure —
+/// rerunning with the same base seed replays the failure.
+pub fn forall<T: std::fmt::Debug, P: Into<Prop>>(
+    base_seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> P,
+) {
+    for i in 0..cases {
+        let mut rng = Rng::new(base_seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let case = gen(&mut rng);
+        match prop(&case).into() {
+            Prop::Pass => {}
+            Prop::Fail(msg) => panic!(
+                "property failed at case {i}/{cases} (base_seed={base_seed}): {msg}\ncase: {case:#?}"
+            ),
+        }
+    }
+}
+
+/// Approximate float equality with relative + absolute tolerance.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Elementwise `close` over slices; returns first mismatch description.
+pub fn allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Prop {
+    if a.len() != b.len() {
+        return Prop::Fail(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if !close(x, y, rtol, atol) {
+            return Prop::Fail(format!("elem {i}: {x} vs {y} (diff {})", (x - y).abs()));
+        }
+    }
+    Prop::Pass
+}
+
+/// f32 variant of `allclose`.
+pub fn allclose_f32(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Prop {
+    if a.len() != b.len() {
+        return Prop::Fail(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if !close(x as f64, y as f64, rtol as f64, atol as f64) {
+            return Prop::Fail(format!("elem {i}: {x} vs {y} (diff {})", (x - y).abs()));
+        }
+    }
+    Prop::Pass
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 50, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 50, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-8, 0.0));
+        assert!(!close(1.0, 1.1, 1e-8, 1e-8));
+        assert!(close(0.0, 1e-12, 0.0, 1e-9));
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        match allclose(&[1.0, 2.0], &[1.0, 2.5], 1e-6, 1e-6) {
+            Prop::Fail(msg) => assert!(msg.contains("elem 1")),
+            Prop::Pass => panic!("expected failure"),
+        }
+    }
+}

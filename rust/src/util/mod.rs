@@ -1,0 +1,8 @@
+//! Shared utilities: deterministic PRNGs, statistics, formatting and a
+//! minimal property-testing framework (external test/bench crates are not
+//! available in the vendored dependency set).
+
+pub mod check;
+pub mod fmt;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,108 @@
+//! Failure-injection tests: the runtime and manifest layers must fail
+//! loudly and precisely on corrupted inputs — not crash inside XLA.
+
+use std::io::Write;
+
+use perks::runtime::{HostTensor, Manifest, Runtime};
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("perks_failinj_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_io_error() {
+    let dir = temp_dir("missing");
+    let err = match Runtime::new(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("runtime built without a manifest"),
+    };
+    assert!(matches!(err, perks::Error::Io(_)), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_manifest_lines_reported() {
+    for bad in [
+        "name=a kind=x in=f32[1] out=f32[1]",          // missing tuple
+        "name=a kind=x in=f32[1 out=f32[1] tuple=1",   // unterminated spec
+        "name=a in=f32[1] out=f32[1] tuple=1",          // missing kind
+        "garbage",                                       // not key=value
+    ] {
+        let err = Manifest::parse(bad, std::path::Path::new(".")).unwrap_err();
+        assert!(matches!(err, perks::Error::Manifest(_)), "{bad:?} -> {err}");
+    }
+}
+
+#[test]
+fn truncated_hlo_file_fails_at_load_not_execute() {
+    let dir = temp_dir("trunc");
+    let mut mf = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+    writeln!(mf, "name=broken kind=x in=f32[2] out=f32[2] tuple=0").unwrap();
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule broken\nthis is not hlo").unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    let err = match rt.load("broken") {
+        Err(e) => e,
+        Ok(_) => panic!("truncated HLO unexpectedly loaded"),
+    };
+    assert!(matches!(err, perks::Error::Xla(_)), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shape_mismatch_caught_before_xla() {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = Runtime::new(dir).unwrap();
+    let exe = rt.load("stencil_2d5pt_128x128_f32_step").unwrap();
+    // wrong rank
+    let bad = HostTensor::f32(&[130 * 130], vec![0.0; 130 * 130]);
+    let err = exe.run(&[bad]).unwrap_err();
+    assert!(matches!(err, perks::Error::Shape(_)), "{err}");
+    // wrong dtype
+    let bad = HostTensor::f64(&[130, 130], vec![0.0; 130 * 130]);
+    assert!(matches!(exe.run(&[bad]).unwrap_err(), perks::Error::Shape(_)));
+    // wrong arity
+    let ok = HostTensor::f32(&[130, 130], vec![0.0; 130 * 130]);
+    assert!(matches!(
+        exe.run(&[ok.clone(), ok]).unwrap_err(),
+        perks::Error::Shape(_)
+    ));
+}
+
+#[test]
+fn unknown_artifact_name_is_manifest_error() {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        return;
+    }
+    let rt = Runtime::new(dir).unwrap();
+    match rt.load("no_such_artifact") {
+        Err(perks::Error::Manifest(_)) => {}
+        other => panic!("expected manifest error, got {:?}", other.err().map(|e| e.to_string())),
+    }
+}
+
+#[test]
+fn solver_guards_fire() {
+    use perks::sparse::csr::Csr;
+    // non-square matrix into CG
+    let rect = Csr::from_coo(2, 3, vec![(0, 0, 1.0)]).unwrap();
+    let err = perks::cg::solve_persistent(&rect, &[1.0, 1.0], &Default::default()).unwrap_err();
+    assert!(matches!(err, perks::Error::Solver(_)));
+    // steps not a multiple of fused count
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.txt").exists() {
+        let rt = Runtime::new(dir).unwrap();
+        let d = perks::coordinator::StencilDriver::new(&rt, "2d5pt", "128x128", "f32").unwrap();
+        let x0 = HostTensor::f32(&[130, 130], vec![0.0; 130 * 130]);
+        let err = d
+            .run(perks::coordinator::ExecMode::Persistent, &x0, d.fused_steps + 1)
+            .unwrap_err();
+        assert!(matches!(err, perks::Error::Invalid(_)), "{err}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Integration tests over the full AOT -> PJRT -> coordinator stack.
+//!
+//! These close the cross-language gold chain: the jnp oracle validated the
+//! Pallas kernels (pytest), the Pallas kernels were lowered to the HLO
+//! artifacts, and here the artifacts executed through PJRT are checked
+//! against the *independent* rust CPU gold executor.
+//!
+//! Requires `make artifacts`; every test skips cleanly if the artifact
+//! directory is missing (e.g. fresh checkout without python).
+
+use perks::coordinator::{CgDriver, ExecMode, StencilDriver};
+use perks::runtime::{HostTensor, Runtime};
+use perks::sparse::gen;
+use perks::stencil::{self, gold, Domain};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: {} has no manifest (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+#[test]
+fn all_artifacts_load_and_compile() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.manifest.artifacts.len() >= 15, "artifact inventory too small");
+    for meta in rt.manifest.artifacts.clone() {
+        let exe = rt.load(&meta.name).unwrap_or_else(|e| panic!("{}: {e}", meta.name));
+        assert_eq!(exe.meta.name, meta.name);
+    }
+    // compile-once cache: second load hits the cache
+    let before = rt.metrics().compilations;
+    rt.load(&rt.manifest.artifacts[0].name.clone()).unwrap();
+    assert_eq!(rt.metrics().compilations, before);
+}
+
+fn check_stencil_family(rt: &Runtime, bench: &str, interior: &str, dtype: &str, steps: usize) {
+    let driver = StencilDriver::new(rt, bench, interior, dtype).expect("driver");
+    let spec = stencil::spec(bench).unwrap();
+    let dims: Vec<usize> = interior.split('x').map(|d| d.parse().unwrap()).collect();
+    let mut dom = Domain::for_spec(&spec, &dims).unwrap();
+    dom.randomize(4242);
+
+    // the independent rust oracle
+    let want = gold::run(&spec, &dom, steps).unwrap();
+
+    let padded: Vec<usize> = if spec.dims == 2 {
+        vec![dom.padded[1], dom.padded[2]]
+    } else {
+        dom.padded.to_vec()
+    };
+    let x0 = match dtype {
+        "f64" => HostTensor::f64(&padded, dom.data.clone()),
+        _ => HostTensor::f32(&padded, dom.to_f32()),
+    };
+    let tol = if dtype == "f64" { 1e-11 } else { 2e-4 };
+    let mut first: Option<Vec<f64>> = None;
+    for mode in ExecMode::all() {
+        let rep = driver.run(mode, &x0, steps).expect(mode.name());
+        assert_eq!(rep.steps, steps);
+        let got = rep.state[0].to_f64_vec().unwrap();
+        let diff = got
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(
+            diff < tol,
+            "{bench} {dtype} {}: diverged from rust gold by {diff}",
+            mode.name()
+        );
+        match &first {
+            None => first = Some(got),
+            Some(f) => {
+                // execution models must agree with each other even tighter
+                let d = f.iter().zip(&got).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+                assert!(d < tol, "{bench} {}: inter-mode diff {d}", mode.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_stencils_match_rust_gold_2d() {
+    let Some(rt) = runtime() else { return };
+    check_stencil_family(&rt, "2d5pt", "128x128", "f32", 32);
+    check_stencil_family(&rt, "2d9pt", "128x128", "f32", 32);
+    check_stencil_family(&rt, "2ds9pt", "128x128", "f32", 32);
+}
+
+#[test]
+fn pjrt_stencils_match_rust_gold_3d() {
+    let Some(rt) = runtime() else { return };
+    check_stencil_family(&rt, "3d7pt", "32x32x32", "f32", 16);
+    check_stencil_family(&rt, "3d27pt", "32x32x32", "f32", 16);
+}
+
+#[test]
+fn pjrt_stencil_f64_matches_gold_tightly() {
+    let Some(rt) = runtime() else { return };
+    check_stencil_family(&rt, "2d5pt", "64x64", "f64", 32);
+}
+
+#[test]
+fn impulse_response_reveals_correct_weights() {
+    // cross-language weight agreement: a unit impulse at the center maps,
+    // after one step, to exactly the (offset, weight) catalog entries
+    let Some(rt) = runtime() else { return };
+    let driver = StencilDriver::new(&rt, "2d5pt", "128x128", "f32").unwrap();
+    let spec = stencil::spec("2d5pt").unwrap();
+    let p = 130usize;
+    let mut field = vec![0.0f32; p * p];
+    let (cy, cx) = (65usize, 65usize);
+    field[cy * p + cx] = 1.0;
+    let x0 = HostTensor::f32(&[p, p], field);
+    let rep = driver.run(ExecMode::HostLoop, &x0, 1).unwrap();
+    let out = rep.state[0].as_f32().unwrap();
+    for ((_, dy, dx), w) in spec.offsets.iter().zip(spec.weights()) {
+        // impulse spreads to the *opposite* offset positions
+        let y = (cy as i64 - *dy as i64) as usize;
+        let x = (cx as i64 - *dx as i64) as usize;
+        let got = out[y * p + x] as f64;
+        assert!(
+            (got - w).abs() < 1e-6,
+            "offset ({dy},{dx}): got {got}, want weight {w}"
+        );
+    }
+}
+
+#[test]
+fn cg_artifact_modes_agree_and_converge() {
+    let Some(rt) = runtime() else { return };
+    let driver = CgDriver::new(&rt, 1024).unwrap();
+    let a = gen::poisson2d(32);
+    assert_eq!(a.nnz(), driver.nnz);
+    let (data, cols, rows) = a.to_coo_f32();
+    let data = HostTensor::f32(&[driver.nnz], data);
+    let cols = HostTensor::i32(&[driver.nnz], cols);
+    let rows = HostTensor::i32(&[driver.nnz], rows);
+    let b: Vec<f32> = gen::rhs(1024, 5).iter().map(|&v| v as f32).collect();
+    let bb: f64 = b.iter().map(|&v| (v as f64) * (v as f64)).sum();
+
+    let h = driver.run(ExecMode::HostLoop, &data, &cols, &rows, &b, 64).unwrap();
+    let p = driver.run(ExecMode::Persistent, &data, &cols, &rows, &b, 64).unwrap();
+    assert_eq!(h.invocations, 64);
+    assert_eq!(p.invocations, 8); // fused by 8
+    let dx = h
+        .x
+        .iter()
+        .zip(&p.x)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    assert!(dx < 1e-3, "host-loop vs persistent iterates differ by {dx}");
+    // converged well below the rhs norm after 64 iterations
+    assert!(h.rr < 1e-4 * bb, "rr {} vs bb {bb}", h.rr);
+    // true residual on device agrees with the recurrence
+    let resid = driver.residual(&data, &cols, &rows, &p.x, &b).unwrap();
+    assert!((resid - p.rr).abs() < 1e-2 * (resid + p.rr + 1e-9), "{resid} vs {}", p.rr);
+}
+
+#[test]
+fn cg_artifact_matches_rust_native_solver() {
+    // the PJRT CG (pallas fused update + jnp spmv) and the rust-native CG
+    // (merge spmv + fused passes) must walk the same iterates
+    let Some(rt) = runtime() else { return };
+    let driver = CgDriver::new(&rt, 1024).unwrap();
+    let a = gen::poisson2d(32);
+    let (data, cols, rows) = a.to_coo_f32();
+    let data = HostTensor::f32(&[driver.nnz], data);
+    let cols = HostTensor::i32(&[driver.nnz], cols);
+    let rows = HostTensor::i32(&[driver.nnz], rows);
+    let b64 = gen::rhs(1024, 5);
+    let b: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+
+    let pjrt = driver.run(ExecMode::Persistent, &data, &cols, &rows, &b, 24).unwrap();
+    let opts = perks::cg::CgOptions { max_iters: 24, tol: 0.0, parts: 8, threaded: false };
+    let native = perks::cg::solve_persistent(&a, &b64, &opts).unwrap();
+    let dx = pjrt
+        .x
+        .iter()
+        .zip(&native.x)
+        .map(|(a, b)| (*a as f64 - b).abs())
+        .fold(0.0, f64::max);
+    let scale = native.x.iter().map(|v| v.abs()).fold(0.0, f64::max);
+    assert!(dx < 1e-3 * (1.0 + scale), "PJRT vs native iterates differ by {dx}");
+}
+
+#[test]
+fn runtime_metrics_track_traffic() {
+    let Some(rt) = runtime() else { return };
+    rt.reset_metrics();
+    let driver = StencilDriver::new(&rt, "2d5pt", "128x128", "f32").unwrap();
+    let dom = {
+        let spec = stencil::spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&spec, &[128, 128]).unwrap();
+        d.randomize(1);
+        d
+    };
+    let x0 = HostTensor::f32(&[130, 130], dom.to_f32());
+    rt.reset_metrics();
+    driver.run(ExecMode::HostLoop, &x0, 16).unwrap();
+    let m = rt.metrics();
+    assert_eq!(m.invocations, 16);
+    // 16 uploads + 16 downloads of the padded f32 domain
+    let tensor_bytes = (130 * 130 * 4) as u64;
+    assert_eq!(m.bytes_in, 16 * tensor_bytes);
+    assert_eq!(m.bytes_out, 16 * tensor_bytes);
+}
+
+#[test]
+fn multidev_sharded_matches_single_domain_gold() {
+    // §III-A distributed PERKS: two 64-row shards + coordinator halo
+    // exchange must equal the single 128x128 domain advanced by gold
+    let Some(rt) = runtime() else { return };
+    let md = perks::coordinator::multidev::MultiDevStencil::new(&rt, "2d5pt", "64x128", "f32", 2)
+        .unwrap();
+    assert_eq!(md.global_rows(), 128);
+    let spec = stencil::spec("2d5pt").unwrap();
+    let mut dom = Domain::for_spec(&spec, &[128, 128]).unwrap();
+    dom.randomize(77);
+    let steps = 12;
+    let want = gold::run(&spec, &dom, steps).unwrap();
+    let (got, exchanged) = md.step_exchange(&rt, &dom.to_f32(), steps).unwrap();
+    assert!(exchanged > 0);
+    let diff = got
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (*a as f64 - b).abs())
+        .fold(0.0, f64::max);
+    assert!(diff < 1e-4, "sharded run diverged from gold by {diff}");
+}
+
+#[test]
+fn manifest_inventory_complete() {
+    let Some(rt) = runtime() else { return };
+    // the artifact families the benches/examples rely on
+    for kind in ["stencil_step", "stencil_perks", "cg_step", "cg_perks", "cg_residual"] {
+        assert!(
+            !rt.manifest.by_kind(kind).is_empty(),
+            "no artifacts of kind {kind}"
+        );
+    }
+    // raw (untupled) variants exist for buffer chaining
+    assert!(rt.manifest.artifacts.iter().any(|a| a.name.ends_with("_raw") && !a.tupled));
+}
