@@ -1,18 +1,32 @@
-//! Domain example: solve a 2D Poisson problem with the rust-native CG
-//! solver (merge-based SpMV substrate) under both execution models, on a
-//! sweep of Table V dataset analogs — the paper's Fig 7 workload at
-//! library level, without the PJRT path (see e2e_full_stack for that).
+//! Domain example: solve a 2D Poisson problem and three Table V analogs
+//! with the CPU CG backend of `perks::session`, advancing each solver in
+//! chunks until converged — the paper's Fig 7 workload at library level,
+//! without the PJRT path (see e2e_full_stack for that).
 //!
 //! ```bash
 //! cargo run --release --example cg_poisson
 //! ```
 
-use perks::cg::{solve_host_loop, solve_persistent, CgOptions};
+use perks::session::{Backend, ExecMode, Session, SessionBuilder, Workload};
 use perks::sparse::{datasets, gen};
 use perks::util::fmt::{secs, Table};
 
+/// Advance `session` in 32-iteration slabs until rr <= tol^2 * rr0.
+fn solve(session: &mut Session, rr0: f64, tol: f64, max_iters: usize) -> perks::Result<usize> {
+    session.prepare()?;
+    let threshold = tol * tol * rr0;
+    loop {
+        let rep = session.report();
+        let rr = rep.residual.expect("cg workloads report rr");
+        if rr <= threshold || rep.steps >= max_iters {
+            return Ok(rep.steps);
+        }
+        session.advance(32.min(max_iters - rep.steps))?;
+    }
+}
+
 fn main() -> perks::Result<()> {
-    println!("CG on synthetic SuiteSparse analogs (tol 1e-8)\n");
+    println!("CG on synthetic SuiteSparse analogs (tol 1e-8), session API\n");
     let mut t = Table::new(&[
         "matrix",
         "rows",
@@ -21,7 +35,6 @@ fn main() -> perks::Result<()> {
         "host-loop",
         "persistent",
         "speedup",
-        "plan searches h/p",
     ]);
     // a pure Poisson system plus three Table V analogs
     let mut cases: Vec<(String, perks::sparse::Csr)> =
@@ -32,25 +45,35 @@ fn main() -> perks::Result<()> {
     }
     for (name, a) in cases {
         let b = gen::rhs(a.n_rows, 42);
-        let opts = CgOptions { max_iters: 3000, tol: 1e-8, parts: 32, threaded: false };
-        let h = solve_host_loop(&a, &b, &opts)?;
-        let p = solve_persistent(&a, &b, &opts)?;
-        assert!(h.converged && p.converged, "{name}: CG must converge");
-        assert_eq!(h.iters, p.iters, "{name}: models must take identical iterations");
-        // verify the actual solution
-        let mut ax = vec![0.0; a.n_rows];
-        a.spmv_gold(&p.x, &mut ax);
-        let err: f64 = ax.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt();
-        assert!(err < 1e-5 * (h.rr0.sqrt() + 1.0), "{name}: true residual {err}");
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        let mut stats = Vec::new();
+        for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+            let mut session = SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::cg_system(a.clone(), b.clone()))
+                .cg_parts(32)
+                .mode(mode)
+                .build()?;
+            let iters = solve(&mut session, rr0, 1e-8, 3000)?;
+            let rep = session.report();
+            let rr = rep.residual.unwrap();
+            assert!(rr <= 1e-16 * rr0, "{name}: CG must converge (rr {rr:.3e})");
+            // verify the actual solution, not just the recurrence
+            let err = session.true_residual()?.unwrap().sqrt();
+            assert!(err < 1e-5 * (rr0.sqrt() + 1.0), "{name}: true residual {err}");
+            stats.push((iters, rep.wall_seconds));
+        }
+        let (hi, hw) = stats[0];
+        let (pi, pw) = stats[1];
+        assert_eq!(hi, pi, "{name}: models must take identical iterations");
         t.row(&[
             name,
             a.n_rows.to_string(),
             a.nnz().to_string(),
-            p.iters.to_string(),
-            secs(h.wall_seconds),
-            secs(p.wall_seconds),
-            format!("{:.2}x", h.wall_seconds / p.wall_seconds),
-            format!("{}/{}", h.plan_searches, p.plan_searches),
+            pi.to_string(),
+            secs(hw),
+            secs(pw),
+            format!("{:.2}x", hw / pw),
         ]);
     }
     print!("{}", t.render());

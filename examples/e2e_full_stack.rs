@@ -1,11 +1,13 @@
 //! END-TO-END DRIVER: exercises every layer of the system on a real small
-//! workload and reports the paper's headline metrics.
+//! workload and reports the paper's headline metrics — all through the
+//! unified `perks::session` API.
 //!
 //! Pipeline proved here:
 //!   Pallas kernels (L1, python, build time)
 //!     -> JAX solver graphs (L2) -> AOT HLO text artifacts
 //!     -> rust PJRT runtime (load + compile once)
-//!     -> rust coordinator (host-loop vs persistent execution models)
+//!     -> rust session layer (host-loop vs persistent, PJRT + CPU
+//!        backends behind one Solver trait)
 //!     -> validated against the rust CPU gold executor and the on-device
 //!        residual check.
 //!
@@ -14,42 +16,56 @@
 //!      output cross-checked against stencil::gold bit-for-bit-ish (f32);
 //!   2. CG solve of a 1024-unknown Poisson system to convergence, with
 //!      true-residual verification on device;
-//!   3. the persistent-threads CPU executor on the same stencil as a
+//!   3. the persistent-threads CPU backend on the same stencil as a
 //!      physically-measured PERKS demonstration.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_full_stack
 //! ```
 
-use perks::coordinator::{CgDriver, ExecMode, StencilDriver};
-use perks::runtime::{HostTensor, Runtime};
-use perks::sparse::gen;
-use perks::stencil::{self, gold, parallel, Domain};
+use std::rc::Rc;
+
+use perks::runtime::Runtime;
+use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::stencil::{self, gold, Domain};
 use perks::util::fmt::{gcells, secs};
 
 fn main() -> perks::Result<()> {
-    let rt = Runtime::new(Runtime::default_dir())?;
+    let rt = Rc::new(Runtime::new(Runtime::default_dir())?);
     println!("=== PERKS end-to-end driver (platform: {}) ===\n", rt.platform());
 
     // ---------------------------------------------------------------
     // 1. stencil through the full AOT stack, validated against gold
     // ---------------------------------------------------------------
     let bench = "2d5pt";
-    let steps = 128;
+    let seed = 7;
+
+    // build all sessions first: one chunk-aligned step count serves every
+    // mode AND the gold oracle, so the states stay comparable
+    let mut sessions = Vec::new();
+    for mode in ExecMode::all() {
+        let session = SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::stencil(bench, "128x128", "f32"))
+            .mode(mode)
+            .seed(seed)
+            .build()?;
+        sessions.push(session);
+    }
+    let steps = sessions.iter().map(|s| s.aligned_steps(128)).max().unwrap();
+
     let spec = stencil::spec(bench).unwrap();
     let mut dom = Domain::for_spec(&spec, &[128, 128])?;
-    dom.randomize(7);
-
+    dom.randomize(seed);
     let want = gold::run(&spec, &dom, steps)?; // rust CPU oracle
 
-    let driver = StencilDriver::new(&rt, bench, "128x128", "f32")?;
-    let x0 = HostTensor::f32(&[dom.padded[1], dom.padded[2]], dom.to_f32());
     println!("[1/3] stencil {bench} 128x128 f32, {steps} steps");
     let mut wall = std::collections::HashMap::new();
-    for mode in ExecMode::all() {
-        let rep = driver.run(mode, &x0, steps)?;
+    for session in &mut sessions {
+        let mode = session.mode();
+        let rep = session.run(steps)?;
         // validate against the rust gold executor
-        let got = rep.state[0].to_f64_vec()?;
+        let got = session.state_f64()?;
         let diff = got
             .iter()
             .zip(&want.data)
@@ -60,7 +76,7 @@ fn main() -> perks::Result<()> {
             "  {:<22} {:>10}  {:>16}  (max |Δ| vs gold {diff:.1e})",
             mode.name(),
             secs(rep.wall_seconds),
-            gcells(rep.cells_per_sec(driver.interior_cells()))
+            gcells(rep.fom)
         );
         wall.insert(mode.name(), rep.wall_seconds);
     }
@@ -68,66 +84,71 @@ fn main() -> perks::Result<()> {
     println!("  headline: PERKS {headline:.2}x over host-loop\n");
 
     // ---------------------------------------------------------------
-    // 2. CG through the full AOT stack, solved to convergence
+    // 2. CG through the full AOT stack, solved to convergence by
+    //    advancing the session in fused-chunk slabs
     // ---------------------------------------------------------------
     println!("[2/3] CG: 5-point Poisson, n=1024, solve to rr < 1e-8 * rr0");
-    let cg = CgDriver::new(&rt, 1024)?;
-    let a = gen::poisson2d(32);
-    assert_eq!(a.nnz(), cg.nnz, "generator/artifact structure agreement");
-    let (data, cols, rows) = a.to_coo_f32();
-    let data = HostTensor::f32(&[cg.nnz], data);
-    let cols = HostTensor::i32(&[cg.nnz], cols);
-    let rows = HostTensor::i32(&[cg.nnz], rows);
-    let b: Vec<f32> = gen::rhs(1024, 3).iter().map(|&v| v as f32).collect();
-    let bb: f64 = b.iter().map(|&v| (v as f64) * (v as f64)).sum();
-
     for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-        // run in 8-iteration slabs until converged (the persistent
-        // executable fuses 8 iterations per launch)
-        let t0 = std::time::Instant::now();
-        let mut total_iters = 0;
-        let mut rep = cg.run(mode, &data, &cols, &rows, &b, 8)?;
-        total_iters += 8;
-        while rep.rr > 1e-8 * bb && total_iters < 200 {
-            // restart-free continuation: feed the state back
-            let x = HostTensor::f32(&[cg.n], rep.x.clone());
-            // recompute r, p from scratch restart (simple + robust)
-            let _ = x;
-            rep = cg.run(mode, &data, &cols, &rows, &b, total_iters + 8)?;
-            total_iters += 8;
+        let mut session = SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::cg(1024))
+            .mode(mode)
+            .seed(3)
+            .build()?;
+        let chunk = session.aligned_steps(8);
+        session.prepare()?;
+        let rr0 = session.report().residual.expect("cg reports rr");
+        while session.report().residual.unwrap() > 1e-8 * rr0 && session.report().steps < 200 {
+            session.advance(chunk)?;
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let resid = cg.residual(&data, &cols, &rows, &rep.x, &b)?;
+        let rep = session.report();
+        let resid = session.true_residual()?.unwrap();
         println!(
-            "  {:<22} iters={total_iters:<4} wall={:>10}  rr={:.2e}  true ||b-Ax||^2={resid:.2e}",
+            "  {:<22} iters={:<4} wall={:>10}  rr={:.2e}  true ||b-Ax||^2={resid:.2e}",
             mode.name(),
-            secs(wall),
-            rep.rr
+            rep.steps,
+            secs(rep.wall_seconds),
+            rep.residual.unwrap()
         );
-        assert!(resid < 1e-6 * bb, "CG did not actually solve the system");
+        assert!(resid < 1e-6 * rr0, "CG did not actually solve the system");
     }
     println!();
 
     // ---------------------------------------------------------------
-    // 3. persistent-threads CPU demonstration (physical PERKS)
+    // 3. persistent-threads CPU backend (physical PERKS), same API
     // ---------------------------------------------------------------
-    println!("[3/3] persistent-threads CPU executor, 2d5pt 512^2, 64 steps, 8 threads");
-    let mut big = Domain::for_spec(&spec, &[512, 512])?;
-    big.randomize(1);
-    let h = parallel::host_loop(&spec, &big, 64, 8)?;
-    let p = parallel::persistent(&spec, &big, 64, 8)?;
-    assert!(p.result.max_abs_diff(&h.result) < 1e-12);
+    println!("[3/3] CPU persistent-threads backend, 2d5pt 512^2, 64 steps, 8 threads");
+    let mut reports = Vec::new();
+    let mut states = Vec::new();
+    for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+        let mut session = SessionBuilder::new()
+            .backend(Backend::cpu(8))
+            .workload(Workload::stencil("2d5pt", "512x512", "f64"))
+            .mode(mode)
+            .seed(1)
+            .build()?;
+        let rep = session.run(64)?;
+        states.push(session.state_f64()?);
+        reports.push(rep);
+    }
+    let diff = states[0]
+        .iter()
+        .zip(&states[1])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(diff < 1e-12);
+    let (h, p) = (&reports[0], &reports[1]);
     println!(
         "  host-loop  {:>10}  traffic {}",
         secs(h.wall_seconds),
-        perks::util::fmt::bytes(h.global_bytes as f64)
+        perks::util::fmt::bytes(h.host_bytes as f64)
     );
     println!(
         "  persistent {:>10}  traffic {}  speedup {:.2}x  traffic reduction {:.1}x",
         secs(p.wall_seconds),
-        perks::util::fmt::bytes(p.global_bytes as f64),
+        perks::util::fmt::bytes(p.host_bytes as f64),
         h.wall_seconds / p.wall_seconds,
-        h.global_bytes as f64 / p.global_bytes as f64
+        h.host_bytes as f64 / p.host_bytes as f64
     );
     println!("\nall layers compose; all cross-checks passed ✓");
     Ok(())

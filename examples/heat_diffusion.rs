@@ -1,23 +1,25 @@
 //! Domain example: 2D heat diffusion with a hot edge, run through the
 //! AOT 2d9pt artifact (a 9-point box Jacobi operator is a reasonable
-//! discrete diffusion smoother). Demonstrates using the PERKS executor
-//! for an actual physics-flavoured workload and tracking a physical
-//! observable (heat front progression) across execution models.
+//! discrete diffusion smoother). Demonstrates feeding a custom initial
+//! field into a `perks::session` (`initial_domain`) and tracking a
+//! physical observable (heat front progression) across execution models.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example heat_diffusion
 //! ```
 
-use perks::coordinator::{ExecMode, StencilDriver};
-use perks::runtime::{HostTensor, Runtime};
+use std::rc::Rc;
+
+use perks::runtime::Runtime;
+use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
 use perks::util::fmt::secs;
 
 const N: usize = 128; // interior matches the lowered artifact
 
-fn initial_field() -> Vec<f32> {
+fn initial_field() -> Vec<f64> {
     // padded (N+2)^2: top edge held at 100.0 (Dirichlet), interior cold
     let p = N + 2;
-    let mut f = vec![0.0f32; p * p];
+    let mut f = vec![0.0f64; p * p];
     for x in 0..p {
         f[x] = 100.0;
     }
@@ -25,28 +27,32 @@ fn initial_field() -> Vec<f32> {
 }
 
 /// Mean temperature of interior row `y` (1-based in padded coords).
-fn row_mean(field: &[f32], y: usize) -> f32 {
+fn row_mean(field: &[f64], y: usize) -> f64 {
     let p = N + 2;
     let row = &field[y * p + 1..y * p + 1 + N];
-    row.iter().sum::<f32>() / N as f32
+    row.iter().sum::<f64>() / N as f64
 }
 
 fn main() -> perks::Result<()> {
-    let rt = Runtime::new(Runtime::default_dir())?;
-    let driver = StencilDriver::new(&rt, "2d9pt", "128x128", "f32")?;
-    let x0 = HostTensor::f32(&[N + 2, N + 2], initial_field());
+    let rt = Rc::new(Runtime::new(Runtime::default_dir())?);
     let steps = 128;
 
     println!("2D heat diffusion, hot top edge (T=100), {steps} steps, {N}x{N} grid\n");
     let mut fronts = Vec::new();
     for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-        let rep = driver.run(mode, &x0, steps)?;
-        let field = rep.state[0].as_f32()?.to_vec();
+        let mut session = SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::stencil("2d9pt", "128x128", "f32"))
+            .initial_domain(initial_field())
+            .mode(mode)
+            .build()?;
+        let rep = session.run(session.aligned_steps(steps))?;
+        let field = session.state_f64()?;
         // heat front: deepest row whose mean temperature exceeds 1.0
         let front = (1..=N).rev().find(|&y| row_mean(&field, y) > 1.0).unwrap_or(0);
         println!(
             "{:<22} wall {:>10}   row means: y=2 {:>6.2}  y=8 {:>6.2}  y=32 {:>8.4}   front depth {}",
-            mode.name(),
+            rep.mode.name(),
             secs(rep.wall_seconds),
             row_mean(&field, 2),
             row_mean(&field, 8),

@@ -1,57 +1,63 @@
-//! Quickstart: load an AOT stencil artifact, run it under the three
-//! execution models, verify they agree, and print the speedup.
+//! Quickstart for the `perks::session` API: one builder, three execution
+//! models, one unified report. Runs the 2d5pt AOT stencil artifact under
+//! every model, verifies they agree, and prints the PERKS speedup.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use perks::coordinator::{ExecMode, StencilDriver};
-use perks::runtime::{HostTensor, Runtime};
-use perks::stencil::{self, Domain};
+use std::rc::Rc;
+
+use perks::runtime::Runtime;
+use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
 use perks::util::fmt::{gcells, secs};
 
 fn main() -> perks::Result<()> {
-    // 1. open the artifact registry (built once by `make artifacts`)
-    let rt = Runtime::new(Runtime::default_dir())?;
+    // 1. open the artifact registry (built once by `make artifacts`);
+    //    one Rc-shared runtime serves all three sessions below
+    let rt = Rc::new(Runtime::new(Runtime::default_dir())?);
     println!("PJRT platform: {}", rt.platform());
 
-    // 2. pick the 2d5pt stencil family at 128x128 f32
-    let driver = StencilDriver::new(&rt, "2d5pt", "128x128", "f32")?;
-    println!("fused steps per persistent launch: {}", driver.fused_steps);
-
-    // 3. build a deterministic initial domain
-    let spec = stencil::spec("2d5pt").unwrap();
-    let mut dom = Domain::for_spec(&spec, &[128, 128])?;
-    dom.randomize(2026);
-    let x0 = HostTensor::f32(&[dom.padded[1], dom.padded[2]], dom.to_f32());
-
-    // 4. advance 64 time steps under each model
-    let steps = 64;
-    let mut results = Vec::new();
+    // 2. run 64 steps of the 2d5pt family at 128x128 f32 under each model;
+    //    build all sessions first so one chunk-aligned step count serves
+    //    every mode and the states stay comparable
+    let mut sessions = Vec::new();
     for mode in ExecMode::all() {
-        let rep = driver.run(mode, &x0, steps)?;
+        let session = SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+            .mode(mode)
+            .seed(2026)
+            .build()?;
+        sessions.push(session);
+    }
+    let steps = sessions.iter().map(|s| s.aligned_steps(64)).max().unwrap();
+    let mut reports = Vec::new();
+    let mut states = Vec::new();
+    for session in &mut sessions {
+        let rep = session.run(steps)?;
         println!(
             "{:<22} {:>10}  {:>16}  launches={}",
-            mode.name(),
+            rep.mode.name(),
             secs(rep.wall_seconds),
-            gcells(rep.cells_per_sec(driver.interior_cells())),
+            gcells(rep.fom),
             rep.invocations
         );
-        results.push(rep);
+        states.push(session.state_f64()?);
+        reports.push(rep);
     }
 
-    // 5. all three must agree numerically (the execution models are
+    // 3. all three must agree numerically (the execution models are
     //    interchangeable — only the memory behaviour differs)
-    let a = results[0].state[0].to_f64_vec()?;
-    for r in &results[1..] {
-        let b = r.state[0].to_f64_vec()?;
-        let diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+    let a = &states[0];
+    for b in &states[1..] {
+        let diff = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
         assert!(diff < 1e-4, "models diverged: {diff}");
     }
     println!(
         "\nPERKS speedup vs host-loop: {:.2}x   vs device-resident loop: {:.2}x",
-        results[0].wall_seconds / results[2].wall_seconds,
-        results[1].wall_seconds / results[2].wall_seconds
+        reports[0].wall_seconds / reports[2].wall_seconds,
+        reports[1].wall_seconds / reports[2].wall_seconds
     );
     Ok(())
 }

@@ -1,64 +1,75 @@
 //! Domain example: the strong-scaling story of Fig 6. As the per-node
 //! domain shrinks (more nodes, same global problem), the domain fits in
-//! on-chip/cache memory and the PERKS win grows. Demonstrated two ways:
+//! on-chip/cache memory and the PERKS win grows. Demonstrated two ways
+//! through the one `perks::session` API:
 //!
-//! 1. *measured* on the persistent-threads CPU executor (thread-local
+//! 1. *measured* on the CPU persistent-threads backend (thread-local
 //!    slabs fit in core caches as the domain shrinks);
-//! 2. *simulated* with the paper's performance model on A100/V100.
+//! 2. *simulated* on the A100/V100 backend with the paper's performance
+//!    model.
 //!
 //! ```bash
 //! cargo run --release --example strong_scaling
 //! ```
 
-use perks::harness::stencil_exp::{speedup_row, StencilExperiment};
+use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
 use perks::simgpu::device::{a100, v100};
-use perks::simgpu::perfmodel;
-use perks::stencil::{parallel, shape, Domain};
 use perks::util::fmt::{secs, Table};
 use perks::util::stats::{median, time_n};
 
 fn main() -> perks::Result<()> {
     // -------- measured: CPU persistent threads --------
-    let s = shape::spec("2d5pt").unwrap();
     let steps = 48;
     let threads = 8;
     println!("measured (CPU persistent threads, 2d5pt, {steps} steps, {threads} threads):\n");
     let mut t = Table::new(&["per-node domain", "host-loop", "persistent", "PERKS speedup"]);
     for size in [2048usize, 1024, 512, 256] {
-        let mut d = Domain::for_spec(&s, &[size, size])?;
-        d.randomize(9);
-        let th = median(&time_n(3, || {
-            parallel::host_loop(&s, &d, steps, threads).unwrap();
-        }));
-        let tp = median(&time_n(3, || {
-            parallel::persistent(&s, &d, steps, threads).unwrap();
-        }));
+        let interior = format!("{size}x{size}");
+        let mut walls = Vec::new();
+        for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+            let mut session = SessionBuilder::new()
+                .backend(Backend::cpu(threads))
+                .workload(Workload::stencil("2d5pt", &interior, "f64"))
+                .mode(mode)
+                .seed(9)
+                .build()?;
+            let times = time_n(3, || {
+                session.run(steps).unwrap();
+            });
+            walls.push(median(&times));
+        }
         t.row(&[
-            format!("{size}x{size}"),
-            secs(th),
-            secs(tp),
-            format!("{:.2}x", th / tp),
+            interior,
+            secs(walls[0]),
+            secs(walls[1]),
+            format!("{:.2}x", walls[0] / walls[1]),
         ]);
     }
     print!("{}", t.render());
 
-    // -------- simulated: the paper's model --------
-    println!("\nsimulated (paper's model, 2d5pt dp, 1000 steps):\n");
-    let mut t2 = Table::new(&["device", "large domain", "speedup", "small domain", "speedup"]);
+    // -------- simulated: the paper's model, same API --------
+    println!("\nsimulated (paper's model, 2d5pt dp, 1000 steps, session backend):\n");
+    let mut t2 = Table::new(&["device", "domain", "host-loop", "persistent", "speedup"]);
     for dev in [a100(), v100()] {
-        let large = StencilExperiment::large(&dev, "2d5pt", 8, 1000);
-        let small = StencilExperiment::small(&dev, "2d5pt", 8, 1000);
-        let rl = speedup_row(&dev, &large, perfmodel::EFF_PERKS_LARGE);
-        let rs = speedup_row(&dev, &small, perfmodel::EFF_PERKS_SMALL);
-        let fmt_dom =
-            |d: &[usize]| d.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x");
-        t2.row(&[
-            dev.name.to_string(),
-            fmt_dom(&rl.domain),
-            format!("{:.2}x", rl.speedup),
-            fmt_dom(&rs.domain),
-            format!("{:.2}x", rs.speedup),
-        ]);
+        // a saturating large domain vs an on-chip-sized small one
+        for interior in ["3072x3072", "1024x768"] {
+            let mut walls = Vec::new();
+            for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+                let mut session = SessionBuilder::new()
+                    .backend(Backend::simulated(dev.clone()))
+                    .workload(Workload::stencil("2d5pt", interior, "f64"))
+                    .mode(mode)
+                    .build()?;
+                walls.push(session.run(1000)?.wall_seconds);
+            }
+            t2.row(&[
+                dev.name.to_string(),
+                interior.to_string(),
+                secs(walls[0]),
+                secs(walls[1]),
+                format!("{:.2}x", walls[0] / walls[1]),
+            ]);
+        }
     }
     print!("{}", t2.render());
     println!("\nsmaller per-node domains -> full on-chip residency -> larger PERKS win,");

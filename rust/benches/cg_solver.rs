@@ -1,12 +1,12 @@
 //! CG solver bench: host-loop vs persistent execution of the rust-native
-//! CG over merge-based SpMV on the Table V dataset analogs (scaled), with
-//! iterates verified identical. The measured deltas come from the two
-//! PERKS mechanisms the paper identifies for CG: cached workload search
-//! and fused vector passes.
+//! CG through the `perks::session` CPU backend, on the Table V dataset
+//! analogs (scaled), with iterates verified identical. The measured
+//! deltas come from the two PERKS mechanisms the paper identifies for CG:
+//! cached workload search and fused vector passes.
 //!
 //! Run: `cargo bench --bench cg_solver`
 
-use perks::cg::{solve_host_loop, solve_persistent, CgOptions};
+use perks::session::{Backend, ExecMode, Session, SessionBuilder, Workload};
 use perks::sparse::datasets;
 use perks::util::fmt::{secs, Table};
 use perks::util::stats::{median, time_n};
@@ -20,21 +20,30 @@ fn main() {
         // scale down for bench runtime; density preserved
         let a = ds.generate(16).unwrap();
         let b = perks::sparse::gen::rhs(a.n_rows, 1);
-        let opts =
-            CgOptions { max_iters: iters, tol: 0.0, parts: 64, threaded: a.n_rows > 20_000 };
+        let build = |mode: ExecMode| -> Session {
+            SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::cg_system(a.clone(), b.clone()))
+                .cg_parts(64)
+                .cg_threaded(a.n_rows > 20_000)
+                .mode(mode)
+                .build()
+                .unwrap()
+        };
+        let mut h = build(ExecMode::HostLoop);
+        let mut p = build(ExecMode::Persistent);
         let th = median(&time_n(3, || {
-            solve_host_loop(&a, &b, &opts).unwrap();
+            h.run(iters).unwrap();
         }));
         let tp = median(&time_n(3, || {
-            solve_persistent(&a, &b, &opts).unwrap();
+            p.run(iters).unwrap();
         }));
         // verify identical iterates once
-        let h = solve_host_loop(&a, &b, &opts).unwrap();
-        let p = solve_persistent(&a, &b, &opts).unwrap();
-        let diff = h
-            .x
+        let hx = h.state_f64().unwrap();
+        let px = p.state_f64().unwrap();
+        let diff = hx
             .iter()
-            .zip(&p.x)
+            .zip(&px)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f64, f64::max);
         assert!(diff < 1e-9, "{code}: iterates diverged by {diff}");

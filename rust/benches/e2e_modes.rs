@@ -1,21 +1,22 @@
 //! Measured end-to-end bench: the three execution models through the real
-//! PJRT stack, for every stencil artifact family plus CG. This is the
-//! *measured* counterpart of the simulated Figs 5-7: the speedup SHAPE
-//! (persistent > resident > host-loop; deeper fusion on smaller state)
-//! must reproduce even though the substrate is CPU PJRT, not an A100.
+//! PJRT stack via the `perks::session` API, for every stencil artifact
+//! family plus CG. This is the *measured* counterpart of the simulated
+//! Figs 5-7: the speedup SHAPE (persistent > resident > host-loop; deeper
+//! fusion on smaller state) must reproduce even though the substrate is
+//! CPU PJRT, not an A100.
 //!
 //! Requires `make artifacts`. Run: `cargo bench --bench e2e_modes`
 
-use perks::coordinator::{CgDriver, ExecMode, StencilDriver};
-use perks::runtime::{HostTensor, Runtime};
-use perks::sparse::gen;
-use perks::stencil::{self, Domain};
+use std::rc::Rc;
+
+use perks::runtime::Runtime;
+use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
 use perks::util::fmt::{secs, Table};
 use perks::util::stats::{median, time_n};
 
 fn main() {
     let rt = match Runtime::new(Runtime::default_dir()) {
-        Ok(rt) => rt,
+        Ok(rt) => Rc::new(rt),
         Err(e) => {
             eprintln!("skipping: artifacts not available ({e}); run `make artifacts`");
             return;
@@ -40,32 +41,27 @@ fn main() {
         "PERKS vs resident",
     ]);
     for (bench, interior, dtype, steps) in families {
-        let driver = match StencilDriver::new(&rt, bench, interior, dtype) {
-            Ok(d) => d,
-            Err(_) => continue,
-        };
-        let spec = stencil::spec(bench).unwrap();
-        let dims: Vec<usize> = interior.split('x').map(|d| d.parse().unwrap()).collect();
-        let mut dom = Domain::for_spec(&spec, &dims).unwrap();
-        dom.randomize(11);
-        let padded: Vec<usize> = if spec.dims == 2 {
-            vec![dom.padded[1], dom.padded[2]]
-        } else {
-            dom.padded.to_vec()
-        };
-        let x0 = match dtype {
-            "f64" => HostTensor::f64(&padded, dom.data.clone()),
-            _ => HostTensor::f32(&padded, dom.to_f32()),
-        };
-        let measure = |mode: ExecMode| {
+        let measure = |mode: ExecMode| -> Option<f64> {
+            let mut session = SessionBuilder::new()
+                .backend(Backend::pjrt(rt.clone()))
+                .workload(Workload::stencil(bench, interior, dtype))
+                .mode(mode)
+                .seed(11)
+                .build()
+                .ok()?;
+            let steps = session.aligned_steps(steps);
             let times = time_n(5, || {
-                driver.run(mode, &x0, steps).unwrap();
+                session.run(steps).unwrap();
             });
-            median(&times)
+            Some(median(&times))
         };
-        let h = measure(ExecMode::HostLoop);
-        let r = measure(ExecMode::HostLoopResident);
-        let p = measure(ExecMode::Persistent);
+        let (Some(h), Some(r), Some(p)) = (
+            measure(ExecMode::HostLoop),
+            measure(ExecMode::HostLoopResident),
+            measure(ExecMode::Persistent),
+        ) else {
+            continue; // family not lowered in this artifact set
+        };
         t.row(&[
             format!("{bench} {interior} {dtype}"),
             secs(h),
@@ -79,19 +75,23 @@ fn main() {
 
     // CG
     println!("\nCG n=1024 (poisson 32x32), 64 iterations:");
-    if let Ok(driver) = CgDriver::new(&rt, 1024) {
-        let a = gen::poisson2d(32);
-        let (data, cols, rows) = a.to_coo_f32();
-        let data = HostTensor::f32(&[driver.nnz], data);
-        let cols = HostTensor::i32(&[driver.nnz], cols);
-        let rows = HostTensor::i32(&[driver.nnz], rows);
-        let b: Vec<f32> = gen::rhs(1024, 7).iter().map(|&v| v as f32).collect();
-        let mh = median(&time_n(5, || {
-            driver.run(ExecMode::HostLoop, &data, &cols, &rows, &b, 64).unwrap();
-        }));
-        let mp = median(&time_n(5, || {
-            driver.run(ExecMode::Persistent, &data, &cols, &rows, &b, 64).unwrap();
-        }));
+    let measure_cg = |mode: ExecMode| -> Option<f64> {
+        let mut session = SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::cg(1024))
+            .mode(mode)
+            .seed(7)
+            .build()
+            .ok()?;
+        let iters = session.aligned_steps(64);
+        let times = time_n(5, || {
+            session.run(iters).unwrap();
+        });
+        Some(median(&times))
+    };
+    if let (Some(mh), Some(mp)) =
+        (measure_cg(ExecMode::HostLoop), measure_cg(ExecMode::Persistent))
+    {
         println!("  host-loop {}   persistent {}   speedup {:.2}x", secs(mh), secs(mp), mh / mp);
     }
 }

@@ -3,14 +3,18 @@
 //! manual tuning of the kernel launch parameters or using auto-tuning
 //! tools").
 //!
-//! Two tuners:
+//! Three tuners:
 //! * `tune_occupancy` — over the simulator: find the minimum TB/SMX whose
 //!   modeled efficiency stays within `slack` of the saturated rate, and
 //!   report the capacity freed for caching;
 //! * `tune_threads` — over the CPU persistent-threads executor: measure a
 //!   small sweep and pick the thread count with the best wall time (used
-//!   by the examples and benches to avoid hardcoding 8).
+//!   by the examples and benches to avoid hardcoding 8);
+//! * `tune_exec_mode` — generic execution-model picker behind
+//!   `session::ExecPolicy::Auto`: measure (or model) each candidate mode
+//!   through a caller-supplied probe and keep the fastest.
 
+use crate::coordinator::executor::ExecMode;
 use crate::simgpu::concurrency;
 use crate::simgpu::device::DeviceSpec;
 use crate::simgpu::occupancy::{self, KernelResources};
@@ -99,6 +103,38 @@ pub fn tune_threads(
     Ok(ThreadChoice { threads, wall_seconds, sweep })
 }
 
+/// Result of the execution-model tuning.
+#[derive(Clone, Debug)]
+pub struct ModeChoice {
+    pub mode: ExecMode,
+    /// Per-step (or per-iteration) cost of the winning mode, as reported
+    /// by the probe.
+    pub cost: f64,
+    /// All probed (mode, cost) points.
+    pub sweep: Vec<(ExecMode, f64)>,
+}
+
+/// Probe every candidate execution model with `measure` (which returns a
+/// comparable cost — typically seconds per step, measured or modeled) and
+/// pick the cheapest. Used by `session::ExecPolicy::Auto`.
+pub fn tune_exec_mode<F>(candidates: &[ExecMode], mut measure: F) -> crate::error::Result<ModeChoice>
+where
+    F: FnMut(ExecMode) -> crate::error::Result<f64>,
+{
+    if candidates.is_empty() {
+        return Err(crate::error::Error::invalid("no candidate execution modes"));
+    }
+    let mut sweep = Vec::with_capacity(candidates.len());
+    for &m in candidates {
+        sweep.push((m, measure(m)?));
+    }
+    let &(mode, cost) = sweep
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("non-empty sweep");
+    Ok(ModeChoice { mode, cost, sweep })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +174,25 @@ mod tests {
             smem_per_tb: usize::MAX / 2,
         };
         assert!(tune_occupancy(&dev, &kr, 1.0, 0.0, 0.1).is_none());
+    }
+
+    #[test]
+    fn mode_tuner_picks_cheapest_and_reports_sweep() {
+        let costs = |m: ExecMode| match m {
+            ExecMode::HostLoop => 3.0,
+            ExecMode::HostLoopResident => 2.0,
+            ExecMode::Persistent => 1.0,
+        };
+        let choice = tune_exec_mode(&ExecMode::all(), |m| Ok(costs(m))).unwrap();
+        assert_eq!(choice.mode, ExecMode::Persistent);
+        assert_eq!(choice.cost, 1.0);
+        assert_eq!(choice.sweep.len(), 3);
+        assert!(tune_exec_mode(&[], |_| Ok(0.0)).is_err());
+        // probe failures propagate
+        assert!(tune_exec_mode(&[ExecMode::HostLoop], |_| {
+            Err(crate::error::Error::invalid("boom"))
+        })
+        .is_err());
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //! All three produce bit-identical states for the same step count (tested),
 //! so the models are interchangeable in correctness and differ only in
 //! where the inter-step traffic goes — exactly the paper's claim.
+//!
+//! The drivers here are the PJRT *engine*; the supported public entrypoint
+//! is [`crate::session::SessionBuilder`], which wraps them behind the
+//! backend-agnostic [`crate::session::Solver`] trait. `StencilDriver::new`
+//! and `CgDriver::new` remain as deprecated compatibility shims.
 
 use std::rc::Rc;
 
@@ -42,6 +47,17 @@ impl ExecMode {
             ExecMode::Persistent => "persistent (PERKS)",
         }
     }
+
+    /// Parse a CLI spelling of a mode. Accepts the short aliases used by
+    /// the `perks` binary (`resident`, `perks`).
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "host-loop" => Some(ExecMode::HostLoop),
+            "resident" | "host-loop-resident" => Some(ExecMode::HostLoopResident),
+            "persistent" | "perks" => Some(ExecMode::Persistent),
+            _ => None,
+        }
+    }
 }
 
 /// Result of advancing a solver.
@@ -57,9 +73,14 @@ pub struct RunReport {
 
 impl RunReport {
     /// Cell updates per second (the paper's stencil FOM), given the
-    /// interior cell count of the domain.
+    /// interior cell count of the domain. The wall time is clamped to a
+    /// measurable epsilon so very fast runs (a 0-duration `Instant` delta)
+    /// report a finite rate instead of `inf`/`NaN`.
     pub fn cells_per_sec(&self, interior_cells: usize) -> f64 {
-        interior_cells as f64 * self.steps as f64 / self.wall_seconds
+        crate::util::stats::finite_rate(
+            interior_cells as f64 * self.steps as f64,
+            self.wall_seconds,
+        )
     }
 }
 
@@ -75,9 +96,22 @@ pub struct StencilDriver {
 }
 
 impl StencilDriver {
+    /// Compatibility shim for the pre-`session` API.
+    #[deprecated(
+        note = "construct a stencil session via perks::session::SessionBuilder instead"
+    )]
+    pub fn new(rt: &Runtime, bench: &str, interior: &str, dtype: &str) -> Result<Self> {
+        Self::from_runtime(rt, bench, interior, dtype)
+    }
+
     /// Look up the artifact family for `bench`/`interior`/`dtype` in the
     /// runtime manifest. `interior` like "128x128", dtype "f32"|"f64".
-    pub fn new(rt: &Runtime, bench: &str, interior: &str, dtype: &str) -> Result<Self> {
+    pub(crate) fn from_runtime(
+        rt: &Runtime,
+        bench: &str,
+        interior: &str,
+        dtype: &str,
+    ) -> Result<Self> {
         let base = format!("stencil_{bench}_{interior}_{dtype}");
         let mut step = None;
         let mut step_raw = None;
@@ -240,7 +274,13 @@ pub struct CgReport {
 }
 
 impl CgDriver {
+    /// Compatibility shim for the pre-`session` API.
+    #[deprecated(note = "construct a CG session via perks::session::SessionBuilder instead")]
     pub fn new(rt: &Runtime, n: usize) -> Result<Self> {
+        Self::from_runtime(rt, n)
+    }
+
+    pub(crate) fn from_runtime(rt: &Runtime, n: usize) -> Result<Self> {
         let step = rt.load(&format!("cg_step_n{n}"))?;
         let nnz = step.meta.int("nnz")?;
         // find the perks artifact for this n (any fused count)
@@ -258,24 +298,37 @@ impl CgDriver {
         Ok(Self { step, perks, residual, n, nnz, fused_iters })
     }
 
-    /// Solve Ax=b for `iters` iterations under the given model. The matrix
-    /// is passed in COO-with-row-ids form matching the artifact signature.
-    pub fn run(
-        &self,
-        mode: ExecMode,
-        data: &HostTensor,
-        cols: &HostTensor,
-        rows: &HostTensor,
-        b: &[f32],
-        iters: usize,
-    ) -> Result<CgReport> {
+    /// The artifact-shaped initial CG state `[x, r, p, rr]` for a rhs `b`
+    /// (x = 0, r = p = b, rr = b·b).
+    pub fn initial_state(&self, b: &[f32]) -> Vec<HostTensor> {
         let n = self.n;
         let x = HostTensor::f32(&[n], vec![0.0; n]);
         let r = HostTensor::f32(&[n], b.to_vec());
         let p = r.clone();
         let rr0: f32 = b.iter().map(|v| v * v).sum();
-        let rr = HostTensor::f32(&[1], vec![rr0]);
+        vec![x, r, p, HostTensor::f32(&[1], vec![rr0])]
+    }
 
+    /// Advance an existing CG state by `iters` iterations, returning the
+    /// new state and the number of executable invocations. The matrix
+    /// tensors are cloned exactly once (outside the chunk loop) and the
+    /// state tensors are moved between launches, so the hot loop performs
+    /// no host-side copies.
+    pub fn advance(
+        &self,
+        mode: ExecMode,
+        data: &HostTensor,
+        cols: &HostTensor,
+        rows: &HostTensor,
+        state: Vec<HostTensor>,
+        iters: usize,
+    ) -> Result<(Vec<HostTensor>, u64)> {
+        if state.len() != 4 {
+            return Err(Error::invalid(format!(
+                "CG state must be [x, r, p, rr], got {} tensors",
+                state.len()
+            )));
+        }
         let exe = match mode {
             ExecMode::Persistent => &self.perks,
             _ => &self.step,
@@ -287,22 +340,35 @@ impl CgDriver {
         if iters % chunk != 0 {
             return Err(Error::invalid(format!("iters {iters} not a multiple of {chunk}")));
         }
-        let t0 = std::time::Instant::now();
-        let mut state = vec![x, r, p, rr];
+        let mut inputs = Vec::with_capacity(7);
+        inputs.push(data.clone());
+        inputs.push(cols.clone());
+        inputs.push(rows.clone());
+        inputs.extend(state);
         let mut invocations = 0u64;
         for _ in 0..iters / chunk {
-            let inputs = vec![
-                data.clone(),
-                cols.clone(),
-                rows.clone(),
-                state[0].clone(),
-                state[1].clone(),
-                state[2].clone(),
-                state[3].clone(),
-            ];
-            state = exe.run(&inputs)?;
+            let out = exe.run(&inputs)?;
+            inputs.truncate(3);
+            inputs.extend(out);
             invocations += 1;
         }
+        Ok((inputs.split_off(3), invocations))
+    }
+
+    /// Solve Ax=b for `iters` iterations under the given model. The matrix
+    /// is passed in COO-with-row-ids form matching the artifact signature.
+    pub fn run(
+        &self,
+        mode: ExecMode,
+        data: &HostTensor,
+        cols: &HostTensor,
+        rows: &HostTensor,
+        b: &[f32],
+        iters: usize,
+    ) -> Result<CgReport> {
+        let t0 = std::time::Instant::now();
+        let state = self.initial_state(b);
+        let (state, invocations) = self.advance(mode, data, cols, rows, state, iters)?;
         let wall = t0.elapsed().as_secs_f64();
         let rr = state[3].as_f32()?[0] as f64;
         let x = state[0].as_f32()?.to_vec();

@@ -1,6 +1,10 @@
 //! Layer-3 coordinator: the PERKS execution model.
 //!
-//! * `executor` — host-loop vs persistent drivers over PJRT artifacts;
+//! * `executor` — host-loop vs persistent drivers over PJRT artifacts
+//!   (the engine behind `session::Backend::Pjrt`; construct through
+//!   `session::SessionBuilder`, the drivers' `new` shims are deprecated);
+//! * `autotune` — occupancy, thread-count and execution-model tuners
+//!   (the machinery behind `session::ExecPolicy::Auto`);
 //! * `caching`  — the paper's §III-B caching policy engine;
 //! * `barrier`  — grid-sync semantics for the CPU persistent-threads
 //!   substrate (`stencil::parallel`).

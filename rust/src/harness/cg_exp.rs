@@ -14,6 +14,8 @@
 //!   smem/register bandwidth.
 
 use crate::cg::policy::CgPolicy;
+use crate::coordinator::executor::ExecMode;
+use crate::harness::{ModeledRun, HOST_LINK_BW};
 use crate::simgpu::device::DeviceSpec;
 use crate::sparse::datasets::Dataset;
 
@@ -157,6 +159,57 @@ fn policy_traffic_bytes(a: &CsrShape, elem: usize, p: CgPolicy, capacity: f64) -
     matrix_stream * (1.0 - mat_frac) + vector_stream * (1.0 - vec_frac) + workload
 }
 
+/// Model `iters` CG iterations on one device under an execution model —
+/// the engine of `session::Backend::Simulated` for CG workloads. Uses the
+/// same per-iteration launch/sync + traffic model as `evaluate` (Fig 7),
+/// with the persistent model running at its best caching policy.
+pub fn modeled_cg_run(
+    dev: &DeviceSpec,
+    rows: usize,
+    nnz: usize,
+    elem: usize,
+    mode: ExecMode,
+    iters: usize,
+) -> ModeledRun {
+    let a = CsrShape { n_rows: rows, nnz };
+    let working_set =
+        (a.nnz * (elem + 4) + (a.n_rows + 1) * 4 + 4 * a.n_rows * elem) as f64;
+    let bw = effective_bw(dev, working_set);
+    let state_bytes = (4 * rows * elem) as f64; // x, r, p, Ap
+    let matrix_bytes = (nnz * (elem + 4) + (rows + 1) * 4) as f64;
+    match mode {
+        ExecMode::Persistent => {
+            let capacity = cg_cache_capacity(dev);
+            let traffic = CgPolicy::all()
+                .into_iter()
+                .map(|p| policy_traffic_bytes(&a, elem, p, capacity))
+                .fold(f64::INFINITY, f64::min);
+            let barrier = iters as f64 * K_SYNCS * T_SYNC;
+            ModeledRun {
+                wall_seconds: iters as f64 * traffic / bw
+                    + barrier
+                    + T_LAUNCH
+                    + (matrix_bytes + 2.0 * state_bytes) / HOST_LINK_BW,
+                invocations: 1,
+                host_bytes: (matrix_bytes + 2.0 * state_bytes) as u64,
+                barrier_wait_seconds: barrier,
+            }
+        }
+        _ => {
+            // host-loop (and resident, which the CG artifacts do not
+            // distinguish): every iteration relaunches and re-streams
+            let t_iter = K_LAUNCHES * T_LAUNCH + baseline_traffic_bytes(&a, elem) / bw;
+            let per_iter_host = matrix_bytes + 2.0 * state_bytes;
+            ModeledRun {
+                wall_seconds: iters as f64 * (t_iter + per_iter_host / HOST_LINK_BW),
+                invocations: iters as u64,
+                host_bytes: (iters as f64 * per_iter_host) as u64,
+                barrier_wait_seconds: 0.0,
+            }
+        }
+    }
+}
+
 /// All twenty Table V rows for a device/precision.
 pub fn fig7(dev: &DeviceSpec, elem: usize) -> Vec<CgRow> {
     crate::sparse::datasets::table_v().iter().map(|d| evaluate(dev, d, elem)).collect()
@@ -175,6 +228,19 @@ mod tests {
         let beyond: Vec<f64> =
             rows.iter().filter(|r| !r.within_l2).map(|r| r.best().1).collect();
         (geomean(&within), geomean(&beyond))
+    }
+
+    #[test]
+    fn modeled_cg_run_persistent_beats_host_loop() {
+        let dev = a100();
+        // poisson2d(32)-sized system, paper-style fixed iteration count
+        let h = modeled_cg_run(&dev, 1024, 4992, 4, ExecMode::HostLoop, 100);
+        let p = modeled_cg_run(&dev, 1024, 4992, 4, ExecMode::Persistent, 100);
+        assert!(p.wall_seconds < h.wall_seconds, "{} vs {}", p.wall_seconds, h.wall_seconds);
+        assert_eq!(p.invocations, 1);
+        assert_eq!(h.invocations, 100);
+        assert!(h.host_bytes > p.host_bytes);
+        assert!(p.barrier_wait_seconds > 0.0);
     }
 
     #[test]

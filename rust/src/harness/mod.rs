@@ -1,12 +1,31 @@
 //! Bench harness: experiment builders + report emitters that regenerate
 //! every table and figure of the paper's evaluation (see DESIGN.md §5 for
-//! the index). The `benches/` binaries are thin wrappers over this module.
+//! the index). The `benches/` binaries are thin wrappers over this module,
+//! and the `session::Backend::Simulated` solvers drive the same machinery
+//! through [`stencil_exp::modeled_run`] / [`cg_exp::modeled_cg_run`].
 
 pub mod cg_exp;
 pub mod stencil_exp;
 
-pub use cg_exp::{evaluate as cg_evaluate, fig7, CgRow};
-pub use stencil_exp::{speedup_row, StencilExperiment};
+pub use cg_exp::{evaluate as cg_evaluate, fig7, modeled_cg_run, CgRow};
+pub use stencil_exp::{modeled_run, speedup_row, StencilExperiment};
+
+/// Nominal host-link (PCIe-class) bandwidth used by the simulated backend
+/// to cost the host round trip of the `host-loop` execution model. The
+/// paper's testbeds are PCIe 4.0 x16 / NVLink hosts; 25 GB/s is the
+/// measured-transfer ballpark for pageable copies.
+pub const HOST_LINK_BW: f64 = 25e9;
+
+/// Modeled cost of one run on the simulated backend (consumed by
+/// `session::Backend::Simulated`; mirrors the fields of a measured
+/// `session::Report`).
+#[derive(Clone, Copy, Debug)]
+pub struct ModeledRun {
+    pub wall_seconds: f64,
+    pub invocations: u64,
+    pub host_bytes: u64,
+    pub barrier_wait_seconds: f64,
+}
 
 use crate::cg::policy::CgPolicy;
 use crate::coordinator::caching::CacheLocation;

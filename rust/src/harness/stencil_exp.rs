@@ -2,6 +2,9 @@
 //! the rows of Figs 1/5/6/8 and Tables II/IV.
 
 use crate::coordinator::caching::{self, CacheLocation};
+use crate::coordinator::executor::ExecMode;
+use crate::harness::cg_exp::{T_LAUNCH, T_SYNC};
+use crate::harness::{ModeledRun, HOST_LINK_BW};
 use crate::simgpu::device::DeviceSpec;
 use crate::simgpu::occupancy::{self, KernelResources};
 use crate::simgpu::perfmodel::{self, CacheSplit, StencilScenario, TileGeom};
@@ -188,6 +191,64 @@ pub fn location_row(
         .collect()
 }
 
+/// Model one run of `exp.steps` steps under an execution model — the
+/// engine of `session::Backend::Simulated`. Uses the same Eq 5-11
+/// projection as the figure renderers, plus the launch/sync constants of
+/// the CG model and a nominal host link for the host-loop round trip.
+pub fn modeled_run(dev: &DeviceSpec, exp: &StencilExperiment, mode: ExecMode) -> ModeledRun {
+    let s = exp.scenario();
+    let d = s.domain_bytes();
+    let steps = exp.steps as f64;
+    match mode {
+        ExecMode::HostLoop => ModeledRun {
+            // relaunch every step; the whole state round-trips through the
+            // host on top of the device-side stream time
+            wall_seconds: perfmodel::t_baseline(dev, &s, perfmodel::EFF_BASELINE)
+                + steps * (T_LAUNCH + 2.0 * d / HOST_LINK_BW),
+            invocations: exp.steps as u64,
+            host_bytes: (2.0 * d * steps) as u64,
+            barrier_wait_seconds: 0.0,
+        },
+        ExecMode::HostLoopResident => ModeledRun {
+            // relaunch every step, but the state stays device-resident:
+            // one upload + one download across the whole run
+            wall_seconds: perfmodel::t_baseline(dev, &s, perfmodel::EFF_BASELINE)
+                + steps * T_LAUNCH
+                + 2.0 * d / HOST_LINK_BW,
+            invocations: exp.steps as u64,
+            host_bytes: (2.0 * d) as u64,
+            barrier_wait_seconds: 0.0,
+        },
+        ExecMode::Persistent => {
+            // best cache split over explicit locations, as speedup_row does
+            let tile = exp.tile();
+            let mut best_t = f64::INFINITY;
+            let mut best_split = CacheSplit::default();
+            for loc in [CacheLocation::SharedOnly, CacheLocation::RegOnly, CacheLocation::Both]
+            {
+                let split = cache_split(dev, exp, loc);
+                let t = perfmodel::t_perks(dev, &s, &split, &tile);
+                if t < best_t {
+                    best_t = t;
+                    best_split = split;
+                }
+            }
+            let eff = if best_split.total() >= 0.85 * d {
+                perfmodel::EFF_PERKS_SMALL
+            } else {
+                perfmodel::EFF_PERKS_LARGE
+            };
+            let barrier = steps * T_SYNC;
+            ModeledRun {
+                wall_seconds: best_t / eff + T_LAUNCH + barrier + 2.0 * d / HOST_LINK_BW,
+                invocations: 1,
+                host_bytes: (2.0 * d) as u64,
+                barrier_wait_seconds: barrier,
+            }
+        }
+    }
+}
+
 /// The benchmark lists by dimensionality (Figs 5/6/8 group them).
 pub fn benches_2d() -> Vec<&'static str> {
     vec!["2d5pt", "2ds9pt", "2d13pt", "2d17pt", "2d21pt", "2ds25pt", "2d9pt", "2d25pt"]
@@ -202,6 +263,24 @@ mod tests {
     use super::*;
     use crate::simgpu::device::{a100, v100};
     use crate::util::stats::geomean;
+
+    #[test]
+    fn modeled_run_orders_modes_like_the_paper() {
+        // persistent < resident < host-loop for a PERKS-favourable setup
+        let dev = a100();
+        let exp = StencilExperiment::large(&dev, "2d5pt", 8, 1000);
+        let h = modeled_run(&dev, &exp, crate::coordinator::ExecMode::HostLoop);
+        let r = modeled_run(&dev, &exp, crate::coordinator::ExecMode::HostLoopResident);
+        let p = modeled_run(&dev, &exp, crate::coordinator::ExecMode::Persistent);
+        assert!(p.wall_seconds < r.wall_seconds, "{} vs {}", p.wall_seconds, r.wall_seconds);
+        assert!(r.wall_seconds < h.wall_seconds, "{} vs {}", r.wall_seconds, h.wall_seconds);
+        // traffic accounting matches the execution models
+        assert!(h.host_bytes > r.host_bytes);
+        assert_eq!(r.host_bytes, p.host_bytes);
+        assert_eq!(p.invocations, 1);
+        assert!(p.barrier_wait_seconds > 0.0);
+        assert!(h.wall_seconds.is_finite() && p.wall_seconds > 0.0);
+    }
 
     #[test]
     fn fig5_shape_large_domains() {

@@ -1,18 +1,63 @@
 //! # perks — Persistent Kernels for Iterative Memory-bound Applications
 //!
 //! A full reproduction of the PERKS execution model (Zhang et al.) as a
-//! three-layer Rust + JAX + Pallas stack:
+//! three-layer Rust + JAX + Pallas stack. The paper's idea: instead of
+//! relaunching a kernel every time step (round-tripping all state through
+//! global memory), launch *once*, keep the state resident in on-chip
+//! memory across an in-kernel time loop, and synchronize with grid-wide
+//! barriers — turning the unused register/shared-memory capacity of
+//! low-occupancy memory-bound kernels into a cache.
+//!
+//! ## Start here: [`session`]
+//!
+//! The public API is the [`session`] module: a [`SessionBuilder`] selects
+//! a **backend**, a **workload** and an **execution policy**, and yields a
+//! [`Session`] driving a backend-agnostic [`Solver`] with a unified
+//! [`session::Report`]:
+//!
+//! ```no_run
+//! use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+//! use perks::runtime::Runtime;
+//!
+//! let rt = Runtime::new(Runtime::default_dir())?;
+//! let mut session = SessionBuilder::new()
+//!     .backend(Backend::pjrt(rt))
+//!     .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+//!     .mode(ExecMode::Persistent)
+//!     .build()?;
+//! let report = session.run(64)?;
+//! println!("{:.2e} {}", report.fom, report.fom_unit);
+//! # Ok::<(), perks::Error>(())
+//! ```
+//!
+//! Three backends plug into the same seam:
+//!
+//! * `Backend::Pjrt` — AOT-lowered HLO artifacts (built once by
+//!   `python/compile/aot.py`, see below) executed through the PJRT CPU
+//!   client: the measured cross-language path;
+//! * `Backend::CpuPersistent` — a persistent-threads CPU substrate that
+//!   demonstrates the PERKS model *physically* (OS threads as thread
+//!   blocks, thread-local slabs as the on-chip cache, a grid barrier as
+//!   `grid.sync()`);
+//! * `Backend::Simulated` — the paper's analytical performance model
+//!   (Eqs 5-13) on the Table I device catalog, regenerating the paper's
+//!   figures at A100/V100 scale.
+//!
+//! ## Layers
 //!
 //! * **L1** (`python/compile/kernels/`): Pallas stencil + fused CG kernels,
 //!   with the PERKS variant keeping the domain resident in VMEM across an
 //!   in-kernel time loop.
 //! * **L2** (`python/compile/model.py`): JAX solver graphs, AOT-lowered to
 //!   HLO text once (`make artifacts`).
-//! * **L3** (this crate): the execution-model runtime (host-loop vs
-//!   persistent), the caching policy engine, the GPU memory-hierarchy
-//!   simulator that regenerates the paper's figures, and the substrates the
-//!   paper depends on (stencil benchmarks, sparse matrices, merge-based
-//!   SpMV, a CG solver).
+//! * **L3** (this crate): [`session`] on top of the execution-model
+//!   runtime ([`coordinator`]), the caching policy engine, the GPU
+//!   memory-hierarchy simulator ([`simgpu`]), and the substrates the paper
+//!   depends on ([`stencil`] benchmarks, [`sparse`] matrices, merge-based
+//!   [`spmv`], a [`cg`] solver).
+//!
+//! The pre-`session` entrypoints (`coordinator::StencilDriver::new`,
+//! `coordinator::CgDriver::new`) remain as deprecated shims.
 //!
 //! See DESIGN.md for the architecture and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
@@ -23,6 +68,7 @@ pub mod coordinator;
 pub mod error;
 pub mod harness;
 pub mod runtime;
+pub mod session;
 pub mod simgpu;
 pub mod sparse;
 pub mod spmv;
@@ -30,3 +76,4 @@ pub mod stencil;
 pub mod util;
 
 pub use error::{Error, Result};
+pub use session::{Backend, ExecMode, ExecPolicy, Session, SessionBuilder, Solver, Workload};

@@ -1,64 +1,34 @@
 //! `perks` CLI — the leader entrypoint.
 //!
-//! Subcommands (no external CLI crate in the vendored set; parsing is
-//! hand-rolled in `args`):
+//! Every workload-running subcommand goes through the unified
+//! `perks::session` API (one builder, pluggable backends), and argument
+//! parsing is the typed closed-set parser in `util::args` (unknown flags
+//! and bad values are errors, not silent drops):
 //!
 //! * `info`                      — platform + artifact inventory
-//! * `run-stencil [--bench ..]`  — execute a stencil through PJRT under all
-//!                                 execution models and compare
-//! * `run-cg [--n ..]`           — execute CG through PJRT
-//! * `simulate <figN|tableN>`    — regenerate a paper table/figure
-//! * `cpu-perks [--bench ..]`    — persistent-threads CPU demonstration
+//! * `run-stencil [--bench ..]`  — a stencil through the PJRT backend
+//!                                 under one/all/auto execution models
+//! * `run-cg [--n ..]`           — CG through the PJRT backend
+//! * `cpu-perks [--bench ..]`    — the CPU persistent-threads backend
+//! * `simulate <figN>`           — regenerate a paper table/figure
+//! * `advise` / `tune`           — capacity advisor / thread autotuner
 
-use perks::coordinator::{CgDriver, ExecMode, StencilDriver};
+use std::rc::Rc;
+
 use perks::harness;
-use perks::runtime::{HostTensor, Runtime};
+use perks::runtime::Runtime;
+use perks::session::{Backend, ExecMode, ExecPolicy, SessionBuilder, Workload};
 use perks::simgpu::device;
-use perks::sparse::gen;
-use perks::stencil::{self, parallel};
+use perks::stencil;
+use perks::util::args::ParsedArgs;
 use perks::util::fmt::{self, Table};
 use perks::{Error, Result};
 
-/// Minimal `--key value` argument map.
-struct Args {
-    cmd: String,
-    flags: std::collections::HashMap<String, String>,
-}
-
-impl Args {
-    fn parse() -> Args {
-        let mut it = std::env::args().skip(1);
-        let cmd = it.next().unwrap_or_else(|| "help".into());
-        let mut flags = std::collections::HashMap::new();
-        let mut key: Option<String> = None;
-        for a in it {
-            if let Some(stripped) = a.strip_prefix("--") {
-                if let Some(k) = key.take() {
-                    flags.insert(k, "true".into());
-                }
-                key = Some(stripped.to_string());
-            } else if let Some(k) = key.take() {
-                flags.insert(k, a);
-            }
-        }
-        if let Some(k) = key.take() {
-            flags.insert(k, "true".into());
-        }
-        Args { cmd, flags }
-    }
-
-    fn get(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn int(&self, key: &str, default: usize) -> usize {
-        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-}
-
 fn main() {
-    let args = Args::parse();
-    let code = match run(&args) {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".into());
+    let rest: Vec<String> = argv.collect();
+    let code = match run(&cmd, rest) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
@@ -68,15 +38,25 @@ fn main() {
     std::process::exit(code);
 }
 
-fn run(args: &Args) -> Result<()> {
-    match args.cmd.as_str() {
-        "info" => info(args),
-        "run-stencil" => run_stencil(args),
-        "run-cg" => run_cg(args),
-        "simulate" => simulate(args),
-        "cpu-perks" => cpu_perks(args),
-        "advise" => advise(args),
-        "tune" => tune(args),
+fn run(cmd: &str, rest: Vec<String>) -> Result<()> {
+    match cmd {
+        "info" => info(ParsedArgs::parse(cmd, rest, &[], 0)?),
+        "run-stencil" => run_stencil(ParsedArgs::parse(
+            cmd,
+            rest,
+            &["bench", "interior", "dtype", "steps", "mode", "seed"],
+            0,
+        )?),
+        "run-cg" => run_cg(ParsedArgs::parse(cmd, rest, &["n", "iters", "mode"], 0)?),
+        "simulate" => simulate(ParsedArgs::parse(cmd, rest, &["figure", "device", "dtype"], 1)?),
+        "cpu-perks" => cpu_perks(ParsedArgs::parse(
+            cmd,
+            rest,
+            &["bench", "size", "steps", "threads", "mode"],
+            0,
+        )?),
+        "advise" => advise(ParsedArgs::parse(cmd, rest, &["device", "solver", "n", "nnz", "cells"], 0)?),
+        "tune" => tune(ParsedArgs::parse(cmd, rest, &["bench", "size"], 0)?),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -94,18 +74,35 @@ fn print_help() {
          COMMANDS:\n\
          \x20 info                               platform + artifact inventory\n\
          \x20 run-stencil  --bench 2d5pt --interior 128x128 --dtype f32 --steps 64\n\
-         \x20 run-cg       --n 1024 --iters 64\n\
-         \x20 cpu-perks    --bench 2d5pt --size 512 --steps 64 --threads 8\n\
+         \x20              --mode all|auto|host-loop|resident|persistent\n\
+         \x20 run-cg       --n 1024 --iters 64 --mode all|auto|host-loop|persistent\n\
+         \x20 cpu-perks    --bench 2d5pt --size 512 --steps 64 --threads 8 (0 = auto)\n\
          \x20 simulate     <fig5|fig6|fig7|fig8|fig9> --device A100\n\
          \x20 advise       --solver cg --n 150000 --nnz 1000000 --device A100\n\
          \x20 tune         --bench 2d5pt --size 256 (CPU thread autotune)\n\
          \n\
+         Unknown flags are errors (closed per-command flag sets).\n\
          Artifacts are read from $PERKS_ARTIFACTS or ./artifacts (run\n\
          `make artifacts` first)."
     );
 }
 
-fn info(_args: &Args) -> Result<()> {
+/// Resolve a `--mode` flag into the session policies to run.
+fn policies(flag: &str, modes: &[ExecMode]) -> Result<Vec<ExecPolicy>> {
+    match flag {
+        "all" => Ok(modes.iter().map(|&m| ExecPolicy::Fixed(m)).collect()),
+        "auto" => Ok(vec![ExecPolicy::Auto]),
+        other => ExecMode::parse(other)
+            .map(|m| vec![ExecPolicy::Fixed(m)])
+            .ok_or_else(|| {
+                Error::invalid(format!(
+                    "unknown mode {other:?} (all, auto, host-loop, resident, persistent)"
+                ))
+            }),
+    }
+}
+
+fn info(_args: ParsedArgs) -> Result<()> {
     let rt = Runtime::new(Runtime::default_dir())?;
     println!("platform: {}", rt.platform());
     println!("artifact dir: {}", rt.artifact_dir().display());
@@ -119,102 +116,106 @@ fn info(_args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn run_stencil(args: &Args) -> Result<()> {
+fn run_stencil(args: ParsedArgs) -> Result<()> {
     let bench = args.get("bench", "2d5pt");
     let interior = args.get("interior", "128x128");
     let dtype = args.get("dtype", "f32");
-    let steps = args.int("steps", 64);
+    let steps = args.get_usize("steps", 64)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let policies = policies(&args.get("mode", "all"), &ExecMode::all())?;
 
-    let rt = Runtime::new(Runtime::default_dir())?;
-    let driver = StencilDriver::new(&rt, &bench, &interior, &dtype)?;
-    let spec = stencil::spec(&bench).ok_or_else(|| Error::invalid("unknown bench"))?;
-    let dims: Vec<usize> =
-        interior.split('x').map(|d| d.parse().unwrap()).collect();
-    let mut dom = stencil::Domain::for_spec(&spec, &dims)?;
-    dom.randomize(42);
-    let x0 = match dtype.as_str() {
-        "f64" => HostTensor::f64(&padded_dims(&dom), dom.data.clone()),
-        _ => HostTensor::f32(&padded_dims(&dom), dom.to_f32()),
-    };
-
+    let rt = Rc::new(Runtime::new(Runtime::default_dir())?);
+    // build every session first so one step count (aligned to the deepest
+    // fused chunk) serves all modes — the states must stay comparable
+    let mut sessions = Vec::new();
+    for policy in policies {
+        let session = SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::stencil(&bench, &interior, &dtype))
+            .policy(policy)
+            .seed(seed)
+            .build()?;
+        sessions.push((policy, session));
+    }
+    let chunk = sessions.iter().map(|(_, s)| s.fused_chunk()).max().unwrap_or(1);
+    let run_steps =
+        sessions.iter().map(|(_, s)| s.aligned_steps(steps)).max().unwrap_or(steps);
     println!(
-        "stencil {bench} interior {interior} dtype {dtype} steps {steps} (fused {})",
-        driver.fused_steps
+        "stencil {bench} interior {interior} dtype {dtype} steps {run_steps} (fused {chunk})"
     );
     let mut t = Table::new(&["mode", "wall", "GCells/s", "launches", "host bytes"]);
     let mut reference: Option<Vec<f64>> = None;
-    for mode in ExecMode::all() {
-        let report = driver.run(mode, &x0, steps)?;
-        let state = report.state[0].to_f64_vec()?;
+    for (policy, session) in &mut sessions {
+        let policy = *policy;
+        let report = session.run(run_steps)?;
+        let state = session.state_f64()?;
         match &reference {
             None => reference = Some(state),
             Some(r) => {
-                let max_diff = r
-                    .iter()
-                    .zip(&state)
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0.0, f64::max);
+                let max_diff =
+                    r.iter().zip(&state).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
                 if max_diff > 1e-4 {
                     return Err(Error::Solver(format!(
-                        "{}: diverged from host-loop by {max_diff}",
-                        mode.name()
+                        "{}: diverged from first mode by {max_diff}",
+                        session.mode().name()
                     )));
                 }
             }
         }
+        let label = if policy == ExecPolicy::Auto {
+            format!("auto -> {}", session.mode().name())
+        } else {
+            session.mode().name().to_string()
+        };
         t.row(&[
-            mode.name().to_string(),
+            label,
             fmt::secs(report.wall_seconds),
-            fmt::gcells(report.cells_per_sec(driver.interior_cells())),
+            fmt::gcells(report.fom),
             report.invocations.to_string(),
             fmt::bytes(report.host_bytes as f64),
         ]);
     }
     print!("{}", t.render());
-    println!("all modes agree numerically ✓");
+    if sessions.len() > 1 {
+        println!("all modes agree numerically ✓");
+    }
     Ok(())
 }
 
-fn padded_dims(dom: &stencil::Domain) -> Vec<usize> {
-    if dom.interior[0] == 1 {
-        vec![dom.padded[1], dom.padded[2]]
-    } else {
-        dom.padded.to_vec()
+fn run_cg(args: ParsedArgs) -> Result<()> {
+    let n = args.get_usize("n", 1024)?;
+    let iters = args.get_usize("iters", 64)?;
+    let policies = policies(
+        &args.get("mode", "all"),
+        &[ExecMode::HostLoop, ExecMode::Persistent],
+    )?;
+
+    let rt = Rc::new(Runtime::new(Runtime::default_dir())?);
+    let mut sessions = Vec::new();
+    for policy in policies {
+        let session = SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::cg(n))
+            .policy(policy)
+            .seed(7)
+            .build()?;
+        sessions.push(session);
     }
-}
-
-fn run_cg(args: &Args) -> Result<()> {
-    let n = args.int("n", 1024);
-    let iters = args.int("iters", 64);
-    let g = (n as f64).sqrt() as usize;
-
-    let rt = Runtime::new(Runtime::default_dir())?;
-    let driver = CgDriver::new(&rt, n)?;
-    let a = gen::poisson2d(g);
-    if a.nnz() != driver.nnz {
-        return Err(Error::invalid(format!(
-            "generated nnz {} != artifact nnz {}",
-            a.nnz(),
-            driver.nnz
-        )));
-    }
-    let (data, cols, rows) = a.to_coo_f32();
-    let data = HostTensor::f32(&[driver.nnz], data);
-    let cols = HostTensor::i32(&[driver.nnz], cols);
-    let rows = HostTensor::i32(&[driver.nnz], rows);
-    let b: Vec<f32> = gen::rhs(n, 7).iter().map(|&v| v as f32).collect();
-
-    println!("cg n={n} nnz={} iters={iters} (fused {})", driver.nnz, driver.fused_iters);
-    let mut t = Table::new(&["mode", "wall", "iters/s", "launches", "rr_final", "true ||b-Ax||^2"]);
-    for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-        let rep = driver.run(mode, &data, &cols, &rows, &b, iters)?;
-        let resid = driver.residual(&data, &cols, &rows, &rep.x, &b)?;
+    // one iteration count, aligned to the deepest fused chunk, for all modes
+    let chunk = sessions.iter().map(|s| s.fused_chunk()).max().unwrap_or(1);
+    let run_iters = sessions.iter().map(|s| s.aligned_steps(iters)).max().unwrap_or(iters);
+    println!("cg n={n} iters={run_iters} (fused {chunk})");
+    let mut t =
+        Table::new(&["mode", "wall", "iters/s", "launches", "rr_final", "true ||b-Ax||^2"]);
+    for session in &mut sessions {
+        let rep = session.run(run_iters)?;
+        let resid = session.true_residual()?.unwrap_or(f64::NAN);
         t.row(&[
-            mode.name().to_string(),
+            session.mode().name().to_string(),
             fmt::secs(rep.wall_seconds),
-            format!("{:.0}", rep.iters as f64 / rep.wall_seconds),
+            format!("{:.0}", rep.fom),
             rep.invocations.to_string(),
-            format!("{:.3e}", rep.rr),
+            format!("{:.3e}", rep.residual.unwrap_or(f64::NAN)),
             format!("{resid:.3e}"),
         ]);
     }
@@ -222,43 +223,70 @@ fn run_cg(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cpu_perks(args: &Args) -> Result<()> {
+fn cpu_perks(args: ParsedArgs) -> Result<()> {
     let bench = args.get("bench", "2d5pt");
-    let size = args.int("size", 512);
-    let steps = args.int("steps", 64);
-    let threads = args.int("threads", 8);
+    let size = args.get_usize("size", 512)?;
+    let steps = args.get_usize("steps", 64)?;
+    let threads = args.get_usize("threads", 8)?;
+    let policies = policies(
+        &args.get("mode", "all"),
+        &[ExecMode::HostLoop, ExecMode::Persistent],
+    )?;
     let spec = stencil::spec(&bench).ok_or_else(|| Error::invalid("unknown bench"))?;
-    let interior: Vec<usize> =
-        if spec.dims == 2 { vec![size, size] } else { vec![size, size, size] };
-    let mut dom = stencil::Domain::for_spec(&spec, &interior)?;
-    dom.randomize(1);
+    let interior = if spec.dims == 2 {
+        format!("{size}x{size}")
+    } else {
+        format!("{size}x{size}x{size}")
+    };
+    // resolve --threads 0 (auto) ONCE so every mode runs with the same
+    // thread count and the speedup column compares execution models only
+    let threads = if threads == 0 {
+        let dims: Vec<usize> =
+            if spec.dims == 2 { vec![size, size] } else { vec![size, size, size] };
+        let mut dom = stencil::Domain::for_spec(&spec, &dims)?;
+        dom.randomize(1);
+        let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+        let choice = perks::coordinator::autotune::tune_threads(&spec, &dom, 2, max)?;
+        println!("thread autotune picked {}", choice.threads);
+        choice.threads
+    } else {
+        threads
+    };
 
-    println!("cpu persistent-threads demo: {bench} {size}^{} steps={steps} threads={threads}", spec.dims);
-    let h = parallel::host_loop(&spec, &dom, steps, threads)?;
-    let p = parallel::persistent(&spec, &dom, steps, threads)?;
-    let diff = h.result.max_abs_diff(&p.result);
+    println!(
+        "cpu persistent-threads demo: {bench} {size}^{} steps={steps} threads={threads}",
+        spec.dims
+    );
     let mut t = Table::new(&["mode", "wall", "GCells/s", "global traffic", "barrier wait"]);
-    let cells = dom.interior_cells() as f64 * steps as f64;
-    t.row(&[
-        "host-loop".into(),
-        fmt::secs(h.wall_seconds),
-        fmt::gcells(cells / h.wall_seconds),
-        fmt::bytes(h.global_bytes as f64),
-        "-".into(),
-    ]);
-    t.row(&[
-        "persistent (PERKS)".into(),
-        fmt::secs(p.wall_seconds),
-        fmt::gcells(cells / p.wall_seconds),
-        fmt::bytes(p.global_bytes as f64),
-        fmt::secs(p.barrier_wait.as_secs_f64()),
-    ]);
+    let mut states: Vec<Vec<f64>> = Vec::new();
+    let mut walls: Vec<f64> = Vec::new();
+    for policy in policies {
+        let mut session = SessionBuilder::new()
+            .backend(Backend::cpu(threads))
+            .workload(Workload::stencil(&bench, &interior, "f64"))
+            .policy(policy)
+            .seed(1)
+            .build()?;
+        let rep = session.run(steps)?;
+        states.push(session.state_f64()?);
+        walls.push(rep.wall_seconds);
+        t.row(&[
+            session.mode().name().to_string(),
+            fmt::secs(rep.wall_seconds),
+            fmt::gcells(rep.fom),
+            fmt::bytes(rep.host_bytes as f64),
+            rep.barrier_wait_seconds.map(fmt::secs).unwrap_or_else(|| "-".into()),
+        ]);
+    }
     print!("{}", t.render());
-    println!("speedup: {:.2}x   max diff: {diff:.2e}", h.wall_seconds / p.wall_seconds);
+    if let ([a, b], [wa, wb]) = (states.as_slice(), walls.as_slice()) {
+        let diff = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        println!("speedup: {:.2}x   max diff: {diff:.2e}", wa / wb);
+    }
     Ok(())
 }
 
-fn advise(args: &Args) -> Result<()> {
+fn advise(args: ParsedArgs) -> Result<()> {
     use perks::coordinator::profile;
     let dev_name = args.get("device", "A100");
     let dev = device::by_name(&dev_name)
@@ -266,12 +294,12 @@ fn advise(args: &Args) -> Result<()> {
     let solver = args.get("solver", "cg");
     let profile = match solver.as_str() {
         "cg" => {
-            let n = args.int("n", 150_000);
-            let nnz = args.int("nnz", 1_000_000);
+            let n = args.get_usize("n", 150_000)?;
+            let nnz = args.get_usize("nnz", 1_000_000)?;
             profile::profile_cg(n, nnz, 4, 10)
         }
         "stencil" => {
-            let interior = args.int("cells", 3072 * 3072) as u64 * 4;
+            let interior = args.get_usize("cells", 3072 * 3072)? as u64 * 4;
             profile::profile_stencil(interior, interior / 24, 10)
         }
         other => return Err(Error::invalid(format!("unknown solver {other:?}"))),
@@ -294,10 +322,10 @@ fn advise(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn tune(args: &Args) -> Result<()> {
+fn tune(args: ParsedArgs) -> Result<()> {
     use perks::coordinator::autotune;
     let bench = args.get("bench", "2d5pt");
-    let size = args.int("size", 256);
+    let size = args.get_usize("size", 256)?;
     let spec = stencil::spec(&bench).ok_or_else(|| Error::invalid("unknown bench"))?;
     let interior: Vec<usize> =
         if spec.dims == 2 { vec![size, size] } else { vec![size, size, size] };
@@ -313,15 +341,11 @@ fn tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn simulate(args: &Args) -> Result<()> {
-    let what = args.get("figure", "").to_string();
-    let what = if what.is_empty() {
-        // positional: `perks simulate fig5 --device A100` puts fig5 as a
-        // dangling flag-less token we stored nowhere; accept via --figure
-        // or first flagless arg handled here:
-        std::env::args().nth(2).unwrap_or_default()
-    } else {
-        what
+fn simulate(args: ParsedArgs) -> Result<()> {
+    // `perks simulate fig5` (positional) or `--figure fig5`
+    let what = match args.positional(0) {
+        Some(p) => p.to_string(),
+        None => args.get("figure", ""),
     };
     let dev_name = args.get("device", "A100");
     let dev = device::by_name(&dev_name)

@@ -1,0 +1,357 @@
+//! CPU persistent-threads solvers: the physically-measured PERKS
+//! demonstration behind `Backend::CpuPersistent`. Stencils run on the
+//! `stencil::parallel` substrate (OS threads as thread blocks, slabs as
+//! on-chip caches); CG runs on the merge-SpMV substrate with the paper's
+//! plan-caching and pass-fusion mechanisms.
+
+use crate::coordinator::executor::ExecMode;
+use crate::error::{Error, Result};
+use crate::session::{Report, Solver};
+use crate::sparse::csr::Csr;
+use crate::sparse::gen;
+use crate::spmv::merge::{self, MergePlan};
+use crate::stencil::shape::StencilSpec;
+use crate::stencil::{self, parallel, Domain};
+
+/// Iterative stencil on the persistent-threads CPU substrate (f64).
+pub struct CpuStencil {
+    spec: StencilSpec,
+    x0: Domain,
+    threads: usize,
+    mode: ExecMode,
+    state: Option<Domain>,
+    steps: usize,
+    wall_seconds: f64,
+    invocations: u64,
+    host_bytes: u64,
+    barrier_wait_seconds: f64,
+}
+
+impl CpuStencil {
+    pub(crate) fn new(
+        bench: &str,
+        dims: &[usize],
+        threads: usize,
+        mode: ExecMode,
+        seed: u64,
+        init: Option<&[f64]>,
+    ) -> Result<Self> {
+        let spec = stencil::spec(bench)
+            .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+        let x0 = crate::session::stencil_domain(&spec, dims, seed, init)?;
+        Ok(Self {
+            spec,
+            x0,
+            threads,
+            mode,
+            state: None,
+            steps: 0,
+            wall_seconds: 0.0,
+            invocations: 0,
+            host_bytes: 0,
+            barrier_wait_seconds: 0.0,
+        })
+    }
+}
+
+impl Solver for CpuStencil {
+    fn prepare(&mut self) -> Result<()> {
+        self.state = Some(self.x0.clone());
+        self.steps = 0;
+        self.wall_seconds = 0.0;
+        self.invocations = 0;
+        self.host_bytes = 0;
+        self.barrier_wait_seconds = 0.0;
+        Ok(())
+    }
+
+    fn advance(&mut self, steps: usize) -> Result<()> {
+        let cur = match self.state.take() {
+            Some(s) => s,
+            None => self.x0.clone(),
+        };
+        let rep = match self.mode {
+            ExecMode::HostLoop => parallel::host_loop(&self.spec, &cur, steps, self.threads)?,
+            ExecMode::Persistent => {
+                parallel::persistent(&self.spec, &cur, steps, self.threads)?
+            }
+            ExecMode::HostLoopResident => {
+                return Err(Error::invalid(
+                    "host-loop-resident is a PJRT-only execution model",
+                ))
+            }
+        };
+        self.steps += steps;
+        self.wall_seconds += rep.wall_seconds;
+        self.invocations += match self.mode {
+            ExecMode::HostLoop => steps as u64, // one "launch" (respawn) per step
+            _ => 1,                             // one persistent launch per advance
+        };
+        self.host_bytes += rep.global_bytes;
+        self.barrier_wait_seconds += rep.barrier_wait.as_secs_f64();
+        self.state = Some(rep.result);
+        Ok(())
+    }
+
+    fn report(&self) -> Report {
+        Report::new(
+            self.mode,
+            self.steps,
+            self.wall_seconds,
+            self.invocations,
+            self.host_bytes,
+            self.x0.interior_cells() as f64 * self.steps as f64,
+            "cells/s",
+            None,
+            Some(self.barrier_wait_seconds),
+        )
+    }
+
+    fn state_f64(&self) -> Result<Vec<f64>> {
+        Ok(match &self.state {
+            Some(d) => d.data.clone(),
+            None => self.x0.data.clone(),
+        })
+    }
+}
+
+/// Conjugate gradient on the rust-native merge-SpMV substrate, with
+/// resumable state (x/r/p held across `advance` calls). Host-loop mode
+/// re-searches the merge plan every iteration and streams each BLAS-1 op
+/// as a separate pass; persistent mode caches the plan once and fuses the
+/// passes — the paper's two CG mechanisms. The iterates are identical.
+pub struct CpuCg {
+    a: Csr,
+    b: Vec<f64>,
+    parts: usize,
+    threaded: bool,
+    mode: ExecMode,
+    plan: MergePlan,
+    x: Vec<f64>,
+    r: Vec<f64>,
+    p: Vec<f64>,
+    ap: Vec<f64>,
+    rr: f64,
+    iters: usize,
+    wall_seconds: f64,
+    invocations: u64,
+    host_bytes: u64,
+    plan_searches: u64,
+}
+
+impl CpuCg {
+    pub(crate) fn poisson(
+        n: usize,
+        seed: u64,
+        parts: usize,
+        threaded: bool,
+        mode: ExecMode,
+    ) -> Result<Self> {
+        let g = (n as f64).sqrt().round() as usize;
+        let a = gen::poisson2d(g);
+        let b = gen::rhs(n, seed);
+        Self::system(a, b, parts, threaded, mode)
+    }
+
+    pub(crate) fn system(
+        a: Csr,
+        b: Vec<f64>,
+        parts: usize,
+        threaded: bool,
+        mode: ExecMode,
+    ) -> Result<Self> {
+        if a.n_rows != a.n_cols {
+            return Err(Error::Solver(format!(
+                "matrix not square: {}x{}",
+                a.n_rows, a.n_cols
+            )));
+        }
+        if b.len() != a.n_rows {
+            return Err(Error::Solver(format!(
+                "rhs has {} entries, matrix {}",
+                b.len(),
+                a.n_rows
+            )));
+        }
+        let n = a.n_rows;
+        let plan = MergePlan::new(&a, parts);
+        Ok(Self {
+            a,
+            b,
+            parts,
+            threaded,
+            mode,
+            plan,
+            x: vec![0.0; n],
+            r: vec![0.0; n],
+            p: vec![0.0; n],
+            ap: vec![0.0; n],
+            rr: 0.0,
+            iters: 0,
+            wall_seconds: 0.0,
+            invocations: 0,
+            host_bytes: 0,
+            plan_searches: 0,
+        })
+    }
+
+    /// Global ("slow tier") bytes one iteration streams under this mode:
+    /// the matrix plus 5 (host-loop) or 2 (fused persistent) vector passes.
+    fn bytes_per_iter(&self) -> u64 {
+        let matrix = (self.a.nnz() * 12 + (self.a.n_rows + 1) * 4) as u64;
+        let passes = if self.mode == ExecMode::Persistent { 2 } else { 5 };
+        matrix + (passes * self.a.n_rows * 8) as u64
+    }
+
+    /// One CG iteration; returns false once the residual is exactly zero
+    /// (further iterations would divide by zero and are no-ops anyway).
+    fn step(&mut self) -> Result<bool> {
+        if self.rr <= 0.0 {
+            return Ok(false);
+        }
+        if self.mode != ExecMode::Persistent {
+            // the host-loop baseline recomputes the workload split every
+            // launch (the sample-code behaviour the paper improves on)
+            self.plan = MergePlan::new(&self.a, self.parts);
+            self.plan_searches += 1;
+        }
+        if self.threaded {
+            merge::spmv_parallel(&self.a, &self.plan, &self.p, &mut self.ap);
+        } else {
+            merge::spmv(&self.a, &self.plan, &self.p, &mut self.ap);
+        }
+        let pap: f64 = self.p.iter().zip(&self.ap).map(|(x, y)| x * y).sum();
+        if pap <= 0.0 {
+            return Err(Error::Solver(format!(
+                "matrix not positive definite (pAp={pap})"
+            )));
+        }
+        let alpha = self.rr / pap;
+        let mut rr_new = 0.0;
+        for i in 0..self.x.len() {
+            self.x[i] += alpha * self.p[i];
+            let ri = self.r[i] - alpha * self.ap[i];
+            self.r[i] = ri;
+            rr_new += ri * ri;
+        }
+        let beta = rr_new / self.rr;
+        for i in 0..self.p.len() {
+            self.p[i] = self.r[i] + beta * self.p[i];
+        }
+        self.rr = rr_new;
+        self.iters += 1;
+        Ok(true)
+    }
+}
+
+impl Solver for CpuCg {
+    fn prepare(&mut self) -> Result<()> {
+        self.x.iter_mut().for_each(|v| *v = 0.0);
+        self.r.copy_from_slice(&self.b);
+        self.p.copy_from_slice(&self.b);
+        self.rr = self.b.iter().map(|v| v * v).sum();
+        if self.mode == ExecMode::Persistent {
+            // the paper's TB-level "workload" cache: searched exactly once
+            self.plan = MergePlan::new(&self.a, self.parts);
+            self.plan_searches = 1;
+        } else {
+            self.plan_searches = 0;
+        }
+        self.iters = 0;
+        self.wall_seconds = 0.0;
+        self.invocations = 0;
+        self.host_bytes = 0;
+        Ok(())
+    }
+
+    fn advance(&mut self, iters: usize) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let mut done = 0;
+        for _ in 0..iters {
+            if !self.step()? {
+                break;
+            }
+            done += 1;
+        }
+        self.wall_seconds += t0.elapsed().as_secs_f64();
+        self.invocations += match self.mode {
+            ExecMode::Persistent => 1,
+            _ => done as u64,
+        };
+        self.host_bytes += done as u64 * self.bytes_per_iter();
+        Ok(())
+    }
+
+    fn report(&self) -> Report {
+        Report::new(
+            self.mode,
+            self.iters,
+            self.wall_seconds,
+            self.invocations,
+            self.host_bytes,
+            self.iters as f64,
+            "iters/s",
+            Some(self.rr),
+            None,
+        )
+    }
+
+    fn state_f64(&self) -> Result<Vec<f64>> {
+        Ok(self.x.clone())
+    }
+
+    fn true_residual(&self) -> Result<Option<f64>> {
+        let mut ax = vec![0.0; self.a.n_rows];
+        self.a.spmv_gold(&self.x, &mut ax);
+        Ok(Some(
+            self.b
+                .iter()
+                .zip(&ax)
+                .map(|(bi, ai)| (bi - ai) * (bi - ai))
+                .sum(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cg::{solve_persistent, CgOptions};
+
+    #[test]
+    fn cpu_cg_matches_the_batch_solver_iterates() {
+        let a = gen::poisson2d(16);
+        let b = gen::rhs(a.n_rows, 4);
+        let mut s =
+            CpuCg::system(a.clone(), b.clone(), 8, false, ExecMode::Persistent).unwrap();
+        s.prepare().unwrap();
+        s.advance(12).unwrap();
+        s.advance(12).unwrap(); // resumable: 12 + 12 == one 24-iteration solve
+        let opts = CgOptions { max_iters: 24, tol: 0.0, parts: 8, threaded: false };
+        let want = solve_persistent(&a, &b, &opts).unwrap();
+        let got = s.state_f64().unwrap();
+        let diff = got
+            .iter()
+            .zip(&want.x)
+            .map(|(g, w)| (g - w).abs())
+            .fold(0.0, f64::max);
+        assert!(diff < 1e-12, "session CG diverged from batch solver by {diff}");
+        assert_eq!(s.report().steps, 24);
+        assert_eq!(s.report().invocations, 2); // one launch per advance
+    }
+
+    #[test]
+    fn cpu_cg_modes_walk_identical_iterates() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 9);
+        let mut h = CpuCg::system(a.clone(), b.clone(), 8, false, ExecMode::HostLoop).unwrap();
+        let mut p = CpuCg::system(a, b, 8, false, ExecMode::Persistent).unwrap();
+        h.prepare().unwrap();
+        p.prepare().unwrap();
+        h.advance(20).unwrap();
+        p.advance(20).unwrap();
+        assert_eq!(h.state_f64().unwrap(), p.state_f64().unwrap());
+        assert!(h.plan_searches > p.plan_searches);
+        assert!(h.report().host_bytes > p.report().host_bytes);
+    }
+}

@@ -1,0 +1,678 @@
+//! # `session` — the unified PERKS entrypoint
+//!
+//! The paper's central claim is that the PERKS execution model is "largely
+//! independent of the solver's implementation" (§III). This module is that
+//! independence made concrete: one builder, one [`Solver`] trait, one
+//! [`Report`] shape — over every backend the crate implements:
+//!
+//! * [`Backend::Pjrt`] — the AOT HLO artifacts executed through the PJRT
+//!   runtime (the measured cross-language path);
+//! * [`Backend::CpuPersistent`] — the persistent-threads CPU substrate
+//!   (the physically-measured PERKS demonstration);
+//! * [`Backend::Simulated`] — the paper's analytical performance model on
+//!   the Table I device catalog (A100/V100/P100 at paper scale).
+//!
+//! The execution model is either fixed ([`ExecPolicy::Fixed`]) or chosen
+//! by measurement/projection ([`ExecPolicy::Auto`], which probes every
+//! candidate mode through `coordinator::autotune::tune_exec_mode` and, on
+//! the CPU backend, autotunes the thread count).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+//! use perks::runtime::Runtime;
+//!
+//! fn main() -> perks::Result<()> {
+//!     // a measured PJRT run of the 2d5pt stencil under the PERKS model
+//!     let rt = Runtime::new(Runtime::default_dir())?;
+//!     let mut session = SessionBuilder::new()
+//!         .backend(Backend::pjrt(rt))
+//!         .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+//!         .mode(ExecMode::Persistent)
+//!         .build()?;
+//!     let report = session.run(session.aligned_steps(64))?;
+//!     println!("{:.2e} {}", report.fom, report.fom_unit);
+//!
+//!     // the same workload, CPU persistent threads, auto-tuned
+//!     let mut cpu = SessionBuilder::new()
+//!         .backend(Backend::cpu(0)) // 0 = autotune the thread count
+//!         .workload(Workload::stencil("2d5pt", "128x128", "f64"))
+//!         .auto()
+//!         .build()?;
+//!     let rep = cpu.run(64)?;
+//!     println!("auto picked {} ({:.2e} cells/s)", rep.mode.name(), rep.fom);
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Incremental use (`prepare` / `advance` / `report`) keeps solver state
+//! across calls — e.g. advancing CG in fused-chunk slabs until converged —
+//! while [`Session::run`] is the one-shot convenience that re-prepares.
+
+pub mod cpu;
+pub mod pjrt;
+pub mod report;
+pub mod sim;
+
+use std::rc::Rc;
+
+use crate::coordinator::autotune;
+pub use crate::coordinator::executor::ExecMode;
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use crate::simgpu::device::DeviceSpec;
+use crate::sparse::csr::Csr;
+use crate::stencil;
+pub use self::report::Report;
+
+/// Where a session executes.
+#[derive(Clone)]
+pub enum Backend {
+    /// AOT HLO artifacts through the PJRT runtime. Shared via `Rc` so one
+    /// compiled-artifact cache can serve several sessions (e.g. one per
+    /// execution model in a comparison table).
+    Pjrt(Rc<Runtime>),
+    /// Persistent-threads CPU substrate; `threads == 0` means autotune.
+    CpuPersistent { threads: usize },
+    /// The analytical performance model on a paper-catalog device.
+    Simulated(DeviceSpec),
+}
+
+impl Backend {
+    /// PJRT backend; accepts an owned `Runtime` or an existing `Rc`.
+    pub fn pjrt(rt: impl Into<Rc<Runtime>>) -> Self {
+        Backend::Pjrt(rt.into())
+    }
+
+    /// CPU persistent-threads backend (`threads == 0` autotunes).
+    pub fn cpu(threads: usize) -> Self {
+        Backend::CpuPersistent { threads }
+    }
+
+    /// Simulated backend on one of the `simgpu::device` catalog entries.
+    pub fn simulated(dev: DeviceSpec) -> Self {
+        Backend::Simulated(dev)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::CpuPersistent { .. } => "cpu-persistent",
+            Backend::Simulated(_) => "simulated",
+        }
+    }
+}
+
+/// What a session computes.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    /// One of the Table III stencil benchmarks. `interior` is `"128x128"`
+    /// style; `dtype` is `"f32"` or `"f64"` (the CPU substrate always
+    /// computes in f64).
+    Stencil { bench: String, interior: String, dtype: String },
+    /// CG on the 5-point Poisson system of a sqrt(n) x sqrt(n) grid
+    /// (n must be a perfect square).
+    Cg { n: usize },
+    /// CG on an explicit SPD system.
+    CgSystem { a: Csr, b: Vec<f64> },
+}
+
+impl Workload {
+    pub fn stencil(bench: &str, interior: &str, dtype: &str) -> Self {
+        Workload::Stencil {
+            bench: bench.to_string(),
+            interior: interior.to_string(),
+            dtype: dtype.to_string(),
+        }
+    }
+
+    pub fn cg(n: usize) -> Self {
+        Workload::Cg { n }
+    }
+
+    pub fn cg_system(a: Csr, b: Vec<f64>) -> Self {
+        Workload::CgSystem { a, b }
+    }
+}
+
+/// How the execution model is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPolicy {
+    /// Run exactly this model (validated against the backend/workload).
+    Fixed(ExecMode),
+    /// Probe every candidate model (measured on the PJRT/CPU backends,
+    /// projected on the simulated one) and keep the fastest.
+    Auto,
+}
+
+/// A solver that can be prepared, advanced and inspected — the seam that
+/// makes every backend/workload pair interchangeable downstream.
+pub trait Solver {
+    /// (Re)initialize state from the workload seed; resets all metrics.
+    fn prepare(&mut self) -> Result<()>;
+
+    /// Advance by `steps` time steps (stencil) or iterations (CG). Under
+    /// the persistent model, `steps` must be a multiple of
+    /// [`Solver::fused_chunk`].
+    fn advance(&mut self, steps: usize) -> Result<()>;
+
+    /// Metrics accumulated since the last `prepare`.
+    fn report(&self) -> Report;
+
+    /// Final state as f64: the padded domain (stencil) or the solution
+    /// iterate x (CG). Errors on the simulated backend (no numeric state).
+    fn state_f64(&self) -> Result<Vec<f64>>;
+
+    /// Steps fused into one launch under the persistent model (1 for the
+    /// per-step models and for substrates without AOT fusion).
+    fn fused_chunk(&self) -> usize {
+        1
+    }
+
+    /// On-substrate `||b - Ax||^2` check (CG workloads; `None` elsewhere).
+    fn true_residual(&self) -> Result<Option<f64>> {
+        Ok(None)
+    }
+}
+
+/// Calibration depth for `ExecPolicy::Auto` probes (rounded up to the
+/// fused chunk). Deep enough that one-time costs (initial upload, cache
+/// fill) amortize the way they do in a real run.
+const AUTO_PROBE_STEPS: usize = 128;
+
+/// Builder for a [`Session`] — the crate's front door.
+pub struct SessionBuilder {
+    backend: Option<Backend>,
+    workload: Option<Workload>,
+    policy: ExecPolicy,
+    seed: u64,
+    cg_parts: usize,
+    cg_threaded: bool,
+    init: Option<Vec<f64>>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        Self {
+            backend: None,
+            workload: None,
+            policy: ExecPolicy::Fixed(ExecMode::Persistent),
+            seed: 42,
+            cg_parts: 8,
+            cg_threaded: false,
+            init: None,
+        }
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn workload(mut self, workload: Workload) -> Self {
+        self.workload = Some(workload);
+        self
+    }
+
+    /// Fix the execution model (default: `Persistent`).
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.policy = ExecPolicy::Fixed(mode);
+        self
+    }
+
+    pub fn policy(mut self, policy: ExecPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Shorthand for `.policy(ExecPolicy::Auto)`.
+    pub fn auto(self) -> Self {
+        self.policy(ExecPolicy::Auto)
+    }
+
+    /// Seed for the deterministic initial state (stencil domain / CG rhs).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Explicit padded initial domain for stencil workloads (overrides the
+    /// seeded randomization); length must match the padded extents.
+    pub fn initial_domain(mut self, data: Vec<f64>) -> Self {
+        self.init = Some(data);
+        self
+    }
+
+    /// Worker shares for the CPU merge-SpMV (CG workloads).
+    pub fn cg_parts(mut self, parts: usize) -> Self {
+        self.cg_parts = parts;
+        self
+    }
+
+    /// Threaded SpMV for the CPU CG substrate.
+    pub fn cg_threaded(mut self, threaded: bool) -> Self {
+        self.cg_threaded = threaded;
+        self
+    }
+
+    /// Validate, resolve `Auto` choices, construct and prepare the solver.
+    pub fn build(self) -> Result<Session> {
+        let backend = self
+            .backend
+            .ok_or_else(|| Error::invalid("SessionBuilder: no backend selected"))?;
+        let workload = self
+            .workload
+            .ok_or_else(|| Error::invalid("SessionBuilder: no workload selected"))?;
+        validate_workload(&workload)?;
+        if self.init.is_some() && !matches!(workload, Workload::Stencil { .. }) {
+            return Err(Error::invalid(
+                "initial_domain only applies to stencil workloads",
+            ));
+        }
+        // resolve the CPU thread count before any mode probing
+        let backend = match backend {
+            Backend::CpuPersistent { threads: 0 } => {
+                Backend::CpuPersistent { threads: auto_threads(&workload, self.seed)? }
+            }
+            b => b,
+        };
+        let candidates = mode_candidates(&backend, &workload);
+        let mode = match self.policy {
+            ExecPolicy::Fixed(m) => {
+                if !candidates.contains(&m) {
+                    return Err(Error::invalid(format!(
+                        "execution model {:?} is not supported for the {} backend with this workload",
+                        m.name(),
+                        backend.name()
+                    )));
+                }
+                m
+            }
+            ExecPolicy::Auto => {
+                let choice = autotune::tune_exec_mode(&candidates, |m| {
+                    let mut probe = make_solver(
+                        &backend,
+                        &workload,
+                        m,
+                        self.seed,
+                        self.cg_parts,
+                        self.cg_threaded,
+                        self.init.as_deref(),
+                    )?;
+                    probe.prepare()?;
+                    // probe at steady-state depth (chunk-aligned): the
+                    // persistent model amortizes its caching over many
+                    // steps, so a too-shallow probe would misrank it
+                    let steps = round_up_to(AUTO_PROBE_STEPS, probe.fused_chunk().max(1));
+                    probe.advance(steps)?;
+                    // normalize to per-step cost: chunks differ across modes
+                    Ok(probe.report().wall_seconds / steps as f64)
+                })?;
+                choice.mode
+            }
+        };
+        let mut solver = make_solver(
+            &backend,
+            &workload,
+            mode,
+            self.seed,
+            self.cg_parts,
+            self.cg_threaded,
+            self.init.as_deref(),
+        )?;
+        solver.prepare()?;
+        Ok(Session { solver, mode, backend_name: backend.name() })
+    }
+}
+
+/// A built, prepared solver plus its resolved execution model.
+pub struct Session {
+    solver: Box<dyn Solver>,
+    mode: ExecMode,
+    backend_name: &'static str,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// The resolved execution model (`Auto` has been decided by now).
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// Steps fused into one persistent launch (1 for per-step models).
+    pub fn fused_chunk(&self) -> usize {
+        self.solver.fused_chunk().max(1)
+    }
+
+    /// Round `requested` up to the next multiple of the fused chunk, so
+    /// callers need not know the artifact's fusion depth.
+    pub fn aligned_steps(&self, requested: usize) -> usize {
+        round_up_to(requested, self.fused_chunk())
+    }
+
+    /// Reset the solver to its initial state and clear all metrics.
+    pub fn prepare(&mut self) -> Result<()> {
+        self.solver.prepare()
+    }
+
+    /// Advance the current state (see [`Solver::advance`]).
+    pub fn advance(&mut self, steps: usize) -> Result<()> {
+        self.solver.advance(steps)
+    }
+
+    /// Metrics accumulated since the last `prepare`.
+    pub fn report(&self) -> Report {
+        self.solver.report()
+    }
+
+    pub fn state_f64(&self) -> Result<Vec<f64>> {
+        self.solver.state_f64()
+    }
+
+    pub fn true_residual(&self) -> Result<Option<f64>> {
+        self.solver.true_residual()
+    }
+
+    /// One-shot: re-prepare, advance `steps`, report. Repeated calls are
+    /// independent runs (benches time this directly).
+    pub fn run(&mut self, steps: usize) -> Result<Report> {
+        self.solver.prepare()?;
+        self.solver.advance(steps)?;
+        Ok(self.solver.report())
+    }
+}
+
+/// Round `n` up to the next multiple of `chunk` (chunk >= 1).
+fn round_up_to(n: usize, chunk: usize) -> usize {
+    n.saturating_add(chunk - 1) / chunk * chunk
+}
+
+/// Build the seeded (or explicitly initialized) padded domain shared by
+/// the stencil solvers of every backend.
+pub(crate) fn stencil_domain(
+    spec: &stencil::StencilSpec,
+    dims: &[usize],
+    seed: u64,
+    init: Option<&[f64]>,
+) -> Result<stencil::Domain> {
+    let mut dom = stencil::Domain::for_spec(spec, dims)?;
+    match init {
+        Some(data) => {
+            if data.len() != dom.data.len() {
+                return Err(Error::invalid(format!(
+                    "initial domain has {} elements, padded domain needs {}",
+                    data.len(),
+                    dom.data.len()
+                )));
+            }
+            dom.data.copy_from_slice(data);
+        }
+        None => dom.randomize(seed),
+    }
+    Ok(dom)
+}
+
+fn parse_interior(interior: &str) -> Result<Vec<usize>> {
+    let dims = interior
+        .split('x')
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|_| Error::invalid(format!("bad interior {interior:?}")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if dims.is_empty() || dims.iter().any(|&d| d == 0) {
+        return Err(Error::invalid(format!("bad interior {interior:?}")));
+    }
+    Ok(dims)
+}
+
+fn validate_workload(w: &Workload) -> Result<()> {
+    match w {
+        Workload::Stencil { bench, interior, dtype } => {
+            let spec = stencil::spec(bench).ok_or_else(|| {
+                Error::invalid(format!(
+                    "unknown stencil benchmark {bench:?} (see stencil::catalog)"
+                ))
+            })?;
+            let dims = parse_interior(interior)?;
+            if dims.len() != spec.dims {
+                return Err(Error::invalid(format!(
+                    "{bench} is {}D but interior {interior:?} has rank {}",
+                    spec.dims,
+                    dims.len()
+                )));
+            }
+            if dtype != "f32" && dtype != "f64" {
+                return Err(Error::invalid(format!(
+                    "bad dtype {dtype:?}: expected \"f32\" or \"f64\""
+                )));
+            }
+            Ok(())
+        }
+        Workload::Cg { n } => {
+            let g = (*n as f64).sqrt().round() as usize;
+            if *n == 0 || g * g != *n {
+                return Err(Error::invalid(format!(
+                    "cg workload n={n} must be a positive perfect square (poisson grid)"
+                )));
+            }
+            Ok(())
+        }
+        Workload::CgSystem { a, b } => {
+            if a.n_rows != a.n_cols {
+                return Err(Error::invalid(format!(
+                    "cg system matrix not square: {}x{}",
+                    a.n_rows, a.n_cols
+                )));
+            }
+            if b.len() != a.n_rows {
+                return Err(Error::invalid(format!(
+                    "cg system rhs has {} entries, matrix {}",
+                    b.len(),
+                    a.n_rows
+                )));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Candidate execution models for a backend/workload pair. The CPU
+/// substrate has no device-resident variant, and the CG substrates (AOT
+/// and native) distinguish only relaunch vs persistent.
+fn mode_candidates(backend: &Backend, workload: &Workload) -> Vec<ExecMode> {
+    let is_stencil = matches!(workload, Workload::Stencil { .. });
+    match backend {
+        Backend::Pjrt(_) | Backend::Simulated(_) if is_stencil => {
+            vec![ExecMode::HostLoop, ExecMode::HostLoopResident, ExecMode::Persistent]
+        }
+        Backend::CpuPersistent { .. } if is_stencil => {
+            vec![ExecMode::HostLoop, ExecMode::Persistent]
+        }
+        _ => vec![ExecMode::HostLoop, ExecMode::Persistent],
+    }
+}
+
+/// Measured thread autotune for `Backend::CpuPersistent { threads: 0 }`.
+fn auto_threads(workload: &Workload, seed: u64) -> Result<usize> {
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    match workload {
+        Workload::Stencil { bench, interior, .. } => {
+            let spec = stencil::spec(bench)
+                .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+            let dims = parse_interior(interior)?;
+            let mut dom = stencil::Domain::for_spec(&spec, &dims)?;
+            dom.randomize(seed);
+            Ok(autotune::tune_threads(&spec, &dom, 2, max)?.threads)
+        }
+        // the CG substrate threads via its SpMV parts, not OS threads
+        _ => Ok(1),
+    }
+}
+
+fn make_solver(
+    backend: &Backend,
+    workload: &Workload,
+    mode: ExecMode,
+    seed: u64,
+    cg_parts: usize,
+    cg_threaded: bool,
+    init: Option<&[f64]>,
+) -> Result<Box<dyn Solver>> {
+    match (backend, workload) {
+        (Backend::Pjrt(rt), Workload::Stencil { bench, interior, dtype }) => Ok(Box::new(
+            pjrt::PjrtStencil::new(rt, bench, interior, dtype, mode, seed, init)?,
+        )),
+        (Backend::Pjrt(rt), Workload::Cg { n }) => {
+            Ok(Box::new(pjrt::PjrtCg::poisson(rt, *n, mode, seed)?))
+        }
+        (Backend::Pjrt(rt), Workload::CgSystem { a, b }) => {
+            Ok(Box::new(pjrt::PjrtCg::system(rt, a, b, mode)?))
+        }
+        (Backend::CpuPersistent { threads }, Workload::Stencil { bench, interior, .. }) => {
+            let dims = parse_interior(interior)?;
+            Ok(Box::new(cpu::CpuStencil::new(bench, &dims, *threads, mode, seed, init)?))
+        }
+        (Backend::CpuPersistent { .. }, Workload::Cg { n }) => {
+            Ok(Box::new(cpu::CpuCg::poisson(*n, seed, cg_parts, cg_threaded, mode)?))
+        }
+        (Backend::CpuPersistent { .. }, Workload::CgSystem { a, b }) => Ok(Box::new(
+            cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, cg_threaded, mode)?,
+        )),
+        (Backend::Simulated(dev), Workload::Stencil { bench, interior, dtype }) => {
+            let dims = parse_interior(interior)?;
+            let elem = if dtype == "f64" { 8 } else { 4 };
+            Ok(Box::new(sim::SimStencil::new(dev.clone(), bench, &dims, elem, mode)?))
+        }
+        (Backend::Simulated(dev), Workload::Cg { n }) => {
+            let g = (*n as f64).sqrt().round() as usize;
+            Ok(Box::new(sim::SimCg::new(dev.clone(), *n, sim::poisson2d_nnz(g), mode)))
+        }
+        (Backend::Simulated(dev), Workload::CgSystem { a, .. }) => {
+            Ok(Box::new(sim::SimCg::new(dev.clone(), a.n_rows, a.nnz(), mode)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::device::a100;
+
+    fn msg(r: Result<Session>) -> String {
+        format!("{}", r.err().expect("expected a build error"))
+    }
+
+    #[test]
+    fn build_rejects_missing_pieces() {
+        assert!(msg(SessionBuilder::new().build()).contains("no backend"));
+        assert!(msg(SessionBuilder::new().backend(Backend::cpu(2)).build())
+            .contains("no workload"));
+    }
+
+    #[test]
+    fn build_rejects_bad_stencil_workloads() {
+        let b = || SessionBuilder::new().backend(Backend::cpu(2));
+        assert!(msg(b().workload(Workload::stencil("17d99pt", "8x8", "f64")).build())
+            .contains("unknown stencil benchmark"));
+        assert!(msg(b().workload(Workload::stencil("2d5pt", "8x8x8", "f64")).build())
+            .contains("rank"));
+        assert!(msg(b().workload(Workload::stencil("2d5pt", "8xbroken", "f64")).build())
+            .contains("bad interior"));
+        assert!(msg(b().workload(Workload::stencil("2d5pt", "8x8", "f16")).build())
+            .contains("bad dtype"));
+    }
+
+    #[test]
+    fn build_rejects_bad_cg_and_mode_combos() {
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::cg(1000)) // not a perfect square
+                .mode(ExecMode::Persistent)
+                .build()
+        )
+        .contains("perfect square"));
+        // the CPU substrate has no device-resident model
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(2))
+                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+                .mode(ExecMode::HostLoopResident)
+                .build()
+        )
+        .contains("not supported"));
+        // initial_domain is a stencil-only knob
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::cg(64))
+                .initial_domain(vec![0.0; 64])
+                .build()
+        )
+        .contains("initial_domain"));
+    }
+
+    #[test]
+    fn auto_picks_a_valid_mode_on_every_workload() {
+        // CPU stencil
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+            .auto()
+            .build()
+            .unwrap();
+        assert!([ExecMode::HostLoop, ExecMode::Persistent].contains(&s.mode()));
+        // CPU CG
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(1))
+            .workload(Workload::cg(64))
+            .auto()
+            .build()
+            .unwrap();
+        assert!([ExecMode::HostLoop, ExecMode::Persistent].contains(&s.mode()));
+        // simulated stencil: the model must prefer PERKS at paper scale
+        let s = SessionBuilder::new()
+            .backend(Backend::simulated(a100()))
+            .workload(Workload::stencil("2d5pt", "3072x3072", "f64"))
+            .auto()
+            .build()
+            .unwrap();
+        assert_eq!(s.mode(), ExecMode::Persistent);
+        // simulated CG
+        let s = SessionBuilder::new()
+            .backend(Backend::simulated(a100()))
+            .workload(Workload::cg(1024))
+            .auto()
+            .build()
+            .unwrap();
+        assert!([ExecMode::HostLoop, ExecMode::Persistent].contains(&s.mode()));
+    }
+
+    #[test]
+    fn aligned_steps_rounds_up_to_the_chunk() {
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(1))
+            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            .mode(ExecMode::Persistent)
+            .build()
+            .unwrap();
+        // CPU substrate has chunk 1: identity
+        assert_eq!(s.fused_chunk(), 1);
+        assert_eq!(s.aligned_steps(7), 7);
+    }
+}

@@ -1,0 +1,265 @@
+//! PJRT-backed solvers: the AOT-artifact execution path behind
+//! `Backend::Pjrt`, wrapping the coordinator drivers with persistent
+//! state so `advance` can be called repeatedly (device state chains
+//! between calls exactly as the drivers chain it between launches).
+
+use crate::coordinator::executor::{CgDriver, ExecMode, StencilDriver};
+use crate::error::{Error, Result};
+use crate::runtime::{HostTensor, Runtime};
+use crate::session::{Report, Solver};
+use crate::sparse::csr::Csr;
+use crate::sparse::gen;
+use crate::stencil;
+
+/// Iterative stencil through the AOT HLO artifacts.
+pub struct PjrtStencil {
+    driver: StencilDriver,
+    mode: ExecMode,
+    x0: HostTensor,
+    interior_cells: usize,
+    state: Option<HostTensor>,
+    steps: usize,
+    wall_seconds: f64,
+    invocations: u64,
+    host_bytes: u64,
+}
+
+impl PjrtStencil {
+    pub(crate) fn new(
+        rt: &Runtime,
+        bench: &str,
+        interior: &str,
+        dtype: &str,
+        mode: ExecMode,
+        seed: u64,
+        init: Option<&[f64]>,
+    ) -> Result<Self> {
+        let driver = StencilDriver::from_runtime(rt, bench, interior, dtype)?;
+        let spec = stencil::spec(bench)
+            .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+        let dims = driver.interior.clone();
+        let dom = crate::session::stencil_domain(&spec, &dims, seed, init)?;
+        let padded: Vec<usize> = if spec.dims == 2 {
+            vec![dom.padded[1], dom.padded[2]]
+        } else {
+            dom.padded.to_vec()
+        };
+        let x0 = match dtype {
+            "f64" => HostTensor::f64(&padded, dom.data.clone()),
+            _ => HostTensor::f32(&padded, dom.to_f32()),
+        };
+        Ok(Self {
+            interior_cells: driver.interior_cells(),
+            driver,
+            mode,
+            x0,
+            state: None,
+            steps: 0,
+            wall_seconds: 0.0,
+            invocations: 0,
+            host_bytes: 0,
+        })
+    }
+}
+
+impl Solver for PjrtStencil {
+    fn prepare(&mut self) -> Result<()> {
+        self.state = Some(self.x0.clone());
+        self.steps = 0;
+        self.wall_seconds = 0.0;
+        self.invocations = 0;
+        self.host_bytes = 0;
+        Ok(())
+    }
+
+    fn advance(&mut self, steps: usize) -> Result<()> {
+        let cur = match self.state.take() {
+            Some(s) => s,
+            None => self.x0.clone(),
+        };
+        let rep = self.driver.run(self.mode, &cur, steps)?;
+        self.steps += rep.steps;
+        self.wall_seconds += rep.wall_seconds;
+        self.invocations += rep.invocations;
+        self.host_bytes += rep.host_bytes;
+        self.state = rep.state.into_iter().next();
+        Ok(())
+    }
+
+    fn report(&self) -> Report {
+        Report::new(
+            self.mode,
+            self.steps,
+            self.wall_seconds,
+            self.invocations,
+            self.host_bytes,
+            self.interior_cells as f64 * self.steps as f64,
+            "cells/s",
+            None,
+            None,
+        )
+    }
+
+    fn state_f64(&self) -> Result<Vec<f64>> {
+        match &self.state {
+            Some(t) => t.to_f64_vec(),
+            None => self.x0.to_f64_vec(),
+        }
+    }
+
+    fn fused_chunk(&self) -> usize {
+        match self.mode {
+            ExecMode::Persistent => self.driver.fused_steps.max(1),
+            _ => 1,
+        }
+    }
+}
+
+/// Conjugate gradient through the AOT HLO artifacts.
+pub struct PjrtCg {
+    driver: CgDriver,
+    data: HostTensor,
+    cols: HostTensor,
+    rows: HostTensor,
+    b: Vec<f32>,
+    mode: ExecMode,
+    state: Option<Vec<HostTensor>>,
+    /// rr recurrence value of the current state, parsed (with errors
+    /// surfaced) in `prepare`/`advance` rather than swallowed in `report`.
+    last_rr: Option<f64>,
+    iters: usize,
+    wall_seconds: f64,
+    invocations: u64,
+    host_bytes: u64,
+}
+
+impl PjrtCg {
+    /// The `Workload::Cg { n }` convenience: a 5-point Poisson system on a
+    /// sqrt(n) x sqrt(n) grid with a deterministic rhs.
+    pub(crate) fn poisson(rt: &Runtime, n: usize, mode: ExecMode, seed: u64) -> Result<Self> {
+        let g = (n as f64).sqrt().round() as usize;
+        let a = gen::poisson2d(g);
+        let b = gen::rhs(n, seed);
+        Self::system(rt, &a, &b, mode)
+    }
+
+    /// An explicit SPD system; the matrix structure must match the AOT
+    /// artifact lowered for this `n`.
+    pub(crate) fn system(rt: &Runtime, a: &Csr, b: &[f64], mode: ExecMode) -> Result<Self> {
+        let driver = CgDriver::from_runtime(rt, a.n_rows)?;
+        if a.nnz() != driver.nnz {
+            return Err(Error::invalid(format!(
+                "matrix nnz {} does not match the cg artifact for n={} (nnz {})",
+                a.nnz(),
+                a.n_rows,
+                driver.nnz
+            )));
+        }
+        let (data, cols, rows) = a.to_coo_f32();
+        let data = HostTensor::f32(&[driver.nnz], data);
+        let cols = HostTensor::i32(&[driver.nnz], cols);
+        let rows = HostTensor::i32(&[driver.nnz], rows);
+        let b: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        Ok(Self {
+            driver,
+            data,
+            cols,
+            rows,
+            b,
+            mode,
+            state: None,
+            last_rr: None,
+            iters: 0,
+            wall_seconds: 0.0,
+            invocations: 0,
+            host_bytes: 0,
+        })
+    }
+
+    fn current_x(&self) -> Result<Option<&[f32]>> {
+        match &self.state {
+            Some(s) => Ok(Some(s[0].as_f32()?)),
+            None => Ok(None),
+        }
+    }
+}
+
+impl Solver for PjrtCg {
+    fn prepare(&mut self) -> Result<()> {
+        let state = self.driver.initial_state(&self.b);
+        self.last_rr = Some(state[3].as_f32()?[0] as f64);
+        self.state = Some(state);
+        self.iters = 0;
+        self.wall_seconds = 0.0;
+        self.invocations = 0;
+        self.host_bytes = 0;
+        Ok(())
+    }
+
+    fn advance(&mut self, iters: usize) -> Result<()> {
+        let state = match self.state.take() {
+            Some(s) => s,
+            None => self.driver.initial_state(&self.b),
+        };
+        let state_bytes: u64 = state.iter().map(|t| t.bytes() as u64).sum();
+        let matrix_bytes =
+            (self.data.bytes() + self.cols.bytes() + self.rows.bytes()) as u64;
+        let t0 = std::time::Instant::now();
+        let (state, invocations) =
+            self.driver
+                .advance(self.mode, &self.data, &self.cols, &self.rows, state, iters)?;
+        self.wall_seconds += t0.elapsed().as_secs_f64();
+        self.iters += iters;
+        self.invocations += invocations;
+        // every launch re-marshals the matrix + state up and the state down
+        self.host_bytes += invocations * (matrix_bytes + 2 * state_bytes);
+        self.last_rr = Some(state[3].as_f32()?[0] as f64);
+        self.state = Some(state);
+        Ok(())
+    }
+
+    fn report(&self) -> Report {
+        let residual = self.last_rr;
+        Report::new(
+            self.mode,
+            self.iters,
+            self.wall_seconds,
+            self.invocations,
+            self.host_bytes,
+            self.iters as f64,
+            "iters/s",
+            residual,
+            None,
+        )
+    }
+
+    fn state_f64(&self) -> Result<Vec<f64>> {
+        match &self.state {
+            Some(s) => s[0].to_f64_vec(),
+            None => Ok(vec![0.0; self.driver.n]),
+        }
+    }
+
+    fn fused_chunk(&self) -> usize {
+        match self.mode {
+            ExecMode::Persistent => self.driver.fused_iters.max(1),
+            _ => 1,
+        }
+    }
+
+    fn true_residual(&self) -> Result<Option<f64>> {
+        match self.current_x()? {
+            Some(x) => {
+                let x = x.to_vec();
+                Ok(Some(self.driver.residual(
+                    &self.data,
+                    &self.cols,
+                    &self.rows,
+                    &x,
+                    &self.b,
+                )?))
+            }
+            None => Ok(None),
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! The unified run report shared by every backend and workload.
+
+use crate::coordinator::executor::ExecMode;
+use crate::util::stats::finite_rate;
+
+/// Metrics accumulated by a [`crate::session::Solver`] since its last
+/// `prepare()`. Subsumes the legacy `RunReport` (stencil) and `CgReport`:
+/// one shape for every backend, with workload-specific fields optional.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Execution model the solver ran under.
+    pub mode: ExecMode,
+    /// Time steps (stencil) or iterations (CG) advanced.
+    pub steps: usize,
+    /// Wall-clock seconds — measured for the PJRT/CPU backends, modeled
+    /// for the simulated backend.
+    pub wall_seconds: f64,
+    /// Executable/kernel launches (CPU persistent counts one per
+    /// `advance`, matching the single-launch PERKS model).
+    pub invocations: u64,
+    /// Bytes moved through the slow tier: host<->device marshalling for
+    /// PJRT, shared-array ("global") traffic for the CPU substrate,
+    /// modeled host-link traffic for the simulator.
+    pub host_bytes: u64,
+    /// Figure of merit: cell updates/s (stencil) or iterations/s (CG).
+    /// Always finite — the wall time is clamped to a measurable epsilon.
+    pub fom: f64,
+    /// Unit of `fom`, for display.
+    pub fom_unit: &'static str,
+    /// Final squared-residual recurrence value (CG workloads only).
+    pub residual: Option<f64>,
+    /// Time spent in grid-sync barriers, where the substrate exposes it
+    /// (CPU persistent threads; modeled for the simulator).
+    pub barrier_wait_seconds: Option<f64>,
+}
+
+impl Report {
+    /// Build a report computing the FOM from `work_units` (total cell
+    /// updates or iterations) over `wall_seconds`, clamped to finite.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        mode: ExecMode,
+        steps: usize,
+        wall_seconds: f64,
+        invocations: u64,
+        host_bytes: u64,
+        work_units: f64,
+        fom_unit: &'static str,
+        residual: Option<f64>,
+        barrier_wait_seconds: Option<f64>,
+    ) -> Self {
+        Report {
+            mode,
+            steps,
+            wall_seconds,
+            invocations,
+            host_bytes,
+            fom: finite_rate(work_units, wall_seconds),
+            fom_unit,
+            residual,
+            barrier_wait_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fom_is_finite_even_for_zero_wall() {
+        let r = Report::new(
+            ExecMode::Persistent,
+            64,
+            0.0,
+            1,
+            0,
+            64.0 * 16384.0,
+            "cells/s",
+            None,
+            None,
+        );
+        assert!(r.fom.is_finite());
+        assert!(r.fom > 0.0);
+    }
+}

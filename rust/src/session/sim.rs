@@ -1,0 +1,199 @@
+//! Simulated solvers: the paper's analytical performance model behind
+//! `Backend::Simulated`. No numeric state is advanced — `advance` costs a
+//! modeled wall time via the harness projection (Eqs 5-11 for stencils,
+//! the Fig 7 launch/sync + traffic model for CG), so paper-scale devices
+//! (A100/V100) can be "run" through the same `Session` API as the
+//! measured backends.
+
+use crate::coordinator::executor::ExecMode;
+use crate::error::{Error, Result};
+use crate::harness::{cg_exp, stencil_exp, StencilExperiment};
+use crate::session::{Report, Solver};
+use crate::simgpu::device::DeviceSpec;
+use crate::stencil;
+
+/// Modeled iterative stencil on a paper-catalog device.
+pub struct SimStencil {
+    dev: DeviceSpec,
+    exp: StencilExperiment,
+    mode: ExecMode,
+    steps: usize,
+    wall_seconds: f64,
+    invocations: u64,
+    host_bytes: u64,
+    barrier_wait_seconds: f64,
+}
+
+impl SimStencil {
+    pub(crate) fn new(
+        dev: DeviceSpec,
+        bench: &str,
+        dims: &[usize],
+        elem: usize,
+        mode: ExecMode,
+    ) -> Result<Self> {
+        let spec = stencil::spec(bench)
+            .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+        let exp = StencilExperiment { bench: spec, elem, domain: dims.to_vec(), steps: 0 };
+        Ok(Self {
+            dev,
+            exp,
+            mode,
+            steps: 0,
+            wall_seconds: 0.0,
+            invocations: 0,
+            host_bytes: 0,
+            barrier_wait_seconds: 0.0,
+        })
+    }
+}
+
+impl Solver for SimStencil {
+    fn prepare(&mut self) -> Result<()> {
+        self.steps = 0;
+        self.wall_seconds = 0.0;
+        self.invocations = 0;
+        self.host_bytes = 0;
+        self.barrier_wait_seconds = 0.0;
+        Ok(())
+    }
+
+    fn advance(&mut self, steps: usize) -> Result<()> {
+        let mut exp = self.exp.clone();
+        exp.steps = steps;
+        let m = stencil_exp::modeled_run(&self.dev, &exp, self.mode);
+        self.steps += steps;
+        self.wall_seconds += m.wall_seconds;
+        self.invocations += m.invocations;
+        self.host_bytes += m.host_bytes;
+        self.barrier_wait_seconds += m.barrier_wait_seconds;
+        Ok(())
+    }
+
+    fn report(&self) -> Report {
+        Report::new(
+            self.mode,
+            self.steps,
+            self.wall_seconds,
+            self.invocations,
+            self.host_bytes,
+            self.exp.cells() * self.steps as f64,
+            "cells/s",
+            None,
+            Some(self.barrier_wait_seconds),
+        )
+    }
+
+    fn state_f64(&self) -> Result<Vec<f64>> {
+        Err(Error::invalid(
+            "the simulated backend models performance only and has no numeric state",
+        ))
+    }
+}
+
+/// Modeled CG solve on a paper-catalog device.
+pub struct SimCg {
+    dev: DeviceSpec,
+    rows: usize,
+    nnz: usize,
+    mode: ExecMode,
+    iters: usize,
+    wall_seconds: f64,
+    invocations: u64,
+    host_bytes: u64,
+    barrier_wait_seconds: f64,
+}
+
+impl SimCg {
+    pub(crate) fn new(dev: DeviceSpec, rows: usize, nnz: usize, mode: ExecMode) -> Self {
+        Self {
+            dev,
+            rows,
+            nnz,
+            mode,
+            iters: 0,
+            wall_seconds: 0.0,
+            invocations: 0,
+            host_bytes: 0,
+            barrier_wait_seconds: 0.0,
+        }
+    }
+}
+
+/// nnz of the 5-point Poisson matrix on a g x g grid (every node has a
+/// diagonal entry plus its in-grid neighbours): 5g^2 - 4g.
+pub(crate) fn poisson2d_nnz(g: usize) -> usize {
+    5 * g * g - 4 * g
+}
+
+impl Solver for SimCg {
+    fn prepare(&mut self) -> Result<()> {
+        self.iters = 0;
+        self.wall_seconds = 0.0;
+        self.invocations = 0;
+        self.host_bytes = 0;
+        self.barrier_wait_seconds = 0.0;
+        Ok(())
+    }
+
+    fn advance(&mut self, iters: usize) -> Result<()> {
+        let m = cg_exp::modeled_cg_run(&self.dev, self.rows, self.nnz, 4, self.mode, iters);
+        self.iters += iters;
+        self.wall_seconds += m.wall_seconds;
+        self.invocations += m.invocations;
+        self.host_bytes += m.host_bytes;
+        self.barrier_wait_seconds += m.barrier_wait_seconds;
+        Ok(())
+    }
+
+    fn report(&self) -> Report {
+        Report::new(
+            self.mode,
+            self.iters,
+            self.wall_seconds,
+            self.invocations,
+            self.host_bytes,
+            self.iters as f64,
+            "iters/s",
+            None,
+            Some(self.barrier_wait_seconds),
+        )
+    }
+
+    fn state_f64(&self) -> Result<Vec<f64>> {
+        Err(Error::invalid(
+            "the simulated backend models performance only and has no numeric state",
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_nnz_formula_matches_the_generator() {
+        for g in [4usize, 8, 16, 32] {
+            let a = crate::sparse::gen::poisson2d(g);
+            assert_eq!(a.nnz(), poisson2d_nnz(g), "g={g}");
+        }
+    }
+
+    #[test]
+    fn sim_stencil_persistent_is_fastest_and_accumulates() {
+        let dev = crate::simgpu::device::a100();
+        let mut walls = Vec::new();
+        for mode in ExecMode::all() {
+            let mut s = SimStencil::new(dev.clone(), "2d5pt", &[3072, 3072], 8, mode).unwrap();
+            s.prepare().unwrap();
+            s.advance(500).unwrap();
+            s.advance(500).unwrap();
+            let rep = s.report();
+            assert_eq!(rep.steps, 1000);
+            assert!(rep.fom.is_finite() && rep.fom > 0.0);
+            walls.push(rep.wall_seconds);
+        }
+        // [host-loop, resident, persistent]
+        assert!(walls[2] < walls[1] && walls[1] < walls[0], "{walls:?}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Typed CLI argument parsing shared by the `perks` binary's subcommands.
+//!
+//! Each subcommand declares a *closed* set of `--key value` flags and a
+//! maximum number of positional arguments; anything outside that set is an
+//! `Error::Invalid` rather than a silent drop (the failure mode of the old
+//! hand-rolled map: `perks run-stencil --step 128` would quietly run 64
+//! steps). Typed getters surface parse failures the same way.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed arguments of one subcommand invocation.
+#[derive(Clone, Debug)]
+pub struct ParsedArgs {
+    cmd: String,
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl ParsedArgs {
+    /// Parse the tokens following the subcommand name against a closed set
+    /// of flags. Every flag takes exactly one value; unknown flags, missing
+    /// values, duplicates, and excess positional arguments are errors.
+    pub fn parse<I>(cmd: &str, tokens: I, allowed: &[&str], max_positional: usize) -> Result<Self>
+    where
+        I: IntoIterator<Item = String>,
+    {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if !allowed.contains(&key) {
+                    return Err(Error::invalid(format!(
+                        "{cmd}: unknown flag --{key}{}",
+                        if allowed.is_empty() {
+                            " (this command takes no flags)".to_string()
+                        } else {
+                            format!(
+                                " (valid: {})",
+                                allowed
+                                    .iter()
+                                    .map(|a| format!("--{a}"))
+                                    .collect::<Vec<_>>()
+                                    .join(", ")
+                            )
+                        }
+                    )));
+                }
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => {
+                        return Err(Error::invalid(format!(
+                            "{cmd}: flag --{key} requires a value"
+                        )))
+                    }
+                };
+                if flags.insert(key.to_string(), val).is_some() {
+                    return Err(Error::invalid(format!("{cmd}: duplicate flag --{key}")));
+                }
+            } else {
+                if positional.len() == max_positional {
+                    return Err(Error::invalid(format!(
+                        "{cmd}: unexpected argument {tok:?}"
+                    )));
+                }
+                positional.push(tok);
+            }
+        }
+        Ok(Self { cmd: cmd.to_string(), flags, positional })
+    }
+
+    /// String flag with a default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Integer flag with a default; a present-but-unparsable value is an
+    /// error (the old parser silently fell back to the default).
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::invalid(format!(
+                    "{}: flag --{key} expects an integer, got {v:?}",
+                    self.cmd
+                ))
+            }),
+        }
+    }
+
+    /// i-th positional argument, if present.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = ParsedArgs::parse(
+            "simulate",
+            toks(&["fig5", "--device", "V100"]),
+            &["device", "dtype"],
+            1,
+        )
+        .unwrap();
+        assert_eq!(a.positional(0), Some("fig5"));
+        assert_eq!(a.get("device", "A100"), "V100");
+        assert_eq!(a.get("dtype", "f64"), "f64");
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error() {
+        let err = ParsedArgs::parse("run-stencil", toks(&["--step", "64"]), &["steps"], 0);
+        let msg = format!("{}", err.unwrap_err());
+        assert!(msg.contains("unknown flag --step"), "{msg}");
+        assert!(msg.contains("--steps"), "{msg}");
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(ParsedArgs::parse("x", toks(&["--steps"]), &["steps"], 0).is_err());
+        assert!(
+            ParsedArgs::parse("x", toks(&["--steps", "--bench", "2d5pt"]), &["steps", "bench"], 0)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn duplicate_flag_is_an_error() {
+        assert!(ParsedArgs::parse(
+            "x",
+            toks(&["--n", "1", "--n", "2"]),
+            &["n"],
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn excess_positional_is_an_error() {
+        assert!(ParsedArgs::parse("info", toks(&["stray"]), &[], 0).is_err());
+    }
+
+    #[test]
+    fn typed_getter_rejects_garbage() {
+        let a = ParsedArgs::parse("x", toks(&["--n", "12x"]), &["n"], 0).unwrap();
+        assert!(a.get_usize("n", 7).is_err());
+        let b = ParsedArgs::parse("x", toks(&["--n", "12"]), &["n"], 0).unwrap();
+        assert_eq!(b.get_usize("n", 7).unwrap(), 12);
+        assert_eq!(b.get_usize("m", 7).unwrap(), 7);
+    }
+}

@@ -1,7 +1,9 @@
-//! Shared utilities: deterministic PRNGs, statistics, formatting and a
-//! minimal property-testing framework (external test/bench crates are not
-//! available in the vendored dependency set).
+//! Shared utilities: deterministic PRNGs, statistics, formatting, typed
+//! CLI argument parsing, and a minimal property-testing framework
+//! (external test/bench crates are not available in the vendored
+//! dependency set).
 
+pub mod args;
 pub mod check;
 pub mod fmt;
 pub mod rng;

@@ -1,5 +1,16 @@
 //! Small statistics helpers used by benches, the harness and the simulator.
 
+/// Smallest wall-clock interval we trust from `Instant` (1 ns). Rates are
+/// computed against `max(wall, MIN_WALL_SECONDS)` so a 0-duration run
+/// (possible on very fast runs with coarse clocks) yields a finite FOM.
+pub const MIN_WALL_SECONDS: f64 = 1e-9;
+
+/// `units / wall_seconds`, clamped to a measurable wall time so the result
+/// is always finite (no `inf`/`NaN` from 0-duration runs).
+pub fn finite_rate(units: f64, wall_seconds: f64) -> f64 {
+    units / wall_seconds.max(MIN_WALL_SECONDS)
+}
+
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -82,6 +93,15 @@ pub fn time_n(n: usize, mut f: impl FnMut()) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn finite_rate_never_inf_or_nan() {
+        assert!(finite_rate(1e9, 0.0).is_finite());
+        assert!(finite_rate(0.0, 0.0).is_finite());
+        assert_eq!(finite_rate(0.0, 0.0), 0.0);
+        // ordinary case unaffected by the clamp
+        assert_eq!(finite_rate(10.0, 2.0), 5.0);
+    }
 
     #[test]
     fn mean_basic() {

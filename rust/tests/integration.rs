@@ -1,25 +1,28 @@
-//! Integration tests over the full AOT -> PJRT -> coordinator stack.
+//! Integration tests over the full AOT -> PJRT -> session stack.
 //!
 //! These close the cross-language gold chain: the jnp oracle validated the
 //! Pallas kernels (pytest), the Pallas kernels were lowered to the HLO
-//! artifacts, and here the artifacts executed through PJRT are checked
-//! against the *independent* rust CPU gold executor.
+//! artifacts, and here the artifacts executed through PJRT (behind the
+//! `perks::session` API) are checked against the *independent* rust CPU
+//! gold executor.
 //!
 //! Requires `make artifacts`; every test skips cleanly if the artifact
 //! directory is missing (e.g. fresh checkout without python).
 
-use perks::coordinator::{CgDriver, ExecMode, StencilDriver};
+use std::rc::Rc;
+
 use perks::runtime::{HostTensor, Runtime};
+use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
 use perks::sparse::gen;
 use perks::stencil::{self, gold, Domain};
 
-fn runtime() -> Option<Runtime> {
+fn runtime() -> Option<Rc<Runtime>> {
     let dir = Runtime::default_dir();
     if !dir.join("manifest.txt").exists() {
         eprintln!("skipping: {} has no manifest (run `make artifacts`)", dir.display());
         return None;
     }
-    Some(Runtime::new(dir).expect("runtime"))
+    Some(Rc::new(Runtime::new(dir).expect("runtime")))
 }
 
 #[test]
@@ -36,31 +39,36 @@ fn all_artifacts_load_and_compile() {
     assert_eq!(rt.metrics().compilations, before);
 }
 
-fn check_stencil_family(rt: &Runtime, bench: &str, interior: &str, dtype: &str, steps: usize) {
-    let driver = StencilDriver::new(rt, bench, interior, dtype).expect("driver");
+fn check_stencil_family(
+    rt: &Rc<Runtime>,
+    bench: &str,
+    interior: &str,
+    dtype: &str,
+    steps: usize,
+) {
+    let seed = 4242;
     let spec = stencil::spec(bench).unwrap();
     let dims: Vec<usize> = interior.split('x').map(|d| d.parse().unwrap()).collect();
     let mut dom = Domain::for_spec(&spec, &dims).unwrap();
-    dom.randomize(4242);
+    dom.randomize(seed);
 
     // the independent rust oracle
     let want = gold::run(&spec, &dom, steps).unwrap();
 
-    let padded: Vec<usize> = if spec.dims == 2 {
-        vec![dom.padded[1], dom.padded[2]]
-    } else {
-        dom.padded.to_vec()
-    };
-    let x0 = match dtype {
-        "f64" => HostTensor::f64(&padded, dom.data.clone()),
-        _ => HostTensor::f32(&padded, dom.to_f32()),
-    };
     let tol = if dtype == "f64" { 1e-11 } else { 2e-4 };
     let mut first: Option<Vec<f64>> = None;
     for mode in ExecMode::all() {
-        let rep = driver.run(mode, &x0, steps).expect(mode.name());
+        let mut session = SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::stencil(bench, interior, dtype))
+            .mode(mode)
+            .seed(seed)
+            .build()
+            .expect(mode.name());
+        let rep = session.run(steps).expect(mode.name());
         assert_eq!(rep.steps, steps);
-        let got = rep.state[0].to_f64_vec().unwrap();
+        assert!(rep.fom.is_finite(), "{bench} {}: FOM must be finite", mode.name());
+        let got = session.state_f64().unwrap();
         let diff = got
             .iter()
             .zip(&want.data)
@@ -106,22 +114,28 @@ fn pjrt_stencil_f64_matches_gold_tightly() {
 #[test]
 fn impulse_response_reveals_correct_weights() {
     // cross-language weight agreement: a unit impulse at the center maps,
-    // after one step, to exactly the (offset, weight) catalog entries
+    // after one step, to exactly the (offset, weight) catalog entries.
+    // Uses the session's initial_domain hook.
     let Some(rt) = runtime() else { return };
-    let driver = StencilDriver::new(&rt, "2d5pt", "128x128", "f32").unwrap();
     let spec = stencil::spec("2d5pt").unwrap();
     let p = 130usize;
-    let mut field = vec![0.0f32; p * p];
+    let mut field = vec![0.0f64; p * p];
     let (cy, cx) = (65usize, 65usize);
     field[cy * p + cx] = 1.0;
-    let x0 = HostTensor::f32(&[p, p], field);
-    let rep = driver.run(ExecMode::HostLoop, &x0, 1).unwrap();
-    let out = rep.state[0].as_f32().unwrap();
+    let mut session = SessionBuilder::new()
+        .backend(Backend::pjrt(rt.clone()))
+        .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+        .initial_domain(field)
+        .mode(ExecMode::HostLoop)
+        .build()
+        .unwrap();
+    session.run(1).unwrap();
+    let out = session.state_f64().unwrap();
     for ((_, dy, dx), w) in spec.offsets.iter().zip(spec.weights()) {
         // impulse spreads to the *opposite* offset positions
         let y = (cy as i64 - *dy as i64) as usize;
         let x = (cx as i64 - *dx as i64) as usize;
-        let got = out[y * p + x] as f64;
+        let got = out[y * p + x];
         assert!(
             (got - w).abs() < 1e-6,
             "offset ({dy},{dx}): got {got}, want weight {w}"
@@ -130,58 +144,63 @@ fn impulse_response_reveals_correct_weights() {
 }
 
 #[test]
-fn cg_artifact_modes_agree_and_converge() {
+fn cg_session_modes_agree_and_converge() {
     let Some(rt) = runtime() else { return };
-    let driver = CgDriver::new(&rt, 1024).unwrap();
-    let a = gen::poisson2d(32);
-    assert_eq!(a.nnz(), driver.nnz);
-    let (data, cols, rows) = a.to_coo_f32();
-    let data = HostTensor::f32(&[driver.nnz], data);
-    let cols = HostTensor::i32(&[driver.nnz], cols);
-    let rows = HostTensor::i32(&[driver.nnz], rows);
-    let b: Vec<f32> = gen::rhs(1024, 5).iter().map(|&v| v as f32).collect();
-    let bb: f64 = b.iter().map(|&v| (v as f64) * (v as f64)).sum();
-
-    let h = driver.run(ExecMode::HostLoop, &data, &cols, &rows, &b, 64).unwrap();
-    let p = driver.run(ExecMode::Persistent, &data, &cols, &rows, &b, 64).unwrap();
-    assert_eq!(h.invocations, 64);
-    assert_eq!(p.invocations, 8); // fused by 8
-    let dx = h
-        .x
-        .iter()
-        .zip(&p.x)
-        .map(|(a, b)| (a - b).abs() as f64)
-        .fold(0.0, f64::max);
+    let build = |mode: ExecMode| {
+        SessionBuilder::new()
+            .backend(Backend::pjrt(rt.clone()))
+            .workload(Workload::cg(1024))
+            .mode(mode)
+            .seed(5)
+            .build()
+            .unwrap()
+    };
+    let mut h = build(ExecMode::HostLoop);
+    let mut p = build(ExecMode::Persistent);
+    let hr = h.run(64).unwrap();
+    let pr = p.run(64).unwrap();
+    assert_eq!(hr.invocations, 64);
+    assert_eq!(pr.invocations, 8); // fused by 8
+    let hx = h.state_f64().unwrap();
+    let px = p.state_f64().unwrap();
+    let dx = hx.iter().zip(&px).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
     assert!(dx < 1e-3, "host-loop vs persistent iterates differ by {dx}");
     // converged well below the rhs norm after 64 iterations
-    assert!(h.rr < 1e-4 * bb, "rr {} vs bb {bb}", h.rr);
+    let rr0: f64 = gen::rhs(1024, 5)
+        .iter()
+        .map(|&v| (v as f32 as f64) * (v as f32 as f64))
+        .sum();
+    let rr = hr.residual.unwrap();
+    assert!(rr < 1e-4 * rr0, "rr {rr} vs rr0 {rr0}");
     // true residual on device agrees with the recurrence
-    let resid = driver.residual(&data, &cols, &rows, &p.x, &b).unwrap();
-    assert!((resid - p.rr).abs() < 1e-2 * (resid + p.rr + 1e-9), "{resid} vs {}", p.rr);
+    let resid = p.true_residual().unwrap().unwrap();
+    let prr = pr.residual.unwrap();
+    assert!((resid - prr).abs() < 1e-2 * (resid + prr + 1e-9), "{resid} vs {prr}");
 }
 
 #[test]
-fn cg_artifact_matches_rust_native_solver() {
+fn cg_session_matches_rust_native_solver() {
     // the PJRT CG (pallas fused update + jnp spmv) and the rust-native CG
     // (merge spmv + fused passes) must walk the same iterates
     let Some(rt) = runtime() else { return };
-    let driver = CgDriver::new(&rt, 1024).unwrap();
-    let a = gen::poisson2d(32);
-    let (data, cols, rows) = a.to_coo_f32();
-    let data = HostTensor::f32(&[driver.nnz], data);
-    let cols = HostTensor::i32(&[driver.nnz], cols);
-    let rows = HostTensor::i32(&[driver.nnz], rows);
-    let b64 = gen::rhs(1024, 5);
-    let b: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+    let mut session = SessionBuilder::new()
+        .backend(Backend::pjrt(rt.clone()))
+        .workload(Workload::cg(1024))
+        .mode(ExecMode::Persistent)
+        .seed(5)
+        .build()
+        .unwrap();
+    session.run(24).unwrap();
+    let pjrt_x = session.state_f64().unwrap();
 
-    let pjrt = driver.run(ExecMode::Persistent, &data, &cols, &rows, &b, 24).unwrap();
+    let a = gen::poisson2d(32);
+    let b64 = gen::rhs(1024, 5);
     let opts = perks::cg::CgOptions { max_iters: 24, tol: 0.0, parts: 8, threaded: false };
     let native = perks::cg::solve_persistent(&a, &b64, &opts).unwrap();
-    let dx = pjrt
-        .x
+    let dx = pjrt_x
         .iter()
         .zip(&native.x)
-        .map(|(a, b)| (*a as f64 - b).abs())
+        .map(|(a, b)| (a - b).abs())
         .fold(0.0, f64::max);
     let scale = native.x.iter().map(|v| v.abs()).fold(0.0, f64::max);
     assert!(dx < 1e-3 * (1.0 + scale), "PJRT vs native iterates differ by {dx}");
@@ -190,23 +209,53 @@ fn cg_artifact_matches_rust_native_solver() {
 #[test]
 fn runtime_metrics_track_traffic() {
     let Some(rt) = runtime() else { return };
+    let mut session = SessionBuilder::new()
+        .backend(Backend::pjrt(rt.clone()))
+        .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+        .mode(ExecMode::HostLoop)
+        .seed(1)
+        .build()
+        .unwrap();
     rt.reset_metrics();
-    let driver = StencilDriver::new(&rt, "2d5pt", "128x128", "f32").unwrap();
-    let dom = {
-        let spec = stencil::spec("2d5pt").unwrap();
-        let mut d = Domain::for_spec(&spec, &[128, 128]).unwrap();
-        d.randomize(1);
-        d
-    };
-    let x0 = HostTensor::f32(&[130, 130], dom.to_f32());
-    rt.reset_metrics();
-    driver.run(ExecMode::HostLoop, &x0, 16).unwrap();
+    session.run(16).unwrap();
     let m = rt.metrics();
     assert_eq!(m.invocations, 16);
     // 16 uploads + 16 downloads of the padded f32 domain
     let tensor_bytes = (130 * 130 * 4) as u64;
     assert_eq!(m.bytes_in, 16 * tensor_bytes);
     assert_eq!(m.bytes_out, 16 * tensor_bytes);
+}
+
+#[test]
+fn legacy_driver_shims_still_work() {
+    // the deprecated pre-session constructors must keep compiling and
+    // producing the same numbers as the session API
+    let Some(rt) = runtime() else { return };
+    #[allow(deprecated)]
+    let driver =
+        perks::coordinator::StencilDriver::new(&rt, "2d5pt", "128x128", "f32").unwrap();
+    let spec = stencil::spec("2d5pt").unwrap();
+    let mut dom = Domain::for_spec(&spec, &[128, 128]).unwrap();
+    dom.randomize(4242);
+    let x0 = HostTensor::f32(&[130, 130], dom.to_f32());
+    let rep = driver.run(ExecMode::HostLoop, &x0, 8).unwrap();
+    assert!(rep.cells_per_sec(driver.interior_cells()).is_finite());
+
+    let mut session = SessionBuilder::new()
+        .backend(Backend::pjrt(rt.clone()))
+        .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+        .mode(ExecMode::HostLoop)
+        .seed(4242)
+        .build()
+        .unwrap();
+    session.run(8).unwrap();
+    let via_session = session.state_f64().unwrap();
+    let via_driver = rep.state[0].to_f64_vec().unwrap();
+    assert_eq!(via_driver, via_session, "shim and session must agree exactly");
+
+    #[allow(deprecated)]
+    let cg = perks::coordinator::CgDriver::new(&rt, 1024).unwrap();
+    assert_eq!(cg.n, 1024);
 }
 
 #[test]

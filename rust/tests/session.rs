@@ -1,0 +1,338 @@
+//! Black-box tests of the `perks::session` API: builder validation,
+//! cross-backend state agreement, resumable advance semantics, and the
+//! `Auto` execution policy. Everything here runs without AOT artifacts
+//! except the PJRT cross-backend checks, which skip cleanly.
+
+use std::rc::Rc;
+
+use perks::runtime::Runtime;
+use perks::session::{Backend, ExecMode, ExecPolicy, SessionBuilder, Workload};
+use perks::simgpu::device::{a100, v100};
+use perks::stencil::{self, gold, Domain};
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Rc::new(Runtime::new(dir).expect("runtime")))
+}
+
+fn err_msg(r: perks::Result<perks::Session>) -> String {
+    format!("{}", r.err().expect("expected a build error"))
+}
+
+// ---------------------------------------------------------------------
+// builder validation (no artifacts needed)
+// ---------------------------------------------------------------------
+
+#[test]
+fn builder_requires_backend_and_workload() {
+    assert!(err_msg(SessionBuilder::new().build()).contains("no backend"));
+    assert!(
+        err_msg(SessionBuilder::new().backend(Backend::cpu(1)).build()).contains("no workload")
+    );
+}
+
+#[test]
+fn builder_rejects_bad_dtype_bench_interior_and_n() {
+    let cpu = || SessionBuilder::new().backend(Backend::cpu(1));
+    assert!(err_msg(cpu().workload(Workload::stencil("2d5pt", "16x16", "bf16")).build())
+        .contains("bad dtype"));
+    assert!(err_msg(cpu().workload(Workload::stencil("nope", "16x16", "f64")).build())
+        .contains("unknown stencil benchmark"));
+    assert!(err_msg(cpu().workload(Workload::stencil("3d7pt", "16x16", "f64")).build())
+        .contains("rank"));
+    assert!(err_msg(cpu().workload(Workload::stencil("2d5pt", "0x16", "f64")).build())
+        .contains("bad interior"));
+    assert!(err_msg(cpu().workload(Workload::cg(1000)).build()).contains("perfect square"));
+}
+
+#[test]
+fn builder_rejects_missing_artifacts() {
+    // a PJRT runtime over an empty dir fails before that; with artifacts,
+    // an un-lowered family must fail with a manifest error
+    let Some(rt) = runtime() else { return };
+    let err = SessionBuilder::new()
+        .backend(Backend::pjrt(rt))
+        .workload(Workload::stencil("2d5pt", "9999x9999", "f32"))
+        .mode(ExecMode::Persistent)
+        .build();
+    let msg = format!("{}", err.err().expect("no artifact for 9999x9999"));
+    assert!(msg.contains("artifact"), "{msg}");
+}
+
+#[test]
+fn builder_rejects_incompatible_modes() {
+    assert!(err_msg(
+        SessionBuilder::new()
+            .backend(Backend::cpu(1))
+            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+            .mode(ExecMode::HostLoopResident)
+            .build()
+    )
+    .contains("not supported"));
+    // CG substrates distinguish only host-loop vs persistent
+    assert!(err_msg(
+        SessionBuilder::new()
+            .backend(Backend::simulated(a100()))
+            .workload(Workload::cg(1024))
+            .mode(ExecMode::HostLoopResident)
+            .build()
+    )
+    .contains("not supported"));
+}
+
+#[test]
+fn steps_not_a_multiple_of_the_chunk_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    let mut session = SessionBuilder::new()
+        .backend(Backend::pjrt(rt))
+        .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+        .mode(ExecMode::Persistent)
+        .seed(1)
+        .build()
+        .unwrap();
+    let chunk = session.fused_chunk();
+    assert!(chunk > 1, "persistent artifacts fuse more than one step");
+    let err = session.run(chunk + 1).unwrap_err();
+    assert!(matches!(err, perks::Error::Invalid(_)), "{err}");
+    // aligned_steps makes the same request valid
+    assert_eq!(session.aligned_steps(chunk + 1), 2 * chunk);
+    session.run(session.aligned_steps(chunk + 1)).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// cross-backend state agreement for stencils
+// ---------------------------------------------------------------------
+
+#[test]
+fn cpu_backend_modes_are_bit_identical_and_match_gold() {
+    let seed = 99;
+    let spec = stencil::spec("2d5pt").unwrap();
+    let mut dom = Domain::for_spec(&spec, &[24, 24]).unwrap();
+    dom.randomize(seed);
+    let want = gold::run(&spec, &dom, 6).unwrap();
+
+    let mut states = Vec::new();
+    for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+        let mut s = SessionBuilder::new()
+            .backend(Backend::cpu(3))
+            .workload(Workload::stencil("2d5pt", "24x24", "f64"))
+            .mode(mode)
+            .seed(seed)
+            .build()
+            .unwrap();
+        s.run(6).unwrap();
+        let got = s.state_f64().unwrap();
+        let diff = got
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(diff < 1e-12, "{}: diverged from gold by {diff}", mode.name());
+        states.push(got);
+    }
+    // same arithmetic, same partitioning: the two models are bit-identical
+    assert_eq!(states[0], states[1]);
+}
+
+#[test]
+fn pjrt_and_cpu_backends_agree_on_the_same_workload() {
+    let Some(rt) = runtime() else { return };
+    let seed = 31;
+    let steps = 16;
+    let mut pjrt = SessionBuilder::new()
+        .backend(Backend::pjrt(rt))
+        .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+        .mode(ExecMode::HostLoop)
+        .seed(seed)
+        .build()
+        .unwrap();
+    let mut cpu = SessionBuilder::new()
+        .backend(Backend::cpu(4))
+        .workload(Workload::stencil("2d5pt", "128x128", "f64"))
+        .mode(ExecMode::Persistent)
+        .seed(seed)
+        .build()
+        .unwrap();
+    pjrt.run(steps).unwrap();
+    cpu.run(steps).unwrap();
+    let a = pjrt.state_f64().unwrap();
+    let b = cpu.state_f64().unwrap();
+    assert_eq!(a.len(), b.len(), "both backends expose the padded domain");
+    let diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+    // f32 artifact vs f64 CPU substrate: agreement to f32 accuracy
+    assert!(diff < 2e-4, "backends diverged by {diff}");
+}
+
+// ---------------------------------------------------------------------
+// advance semantics and reports
+// ---------------------------------------------------------------------
+
+#[test]
+fn advance_is_resumable_and_run_restarts() {
+    let build = || {
+        SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+            .mode(ExecMode::Persistent)
+            .seed(5)
+            .build()
+            .unwrap()
+    };
+    let mut once = build();
+    once.run(8).unwrap();
+    let mut twice = build();
+    twice.prepare().unwrap();
+    twice.advance(3).unwrap();
+    twice.advance(5).unwrap();
+    assert_eq!(once.state_f64().unwrap(), twice.state_f64().unwrap());
+    assert_eq!(twice.report().steps, 8);
+    // run() re-prepares: a second run is independent, not 16 more steps
+    let again = once.run(8).unwrap();
+    assert_eq!(again.steps, 8);
+    assert_eq!(once.state_f64().unwrap(), twice.state_f64().unwrap());
+}
+
+#[test]
+fn reports_are_finite_and_account_traffic() {
+    let mut s = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::stencil("2d5pt", "32x32", "f64"))
+        .mode(ExecMode::Persistent)
+        .build()
+        .unwrap();
+    let rep = s.run(4).unwrap();
+    assert!(rep.fom.is_finite() && rep.fom > 0.0);
+    assert_eq!(rep.fom_unit, "cells/s");
+    assert_eq!(rep.invocations, 1); // one persistent launch
+    assert!(rep.host_bytes > 0);
+    assert!(rep.barrier_wait_seconds.is_some());
+    assert!(rep.residual.is_none());
+
+    let mut h = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::stencil("2d5pt", "32x32", "f64"))
+        .mode(ExecMode::HostLoop)
+        .build()
+        .unwrap();
+    let hrep = h.run(4).unwrap();
+    assert_eq!(hrep.invocations, 4); // one relaunch per step
+    assert!(
+        hrep.host_bytes > rep.host_bytes,
+        "host-loop must move more slow-tier traffic ({} vs {})",
+        hrep.host_bytes,
+        rep.host_bytes
+    );
+}
+
+#[test]
+fn cg_sessions_report_residuals_across_backends() {
+    let mut s = SessionBuilder::new()
+        .backend(Backend::cpu(1))
+        .workload(Workload::cg(256))
+        .mode(ExecMode::Persistent)
+        .seed(3)
+        .build()
+        .unwrap();
+    let rep = s.run(10).unwrap();
+    assert_eq!(rep.fom_unit, "iters/s");
+    let rr = rep.residual.expect("cg reports the rr recurrence");
+    let true_r = s.true_residual().unwrap().expect("cpu cg computes ||b-Ax||^2");
+    assert!(rr >= 0.0 && true_r >= 0.0);
+    // while not deeply converged, the recurrence tracks the true residual
+    let rr0: f64 = perks::sparse::gen::rhs(256, 3).iter().map(|v| v * v).sum();
+    assert!(
+        (true_r - rr).abs() <= 1e-9 * rr0.max(1.0),
+        "recurrence {rr} vs true {true_r} (rr0 {rr0})"
+    );
+    // x is exposed as state
+    assert_eq!(s.state_f64().unwrap().len(), 256);
+}
+
+// ---------------------------------------------------------------------
+// ExecPolicy::Auto
+// ---------------------------------------------------------------------
+
+#[test]
+fn auto_policy_resolves_to_a_valid_mode_everywhere() {
+    // (backend, workload) grid that runs without artifacts
+    let combos: Vec<(Backend, Workload)> = vec![
+        (Backend::cpu(2), Workload::stencil("2d5pt", "24x24", "f64")),
+        (Backend::cpu(1), Workload::cg(64)),
+        (Backend::simulated(a100()), Workload::stencil("2d5pt", "3072x3072", "f64")),
+        (Backend::simulated(v100()), Workload::cg(16384)),
+    ];
+    for (backend, workload) in combos {
+        let name = backend.name();
+        let mut s = SessionBuilder::new()
+            .backend(backend)
+            .workload(workload.clone())
+            .policy(ExecPolicy::Auto)
+            .build()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            ExecMode::all().contains(&s.mode()),
+            "{name}: auto picked an unknown mode"
+        );
+        let rep = s.run(s.aligned_steps(8)).unwrap();
+        assert!(rep.fom.is_finite(), "{name}: {:?}", rep);
+    }
+}
+
+#[test]
+fn auto_thread_count_resolves_on_the_cpu_backend() {
+    // threads == 0 => measured autotune; the session must still build and
+    // produce gold-accurate results
+    let seed = 12;
+    let spec = stencil::spec("2d5pt").unwrap();
+    let mut dom = Domain::for_spec(&spec, &[16, 16]).unwrap();
+    dom.randomize(seed);
+    let want = gold::run(&spec, &dom, 4).unwrap();
+    let mut s = SessionBuilder::new()
+        .backend(Backend::cpu(0))
+        .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+        .mode(ExecMode::Persistent)
+        .seed(seed)
+        .build()
+        .unwrap();
+    s.run(4).unwrap();
+    let got = s.state_f64().unwrap();
+    let diff = got
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(diff < 1e-12, "auto-threaded run diverged from gold by {diff}");
+}
+
+// ---------------------------------------------------------------------
+// simulated backend
+// ---------------------------------------------------------------------
+
+#[test]
+fn simulated_backend_reproduces_the_paper_ordering() {
+    let mut walls = Vec::new();
+    for mode in ExecMode::all() {
+        let mut s = SessionBuilder::new()
+            .backend(Backend::simulated(a100()))
+            .workload(Workload::stencil("2d5pt", "3072x3072", "f64"))
+            .mode(mode)
+            .build()
+            .unwrap();
+        walls.push(s.run(1000).unwrap().wall_seconds);
+    }
+    // host-loop > resident > persistent
+    assert!(walls[0] > walls[1] && walls[1] > walls[2], "{walls:?}");
+    // no numeric state to expose
+    let mut s = SessionBuilder::new()
+        .backend(Backend::simulated(v100()))
+        .workload(Workload::stencil("2d5pt", "1024x1024", "f32"))
+        .mode(ExecMode::Persistent)
+        .build()
+        .unwrap();
+    s.run(10).unwrap();
+    assert!(s.state_f64().is_err());
+}
