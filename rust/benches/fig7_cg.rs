@@ -1,11 +1,45 @@
 //! Fig 7: PERKS CG speedup over the Ginkgo-like baseline + the baseline's
 //! sustained memory bandwidth, for the 20 Table V dataset analogs, split
-//! by L2 capacity, on A100 and V100, sp and dp.
+//! by L2 capacity, on A100 and V100, sp and dp — plus a **measured** CPU
+//! section: the spawn-once persistent worker pool (`cg::pool`) against
+//! the spawn-per-iteration host-loop baseline on a ≥64k-row Poisson
+//! system, with wall seconds, launches and OS thread spawns.
 //!
 //! Run: `cargo bench --bench fig7_cg`
 
 use perks::harness;
 use perks::simgpu::device::{a100, v100};
+use perks::util::fmt::Table;
+
+fn measured_cpu_section() {
+    let n = 65_536; // poisson2d(256)
+    let iters = 40;
+    let threads = 4;
+    println!("Measured CPU CG — pooled persistent vs spawn-per-iteration host-loop");
+    println!("({n}-row Poisson, {iters} fixed iterations, {threads} threads)\n");
+    let modes = harness::measure_cpu_cg_modes(n, iters, threads, 64).unwrap();
+    let mut t = Table::new(&["mode", "wall s", "launches", "advance spawns", "iters/s"]);
+    for m in &modes {
+        t.row(&[
+            m.mode.name().into(),
+            format!("{:.6}", m.wall_seconds),
+            m.invocations.to_string(),
+            m.advance_spawns.to_string(),
+            format!("{:.1}", m.iters_per_sec),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "pooled persistent speedup over host-loop: {:.2}x (spawn-once + cached plan + fused passes)",
+        modes[0].wall_seconds / modes[1].wall_seconds.max(1e-12)
+    );
+    let json: Vec<String> = modes.iter().map(|m| m.json()).collect();
+    println!(
+        "BENCH {{\"bench\":\"fig7_cpu_cg\",\"rows\":{n},\"iters\":{iters},\"threads\":{threads},\"modes\":[{}]}}",
+        json.join(",")
+    );
+    println!();
+}
 
 fn main() {
     for dev in [a100(), v100()] {
@@ -15,6 +49,7 @@ fn main() {
             println!();
         }
     }
+    measured_cpu_section();
     println!("paper: within-L2 geomeans 4.55/4.87x (A100 sp/dp), 4.32/5.05x (V100);");
     println!("beyond-L2 1.30/1.15x (A100), 1.44/1.59x (V100).");
 }

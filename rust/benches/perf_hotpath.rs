@@ -112,4 +112,32 @@ fn main() {
     }
 
     print!("{}", t.render());
+
+    // 6. CG execution models on a 64k-row Poisson system: the spawn-once
+    // worker pool (persistent) vs spawn-per-iteration SpMV (host-loop).
+    // Reported per mode: wall seconds, launches, and OS thread spawns
+    // during `advance` — the relaunch overhead PERKS eliminates.
+    {
+        let n = 65_536; // poisson2d(256): ≥64k rows, ~327k nnz
+        let iters = 40;
+        let threads = 4;
+        println!("\nCG execution models ({n} rows, {iters} iters, {threads} threads)\n");
+        let modes = perks::harness::measure_cpu_cg_modes(n, iters, threads, 64).unwrap();
+        let mut ct = Table::new(&["mode", "wall", "launches", "spawns", "iters/s"]);
+        for m in &modes {
+            ct.row(&[
+                m.mode.name().into(),
+                perks::util::fmt::secs(m.wall_seconds),
+                m.invocations.to_string(),
+                m.advance_spawns.to_string(),
+                format!("{:.1}", m.iters_per_sec),
+            ]);
+        }
+        print!("{}", ct.render());
+        let json: Vec<String> = modes.iter().map(|m| m.json()).collect();
+        println!(
+            "BENCH {{\"bench\":\"cg_pool_vs_hostloop\",\"rows\":{n},\"iters\":{iters},\"threads\":{threads},\"modes\":[{}]}}",
+            json.join(",")
+        );
+    }
 }

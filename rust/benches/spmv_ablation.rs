@@ -52,7 +52,7 @@ fn main() {
         let mut y = vec![0.0; a.n_rows];
         let tn = median(&time_n(9, || naive::spmv_parallel(a, &x, &mut y, threads)));
         let plan = merge::MergePlan::new(a, threads * 8);
-        let tm = median(&time_n(9, || merge::spmv_parallel(a, &plan, &x, &mut y)));
+        let tm = median(&time_n(9, || merge::spmv_parallel(a, &plan, &x, &mut y, threads)));
         let tp = median(&time_n(9, || {
             std::hint::black_box(merge::MergePlan::new(a, threads * 8));
         }));

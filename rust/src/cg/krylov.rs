@@ -6,6 +6,13 @@
 //! data (merge plan, preconditioner diagonal), fuse the BLAS-1 passes.
 //! Host-loop rebuilds/streams them per iteration. Iterates are identical
 //! across models (tested).
+//!
+//! These solvers run single-threaded; the spawn-once worker-pool runtime
+//! that gives plain CG its resident time loop and barrier-reduced dots
+//! lives in [`crate::cg::pool`] (exposed as [`crate::cg::solve_pooled`]).
+//! Extending the pool protocol to the preconditioned `z`/`rz` recurrence
+//! here is the natural follow-up — the reduction slots and phase barriers
+//! generalize unchanged.
 
 use crate::error::{Error, Result};
 use crate::sparse::csr::Csr;

@@ -1,11 +1,34 @@
 //! Conjugate-gradient solver substrate: host-loop (Ginkgo-like baseline)
 //! and persistent (PERKS) execution models, plus the §VI-G2 caching
-//! policies.
+//! policies. The persistent model has two realizations: `solver`'s fused
+//! single-thread loop, and `pool`'s spawn-once worker-pool runtime with
+//! the time loop resident in the workers (the paper's execution model,
+//! physically).
 
 pub mod krylov;
 pub mod policy;
+pub mod pool;
 pub mod solver;
 pub mod stationary;
 
 pub use policy::{CgPolicy, CgTraffic};
-pub use solver::{solve_host_loop, solve_persistent, CgOptions, CgResult};
+pub use pool::{CgPool, PoolRun};
+pub use solver::{solve_host_loop, solve_persistent, solve_pooled, CgOptions, CgResult};
+
+/// The canonical per-block partial of the pooled reduction order: `f(i)`
+/// accumulated left-to-right over rows `[s, s + l)` from a fresh 0.0.
+///
+/// Every site that participates in the bit-identity contract — the pool
+/// workers' dot/norm partials, the serial `session::cpu::CpuCg::step`,
+/// and the pool's test reference — computes block partials through this
+/// one helper, so the fold order the contract depends on is single-sourced
+/// (the cross-block fold is block-index order: `GridBarrier::sync_sum`
+/// slot order, or a plain left fold serially).
+#[inline]
+pub(crate) fn block_partial(s: usize, l: usize, mut f: impl FnMut(usize) -> f64) -> f64 {
+    let mut part = 0.0;
+    for i in s..s + l {
+        part += f(i);
+    }
+    part
+}

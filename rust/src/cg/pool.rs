@@ -1,0 +1,717 @@
+//! Persistent CG worker pool: the PERKS execution model for CG, physically
+//! realized on CPU.
+//!
+//! # The GPU ↔ CPU analogy
+//!
+//! The paper's persistent CG kernel moves the *time loop inside the
+//! kernel*: thread blocks are launched once, keep their share of the
+//! matrix/vectors resident, synchronize iterations with `grid.sync()`, and
+//! compute the two CG dot products as device-wide reductions between
+//! barriers (§V-C). This module is that model with CPU nouns:
+//!
+//! | GPU (PERKS kernel)              | CPU (`CgPool`)                       |
+//! |---------------------------------|--------------------------------------|
+//! | thread block                    | pool worker (OS thread, spawn-once)  |
+//! | kernel launch / relaunch        | `CgPool::spawn` (exactly once/solve) |
+//! | TB's merge-path share           | worker's `MergePlan` share range     |
+//! | registers/smem-resident slices  | worker's x/r/p/Ap row blocks (hot in |
+//! |                                 | the core's L1/L2 across iterations)  |
+//! | `grid.sync()`                   | `GridBarrier::sync`                  |
+//! | grid-sync + device reduction    | `GridBarrier::sync_sum` all-reduce   |
+//!
+//! The host-loop baseline (`spmv::merge::spmv_parallel` called per
+//! iteration) re-spawns and re-joins its workers on **every SpMV** — the
+//! relaunch overhead the paper eliminates. Here `advance` performs zero
+//! thread spawns: the workers are parked on a condvar between solves and
+//! run the whole iteration loop internally.
+//!
+//! # Fused passes
+//!
+//! Each iteration is two fused sweeps per worker over its resident rows —
+//! (SpMV share consumption + carry fixup + partial `p·Ap`) then
+//! (x/r update + partial `r·r` + p update) — so the per-iteration vector
+//! traffic physically matches the 2-pass model `CpuCg::bytes_per_iter`
+//! advertises, instead of the 5 separate streamed passes of the baseline.
+//!
+//! # Determinism
+//!
+//! Iterates are **bit-identical to the serial `CpuCg::step` path at every
+//! worker count**. Three rules make that hold:
+//!
+//! 1. SpMV shares are consumed with the exact `consume_share` arithmetic,
+//!    and partial-row carries are applied in share-index order (the serial
+//!    fixup order) by the owner of the target row.
+//! 2. Dot products are reduced over `parts` fixed row *blocks* — not over
+//!    workers — with per-block partials accumulated left-to-right and
+//!    folded in block-index order by `GridBarrier::sync_sum`. The serial
+//!    path uses the same block decomposition.
+//! 3. All scalar recurrences (alpha, beta, rr) are replicated: every
+//!    worker folds the same slots in the same order, so every worker
+//!    computes the same bits without a broadcast.
+//!
+//! # Safety protocol
+//!
+//! Vectors live in `UnsafeCell` buffers shared by the main thread and the
+//! workers. Exclusive access is phased: the main thread touches them only
+//! while the pool is idle (the command/completion handshake through the
+//! control mutex establishes happens-before in both directions), and
+//! within a run the workers partition writes by row ownership with
+//! `GridBarrier::sync` separating producer and consumer phases — the same
+//! argument as `stencil::parallel::SharedGrid` and the `spmv_parallel`
+//! scoped spawn.
+//!
+//! CPU pinning: on a thread-per-core substrate each worker would also be
+//! pinned to its own core (`sched_setaffinity`, as in the mini-async
+//! runtime's `LocalExecutor`); that needs a libc binding the vendored
+//! dependency set doesn't carry, so [`pin_to_core`] is a documented no-op
+//! hook — see its docs for the production shape.
+
+use std::cell::UnsafeCell;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::barrier::GridBarrier;
+use crate::error::{Error, Result};
+use crate::sparse::csr::Csr;
+use crate::spmv::merge::{self, MergePlan};
+use crate::stencil::parallel::partition;
+use crate::util::counters;
+
+/// Shared mutable buffer with phase-disjoint access (see module docs).
+///
+/// The base pointer is captured once at construction (the heap block never
+/// moves: the Vec is never grown), so no exclusive reference to the
+/// container or its contents is ever formed while workers run: concurrent
+/// writes go through [`SharedBuf::ptr`] at owner-disjoint indices, shared
+/// reads through [`SharedBuf::whole`] only in phases where no thread
+/// writes, and barriers order every cross-owner handoff. Raw pointers
+/// carry no aliasing contract, so the disjoint-write protocol is sound
+/// without overlapping `&mut` views.
+struct SharedBuf<T> {
+    /// Owns the allocation (dropped with the pool); never accessed as a
+    /// `Vec` again after construction.
+    _storage: UnsafeCell<Vec<T>>,
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: access is coordinated by the control handshake + barrier phases.
+unsafe impl<T: Send> Sync for SharedBuf<T> {}
+unsafe impl<T: Send> Send for SharedBuf<T> {}
+
+impl<T> SharedBuf<T> {
+    fn new(mut v: Vec<T>) -> Self {
+        let ptr = v.as_mut_ptr();
+        let len = v.len();
+        Self { _storage: UnsafeCell::new(v), ptr, len }
+    }
+
+    /// SAFETY: no concurrent writer may overlap the read (phase protocol).
+    unsafe fn whole(&self) -> &[T] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+
+    /// Base pointer for concurrent disjoint-index writes (workers never
+    /// form `&mut` views — all shared-phase writes go through this).
+    fn ptr(&self) -> *mut T {
+        self.ptr
+    }
+
+    /// SAFETY: caller must be the only thread touching the buffer (the
+    /// main thread between runs); used for the state copy in/out.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn whole_mut(&self) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+}
+
+/// Command issued to the parked workers; epoch-stamped in `CtlState`.
+#[derive(Clone, Copy)]
+enum Cmd {
+    Idle,
+    /// Run up to `iters` iterations from recurrence state `rr`, stopping
+    /// early once `rr <= threshold` (or `rr <= 0`, the exact-solution
+    /// short-circuit of the serial path).
+    Run { iters: usize, rr: f64, threshold: f64 },
+    Shutdown,
+}
+
+/// What one `Run` produced. Every worker computes identical values; worker
+/// 0 publishes them.
+#[derive(Clone, Default)]
+struct Outcome {
+    iters: usize,
+    rr: f64,
+    error: Option<String>,
+}
+
+struct CtlState {
+    epoch: u64,
+    cmd: Cmd,
+    finished: usize,
+    outcome: Outcome,
+}
+
+struct Control {
+    state: Mutex<CtlState>,
+    cmd_cv: Condvar,
+    done_cv: Condvar,
+}
+
+impl Control {
+    /// Lock the control state, recovering from poisoning (a worker panic
+    /// while holding the lock) — the state is plain data with no invariant
+    /// a panic can break, and refusing would turn one panic into a
+    /// double-panic abort in `Drop`.
+    fn lock(&self) -> std::sync::MutexGuard<'_, CtlState> {
+        self.state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Everything the resident workers share.
+struct Shared {
+    a: Arc<Csr>,
+    plan: MergePlan,
+    /// Row blocks of the deterministic reduction (and of vector-update
+    /// ownership): `partition(n, parts)`, identical to the serial path.
+    blocks: Vec<(usize, usize)>,
+    x: SharedBuf<f64>,
+    r: SharedBuf<f64>,
+    p: SharedBuf<f64>,
+    ap: SharedBuf<f64>,
+    /// Per-share partial-row carries, written by share owners, applied in
+    /// share order by row owners (the serial fixup order).
+    carries: SharedBuf<(usize, f64)>,
+    barrier: GridBarrier,
+    ctl: Control,
+}
+
+/// Result of one [`CgPool::run`].
+#[derive(Clone, Debug)]
+pub struct PoolRun {
+    /// Iterations actually performed (early-stop on threshold/zero rr,
+    /// or on `error` — the completed iterations are still valid).
+    pub iters: usize,
+    /// Final `r·r` recurrence value after `iters` iterations.
+    pub rr: f64,
+    /// Collective solver error (not positive definite), detected
+    /// identically by every worker before any state update of the failing
+    /// iteration — mirroring the serial `step()` error point.
+    pub error: Option<String>,
+}
+
+impl PoolRun {
+    /// Fold the solver error into a `Result`, for callers that do not
+    /// need the partial-progress accounting.
+    pub fn into_result(self) -> Result<Self> {
+        match self.error {
+            Some(msg) => Err(Error::Solver(msg)),
+            None => Ok(self),
+        }
+    }
+}
+
+/// A pool of persistent CG workers: spawned once, parked between runs,
+/// joined on drop. See the module docs for the execution model.
+pub struct CgPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    spawned: u64,
+}
+
+impl CgPool {
+    /// Spawn the resident workers for one solve. `threads == 0` resolves
+    /// to `available_parallelism`; the effective worker count is clamped
+    /// to the share/block counts so no worker is idle by construction.
+    pub fn spawn(a: Arc<Csr>, plan: MergePlan, threads: usize) -> Result<Self> {
+        if a.n_rows != a.n_cols {
+            // x/p are indexed by column inside the share consumption: a
+            // rectangular matrix would panic some workers mid-barrier
+            return Err(Error::Solver(format!(
+                "matrix not square: {}x{}",
+                a.n_rows, a.n_cols
+            )));
+        }
+        if a.n_rows != plan.n_rows || a.nnz() != plan.nnz {
+            return Err(Error::Solver(format!(
+                "merge plan mismatch: plan for {} rows / {} nnz, matrix has {} rows / {} nnz",
+                plan.n_rows,
+                plan.nnz,
+                a.n_rows,
+                a.nnz()
+            )));
+        }
+        let n = a.n_rows;
+        let parts = plan.parts();
+        let blocks = partition(n, parts);
+        let workers = crate::util::resolve_workers(threads).min(parts).min(blocks.len());
+        let shared = Arc::new(Shared {
+            carries: SharedBuf::new(vec![(0usize, 0.0f64); parts]),
+            barrier: GridBarrier::with_reduction(workers, blocks.len()),
+            blocks,
+            x: SharedBuf::new(vec![0.0; n]),
+            r: SharedBuf::new(vec![0.0; n]),
+            p: SharedBuf::new(vec![0.0; n]),
+            ap: SharedBuf::new(vec![0.0; n]),
+            a,
+            plan,
+            ctl: Control {
+                state: Mutex::new(CtlState {
+                    epoch: 0,
+                    cmd: Cmd::Idle,
+                    finished: 0,
+                    outcome: Outcome::default(),
+                }),
+                cmd_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            },
+        });
+        counters::note_thread_spawns(workers as u64);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let sh = shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("cg-pool-{w}"))
+                .spawn(move || worker_main(&sh, w));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // don't leak the workers that did start: they are
+                    // parked on cmd_cv and would otherwise pin their
+                    // Arc<Shared> (and the matrix) forever. The barrier is
+                    // not armed yet — no worker enters `iterate` without a
+                    // Run command — so a shutdown epoch is safe here.
+                    {
+                        let mut g = shared.ctl.lock();
+                        g.epoch += 1;
+                        g.cmd = Cmd::Shutdown;
+                        shared.ctl.cmd_cv.notify_all();
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Solver(format!("pool spawn failed: {e}")));
+                }
+            }
+        }
+        Ok(Self { shared, handles, workers, spawned: workers as u64 })
+    }
+
+    /// Resident worker count (threads clamped to shares/blocks).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// OS threads this pool has ever spawned — constant after `spawn`,
+    /// which is the point: `run` must never add to it.
+    pub fn spawn_count(&self) -> u64 {
+        self.spawned
+    }
+
+    /// Total time workers spent blocked at the grid barrier (summed).
+    pub fn barrier_wait_seconds(&self) -> f64 {
+        self.shared.barrier.total_wait().as_secs_f64()
+    }
+
+    /// Run up to `iters` CG iterations on state (x, r, p, rr), stopping
+    /// early when `rr <= threshold` (pass 0.0 for fixed-iteration /
+    /// benchmark mode). State is copied into the resident buffers, the
+    /// workers iterate internally (no thread spawns), and the advanced
+    /// state is copied back out — including on a not-positive-definite
+    /// error (`PoolRun::error`), where the iterations completed before
+    /// the failing one are still valid (matching the serial path).
+    /// `Err` is reserved for infrastructure failures (length mismatch).
+    pub fn run(
+        &mut self,
+        x: &mut [f64],
+        r: &mut [f64],
+        p: &mut [f64],
+        rr: f64,
+        threshold: f64,
+        iters: usize,
+    ) -> Result<PoolRun> {
+        let n = self.shared.a.n_rows;
+        if x.len() != n || r.len() != n || p.len() != n {
+            return Err(Error::Solver("pool state length mismatch".into()));
+        }
+        // SAFETY: workers are parked (previous completion handshake
+        // happened-before through the control mutex), so the main thread
+        // has exclusive access to the buffers.
+        unsafe {
+            self.shared.x.whole_mut().copy_from_slice(x);
+            self.shared.r.whole_mut().copy_from_slice(r);
+            self.shared.p.whole_mut().copy_from_slice(p);
+        }
+        {
+            let mut g = self.shared.ctl.lock();
+            g.epoch += 1;
+            g.cmd = Cmd::Run { iters, rr, threshold };
+            g.finished = 0;
+            g.outcome = Outcome::default(); // no stale error/iters carry over
+            self.shared.ctl.cmd_cv.notify_all();
+        }
+        let outcome = {
+            let mut g = self.shared.ctl.lock();
+            while g.finished < self.workers {
+                g = self.shared.ctl.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            }
+            g.outcome.clone()
+        };
+        // SAFETY: all workers reported done (handshake above), so they are
+        // parked again and the buffers are quiescent.
+        unsafe {
+            x.copy_from_slice(self.shared.x.whole());
+            r.copy_from_slice(self.shared.r.whole());
+            p.copy_from_slice(self.shared.p.whole());
+        }
+        Ok(PoolRun { iters: outcome.iters, rr: outcome.rr, error: outcome.error })
+    }
+
+    #[cfg(test)]
+    fn shared_weak(&self) -> std::sync::Weak<Shared> {
+        Arc::downgrade(&self.shared)
+    }
+}
+
+impl Drop for CgPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.ctl.lock();
+            g.epoch += 1;
+            g.cmd = Cmd::Shutdown;
+            self.shared.ctl.cmd_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Park on the control condvar; execute each epoch's command; exit on
+/// shutdown. The whole CG time loop runs inside `iterate` — this thread is
+/// the CPU realization of a persistent thread block.
+fn worker_main(sh: &Shared, w: usize) {
+    pin_to_core(w);
+    let mut seen = 0u64;
+    loop {
+        let cmd = {
+            let mut g = sh.ctl.lock();
+            while g.epoch == seen {
+                g = sh.ctl.cmd_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            }
+            seen = g.epoch;
+            g.cmd
+        };
+        match cmd {
+            Cmd::Idle => {}
+            Cmd::Shutdown => break,
+            Cmd::Run { iters, rr, threshold } => {
+                // A panic inside the iteration loop would otherwise leave
+                // `finished` forever short and hang `run()`. Catching it
+                // lets a *collective* panic (all workers fail at the same
+                // deterministic point — the shape every replicated-scalar
+                // bug takes) surface as an error; `spawn`'s plan/matrix
+                // validation closes the reachable asymmetric case.
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    iterate(sh, w, iters, rr, threshold)
+                }))
+                .unwrap_or_else(|_| Outcome {
+                    iters: 0,
+                    rr,
+                    error: Some(format!("pool worker {w} panicked during iterate")),
+                });
+                let mut g = sh.ctl.lock();
+                // worker 0 publishes the (replicated) outcome; an error —
+                // first one wins — is sticky and never overwritten by a
+                // later clean outcome
+                if g.outcome.error.is_none() && (w == 0 || out.error.is_some()) {
+                    g.outcome = out;
+                }
+                g.finished += 1;
+                if g.finished == sh.barrier.participants() {
+                    sh.ctl.done_cv.notify_all();
+                }
+            }
+        }
+    }
+}
+
+/// The resident iteration loop of worker `w`. All workers execute the same
+/// control flow on identical scalars (see module docs, "Determinism"), so
+/// early breaks are collective and the barrier never deadlocks.
+fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) -> Outcome {
+    let workers = sh.barrier.participants();
+    let parts = sh.plan.parts();
+    let nblocks = sh.blocks.len();
+    // this worker's merge shares (SpMV ownership) ...
+    let (s_lo, s_hi) = (parts * w / workers, parts * (w + 1) / workers);
+    // ... and its reduction blocks == vector-update rows
+    let (k_lo, k_hi) = (nblocks * w / workers, nblocks * (w + 1) / workers);
+    let row_lo = sh.blocks[k_lo].0;
+    let row_hi = {
+        let (s, l) = sh.blocks[k_hi - 1];
+        s + l
+    };
+
+    let mut rr = rr_in;
+    let mut done = 0usize;
+    let mut error = None;
+    for _ in 0..max_iters {
+        if rr <= threshold || rr <= 0.0 {
+            break;
+        }
+        // -- fused pass A, part 1: consume my merge shares (SpMV) --------
+        // SAFETY: p is read-shared (no writer this phase); ap rows and
+        // carry slots are written through raw pointers, only by their
+        // share owner.
+        unsafe {
+            let p_v = sh.p.whole();
+            let ap = sh.ap.ptr();
+            let carries = sh.carries.ptr();
+            for i in s_lo..s_hi {
+                let c = merge::consume_share_raw(
+                    &sh.a,
+                    p_v,
+                    ap,
+                    sh.plan.shares[i],
+                    sh.plan.shares[i + 1],
+                );
+                carries.add(i).write(c);
+            }
+        }
+        sh.barrier.sync();
+        // -- fused pass A, part 2: carry fixup + partial p·Ap ------------
+        // SAFETY: carries are read-shared now; each worker touches only ap
+        // indices it owns (row_lo..row_hi), which are hot from part 1 when
+        // share and block ownership coincide.
+        unsafe {
+            let p_v = sh.p.whole();
+            let ap = sh.ap.ptr();
+            for &(row, carry) in sh.carries.whole() {
+                // serial fixup order and skip condition, restricted to our
+                // rows (carries iterate in share-index order)
+                if row >= row_lo && row < row_hi && carry != 0.0 {
+                    ap.add(row).write(ap.add(row).read() + carry);
+                }
+            }
+            for k in k_lo..k_hi {
+                let (s, l) = sh.blocks[k];
+                let part =
+                    crate::cg::block_partial(s, l, |i| p_v[i] * unsafe { ap.add(i).read() });
+                sh.barrier.put(k, part);
+            }
+        }
+        let pap = sh.barrier.sync_sum();
+        if pap <= 0.0 {
+            // identical pap on every worker: a collective break
+            error = Some(format!("matrix not positive definite (pAp={pap})"));
+            break;
+        }
+        let alpha = rr / pap;
+        // -- fused pass B, part 1: x/r update + partial r·r --------------
+        // SAFETY: x/r writes go through raw pointers inside our rows; p
+        // and ap have no writer this phase.
+        unsafe {
+            let x = sh.x.ptr();
+            let r = sh.r.ptr();
+            let p_v = sh.p.whole();
+            let ap = sh.ap.whole();
+            for k in k_lo..k_hi {
+                let (s, l) = sh.blocks[k];
+                let part = crate::cg::block_partial(s, l, |i| unsafe {
+                    x.add(i).write(x.add(i).read() + alpha * p_v[i]);
+                    let ri = r.add(i).read() - alpha * ap[i];
+                    r.add(i).write(ri);
+                    ri * ri
+                });
+                sh.barrier.put(k, part);
+            }
+        }
+        let rr_new = sh.barrier.sync_sum();
+        let beta = rr_new / rr;
+        // -- fused pass B, part 2: p update (still resident rows) --------
+        // SAFETY: p writes go through the raw pointer inside our rows; r
+        // has no writer this phase.
+        unsafe {
+            let p_v = sh.p.ptr();
+            let r = sh.r.whole();
+            for i in row_lo..row_hi {
+                p_v.add(i).write(r[i] + beta * p_v.add(i).read());
+            }
+        }
+        rr = rr_new;
+        done += 1;
+        // next iteration's SpMV reads p globally: wait for all p writes
+        sh.barrier.sync();
+    }
+    Outcome { iters: done, rr, error }
+}
+
+/// Best-effort CPU pinning hook (thread-per-core). A production deployment
+/// would pin worker `w` to core `w` here via `sched_setaffinity` with
+/// pid 0 (the calling thread), as in the mini-async runtime's
+/// `LocalExecutor::bind_to_cpu_set` — stabilizing each worker's L1/L2
+/// residency, the CPU analog of a thread block staying on its SM. The
+/// vendored dependency set carries no libc binding, so the hook is a
+/// deliberate no-op: the pool's correctness and the determinism guarantees
+/// never depend on placement.
+fn pin_to_core(_core: usize) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    /// Serial reference with the pool's (and `CpuCg::step`'s) canonical
+    /// block-ordered reductions.
+    fn serial_cg(a: &Csr, b: &[f64], parts: usize, iters: usize) -> (Vec<f64>, f64) {
+        let n = a.n_rows;
+        let plan = MergePlan::new(a, parts);
+        let blocks = partition(n, parts);
+        let mut x = vec![0.0; n];
+        let mut r = b.to_vec();
+        let mut p = b.to_vec();
+        let mut ap = vec![0.0; n];
+        let mut rr: f64 = b.iter().map(|v| v * v).sum();
+        for _ in 0..iters {
+            if rr <= 0.0 {
+                break;
+            }
+            merge::spmv(a, &plan, &p, &mut ap);
+            let mut pap = 0.0;
+            for &(s, l) in &blocks {
+                pap += crate::cg::block_partial(s, l, |i| p[i] * ap[i]);
+            }
+            let alpha = rr / pap;
+            let mut rr_new = 0.0;
+            for &(s, l) in &blocks {
+                rr_new += crate::cg::block_partial(s, l, |i| {
+                    x[i] += alpha * p[i];
+                    let ri = r[i] - alpha * ap[i];
+                    r[i] = ri;
+                    ri * ri
+                });
+            }
+            let beta = rr_new / rr;
+            for i in 0..n {
+                p[i] = r[i] + beta * p[i];
+            }
+            rr = rr_new;
+        }
+        (x, rr)
+    }
+
+    fn pooled_cg(
+        a: &Csr,
+        b: &[f64],
+        parts: usize,
+        threads: usize,
+        chunks: &[usize],
+    ) -> (Vec<f64>, f64, u64) {
+        let arc = Arc::new(a.clone());
+        let plan = MergePlan::new(a, parts);
+        let mut pool = CgPool::spawn(arc, plan, threads).unwrap();
+        let n = a.n_rows;
+        let mut x = vec![0.0; n];
+        let mut r = b.to_vec();
+        let mut p = b.to_vec();
+        let mut rr: f64 = b.iter().map(|v| v * v).sum();
+        for &c in chunks {
+            let run = pool.run(&mut x, &mut r, &mut p, rr, 0.0, c).unwrap();
+            rr = run.rr;
+        }
+        let spawned = pool.spawn_count();
+        (x, rr, spawned)
+    }
+
+    #[test]
+    fn pooled_iterates_are_bit_identical_to_serial_at_every_thread_count() {
+        let a = gen::poisson2d(20);
+        let b = gen::rhs(a.n_rows, 7);
+        let (want_x, want_rr) = serial_cg(&a, &b, 8, 25);
+        for threads in [1, 2, 3, 8] {
+            let (x, rr, _) = pooled_cg(&a, &b, 8, threads, &[25]);
+            assert_eq!(x, want_x, "threads={threads}");
+            assert_eq!(rr.to_bits(), want_rr.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_resume_matches_one_shot() {
+        let a = gen::clustered_spd(400, 6, 24, 5).unwrap();
+        let b = gen::rhs(400, 2);
+        let (one_x, one_rr, _) = pooled_cg(&a, &b, 12, 4, &[30]);
+        let (res_x, res_rr, spawned) = pooled_cg(&a, &b, 12, 4, &[9, 13, 8]);
+        assert_eq!(one_x, res_x);
+        assert_eq!(one_rr.to_bits(), res_rr.to_bits());
+        // resumed runs reuse the same resident workers: one spawn batch
+        assert_eq!(spawned, 4);
+    }
+
+    #[test]
+    fn run_never_spawns_after_start() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 1);
+        let plan = MergePlan::new(&a, 8);
+        let mut pool = CgPool::spawn(Arc::new(a.clone()), plan, 3).unwrap();
+        let after_start = pool.spawn_count();
+        let n = a.n_rows;
+        let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+        let mut rr: f64 = b.iter().map(|v| v * v).sum();
+        for _ in 0..5 {
+            rr = pool.run(&mut x, &mut r, &mut p, rr, 0.0, 4).unwrap().rr;
+        }
+        assert_eq!(pool.spawn_count(), after_start, "run() must not spawn");
+        assert_eq!(after_start, pool.workers() as u64);
+    }
+
+    #[test]
+    fn tolerance_threshold_stops_early_and_reports_iters() {
+        let a = gen::poisson2d(10);
+        let b = gen::rhs(a.n_rows, 9);
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        let plan = MergePlan::new(&a, 8);
+        let mut pool = CgPool::spawn(Arc::new(a.clone()), plan, 2).unwrap();
+        let n = a.n_rows;
+        let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+        let run = pool.run(&mut x, &mut r, &mut p, rr0, 1e-12 * rr0, 10_000).unwrap();
+        assert!(run.iters < 10_000, "converged early");
+        assert!(run.rr <= 1e-12 * rr0);
+        // the solution actually solves the system
+        let mut ax = vec![0.0; n];
+        a.spmv_gold(&x, &mut ax);
+        let err = b.iter().zip(&ax).map(|(bi, ai)| (bi - ai).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-5, "true residual {err}");
+    }
+
+    #[test]
+    fn non_positive_definite_reports_error_from_inside_the_pool() {
+        let neg = Csr::from_coo(4, 4, (0..4).map(|i| (i, i, -1.0)).collect()).unwrap();
+        let b = vec![1.0; 4];
+        let plan = MergePlan::new(&neg, 2);
+        let mut pool = CgPool::spawn(Arc::new(neg), plan, 2).unwrap();
+        let (mut x, mut r, mut p) = (vec![0.0; 4], b.clone(), b.clone());
+        let run = pool.run(&mut x, &mut r, &mut p, 4.0, 0.0, 10).unwrap();
+        assert_eq!(run.iters, 0, "pAp < 0 on the very first iteration");
+        let err = run.into_result().unwrap_err();
+        assert!(format!("{err}").contains("positive definite"), "{err}");
+        // state is untouched: the error fires before any x/r/p update
+        assert_eq!(x, vec![0.0; 4]);
+        // pool is still usable after the error (workers re-parked)
+        let again = pool.run(&mut x, &mut r, &mut p, 0.0, 0.0, 1).unwrap();
+        assert!(again.error.is_none());
+        assert_eq!(again.iters, 0);
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let a = gen::poisson2d(8);
+        let plan = MergePlan::new(&a, 4);
+        let pool = CgPool::spawn(Arc::new(a), plan, 4).unwrap();
+        let weak = pool.shared_weak();
+        drop(pool);
+        // every worker held an Arc clone; all joined => all released
+        assert_eq!(weak.strong_count(), 0, "workers not joined on drop");
+    }
+}

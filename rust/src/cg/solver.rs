@@ -30,13 +30,17 @@ pub struct CgOptions {
     pub tol: f64,
     /// Worker shares for the merge SpMV.
     pub parts: usize,
-    /// Use threaded SpMV.
+    /// Use threaded SpMV (`solve_host_loop` / `solve_persistent`) or the
+    /// persistent worker pool (`solve_pooled`).
     pub threaded: bool,
+    /// OS worker threads when threaded; 0 = `available_parallelism`,
+    /// resolved once per solve (never per iteration).
+    pub workers: usize,
 }
 
 impl Default for CgOptions {
     fn default() -> Self {
-        Self { max_iters: 1000, tol: 1e-8, parts: 8, threaded: false }
+        Self { max_iters: 1000, tol: 1e-8, parts: 8, threaded: false, workers: 0 }
     }
 }
 
@@ -58,6 +62,12 @@ pub struct CgResult {
 
 fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Resolve `CgOptions::workers` exactly once per solve, so the sysconf
+/// query behind `available_parallelism` is never re-paid per iteration.
+fn resolve_workers(opts: &CgOptions) -> usize {
+    crate::util::resolve_workers(opts.workers)
 }
 
 fn validate(a: &Csr, b: &[f64]) -> Result<()> {
@@ -84,12 +94,13 @@ pub fn solve_host_loop(a: &Csr, b: &[f64], opts: &CgOptions) -> Result<CgResult>
     let mut iters = 0;
     let mut plan_searches = 0;
     let threshold = opts.tol * opts.tol * rr0;
+    let workers = resolve_workers(opts);
     while iters < opts.max_iters && rr > threshold && rr > 0.0 {
         // the baseline recomputes the workload split every launch
         let plan = MergePlan::new(a, opts.parts);
         plan_searches += 1;
         if opts.threaded {
-            merge::spmv_parallel(a, &plan, &p, &mut ap);
+            merge::spmv_parallel(a, &plan, &p, &mut ap, workers);
         } else {
             merge::spmv(a, &plan, &p, &mut ap);
         }
@@ -140,9 +151,10 @@ pub fn solve_persistent(a: &Csr, b: &[f64], opts: &CgOptions) -> Result<CgResult
     let threshold = opts.tol * opts.tol * rr0;
     // cached TB-level search result (the paper's "workload" cache)
     let plan = MergePlan::new(a, opts.parts);
+    let workers = resolve_workers(opts);
     while iters < opts.max_iters && rr > threshold && rr > 0.0 {
         if opts.threaded {
-            merge::spmv_parallel(a, &plan, &p, &mut ap);
+            merge::spmv_parallel(a, &plan, &p, &mut ap, workers);
         } else {
             merge::spmv(a, &plan, &p, &mut ap);
         }
@@ -173,6 +185,45 @@ pub fn solve_persistent(a: &Csr, b: &[f64], opts: &CgOptions) -> Result<CgResult
         rr_final: rr,
         rr0,
         converged: rr <= threshold,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        vector_passes_per_iter: 2.0,
+        plan_searches: 1,
+    })
+}
+
+/// PERKS CG on the persistent worker-pool runtime ([`crate::cg::pool`]):
+/// `opts.workers` OS threads are spawned **once**, the whole iteration
+/// loop runs inside them, and the dot products are device-wide barrier
+/// reductions (`GridBarrier::sync_sum`) instead of post-join serial
+/// passes. Iterates are bit-identical at every worker count (the
+/// reductions fold per-block partials in block order, not arrival order)
+/// and match the serial pooled-canonical order used by
+/// `session::cpu::CpuCg::step`.
+pub fn solve_pooled(a: &Csr, b: &[f64], opts: &CgOptions) -> Result<CgResult> {
+    validate(a, b)?;
+    let n = a.n_rows;
+    // the deep copy is an artifact of the borrowed API, not of the
+    // execution model: keep it out of the timed region so wall_seconds
+    // stays comparable with the borrowing solvers above
+    let arc = std::sync::Arc::new(a.clone());
+    let t0 = std::time::Instant::now();
+    // cached TB-level search result (the paper's "workload" cache),
+    // searched exactly once and owned by the resident workers
+    let plan = MergePlan::new(a, opts.parts);
+    let mut pool = crate::cg::pool::CgPool::spawn(arc, plan, opts.workers)?;
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = b.to_vec();
+    let rr0 = dot(&r, &r);
+    let threshold = opts.tol * opts.tol * rr0;
+    let run =
+        pool.run(&mut x, &mut r, &mut p, rr0, threshold, opts.max_iters)?.into_result()?;
+    Ok(CgResult {
+        x,
+        iters: run.iters,
+        rr_final: run.rr,
+        rr0,
+        converged: run.rr <= threshold,
         wall_seconds: t0.elapsed().as_secs_f64(),
         vector_passes_per_iter: 2.0,
         plan_searches: 1,
@@ -255,6 +306,36 @@ mod tests {
                 allclose(&ax, b, 1e-5, 1e-5)
             },
         );
+    }
+
+    #[test]
+    fn pooled_solve_matches_the_other_models_and_converges() {
+        let a = gen::poisson2d(14);
+        let b = gen::rhs(a.n_rows, 6);
+        let opts =
+            CgOptions { max_iters: 30, tol: 0.0, parts: 8, threaded: true, workers: 3 };
+        let s = solve_persistent(&a, &b, &CgOptions { threaded: false, ..opts.clone() })
+            .unwrap();
+        let pl = solve_pooled(&a, &b, &opts).unwrap();
+        assert_eq!(s.iters, pl.iters);
+        if let Prop::Fail(m) = allclose(&s.x, &pl.x, 1e-10, 1e-10) {
+            panic!("{m}");
+        }
+        assert_eq!(pl.plan_searches, 1);
+        assert_eq!(pl.vector_passes_per_iter, 2.0);
+        // tolerance mode converges to a solution of the system
+        let conv = solve_pooled(
+            &a,
+            &b,
+            &CgOptions { max_iters: 5000, tol: 1e-9, parts: 8, threaded: true, workers: 2 },
+        )
+        .unwrap();
+        assert!(conv.converged);
+        let mut ax = vec![0.0; a.n_rows];
+        a.spmv_gold(&conv.x, &mut ax);
+        if let Prop::Fail(m) = allclose(&ax, &b, 1e-5, 1e-5) {
+            panic!("{m}");
+        }
     }
 
     #[test]

@@ -1,11 +1,22 @@
 //! Device-wide barrier semantics for the CPU persistent-threads executor.
 //!
 //! The paper's persistent kernel synchronizes time steps with CUDA's grid
-//! sync. Our CPU analog (`stencil::parallel`) runs one OS thread per
-//! "thread block" for the whole solve; this module provides the grid-sync
-//! equivalent: a reusable barrier with generation counting, plus launch
-//! statistics so benches can report barrier cost vs relaunch cost
+//! sync. Our CPU analog (`stencil::parallel`, `cg::pool`) runs one OS
+//! thread per "thread block" for the whole solve; this module provides the
+//! grid-sync equivalent: a reusable barrier with generation counting, plus
+//! launch statistics so benches can report barrier cost vs relaunch cost
 //! (cf. Zhang et al. [32] in the paper: the two are comparable).
+//!
+//! Beyond plain synchronization, the barrier carries a **deterministic
+//! all-reduce** ([`GridBarrier::sync_sum`]): the CPU analog of the
+//! grid-sync + device-wide reduction a persistent CG kernel uses for its
+//! dot products. Participants publish partial sums into fixed slots
+//! ([`GridBarrier::put`]); after the barrier every participant folds the
+//! slots in *slot-index order*, so the result is a pure function of the
+//! slot contents — bit-identical regardless of thread arrival order or
+//! worker count. Sizing the slot array by logical work blocks rather than
+//! by participants (see [`GridBarrier::with_reduction`]) is what lets the
+//! pooled CG solver walk the same iterates at every thread count.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex};
@@ -17,15 +28,27 @@ pub struct GridBarrier {
     participants: usize,
     /// Cumulative nanoseconds threads spent waiting (summed over threads).
     wait_ns: AtomicU64,
+    /// All-reduce slots (f64 bit patterns), folded in index order.
+    slots: Vec<AtomicU64>,
 }
 
 impl GridBarrier {
     pub fn new(participants: usize) -> Self {
+        Self::with_reduction(participants, participants)
+    }
+
+    /// A barrier whose all-reduce carries `width` slots. `width` usually
+    /// equals `participants` (one partial per thread), but reductions that
+    /// must be invariant to the thread count publish one partial per
+    /// *logical block* instead, with each thread owning a fixed block
+    /// range — the pooled CG dot products do exactly that.
+    pub fn with_reduction(participants: usize, width: usize) -> Self {
         Self {
             inner: Barrier::new(participants),
             generation: AtomicU64::new(0),
             participants,
             wait_ns: AtomicU64::new(0),
+            slots: (0..width).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -47,6 +70,42 @@ impl GridBarrier {
 
     pub fn generations(&self) -> u64 {
         self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Number of all-reduce slots (see [`GridBarrier::with_reduction`]).
+    pub fn reduction_width(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Publish a partial sum into reduction slot `slot`. Every slot must
+    /// be (re)written by exactly one participant before the matching
+    /// [`GridBarrier::sync_sum`]; the slot assignment is the caller's
+    /// protocol (participant index, or logical block index for
+    /// thread-count-invariant reductions).
+    pub fn put(&self, slot: usize, value: f64) {
+        self.slots[slot].store(value.to_bits(), Ordering::Release);
+    }
+
+    /// Device-wide all-reduce: wait for every participant (so all `put`s
+    /// are visible), fold **all** slots in slot-index order, then wait
+    /// again so the slots may be reused by the next reduction. Every
+    /// participant returns the same bit pattern, and the result does not
+    /// depend on arrival order: the fold order is fixed by slot index.
+    pub fn sync_sum(&self) -> f64 {
+        self.sync();
+        let mut acc = 0.0;
+        for s in &self.slots {
+            acc += f64::from_bits(s.load(Ordering::Acquire));
+        }
+        self.sync();
+        acc
+    }
+
+    /// Single-contribution convenience: publish `value` into `slot` (the
+    /// caller's participant index) and reduce.
+    pub fn sync_sum_at(&self, slot: usize, value: f64) -> f64 {
+        self.put(slot, value);
+        self.sync_sum()
     }
 
     /// Total time threads spent blocked at the barrier (sum over threads).
@@ -106,6 +165,87 @@ mod tests {
         }
         assert_eq!(epoch.load(Ordering::SeqCst), (n * steps) as u64);
         assert_eq!(barrier.generations(), steps as u64);
+    }
+
+    #[test]
+    fn sync_sum_is_deterministic_regardless_of_arrival_order() {
+        // order-sensitive addends: reassociating the fold changes the
+        // rounded result, so bit-equality proves the fold order is fixed
+        let vals = [1.0e16, -1.0, 3.5e-3, 7.25];
+        let expect: f64 = vals.iter().sum(); // left-to-right, 0.0 start
+        for round in 0..4u64 {
+            let b = Arc::new(GridBarrier::new(vals.len()));
+            let handles: Vec<_> = (0..vals.len())
+                .map(|i| {
+                    let b = b.clone();
+                    std::thread::spawn(move || {
+                        // stagger arrivals differently every round
+                        let ms = (i as u64 + round) % vals.len() as u64;
+                        std::thread::sleep(std::time::Duration::from_millis(ms * 3));
+                        b.sync_sum_at(i, vals[i])
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap().to_bits(), expect.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sync_sum_slots_are_reusable_back_to_back() {
+        let n = 3;
+        let rounds = 20;
+        let b = Arc::new(GridBarrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    (0..rounds)
+                        .map(|k| b.sync_sum_at(i, (i + k * n) as f64))
+                        .collect::<Vec<f64>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            for (k, g) in got.into_iter().enumerate() {
+                // round k sums k*n .. k*n + n-1
+                let want: f64 = (0..n).map(|i| (i + k * n) as f64).sum();
+                assert_eq!(g, want, "round {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_width_reduction_is_invariant_to_participant_count() {
+        // the pooled-CG pattern: 5 logical blocks, each with a fixed
+        // partial; any worker count must fold to the same bits
+        let parts = [0.1, 1.0e15, -3.0, 2.5e-7, 11.0];
+        let mut results = Vec::new();
+        for workers in [1usize, 2, 5] {
+            let b = Arc::new(GridBarrier::with_reduction(workers, parts.len()));
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    let b = b.clone();
+                    std::thread::spawn(move || {
+                        let lo = parts.len() * w / workers;
+                        let hi = parts.len() * (w + 1) / workers;
+                        for k in lo..hi {
+                            b.put(k, parts[k]);
+                        }
+                        b.sync_sum()
+                    })
+                })
+                .collect();
+            let vals: Vec<u64> =
+                handles.into_iter().map(|h| h.join().unwrap().to_bits()).collect();
+            assert!(vals.windows(2).all(|w| w[0] == w[1]));
+            results.push(vals[0]);
+        }
+        assert!(results.windows(2).all(|w| w[0] == w[1]), "thread-count variant");
+        let serial: f64 = parts.iter().sum();
+        assert_eq!(results[0], serial.to_bits());
     }
 
     #[test]

@@ -215,6 +215,69 @@ pub fn fig7(dev: &DeviceSpec, elem: usize) -> Vec<CgRow> {
     crate::sparse::datasets::table_v().iter().map(|d| evaluate(dev, d, elem)).collect()
 }
 
+/// One **measured** (not modeled) CPU CG mode from [`measure_cpu_cg_modes`].
+#[derive(Clone, Debug)]
+pub struct MeasuredCgMode {
+    pub mode: ExecMode,
+    pub wall_seconds: f64,
+    /// Launches: 1 for the pooled persistent advance, `iters` host-loop.
+    pub invocations: u64,
+    /// OS threads spawned *during* `advance` — 0 for the pool (spawned at
+    /// prepare), `iters * workers` for the spawn-per-iteration baseline.
+    pub advance_spawns: u64,
+    pub iters_per_sec: f64,
+}
+
+impl MeasuredCgMode {
+    /// Stable BENCH-json fragment, shared by the benches that report this
+    /// measurement so the schema cannot drift between them.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"mode\":\"{}\",\"wall_seconds\":{:.6},\"invocations\":{},\"advance_spawns\":{}}}",
+            self.mode.name(),
+            self.wall_seconds,
+            self.invocations,
+            self.advance_spawns
+        )
+    }
+}
+
+/// Measure spawn-per-iteration host-loop vs pooled persistent CG on an
+/// `n`-row Poisson system through the session API (threaded, fixed
+/// iteration count), snapshotting the thread-spawn counter around each
+/// `advance`. One shared protocol for `perf_hotpath` and `fig7_cg`.
+pub fn measure_cpu_cg_modes(
+    n: usize,
+    iters: usize,
+    threads: usize,
+    parts: usize,
+) -> crate::error::Result<Vec<MeasuredCgMode>> {
+    use crate::session::{Backend, SessionBuilder, Workload};
+    let mut out = Vec::new();
+    for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+        let mut s = SessionBuilder::new()
+            .backend(Backend::cpu(threads))
+            .workload(Workload::cg(n))
+            .cg_parts(parts)
+            .cg_threaded(true)
+            .mode(mode)
+            .build()?;
+        s.prepare()?; // pool spawn (persistent) happens here, not in advance
+        let spawns0 = crate::util::counters::thread_spawns();
+        s.advance(iters)?;
+        let advance_spawns = crate::util::counters::thread_spawns() - spawns0;
+        let rep = s.report();
+        out.push(MeasuredCgMode {
+            mode,
+            wall_seconds: rep.wall_seconds,
+            invocations: rep.invocations,
+            advance_spawns,
+            iters_per_sec: rep.fom,
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

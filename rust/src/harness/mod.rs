@@ -7,7 +7,9 @@
 pub mod cg_exp;
 pub mod stencil_exp;
 
-pub use cg_exp::{evaluate as cg_evaluate, fig7, modeled_cg_run, CgRow};
+pub use cg_exp::{
+    evaluate as cg_evaluate, fig7, measure_cpu_cg_modes, modeled_cg_run, CgRow, MeasuredCgMode,
+};
 pub use stencil_exp::{modeled_run, speedup_row, StencilExperiment};
 
 /// Nominal host-link (PCIe-class) bandwidth used by the simulated backend

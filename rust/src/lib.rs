@@ -38,7 +38,9 @@
 //! * `Backend::CpuPersistent` — a persistent-threads CPU substrate that
 //!   demonstrates the PERKS model *physically* (OS threads as thread
 //!   blocks, thread-local slabs as the on-chip cache, a grid barrier as
-//!   `grid.sync()`);
+//!   `grid.sync()`; for CG, a spawn-once worker pool with the iteration
+//!   loop resident in the workers and barrier-reduced dot products —
+//!   [`cg::pool`]);
 //! * `Backend::Simulated` — the paper's analytical performance model
 //!   (Eqs 5-13) on the Table I device catalog, regenerating the paper's
 //!   figures at A100/V100 scale.

@@ -4,6 +4,9 @@
 //! on-chip caches); CG runs on the merge-SpMV substrate with the paper's
 //! plan-caching and pass-fusion mechanisms.
 
+use std::sync::Arc;
+
+use crate::cg::pool::CgPool;
 use crate::coordinator::executor::ExecMode;
 use crate::error::{Error, Result};
 use crate::session::{Report, Solver};
@@ -117,16 +120,29 @@ impl Solver for CpuStencil {
 
 /// Conjugate gradient on the rust-native merge-SpMV substrate, with
 /// resumable state (x/r/p held across `advance` calls). Host-loop mode
-/// re-searches the merge plan every iteration and streams each BLAS-1 op
-/// as a separate pass; persistent mode caches the plan once and fuses the
-/// passes — the paper's two CG mechanisms. The iterates are identical.
+/// re-searches the merge plan every iteration, streams each BLAS-1 op as
+/// a separate pass, and (when threaded) respawns its SpMV workers on
+/// every iteration; persistent mode caches the plan once, fuses the
+/// passes, and (when threaded) runs the whole iteration loop on the
+/// spawn-once [`CgPool`] with barrier-reduced dots — the paper's CG
+/// mechanisms. The iterates are identical across modes and thread counts:
+/// all reductions fold per-block partials in block-index order (the
+/// pool's canonical order), never full-vector or arrival order.
 pub struct CpuCg {
-    a: Csr,
+    a: Arc<Csr>,
     b: Vec<f64>,
     parts: usize,
+    /// Resolved worker count (never 0): queried from
+    /// `available_parallelism` once at construction, not per call.
+    threads: usize,
     threaded: bool,
     mode: ExecMode,
     plan: MergePlan,
+    /// Reduction blocks shared with the pool: `partition(n, parts)`.
+    blocks: Vec<(usize, usize)>,
+    /// Spawn-once worker pool; `Some` iff threaded persistent mode, from
+    /// `prepare` until the next `prepare`/drop (joined on replacement).
+    pool: Option<CgPool>,
     x: Vec<f64>,
     r: Vec<f64>,
     p: Vec<f64>,
@@ -144,19 +160,21 @@ impl CpuCg {
         n: usize,
         seed: u64,
         parts: usize,
+        threads: usize,
         threaded: bool,
         mode: ExecMode,
     ) -> Result<Self> {
         let g = (n as f64).sqrt().round() as usize;
         let a = gen::poisson2d(g);
         let b = gen::rhs(n, seed);
-        Self::system(a, b, parts, threaded, mode)
+        Self::system(a, b, parts, threads, threaded, mode)
     }
 
     pub(crate) fn system(
         a: Csr,
         b: Vec<f64>,
         parts: usize,
+        threads: usize,
         threaded: bool,
         mode: ExecMode,
     ) -> Result<Self> {
@@ -174,14 +192,19 @@ impl CpuCg {
             )));
         }
         let n = a.n_rows;
+        let parts = parts.max(1);
+        let threads = crate::util::resolve_workers(threads);
         let plan = MergePlan::new(&a, parts);
         Ok(Self {
-            a,
+            blocks: parallel::partition(n, parts),
+            a: Arc::new(a),
             b,
             parts,
+            threads,
             threaded,
             mode,
             plan,
+            pool: None,
             x: vec![0.0; n],
             r: vec![0.0; n],
             p: vec![0.0; n],
@@ -195,6 +218,13 @@ impl CpuCg {
         })
     }
 
+    /// OS threads the active pool has spawned (`None` when not pooled) —
+    /// constant across `advance` calls, which the tests assert.
+    #[cfg(test)]
+    fn pool_spawns(&self) -> Option<u64> {
+        self.pool.as_ref().map(|p| p.spawn_count())
+    }
+
     /// Global ("slow tier") bytes one iteration streams under this mode:
     /// the matrix plus 5 (host-loop) or 2 (fused persistent) vector passes.
     fn bytes_per_iter(&self) -> u64 {
@@ -205,6 +235,11 @@ impl CpuCg {
 
     /// One CG iteration; returns false once the residual is exactly zero
     /// (further iterations would divide by zero and are no-ops anyway).
+    ///
+    /// Reductions run in the pool's canonical order — per-block partials
+    /// accumulated left-to-right, folded in block-index order — so the
+    /// serial path walks bit-identical iterates to the pooled path at
+    /// every worker count.
     fn step(&mut self) -> Result<bool> {
         if self.rr <= 0.0 {
             return Ok(false);
@@ -216,11 +251,14 @@ impl CpuCg {
             self.plan_searches += 1;
         }
         if self.threaded {
-            merge::spmv_parallel(&self.a, &self.plan, &self.p, &mut self.ap);
+            merge::spmv_parallel(&self.a, &self.plan, &self.p, &mut self.ap, self.threads);
         } else {
             merge::spmv(&self.a, &self.plan, &self.p, &mut self.ap);
         }
-        let pap: f64 = self.p.iter().zip(&self.ap).map(|(x, y)| x * y).sum();
+        let mut pap = 0.0;
+        for &(s, l) in &self.blocks {
+            pap += crate::cg::block_partial(s, l, |i| self.p[i] * self.ap[i]);
+        }
         if pap <= 0.0 {
             return Err(Error::Solver(format!(
                 "matrix not positive definite (pAp={pap})"
@@ -228,11 +266,14 @@ impl CpuCg {
         }
         let alpha = self.rr / pap;
         let mut rr_new = 0.0;
-        for i in 0..self.x.len() {
-            self.x[i] += alpha * self.p[i];
-            let ri = self.r[i] - alpha * self.ap[i];
-            self.r[i] = ri;
-            rr_new += ri * ri;
+        let (x, r, p, ap) = (&mut self.x, &mut self.r, &self.p, &self.ap);
+        for &(s, l) in &self.blocks {
+            rr_new += crate::cg::block_partial(s, l, |i| {
+                x[i] += alpha * p[i];
+                let ri = r[i] - alpha * ap[i];
+                r[i] = ri;
+                ri * ri
+            });
         }
         let beta = rr_new / self.rr;
         for i in 0..self.p.len() {
@@ -246,6 +287,9 @@ impl CpuCg {
 
 impl Solver for CpuCg {
     fn prepare(&mut self) -> Result<()> {
+        // shut the previous solve's pool down first (workers joined) so
+        // re-entry never leaks resident threads
+        self.pool = None;
         self.x.iter_mut().for_each(|v| *v = 0.0);
         self.r.copy_from_slice(&self.b);
         self.p.copy_from_slice(&self.b);
@@ -254,6 +298,12 @@ impl Solver for CpuCg {
             // the paper's TB-level "workload" cache: searched exactly once
             self.plan = MergePlan::new(&self.a, self.parts);
             self.plan_searches = 1;
+            if self.threaded {
+                // spawn-once worker pool: the only thread creation of the
+                // whole solve; every subsequent `advance` is spawn-free
+                self.pool =
+                    Some(CgPool::spawn(self.a.clone(), self.plan.clone(), self.threads)?);
+            }
         } else {
             self.plan_searches = 0;
         }
@@ -266,12 +316,29 @@ impl Solver for CpuCg {
 
     fn advance(&mut self, iters: usize) -> Result<()> {
         let t0 = std::time::Instant::now();
-        let mut done = 0;
-        for _ in 0..iters {
-            if !self.step()? {
-                break;
+        let done;
+        if let Some(pool) = self.pool.as_mut() {
+            // resident time loop: state rides the pool's buffers, the
+            // workers iterate internally, zero spawns
+            let run = pool.run(&mut self.x, &mut self.r, &mut self.p, self.rr, 0.0, iters)?;
+            self.rr = run.rr;
+            self.iters += run.iters;
+            if let Some(msg) = run.error {
+                // same observable point as the serial path: completed
+                // iterations are recorded, the failing one never updated
+                // state, and the launch metrics below are skipped
+                return Err(Error::Solver(msg));
             }
-            done += 1;
+            done = run.iters;
+        } else {
+            let mut n = 0;
+            for _ in 0..iters {
+                if !self.step()? {
+                    break;
+                }
+                n += 1;
+            }
+            done = n;
         }
         self.wall_seconds += t0.elapsed().as_secs_f64();
         self.invocations += match self.mode {
@@ -292,7 +359,7 @@ impl Solver for CpuCg {
             self.iters as f64,
             "iters/s",
             Some(self.rr),
-            None,
+            self.pool.as_ref().map(|p| p.barrier_wait_seconds()),
         )
     }
 
@@ -323,11 +390,11 @@ mod tests {
         let a = gen::poisson2d(16);
         let b = gen::rhs(a.n_rows, 4);
         let mut s =
-            CpuCg::system(a.clone(), b.clone(), 8, false, ExecMode::Persistent).unwrap();
+            CpuCg::system(a.clone(), b.clone(), 8, 1, false, ExecMode::Persistent).unwrap();
         s.prepare().unwrap();
         s.advance(12).unwrap();
         s.advance(12).unwrap(); // resumable: 12 + 12 == one 24-iteration solve
-        let opts = CgOptions { max_iters: 24, tol: 0.0, parts: 8, threaded: false };
+        let opts = CgOptions { max_iters: 24, tol: 0.0, ..Default::default() };
         let want = solve_persistent(&a, &b, &opts).unwrap();
         let got = s.state_f64().unwrap();
         let diff = got
@@ -344,8 +411,9 @@ mod tests {
     fn cpu_cg_modes_walk_identical_iterates() {
         let a = gen::poisson2d(12);
         let b = gen::rhs(a.n_rows, 9);
-        let mut h = CpuCg::system(a.clone(), b.clone(), 8, false, ExecMode::HostLoop).unwrap();
-        let mut p = CpuCg::system(a, b, 8, false, ExecMode::Persistent).unwrap();
+        let mut h =
+            CpuCg::system(a.clone(), b.clone(), 8, 1, false, ExecMode::HostLoop).unwrap();
+        let mut p = CpuCg::system(a, b, 8, 1, false, ExecMode::Persistent).unwrap();
         h.prepare().unwrap();
         p.prepare().unwrap();
         h.advance(20).unwrap();
@@ -353,5 +421,87 @@ mod tests {
         assert_eq!(h.state_f64().unwrap(), p.state_f64().unwrap());
         assert!(h.plan_searches > p.plan_searches);
         assert!(h.report().host_bytes > p.report().host_bytes);
+    }
+
+    /// The tentpole guarantee: the pooled runtime walks the serial path's
+    /// iterates bit-for-bit at every worker count, including across
+    /// resumed `advance` calls.
+    #[test]
+    fn pooled_cg_is_bit_identical_to_serial_across_threads_and_resume() {
+        let a = gen::poisson2d(20);
+        let b = gen::rhs(a.n_rows, 3);
+        let mut serial =
+            CpuCg::system(a.clone(), b.clone(), 8, 1, false, ExecMode::Persistent).unwrap();
+        serial.prepare().unwrap();
+        serial.advance(9).unwrap();
+        serial.advance(7).unwrap();
+        let want = serial.state_f64().unwrap();
+        let want_rr = serial.rr;
+        for threads in [1, 2, 3, 8] {
+            let mut pooled =
+                CpuCg::system(a.clone(), b.clone(), 8, threads, true, ExecMode::Persistent)
+                    .unwrap();
+            pooled.prepare().unwrap();
+            pooled.advance(9).unwrap();
+            pooled.advance(7).unwrap();
+            assert_eq!(pooled.state_f64().unwrap(), want, "threads={threads}");
+            assert_eq!(pooled.rr.to_bits(), want_rr.to_bits(), "threads={threads}");
+            assert_eq!(pooled.report().steps, 16);
+            assert_eq!(pooled.report().invocations, 2);
+        }
+    }
+
+    /// Acceptance criterion: persistent threaded CG performs **zero**
+    /// thread spawns per `advance` once the pool is up; the host-loop
+    /// threaded baseline respawns workers every iteration.
+    #[test]
+    fn pooled_advance_never_spawns_host_loop_always_does() {
+        let a = gen::poisson2d(16);
+        let b = gen::rhs(a.n_rows, 5);
+        let mut pooled =
+            CpuCg::system(a.clone(), b.clone(), 8, 4, true, ExecMode::Persistent).unwrap();
+        pooled.prepare().unwrap(); // the pool's one spawn batch
+        let spawned = pooled.pool_spawns().expect("threaded persistent CG rides the pool");
+        assert!(spawned >= 1);
+        pooled.advance(10).unwrap();
+        pooled.advance(10).unwrap();
+        assert_eq!(
+            pooled.pool_spawns().unwrap(),
+            spawned,
+            "advance must not spawn threads after pool start"
+        );
+
+        // the baseline pays spawn-per-iteration (global counter only ever
+        // grows, so a positive delta cannot be a concurrency artifact)
+        let mut host =
+            CpuCg::system(a, b, 8, 4, true, ExecMode::HostLoop).unwrap();
+        host.prepare().unwrap();
+        assert!(host.pool_spawns().is_none(), "host-loop has no pool");
+        let before = crate::util::counters::thread_spawns();
+        host.advance(5).unwrap();
+        assert!(
+            crate::util::counters::thread_spawns() >= before + 5 * 4,
+            "5 threaded host-loop iterations respawn 4 workers each"
+        );
+    }
+
+    /// `prepare()` re-entry tears the old pool down (workers joined) and
+    /// spawns a fresh one; the restarted solve matches a fresh serial run.
+    #[test]
+    fn prepare_reentry_replaces_the_pool_cleanly() {
+        let a = gen::poisson2d(14);
+        let b = gen::rhs(a.n_rows, 8);
+        let mut pooled =
+            CpuCg::system(a.clone(), b.clone(), 8, 3, true, ExecMode::Persistent).unwrap();
+        pooled.prepare().unwrap();
+        pooled.advance(5).unwrap();
+        pooled.prepare().unwrap(); // old pool joined here, new pool spawned
+        pooled.advance(12).unwrap();
+        let mut serial =
+            CpuCg::system(a, b, 8, 1, false, ExecMode::Persistent).unwrap();
+        serial.prepare().unwrap();
+        serial.advance(12).unwrap();
+        assert_eq!(pooled.state_f64().unwrap(), serial.state_f64().unwrap());
+        assert_eq!(pooled.report().steps, 12, "metrics reset on re-entry");
     }
 }

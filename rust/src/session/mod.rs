@@ -256,7 +256,11 @@ impl SessionBuilder {
         self
     }
 
-    /// Threaded SpMV for the CPU CG substrate.
+    /// Threaded execution for the CPU CG substrate: host-loop mode
+    /// respawns SpMV workers every iteration (the measured baseline),
+    /// persistent mode runs the backend's `threads` as a spawn-once
+    /// worker pool with the iteration loop resident in the workers
+    /// (`cg::pool`). Iterates are identical either way.
     pub fn cg_threaded(mut self, threaded: bool) -> Self {
         self.cg_threaded = threaded;
         self
@@ -509,7 +513,7 @@ fn mode_candidates(backend: &Backend, workload: &Workload) -> Vec<ExecMode> {
 
 /// Measured thread autotune for `Backend::CpuPersistent { threads: 0 }`.
 fn auto_threads(workload: &Workload, seed: u64) -> Result<usize> {
-    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let max = crate::util::resolve_workers(0);
     match workload {
         Workload::Stencil { bench, interior, .. } => {
             let spec = stencil::spec(bench)
@@ -519,8 +523,10 @@ fn auto_threads(workload: &Workload, seed: u64) -> Result<usize> {
             dom.randomize(seed);
             Ok(autotune::tune_threads(&spec, &dom, 2, max)?.threads)
         }
-        // the CG substrate threads via its SpMV parts, not OS threads
-        _ => Ok(1),
+        // CG workers (pool / threaded SpMV) scale with the machine; the
+        // solver clamps to its share/block counts, so the full
+        // parallelism is the right resolution for `threads == 0`
+        _ => Ok(max),
     }
 }
 
@@ -547,11 +553,11 @@ fn make_solver(
             let dims = parse_interior(interior)?;
             Ok(Box::new(cpu::CpuStencil::new(bench, &dims, *threads, mode, seed, init)?))
         }
-        (Backend::CpuPersistent { .. }, Workload::Cg { n }) => {
-            Ok(Box::new(cpu::CpuCg::poisson(*n, seed, cg_parts, cg_threaded, mode)?))
-        }
-        (Backend::CpuPersistent { .. }, Workload::CgSystem { a, b }) => Ok(Box::new(
-            cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, cg_threaded, mode)?,
+        (Backend::CpuPersistent { threads }, Workload::Cg { n }) => Ok(Box::new(
+            cpu::CpuCg::poisson(*n, seed, cg_parts, *threads, cg_threaded, mode)?,
+        )),
+        (Backend::CpuPersistent { threads }, Workload::CgSystem { a, b }) => Ok(Box::new(
+            cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, *threads, cg_threaded, mode)?,
         )),
         (Backend::Simulated(dev), Workload::Stencil { bench, interior, dtype }) => {
             let dims = parse_interior(interior)?;

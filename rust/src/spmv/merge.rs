@@ -82,10 +82,35 @@ impl MergePlan {
 /// Sequential consumption of one merge share: rows [start.row, end.row)
 /// are completed inside the share; a trailing partial row accumulates into
 /// `carry` which the caller combines (the "fixup" pass of the paper).
-fn consume_share(
+///
+/// Safe single-writer wrapper over [`consume_share_raw`].
+pub(crate) fn consume_share(
     csr: &Csr,
     x: &[f64],
     y: &mut [f64],
+    start: Coord,
+    end: Coord,
+) -> (usize, f64) {
+    debug_assert!(y.len() >= end.row);
+    // SAFETY: `y` is exclusively borrowed and long enough for every
+    // completed row of the share.
+    unsafe { consume_share_raw(csr, x, y.as_mut_ptr(), start, end) }
+}
+
+/// Raw-pointer form of the share consumption, shared by the concurrent
+/// consumers (`spmv_parallel`'s scoped workers and `cg::pool`'s resident
+/// workers): each share writes a disjoint set of complete rows, and going
+/// through the pointer — instead of overlapping `&mut [f64]` views — keeps
+/// that concurrent disjoint-write protocol free of aliased exclusive
+/// references.
+///
+/// SAFETY: `y` must be valid for writes at every index in
+/// `[start.row, end.row)`, and no other thread may concurrently touch
+/// those rows.
+pub(crate) unsafe fn consume_share_raw(
+    csr: &Csr,
+    x: &[f64],
+    y: *mut f64,
     start: Coord,
     end: Coord,
 ) -> (usize, f64) {
@@ -103,7 +128,7 @@ fn consume_share(
             acc += v * x[c];
         }
         nz = hi;
-        y[row] = acc;
+        y.add(row).write(acc);
         acc = 0.0;
         row += 1;
     }
@@ -132,19 +157,25 @@ pub fn spmv(csr: &Csr, plan: &MergePlan, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Threaded variant: shares are distributed over at most
-/// `available_parallelism` OS threads (a share is the work *unit*; the
-/// thread count is the worker pool — spawning per share would drown the
-/// balanced work in spawn latency).
-pub fn spmv_parallel(csr: &Csr, plan: &MergePlan, x: &[f64], y: &mut [f64]) {
+/// Threaded variant: shares are distributed over `workers` OS threads (a
+/// share is the work *unit*; the thread count is the worker pool —
+/// spawning per share would drown the balanced work in spawn latency).
+///
+/// `workers == 0` falls back to `available_parallelism`; solvers that call
+/// this per iteration should resolve their worker count **once** and pass
+/// it in, so the split stays consistent with their `threads` knob and the
+/// sysconf query is not re-paid on every SpMV (see `session::cpu::CpuCg`).
+///
+/// Note this spawns (and joins) `workers` threads per call — the relaunch
+/// overhead the paper's persistent model eliminates. `cg::pool::CgPool`
+/// consumes the same shares from spawn-once resident workers instead.
+pub fn spmv_parallel(csr: &Csr, plan: &MergePlan, x: &[f64], y: &mut [f64], workers: usize) {
     let parts = plan.parts();
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(8)
-        .min(parts);
+    let workers = crate::util::resolve_workers(workers).min(parts);
     if parts == 1 || workers == 1 {
         return spmv(csr, plan, x, y);
     }
+    crate::util::counters::note_thread_spawns(workers as u64);
     y[..csr.n_rows].fill(0.0);
     // each share writes rows [start.row, end.row) — disjoint by
     // construction; carries are combined after the join
@@ -161,12 +192,13 @@ pub fn spmv_parallel(csr: &Csr, plan: &MergePlan, x: &[f64], y: &mut [f64]) {
             let hi = parts * (w + 1) / workers;
             handles.push(scope.spawn(move || {
                 // SAFETY: shares own disjoint complete-row ranges; the
-                // trailing partial row is returned as a carry, not written.
-                let y = unsafe {
-                    std::slice::from_raw_parts_mut(y_ptr.get(), csr.n_rows)
-                };
+                // trailing partial row is returned as a carry, not
+                // written. Writes go through the raw pointer, so no
+                // aliased exclusive references exist across workers.
                 (lo..hi)
-                    .map(|i| consume_share(csr, x, y, shares[i], shares[i + 1]))
+                    .map(|i| unsafe {
+                        consume_share_raw(csr, x, y_ptr.get(), shares[i], shares[i + 1])
+                    })
                     .collect::<Vec<_>>()
             }));
         }
@@ -223,7 +255,7 @@ mod tests {
                 panic!("parts={parts}: {m}");
             }
             let mut yp = vec![0.0; a.n_rows];
-            spmv_parallel(&a, &plan, &x, &mut yp);
+            spmv_parallel(&a, &plan, &x, &mut yp, 0);
             if let Prop::Fail(m) = allclose(&yp, &want, 1e-12, 1e-12) {
                 panic!("parallel parts={parts}: {m}");
             }
@@ -247,7 +279,7 @@ mod tests {
         let want = gold(&a, &x);
         let plan = MergePlan::new(&a, 8);
         let mut y = vec![0.0; n];
-        spmv_parallel(&a, &plan, &x, &mut y);
+        spmv_parallel(&a, &plan, &x, &mut y, 4);
         if let Prop::Fail(m) = allclose(&y, &want, 1e-12, 1e-12) {
             panic!("{m}");
         }
@@ -292,7 +324,7 @@ mod tests {
                 let want = gold(a, x);
                 let plan = MergePlan::new(a, *parts);
                 let mut y = vec![0.0; a.n_rows];
-                spmv_parallel(a, &plan, x, &mut y);
+                spmv_parallel(a, &plan, x, &mut y, 3);
                 allclose(&y, &want, 1e-11, 1e-11)
             },
         );

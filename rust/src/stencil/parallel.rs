@@ -147,6 +147,8 @@ fn plans(geometry: &Bands, radius: usize, total_planes: usize, plane: usize) -> 
 /// Compute one Jacobi step for the planes `band` (padded coords along the
 /// banded axis) reading from `local` (a slab starting at plane
 /// `slab_first`), writing new interior values into `out` (band-sized).
+/// `deltas` are the precomputed `gold::linear_deltas` offsets — hoisted to
+/// the caller so persistent threads build them once, not every time step.
 #[allow(clippy::too_many_arguments)]
 fn compute_band(
     spec: &StencilSpec,
@@ -155,22 +157,12 @@ fn compute_band(
     slab_first: usize,
     band: &std::ops::Range<usize>,
     weights: &[f64],
+    deltas: &[isize],
     axis: usize,
     out: &mut [f64],
 ) {
     let r = spec.radius;
     let (py, px) = (domain.padded[1], domain.padded[2]);
-    let plane = py * px;
-    let lidx = |z: usize, y: usize, x: usize| -> usize {
-        // local slab coordinates: banded axis shifted by slab_first
-        if axis == 0 {
-            (z - slab_first) * plane + y * px + x
-        } else {
-            (y - slab_first) * px + x
-        }
-    };
-    let _ = &lidx; // retained for the doc comment; rows go via slices now
-    let deltas = crate::stencil::gold::linear_deltas(spec, py, px);
     let width = px - 2 * r;
     let mut o = 0;
     if axis == 0 {
@@ -181,7 +173,7 @@ fn compute_band(
                     &mut out[o..o + width],
                     local,
                     base,
-                    &deltas,
+                    deltas,
                     weights,
                 );
                 o += width;
@@ -194,7 +186,7 @@ fn compute_band(
                 &mut out[o..o + width],
                 local,
                 base,
-                &deltas,
+                deltas,
                 weights,
             );
             o += width;
@@ -204,6 +196,8 @@ fn compute_band(
 
 /// Scatter band results (interior columns only) into a full-width plane
 /// buffer `planes` whose first plane is `dst_first` (padded coords).
+/// Rows are contiguous in both `results` and `planes`, so each row moves
+/// as one `copy_from_slice` (memcpy) instead of an element-wise loop.
 fn scatter_band(
     spec: &StencilSpec,
     domain: &Domain,
@@ -216,22 +210,21 @@ fn scatter_band(
     let r = spec.radius;
     let (py, px) = (domain.padded[1], domain.padded[2]);
     let plane = py * px;
+    let width = px - 2 * r;
     let mut i = 0;
     if axis == 0 {
         for z in band.clone() {
             for y in r..py - r {
-                for x in r..px - r {
-                    planes[(z - dst_first) * plane + y * px + x] = results[i];
-                    i += 1;
-                }
+                let dst = (z - dst_first) * plane + y * px + r;
+                planes[dst..dst + width].copy_from_slice(&results[i..i + width]);
+                i += width;
             }
         }
     } else {
         for y in band.clone() {
-            for x in r..px - r {
-                planes[(y - dst_first) * px + x] = results[i];
-                i += 1;
-            }
+            let dst = (y - dst_first) * px + r;
+            planes[dst..dst + width].copy_from_slice(&results[i..i + width]);
+            i += width;
         }
     }
 }
@@ -258,6 +251,7 @@ pub fn persistent(
     let global_bytes = Arc::new(std::sync::atomic::AtomicU64::new(0));
 
     let t0 = std::time::Instant::now();
+    crate::util::counters::note_thread_spawns(nthreads as u64);
     std::thread::scope(|scope| {
         for plan in &plans {
             let barrier = barrier.clone();
@@ -283,11 +277,18 @@ pub fn persistent(
                     domain.padded[2] - 2 * r
                 };
                 let mut results = vec![0.0f64; band_planes * interior_per_plane];
+                // loop invariants of the resident time loop, built once
+                // per persistent thread (not once per step)
+                let deltas = crate::stencil::gold::linear_deltas(
+                    spec,
+                    domain.padded[1],
+                    domain.padded[2],
+                );
 
                 for _ in 0..steps {
                     compute_band(
-                        spec, domain, &local, slab_first, &plan.band, &weights, axis,
-                        &mut results,
+                        spec, domain, &local, slab_first, &plan.band, &weights, &deltas,
+                        axis, &mut results,
                     );
                     // update local slab interior with new values
                     let band_off = (plan.band.start - slab_first) * plane;
@@ -393,15 +394,18 @@ pub fn host_loop(
     let mut src = SharedGrid::new(x0.data.clone());
     let mut dst = SharedGrid::new(x0.data.clone());
     let mut global_bytes = 0u64;
+    let deltas = crate::stencil::gold::linear_deltas(spec, x0.padded[1], x0.padded[2]);
 
     let t0 = std::time::Instant::now();
     for _ in 0..steps {
         let src_ref = &src;
         let dst_ref = &dst;
         // kernel "launch": spawn, compute, join — the implicit barrier
+        crate::util::counters::note_thread_spawns(nthreads as u64);
         std::thread::scope(|scope| {
             for plan in &plans {
                 let weights = weights.clone();
+                let deltas = &deltas;
                 let domain = x0;
                 let axis = geometry.axis;
                 scope.spawn(move || {
@@ -417,8 +421,8 @@ pub fn host_loop(
                     };
                     let mut results = vec![0.0f64; band_planes * interior_per_plane];
                     compute_band(
-                        spec, domain, &local, slab_first, &plan.band, &weights, axis,
-                        &mut results,
+                        spec, domain, &local, slab_first, &plan.band, &weights, deltas,
+                        axis, &mut results,
                     );
                     // store whole band to global each step
                     let band_off = (plan.band.start - slab_first) * plane;

@@ -1,0 +1,38 @@
+//! Process-wide instrumentation counters.
+//!
+//! The PERKS claim hinges on *how often* the host relaunches workers, so
+//! the threading substrates (`spmv::merge::spmv_parallel`,
+//! `stencil::parallel`, `cg::pool`) report every OS thread they spawn
+//! here. Benches snapshot [`thread_spawns`] around a measured region to
+//! show the spawn-per-iteration baseline against the spawn-once pool.
+//!
+//! The counter is global and monotonic; concurrent test threads may
+//! interleave increments, so tests that need an exact attribution use the
+//! per-pool counter (`cg::pool::CgPool::spawn_count`) instead and benches
+//! (single-threaded mains) read this one.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// Record `n` OS threads spawned by a solver substrate.
+pub fn note_thread_spawns(n: u64) {
+    THREAD_SPAWNS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total OS threads spawned by solver substrates since process start.
+pub fn thread_spawns() -> u64 {
+    THREAD_SPAWNS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_counter_is_monotonic() {
+        let before = thread_spawns();
+        note_thread_spawns(3);
+        assert!(thread_spawns() >= before + 3);
+    }
+}

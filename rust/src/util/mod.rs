@@ -5,6 +5,21 @@
 
 pub mod args;
 pub mod check;
+pub mod counters;
 pub mod fmt;
 pub mod rng;
 pub mod stats;
+
+/// Resolve a `0 = auto` worker-count knob to a concrete count, exactly
+/// once per solve: `0` maps to `available_parallelism` (fallback 8 where
+/// the sysconf is unavailable), anything else passes through. Every
+/// threaded substrate (`spmv::merge::spmv_parallel`, `cg::pool`,
+/// `session::cpu::CpuCg`, `cg::solver`) resolves through this one helper
+/// so their worker counts can never silently diverge.
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8)
+    } else {
+        requested
+    }
+}

@@ -195,7 +195,7 @@ fn cg_session_matches_rust_native_solver() {
 
     let a = gen::poisson2d(32);
     let b64 = gen::rhs(1024, 5);
-    let opts = perks::cg::CgOptions { max_iters: 24, tol: 0.0, parts: 8, threaded: false };
+    let opts = perks::cg::CgOptions { max_iters: 24, tol: 0.0, ..Default::default() };
     let native = perks::cg::solve_persistent(&a, &b64, &opts).unwrap();
     let dx = pjrt_x
         .iter()

@@ -229,6 +229,43 @@ fn reports_are_finite_and_account_traffic() {
 }
 
 #[test]
+fn threaded_cg_sessions_walk_serial_iterates_at_every_thread_count() {
+    // the pooled persistent runtime (threaded) and the serial substrate
+    // must be bit-identical: the reductions fold fixed per-block partials
+    // in block order, never arrival order
+    let build = |threads: usize, threaded: bool, mode: ExecMode| {
+        SessionBuilder::new()
+            .backend(Backend::cpu(threads))
+            .workload(Workload::cg(576))
+            .cg_parts(8)
+            .cg_threaded(threaded)
+            .mode(mode)
+            .seed(11)
+            .build()
+            .unwrap()
+    };
+    let mut serial = build(1, false, ExecMode::Persistent);
+    serial.prepare().unwrap();
+    serial.advance(9).unwrap();
+    serial.advance(8).unwrap();
+    let want = serial.state_f64().unwrap();
+    for threads in [1, 2, 3, 8] {
+        let mut pooled = build(threads, true, ExecMode::Persistent);
+        pooled.prepare().unwrap();
+        pooled.advance(9).unwrap();
+        pooled.advance(8).unwrap();
+        assert_eq!(pooled.state_f64().unwrap(), want, "threads={threads}");
+        assert_eq!(pooled.report().invocations, 2, "one resident launch per advance");
+    }
+    // and the spawn-per-iteration host-loop baseline agrees too
+    let mut host = build(3, true, ExecMode::HostLoop);
+    host.prepare().unwrap();
+    host.advance(17).unwrap();
+    assert_eq!(host.state_f64().unwrap(), want);
+    assert_eq!(host.report().invocations, 17, "one relaunch per iteration");
+}
+
+#[test]
 fn cg_sessions_report_residuals_across_backends() {
     let mut s = SessionBuilder::new()
         .backend(Backend::cpu(1))
