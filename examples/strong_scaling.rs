@@ -3,29 +3,44 @@
 //! on-chip/cache memory and the PERKS win grows. Demonstrated two ways
 //! through the one `perks::session` API:
 //!
-//! 1. *measured* on the CPU persistent-threads backend (thread-local
-//!    slabs fit in core caches as the domain shrinks);
+//! 1. *measured* on the CPU persistent-threads backend, riding the
+//!    spawn-once `stencil::pool` runtime: the pool is spawned once at
+//!    `prepare`, every timed `advance` is spawn-free (asserted via the
+//!    spawn counter), and the thread-local slabs stay resident in core
+//!    caches across advances as the domain shrinks;
 //! 2. *simulated* on the A100/V100 backend with the paper's performance
 //!    model.
 //!
 //! ```bash
-//! cargo run --release --example strong_scaling
+//! cargo run --release --example strong_scaling            # full sweep
+//! cargo run --release --example strong_scaling -- --quick # CI smoke
 //! ```
 
 use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
 use perks::simgpu::device::{a100, v100};
+use perks::util::counters;
 use perks::util::fmt::{secs, Table};
 use perks::util::stats::{median, time_n};
 
 fn main() -> perks::Result<()> {
-    // -------- measured: CPU persistent threads --------
-    let steps = 48;
-    let threads = 8;
-    println!("measured (CPU persistent threads, 2d5pt, {steps} steps, {threads} threads):\n");
-    let mut t = Table::new(&["per-node domain", "host-loop", "persistent", "PERKS speedup"]);
-    for size in [2048usize, 1024, 512, 256] {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // -------- measured: CPU persistent threads (pooled) --------
+    let steps = if quick { 8 } else { 48 };
+    let reps = if quick { 1 } else { 3 };
+    let threads = if quick { 2 } else { 8 };
+    let sizes: &[usize] = if quick { &[256, 128] } else { &[2048, 1024, 512, 256] };
+    println!("measured (CPU stencil pool, 2d5pt, {steps} steps/advance, {threads} threads):\n");
+    let mut t = Table::new(&[
+        "per-node domain",
+        "host-loop",
+        "persistent (pooled)",
+        "PERKS speedup",
+        "pooled advance spawns",
+    ]);
+    for &size in sizes {
         let interior = format!("{size}x{size}");
         let mut walls = Vec::new();
+        let mut pooled_spawns = 0u64;
         for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
             let mut session = SessionBuilder::new()
                 .backend(Backend::cpu(threads))
@@ -33,9 +48,19 @@ fn main() -> perks::Result<()> {
                 .mode(mode)
                 .seed(9)
                 .build()?;
-            let times = time_n(3, || {
-                session.run(steps).unwrap();
+            // build() already prepared the session — the pool (persistent
+            // mode) spawned its workers there; the timed advances below
+            // are what the models differ on
+            let spawns0 = counters::thread_spawns();
+            let times = time_n(reps, || {
+                session.advance(steps).unwrap();
             });
+            if mode == ExecMode::Persistent {
+                pooled_spawns = counters::thread_spawns() - spawns0;
+                // the smoke-tested invariant, enforced: pooled advances
+                // must not create threads (workers spawned at prepare)
+                assert_eq!(pooled_spawns, 0, "pooled advance spawned threads");
+            }
             walls.push(median(&times));
         }
         t.row(&[
@@ -43,12 +68,15 @@ fn main() -> perks::Result<()> {
             secs(walls[0]),
             secs(walls[1]),
             format!("{:.2}x", walls[0] / walls[1]),
+            pooled_spawns.to_string(),
         ]);
     }
     print!("{}", t.render());
+    println!("(pooled advance spawns must read 0: workers spawn once at prepare)");
 
     // -------- simulated: the paper's model, same API --------
-    println!("\nsimulated (paper's model, 2d5pt dp, 1000 steps, session backend):\n");
+    let sim_steps = if quick { 100 } else { 1000 };
+    println!("\nsimulated (paper's model, 2d5pt dp, {sim_steps} steps, session backend):\n");
     let mut t2 = Table::new(&["device", "domain", "host-loop", "persistent", "speedup"]);
     for dev in [a100(), v100()] {
         // a saturating large domain vs an on-chip-sized small one
@@ -60,7 +88,7 @@ fn main() -> perks::Result<()> {
                     .workload(Workload::stencil("2d5pt", interior, "f64"))
                     .mode(mode)
                     .build()?;
-                walls.push(session.run(1000)?.wall_seconds);
+                walls.push(session.run(sim_steps)?.wall_seconds);
             }
             t2.row(&[
                 dev.name.to_string(),

@@ -1,18 +1,20 @@
 //! Persistent-threads CPU bench: the PERKS execution model measured
 //! physically (thread-local slabs = on-chip cache, shared array = global
 //! memory, GridBarrier = grid.sync). Sweeps domain size to expose the
-//! strong-scaling effect: the smaller the per-thread state relative to
-//! the core's cache, the larger the PERKS win — Fig 6's mechanism.
+//! strong-scaling effect (Fig 6's mechanism), then measures the
+//! spawn-once `stencil::pool` runtime against the spawn-per-step
+//! host-loop baseline through the session API and emits the result as
+//! `BENCH_stencil.json` (+ a `BENCH {...}` stdout line), so the stencil
+//! perf trajectory is tracked exactly like `fig7_cg`'s.
 //!
 //! Run: `cargo bench --bench cpu_perks`
 
+use perks::harness;
 use perks::stencil::{parallel, shape, Domain};
 use perks::util::fmt::{bytes, secs, Table};
 use perks::util::stats::{median, time_n};
 
-fn main() {
-    let threads = 8;
-    let steps = 32;
+fn domain_sweep(threads: usize, steps: usize) {
     println!("CPU persistent-threads PERKS (threads={threads}, steps={steps}, median of 3)\n");
     let mut t = Table::new(&[
         "bench",
@@ -58,4 +60,47 @@ fn main() {
     print!("{}", t.render());
     println!("\npersistent threads exchange only slab boundaries through the shared");
     println!("array; host-loop round-trips the whole domain every step.");
+}
+
+fn pooled_section(threads: usize) {
+    let (bench, interior, steps) = ("2d5pt", "512x512", 64usize);
+    println!(
+        "\nSpawn-once stencil pool vs spawn-per-step host loop \
+         ({bench} {interior}, {steps} steps, {threads} threads)\n"
+    );
+    let modes = harness::measure_cpu_stencil_modes(bench, interior, steps, threads).unwrap();
+    let mut t =
+        Table::new(&["mode", "wall s", "launches", "advance spawns", "global traffic", "cells/s"]);
+    for m in &modes {
+        t.row(&[
+            m.mode.name().into(),
+            format!("{:.6}", m.wall_seconds),
+            m.invocations.to_string(),
+            m.advance_spawns.to_string(),
+            bytes(m.global_bytes as f64),
+            format!("{:.3e}", m.cells_per_sec),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "pooled persistent speedup over host-loop: {:.2}x (spawn-once + resident slabs)",
+        modes[0].wall_seconds / modes[1].wall_seconds.max(1e-12)
+    );
+    let json: Vec<String> = modes.iter().map(|m| m.json()).collect();
+    let payload = format!(
+        "{{\"bench\":\"stencil\",\"case\":\"{bench}\",\"interior\":\"{interior}\",\
+         \"steps\":{steps},\"threads\":{threads},\"modes\":[{}]}}",
+        json.join(",")
+    );
+    println!("BENCH {payload}");
+    match std::fs::write("BENCH_stencil.json", format!("{payload}\n")) {
+        Ok(()) => println!("wrote BENCH_stencil.json"),
+        Err(e) => eprintln!("could not write BENCH_stencil.json: {e}"),
+    }
+}
+
+fn main() {
+    let threads = 8;
+    domain_sweep(threads, 32);
+    pooled_section(threads);
 }

@@ -1,24 +1,54 @@
-//! Measured end-to-end bench: the three execution models through the real
-//! PJRT stack via the `perks::session` API, for every stencil artifact
-//! family plus CG. This is the *measured* counterpart of the simulated
-//! Figs 5-7: the speedup SHAPE (persistent > resident > host-loop; deeper
-//! fusion on smaller state) must reproduce even though the substrate is
-//! CPU PJRT, not an A100.
+//! Measured end-to-end bench: the execution models through the
+//! `perks::session` API — the spawn-once CPU stencil pool against the
+//! relaunch-per-step baseline (no artifacts needed), then the three
+//! models through the real PJRT stack for every stencil artifact family
+//! plus CG. The PJRT half is the *measured* counterpart of the simulated
+//! Figs 5-7: the speedup SHAPE (persistent > resident > host-loop;
+//! deeper fusion on smaller state) must reproduce even though the
+//! substrate is CPU PJRT, not an A100.
 //!
-//! Requires `make artifacts`. Run: `cargo bench --bench e2e_modes`
+//! PJRT section requires `make artifacts`. Run: `cargo bench --bench e2e_modes`
 
 use std::rc::Rc;
 
+use perks::harness;
 use perks::runtime::Runtime;
 use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
 use perks::util::fmt::{secs, Table};
 use perks::util::stats::{median, time_n};
 
+/// Measured CPU section: the `stencil::pool` runtime (spawn-once, slabs
+/// resident across advances) against spawn-per-step. Runs everywhere.
+fn measured_cpu_stencil_section() {
+    let threads = 4;
+    println!("Measured CPU stencil — pooled persistent vs spawn-per-step host loop");
+    println!("({threads} threads, via the session API)\n");
+    let mut t = Table::new(&["bench", "mode", "wall s", "launches", "advance spawns"]);
+    for (bench, interior, steps) in
+        [("2d5pt", "128x128", 64usize), ("2d9pt", "128x128", 64), ("3d7pt", "32x32x32", 32)]
+    {
+        let modes =
+            harness::measure_cpu_stencil_modes(bench, interior, steps, threads).unwrap();
+        for m in &modes {
+            t.row(&[
+                format!("{bench} {interior}"),
+                m.mode.name().into(),
+                format!("{:.6}", m.wall_seconds),
+                m.invocations.to_string(),
+                m.advance_spawns.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!();
+}
+
 fn main() {
+    measured_cpu_stencil_section();
     let rt = match Runtime::new(Runtime::default_dir()) {
         Ok(rt) => Rc::new(rt),
         Err(e) => {
-            eprintln!("skipping: artifacts not available ({e}); run `make artifacts`");
+            eprintln!("skipping PJRT section: artifacts not available ({e}); run `make artifacts`");
             return;
         }
     };

@@ -1,10 +1,14 @@
 //! Table II: concurrency analysis of the sp 2d5pt kernel on A100
 //! (1000 steps, 3072^2): TB/SMX vs used/unused registers, GM ops and
 //! measured GCells/s — plus the §IV-D L2-concurrency investigation
-//! (doubling C_sw at TB/SMX=1 recovers most of the gap).
+//! (doubling C_sw at TB/SMX=1 recovers most of the gap), plus a
+//! *measured* CPU counterpart: sweeping the resident worker count of the
+//! spawn-once stencil pool (the CPU analog of TB/SMX) against the
+//! relaunch baseline at the same concurrency.
 //!
 //! Run: `cargo bench --bench table2_concurrency`
 
+use perks::harness;
 use perks::simgpu::concurrency::{self, table_ii};
 use perks::simgpu::device::a100;
 use perks::util::fmt::{bytes, Table};
@@ -46,4 +50,30 @@ fn main() {
         100.0 * doubled
     );
     println!("paper: 94.75 -> 123.94 GCells/s (68.5% -> 89.6% of saturated).");
+
+    // measured CPU counterpart: resident worker concurrency sweep of the
+    // spawn-once stencil pool (pooled advance spawns must read 0 at every
+    // worker count; the baseline respawns workers * steps threads)
+    println!("\nMeasured CPU concurrency sweep — 2d5pt 256x256, 32 steps\n");
+    let mut ct = Table::new(&[
+        "workers",
+        "host-loop wall",
+        "pooled wall",
+        "speedup",
+        "host advance spawns",
+        "pooled advance spawns",
+    ]);
+    for threads in [1usize, 2, 4, 8] {
+        let modes = harness::measure_cpu_stencil_modes("2d5pt", "256x256", 32, threads).unwrap();
+        let (h, p) = (&modes[0], &modes[1]);
+        ct.row(&[
+            threads.to_string(),
+            format!("{:.6}", h.wall_seconds),
+            format!("{:.6}", p.wall_seconds),
+            format!("{:.2}x", h.wall_seconds / p.wall_seconds.max(1e-12)),
+            h.advance_spawns.to_string(),
+            p.advance_spawns.to_string(),
+        ]);
+    }
+    print!("{}", ct.render());
 }

@@ -93,11 +93,25 @@ impl GridBarrier {
     /// depend on arrival order: the fold order is fixed by slot index.
     pub fn sync_sum(&self) -> f64 {
         self.sync();
+        let acc = self.read_sum();
+        self.sync();
+        acc
+    }
+
+    /// Fold all reduction slots in slot-index order **without**
+    /// synchronizing. For callers that weave the reduction into an
+    /// existing barrier schedule instead of paying `sync_sum`'s two extra
+    /// syncs (the stencil pool's in-loop residual does this: the two
+    /// barriers of the halo-exchange protocol already bracket the fold).
+    /// The caller must guarantee — with its own `sync` calls — that every
+    /// `put` of the round happened before the fold and that no slot is
+    /// rewritten until every reader is done; `sync_sum` is exactly
+    /// `sync(); read_sum(); sync()`.
+    pub fn read_sum(&self) -> f64 {
         let mut acc = 0.0;
         for s in &self.slots {
             acc += f64::from_bits(s.load(Ordering::Acquire));
         }
-        self.sync();
         acc
     }
 
@@ -246,6 +260,22 @@ mod tests {
         assert!(results.windows(2).all(|w| w[0] == w[1]), "thread-count variant");
         let serial: f64 = parts.iter().sum();
         assert_eq!(results[0], serial.to_bits());
+    }
+
+    #[test]
+    fn read_sum_folds_in_slot_order_without_syncing() {
+        // single participant: put + read_sum must behave exactly like the
+        // fold inside sync_sum (left-to-right, 0.0 start), with no barrier
+        let vals = [1.0e16, -1.0, 3.5e-3, 7.25];
+        let b = GridBarrier::with_reduction(1, vals.len());
+        for (i, v) in vals.iter().enumerate() {
+            b.put(i, *v);
+        }
+        let expect: f64 = vals.iter().sum();
+        assert_eq!(b.read_sum().to_bits(), expect.to_bits());
+        // slots untouched: reading again folds the same bits
+        assert_eq!(b.read_sum().to_bits(), expect.to_bits());
+        assert_eq!(b.generations(), 0, "read_sum must not sync");
     }
 
     #[test]

@@ -262,7 +262,8 @@ pub fn measure_cpu_cg_modes(
             .cg_threaded(true)
             .mode(mode)
             .build()?;
-        s.prepare()?; // pool spawn (persistent) happens here, not in advance
+        // build() already prepared the solver — the pool (persistent
+        // mode) spawned its workers there, not in advance
         let spawns0 = crate::util::counters::thread_spawns();
         s.advance(iters)?;
         let advance_spawns = crate::util::counters::thread_spawns() - spawns0;

@@ -10,7 +10,9 @@ pub mod stencil_exp;
 pub use cg_exp::{
     evaluate as cg_evaluate, fig7, measure_cpu_cg_modes, modeled_cg_run, CgRow, MeasuredCgMode,
 };
-pub use stencil_exp::{modeled_run, speedup_row, StencilExperiment};
+pub use stencil_exp::{
+    measure_cpu_stencil_modes, modeled_run, speedup_row, MeasuredStencilMode, StencilExperiment,
+};
 
 /// Nominal host-link (PCIe-class) bandwidth used by the simulated backend
 /// to cost the host round trip of the `host-loop` execution model. The

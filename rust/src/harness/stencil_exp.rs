@@ -249,6 +249,77 @@ pub fn modeled_run(dev: &DeviceSpec, exp: &StencilExperiment, mode: ExecMode) ->
     }
 }
 
+/// One **measured** (not modeled) CPU stencil mode from
+/// [`measure_cpu_stencil_modes`].
+#[derive(Clone, Debug)]
+pub struct MeasuredStencilMode {
+    pub mode: ExecMode,
+    pub wall_seconds: f64,
+    /// Launches: 1 for the pooled persistent advance, `steps` host-loop.
+    pub invocations: u64,
+    /// OS threads spawned *during* `advance` — 0 for the stencil pool
+    /// (workers spawn at `prepare`), `steps * workers` for the
+    /// relaunch-per-step baseline.
+    pub advance_spawns: u64,
+    /// Shared-array ("global") traffic of the run.
+    pub global_bytes: u64,
+    pub cells_per_sec: f64,
+}
+
+impl MeasuredStencilMode {
+    /// Stable BENCH-json fragment, shared by the benches that report this
+    /// measurement so the schema cannot drift between them (the stencil
+    /// counterpart of `MeasuredCgMode::json`).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"mode\":\"{}\",\"wall_seconds\":{:.6},\"invocations\":{},\
+             \"advance_spawns\":{},\"global_bytes\":{}}}",
+            self.mode.name(),
+            self.wall_seconds,
+            self.invocations,
+            self.advance_spawns,
+            self.global_bytes
+        )
+    }
+}
+
+/// Measure spawn-per-step host-loop vs spawn-once pooled persistent
+/// stencil on one benchmark through the session API, snapshotting the
+/// thread-spawn counter around each `advance` (the pool spawns at
+/// `prepare`, so a pooled advance must read 0). One shared protocol for
+/// `cpu_perks`, `e2e_modes` and `table2_concurrency`.
+pub fn measure_cpu_stencil_modes(
+    bench: &str,
+    interior: &str,
+    steps: usize,
+    threads: usize,
+) -> crate::error::Result<Vec<MeasuredStencilMode>> {
+    use crate::session::{Backend, SessionBuilder, Workload};
+    let mut out = Vec::new();
+    for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+        let mut s = SessionBuilder::new()
+            .backend(Backend::cpu(threads))
+            .workload(Workload::stencil(bench, interior, "f64"))
+            .mode(mode)
+            .build()?;
+        // build() already prepared the solver — the pool (persistent
+        // mode) spawned its workers there, not in advance
+        let spawns0 = crate::util::counters::thread_spawns();
+        s.advance(steps)?;
+        let advance_spawns = crate::util::counters::thread_spawns() - spawns0;
+        let rep = s.report();
+        out.push(MeasuredStencilMode {
+            mode,
+            wall_seconds: rep.wall_seconds,
+            invocations: rep.invocations,
+            advance_spawns,
+            global_bytes: rep.host_bytes,
+            cells_per_sec: rep.fom,
+        });
+    }
+    Ok(out)
+}
+
 /// The benchmark lists by dimensionality (Figs 5/6/8 group them).
 pub fn benches_2d() -> Vec<&'static str> {
     vec!["2d5pt", "2ds9pt", "2d13pt", "2d17pt", "2d21pt", "2ds25pt", "2d9pt", "2d25pt"]
@@ -280,6 +351,33 @@ mod tests {
         assert_eq!(p.invocations, 1);
         assert!(p.barrier_wait_seconds > 0.0);
         assert!(h.wall_seconds.is_finite() && p.wall_seconds > 0.0);
+    }
+
+    #[test]
+    fn measured_stencil_modes_contrast_launches_and_traffic() {
+        // NB: `advance_spawns` reads the global spawn counter, which
+        // concurrent tests may bump — benches (single-threaded mains)
+        // assert on it; here we check the launch/traffic contrast and the
+        // BENCH-json schema only.
+        let modes = measure_cpu_stencil_modes("2d5pt", "12x12", 3, 2).unwrap();
+        assert_eq!(modes.len(), 2);
+        assert_eq!(modes[0].mode, ExecMode::HostLoop);
+        assert_eq!(modes[1].mode, ExecMode::Persistent);
+        assert_eq!(modes[0].invocations, 3, "one relaunch per step");
+        assert_eq!(modes[1].invocations, 1, "one resident launch per advance");
+        assert!(modes[0].global_bytes > modes[1].global_bytes);
+        for m in &modes {
+            let j = m.json();
+            for key in [
+                "\"mode\"",
+                "\"wall_seconds\"",
+                "\"invocations\"",
+                "\"advance_spawns\"",
+                "\"global_bytes\"",
+            ] {
+                assert!(j.contains(key), "{j}");
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! CPU persistent-threads solvers: the physically-measured PERKS
 //! demonstration behind `Backend::CpuPersistent`. Stencils run on the
-//! `stencil::parallel` substrate (OS threads as thread blocks, slabs as
-//! on-chip caches); CG runs on the merge-SpMV substrate with the paper's
-//! plan-caching and pass-fusion mechanisms.
+//! spawn-once `stencil::pool` runtime (OS threads as thread blocks, slabs
+//! as on-chip caches, resident across `advance` calls); CG runs on the
+//! merge-SpMV substrate with the paper's plan-caching and pass-fusion
+//! mechanisms.
 
 use std::sync::Arc;
 
@@ -13,21 +14,38 @@ use crate::session::{Report, Solver};
 use crate::sparse::csr::Csr;
 use crate::sparse::gen;
 use crate::spmv::merge::{self, MergePlan};
+use crate::stencil::parallel::ParallelReport;
+use crate::stencil::pool::StencilPool;
 use crate::stencil::shape::StencilSpec;
 use crate::stencil::{self, parallel, Domain};
 
 /// Iterative stencil on the persistent-threads CPU substrate (f64).
+///
+/// Persistent mode rides the spawn-once [`StencilPool`]: the banded
+/// workers are spawned in `prepare`, park on a condvar between `advance`
+/// calls, keep their slabs resident across them, and are joined on drop
+/// or `prepare` re-entry — so `advance` performs **zero** thread spawns.
+/// Host-loop mode respawns its threads every step (the measured
+/// relaunch-per-step baseline).
 pub struct CpuStencil {
     spec: StencilSpec,
     x0: Domain,
     threads: usize,
     mode: ExecMode,
+    /// Host-loop state; `None` while the pool owns the state.
     state: Option<Domain>,
+    /// Spawn-once banded worker pool; `Some` iff persistent mode, from
+    /// `prepare` (or the first `advance`) until the next `prepare`/drop.
+    pool: Option<StencilPool>,
     steps: usize,
     wall_seconds: f64,
     invocations: u64,
     host_bytes: u64,
+    /// Host-loop accumulation; the pooled path reads the pool's counter.
     barrier_wait_seconds: f64,
+    /// Last in-loop residual norm (squared step delta), from
+    /// convergence-driven advances.
+    residual: Option<f64>,
 }
 
 impl CpuStencil {
@@ -48,55 +66,132 @@ impl CpuStencil {
             threads,
             mode,
             state: None,
+            pool: None,
             steps: 0,
             wall_seconds: 0.0,
             invocations: 0,
             host_bytes: 0,
             barrier_wait_seconds: 0.0,
+            residual: None,
         })
+    }
+
+    /// OS threads the active pool has spawned (`None` when not pooled) —
+    /// constant across `advance` calls, which the tests assert.
+    #[cfg(test)]
+    fn pool_spawns(&self) -> Option<u64> {
+        self.pool.as_ref().map(|p| p.spawn_count())
+    }
+
+    fn record_host_rep(&mut self, rep: &ParallelReport) {
+        self.steps += rep.steps;
+        self.wall_seconds += rep.wall_seconds;
+        self.invocations += rep.steps as u64; // one "launch" (respawn) per step
+        self.host_bytes += rep.global_bytes;
+        self.barrier_wait_seconds += rep.barrier_wait.as_secs_f64();
+    }
+
+    /// Shared engine of `advance` (`tol == None`) and `advance_until`
+    /// (`tol == Some(_)`); returns the steps actually performed.
+    fn advance_inner(&mut self, steps: usize, tol: Option<f64>) -> Result<usize> {
+        match self.mode {
+            ExecMode::Persistent => {
+                if self.pool.is_none() {
+                    // direct (un-prepared) use: spawn the residents now
+                    self.pool = Some(StencilPool::spawn(&self.spec, &self.x0, self.threads)?);
+                }
+                let pool = self.pool.as_mut().expect("spawned above");
+                let t0 = std::time::Instant::now();
+                // resident time loop: the slab state rides the pool's
+                // workers, which iterate internally — zero thread spawns
+                let run = pool.run(steps, tol);
+                // the launch happened even if the run failed (collective
+                // worker panic): record wall + launch before propagating,
+                // as the CG path does for its completed-iteration metrics
+                self.wall_seconds += t0.elapsed().as_secs_f64();
+                self.invocations += 1; // one persistent launch per advance
+                let run = run?;
+                self.steps += run.steps;
+                self.host_bytes += run.global_bytes;
+                if run.residual.is_some() {
+                    self.residual = run.residual;
+                }
+                Ok(run.steps)
+            }
+            ExecMode::HostLoop => {
+                let mut cur = match self.state.take() {
+                    Some(s) => s,
+                    None => self.x0.clone(),
+                };
+                let did;
+                if let Some(tol) = tol {
+                    // relaunch-per-step baseline with a host-side norm
+                    // after every launch — same residual arithmetic as the
+                    // pool's in-loop fold, so both stop on the same step
+                    let mut n = 0;
+                    for _ in 0..steps {
+                        let rep = parallel::host_loop(&self.spec, &cur, 1, self.threads)?;
+                        self.record_host_rep(&rep);
+                        let res = parallel::residual_norm(&self.spec, &cur, &rep.result);
+                        self.residual = Some(res);
+                        cur = rep.result;
+                        n += 1;
+                        if res <= tol {
+                            break;
+                        }
+                    }
+                    did = n;
+                } else {
+                    let rep = parallel::host_loop(&self.spec, &cur, steps, self.threads)?;
+                    self.record_host_rep(&rep);
+                    cur = rep.result;
+                    did = steps;
+                }
+                self.state = Some(cur);
+                Ok(did)
+            }
+            ExecMode::HostLoopResident => {
+                Err(Error::invalid("host-loop-resident is a PJRT-only execution model"))
+            }
+        }
     }
 }
 
 impl Solver for CpuStencil {
     fn prepare(&mut self) -> Result<()> {
-        self.state = Some(self.x0.clone());
+        // shut the previous solve's pool down first (workers joined) so
+        // re-entry never leaks resident threads
+        self.pool = None;
+        self.state = None;
+        if self.mode == ExecMode::Persistent {
+            // spawn-once worker pool: the only thread creation of the
+            // whole solve; every subsequent `advance` is spawn-free
+            self.pool = Some(StencilPool::spawn(&self.spec, &self.x0, self.threads)?);
+        } else {
+            self.state = Some(self.x0.clone());
+        }
         self.steps = 0;
         self.wall_seconds = 0.0;
         self.invocations = 0;
         self.host_bytes = 0;
         self.barrier_wait_seconds = 0.0;
+        self.residual = None;
         Ok(())
     }
 
     fn advance(&mut self, steps: usize) -> Result<()> {
-        let cur = match self.state.take() {
-            Some(s) => s,
-            None => self.x0.clone(),
-        };
-        let rep = match self.mode {
-            ExecMode::HostLoop => parallel::host_loop(&self.spec, &cur, steps, self.threads)?,
-            ExecMode::Persistent => {
-                parallel::persistent(&self.spec, &cur, steps, self.threads)?
-            }
-            ExecMode::HostLoopResident => {
-                return Err(Error::invalid(
-                    "host-loop-resident is a PJRT-only execution model",
-                ))
-            }
-        };
-        self.steps += steps;
-        self.wall_seconds += rep.wall_seconds;
-        self.invocations += match self.mode {
-            ExecMode::HostLoop => steps as u64, // one "launch" (respawn) per step
-            _ => 1,                             // one persistent launch per advance
-        };
-        self.host_bytes += rep.global_bytes;
-        self.barrier_wait_seconds += rep.barrier_wait.as_secs_f64();
-        self.state = Some(rep.result);
-        Ok(())
+        self.advance_inner(steps, None).map(|_| ())
+    }
+
+    fn advance_until(&mut self, tol: f64, max_steps: usize) -> Result<usize> {
+        self.advance_inner(max_steps, Some(tol))
     }
 
     fn report(&self) -> Report {
+        let barrier_wait = match &self.pool {
+            Some(p) => p.barrier_wait_seconds(),
+            None => self.barrier_wait_seconds,
+        };
         Report::new(
             self.mode,
             self.steps,
@@ -105,12 +200,15 @@ impl Solver for CpuStencil {
             self.host_bytes,
             self.x0.interior_cells() as f64 * self.steps as f64,
             "cells/s",
-            None,
-            Some(self.barrier_wait_seconds),
+            self.residual,
+            Some(barrier_wait),
         )
     }
 
     fn state_f64(&self) -> Result<Vec<f64>> {
+        if let Some(pool) = &self.pool {
+            return Ok(pool.state());
+        }
         Ok(match &self.state {
             Some(d) => d.data.clone(),
             None => self.x0.data.clone(),
@@ -183,6 +281,12 @@ impl CpuCg {
                 "matrix not square: {}x{}",
                 a.n_rows, a.n_cols
             )));
+        }
+        if a.n_rows == 0 {
+            // partition(0, parts) is (correctly) empty: there are no
+            // reduction blocks and no rows to iterate — reject up front
+            // instead of building a zero-work solver
+            return Err(Error::Solver("matrix has no rows (empty system)".into()));
         }
         if b.len() != a.n_rows {
             return Err(Error::Solver(format!(
@@ -283,6 +387,60 @@ impl CpuCg {
         self.iters += 1;
         Ok(true)
     }
+
+    /// Shared engine of `advance` (`threshold == 0.0`, fixed-iteration)
+    /// and `advance_until` (`threshold == tol` on the `r·r` recurrence).
+    ///
+    /// A solver error (not positive definite) can fire after iterations
+    /// that *completed*; those iterations advanced state and `iters`, so
+    /// the launch metrics (wall/invocations/host_bytes) are recorded for
+    /// them **before** the error propagates — `report()` stays consistent
+    /// with its own step count.
+    fn advance_inner(&mut self, iters: usize, threshold: f64) -> Result<usize> {
+        let t0 = std::time::Instant::now();
+        let done;
+        let mut failure: Option<Error> = None;
+        if let Some(pool) = self.pool.as_mut() {
+            // resident time loop: state rides the pool's buffers, the
+            // workers iterate internally, zero spawns
+            let run =
+                pool.run(&mut self.x, &mut self.r, &mut self.p, self.rr, threshold, iters)?;
+            self.rr = run.rr;
+            self.iters += run.iters;
+            done = run.iters;
+            if let Some(msg) = run.error {
+                failure = Some(Error::Solver(msg));
+            }
+        } else {
+            // serial loop with the pool's threshold semantics: stop once
+            // rr <= threshold (threshold 0.0 == the rr <= 0 short-circuit)
+            let mut n = 0;
+            for _ in 0..iters {
+                if self.rr <= threshold {
+                    break;
+                }
+                match self.step() {
+                    Ok(true) => n += 1,
+                    Ok(false) => break,
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                }
+            }
+            done = n;
+        }
+        self.wall_seconds += t0.elapsed().as_secs_f64();
+        self.invocations += match self.mode {
+            ExecMode::Persistent => 1,
+            _ => done as u64,
+        };
+        self.host_bytes += done as u64 * self.bytes_per_iter();
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(done),
+        }
+    }
 }
 
 impl Solver for CpuCg {
@@ -315,38 +473,11 @@ impl Solver for CpuCg {
     }
 
     fn advance(&mut self, iters: usize) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        let done;
-        if let Some(pool) = self.pool.as_mut() {
-            // resident time loop: state rides the pool's buffers, the
-            // workers iterate internally, zero spawns
-            let run = pool.run(&mut self.x, &mut self.r, &mut self.p, self.rr, 0.0, iters)?;
-            self.rr = run.rr;
-            self.iters += run.iters;
-            if let Some(msg) = run.error {
-                // same observable point as the serial path: completed
-                // iterations are recorded, the failing one never updated
-                // state, and the launch metrics below are skipped
-                return Err(Error::Solver(msg));
-            }
-            done = run.iters;
-        } else {
-            let mut n = 0;
-            for _ in 0..iters {
-                if !self.step()? {
-                    break;
-                }
-                n += 1;
-            }
-            done = n;
-        }
-        self.wall_seconds += t0.elapsed().as_secs_f64();
-        self.invocations += match self.mode {
-            ExecMode::Persistent => 1,
-            _ => done as u64,
-        };
-        self.host_bytes += done as u64 * self.bytes_per_iter();
-        Ok(())
+        self.advance_inner(iters, 0.0).map(|_| ())
+    }
+
+    fn advance_until(&mut self, tol: f64, max_steps: usize) -> Result<usize> {
+        self.advance_inner(max_steps, tol)
     }
 
     fn report(&self) -> Report {
@@ -384,6 +515,7 @@ impl Solver for CpuCg {
 mod tests {
     use super::*;
     use crate::cg::{solve_persistent, CgOptions};
+    use crate::stencil::gold;
 
     #[test]
     fn cpu_cg_matches_the_batch_solver_iterates() {
@@ -423,7 +555,7 @@ mod tests {
         assert!(h.report().host_bytes > p.report().host_bytes);
     }
 
-    /// The tentpole guarantee: the pooled runtime walks the serial path's
+    /// The pooled-CG guarantee: the runtime walks the serial path's
     /// iterates bit-for-bit at every worker count, including across
     /// resumed `advance` calls.
     #[test]
@@ -503,5 +635,179 @@ mod tests {
         serial.advance(12).unwrap();
         assert_eq!(pooled.state_f64().unwrap(), serial.state_f64().unwrap());
         assert_eq!(pooled.report().steps, 12, "metrics reset on re-entry");
+    }
+
+    /// Satellite regression: a solver error after completed iterations
+    /// (here: iteration 2 hits pAp < 0 after iteration 1 succeeded) must
+    /// still record wall/invocations/host_bytes for the iterations that
+    /// ran — `report()` stays consistent with its own step count.
+    #[test]
+    fn cg_error_path_still_records_completed_iteration_metrics() {
+        // D = diag(2, -1), b = (1, 1): iteration 1 has pAp = 1 > 0 and
+        // completes; iteration 2 has pAp = -72 and fails.
+        let a = Csr::from_coo(2, 2, vec![(0, 0, 2.0), (1, 1, -1.0)]).unwrap();
+        let b = vec![1.0, 1.0];
+        for (threads, threaded) in [(1usize, false), (2usize, true)] {
+            let mut s = CpuCg::system(a.clone(), b.clone(), 2, threads, threaded,
+                ExecMode::Persistent)
+                .unwrap();
+            s.prepare().unwrap();
+            let err = s.advance(10).unwrap_err();
+            assert!(
+                format!("{err}").contains("positive definite"),
+                "threaded={threaded}: {err}"
+            );
+            let rep = s.report();
+            assert_eq!(rep.steps, 1, "threaded={threaded}: one completed iteration");
+            assert_eq!(rep.invocations, 1, "threaded={threaded}: the launch happened");
+            assert_eq!(
+                rep.host_bytes,
+                s.bytes_per_iter(),
+                "threaded={threaded}: traffic recorded for the completed iteration"
+            );
+            assert!(rep.wall_seconds > 0.0, "threaded={threaded}: wall recorded");
+        }
+    }
+
+    /// Satellite regression: an empty system is rejected up front instead
+    /// of building a solver over zero reduction blocks.
+    #[test]
+    fn cpu_cg_rejects_empty_system() {
+        let a = Csr::from_coo(0, 0, Vec::new()).unwrap();
+        let err = CpuCg::system(a, Vec::new(), 8, 1, false, ExecMode::Persistent).unwrap_err();
+        assert!(format!("{err}").contains("no rows"), "{err}");
+    }
+
+    #[test]
+    fn cg_advance_until_stops_on_the_recurrence_threshold() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 6);
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        let tol = 1e-10 * rr0;
+        let mut serial =
+            CpuCg::system(a.clone(), b.clone(), 8, 1, false, ExecMode::Persistent).unwrap();
+        serial.prepare().unwrap();
+        let iters = serial.advance_until(tol, 10_000).unwrap();
+        assert!(iters < 10_000, "converged early");
+        assert!(serial.rr <= tol);
+        assert_eq!(serial.report().steps, iters);
+        // the pooled path stops on the same iterate (same recurrence bits)
+        let mut pooled =
+            CpuCg::system(a, b, 8, 3, true, ExecMode::Persistent).unwrap();
+        pooled.prepare().unwrap();
+        let pooled_iters = pooled.advance_until(tol, 10_000).unwrap();
+        assert_eq!(pooled_iters, iters);
+        assert_eq!(pooled.rr.to_bits(), serial.rr.to_bits());
+        assert_eq!(pooled.state_f64().unwrap(), serial.state_f64().unwrap());
+    }
+
+    // -----------------------------------------------------------------
+    // CpuStencil on the spawn-once pool
+    // -----------------------------------------------------------------
+
+    /// Acceptance criterion (the stencil mirror of
+    /// `pooled_advance_never_spawns_host_loop_always_does`): persistent
+    /// stencil `advance` performs **zero** thread spawns after `prepare`;
+    /// the host-loop baseline respawns its threads every step.
+    #[test]
+    fn pooled_stencil_advance_never_spawns() {
+        let mut s =
+            CpuStencil::new("2d5pt", &[16, 16], 4, ExecMode::Persistent, 1, None).unwrap();
+        s.prepare().unwrap(); // the pool's one spawn batch
+        let spawned = s.pool_spawns().expect("persistent stencil rides the pool");
+        assert!(spawned >= 1);
+        s.advance(5).unwrap();
+        s.advance(7).unwrap();
+        assert_eq!(
+            s.pool_spawns().unwrap(),
+            spawned,
+            "advance must not spawn threads after pool start"
+        );
+
+        // the baseline pays spawn-per-step (global counter only ever
+        // grows, so a positive delta cannot be a concurrency artifact)
+        let mut h =
+            CpuStencil::new("2d5pt", &[16, 16], 4, ExecMode::HostLoop, 1, None).unwrap();
+        h.prepare().unwrap();
+        assert!(h.pool_spawns().is_none(), "host-loop has no pool");
+        let before = crate::util::counters::thread_spawns();
+        h.advance(5).unwrap();
+        assert!(
+            crate::util::counters::thread_spawns() >= before + 5 * 4,
+            "5 host-loop steps respawn 4 workers each"
+        );
+    }
+
+    /// Acceptance criterion: pooled stencil results are bit-identical to
+    /// `gold::run` and to the one-shot persistent path at every tested
+    /// thread count, including across resumed advances.
+    #[test]
+    fn pooled_stencil_is_bit_identical_to_one_shot_across_threads_and_resume() {
+        let seed = 77;
+        let spec = stencil::spec("2d9pt").unwrap();
+        let mut dom = Domain::for_spec(&spec, &[18, 18]).unwrap();
+        dom.randomize(seed);
+        let want = gold::run(&spec, &dom, 7).unwrap();
+        for threads in [1usize, 2, 3, 8] {
+            let one_shot = parallel::persistent(&spec, &dom, 7, threads).unwrap();
+            assert_eq!(one_shot.result.data, want.data, "threads={threads}: one-shot vs gold");
+            let mut s = CpuStencil::new("2d9pt", &[18, 18], threads, ExecMode::Persistent,
+                seed, Some(&dom.data))
+                .unwrap();
+            s.prepare().unwrap();
+            s.advance(3).unwrap();
+            s.advance(4).unwrap();
+            let got = s.state_f64().unwrap();
+            assert_eq!(got, want.data, "threads={threads}: pooled vs gold");
+            assert_eq!(got, one_shot.result.data, "threads={threads}: pooled vs one-shot");
+            assert_eq!(s.report().steps, 7);
+            assert_eq!(s.report().invocations, 2, "one resident launch per advance");
+        }
+    }
+
+    /// Convergence path: the pooled in-loop residual and the host-loop
+    /// host-side norm share one arithmetic, so both modes stop on the
+    /// same step with the same bits.
+    #[test]
+    fn stencil_advance_until_agrees_across_modes() {
+        let seed = 21;
+        let (tol, max) = (1e-8, 20_000);
+        let mut pooled =
+            CpuStencil::new("2d5pt", &[8, 8], 2, ExecMode::Persistent, seed, None).unwrap();
+        pooled.prepare().unwrap();
+        let steps_p = pooled.advance_until(tol, max).unwrap();
+        assert!(steps_p > 0 && steps_p < max, "pooled did not converge ({steps_p})");
+        let rep = pooled.report();
+        let res_p = rep.residual.expect("convergence-driven advance reports a residual");
+        assert!(res_p <= tol);
+        assert_eq!(rep.steps, steps_p);
+        assert_eq!(rep.invocations, 1, "one resident launch for the whole search");
+
+        let mut host =
+            CpuStencil::new("2d5pt", &[8, 8], 2, ExecMode::HostLoop, seed, None).unwrap();
+        host.prepare().unwrap();
+        let steps_h = host.advance_until(tol, max).unwrap();
+        assert_eq!(steps_h, steps_p, "both modes stop on the same step");
+        let res_h = host.report().residual.unwrap();
+        assert_eq!(res_h.to_bits(), res_p.to_bits(), "identical residual bits");
+        assert_eq!(host.state_f64().unwrap(), pooled.state_f64().unwrap());
+    }
+
+    /// `prepare()` re-entry replaces the stencil pool cleanly (old
+    /// workers joined, state and metrics reset).
+    #[test]
+    fn stencil_prepare_reentry_replaces_the_pool_cleanly() {
+        let mut s =
+            CpuStencil::new("2d5pt", &[12, 12], 3, ExecMode::Persistent, 4, None).unwrap();
+        s.prepare().unwrap();
+        s.advance(6).unwrap();
+        s.prepare().unwrap(); // old pool joined here, new pool spawned
+        s.advance(2).unwrap();
+        let spec = stencil::spec("2d5pt").unwrap();
+        let mut dom = Domain::for_spec(&spec, &[12, 12]).unwrap();
+        dom.randomize(4);
+        let want = gold::run(&spec, &dom, 2).unwrap();
+        assert_eq!(s.state_f64().unwrap(), want.data, "restart runs from x0");
+        assert_eq!(s.report().steps, 2, "metrics reset on re-entry");
     }
 }

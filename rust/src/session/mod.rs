@@ -157,6 +157,19 @@ pub trait Solver {
     /// [`Solver::fused_chunk`].
     fn advance(&mut self, steps: usize) -> Result<()>;
 
+    /// Advance until the solver's convergence measure drops to `tol`, or
+    /// `max_steps` elapse; returns the steps actually performed. The
+    /// measure is the squared step-delta norm for stencils and the `r·r`
+    /// recurrence for CG (both surfaced as [`Report::residual`]). On the
+    /// CPU persistent substrates the check runs *inside* the resident
+    /// loop (the pool's barrier-fused residual / the CG threshold path);
+    /// backends without in-loop convergence detection return an error.
+    fn advance_until(&mut self, _tol: f64, _max_steps: usize) -> Result<usize> {
+        Err(Error::invalid(
+            "convergence-driven advance is not supported by this backend",
+        ))
+    }
+
     /// Metrics accumulated since the last `prepare`.
     fn report(&self) -> Report;
 
@@ -376,6 +389,12 @@ impl Session {
     /// Advance the current state (see [`Solver::advance`]).
     pub fn advance(&mut self, steps: usize) -> Result<()> {
         self.solver.advance(steps)
+    }
+
+    /// Advance until converged to `tol` or `max_steps` elapse; returns
+    /// the steps performed (see [`Solver::advance_until`]).
+    pub fn advance_until(&mut self, tol: f64, max_steps: usize) -> Result<usize> {
+        self.solver.advance_until(tol, max_steps)
     }
 
     /// Metrics accumulated since the last `prepare`.

@@ -2,10 +2,14 @@
 //! gold executor, and a persistent-threads CPU executor that demonstrates
 //! the PERKS execution model physically (thread-local slabs as the on-chip
 //! cache, a shared array as global memory, a grid barrier as grid.sync).
+//! The `pool` module holds the spawn-once worker runtime (workers parked
+//! between `advance` commands, slabs resident across them); `parallel`
+//! holds the shared banded machinery plus the one-shot/host-loop drivers.
 
 pub mod gold;
 pub mod grid;
 pub mod parallel;
+pub mod pool;
 pub mod shape;
 pub mod temporal;
 

@@ -1,4 +1,5 @@
-//! Persistent-threads CPU stencil executor.
+//! Banded-decomposition machinery + execution models for the CPU stencil
+//! substrate.
 //!
 //! This substrate demonstrates the PERKS execution model *physically* on
 //! the CPU: OS threads play the role of thread blocks, per-thread slabs of
@@ -7,27 +8,53 @@
 //! global memory, and `coordinator::barrier::GridBarrier` plays the role
 //! of `grid.sync()`.
 //!
-//! Two modes, mirroring Fig 3 of the paper:
+//! One implementation of the banded geometry ([`partition`], `bands_for`,
+//! `ThreadPlan`), the cell-update kernel (`compute_band`/`scatter_band`)
+//! and the shared array ([`SharedGrid`]) serves three drivers:
 //!
-//! * `host_loop` — threads are (re)spawned every time step and the whole
+//! * [`host_loop`] — threads are (re)spawned every time step and the whole
 //!   domain round-trips through the shared array: the traditional model.
-//! * `persistent` — threads are spawned once and keep their slab locally
-//!   across all steps; only the slab *boundary planes* are exchanged
-//!   through the shared array each step (plus one final full store).
+//! * [`persistent`] — one-shot PERKS run: spawn a
+//!   [`crate::stencil::pool::StencilPool`], run the resident time loop
+//!   once, join. Threads are spawned once per *call*.
+//! * [`crate::stencil::pool::StencilPool`] — the spawn-once runtime:
+//!   workers park between `advance` commands and keep their slabs
+//!   resident *across* calls, which is what `session::CpuStencil` rides.
 //!
-//! Both produce results identical to `gold::run`, which the tests assert.
+//! # The two-barrier exchange invariant
+//!
+//! The resident loop stores only a band's *boundary planes* (the planes a
+//! neighbor's halo reads) to the shared array each step, then loads its
+//! own halo planes back. Two grid barriers per step make that sound:
+//!
+//! 1. after every thread's boundary **store** — no thread may read halo
+//!    planes before all neighbors have published them;
+//! 2. after every thread's halo **load** — no thread may overwrite its
+//!    boundary planes (next step's store) before all neighbors have read
+//!    the current ones.
+//!
+//! Between the two barriers the shared array is read-only, which is also
+//! where the pool folds its residual-norm reduction slots (see
+//! `GridBarrier::read_sum`).
+//!
+//! Traffic accounting follows the paper's Eq 5: a band thinner than
+//! `2*radius` has overlapping lo/hi boundary ranges, so the per-step
+//! boundary traffic is the **union** of the two plane ranges
+//! ([`boundary_union_planes`]), not their sum.
+//!
+//! All drivers produce results identical to `gold::run`, which the tests
+//! assert.
 
 use std::cell::UnsafeCell;
-use std::sync::Arc;
 
-use crate::coordinator::barrier::GridBarrier;
 use crate::error::{Error, Result};
 use crate::stencil::grid::Domain;
+use crate::stencil::pool::StencilPool;
 use crate::stencil::shape::StencilSpec;
 
 /// Shared mutable grid with disjoint-region writes coordinated by the
-/// barrier protocol below (safety argument in `SharedGrid::slice_mut`).
-struct SharedGrid {
+/// two-barrier protocol above (safety argument on each accessor).
+pub(crate) struct SharedGrid {
     data: UnsafeCell<Vec<f64>>,
     len: usize,
 }
@@ -35,18 +62,18 @@ struct SharedGrid {
 unsafe impl Sync for SharedGrid {}
 
 impl SharedGrid {
-    fn new(data: Vec<f64>) -> Self {
+    pub(crate) fn new(data: Vec<f64>) -> Self {
         let len = data.len();
         Self { data: UnsafeCell::new(data), len }
     }
 
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.len
     }
 
     /// Read a range. Caller must guarantee no concurrent writer overlaps
     /// the range (enforced by the band ownership + barrier protocol).
-    unsafe fn read(&self, range: std::ops::Range<usize>, dst: &mut [f64]) {
+    pub(crate) unsafe fn read(&self, range: std::ops::Range<usize>, dst: &mut [f64]) {
         debug_assert!(range.end <= self.len && range.len() == dst.len());
         let base = (*self.data.get()).as_ptr();
         std::ptr::copy_nonoverlapping(base.add(range.start), dst.as_mut_ptr(), range.len());
@@ -54,7 +81,7 @@ impl SharedGrid {
 
     /// Write a range. Caller must guarantee exclusive ownership of the
     /// range between barriers.
-    unsafe fn write(&self, offset: usize, src: &[f64]) {
+    pub(crate) unsafe fn write(&self, offset: usize, src: &[f64]) {
         debug_assert!(offset + src.len() <= self.len);
         let base = (*self.data.get()).as_mut_ptr();
         std::ptr::copy_nonoverlapping(src.as_ptr(), base.add(offset), src.len());
@@ -66,8 +93,13 @@ impl SharedGrid {
 }
 
 /// Partition `count` planes into `parts` contiguous bands (first bands get
-/// the remainder). Returns (start, len) pairs; never empty bands.
+/// the remainder). Returns (start, len) pairs; bands are never empty:
+/// `parts` is clamped to `count`, and a zero-plane domain yields **no
+/// bands at all** (an empty `Vec`), never a `(0, 0)` placeholder.
 pub fn partition(count: usize, parts: usize) -> Vec<(usize, usize)> {
+    if count == 0 {
+        return Vec::new();
+    }
     let parts = parts.min(count).max(1);
     let base = count / parts;
     let rem = count % parts;
@@ -82,33 +114,27 @@ pub fn partition(count: usize, parts: usize) -> Vec<(usize, usize)> {
 }
 
 /// Geometry of the banded decomposition for one domain.
-struct Bands {
+pub(crate) struct Bands {
     /// Axis 0 for 3D (z), axis 1 for 2D (y).
-    axis: usize,
+    pub(crate) axis: usize,
     /// Plane size in elements (stride between consecutive planes).
-    plane: usize,
+    pub(crate) plane: usize,
     /// Interior plane range start in padded coords (== radius for the
     /// banded axis... 0-pad for 2D z).
-    first: usize,
-    bands: Vec<(usize, usize)>,
+    pub(crate) first: usize,
+    pub(crate) bands: Vec<(usize, usize)>,
 }
 
-fn bands_for(domain: &Domain, spec: &StencilSpec, threads: usize) -> Bands {
-    if spec.dims == 3 {
-        Bands {
-            axis: 0,
-            plane: domain.padded[1] * domain.padded[2],
-            first: spec.radius,
-            bands: partition(domain.interior[0], threads),
-        }
+pub(crate) fn bands_for(domain: &Domain, spec: &StencilSpec, threads: usize) -> Result<Bands> {
+    let (axis, plane, count) = if spec.dims == 3 {
+        (0, domain.padded[1] * domain.padded[2], domain.interior[0])
     } else {
-        Bands {
-            axis: 1,
-            plane: domain.padded[2],
-            first: spec.radius,
-            bands: partition(domain.interior[1], threads),
-        }
+        (1, domain.padded[2], domain.interior[1])
+    };
+    if count == 0 {
+        return Err(Error::invalid("domain has no interior planes to band"));
     }
+    Ok(Bands { axis, plane, first: spec.radius, bands: partition(count, threads) })
 }
 
 /// Report from a parallel run.
@@ -117,20 +143,32 @@ pub struct ParallelReport {
     pub result: Domain,
     pub wall_seconds: f64,
     pub threads: usize,
+    /// Time steps actually performed (== requested unless a convergence
+    /// threshold stopped the resident loop early).
+    pub steps: usize,
     /// Bytes moved through the shared ("global") array, summed over
-    /// threads: the traffic the paper's Eq 5 accounts.
+    /// threads: the traffic the paper's Eq 5 accounts. Boundary stores of
+    /// thin bands count the union of the lo/hi plane ranges once.
     pub global_bytes: u64,
     pub barrier_wait: std::time::Duration,
+    /// Last in-loop residual norm (squared step delta), when the run
+    /// tracked one (`None` for fixed-step runs and for `host_loop`).
+    pub residual: Option<f64>,
 }
 
-struct ThreadPlan {
+pub(crate) struct ThreadPlan {
     /// Banded-axis plane range owned by this thread, padded coords.
-    band: std::ops::Range<usize>,
+    pub(crate) band: std::ops::Range<usize>,
     /// Slab (band + halo planes) element range in the padded array.
-    slab: std::ops::Range<usize>,
+    pub(crate) slab: std::ops::Range<usize>,
 }
 
-fn plans(geometry: &Bands, radius: usize, total_planes: usize, plane: usize) -> Vec<ThreadPlan> {
+pub(crate) fn plans(
+    geometry: &Bands,
+    radius: usize,
+    total_planes: usize,
+    plane: usize,
+) -> Vec<ThreadPlan> {
     geometry
         .bands
         .iter()
@@ -144,13 +182,22 @@ fn plans(geometry: &Bands, radius: usize, total_planes: usize, plane: usize) -> 
         .collect()
 }
 
+/// Distinct boundary planes a band publishes each step: the lo range
+/// covers the first `radius` band planes, the hi range the last `radius`;
+/// for bands thinner than `2*radius` the two overlap, and the per-step
+/// traffic is the union — `min(2*radius, band_planes)` — not the sum
+/// (counting both inflates `global_bytes` against the Eq 5 model).
+pub(crate) fn boundary_union_planes(radius: usize, band_planes: usize) -> usize {
+    (2 * radius).min(band_planes)
+}
+
 /// Compute one Jacobi step for the planes `band` (padded coords along the
 /// banded axis) reading from `local` (a slab starting at plane
 /// `slab_first`), writing new interior values into `out` (band-sized).
 /// `deltas` are the precomputed `gold::linear_deltas` offsets — hoisted to
 /// the caller so persistent threads build them once, not every time step.
 #[allow(clippy::too_many_arguments)]
-fn compute_band(
+pub(crate) fn compute_band(
     spec: &StencilSpec,
     domain: &Domain,
     local: &[f64],
@@ -198,7 +245,7 @@ fn compute_band(
 /// buffer `planes` whose first plane is `dst_first` (padded coords).
 /// Rows are contiguous in both `results` and `planes`, so each row moves
 /// as one `copy_from_slice` (memcpy) instead of an element-wise loop.
-fn scatter_band(
+pub(crate) fn scatter_band(
     spec: &StencilSpec,
     domain: &Domain,
     band: &std::ops::Range<usize>,
@@ -229,145 +276,124 @@ fn scatter_band(
     }
 }
 
-/// Run `steps` Jacobi steps with persistent threads (the PERKS model).
+/// Per-plane squared-delta partials between the freshly computed interior
+/// values of a band (`results`, contiguous band-major rows — the
+/// `compute_band` layout) and the pre-update slab (`local`). Calls
+/// `put(plane_slot, partial)` once per band plane, where `plane_slot` is
+/// the *global* interior plane index (`plane - first`) — the
+/// reduction-slot protocol of the pool's in-loop residual. Each partial
+/// accumulates left-to-right in row-major order from 0.0, so the
+/// slot-ordered fold is bit-identical at every thread count and matches
+/// the serial [`residual_norm`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn band_delta_partials(
+    spec: &StencilSpec,
+    domain: &Domain,
+    local: &[f64],
+    slab_first: usize,
+    band: &std::ops::Range<usize>,
+    axis: usize,
+    first: usize,
+    results: &[f64],
+    mut put: impl FnMut(usize, f64),
+) {
+    let r = spec.radius;
+    let (py, px) = (domain.padded[1], domain.padded[2]);
+    let width = px - 2 * r;
+    let mut o = 0;
+    if axis == 0 {
+        for z in band.clone() {
+            let mut partial = 0.0;
+            for y in r..py - r {
+                let base = ((z - slab_first) * py + y) * px + r;
+                for i in 0..width {
+                    let d = results[o + i] - local[base + i];
+                    partial += d * d;
+                }
+                o += width;
+            }
+            put(z - first, partial);
+        }
+    } else {
+        for y in band.clone() {
+            let base = (y - slab_first) * px + r;
+            let mut partial = 0.0;
+            for i in 0..width {
+                let d = results[o + i] - local[base + i];
+                partial += d * d;
+            }
+            o += width;
+            put(y - first, partial);
+        }
+    }
+}
+
+/// Deterministic squared step-delta norm between two same-geometry
+/// domains: per-interior-plane partials along the banded axis, each
+/// accumulated in row-major order from 0.0, folded in plane order — the
+/// exact arithmetic of the pool's in-loop residual
+/// ([`band_delta_partials`] + `GridBarrier::read_sum`), so a host-side
+/// convergence check stops on the same step as the resident one, with the
+/// same bits.
+pub fn residual_norm(spec: &StencilSpec, old: &Domain, new: &Domain) -> f64 {
+    debug_assert_eq!(old.padded, new.padded);
+    let r = spec.radius;
+    let (py, px) = (old.padded[1], old.padded[2]);
+    let width = px - 2 * r;
+    let mut acc = 0.0;
+    if spec.dims == 3 {
+        for z in old.z_range() {
+            let mut partial = 0.0;
+            for y in r..py - r {
+                let base = (z * py + y) * px + r;
+                for i in 0..width {
+                    let d = new.data[base + i] - old.data[base + i];
+                    partial += d * d;
+                }
+            }
+            acc += partial;
+        }
+    } else {
+        for y in r..py - r {
+            let base = y * px + r;
+            let mut partial = 0.0;
+            for i in 0..width {
+                let d = new.data[base + i] - old.data[base + i];
+                partial += d * d;
+            }
+            acc += partial;
+        }
+    }
+    acc
+}
+
+/// Run `steps` Jacobi steps with persistent threads (the PERKS model),
+/// one-shot: spawns a [`StencilPool`], runs the resident loop once, joins
+/// the workers on return. Callers that advance repeatedly should hold a
+/// pool (or a `session::CpuStencil` in persistent mode) instead, which
+/// keeps the workers parked — and their slabs resident — between calls.
 pub fn persistent(
     spec: &StencilSpec,
     x0: &Domain,
     steps: usize,
     threads: usize,
 ) -> Result<ParallelReport> {
-    if threads == 0 {
-        return Err(Error::invalid("threads must be > 0"));
-    }
-    let geometry = bands_for(x0, spec, threads);
-    let r = spec.radius;
-    let plane = geometry.plane;
-    let total_planes = x0.data.len() / plane;
-    let plans = plans(&geometry, r, total_planes, plane);
-    let nthreads = plans.len();
-    let barrier = Arc::new(GridBarrier::new(nthreads));
-    let shared = Arc::new(SharedGrid::new(x0.data.clone()));
-    let weights = spec.weights();
-    let global_bytes = Arc::new(std::sync::atomic::AtomicU64::new(0));
-
     let t0 = std::time::Instant::now();
-    crate::util::counters::note_thread_spawns(nthreads as u64);
-    std::thread::scope(|scope| {
-        for plan in &plans {
-            let barrier = barrier.clone();
-            let shared = shared.clone();
-            let weights = weights.clone();
-            let global_bytes = global_bytes.clone();
-            let domain = x0;
-            let axis = geometry.axis;
-            scope.spawn(move || {
-                let slab_first = plan.slab.start / plane;
-                // --- initial load: slab (band + halos) from global ---
-                let mut local = vec![0.0f64; plan.slab.len()];
-                unsafe { shared.read(plan.slab.clone(), &mut local) };
-                let mut moved = (plan.slab.len() * 8) as u64;
-                // everyone must finish the initial load before anyone's
-                // first boundary store mutates the shared array
-                barrier.sync();
-
-                let band_planes = plan.band.len();
-                let interior_per_plane = if axis == 0 {
-                    (domain.padded[1] - 2 * r) * (domain.padded[2] - 2 * r)
-                } else {
-                    domain.padded[2] - 2 * r
-                };
-                let mut results = vec![0.0f64; band_planes * interior_per_plane];
-                // loop invariants of the resident time loop, built once
-                // per persistent thread (not once per step)
-                let deltas = crate::stencil::gold::linear_deltas(
-                    spec,
-                    domain.padded[1],
-                    domain.padded[2],
-                );
-
-                for _ in 0..steps {
-                    compute_band(
-                        spec, domain, &local, slab_first, &plan.band, &weights, &deltas,
-                        axis, &mut results,
-                    );
-                    // update local slab interior with new values
-                    let band_off = (plan.band.start - slab_first) * plane;
-                    let band_len = band_planes * plane;
-                    scatter_band(
-                        spec,
-                        domain,
-                        &plan.band,
-                        axis,
-                        &results,
-                        &mut local[band_off..band_off + band_len],
-                        plan.band.start,
-                    );
-                    // --- exchange: store only boundary planes to global ---
-                    let lo_planes = r.min(band_planes);
-                    let lo_start = plan.band.start * plane;
-                    unsafe {
-                        shared.write(
-                            lo_start,
-                            &local[band_off..band_off + lo_planes * plane],
-                        )
-                    };
-                    let hi_planes = r.min(band_planes);
-                    let hi_first = plan.band.end - hi_planes;
-                    let hi_off = (hi_first - slab_first) * plane;
-                    unsafe {
-                        shared.write(hi_first * plane, &local[hi_off..hi_off + hi_planes * plane])
-                    };
-                    moved += ((lo_planes + hi_planes) * plane * 8) as u64;
-                    barrier.sync();
-                    // --- load neighbor halo planes from global ---
-                    let halo_lo = plan.slab.start / plane..plan.band.start;
-                    if !halo_lo.is_empty() {
-                        let off = halo_lo.start * plane;
-                        let len = halo_lo.len() * plane;
-                        unsafe {
-                            shared.read(off..off + len, &mut local[..len]);
-                        }
-                        moved += (len * 8) as u64;
-                    }
-                    let halo_hi = plan.band.end..plan.slab.end / plane;
-                    if !halo_hi.is_empty() {
-                        let off = halo_hi.start * plane;
-                        let len = halo_hi.len() * plane;
-                        let loff = (halo_hi.start - slab_first) * plane;
-                        unsafe {
-                            shared.read(off..off + len, &mut local[loff..loff + len]);
-                        }
-                        moved += (len * 8) as u64;
-                    }
-                    // second barrier: nobody may overwrite boundary planes
-                    // (next step's store) before all neighbors read them
-                    barrier.sync();
-                }
-                // --- final store: whole band back to global ---
-                let band_off = (plan.band.start - slab_first) * plane;
-                let band_len = band_planes * plane;
-                unsafe {
-                    shared.write(
-                        plan.band.start * plane,
-                        &local[band_off..band_off + band_len],
-                    )
-                };
-                moved += (band_len * 8) as u64;
-                global_bytes.fetch_add(moved, std::sync::atomic::Ordering::Relaxed);
-            });
-        }
-    });
+    let mut pool = StencilPool::spawn(spec, x0, threads)?;
+    let run = pool.run(steps, None)?;
+    // join the workers inside the timed region: the host-loop baseline
+    // pays its per-step joins in its wall, so the one-shot comparison
+    // (benches, Auto-mode probes) must pay this one too
+    pool.shutdown();
     let wall = t0.elapsed().as_secs_f64();
-
-    let shared = Arc::try_unwrap(shared).ok().expect("threads joined");
-    let mut result = x0.clone();
-    result.data = shared.into_inner();
     Ok(ParallelReport {
-        result,
+        result: pool.state_domain(),
         wall_seconds: wall,
-        threads: nthreads,
-        global_bytes: global_bytes.load(std::sync::atomic::Ordering::Relaxed),
-        barrier_wait: barrier.total_wait(),
+        threads: pool.workers(),
+        steps: run.steps,
+        global_bytes: run.global_bytes,
+        barrier_wait: pool.barrier_wait(),
+        residual: run.residual,
     })
 }
 
@@ -383,7 +409,7 @@ pub fn host_loop(
     if threads == 0 {
         return Err(Error::invalid("threads must be > 0"));
     }
-    let geometry = bands_for(x0, spec, threads);
+    let geometry = bands_for(x0, spec, threads)?;
     let r = spec.radius;
     let plane = geometry.plane;
     let total_planes = x0.data.len() / plane;
@@ -469,8 +495,10 @@ pub fn host_loop(
         result,
         wall_seconds: wall,
         threads: nthreads,
+        steps,
         global_bytes,
         barrier_wait: std::time::Duration::ZERO,
+        residual: None,
     })
 }
 
@@ -541,6 +569,53 @@ mod tests {
         );
     }
 
+    /// Satellite regression: a band thinner than `2*radius` stores
+    /// overlapping lo/hi boundary ranges; `global_bytes` must count the
+    /// union exactly once (Eq 5), computed here independently from the
+    /// band geometry.
+    #[test]
+    fn thin_band_traffic_matches_eq5_boundary_union() {
+        let s = spec("2ds25pt").unwrap();
+        assert_eq!(s.radius, 6);
+        let mut d = Domain::for_spec(&s, &[20, 16]).unwrap();
+        d.randomize(5);
+        let (steps, threads) = (3usize, 4usize);
+        // thin-band premise: every band is thinner than 2r
+        let bands = partition(d.interior[1], threads);
+        assert!(bands.iter().all(|&(_, l)| l < 2 * s.radius));
+
+        let want = gold::run(&s, &d, steps).unwrap();
+        let rep = persistent(&s, &d, steps, threads).unwrap();
+        assert!(rep.result.max_abs_diff(&want) < 1e-12, "thin-band run must stay gold-exact");
+
+        let r = s.radius;
+        let plane = d.padded[2];
+        let total_planes = d.padded[1];
+        let mut expect = 0u64;
+        let mut double_counted = 0u64;
+        for &(start, len) in &bands {
+            let b0 = r + start;
+            let b1 = b0 + len;
+            let s0 = b0.saturating_sub(r);
+            let s1 = (b1 + r).min(total_planes);
+            let slab = s1 - s0;
+            let halo = (b0 - s0) + (s1 - b1);
+            // initial slab load + per-step (boundary union + halo reload)
+            // + final whole-band store, all in planes
+            let union = boundary_union_planes(r, len);
+            expect += ((slab + steps * (union + halo) + len) * plane * 8) as u64;
+            let lo_plus_hi = 2 * r.min(len);
+            double_counted += ((slab + steps * (lo_plus_hi + halo) + len) * plane * 8) as u64;
+        }
+        assert_eq!(rep.global_bytes, expect, "Eq-5 boundary-union accounting");
+        assert!(
+            rep.global_bytes < double_counted,
+            "the old lo+hi sum would have inflated traffic ({} vs {})",
+            rep.global_bytes,
+            double_counted
+        );
+    }
+
     #[test]
     fn partition_covers_exactly() {
         for (count, parts) in [(10, 3), (7, 7), (5, 9), (1, 1), (100, 8)] {
@@ -555,5 +630,34 @@ mod tests {
                 next = s + l;
             }
         }
+    }
+
+    /// Satellite regression: `partition(0, parts)` used to fabricate a
+    /// single `(0, 0)` band, violating the "never empty bands" contract
+    /// and producing a zero-work thread plan downstream.
+    #[test]
+    fn partition_of_zero_planes_is_empty() {
+        for parts in [1usize, 2, 8] {
+            assert!(partition(0, parts).is_empty(), "parts={parts}");
+        }
+        // and the domain-level validation rejects un-bandable domains
+        let s = spec("2d5pt").unwrap();
+        let d = Domain::zeros([1, 0, 4], s.radius, 2);
+        assert!(bands_for(&d, &s, 2).is_err());
+    }
+
+    #[test]
+    fn residual_norm_is_zero_only_at_a_fixed_point() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(3);
+        let next = gold::run(&s, &d, 1).unwrap();
+        assert!(residual_norm(&s, &d, &next) > 0.0);
+        // constant field: a fixed point up to rounding in the convex
+        // weights => the squared delta norm is negligibly small
+        let mut c = Domain::for_spec(&s, &[8, 8]).unwrap();
+        c.data.iter_mut().for_each(|v| *v = 1.5);
+        let cn = gold::run(&s, &c, 1).unwrap();
+        assert!(residual_norm(&s, &c, &cn) < 1e-20);
     }
 }

@@ -1,0 +1,711 @@
+//! Spawn-once persistent stencil worker pool: the PERKS execution model
+//! for iterative stencils, with the time loop resident in the workers
+//! *across* `advance` boundaries.
+//!
+//! # Why a pool
+//!
+//! The paper's whole point is that the time loop lives inside the
+//! persistent kernel, so nothing is relaunched per step. The one-shot
+//! [`crate::stencil::parallel::persistent`] driver realizes that *within*
+//! one call — but still pays a full spawn/join cycle on every call, which
+//! is exactly the amortization boundary the kernel-batching literature
+//! (and our own `cg::pool`, PR 2) pushes launches across. This module is
+//! the stencil counterpart of [`crate::cg::pool::CgPool`]:
+//!
+//! | GPU (PERKS kernel)            | CPU (`StencilPool`)                    |
+//! |-------------------------------|----------------------------------------|
+//! | thread block                  | pool worker (OS thread, spawn-once)    |
+//! | kernel launch / relaunch      | `StencilPool::spawn` (once per solve)  |
+//! | TB's domain tile              | worker's banded `ThreadPlan`           |
+//! | registers/smem-resident tile  | worker's slab (`local`), hot in L1/L2  |
+//! |                               | **across `advance` calls**             |
+//! | `grid.sync()`                 | `GridBarrier::sync`                    |
+//! | grid-sync + device reduction  | `put` + `read_sum` residual all-reduce |
+//!
+//! # Command protocol
+//!
+//! Workers are spawned once by [`StencilPool::spawn`] and then park on a
+//! condvar. The main thread drives them with epoch-stamped commands
+//! (`Run { steps, tol }` / `Shutdown`) through the control mutex; each
+//! worker executes the whole resident time loop for a `Run`, reports into
+//! the shared `Outcome`, bumps `finished`, and parks again. The
+//! command/completion handshake establishes happens-before in both
+//! directions, so between runs the main thread may read the shared grid
+//! ([`StencilPool::state`]) while the workers' slabs stay untouched — and
+//! current: every run ends with a whole-band store, and the resident loop
+//! refreshes halos before finishing, so slab and grid agree at every park.
+//!
+//! # The two-barrier exchange invariant
+//!
+//! Each resident step stores only the band's boundary planes to the
+//! shared grid and reloads the halo planes, bracketed by two grid
+//! barriers (see `stencil::parallel`'s module docs): barrier 1 orders
+//! every boundary *store* before any halo *load*; barrier 2 orders every
+//! halo load before the next step's stores. Between the two barriers the
+//! grid is read-only — which is where the in-loop residual folds: workers
+//! `put` one squared-delta partial per interior plane before barrier 1,
+//! and every worker folds the slots in plane order (`read_sum`) right
+//! after it, giving a deterministic, thread-count-invariant convergence
+//! norm with **zero extra barriers**.
+//!
+//! # Determinism
+//!
+//! Cell updates are pure functions of the previous state with a fixed
+//! accumulation order (`gold::accumulate_row`), so pooled iterates are
+//! bit-identical to `gold::run`, to the one-shot driver, and to
+//! themselves at every worker count and across resumed `advance`s. The
+//! residual norm folds fixed per-plane partials in plane-index order, so
+//! it too is identical at every worker count — a tolerance stop happens
+//! on the same step everywhere.
+//!
+//! # Safety protocol
+//!
+//! The grid lives in a [`SharedGrid`] (`UnsafeCell`) shared by the main
+//! thread and the workers. Exclusive access is phased exactly as in
+//! `cg::pool`: the main thread touches it only while the pool is idle
+//! (the handshake above), and within a run the workers partition writes
+//! by band ownership with the two-barrier protocol separating producer
+//! and consumer phases.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::barrier::GridBarrier;
+use crate::error::{Error, Result};
+use crate::stencil::grid::Domain;
+use crate::stencil::parallel::{
+    band_delta_partials, bands_for, boundary_union_planes, compute_band, plans, scatter_band,
+    SharedGrid, ThreadPlan,
+};
+use crate::stencil::shape::StencilSpec;
+use crate::util::counters;
+
+/// Command issued to the parked workers; epoch-stamped in `CtlState`.
+#[derive(Clone, Copy)]
+enum Cmd {
+    Idle,
+    /// Run up to `steps` resident time steps. With `tol = Some(t)` the
+    /// workers track the squared step-delta norm each step and stop
+    /// (collectively) once it drops to `t`; with `None` no residual is
+    /// computed — fixed-step advances pay nothing for the machinery.
+    Run { steps: usize, tol: Option<f64> },
+    Shutdown,
+}
+
+/// What one `Run` produced. `steps`/`residual` are replicated values
+/// (worker 0 publishes them); `moved` is summed over all workers.
+#[derive(Clone, Default)]
+struct Outcome {
+    steps: usize,
+    residual: Option<f64>,
+    moved: u64,
+    error: Option<String>,
+}
+
+struct CtlState {
+    epoch: u64,
+    cmd: Cmd,
+    finished: usize,
+    outcome: Outcome,
+}
+
+struct Control {
+    state: Mutex<CtlState>,
+    cmd_cv: Condvar,
+    done_cv: Condvar,
+}
+
+impl Control {
+    /// Lock the control state, recovering from poisoning (a worker panic
+    /// while holding the lock) — the state is plain data with no invariant
+    /// a panic can break, and refusing would turn one panic into a
+    /// double-panic abort in `Drop`.
+    fn lock(&self) -> std::sync::MutexGuard<'_, CtlState> {
+        self.state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Everything the resident workers share.
+struct Shared {
+    spec: StencilSpec,
+    /// Domain geometry template; `data` is empty — the numbers live in
+    /// `grid`, and [`StencilPool::state_domain`] re-attaches them.
+    meta: Domain,
+    /// Banded axis (0 for 3D, 1 for 2D) and plane stride, as in
+    /// `parallel::Bands`.
+    axis: usize,
+    plane: usize,
+    /// First interior plane in padded coords (the reduction-slot offset).
+    first: usize,
+    plans: Vec<ThreadPlan>,
+    weights: Vec<f64>,
+    grid: SharedGrid,
+    barrier: GridBarrier,
+    ctl: Control,
+}
+
+/// Result of one [`StencilPool::run`].
+#[derive(Clone, Debug)]
+pub struct StencilRun {
+    /// Time steps actually performed (early-stop on `tol`).
+    pub steps: usize,
+    /// Last in-loop residual norm (squared step delta), `Some` iff the
+    /// run tracked one.
+    pub residual: Option<f64>,
+    /// Bytes this run moved through the shared ("global") array, summed
+    /// over workers: initial slab loads on the first run, per-step
+    /// boundary-union stores + halo reloads, and the final band store.
+    pub global_bytes: u64,
+}
+
+/// A pool of persistent banded stencil workers: spawned once, parked
+/// between runs, slabs resident across runs, joined on drop. See the
+/// module docs for the execution model.
+pub struct StencilPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    spawned: u64,
+}
+
+impl StencilPool {
+    /// Spawn the resident workers for one domain. The worker count is the
+    /// band count: `threads` clamped to the interior planes, so no worker
+    /// is idle by construction. Fails on `threads == 0` and on domains
+    /// with no interior planes to band.
+    pub fn spawn(spec: &StencilSpec, x0: &Domain, threads: usize) -> Result<Self> {
+        if threads == 0 {
+            return Err(Error::invalid("threads must be > 0"));
+        }
+        let geometry = bands_for(x0, spec, threads)?;
+        let r = spec.radius;
+        let plane = geometry.plane;
+        let total_planes = x0.data.len() / plane;
+        let plans = plans(&geometry, r, total_planes, plane);
+        let workers = plans.len();
+        // one residual-reduction slot per interior plane of the banded
+        // axis: partials are per *plane*, not per worker, which is what
+        // makes the folded norm invariant to the thread count
+        let interior_planes = if geometry.axis == 0 { x0.interior[0] } else { x0.interior[1] };
+        let mut meta = x0.clone();
+        meta.data = Vec::new();
+        let shared = Arc::new(Shared {
+            spec: spec.clone(),
+            meta,
+            axis: geometry.axis,
+            plane,
+            first: geometry.first,
+            plans,
+            weights: spec.weights(),
+            grid: SharedGrid::new(x0.data.clone()),
+            barrier: GridBarrier::with_reduction(workers, interior_planes),
+            ctl: Control {
+                state: Mutex::new(CtlState {
+                    epoch: 0,
+                    cmd: Cmd::Idle,
+                    finished: 0,
+                    outcome: Outcome::default(),
+                }),
+                cmd_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            },
+        });
+        counters::note_thread_spawns(workers as u64);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let sh = shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("stencil-pool-{w}"))
+                .spawn(move || worker_main(&sh, w));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // don't leak the workers that did start: they are
+                    // parked on cmd_cv and would otherwise pin their
+                    // Arc<Shared> (and the grid) forever. The barrier is
+                    // not armed yet — no worker enters the resident loop
+                    // without a Run command — so a shutdown epoch is safe.
+                    {
+                        let mut g = shared.ctl.lock();
+                        g.epoch += 1;
+                        g.cmd = Cmd::Shutdown;
+                        shared.ctl.cmd_cv.notify_all();
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Solver(format!("pool spawn failed: {e}")));
+                }
+            }
+        }
+        Ok(Self { shared, handles, workers, spawned: workers as u64 })
+    }
+
+    /// Resident worker count (threads clamped to the band count).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// OS threads this pool has ever spawned — constant after `spawn`,
+    /// which is the point: `run` must never add to it.
+    pub fn spawn_count(&self) -> u64 {
+        self.spawned
+    }
+
+    /// Total time workers spent blocked at the grid barrier (summed).
+    pub fn barrier_wait(&self) -> std::time::Duration {
+        self.shared.barrier.total_wait()
+    }
+
+    /// [`StencilPool::barrier_wait`] in seconds.
+    pub fn barrier_wait_seconds(&self) -> f64 {
+        self.barrier_wait().as_secs_f64()
+    }
+
+    /// Run up to `steps` resident time steps on the parked workers (no
+    /// thread spawns). With `tol = Some(t)` the workers compute the
+    /// squared step-delta norm each step and stop collectively once it
+    /// drops to `t`; the last norm is returned in
+    /// [`StencilRun::residual`]. `Err` is reserved for a *collective*
+    /// worker panic (all workers fail at the same deterministic point —
+    /// the shape every replicated-control-flow bug takes), after which
+    /// the pool stays usable. As in `cg::pool`, a panic in only *some*
+    /// workers strands their peers at the grid barrier and hangs the run;
+    /// the deterministic lockstep control flow is what rules that out.
+    pub fn run(&mut self, steps: usize, tol: Option<f64>) -> Result<StencilRun> {
+        if self.handles.is_empty() {
+            // after shutdown() there is no worker left to execute the
+            // command — error out instead of waiting forever on done_cv
+            return Err(Error::Solver("stencil pool is shut down".into()));
+        }
+        {
+            let mut g = self.shared.ctl.lock();
+            g.epoch += 1;
+            g.cmd = Cmd::Run { steps, tol };
+            g.finished = 0;
+            g.outcome = Outcome::default(); // no stale error/steps carry over
+            self.shared.ctl.cmd_cv.notify_all();
+        }
+        let outcome = {
+            let mut g = self.shared.ctl.lock();
+            while g.finished < self.workers {
+                g = self.shared.ctl.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            }
+            g.outcome.clone()
+        };
+        if let Some(msg) = outcome.error {
+            return Err(Error::Solver(msg));
+        }
+        Ok(StencilRun {
+            steps: outcome.steps,
+            residual: outcome.residual,
+            global_bytes: outcome.moved,
+        })
+    }
+
+    /// Snapshot the padded domain data. Callable only between runs: the
+    /// completion handshake of the previous `run` happened-before this
+    /// read, and no worker touches the grid while parked.
+    pub fn state(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.shared.grid.len()];
+        // SAFETY: pool idle (see above) — no concurrent writer.
+        unsafe { self.shared.grid.read(0..out.len(), &mut out) };
+        out
+    }
+
+    /// [`StencilPool::state`] re-attached to the domain geometry.
+    pub fn state_domain(&self) -> Domain {
+        let mut d = self.shared.meta.clone();
+        d.data = self.state();
+        d
+    }
+
+    /// Shut the workers down and join them, leaving the grid readable:
+    /// [`StencilPool::state`]/[`StencilPool::state_domain`] still work
+    /// afterwards, but `run` must not be called again (there are no
+    /// workers left to execute it). The one-shot driver uses this to keep
+    /// the join inside its timed region (matching the host-loop baseline,
+    /// whose per-step joins are always timed); `drop` after this is a
+    /// no-op.
+    pub fn shutdown(&mut self) {
+        {
+            let mut g = self.shared.ctl.lock();
+            g.epoch += 1;
+            g.cmd = Cmd::Shutdown;
+            self.shared.ctl.cmd_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    #[cfg(test)]
+    fn shared_weak(&self) -> std::sync::Weak<Shared> {
+        Arc::downgrade(&self.shared)
+    }
+}
+
+impl Drop for StencilPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Park on the control condvar; execute each epoch's command; exit on
+/// shutdown. The slab (`local`), the results buffer and the linearized
+/// stencil offsets live *here*, outside the command loop: they are built
+/// once per pool lifetime and stay resident across `advance` commands —
+/// the CPU analog of a thread block keeping its tile in registers/smem
+/// for the whole solve.
+fn worker_main(sh: &Shared, w: usize) {
+    let plan = &sh.plans[w];
+    let r = sh.spec.radius;
+    let band_planes = plan.band.len();
+    let interior_per_plane = if sh.axis == 0 {
+        (sh.meta.padded[1] - 2 * r) * (sh.meta.padded[2] - 2 * r)
+    } else {
+        sh.meta.padded[2] - 2 * r
+    };
+    let mut local = vec![0.0f64; plan.slab.len()];
+    let mut results = vec![0.0f64; band_planes * interior_per_plane];
+    let deltas =
+        crate::stencil::gold::linear_deltas(&sh.spec, sh.meta.padded[1], sh.meta.padded[2]);
+    let mut loaded = false;
+
+    let mut seen = 0u64;
+    loop {
+        let cmd = {
+            let mut g = sh.ctl.lock();
+            while g.epoch == seen {
+                g = sh.ctl.cmd_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            }
+            seen = g.epoch;
+            g.cmd
+        };
+        match cmd {
+            Cmd::Idle => {}
+            Cmd::Shutdown => break,
+            Cmd::Run { steps, tol } => {
+                // A panic inside the resident loop would otherwise leave
+                // `finished` forever short and hang `run()`. Catching it
+                // lets a *collective* panic (all workers fail at the same
+                // deterministic point) surface as an error, as in cg::pool.
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_steps(sh, w, steps, tol, &mut local, &mut results, &deltas, &mut loaded)
+                }))
+                .unwrap_or_else(|_| Outcome {
+                    steps: 0,
+                    residual: None,
+                    moved: 0,
+                    error: Some(format!("stencil pool worker {w} panicked during run")),
+                });
+                let mut g = sh.ctl.lock();
+                g.outcome.moved += out.moved; // every worker's traffic counts
+                if w == 0 {
+                    // steps/residual are replicated; worker 0 publishes
+                    g.outcome.steps = out.steps;
+                    g.outcome.residual = out.residual;
+                }
+                if out.error.is_some() && g.outcome.error.is_none() {
+                    g.outcome.error = out.error;
+                }
+                g.finished += 1;
+                if g.finished == sh.barrier.participants() {
+                    sh.ctl.done_cv.notify_all();
+                }
+            }
+        }
+    }
+}
+
+/// The resident time loop of worker `w` for one `Run` command. All
+/// workers execute the same control flow on an identical residual (the
+/// slot-ordered fold), so early breaks are collective and the barrier
+/// never deadlocks.
+#[allow(clippy::too_many_arguments)]
+fn run_steps(
+    sh: &Shared,
+    w: usize,
+    steps: usize,
+    tol: Option<f64>,
+    local: &mut [f64],
+    results: &mut [f64],
+    deltas: &[isize],
+    loaded: &mut bool,
+) -> Outcome {
+    let plan = &sh.plans[w];
+    let r = sh.spec.radius;
+    let plane = sh.plane;
+    let slab_first = plan.slab.start / plane;
+    let band_planes = plan.band.len();
+    let mut moved = 0u64;
+
+    if !*loaded {
+        // --- first run only: initial load, slab (band + halos) ---
+        // SAFETY: no writer before the barrier below; disjoint reads.
+        unsafe { sh.grid.read(plan.slab.clone(), local) };
+        moved += (plan.slab.len() * 8) as u64;
+        *loaded = true;
+        // everyone must finish the initial load before anyone's first
+        // boundary store mutates the shared grid
+        sh.barrier.sync();
+    }
+
+    let mut done = 0usize;
+    let mut residual = None;
+    for _ in 0..steps {
+        compute_band(
+            &sh.spec, &sh.meta, local, slab_first, &plan.band, &sh.weights, deltas, sh.axis,
+            results,
+        );
+        if tol.is_some() {
+            // publish per-plane squared-delta partials (results vs the
+            // pre-update slab) into the reduction slots; folded by every
+            // worker right after the store barrier below
+            band_delta_partials(
+                &sh.spec,
+                &sh.meta,
+                local,
+                slab_first,
+                &plan.band,
+                sh.axis,
+                sh.first,
+                results,
+                |slot, partial| sh.barrier.put(slot, partial),
+            );
+        }
+        // update local slab interior with new values
+        let band_off = (plan.band.start - slab_first) * plane;
+        let band_len = band_planes * plane;
+        scatter_band(
+            &sh.spec,
+            &sh.meta,
+            &plan.band,
+            sh.axis,
+            results,
+            &mut local[band_off..band_off + band_len],
+            plan.band.start,
+        );
+        // --- exchange: store only boundary planes to global ---
+        let lo_planes = r.min(band_planes);
+        // SAFETY: band-owned planes; no reader until the barrier below.
+        unsafe {
+            sh.grid
+                .write(plan.band.start * plane, &local[band_off..band_off + lo_planes * plane])
+        };
+        let hi_planes = r.min(band_planes);
+        let hi_first = plan.band.end - hi_planes;
+        let hi_off = (hi_first - slab_first) * plane;
+        unsafe {
+            sh.grid.write(hi_first * plane, &local[hi_off..hi_off + hi_planes * plane])
+        };
+        // thin bands overlap lo/hi: traffic counts the union once (Eq 5)
+        moved += (boundary_union_planes(r, band_planes) * plane * 8) as u64;
+        // barrier 1: all boundary stores (and residual puts) published
+        sh.barrier.sync();
+        if tol.is_some() {
+            // identical fold on every worker: slot order, not arrival
+            residual = Some(sh.barrier.read_sum());
+        }
+        // --- load neighbor halo planes from global ---
+        let halo_lo = plan.slab.start / plane..plan.band.start;
+        if !halo_lo.is_empty() {
+            let off = halo_lo.start * plane;
+            let len = halo_lo.len() * plane;
+            // SAFETY: read-only phase between the two barriers.
+            unsafe {
+                sh.grid.read(off..off + len, &mut local[..len]);
+            }
+            moved += (len * 8) as u64;
+        }
+        let halo_hi = plan.band.end..plan.slab.end / plane;
+        if !halo_hi.is_empty() {
+            let off = halo_hi.start * plane;
+            let len = halo_hi.len() * plane;
+            let loff = (halo_hi.start - slab_first) * plane;
+            unsafe {
+                sh.grid.read(off..off + len, &mut local[loff..loff + len]);
+            }
+            moved += (len * 8) as u64;
+        }
+        // barrier 2: nobody may overwrite boundary planes or reduction
+        // slots (next step's store/put) before all neighbors read them
+        sh.barrier.sync();
+        done += 1;
+        if let (Some(t), Some(res)) = (tol, residual) {
+            if res <= t {
+                break; // identical residual everywhere: a collective break
+            }
+        }
+    }
+    // --- final store: whole band back to global, so the main thread can
+    // observe the advanced state between runs ---
+    let band_off = (plan.band.start - slab_first) * plane;
+    let band_len = band_planes * plane;
+    // SAFETY: every worker writes only its own band; the completion
+    // handshake orders these stores before any main-thread read.
+    unsafe { sh.grid.write(plan.band.start * plane, &local[band_off..band_off + band_len]) };
+    moved += (band_len * 8) as u64;
+    Outcome { steps: done, residual, moved, error: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::gold;
+    use crate::stencil::parallel;
+    use crate::stencil::shape::spec;
+
+    /// The acceptance bar: pooled resident advances are bit-identical to
+    /// `gold::run` and to the one-shot persistent driver at every worker
+    /// count, including across resumed `advance` calls — all from one
+    /// spawn batch.
+    #[test]
+    fn pooled_matches_gold_and_one_shot_bit_identical_across_threads_and_resume() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[16, 16]).unwrap();
+        d.randomize(42);
+        let want = gold::run(&s, &d, 7).unwrap();
+        for threads in [1usize, 2, 3, 8] {
+            let one_shot = parallel::persistent(&s, &d, 7, threads).unwrap();
+            assert_eq!(one_shot.result.data, want.data, "threads={threads}");
+            let mut pool = StencilPool::spawn(&s, &d, threads).unwrap();
+            let r1 = pool.run(3, None).unwrap();
+            let r2 = pool.run(4, None).unwrap();
+            assert_eq!(r1.steps + r2.steps, 7);
+            assert_eq!(pool.state(), want.data, "threads={threads}: pooled vs gold");
+            assert_eq!(
+                pool.state(),
+                one_shot.result.data,
+                "threads={threads}: pooled vs one-shot"
+            );
+            assert_eq!(pool.spawn_count(), pool.workers() as u64, "one spawn batch");
+        }
+    }
+
+    #[test]
+    fn pooled_matches_gold_3d() {
+        let s = spec("3d13pt").unwrap(); // radius 2
+        let mut d = Domain::for_spec(&s, &[8, 6, 6]).unwrap();
+        d.randomize(9);
+        let want = gold::run(&s, &d, 4).unwrap();
+        let mut pool = StencilPool::spawn(&s, &d, 3).unwrap();
+        pool.run(4, None).unwrap();
+        assert_eq!(pool.state(), want.data);
+    }
+
+    #[test]
+    fn run_never_spawns_after_start() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[12, 12]).unwrap();
+        d.randomize(1);
+        let mut pool = StencilPool::spawn(&s, &d, 4).unwrap();
+        let after_start = pool.spawn_count();
+        for _ in 0..5 {
+            pool.run(2, None).unwrap();
+        }
+        assert_eq!(pool.spawn_count(), after_start, "run() must not spawn");
+        assert_eq!(after_start, pool.workers() as u64);
+    }
+
+    #[test]
+    fn traffic_accounting_matches_the_one_shot_driver() {
+        // one run of `steps` through the pool must account exactly the
+        // bytes the one-shot driver reports (it *is* the pool inside)
+        let s = spec("2d9pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[24, 24]).unwrap();
+        d.randomize(3);
+        let one_shot = parallel::persistent(&s, &d, 5, 3).unwrap();
+        let mut pool = StencilPool::spawn(&s, &d, 3).unwrap();
+        let run = pool.run(5, None).unwrap();
+        assert_eq!(run.global_bytes, one_shot.global_bytes);
+        // a resumed run re-pays boundary/halo/final-store traffic but not
+        // the initial slab load
+        let again = pool.run(5, None).unwrap();
+        assert!(again.global_bytes < run.global_bytes);
+    }
+
+    #[test]
+    fn tolerance_stops_early_with_identical_residual_at_every_thread_count() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(7);
+        let tol = 1e-8;
+        let max = 20_000;
+        let mut reference: Option<(usize, u64, Vec<f64>)> = None;
+        for threads in [1usize, 2, 3] {
+            let mut pool = StencilPool::spawn(&s, &d, threads).unwrap();
+            let run = pool.run(max, Some(tol)).unwrap();
+            let res = run.residual.expect("tracked run reports a residual");
+            assert!(run.steps < max, "threads={threads}: did not converge");
+            assert!(res <= tol, "threads={threads}: stopped above tol ({res})");
+            let state = pool.state();
+            match &reference {
+                None => reference = Some((run.steps, res.to_bits(), state)),
+                Some((steps, bits, want)) => {
+                    assert_eq!(run.steps, *steps, "threads={threads}: stop step differs");
+                    assert_eq!(res.to_bits(), *bits, "threads={threads}: residual bits");
+                    assert_eq!(&state, want, "threads={threads}: state bits");
+                }
+            }
+        }
+        // and the serial residual helper agrees with the in-loop norm on
+        // a single tracked step
+        let mut pool = StencilPool::spawn(&s, &d, 2).unwrap();
+        let one = pool.run(1, Some(0.0)).unwrap();
+        let next = gold::run(&s, &d, 1).unwrap();
+        assert_eq!(
+            one.residual.unwrap().to_bits(),
+            parallel::residual_norm(&s, &d, &next).to_bits(),
+            "in-loop norm must match the host-side helper bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn untracked_runs_report_no_residual() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(2);
+        let mut pool = StencilPool::spawn(&s, &d, 2).unwrap();
+        let run = pool.run(3, None).unwrap();
+        assert!(run.residual.is_none());
+        assert_eq!(run.steps, 3);
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(4);
+        let pool = StencilPool::spawn(&s, &d, 4).unwrap();
+        let weak = pool.shared_weak();
+        drop(pool);
+        // every worker held an Arc clone; all joined => all released
+        assert_eq!(weak.strong_count(), 0, "workers not joined on drop");
+    }
+
+    #[test]
+    fn run_after_shutdown_errors_instead_of_hanging() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(6);
+        let mut pool = StencilPool::spawn(&s, &d, 2).unwrap();
+        pool.run(2, None).unwrap();
+        pool.shutdown();
+        // the grid stays readable after shutdown...
+        assert_eq!(pool.state().len(), d.data.len());
+        // ...but a further run is an error, not a silent deadlock
+        let err = pool.run(1, None).unwrap_err();
+        assert!(format!("{err}").contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn spawn_rejects_zero_threads_and_empty_domains() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(4);
+        assert!(StencilPool::spawn(&s, &d, 0).is_err());
+        let empty = Domain::zeros([1, 0, 8], s.radius, 2);
+        assert!(StencilPool::spawn(&s, &empty, 2).is_err());
+    }
+}

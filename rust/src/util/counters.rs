@@ -2,13 +2,15 @@
 //!
 //! The PERKS claim hinges on *how often* the host relaunches workers, so
 //! the threading substrates (`spmv::merge::spmv_parallel`,
-//! `stencil::parallel`, `cg::pool`) report every OS thread they spawn
-//! here. Benches snapshot [`thread_spawns`] around a measured region to
-//! show the spawn-per-iteration baseline against the spawn-once pool.
+//! `stencil::parallel::host_loop`, `stencil::pool`, `cg::pool`) report
+//! every OS thread they spawn here. Benches snapshot [`thread_spawns`]
+//! around a measured region to show the spawn-per-iteration baseline
+//! against the spawn-once pools.
 //!
 //! The counter is global and monotonic; concurrent test threads may
 //! interleave increments, so tests that need an exact attribution use the
-//! per-pool counter (`cg::pool::CgPool::spawn_count`) instead and benches
+//! per-pool counters (`cg::pool::CgPool::spawn_count`,
+//! `stencil::pool::StencilPool::spawn_count`) instead and benches
 //! (single-threaded mains) read this one.
 
 use std::sync::atomic::{AtomicU64, Ordering};

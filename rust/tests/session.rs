@@ -290,6 +290,64 @@ fn cg_sessions_report_residuals_across_backends() {
 }
 
 // ---------------------------------------------------------------------
+// convergence-driven advance
+// ---------------------------------------------------------------------
+
+#[test]
+fn advance_until_converges_stencils_inside_the_resident_loop() {
+    let build = |mode: ExecMode| {
+        SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            .mode(mode)
+            .seed(13)
+            .build()
+            .unwrap()
+    };
+    let tol = 1e-8;
+    let mut pooled = build(ExecMode::Persistent);
+    let steps = pooled.advance_until(tol, 20_000).unwrap();
+    assert!(steps > 0 && steps < 20_000, "did not converge in bound ({steps})");
+    let rep = pooled.report();
+    assert_eq!(rep.steps, steps);
+    assert_eq!(rep.invocations, 1, "one resident launch for the whole search");
+    let res = rep.residual.expect("tracked run reports a residual");
+    assert!(res <= tol);
+    // the host-loop baseline shares the residual arithmetic: same stop
+    // step, same bits, same state
+    let mut host = build(ExecMode::HostLoop);
+    let hsteps = host.advance_until(tol, 20_000).unwrap();
+    assert_eq!(hsteps, steps);
+    assert_eq!(host.report().residual.unwrap().to_bits(), res.to_bits());
+    assert_eq!(host.state_f64().unwrap(), pooled.state_f64().unwrap());
+}
+
+#[test]
+fn advance_until_converges_cg_and_rejects_modelled_backends() {
+    let mut cg = SessionBuilder::new()
+        .backend(Backend::cpu(1))
+        .workload(Workload::cg(256))
+        .mode(ExecMode::Persistent)
+        .seed(3)
+        .build()
+        .unwrap();
+    let rr0: f64 = perks::sparse::gen::rhs(256, 3).iter().map(|v| v * v).sum();
+    let iters = cg.advance_until(1e-10 * rr0, 10_000).unwrap();
+    assert!(iters < 10_000, "CG converged early");
+    assert!(cg.report().residual.unwrap() <= 1e-10 * rr0);
+    assert_eq!(cg.report().steps, iters);
+
+    // the simulated backend has no numeric state to converge on
+    let mut sim = SessionBuilder::new()
+        .backend(Backend::simulated(a100()))
+        .workload(Workload::stencil("2d5pt", "1024x1024", "f64"))
+        .mode(ExecMode::Persistent)
+        .build()
+        .unwrap();
+    assert!(sim.advance_until(1e-8, 100).is_err());
+}
+
+// ---------------------------------------------------------------------
 // ExecPolicy::Auto
 // ---------------------------------------------------------------------
 
