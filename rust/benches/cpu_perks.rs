@@ -69,15 +69,25 @@ fn pooled_section(threads: usize) {
          ({bench} {interior}, {steps} steps, {threads} threads)\n"
     );
     let modes = harness::measure_cpu_stencil_modes(bench, interior, steps, threads).unwrap();
-    let mut t =
-        Table::new(&["mode", "wall s", "launches", "advance spawns", "global traffic", "cells/s"]);
+    let mut t = Table::new(&[
+        "mode",
+        "wall s",
+        "launches",
+        "advance spawns",
+        "barriers/step",
+        "global traffic",
+        "redundancy",
+        "cells/s",
+    ]);
     for m in &modes {
         t.row(&[
             m.mode.name().into(),
             format!("{:.6}", m.wall_seconds),
             m.invocations.to_string(),
             m.advance_spawns.to_string(),
+            format!("{:.2}", m.barriers_per_step(steps)),
             bytes(m.global_bytes as f64),
+            format!("{:.2}x", m.redundancy),
             format!("{:.3e}", m.cells_per_sec),
         ]);
     }

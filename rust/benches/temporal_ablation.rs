@@ -1,37 +1,50 @@
 //! Ablation: PERKS is orthogonal to temporal blocking (paper §I/§II-C).
 //!
-//! Measures, on the CPU substrate: plain host-loop, plain PERKS, temporal
-//! blocking alone (relaunch every bt steps), and temporal blocking
-//! composed with PERKS — plus the redundancy growth with bt that limits
-//! temporal blocking (the paper's argument for PERKS as the alternative).
+//! Part 1 measures the sequential story on the CPU substrate: plain
+//! host-loop, plain PERKS, temporal blocking alone (relaunch every bt
+//! steps), and temporal blocking composed with PERKS — plus the
+//! redundancy growth with bt that limits temporal blocking.
 //!
-//! Run: `cargo bench --bench temporal_ablation`
+//! Part 2 measures the *resident* composition: the spawn-once
+//! `stencil::pool` runtime advancing `bt` sub-steps per exchange epoch
+//! (`SessionBuilder::temporal`), against pooled `bt = 1` and the
+//! host-loop baseline — wall, barrier syncs, global traffic and measured
+//! redundancy per degree, on domains banded thinly enough that epoch
+//! batching also lowers the exchanged bytes. Emits the result as
+//! `BENCH_temporal.json` (+ a `BENCH {...}` stdout line) so the temporal
+//! perf trajectory is tracked like `cpu_perks`'s.
+//!
+//! Run: `cargo bench --bench temporal_ablation` (`-- --quick` for the CI
+//! smoke configuration).
 
-use perks::stencil::{parallel, shape, temporal, Domain};
+use perks::harness;
+use perks::stencil::{gold, parallel, shape, temporal, Domain};
 use perks::util::fmt::{bytes, secs, Table};
 use perks::util::stats::{median, time_n};
 
-fn main() {
+fn sequential_section(quick: bool) {
     let s = shape::spec("2d5pt").unwrap();
-    let size = 512;
-    let steps = 32;
-    let parts = 8;
+    let size = if quick { 96 } else { 512 };
+    let steps = if quick { 8 } else { 32 };
+    let parts = if quick { 2 } else { 8 };
+    let reps = if quick { 1 } else { 3 };
     let mut d = Domain::for_spec(&s, &[size, size]).unwrap();
     d.randomize(13);
 
     println!("Temporal-blocking ablation, 2d5pt {size}^2, {steps} steps, {parts} bands\n");
 
     // baselines measured on the threaded executor
-    let th = median(&time_n(3, || {
+    let th = median(&time_n(reps, || {
         parallel::host_loop(&s, &d, steps, parts).unwrap();
     }));
-    let tp = median(&time_n(3, || {
+    let tp = median(&time_n(reps, || {
         parallel::persistent(&s, &d, steps, parts).unwrap();
     }));
     let rep_h = parallel::host_loop(&s, &d, steps, parts).unwrap();
     let rep_p = parallel::persistent(&s, &d, steps, parts).unwrap();
 
-    let mut t = Table::new(&["scheme", "wall", "global traffic", "redundant compute", "vs host-loop"]);
+    let mut t =
+        Table::new(&["scheme", "wall", "global traffic", "redundant compute", "vs host-loop"]);
     t.row(&[
         "host-loop".into(),
         secs(th),
@@ -47,7 +60,7 @@ fn main() {
         format!("{:.2}x", th / tp),
     ]);
     for bt in [2usize, 4, 8] {
-        let tt = median(&time_n(3, || {
+        let tt = median(&time_n(reps, || {
             temporal::run_2d(&s, &d, steps, bt, parts).unwrap();
         }));
         let rep = temporal::run_2d(&s, &d, steps, bt, parts).unwrap();
@@ -59,7 +72,7 @@ fn main() {
             format!("{:.2}x", rep.redundancy()),
             format!("{:.2}x", th / tt),
         ]);
-        let tc = median(&time_n(3, || {
+        let tc = median(&time_n(reps, || {
             temporal::run_2d_perks(&s, &d, steps, bt, parts).unwrap();
         }));
         let repc = temporal::run_2d_perks(&s, &d, steps, bt, parts).unwrap();
@@ -73,15 +86,109 @@ fn main() {
         ]);
     }
     print!("{}", t.render());
+}
+
+/// The resident composition: pooled epochs of bt sub-steps. The cases
+/// band thinly enough (`band_planes < 2*bt*radius` at the deepest
+/// degree) that batching the exchange into epochs stores each thin band
+/// once per *epoch* instead of once per *step* — lower `global_bytes` on
+/// top of the `2*ceil(steps/bt)` barrier reduction.
+fn pooled_section(quick: bool) -> String {
+    let threads = if quick { 2 } else { 8 };
+    let steps = if quick { 16 } else { 64 };
+    let degrees = [1usize, 2, 4];
+    let cases: &[(&str, &str)] =
+        if quick { &[("2d5pt", "12x256")] } else { &[("2d5pt", "48x2048"), ("2ds25pt", "64x512")] };
+
+    println!(
+        "\nPooled temporal composition: epoch-batched resident exchange \
+         ({steps} steps, {threads} threads)\n"
+    );
+    let mut case_payloads = Vec::new();
+    for &(bench, interior) in cases {
+        // the composition must stay gold-exact at the deepest degree
+        let s = shape::spec(bench).unwrap();
+        let dims: Vec<usize> =
+            interior.split('x').map(|v| v.parse().unwrap()).collect();
+        let mut d = Domain::for_spec(&s, &dims).unwrap();
+        d.randomize(42); // the session default seed: same domain as below
+        let want = gold::run(&s, &d, steps).unwrap();
+        let check = parallel::persistent_temporal(&s, &d, steps, threads, 4).unwrap();
+        assert_eq!(check.result.data, want.data, "{bench}: pooled bt=4 diverged from gold");
+
+        let modes =
+            harness::measure_cpu_stencil_temporal(bench, interior, steps, threads, &degrees)
+                .unwrap();
+        println!("{bench} {interior}:");
+        let mut t = Table::new(&[
+            "mode",
+            "wall s",
+            "launches",
+            "barriers",
+            "barriers/step",
+            "global traffic",
+            "redundancy",
+            "cells/s",
+        ]);
+        for m in &modes {
+            let label = match m.mode {
+                perks::session::ExecMode::HostLoop => "host-loop".to_string(),
+                _ => format!("pooled bt={}", m.bt),
+            };
+            t.row(&[
+                label,
+                format!("{:.6}", m.wall_seconds),
+                m.invocations.to_string(),
+                m.barrier_syncs.to_string(),
+                format!("{:.2}", m.barriers_per_step(steps)),
+                bytes(m.global_bytes as f64),
+                format!("{:.2}x", m.redundancy),
+                format!("{:.3e}", m.cells_per_sec),
+            ]);
+        }
+        print!("{}", t.render());
+        let bt1 = &modes[1];
+        let bt4 = modes.last().unwrap();
+        println!(
+            "  bt={} vs bt=1: {:.2}x wall, {:.2}x barriers, {:.2}x global bytes\n",
+            bt4.bt,
+            bt1.wall_seconds / bt4.wall_seconds.max(1e-12),
+            bt1.barrier_syncs.max(1) as f64 / bt4.barrier_syncs.max(1) as f64,
+            bt1.global_bytes as f64 / bt4.global_bytes.max(1) as f64,
+        );
+        let json: Vec<String> = modes.iter().map(|m| m.json()).collect();
+        case_payloads.push(format!(
+            "{{\"case\":\"{bench}\",\"interior\":\"{interior}\",\"modes\":[{}]}}",
+            json.join(",")
+        ));
+    }
+    format!(
+        "{{\"bench\":\"temporal\",\"steps\":{steps},\"threads\":{threads},\"cases\":[{}]}}",
+        case_payloads.join(",")
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    sequential_section(quick);
+    let payload = pooled_section(quick);
 
     println!("\nanalytic redundancy growth (the paper's limit on temporal blocking):");
     for rad in [1usize, 2, 4] {
         let rs: Vec<String> = [1usize, 2, 4, 8, 16]
             .iter()
-            .map(|&bt| format!("bt={bt}: {:.2}x", temporal::overlap_cost_2d(64, 64, rad, bt).redundancy()))
+            .map(|&bt| {
+                format!("bt={bt}: {:.2}x", temporal::overlap_cost_2d(64, 64, rad, bt).redundancy())
+            })
             .collect();
         println!("  radius {rad}: {}", rs.join("  "));
     }
-    println!("\nPERKS composes with temporal blocking (same numerics, less traffic),");
-    println!("while avoiding the redundant-compute growth that limits bt.");
+    println!("\nPERKS composes with temporal blocking (same numerics, 2/bt barriers per");
+    println!("step, and lower exchange traffic once bands are thinner than the epoch");
+    println!("depth), while avoiding the redundant-compute growth that limits bt.");
+    println!("BENCH {payload}");
+    match std::fs::write("BENCH_temporal.json", format!("{payload}\n")) {
+        Ok(()) => println!("wrote BENCH_temporal.json"),
+        Err(e) => eprintln!("could not write BENCH_temporal.json: {e}"),
+    }
 }

@@ -57,13 +57,17 @@ impl GridBarrier {
     }
 
     /// Block until all participants arrive; returns the completed
-    /// generation index (number of grid syncs so far).
+    /// generation index (number of grid syncs so far). Each completed
+    /// generation is also reported once (by the leader) to the
+    /// process-wide [`crate::util::counters::barrier_syncs`] counter, the
+    /// sync analog of the thread-spawn counter.
     pub fn sync(&self) -> u64 {
         let t0 = std::time::Instant::now();
         let res = self.inner.wait();
         self.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         if res.is_leader() {
             self.generation.fetch_add(1, Ordering::Relaxed);
+            crate::util::counters::note_barrier_syncs(1);
         }
         self.generation.load(Ordering::Relaxed)
     }

@@ -11,7 +11,8 @@ pub use cg_exp::{
     evaluate as cg_evaluate, fig7, measure_cpu_cg_modes, modeled_cg_run, CgRow, MeasuredCgMode,
 };
 pub use stencil_exp::{
-    measure_cpu_stencil_modes, modeled_run, speedup_row, MeasuredStencilMode, StencilExperiment,
+    measure_cpu_stencil_modes, measure_cpu_stencil_temporal, modeled_run, speedup_row,
+    MeasuredStencilMode, StencilExperiment,
 };
 
 /// Nominal host-link (PCIe-class) bandwidth used by the simulated backend

@@ -250,10 +250,13 @@ pub fn modeled_run(dev: &DeviceSpec, exp: &StencilExperiment, mode: ExecMode) ->
 }
 
 /// One **measured** (not modeled) CPU stencil mode from
-/// [`measure_cpu_stencil_modes`].
+/// [`measure_cpu_stencil_modes`] / [`measure_cpu_stencil_temporal`].
 #[derive(Clone, Debug)]
 pub struct MeasuredStencilMode {
     pub mode: ExecMode,
+    /// Temporal-blocking degree of the pooled arm (1 = per-step exchange;
+    /// always 1 for host-loop).
+    pub bt: usize,
     pub wall_seconds: f64,
     /// Launches: 1 for the pooled persistent advance, `steps` host-loop.
     pub invocations: u64,
@@ -261,24 +264,40 @@ pub struct MeasuredStencilMode {
     /// (workers spawn at `prepare`), `steps * workers` for the
     /// relaunch-per-step baseline.
     pub advance_spawns: u64,
+    /// Grid-barrier sync generations *during* `advance` — the pooled arm
+    /// pays `2 * ceil(steps / bt)` (+1 initial-load sync on the first
+    /// run); host-loop has no grid barrier (its joins are implicit).
+    pub barrier_syncs: u64,
     /// Shared-array ("global") traffic of the run.
     pub global_bytes: u64,
+    /// Redundant-compute ratio (>= 1.0; the measured `OverlapCost`).
+    pub redundancy: f64,
     pub cells_per_sec: f64,
 }
 
 impl MeasuredStencilMode {
+    /// Barrier syncs per time step — the synchronization cost temporal
+    /// blocking divides by `bt` (2/step at `bt = 1`).
+    pub fn barriers_per_step(&self, steps: usize) -> f64 {
+        self.barrier_syncs as f64 / steps.max(1) as f64
+    }
+
     /// Stable BENCH-json fragment, shared by the benches that report this
     /// measurement so the schema cannot drift between them (the stencil
     /// counterpart of `MeasuredCgMode::json`).
     pub fn json(&self) -> String {
         format!(
-            "{{\"mode\":\"{}\",\"wall_seconds\":{:.6},\"invocations\":{},\
-             \"advance_spawns\":{},\"global_bytes\":{}}}",
+            "{{\"mode\":\"{}\",\"bt\":{},\"wall_seconds\":{:.6},\"invocations\":{},\
+             \"advance_spawns\":{},\"barrier_syncs\":{},\"global_bytes\":{},\
+             \"redundancy\":{:.4}}}",
             self.mode.name(),
+            self.bt,
             self.wall_seconds,
             self.invocations,
             self.advance_spawns,
-            self.global_bytes
+            self.barrier_syncs,
+            self.global_bytes,
+            self.redundancy
         )
     }
 }
@@ -294,26 +313,54 @@ pub fn measure_cpu_stencil_modes(
     steps: usize,
     threads: usize,
 ) -> crate::error::Result<Vec<MeasuredStencilMode>> {
+    measure_cpu_stencil_temporal(bench, interior, steps, threads, &[1])
+}
+
+/// [`measure_cpu_stencil_modes`] extended with the temporal-blocking
+/// composition: one host-loop baseline row followed by one pooled
+/// persistent row per degree in `degrees` (each a fresh session built
+/// with `SessionBuilder::temporal(bt)`). Alongside wall/launches/traffic
+/// it snapshots the process-wide spawn *and* barrier-sync counters
+/// around each `advance`, exposing the `2 * ceil(steps / bt)` barrier
+/// batching and the measured overlap redundancy — the `temporal_ablation`
+/// bench's protocol. The counters are process-global: attribution is
+/// exact in single-threaded bench mains, approximate under a concurrent
+/// test harness.
+pub fn measure_cpu_stencil_temporal(
+    bench: &str,
+    interior: &str,
+    steps: usize,
+    threads: usize,
+    degrees: &[usize],
+) -> crate::error::Result<Vec<MeasuredStencilMode>> {
     use crate::session::{Backend, SessionBuilder, Workload};
     let mut out = Vec::new();
-    for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
+    let arms = std::iter::once((ExecMode::HostLoop, 1usize))
+        .chain(degrees.iter().map(|&bt| (ExecMode::Persistent, bt)));
+    for (mode, bt) in arms {
         let mut s = SessionBuilder::new()
             .backend(Backend::cpu(threads))
             .workload(Workload::stencil(bench, interior, "f64"))
             .mode(mode)
+            .temporal(bt)
             .build()?;
         // build() already prepared the solver — the pool (persistent
         // mode) spawned its workers there, not in advance
         let spawns0 = crate::util::counters::thread_spawns();
+        let syncs0 = crate::util::counters::barrier_syncs();
         s.advance(steps)?;
         let advance_spawns = crate::util::counters::thread_spawns() - spawns0;
+        let barrier_syncs = crate::util::counters::barrier_syncs() - syncs0;
         let rep = s.report();
         out.push(MeasuredStencilMode {
             mode,
+            bt,
             wall_seconds: rep.wall_seconds,
             invocations: rep.invocations,
             advance_spawns,
+            barrier_syncs,
             global_bytes: rep.host_bytes,
+            redundancy: rep.redundancy.unwrap_or(1.0),
             cells_per_sec: rep.fom,
         });
     }
@@ -366,18 +413,40 @@ mod tests {
         assert_eq!(modes[0].invocations, 3, "one relaunch per step");
         assert_eq!(modes[1].invocations, 1, "one resident launch per advance");
         assert!(modes[0].global_bytes > modes[1].global_bytes);
+        assert_eq!(modes[0].bt, 1);
+        assert_eq!(modes[1].bt, 1);
         for m in &modes {
             let j = m.json();
             for key in [
                 "\"mode\"",
+                "\"bt\"",
                 "\"wall_seconds\"",
                 "\"invocations\"",
                 "\"advance_spawns\"",
+                "\"barrier_syncs\"",
                 "\"global_bytes\"",
+                "\"redundancy\"",
             ] {
                 assert!(j.contains(key), "{j}");
             }
         }
+    }
+
+    #[test]
+    fn measured_temporal_arms_report_degrees_and_redundancy() {
+        let modes = measure_cpu_stencil_temporal("2d5pt", "16x16", 8, 2, &[1, 4]).unwrap();
+        assert_eq!(modes.len(), 3, "host-loop + one pooled arm per degree");
+        assert_eq!(modes[0].mode, ExecMode::HostLoop);
+        assert_eq!((modes[1].bt, modes[2].bt), (1, 4));
+        // bt=1 computes no overlap; bt=4 must report its trapezoid work
+        assert_eq!(modes[1].redundancy, 1.0);
+        assert!(modes[2].redundancy > 1.0, "{}", modes[2].redundancy);
+        // NB: barrier_syncs reads a process-global counter, so under the
+        // concurrent test harness only lower bounds are safe; the exact
+        // 2*ceil(steps/bt)+1 assertion lives on the pool's own counter
+        // (stencil::pool tests) and in the single-threaded bench mains.
+        assert!(modes[1].barrier_syncs >= 2 * 8 + 1, "{}", modes[1].barrier_syncs);
+        assert!(modes[2].barrier_syncs >= 2 * 2 + 1, "{}", modes[2].barrier_syncs);
     }
 
     #[test]

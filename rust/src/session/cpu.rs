@@ -19,19 +19,60 @@ use crate::stencil::pool::StencilPool;
 use crate::stencil::shape::StencilSpec;
 use crate::stencil::{self, parallel, Domain};
 
+/// Construction options for [`CpuStencil`] — the stencil-substrate knobs
+/// the [`crate::session::SessionBuilder`] resolves (thread count,
+/// execution model, seed, and the temporal-blocking degree `bt`).
+#[derive(Clone, Debug)]
+pub struct StencilOptions {
+    /// Banded worker count (resolved, never 0 here).
+    pub threads: usize,
+    pub mode: ExecMode,
+    /// Seed for the deterministic initial domain.
+    pub seed: u64,
+    /// Temporal-blocking degree: sub-steps advanced locally per exchange
+    /// epoch. `1` (the default) is per-step exchange — bit-identical to
+    /// the pre-temporal runtime. `> 1` requires the persistent model.
+    pub temporal: usize,
+}
+
+impl Default for StencilOptions {
+    fn default() -> Self {
+        Self { threads: 1, mode: ExecMode::Persistent, seed: 42, temporal: 1 }
+    }
+}
+
+impl StencilOptions {
+    pub fn new(threads: usize, mode: ExecMode, seed: u64) -> Self {
+        Self { threads, mode, seed, temporal: 1 }
+    }
+
+    /// Set the temporal-blocking degree `bt` (see [`StencilOptions::temporal`]).
+    pub fn temporal(mut self, bt: usize) -> Self {
+        self.temporal = bt;
+        self
+    }
+}
+
 /// Iterative stencil on the persistent-threads CPU substrate (f64).
 ///
 /// Persistent mode rides the spawn-once [`StencilPool`]: the banded
 /// workers are spawned in `prepare`, park on a condvar between `advance`
 /// calls, keep their slabs resident across them, and are joined on drop
 /// or `prepare` re-entry — so `advance` performs **zero** thread spawns.
-/// Host-loop mode respawns its threads every step (the measured
-/// relaunch-per-step baseline).
+/// With a temporal degree `bt > 1` the resident loop batches its
+/// boundary exchange into epochs of `bt` locally-advanced sub-steps:
+/// `2 * ceil(steps / bt)` barrier syncs per advance instead of
+/// `2 * steps`, at the price of redundant trapezoid compute (surfaced as
+/// [`Report::redundancy`]). Host-loop mode respawns its threads every
+/// step (the measured relaunch-per-step baseline) and supports only
+/// `bt = 1`.
 pub struct CpuStencil {
     spec: StencilSpec,
     x0: Domain,
     threads: usize,
     mode: ExecMode,
+    /// Temporal-blocking degree (sub-steps per exchange epoch).
+    bt: usize,
     /// Host-loop state; `None` while the pool owns the state.
     state: Option<Domain>,
     /// Spawn-once banded worker pool; `Some` iff persistent mode, from
@@ -46,25 +87,36 @@ pub struct CpuStencil {
     /// Last in-loop residual norm (squared step delta), from
     /// convergence-driven advances.
     residual: Option<f64>,
+    /// Cell updates performed including temporal-blocking overlap work.
+    computed_cells: u64,
+    /// Useful cell updates (interior x steps).
+    useful_cells: u64,
 }
 
 impl CpuStencil {
     pub(crate) fn new(
         bench: &str,
         dims: &[usize],
-        threads: usize,
-        mode: ExecMode,
-        seed: u64,
+        opts: &StencilOptions,
         init: Option<&[f64]>,
     ) -> Result<Self> {
         let spec = stencil::spec(bench)
             .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
-        let x0 = crate::session::stencil_domain(&spec, dims, seed, init)?;
+        if opts.temporal == 0 {
+            return Err(Error::invalid("temporal blocking degree must be >= 1"));
+        }
+        if opts.temporal > 1 && opts.mode != ExecMode::Persistent {
+            return Err(Error::invalid(
+                "temporal blocking (bt > 1) requires the persistent execution model",
+            ));
+        }
+        let x0 = crate::session::stencil_domain(&spec, dims, opts.seed, init)?;
         Ok(Self {
             spec,
             x0,
-            threads,
-            mode,
+            threads: opts.threads,
+            mode: opts.mode,
+            bt: opts.temporal,
             state: None,
             pool: None,
             steps: 0,
@@ -73,6 +125,8 @@ impl CpuStencil {
             host_bytes: 0,
             barrier_wait_seconds: 0.0,
             residual: None,
+            computed_cells: 0,
+            useful_cells: 0,
         })
     }
 
@@ -89,16 +143,26 @@ impl CpuStencil {
         self.invocations += rep.steps as u64; // one "launch" (respawn) per step
         self.host_bytes += rep.global_bytes;
         self.barrier_wait_seconds += rep.barrier_wait.as_secs_f64();
+        self.computed_cells += rep.computed_cells;
+        self.useful_cells += rep.useful_cells;
     }
 
     /// Shared engine of `advance` (`tol == None`) and `advance_until`
-    /// (`tol == Some(_)`); returns the steps actually performed.
+    /// (`tol == Some(_)`); returns the steps actually performed. With
+    /// `bt > 1`, convergence is checked at epoch granularity (the pool's
+    /// residual is the final sub-step's norm, identical at every worker
+    /// count, so the stop epoch is too).
     fn advance_inner(&mut self, steps: usize, tol: Option<f64>) -> Result<usize> {
         match self.mode {
             ExecMode::Persistent => {
                 if self.pool.is_none() {
                     // direct (un-prepared) use: spawn the residents now
-                    self.pool = Some(StencilPool::spawn(&self.spec, &self.x0, self.threads)?);
+                    self.pool = Some(StencilPool::spawn_temporal(
+                        &self.spec,
+                        &self.x0,
+                        self.threads,
+                        self.bt,
+                    )?);
                 }
                 let pool = self.pool.as_mut().expect("spawned above");
                 let t0 = std::time::Instant::now();
@@ -113,6 +177,8 @@ impl CpuStencil {
                 let run = run?;
                 self.steps += run.steps;
                 self.host_bytes += run.global_bytes;
+                self.computed_cells += run.computed_cells;
+                self.useful_cells += run.useful_cells;
                 if run.residual.is_some() {
                     self.residual = run.residual;
                 }
@@ -166,7 +232,12 @@ impl Solver for CpuStencil {
         if self.mode == ExecMode::Persistent {
             // spawn-once worker pool: the only thread creation of the
             // whole solve; every subsequent `advance` is spawn-free
-            self.pool = Some(StencilPool::spawn(&self.spec, &self.x0, self.threads)?);
+            self.pool = Some(StencilPool::spawn_temporal(
+                &self.spec,
+                &self.x0,
+                self.threads,
+                self.bt,
+            )?);
         } else {
             self.state = Some(self.x0.clone());
         }
@@ -176,6 +247,8 @@ impl Solver for CpuStencil {
         self.host_bytes = 0;
         self.barrier_wait_seconds = 0.0;
         self.residual = None;
+        self.computed_cells = 0;
+        self.useful_cells = 0;
         Ok(())
     }
 
@@ -192,7 +265,7 @@ impl Solver for CpuStencil {
             Some(p) => p.barrier_wait_seconds(),
             None => self.barrier_wait_seconds,
         };
-        Report::new(
+        let mut rep = Report::new(
             self.mode,
             self.steps,
             self.wall_seconds,
@@ -202,7 +275,14 @@ impl Solver for CpuStencil {
             "cells/s",
             self.residual,
             Some(barrier_wait),
-        )
+        );
+        if self.useful_cells > 0 {
+            rep.redundancy = Some(crate::stencil::temporal::redundancy_ratio(
+                self.computed_cells,
+                self.useful_cells,
+            ));
+        }
+        rep
     }
 
     fn state_f64(&self) -> Result<Vec<f64>> {
@@ -711,8 +791,13 @@ mod tests {
     /// the host-loop baseline respawns its threads every step.
     #[test]
     fn pooled_stencil_advance_never_spawns() {
-        let mut s =
-            CpuStencil::new("2d5pt", &[16, 16], 4, ExecMode::Persistent, 1, None).unwrap();
+        let mut s = CpuStencil::new(
+            "2d5pt",
+            &[16, 16],
+            &StencilOptions::new(4, ExecMode::Persistent, 1),
+            None,
+        )
+        .unwrap();
         s.prepare().unwrap(); // the pool's one spawn batch
         let spawned = s.pool_spawns().expect("persistent stencil rides the pool");
         assert!(spawned >= 1);
@@ -726,8 +811,13 @@ mod tests {
 
         // the baseline pays spawn-per-step (global counter only ever
         // grows, so a positive delta cannot be a concurrency artifact)
-        let mut h =
-            CpuStencil::new("2d5pt", &[16, 16], 4, ExecMode::HostLoop, 1, None).unwrap();
+        let mut h = CpuStencil::new(
+            "2d5pt",
+            &[16, 16],
+            &StencilOptions::new(4, ExecMode::HostLoop, 1),
+            None,
+        )
+        .unwrap();
         h.prepare().unwrap();
         assert!(h.pool_spawns().is_none(), "host-loop has no pool");
         let before = crate::util::counters::thread_spawns();
@@ -751,9 +841,13 @@ mod tests {
         for threads in [1usize, 2, 3, 8] {
             let one_shot = parallel::persistent(&spec, &dom, 7, threads).unwrap();
             assert_eq!(one_shot.result.data, want.data, "threads={threads}: one-shot vs gold");
-            let mut s = CpuStencil::new("2d9pt", &[18, 18], threads, ExecMode::Persistent,
-                seed, Some(&dom.data))
-                .unwrap();
+            let mut s = CpuStencil::new(
+                "2d9pt",
+                &[18, 18],
+                &StencilOptions::new(threads, ExecMode::Persistent, seed),
+                Some(&dom.data),
+            )
+            .unwrap();
             s.prepare().unwrap();
             s.advance(3).unwrap();
             s.advance(4).unwrap();
@@ -772,8 +866,13 @@ mod tests {
     fn stencil_advance_until_agrees_across_modes() {
         let seed = 21;
         let (tol, max) = (1e-8, 20_000);
-        let mut pooled =
-            CpuStencil::new("2d5pt", &[8, 8], 2, ExecMode::Persistent, seed, None).unwrap();
+        let mut pooled = CpuStencil::new(
+            "2d5pt",
+            &[8, 8],
+            &StencilOptions::new(2, ExecMode::Persistent, seed),
+            None,
+        )
+        .unwrap();
         pooled.prepare().unwrap();
         let steps_p = pooled.advance_until(tol, max).unwrap();
         assert!(steps_p > 0 && steps_p < max, "pooled did not converge ({steps_p})");
@@ -783,8 +882,13 @@ mod tests {
         assert_eq!(rep.steps, steps_p);
         assert_eq!(rep.invocations, 1, "one resident launch for the whole search");
 
-        let mut host =
-            CpuStencil::new("2d5pt", &[8, 8], 2, ExecMode::HostLoop, seed, None).unwrap();
+        let mut host = CpuStencil::new(
+            "2d5pt",
+            &[8, 8],
+            &StencilOptions::new(2, ExecMode::HostLoop, seed),
+            None,
+        )
+        .unwrap();
         host.prepare().unwrap();
         let steps_h = host.advance_until(tol, max).unwrap();
         assert_eq!(steps_h, steps_p, "both modes stop on the same step");
@@ -793,12 +897,113 @@ mod tests {
         assert_eq!(host.state_f64().unwrap(), pooled.state_f64().unwrap());
     }
 
+    /// The temporal composition through the solver seam: `bt ∈ {2, 4}`
+    /// walks gold's bits across resumed advances, reports one launch per
+    /// advance, and surfaces the overlap redundancy in the report.
+    #[test]
+    fn temporal_stencil_solver_is_bit_identical_and_reports_redundancy() {
+        let seed = 23;
+        let spec = stencil::spec("2d5pt").unwrap();
+        let mut dom = Domain::for_spec(&spec, &[16, 16]).unwrap();
+        dom.randomize(seed);
+        let want = gold::run(&spec, &dom, 11).unwrap();
+        for bt in [2usize, 4] {
+            let mut s = CpuStencil::new(
+                "2d5pt",
+                &[16, 16],
+                &StencilOptions::new(3, ExecMode::Persistent, seed).temporal(bt),
+                None,
+            )
+            .unwrap();
+            s.prepare().unwrap();
+            s.advance(5).unwrap(); // partial epochs at bt = 4
+            s.advance(6).unwrap();
+            assert_eq!(s.state_f64().unwrap(), want.data, "bt={bt}");
+            let rep = s.report();
+            assert_eq!(rep.steps, 11);
+            assert_eq!(rep.invocations, 2, "one resident launch per advance");
+            let red = rep.redundancy.expect("cpu stencil reports redundancy");
+            assert!(red > 1.0, "bt={bt}: overlap work must show up ({red})");
+        }
+        // bt = 1 (and host-loop) report exactly 1.0 — no overlap work
+        let mut base = CpuStencil::new(
+            "2d5pt",
+            &[16, 16],
+            &StencilOptions::new(3, ExecMode::Persistent, seed),
+            None,
+        )
+        .unwrap();
+        base.prepare().unwrap();
+        base.advance(11).unwrap();
+        assert_eq!(base.report().redundancy, Some(1.0));
+    }
+
+    /// `advance_until` with `bt > 1` stops at epoch granularity, on the
+    /// same epoch at every thread count, with identical residual bits.
+    #[test]
+    fn temporal_advance_until_stops_on_the_same_epoch_at_every_thread_count() {
+        let seed = 21;
+        let (bt, tol, max) = (2usize, 1e-8, 20_000usize);
+        let mut reference: Option<(usize, u64, Vec<f64>)> = None;
+        for threads in [1usize, 2, 3, 8] {
+            let mut s = CpuStencil::new(
+                "2d5pt",
+                &[8, 8],
+                &StencilOptions::new(threads, ExecMode::Persistent, seed).temporal(bt),
+                None,
+            )
+            .unwrap();
+            s.prepare().unwrap();
+            let steps = s.advance_until(tol, max).unwrap();
+            assert!(steps > 0 && steps < max, "threads={threads}: no convergence");
+            assert_eq!(steps % bt, 0, "threads={threads}: stop is epoch-aligned");
+            let res = s.report().residual.unwrap();
+            assert!(res <= tol, "threads={threads}");
+            let state = s.state_f64().unwrap();
+            match &reference {
+                None => reference = Some((steps, res.to_bits(), state)),
+                Some((want_steps, bits, want)) => {
+                    assert_eq!(steps, *want_steps, "threads={threads}: stop epoch");
+                    assert_eq!(res.to_bits(), *bits, "threads={threads}: residual bits");
+                    assert_eq!(&state, want, "threads={threads}: state bits");
+                }
+            }
+        }
+    }
+
+    /// Invalid temporal degrees are rejected at construction: 0 always,
+    /// and `bt > 1` outside the persistent model.
+    #[test]
+    fn stencil_options_reject_bad_temporal_degrees() {
+        let err = CpuStencil::new(
+            "2d5pt",
+            &[8, 8],
+            &StencilOptions::new(2, ExecMode::Persistent, 1).temporal(0),
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains(">= 1"), "{err}");
+        let err = CpuStencil::new(
+            "2d5pt",
+            &[8, 8],
+            &StencilOptions::new(2, ExecMode::HostLoop, 1).temporal(2),
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("persistent"), "{err}");
+    }
+
     /// `prepare()` re-entry replaces the stencil pool cleanly (old
     /// workers joined, state and metrics reset).
     #[test]
     fn stencil_prepare_reentry_replaces_the_pool_cleanly() {
-        let mut s =
-            CpuStencil::new("2d5pt", &[12, 12], 3, ExecMode::Persistent, 4, None).unwrap();
+        let mut s = CpuStencil::new(
+            "2d5pt",
+            &[12, 12],
+            &StencilOptions::new(3, ExecMode::Persistent, 4),
+            None,
+        )
+        .unwrap();
         s.prepare().unwrap();
         s.advance(6).unwrap();
         s.prepare().unwrap(); // old pool joined here, new pool spawned

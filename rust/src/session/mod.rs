@@ -17,6 +17,17 @@
 //! candidate mode through `coordinator::autotune::tune_exec_mode` and, on
 //! the CPU backend, autotunes the thread count).
 //!
+//! Stencil workloads on the CPU backend additionally compose PERKS with
+//! overlapped **temporal blocking** via [`SessionBuilder::temporal`]: at
+//! degree `bt` the resident workers advance `bt` sub-steps locally per
+//! boundary exchange (2 barriers per *epoch* instead of 2 per *step*),
+//! bit-identically to `bt = 1`, trading redundant trapezoid compute
+//! ([`Report::redundancy`]) for `bt`x fewer grid syncs. Left unset,
+//! `ExecPolicy::Auto` probes `bt ∈ {1, 2, 4}` by measurement,
+//! cross-checked against the analytic
+//! [`stencil::temporal::overlap_cost_banded`] model; the resolved degree
+//! is visible as [`Session::temporal_degree`].
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -194,6 +205,16 @@ pub trait Solver {
 /// fill) amortize the way they do in a real run.
 const AUTO_PROBE_STEPS: usize = 128;
 
+/// Temporal-blocking degrees `ExecPolicy::Auto` probes on the CPU
+/// stencil substrate when no explicit `temporal(bt)` was set.
+const AUTO_TEMPORAL_CANDIDATES: [usize; 3] = [1, 2, 4];
+
+/// Analytic prune for the `Auto` temporal probe: degrees whose banded
+/// overlap redundancy ([`stencil::temporal::overlap_cost_banded`])
+/// exceeds this cap are skipped without measuring — the redundant
+/// trapezoid compute alone outweighs any barrier saving.
+const TEMPORAL_REDUNDANCY_CAP: f64 = 2.0;
+
 /// Builder for a [`Session`] — the crate's front door.
 pub struct SessionBuilder {
     backend: Option<Backend>,
@@ -202,6 +223,9 @@ pub struct SessionBuilder {
     seed: u64,
     cg_parts: usize,
     cg_threaded: bool,
+    /// Temporal-blocking degree: `None` = default (1, or auto-probed
+    /// under `ExecPolicy::Auto` on the CPU stencil substrate).
+    temporal: Option<usize>,
     init: Option<Vec<f64>>,
 }
 
@@ -220,6 +244,7 @@ impl SessionBuilder {
             seed: 42,
             cg_parts: 8,
             cg_threaded: false,
+            temporal: None,
             init: None,
         }
     }
@@ -248,6 +273,22 @@ impl SessionBuilder {
     /// Shorthand for `.policy(ExecPolicy::Auto)`.
     pub fn auto(self) -> Self {
         self.policy(ExecPolicy::Auto)
+    }
+
+    /// Temporal-blocking degree `bt` for stencil workloads on the CPU
+    /// persistent-threads backend: the resident workers advance `bt`
+    /// sub-steps locally per boundary exchange (slabs widened to
+    /// `bt * radius` halo planes), paying `2 * ceil(steps / bt)` grid
+    /// barriers per advance instead of `2 * steps`, at the price of
+    /// redundant trapezoid compute (reported as [`Report::redundancy`]).
+    /// Results are bit-identical at every degree. `bt = 1` — the default
+    /// — is per-step exchange; `bt > 1` requires the persistent model.
+    /// Left unset, [`ExecPolicy::Auto`] probes `bt ∈ {1, 2, 4}` by
+    /// measured wall time, cross-checked against the
+    /// [`stencil::temporal::overlap_cost_banded`] analytic model.
+    pub fn temporal(mut self, bt: usize) -> Self {
+        self.temporal = Some(bt);
+        self
     }
 
     /// Seed for the deterministic initial state (stencil domain / CG rhs).
@@ -293,6 +334,32 @@ impl SessionBuilder {
                 "initial_domain only applies to stencil workloads",
             ));
         }
+        // temporal-degree validation: 0 is always invalid; bt > 1 is a
+        // feature of the CPU stencil substrate's persistent model
+        if let Some(bt) = self.temporal {
+            if bt == 0 {
+                return Err(Error::invalid("temporal blocking degree must be >= 1"));
+            }
+            if bt > 1 {
+                if !matches!(workload, Workload::Stencil { .. }) {
+                    return Err(Error::invalid(
+                        "temporal blocking (bt > 1) only applies to stencil workloads",
+                    ));
+                }
+                if !matches!(backend, Backend::CpuPersistent { .. }) {
+                    return Err(Error::invalid(
+                        "temporal blocking (bt > 1) is implemented on the CPU \
+                         persistent-threads backend",
+                    ));
+                }
+                if matches!(self.policy, ExecPolicy::Fixed(m) if m != ExecMode::Persistent) {
+                    return Err(Error::invalid(
+                        "temporal blocking (bt > 1) requires the persistent \
+                         execution model",
+                    ));
+                }
+            }
+        }
         // resolve the CPU thread count before any mode probing
         let backend = match backend {
             Backend::CpuPersistent { threads: 0 } => {
@@ -301,6 +368,16 @@ impl SessionBuilder {
             b => b,
         };
         let candidates = mode_candidates(&backend, &workload);
+        // a pinned bt > 1 narrows Auto's mode search to the persistent
+        // model (the only one that can honor it)
+        let candidates: Vec<ExecMode> = if matches!(self.temporal, Some(bt) if bt > 1) {
+            candidates.into_iter().filter(|m| *m == ExecMode::Persistent).collect()
+        } else {
+            candidates
+        };
+        // resolved temporal degree; the Auto arm below may raise it after
+        // racing the composed (Persistent, bt) candidates
+        let mut temporal = self.temporal.unwrap_or(1);
         let mode = match self.policy {
             ExecPolicy::Fixed(m) => {
                 if !candidates.contains(&m) {
@@ -314,6 +391,10 @@ impl SessionBuilder {
             }
             ExecPolicy::Auto => {
                 let choice = autotune::tune_exec_mode(&candidates, |m| {
+                    let bt = match (m, self.temporal) {
+                        (ExecMode::Persistent, Some(bt)) => bt,
+                        _ => 1,
+                    };
                     let mut probe = make_solver(
                         &backend,
                         &workload,
@@ -321,6 +402,7 @@ impl SessionBuilder {
                         self.seed,
                         self.cg_parts,
                         self.cg_threaded,
+                        bt,
                         self.init.as_deref(),
                     )?;
                     probe.prepare()?;
@@ -332,9 +414,45 @@ impl SessionBuilder {
                     // normalize to per-step cost: chunks differ across modes
                     Ok(probe.report().wall_seconds / steps as f64)
                 })?;
-                choice.mode
+                let mut mode = choice.mode;
+                // The race above measured the persistent model at bt = 1
+                // only. For CPU stencil sessions with no pinned degree,
+                // the composed (Persistent, bt ∈ {2, 4}) candidates must
+                // be measured too — otherwise a host-loop win at bt = 1
+                // locks out the epoch-batched configurations this knob
+                // exists for.
+                if self.temporal.is_none() {
+                    if let (Backend::CpuPersistent { threads }, Workload::Stencil { .. }) =
+                        (&backend, &workload)
+                    {
+                        // reuse the race's persistent bt=1 measurement as
+                        // the baseline instead of probing it again
+                        let bt1_cost = choice
+                            .sweep
+                            .iter()
+                            .find(|(m, _)| *m == ExecMode::Persistent)
+                            .map(|&(_, c)| c);
+                        let t = tune_temporal(
+                            &workload,
+                            *threads,
+                            self.seed,
+                            self.init.as_deref(),
+                            bt1_cost,
+                        )?;
+                        if mode == ExecMode::Persistent || t.cost < choice.cost {
+                            mode = ExecMode::Persistent;
+                            temporal = t.bt;
+                        }
+                    }
+                }
+                mode
             }
         };
+        // a per-step model never batches epochs (an explicit bt == 1 on
+        // host-loop, or a host-loop Auto win, resolves to degree 1)
+        if mode != ExecMode::Persistent {
+            temporal = 1;
+        }
         let mut solver = make_solver(
             &backend,
             &workload,
@@ -342,10 +460,11 @@ impl SessionBuilder {
             self.seed,
             self.cg_parts,
             self.cg_threaded,
+            temporal,
             self.init.as_deref(),
         )?;
         solver.prepare()?;
-        Ok(Session { solver, mode, backend_name: backend.name() })
+        Ok(Session { solver, mode, temporal, backend_name: backend.name() })
     }
 }
 
@@ -353,6 +472,7 @@ impl SessionBuilder {
 pub struct Session {
     solver: Box<dyn Solver>,
     mode: ExecMode,
+    temporal: usize,
     backend_name: &'static str,
 }
 
@@ -364,6 +484,12 @@ impl Session {
     /// The resolved execution model (`Auto` has been decided by now).
     pub fn mode(&self) -> ExecMode {
         self.mode
+    }
+
+    /// The resolved temporal-blocking degree (1 unless the CPU stencil
+    /// substrate runs epoch-batched exchanges; `Auto` may have probed it).
+    pub fn temporal_degree(&self) -> usize {
+        self.temporal
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -549,6 +675,74 @@ fn auto_threads(workload: &Workload, seed: u64) -> Result<usize> {
     }
 }
 
+/// Measured temporal-degree autotune for stencil workloads on the CPU
+/// persistent backend: probe [`AUTO_TEMPORAL_CANDIDATES`] one-shot runs
+/// and keep the fastest per-step wall, after pruning degrees whose
+/// analytic banded overlap cost ([`stencil::temporal::overlap_cost_banded`])
+/// exceeds [`TEMPORAL_REDUNDANCY_CAP`] — the measured pick is thereby
+/// cross-checked against the `OverlapCost` model in both directions: the
+/// model gates what gets measured, the measurement decides among the
+/// survivors. `bt1_cost` is the per-step cost the mode tuner already
+/// measured for persistent `bt = 1`; when present it seeds the baseline
+/// so that configuration is not measured a second time. Every probe —
+/// including that seed, which the mode tuner measured as a prepared
+/// solver's `advance` — times only the resident `run` on an
+/// already-spawned pool, so degrees compete symmetrically: none pays
+/// spawn/join inside its measured region. Returns the winning degree
+/// with its per-step cost, so the caller can also race the composition
+/// against the host-loop model's cost.
+fn tune_temporal(
+    workload: &Workload,
+    threads: usize,
+    seed: u64,
+    init: Option<&[f64]>,
+    bt1_cost: Option<f64>,
+) -> Result<TemporalChoice> {
+    let Workload::Stencil { bench, interior, .. } = workload else {
+        return Ok(TemporalChoice { bt: 1, cost: f64::INFINITY });
+    };
+    let spec = stencil::spec(bench)
+        .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+    let dims = parse_interior(interior)?;
+    let dom = stencil_domain(&spec, &dims, seed, init)?;
+    // the banded axis is the first interior extent in both 2D and 3D;
+    // the thinnest band bounds the worst-case redundancy
+    let bands = stencil::parallel::partition(dims[0], threads.max(1));
+    let min_band = bands.iter().map(|&(_, l)| l).min().unwrap_or(1);
+    let mut best = (1usize, f64::INFINITY);
+    for bt in AUTO_TEMPORAL_CANDIDATES {
+        if bt == 1 {
+            if let Some(cost) = bt1_cost {
+                best = (1, cost);
+                continue;
+            }
+        } else if stencil::temporal::overlap_cost_banded(min_band, spec.radius, bt).redundancy()
+            > TEMPORAL_REDUNDANCY_CAP
+        {
+            continue;
+        }
+        let steps = round_up_to(AUTO_PROBE_STEPS, bt);
+        // time the resident run only: spawn before, join after the clock,
+        // matching the advance-only accounting of the seeded bt=1 cost
+        let mut pool = stencil::pool::StencilPool::spawn_temporal(&spec, &dom, threads, bt)?;
+        let t0 = std::time::Instant::now();
+        pool.run(steps, None)?;
+        let cost = t0.elapsed().as_secs_f64() / steps as f64;
+        if cost < best.1 {
+            best = (bt, cost);
+        }
+    }
+    Ok(TemporalChoice { bt: best.0, cost: best.1 })
+}
+
+/// Result of [`tune_temporal`]: the winning degree and its measured
+/// per-step cost.
+struct TemporalChoice {
+    bt: usize,
+    cost: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
 fn make_solver(
     backend: &Backend,
     workload: &Workload,
@@ -556,6 +750,7 @@ fn make_solver(
     seed: u64,
     cg_parts: usize,
     cg_threaded: bool,
+    temporal: usize,
     init: Option<&[f64]>,
 ) -> Result<Box<dyn Solver>> {
     match (backend, workload) {
@@ -570,7 +765,8 @@ fn make_solver(
         }
         (Backend::CpuPersistent { threads }, Workload::Stencil { bench, interior, .. }) => {
             let dims = parse_interior(interior)?;
-            Ok(Box::new(cpu::CpuStencil::new(bench, &dims, *threads, mode, seed, init)?))
+            let opts = cpu::StencilOptions { threads: *threads, mode, seed, temporal };
+            Ok(Box::new(cpu::CpuStencil::new(bench, &dims, &opts, init)?))
         }
         (Backend::CpuPersistent { threads }, Workload::Cg { n }) => Ok(Box::new(
             cpu::CpuCg::poisson(*n, seed, cg_parts, *threads, cg_threaded, mode)?,
@@ -650,6 +846,108 @@ mod tests {
                 .build()
         )
         .contains("initial_domain"));
+    }
+
+    #[test]
+    fn build_rejects_bad_temporal_combos() {
+        // bt == 0
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(2))
+                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+                .temporal(0)
+                .build()
+        )
+        .contains(">= 1"));
+        // bt > 1 on a non-stencil workload
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(2))
+                .workload(Workload::cg(64))
+                .temporal(2)
+                .build()
+        )
+        .contains("stencil"));
+        // bt > 1 on a backend without the composition
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::simulated(a100()))
+                .workload(Workload::stencil("2d5pt", "64x64", "f64"))
+                .temporal(2)
+                .build()
+        )
+        .contains("CPU"));
+        // bt > 1 pinned to a per-step model
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(2))
+                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+                .mode(ExecMode::HostLoop)
+                .temporal(2)
+                .build()
+        )
+        .contains("persistent"));
+        // bt == 1 is today's behavior and valid anywhere
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            .mode(ExecMode::HostLoop)
+            .temporal(1)
+            .build()
+            .unwrap();
+        assert_eq!(s.temporal_degree(), 1);
+    }
+
+    #[test]
+    fn temporal_sessions_resolve_their_degree() {
+        let mut s = SessionBuilder::new()
+            .backend(Backend::cpu(3))
+            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+            .mode(ExecMode::Persistent)
+            .temporal(4)
+            .build()
+            .unwrap();
+        assert_eq!(s.temporal_degree(), 4);
+        let rep = s.run(8).unwrap();
+        assert_eq!(rep.steps, 8);
+        assert!(rep.redundancy.unwrap() > 1.0, "epoch overlap work reported");
+        // an Auto build with a pinned bt > 1 only considers persistent
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+            .auto()
+            .temporal(2)
+            .build()
+            .unwrap();
+        assert_eq!(s.mode(), ExecMode::Persistent);
+        assert_eq!(s.temporal_degree(), 2);
+    }
+
+    #[test]
+    fn auto_probes_a_temporal_degree_on_cpu_stencils() {
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "24x24", "f64"))
+            .auto()
+            .build()
+            .unwrap();
+        if s.mode() == ExecMode::Persistent {
+            assert!(
+                AUTO_TEMPORAL_CANDIDATES.contains(&s.temporal_degree()),
+                "auto picked bt={}",
+                s.temporal_degree()
+            );
+        } else {
+            assert_eq!(s.temporal_degree(), 1, "per-step models never batch epochs");
+        }
+        // non-stencil and non-CPU sessions always resolve bt = 1
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(1))
+            .workload(Workload::cg(64))
+            .auto()
+            .build()
+            .unwrap();
+        assert_eq!(s.temporal_degree(), 1);
     }
 
     #[test]

@@ -32,6 +32,11 @@ pub struct Report {
     /// Time spent in grid-sync barriers, where the substrate exposes it
     /// (CPU persistent threads; modeled for the simulator).
     pub barrier_wait_seconds: Option<f64>,
+    /// Redundant-compute ratio of overlapped temporal blocking
+    /// (`computed cells / useful cells`, >= 1.0), where the substrate
+    /// measures it (CPU stencil; 1.0 means no overlap work, `None` means
+    /// the backend does not track it).
+    pub redundancy: Option<f64>,
 }
 
 impl Report {
@@ -59,6 +64,7 @@ impl Report {
             fom_unit,
             residual,
             barrier_wait_seconds,
+            redundancy: None,
         }
     }
 }

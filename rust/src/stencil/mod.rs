@@ -3,8 +3,11 @@
 //! the PERKS execution model physically (thread-local slabs as the on-chip
 //! cache, a shared array as global memory, a grid barrier as grid.sync).
 //! The `pool` module holds the spawn-once worker runtime (workers parked
-//! between `advance` commands, slabs resident across them); `parallel`
-//! holds the shared banded machinery plus the one-shot/host-loop drivers.
+//! between `advance` commands, slabs resident across them, exchanges
+//! optionally epoch-batched by temporal blocking); `parallel` holds the
+//! shared banded machinery plus the one-shot/host-loop drivers;
+//! `temporal` holds the trapezoidal slab-advance core every
+//! temporally-blocked path shares, plus the sequential ablation runners.
 
 pub mod gold;
 pub mod grid;

@@ -14,7 +14,8 @@
 //!
 //! * [`host_loop`] — threads are (re)spawned every time step and the whole
 //!   domain round-trips through the shared array: the traditional model.
-//! * [`persistent`] — one-shot PERKS run: spawn a
+//! * [`persistent`] / [`persistent_temporal`] — one-shot PERKS run
+//!   (optionally composed with temporal blocking at degree `bt`): spawn a
 //!   [`crate::stencil::pool::StencilPool`], run the resident time loop
 //!   once, join. Threads are spawned once per *call*.
 //! * [`crate::stencil::pool::StencilPool`] — the spawn-once runtime:
@@ -24,22 +25,31 @@
 //! # The two-barrier exchange invariant
 //!
 //! The resident loop stores only a band's *boundary planes* (the planes a
-//! neighbor's halo reads) to the shared array each step, then loads its
-//! own halo planes back. Two grid barriers per step make that sound:
+//! neighbor's halo reads) to the shared array once per exchange *epoch*
+//! (`bt` locally-advanced sub-steps; `bt = 1` — one epoch per step — is
+//! the default), then loads its own halo planes back. Two grid barriers
+//! per epoch make that sound:
 //!
 //! 1. after every thread's boundary **store** — no thread may read halo
 //!    planes before all neighbors have published them;
 //! 2. after every thread's halo **load** — no thread may overwrite its
-//!    boundary planes (next step's store) before all neighbors have read
+//!    boundary planes (next epoch's store) before all neighbors have read
 //!    the current ones.
 //!
 //! Between the two barriers the shared array is read-only, which is also
 //! where the pool folds its residual-norm reduction slots (see
 //! `GridBarrier::read_sum`).
 //!
+//! With temporal blocking (`bt > 1`, see `stencil::temporal` and the
+//! pool docs) the exchanged boundary/halo ranges deepen to `bt * radius`
+//! planes and the barriers drop to `2 * ceil(steps / bt)` per advance —
+//! the widened-halo exchange invariant: every plane a worker loads as
+//! halo lies within `bt * radius` of some band edge, and is therefore
+//! covered by that band's boundary store of the same epoch.
+//!
 //! Traffic accounting follows the paper's Eq 5: a band thinner than
-//! `2*radius` has overlapping lo/hi boundary ranges, so the per-step
-//! boundary traffic is the **union** of the two plane ranges
+//! twice the exchange depth has overlapping lo/hi boundary ranges, so the
+//! per-epoch boundary traffic is the **union** of the two plane ranges
 //! ([`boundary_union_planes`]), not their sum.
 //!
 //! All drivers produce results identical to `gold::run`, which the tests
@@ -154,6 +164,19 @@ pub struct ParallelReport {
     /// Last in-loop residual norm (squared step delta), when the run
     /// tracked one (`None` for fixed-step runs and for `host_loop`).
     pub residual: Option<f64>,
+    /// Cell updates actually performed, including the redundant overlap
+    /// work of temporal blocking (== `useful_cells` at `bt = 1`).
+    pub computed_cells: u64,
+    /// Useful cell updates: interior cells x steps.
+    pub useful_cells: u64,
+}
+
+impl ParallelReport {
+    /// Redundant-compute ratio >= 1 (the `OverlapCost` measurement):
+    /// 1.0 when no temporal blocking overlap was computed.
+    pub fn redundancy(&self) -> f64 {
+        crate::stencil::temporal::redundancy_ratio(self.computed_cells, self.useful_cells)
+    }
 }
 
 pub(crate) struct ThreadPlan {
@@ -163,9 +186,12 @@ pub(crate) struct ThreadPlan {
     pub(crate) slab: std::ops::Range<usize>,
 }
 
+/// Build one slab plan per band, with `halo` planes of halo each side
+/// (clamped at the domain edges). `halo` is `radius` for per-step
+/// exchange and `bt * radius` for temporal blocking at degree `bt`.
 pub(crate) fn plans(
     geometry: &Bands,
-    radius: usize,
+    halo: usize,
     total_planes: usize,
     plane: usize,
 ) -> Vec<ThreadPlan> {
@@ -175,20 +201,21 @@ pub(crate) fn plans(
         .map(|&(s, l)| {
             let b0 = geometry.first + s;
             let b1 = b0 + l;
-            let s0 = b0.saturating_sub(radius);
-            let s1 = (b1 + radius).min(total_planes);
+            let s0 = b0.saturating_sub(halo);
+            let s1 = (b1 + halo).min(total_planes);
             ThreadPlan { band: b0..b1, slab: s0 * plane..s1 * plane }
         })
         .collect()
 }
 
-/// Distinct boundary planes a band publishes each step: the lo range
-/// covers the first `radius` band planes, the hi range the last `radius`;
-/// for bands thinner than `2*radius` the two overlap, and the per-step
-/// traffic is the union — `min(2*radius, band_planes)` — not the sum
-/// (counting both inflates `global_bytes` against the Eq 5 model).
-pub(crate) fn boundary_union_planes(radius: usize, band_planes: usize) -> usize {
-    (2 * radius).min(band_planes)
+/// Distinct boundary planes a band publishes each exchange epoch: the lo
+/// range covers the first `depth` band planes, the hi range the last
+/// `depth` (`depth` is `radius` at `bt = 1`, `bt * radius` under temporal
+/// blocking); for bands thinner than `2*depth` the two overlap, and the
+/// per-epoch traffic is the union — `min(2*depth, band_planes)` — not the
+/// sum (counting both inflates `global_bytes` against the Eq 5 model).
+pub(crate) fn boundary_union_planes(depth: usize, band_planes: usize) -> usize {
+    (2 * depth).min(band_planes)
 }
 
 /// Compute one Jacobi step for the planes `band` (padded coords along the
@@ -276,41 +303,40 @@ pub(crate) fn scatter_band(
     }
 }
 
-/// Per-plane squared-delta partials between the freshly computed interior
-/// values of a band (`results`, contiguous band-major rows — the
-/// `compute_band` layout) and the pre-update slab (`local`). Calls
-/// `put(plane_slot, partial)` once per band plane, where `plane_slot` is
-/// the *global* interior plane index (`plane - first`) — the
-/// reduction-slot protocol of the pool's in-loop residual. Each partial
-/// accumulates left-to-right in row-major order from 0.0, so the
+/// Per-plane squared-delta partials between two same-geometry slabs over
+/// a band's planes: `cur` holds the freshly advanced level, `prev` the
+/// level one sub-step behind (the pool's ping-pong pair, where the
+/// epoch's last sub-step leaves exactly those two levels in the buffers).
+/// Calls `put(plane_slot, partial)` once per band plane, where
+/// `plane_slot` is the *global* interior plane index (`plane - first`) —
+/// the reduction-slot protocol of the pool's in-loop residual. Each
+/// partial accumulates left-to-right in row-major order from 0.0, so the
 /// slot-ordered fold is bit-identical at every thread count and matches
 /// the serial [`residual_norm`].
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn band_delta_partials(
+pub(crate) fn slab_delta_partials(
     spec: &StencilSpec,
     domain: &Domain,
-    local: &[f64],
+    cur: &[f64],
+    prev: &[f64],
     slab_first: usize,
     band: &std::ops::Range<usize>,
     axis: usize,
     first: usize,
-    results: &[f64],
     mut put: impl FnMut(usize, f64),
 ) {
     let r = spec.radius;
     let (py, px) = (domain.padded[1], domain.padded[2]);
     let width = px - 2 * r;
-    let mut o = 0;
     if axis == 0 {
         for z in band.clone() {
             let mut partial = 0.0;
             for y in r..py - r {
                 let base = ((z - slab_first) * py + y) * px + r;
                 for i in 0..width {
-                    let d = results[o + i] - local[base + i];
+                    let d = cur[base + i] - prev[base + i];
                     partial += d * d;
                 }
-                o += width;
             }
             put(z - first, partial);
         }
@@ -319,10 +345,9 @@ pub(crate) fn band_delta_partials(
             let base = (y - slab_first) * px + r;
             let mut partial = 0.0;
             for i in 0..width {
-                let d = results[o + i] - local[base + i];
+                let d = cur[base + i] - prev[base + i];
                 partial += d * d;
             }
-            o += width;
             put(y - first, partial);
         }
     }
@@ -332,7 +357,7 @@ pub(crate) fn band_delta_partials(
 /// domains: per-interior-plane partials along the banded axis, each
 /// accumulated in row-major order from 0.0, folded in plane order — the
 /// exact arithmetic of the pool's in-loop residual
-/// ([`band_delta_partials`] + `GridBarrier::read_sum`), so a host-side
+/// ([`slab_delta_partials`] + `GridBarrier::read_sum`), so a host-side
 /// convergence check stops on the same step as the resident one, with the
 /// same bits.
 pub fn residual_norm(spec: &StencilSpec, old: &Domain, new: &Domain) -> f64 {
@@ -378,8 +403,24 @@ pub fn persistent(
     steps: usize,
     threads: usize,
 ) -> Result<ParallelReport> {
+    persistent_temporal(spec, x0, steps, threads, 1)
+}
+
+/// [`persistent`] composed with overlapped temporal blocking at degree
+/// `bt`: each exchange epoch advances `bt` sub-steps locally on slabs
+/// widened to `bt * radius` halo planes, so the run pays
+/// `2 * ceil(steps / bt)` grid barriers instead of `2 * steps` (plus the
+/// one-time load sync). `bt = 1` is exactly [`persistent`]. Results are
+/// bit-identical to `gold::run` at every degree.
+pub fn persistent_temporal(
+    spec: &StencilSpec,
+    x0: &Domain,
+    steps: usize,
+    threads: usize,
+    bt: usize,
+) -> Result<ParallelReport> {
     let t0 = std::time::Instant::now();
-    let mut pool = StencilPool::spawn(spec, x0, threads)?;
+    let mut pool = StencilPool::spawn_temporal(spec, x0, threads, bt)?;
     let run = pool.run(steps, None)?;
     // join the workers inside the timed region: the host-loop baseline
     // pays its per-step joins in its wall, so the one-shot comparison
@@ -394,6 +435,8 @@ pub fn persistent(
         global_bytes: run.global_bytes,
         barrier_wait: pool.barrier_wait(),
         residual: run.residual,
+        computed_cells: run.computed_cells,
+        useful_cells: run.useful_cells,
     })
 }
 
@@ -421,6 +464,13 @@ pub fn host_loop(
     let mut dst = SharedGrid::new(x0.data.clone());
     let mut global_bytes = 0u64;
     let deltas = crate::stencil::gold::linear_deltas(spec, x0.padded[1], x0.padded[2]);
+    // Dirichlet halo carry buffers, hoisted out of the time loop (they
+    // were reallocated every step)
+    let mut halo_lo = vec![0.0; geometry.first * plane];
+    let tail_first = (geometry.first
+        + if geometry.axis == 0 { x0.interior[0] } else { x0.interior[1] })
+        * plane;
+    let mut halo_hi = vec![0.0; dst.len() - tail_first];
 
     let t0 = std::time::Instant::now();
     for _ in 0..steps {
@@ -474,21 +524,16 @@ pub fn host_loop(
             .sum::<u64>();
         // halo planes of dst keep the Dirichlet values: copy from src once
         unsafe {
-            let mut halo_lo = vec![0.0; geometry.first * plane];
             src.read(0..halo_lo.len(), &mut halo_lo);
             dst.write(0, &halo_lo);
-            let tail_first = (geometry.first
-                + if geometry.axis == 0 { x0.interior[0] } else { x0.interior[1] })
-                * plane;
-            let tail_len = dst.len() - tail_first;
-            let mut halo_hi = vec![0.0; tail_len];
-            src.read(tail_first..tail_first + tail_len, &mut halo_hi);
+            src.read(tail_first..tail_first + halo_hi.len(), &mut halo_hi);
             dst.write(tail_first, &halo_hi);
         }
         std::mem::swap(&mut src, &mut dst);
     }
     let wall = t0.elapsed().as_secs_f64();
 
+    let useful = (x0.interior_cells() * steps) as u64;
     let mut result = x0.clone();
     result.data = src.into_inner();
     Ok(ParallelReport {
@@ -499,6 +544,8 @@ pub fn host_loop(
         global_bytes,
         barrier_wait: std::time::Duration::ZERO,
         residual: None,
+        computed_cells: useful, // no overlap work in the host-loop model
+        useful_cells: useful,
     })
 }
 
@@ -614,6 +661,45 @@ mod tests {
             rep.global_bytes,
             double_counted
         );
+    }
+
+    /// The temporal composition runs the same `accumulate_row` arithmetic
+    /// as gold, so it is *bit*-identical at every degree — including in
+    /// 3D, which the banded-plane core supports (the sequential
+    /// `temporal::run_2d*` paths are 2D-only).
+    #[test]
+    fn persistent_temporal_matches_gold_2d_and_3d() {
+        for (name, interior, steps, threads, bt) in [
+            ("2d5pt", vec![16usize, 16], 6usize, 3usize, 2usize),
+            ("2d9pt", vec![18, 18], 8, 4, 4),
+            ("3d7pt", vec![8, 8, 8], 4, 2, 2),
+            ("3d13pt", vec![8, 6, 6], 4, 3, 2),
+        ] {
+            let s = spec(name).unwrap();
+            let mut d = Domain::for_spec(&s, &interior).unwrap();
+            d.randomize(17);
+            let want = gold::run(&s, &d, steps).unwrap();
+            let rep = persistent_temporal(&s, &d, steps, threads, bt).unwrap();
+            assert_eq!(rep.result.data, want.data, "{name} bt={bt}");
+            assert!(rep.redundancy() >= 1.0, "{name} bt={bt}");
+        }
+    }
+
+    #[test]
+    fn persistent_temporal_handles_partial_epochs_and_reports_redundancy() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[16, 16]).unwrap();
+        d.randomize(2);
+        let want = gold::run(&s, &d, 7).unwrap();
+        // 7 = 4 + 3: the last epoch is a partial one
+        let rep = persistent_temporal(&s, &d, 7, 2, 4).unwrap();
+        assert_eq!(rep.result.data, want.data);
+        assert_eq!(rep.steps, 7);
+        assert!(rep.redundancy() > 1.0, "overlap work must be accounted");
+        // bt = 1 computes no overlap at all
+        let base = persistent(&s, &d, 7, 2).unwrap();
+        assert!((base.redundancy() - 1.0).abs() < 1e-12);
+        assert_eq!(base.computed_cells, base.useful_cells);
     }
 
     #[test]

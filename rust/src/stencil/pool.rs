@@ -1,6 +1,8 @@
 //! Spawn-once persistent stencil worker pool: the PERKS execution model
 //! for iterative stencils, with the time loop resident in the workers
-//! *across* `advance` boundaries.
+//! *across* `advance` boundaries — optionally composed with overlapped
+//! temporal blocking (degree `bt`), the optimization the paper calls
+//! orthogonal to PERKS (§I, §II-C).
 //!
 //! # Why a pool
 //!
@@ -17,10 +19,65 @@
 //! | thread block                  | pool worker (OS thread, spawn-once)    |
 //! | kernel launch / relaunch      | `StencilPool::spawn` (once per solve)  |
 //! | TB's domain tile              | worker's banded `ThreadPlan`           |
-//! | registers/smem-resident tile  | worker's slab (`local`), hot in L1/L2  |
+//! | registers/smem-resident tile  | worker's slab pair, hot in L1/L2       |
 //! |                               | **across `advance` calls**             |
 //! | `grid.sync()`                 | `GridBarrier::sync`                    |
 //! | grid-sync + device reduction  | `put` + `read_sum` residual all-reduce |
+//!
+//! # Epochs and sub-steps
+//!
+//! The resident loop advances time in exchange *epochs* of `bt`
+//! *sub-steps* each (`bt = 1`, the default, is per-step exchange — the
+//! classic PERKS loop). Within an epoch a worker touches nothing shared:
+//! it runs `temporal::advance_slab` on its resident slab pair, computing
+//! a trapezoid that starts at the band grown by `(bt - 1) * radius`
+//! planes and shrinks by `radius` per sub-step — redundant overlap work
+//! (accounted in [`StencilRun::computed_cells`]) that buys the right to
+//! exchange only at epoch boundaries. A `steps`-step advance therefore
+//! pays `2 * ceil(steps / bt)` barrier syncs instead of `2 * steps`
+//! (plus the one-time initial-load sync), observable via
+//! [`StencilPool::barrier_syncs`].
+//!
+//! # The widened-halo exchange invariant
+//!
+//! Each epoch ends with the band's boundary planes — now `bt * radius`
+//! deep on each side, the depth the neighbor's opening trapezoid reads —
+//! stored to the shared grid, and the worker's own `bt * radius`-deep
+//! halo planes reloaded, bracketed by two grid barriers (see
+//! `stencil::parallel`'s module docs): barrier 1 orders every boundary
+//! *store* before any halo *load*; barrier 2 orders every halo load
+//! before the next epoch's stores. Every plane a worker loads as halo
+//! lies within `bt * radius` of some band's edge and is therefore
+//! covered by that band's same-epoch boundary store (thin bands store
+//! the lo/hi *union*, and traffic counts it once — Eq 5). Between the
+//! two barriers the grid is read-only — which is where the in-loop
+//! residual folds: workers `put` one squared-delta partial per interior
+//! plane (last sub-step vs the level before it) before barrier 1, and
+//! every worker folds the slots in plane order (`read_sum`) right after
+//! it, giving a deterministic, thread-count-invariant convergence norm
+//! with **zero extra barriers**. With `bt > 1` the norm is checked at
+//! epoch granularity: a tolerance stop lands on the same epoch at every
+//! worker count.
+//!
+//! # Determinism
+//!
+//! Cell updates — redundant or not — are pure functions of the previous
+//! level with a fixed accumulation order (`gold::accumulate_row`), so
+//! pooled iterates are bit-identical to `gold::run`, to the one-shot
+//! driver, to themselves at every worker count and across resumed
+//! `advance`s, **and across temporal degrees**: `bt = 4` walks the same
+//! bits as `bt = 1`. The residual norm folds fixed per-plane partials in
+//! plane-index order, so it too is identical at every worker count.
+//!
+//! # Safety protocol
+//!
+//! The grid lives in a [`SharedGrid`] (`UnsafeCell`) shared by the main
+//! thread and the workers. Exclusive access is phased exactly as in
+//! `cg::pool`: the main thread touches it only while the pool is idle
+//! (the command/completion handshake below), and within a run the
+//! workers partition writes by band ownership with the two-barrier
+//! protocol separating producer and consumer phases. Every run ends with
+//! a whole-band store, so slab and grid agree at every park.
 //!
 //! # Command protocol
 //!
@@ -31,41 +88,7 @@
 //! the shared `Outcome`, bumps `finished`, and parks again. The
 //! command/completion handshake establishes happens-before in both
 //! directions, so between runs the main thread may read the shared grid
-//! ([`StencilPool::state`]) while the workers' slabs stay untouched — and
-//! current: every run ends with a whole-band store, and the resident loop
-//! refreshes halos before finishing, so slab and grid agree at every park.
-//!
-//! # The two-barrier exchange invariant
-//!
-//! Each resident step stores only the band's boundary planes to the
-//! shared grid and reloads the halo planes, bracketed by two grid
-//! barriers (see `stencil::parallel`'s module docs): barrier 1 orders
-//! every boundary *store* before any halo *load*; barrier 2 orders every
-//! halo load before the next step's stores. Between the two barriers the
-//! grid is read-only — which is where the in-loop residual folds: workers
-//! `put` one squared-delta partial per interior plane before barrier 1,
-//! and every worker folds the slots in plane order (`read_sum`) right
-//! after it, giving a deterministic, thread-count-invariant convergence
-//! norm with **zero extra barriers**.
-//!
-//! # Determinism
-//!
-//! Cell updates are pure functions of the previous state with a fixed
-//! accumulation order (`gold::accumulate_row`), so pooled iterates are
-//! bit-identical to `gold::run`, to the one-shot driver, and to
-//! themselves at every worker count and across resumed `advance`s. The
-//! residual norm folds fixed per-plane partials in plane-index order, so
-//! it too is identical at every worker count — a tolerance stop happens
-//! on the same step everywhere.
-//!
-//! # Safety protocol
-//!
-//! The grid lives in a [`SharedGrid`] (`UnsafeCell`) shared by the main
-//! thread and the workers. Exclusive access is phased exactly as in
-//! `cg::pool`: the main thread touches it only while the pool is idle
-//! (the handshake above), and within a run the workers partition writes
-//! by band ownership with the two-barrier protocol separating producer
-//! and consumer phases.
+//! ([`StencilPool::state`]) while the workers' slabs stay untouched.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -74,18 +97,19 @@ use crate::coordinator::barrier::GridBarrier;
 use crate::error::{Error, Result};
 use crate::stencil::grid::Domain;
 use crate::stencil::parallel::{
-    band_delta_partials, bands_for, boundary_union_planes, compute_band, plans, scatter_band,
-    SharedGrid, ThreadPlan,
+    bands_for, boundary_union_planes, plans, slab_delta_partials, SharedGrid, ThreadPlan,
 };
 use crate::stencil::shape::StencilSpec;
+use crate::stencil::temporal;
 use crate::util::counters;
 
 /// Command issued to the parked workers; epoch-stamped in `CtlState`.
 #[derive(Clone, Copy)]
 enum Cmd {
     Idle,
-    /// Run up to `steps` resident time steps. With `tol = Some(t)` the
-    /// workers track the squared step-delta norm each step and stop
+    /// Run up to `steps` resident time steps (sub-steps, grouped into
+    /// exchange epochs of the pool's `bt`). With `tol = Some(t)` the
+    /// workers track the squared step-delta norm each epoch and stop
     /// (collectively) once it drops to `t`; with `None` no residual is
     /// computed — fixed-step advances pay nothing for the machinery.
     Run { steps: usize, tol: Option<f64> },
@@ -93,12 +117,13 @@ enum Cmd {
 }
 
 /// What one `Run` produced. `steps`/`residual` are replicated values
-/// (worker 0 publishes them); `moved` is summed over all workers.
+/// (worker 0 publishes them); `moved`/`computed` are summed over workers.
 #[derive(Clone, Default)]
 struct Outcome {
     steps: usize,
     residual: Option<f64>,
     moved: u64,
+    computed: u64,
     error: Option<String>,
 }
 
@@ -137,6 +162,10 @@ struct Shared {
     plane: usize,
     /// First interior plane in padded coords (the reduction-slot offset).
     first: usize,
+    /// Interior plane count of the banded axis.
+    interior_planes: usize,
+    /// Temporal-blocking degree: sub-steps per exchange epoch (>= 1).
+    bt: usize,
     plans: Vec<ThreadPlan>,
     weights: Vec<f64>,
     grid: SharedGrid,
@@ -147,20 +176,33 @@ struct Shared {
 /// Result of one [`StencilPool::run`].
 #[derive(Clone, Debug)]
 pub struct StencilRun {
-    /// Time steps actually performed (early-stop on `tol`).
+    /// Time steps actually performed (early-stop on `tol` lands on an
+    /// epoch boundary when `bt > 1`).
     pub steps: usize,
-    /// Last in-loop residual norm (squared step delta), `Some` iff the
-    /// run tracked one.
+    /// Last in-loop residual norm (squared step delta of the final
+    /// sub-step), `Some` iff the run tracked one.
     pub residual: Option<f64>,
     /// Bytes this run moved through the shared ("global") array, summed
-    /// over workers: initial slab loads on the first run, per-step
+    /// over workers: initial slab loads on the first run, per-epoch
     /// boundary-union stores + halo reloads, and the final band store.
     pub global_bytes: u64,
+    /// Cell updates performed, including the redundant trapezoid overlap
+    /// of temporal blocking (== `useful_cells` at `bt = 1`).
+    pub computed_cells: u64,
+    /// Useful cell updates: interior cells x steps.
+    pub useful_cells: u64,
+}
+
+impl StencilRun {
+    /// Redundant-compute ratio >= 1 (the measured `OverlapCost`).
+    pub fn redundancy(&self) -> f64 {
+        temporal::redundancy_ratio(self.computed_cells, self.useful_cells)
+    }
 }
 
 /// A pool of persistent banded stencil workers: spawned once, parked
 /// between runs, slabs resident across runs, joined on drop. See the
-/// module docs for the execution model.
+/// module docs for the execution model and the epoch/sub-step structure.
 pub struct StencilPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
@@ -169,19 +211,37 @@ pub struct StencilPool {
 }
 
 impl StencilPool {
-    /// Spawn the resident workers for one domain. The worker count is the
-    /// band count: `threads` clamped to the interior planes, so no worker
-    /// is idle by construction. Fails on `threads == 0` and on domains
-    /// with no interior planes to band.
+    /// Spawn the resident workers for one domain with per-step exchange
+    /// (`bt = 1`). The worker count is the band count: `threads` clamped
+    /// to the interior planes, so no worker is idle by construction.
+    /// Fails on `threads == 0` and on domains with no interior planes.
     pub fn spawn(spec: &StencilSpec, x0: &Domain, threads: usize) -> Result<Self> {
+        Self::spawn_temporal(spec, x0, threads, 1)
+    }
+
+    /// [`StencilPool::spawn`] with overlapped temporal blocking at degree
+    /// `bt`: slabs widen to `bt * radius` halo planes and the resident
+    /// loop exchanges (and syncs) once per `bt` sub-steps. `bt = 1` is
+    /// per-step exchange; `bt == 0` is rejected.
+    pub fn spawn_temporal(
+        spec: &StencilSpec,
+        x0: &Domain,
+        threads: usize,
+        bt: usize,
+    ) -> Result<Self> {
         if threads == 0 {
             return Err(Error::invalid("threads must be > 0"));
+        }
+        if bt == 0 {
+            return Err(Error::invalid("temporal blocking degree bt must be >= 1"));
         }
         let geometry = bands_for(x0, spec, threads)?;
         let r = spec.radius;
         let plane = geometry.plane;
         let total_planes = x0.data.len() / plane;
-        let plans = plans(&geometry, r, total_planes, plane);
+        // slabs carry bt*r halo planes: the depth the opening trapezoid
+        // of an epoch reads
+        let plans = plans(&geometry, bt * r, total_planes, plane);
         let workers = plans.len();
         // one residual-reduction slot per interior plane of the banded
         // axis: partials are per *plane*, not per worker, which is what
@@ -195,6 +255,8 @@ impl StencilPool {
             axis: geometry.axis,
             plane,
             first: geometry.first,
+            interior_planes,
+            bt,
             plans,
             weights: spec.weights(),
             grid: SharedGrid::new(x0.data.clone()),
@@ -246,10 +308,24 @@ impl StencilPool {
         self.workers
     }
 
+    /// Temporal-blocking degree this pool exchanges at (1 = every step).
+    pub fn temporal_degree(&self) -> usize {
+        self.shared.bt
+    }
+
     /// OS threads this pool has ever spawned — constant after `spawn`,
     /// which is the point: `run` must never add to it.
     pub fn spawn_count(&self) -> u64 {
         self.spawned
+    }
+
+    /// Grid-barrier syncs this pool's workers have performed so far
+    /// (generations of the shared barrier, not per-worker arrivals). A
+    /// `run(steps)` costs `2 * ceil(steps / bt)` syncs — one pair per
+    /// exchange epoch — plus a single initial-load sync on the pool's
+    /// first run; early tolerance stops cost `2 * epochs_run`.
+    pub fn barrier_syncs(&self) -> u64 {
+        self.shared.barrier.generations()
     }
 
     /// Total time workers spent blocked at the grid barrier (summed).
@@ -263,8 +339,9 @@ impl StencilPool {
     }
 
     /// Run up to `steps` resident time steps on the parked workers (no
-    /// thread spawns). With `tol = Some(t)` the workers compute the
-    /// squared step-delta norm each step and stop collectively once it
+    /// thread spawns), grouped into exchange epochs of the pool's
+    /// temporal degree. With `tol = Some(t)` the workers compute the
+    /// squared step-delta norm each epoch and stop collectively once it
     /// drops to `t`; the last norm is returned in
     /// [`StencilRun::residual`]. `Err` is reserved for a *collective*
     /// worker panic (all workers fail at the same deterministic point —
@@ -300,6 +377,8 @@ impl StencilPool {
             steps: outcome.steps,
             residual: outcome.residual,
             global_bytes: outcome.moved,
+            computed_cells: outcome.computed,
+            useful_cells: (self.shared.meta.interior_cells() * outcome.steps) as u64,
         })
     }
 
@@ -352,22 +431,15 @@ impl Drop for StencilPool {
 }
 
 /// Park on the control condvar; execute each epoch's command; exit on
-/// shutdown. The slab (`local`), the results buffer and the linearized
-/// stencil offsets live *here*, outside the command loop: they are built
-/// once per pool lifetime and stay resident across `advance` commands —
-/// the CPU analog of a thread block keeping its tile in registers/smem
-/// for the whole solve.
+/// shutdown. The resident slab *pair* (`cur`/`nxt`, ping-ponged by the
+/// trapezoid core) and the linearized stencil offsets live *here*,
+/// outside the command loop: they are built once per pool lifetime and
+/// stay resident across `advance` commands — the CPU analog of a thread
+/// block keeping its tile in registers/smem for the whole solve.
 fn worker_main(sh: &Shared, w: usize) {
     let plan = &sh.plans[w];
-    let r = sh.spec.radius;
-    let band_planes = plan.band.len();
-    let interior_per_plane = if sh.axis == 0 {
-        (sh.meta.padded[1] - 2 * r) * (sh.meta.padded[2] - 2 * r)
-    } else {
-        sh.meta.padded[2] - 2 * r
-    };
-    let mut local = vec![0.0f64; plan.slab.len()];
-    let mut results = vec![0.0f64; band_planes * interior_per_plane];
+    let mut cur = vec![0.0f64; plan.slab.len()];
+    let mut nxt = vec![0.0f64; plan.slab.len()];
     let deltas =
         crate::stencil::gold::linear_deltas(&sh.spec, sh.meta.padded[1], sh.meta.padded[2]);
     let mut loaded = false;
@@ -391,16 +463,18 @@ fn worker_main(sh: &Shared, w: usize) {
                 // lets a *collective* panic (all workers fail at the same
                 // deterministic point) surface as an error, as in cg::pool.
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_steps(sh, w, steps, tol, &mut local, &mut results, &deltas, &mut loaded)
+                    run_steps(sh, w, steps, tol, &mut cur, &mut nxt, &deltas, &mut loaded)
                 }))
                 .unwrap_or_else(|_| Outcome {
                     steps: 0,
                     residual: None,
                     moved: 0,
+                    computed: 0,
                     error: Some(format!("stencil pool worker {w} panicked during run")),
                 });
                 let mut g = sh.ctl.lock();
                 g.outcome.moved += out.moved; // every worker's traffic counts
+                g.outcome.computed += out.computed; // and its (overlap) work
                 if w == 0 {
                     // steps/residual are replicated; worker 0 publishes
                     g.outcome.steps = out.steps;
@@ -418,32 +492,40 @@ fn worker_main(sh: &Shared, w: usize) {
     }
 }
 
-/// The resident time loop of worker `w` for one `Run` command. All
-/// workers execute the same control flow on an identical residual (the
-/// slot-ordered fold), so early breaks are collective and the barrier
-/// never deadlocks.
+/// The resident time loop of worker `w` for one `Run` command: epochs of
+/// up to `bt` locally-advanced sub-steps, each followed by one widened
+/// boundary/halo exchange under two barriers. All workers execute the
+/// same control flow on an identical residual (the slot-ordered fold),
+/// so early breaks are collective and the barrier never deadlocks.
 #[allow(clippy::too_many_arguments)]
 fn run_steps(
     sh: &Shared,
     w: usize,
     steps: usize,
     tol: Option<f64>,
-    local: &mut [f64],
-    results: &mut [f64],
+    cur: &mut Vec<f64>,
+    nxt: &mut Vec<f64>,
     deltas: &[isize],
     loaded: &mut bool,
 ) -> Outcome {
     let plan = &sh.plans[w];
     let r = sh.spec.radius;
+    let bt = sh.bt;
     let plane = sh.plane;
     let slab_first = plan.slab.start / plane;
     let band_planes = plan.band.len();
+    let depth = bt * r; // exchange depth: boundary stores and halo loads
     let mut moved = 0u64;
+    let mut computed = 0u64;
 
     if !*loaded {
-        // --- first run only: initial load, slab (band + halos) ---
+        // --- first run only: initial load, slab (band + bt*r halos) ---
         // SAFETY: no writer before the barrier below; disjoint reads.
-        unsafe { sh.grid.read(plan.slab.clone(), local) };
+        unsafe { sh.grid.read(plan.slab.clone(), cur) };
+        // the ping-pong partner starts as an identical copy so its
+        // never-computed Dirichlet cells stay valid forever (the
+        // advance_slab contract)
+        nxt.copy_from_slice(cur);
         moved += (plan.slab.len() * 8) as u64;
         *loaded = true;
         // everyone must finish the initial load before anyone's first
@@ -453,68 +535,74 @@ fn run_steps(
 
     let mut done = 0usize;
     let mut residual = None;
-    for _ in 0..steps {
-        compute_band(
-            &sh.spec, &sh.meta, local, slab_first, &plan.band, &sh.weights, deltas, sh.axis,
-            results,
+    while done < steps {
+        // a trailing partial epoch advances fewer sub-steps; the slab's
+        // bt*r halo depth covers any sub <= bt
+        let sub = bt.min(steps - done);
+        computed += temporal::advance_slab(
+            &sh.spec,
+            &sh.meta,
+            sh.axis,
+            cur,
+            nxt,
+            slab_first,
+            &plan.band,
+            sub,
+            sh.first,
+            sh.interior_planes,
+            &sh.weights,
+            deltas,
         );
         if tol.is_some() {
-            // publish per-plane squared-delta partials (results vs the
-            // pre-update slab) into the reduction slots; folded by every
+            // publish per-plane squared-delta partials (the epoch's final
+            // sub-step vs the level before it — `cur` vs `nxt` after the
+            // core's last swap) into the reduction slots; folded by every
             // worker right after the store barrier below
-            band_delta_partials(
+            slab_delta_partials(
                 &sh.spec,
                 &sh.meta,
-                local,
+                cur,
+                nxt,
                 slab_first,
                 &plan.band,
                 sh.axis,
                 sh.first,
-                results,
                 |slot, partial| sh.barrier.put(slot, partial),
             );
         }
-        // update local slab interior with new values
+        // --- exchange: store only bt*r-deep boundary planes to global ---
         let band_off = (plan.band.start - slab_first) * plane;
-        let band_len = band_planes * plane;
-        scatter_band(
-            &sh.spec,
-            &sh.meta,
-            &plan.band,
-            sh.axis,
-            results,
-            &mut local[band_off..band_off + band_len],
-            plan.band.start,
-        );
-        // --- exchange: store only boundary planes to global ---
-        let lo_planes = r.min(band_planes);
+        let lo_planes = depth.min(band_planes);
         // SAFETY: band-owned planes; no reader until the barrier below.
         unsafe {
             sh.grid
-                .write(plan.band.start * plane, &local[band_off..band_off + lo_planes * plane])
+                .write(plan.band.start * plane, &cur[band_off..band_off + lo_planes * plane])
         };
-        let hi_planes = r.min(band_planes);
-        let hi_first = plan.band.end - hi_planes;
-        let hi_off = (hi_first - slab_first) * plane;
-        unsafe {
-            sh.grid.write(hi_first * plane, &local[hi_off..hi_off + hi_planes * plane])
-        };
-        // thin bands overlap lo/hi: traffic counts the union once (Eq 5)
-        moved += (boundary_union_planes(r, band_planes) * plane * 8) as u64;
+        // thin bands overlap lo/hi: store (and count — Eq 5) the union
+        // once, so the hi store covers only the planes the lo store
+        // didn't already publish
+        let hi_first = (plan.band.end - lo_planes).max(plan.band.start + lo_planes);
+        if hi_first < plan.band.end {
+            let hi_off = (hi_first - slab_first) * plane;
+            let hi_len = (plan.band.end - hi_first) * plane;
+            unsafe { sh.grid.write(hi_first * plane, &cur[hi_off..hi_off + hi_len]) };
+        }
+        moved += (boundary_union_planes(depth, band_planes) * plane * 8) as u64;
         // barrier 1: all boundary stores (and residual puts) published
         sh.barrier.sync();
         if tol.is_some() {
             // identical fold on every worker: slot order, not arrival
             residual = Some(sh.barrier.read_sum());
         }
-        // --- load neighbor halo planes from global ---
-        let halo_lo = plan.slab.start / plane..plan.band.start;
+        // --- load neighbor halo planes from global (into `cur` only:
+        // `nxt`'s halo interiors are recomputed before they are read) ---
+        let halo_lo = slab_first..plan.band.start;
         if !halo_lo.is_empty() {
             let off = halo_lo.start * plane;
             let len = halo_lo.len() * plane;
             // SAFETY: read-only phase between the two barriers.
             unsafe {
-                sh.grid.read(off..off + len, &mut local[..len]);
+                sh.grid.read(off..off + len, &mut cur[..len]);
             }
             moved += (len * 8) as u64;
         }
@@ -524,14 +612,14 @@ fn run_steps(
             let len = halo_hi.len() * plane;
             let loff = (halo_hi.start - slab_first) * plane;
             unsafe {
-                sh.grid.read(off..off + len, &mut local[loff..loff + len]);
+                sh.grid.read(off..off + len, &mut cur[loff..loff + len]);
             }
             moved += (len * 8) as u64;
         }
         // barrier 2: nobody may overwrite boundary planes or reduction
-        // slots (next step's store/put) before all neighbors read them
+        // slots (next epoch's store/put) before all neighbors read them
         sh.barrier.sync();
-        done += 1;
+        done += sub;
         if let (Some(t), Some(res)) = (tol, residual) {
             if res <= t {
                 break; // identical residual everywhere: a collective break
@@ -544,9 +632,9 @@ fn run_steps(
     let band_len = band_planes * plane;
     // SAFETY: every worker writes only its own band; the completion
     // handshake orders these stores before any main-thread read.
-    unsafe { sh.grid.write(plan.band.start * plane, &local[band_off..band_off + band_len]) };
+    unsafe { sh.grid.write(plan.band.start * plane, &cur[band_off..band_off + band_len]) };
     moved += (band_len * 8) as u64;
-    Outcome { steps: done, residual, moved, error: None }
+    Outcome { steps: done, residual, moved, computed, error: None }
 }
 
 #[cfg(test)]
@@ -583,6 +671,63 @@ mod tests {
         }
     }
 
+    /// The composition acceptance bar: pooled temporal blocking at
+    /// `bt ∈ {2, 4}` is bit-identical to `gold::run` and to pooled
+    /// `bt = 1` at every worker count, including across resumed advances
+    /// whose step counts are *not* epoch-aligned.
+    #[test]
+    fn pooled_temporal_bt_2_and_4_bit_identical_to_gold_and_bt1_across_threads_and_resume() {
+        let s = spec("2d9pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[20, 18]).unwrap();
+        d.randomize(8);
+        let want = gold::run(&s, &d, 9).unwrap();
+        // reference: pooled bt = 1
+        let mut base = StencilPool::spawn(&s, &d, 3).unwrap();
+        base.run(9, None).unwrap();
+        assert_eq!(base.state(), want.data, "bt=1 vs gold");
+        for bt in [2usize, 4] {
+            for threads in [1usize, 2, 3, 8] {
+                let mut pool = StencilPool::spawn_temporal(&s, &d, threads, bt).unwrap();
+                assert_eq!(pool.temporal_degree(), bt);
+                // 4 + 5: partial epochs inside both resumed runs
+                let r1 = pool.run(4, None).unwrap();
+                let r2 = pool.run(5, None).unwrap();
+                assert_eq!(r1.steps + r2.steps, 9, "bt={bt} threads={threads}");
+                assert_eq!(
+                    pool.state(),
+                    want.data,
+                    "bt={bt} threads={threads}: pooled temporal vs gold"
+                );
+                assert_eq!(pool.spawn_count(), pool.workers() as u64);
+                if bt > 1 {
+                    assert!(
+                        r1.redundancy() > 1.0,
+                        "bt={bt} threads={threads}: overlap work must be accounted"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Thin-band regression: bands thinner than `2 * bt * radius` overlap
+    /// their lo/hi boundary stores and force neighbors' halos through
+    /// *several* bands — the union-store invariant must still cover every
+    /// halo load, and results stay gold-exact.
+    #[test]
+    fn pooled_temporal_thin_bands_stay_gold_exact() {
+        let s = spec("2ds25pt").unwrap(); // radius 6
+        let mut d = Domain::for_spec(&s, &[20, 16]).unwrap();
+        d.randomize(5);
+        let bt = 2;
+        // premise: every band is thinner than 2*bt*r (and even than bt*r)
+        let bands = parallel::partition(d.interior[1], 4);
+        assert!(bands.iter().all(|&(_, l)| l < 2 * bt * s.radius));
+        let want = gold::run(&s, &d, 6).unwrap();
+        let mut pool = StencilPool::spawn_temporal(&s, &d, 4, bt).unwrap();
+        pool.run(6, None).unwrap();
+        assert_eq!(pool.state(), want.data);
+    }
+
     #[test]
     fn pooled_matches_gold_3d() {
         let s = spec("3d13pt").unwrap(); // radius 2
@@ -592,6 +737,10 @@ mod tests {
         let mut pool = StencilPool::spawn(&s, &d, 3).unwrap();
         pool.run(4, None).unwrap();
         assert_eq!(pool.state(), want.data);
+        // and the temporal composition in 3D
+        let mut tpool = StencilPool::spawn_temporal(&s, &d, 3, 2).unwrap();
+        tpool.run(4, None).unwrap();
+        assert_eq!(tpool.state(), want.data, "3D bt=2 vs gold");
     }
 
     #[test]
@@ -599,13 +748,43 @@ mod tests {
         let s = spec("2d5pt").unwrap();
         let mut d = Domain::for_spec(&s, &[12, 12]).unwrap();
         d.randomize(1);
-        let mut pool = StencilPool::spawn(&s, &d, 4).unwrap();
+        let mut pool = StencilPool::spawn_temporal(&s, &d, 4, 2).unwrap();
         let after_start = pool.spawn_count();
         for _ in 0..5 {
             pool.run(2, None).unwrap();
         }
         assert_eq!(pool.spawn_count(), after_start, "run() must not spawn");
         assert_eq!(after_start, pool.workers() as u64);
+    }
+
+    /// Satellite acceptance: a pooled `advance(steps)` at degree `bt`
+    /// performs exactly `2 * ceil(steps / bt)` barrier syncs, plus the
+    /// one-time initial-load sync on the pool's first run.
+    #[test]
+    fn barrier_syncs_are_two_per_epoch_plus_the_load_sync() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[16, 16]).unwrap();
+        d.randomize(3);
+        for (bt, steps) in [(1usize, 6usize), (2, 6), (4, 10), (4, 3)] {
+            let mut pool = StencilPool::spawn_temporal(&s, &d, 3, bt).unwrap();
+            assert_eq!(pool.barrier_syncs(), 0, "no syncs before the first run");
+            let epochs = steps.div_ceil(bt);
+            pool.run(steps, None).unwrap();
+            assert_eq!(
+                pool.barrier_syncs(),
+                1 + 2 * epochs as u64,
+                "bt={bt} steps={steps}: first run = load sync + 2/epoch"
+            );
+            // a resumed run re-pays only the per-epoch pairs
+            pool.run(steps, None).unwrap();
+            assert_eq!(
+                pool.barrier_syncs(),
+                1 + 4 * epochs as u64,
+                "bt={bt} steps={steps}: resumed run adds 2/epoch"
+            );
+            // and the process-wide counter mirrors the pool's view
+            assert!(crate::util::counters::barrier_syncs() >= pool.barrier_syncs());
+        }
     }
 
     #[test]
@@ -623,6 +802,33 @@ mod tests {
         // the initial slab load
         let again = pool.run(5, None).unwrap();
         assert!(again.global_bytes < run.global_bytes);
+    }
+
+    /// With bands thinner than the exchange depth, batching the exchange
+    /// into epochs moves strictly fewer bytes per step: the whole thin
+    /// band is stored once per *epoch* instead of once per *step*.
+    #[test]
+    fn temporal_epochs_reduce_thin_band_exchange_traffic() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[12, 64]).unwrap();
+        d.randomize(6);
+        // threads 4 => bands of 3 planes < 2*bt*r = 8 at bt = 4
+        let mut p1 = StencilPool::spawn_temporal(&s, &d, 4, 1).unwrap();
+        let mut p4 = StencilPool::spawn_temporal(&s, &d, 4, 4).unwrap();
+        // first runs differ by slab-load depth; compare *resumed* runs,
+        // which pay only the steady-state exchange + final-store traffic
+        p1.run(8, None).unwrap();
+        p4.run(8, None).unwrap();
+        let steady1 = p1.run(8, None).unwrap();
+        let steady4 = p4.run(8, None).unwrap();
+        assert!(
+            steady4.global_bytes < steady1.global_bytes,
+            "bt=4 {} vs bt=1 {}",
+            steady4.global_bytes,
+            steady1.global_bytes
+        );
+        // identical numerics all along
+        assert_eq!(p1.state(), p4.state());
     }
 
     #[test]
@@ -659,6 +865,44 @@ mod tests {
             parallel::residual_norm(&s, &d, &next).to_bits(),
             "in-loop norm must match the host-side helper bit-for-bit"
         );
+    }
+
+    /// With `bt > 1` the tolerance check runs at epoch granularity: the
+    /// stop lands on the same epoch (same step count, same residual bits,
+    /// same state bits) at every worker count.
+    #[test]
+    fn temporal_tolerance_stops_on_the_same_epoch_at_every_thread_count() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(7);
+        let bt = 4;
+        let tol = 1e-8;
+        let max = 20_000;
+        let mut reference: Option<(usize, u64, Vec<f64>)> = None;
+        for threads in [1usize, 2, 3, 8] {
+            let mut pool = StencilPool::spawn_temporal(&s, &d, threads, bt).unwrap();
+            let run = pool.run(max, Some(tol)).unwrap();
+            let res = run.residual.expect("tracked run reports a residual");
+            assert!(run.steps < max, "threads={threads}: did not converge");
+            assert!(res <= tol, "threads={threads}: stopped above tol ({res})");
+            assert_eq!(run.steps % bt, 0, "threads={threads}: stop is epoch-aligned");
+            let state = pool.state();
+            match &reference {
+                None => reference = Some((run.steps, res.to_bits(), state)),
+                Some((steps, bits, want)) => {
+                    assert_eq!(run.steps, *steps, "threads={threads}: stop epoch differs");
+                    assert_eq!(res.to_bits(), *bits, "threads={threads}: residual bits");
+                    assert_eq!(&state, want, "threads={threads}: state bits");
+                }
+            }
+        }
+        // the epoch-granular residual is the *final sub-step's* norm:
+        // identical to what a bt=1 pool reports after the same number of
+        // steps when that count is epoch-aligned
+        let (steps, bits, _) = reference.unwrap();
+        let mut base = StencilPool::spawn(&s, &d, 2).unwrap();
+        let base_run = base.run(steps, Some(0.0)).unwrap();
+        assert_eq!(base_run.residual.unwrap().to_bits(), bits);
     }
 
     #[test]
@@ -700,11 +944,12 @@ mod tests {
     }
 
     #[test]
-    fn spawn_rejects_zero_threads_and_empty_domains() {
+    fn spawn_rejects_zero_threads_zero_bt_and_empty_domains() {
         let s = spec("2d5pt").unwrap();
         let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
         d.randomize(4);
         assert!(StencilPool::spawn(&s, &d, 0).is_err());
+        assert!(StencilPool::spawn_temporal(&s, &d, 2, 0).is_err());
         let empty = Domain::zeros([1, 0, 8], s.radius, 2);
         assert!(StencilPool::spawn(&s, &empty, 2).is_err());
     }

@@ -1,22 +1,49 @@
 //! Overlapped temporal blocking — the optimization family the paper
-//! positions PERKS as *orthogonal* to (§I, §II-C).
+//! positions PERKS as *orthogonal* to (§I, §II-C) — and the shared
+//! slab-advance core behind every temporal-blocked path in the crate.
 //!
-//! With temporal blocking degree `bt`, each thread block loads its tile
-//! plus a halo of `bt * rad` layers and advances `bt` steps locally with
-//! redundant computation in the shrinking halo, so a device-wide exchange
-//! is needed only every `bt` steps. The cost is the redundant loads and
-//! computation in the overlap region (which is why high degrees stop
-//! paying off — the paper's argument for PERKS instead).
+//! # Epochs and sub-steps
 //!
-//! This module implements overlapped temporal blocking for the CPU
-//! persistent-threads substrate, both standalone (relaunch every bt
-//! steps: the AN5D-style baseline) and *composed with* PERKS (persistent
-//! threads + temporal blocking inside each exchange epoch) — directly
-//! demonstrating the paper's claim that the two compose.
+//! With temporal blocking degree `bt`, time is grouped into *epochs* of
+//! `bt` *sub-steps*. A worker loads its band plus a halo of `bt * radius`
+//! planes once per epoch, then advances `bt` sub-steps entirely locally:
+//! at sub-step `k` (1-based) the computed region is the band grown by
+//! `(bt - k) * radius` planes on each side — the trapezoid shrinks by
+//! `radius` per sub-step, so every read lands on a plane computed in the
+//! previous sub-step (or on the immutable Dirichlet ring). Planes outside
+//! the band are computed *redundantly* (the neighbor owns them); that
+//! redundant work is the price of exchanging only once per epoch, and it
+//! grows with `bt` — the paper's limit on temporal blocking, quantified
+//! by [`OverlapCost`].
+//!
+//! # One core, every path
+//!
+//! [`advance_slab`] is that trapezoid, written once over the banded plane
+//! representation shared with `stencil::parallel` (axis 0 = z planes for
+//! 3D, axis 1 = y rows for 2D) and using the same `gold::accumulate_row`
+//! kernel with precomputed `gold::linear_deltas` offsets as every other
+//! executor — which is why temporally-blocked results are bit-identical
+//! to `gold::run` wherever a cell is computed, redundantly or not. It
+//! drives:
+//!
+//! * [`run_2d`] — the relaunch-per-epoch baseline (AN5D-style): every
+//!   epoch reloads whole slabs from the shared array;
+//! * [`run_2d_perks`] — the sequential PERKS composition: slabs persist
+//!   across epochs, only `bt*radius`-deep halos are re-read and only the
+//!   band boundary republished (isolates the traffic accounting);
+//! * [`crate::stencil::pool::StencilPool`] — the resident parallel
+//!   composition: the pool's workers run this core between their
+//!   epoch-batched barrier exchanges (2 barriers per epoch instead of 2
+//!   per step).
+//!
+//! The core ping-pongs two slab buffers (`cur`/`nxt`) instead of cloning
+//! a scratch slab every sub-step; both buffers must be initialized
+//! identically once so the never-written Dirichlet cells stay valid in
+//! each (see `advance_slab`'s contract).
 
 use crate::error::{Error, Result};
-use crate::stencil::grid::Domain;
 use crate::stencil::gold;
+use crate::stencil::grid::Domain;
 use crate::stencil::shape::StencilSpec;
 
 /// Redundant-computation accounting for one temporal-blocking epoch.
@@ -48,51 +75,112 @@ pub fn overlap_cost_2d(tx: usize, ty: usize, rad: usize, bt: usize) -> OverlapCo
     OverlapCost { computed_cells: computed, useful_cells: (tx * ty * bt) as f64 }
 }
 
-/// One thread's slab advanced `bt` steps without any exchange, using an
-/// overlap halo of `bt * rad` planes. Returns the number of *computed*
-/// (including redundant) cell updates for accounting.
+/// The measured redundant-compute ratio, shared by every report type
+/// that carries a (computed, useful) cell-count pair
+/// (`StencilRun`, `ParallelReport`, `session::Report.redundancy`):
+/// `computed / useful`, defined as 1.0 (no overlap work) when nothing
+/// useful ran yet.
+pub(crate) fn redundancy_ratio(computed_cells: u64, useful_cells: u64) -> f64 {
+    if useful_cells == 0 {
+        return 1.0;
+    }
+    computed_cells as f64 / useful_cells as f64
+}
+
+/// Analytic overlap cost for a *banded* slab of `band_planes` planes at
+/// degree `bt` and radius `rad` — the geometry of the pool's 1D
+/// decomposition, where the trapezoid grows along the banded axis only
+/// (each plane is computed in full, so there is no in-plane overlap).
+/// Counted in planes; the ratio is what matters. Ignores domain-edge
+/// clamping, so it upper-bounds the measured redundancy — which is what
+/// the `ExecPolicy::Auto` bt probe uses it for (pruning degrees whose
+/// redundant compute cannot pay for the saved barriers).
+pub fn overlap_cost_banded(band_planes: usize, rad: usize, bt: usize) -> OverlapCost {
+    let mut computed = 0.0;
+    for k in 1..=bt {
+        computed += (band_planes + 2 * (bt - k) * rad) as f64;
+    }
+    OverlapCost { computed_cells: computed, useful_cells: (band_planes * bt) as f64 }
+}
+
+/// Advance a banded slab `bt` sub-steps of overlapped temporal blocking
+/// with **no exchange**, ping-ponging `cur`/`nxt`. On return `cur` holds
+/// the advanced level (the buffers are swapped every sub-step, so the
+/// caller's `cur` binding always names the newest one). Returns the
+/// number of *computed* (including redundant) cell updates.
 ///
-/// `slab` is a padded sub-domain of `full` covering the thread's band
-/// plus `bt * rad` halo planes each side (clamped at the domain edge,
-/// where the Dirichlet ring substitutes).
-fn advance_slab_2d(
+/// Geometry contract (the banded plane representation of
+/// `stencil::parallel`):
+///
+/// * `cur`/`nxt` are equally-sized slabs of whole planes
+///   `[slab_first, slab_first + len/plane)` in padded coords, where
+///   `plane` is `padded[1] * padded[2]` for `axis == 0` (3D z bands) and
+///   `padded[2]` for `axis == 1` (2D y bands);
+/// * the slab must cover `band` grown by `bt * radius` planes each side,
+///   clamped only at the domain edges (where the Dirichlet ring
+///   substitutes) — exactly what `parallel::plans` builds;
+/// * `first..first + interior_planes` is the interior plane range of the
+///   banded axis; planes outside it are never computed;
+/// * both buffers must hold identical, current Dirichlet values in every
+///   never-computed cell (halo planes beyond the trapezoid and the
+///   in-plane halo ring). The core never writes those cells, so
+///   initializing `nxt` as a copy of `cur` once — at slab creation —
+///   keeps them valid forever.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn advance_slab(
     spec: &StencilSpec,
-    full: &Domain,
-    slab: &mut [f64],
-    slab_first: usize, // first padded row held in `slab`
-    slab_rows: usize,
-    band: std::ops::Range<usize>, // rows this thread owns (padded coords)
+    domain: &Domain,
+    axis: usize,
+    cur: &mut Vec<f64>,
+    nxt: &mut Vec<f64>,
+    slab_first: usize,
+    band: &std::ops::Range<usize>,
     bt: usize,
+    first: usize,
+    interior_planes: usize,
+    weights: &[f64],
+    deltas: &[isize],
 ) -> u64 {
-    let px = full.padded[2];
+    debug_assert_eq!(cur.len(), nxt.len());
     let r = spec.radius;
-    let weights = spec.weights();
-    let mut scratch = vec![0.0f64; slab.len()];
+    let (py, px) = (domain.padded[1], domain.padded[2]);
+    let plane = if axis == 0 { py * px } else { px };
+    let slab_planes = cur.len() / plane;
+    let width = px - 2 * r;
     let mut computed = 0u64;
-    let top_edge = r; // first interior row of the global domain
-    let bot_edge = full.padded[1] - r; // one past last interior row
     for k in 1..=bt {
         let grow = (bt - k) * r;
-        // rows to compute this sub-step: band grown by `grow`, clamped to
-        // the global interior and to what the slab can source (slab rows
-        // shrink by r each sub-step from each un-clamped edge)
-        let lo = band.start.saturating_sub(grow).max(top_edge).max(slab_first + 1);
-        let hi = (band.end + grow).min(bot_edge).min(slab_first + slab_rows - 1);
-        scratch.copy_from_slice(slab);
-        for y in lo..hi {
-            let ly = y - slab_first;
-            for x in r..px - r {
-                let mut acc = 0.0;
-                for (&(_, dy, dx), &w) in spec.offsets.iter().zip(&weights) {
-                    let yy = (ly as i64 + dy as i64) as usize;
-                    let xx = (x as i64 + dx as i64) as usize;
-                    acc += w * slab[yy * px + xx];
+        // shrinking trapezoid: band grown by `grow`, clamped to the global
+        // interior (the Dirichlet ring substitutes past the edge). The
+        // slab-coverage contract guarantees every read of `lo..hi` lands
+        // inside the slab.
+        let lo = band.start.saturating_sub(grow).max(first);
+        let hi = (band.end + grow).min(first + interior_planes);
+        debug_assert!(lo >= slab_first + r, "slab does not cover the trapezoid's lo reads");
+        debug_assert!(
+            hi + r <= slab_first + slab_planes,
+            "slab does not cover the trapezoid's hi reads"
+        );
+        for p in lo..hi {
+            if axis == 0 {
+                for y in r..py - r {
+                    let base = ((p - slab_first) * py + y) * px + r;
+                    gold::accumulate_row(
+                        &mut nxt[base..base + width],
+                        cur,
+                        base,
+                        deltas,
+                        weights,
+                    );
                 }
-                scratch[ly * px + x] = acc;
-                computed += 1;
+                computed += ((py - 2 * r) * width) as u64;
+            } else {
+                let base = (p - slab_first) * px + r;
+                gold::accumulate_row(&mut nxt[base..base + width], cur, base, deltas, weights);
+                computed += width as u64;
             }
         }
-        slab.copy_from_slice(&scratch);
+        std::mem::swap(cur, nxt);
     }
     computed
 }
@@ -117,10 +205,46 @@ impl TemporalReport {
     }
 }
 
+/// One band's persistent pair of ping-pong slab buffers plus its plane
+/// extent, reused across epochs (allocation-free time loop).
+struct BandSlab {
+    s0: usize,
+    s1: usize,
+    cur: Vec<f64>,
+    nxt: Vec<f64>,
+}
+
+fn band_slabs(x0: &Domain, bands: &[(usize, usize)], r: usize, bt: usize) -> Vec<BandSlab> {
+    let px = x0.padded[2];
+    let py = x0.padded[1];
+    bands
+        .iter()
+        .map(|&(s, len)| {
+            let b0 = r + s;
+            let b1 = b0 + len;
+            let s0 = b0.saturating_sub(bt * r);
+            let s1 = (b1 + bt * r).min(py);
+            let init = x0.data[s0 * px..s1 * px].to_vec();
+            BandSlab { s0, s1, cur: init.clone(), nxt: init }
+        })
+        .collect()
+}
+
+fn check_2d(spec: &StencilSpec, steps: usize, bt: usize) -> Result<()> {
+    if spec.dims != 2 {
+        return Err(Error::invalid("temporal blocking implemented for 2D benchmarks"));
+    }
+    if bt == 0 || steps % bt != 0 {
+        return Err(Error::invalid(format!("steps {steps} not a multiple of bt {bt}")));
+    }
+    Ok(())
+}
+
 /// Sequential overlapped temporal blocking over row-bands (2D only): the
-/// domain is split into `parts` bands; each epoch advances every band by
-/// `bt` steps independently (with redundant halo compute), then commits
-/// the bands back — the relaunch-per-epoch baseline.
+/// domain is split into `parts` bands; each epoch reloads every band's
+/// slab from the shared array, advances it `bt` sub-steps via
+/// [`advance_slab`], and commits the band back — the relaunch-per-epoch
+/// baseline (whole slabs round-trip every epoch).
 pub fn run_2d(
     spec: &StencilSpec,
     x0: &Domain,
@@ -128,38 +252,51 @@ pub fn run_2d(
     bt: usize,
     parts: usize,
 ) -> Result<TemporalReport> {
-    if spec.dims != 2 {
-        return Err(Error::invalid("temporal blocking implemented for 2D benchmarks"));
-    }
-    if bt == 0 || steps % bt != 0 {
-        return Err(Error::invalid(format!("steps {steps} not a multiple of bt {bt}")));
-    }
+    check_2d(spec, steps, bt)?;
     let r = spec.radius;
     let px = x0.padded[2];
-    let py = x0.padded[1];
     let bands = crate::stencil::parallel::partition(x0.interior[1], parts);
+    let weights = spec.weights();
+    let deltas = gold::linear_deltas(spec, x0.padded[1], px);
     let t0 = std::time::Instant::now();
     let mut cur = x0.clone();
+    // reused double buffer instead of a per-epoch clone. No copy between
+    // epochs either: every epoch commits every interior row (the bands
+    // partition them exactly) into `next` before the swap, and the
+    // Dirichlet halo rows are identical in both buffers from the initial
+    // clones and never written.
+    let mut next = x0.clone();
+    let mut slabs = band_slabs(x0, &bands, r, bt);
     let mut computed = 0u64;
     let mut global_bytes = 0u64;
     let epochs = steps / bt;
     for _ in 0..epochs {
-        let mut next = cur.clone();
-        for &(s, len) in &bands {
+        for (slab, &(s, len)) in slabs.iter_mut().zip(&bands) {
             let b0 = r + s;
             let b1 = b0 + len;
-            // slab: band + bt*r halo rows each side (clamped)
-            let s0 = b0.saturating_sub(bt * r);
-            let s1 = (b1 + bt * r).min(py);
-            let mut slab = cur.data[s0 * px..s1 * px].to_vec();
-            global_bytes += (slab.len() * 8) as u64;
-            computed += advance_slab_2d(spec, &cur, &mut slab, s0, s1 - s0, b0..b1, bt);
+            // relaunch model: the whole slab reloads from global each epoch
+            slab.cur.copy_from_slice(&cur.data[slab.s0 * px..slab.s1 * px]);
+            global_bytes += (slab.cur.len() * 8) as u64;
+            computed += advance_slab(
+                spec,
+                x0,
+                1,
+                &mut slab.cur,
+                &mut slab.nxt,
+                slab.s0,
+                &(b0..b1),
+                bt,
+                r,
+                x0.interior[1],
+                &weights,
+                &deltas,
+            );
             // commit only the owned band
-            let off = (b0 - s0) * px;
-            next.data[b0 * px..b1 * px].copy_from_slice(&slab[off..off + (b1 - b0) * px]);
+            let off = (b0 - slab.s0) * px;
+            next.data[b0 * px..b1 * px].copy_from_slice(&slab.cur[off..off + (b1 - b0) * px]);
             global_bytes += ((b1 - b0) * px * 8) as u64;
         }
-        cur = next;
+        std::mem::swap(&mut cur, &mut next);
     }
     Ok(TemporalReport {
         wall_seconds: t0.elapsed().as_secs_f64(),
@@ -175,7 +312,8 @@ pub fn run_2d(
 /// slab locally across epochs; only the `bt*r`-deep epoch halos are
 /// re-read and only the band boundary is re-published each epoch. Here we
 /// model it sequentially per band within an epoch (the parallel variant
-/// lives in `parallel.rs`; this one isolates the traffic accounting).
+/// is the pool's resident loop, `stencil::pool`; this one isolates the
+/// traffic accounting).
 pub fn run_2d_perks(
     spec: &StencilSpec,
     x0: &Domain,
@@ -183,73 +321,84 @@ pub fn run_2d_perks(
     bt: usize,
     parts: usize,
 ) -> Result<TemporalReport> {
-    if spec.dims != 2 {
-        return Err(Error::invalid("temporal blocking implemented for 2D benchmarks"));
-    }
-    if bt == 0 || steps % bt != 0 {
-        return Err(Error::invalid(format!("steps {steps} not a multiple of bt {bt}")));
-    }
+    check_2d(spec, steps, bt)?;
     let r = spec.radius;
     let px = x0.padded[2];
-    let py = x0.padded[1];
     let bands = crate::stencil::parallel::partition(x0.interior[1], parts);
+    let weights = spec.weights();
+    let deltas = gold::linear_deltas(spec, x0.padded[1], px);
     let t0 = std::time::Instant::now();
     let mut cur = x0.clone();
+    // reused double buffer, never copied between epochs: the only rows an
+    // epoch *reads* from the shared buffers are halo rows within bt*r of
+    // a band edge, and each epoch *publishes* exactly those rows into
+    // `next` before the swap (mid-band rows go stale in the buffers but
+    // are never read, and the final commit below rewrites every band row
+    // from the authoritative slabs; Dirichlet halo rows are identical in
+    // both buffers from the initial clones and never written).
+    let mut next = x0.clone();
     let mut computed = 0u64;
     let mut global_bytes = 0u64;
     let epochs = steps / bt;
-    // persistent local slabs: loaded once
-    let mut slabs: Vec<(usize, usize, Vec<f64>)> = bands
-        .iter()
-        .map(|&(s, len)| {
-            let b0 = r + s;
-            let b1 = b0 + len;
-            let s0 = b0.saturating_sub(bt * r);
-            let s1 = (b1 + bt * r).min(py);
-            global_bytes += ((s1 - s0) * px * 8) as u64;
-            (s0, s1, cur.data[s0 * px..s1 * px].to_vec())
-        })
-        .collect();
+    // persistent local slabs: loaded once, resident across epochs
+    let mut slabs = band_slabs(x0, &bands, r, bt);
+    for slab in &slabs {
+        global_bytes += (slab.cur.len() * 8) as u64;
+    }
     for _ in 0..epochs {
-        let mut next = cur.clone();
-        for (i, &(s, len)) in bands.iter().enumerate() {
+        for (slab, &(s, len)) in slabs.iter_mut().zip(&bands) {
             let b0 = r + s;
             let b1 = b0 + len;
-            let (s0, s1, slab) = &mut slabs[i];
-            // refresh only the halo rows from global (PERKS keeps the band)
-            let lo_halo = *s0..b0;
-            let hi_halo = b1..*s1;
+            // refresh only the halo planes from global (PERKS keeps the band)
+            let lo_halo = slab.s0..b0;
+            let hi_halo = b1..slab.s1;
             for range in [lo_halo, hi_halo] {
                 if !range.is_empty() {
-                    let off = (range.start - *s0) * px;
+                    let off = (range.start - slab.s0) * px;
                     let len = range.len() * px;
-                    slab[off..off + len]
+                    slab.cur[off..off + len]
                         .copy_from_slice(&cur.data[range.start * px..range.start * px + len]);
                     global_bytes += (len * 8) as u64;
                 }
             }
-            computed += advance_slab_2d(spec, &cur, slab, *s0, *s1 - *s0, b0..b1, bt);
-            // publish only the boundary rows needed by neighbor halos
+            computed += advance_slab(
+                spec,
+                x0,
+                1,
+                &mut slab.cur,
+                &mut slab.nxt,
+                slab.s0,
+                &(b0..b1),
+                bt,
+                r,
+                x0.interior[1],
+                &weights,
+                &deltas,
+            );
+            // publish only the boundary planes a neighbor's halo reads
             let publish = (bt * r).min(b1 - b0);
             let top = b0..b0 + publish;
             let bot = b1 - publish..b1;
             for range in [top, bot] {
-                let off = (range.start - *s0) * px;
+                let off = (range.start - slab.s0) * px;
                 let len = range.len() * px;
+                // overlapping top/bot copies of a thin band are idempotent
                 next.data[range.start * px..range.start * px + len]
-                    .copy_from_slice(&slab[off..off + len]);
-                global_bytes += (len * 8) as u64;
+                    .copy_from_slice(&slab.cur[off..off + len]);
             }
+            // thin bands overlap top/bot: traffic counts the union of the
+            // two plane ranges once (Eq 5), exactly as the pool does
+            let union = crate::stencil::parallel::boundary_union_planes(bt * r, b1 - b0);
+            global_bytes += (union * px * 8) as u64;
         }
-        cur = next;
+        std::mem::swap(&mut cur, &mut next);
     }
     // final commit of full bands
-    for (i, &(s, len)) in bands.iter().enumerate() {
+    for (slab, &(s, len)) in slabs.iter().zip(&bands) {
         let b0 = r + s;
         let b1 = b0 + len;
-        let (s0, _, slab) = &slabs[i];
-        let off = (b0 - s0) * px;
-        cur.data[b0 * px..b1 * px].copy_from_slice(&slab[off..off + (b1 - b0) * px]);
+        let off = (b0 - slab.s0) * px;
+        cur.data[b0 * px..b1 * px].copy_from_slice(&slab.cur[off..off + (b1 - b0) * px]);
         global_bytes += ((b1 - b0) * px * 8) as u64;
     }
     Ok(TemporalReport {
@@ -297,6 +446,19 @@ mod tests {
         }
     }
 
+    /// The shared core uses `gold::accumulate_row`, so the agreement is
+    /// not merely within tolerance — the bits match wherever a cell is
+    /// computed (redundantly or not).
+    #[test]
+    fn temporal_blocking_is_bit_identical_to_gold() {
+        let (s, d) = domain("2d9pt", 20, 16, 11);
+        let want = gold::run(&s, &d, 8).unwrap();
+        let rep = run_2d(&s, &d, 8, 4, 3).unwrap();
+        assert_eq!(rep.result.data, want.data);
+        let repc = run_2d_perks(&s, &d, 8, 4, 3).unwrap();
+        assert_eq!(repc.result.data, want.data);
+    }
+
     #[test]
     fn perks_composition_matches_gold() {
         for (name, bt, parts) in [("2d5pt", 2, 3), ("2d5pt", 4, 2), ("2d9pt", 2, 2)] {
@@ -330,6 +492,20 @@ mod tests {
     }
 
     #[test]
+    fn banded_overlap_cost_tracks_band_thickness_and_degree() {
+        // thin bands pay proportionally more redundancy: 1 + r*(bt-1)/len
+        let thick = overlap_cost_banded(64, 1, 4).redundancy();
+        let thin = overlap_cost_banded(4, 1, 4).redundancy();
+        assert!(thin > thick, "{thin} vs {thick}");
+        assert!(overlap_cost_banded(16, 1, 1).redundancy() == 1.0);
+        let b2 = overlap_cost_banded(16, 2, 2).redundancy();
+        let b4 = overlap_cost_banded(16, 2, 4).redundancy();
+        assert!(b2 < b4);
+        // exact closed form: 1 + rad * (bt - 1) / band
+        assert!((b4 - (1.0 + 2.0 * 3.0 / 16.0)).abs() < 1e-12);
+    }
+
+    #[test]
     fn measured_redundancy_matches_analytic_direction() {
         let (s, d) = domain("2d5pt", 32, 32, 9);
         let r2 = run_2d(&s, &d, 8, 2, 2).unwrap().redundancy();
@@ -350,6 +526,42 @@ mod tests {
         );
         // identical numerics
         assert!(perks.result.max_abs_diff(&plain.result) < 1e-12);
+    }
+
+    /// Eq-5 regression: a band thinner than `2*bt*r` publishes
+    /// overlapping top/bot boundary ranges; `global_bytes` must count the
+    /// union once (the rule the pool enforces), computed here
+    /// independently from the band geometry.
+    #[test]
+    fn perks_thin_band_publish_counts_the_union_once() {
+        let (s, d) = domain("2d5pt", 12, 64, 3);
+        let (steps, bt, parts) = (8usize, 4usize, 4usize);
+        let r = s.radius;
+        let (py, px) = (d.padded[1], d.padded[2]);
+        let bands = crate::stencil::parallel::partition(d.interior[1], parts);
+        assert!(bands.iter().all(|&(_, l)| l < 2 * bt * r), "thin-band premise");
+        let rep = run_2d_perks(&s, &d, steps, bt, parts).unwrap();
+        assert!(check_against_gold(&s, &d, steps, &rep).unwrap() < 1e-12);
+        let epochs = steps / bt;
+        let mut expect = 0usize;
+        let mut double_counted = 0usize;
+        for &(start, len) in &bands {
+            let b0 = r + start;
+            let b1 = b0 + len;
+            let s0 = b0.saturating_sub(bt * r);
+            let s1 = (b1 + bt * r).min(py);
+            let halo = (b0 - s0) + (s1 - b1);
+            let union = (2 * bt * r).min(len);
+            // initial slab load + per-epoch (halo refresh + union publish)
+            // + final whole-band commit, all in planes
+            expect += (s1 - s0) + epochs * (halo + union) + len;
+            double_counted += (s1 - s0) + epochs * (halo + 2 * (bt * r).min(len)) + len;
+        }
+        assert_eq!(rep.global_bytes, (expect * px * 8) as u64, "Eq-5 union accounting");
+        assert!(
+            rep.global_bytes < (double_counted * px * 8) as u64,
+            "the old top+bot sum would have inflated traffic"
+        );
     }
 
     #[test]

@@ -1,21 +1,26 @@
 //! Process-wide instrumentation counters.
 //!
-//! The PERKS claim hinges on *how often* the host relaunches workers, so
-//! the threading substrates (`spmv::merge::spmv_parallel`,
-//! `stencil::parallel::host_loop`, `stencil::pool`, `cg::pool`) report
-//! every OS thread they spawn here. Benches snapshot [`thread_spawns`]
+//! The PERKS claim hinges on *how often* the host relaunches workers and
+//! *how often* the device grid synchronizes, so the threading substrates
+//! (`spmv::merge::spmv_parallel`, `stencil::parallel::host_loop`,
+//! `stencil::pool`, `cg::pool`) report every OS thread they spawn here,
+//! and `coordinator::barrier::GridBarrier` reports every completed sync
+//! generation. Benches snapshot [`thread_spawns`] / [`barrier_syncs`]
 //! around a measured region to show the spawn-per-iteration baseline
-//! against the spawn-once pools.
+//! against the spawn-once pools, and the barriers-per-step reduction of
+//! epoch-batched temporal blocking (2 per epoch instead of 2 per step).
 //!
-//! The counter is global and monotonic; concurrent test threads may
+//! The counters are global and monotonic; concurrent test threads may
 //! interleave increments, so tests that need an exact attribution use the
 //! per-pool counters (`cg::pool::CgPool::spawn_count`,
-//! `stencil::pool::StencilPool::spawn_count`) instead and benches
-//! (single-threaded mains) read this one.
+//! `stencil::pool::StencilPool::spawn_count`,
+//! `stencil::pool::StencilPool::barrier_syncs`) instead and benches
+//! (single-threaded mains) read these.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+static BARRIER_SYNCS: AtomicU64 = AtomicU64::new(0);
 
 /// Record `n` OS threads spawned by a solver substrate.
 pub fn note_thread_spawns(n: u64) {
@@ -27,6 +32,17 @@ pub fn thread_spawns() -> u64 {
     THREAD_SPAWNS.load(Ordering::Relaxed)
 }
 
+/// Record `n` completed grid-barrier sync generations (the barrier's
+/// leader reports once per generation, not once per arriving thread).
+pub fn note_barrier_syncs(n: u64) {
+    BARRIER_SYNCS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total grid-barrier sync generations since process start.
+pub fn barrier_syncs() -> u64 {
+    BARRIER_SYNCS.load(Ordering::Relaxed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -36,5 +52,12 @@ mod tests {
         let before = thread_spawns();
         note_thread_spawns(3);
         assert!(thread_spawns() >= before + 3);
+    }
+
+    #[test]
+    fn barrier_counter_is_monotonic() {
+        let before = barrier_syncs();
+        note_barrier_syncs(2);
+        assert!(barrier_syncs() >= before + 2);
     }
 }

@@ -168,6 +168,71 @@ fn pjrt_and_cpu_backends_agree_on_the_same_workload() {
 }
 
 // ---------------------------------------------------------------------
+// temporal-blocking composition (epoch-batched resident exchange)
+// ---------------------------------------------------------------------
+
+#[test]
+fn temporal_sessions_are_bit_identical_to_bt1_and_gold() {
+    let seed = 19;
+    let spec = stencil::spec("2d5pt").unwrap();
+    let mut dom = Domain::for_spec(&spec, &[24, 24]).unwrap();
+    dom.randomize(seed);
+    let want = gold::run(&spec, &dom, 10).unwrap();
+    for bt in [1usize, 2, 4] {
+        let mut s = SessionBuilder::new()
+            .backend(Backend::cpu(3))
+            .workload(Workload::stencil("2d5pt", "24x24", "f64"))
+            .mode(ExecMode::Persistent)
+            .temporal(bt)
+            .seed(seed)
+            .build()
+            .unwrap();
+        assert_eq!(s.temporal_degree(), bt);
+        s.prepare().unwrap();
+        s.advance(3).unwrap(); // partial epochs at bt = 4
+        s.advance(7).unwrap();
+        assert_eq!(s.state_f64().unwrap(), want.data, "bt={bt}: diverged from gold");
+        let rep = s.report();
+        assert_eq!(rep.steps, 10);
+        assert_eq!(rep.invocations, 2, "bt={bt}: one resident launch per advance");
+        match bt {
+            1 => assert_eq!(rep.redundancy, Some(1.0), "no overlap work at bt=1"),
+            _ => assert!(
+                rep.redundancy.unwrap() > 1.0,
+                "bt={bt}: trapezoid overlap must be accounted"
+            ),
+        }
+    }
+}
+
+#[test]
+fn temporal_advance_until_stops_identically_at_every_thread_count() {
+    let (bt, tol, max) = (2usize, 1e-8, 20_000usize);
+    let mut reference: Option<(usize, u64)> = None;
+    for threads in [1usize, 3] {
+        let mut s = SessionBuilder::new()
+            .backend(Backend::cpu(threads))
+            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            .mode(ExecMode::Persistent)
+            .temporal(bt)
+            .seed(13)
+            .build()
+            .unwrap();
+        let steps = s.advance_until(tol, max).unwrap();
+        assert!(steps > 0 && steps < max && steps % bt == 0, "threads={threads}: {steps}");
+        let res = s.report().residual.unwrap();
+        assert!(res <= tol);
+        match &reference {
+            None => reference = Some((steps, res.to_bits())),
+            Some((want_steps, bits)) => {
+                assert_eq!(steps, *want_steps, "threads={threads}: stop epoch differs");
+                assert_eq!(res.to_bits(), *bits, "threads={threads}: residual bits");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // advance semantics and reports
 // ---------------------------------------------------------------------
 
