@@ -7,14 +7,16 @@
 //! `BENCH_stencil.json` (+ a `BENCH {...}` stdout line), so the stencil
 //! perf trajectory is tracked exactly like `fig7_cg`'s.
 //!
-//! Run: `cargo bench --bench cpu_perks`
+//! Run: `cargo bench --bench cpu_perks` (`-- --quick` for the CI smoke
+//! configuration, which still emits `BENCH_stencil.json` for the
+//! perf-regression gate).
 
 use perks::harness;
 use perks::stencil::{parallel, shape, Domain};
 use perks::util::fmt::{bytes, secs, Table};
 use perks::util::stats::{median, time_n};
 
-fn domain_sweep(threads: usize, steps: usize) {
+fn domain_sweep(threads: usize, steps: usize, quick: bool) {
     println!("CPU persistent-threads PERKS (threads={threads}, steps={steps}, median of 3)\n");
     let mut t = Table::new(&[
         "bench",
@@ -25,16 +27,20 @@ fn domain_sweep(threads: usize, steps: usize) {
         "traffic host-loop",
         "traffic persistent",
     ]);
-    let cases = [
-        ("2d5pt", vec![256usize, 256]),
-        ("2d5pt", vec![512, 512]),
-        ("2d5pt", vec![1024, 1024]),
-        ("2d9pt", vec![512, 512]),
-        ("2ds9pt", vec![512, 512]),
-        ("3d7pt", vec![64, 64, 64]),
-        ("3d27pt", vec![64, 64, 64]),
-        ("poisson", vec![64, 64, 64]),
-    ];
+    let cases: Vec<(&str, Vec<usize>)> = if quick {
+        vec![("2d5pt", vec![96usize, 96]), ("3d7pt", vec![16, 16, 16])]
+    } else {
+        vec![
+            ("2d5pt", vec![256usize, 256]),
+            ("2d5pt", vec![512, 512]),
+            ("2d5pt", vec![1024, 1024]),
+            ("2d9pt", vec![512, 512]),
+            ("2ds9pt", vec![512, 512]),
+            ("3d7pt", vec![64, 64, 64]),
+            ("3d27pt", vec![64, 64, 64]),
+            ("poisson", vec![64, 64, 64]),
+        ]
+    };
     for (bench, interior) in cases {
         let s = shape::spec(bench).unwrap();
         let mut d = Domain::for_spec(&s, &interior).unwrap();
@@ -62,8 +68,9 @@ fn domain_sweep(threads: usize, steps: usize) {
     println!("array; host-loop round-trips the whole domain every step.");
 }
 
-fn pooled_section(threads: usize) {
-    let (bench, interior, steps) = ("2d5pt", "512x512", 64usize);
+fn pooled_section(threads: usize, quick: bool) {
+    let (bench, interior, steps) =
+        if quick { ("2d5pt", "96x96", 8usize) } else { ("2d5pt", "512x512", 64usize) };
     println!(
         "\nSpawn-once stencil pool vs spawn-per-step host loop \
          ({bench} {interior}, {steps} steps, {threads} threads)\n"
@@ -110,7 +117,9 @@ fn pooled_section(threads: usize) {
 }
 
 fn main() {
-    let threads = 8;
-    domain_sweep(threads, 32);
-    pooled_section(threads);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let threads = if quick { 2 } else { 8 };
+    let steps = if quick { 8 } else { 32 };
+    domain_sweep(threads, steps, quick);
+    pooled_section(threads, quick);
 }

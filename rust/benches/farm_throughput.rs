@@ -1,0 +1,76 @@
+//! Multi-tenant serving throughput: one shared `SolverFarm` vs a fresh
+//! worker pool per session, swept over the concurrent-tenant count —
+//! the Table II concurrency argument (launch/teardown dominates small
+//! solves) applied to the serving path. Reports solves/sec, per-solve
+//! p50/p99 latency (farm latency includes queueing — the serving view),
+//! the farm's queue-wait percentiles and max/mean fairness ratio, and
+//! the zero-spawn admission invariant. Emits `BENCH_farm.json` (+ a
+//! `BENCH {...}` stdout line) for the CI perf-regression gate
+//! (`tools: bench_check`).
+//!
+//! Run: `cargo bench --bench farm_throughput` (`-- --quick` for the CI
+//! smoke configuration).
+
+use perks::harness;
+use perks::util::fmt::Table;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (bench, interior, steps, rounds, workers) =
+        if quick { ("2d5pt", "48x48", 8usize, 2usize, 4usize) } else { ("2d5pt", "64x64", 16, 3, 8) };
+    let tenant_sweep: &[usize] = if quick { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+
+    println!(
+        "Farm throughput: shared SolverFarm({workers} workers) vs pool-per-session \
+         ({bench} {interior}, {steps} steps/solve, {rounds} rounds)\n"
+    );
+    let mut t = Table::new(&[
+        "tenants",
+        "farm solves/s",
+        "solo solves/s",
+        "speedup",
+        "farm p50/p99 ms",
+        "solo p50/p99 ms",
+        "queue p50/p99 ms",
+        "fairness",
+        "admission spawns",
+    ]);
+    let mut rows = Vec::new();
+    for &tenants in tenant_sweep {
+        let row = harness::farm_vs_pool_per_session(bench, interior, steps, rounds, workers, tenants)
+            .unwrap();
+        // the multi-tenant acceptance bar, enforced at measurement time:
+        // admitting + advancing sessions must not create threads
+        assert_eq!(row.admission_spawns, 0, "farm admissions spawned threads");
+        t.row(&[
+            tenants.to_string(),
+            format!("{:.1}", row.farm_solves_per_sec),
+            format!("{:.1}", row.solo_solves_per_sec),
+            format!("{:.2}x", row.speedup),
+            format!("{:.2}/{:.2}", row.farm_p50_ms, row.farm_p99_ms),
+            format!("{:.2}/{:.2}", row.solo_p50_ms, row.solo_p99_ms),
+            format!("{:.3}/{:.3}", row.queue_p50_ms, row.queue_p99_ms),
+            format!("{:.2}", row.fairness),
+            row.admission_spawns.to_string(),
+        ]);
+        rows.push(row);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nsmall solves batch onto the farm's resident workers instead of paying a\n\
+         pool build/teardown per session; the win grows with the tenant count."
+    );
+
+    let json: Vec<String> = rows.iter().map(|r| r.json()).collect();
+    let payload = format!(
+        "{{\"bench\":\"farm\",\"case\":\"{bench}\",\"interior\":\"{interior}\",\
+         \"steps\":{steps},\"rounds\":{rounds},\"workers\":{workers},\
+         \"rows\":[{}]}}",
+        json.join(",")
+    );
+    println!("BENCH {payload}");
+    match std::fs::write("BENCH_farm.json", format!("{payload}\n")) {
+        Ok(()) => println!("wrote BENCH_farm.json"),
+        Err(e) => eprintln!("could not write BENCH_farm.json: {e}"),
+    }
+}

@@ -76,4 +76,30 @@ fn main() {
         ]);
     }
     print!("{}", ct.render());
+
+    // multi-tenant counterpart: many concurrent small sessions on one
+    // shared SolverFarm vs a fresh pool per session — the same
+    // launch/teardown-amortization argument at serving concurrency
+    // (admission spawns must read 0: sessions reuse the farm's workers)
+    println!("\nMulti-tenant farm sweep — 2d5pt 64x64, 16 steps/solve, 8 farm workers\n");
+    let mut ft = Table::new(&[
+        "tenants",
+        "farm solves/s",
+        "solo solves/s",
+        "speedup",
+        "queue p99 ms",
+        "admission spawns",
+    ]);
+    for tenants in [2usize, 8, 16] {
+        let row = harness::farm_vs_pool_per_session("2d5pt", "64x64", 16, 2, 8, tenants).unwrap();
+        ft.row(&[
+            tenants.to_string(),
+            format!("{:.1}", row.farm_solves_per_sec),
+            format!("{:.1}", row.solo_solves_per_sec),
+            format!("{:.2}x", row.speedup),
+            format!("{:.3}", row.queue_p99_ms),
+            row.admission_spawns.to_string(),
+        ]);
+    }
+    print!("{}", ft.render());
 }

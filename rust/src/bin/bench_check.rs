@@ -1,0 +1,331 @@
+//! `bench_check` — the CI perf-regression gate over `BENCH_*.json`
+//! artifacts (the `tools/bench_check` binary of the perf-smoke job).
+//!
+//! Reads the `BENCH_stencil.json` / `BENCH_temporal.json` /
+//! `BENCH_farm.json` files the quick-mode benches emit and fails (exit 1)
+//! on:
+//!
+//! * **counter-invariant breaks** — machine-independent, always checked:
+//!   any pooled/persistent arm with `advance_spawns > 0` (a resident
+//!   advance must never spawn), any pooled arm whose `barrier_syncs` is
+//!   not exactly `2 * ceil(steps / bt) + 1` (two per exchange epoch plus
+//!   the one-time initial-load sync), any farm row with
+//!   `admission_spawns > 0`, and any farm row at >= 16 tenants whose
+//!   farm-vs-pool-per-session speedup falls below the acceptance floor
+//!   (default 1.5, `--min-farm-speedup`);
+//! * **wall regressions** — current wall > baseline wall * (1 + tol)
+//!   (default tolerance 0.25, `--tolerance`), compared against the
+//!   checked-in `bench/baselines/*.json` entry with the *same workload
+//!   configuration*; entries whose configuration differs (e.g. a full
+//!   run checked against quick baselines) are skipped with a note.
+//!   `--no-wall` skips wall gates entirely (for cross-machine runs);
+//!   `--update` rewrites the baselines from the current artifacts after
+//!   the invariants pass — run it once on a new CI runner class and
+//!   commit the result.
+//!
+//! Usage:
+//!   bench_check [--dir .] [--baseline-dir ../bench/baselines]
+//!               [--tolerance 0.25] [--min-farm-speedup 1.5]
+//!               [--no-wall] [--update]
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use perks::util::json::Json;
+
+const FILES: [&str; 3] = ["BENCH_stencil.json", "BENCH_temporal.json", "BENCH_farm.json"];
+
+struct Config {
+    dir: PathBuf,
+    baseline_dir: PathBuf,
+    tolerance: f64,
+    min_farm_speedup: f64,
+    no_wall: bool,
+    update: bool,
+}
+
+fn parse_args() -> Result<Config, String> {
+    let mut cfg = Config {
+        dir: PathBuf::from("."),
+        baseline_dir: PathBuf::from("../bench/baselines"),
+        tolerance: 0.25,
+        min_farm_speedup: 1.5,
+        no_wall: false,
+        update: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(tok) = it.next() {
+        let mut take = |name: &str| {
+            it.next().ok_or_else(|| format!("{name} requires a value"))
+        };
+        match tok.as_str() {
+            "--dir" => cfg.dir = PathBuf::from(take("--dir")?),
+            "--baseline-dir" => cfg.baseline_dir = PathBuf::from(take("--baseline-dir")?),
+            "--tolerance" => {
+                cfg.tolerance = take("--tolerance")?
+                    .parse()
+                    .map_err(|_| "--tolerance must be a number".to_string())?
+            }
+            "--min-farm-speedup" => {
+                cfg.min_farm_speedup = take("--min-farm-speedup")?
+                    .parse()
+                    .map_err(|_| "--min-farm-speedup must be a number".to_string())?
+            }
+            "--no-wall" => cfg.no_wall = true,
+            "--update" => cfg.update = true,
+            other => return Err(format!("unknown flag {other:?} (see --help in module docs)")),
+        }
+    }
+    Ok(cfg)
+}
+
+fn load(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn num(v: &Json, key: &str) -> Option<f64> {
+    v.get(key).and_then(Json::as_f64)
+}
+
+fn int(v: &Json, key: &str) -> Option<u64> {
+    v.get(key).and_then(Json::as_u64)
+}
+
+fn s<'a>(v: &'a Json, key: &str) -> &'a str {
+    v.get(key).and_then(Json::as_str).unwrap_or("")
+}
+
+/// Exact barrier accounting of a pooled arm's *first* advance after
+/// prepare: `2 * ceil(steps / bt)` epoch pairs plus the initial-load sync.
+fn expected_barriers(steps: u64, bt: u64) -> u64 {
+    2 * steps.div_ceil(bt.max(1)) + 1
+}
+
+/// Invariants of one `modes` array (shared by the stencil and temporal
+/// schemas): pooled arms never spawn and sync exactly per the epoch
+/// formula; the host-loop baseline must actually respawn.
+fn check_modes(label: &str, steps: u64, modes: &[Json], fails: &mut Vec<String>) {
+    for m in modes {
+        let mode = s(m, "mode");
+        let bt = int(m, "bt").unwrap_or(1);
+        let spawns = int(m, "advance_spawns");
+        let syncs = int(m, "barrier_syncs");
+        match mode {
+            "persistent" => {
+                if spawns != Some(0) {
+                    fails.push(format!(
+                        "{label}: pooled bt={bt} arm spawned {spawns:?} threads per advance (must be 0)"
+                    ));
+                }
+                let want = expected_barriers(steps, bt);
+                if syncs != Some(want) {
+                    fails.push(format!(
+                        "{label}: pooled bt={bt} arm performed {syncs:?} barrier syncs, expected {want} (= 2*ceil({steps}/{bt})+1)"
+                    ));
+                }
+            }
+            "host-loop" => {
+                if spawns == Some(0) {
+                    fails.push(format!(
+                        "{label}: host-loop baseline reported 0 advance spawns — measurement is broken"
+                    ));
+                }
+            }
+            other => fails.push(format!("{label}: unknown mode {other:?}")),
+        }
+    }
+}
+
+/// Configuration fingerprint of a BENCH file — wall comparisons only make
+/// sense between runs of the same workload shape.
+fn config_key(doc: &Json) -> String {
+    let mut parts = Vec::new();
+    for key in ["bench", "case", "interior"] {
+        parts.push(s(doc, key).to_string());
+    }
+    for key in ["steps", "threads", "rounds", "workers"] {
+        parts.push(int(doc, key).map(|v| v.to_string()).unwrap_or_default());
+    }
+    parts.join("/")
+}
+
+/// Flatten a BENCH document into (entry-label, wall-seconds) gate points.
+fn wall_entries(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(modes) = doc.get("modes").and_then(Json::as_array) {
+        for m in modes {
+            if let Some(w) = num(m, "wall_seconds") {
+                out.push((format!("{}/bt{}", s(m, "mode"), int(m, "bt").unwrap_or(1)), w));
+            }
+        }
+    }
+    if let Some(cases) = doc.get("cases").and_then(Json::as_array) {
+        for c in cases {
+            let label = format!("{}:{}", s(c, "case"), s(c, "interior"));
+            if let Some(modes) = c.get("modes").and_then(Json::as_array) {
+                for m in modes {
+                    if let Some(w) = num(m, "wall_seconds") {
+                        out.push((
+                            format!("{label}/{}/bt{}", s(m, "mode"), int(m, "bt").unwrap_or(1)),
+                            w,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    if let Some(rows) = doc.get("rows").and_then(Json::as_array) {
+        for r in rows {
+            if let (Some(t), Some(w)) = (int(r, "tenants"), num(r, "farm_wall_seconds")) {
+                out.push((format!("tenants{t}/farm"), w));
+            }
+        }
+    }
+    out
+}
+
+fn check_file(cfg: &Config, name: &str, fails: &mut Vec<String>) {
+    let path = cfg.dir.join(name);
+    let doc = match load(&path) {
+        Ok(d) => d,
+        Err(e) => {
+            fails.push(format!("{name}: missing or unreadable ({e}) — did the bench run?"));
+            return;
+        }
+    };
+
+    // ---- counter invariants (always) ----
+    match s(&doc, "bench") {
+        "stencil" => {
+            let steps = int(&doc, "steps").unwrap_or(0);
+            if let Some(modes) = doc.get("modes").and_then(Json::as_array) {
+                check_modes(name, steps, modes, fails);
+            } else {
+                fails.push(format!("{name}: no modes array"));
+            }
+        }
+        "temporal" => {
+            let steps = int(&doc, "steps").unwrap_or(0);
+            match doc.get("cases").and_then(Json::as_array) {
+                Some(cases) => {
+                    for c in cases {
+                        let label = format!("{name}:{}", s(c, "case"));
+                        match c.get("modes").and_then(Json::as_array) {
+                            Some(modes) => check_modes(&label, steps, modes, fails),
+                            None => fails.push(format!("{label}: no modes array")),
+                        }
+                    }
+                }
+                None => fails.push(format!("{name}: no cases array")),
+            }
+        }
+        "farm" => match doc.get("rows").and_then(Json::as_array) {
+            Some(rows) => {
+                for r in rows {
+                    let tenants = int(r, "tenants").unwrap_or(0);
+                    if int(r, "admission_spawns") != Some(0) {
+                        fails.push(format!(
+                            "{name}: tenants={tenants} row spawned threads at admission (must be 0)"
+                        ));
+                    }
+                    let speedup = num(r, "speedup").unwrap_or(0.0);
+                    if tenants >= 16 && speedup < cfg.min_farm_speedup {
+                        fails.push(format!(
+                            "{name}: tenants={tenants} farm speedup {speedup:.2}x below the {:.2}x floor",
+                            cfg.min_farm_speedup
+                        ));
+                    }
+                }
+            }
+            None => fails.push(format!("{name}: no rows array")),
+        },
+        other => fails.push(format!("{name}: unknown bench kind {other:?}")),
+    }
+
+    // ---- wall-regression gate vs the checked-in baseline ----
+    if cfg.no_wall || cfg.update {
+        return;
+    }
+    let base_path = cfg.baseline_dir.join(name);
+    let base = match load(&base_path) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("note: {name}: no baseline ({e}); wall gate skipped");
+            return;
+        }
+    };
+    if config_key(&doc) != config_key(&base) {
+        println!(
+            "note: {name}: workload config differs from baseline ({} vs {}); wall gate skipped",
+            config_key(&doc),
+            config_key(&base)
+        );
+        return;
+    }
+    let current = wall_entries(&doc);
+    let baseline = wall_entries(&base);
+    for (label, wall) in &current {
+        let Some((_, base_wall)) = baseline.iter().find(|(l, _)| l == label) else {
+            println!("note: {name}: baseline has no entry {label}; skipped");
+            continue;
+        };
+        let limit = base_wall * (1.0 + cfg.tolerance);
+        if *wall > limit {
+            fails.push(format!(
+                "{name}: {label} wall {wall:.6}s exceeds baseline {base_wall:.6}s by more than {:.0}%",
+                cfg.tolerance * 100.0
+            ));
+        }
+    }
+}
+
+fn update_baselines(cfg: &Config) -> Result<(), String> {
+    std::fs::create_dir_all(&cfg.baseline_dir)
+        .map_err(|e| format!("create {}: {e}", cfg.baseline_dir.display()))?;
+    for name in FILES {
+        let from = cfg.dir.join(name);
+        let to = cfg.baseline_dir.join(name);
+        std::fs::copy(&from, &to)
+            .map_err(|e| format!("copy {} -> {}: {e}", from.display(), to.display()))?;
+        println!("recorded {}", to.display());
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let cfg = match parse_args() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut fails = Vec::new();
+    for name in FILES {
+        check_file(&cfg, name, &mut fails);
+    }
+    if fails.is_empty() && cfg.update {
+        if let Err(e) = update_baselines(&cfg) {
+            eprintln!("bench_check: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    if fails.is_empty() {
+        println!(
+            "bench_check: OK ({} files, tolerance {:.0}%, farm floor {:.2}x{})",
+            FILES.len(),
+            cfg.tolerance * 100.0,
+            cfg.min_farm_speedup,
+            if cfg.no_wall { ", wall gate off" } else { "" }
+        );
+        ExitCode::SUCCESS
+    } else {
+        for f in &fails {
+            eprintln!("FAIL: {f}");
+        }
+        eprintln!("bench_check: {} failure(s)", fails.len());
+        ExitCode::FAILURE
+    }
+}

@@ -86,8 +86,10 @@ use crate::util::counters;
 /// reads through [`SharedBuf::whole`] only in phases where no thread
 /// writes, and barriers order every cross-owner handoff. Raw pointers
 /// carry no aliasing contract, so the disjoint-write protocol is sound
-/// without overlapping `&mut` views.
-struct SharedBuf<T> {
+/// without overlapping `&mut` views. Crate-visible because
+/// `runtime::farm`'s CG tenants phase their vectors with the same
+/// discipline (claim/complete handoffs standing in for barriers).
+pub(crate) struct SharedBuf<T> {
     /// Owns the allocation (dropped with the pool); never accessed as a
     /// `Vec` again after construction.
     _storage: UnsafeCell<Vec<T>>,
@@ -100,32 +102,35 @@ unsafe impl<T: Send> Sync for SharedBuf<T> {}
 unsafe impl<T: Send> Send for SharedBuf<T> {}
 
 impl<T> SharedBuf<T> {
-    fn new(mut v: Vec<T>) -> Self {
+    pub(crate) fn new(mut v: Vec<T>) -> Self {
         let ptr = v.as_mut_ptr();
         let len = v.len();
         Self { _storage: UnsafeCell::new(v), ptr, len }
     }
 
     /// SAFETY: no concurrent writer may overlap the read (phase protocol).
-    unsafe fn whole(&self) -> &[T] {
+    pub(crate) unsafe fn whole(&self) -> &[T] {
         std::slice::from_raw_parts(self.ptr, self.len)
     }
 
     /// Base pointer for concurrent disjoint-index writes (workers never
     /// form `&mut` views — all shared-phase writes go through this).
-    fn ptr(&self) -> *mut T {
+    pub(crate) fn ptr(&self) -> *mut T {
         self.ptr
     }
 
     /// SAFETY: caller must be the only thread touching the buffer (the
     /// main thread between runs); used for the state copy in/out.
     #[allow(clippy::mut_from_ref)]
-    unsafe fn whole_mut(&self) -> &mut [T] {
+    pub(crate) unsafe fn whole_mut(&self) -> &mut [T] {
         std::slice::from_raw_parts_mut(self.ptr, self.len)
     }
 }
 
 /// Command issued to the parked workers; epoch-stamped in `CtlState`.
+/// Teardown is the dedicated `CtlState::shutdown` flag, checked on every
+/// condvar wake — never a value raced through the command slot — so a
+/// worker parked while the epoch stamp advances can never miss it.
 #[derive(Clone, Copy)]
 enum Cmd {
     Idle,
@@ -133,7 +138,6 @@ enum Cmd {
     /// early once `rr <= threshold` (or `rr <= 0`, the exact-solution
     /// short-circuit of the serial path).
     Run { iters: usize, rr: f64, threshold: f64 },
-    Shutdown,
 }
 
 /// What one `Run` produced. Every worker computes identical values; worker
@@ -150,6 +154,8 @@ struct CtlState {
     cmd: Cmd,
     finished: usize,
     outcome: Outcome,
+    /// Teardown flag, separate from the command slot (see [`Cmd`]).
+    shutdown: bool,
 }
 
 struct Control {
@@ -262,6 +268,7 @@ impl CgPool {
                     cmd: Cmd::Idle,
                     finished: 0,
                     outcome: Outcome::default(),
+                    shutdown: false,
                 }),
                 cmd_cv: Condvar::new(),
                 done_cv: Condvar::new(),
@@ -281,11 +288,10 @@ impl CgPool {
                     // parked on cmd_cv and would otherwise pin their
                     // Arc<Shared> (and the matrix) forever. The barrier is
                     // not armed yet — no worker enters `iterate` without a
-                    // Run command — so a shutdown epoch is safe here.
+                    // Run command — so teardown is safe here.
                     {
                         let mut g = shared.ctl.lock();
-                        g.epoch += 1;
-                        g.cmd = Cmd::Shutdown;
+                        g.shutdown = true;
                         shared.ctl.cmd_cv.notify_all();
                     }
                     for h in handles {
@@ -378,8 +384,7 @@ impl Drop for CgPool {
     fn drop(&mut self) {
         {
             let mut g = self.shared.ctl.lock();
-            g.epoch += 1;
-            g.cmd = Cmd::Shutdown;
+            g.shutdown = true;
             self.shared.ctl.cmd_cv.notify_all();
         }
         for h in self.handles.drain(..) {
@@ -397,7 +402,16 @@ fn worker_main(sh: &Shared, w: usize) {
     loop {
         let cmd = {
             let mut g = sh.ctl.lock();
-            while g.epoch == seen {
+            loop {
+                // the shutdown flag is checked on *every* wake — before
+                // and independently of the epoch stamp — so teardown can
+                // never be missed by a worker parked across stamp changes
+                if g.shutdown {
+                    return;
+                }
+                if g.epoch != seen {
+                    break;
+                }
                 g = sh.ctl.cmd_cv.wait(g).unwrap_or_else(|p| p.into_inner());
             }
             seen = g.epoch;
@@ -405,7 +419,6 @@ fn worker_main(sh: &Shared, w: usize) {
         };
         match cmd {
             Cmd::Idle => {}
-            Cmd::Shutdown => break,
             Cmd::Run { iters, rr, threshold } => {
                 // A panic inside the iteration loop would otherwise leave
                 // `finished` forever short and hang `run()`. Catching it
@@ -713,5 +726,27 @@ mod tests {
         drop(pool);
         // every worker held an Arc clone; all joined => all released
         assert_eq!(weak.strong_count(), 0, "workers not joined on drop");
+    }
+
+    /// Satellite: the teardown race — rapid create/drop cycles with and
+    /// without runs must always join promptly (the shutdown flag is
+    /// checked on every wake, independent of the epoch stamp).
+    #[test]
+    fn rapid_create_drop_cycles_never_hang() {
+        let a = Arc::new(gen::poisson2d(6));
+        let b = gen::rhs(a.n_rows, 2);
+        for cycle in 0..64usize {
+            let plan = MergePlan::new(&a, 4);
+            let mut pool = CgPool::spawn(a.clone(), plan, 1 + cycle % 4).unwrap();
+            let weak = pool.shared_weak();
+            if cycle % 2 == 1 {
+                let n = a.n_rows;
+                let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+                let rr: f64 = b.iter().map(|v| v * v).sum();
+                pool.run(&mut x, &mut r, &mut p, rr, 0.0, 2).unwrap();
+            }
+            drop(pool);
+            assert_eq!(weak.strong_count(), 0, "cycle {cycle}: workers not joined");
+        }
     }
 }

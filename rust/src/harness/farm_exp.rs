@@ -1,0 +1,231 @@
+//! Farm experiment builders: measure the multi-tenant
+//! [`crate::runtime::farm::SolverFarm`] against the pool-per-session
+//! baseline — the Table II concurrency argument at serving scale. One
+//! shared protocol for `farm_throughput` and `table2_concurrency`, so
+//! their numbers (and the `BENCH_farm.json` schema) cannot drift.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::farm::SolverFarm;
+use crate::stencil::pool::StencilPool;
+use crate::stencil::{self, Domain};
+use crate::util::counters;
+use crate::util::stats::{finite_rate, percentile};
+
+/// One tenant-count row of the farm-vs-pool-per-session sweep.
+///
+/// *Throughput* is solves/second over the whole arm (a solve = one
+/// `advance(steps)` command); *latency* is per-solve submit→complete wall
+/// (for the farm arm this includes queueing — the p99 under load is the
+/// serving metric); *queue* is the farm's enqueue→first-dispatch wait;
+/// *fairness* is the farm's max/mean queue-wait ratio.
+#[derive(Clone, Debug)]
+pub struct FarmSweepRow {
+    pub tenants: usize,
+    /// Total solves per arm (`tenants * rounds`).
+    pub solves: usize,
+    pub farm_wall: f64,
+    pub solo_wall: f64,
+    pub farm_solves_per_sec: f64,
+    pub solo_solves_per_sec: f64,
+    /// `solo_wall / farm_wall` (> 1 means the shared farm wins).
+    pub speedup: f64,
+    pub farm_p50_ms: f64,
+    pub farm_p99_ms: f64,
+    pub solo_p50_ms: f64,
+    pub solo_p99_ms: f64,
+    pub queue_p50_ms: f64,
+    pub queue_p99_ms: f64,
+    pub fairness: f64,
+    /// OS threads spawned during admissions + advances of the farm arm —
+    /// **0** is the multi-tenant acceptance bar (exact in single-threaded
+    /// bench mains; the per-farm `spawn_count` is the test-safe mirror).
+    pub admission_spawns: u64,
+}
+
+impl FarmSweepRow {
+    /// Stable BENCH-json fragment shared by every bench that reports this
+    /// measurement (the farm counterpart of `MeasuredStencilMode::json`).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"tenants\":{},\"solves\":{},\"farm_wall_seconds\":{:.6},\
+             \"solo_wall_seconds\":{:.6},\"farm_solves_per_sec\":{:.3},\
+             \"solo_solves_per_sec\":{:.3},\"speedup\":{:.4},\
+             \"farm_p50_ms\":{:.4},\"farm_p99_ms\":{:.4},\
+             \"solo_p50_ms\":{:.4},\"solo_p99_ms\":{:.4},\
+             \"queue_p50_ms\":{:.4},\"queue_p99_ms\":{:.4},\
+             \"fairness\":{:.3},\"admission_spawns\":{}}}",
+            self.tenants,
+            self.solves,
+            self.farm_wall,
+            self.solo_wall,
+            self.farm_solves_per_sec,
+            self.solo_solves_per_sec,
+            self.speedup,
+            self.farm_p50_ms,
+            self.farm_p99_ms,
+            self.solo_p50_ms,
+            self.solo_p99_ms,
+            self.queue_p50_ms,
+            self.queue_p99_ms,
+            self.fairness,
+            self.admission_spawns
+        )
+    }
+}
+
+/// Measure `tenants` concurrent small stencil sessions on one shared
+/// farm of `workers` resident threads against the pool-per-session
+/// baseline (each session builds — and tears down — its own
+/// `StencilPool` of the same `workers` threads, the per-session
+/// launch/teardown cost the farm amortizes away).
+///
+/// The farm arm enqueues every session's `advance(steps)` before waiting
+/// on any (true concurrent multi-tenant load through the submission
+/// queue); the baseline serializes sessions the way independent solo
+/// pools on one machine would. Both arms advance identical seeded
+/// domains for `rounds` commands, and the first tenant's final state is
+/// verified bit-identical across arms before any number is reported.
+pub fn farm_vs_pool_per_session(
+    bench: &str,
+    interior: &str,
+    steps: usize,
+    rounds: usize,
+    workers: usize,
+    tenants: usize,
+) -> Result<FarmSweepRow> {
+    let spec = stencil::spec(bench)
+        .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+    let dims = crate::session::parse_interior(interior)?;
+    if tenants == 0 || rounds == 0 {
+        return Err(Error::invalid("tenants and rounds must be > 0"));
+    }
+    let doms: Vec<Domain> = (0..tenants)
+        .map(|t| {
+            let mut d = Domain::for_spec(&spec, &dims)?;
+            d.randomize(100 + t as u64);
+            Ok(d)
+        })
+        .collect::<Result<_>>()?;
+
+    // ---- farm arm: one resident worker set, all sessions admitted ----
+    let farm = SolverFarm::spawn(workers)?;
+    let spawns0 = counters::thread_spawns();
+    let handle = farm.handle();
+    let mut sessions = Vec::with_capacity(tenants);
+    for d in &doms {
+        sessions.push(handle.admit_stencil(&spec, d, workers, 1)?);
+    }
+    let mut farm_lat = Vec::with_capacity(tenants * rounds);
+    let t_farm = Instant::now();
+    for _ in 0..rounds {
+        // enqueue everything, then wait: concurrent tenants in flight
+        let mut starts = Vec::with_capacity(tenants);
+        for s in sessions.iter_mut() {
+            starts.push(Instant::now());
+            s.submit(steps, None)?;
+        }
+        for (s, t0) in sessions.iter_mut().zip(&starts) {
+            s.wait()?;
+            farm_lat.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let farm_wall = t_farm.elapsed().as_secs_f64();
+    let admission_spawns = counters::thread_spawns() - spawns0;
+    let farm_state0 = sessions[0].state()?;
+    let metrics = farm.metrics();
+    drop(sessions);
+    drop(farm);
+
+    // ---- baseline: a fresh pool per session, sessions serialized ----
+    let mut solo_lat = Vec::with_capacity(tenants * rounds);
+    let mut solo_state0 = Vec::new();
+    let t_solo = Instant::now();
+    for (i, d) in doms.iter().enumerate() {
+        let mut pool = StencilPool::spawn(&spec, d, workers)?;
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            pool.run(steps, None)?;
+            solo_lat.push(t0.elapsed().as_secs_f64());
+        }
+        if i == 0 {
+            solo_state0 = pool.state();
+        }
+        // teardown inside the timed region: it is part of the
+        // pool-per-session cost the farm amortizes
+        drop(pool);
+    }
+    let solo_wall = t_solo.elapsed().as_secs_f64();
+
+    if farm_state0 != solo_state0 {
+        return Err(Error::Solver(
+            "farm tenant diverged from its solo-pool run (bit-identity broken)".into(),
+        ));
+    }
+
+    let solves = tenants * rounds;
+    Ok(FarmSweepRow {
+        tenants,
+        solves,
+        farm_wall,
+        solo_wall,
+        farm_solves_per_sec: finite_rate(solves as f64, farm_wall),
+        solo_solves_per_sec: finite_rate(solves as f64, solo_wall),
+        speedup: solo_wall / farm_wall.max(crate::util::stats::MIN_WALL_SECONDS),
+        farm_p50_ms: percentile(&farm_lat, 50.0) * 1e3,
+        farm_p99_ms: percentile(&farm_lat, 99.0) * 1e3,
+        solo_p50_ms: percentile(&solo_lat, 50.0) * 1e3,
+        solo_p99_ms: percentile(&solo_lat, 99.0) * 1e3,
+        queue_p50_ms: metrics.queue_wait_p50 * 1e3,
+        queue_p99_ms: metrics.queue_wait_p99 * 1e3,
+        fairness: metrics.fairness(),
+        admission_spawns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_row_measures_and_serializes() {
+        let row = farm_vs_pool_per_session("2d5pt", "12x12", 2, 1, 2, 2).unwrap();
+        assert_eq!(row.tenants, 2);
+        assert_eq!(row.solves, 2);
+        assert!(row.farm_wall > 0.0 && row.solo_wall > 0.0);
+        assert!(row.farm_solves_per_sec > 0.0 && row.speedup > 0.0);
+        assert!(row.farm_p99_ms >= row.farm_p50_ms);
+        assert!(row.fairness >= 1.0);
+        // NB: admission_spawns reads the process-global spawn counter,
+        // exact only in single-threaded bench mains — not asserted here.
+        let j = row.json();
+        for key in [
+            "\"tenants\"",
+            "\"solves\"",
+            "\"farm_wall_seconds\"",
+            "\"solo_wall_seconds\"",
+            "\"farm_solves_per_sec\"",
+            "\"solo_solves_per_sec\"",
+            "\"speedup\"",
+            "\"farm_p50_ms\"",
+            "\"farm_p99_ms\"",
+            "\"solo_p50_ms\"",
+            "\"solo_p99_ms\"",
+            "\"queue_p50_ms\"",
+            "\"queue_p99_ms\"",
+            "\"fairness\"",
+            "\"admission_spawns\"",
+        ] {
+            assert!(j.contains(key), "{j}");
+        }
+    }
+
+    #[test]
+    fn sweep_rejects_bad_configs() {
+        assert!(farm_vs_pool_per_session("17d99pt", "8x8", 1, 1, 1, 1).is_err());
+        assert!(farm_vs_pool_per_session("2d5pt", "8xbad", 1, 1, 1, 1).is_err());
+        assert!(farm_vs_pool_per_session("2d5pt", "8x8", 1, 0, 1, 1).is_err());
+        assert!(farm_vs_pool_per_session("2d5pt", "8x8", 1, 1, 1, 0).is_err());
+    }
+}

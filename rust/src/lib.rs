@@ -45,6 +45,23 @@
 //!   (Eqs 5-13) on the Table I device catalog, regenerating the paper's
 //!   figures at A100/V100 scale.
 //!
+//! ## Serving at scale: [`runtime::farm`]
+//!
+//! The same launch/teardown-amortization argument that puts the time
+//! loop inside a persistent kernel says a service handling millions of
+//! small solves must not build a worker pool per session. The
+//! multi-tenant [`runtime::farm::SolverFarm`] spawns one resident worker
+//! set per *farm* and admits many concurrent sessions — mixed 2D/3D
+//! stencils at any temporal degree, and CG — onto it:
+//! `SessionBuilder::farm(&farm)` routes an ordinary session through the
+//! farm's submission queue (band-sharded within a session, round-robin
+//! with an age-based fairness bound across sessions), with per-session
+//! state resident between epochs, zero thread spawns per admission, and
+//! iterates bit-identical to the solo-pool session at every farm worker
+//! count. `benches/farm_throughput.rs` measures the farm against
+//! pool-per-session and feeds the CI perf-regression gate
+//! (`bin/bench_check` vs `bench/baselines/`).
+//!
 //! ## Layers
 //!
 //! * **L1** (`python/compile/kernels/`): Pallas stencil + fused CG kernels,

@@ -1,0 +1,1914 @@
+//! Multi-tenant `SolverFarm`: one spawn-once worker pool serving many
+//! concurrent solver sessions.
+//!
+//! # Why a farm
+//!
+//! PERKS keeps the time loop resident in a persistent kernel because
+//! launch/teardown dominates small iterative workloads (PAPER.md §3 and
+//! the Table II concurrency study). [`crate::stencil::pool::StencilPool`]
+//! and [`crate::cg::pool::CgPool`] apply that argument *within* one
+//! solve: workers spawn once per solve and park between `advance` calls.
+//! A serving deployment handling millions of small solves, however, still
+//! pays a full pool build/teardown **per session** — exactly the
+//! amortization boundary the kernel-batching literature (Ekelund et al.,
+//! *Kernel Batching with CUDA Graphs*) pushes launches across. The farm
+//! moves the boundary once more: OS threads are spawned once per *farm*,
+//! and every admitted session — mixed 2D/3D stencils at any temporal
+//! degree `bt`, and CG — runs on the same fixed set of resident workers.
+//! Admitting a session and advancing it spawn **zero** threads
+//! (counter-asserted by [`SolverFarm::spawn_count`]).
+//!
+//! # Execution model
+//!
+//! Sessions enqueue `advance` / `advance_until` commands into the farm's
+//! submission queue ([`FarmStencil::submit`] / [`FarmCg::submit`]; the
+//! blocking `advance`/`run` wrappers are submit + wait). A command is
+//! executed as a sequence of *phases*, each fanned out as one task per
+//! shard:
+//!
+//! * stencil sessions shard by **band** (the same banded `ThreadPlan`
+//!   partition the solo pool uses): `load` (first command only) →
+//!   per epoch `compute` (advance `bt` sub-steps on the resident slab,
+//!   publish residual partials, store the `bt*radius`-deep boundary
+//!   union) then `halo` (reload neighbor halos) → `final` (store whole
+//!   bands so the client can observe state);
+//! * CG sessions shard by **reduction block**: `spmv` (merge-share
+//!   consumption) → `fixup` (carry fixup + partial `p·Ap`) → `xr`
+//!   (x/r update + partial `r·r`) → `p` (direction update), one
+//!   iteration per cycle.
+//!
+//! Instead of the solo pools' grid barriers, phase boundaries are
+//! **countdowns**: the worker that completes a phase's last shard runs
+//! the (cheap, scalar) transition under the scheduler lock — folding
+//! residual/dot slots in slot-index order, deciding convergence, and
+//! enqueueing the next phase. No worker ever blocks inside a session, so
+//! a fixed worker set can serve any number of tenants without deadlock,
+//! and a straggling session never strands a worker the way a torn barrier
+//! would.
+//!
+//! # Scheduling and fairness
+//!
+//! The ready queue holds sessions with claimable shards. A worker claims
+//! one shard from the front session; if the session still has unclaimed
+//! shards it is rotated to the back (round-robin — concurrent small
+//! solves interleave across the workers instead of serializing), unless
+//! its current phase has waited more than [`FAIRNESS_BOUND`] scheduler
+//! claims, in which case it keeps the head until fully dispatched (the
+//! age bound: no ready session can be starved by a stream of newer
+//! arrivals). Queue latency — command enqueue to first shard dispatch —
+//! is sampled per command and surfaced through [`FarmMetrics`]
+//! (p50/p99/max and the max/mean *fairness ratio*).
+//!
+//! # Residency and determinism
+//!
+//! Per-session state stays resident in the farm between that session's
+//! epochs and commands: stencil slab pairs (and the shared grid), CG
+//! vectors, plans, and linearized stencil offsets all live in the
+//! admitted tenant, so a resumed `advance` pays no reload. Numerics are
+//! **bit-identical to the solo pools** (and therefore to `gold::run` and
+//! the serial CG path) at every worker count: cell updates use the same
+//! `temporal::advance_slab` trapezoid core, CG uses the same per-share
+//! consumption / share-order carry fixup / block-partial arithmetic, and
+//! every reduction folds fixed slots in slot-index order — the farm's
+//! worker count, scheduling order, and tenant mix are all invisible to
+//! the bits.
+//!
+//! # Safety protocol
+//!
+//! Tenant numeric state lives in `UnsafeCell`-based shared buffers
+//! (`SharedGrid`, `SharedBuf`, per-band slab cells). Exclusive access is
+//! phased: a shard is claimed by exactly one worker per phase instance
+//! (the claim/complete handshake through the scheduler mutex establishes
+//! happens-before between successive owners), concurrent shards write
+//! disjoint ranges (band-owned planes, block-owned rows — the same
+//! ownership discipline as the solo pools), and the client touches a
+//! tenant's buffers only while it has no command in flight (the
+//! submit/wait handshake). Reduction slots are atomics written with
+//! release stores before the countdown and folded after it.
+//!
+//! # Teardown
+//!
+//! Shutdown is a dedicated flag checked on every condvar wake — never a
+//! value raced through the command slot — so `drop` joins promptly even
+//! against workers parked mid-stream or tasks still in flight, and a
+//! client blocked in `wait` on a farm that shuts down gets an error, not
+//! a hang. Rapid create/drop cycles are exercised by the tests.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::cg::pool::SharedBuf;
+use crate::error::{Error, Result};
+use crate::sparse::csr::Csr;
+use crate::spmv::merge::{self, MergePlan};
+use crate::stencil::grid::Domain;
+use crate::stencil::parallel::{
+    bands_for, boundary_union_planes, plans, slab_delta_partials, SharedGrid, ThreadPlan,
+};
+use crate::stencil::shape::StencilSpec;
+use crate::stencil::temporal;
+use crate::util::counters;
+use crate::util::stats::percentile;
+
+/// Age bound of the round-robin scheduler, in claim ticks: a ready
+/// session whose current phase has waited longer than this keeps the
+/// queue head until fully dispatched instead of rotating to the back.
+pub const FAIRNESS_BOUND: u64 = 256;
+
+/// Size of the rolling queue-latency sample window. Once full, new
+/// samples overwrite the oldest (so percentiles track *recent* traffic
+/// on long-lived farms instead of freezing on warm-up history); the
+/// all-time maximum is tracked separately and never ages out.
+const QUEUE_SAMPLE_CAP: usize = 1 << 16;
+
+// ---------------------------------------------------------------------
+// Engines: the numeric state of one admitted tenant
+// ---------------------------------------------------------------------
+
+/// Stencil phases.
+const P_LOAD: u8 = 0;
+const P_COMPUTE: u8 = 1;
+const P_HALO: u8 = 2;
+const P_FINAL: u8 = 3;
+/// CG phases.
+const P_SPMV: u8 = 0;
+const P_FIXUP: u8 = 1;
+const P_XR: u8 = 2;
+const P_PUP: u8 = 3;
+
+/// Resident slab pair of one stencil band (the worker-local state of the
+/// solo pool, hoisted into the tenant so any worker can run the band).
+struct Slab {
+    cur: Vec<f64>,
+    nxt: Vec<f64>,
+}
+
+/// One band's slab, claimed by exactly one worker per phase instance.
+struct SlabCell(std::cell::UnsafeCell<Slab>);
+
+// SAFETY: access is serialized by the claim/complete handshake through
+// the scheduler mutex — one owner per phase instance, handoff ordered.
+unsafe impl Sync for SlabCell {}
+unsafe impl Send for SlabCell {}
+
+/// What one shard task produced (accumulated into the tenant under the
+/// scheduler lock at completion).
+#[derive(Clone, Copy, Default)]
+struct ShardOut {
+    moved: u64,
+    computed: u64,
+}
+
+struct StencilEngine {
+    spec: StencilSpec,
+    /// Geometry template; `data` empty — the numbers live in `grid`.
+    meta: Domain,
+    axis: usize,
+    plane: usize,
+    first: usize,
+    interior_planes: usize,
+    bt: usize,
+    plans: Vec<ThreadPlan>,
+    weights: Vec<f64>,
+    deltas: Vec<isize>,
+    grid: SharedGrid,
+    slabs: Vec<SlabCell>,
+    /// Residual-reduction slots: one per interior plane of the banded
+    /// axis, folded in slot order — the same thread-count-invariant norm
+    /// as the solo pool's barrier slots.
+    slots: Vec<AtomicU64>,
+}
+
+impl StencilEngine {
+    fn new(spec: &StencilSpec, x0: &Domain, shards: usize, bt: usize) -> Result<Self> {
+        if shards == 0 {
+            return Err(Error::invalid("farm stencil shards must be > 0"));
+        }
+        if bt == 0 {
+            return Err(Error::invalid("temporal blocking degree bt must be >= 1"));
+        }
+        let geometry = bands_for(x0, spec, shards)?;
+        let r = spec.radius;
+        let plane = geometry.plane;
+        let total_planes = x0.data.len() / plane;
+        let plans = plans(&geometry, bt * r, total_planes, plane);
+        let interior_planes = if geometry.axis == 0 { x0.interior[0] } else { x0.interior[1] };
+        let mut meta = x0.clone();
+        meta.data = Vec::new();
+        let slabs = plans
+            .iter()
+            .map(|p| {
+                SlabCell(std::cell::UnsafeCell::new(Slab {
+                    cur: vec![0.0; p.slab.len()],
+                    nxt: vec![0.0; p.slab.len()],
+                }))
+            })
+            .collect();
+        let deltas = crate::stencil::gold::linear_deltas(spec, meta.padded[1], meta.padded[2]);
+        Ok(Self {
+            spec: spec.clone(),
+            meta,
+            axis: geometry.axis,
+            plane,
+            first: geometry.first,
+            interior_planes,
+            bt,
+            weights: spec.weights(),
+            deltas,
+            grid: SharedGrid::new(x0.data.clone()),
+            slabs,
+            slots: (0..interior_planes).map(|_| AtomicU64::new(0)).collect(),
+            plans,
+        })
+    }
+
+    /// SAFETY: shard `i` claimed by exactly one worker this phase.
+    unsafe fn load_shard(&self, i: usize) -> ShardOut {
+        let plan = &self.plans[i];
+        let slab = &mut *self.slabs[i].0.get();
+        self.grid.read(plan.slab.clone(), &mut slab.cur);
+        // the ping-pong partner starts as an identical copy so its
+        // never-computed Dirichlet cells stay valid forever
+        slab.nxt.copy_from_slice(&slab.cur);
+        ShardOut { moved: (plan.slab.len() * 8) as u64, computed: 0 }
+    }
+
+    /// Advance `sub` sub-steps on the resident slab, publish residual
+    /// partials when tracking, and store the boundary union — the solo
+    /// pool's per-epoch producer half, verbatim arithmetic.
+    ///
+    /// SAFETY: shard `i` claimed by one worker; band-owned grid planes are
+    /// written by their owner only; no shard reads the grid this phase.
+    unsafe fn compute_shard(&self, i: usize, sub: usize, track: bool) -> ShardOut {
+        let plan = &self.plans[i];
+        let slab = &mut *self.slabs[i].0.get();
+        let r = self.spec.radius;
+        let plane = self.plane;
+        let slab_first = plan.slab.start / plane;
+        let band_planes = plan.band.len();
+        let depth = self.bt * r;
+        let computed = temporal::advance_slab(
+            &self.spec,
+            &self.meta,
+            self.axis,
+            &mut slab.cur,
+            &mut slab.nxt,
+            slab_first,
+            &plan.band,
+            sub,
+            self.first,
+            self.interior_planes,
+            &self.weights,
+            &self.deltas,
+        );
+        if track {
+            slab_delta_partials(
+                &self.spec,
+                &self.meta,
+                &slab.cur,
+                &slab.nxt,
+                slab_first,
+                &plan.band,
+                self.axis,
+                self.first,
+                |slot, partial| self.slots[slot].store(partial.to_bits(), Ordering::Release),
+            );
+        }
+        let band_off = (plan.band.start - slab_first) * plane;
+        let lo_planes = depth.min(band_planes);
+        self.grid.write(
+            plan.band.start * plane,
+            &slab.cur[band_off..band_off + lo_planes * plane],
+        );
+        // thin bands overlap lo/hi: store (and count — Eq 5) the union once
+        let hi_first = (plan.band.end - lo_planes).max(plan.band.start + lo_planes);
+        if hi_first < plan.band.end {
+            let hi_off = (hi_first - slab_first) * plane;
+            let hi_len = (plan.band.end - hi_first) * plane;
+            self.grid.write(hi_first * plane, &slab.cur[hi_off..hi_off + hi_len]);
+        }
+        ShardOut {
+            moved: (boundary_union_planes(depth, band_planes) * plane * 8) as u64,
+            computed,
+        }
+    }
+
+    /// Reload neighbor halos (the consumer half). SAFETY: the grid is
+    /// read-only this phase (all boundary stores completed last phase).
+    unsafe fn halo_shard(&self, i: usize) -> ShardOut {
+        let plan = &self.plans[i];
+        let slab = &mut *self.slabs[i].0.get();
+        let plane = self.plane;
+        let slab_first = plan.slab.start / plane;
+        let mut moved = 0u64;
+        let halo_lo = slab_first..plan.band.start;
+        if !halo_lo.is_empty() {
+            let off = halo_lo.start * plane;
+            let len = halo_lo.len() * plane;
+            self.grid.read(off..off + len, &mut slab.cur[..len]);
+            moved += (len * 8) as u64;
+        }
+        let halo_hi = plan.band.end..plan.slab.end / plane;
+        if !halo_hi.is_empty() {
+            let off = halo_hi.start * plane;
+            let len = halo_hi.len() * plane;
+            let loff = (halo_hi.start - slab_first) * plane;
+            self.grid.read(off..off + len, &mut slab.cur[loff..loff + len]);
+            moved += (len * 8) as u64;
+        }
+        ShardOut { moved, computed: 0 }
+    }
+
+    /// Store the whole band so the client can observe the advanced state
+    /// between commands. SAFETY: band-owned planes, owner-only writes.
+    unsafe fn final_shard(&self, i: usize) -> ShardOut {
+        let plan = &self.plans[i];
+        let slab = &*self.slabs[i].0.get();
+        let plane = self.plane;
+        let slab_first = plan.slab.start / plane;
+        let band_off = (plan.band.start - slab_first) * plane;
+        let band_len = plan.band.len() * plane;
+        self.grid
+            .write(plan.band.start * plane, &slab.cur[band_off..band_off + band_len]);
+        ShardOut { moved: (band_len * 8) as u64, computed: 0 }
+    }
+}
+
+struct CgEngine {
+    a: Arc<Csr>,
+    plan: MergePlan,
+    /// Reduction blocks == vector-update ownership == shard units.
+    blocks: Vec<(usize, usize)>,
+    x: SharedBuf<f64>,
+    r: SharedBuf<f64>,
+    p: SharedBuf<f64>,
+    ap: SharedBuf<f64>,
+    carries: SharedBuf<(usize, f64)>,
+    /// Dot-product slots, one per block, folded in slot order.
+    slots: Vec<AtomicU64>,
+}
+
+impl CgEngine {
+    fn new(a: Arc<Csr>, plan: MergePlan) -> Result<Self> {
+        if a.n_rows != a.n_cols {
+            return Err(Error::Solver(format!(
+                "matrix not square: {}x{}",
+                a.n_rows, a.n_cols
+            )));
+        }
+        if a.n_rows == 0 {
+            return Err(Error::Solver("matrix has no rows (empty system)".into()));
+        }
+        if a.n_rows != plan.n_rows || a.nnz() != plan.nnz {
+            return Err(Error::Solver(format!(
+                "merge plan mismatch: plan for {} rows / {} nnz, matrix has {} rows / {} nnz",
+                plan.n_rows,
+                plan.nnz,
+                a.n_rows,
+                a.nnz()
+            )));
+        }
+        let n = a.n_rows;
+        let parts = plan.parts();
+        let blocks = crate::stencil::parallel::partition(n, parts);
+        Ok(Self {
+            carries: SharedBuf::new(vec![(0usize, 0.0f64); parts]),
+            slots: (0..blocks.len()).map(|_| AtomicU64::new(0)).collect(),
+            x: SharedBuf::new(vec![0.0; n]),
+            r: SharedBuf::new(vec![0.0; n]),
+            p: SharedBuf::new(vec![0.0; n]),
+            ap: SharedBuf::new(vec![0.0; n]),
+            blocks,
+            a,
+            plan,
+        })
+    }
+
+    /// Merge-share range of shard `k` (the solo pool's per-worker split
+    /// with the shard count fixed at the block count, so the grouping —
+    /// and the bits — never depend on the farm's worker count).
+    fn share_range(&self, k: usize) -> (usize, usize) {
+        let parts = self.plan.parts();
+        let nk = self.blocks.len();
+        (parts * k / nk, parts * (k + 1) / nk)
+    }
+
+    /// SAFETY: p read-shared; ap rows and carry slots written only by
+    /// their share owner (disjoint across shards).
+    unsafe fn spmv_shard(&self, k: usize) -> ShardOut {
+        let (s_lo, s_hi) = self.share_range(k);
+        let p_v = self.p.whole();
+        let ap = self.ap.ptr();
+        let carries = self.carries.ptr();
+        for i in s_lo..s_hi {
+            let c = merge::consume_share_raw(
+                &self.a,
+                p_v,
+                ap,
+                self.plan.shares[i],
+                self.plan.shares[i + 1],
+            );
+            carries.add(i).write(c);
+        }
+        ShardOut::default()
+    }
+
+    /// SAFETY: carries read-shared; each shard touches only ap indices in
+    /// its own block.
+    unsafe fn fixup_shard(&self, k: usize) -> ShardOut {
+        let (s, l) = self.blocks[k];
+        let (row_lo, row_hi) = (s, s + l);
+        let p_v = self.p.whole();
+        let ap = self.ap.ptr();
+        for &(row, carry) in self.carries.whole() {
+            // serial fixup order and skip condition, restricted to our rows
+            if row >= row_lo && row < row_hi && carry != 0.0 {
+                ap.add(row).write(ap.add(row).read() + carry);
+            }
+        }
+        let part = crate::cg::block_partial(s, l, |i| p_v[i] * ap.add(i).read());
+        self.slots[k].store(part.to_bits(), Ordering::Release);
+        ShardOut::default()
+    }
+
+    /// SAFETY: x/r writes inside our block; p/ap have no writer this phase.
+    unsafe fn xr_shard(&self, k: usize, alpha: f64) -> ShardOut {
+        let (s, l) = self.blocks[k];
+        let x = self.x.ptr();
+        let r = self.r.ptr();
+        let p_v = self.p.whole();
+        let ap = self.ap.whole();
+        let part = crate::cg::block_partial(s, l, |i| {
+            x.add(i).write(x.add(i).read() + alpha * p_v[i]);
+            let ri = r.add(i).read() - alpha * ap[i];
+            r.add(i).write(ri);
+            ri * ri
+        });
+        self.slots[k].store(part.to_bits(), Ordering::Release);
+        ShardOut::default()
+    }
+
+    /// SAFETY: p writes inside our block; r has no writer this phase.
+    unsafe fn pup_shard(&self, k: usize, beta: f64) -> ShardOut {
+        let (s, l) = self.blocks[k];
+        let p_v = self.p.ptr();
+        let r = self.r.whole();
+        for i in s..s + l {
+            p_v.add(i).write(r[i] + beta * p_v.add(i).read());
+        }
+        ShardOut::default()
+    }
+}
+
+enum EngineKind {
+    Stencil(StencilEngine),
+    Cg(CgEngine),
+}
+
+impl EngineKind {
+    /// Shard count — uniform across phases of a kind.
+    fn shards(&self) -> usize {
+        match self {
+            EngineKind::Stencil(e) => e.plans.len(),
+            EngineKind::Cg(e) => e.blocks.len(),
+        }
+    }
+
+    /// Execute one shard of one phase. SAFETY: the claim/complete
+    /// handshake guarantees single ownership per shard per phase and
+    /// orders cross-phase handoffs (see module docs).
+    unsafe fn run_shard(
+        &self,
+        phase: u8,
+        shard: usize,
+        sub: usize,
+        track: bool,
+        scalar: f64,
+    ) -> ShardOut {
+        match self {
+            EngineKind::Stencil(e) => match phase {
+                P_LOAD => e.load_shard(shard),
+                P_COMPUTE => e.compute_shard(shard, sub, track),
+                P_HALO => e.halo_shard(shard),
+                P_FINAL => e.final_shard(shard),
+                _ => unreachable!("bad stencil phase {phase}"),
+            },
+            EngineKind::Cg(e) => match phase {
+                P_SPMV => e.spmv_shard(shard),
+                P_FIXUP => e.fixup_shard(shard),
+                P_XR => e.xr_shard(shard, scalar),
+                P_PUP => e.pup_shard(shard, scalar),
+                _ => unreachable!("bad cg phase {phase}"),
+            },
+        }
+    }
+}
+
+/// Fold reduction slots in slot-index order (left-to-right from 0.0) —
+/// the same arithmetic as `GridBarrier::read_sum`, so farm reductions
+/// are bit-identical to the solo pools'.
+fn fold_slots(slots: &[AtomicU64]) -> f64 {
+    let mut acc = 0.0;
+    for s in slots {
+        acc += f64::from_bits(s.load(Ordering::Acquire));
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// Scheduler state
+// ---------------------------------------------------------------------
+
+/// One admitted session's scheduling + command bookkeeping (numeric state
+/// lives in the engine; everything here is touched only under the
+/// scheduler mutex).
+struct Tenant {
+    engine: Arc<EngineKind>,
+    // --- current phase ---
+    phase: u8,
+    next_shard: usize,
+    nshards: usize,
+    outstanding: usize,
+    enqueue_tick: u64,
+    // --- command lifecycle ---
+    active: bool,
+    done_flag: bool,
+    /// Released by the client while a command was in flight: free the
+    /// slot at command completion instead of reporting.
+    zombie: bool,
+    first_dispatch: bool,
+    enqueued_at: f64,
+    queue_wait_cmd: f64,
+    error: Option<String>,
+    moved: u64,
+    computed: u64,
+    // --- stencil command ---
+    steps_target: usize,
+    tol: Option<f64>,
+    done_steps: usize,
+    sub: usize,
+    residual: Option<f64>,
+    /// Slabs loaded (persists across commands: residency).
+    loaded: bool,
+    // --- cg command ---
+    iters_target: usize,
+    threshold: f64,
+    iters_done: usize,
+    rr: f64,
+    rr_next: f64,
+    alpha: f64,
+    beta: f64,
+}
+
+impl Tenant {
+    fn new(engine: Arc<EngineKind>) -> Self {
+        Self {
+            engine,
+            phase: 0,
+            next_shard: 0,
+            nshards: 0,
+            outstanding: 0,
+            enqueue_tick: 0,
+            active: false,
+            done_flag: false,
+            zombie: false,
+            first_dispatch: false,
+            enqueued_at: 0.0,
+            queue_wait_cmd: 0.0,
+            error: None,
+            moved: 0,
+            computed: 0,
+            steps_target: 0,
+            tol: None,
+            done_steps: 0,
+            sub: 0,
+            residual: None,
+            loaded: false,
+            iters_target: 0,
+            threshold: 0.0,
+            iters_done: 0,
+            rr: 0.0,
+            rr_next: 0.0,
+            alpha: 0.0,
+            beta: 0.0,
+        }
+    }
+}
+
+struct FarmState {
+    shutdown: bool,
+    /// Sessions with claimable shards (ids into `tenants`).
+    ready: VecDeque<usize>,
+    tenants: Vec<Option<Tenant>>,
+    free: Vec<usize>,
+    /// Scheduler claim counter (fairness clock).
+    tick: u64,
+    /// Rolling window of queue-latency samples (command enqueue -> first
+    /// dispatch); see [`QUEUE_SAMPLE_CAP`].
+    queue_waits: Vec<f64>,
+    /// Overwrite cursor once the window is full.
+    queue_next: usize,
+    /// All-time maximum queue wait (survives window wraparound).
+    queue_max: f64,
+}
+
+struct FarmShared {
+    ctl: Mutex<FarmState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    clock: Instant,
+    /// Resident worker count (constant after spawn).
+    workers: usize,
+    admissions: AtomicU64,
+    commands: AtomicU64,
+    tasks: AtomicU64,
+    epochs: AtomicU64,
+}
+
+impl FarmShared {
+    /// Lock the scheduler state, recovering from poisoning (a panic in a
+    /// transition) — plain data, no invariant a panic can break.
+    fn lock(&self) -> MutexGuard<'_, FarmState> {
+        self.ctl.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn now(&self) -> f64 {
+        self.clock.elapsed().as_secs_f64()
+    }
+}
+
+/// A claimed task: everything a worker needs without re-locking.
+struct Task {
+    tid: usize,
+    phase: u8,
+    shard: usize,
+    sub: usize,
+    track: bool,
+    scalar: f64,
+    engine: Arc<EngineKind>,
+}
+
+/// Phase-completion decision.
+enum Step {
+    Phase(u8),
+    Done,
+}
+
+// ---------------------------------------------------------------------
+// The farm
+// ---------------------------------------------------------------------
+
+/// Farm-level metrics snapshot (see module docs: throughput counters,
+/// queue latency, fairness).
+#[derive(Clone, Debug)]
+pub struct FarmMetrics {
+    /// Resident worker count.
+    pub workers: usize,
+    /// OS threads ever spawned — constant after farm startup.
+    pub threads_spawned: u64,
+    /// Sessions admitted over the farm's lifetime.
+    pub admissions: u64,
+    /// Commands (advance/advance_until/run) executed or in flight.
+    pub commands: u64,
+    /// Shard tasks completed.
+    pub tasks: u64,
+    /// Epochs scheduled (stencil exchange epochs + CG iterations).
+    pub epochs: u64,
+    /// Queue latency (command enqueue -> first shard dispatch), seconds.
+    /// Mean and percentiles cover the rolling sample window (recent
+    /// traffic on long-lived farms); `queue_wait_max` is all-time.
+    pub queue_wait_mean: f64,
+    pub queue_wait_p50: f64,
+    pub queue_wait_p99: f64,
+    pub queue_wait_max: f64,
+}
+
+impl FarmMetrics {
+    /// Max/mean queue-wait ratio: 1.0 is perfectly even dispatch; large
+    /// values mean some command waited far longer than typical (the
+    /// starvation signal the age bound exists to cap).
+    pub fn fairness(&self) -> f64 {
+        if self.queue_wait_mean <= 0.0 {
+            1.0
+        } else {
+            (self.queue_wait_max / self.queue_wait_mean).max(1.0)
+        }
+    }
+}
+
+/// A spawn-once multi-tenant worker pool serving many concurrent solver
+/// sessions. See the module docs for the execution model.
+pub struct SolverFarm {
+    shared: Arc<FarmShared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    spawned: u64,
+}
+
+impl SolverFarm {
+    /// Spawn the farm's resident workers — the only thread creation of
+    /// the farm's lifetime; admissions and commands never add to it.
+    pub fn spawn(workers: usize) -> Result<Self> {
+        if workers == 0 {
+            return Err(Error::invalid("farm workers must be > 0"));
+        }
+        let shared = Arc::new(FarmShared {
+            ctl: Mutex::new(FarmState {
+                shutdown: false,
+                ready: VecDeque::new(),
+                tenants: Vec::new(),
+                free: Vec::new(),
+                tick: 0,
+                queue_waits: Vec::new(),
+                queue_next: 0,
+                queue_max: 0.0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            clock: Instant::now(),
+            workers,
+            admissions: AtomicU64::new(0),
+            commands: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+            epochs: AtomicU64::new(0),
+        });
+        counters::note_thread_spawns(workers as u64);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let sh = shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("solver-farm-{w}"))
+                .spawn(move || worker_main(&sh));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // don't leak the workers that did start
+                    {
+                        let mut g = shared.lock();
+                        g.shutdown = true;
+                        shared.work_cv.notify_all();
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Solver(format!("farm spawn failed: {e}")));
+                }
+            }
+        }
+        Ok(Self { shared, handles, workers, spawned: workers as u64 })
+    }
+
+    /// Resident worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// OS threads this farm has ever spawned — constant after `spawn`,
+    /// which is the point: admissions and advances must never add to it.
+    pub fn spawn_count(&self) -> u64 {
+        self.spawned
+    }
+
+    /// A cheap, cloneable handle sessions hold to admit tenants and
+    /// enqueue commands. The handle keeps the farm's shared state alive,
+    /// but not its workers: commands after [`SolverFarm::shutdown`] (or
+    /// drop) error out instead of hanging.
+    pub fn handle(&self) -> FarmHandle {
+        FarmHandle { shared: self.shared.clone() }
+    }
+
+    /// Farm-level metrics snapshot.
+    pub fn metrics(&self) -> FarmMetrics {
+        self.handle().metrics()
+    }
+
+    /// Shut the workers down and join them. Idempotent; `drop` calls it.
+    /// Clients blocked in `wait` are woken with an error.
+    pub fn shutdown(&mut self) {
+        {
+            let mut g = self.shared.lock();
+            g.shutdown = true;
+            self.shared.work_cv.notify_all();
+            self.shared.done_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    #[cfg(test)]
+    fn shared_weak(&self) -> std::sync::Weak<FarmShared> {
+        Arc::downgrade(&self.shared)
+    }
+}
+
+impl Drop for SolverFarm {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Cloneable client handle to a [`SolverFarm`] (see [`SolverFarm::handle`]).
+#[derive(Clone)]
+pub struct FarmHandle {
+    shared: Arc<FarmShared>,
+}
+
+impl std::fmt::Debug for FarmHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FarmHandle").finish()
+    }
+}
+
+impl FarmHandle {
+    /// Admit a stencil session: `shards` bands (clamped to the interior
+    /// planes, like the solo pool's thread count) at temporal degree
+    /// `bt`. Allocates the tenant's resident state; spawns nothing.
+    pub fn admit_stencil(
+        &self,
+        spec: &StencilSpec,
+        x0: &Domain,
+        shards: usize,
+        bt: usize,
+    ) -> Result<FarmStencil> {
+        let engine = StencilEngine::new(spec, x0, shards, bt)?;
+        let tid = self.admit(EngineKind::Stencil(engine))?;
+        Ok(FarmStencil { farm: self.clone(), tid })
+    }
+
+    /// Admit a CG session over a matrix and its cached merge plan.
+    /// Allocates the tenant's resident vectors; spawns nothing.
+    pub fn admit_cg(&self, a: Arc<Csr>, plan: MergePlan) -> Result<FarmCg> {
+        let engine = CgEngine::new(a, plan)?;
+        let tid = self.admit(EngineKind::Cg(engine))?;
+        Ok(FarmCg { farm: self.clone(), tid })
+    }
+
+    fn admit(&self, engine: EngineKind) -> Result<usize> {
+        let mut g = self.shared.lock();
+        if g.shutdown {
+            return Err(Error::Solver("solver farm is shut down".into()));
+        }
+        let tenant = Tenant::new(Arc::new(engine));
+        let tid = match g.free.pop() {
+            Some(slot) => {
+                g.tenants[slot] = Some(tenant);
+                slot
+            }
+            None => {
+                g.tenants.push(Some(tenant));
+                g.tenants.len() - 1
+            }
+        };
+        self.shared.admissions.fetch_add(1, Ordering::Relaxed);
+        counters::note_farm_admissions(1);
+        Ok(tid)
+    }
+
+    /// Farm-level metrics snapshot. Percentiles and the mean cover the
+    /// rolling sample window (recent traffic); the max is all-time.
+    pub fn metrics(&self) -> FarmMetrics {
+        let sh = &self.shared;
+        let (samples, max) = {
+            let g = sh.lock();
+            (g.queue_waits.clone(), g.queue_max)
+        };
+        let mean = if samples.is_empty() {
+            0.0
+        } else {
+            samples.iter().sum::<f64>() / samples.len() as f64
+        };
+        FarmMetrics {
+            workers: sh.workers,
+            threads_spawned: sh.workers as u64,
+            admissions: sh.admissions.load(Ordering::Relaxed),
+            commands: sh.commands.load(Ordering::Relaxed),
+            tasks: sh.tasks.load(Ordering::Relaxed),
+            epochs: sh.epochs.load(Ordering::Relaxed),
+            queue_wait_mean: mean,
+            queue_wait_p50: percentile(&samples, 50.0),
+            queue_wait_p99: percentile(&samples, 99.0),
+            queue_wait_max: max,
+        }
+    }
+
+    // ----- command plumbing shared by the session handles -----
+
+    fn submit_stencil(&self, tid: usize, steps: usize, tol: Option<f64>) -> Result<()> {
+        let sh = &self.shared;
+        let mut g = sh.lock();
+        if g.shutdown {
+            return Err(Error::Solver("solver farm is shut down".into()));
+        }
+        let now = sh.now();
+        let tick = g.tick;
+        let t = g.tenants[tid].as_mut().expect("tenant released");
+        if t.active {
+            return Err(Error::Solver(
+                "farm session already has a command in flight".into(),
+            ));
+        }
+        let bt = match &*t.engine {
+            EngineKind::Stencil(e) => e.bt,
+            EngineKind::Cg(_) => return Err(Error::Solver("not a stencil tenant".into())),
+        };
+        t.active = true;
+        t.done_flag = false;
+        t.error = None;
+        t.moved = 0;
+        t.computed = 0;
+        t.steps_target = steps;
+        t.tol = tol;
+        t.done_steps = 0;
+        t.residual = None;
+        t.first_dispatch = true;
+        t.enqueued_at = now;
+        t.queue_wait_cmd = 0.0;
+        // first phase: one-time slab load, else straight into the first
+        // epoch (or the final store for a 0-step command — the solo pool
+        // also re-stores bands on a 0-step run)
+        t.phase = if !t.loaded {
+            P_LOAD
+        } else if steps == 0 {
+            P_FINAL
+        } else {
+            t.sub = bt.min(steps);
+            P_COMPUTE
+        };
+        t.next_shard = 0;
+        t.outstanding = 0;
+        t.nshards = t.engine.shards();
+        t.enqueue_tick = tick;
+        g.ready.push_back(tid);
+        sh.commands.fetch_add(1, Ordering::Relaxed);
+        counters::note_farm_commands(1);
+        sh.work_cv.notify_all();
+        Ok(())
+    }
+
+    fn wait_stencil(&self, tid: usize) -> Result<StencilFarmRun> {
+        let sh = &self.shared;
+        let mut g = sh.lock();
+        loop {
+            {
+                let t = g.tenants[tid].as_mut().expect("tenant released");
+                if t.done_flag {
+                    t.done_flag = false;
+                    t.active = false;
+                    let out = StencilFarmRun {
+                        steps: t.done_steps,
+                        residual: t.residual,
+                        global_bytes: t.moved,
+                        computed_cells: t.computed,
+                        queue_wait_seconds: t.queue_wait_cmd,
+                    };
+                    return match t.error.take() {
+                        Some(msg) => Err(Error::Solver(msg)),
+                        None => Ok(out),
+                    };
+                }
+                if !t.active {
+                    // nothing submitted (or already waited): error instead
+                    // of parking forever on a command that will never come
+                    return Err(Error::Solver("no farm command in flight to wait for".into()));
+                }
+            }
+            if g.shutdown {
+                abandon_command(&mut g, tid);
+                return Err(Error::Solver(
+                    "solver farm shut down while a command was in flight".into(),
+                ));
+            }
+            g = sh.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn submit_cg(
+        &self,
+        tid: usize,
+        x: &[f64],
+        r: &[f64],
+        p: &[f64],
+        rr: f64,
+        threshold: f64,
+        iters: usize,
+    ) -> Result<()> {
+        let sh = &self.shared;
+        let mut g = sh.lock();
+        if g.shutdown {
+            return Err(Error::Solver("solver farm is shut down".into()));
+        }
+        let now = sh.now();
+        let tick = g.tick;
+        let t = g.tenants[tid].as_mut().expect("tenant released");
+        if t.active {
+            return Err(Error::Solver(
+                "farm session already has a command in flight".into(),
+            ));
+        }
+        let engine = t.engine.clone();
+        let EngineKind::Cg(ref e) = *engine else {
+            return Err(Error::Solver("not a cg tenant".into()));
+        };
+        let n = e.a.n_rows;
+        if x.len() != n || r.len() != n || p.len() != n {
+            return Err(Error::Solver("farm cg state length mismatch".into()));
+        }
+        // SAFETY: tenant idle (no command in flight, checked above under
+        // the scheduler lock) — exclusive access to the resident buffers.
+        unsafe {
+            e.x.whole_mut().copy_from_slice(x);
+            e.r.whole_mut().copy_from_slice(r);
+            e.p.whole_mut().copy_from_slice(p);
+        }
+        t.active = true;
+        t.done_flag = false;
+        t.error = None;
+        t.moved = 0;
+        t.computed = 0;
+        t.iters_target = iters;
+        t.threshold = threshold;
+        t.iters_done = 0;
+        t.rr = rr;
+        t.first_dispatch = true;
+        t.enqueued_at = now;
+        t.queue_wait_cmd = 0.0;
+        sh.commands.fetch_add(1, Ordering::Relaxed);
+        counters::note_farm_commands(1);
+        if rr <= threshold || rr <= 0.0 || iters == 0 {
+            // nothing to iterate: complete immediately (the serial/pooled
+            // top-of-loop short circuit)
+            t.done_flag = true;
+            sh.done_cv.notify_all();
+            return Ok(());
+        }
+        t.phase = P_SPMV;
+        t.next_shard = 0;
+        t.outstanding = 0;
+        t.nshards = t.engine.shards();
+        t.enqueue_tick = tick;
+        g.ready.push_back(tid);
+        sh.work_cv.notify_all();
+        Ok(())
+    }
+
+    fn wait_cg(
+        &self,
+        tid: usize,
+        x: &mut [f64],
+        r: &mut [f64],
+        p: &mut [f64],
+    ) -> Result<CgFarmRun> {
+        let sh = &self.shared;
+        let mut g = sh.lock();
+        loop {
+            {
+                let t = g.tenants[tid].as_mut().expect("tenant released");
+                if t.done_flag {
+                    t.done_flag = false;
+                    t.active = false;
+                    let out = CgFarmRun {
+                        iters: t.iters_done,
+                        rr: t.rr,
+                        error: t.error.take(),
+                        queue_wait_seconds: t.queue_wait_cmd,
+                    };
+                    let engine = t.engine.clone();
+                    let EngineKind::Cg(ref e) = *engine else { unreachable!() };
+                    // SAFETY: command done — workers re-parked, buffers quiescent.
+                    unsafe {
+                        x.copy_from_slice(e.x.whole());
+                        r.copy_from_slice(e.r.whole());
+                        p.copy_from_slice(e.p.whole());
+                    }
+                    return Ok(out);
+                }
+                if !t.active {
+                    // nothing submitted (or already waited): error instead
+                    // of parking forever on a command that will never come
+                    return Err(Error::Solver("no farm command in flight to wait for".into()));
+                }
+            }
+            if g.shutdown {
+                abandon_command(&mut g, tid);
+                return Err(Error::Solver(
+                    "solver farm shut down while a command was in flight".into(),
+                ));
+            }
+            g = sh.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Snapshot a stencil tenant's padded domain (between commands only).
+    fn stencil_state(&self, tid: usize) -> Result<Vec<f64>> {
+        let g = self.shared.lock();
+        let t = g.tenants[tid].as_ref().expect("tenant released");
+        if t.active {
+            return Err(Error::Solver(
+                "farm session state read with a command in flight".into(),
+            ));
+        }
+        let EngineKind::Stencil(ref e) = *t.engine else {
+            return Err(Error::Solver("not a stencil tenant".into()));
+        };
+        let mut out = vec![0.0; e.grid.len()];
+        // SAFETY: tenant idle (checked under the scheduler lock) — the
+        // previous command's completion happened-before this read.
+        unsafe { e.grid.read(0..out.len(), &mut out) };
+        Ok(out)
+    }
+
+    fn release(&self, tid: usize) {
+        let mut g = self.shared.lock();
+        let Some(t) = g.tenants[tid].as_mut() else { return };
+        if t.active && !t.done_flag {
+            // command still in flight (client dropped without waiting):
+            // free the slot when it completes; tasks hold their own Arc
+            t.zombie = true;
+        } else {
+            g.tenants[tid] = None;
+            g.free.push(tid);
+        }
+    }
+
+    #[cfg(test)]
+    fn tenant_slots(&self) -> usize {
+        self.shared.lock().tenants.len()
+    }
+}
+
+/// Result of one stencil farm command (the farm analog of
+/// [`crate::stencil::pool::StencilRun`], plus the queue latency).
+#[derive(Clone, Debug)]
+pub struct StencilFarmRun {
+    /// Time steps actually performed (early tolerance stops land on an
+    /// epoch boundary when `bt > 1`, exactly as in the solo pool).
+    pub steps: usize,
+    /// Last in-loop residual norm, `Some` iff the command tracked one.
+    pub residual: Option<f64>,
+    /// Bytes moved through the shared ("global") array (same accounting
+    /// as the solo pool: slab loads, boundary unions, halos, final store).
+    pub global_bytes: u64,
+    /// Cell updates including temporal-blocking overlap work.
+    pub computed_cells: u64,
+    /// Time this command waited from enqueue to first shard dispatch.
+    pub queue_wait_seconds: f64,
+}
+
+/// Result of one CG farm command (the farm analog of
+/// [`crate::cg::pool::PoolRun`], plus the queue latency).
+#[derive(Clone, Debug)]
+pub struct CgFarmRun {
+    pub iters: usize,
+    pub rr: f64,
+    /// Collective solver error (not positive definite) — completed
+    /// iterations are still valid, as in the serial/pooled paths.
+    pub error: Option<String>,
+    pub queue_wait_seconds: f64,
+}
+
+/// An admitted stencil session: submit/wait (or the blocking `advance`)
+/// plus state snapshots. Dropping the handle releases the tenant.
+pub struct FarmStencil {
+    farm: FarmHandle,
+    tid: usize,
+}
+
+impl FarmStencil {
+    /// Enqueue an advance of up to `steps` steps (grouped into epochs of
+    /// the tenant's `bt`); with `tol = Some(t)` the epoch residual is
+    /// tracked and the command stops once it drops to `t`.
+    pub fn submit(&mut self, steps: usize, tol: Option<f64>) -> Result<()> {
+        self.farm.submit_stencil(self.tid, steps, tol)
+    }
+
+    /// Block until the submitted command completes.
+    pub fn wait(&mut self) -> Result<StencilFarmRun> {
+        self.farm.wait_stencil(self.tid)
+    }
+
+    /// Blocking advance: submit + wait.
+    pub fn advance(&mut self, steps: usize, tol: Option<f64>) -> Result<StencilFarmRun> {
+        self.submit(steps, tol)?;
+        self.wait()
+    }
+
+    /// Snapshot the padded domain data (between commands only).
+    pub fn state(&self) -> Result<Vec<f64>> {
+        self.farm.stencil_state(self.tid)
+    }
+}
+
+impl Drop for FarmStencil {
+    fn drop(&mut self) {
+        self.farm.release(self.tid);
+    }
+}
+
+/// An admitted CG session. State is copied in at submit and out at wait
+/// (command-boundary semantics identical to [`crate::cg::pool::CgPool::run`]);
+/// between those boundaries the iteration loop runs resident in the farm.
+pub struct FarmCg {
+    farm: FarmHandle,
+    tid: usize,
+}
+
+impl FarmCg {
+    /// Enqueue up to `iters` CG iterations from recurrence state `rr`,
+    /// stopping early once `rr <= threshold` (0.0 = fixed-iteration mode).
+    pub fn submit(
+        &mut self,
+        x: &[f64],
+        r: &[f64],
+        p: &[f64],
+        rr: f64,
+        threshold: f64,
+        iters: usize,
+    ) -> Result<()> {
+        self.farm.submit_cg(self.tid, x, r, p, rr, threshold, iters)
+    }
+
+    /// Block until the submitted command completes, copying the advanced
+    /// state back out (including on a solver error, whose completed
+    /// iterations are still valid).
+    pub fn wait(&mut self, x: &mut [f64], r: &mut [f64], p: &mut [f64]) -> Result<CgFarmRun> {
+        self.farm.wait_cg(self.tid, x, r, p)
+    }
+
+    /// Blocking run: submit + wait (the farm mirror of `CgPool::run`).
+    pub fn run(
+        &mut self,
+        x: &mut [f64],
+        r: &mut [f64],
+        p: &mut [f64],
+        rr: f64,
+        threshold: f64,
+        iters: usize,
+    ) -> Result<CgFarmRun> {
+        self.submit(x, r, p, rr, threshold, iters)?;
+        self.wait(x, r, p)
+    }
+}
+
+impl Drop for FarmCg {
+    fn drop(&mut self) {
+        self.farm.release(self.tid);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker loop + scheduler
+// ---------------------------------------------------------------------
+
+fn worker_main(sh: &FarmShared) {
+    loop {
+        let task = {
+            let mut g = sh.lock();
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if let Some(t) = claim(&mut g, sh) {
+                    break t;
+                }
+                g = sh.work_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        // A panic in the numeric shard must not leave the countdown short
+        // (that would hang the client's wait): surface it as a command
+        // error instead. Unlike the barrier pools, a panicking shard
+        // strands nothing — the other shards complete independently.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            task.engine.run_shard(task.phase, task.shard, task.sub, task.track, task.scalar)
+        }))
+        .map_err(|_| format!("farm worker panicked (phase {}, shard {})", task.phase, task.shard));
+        let mut g = sh.lock();
+        complete(&mut g, sh, &task, res);
+    }
+}
+
+/// Claim one shard from the front ready session (round-robin with the
+/// age bound — see module docs). Returns `None` when nothing is ready.
+fn claim(g: &mut FarmState, sh: &FarmShared) -> Option<Task> {
+    loop {
+        let tid = g.ready.pop_front()?;
+        let tick = g.tick;
+        let now = sh.now();
+        let (task, more, aged, sample) = {
+            let Some(t) = g.tenants[tid].as_mut() else {
+                continue; // released while queued (defensive)
+            };
+            if t.next_shard >= t.nshards {
+                continue; // stale entry (defensive)
+            }
+            let shard = t.next_shard;
+            t.next_shard += 1;
+            t.outstanding += 1;
+            let sample = if t.first_dispatch {
+                t.first_dispatch = false;
+                let wait = (now - t.enqueued_at).max(0.0);
+                t.queue_wait_cmd = wait;
+                Some(wait)
+            } else {
+                None
+            };
+            let task = Task {
+                tid,
+                phase: t.phase,
+                shard,
+                sub: t.sub,
+                track: t.tol.is_some(),
+                scalar: match (&*t.engine, t.phase) {
+                    (EngineKind::Cg(_), P_XR) => t.alpha,
+                    (EngineKind::Cg(_), P_PUP) => t.beta,
+                    _ => 0.0,
+                },
+                engine: t.engine.clone(),
+            };
+            let more = t.next_shard < t.nshards;
+            let aged = tick.saturating_sub(t.enqueue_tick) > FAIRNESS_BOUND;
+            (task, more, aged, sample)
+        };
+        g.tick = tick + 1;
+        if let Some(wait) = sample {
+            g.queue_max = g.queue_max.max(wait);
+            if g.queue_waits.len() < QUEUE_SAMPLE_CAP {
+                g.queue_waits.push(wait);
+            } else {
+                // rolling window: overwrite the oldest sample
+                g.queue_waits[g.queue_next] = wait;
+                g.queue_next = (g.queue_next + 1) % QUEUE_SAMPLE_CAP;
+            }
+        }
+        if more {
+            if aged {
+                g.ready.push_front(tid);
+            } else {
+                g.ready.push_back(tid);
+            }
+        }
+        return Some(task);
+    }
+}
+
+/// Retire an in-flight command whose farm has shut down, so the tenant
+/// does not stay wedged in the `active` state forever (workers are gone;
+/// no completion will ever arrive). Only safe once no claimed task is
+/// still draining (`outstanding == 0`) — a worker that observed shutdown
+/// mid-task may still be writing tenant buffers until its `complete`
+/// runs, and while that is possible the command must stay `active` so
+/// state reads keep erroring instead of tearing.
+fn abandon_command(g: &mut FarmState, tid: usize) {
+    if let Some(t) = g.tenants[tid].as_mut() {
+        if t.outstanding == 0 {
+            t.active = false;
+            t.done_flag = false;
+        }
+    }
+}
+
+/// Record a finished task; on phase completion run the transition and
+/// either enqueue the next phase or complete the command.
+fn complete(
+    g: &mut FarmState,
+    sh: &FarmShared,
+    task: &Task,
+    res: std::result::Result<ShardOut, String>,
+) {
+    sh.tasks.fetch_add(1, Ordering::Relaxed);
+    counters::note_farm_tasks(1);
+    let tick = g.tick;
+    let mut requeue = false;
+    let mut finished = false;
+    let mut freed = false;
+    {
+        let Some(t) = g.tenants[task.tid].as_mut() else { return };
+        t.outstanding -= 1;
+        match res {
+            Ok(o) => {
+                t.moved += o.moved;
+                t.computed += o.computed;
+            }
+            Err(msg) => {
+                if t.error.is_none() {
+                    t.error = Some(msg);
+                }
+            }
+        }
+        if t.outstanding > 0 || t.next_shard < t.nshards {
+            return; // phase still in flight
+        }
+        let step = if t.error.is_some() { Step::Done } else { transition(t, sh) };
+        match step {
+            Step::Phase(p) => {
+                t.phase = p;
+                t.next_shard = 0;
+                t.nshards = t.engine.shards();
+                t.enqueue_tick = tick;
+                requeue = true;
+            }
+            Step::Done => {
+                if t.zombie {
+                    freed = true;
+                } else {
+                    t.done_flag = true;
+                    finished = true;
+                }
+            }
+        }
+    }
+    if requeue {
+        g.ready.push_back(task.tid);
+        sh.work_cv.notify_all();
+    }
+    if freed {
+        g.tenants[task.tid] = None;
+        g.free.push(task.tid);
+    }
+    if finished {
+        sh.done_cv.notify_all();
+    }
+}
+
+/// Phase-completion transition: the scalar control flow of the solo
+/// pools' resident loops, run once under the scheduler lock (where the
+/// pools replicate it per worker between barriers).
+fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
+    let engine = t.engine.clone();
+    match &*engine {
+        EngineKind::Stencil(e) => match t.phase {
+            P_LOAD => {
+                t.loaded = true;
+                stencil_next_epoch(t, e)
+            }
+            P_COMPUTE => {
+                if t.tol.is_some() {
+                    // slot-order fold: the solo pool's read_sum, bit for bit
+                    t.residual = Some(fold_slots(&e.slots));
+                }
+                t.done_steps += t.sub;
+                sh.epochs.fetch_add(1, Ordering::Relaxed);
+                Step::Phase(P_HALO)
+            }
+            P_HALO => {
+                if let (Some(tol), Some(res)) = (t.tol, t.residual) {
+                    if res <= tol {
+                        return Step::Phase(P_FINAL); // collective epoch stop
+                    }
+                }
+                stencil_next_epoch(t, e)
+            }
+            P_FINAL => Step::Done,
+            p => unreachable!("bad stencil phase {p}"),
+        },
+        EngineKind::Cg(e) => match t.phase {
+            P_SPMV => Step::Phase(P_FIXUP),
+            P_FIXUP => {
+                let pap = fold_slots(&e.slots);
+                if pap <= 0.0 {
+                    // detected before any state update of the failing
+                    // iteration — the serial/pooled error point
+                    t.error = Some(format!("matrix not positive definite (pAp={pap})"));
+                    return Step::Done;
+                }
+                t.alpha = t.rr / pap;
+                Step::Phase(P_XR)
+            }
+            P_XR => {
+                t.rr_next = fold_slots(&e.slots);
+                t.beta = t.rr_next / t.rr;
+                Step::Phase(P_PUP)
+            }
+            P_PUP => {
+                t.rr = t.rr_next;
+                t.iters_done += 1;
+                sh.epochs.fetch_add(1, Ordering::Relaxed);
+                if t.iters_done >= t.iters_target || t.rr <= t.threshold || t.rr <= 0.0 {
+                    Step::Done
+                } else {
+                    Step::Phase(P_SPMV)
+                }
+            }
+            p => unreachable!("bad cg phase {p}"),
+        },
+    }
+}
+
+fn stencil_next_epoch(t: &mut Tenant, e: &StencilEngine) -> Step {
+    if t.done_steps >= t.steps_target {
+        Step::Phase(P_FINAL)
+    } else {
+        // a trailing partial epoch advances fewer sub-steps; the slab's
+        // bt*r halo depth covers any sub <= bt
+        t.sub = e.bt.min(t.steps_target - t.done_steps);
+        Step::Phase(P_COMPUTE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::stencil::gold;
+    use crate::stencil::pool::StencilPool;
+    use crate::stencil::shape::spec;
+
+    /// The tentpole acceptance bar: a farm tenant's iterates are
+    /// bit-identical to its solo-pool run at every farm worker count,
+    /// including across resumed advances and at temporal degree bt > 1.
+    #[test]
+    fn farm_stencil_is_bit_identical_to_solo_pool_across_workers_and_resume() {
+        let s = spec("2d9pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[18, 18]).unwrap();
+        d.randomize(11);
+        let want = gold::run(&s, &d, 9).unwrap();
+        let mut solo = StencilPool::spawn(&s, &d, 3).unwrap();
+        solo.run(4, None).unwrap();
+        solo.run(5, None).unwrap();
+        assert_eq!(solo.state(), want.data, "solo pool vs gold");
+        for workers in [1usize, 2, 3, 8] {
+            let farm = SolverFarm::spawn(workers).unwrap();
+            let mut t = farm.handle().admit_stencil(&s, &d, 3, 1).unwrap();
+            let r1 = t.advance(4, None).unwrap();
+            let r2 = t.advance(5, None).unwrap();
+            assert_eq!(r1.steps + r2.steps, 9);
+            assert_eq!(t.state().unwrap(), want.data, "workers={workers}: farm vs gold");
+            // traffic accounting matches the solo pool run for run
+            let mut solo2 = StencilPool::spawn(&s, &d, 3).unwrap();
+            let s1 = solo2.run(4, None).unwrap();
+            let s2 = solo2.run(5, None).unwrap();
+            assert_eq!(r1.global_bytes, s1.global_bytes, "workers={workers}: first-run bytes");
+            assert_eq!(r2.global_bytes, s2.global_bytes, "workers={workers}: resumed bytes");
+            assert_eq!(farm.spawn_count(), workers as u64, "admission spawned threads");
+        }
+    }
+
+    #[test]
+    fn farm_temporal_bt_matches_gold_including_partial_epochs_and_3d() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[16, 16]).unwrap();
+        d.randomize(8);
+        let want = gold::run(&s, &d, 11).unwrap();
+        for workers in [1usize, 3] {
+            let farm = SolverFarm::spawn(workers).unwrap();
+            for bt in [2usize, 4] {
+                let mut t = farm.handle().admit_stencil(&s, &d, 3, bt).unwrap();
+                let r1 = t.advance(5, None).unwrap(); // partial epochs at bt=4
+                let r2 = t.advance(6, None).unwrap();
+                assert_eq!(r1.steps + r2.steps, 11, "bt={bt} workers={workers}");
+                assert_eq!(t.state().unwrap(), want.data, "bt={bt} workers={workers}");
+                assert!(r1.computed_cells > 0);
+            }
+        }
+        // 3D composition
+        let s3 = spec("3d13pt").unwrap();
+        let mut d3 = Domain::for_spec(&s3, &[8, 6, 6]).unwrap();
+        d3.randomize(9);
+        let want3 = gold::run(&s3, &d3, 4).unwrap();
+        let farm = SolverFarm::spawn(2).unwrap();
+        let mut t = farm.handle().admit_stencil(&s3, &d3, 3, 2).unwrap();
+        t.advance(4, None).unwrap();
+        assert_eq!(t.state().unwrap(), want3.data, "3D bt=2 vs gold");
+    }
+
+    /// Band-shard count is a tenant knob, not the worker count: any
+    /// shards x workers combination walks gold's bits (the farm mirror of
+    /// the pools' thread-count invariance).
+    #[test]
+    fn farm_shard_and_worker_counts_are_invisible_to_the_bits() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[14, 14]).unwrap();
+        d.randomize(4);
+        let want = gold::run(&s, &d, 6).unwrap();
+        for shards in [1usize, 2, 5] {
+            for workers in [1usize, 4] {
+                let farm = SolverFarm::spawn(workers).unwrap();
+                let mut t = farm.handle().admit_stencil(&s, &d, shards, 1).unwrap();
+                t.advance(6, None).unwrap();
+                assert_eq!(
+                    t.state().unwrap(),
+                    want.data,
+                    "shards={shards} workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn farm_stencil_advance_until_stops_on_the_solo_pools_epoch() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(7);
+        let (tol, max) = (1e-8, 20_000);
+        let mut solo = StencilPool::spawn(&s, &d, 2).unwrap();
+        let want = solo.run(max, Some(tol)).unwrap();
+        assert!(want.steps < max, "reference did not converge");
+        let want_state = solo.state();
+        for workers in [1usize, 2, 8] {
+            let farm = SolverFarm::spawn(workers).unwrap();
+            let mut t = farm.handle().admit_stencil(&s, &d, 2, 1).unwrap();
+            let run = t.advance(max, Some(tol)).unwrap();
+            assert_eq!(run.steps, want.steps, "workers={workers}: stop step");
+            assert_eq!(
+                run.residual.unwrap().to_bits(),
+                want.residual.unwrap().to_bits(),
+                "workers={workers}: residual bits"
+            );
+            assert_eq!(t.state().unwrap(), want_state, "workers={workers}: state bits");
+        }
+        // epoch-granular stop at bt > 1, identical at every worker count
+        let bt = 4;
+        let mut reference: Option<(usize, u64)> = None;
+        for workers in [1usize, 3] {
+            let farm = SolverFarm::spawn(workers).unwrap();
+            let mut t = farm.handle().admit_stencil(&s, &d, 2, bt).unwrap();
+            let run = t.advance(max, Some(tol)).unwrap();
+            assert_eq!(run.steps % bt, 0, "workers={workers}: epoch-aligned stop");
+            let key = (run.steps, run.residual.unwrap().to_bits());
+            match &reference {
+                None => reference = Some(key),
+                Some(want) => assert_eq!(&key, want, "workers={workers}"),
+            }
+        }
+    }
+
+    /// Serial CG reference with the canonical block-ordered reductions
+    /// (the same arithmetic as `cg::pool`'s test reference).
+    fn serial_cg(a: &Csr, b: &[f64], parts: usize, iters: usize) -> (Vec<f64>, f64) {
+        let n = a.n_rows;
+        let plan = MergePlan::new(a, parts);
+        let blocks = crate::stencil::parallel::partition(n, parts);
+        let mut x = vec![0.0; n];
+        let mut r = b.to_vec();
+        let mut p = b.to_vec();
+        let mut ap = vec![0.0; n];
+        let mut rr: f64 = b.iter().map(|v| v * v).sum();
+        for _ in 0..iters {
+            if rr <= 0.0 {
+                break;
+            }
+            merge::spmv(a, &plan, &p, &mut ap);
+            let mut pap = 0.0;
+            for &(s, l) in &blocks {
+                pap += crate::cg::block_partial(s, l, |i| p[i] * ap[i]);
+            }
+            let alpha = rr / pap;
+            let mut rr_new = 0.0;
+            for &(s, l) in &blocks {
+                rr_new += crate::cg::block_partial(s, l, |i| {
+                    x[i] += alpha * p[i];
+                    let ri = r[i] - alpha * ap[i];
+                    r[i] = ri;
+                    ri * ri
+                });
+            }
+            let beta = rr_new / rr;
+            for i in 0..n {
+                p[i] = r[i] + beta * p[i];
+            }
+            rr = rr_new;
+        }
+        (x, rr)
+    }
+
+    #[test]
+    fn farm_cg_is_bit_identical_to_serial_across_workers_and_resume() {
+        let a = gen::poisson2d(16);
+        let b = gen::rhs(a.n_rows, 7);
+        let (want_x, want_rr) = serial_cg(&a, &b, 8, 22);
+        for workers in [1usize, 2, 3, 8] {
+            let farm = SolverFarm::spawn(workers).unwrap();
+            let plan = MergePlan::new(&a, 8);
+            let mut t = farm.handle().admit_cg(Arc::new(a.clone()), plan).unwrap();
+            let n = a.n_rows;
+            let mut x = vec![0.0; n];
+            let mut r = b.clone();
+            let mut p = b.clone();
+            let mut rr: f64 = b.iter().map(|v| v * v).sum();
+            for chunk in [9usize, 13] {
+                let run = t.run(&mut x, &mut r, &mut p, rr, 0.0, chunk).unwrap();
+                assert!(run.error.is_none());
+                rr = run.rr;
+            }
+            assert_eq!(x, want_x, "workers={workers}");
+            assert_eq!(rr.to_bits(), want_rr.to_bits(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn farm_cg_threshold_and_error_paths_match_the_pool_semantics() {
+        // threshold stop
+        let a = gen::poisson2d(10);
+        let b = gen::rhs(a.n_rows, 9);
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        let farm = SolverFarm::spawn(2).unwrap();
+        let mut t = farm.handle().admit_cg(Arc::new(a.clone()), MergePlan::new(&a, 8)).unwrap();
+        let n = a.n_rows;
+        let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+        let run = t.run(&mut x, &mut r, &mut p, rr0, 1e-12 * rr0, 10_000).unwrap();
+        assert!(run.iters < 10_000 && run.rr <= 1e-12 * rr0);
+        let mut ax = vec![0.0; n];
+        a.spmv_gold(&x, &mut ax);
+        let err = b.iter().zip(&ax).map(|(bi, ai)| (bi - ai).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-5, "true residual {err}");
+
+        // not-positive-definite error before any state update
+        let neg = Csr::from_coo(4, 4, (0..4).map(|i| (i, i, -1.0)).collect()).unwrap();
+        let bneg = vec![1.0; 4];
+        let plan = MergePlan::new(&neg, 2);
+        let mut t = farm.handle().admit_cg(Arc::new(neg), plan).unwrap();
+        let (mut x, mut r, mut p) = (vec![0.0; 4], bneg.clone(), bneg.clone());
+        let run = t.run(&mut x, &mut r, &mut p, 4.0, 0.0, 10).unwrap();
+        assert_eq!(run.iters, 0);
+        assert!(run.error.as_deref().unwrap_or("").contains("positive definite"));
+        assert_eq!(x, vec![0.0; 4], "error fires before any x/r/p update");
+        // tenant stays usable after the error
+        let again = t.run(&mut x, &mut r, &mut p, 0.0, 0.0, 1).unwrap();
+        assert!(again.error.is_none());
+        assert_eq!(again.iters, 0);
+    }
+
+    /// Mixed stencil + CG tenants with interleaved in-flight commands:
+    /// every tenant still walks its solo bits, from one worker set.
+    #[test]
+    fn mixed_tenants_with_concurrent_commands_keep_their_solo_bits() {
+        let s = spec("2d5pt").unwrap();
+        let mut d1 = Domain::for_spec(&s, &[12, 12]).unwrap();
+        d1.randomize(1);
+        let mut d2 = Domain::for_spec(&s, &[10, 14]).unwrap();
+        d2.randomize(2);
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 3);
+        let want1 = gold::run(&s, &d1, 8).unwrap();
+        let want2 = gold::run(&s, &d2, 6).unwrap();
+        let (want_x, want_rr) = serial_cg(&a, &b, 8, 15);
+
+        let farm = SolverFarm::spawn(3).unwrap();
+        let h = farm.handle();
+        let mut t1 = h.admit_stencil(&s, &d1, 2, 2).unwrap();
+        let mut t2 = h.admit_stencil(&s, &d2, 3, 1).unwrap();
+        let mut tc = h.admit_cg(Arc::new(a.clone()), MergePlan::new(&a, 8)).unwrap();
+        let n = a.n_rows;
+        let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        // all three commands in flight at once on the shared workers
+        t1.submit(8, None).unwrap();
+        t2.submit(6, None).unwrap();
+        tc.submit(&x, &r, &p, rr0, 0.0, 15).unwrap();
+        let r1 = t1.wait().unwrap();
+        let r2 = t2.wait().unwrap();
+        let rc = tc.wait(&mut x, &mut r, &mut p).unwrap();
+        assert_eq!(r1.steps, 8);
+        assert_eq!(r2.steps, 6);
+        assert_eq!(rc.iters, 15);
+        assert_eq!(t1.state().unwrap(), want1.data, "tenant 1 vs gold");
+        assert_eq!(t2.state().unwrap(), want2.data, "tenant 2 vs gold");
+        assert_eq!(x, want_x, "cg tenant vs serial");
+        assert_eq!(rc.rr.to_bits(), want_rr.to_bits());
+        // the whole mixed workload ran on the startup worker set
+        assert_eq!(farm.spawn_count(), 3);
+        let m = farm.metrics();
+        assert_eq!(m.admissions, 3);
+        assert!(m.commands >= 3);
+        assert!(m.tasks > 0 && m.epochs > 0);
+        assert!(m.queue_wait_p99 >= m.queue_wait_p50);
+        assert!(m.fairness() >= 1.0);
+    }
+
+    /// Satellite acceptance: admitting sessions and advancing them spawns
+    /// zero threads after farm startup.
+    #[test]
+    fn admissions_and_advances_never_spawn_after_farm_startup() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[10, 10]).unwrap();
+        d.randomize(3);
+        let farm = SolverFarm::spawn(2).unwrap();
+        let after_start = farm.spawn_count();
+        assert_eq!(after_start, 2);
+        for i in 0..6usize {
+            let mut t = farm.handle().admit_stencil(&s, &d, 2, 1 + (i % 2)).unwrap();
+            t.advance(3, None).unwrap();
+            t.advance(2, None).unwrap();
+        }
+        assert_eq!(farm.spawn_count(), after_start, "admission/advance must not spawn");
+        assert_eq!(farm.metrics().admissions, 6);
+    }
+
+    /// Satellite: the shutdown race — 64 rapid create/drop cycles, with
+    /// and without commands, some with a command still in flight at drop.
+    /// Every join must complete promptly (the test hanging IS the
+    /// failure), and a waiter on a shut-down farm gets an error.
+    #[test]
+    fn rapid_create_drop_cycles_never_hang() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(5);
+        for cycle in 0..64usize {
+            let mut farm = SolverFarm::spawn(1 + cycle % 3).unwrap();
+            let weak = farm.shared_weak();
+            match cycle % 4 {
+                0 => {} // drop a farm that never ran anything
+                1 => {
+                    let mut t = farm.handle().admit_stencil(&s, &d, 2, 1).unwrap();
+                    t.advance(2, None).unwrap();
+                }
+                2 => {
+                    // tenant dropped without waiting: zombie-released
+                    let mut t = farm.handle().admit_stencil(&s, &d, 2, 1).unwrap();
+                    t.submit(2, None).unwrap();
+                    drop(t);
+                }
+                _ => {
+                    // explicit shutdown while a command may be in flight,
+                    // then wait must error (or return the completed run),
+                    // never hang
+                    let mut t = farm.handle().admit_stencil(&s, &d, 2, 1).unwrap();
+                    t.submit(50, None).unwrap();
+                    farm.shutdown();
+                    let _ = t.wait(); // Ok (completed before shutdown) or Err
+                }
+            }
+            drop(farm);
+            // handles may still be held by FarmStencil Drops above, but a
+            // dropped farm keeps no worker alive: only client Arcs remain
+            assert!(weak.upgrade().map(|sh| Arc::strong_count(&sh) <= 2).unwrap_or(true));
+        }
+    }
+
+    #[test]
+    fn commands_after_shutdown_error_instead_of_hanging() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(6);
+        let mut farm = SolverFarm::spawn(2).unwrap();
+        let h = farm.handle();
+        let mut t = h.admit_stencil(&s, &d, 2, 1).unwrap();
+        t.advance(2, None).unwrap();
+        farm.shutdown();
+        let err = t.advance(1, None).unwrap_err();
+        assert!(format!("{err}").contains("shut down"), "{err}");
+        let err = h.admit_stencil(&s, &d, 2, 1).unwrap_err();
+        assert!(format!("{err}").contains("shut down"), "{err}");
+        // state stays readable after shutdown (tenant idle, grid intact)
+        assert_eq!(t.state().unwrap().len(), d.data.len());
+    }
+
+    #[test]
+    fn double_submit_and_mid_flight_state_reads_are_errors() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(2);
+        let farm = SolverFarm::spawn(1).unwrap();
+        let mut t = farm.handle().admit_stencil(&s, &d, 2, 1).unwrap();
+        t.submit(10_000, None).unwrap();
+        assert!(t.submit(1, None).is_err(), "double submit must be rejected");
+        // state read with a command in flight is an error, not a torn read
+        // (the command may legitimately finish first — accept either)
+        match t.state() {
+            Ok(v) => assert_eq!(v.len(), d.data.len()),
+            Err(e) => assert!(format!("{e}").contains("in flight"), "{e}"),
+        }
+        t.wait().unwrap();
+        assert_eq!(t.state().unwrap().len(), d.data.len());
+    }
+
+    #[test]
+    fn released_tenant_slots_are_reused() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(1);
+        let farm = SolverFarm::spawn(1).unwrap();
+        let h = farm.handle();
+        for _ in 0..10 {
+            let mut t = h.admit_stencil(&s, &d, 2, 1).unwrap();
+            t.advance(1, None).unwrap();
+        }
+        assert!(h.tenant_slots() <= 2, "released slots must be recycled");
+        assert_eq!(farm.metrics().admissions, 10);
+    }
+
+    #[test]
+    fn admission_validates_like_the_solo_substrates() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(1);
+        let farm = SolverFarm::spawn(1).unwrap();
+        let h = farm.handle();
+        assert!(h.admit_stencil(&s, &d, 0, 1).is_err(), "zero shards");
+        assert!(h.admit_stencil(&s, &d, 2, 0).is_err(), "bt = 0");
+        let empty = Domain::zeros([1, 0, 8], s.radius, 2);
+        assert!(h.admit_stencil(&s, &empty, 2, 1).is_err(), "empty domain");
+        assert!(SolverFarm::spawn(0).is_err(), "zero workers");
+        let rect = Csr::from_coo(2, 3, vec![(0, 0, 1.0)]).unwrap();
+        let plan = MergePlan::new(&rect, 2);
+        assert!(h.admit_cg(Arc::new(rect), plan).is_err(), "rectangular matrix");
+        let a = gen::poisson2d(4);
+        let other = gen::poisson2d(5);
+        let plan = MergePlan::new(&other, 2);
+        assert!(h.admit_cg(Arc::new(a), plan).is_err(), "plan mismatch");
+    }
+}

@@ -1,11 +1,18 @@
-//! Runtime layer: loads AOT-compiled HLO artifacts (produced once by
-//! `python/compile/aot.py`) and executes them on the PJRT CPU client.
-//! Python is never on this path.
+//! Runtime layer: the execution substrates sessions run on.
+//!
+//! * [`client`]/[`manifest`]/[`tensor`] — load AOT-compiled HLO artifacts
+//!   (produced once by `python/compile/aot.py`) and execute them on the
+//!   PJRT CPU client. Python is never on this path.
+//! * [`farm`] — the multi-tenant [`farm::SolverFarm`] serving path: one
+//!   spawn-once worker pool executing many concurrent stencil/CG sessions
+//!   (see `SessionBuilder::farm`).
 
 pub mod client;
+pub mod farm;
 pub mod manifest;
 pub mod tensor;
 
 pub use client::{Executable, Runtime, RuntimeMetrics};
+pub use farm::{FarmHandle, FarmMetrics, SolverFarm};
 pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
 pub use tensor::HostTensor;

@@ -10,6 +10,7 @@ use std::sync::Arc;
 use crate::cg::pool::CgPool;
 use crate::coordinator::executor::ExecMode;
 use crate::error::{Error, Result};
+use crate::runtime::farm::{FarmCg, FarmHandle, FarmStencil};
 use crate::session::{Report, Solver};
 use crate::sparse::csr::Csr;
 use crate::sparse::gen;
@@ -24,7 +25,9 @@ use crate::stencil::{self, parallel, Domain};
 /// execution model, seed, and the temporal-blocking degree `bt`).
 #[derive(Clone, Debug)]
 pub struct StencilOptions {
-    /// Banded worker count (resolved, never 0 here).
+    /// Banded worker count (resolved, never 0 here). On a farm this is
+    /// the band-shard count of the admitted tenant (the partition is the
+    /// solo pool's, so traffic accounting matches it exactly).
     pub threads: usize,
     pub mode: ExecMode,
     /// Seed for the deterministic initial domain.
@@ -33,22 +36,31 @@ pub struct StencilOptions {
     /// epoch. `1` (the default) is per-step exchange — bit-identical to
     /// the pre-temporal runtime. `> 1` requires the persistent model.
     pub temporal: usize,
+    /// Shared multi-tenant worker pool to admit the solver to instead of
+    /// spawning a solo [`StencilPool`] (persistent mode only).
+    pub farm: Option<FarmHandle>,
 }
 
 impl Default for StencilOptions {
     fn default() -> Self {
-        Self { threads: 1, mode: ExecMode::Persistent, seed: 42, temporal: 1 }
+        Self { threads: 1, mode: ExecMode::Persistent, seed: 42, temporal: 1, farm: None }
     }
 }
 
 impl StencilOptions {
     pub fn new(threads: usize, mode: ExecMode, seed: u64) -> Self {
-        Self { threads, mode, seed, temporal: 1 }
+        Self { threads, mode, seed, temporal: 1, farm: None }
     }
 
     /// Set the temporal-blocking degree `bt` (see [`StencilOptions::temporal`]).
     pub fn temporal(mut self, bt: usize) -> Self {
         self.temporal = bt;
+        self
+    }
+
+    /// Admit the solver to a shared farm (see [`StencilOptions::farm`]).
+    pub fn farm(mut self, handle: FarmHandle) -> Self {
+        self.farm = Some(handle);
         self
     }
 }
@@ -75,9 +87,14 @@ pub struct CpuStencil {
     bt: usize,
     /// Host-loop state; `None` while the pool owns the state.
     state: Option<Domain>,
-    /// Spawn-once banded worker pool; `Some` iff persistent mode, from
-    /// `prepare` (or the first `advance`) until the next `prepare`/drop.
+    /// Spawn-once banded worker pool; `Some` iff persistent mode without
+    /// a farm, from `prepare` (or the first `advance`) until the next
+    /// `prepare`/drop.
     pool: Option<StencilPool>,
+    /// Shared farm to admit to instead of spawning a solo pool.
+    farm: Option<FarmHandle>,
+    /// Admitted farm tenant; `Some` iff persistent mode with a farm.
+    farm_session: Option<FarmStencil>,
     steps: usize,
     wall_seconds: f64,
     invocations: u64,
@@ -91,6 +108,9 @@ pub struct CpuStencil {
     computed_cells: u64,
     /// Useful cell updates (interior x steps).
     useful_cells: u64,
+    /// Time this solver's commands waited in the farm's submission queue
+    /// (farm-backed solves only; surfaced as `Report::queue_wait_seconds`).
+    queue_wait_seconds: f64,
 }
 
 impl CpuStencil {
@@ -110,6 +130,11 @@ impl CpuStencil {
                 "temporal blocking (bt > 1) requires the persistent execution model",
             ));
         }
+        if opts.farm.is_some() && opts.mode != ExecMode::Persistent {
+            return Err(Error::invalid(
+                "farm execution requires the persistent execution model",
+            ));
+        }
         let x0 = crate::session::stencil_domain(&spec, dims, opts.seed, init)?;
         Ok(Self {
             spec,
@@ -119,6 +144,8 @@ impl CpuStencil {
             bt: opts.temporal,
             state: None,
             pool: None,
+            farm: opts.farm.clone(),
+            farm_session: None,
             steps: 0,
             wall_seconds: 0.0,
             invocations: 0,
@@ -127,6 +154,7 @@ impl CpuStencil {
             residual: None,
             computed_cells: 0,
             useful_cells: 0,
+            queue_wait_seconds: 0.0,
         })
     }
 
@@ -155,6 +183,38 @@ impl CpuStencil {
     fn advance_inner(&mut self, steps: usize, tol: Option<f64>) -> Result<usize> {
         match self.mode {
             ExecMode::Persistent => {
+                if let Some(farm) = &self.farm {
+                    // multi-tenant path: the advance is enqueued into the
+                    // shared farm's submission queue and executed on its
+                    // resident workers — zero thread spawns, slabs stay
+                    // resident in the admitted tenant between commands
+                    if self.farm_session.is_none() {
+                        self.farm_session = Some(farm.admit_stencil(
+                            &self.spec,
+                            &self.x0,
+                            self.threads,
+                            self.bt,
+                        )?);
+                    }
+                    let tenant = self.farm_session.as_mut().expect("admitted above");
+                    let t0 = std::time::Instant::now();
+                    let run = tenant.advance(steps, tol);
+                    // the command happened even if the run failed: record
+                    // wall + launch before propagating (as the pool paths)
+                    self.wall_seconds += t0.elapsed().as_secs_f64();
+                    self.invocations += 1; // one farm command per advance
+                    let run = run?;
+                    self.steps += run.steps;
+                    self.host_bytes += run.global_bytes;
+                    self.computed_cells += run.computed_cells;
+                    self.useful_cells +=
+                        (self.x0.interior_cells() * run.steps) as u64;
+                    self.queue_wait_seconds += run.queue_wait_seconds;
+                    if run.residual.is_some() {
+                        self.residual = run.residual;
+                    }
+                    return Ok(run.steps);
+                }
                 if self.pool.is_none() {
                     // direct (un-prepared) use: spawn the residents now
                     self.pool = Some(StencilPool::spawn_temporal(
@@ -225,19 +285,28 @@ impl CpuStencil {
 
 impl Solver for CpuStencil {
     fn prepare(&mut self) -> Result<()> {
-        // shut the previous solve's pool down first (workers joined) so
-        // re-entry never leaks resident threads
+        // shut the previous solve's pool down first (workers joined) /
+        // release the previous farm tenant, so re-entry never leaks
+        // resident threads or farm slots
         self.pool = None;
+        self.farm_session = None;
         self.state = None;
         if self.mode == ExecMode::Persistent {
-            // spawn-once worker pool: the only thread creation of the
-            // whole solve; every subsequent `advance` is spawn-free
-            self.pool = Some(StencilPool::spawn_temporal(
-                &self.spec,
-                &self.x0,
-                self.threads,
-                self.bt,
-            )?);
+            if let Some(farm) = &self.farm {
+                // multi-tenant admission: registers resident state on the
+                // farm's spawn-once workers — zero thread spawns
+                self.farm_session =
+                    Some(farm.admit_stencil(&self.spec, &self.x0, self.threads, self.bt)?);
+            } else {
+                // spawn-once worker pool: the only thread creation of the
+                // whole solve; every subsequent `advance` is spawn-free
+                self.pool = Some(StencilPool::spawn_temporal(
+                    &self.spec,
+                    &self.x0,
+                    self.threads,
+                    self.bt,
+                )?);
+            }
         } else {
             self.state = Some(self.x0.clone());
         }
@@ -249,6 +318,7 @@ impl Solver for CpuStencil {
         self.residual = None;
         self.computed_cells = 0;
         self.useful_cells = 0;
+        self.queue_wait_seconds = 0.0;
         Ok(())
     }
 
@@ -282,10 +352,16 @@ impl Solver for CpuStencil {
                 self.useful_cells,
             ));
         }
+        if self.farm.is_some() {
+            rep.queue_wait_seconds = Some(self.queue_wait_seconds);
+        }
         rep
     }
 
     fn state_f64(&self) -> Result<Vec<f64>> {
+        if let Some(tenant) = &self.farm_session {
+            return tenant.state();
+        }
         if let Some(pool) = &self.pool {
             return Ok(pool.state());
         }
@@ -318,9 +394,17 @@ pub struct CpuCg {
     plan: MergePlan,
     /// Reduction blocks shared with the pool: `partition(n, parts)`.
     blocks: Vec<(usize, usize)>,
-    /// Spawn-once worker pool; `Some` iff threaded persistent mode, from
-    /// `prepare` until the next `prepare`/drop (joined on replacement).
+    /// Spawn-once worker pool; `Some` iff threaded persistent mode
+    /// without a farm, from `prepare` until the next `prepare`/drop
+    /// (joined on replacement).
     pool: Option<CgPool>,
+    /// Shared farm to admit to instead of spawning a solo pool
+    /// (persistent mode; supersedes the `threaded` pool).
+    farm: Option<FarmHandle>,
+    /// Admitted farm tenant; `Some` iff persistent mode with a farm.
+    farm_session: Option<FarmCg>,
+    /// Farm submission-queue wait accumulated since `prepare`.
+    queue_wait_seconds: f64,
     x: Vec<f64>,
     r: Vec<f64>,
     p: Vec<f64>,
@@ -389,6 +473,9 @@ impl CpuCg {
             mode,
             plan,
             pool: None,
+            farm: None,
+            farm_session: None,
+            queue_wait_seconds: 0.0,
             x: vec![0.0; n],
             r: vec![0.0; n],
             p: vec![0.0; n],
@@ -402,6 +489,13 @@ impl CpuCg {
         })
     }
 
+    /// Route this solver onto a shared farm (persistent mode only; set
+    /// before `prepare`). The farm supersedes the solo `threaded` pool.
+    pub(crate) fn with_farm(mut self, handle: FarmHandle) -> Self {
+        self.farm = Some(handle);
+        self
+    }
+
     /// OS threads the active pool has spawned (`None` when not pooled) —
     /// constant across `advance` calls, which the tests assert.
     #[cfg(test)]
@@ -410,10 +504,18 @@ impl CpuCg {
     }
 
     /// Global ("slow tier") bytes one iteration streams under this mode:
-    /// the matrix plus 5 (host-loop) or 2 (fused persistent) vector passes.
+    /// the matrix plus 5 (host-loop), 2 (fused persistent pool), or 4
+    /// (farm: the phase-split resident iteration un-fuses the two sweeps
+    /// into spmv / fixup+dot / update+dot / direction passes).
     fn bytes_per_iter(&self) -> u64 {
         let matrix = (self.a.nnz() * 12 + (self.a.n_rows + 1) * 4) as u64;
-        let passes = if self.mode == ExecMode::Persistent { 2 } else { 5 };
+        let passes = if self.mode != ExecMode::Persistent {
+            5
+        } else if self.farm.is_some() {
+            4
+        } else {
+            2
+        };
         matrix + (passes * self.a.n_rows * 8) as u64
     }
 
@@ -480,7 +582,20 @@ impl CpuCg {
         let t0 = std::time::Instant::now();
         let done;
         let mut failure: Option<Error> = None;
-        if let Some(pool) = self.pool.as_mut() {
+        if let Some(tenant) = self.farm_session.as_mut() {
+            // multi-tenant path: the command is enqueued into the shared
+            // farm and the iteration loop runs resident on its workers —
+            // zero spawns, same bits as the pooled/serial paths
+            let run =
+                tenant.run(&mut self.x, &mut self.r, &mut self.p, self.rr, threshold, iters)?;
+            self.rr = run.rr;
+            self.iters += run.iters;
+            self.queue_wait_seconds += run.queue_wait_seconds;
+            done = run.iters;
+            if let Some(msg) = run.error {
+                failure = Some(Error::Solver(msg));
+            }
+        } else if let Some(pool) = self.pool.as_mut() {
             // resident time loop: state rides the pool's buffers, the
             // workers iterate internally, zero spawns
             let run =
@@ -525,9 +640,11 @@ impl CpuCg {
 
 impl Solver for CpuCg {
     fn prepare(&mut self) -> Result<()> {
-        // shut the previous solve's pool down first (workers joined) so
-        // re-entry never leaks resident threads
+        // shut the previous solve's pool down first (workers joined) /
+        // release the previous farm tenant, so re-entry never leaks
+        // resident threads or farm slots
         self.pool = None;
+        self.farm_session = None;
         self.x.iter_mut().for_each(|v| *v = 0.0);
         self.r.copy_from_slice(&self.b);
         self.p.copy_from_slice(&self.b);
@@ -536,7 +653,11 @@ impl Solver for CpuCg {
             // the paper's TB-level "workload" cache: searched exactly once
             self.plan = MergePlan::new(&self.a, self.parts);
             self.plan_searches = 1;
-            if self.threaded {
+            if let Some(farm) = &self.farm {
+                // multi-tenant admission: resident vectors registered on
+                // the farm's spawn-once workers — zero thread spawns
+                self.farm_session = Some(farm.admit_cg(self.a.clone(), self.plan.clone())?);
+            } else if self.threaded {
                 // spawn-once worker pool: the only thread creation of the
                 // whole solve; every subsequent `advance` is spawn-free
                 self.pool =
@@ -549,6 +670,7 @@ impl Solver for CpuCg {
         self.wall_seconds = 0.0;
         self.invocations = 0;
         self.host_bytes = 0;
+        self.queue_wait_seconds = 0.0;
         Ok(())
     }
 
@@ -561,7 +683,7 @@ impl Solver for CpuCg {
     }
 
     fn report(&self) -> Report {
-        Report::new(
+        let mut rep = Report::new(
             self.mode,
             self.iters,
             self.wall_seconds,
@@ -571,7 +693,11 @@ impl Solver for CpuCg {
             "iters/s",
             Some(self.rr),
             self.pool.as_ref().map(|p| p.barrier_wait_seconds()),
-        )
+        );
+        if self.farm.is_some() {
+            rep.queue_wait_seconds = Some(self.queue_wait_seconds);
+        }
+        rep
     }
 
     fn state_f64(&self) -> Result<Vec<f64>> {

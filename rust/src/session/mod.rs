@@ -60,6 +60,19 @@
 //! Incremental use (`prepare` / `advance` / `report`) keeps solver state
 //! across calls — e.g. advancing CG in fused-chunk slabs until converged —
 //! while [`Session::run`] is the one-shot convenience that re-prepares.
+//!
+//! ## Multi-tenant serving: [`SessionBuilder::farm`]
+//!
+//! CPU-persistent sessions can share one
+//! [`crate::runtime::farm::SolverFarm`] instead of building a solo worker
+//! pool each: `.farm(&farm)` admits the session onto the farm's
+//! spawn-once resident workers (zero thread spawns per admission), routes
+//! `advance`/`advance_until` through the farm's submission queue, and
+//! keeps the session's slabs/vectors resident in the farm between its
+//! epochs — bit-identically to the solo-pool session at every farm worker
+//! count. [`Report::queue_wait_seconds`] surfaces the per-session queue
+//! latency; farm-level throughput/latency/fairness live in
+//! [`crate::runtime::farm::FarmMetrics`]. Solo pools remain the default.
 
 pub mod cpu;
 pub mod pjrt;
@@ -71,6 +84,7 @@ use std::rc::Rc;
 use crate::coordinator::autotune;
 pub use crate::coordinator::executor::ExecMode;
 use crate::error::{Error, Result};
+use crate::runtime::farm::{FarmHandle, SolverFarm};
 use crate::runtime::Runtime;
 use crate::simgpu::device::DeviceSpec;
 use crate::sparse::csr::Csr;
@@ -227,6 +241,8 @@ pub struct SessionBuilder {
     /// under `ExecPolicy::Auto` on the CPU stencil substrate).
     temporal: Option<usize>,
     init: Option<Vec<f64>>,
+    /// Shared multi-tenant worker pool; `None` = solo pools (default).
+    farm: Option<FarmHandle>,
 }
 
 impl Default for SessionBuilder {
@@ -246,6 +262,7 @@ impl SessionBuilder {
             cg_threaded: false,
             temporal: None,
             init: None,
+            farm: None,
         }
     }
 
@@ -288,6 +305,26 @@ impl SessionBuilder {
     /// [`stencil::temporal::overlap_cost_banded`] analytic model.
     pub fn temporal(mut self, bt: usize) -> Self {
         self.temporal = Some(bt);
+        self
+    }
+
+    /// Run this session's solver on a shared multi-tenant
+    /// [`SolverFarm`] instead of building it a solo worker pool: the
+    /// session is *admitted* to the farm's resident workers (zero thread
+    /// spawns), its `advance`/`advance_until` calls are enqueued into the
+    /// farm's submission queue, and its slab/vector state stays resident
+    /// in the farm between epochs. Requires the CPU persistent-threads
+    /// backend and the persistent execution model (`ExecPolicy::Auto`
+    /// resolves to it directly — farm sessions never probe solo pools).
+    /// Iterates are bit-identical to the solo-pool session at every farm
+    /// worker count. Solo pools remain the default.
+    pub fn farm(self, farm: &SolverFarm) -> Self {
+        self.farm_handle(farm.handle())
+    }
+
+    /// [`SessionBuilder::farm`] from an already-cloned [`FarmHandle`].
+    pub fn farm_handle(mut self, handle: FarmHandle) -> Self {
+        self.farm = Some(handle);
         self
     }
 
@@ -360,13 +397,55 @@ impl SessionBuilder {
                 }
             }
         }
-        // resolve the CPU thread count before any mode probing
+        // farm sessions: shared-worker execution is CPU-persistent-only,
+        // and the execution model is the persistent one by definition
+        if self.farm.is_some() {
+            if !matches!(backend, Backend::CpuPersistent { .. }) {
+                return Err(Error::invalid(
+                    "farm sessions run on the CPU persistent-threads backend",
+                ));
+            }
+            if matches!(self.policy, ExecPolicy::Fixed(m) if m != ExecMode::Persistent) {
+                return Err(Error::invalid(
+                    "farm sessions require the persistent execution model",
+                ));
+            }
+        }
+        // resolve the CPU thread count before any mode probing. Farm
+        // sessions skip the *measured* autotune: a probe would build solo
+        // pools (thread spawns) for a session whose whole point is to
+        // reuse the farm's resident workers — 0 resolves structurally.
         let backend = match backend {
+            Backend::CpuPersistent { threads: 0 } if self.farm.is_some() => {
+                Backend::CpuPersistent { threads: crate::util::resolve_workers(0) }
+            }
             Backend::CpuPersistent { threads: 0 } => {
                 Backend::CpuPersistent { threads: auto_threads(&workload, self.seed)? }
             }
             b => b,
         };
+        if let Some(farm) = self.farm.clone() {
+            // the farm decides scheduling; no mode/temporal probing
+            let temporal = self.temporal.unwrap_or(1);
+            let mut solver = make_solver(
+                &backend,
+                &workload,
+                ExecMode::Persistent,
+                self.seed,
+                self.cg_parts,
+                self.cg_threaded,
+                temporal,
+                self.init.as_deref(),
+                Some(farm),
+            )?;
+            solver.prepare()?;
+            return Ok(Session {
+                solver,
+                mode: ExecMode::Persistent,
+                temporal,
+                backend_name: backend.name(),
+            });
+        }
         let candidates = mode_candidates(&backend, &workload);
         // a pinned bt > 1 narrows Auto's mode search to the persistent
         // model (the only one that can honor it)
@@ -404,6 +483,7 @@ impl SessionBuilder {
                         self.cg_threaded,
                         bt,
                         self.init.as_deref(),
+                        None,
                     )?;
                     probe.prepare()?;
                     // probe at steady-state depth (chunk-aligned): the
@@ -462,6 +542,7 @@ impl SessionBuilder {
             self.cg_threaded,
             temporal,
             self.init.as_deref(),
+            None,
         )?;
         solver.prepare()?;
         Ok(Session { solver, mode, temporal, backend_name: backend.name() })
@@ -575,7 +656,9 @@ pub(crate) fn stencil_domain(
     Ok(dom)
 }
 
-fn parse_interior(interior: &str) -> Result<Vec<usize>> {
+/// Parse a `"128x128"`-style interior string, rejecting empty and
+/// zero-sized extents (crate-visible: the farm harness shares it).
+pub(crate) fn parse_interior(interior: &str) -> Result<Vec<usize>> {
     let dims = interior
         .split('x')
         .map(|d| {
@@ -752,6 +835,7 @@ fn make_solver(
     cg_threaded: bool,
     temporal: usize,
     init: Option<&[f64]>,
+    farm: Option<FarmHandle>,
 ) -> Result<Box<dyn Solver>> {
     match (backend, workload) {
         (Backend::Pjrt(rt), Workload::Stencil { bench, interior, dtype }) => Ok(Box::new(
@@ -765,15 +849,24 @@ fn make_solver(
         }
         (Backend::CpuPersistent { threads }, Workload::Stencil { bench, interior, .. }) => {
             let dims = parse_interior(interior)?;
-            let opts = cpu::StencilOptions { threads: *threads, mode, seed, temporal };
+            let opts = cpu::StencilOptions { threads: *threads, mode, seed, temporal, farm };
             Ok(Box::new(cpu::CpuStencil::new(bench, &dims, &opts, init)?))
         }
-        (Backend::CpuPersistent { threads }, Workload::Cg { n }) => Ok(Box::new(
-            cpu::CpuCg::poisson(*n, seed, cg_parts, *threads, cg_threaded, mode)?,
-        )),
-        (Backend::CpuPersistent { threads }, Workload::CgSystem { a, b }) => Ok(Box::new(
-            cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, *threads, cg_threaded, mode)?,
-        )),
+        (Backend::CpuPersistent { threads }, Workload::Cg { n }) => {
+            let mut s = cpu::CpuCg::poisson(*n, seed, cg_parts, *threads, cg_threaded, mode)?;
+            if let Some(h) = farm {
+                s = s.with_farm(h);
+            }
+            Ok(Box::new(s))
+        }
+        (Backend::CpuPersistent { threads }, Workload::CgSystem { a, b }) => {
+            let mut s =
+                cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, *threads, cg_threaded, mode)?;
+            if let Some(h) = farm {
+                s = s.with_farm(h);
+            }
+            Ok(Box::new(s))
+        }
         (Backend::Simulated(dev), Workload::Stencil { bench, interior, dtype }) => {
             let dims = parse_interior(interior)?;
             let elem = if dtype == "f64" { 8 } else { 4 };
@@ -984,6 +1077,42 @@ mod tests {
             .build()
             .unwrap();
         assert!([ExecMode::HostLoop, ExecMode::Persistent].contains(&s.mode()));
+    }
+
+    #[test]
+    fn farm_sessions_validate_backend_and_mode() {
+        let farm = SolverFarm::spawn(1).unwrap();
+        // non-CPU backend
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::simulated(a100()))
+                .workload(Workload::stencil("2d5pt", "64x64", "f64"))
+                .farm(&farm)
+                .build()
+        )
+        .contains("CPU"));
+        // per-step execution model
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(2))
+                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+                .mode(ExecMode::HostLoop)
+                .farm(&farm)
+                .build()
+        )
+        .contains("persistent"));
+        // a valid farm session resolves to Persistent (Auto included) and
+        // honors a pinned temporal degree without probing
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            .auto()
+            .temporal(2)
+            .farm(&farm)
+            .build()
+            .unwrap();
+        assert_eq!(s.mode(), ExecMode::Persistent);
+        assert_eq!(s.temporal_degree(), 2);
     }
 
     #[test]

@@ -37,6 +37,13 @@ pub struct Report {
     /// measures it (CPU stencil; 1.0 means no overlap work, `None` means
     /// the backend does not track it).
     pub redundancy: Option<f64>,
+    /// Total time this solver's commands waited in a shared
+    /// [`crate::runtime::farm::SolverFarm`] submission queue before their
+    /// first shard was dispatched (farm-backed sessions only; `None` on
+    /// solo substrates). Per-session queue latency — the farm-level
+    /// p50/p99/fairness view lives in
+    /// [`crate::runtime::farm::FarmMetrics`].
+    pub queue_wait_seconds: Option<f64>,
 }
 
 impl Report {
@@ -65,6 +72,7 @@ impl Report {
             residual,
             barrier_wait_seconds,
             redundancy: None,
+            queue_wait_seconds: None,
         }
     }
 }

@@ -82,13 +82,16 @@
 //! # Command protocol
 //!
 //! Workers are spawned once by [`StencilPool::spawn`] and then park on a
-//! condvar. The main thread drives them with epoch-stamped commands
-//! (`Run { steps, tol }` / `Shutdown`) through the control mutex; each
-//! worker executes the whole resident time loop for a `Run`, reports into
-//! the shared `Outcome`, bumps `finished`, and parks again. The
-//! command/completion handshake establishes happens-before in both
-//! directions, so between runs the main thread may read the shared grid
-//! ([`StencilPool::state`]) while the workers' slabs stay untouched.
+//! condvar. The main thread drives them with epoch-stamped `Run { steps,
+//! tol }` commands through the control mutex; each worker executes the
+//! whole resident time loop for a `Run`, reports into the shared
+//! `Outcome`, bumps `finished`, and parks again. The command/completion
+//! handshake establishes happens-before in both directions, so between
+//! runs the main thread may read the shared grid ([`StencilPool::state`])
+//! while the workers' slabs stay untouched. Teardown is a dedicated flag
+//! checked on every condvar wake — never a value raced through the
+//! command slot — so `drop`'s join cannot hang on a worker parked while
+//! the epoch stamp advances.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -104,6 +107,10 @@ use crate::stencil::temporal;
 use crate::util::counters;
 
 /// Command issued to the parked workers; epoch-stamped in `CtlState`.
+/// Teardown is *not* a command: it is the dedicated `CtlState::shutdown`
+/// flag, checked on every condvar wake, so a worker parked while the
+/// epoch stamp advances during teardown can never miss it (and a pending
+/// command slot is never overwritten by a shutdown race).
 #[derive(Clone, Copy)]
 enum Cmd {
     Idle,
@@ -113,7 +120,6 @@ enum Cmd {
     /// (collectively) once it drops to `t`; with `None` no residual is
     /// computed — fixed-step advances pay nothing for the machinery.
     Run { steps: usize, tol: Option<f64> },
-    Shutdown,
 }
 
 /// What one `Run` produced. `steps`/`residual` are replicated values
@@ -132,6 +138,8 @@ struct CtlState {
     cmd: Cmd,
     finished: usize,
     outcome: Outcome,
+    /// Teardown flag, separate from the command slot (see [`Cmd`]).
+    shutdown: bool,
 }
 
 struct Control {
@@ -267,6 +275,7 @@ impl StencilPool {
                     cmd: Cmd::Idle,
                     finished: 0,
                     outcome: Outcome::default(),
+                    shutdown: false,
                 }),
                 cmd_cv: Condvar::new(),
                 done_cv: Condvar::new(),
@@ -286,11 +295,10 @@ impl StencilPool {
                     // parked on cmd_cv and would otherwise pin their
                     // Arc<Shared> (and the grid) forever. The barrier is
                     // not armed yet — no worker enters the resident loop
-                    // without a Run command — so a shutdown epoch is safe.
+                    // without a Run command — so teardown is safe here.
                     {
                         let mut g = shared.ctl.lock();
-                        g.epoch += 1;
-                        g.cmd = Cmd::Shutdown;
+                        g.shutdown = true;
                         shared.ctl.cmd_cv.notify_all();
                     }
                     for h in handles {
@@ -405,12 +413,14 @@ impl StencilPool {
     /// workers left to execute it). The one-shot driver uses this to keep
     /// the join inside its timed region (matching the host-loop baseline,
     /// whose per-step joins are always timed); `drop` after this is a
-    /// no-op.
+    /// no-op. Teardown is a dedicated flag — not an epoch-stamped command
+    /// — so a worker parked on the condvar while the epoch stamp advances
+    /// can never miss it: the join cannot hang (see the rapid create/drop
+    /// stress test).
     pub fn shutdown(&mut self) {
         {
             let mut g = self.shared.ctl.lock();
-            g.epoch += 1;
-            g.cmd = Cmd::Shutdown;
+            g.shutdown = true;
             self.shared.ctl.cmd_cv.notify_all();
         }
         for h in self.handles.drain(..) {
@@ -448,7 +458,16 @@ fn worker_main(sh: &Shared, w: usize) {
     loop {
         let cmd = {
             let mut g = sh.ctl.lock();
-            while g.epoch == seen {
+            loop {
+                // the shutdown flag is checked on *every* wake — before
+                // and independently of the epoch stamp — so teardown can
+                // never be missed by a worker parked across stamp changes
+                if g.shutdown {
+                    return;
+                }
+                if g.epoch != seen {
+                    break;
+                }
                 g = sh.ctl.cmd_cv.wait(g).unwrap_or_else(|p| p.into_inner());
             }
             seen = g.epoch;
@@ -456,7 +475,6 @@ fn worker_main(sh: &Shared, w: usize) {
         };
         match cmd {
             Cmd::Idle => {}
-            Cmd::Shutdown => break,
             Cmd::Run { steps, tol } => {
                 // A panic inside the resident loop would otherwise leave
                 // `finished` forever short and hang `run()`. Catching it
@@ -941,6 +959,34 @@ mod tests {
         // ...but a further run is an error, not a silent deadlock
         let err = pool.run(1, None).unwrap_err();
         assert!(format!("{err}").contains("shut down"), "{err}");
+    }
+
+    /// Satellite: the teardown race — 64 rapid create/drop cycles, mixing
+    /// dropped-idle pools, dropped-after-run pools, and explicit
+    /// shutdowns. Every join must complete promptly (the test hanging IS
+    /// the failure mode the shutdown flag closes), and every worker must
+    /// release its `Arc<Shared>`.
+    #[test]
+    fn rapid_create_drop_cycles_never_hang() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(12);
+        for cycle in 0..64usize {
+            let mut pool = StencilPool::spawn(&s, &d, 1 + cycle % 4).unwrap();
+            let weak = pool.shared_weak();
+            match cycle % 3 {
+                0 => {} // drop a pool that never ran
+                1 => {
+                    pool.run(1, None).unwrap();
+                }
+                _ => {
+                    pool.run(2, None).unwrap();
+                    pool.shutdown(); // explicit teardown, then drop's no-op
+                }
+            }
+            drop(pool);
+            assert_eq!(weak.strong_count(), 0, "cycle {cycle}: workers not joined");
+        }
     }
 
     #[test]

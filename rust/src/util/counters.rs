@@ -21,6 +21,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
 static BARRIER_SYNCS: AtomicU64 = AtomicU64::new(0);
+static FARM_ADMISSIONS: AtomicU64 = AtomicU64::new(0);
+static FARM_COMMANDS: AtomicU64 = AtomicU64::new(0);
+static FARM_TASKS: AtomicU64 = AtomicU64::new(0);
 
 /// Record `n` OS threads spawned by a solver substrate.
 pub fn note_thread_spawns(n: u64) {
@@ -43,6 +46,40 @@ pub fn barrier_syncs() -> u64 {
     BARRIER_SYNCS.load(Ordering::Relaxed)
 }
 
+/// Record `n` sessions admitted to a [`crate::runtime::farm::SolverFarm`].
+/// The multi-tenant acceptance bar is that this moves while
+/// [`thread_spawns`] does **not**: admissions reuse the farm's resident
+/// workers instead of building pools.
+pub fn note_farm_admissions(n: u64) {
+    FARM_ADMISSIONS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total farm session admissions since process start.
+pub fn farm_admissions() -> u64 {
+    FARM_ADMISSIONS.load(Ordering::Relaxed)
+}
+
+/// Record `n` commands (advance/advance_until/run) enqueued to farms.
+pub fn note_farm_commands(n: u64) {
+    FARM_COMMANDS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total farm commands since process start.
+pub fn farm_commands() -> u64 {
+    FARM_COMMANDS.load(Ordering::Relaxed)
+}
+
+/// Record `n` completed farm shard tasks (the farm's unit of scheduled
+/// work — band or block shards of one phase).
+pub fn note_farm_tasks(n: u64) {
+    FARM_TASKS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total farm shard tasks since process start.
+pub fn farm_tasks() -> u64 {
+    FARM_TASKS.load(Ordering::Relaxed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,5 +96,16 @@ mod tests {
         let before = barrier_syncs();
         note_barrier_syncs(2);
         assert!(barrier_syncs() >= before + 2);
+    }
+
+    #[test]
+    fn farm_counters_are_monotonic() {
+        let (a, c, t) = (farm_admissions(), farm_commands(), farm_tasks());
+        note_farm_admissions(1);
+        note_farm_commands(2);
+        note_farm_tasks(3);
+        assert!(farm_admissions() >= a + 1);
+        assert!(farm_commands() >= c + 2);
+        assert!(farm_tasks() >= t + 3);
     }
 }

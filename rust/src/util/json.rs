@@ -1,0 +1,304 @@
+//! Minimal JSON parsing for the `BENCH_*.json` artifacts.
+//!
+//! The bench emitters hand-format a small, fixed schema (objects, arrays,
+//! strings, finite numbers, booleans, null) and the vendored dependency
+//! set carries no serde — so the perf-regression gate
+//! (`tools: bench_check`) parses with this recursive-descent reader
+//! instead. It accepts exactly the JSON the emitters produce plus
+//! ordinary whitespace, and rejects trailing garbage; it is not a
+//! general-purpose JSON library (no surrogate-pair decoding, no
+//! number-precision guarantees beyond `f64`).
+
+use crate::error::{Error, Result};
+
+/// A parsed JSON value. Object keys keep emission order (the gate
+/// compares by lookup, never by index).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one JSON document (rejects trailing non-whitespace).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(Error::invalid(format!(
+                "json: trailing garbage at byte {pos}"
+            )));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(Error::invalid(format!(
+            "json: expected {:?} at byte {}",
+            c as char, *pos
+        )))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err(Error::invalid("json: unexpected end of input")),
+        Some(b'{') => parse_object(b, pos),
+        Some(b'[') => parse_array(b, pos),
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(Error::invalid(format!("json: bad literal at byte {}", *pos)))
+    }
+}
+
+fn parse_object(b: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        fields.push((key, val));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => return Err(Error::invalid(format!("json: expected ',' or '}}' at byte {}", *pos))),
+        }
+    }
+}
+
+fn parse_array(b: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(Error::invalid(format!("json: expected ',' or ']' at byte {}", *pos))),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    while let Some(&c) = b.get(*pos) {
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let esc = b.get(*pos).copied().ok_or_else(|| {
+                    Error::invalid("json: unterminated escape")
+                })?;
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = b
+                            .get(*pos..*pos + 4)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or_else(|| Error::invalid("json: bad \\u escape"))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| Error::invalid("json: bad \\u escape"))?;
+                        *pos += 4;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    _ => return Err(Error::invalid("json: unknown escape")),
+                }
+            }
+            _ => {
+                // multi-byte UTF-8: copy the full sequence through
+                let start = *pos - 1;
+                let len = utf8_len(c);
+                let end = start + len;
+                let s = b
+                    .get(start..end)
+                    .and_then(|seg| std::str::from_utf8(seg).ok())
+                    .ok_or_else(|| Error::invalid("json: invalid utf-8 in string"))?;
+                out.push_str(s);
+                *pos = end;
+            }
+        }
+    }
+    Err(Error::invalid("json: unterminated string"))
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).expect("ascii number run");
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| Error::invalid(format!("json: bad number {s:?} at byte {start}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_bench_schema_shapes() {
+        let doc = r#"{"bench":"farm","steps":8,"rows":[{"tenants":1,"speedup":1.53,"ok":true,"none":null}]}"#;
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("farm"));
+        assert_eq!(v.get("steps").unwrap().as_u64(), Some(8));
+        let rows = v.get("rows").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("tenants").unwrap().as_u64(), Some(1));
+        assert!((rows[0].get("speedup").unwrap().as_f64().unwrap() - 1.53).abs() < 1e-12);
+        assert_eq!(rows[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(rows[0].get("none"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parses_numbers_strings_and_nesting() {
+        let v = Json::parse(" [ -1.5e3 , \"a\\\"b\\n\" , [] , {} ] ").unwrap();
+        let items = v.as_array().unwrap();
+        assert_eq!(items[0].as_f64(), Some(-1500.0));
+        assert_eq!(items[1].as_str(), Some("a\"b\n"));
+        assert_eq!(items[2], Json::Arr(Vec::new()));
+        assert_eq!(items[3], Json::Obj(Vec::new()));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "{\"a\":1} trailing",
+            "\"unterminated",
+            "{\"a\" 1}",
+            "nope",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn as_u64_rejects_fractions_and_negatives() {
+        assert_eq!(Json::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Json::Num(3.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Str("3".into()).as_u64(), None);
+    }
+
+    #[test]
+    fn roundtrips_a_real_emitter_fragment() {
+        // exactly the shape MeasuredStencilMode::json produces
+        let doc = "{\"mode\":\"persistent\",\"bt\":4,\"wall_seconds\":0.001234,\
+                   \"invocations\":1,\"advance_spawns\":0,\"barrier_syncs\":5,\
+                   \"global_bytes\":123456,\"redundancy\":1.1250}";
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get("mode").unwrap().as_str(), Some("persistent"));
+        assert_eq!(v.get("advance_spawns").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("barrier_syncs").unwrap().as_u64(), Some(5));
+    }
+}

@@ -7,6 +7,7 @@ pub mod args;
 pub mod check;
 pub mod counters;
 pub mod fmt;
+pub mod json;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,190 @@
+//! Integration tests of the multi-tenant serving path: sessions built
+//! with `SessionBuilder::farm(&farm)` must be observably identical to
+//! their solo-pool builds — same bits, same stop epochs, same Report
+//! accounting shape — at every farm worker count, including mixed
+//! stencil + CG tenant populations and resumed advances.
+
+use perks::runtime::farm::SolverFarm;
+use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+
+fn solo_stencil(interior: &str, seed: u64, bt: usize) -> perks::Session {
+    SessionBuilder::new()
+        .backend(Backend::cpu(3))
+        .workload(Workload::stencil("2d5pt", interior, "f64"))
+        .mode(ExecMode::Persistent)
+        .temporal(bt)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+fn farm_stencil(farm: &SolverFarm, interior: &str, seed: u64, bt: usize) -> perks::Session {
+    SessionBuilder::new()
+        .backend(Backend::cpu(3))
+        .workload(Workload::stencil("2d5pt", interior, "f64"))
+        .mode(ExecMode::Persistent)
+        .temporal(bt)
+        .seed(seed)
+        .farm(farm)
+        .build()
+        .unwrap()
+}
+
+/// The acceptance bar: farm sessions walk their solo-pool bits at farm
+/// worker counts {1, 2, 3, 8}, across resumed advances, at bt ∈ {1, 2}.
+#[test]
+fn farm_sessions_are_bit_identical_to_solo_sessions_across_worker_counts() {
+    for bt in [1usize, 2] {
+        let mut solo = solo_stencil("16x16", 7, bt);
+        solo.advance(5).unwrap();
+        solo.advance(6).unwrap();
+        let want = solo.state_f64().unwrap();
+        for workers in [1usize, 2, 3, 8] {
+            let farm = SolverFarm::spawn(workers).unwrap();
+            let mut s = farm_stencil(&farm, "16x16", 7, bt);
+            assert_eq!(s.mode(), ExecMode::Persistent);
+            assert_eq!(s.temporal_degree(), bt);
+            s.advance(5).unwrap();
+            s.advance(6).unwrap();
+            assert_eq!(
+                s.state_f64().unwrap(),
+                want,
+                "bt={bt} workers={workers}: farm session diverged from solo"
+            );
+            let rep = s.report();
+            assert_eq!(rep.steps, 11);
+            assert_eq!(rep.invocations, 2, "one farm command per advance");
+            assert!(rep.queue_wait_seconds.is_some(), "farm sessions report queue wait");
+            // admission + advances reused the startup worker set
+            assert_eq!(farm.spawn_count(), workers as u64);
+        }
+    }
+}
+
+/// Mixed stencil + CG tenants sharing one farm, driven through the
+/// session API, each bit-identical to its solo build.
+#[test]
+fn mixed_stencil_and_cg_sessions_share_one_farm_bit_identically() {
+    // solo references
+    let mut solo_st = solo_stencil("14x14", 3, 1);
+    solo_st.advance(8).unwrap();
+    let want_st = solo_st.state_f64().unwrap();
+    let mut solo_cg = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::cg(144))
+        .mode(ExecMode::Persistent)
+        .seed(5)
+        .build()
+        .unwrap();
+    solo_cg.advance(12).unwrap();
+    let want_cg = solo_cg.state_f64().unwrap();
+    let want_rr = solo_cg.report().residual.unwrap();
+
+    let farm = SolverFarm::spawn(3).unwrap();
+    let mut st = farm_stencil(&farm, "14x14", 3, 1);
+    let mut cg = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::cg(144))
+        .mode(ExecMode::Persistent)
+        .seed(5)
+        .farm(&farm)
+        .build()
+        .unwrap();
+    // interleaved advances on the shared workers
+    st.advance(3).unwrap();
+    cg.advance(7).unwrap();
+    st.advance(5).unwrap();
+    cg.advance(5).unwrap();
+    assert_eq!(st.state_f64().unwrap(), want_st, "stencil tenant vs solo");
+    assert_eq!(cg.state_f64().unwrap(), want_cg, "cg tenant vs solo");
+    assert_eq!(
+        cg.report().residual.unwrap().to_bits(),
+        want_rr.to_bits(),
+        "cg recurrence bits"
+    );
+    let m = farm.metrics();
+    assert_eq!(m.admissions, 2);
+    assert!(m.commands >= 4);
+    assert_eq!(farm.spawn_count(), 3, "mixed tenants spawned nothing");
+}
+
+/// `advance_until` through a farm stops on the same epoch with the same
+/// residual bits as the solo session, at every farm worker count.
+#[test]
+fn farm_advance_until_stops_on_the_solo_epoch() {
+    let (tol, max) = (1e-8, 20_000);
+    let mut solo = solo_stencil("8x8", 21, 1);
+    let want_steps = solo.advance_until(tol, max).unwrap();
+    assert!(want_steps > 0 && want_steps < max, "solo did not converge");
+    let want_res = solo.report().residual.unwrap();
+    let want_state = solo.state_f64().unwrap();
+    for workers in [1usize, 2, 8] {
+        let farm = SolverFarm::spawn(workers).unwrap();
+        let mut s = farm_stencil(&farm, "8x8", 21, 1);
+        let steps = s.advance_until(tol, max).unwrap();
+        assert_eq!(steps, want_steps, "workers={workers}: stop step");
+        let rep = s.report();
+        assert_eq!(
+            rep.residual.unwrap().to_bits(),
+            want_res.to_bits(),
+            "workers={workers}: residual bits"
+        );
+        assert_eq!(rep.steps, steps);
+        assert_eq!(s.state_f64().unwrap(), want_state, "workers={workers}: state bits");
+    }
+    // CG convergence path: same iterate count and recurrence bits
+    let mut solo_cg = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::cg(100))
+        .mode(ExecMode::Persistent)
+        .seed(6)
+        .build()
+        .unwrap();
+    let solo_iters = solo_cg.advance_until(1e-10, 10_000).unwrap();
+    assert!(solo_iters < 10_000);
+    let farm = SolverFarm::spawn(2).unwrap();
+    let mut cg = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::cg(100))
+        .mode(ExecMode::Persistent)
+        .seed(6)
+        .farm(&farm)
+        .build()
+        .unwrap();
+    let iters = cg.advance_until(1e-10, 10_000).unwrap();
+    assert_eq!(iters, solo_iters);
+    assert_eq!(
+        cg.report().residual.unwrap().to_bits(),
+        solo_cg.report().residual.unwrap().to_bits()
+    );
+    assert_eq!(cg.state_f64().unwrap(), solo_cg.state_f64().unwrap());
+}
+
+/// `prepare()` re-entry on a farm session releases the old tenant,
+/// admits a fresh one, and restarts from x0 — without spawning.
+#[test]
+fn farm_session_prepare_reentry_readmits_cleanly() {
+    let farm = SolverFarm::spawn(2).unwrap();
+    let mut s = farm_stencil(&farm, "12x12", 4, 1);
+    s.advance(6).unwrap();
+    s.prepare().unwrap();
+    s.advance(2).unwrap();
+    let mut solo = solo_stencil("12x12", 4, 1);
+    solo.advance(2).unwrap();
+    assert_eq!(s.state_f64().unwrap(), solo.state_f64().unwrap(), "restart runs from x0");
+    assert_eq!(s.report().steps, 2, "metrics reset on re-entry");
+    assert_eq!(farm.spawn_count(), 2, "re-admission spawned nothing");
+    assert!(farm.metrics().admissions >= 2);
+}
+
+/// A farm outliving its sessions and sessions outliving the farm both
+/// degrade safely: shutdown turns subsequent advances into errors.
+#[test]
+fn sessions_surviving_farm_shutdown_error_instead_of_hanging() {
+    let mut farm = SolverFarm::spawn(2).unwrap();
+    let mut s = farm_stencil(&farm, "8x8", 2, 1);
+    s.advance(2).unwrap();
+    farm.shutdown();
+    let err = s.advance(1).unwrap_err();
+    assert!(format!("{err}").contains("shut down"), "{err}");
+}
