@@ -1,0 +1,94 @@
+//! Async submission-plane stress: thousands of concurrent farm tenants
+//! multiplexed onto one or two front-end OS threads, every advance a
+//! batched command graph. The serving claim under test: completion
+//! futures + `LocalExecutor` remove the thread-per-waiter cost, graph
+//! batching pins enqueue-side scheduler-lock acquisitions to one per
+//! batch (`sched_lock_acquisitions == plane_batches`), and admission
+//! control sheds nothing under healthy load — all while tenant state
+//! stays bit-identical to a solo pool (asserted inside the harness).
+//! Emits `BENCH_plane.json` (+ a `BENCH {...}` stdout line) for the CI
+//! perf-regression gate (`tools: bench_check`).
+//!
+//! Run: `cargo bench --bench plane_stress` (`-- --quick` for the CI
+//! smoke configuration; the full run drives 10k tenants on 2 threads).
+
+use perks::harness;
+use perks::util::fmt::Table;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // tiny domains: the stress target is the submission plane, not the
+    // stencil math — per-solve compute must not drown the plane cost
+    let (bench, interior, steps, segments, rounds, workers) =
+        if quick { ("2d5pt", "12x12", 2usize, 4usize, 2usize, 4usize) } else { ("2d5pt", "12x12", 2, 4, 2, 8) };
+    let sweep: &[(usize, usize)] =
+        if quick { &[(64, 1), (256, 1)] } else { &[(1_000, 1), (10_000, 2)] };
+
+    println!(
+        "Plane stress: async tenants over SolverFarm({workers} workers) via batched \
+         command graphs ({bench} {interior}, {segments}x{steps}-step graphs, {rounds} rounds)\n"
+    );
+    let mut t = Table::new(&[
+        "tenants",
+        "fe threads",
+        "solves/s",
+        "batches",
+        "sched locks",
+        "sheds",
+        "timeouts",
+        "inflight peak",
+        "admission spawns",
+    ]);
+    let mut rows = Vec::new();
+    for &(tenants, frontend_threads) in sweep {
+        let row = harness::plane_stress(
+            bench,
+            interior,
+            steps,
+            segments,
+            rounds,
+            workers,
+            tenants,
+            frontend_threads,
+        )
+        .unwrap();
+        // the batched-path acceptance bars, enforced at measurement time
+        assert_eq!(
+            row.sched_lock_acquisitions, row.plane_batches,
+            "graph batching leaked extra scheduler-lock acquisitions"
+        );
+        assert_eq!(row.plane_sheds, 0, "unbounded plane shed a submission");
+        assert_eq!(row.plane_timeouts, 0, "unbounded plane timed out a submission");
+        assert_eq!(row.admission_spawns, 0, "plane stress spawned threads per tenant");
+        t.row(&[
+            row.tenants.to_string(),
+            row.frontend_threads.to_string(),
+            format!("{:.1}", row.solves_per_sec),
+            row.plane_batches.to_string(),
+            row.sched_lock_acquisitions.to_string(),
+            row.plane_sheds.to_string(),
+            row.plane_timeouts.to_string(),
+            row.inflight_peak.to_string(),
+            row.admission_spawns.to_string(),
+        ]);
+        rows.push(row);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nevery tenant is an async task awaiting a completion future; the scheduler\n\
+         lock is taken once per graph batch, not once per epoch segment."
+    );
+
+    let json: Vec<String> = rows.iter().map(|r| r.json()).collect();
+    let payload = format!(
+        "{{\"bench\":\"plane\",\"case\":\"{bench}\",\"interior\":\"{interior}\",\
+         \"steps\":{steps},\"segments\":{segments},\"rounds\":{rounds},\
+         \"workers\":{workers},\"rows\":[{}]}}",
+        json.join(",")
+    );
+    println!("BENCH {payload}");
+    match std::fs::write("BENCH_plane.json", format!("{payload}\n")) {
+        Ok(()) => println!("wrote BENCH_plane.json"),
+        Err(e) => eprintln!("could not write BENCH_plane.json: {e}"),
+    }
+}

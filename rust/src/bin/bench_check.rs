@@ -2,17 +2,20 @@
 //! artifacts (the `tools/bench_check` binary of the perf-smoke job).
 //!
 //! Reads the `BENCH_stencil.json` / `BENCH_temporal.json` /
-//! `BENCH_farm.json` files the quick-mode benches emit and fails (exit 1)
-//! on:
+//! `BENCH_farm.json` / `BENCH_plane.json` files the quick-mode benches
+//! emit and fails (exit 1) on:
 //!
 //! * **counter-invariant breaks** — machine-independent, always checked:
 //!   any pooled/persistent arm with `advance_spawns > 0` (a resident
 //!   advance must never spawn), any pooled arm whose `barrier_syncs` is
 //!   not exactly `2 * ceil(steps / bt) + 1` (two per exchange epoch plus
 //!   the one-time initial-load sync), any farm row with
-//!   `admission_spawns > 0`, and any farm row at >= 16 tenants whose
+//!   `admission_spawns > 0`, any farm row at >= 16 tenants whose
 //!   farm-vs-pool-per-session speedup falls below the acceptance floor
-//!   (default 1.5, `--min-farm-speedup`);
+//!   (default 1.5, `--min-farm-speedup`), and any plane row whose
+//!   batched path leaks (`sched_lock_acquisitions != plane_batches`) or
+//!   that sheds / times out / spawns under the quick load (all must be
+//!   0 — the unbounded quick config admits everything);
 //! * **wall regressions** — current wall > baseline wall * (1 + tol)
 //!   (default tolerance 0.25, `--tolerance`), compared against the
 //!   checked-in `bench/baselines/*.json` entry with the *same workload
@@ -33,7 +36,8 @@ use std::process::ExitCode;
 
 use perks::util::json::Json;
 
-const FILES: [&str; 3] = ["BENCH_stencil.json", "BENCH_temporal.json", "BENCH_farm.json"];
+const FILES: [&str; 4] =
+    ["BENCH_stencil.json", "BENCH_temporal.json", "BENCH_farm.json", "BENCH_plane.json"];
 
 struct Config {
     dir: PathBuf,
@@ -145,7 +149,7 @@ fn config_key(doc: &Json) -> String {
     for key in ["bench", "case", "interior"] {
         parts.push(s(doc, key).to_string());
     }
-    for key in ["steps", "threads", "rounds", "workers"] {
+    for key in ["steps", "segments", "threads", "rounds", "workers"] {
         parts.push(int(doc, key).map(|v| v.to_string()).unwrap_or_default());
     }
     parts.join("/")
@@ -180,6 +184,12 @@ fn wall_entries(doc: &Json) -> Vec<(String, f64)> {
         for r in rows {
             if let (Some(t), Some(w)) = (int(r, "tenants"), num(r, "farm_wall_seconds")) {
                 out.push((format!("tenants{t}/farm"), w));
+            }
+            // plane rows: keyed by tenant count + front-end thread count
+            if let (Some(t), Some(fe), Some(w)) =
+                (int(r, "tenants"), int(r, "frontend_threads"), num(r, "wall_seconds"))
+            {
+                out.push((format!("tenants{t}/fe{fe}/plane"), w));
             }
         }
     }
@@ -236,6 +246,29 @@ fn check_file(cfg: &Config, name: &str, fails: &mut Vec<String>) {
                             "{name}: tenants={tenants} farm speedup {speedup:.2}x below the {:.2}x floor",
                             cfg.min_farm_speedup
                         ));
+                    }
+                }
+            }
+            None => fails.push(format!("{name}: no rows array")),
+        },
+        "plane" => match doc.get("rows").and_then(Json::as_array) {
+            Some(rows) => {
+                for r in rows {
+                    let tenants = int(r, "tenants").unwrap_or(0);
+                    let batches = int(r, "plane_batches");
+                    let locks = int(r, "sched_lock_acquisitions");
+                    if batches.is_none() || batches != locks {
+                        fails.push(format!(
+                            "{name}: tenants={tenants} row took {locks:?} scheduler locks for \
+                             {batches:?} batches (batched path must be 1:1)"
+                        ));
+                    }
+                    for key in ["plane_sheds", "plane_timeouts", "admission_spawns"] {
+                        if int(r, key) != Some(0) {
+                            fails.push(format!(
+                                "{name}: tenants={tenants} row has nonzero {key} under quick load"
+                            ));
+                        }
                     }
                 }
             }

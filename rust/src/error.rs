@@ -32,6 +32,19 @@ pub enum Error {
     /// Invalid argument to a library call.
     #[error("invalid argument: {0}")]
     Invalid(String),
+
+    /// Submission rejected by the plane's admission control (bounded
+    /// queue full under the `Shed` policy, or a batch larger than the
+    /// configured caps). The command was **not** enqueued; retrying
+    /// later is safe. Counted by `util::counters::plane_sheds`.
+    #[error("shed: {0}")]
+    Shed(String),
+
+    /// Submission timed out waiting for a plane slot (`Timeout`
+    /// admission policy). The command was **not** enqueued. Counted by
+    /// `util::counters::plane_timeouts`.
+    #[error("timeout: {0}")]
+    Timeout(String),
 }
 
 /// Convenience alias used across the crate.

@@ -6,12 +6,14 @@
 
 pub mod cg_exp;
 pub mod farm_exp;
+pub mod plane_exp;
 pub mod stencil_exp;
 
 pub use cg_exp::{
     evaluate as cg_evaluate, fig7, measure_cpu_cg_modes, modeled_cg_run, CgRow, MeasuredCgMode,
 };
 pub use farm_exp::{farm_vs_pool_per_session, FarmSweepRow};
+pub use plane_exp::{plane_stress, PlaneStressRow};
 pub use stencil_exp::{
     measure_cpu_stencil_modes, measure_cpu_stencil_temporal, modeled_run, speedup_row,
     MeasuredStencilMode, StencilExperiment,

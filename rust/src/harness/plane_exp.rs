@@ -1,0 +1,269 @@
+//! Submission-plane experiment builders: the 10k-tenant async stress
+//! protocol behind the `plane_stress` bench and the `BENCH_plane.json`
+//! schema (shared so bench and CI gate cannot drift).
+//!
+//! The shape under test is the serving claim of the plane: *thousands*
+//! of concurrent tenants driven by one or two front-end OS threads
+//! (each a [`LocalExecutor`] multiplexing per-tenant async tasks), every
+//! advance submitted as a batched [`CommandGraph`] — so enqueue-side
+//! scheduler-lock acquisitions scale with *batches*, not epochs, which
+//! the row's `sched_lock_acquisitions == plane_batches` invariant (and
+//! `bench_check`) asserts. Bit-identity against a solo pool is verified
+//! for tenant 0 before any number is reported.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::farm::SolverFarm;
+use crate::runtime::plane::{CommandGraph, LocalExecutor, PlaneConfig};
+use crate::stencil::pool::StencilPool;
+use crate::stencil::{self, Domain};
+use crate::util::counters;
+use crate::util::stats::finite_rate;
+
+/// One configuration row of the async-plane stress protocol.
+#[derive(Clone, Debug)]
+pub struct PlaneStressRow {
+    /// Concurrent tenants admitted to the shared farm.
+    pub tenants: usize,
+    /// Front-end OS threads driving the tenants (each one executor).
+    pub frontend_threads: usize,
+    /// Farm worker threads.
+    pub workers: usize,
+    /// Graph-batched commands per tenant.
+    pub rounds: usize,
+    /// Epoch-chain segments per command graph.
+    pub segments: usize,
+    /// Completed solves (`tenants * rounds`).
+    pub solves: usize,
+    pub wall_seconds: f64,
+    pub solves_per_sec: f64,
+    /// Plane batches enqueued during the measured region.
+    pub plane_batches: u64,
+    /// Enqueue-side scheduler-lock acquisitions — must equal
+    /// `plane_batches` (the batched-path invariant).
+    pub sched_lock_acquisitions: u64,
+    /// Admission-control rejections — must be 0 under healthy load.
+    pub plane_sheds: u64,
+    /// Admission timeouts — must be 0 under healthy load.
+    pub plane_timeouts: u64,
+    /// Peak concurrently held plane slots (sustained in-flight
+    /// concurrency across the tenant fleet).
+    pub inflight_peak: usize,
+    /// Solver-substrate OS threads spawned during admit + drive — **0**
+    /// is the acceptance bar (front-end threads are the harness's own
+    /// and are not counted; exact in single-threaded bench mains).
+    pub admission_spawns: u64,
+}
+
+impl PlaneStressRow {
+    /// Stable BENCH-json fragment (the plane counterpart of
+    /// [`super::farm_exp::FarmSweepRow::json`]).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"tenants\":{},\"frontend_threads\":{},\"workers\":{},\
+             \"rounds\":{},\"segments\":{},\"solves\":{},\
+             \"wall_seconds\":{:.6},\"solves_per_sec\":{:.3},\
+             \"plane_batches\":{},\"sched_lock_acquisitions\":{},\
+             \"plane_sheds\":{},\"plane_timeouts\":{},\
+             \"inflight_peak\":{},\"admission_spawns\":{}}}",
+            self.tenants,
+            self.frontend_threads,
+            self.workers,
+            self.rounds,
+            self.segments,
+            self.solves,
+            self.wall_seconds,
+            self.solves_per_sec,
+            self.plane_batches,
+            self.sched_lock_acquisitions,
+            self.plane_sheds,
+            self.plane_timeouts,
+            self.inflight_peak,
+            self.admission_spawns
+        )
+    }
+}
+
+/// Drive `tenants` concurrent stencil sessions through the async
+/// submission plane on `frontend_threads` OS threads (each a
+/// [`LocalExecutor`] multiplexing its share of per-tenant async tasks)
+/// over a farm of `workers` resident threads.
+///
+/// Each tenant performs `rounds` commands; each command is a batched
+/// [`CommandGraph`] of `segments` segments of `steps` steps. Tenant 0's
+/// final state is verified bit-identical to a solo [`StencilPool`]
+/// advancing the same seeded domain by the same total steps — the async
+/// plane, the graph batching, and the multiplexing must all be invisible
+/// to the bits.
+#[allow(clippy::too_many_arguments)]
+pub fn plane_stress(
+    bench: &str,
+    interior: &str,
+    steps: usize,
+    segments: usize,
+    rounds: usize,
+    workers: usize,
+    tenants: usize,
+    frontend_threads: usize,
+) -> Result<PlaneStressRow> {
+    let spec = stencil::spec(bench)
+        .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+    let dims = crate::session::parse_interior(interior)?;
+    if tenants == 0 || rounds == 0 || steps == 0 || segments == 0 || frontend_threads == 0 {
+        return Err(Error::invalid(
+            "tenants, rounds, steps, segments and frontend_threads must be > 0",
+        ));
+    }
+    let graph = CommandGraph::schedule(steps * segments, steps, None)?;
+    let farm = SolverFarm::spawn_with(workers, PlaneConfig::default())?;
+    let handle = farm.handle();
+    let spawns0 = counters::thread_spawns();
+
+    // admit every tenant (1 band shard each: serving-scale sessions are
+    // small; the farm's workers provide the parallelism across tenants)
+    let mut sessions = Vec::with_capacity(tenants);
+    for t in 0..tenants {
+        let mut d = Domain::for_spec(&spec, &dims)?;
+        d.randomize(500 + t as u64);
+        sessions.push(Some(handle.admit_stencil(&spec, &d, 1, 1)?));
+    }
+    // reference domain for the bit-identity check (same seed as tenant 0)
+    let mut d0 = Domain::for_spec(&spec, &dims)?;
+    d0.randomize(500);
+
+    // partition tenants round-robin across the front-end threads; each
+    // thread drives its share on one LocalExecutor
+    let mut chunks: Vec<Vec<(usize, crate::runtime::farm::FarmStencil)>> =
+        (0..frontend_threads).map(|_| Vec::new()).collect();
+    for (i, s) in sessions.iter_mut().enumerate() {
+        chunks[i % frontend_threads].push((i, s.take().expect("admitted above")));
+    }
+
+    let t0 = Instant::now();
+    let graph_ref = &graph;
+    let state0 = std::thread::scope(|scope| -> Result<Vec<f64>> {
+        let mut joins = Vec::with_capacity(frontend_threads);
+        for chunk in chunks {
+            joins.push(scope.spawn(move || -> Result<Option<Vec<f64>>> {
+                let ex = LocalExecutor::new();
+                let results: Vec<Result<Option<Vec<f64>>>> = ex.run(async {
+                    let mut handles = Vec::with_capacity(chunk.len());
+                    for (i, mut s) in chunk {
+                        // spawned tasks are 'static: each owns its graph
+                        let graph = graph_ref.clone();
+                        handles.push(ex.spawn(async move {
+                            for _ in 0..rounds {
+                                s.advance_graph_async(&graph).await?;
+                            }
+                            // harvest tenant 0's bits before the session
+                            // drops (drop releases the tenant)
+                            if i == 0 { s.state().map(Some) } else { Ok(None) }
+                        }));
+                    }
+                    let mut out = Vec::with_capacity(handles.len());
+                    for h in handles {
+                        out.push(h.await);
+                    }
+                    out
+                });
+                let mut state0 = None;
+                for r in results {
+                    if let Some(st) = r? {
+                        state0 = Some(st);
+                    }
+                }
+                Ok(state0)
+            }));
+        }
+        let mut state0 = None;
+        for j in joins {
+            let got = j.join().map_err(|_| Error::Solver("front-end thread panicked".into()))??;
+            if let Some(st) = got {
+                state0 = Some(st);
+            }
+        }
+        state0.ok_or_else(|| Error::Solver("tenant 0 produced no state".into()))
+    })?;
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    let admission_spawns = counters::thread_spawns() - spawns0;
+    let m = farm.metrics();
+
+    // the whole point: async + graphs + multiplexing are bit-invisible
+    let mut solo = StencilPool::spawn(&spec, &d0, 1)?;
+    solo.run(steps * segments * rounds, None)?;
+    if state0 != solo.state() {
+        return Err(Error::Solver(
+            "async-plane tenant diverged from its solo-pool run (bit-identity broken)".into(),
+        ));
+    }
+
+    let solves = tenants * rounds;
+    Ok(PlaneStressRow {
+        tenants,
+        frontend_threads,
+        workers,
+        rounds,
+        segments,
+        solves,
+        wall_seconds,
+        solves_per_sec: finite_rate(solves as f64, wall_seconds),
+        plane_batches: m.plane_batches,
+        sched_lock_acquisitions: m.sched_lock_acquisitions,
+        plane_sheds: m.plane_sheds,
+        plane_timeouts: m.plane_timeouts,
+        inflight_peak: m.plane_inflight_peak,
+        admission_spawns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stress_row_measures_batching_and_serializes() {
+        // 12 tenants, 2 front-end threads, 3-segment graphs, 2 rounds
+        let row = plane_stress("2d5pt", "10x10", 2, 3, 2, 2, 12, 2).unwrap();
+        assert_eq!(row.tenants, 12);
+        assert_eq!(row.solves, 24);
+        assert!(row.wall_seconds > 0.0 && row.solves_per_sec > 0.0);
+        // the batched-path invariant: one lock acquisition per batch,
+        // segment chaining pays zero extra
+        assert_eq!(row.plane_batches, 24, "one batch per graph submission");
+        assert_eq!(row.sched_lock_acquisitions, row.plane_batches);
+        assert_eq!(row.plane_sheds, 0);
+        assert_eq!(row.plane_timeouts, 0);
+        // every batch holds `segments` slots until harvested
+        assert!(row.inflight_peak >= 3 && row.inflight_peak <= 12 * 3, "{}", row.inflight_peak);
+        let j = row.json();
+        for key in [
+            "\"tenants\"",
+            "\"frontend_threads\"",
+            "\"workers\"",
+            "\"rounds\"",
+            "\"segments\"",
+            "\"solves\"",
+            "\"wall_seconds\"",
+            "\"solves_per_sec\"",
+            "\"plane_batches\"",
+            "\"sched_lock_acquisitions\"",
+            "\"plane_sheds\"",
+            "\"plane_timeouts\"",
+            "\"inflight_peak\"",
+            "\"admission_spawns\"",
+        ] {
+            assert!(j.contains(key), "{j}");
+        }
+    }
+
+    #[test]
+    fn stress_rejects_bad_configs() {
+        assert!(plane_stress("17d99pt", "8x8", 1, 1, 1, 1, 1, 1).is_err());
+        assert!(plane_stress("2d5pt", "8x8", 0, 1, 1, 1, 1, 1).is_err());
+        assert!(plane_stress("2d5pt", "8x8", 1, 0, 1, 1, 1, 1).is_err());
+        assert!(plane_stress("2d5pt", "8x8", 1, 1, 0, 1, 1, 1).is_err());
+        assert!(plane_stress("2d5pt", "8x8", 1, 1, 1, 1, 0, 1).is_err());
+        assert!(plane_stress("2d5pt", "8x8", 1, 1, 1, 1, 1, 0).is_err());
+    }
+}

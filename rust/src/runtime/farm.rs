@@ -86,22 +86,42 @@
 //! submit/wait handshake). Reduction slots are atomics written with
 //! release stores before the countdown and folded after it.
 //!
+//! # The submission plane
+//!
+//! Every command enters through the async submission plane
+//! ([`crate::runtime::plane`]): `submit` claims plane slots from the
+//! farm's [`PlaneConfig`] admission budget (block/shed/timeout
+//! backpressure), completion is exposed as a future whose waker the
+//! finishing worker fires (the blocking `wait` wrappers are `block_on`
+//! over the same futures), and a batched [`CommandGraph`] chains an
+//! entire `advance_until` schedule under a single enqueue-lock
+//! acquisition — segment boundaries are dequeued *inside* the completion
+//! transition, where the scheduler lock is already held. The plane never
+//! changes what a shard computes, so the bit-identity bar below is
+//! untouched; it only changes when work is enqueued and who waits.
+//!
 //! # Teardown
 //!
 //! Shutdown is a dedicated flag checked on every condvar wake — never a
 //! value raced through the command slot — so `drop` joins promptly even
 //! against workers parked mid-stream or tasks still in flight, and a
 //! client blocked in `wait` on a farm that shuts down gets an error, not
-//! a hang. Rapid create/drop cycles are exercised by the tests.
+//! a hang (async waiters: shutdown fires every registered completion
+//! waker). Rapid create/drop cycles are exercised by the tests.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::task::{Poll, Waker};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::cg::pool::SharedBuf;
 use crate::error::{Error, Result};
+use crate::runtime::plane::admission::{AdmissionPolicy, PlaneConfig};
+use crate::runtime::plane::future::{CgCompletion, StencilCompletion};
+use crate::runtime::plane::graph::CommandGraph;
+use crate::runtime::plane::reactor::block_on;
 use crate::sparse::csr::Csr;
 use crate::spmv::merge::{self, MergePlan};
 use crate::stencil::grid::Domain;
@@ -545,6 +565,21 @@ struct Tenant {
     error: Option<String>,
     moved: u64,
     computed: u64,
+    // --- submission plane ---
+    /// Completion hook of a pending async waiter; fired by the worker
+    /// that completes the command (and by shutdown).
+    waker: Option<Waker>,
+    /// Plane slots charged to this tenant by admission control (one per
+    /// queued graph segment); released at harvest, future drop, or
+    /// tenant release.
+    slots_held: usize,
+    /// Remaining command-graph segments; the next one is dequeued inside
+    /// the completion transition, under the already-held scheduler lock.
+    graph_segs: VecDeque<usize>,
+    /// Full segment schedule, kept only while resubmissions remain.
+    graph_schedule: Vec<usize>,
+    /// Whole-schedule re-enqueues left (graph resubmission policy).
+    graph_resubmits: u32,
     // --- stencil command ---
     steps_target: usize,
     tol: Option<f64>,
@@ -581,6 +616,11 @@ impl Tenant {
             error: None,
             moved: 0,
             computed: 0,
+            waker: None,
+            slots_held: 0,
+            graph_segs: VecDeque::new(),
+            graph_schedule: Vec::new(),
+            graph_resubmits: 0,
             steps_target: 0,
             tol: None,
             done_steps: 0,
@@ -613,19 +653,35 @@ struct FarmState {
     queue_next: usize,
     /// All-time maximum queue wait (survives window wraparound).
     queue_max: f64,
+    /// Plane slots currently held across all tenants (admission queue
+    /// occupancy; bounded by `PlaneConfig::queue_cap`).
+    plane_inflight: usize,
+    /// All-time peak of `plane_inflight` — the sustained-concurrency
+    /// figure the stress bench asserts.
+    plane_peak: usize,
 }
 
 struct FarmShared {
     ctl: Mutex<FarmState>,
     work_cv: Condvar,
     done_cv: Condvar,
+    /// Admission gate: slot releases signal here so blocked/timed-out
+    /// submitters re-check the plane budget.
+    gate_cv: Condvar,
     clock: Instant,
     /// Resident worker count (constant after spawn).
     workers: usize,
+    /// Submission-plane budget and backpressure policy (constant after
+    /// spawn).
+    plane: PlaneConfig,
     admissions: AtomicU64,
     commands: AtomicU64,
     tasks: AtomicU64,
     epochs: AtomicU64,
+    plane_batches: AtomicU64,
+    sched_locks: AtomicU64,
+    plane_sheds: AtomicU64,
+    plane_timeouts: AtomicU64,
 }
 
 impl FarmShared {
@@ -684,6 +740,21 @@ pub struct FarmMetrics {
     pub queue_wait_p50: f64,
     pub queue_wait_p99: f64,
     pub queue_wait_max: f64,
+    /// Submission-plane batches enqueued (one per submit/submit_graph).
+    pub plane_batches: u64,
+    /// Enqueue-side scheduler-lock acquisitions. Equals `plane_batches`
+    /// by construction: graph segments chain inside completion
+    /// transitions without re-acquiring (the batched-path invariant
+    /// `bench_check` asserts).
+    pub sched_lock_acquisitions: u64,
+    /// Submissions rejected by admission control (`Shed` policy or a
+    /// batch larger than the caps).
+    pub plane_sheds: u64,
+    /// Submissions that timed out waiting for plane slots.
+    pub plane_timeouts: u64,
+    /// All-time peak of concurrently held plane slots — the sustained
+    /// in-flight concurrency the stress bench asserts.
+    pub plane_inflight_peak: usize,
 }
 
 impl FarmMetrics {
@@ -709,12 +780,20 @@ pub struct SolverFarm {
 }
 
 impl SolverFarm {
-    /// Spawn the farm's resident workers — the only thread creation of
-    /// the farm's lifetime; admissions and commands never add to it.
+    /// Spawn the farm's resident workers with the default (unbounded)
+    /// submission plane — the only thread creation of the farm's
+    /// lifetime; admissions and commands never add to it.
     pub fn spawn(workers: usize) -> Result<Self> {
+        Self::spawn_with(workers, PlaneConfig::default())
+    }
+
+    /// [`SolverFarm::spawn`] with an explicit submission-plane budget
+    /// (bounded queue, per-tenant caps, block/shed/timeout policy).
+    pub fn spawn_with(workers: usize, plane: PlaneConfig) -> Result<Self> {
         if workers == 0 {
             return Err(Error::invalid("farm workers must be > 0"));
         }
+        plane.validate()?;
         let shared = Arc::new(FarmShared {
             ctl: Mutex::new(FarmState {
                 shutdown: false,
@@ -725,15 +804,23 @@ impl SolverFarm {
                 queue_waits: Vec::new(),
                 queue_next: 0,
                 queue_max: 0.0,
+                plane_inflight: 0,
+                plane_peak: 0,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            gate_cv: Condvar::new(),
             clock: Instant::now(),
             workers,
+            plane,
             admissions: AtomicU64::new(0),
             commands: AtomicU64::new(0),
             tasks: AtomicU64::new(0),
             epochs: AtomicU64::new(0),
+            plane_batches: AtomicU64::new(0),
+            sched_locks: AtomicU64::new(0),
+            plane_sheds: AtomicU64::new(0),
+            plane_timeouts: AtomicU64::new(0),
         });
         counters::note_thread_spawns(workers as u64);
         let mut handles = Vec::with_capacity(workers);
@@ -786,13 +873,24 @@ impl SolverFarm {
     }
 
     /// Shut the workers down and join them. Idempotent; `drop` calls it.
-    /// Clients blocked in `wait` are woken with an error.
+    /// Clients blocked in `wait`, parked on the admission gate, or
+    /// awaiting a completion future are all woken with an error.
     pub fn shutdown(&mut self) {
-        {
+        let wakers: Vec<Waker> = {
             let mut g = self.shared.lock();
             g.shutdown = true;
             self.shared.work_cv.notify_all();
             self.shared.done_cv.notify_all();
+            self.shared.gate_cv.notify_all();
+            g.tenants
+                .iter_mut()
+                .filter_map(|t| t.as_mut().and_then(|t| t.waker.take()))
+                .collect()
+        };
+        // fire completion wakers outside the lock: a woken future's poll
+        // re-locks the scheduler immediately
+        for w in wakers {
+            w.wake();
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -872,9 +970,9 @@ impl FarmHandle {
     /// rolling sample window (recent traffic); the max is all-time.
     pub fn metrics(&self) -> FarmMetrics {
         let sh = &self.shared;
-        let (samples, max) = {
+        let (samples, max, peak) = {
             let g = sh.lock();
-            (g.queue_waits.clone(), g.queue_max)
+            (g.queue_waits.clone(), g.queue_max, g.plane_peak)
         };
         let mean = if samples.is_empty() {
             0.0
@@ -892,29 +990,60 @@ impl FarmHandle {
             queue_wait_p50: percentile(&samples, 50.0),
             queue_wait_p99: percentile(&samples, 99.0),
             queue_wait_max: max,
+            plane_batches: sh.plane_batches.load(Ordering::Relaxed),
+            sched_lock_acquisitions: sh.sched_locks.load(Ordering::Relaxed),
+            plane_sheds: sh.plane_sheds.load(Ordering::Relaxed),
+            plane_timeouts: sh.plane_timeouts.load(Ordering::Relaxed),
+            plane_inflight_peak: peak,
         }
     }
 
     // ----- command plumbing shared by the session handles -----
 
     fn submit_stencil(&self, tid: usize, steps: usize, tol: Option<f64>) -> Result<()> {
+        self.submit_stencil_cmd(tid, steps, &[], tol, 0)
+    }
+
+    fn submit_stencil_graph(&self, tid: usize, graph: &CommandGraph) -> Result<()> {
+        let segs = graph.segments();
+        self.submit_stencil_cmd(tid, segs[0], &segs[1..], graph.tol(), graph.resubmits())
+    }
+
+    /// Enqueue one stencil batch: a first segment armed as the in-flight
+    /// command plus trailing segments chained by the completion
+    /// transition (the batch dequeue). One scheduler-lock acquisition
+    /// per call, however many segments the batch carries.
+    fn submit_stencil_cmd(
+        &self,
+        tid: usize,
+        steps: usize,
+        rest: &[usize],
+        tol: Option<f64>,
+        resubmits: u32,
+    ) -> Result<()> {
         let sh = &self.shared;
-        let mut g = sh.lock();
+        let g = sh.lock();
         if g.shutdown {
             return Err(Error::Solver("solver farm is shut down".into()));
         }
+        // contract errors come before admission: a double submit must
+        // fail loudly, never park on the gate it can only deadlock
+        let bt = {
+            let t = g.tenants[tid].as_ref().expect("tenant released");
+            if t.active {
+                return Err(Error::Solver(
+                    "farm session already has a command in flight".into(),
+                ));
+            }
+            match &*t.engine {
+                EngineKind::Stencil(e) => e.bt,
+                EngineKind::Cg(_) => return Err(Error::Solver("not a stencil tenant".into())),
+            }
+        };
+        let mut g = acquire_plane_slots(sh, g, tid, 1 + rest.len())?;
         let now = sh.now();
         let tick = g.tick;
         let t = g.tenants[tid].as_mut().expect("tenant released");
-        if t.active {
-            return Err(Error::Solver(
-                "farm session already has a command in flight".into(),
-            ));
-        }
-        let bt = match &*t.engine {
-            EngineKind::Stencil(e) => e.bt,
-            EngineKind::Cg(_) => return Err(Error::Solver("not a stencil tenant".into())),
-        };
         t.active = true;
         t.done_flag = false;
         t.error = None;
@@ -927,6 +1056,14 @@ impl FarmHandle {
         t.first_dispatch = true;
         t.enqueued_at = now;
         t.queue_wait_cmd = 0.0;
+        t.graph_segs.clear();
+        t.graph_segs.extend(rest.iter().copied());
+        t.graph_schedule.clear();
+        t.graph_resubmits = resubmits;
+        if resubmits > 0 {
+            t.graph_schedule.push(steps);
+            t.graph_schedule.extend_from_slice(rest);
+        }
         // first phase: one-time slab load, else straight into the first
         // epoch (or the final store for a 0-step command — the solo pool
         // also re-stores bands on a 0-step run)
@@ -943,47 +1080,99 @@ impl FarmHandle {
         t.nshards = t.engine.shards();
         t.enqueue_tick = tick;
         g.ready.push_back(tid);
-        sh.commands.fetch_add(1, Ordering::Relaxed);
-        counters::note_farm_commands(1);
+        note_batch_enqueued(sh);
         sh.work_cv.notify_all();
         Ok(())
     }
 
     fn wait_stencil(&self, tid: usize) -> Result<StencilFarmRun> {
+        // the blocking wrapper is the async path driven by a parking
+        // waker: one code path for harvest, shutdown, and error handling
+        block_on(StencilCompletion::new(self.clone(), tid))
+    }
+
+    /// Poll an in-flight stencil command (the completion-future core).
+    /// Ready = harvest, exactly like the old blocking wait: clears the
+    /// in-flight state, takes the run/error, releases the plane slots.
+    /// Pending registers `waker` as the tenant's completion hook.
+    pub(crate) fn poll_stencil_done(
+        &self,
+        tid: usize,
+        waker: &Waker,
+    ) -> Poll<Result<StencilFarmRun>> {
+        enum Out {
+            Done(Result<StencilFarmRun>),
+            Inactive,
+            Shutdown,
+            Pending,
+        }
         let sh = &self.shared;
         let mut g = sh.lock();
-        loop {
-            {
-                let t = g.tenants[tid].as_mut().expect("tenant released");
-                if t.done_flag {
-                    t.done_flag = false;
-                    t.active = false;
-                    let out = StencilFarmRun {
-                        steps: t.done_steps,
-                        residual: t.residual,
-                        global_bytes: t.moved,
-                        computed_cells: t.computed,
-                        queue_wait_seconds: t.queue_wait_cmd,
-                    };
-                    return match t.error.take() {
-                        Some(msg) => Err(Error::Solver(msg)),
-                        None => Ok(out),
-                    };
+        let down = g.shutdown;
+        let out = {
+            let Some(t) = g.tenants[tid].as_mut() else {
+                return Poll::Ready(Err(Error::Solver("farm tenant released".into())));
+            };
+            if t.done_flag {
+                t.done_flag = false;
+                t.active = false;
+                t.waker = None;
+                let run = StencilFarmRun {
+                    steps: t.done_steps,
+                    residual: t.residual,
+                    global_bytes: t.moved,
+                    computed_cells: t.computed,
+                    queue_wait_seconds: t.queue_wait_cmd,
+                };
+                Out::Done(match t.error.take() {
+                    Some(msg) => Err(Error::Solver(msg)),
+                    None => Ok(run),
+                })
+            } else if !t.active {
+                // nothing submitted (or already harvested): resolve with
+                // an error instead of pending on a command that will
+                // never come
+                Out::Inactive
+            } else if down {
+                Out::Shutdown
+            } else {
+                match &t.waker {
+                    Some(w) if w.will_wake(waker) => {}
+                    _ => t.waker = Some(waker.clone()),
                 }
-                if !t.active {
-                    // nothing submitted (or already waited): error instead
-                    // of parking forever on a command that will never come
-                    return Err(Error::Solver("no farm command in flight to wait for".into()));
-                }
+                Out::Pending
             }
-            if g.shutdown {
+        };
+        match out {
+            Out::Done(res) => {
+                release_plane_slots(&mut g, sh, tid);
+                Poll::Ready(res)
+            }
+            Out::Inactive => {
+                Poll::Ready(Err(Error::Solver("no farm command in flight to wait for".into())))
+            }
+            Out::Shutdown => {
                 abandon_command(&mut g, tid);
-                return Err(Error::Solver(
+                release_plane_slots(&mut g, sh, tid);
+                Poll::Ready(Err(Error::Solver(
                     "solver farm shut down while a command was in flight".into(),
-                ));
+                )))
             }
-            g = sh.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            Out::Pending => Poll::Pending,
         }
+    }
+
+    /// A completion future was dropped before resolving: clear its
+    /// waker hook and release the tenant's plane slots (the command
+    /// keeps executing and stays harvestable by a later wait/future,
+    /// but an abandoned client must not pin admission capacity).
+    pub(crate) fn forget_completion(&self, tid: usize) {
+        let sh = &self.shared;
+        let mut g = sh.lock();
+        if let Some(t) = g.tenants[tid].as_mut() {
+            t.waker = None;
+        }
+        release_plane_slots(&mut g, sh, tid);
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -997,27 +1186,68 @@ impl FarmHandle {
         threshold: f64,
         iters: usize,
     ) -> Result<()> {
+        self.submit_cg_cmd(tid, x, r, p, rr, threshold, iters, &[], 0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn submit_cg_graph(
+        &self,
+        tid: usize,
+        x: &[f64],
+        r: &[f64],
+        p: &[f64],
+        rr: f64,
+        graph: &CommandGraph,
+    ) -> Result<()> {
+        let segs = graph.segments();
+        // the graph's tolerance is the CG squared-residual threshold
+        // (0.0 = fixed-iteration mode, as in `submit`)
+        let threshold = graph.tol().unwrap_or(0.0);
+        self.submit_cg_cmd(tid, x, r, p, rr, threshold, segs[0], &segs[1..], graph.resubmits())
+    }
+
+    /// Enqueue one CG batch (see [`FarmHandle::submit_stencil_cmd`] for
+    /// the batching contract).
+    #[allow(clippy::too_many_arguments)]
+    fn submit_cg_cmd(
+        &self,
+        tid: usize,
+        x: &[f64],
+        r: &[f64],
+        p: &[f64],
+        rr: f64,
+        threshold: f64,
+        iters: usize,
+        rest: &[usize],
+        resubmits: u32,
+    ) -> Result<()> {
         let sh = &self.shared;
-        let mut g = sh.lock();
+        let g = sh.lock();
         if g.shutdown {
             return Err(Error::Solver("solver farm is shut down".into()));
         }
+        // contract errors before admission (see submit_stencil_cmd)
+        {
+            let t = g.tenants[tid].as_ref().expect("tenant released");
+            if t.active {
+                return Err(Error::Solver(
+                    "farm session already has a command in flight".into(),
+                ));
+            }
+            let EngineKind::Cg(ref e) = *t.engine else {
+                return Err(Error::Solver("not a cg tenant".into()));
+            };
+            let n = e.a.n_rows;
+            if x.len() != n || r.len() != n || p.len() != n {
+                return Err(Error::Solver("farm cg state length mismatch".into()));
+            }
+        }
+        let mut g = acquire_plane_slots(sh, g, tid, 1 + rest.len())?;
         let now = sh.now();
         let tick = g.tick;
         let t = g.tenants[tid].as_mut().expect("tenant released");
-        if t.active {
-            return Err(Error::Solver(
-                "farm session already has a command in flight".into(),
-            ));
-        }
         let engine = t.engine.clone();
-        let EngineKind::Cg(ref e) = *engine else {
-            return Err(Error::Solver("not a cg tenant".into()));
-        };
-        let n = e.a.n_rows;
-        if x.len() != n || r.len() != n || p.len() != n {
-            return Err(Error::Solver("farm cg state length mismatch".into()));
-        }
+        let EngineKind::Cg(ref e) = *engine else { unreachable!() };
         // SAFETY: tenant idle (no command in flight, checked above under
         // the scheduler lock) — exclusive access to the resident buffers.
         unsafe {
@@ -1037,11 +1267,20 @@ impl FarmHandle {
         t.first_dispatch = true;
         t.enqueued_at = now;
         t.queue_wait_cmd = 0.0;
-        sh.commands.fetch_add(1, Ordering::Relaxed);
-        counters::note_farm_commands(1);
+        t.graph_segs.clear();
+        t.graph_segs.extend(rest.iter().copied());
+        t.graph_schedule.clear();
+        t.graph_resubmits = resubmits;
+        if resubmits > 0 {
+            t.graph_schedule.push(iters);
+            t.graph_schedule.extend_from_slice(rest);
+        }
+        note_batch_enqueued(sh);
         if rr <= threshold || rr <= 0.0 || iters == 0 {
             // nothing to iterate: complete immediately (the serial/pooled
-            // top-of-loop short circuit)
+            // top-of-loop short circuit); the whole batch retires with it
+            t.graph_segs.clear();
+            t.graph_resubmits = 0;
             t.done_flag = true;
             sh.done_cv.notify_all();
             return Ok(());
@@ -1063,43 +1302,81 @@ impl FarmHandle {
         r: &mut [f64],
         p: &mut [f64],
     ) -> Result<CgFarmRun> {
+        // blocking wrapper over the async completion path (see
+        // wait_stencil)
+        block_on(CgCompletion::new(self.clone(), tid, x, r, p))
+    }
+
+    /// Poll an in-flight CG command; Ready harvests (copying the
+    /// advanced x/r/p out) exactly like the old blocking wait.
+    pub(crate) fn poll_cg_done(
+        &self,
+        tid: usize,
+        waker: &Waker,
+        x: &mut [f64],
+        r: &mut [f64],
+        p: &mut [f64],
+    ) -> Poll<Result<CgFarmRun>> {
+        enum Out {
+            Done(CgFarmRun),
+            Inactive,
+            Shutdown,
+            Pending,
+        }
         let sh = &self.shared;
         let mut g = sh.lock();
-        loop {
-            {
-                let t = g.tenants[tid].as_mut().expect("tenant released");
-                if t.done_flag {
-                    t.done_flag = false;
-                    t.active = false;
-                    let out = CgFarmRun {
-                        iters: t.iters_done,
-                        rr: t.rr,
-                        error: t.error.take(),
-                        queue_wait_seconds: t.queue_wait_cmd,
-                    };
-                    let engine = t.engine.clone();
-                    let EngineKind::Cg(ref e) = *engine else { unreachable!() };
-                    // SAFETY: command done — workers re-parked, buffers quiescent.
-                    unsafe {
-                        x.copy_from_slice(e.x.whole());
-                        r.copy_from_slice(e.r.whole());
-                        p.copy_from_slice(e.p.whole());
-                    }
-                    return Ok(out);
+        let down = g.shutdown;
+        let out = {
+            let Some(t) = g.tenants[tid].as_mut() else {
+                return Poll::Ready(Err(Error::Solver("farm tenant released".into())));
+            };
+            if t.done_flag {
+                t.done_flag = false;
+                t.active = false;
+                t.waker = None;
+                let run = CgFarmRun {
+                    iters: t.iters_done,
+                    rr: t.rr,
+                    error: t.error.take(),
+                    queue_wait_seconds: t.queue_wait_cmd,
+                };
+                let engine = t.engine.clone();
+                let EngineKind::Cg(ref e) = *engine else { unreachable!() };
+                // SAFETY: command done — workers re-parked, buffers quiescent.
+                unsafe {
+                    x.copy_from_slice(e.x.whole());
+                    r.copy_from_slice(e.r.whole());
+                    p.copy_from_slice(e.p.whole());
                 }
-                if !t.active {
-                    // nothing submitted (or already waited): error instead
-                    // of parking forever on a command that will never come
-                    return Err(Error::Solver("no farm command in flight to wait for".into()));
+                Out::Done(run)
+            } else if !t.active {
+                Out::Inactive
+            } else if down {
+                Out::Shutdown
+            } else {
+                match &t.waker {
+                    Some(w) if w.will_wake(waker) => {}
+                    _ => t.waker = Some(waker.clone()),
                 }
+                Out::Pending
             }
-            if g.shutdown {
+        };
+        match out {
+            Out::Done(run) => {
+                release_plane_slots(&mut g, sh, tid);
+                Poll::Ready(Ok(run))
+            }
+            Out::Inactive => {
+                Poll::Ready(Err(Error::Solver("no farm command in flight to wait for".into())))
+            }
+            Out::Shutdown => {
                 abandon_command(&mut g, tid);
-                return Err(Error::Solver(
+                release_plane_slots(&mut g, sh, tid);
+                Poll::Ready(Err(Error::Solver(
                     "solver farm shut down while a command was in flight".into(),
-                ));
+                )))
             }
-            g = sh.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            Out::Pending => Poll::Pending,
         }
     }
 
@@ -1123,12 +1400,16 @@ impl FarmHandle {
     }
 
     fn release(&self, tid: usize) {
-        let mut g = self.shared.lock();
+        let sh = &self.shared;
+        let mut g = sh.lock();
+        release_plane_slots(&mut g, sh, tid);
         let Some(t) = g.tenants[tid].as_mut() else { return };
         if t.active && !t.done_flag {
             // command still in flight (client dropped without waiting):
-            // free the slot when it completes; tasks hold their own Arc
+            // free the slot when it completes; tasks hold their own Arc.
+            // Nobody can await a released tenant, so drop any waker too.
             t.zombie = true;
+            t.waker = None;
         } else {
             g.tenants[tid] = None;
             g.free.push(tid);
@@ -1197,6 +1478,50 @@ impl FarmStencil {
         self.wait()
     }
 
+    /// Enqueue an entire batched [`CommandGraph`] (epoch-chain segments,
+    /// tolerance, resubmission policy) under a single scheduler-lock
+    /// acquisition. Segment boundaries are chained inside the farm's
+    /// completion transition, so the result is bit-identical to one
+    /// monolithic `submit` of `graph.total()` steps.
+    pub fn submit_graph(&mut self, graph: &CommandGraph) -> Result<()> {
+        self.farm.submit_stencil_graph(self.tid, graph)
+    }
+
+    /// Blocking graph run: submit_graph + wait.
+    pub fn advance_graph(&mut self, graph: &CommandGraph) -> Result<StencilFarmRun> {
+        self.submit_graph(graph)?;
+        self.wait()
+    }
+
+    /// Completion future of the in-flight command (async `wait`).
+    /// Resolving harvests the command; dropping unresolved releases the
+    /// plane slots but leaves the command running.
+    pub fn completion(&mut self) -> StencilCompletion<'_> {
+        StencilCompletion::new(self.farm.clone(), self.tid)
+    }
+
+    /// Non-blocking submit: enqueue and return the completion future.
+    pub fn submit_async(&mut self, steps: usize, tol: Option<f64>) -> Result<StencilCompletion<'_>> {
+        self.farm.submit_stencil(self.tid, steps, tol)?;
+        Ok(self.completion())
+    }
+
+    /// Non-blocking graph submit: enqueue and return the completion future.
+    pub fn submit_graph_async(&mut self, graph: &CommandGraph) -> Result<StencilCompletion<'_>> {
+        self.farm.submit_stencil_graph(self.tid, graph)?;
+        Ok(self.completion())
+    }
+
+    /// Async advance: submit + await (the async twin of [`Self::advance`]).
+    pub async fn advance_async(&mut self, steps: usize, tol: Option<f64>) -> Result<StencilFarmRun> {
+        self.submit_async(steps, tol)?.await
+    }
+
+    /// Async graph run: submit_graph + await.
+    pub async fn advance_graph_async(&mut self, graph: &CommandGraph) -> Result<StencilFarmRun> {
+        self.submit_graph_async(graph)?.await
+    }
+
     /// Snapshot the padded domain data (between commands only).
     pub fn state(&self) -> Result<Vec<f64>> {
         self.farm.stencil_state(self.tid)
@@ -1252,6 +1577,101 @@ impl FarmCg {
         self.submit(x, r, p, rr, threshold, iters)?;
         self.wait(x, r, p)
     }
+
+    /// Enqueue an entire batched [`CommandGraph`] of CG iteration
+    /// segments under a single scheduler-lock acquisition; the graph's
+    /// tolerance (if any) is the squared-residual threshold. Bit-identical
+    /// to one monolithic `submit` of `graph.total()` iterations.
+    pub fn submit_graph(
+        &mut self,
+        x: &[f64],
+        r: &[f64],
+        p: &[f64],
+        rr: f64,
+        graph: &CommandGraph,
+    ) -> Result<()> {
+        self.farm.submit_cg_graph(self.tid, x, r, p, rr, graph)
+    }
+
+    /// Blocking graph run: submit_graph + wait.
+    pub fn run_graph(
+        &mut self,
+        x: &mut [f64],
+        r: &mut [f64],
+        p: &mut [f64],
+        rr: f64,
+        graph: &CommandGraph,
+    ) -> Result<CgFarmRun> {
+        self.submit_graph(x, r, p, rr, graph)?;
+        self.wait(x, r, p)
+    }
+
+    /// Completion future of the in-flight command (async `wait`). The
+    /// borrowed slices receive the advanced state when it resolves.
+    pub fn completion<'a>(
+        &'a mut self,
+        x: &'a mut [f64],
+        r: &'a mut [f64],
+        p: &'a mut [f64],
+    ) -> CgCompletion<'a> {
+        CgCompletion::new(self.farm.clone(), self.tid, x, r, p)
+    }
+
+    /// Non-blocking run: enqueue up to `iters` iterations from the state
+    /// in `x`/`r`/`p` and return the completion future that will copy the
+    /// advanced state back into them.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_async<'a>(
+        &'a mut self,
+        x: &'a mut [f64],
+        r: &'a mut [f64],
+        p: &'a mut [f64],
+        rr: f64,
+        threshold: f64,
+        iters: usize,
+    ) -> Result<CgCompletion<'a>> {
+        self.farm.submit_cg(self.tid, x, r, p, rr, threshold, iters)?;
+        Ok(self.completion(x, r, p))
+    }
+
+    /// Non-blocking graph run: enqueue the batched graph and return the
+    /// completion future.
+    pub fn submit_graph_async<'a>(
+        &'a mut self,
+        x: &'a mut [f64],
+        r: &'a mut [f64],
+        p: &'a mut [f64],
+        rr: f64,
+        graph: &CommandGraph,
+    ) -> Result<CgCompletion<'a>> {
+        self.farm.submit_cg_graph(self.tid, x, r, p, rr, graph)?;
+        Ok(self.completion(x, r, p))
+    }
+
+    /// Async run: submit + await (the async twin of [`Self::run`]).
+    pub async fn run_async(
+        &mut self,
+        x: &mut [f64],
+        r: &mut [f64],
+        p: &mut [f64],
+        rr: f64,
+        threshold: f64,
+        iters: usize,
+    ) -> Result<CgFarmRun> {
+        self.submit_async(x, r, p, rr, threshold, iters)?.await
+    }
+
+    /// Async graph run: submit_graph + await.
+    pub async fn run_graph_async(
+        &mut self,
+        x: &mut [f64],
+        r: &mut [f64],
+        p: &mut [f64],
+        rr: f64,
+        graph: &CommandGraph,
+    ) -> Result<CgFarmRun> {
+        self.submit_graph_async(x, r, p, rr, graph)?.await
+    }
 }
 
 impl Drop for FarmCg {
@@ -1286,8 +1706,15 @@ fn worker_main(sh: &FarmShared) {
             task.engine.run_shard(task.phase, task.shard, task.sub, task.track, task.scalar)
         }))
         .map_err(|_| format!("farm worker panicked (phase {}, shard {})", task.phase, task.shard));
-        let mut g = sh.lock();
-        complete(&mut g, sh, &task, res);
+        let waker = {
+            let mut g = sh.lock();
+            complete(&mut g, sh, &task, res)
+        };
+        // fire the completion waker outside the scheduler lock — the woken
+        // executor immediately re-polls, which needs the lock itself
+        if let Some(w) = waker {
+            w.wake();
+        }
     }
 }
 
@@ -1371,22 +1798,122 @@ fn abandon_command(g: &mut FarmState, tid: usize) {
     }
 }
 
+/// Account one batch enqueued through the submission plane. Called once
+/// per `submit`/`submit_graph` — i.e. once per enqueue-side scheduler
+/// lock acquisition, which is exactly the invariant the counters assert:
+/// `sched_lock_acquisitions == plane_batches` on the batched path.
+fn note_batch_enqueued(sh: &FarmShared) {
+    sh.commands.fetch_add(1, Ordering::Relaxed);
+    counters::note_farm_commands(1);
+    sh.plane_batches.fetch_add(1, Ordering::Relaxed);
+    counters::note_plane_batches(1);
+    sh.sched_locks.fetch_add(1, Ordering::Relaxed);
+    counters::note_sched_lock_acquisitions(1);
+}
+
+/// Admission control: charge `need` plane slots (one per graph segment)
+/// to tenant `tid`, applying the farm's [`PlaneConfig`] policy when the
+/// submission queue is full. Takes and returns the scheduler guard so
+/// `Block`/`Timeout` can park on the gate condvar without releasing the
+/// caller's critical section on success. Callers must have rejected
+/// contract errors (double submit, wrong engine) **before** this: a
+/// double submit under the `Block` policy would otherwise park on a gate
+/// only its own completion could open.
+fn acquire_plane_slots<'a>(
+    sh: &'a FarmShared,
+    mut g: MutexGuard<'a, FarmState>,
+    tid: usize,
+    need: usize,
+) -> Result<MutexGuard<'a, FarmState>> {
+    let cap = sh.plane.queue_cap;
+    let per = sh.plane.per_tenant;
+    if need > cap || need > per {
+        // can never fit, regardless of policy or patience
+        sh.plane_sheds.fetch_add(1, Ordering::Relaxed);
+        counters::note_plane_sheds(1);
+        return Err(Error::Shed(format!(
+            "submission of {need} segment(s) exceeds the plane's capacity \
+             (queue {cap}, per-tenant {per})"
+        )));
+    }
+    let deadline = match sh.plane.policy {
+        AdmissionPolicy::Timeout(d) => Some(Instant::now() + d),
+        _ => None,
+    };
+    loop {
+        let held = match g.tenants[tid].as_ref() {
+            Some(t) => t.slots_held,
+            None => return Err(Error::Solver("farm tenant released".into())),
+        };
+        if g.plane_inflight.saturating_add(need) <= cap && held.saturating_add(need) <= per {
+            g.plane_inflight += need;
+            g.plane_peak = g.plane_peak.max(g.plane_inflight);
+            g.tenants[tid].as_mut().expect("tenant checked above").slots_held += need;
+            return Ok(g);
+        }
+        match sh.plane.policy {
+            AdmissionPolicy::Shed => {
+                sh.plane_sheds.fetch_add(1, Ordering::Relaxed);
+                counters::note_plane_sheds(1);
+                return Err(Error::Shed("submission queue full".into()));
+            }
+            AdmissionPolicy::Block => {
+                g = sh.gate_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            }
+            AdmissionPolicy::Timeout(_) => {
+                let deadline = deadline.expect("deadline set for Timeout policy");
+                let now = Instant::now();
+                if now >= deadline {
+                    sh.plane_timeouts.fetch_add(1, Ordering::Relaxed);
+                    counters::note_plane_timeouts(1);
+                    return Err(Error::Timeout(
+                        "timed out waiting for a submission-queue slot".into(),
+                    ));
+                }
+                let (guard, _) = sh
+                    .gate_cv
+                    .wait_timeout(g, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                g = guard;
+            }
+        }
+        if g.shutdown {
+            return Err(Error::Solver("solver farm is shut down".into()));
+        }
+    }
+}
+
+/// Return all plane slots held by tenant `tid` and wake parked
+/// submitters. Idempotent — harvest, future drop, and tenant release can
+/// each race to be the one that frees.
+fn release_plane_slots(g: &mut FarmState, sh: &FarmShared, tid: usize) {
+    let Some(t) = g.tenants.get_mut(tid).and_then(|t| t.as_mut()) else { return };
+    if t.slots_held > 0 {
+        g.plane_inflight -= t.slots_held;
+        t.slots_held = 0;
+        sh.gate_cv.notify_all();
+    }
+}
+
 /// Record a finished task; on phase completion run the transition and
-/// either enqueue the next phase or complete the command.
+/// either enqueue the next phase or complete the command. Returns the
+/// tenant's registered completion waker (if the command finished) for
+/// the caller to fire **after** dropping the scheduler lock.
 fn complete(
     g: &mut FarmState,
     sh: &FarmShared,
     task: &Task,
     res: std::result::Result<ShardOut, String>,
-) {
+) -> Option<Waker> {
     sh.tasks.fetch_add(1, Ordering::Relaxed);
     counters::note_farm_tasks(1);
     let tick = g.tick;
     let mut requeue = false;
     let mut finished = false;
     let mut freed = false;
+    let mut waker = None;
     {
-        let Some(t) = g.tenants[task.tid].as_mut() else { return };
+        let Some(t) = g.tenants[task.tid].as_mut() else { return None };
         t.outstanding -= 1;
         match res {
             Ok(o) => {
@@ -1400,7 +1927,7 @@ fn complete(
             }
         }
         if t.outstanding > 0 || t.next_shard < t.nshards {
-            return; // phase still in flight
+            return None; // phase still in flight
         }
         let step = if t.error.is_some() { Step::Done } else { transition(t, sh) };
         match step {
@@ -1416,6 +1943,7 @@ fn complete(
                     freed = true;
                 } else {
                     t.done_flag = true;
+                    waker = t.waker.take();
                     finished = true;
                 }
             }
@@ -1426,12 +1954,15 @@ fn complete(
         sh.work_cv.notify_all();
     }
     if freed {
+        // nobody will ever harvest a zombie: return its plane slots here
+        release_plane_slots(g, sh, task.tid);
         g.tenants[task.tid] = None;
         g.free.push(task.tid);
     }
     if finished {
         sh.done_cv.notify_all();
     }
+    waker
 }
 
 /// Phase-completion transition: the scalar control flow of the solo
@@ -1457,7 +1988,11 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
             P_HALO => {
                 if let (Some(tol), Some(res)) = (t.tol, t.residual) {
                     if res <= tol {
-                        return Step::Phase(P_FINAL); // collective epoch stop
+                        // collective epoch stop: convergence retires the
+                        // whole graph, queued segments and resubmits too
+                        t.graph_segs.clear();
+                        t.graph_resubmits = 0;
+                        return Step::Phase(P_FINAL);
                     }
                 }
                 stencil_next_epoch(t, e)
@@ -1487,8 +2022,21 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
                 t.rr = t.rr_next;
                 t.iters_done += 1;
                 sh.epochs.fetch_add(1, Ordering::Relaxed);
-                if t.iters_done >= t.iters_target || t.rr <= t.threshold || t.rr <= 0.0 {
+                if t.rr <= t.threshold || t.rr <= 0.0 {
+                    // convergence retires the whole graph
+                    t.graph_segs.clear();
+                    t.graph_resubmits = 0;
                     Step::Done
+                } else if t.iters_done >= t.iters_target {
+                    // segment boundary: chain the next graph segment
+                    // without releasing the (already held) scheduler lock
+                    match next_graph_segment(t) {
+                        Some(seg) => {
+                            t.iters_target += seg;
+                            Step::Phase(P_SPMV)
+                        }
+                        None => Step::Done,
+                    }
                 } else {
                     Step::Phase(P_SPMV)
                 }
@@ -1500,13 +2048,33 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
 
 fn stencil_next_epoch(t: &mut Tenant, e: &StencilEngine) -> Step {
     if t.done_steps >= t.steps_target {
-        Step::Phase(P_FINAL)
-    } else {
-        // a trailing partial epoch advances fewer sub-steps; the slab's
-        // bt*r halo depth covers any sub <= bt
-        t.sub = e.bt.min(t.steps_target - t.done_steps);
-        Step::Phase(P_COMPUTE)
+        // segment boundary: chain the next graph segment under the
+        // already-held scheduler lock (no client re-acquire per epoch)
+        match next_graph_segment(t) {
+            Some(seg) => t.steps_target += seg,
+            None => return Step::Phase(P_FINAL),
+        }
     }
+    // a trailing partial epoch advances fewer sub-steps; the slab's
+    // bt*r halo depth covers any sub <= bt
+    t.sub = e.bt.min(t.steps_target - t.done_steps);
+    Step::Phase(P_COMPUTE)
+}
+
+/// Dequeue the next segment of the tenant's command graph, replaying the
+/// stored schedule when a resubmission budget remains. `None` ends the
+/// command.
+fn next_graph_segment(t: &mut Tenant) -> Option<usize> {
+    if let Some(seg) = t.graph_segs.pop_front() {
+        return Some(seg);
+    }
+    if t.graph_resubmits > 0 && !t.graph_schedule.is_empty() {
+        t.graph_resubmits -= 1;
+        let sched: Vec<usize> = t.graph_schedule.clone();
+        t.graph_segs.extend(sched);
+        return t.graph_segs.pop_front();
+    }
+    None
 }
 
 #[cfg(test)]
@@ -1874,6 +2442,36 @@ mod tests {
         }
         t.wait().unwrap();
         assert_eq!(t.state().unwrap().len(), d.data.len());
+    }
+
+    /// Regression (submission-plane satellite): the double-submit
+    /// contract must hold for CG sessions too, not just stencils — and it
+    /// must fail loudly *before* admission control, so a `Block`-policy
+    /// plane can never park a double submit on a gate only its own
+    /// completion could open.
+    #[test]
+    fn cg_double_submit_is_an_error_not_a_deadlock() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 11);
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        // bounded Block-policy plane: the deadlock would be real if the
+        // contract check came after the admission gate
+        let farm =
+            SolverFarm::spawn_with(1, PlaneConfig::bounded(1)).unwrap();
+        let plan = MergePlan::new(&a, 4);
+        let mut t = farm.handle().admit_cg(Arc::new(a.clone()), plan).unwrap();
+        let n = a.n_rows;
+        let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+        t.submit(&x, &r, &p, rr0, 0.0, 10_000).unwrap();
+        let err = t.submit(&x, &r, &p, rr0, 0.0, 1).unwrap_err();
+        assert!(format!("{err}").contains("in flight"), "{err}");
+        let run = t.wait(&mut x, &mut r, &mut p).unwrap();
+        assert_eq!(run.iters, 10_000);
+        // the rejected submit must not have leaked a plane slot
+        assert_eq!(farm.metrics().plane_inflight_peak, 1);
+        // tenant stays usable
+        let again = t.run(&mut x, &mut r, &mut p, run.rr, 0.0, 1).unwrap();
+        assert!(again.error.is_none());
     }
 
     #[test]

@@ -1,18 +1,40 @@
-//! Runtime layer: the execution substrates sessions run on.
+//! Runtime layer: the execution substrates sessions run on, split into a
+//! back-end (where shards compute) and a front-end (how commands get in
+//! and results get out).
 //!
 //! * [`client`]/[`manifest`]/[`tensor`] — load AOT-compiled HLO artifacts
 //!   (produced once by `python/compile/aot.py`) and execute them on the
 //!   PJRT CPU client. Python is never on this path.
-//! * [`farm`] — the multi-tenant [`farm::SolverFarm`] serving path: one
-//!   spawn-once worker pool executing many concurrent stencil/CG sessions
-//!   (see `SessionBuilder::farm`).
+//! * [`farm`] — the back-end: the multi-tenant [`farm::SolverFarm`], one
+//!   spawn-once worker pool executing many concurrent stencil/CG
+//!   sessions via phase-sharded commands and countdown transitions (see
+//!   `SessionBuilder::farm`).
+//! * [`plane`] — the front-end: the async submission plane every farm
+//!   command passes through. Completion futures driven by a
+//!   dependency-free reactor + [`plane::LocalExecutor`] (one OS thread
+//!   multiplexes thousands of in-flight sessions; the blocking
+//!   `wait`/`advance`/`run` wrappers are [`plane::block_on`] over the
+//!   same futures), batched [`plane::CommandGraph`]s that enqueue an
+//!   entire `advance_until` schedule under a single scheduler-lock
+//!   acquisition, and bounded admission control with block/shed/timeout
+//!   backpressure ([`plane::PlaneConfig`], `SolverFarm::spawn_with`).
+//!
+//! The split mirrors the paper's host/device boundary: the farm is the
+//! persistent "device" (resident workers, resident tenant state), the
+//! plane is the launch path whose per-command host cost the batching
+//! collapses — and neither side ever changes what a shard computes, so
+//! the farm's bit-identity guarantees survive every front-end mode.
 
 pub mod client;
 pub mod farm;
 pub mod manifest;
+pub mod plane;
 pub mod tensor;
 
 pub use client::{Executable, Runtime, RuntimeMetrics};
 pub use farm::{FarmHandle, FarmMetrics, SolverFarm};
 pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
+pub use plane::{
+    block_on, AdmissionPolicy, CommandGraph, CommandGraphBuilder, LocalExecutor, PlaneConfig,
+};
 pub use tensor::HostTensor;

@@ -1,0 +1,137 @@
+//! Admission control and backpressure for the submission plane.
+//!
+//! Every command enqueued to a [`crate::runtime::farm::SolverFarm`] —
+//! blocking or async, single command or batched [`super::CommandGraph`] —
+//! first claims *plane slots* from a bounded submission budget: one slot
+//! per queued graph segment (a plain `submit` is a one-segment batch).
+//! Slots are released when the command's result is harvested, when a
+//! completion future is dropped before completing (the zombie-future
+//! path), or when the tenant itself is released. The budget is two caps:
+//!
+//! * [`PlaneConfig::queue_cap`] — total slots across all tenants, the
+//!   farm-wide submission queue bound;
+//! * [`PlaneConfig::per_tenant`] — slots one tenant may hold at once,
+//!   so a single chatty client cannot monopolize the queue.
+//!
+//! When a submission does not fit, the [`AdmissionPolicy`] decides:
+//! `Block` parks the submitting thread until slots free up (the default —
+//! with the default unbounded caps it never parks, preserving the PR-5
+//! blocking semantics exactly), `Shed` fails fast with
+//! [`crate::error::Error::Shed`], and `Timeout` parks up to a deadline
+//! then fails with [`crate::error::Error::Timeout`]. Sheds and timeouts
+//! are counted per farm ([`crate::runtime::farm::FarmMetrics`]) and
+//! process-wide ([`crate::util::counters::plane_sheds`] /
+//! [`crate::util::counters::plane_timeouts`]).
+//!
+//! The acquire itself is synchronous in every submit variant: `Block` and
+//! `Timeout` park the *submitting OS thread*. Async front-ends that must
+//! never park a [`super::LocalExecutor`] thread should either size the
+//! caps to their tenancy or use `Shed` and treat the error as a retry
+//! signal; a submission larger than either cap can never fit and is shed
+//! immediately regardless of policy.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// What to do when a submission does not fit the plane's bounded queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Park the submitting thread until enough slots free up (default).
+    Block,
+    /// Fail fast with [`Error::Shed`]; the command is not enqueued.
+    Shed,
+    /// Park up to the given duration, then fail with [`Error::Timeout`].
+    Timeout(Duration),
+}
+
+/// Submission-plane budget of one farm: queue bound, per-tenant cap, and
+/// the backpressure policy. The default is unbounded/`Block` — byte-for-
+/// byte the pre-plane farm behavior.
+#[derive(Clone, Copy, Debug)]
+pub struct PlaneConfig {
+    /// Total plane slots across all tenants (queued graph segments).
+    pub queue_cap: usize,
+    /// Plane slots one tenant may hold at once.
+    pub per_tenant: usize,
+    /// Policy applied when a submission does not fit.
+    pub policy: AdmissionPolicy,
+}
+
+impl Default for PlaneConfig {
+    fn default() -> Self {
+        Self {
+            queue_cap: usize::MAX,
+            per_tenant: usize::MAX,
+            policy: AdmissionPolicy::Block,
+        }
+    }
+}
+
+impl PlaneConfig {
+    /// Unbounded queue, `Block` policy (the pre-plane farm behavior).
+    pub fn unbounded() -> Self {
+        Self::default()
+    }
+
+    /// Bound the farm-wide submission queue to `cap` slots.
+    pub fn bounded(cap: usize) -> Self {
+        Self { queue_cap: cap, ..Self::default() }
+    }
+
+    /// Cap the slots one tenant may hold at once.
+    pub fn per_tenant(mut self, cap: usize) -> Self {
+        self.per_tenant = cap;
+        self
+    }
+
+    /// Set the backpressure policy.
+    pub fn policy(mut self, policy: AdmissionPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Validate the caps (zero-capacity queues can admit nothing).
+    pub fn validate(&self) -> Result<()> {
+        if self.queue_cap == 0 {
+            return Err(Error::invalid("plane queue_cap must be >= 1"));
+        }
+        if self.per_tenant == 0 {
+            return Err(Error::invalid("plane per_tenant cap must be >= 1"));
+        }
+        if let AdmissionPolicy::Timeout(d) = self.policy {
+            if d.is_zero() {
+                return Err(Error::invalid(
+                    "plane Timeout policy needs a non-zero duration (use Shed to fail fast)",
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_unbounded_block() {
+        let c = PlaneConfig::default();
+        assert_eq!(c.queue_cap, usize::MAX);
+        assert_eq!(c.per_tenant, usize::MAX);
+        assert_eq!(c.policy, AdmissionPolicy::Block);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn zero_caps_and_zero_timeouts_are_rejected() {
+        assert!(PlaneConfig::bounded(0).validate().is_err());
+        assert!(PlaneConfig::bounded(4).per_tenant(0).validate().is_err());
+        let zero = PlaneConfig::bounded(4).policy(AdmissionPolicy::Timeout(Duration::ZERO));
+        assert!(zero.validate().is_err());
+        let ok = PlaneConfig::bounded(4)
+            .per_tenant(2)
+            .policy(AdmissionPolicy::Timeout(Duration::from_millis(5)));
+        assert!(ok.validate().is_ok());
+    }
+}

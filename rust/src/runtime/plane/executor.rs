@@ -1,0 +1,250 @@
+//! `LocalExecutor`: one front-end thread multiplexing many futures.
+//!
+//! The serving shape the plane exists for: thousands of tenants, each a
+//! small async task (`submit` → await completion → resubmit), all driven
+//! by one OS thread. The executor is single-threaded and dependency-free
+//! — a slab of boxed futures, a shared [`super::reactor::WakeQueue`], and
+//! per-task [`super::reactor::TaskWaker`]s that farm workers fire from
+//! completion transitions. Only woken tasks are re-polled; an idle
+//! executor parks on the queue's condvar and costs nothing.
+//!
+//! Structure follows the mini-async-runtime exemplar (SNIPPETS.md §1–2):
+//! `spawn` returns a [`JoinHandle`] future, `run` drives a main future
+//! (typically `async { for h in handles { h.await; } }`) until it
+//! resolves. Tasks and handles are `!Send` — pin one executor per
+//! front-end thread; cross-thread communication happens through wakers,
+//! which are `Send` by construction.
+
+use std::cell::RefCell;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::task::{Context, Poll, Waker};
+
+use super::reactor::{TaskWaker, WakeQueue};
+
+/// Reserved wake-queue id of the future passed to [`LocalExecutor::run`].
+const MAIN_ID: usize = usize::MAX;
+
+struct TaskEntry {
+    fut: Pin<Box<dyn Future<Output = ()>>>,
+    flag: Arc<TaskWaker>,
+    waker: Waker,
+}
+
+/// Shared completion slot between a spawned task and its [`JoinHandle`].
+struct JoinState<T> {
+    value: Option<T>,
+    waker: Option<Waker>,
+}
+
+/// Future resolving to a spawned task's output. Awaited from other tasks
+/// on the same executor (usually the `run` main future).
+pub struct JoinHandle<T> {
+    state: Rc<RefCell<JoinState<T>>>,
+}
+
+impl<T> Future for JoinHandle<T> {
+    type Output = T;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        let mut st = self.state.borrow_mut();
+        match st.value.take() {
+            Some(v) => Poll::Ready(v),
+            None => {
+                st.waker = Some(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+/// A single-threaded executor driving spawned tasks plus one main future.
+/// See the module docs for the serving shape it implements.
+pub struct LocalExecutor {
+    queue: Arc<WakeQueue>,
+    tasks: RefCell<Vec<Option<TaskEntry>>>,
+    free: RefCell<Vec<usize>>,
+}
+
+impl Default for LocalExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LocalExecutor {
+    pub fn new() -> Self {
+        Self {
+            queue: WakeQueue::new(),
+            tasks: RefCell::new(Vec::new()),
+            free: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Number of spawned tasks that have not completed yet.
+    pub fn live_tasks(&self) -> usize {
+        self.tasks.borrow().iter().filter(|t| t.is_some()).count()
+    }
+
+    /// Spawn a task; it is polled by [`LocalExecutor::run`] whenever its
+    /// waker fires (and once to start). The returned [`JoinHandle`]
+    /// resolves to the task's output.
+    pub fn spawn<T: 'static>(&self, fut: impl Future<Output = T> + 'static) -> JoinHandle<T> {
+        let state = Rc::new(RefCell::new(JoinState { value: None, waker: None }));
+        let st = state.clone();
+        let wrapped: Pin<Box<dyn Future<Output = ()>>> = Box::pin(async move {
+            let v = fut.await;
+            let join_waker = {
+                let mut s = st.borrow_mut();
+                s.value = Some(v);
+                s.waker.take()
+            };
+            if let Some(w) = join_waker {
+                w.wake();
+            }
+        });
+        let id = match self.free.borrow_mut().pop() {
+            Some(id) => id,
+            None => {
+                let mut tasks = self.tasks.borrow_mut();
+                tasks.push(None);
+                tasks.len() - 1
+            }
+        };
+        let flag = Arc::new(TaskWaker::new(id, self.queue.clone()));
+        let waker = Waker::from(flag.clone());
+        self.tasks.borrow_mut()[id] = Some(TaskEntry { fut: wrapped, flag, waker });
+        // seed the first poll through the normal wake path
+        self.tasks.borrow()[id].as_ref().expect("just inserted").waker.wake_by_ref();
+        JoinHandle { state }
+    }
+
+    /// Drive `main` (and every spawned task) until `main` resolves.
+    /// Re-entrant spawns — tasks spawning tasks mid-poll — are fine; the
+    /// executor holds no slab borrow across a poll.
+    pub fn run<T>(&self, main: impl Future<Output = T>) -> T {
+        let mut main = Box::pin(main);
+        let main_flag = Arc::new(TaskWaker::new(MAIN_ID, self.queue.clone()));
+        let main_waker = Waker::from(main_flag.clone());
+        main_waker.wake_by_ref(); // seed the first poll of main
+        loop {
+            for id in self.queue.wait_drain() {
+                if id == MAIN_ID {
+                    main_flag.clear();
+                    let mut cx = Context::from_waker(&main_waker);
+                    if let Poll::Ready(v) = main.as_mut().poll(&mut cx) {
+                        return v;
+                    }
+                } else {
+                    self.poll_task(id);
+                }
+            }
+        }
+    }
+
+    /// Poll one spawned task. The entry is taken out of the slab for the
+    /// duration of the poll so the task can call `spawn` re-entrantly; a
+    /// wake landing mid-poll re-queues the id, and a queued id whose task
+    /// already finished (or whose slot was reused) is a no-op/spurious
+    /// poll, which futures tolerate by contract.
+    fn poll_task(&self, id: usize) {
+        let entry = self.tasks.borrow_mut()[id].take();
+        let Some(mut entry) = entry else { return };
+        entry.flag.clear();
+        let mut cx = Context::from_waker(&entry.waker);
+        match entry.fut.as_mut().poll(&mut cx) {
+            Poll::Ready(()) => self.free.borrow_mut().push(id),
+            Poll::Pending => self.tasks.borrow_mut()[id] = Some(entry),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    #[test]
+    fn run_drives_main_to_completion() {
+        let ex = LocalExecutor::new();
+        assert_eq!(ex.run(async { 5 }), 5);
+    }
+
+    #[test]
+    fn spawned_tasks_complete_and_join_in_any_order() {
+        let ex = LocalExecutor::new();
+        let a = ex.spawn(async { 1u64 });
+        let b = ex.spawn(async { 2u64 });
+        let c = ex.spawn(async { 3u64 });
+        // join out of spawn order: values route through the right handles
+        let got = ex.run(async move { (c.await, a.await, b.await) });
+        assert_eq!(got, (3, 1, 2));
+        assert_eq!(ex.live_tasks(), 0);
+    }
+
+    #[test]
+    fn reentrant_spawn_from_a_running_task_works() {
+        let ex = Rc::new(LocalExecutor::new());
+        let ex2 = ex.clone();
+        let h = ex.spawn(async move {
+            let inner = ex2.spawn(async { 10u32 });
+            inner.await + 1
+        });
+        assert_eq!(ex.run(async move { h.await }), 11);
+    }
+
+    #[test]
+    fn task_slots_are_reused_across_generations() {
+        let ex = LocalExecutor::new();
+        for round in 0..50u64 {
+            let h = ex.spawn(async move { round });
+            assert_eq!(ex.run(async move { h.await }), round);
+        }
+        assert!(ex.tasks.borrow().len() <= 2, "slab must recycle slots");
+    }
+
+    #[test]
+    fn yielding_tasks_interleave_on_one_thread() {
+        /// Cooperative yield: pend once, self-wake.
+        struct YieldNow(bool);
+        impl Future for YieldNow {
+            type Output = ();
+            fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+                if self.0 {
+                    Poll::Ready(())
+                } else {
+                    self.0 = true;
+                    cx.waker().wake_by_ref();
+                    Poll::Pending
+                }
+            }
+        }
+        let ex = LocalExecutor::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let hits = Rc::new(Cell::new(0usize));
+        let mut handles = Vec::new();
+        for i in 0..4usize {
+            let order = order.clone();
+            let hits = hits.clone();
+            handles.push(ex.spawn(async move {
+                order.borrow_mut().push((i, 0));
+                YieldNow(false).await;
+                order.borrow_mut().push((i, 1));
+                hits.set(hits.get() + 1);
+            }));
+        }
+        ex.run(async move {
+            for h in handles {
+                h.await;
+            }
+        });
+        assert_eq!(hits.get(), 4);
+        let o = order.borrow();
+        // every task ran its first leg before any ran its second:
+        // genuine interleaving, not sequential task execution
+        let first_second = o.iter().position(|&(_, leg)| leg == 1).unwrap();
+        assert_eq!(first_second, 4, "all first legs precede the second legs: {o:?}");
+    }
+}

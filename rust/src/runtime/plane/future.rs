@@ -1,0 +1,113 @@
+//! Completion futures: the async face of a farm command.
+//!
+//! A completion future resolves when the farm's workers finish the
+//! in-flight command of its tenant. Polling registers the task's waker
+//! in the tenant (under the scheduler lock); the worker that completes
+//! the command — or a farm shutdown — fires it. Resolving *harvests* the
+//! command exactly like the blocking `wait` (clears the in-flight state,
+//! takes the run/error, releases the tenant's plane slots), so
+//! `submit` + await is interchangeable with `submit` + `wait`; indeed
+//! the blocking wrappers are `block_on` over these futures.
+//!
+//! Dropping a completion future before it resolves does **not** cancel
+//! the command — the farm keeps executing it, and a later `wait` (or new
+//! future) can still harvest it — but it *does* release the tenant's
+//! plane slots immediately, so an abandoned client cannot pin admission
+//! capacity (the zombie-future guarantee, exercised by the plane tests).
+
+use std::future::Future;
+use std::marker::PhantomData;
+use std::pin::Pin;
+use std::task::{Context, Poll};
+
+use crate::error::Result;
+use crate::runtime::farm::{CgFarmRun, FarmCg, FarmHandle, FarmStencil, StencilFarmRun};
+
+/// Future of an in-flight stencil command; created by
+/// [`FarmStencil::completion`] / [`FarmStencil::submit_async`]. Borrows
+/// the session handle for its lifetime (the submit/await handshake —
+/// like `wait`, nothing else may touch the session mid-flight).
+pub struct StencilCompletion<'t> {
+    farm: FarmHandle,
+    tid: usize,
+    finished: bool,
+    _session: PhantomData<&'t mut FarmStencil>,
+}
+
+impl<'t> StencilCompletion<'t> {
+    pub(crate) fn new(farm: FarmHandle, tid: usize) -> Self {
+        Self { farm, tid, finished: false, _session: PhantomData }
+    }
+}
+
+impl Future for StencilCompletion<'_> {
+    type Output = Result<StencilFarmRun>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let this = self.get_mut();
+        match this.farm.poll_stencil_done(this.tid, cx.waker()) {
+            Poll::Ready(out) => {
+                this.finished = true;
+                Poll::Ready(out)
+            }
+            Poll::Pending => Poll::Pending,
+        }
+    }
+}
+
+impl Drop for StencilCompletion<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.farm.forget_completion(self.tid);
+        }
+    }
+}
+
+/// Future of an in-flight CG command; resolving copies the advanced
+/// x/r/p back into the borrowed output slices (the same command-boundary
+/// copy-out as the blocking `wait`). Created by [`FarmCg::completion`] /
+/// [`FarmCg::submit_async`].
+pub struct CgCompletion<'t> {
+    farm: FarmHandle,
+    tid: usize,
+    finished: bool,
+    x: &'t mut [f64],
+    r: &'t mut [f64],
+    p: &'t mut [f64],
+    _session: PhantomData<&'t mut FarmCg>,
+}
+
+impl<'t> CgCompletion<'t> {
+    pub(crate) fn new(
+        farm: FarmHandle,
+        tid: usize,
+        x: &'t mut [f64],
+        r: &'t mut [f64],
+        p: &'t mut [f64],
+    ) -> Self {
+        Self { farm, tid, finished: false, x, r, p, _session: PhantomData }
+    }
+}
+
+impl Future for CgCompletion<'_> {
+    type Output = Result<CgFarmRun>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let this = self.get_mut();
+        match this.farm.poll_cg_done(this.tid, cx.waker(), this.x, this.r, this.p) {
+            Poll::Ready(out) => {
+                this.finished = true;
+                Poll::Ready(out)
+            }
+            Poll::Pending => Poll::Pending,
+        }
+    }
+}
+
+impl Drop for CgCompletion<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.farm.forget_completion(self.tid);
+        }
+    }
+}

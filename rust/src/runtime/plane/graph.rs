@@ -1,0 +1,187 @@
+//! Batched command graphs: a whole `advance_until` schedule as one
+//! pre-built submission.
+//!
+//! The per-epoch cost the farm still paid after PR 5 was *submission*:
+//! a client advancing a session in small chunks re-acquired the scheduler
+//! lock once per chunk. CUDA Graphs amortizes exactly this class of cost
+//! by capturing a kernel chain once and launching it as a unit (Ekelund
+//! et al., *Kernel Batching with CUDA Graphs*); the plane's analog is a
+//! [`CommandGraph`] — an epoch-chain schedule (segments), an optional
+//! tolerance check between segments, and a resubmission policy — built
+//! once and enqueued under a **single scheduler-lock acquisition**.
+//! Segment boundaries are then dequeued by the farm's own completion
+//! transition, *under the already-held scheduler lock*, never by a
+//! client round-trip: [`crate::util::counters::sched_lock_acquisitions`]
+//! grows by exactly one per graph no matter how many segments it chains
+//! (counter-asserted by `bench_check`).
+//!
+//! Because a dequeued segment simply extends the in-flight command's
+//! target (steps for stencils, iterations for CG) before the final-store
+//! phase is reached, a graph's execution is *literally* the monolithic
+//! command's execution — same phases, same bytes, same bits — and a
+//! tolerance stop inside any segment drops the rest of the schedule,
+//! exactly like the monolithic `advance_until` epoch stop.
+
+use crate::error::{Error, Result};
+
+/// A pre-built batched submission. Build with [`CommandGraph::builder`]
+/// or the [`CommandGraph::schedule`] convenience; submit with
+/// `FarmStencil::submit_graph` / `FarmCg::submit_graph` (or their
+/// blocking/async advance wrappers).
+#[derive(Clone, Debug)]
+pub struct CommandGraph {
+    segments: Vec<usize>,
+    tol: Option<f64>,
+    resubmits: u32,
+}
+
+impl CommandGraph {
+    pub fn builder() -> CommandGraphBuilder {
+        CommandGraphBuilder { segments: Vec::new(), tol: None, resubmits: 0 }
+    }
+
+    /// Convenience: chunk a `total`-step (or -iteration) schedule into
+    /// segments of `segment` each (last one partial), with an optional
+    /// tolerance/threshold. Equivalent to the monolithic
+    /// `advance(total, tol)` bit for bit.
+    pub fn schedule(total: usize, segment: usize, tol: Option<f64>) -> Result<CommandGraph> {
+        if total == 0 {
+            return Err(Error::invalid("command graph schedule needs total >= 1"));
+        }
+        if segment == 0 {
+            return Err(Error::invalid("command graph schedule needs segment >= 1"));
+        }
+        let mut b = Self::builder();
+        let mut left = total;
+        while left > 0 {
+            let s = segment.min(left);
+            b = b.segment(s);
+            left -= s;
+        }
+        if let Some(t) = tol {
+            b = b.tolerance(t);
+        }
+        b.build()
+    }
+
+    /// Epoch-chain segments, in execution order.
+    pub fn segments(&self) -> &[usize] {
+        &self.segments
+    }
+
+    /// Tolerance (stencil residual) / threshold (CG squared residual)
+    /// checked while the schedule runs.
+    pub fn tol(&self) -> Option<f64> {
+        self.tol
+    }
+
+    /// How many times the whole schedule is re-enqueued if it finishes
+    /// without converging (0 = run once).
+    pub fn resubmits(&self) -> u32 {
+        self.resubmits
+    }
+
+    /// Total steps/iterations of one pass over the schedule.
+    pub fn total(&self) -> usize {
+        self.segments.iter().sum()
+    }
+}
+
+/// Builder for [`CommandGraph`]; validation happens in
+/// [`CommandGraphBuilder::build`].
+#[derive(Clone, Debug)]
+pub struct CommandGraphBuilder {
+    segments: Vec<usize>,
+    tol: Option<f64>,
+    resubmits: u32,
+}
+
+impl CommandGraphBuilder {
+    /// Append one segment of `steps` steps (stencil) / iterations (CG).
+    pub fn segment(mut self, steps: usize) -> Self {
+        self.segments.push(steps);
+        self
+    }
+
+    /// Append several segments in order.
+    pub fn segments(mut self, steps: &[usize]) -> Self {
+        self.segments.extend_from_slice(steps);
+        self
+    }
+
+    /// Track the residual and stop the whole schedule once it reaches
+    /// `tol` (stencil epoch residual / CG squared-residual threshold).
+    pub fn tolerance(mut self, tol: f64) -> Self {
+        self.tol = Some(tol);
+        self
+    }
+
+    /// Re-enqueue the whole schedule up to `times` more times while the
+    /// tolerance has not been reached — the graph-resident analog of a
+    /// client retry loop, with zero extra lock acquisitions. Requires a
+    /// tolerance (an unconditional resubmit could never terminate early
+    /// and is almost certainly a bug).
+    pub fn resubmit(mut self, times: u32) -> Self {
+        self.resubmits = times;
+        self
+    }
+
+    pub fn build(self) -> Result<CommandGraph> {
+        if self.segments.is_empty() {
+            return Err(Error::invalid("command graph needs at least one segment"));
+        }
+        if self.segments.iter().any(|&s| s == 0) {
+            return Err(Error::invalid("command graph segments must be >= 1 steps"));
+        }
+        if self.resubmits > 0 && self.tol.is_none() {
+            return Err(Error::invalid(
+                "command graph resubmission requires a tolerance to converge on",
+            ));
+        }
+        Ok(CommandGraph {
+            segments: self.segments,
+            tol: self.tol,
+            resubmits: self.resubmits,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_segments_and_resubmit() {
+        assert!(CommandGraph::builder().build().is_err(), "empty graph");
+        assert!(
+            CommandGraph::builder().segment(4).segment(0).build().is_err(),
+            "zero segment"
+        );
+        assert!(
+            CommandGraph::builder().segment(4).resubmit(2).build().is_err(),
+            "resubmit without tolerance"
+        );
+        let g = CommandGraph::builder()
+            .segments(&[4, 4, 2])
+            .tolerance(1e-8)
+            .resubmit(3)
+            .build()
+            .unwrap();
+        assert_eq!(g.segments(), &[4, 4, 2]);
+        assert_eq!(g.total(), 10);
+        assert_eq!(g.tol(), Some(1e-8));
+        assert_eq!(g.resubmits(), 3);
+    }
+
+    #[test]
+    fn schedule_chunks_with_a_partial_tail() {
+        let g = CommandGraph::schedule(10, 4, None).unwrap();
+        assert_eq!(g.segments(), &[4, 4, 2]);
+        assert_eq!(g.tol(), None);
+        let g = CommandGraph::schedule(8, 100, Some(1e-6)).unwrap();
+        assert_eq!(g.segments(), &[8]);
+        assert_eq!(g.tol(), Some(1e-6));
+        assert!(CommandGraph::schedule(0, 4, None).is_err());
+        assert!(CommandGraph::schedule(4, 0, None).is_err());
+    }
+}

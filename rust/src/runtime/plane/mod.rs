@@ -1,0 +1,39 @@
+//! The async submission plane in front of [`crate::runtime::farm`].
+//!
+//! PR 5's `SolverFarm` removed per-session thread spawns; its front-end,
+//! however, was still blocking — one OS thread per in-flight command —
+//! so tenancy capped at thread-count scale. The plane removes that last
+//! per-session host cost with three cooperating pieces:
+//!
+//! 1. **Reactor + executor** ([`reactor`], [`executor`]): completion
+//!    futures whose wakers are fired by the farm's own completion
+//!    transitions, driven by a dependency-free single-threaded
+//!    [`LocalExecutor`]. One front-end thread multiplexes thousands of
+//!    in-flight sessions; the blocking `wait` wrappers are now
+//!    [`block_on`] over the same futures.
+//! 2. **Batched command graphs** ([`graph`]): a [`CommandGraph`] encodes
+//!    an entire `advance_until` schedule — epoch-chain segments, the
+//!    tolerance check, a resubmission policy — as one pre-built object
+//!    enqueued under a *single* scheduler-lock acquisition. Segment
+//!    boundaries are dequeued inside the farm's completion transition
+//!    (the lock is already held), so lock acquisitions scale with
+//!    batches, not epochs: `counters::sched_lock_acquisitions ==
+//!    counters::plane_batches` on the batched path.
+//! 3. **Admission control** ([`admission`]): a bounded submission queue
+//!    with per-tenant caps and a block/shed/timeout policy, so overload
+//!    degrades into counted backpressure instead of unbounded queueing.
+//!
+//! All three preserve the farm's bit-identity bar: the plane schedules
+//! *when* work is enqueued and *who* waits, never how a shard computes.
+
+pub mod admission;
+pub mod executor;
+pub mod future;
+pub mod graph;
+pub mod reactor;
+
+pub use admission::{AdmissionPolicy, PlaneConfig};
+pub use executor::{JoinHandle, LocalExecutor};
+pub use future::{CgCompletion, StencilCompletion};
+pub use graph::{CommandGraph, CommandGraphBuilder};
+pub use reactor::block_on;

@@ -1,0 +1,192 @@
+//! The plane's reactor primitives: dependency-free wakers and `block_on`.
+//!
+//! The farm's completion events are condvar broadcasts; the plane turns
+//! them into `std::task` wakes. Two waker flavors cover every consumer:
+//!
+//! * [`TaskWaker`] — a task id plus a cross-thread [`WakeQueue`]. A farm
+//!   worker finishing a command calls `Waker::wake`, which enqueues the
+//!   id (deduplicated by an atomic flag, so a wake storm costs one queue
+//!   entry per task) and signals the queue's condvar; the owning
+//!   [`super::LocalExecutor`] drains ids and re-polls exactly those
+//!   tasks. This is the mini-async-runtime structure with the reactor's
+//!   event source being the farm scheduler instead of an OS poller.
+//! * the thread-parking waker inside [`block_on`] — drives one future on
+//!   the calling thread, which is how the farm's *blocking* `wait`
+//!   wrappers are now implemented on top of the async completion path.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+use std::thread::Thread;
+
+/// Cross-thread ready queue: task ids whose futures should be re-polled.
+pub(crate) struct WakeQueue {
+    ready: Mutex<Vec<usize>>,
+    cv: Condvar,
+}
+
+impl WakeQueue {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self { ready: Mutex::new(Vec::new()), cv: Condvar::new() })
+    }
+
+    /// Enqueue a task id and signal the draining executor. Callers
+    /// deduplicate via [`TaskWaker::queued`]; the queue itself is dumb.
+    pub(crate) fn push(&self, id: usize) {
+        let mut q = self.ready.lock().unwrap_or_else(|p| p.into_inner());
+        q.push(id);
+        self.cv.notify_one();
+    }
+
+    /// Park until at least one id is queued, then take the whole batch.
+    pub(crate) fn wait_drain(&self) -> Vec<usize> {
+        let mut q = self.ready.lock().unwrap_or_else(|p| p.into_inner());
+        while q.is_empty() {
+            q = self.cv.wait(q).unwrap_or_else(|p| p.into_inner());
+        }
+        std::mem::take(&mut *q)
+    }
+}
+
+/// Waker of one executor task: pushes the task id into the executor's
+/// [`WakeQueue`]. The `queued` flag collapses redundant wakes between
+/// polls; the executor clears it immediately before polling so a wake
+/// arriving *during* the poll still lands.
+pub(crate) struct TaskWaker {
+    id: usize,
+    queued: AtomicBool,
+    queue: Arc<WakeQueue>,
+}
+
+impl TaskWaker {
+    pub(crate) fn new(id: usize, queue: Arc<WakeQueue>) -> Self {
+        Self { id, queued: AtomicBool::new(false), queue }
+    }
+
+    /// Re-arm the dedup flag; called by the executor right before polling.
+    pub(crate) fn clear(&self) {
+        self.queued.store(false, Ordering::Release);
+    }
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        Self::wake_by_ref(&self);
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        if !self.queued.swap(true, Ordering::AcqRel) {
+            self.queue.push(self.id);
+        }
+    }
+}
+
+/// Thread-parking waker: `wake` unparks the captured thread. Parking
+/// tokens make the unpark-before-park race benign, and [`block_on`]
+/// re-polls on every wake (spurious unparks are just extra polls).
+struct ThreadWaker {
+    thread: Thread,
+}
+
+impl Wake for ThreadWaker {
+    fn wake(self: Arc<Self>) {
+        self.thread.unpark();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.thread.unpark();
+    }
+}
+
+/// Drive one future to completion on the calling thread, parking between
+/// polls. This is the degenerate single-task executor the farm's blocking
+/// `wait` wrappers are built on; for multiplexing many completions on one
+/// thread use [`super::LocalExecutor`].
+pub fn block_on<F: Future>(fut: F) -> F::Output {
+    let mut fut = Box::pin(fut);
+    let waker = Waker::from(Arc::new(ThreadWaker { thread: std::thread::current() }));
+    let mut cx = Context::from_waker(&waker);
+    loop {
+        match Pin::new(&mut fut).as_mut().poll(&mut cx) {
+            Poll::Ready(v) => return v,
+            Poll::Pending => std::thread::park(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_on_drives_ready_and_yielding_futures() {
+        assert_eq!(block_on(async { 7 }), 7);
+
+        /// Pends once, waking itself immediately.
+        struct YieldOnce(bool);
+        impl Future for YieldOnce {
+            type Output = u32;
+            fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<u32> {
+                if self.0 {
+                    Poll::Ready(42)
+                } else {
+                    self.0 = true;
+                    cx.waker().wake_by_ref();
+                    Poll::Pending
+                }
+            }
+        }
+        assert_eq!(block_on(YieldOnce(false)), 42);
+    }
+
+    #[test]
+    fn block_on_crosses_threads_through_the_waker() {
+        struct Gate {
+            fired: Arc<AtomicBool>,
+            waker_slot: Arc<Mutex<Option<Waker>>>,
+        }
+        impl Future for Gate {
+            type Output = ();
+            fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+                if self.fired.load(Ordering::Acquire) {
+                    Poll::Ready(())
+                } else {
+                    // publish the waker for the setter thread — the same
+                    // register-then-park protocol the farm futures use
+                    let mut slot = self.waker_slot.lock().unwrap();
+                    *slot = Some(cx.waker().clone());
+                    Poll::Pending
+                }
+            }
+        }
+        let fired = Arc::new(AtomicBool::new(false));
+        let slot: Arc<Mutex<Option<Waker>>> = Arc::new(Mutex::new(None));
+        let (f2, s2) = (fired.clone(), slot.clone());
+        let setter = std::thread::spawn(move || loop {
+            if let Some(w) = s2.lock().unwrap().take() {
+                f2.store(true, Ordering::Release);
+                w.wake();
+                break;
+            }
+            std::thread::yield_now();
+        });
+        block_on(Gate { fired, waker_slot: slot });
+        setter.join().unwrap();
+    }
+
+    #[test]
+    fn task_waker_dedups_until_cleared() {
+        let q = WakeQueue::new();
+        let w = Arc::new(TaskWaker::new(3, q.clone()));
+        let waker = Waker::from(w.clone());
+        waker.wake_by_ref();
+        waker.wake_by_ref();
+        waker.wake_by_ref();
+        assert_eq!(q.wait_drain(), vec![3], "redundant wakes collapse");
+        w.clear();
+        waker.wake_by_ref();
+        assert_eq!(q.wait_drain(), vec![3], "re-armed after clear");
+    }
+}

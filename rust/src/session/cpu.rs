@@ -11,6 +11,7 @@ use crate::cg::pool::CgPool;
 use crate::coordinator::executor::ExecMode;
 use crate::error::{Error, Result};
 use crate::runtime::farm::{FarmCg, FarmHandle, FarmStencil};
+use crate::runtime::plane::graph::CommandGraph;
 use crate::session::{Report, Solver};
 use crate::sparse::csr::Csr;
 use crate::sparse::gen;
@@ -39,17 +40,30 @@ pub struct StencilOptions {
     /// Shared multi-tenant worker pool to admit the solver to instead of
     /// spawning a solo [`StencilPool`] (persistent mode only).
     pub farm: Option<FarmHandle>,
+    /// Batched-graph granularity on the farm path, in exchange epochs per
+    /// graph segment: `0` (default) submits each advance as one
+    /// monolithic command; `> 0` encodes it as a [`CommandGraph`] of
+    /// `batch_epochs * bt`-step segments enqueued under a single
+    /// scheduler-lock acquisition. Bit-identical either way.
+    pub batch_epochs: usize,
 }
 
 impl Default for StencilOptions {
     fn default() -> Self {
-        Self { threads: 1, mode: ExecMode::Persistent, seed: 42, temporal: 1, farm: None }
+        Self {
+            threads: 1,
+            mode: ExecMode::Persistent,
+            seed: 42,
+            temporal: 1,
+            farm: None,
+            batch_epochs: 0,
+        }
     }
 }
 
 impl StencilOptions {
     pub fn new(threads: usize, mode: ExecMode, seed: u64) -> Self {
-        Self { threads, mode, seed, temporal: 1, farm: None }
+        Self { threads, mode, seed, temporal: 1, farm: None, batch_epochs: 0 }
     }
 
     /// Set the temporal-blocking degree `bt` (see [`StencilOptions::temporal`]).
@@ -61,6 +75,12 @@ impl StencilOptions {
     /// Admit the solver to a shared farm (see [`StencilOptions::farm`]).
     pub fn farm(mut self, handle: FarmHandle) -> Self {
         self.farm = Some(handle);
+        self
+    }
+
+    /// Set the batched-graph granularity (see [`StencilOptions::batch_epochs`]).
+    pub fn batch_epochs(mut self, epochs: usize) -> Self {
+        self.batch_epochs = epochs;
         self
     }
 }
@@ -111,6 +131,12 @@ pub struct CpuStencil {
     /// Time this solver's commands waited in the farm's submission queue
     /// (farm-backed solves only; surfaced as `Report::queue_wait_seconds`).
     queue_wait_seconds: f64,
+    /// Batched-graph granularity (epochs per segment; 0 = monolithic).
+    batch_epochs: usize,
+    /// Submission-plane telemetry since `prepare` (farm-backed only).
+    plane_batches: u64,
+    plane_sheds: u64,
+    plane_timeouts: u64,
 }
 
 impl CpuStencil {
@@ -135,6 +161,11 @@ impl CpuStencil {
                 "farm execution requires the persistent execution model",
             ));
         }
+        if opts.batch_epochs > 0 && opts.farm.is_none() {
+            return Err(Error::invalid(
+                "batched command graphs (batch_epochs > 0) require a farm",
+            ));
+        }
         let x0 = crate::session::stencil_domain(&spec, dims, opts.seed, init)?;
         Ok(Self {
             spec,
@@ -155,6 +186,10 @@ impl CpuStencil {
             computed_cells: 0,
             useful_cells: 0,
             queue_wait_seconds: 0.0,
+            batch_epochs: opts.batch_epochs,
+            plane_batches: 0,
+            plane_sheds: 0,
+            plane_timeouts: 0,
         })
     }
 
@@ -198,12 +233,36 @@ impl CpuStencil {
                     }
                     let tenant = self.farm_session.as_mut().expect("admitted above");
                     let t0 = std::time::Instant::now();
-                    let run = tenant.advance(steps, tol);
+                    let run = if self.batch_epochs > 0 && steps > 0 {
+                        // batched path: the whole advance schedule is one
+                        // CommandGraph — one enqueue-lock acquisition,
+                        // segment boundaries chained inside the farm
+                        let seg = self.batch_epochs.saturating_mul(self.bt).max(1);
+                        match CommandGraph::schedule(steps, seg, tol) {
+                            Ok(graph) => tenant.advance_graph(&graph),
+                            Err(e) => Err(e),
+                        }
+                    } else {
+                        tenant.advance(steps, tol)
+                    };
                     // the command happened even if the run failed: record
                     // wall + launch before propagating (as the pool paths)
                     self.wall_seconds += t0.elapsed().as_secs_f64();
                     self.invocations += 1; // one farm command per advance
-                    let run = run?;
+                    let run = match run {
+                        Ok(run) => {
+                            self.plane_batches += 1;
+                            run
+                        }
+                        Err(e) => {
+                            match &e {
+                                Error::Shed(_) => self.plane_sheds += 1,
+                                Error::Timeout(_) => self.plane_timeouts += 1,
+                                _ => {}
+                            }
+                            return Err(e);
+                        }
+                    };
                     self.steps += run.steps;
                     self.host_bytes += run.global_bytes;
                     self.computed_cells += run.computed_cells;
@@ -319,6 +378,9 @@ impl Solver for CpuStencil {
         self.computed_cells = 0;
         self.useful_cells = 0;
         self.queue_wait_seconds = 0.0;
+        self.plane_batches = 0;
+        self.plane_sheds = 0;
+        self.plane_timeouts = 0;
         Ok(())
     }
 
@@ -354,6 +416,9 @@ impl Solver for CpuStencil {
         }
         if self.farm.is_some() {
             rep.queue_wait_seconds = Some(self.queue_wait_seconds);
+            rep.plane_batches = Some(self.plane_batches);
+            rep.plane_sheds = Some(self.plane_sheds);
+            rep.plane_timeouts = Some(self.plane_timeouts);
         }
         rep
     }
@@ -405,6 +470,12 @@ pub struct CpuCg {
     farm_session: Option<FarmCg>,
     /// Farm submission-queue wait accumulated since `prepare`.
     queue_wait_seconds: f64,
+    /// Batched-graph granularity (iterations per segment; 0 = monolithic).
+    batch_iters: usize,
+    /// Submission-plane telemetry since `prepare` (farm-backed only).
+    plane_batches: u64,
+    plane_sheds: u64,
+    plane_timeouts: u64,
     x: Vec<f64>,
     r: Vec<f64>,
     p: Vec<f64>,
@@ -476,6 +547,10 @@ impl CpuCg {
             farm: None,
             farm_session: None,
             queue_wait_seconds: 0.0,
+            batch_iters: 0,
+            plane_batches: 0,
+            plane_sheds: 0,
+            plane_timeouts: 0,
             x: vec![0.0; n],
             r: vec![0.0; n],
             p: vec![0.0; n],
@@ -493,6 +568,13 @@ impl CpuCg {
     /// before `prepare`). The farm supersedes the solo `threaded` pool.
     pub(crate) fn with_farm(mut self, handle: FarmHandle) -> Self {
         self.farm = Some(handle);
+        self
+    }
+
+    /// Set the batched-graph granularity in iterations per segment (farm
+    /// path only; 0 = monolithic commands).
+    pub(crate) fn with_batch_iters(mut self, iters: usize) -> Self {
+        self.batch_iters = iters;
         self
     }
 
@@ -586,8 +668,30 @@ impl CpuCg {
             // multi-tenant path: the command is enqueued into the shared
             // farm and the iteration loop runs resident on its workers —
             // zero spawns, same bits as the pooled/serial paths
-            let run =
-                tenant.run(&mut self.x, &mut self.r, &mut self.p, self.rr, threshold, iters)?;
+            let run = if self.batch_iters > 0 && iters > 0 {
+                // batched path: the whole schedule is one CommandGraph —
+                // one enqueue-lock acquisition for all segments
+                let tol = (threshold > 0.0).then_some(threshold);
+                CommandGraph::schedule(iters, self.batch_iters, tol).and_then(|graph| {
+                    tenant.run_graph(&mut self.x, &mut self.r, &mut self.p, self.rr, &graph)
+                })
+            } else {
+                tenant.run(&mut self.x, &mut self.r, &mut self.p, self.rr, threshold, iters)
+            };
+            let run = match run {
+                Ok(run) => {
+                    self.plane_batches += 1;
+                    run
+                }
+                Err(e) => {
+                    match &e {
+                        Error::Shed(_) => self.plane_sheds += 1,
+                        Error::Timeout(_) => self.plane_timeouts += 1,
+                        _ => {}
+                    }
+                    return Err(e);
+                }
+            };
             self.rr = run.rr;
             self.iters += run.iters;
             self.queue_wait_seconds += run.queue_wait_seconds;
@@ -671,6 +775,9 @@ impl Solver for CpuCg {
         self.invocations = 0;
         self.host_bytes = 0;
         self.queue_wait_seconds = 0.0;
+        self.plane_batches = 0;
+        self.plane_sheds = 0;
+        self.plane_timeouts = 0;
         Ok(())
     }
 
@@ -696,6 +803,9 @@ impl Solver for CpuCg {
         );
         if self.farm.is_some() {
             rep.queue_wait_seconds = Some(self.queue_wait_seconds);
+            rep.plane_batches = Some(self.plane_batches);
+            rep.plane_sheds = Some(self.plane_sheds);
+            rep.plane_timeouts = Some(self.plane_timeouts);
         }
         rep
     }

@@ -243,6 +243,10 @@ pub struct SessionBuilder {
     init: Option<Vec<f64>>,
     /// Shared multi-tenant worker pool; `None` = solo pools (default).
     farm: Option<FarmHandle>,
+    /// Batched command-graph granularity on the farm path (epochs per
+    /// graph segment for stencils, iterations per segment for CG);
+    /// `0` = monolithic commands (default).
+    batch_epochs: usize,
 }
 
 impl Default for SessionBuilder {
@@ -263,6 +267,7 @@ impl SessionBuilder {
             temporal: None,
             init: None,
             farm: None,
+            batch_epochs: 0,
         }
     }
 
@@ -325,6 +330,21 @@ impl SessionBuilder {
     /// [`SessionBuilder::farm`] from an already-cloned [`FarmHandle`].
     pub fn farm_handle(mut self, handle: FarmHandle) -> Self {
         self.farm = Some(handle);
+        self
+    }
+
+    /// Batched command graphs on the farm path: encode each
+    /// `advance`/`advance_until` as a
+    /// [`crate::runtime::plane::CommandGraph`] of `epochs`-epoch segments
+    /// (stencils: `epochs * bt` steps per segment; CG: `epochs`
+    /// iterations), enqueued under a *single* scheduler-lock acquisition
+    /// with segment boundaries chained inside the farm's completion
+    /// transitions. Bit-identical to monolithic submission; only the
+    /// enqueue-lock traffic changes (`Report::plane_batches` vs
+    /// `util::counters::sched_lock_acquisitions`). `0` — the default —
+    /// submits monolithic commands. Requires [`SessionBuilder::farm`].
+    pub fn batch_epochs(mut self, epochs: usize) -> Self {
+        self.batch_epochs = epochs;
         self
     }
 
@@ -411,6 +431,11 @@ impl SessionBuilder {
                 ));
             }
         }
+        if self.batch_epochs > 0 && self.farm.is_none() {
+            return Err(Error::invalid(
+                "batched command graphs (batch_epochs > 0) require a farm session",
+            ));
+        }
         // resolve the CPU thread count before any mode probing. Farm
         // sessions skip the *measured* autotune: a probe would build solo
         // pools (thread spawns) for a session whose whole point is to
@@ -437,6 +462,7 @@ impl SessionBuilder {
                 temporal,
                 self.init.as_deref(),
                 Some(farm),
+                self.batch_epochs,
             )?;
             solver.prepare()?;
             return Ok(Session {
@@ -484,6 +510,7 @@ impl SessionBuilder {
                         bt,
                         self.init.as_deref(),
                         None,
+                        0,
                     )?;
                     probe.prepare()?;
                     // probe at steady-state depth (chunk-aligned): the
@@ -543,6 +570,7 @@ impl SessionBuilder {
             temporal,
             self.init.as_deref(),
             None,
+            0,
         )?;
         solver.prepare()?;
         Ok(Session { solver, mode, temporal, backend_name: backend.name() })
@@ -836,6 +864,7 @@ fn make_solver(
     temporal: usize,
     init: Option<&[f64]>,
     farm: Option<FarmHandle>,
+    batch_epochs: usize,
 ) -> Result<Box<dyn Solver>> {
     match (backend, workload) {
         (Backend::Pjrt(rt), Workload::Stencil { bench, interior, dtype }) => Ok(Box::new(
@@ -849,13 +878,13 @@ fn make_solver(
         }
         (Backend::CpuPersistent { threads }, Workload::Stencil { bench, interior, .. }) => {
             let dims = parse_interior(interior)?;
-            let opts = cpu::StencilOptions { threads: *threads, mode, seed, temporal, farm };
+            let opts = cpu::StencilOptions { threads: *threads, mode, seed, temporal, farm, batch_epochs };
             Ok(Box::new(cpu::CpuStencil::new(bench, &dims, &opts, init)?))
         }
         (Backend::CpuPersistent { threads }, Workload::Cg { n }) => {
             let mut s = cpu::CpuCg::poisson(*n, seed, cg_parts, *threads, cg_threaded, mode)?;
             if let Some(h) = farm {
-                s = s.with_farm(h);
+                s = s.with_farm(h).with_batch_iters(batch_epochs);
             }
             Ok(Box::new(s))
         }
@@ -863,7 +892,7 @@ fn make_solver(
             let mut s =
                 cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, *threads, cg_threaded, mode)?;
             if let Some(h) = farm {
-                s = s.with_farm(h);
+                s = s.with_farm(h).with_batch_iters(batch_epochs);
             }
             Ok(Box::new(s))
         }

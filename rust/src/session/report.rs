@@ -44,6 +44,17 @@ pub struct Report {
     /// p50/p99/fairness view lives in
     /// [`crate::runtime::farm::FarmMetrics`].
     pub queue_wait_seconds: Option<f64>,
+    /// Submission-plane batches this session enqueued (one per farm
+    /// command; with `SessionBuilder::batch_epochs` an entire
+    /// `advance_until` schedule is one batch). Farm-backed sessions only;
+    /// `None` on solo substrates.
+    pub plane_batches: Option<u64>,
+    /// Submissions of this session rejected by the farm's admission
+    /// control (`Shed` policy / over-cap batches). Farm-backed only.
+    pub plane_sheds: Option<u64>,
+    /// Submissions of this session that timed out waiting for a plane
+    /// slot (`Timeout` admission policy). Farm-backed only.
+    pub plane_timeouts: Option<u64>,
 }
 
 impl Report {
@@ -73,6 +84,9 @@ impl Report {
             barrier_wait_seconds,
             redundancy: None,
             queue_wait_seconds: None,
+            plane_batches: None,
+            plane_sheds: None,
+            plane_timeouts: None,
         }
     }
 }

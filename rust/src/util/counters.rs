@@ -10,6 +10,12 @@
 //! against the spawn-once pools, and the barriers-per-step reduction of
 //! epoch-batched temporal blocking (2 per epoch instead of 2 per step).
 //!
+//! The submission plane (`runtime::plane`) adds its own family:
+//! [`plane_batches`] / [`sched_lock_acquisitions`] assert that batched
+//! command graphs pay one enqueue-lock acquisition per *batch* rather
+//! than per epoch, and [`plane_sheds`] / [`plane_timeouts`] count
+//! admission-control backpressure.
+//!
 //! The counters are global and monotonic; concurrent test threads may
 //! interleave increments, so tests that need an exact attribution use the
 //! per-pool counters (`cg::pool::CgPool::spawn_count`,
@@ -24,6 +30,10 @@ static BARRIER_SYNCS: AtomicU64 = AtomicU64::new(0);
 static FARM_ADMISSIONS: AtomicU64 = AtomicU64::new(0);
 static FARM_COMMANDS: AtomicU64 = AtomicU64::new(0);
 static FARM_TASKS: AtomicU64 = AtomicU64::new(0);
+static PLANE_BATCHES: AtomicU64 = AtomicU64::new(0);
+static SCHED_LOCK_ACQUISITIONS: AtomicU64 = AtomicU64::new(0);
+static PLANE_SHEDS: AtomicU64 = AtomicU64::new(0);
+static PLANE_TIMEOUTS: AtomicU64 = AtomicU64::new(0);
 
 /// Record `n` OS threads spawned by a solver substrate.
 pub fn note_thread_spawns(n: u64) {
@@ -80,6 +90,53 @@ pub fn farm_tasks() -> u64 {
     FARM_TASKS.load(Ordering::Relaxed)
 }
 
+/// Record `n` batches enqueued to the submission plane (one per
+/// `submit`/`submit_graph`, however many segments the batch chains).
+pub fn note_plane_batches(n: u64) {
+    PLANE_BATCHES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total submission-plane batches since process start.
+pub fn plane_batches() -> u64 {
+    PLANE_BATCHES.load(Ordering::Relaxed)
+}
+
+/// Record `n` scheduler-lock acquisitions taken to *enqueue* work. The
+/// batched-graph acceptance bar is that this equals [`plane_batches`]:
+/// segment boundaries are dequeued inside the farm's completion
+/// transition under the already-held lock, never by a client re-acquire
+/// per epoch.
+pub fn note_sched_lock_acquisitions(n: u64) {
+    SCHED_LOCK_ACQUISITIONS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total enqueue-side scheduler-lock acquisitions since process start.
+pub fn sched_lock_acquisitions() -> u64 {
+    SCHED_LOCK_ACQUISITIONS.load(Ordering::Relaxed)
+}
+
+/// Record `n` submissions shed by admission control (`Shed` policy or a
+/// batch larger than the configured caps).
+pub fn note_plane_sheds(n: u64) {
+    PLANE_SHEDS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total shed submissions since process start.
+pub fn plane_sheds() -> u64 {
+    PLANE_SHEDS.load(Ordering::Relaxed)
+}
+
+/// Record `n` submissions that timed out waiting for a plane slot
+/// (`Timeout` admission policy).
+pub fn note_plane_timeouts(n: u64) {
+    PLANE_TIMEOUTS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total timed-out submissions since process start.
+pub fn plane_timeouts() -> u64 {
+    PLANE_TIMEOUTS.load(Ordering::Relaxed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +153,24 @@ mod tests {
         let before = barrier_syncs();
         note_barrier_syncs(2);
         assert!(barrier_syncs() >= before + 2);
+    }
+
+    #[test]
+    fn plane_counters_are_monotonic() {
+        let (b, l, s, t) = (
+            plane_batches(),
+            sched_lock_acquisitions(),
+            plane_sheds(),
+            plane_timeouts(),
+        );
+        note_plane_batches(2);
+        note_sched_lock_acquisitions(2);
+        note_plane_sheds(1);
+        note_plane_timeouts(1);
+        assert!(plane_batches() >= b + 2);
+        assert!(sched_lock_acquisitions() >= l + 2);
+        assert!(plane_sheds() >= s + 1);
+        assert!(plane_timeouts() >= t + 1);
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! Integration tests of the async submission plane: completion futures
+//! and the `LocalExecutor` must be observably identical to the blocking
+//! wrappers (same bits at every worker count), batched command graphs
+//! must be bit-identical to monolithic submits while taking exactly one
+//! scheduler-lock acquisition per batch, and admission control must
+//! shed/timeout/block deterministically — including the zombie paths
+//! (dropped futures, released tenants, shutdown mid-flight).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use perks::runtime::farm::SolverFarm;
+use perks::runtime::plane::{
+    block_on, AdmissionPolicy, CommandGraph, LocalExecutor, PlaneConfig,
+};
+use perks::sparse::gen;
+use perks::spmv::merge::MergePlan;
+use perks::stencil::{gold, spec, Domain};
+
+fn domain(seed: u64, dims: &[usize]) -> Domain {
+    let s = spec("2d5pt").unwrap();
+    let mut d = Domain::for_spec(&s, dims).unwrap();
+    d.randomize(seed);
+    d
+}
+
+/// The async acceptance bar: futures + executor walk the blocking path's
+/// bits (which walk gold) at farm worker counts {1, 2, 8}, for both
+/// plain submits and batched graphs, stencil and CG.
+#[test]
+fn async_paths_are_bit_identical_to_blocking_at_every_worker_count() {
+    let s = spec("2d5pt").unwrap();
+    let d = domain(11, &[12, 12]);
+    let want = gold::run(&s, &d, 10).unwrap();
+    let a = gen::poisson2d(12);
+    let b = gen::rhs(a.n_rows, 5);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+
+    for workers in [1usize, 2, 8] {
+        let farm = SolverFarm::spawn(workers).unwrap();
+        let h = farm.handle();
+
+        // blocking reference tenants
+        let mut blocking = h.admit_stencil(&s, &d, 2, 1).unwrap();
+        blocking.advance(10, None).unwrap();
+        let n = a.n_rows;
+        let mut cg_blocking = h.admit_cg(Arc::new(a.clone()), MergePlan::new(&a, 4)).unwrap();
+        let (mut bx, mut br, mut bp) = (vec![0.0; n], b.clone(), b.clone());
+        let brun = cg_blocking.run(&mut bx, &mut br, &mut bp, rr0, 0.0, 12).unwrap();
+
+        // async twins, driven by block_on (single future) ...
+        let mut t1 = h.admit_stencil(&s, &d, 2, 1).unwrap();
+        let run1 = block_on(async { t1.advance_async(10, None).await }).unwrap();
+        assert_eq!(run1.steps, 10);
+        assert_eq!(t1.state().unwrap(), blocking.state().unwrap(), "workers={workers}");
+        assert_eq!(t1.state().unwrap(), want.data, "workers={workers}: async vs gold");
+
+        // ... by the executor (graph submit) ...
+        let mut t2 = h.admit_stencil(&s, &d, 2, 1).unwrap();
+        let graph = CommandGraph::schedule(10, 4, None).unwrap();
+        let ex = LocalExecutor::new();
+        let run2 = ex.run(async { t2.advance_graph_async(&graph).await }).unwrap();
+        assert_eq!(run2.steps, 10);
+        assert_eq!(t2.state().unwrap(), want.data, "workers={workers}: graph async vs gold");
+
+        // ... and the CG async twin
+        let mut cg = h.admit_cg(Arc::new(a.clone()), MergePlan::new(&a, 4)).unwrap();
+        let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+        let arun =
+            block_on(async { cg.run_async(&mut x, &mut r, &mut p, rr0, 0.0, 12).await }).unwrap();
+        assert_eq!(arun.iters, brun.iters);
+        assert_eq!(arun.rr.to_bits(), brun.rr.to_bits(), "workers={workers}");
+        assert_eq!(x, bx, "workers={workers}: async CG x diverged");
+    }
+}
+
+/// A batched graph is bit-identical to one monolithic submit — same
+/// state, same step count, same slow-tier traffic — and the whole chain
+/// costs exactly one scheduler-lock acquisition.
+#[test]
+fn graph_run_matches_monolithic_including_traffic_and_lock_accounting() {
+    let s = spec("2d5pt").unwrap();
+    let d = domain(3, &[14, 10]);
+    let farm = SolverFarm::spawn(2).unwrap();
+    let h = farm.handle();
+
+    let mut mono = h.admit_stencil(&s, &d, 2, 2).unwrap();
+    let mrun = mono.advance(12, None).unwrap();
+
+    let m0 = farm.metrics();
+    let mut batched = h.admit_stencil(&s, &d, 2, 2).unwrap();
+    let graph = CommandGraph::schedule(12, 5, None).unwrap(); // 5 + 5 + 2
+    assert_eq!(graph.segments(), &[5, 5, 2]);
+    let grun = batched.advance_graph(&graph).unwrap();
+    let m1 = farm.metrics();
+
+    assert_eq!(grun.steps, mrun.steps);
+    assert_eq!(grun.global_bytes, mrun.global_bytes, "graph changed traffic accounting");
+    assert_eq!(grun.computed_cells, mrun.computed_cells);
+    assert_eq!(batched.state().unwrap(), mono.state().unwrap());
+    // the tentpole counter invariant: 3 segments, ONE batch, ONE lock
+    assert_eq!(m1.plane_batches - m0.plane_batches, 1);
+    assert_eq!(
+        m1.sched_lock_acquisitions - m0.sched_lock_acquisitions,
+        1,
+        "graph segments must chain inside completion transitions"
+    );
+    assert_eq!(m1.sched_lock_acquisitions, m1.plane_batches);
+}
+
+/// Satellite: double submit is a contract error on the stencil path too
+/// (the CG twin lives in the farm unit tests) — and it must error even
+/// under a full queue + Block policy, never self-deadlock.
+#[test]
+fn stencil_double_submit_is_an_error_not_a_deadlock() {
+    let s = spec("2d5pt").unwrap();
+    let d = domain(9, &[10, 10]);
+    let farm = SolverFarm::spawn_with(1, PlaneConfig::bounded(1)).unwrap();
+    let mut t = farm.handle().admit_stencil(&s, &d, 1, 1).unwrap();
+    t.submit(2_000, None).unwrap();
+    let err = t.submit(1, None).unwrap_err();
+    assert!(format!("{err}").contains("in flight"), "{err}");
+    let run = t.wait().unwrap();
+    assert_eq!(run.steps, 2_000);
+    assert_eq!(farm.metrics().plane_inflight_peak, 1);
+    // tenant stays usable
+    t.advance(1, None).unwrap();
+}
+
+/// A graph tolerance stop clears the remaining segments: the command
+/// ends early, later segments never run, and the tenant stays usable.
+#[test]
+fn graph_tolerance_stop_clears_remaining_segments() {
+    let s = spec("2d5pt").unwrap();
+    let d = domain(21, &[12, 12]);
+    let farm = SolverFarm::spawn(2).unwrap();
+    let mut t = farm.handle().admit_stencil(&s, &d, 1, 1).unwrap();
+    // a tolerance every epoch satisfies: converges inside segment one
+    let graph =
+        CommandGraph::builder().segment(4).segment(4).segment(4).tolerance(1e300).build().unwrap();
+    let run = t.advance_graph(&graph).unwrap();
+    assert!(run.steps < graph.total(), "tolerance stop must drop the remaining segments");
+    assert!(run.residual.is_some());
+    // chained segments are gone: the next command starts fresh
+    let again = t.advance(3, None).unwrap();
+    assert_eq!(again.steps, 3);
+}
+
+/// Resubmission replays the stored schedule when the target is reached
+/// unconverged: total steps = (1 + resubmits) * schedule total.
+#[test]
+fn graph_resubmission_replays_the_schedule_until_exhausted() {
+    let s = spec("2d5pt").unwrap();
+    let d = domain(22, &[12, 12]);
+    let farm = SolverFarm::spawn(2).unwrap();
+    let mut t = farm.handle().admit_stencil(&s, &d, 1, 1).unwrap();
+    // an unreachable tolerance: every replay runs to its step target
+    let graph =
+        CommandGraph::builder().segments(&[3, 3]).tolerance(1e-300).resubmit(2).build().unwrap();
+    let run = t.advance_graph(&graph).unwrap();
+    assert_eq!(run.steps, 6 * 3, "2 resubmits = 3 full schedules");
+    // still one batch, one lock acquisition for the whole replayed chain
+    let m = farm.metrics();
+    assert_eq!(m.sched_lock_acquisitions, m.plane_batches);
+}
+
+/// A batch larger than the plane's caps can never be admitted: it is
+/// shed immediately regardless of policy (Block would deadlock forever).
+#[test]
+fn oversized_batches_are_shed_immediately_even_under_block_policy() {
+    let s = spec("2d5pt").unwrap();
+    let d = domain(4, &[10, 10]);
+    // queue cap 2, blocking policy: a 3-segment graph can never fit
+    let farm =
+        SolverFarm::spawn_with(1, PlaneConfig::bounded(2).policy(AdmissionPolicy::Block)).unwrap();
+    let mut t = farm.handle().admit_stencil(&s, &d, 1, 1).unwrap();
+    let graph = CommandGraph::schedule(6, 2, None).unwrap();
+    match t.submit_graph(&graph) {
+        Err(perks::Error::Shed(msg)) => assert!(msg.contains("capacity"), "{msg}"),
+        other => panic!("expected Shed, got {other:?}"),
+    }
+    // per-tenant cap triggers the same immediate shed on an open queue
+    let farm2 = SolverFarm::spawn_with(1, PlaneConfig::unbounded().per_tenant(2)).unwrap();
+    let mut t2 = farm2.handle().admit_stencil(&s, &d, 1, 1).unwrap();
+    assert!(matches!(t2.submit_graph(&graph), Err(perks::Error::Shed(_))));
+    assert_eq!(farm2.metrics().plane_sheds, 1);
+    // both tenants remain usable after the rejection
+    t.advance(1, None).unwrap();
+    t2.advance(1, None).unwrap();
+}
+
+/// Shed policy: a full queue rejects instantly; harvesting the holder
+/// frees the slot and the rejected tenant's resubmission goes through.
+#[test]
+fn shed_policy_rejects_on_a_full_queue_then_recovers() {
+    let s = spec("2d5pt").unwrap();
+    let da = domain(5, &[10, 10]);
+    let db = domain(6, &[10, 10]);
+    let farm =
+        SolverFarm::spawn_with(1, PlaneConfig::bounded(1).policy(AdmissionPolicy::Shed)).unwrap();
+    let h = farm.handle();
+    let mut a = h.admit_stencil(&s, &da, 1, 1).unwrap();
+    let mut b = h.admit_stencil(&s, &db, 1, 1).unwrap();
+    a.submit(4, None).unwrap(); // holds the only slot until harvested
+    match b.submit(1, None) {
+        Err(perks::Error::Shed(msg)) => assert!(msg.contains("full"), "{msg}"),
+        other => panic!("expected Shed, got {other:?}"),
+    }
+    assert_eq!(farm.metrics().plane_sheds, 1);
+    a.wait().unwrap(); // harvest releases the slot
+    let run = b.advance(1, None).unwrap();
+    assert_eq!(run.steps, 1);
+    assert_eq!(farm.metrics().plane_sheds, 1, "recovered submit sheds nothing");
+}
+
+/// Timeout policy: a submission that cannot get a slot within the bound
+/// fails with `Error::Timeout`; after the holder harvests, it succeeds.
+#[test]
+fn timeout_policy_expires_then_recovers_after_harvest() {
+    let s = spec("2d5pt").unwrap();
+    let da = domain(7, &[10, 10]);
+    let db = domain(8, &[10, 10]);
+    let cfg = PlaneConfig::bounded(1).policy(AdmissionPolicy::Timeout(Duration::from_millis(30)));
+    let farm = SolverFarm::spawn_with(1, cfg).unwrap();
+    let h = farm.handle();
+    let mut a = h.admit_stencil(&s, &da, 1, 1).unwrap();
+    let mut b = h.admit_stencil(&s, &db, 1, 1).unwrap();
+    a.submit(4, None).unwrap();
+    match b.submit(1, None) {
+        Err(perks::Error::Timeout(msg)) => assert!(msg.contains("slot"), "{msg}"),
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert_eq!(farm.metrics().plane_timeouts, 1);
+    a.wait().unwrap();
+    b.advance(1, None).unwrap();
+    assert_eq!(farm.metrics().plane_timeouts, 1);
+}
+
+/// Block policy: a submission parks until the holder harvests, then
+/// proceeds — cross-thread, no error, no spin.
+#[test]
+fn block_policy_parks_until_a_slot_frees() {
+    let s = spec("2d5pt").unwrap();
+    let da = domain(13, &[10, 10]);
+    let db = domain(14, &[10, 10]);
+    let farm =
+        SolverFarm::spawn_with(1, PlaneConfig::bounded(1).policy(AdmissionPolicy::Block)).unwrap();
+    let h = farm.handle();
+    let mut a = h.admit_stencil(&s, &da, 1, 1).unwrap();
+    let mut b = h.admit_stencil(&s, &db, 1, 1).unwrap();
+    a.submit(4, None).unwrap();
+    std::thread::scope(|scope| {
+        let blocked = scope.spawn(move || b.advance(2, None).map(|r| r.steps));
+        // give the blocked submitter time to park on the gate, then free it
+        std::thread::sleep(Duration::from_millis(20));
+        a.wait().unwrap();
+        assert_eq!(blocked.join().unwrap().unwrap(), 2);
+    });
+    let m = farm.metrics();
+    assert_eq!(m.plane_sheds, 0);
+    assert_eq!(m.plane_timeouts, 0);
+    assert_eq!(m.plane_inflight_peak, 1, "cap 1 was never exceeded");
+}
+
+/// Dropping an unresolved completion future releases its plane slots
+/// (the command keeps running); the tenant can still harvest later.
+#[test]
+fn dropping_a_completion_future_releases_its_slots() {
+    let s = spec("2d5pt").unwrap();
+    let da = domain(15, &[10, 10]);
+    let db = domain(16, &[10, 10]);
+    let farm =
+        SolverFarm::spawn_with(1, PlaneConfig::bounded(1).policy(AdmissionPolicy::Shed)).unwrap();
+    let h = farm.handle();
+    let mut a = h.admit_stencil(&s, &da, 1, 1).unwrap();
+    let mut b = h.admit_stencil(&s, &db, 1, 1).unwrap();
+    let fut = a.submit_async(6, None).unwrap();
+    drop(fut); // zombie future: slot must come back without a harvest
+    let run = b.advance(1, None).unwrap(); // would be Shed if the slot leaked
+    assert_eq!(run.steps, 1);
+    // the abandoned command still completes and can be harvested late
+    let arun = a.wait().unwrap();
+    assert_eq!(arun.steps, 6);
+    assert_eq!(farm.metrics().plane_sheds, 0);
+}
+
+/// Releasing a tenant with a command in flight (the zombie tenant path)
+/// frees its plane slots for everyone else.
+#[test]
+fn releasing_a_tenant_mid_flight_frees_its_slots() {
+    let s = spec("2d5pt").unwrap();
+    let da = domain(17, &[10, 10]);
+    let db = domain(18, &[10, 10]);
+    let farm =
+        SolverFarm::spawn_with(1, PlaneConfig::bounded(1).policy(AdmissionPolicy::Shed)).unwrap();
+    let h = farm.handle();
+    let mut a = h.admit_stencil(&s, &da, 1, 1).unwrap();
+    let mut b = h.admit_stencil(&s, &db, 1, 1).unwrap();
+    a.submit(2_000, None).unwrap();
+    drop(a); // release with the command still in flight
+    let run = b.advance(1, None).unwrap();
+    assert_eq!(run.steps, 1);
+    assert_eq!(farm.metrics().plane_sheds, 0, "zombie tenant leaked its slot");
+}
+
+/// Shutdown with a command in flight resolves the async waiter with an
+/// error instead of hanging the executor.
+#[test]
+fn shutdown_mid_flight_errors_the_async_waiter() {
+    let s = spec("2d5pt").unwrap();
+    let d = domain(19, &[32, 32]);
+    let mut farm = SolverFarm::spawn(1).unwrap();
+    let mut t = farm.handle().admit_stencil(&s, &d, 1, 1).unwrap();
+    // far too long to complete before the shutdown flag lands
+    t.submit(5_000_000, None).unwrap();
+    farm.shutdown();
+    let err = block_on(async { t.completion().await }).unwrap_err();
+    assert!(format!("{err}").contains("shut down"), "{err}");
+    // and a fresh submit reports shutdown synchronously
+    let err2 = t.submit(1, None).unwrap_err();
+    assert!(format!("{err2}").contains("shut down"), "{err2}");
+}
+
+/// Hundreds of async tenants multiplex on ONE executor thread: all
+/// complete, bits match gold, and the lock/batch accounting stays 1:1.
+#[test]
+fn hundreds_of_tenants_multiplex_on_one_executor() {
+    let s = spec("2d5pt").unwrap();
+    let tenants = 256usize;
+    let rounds = 2usize;
+    let farm = SolverFarm::spawn(4).unwrap();
+    let h = farm.handle();
+    let graph = CommandGraph::schedule(4, 2, None).unwrap();
+    let mut sessions = Vec::with_capacity(tenants);
+    for t in 0..tenants {
+        let d = domain(900 + t as u64, &[8, 8]);
+        sessions.push(h.admit_stencil(&s, &d, 1, 1).unwrap());
+    }
+    let ex = LocalExecutor::new();
+    let states: Vec<Vec<f64>> = ex.run(async {
+        let mut joins = Vec::with_capacity(tenants);
+        for mut sess in sessions {
+            let graph = graph.clone();
+            joins.push(ex.spawn(async move {
+                for _ in 0..rounds {
+                    sess.advance_graph_async(&graph).await.unwrap();
+                }
+                sess.state().unwrap()
+            }));
+        }
+        let mut out = Vec::with_capacity(tenants);
+        for j in joins {
+            out.push(j.await);
+        }
+        out
+    });
+    assert_eq!(states.len(), tenants);
+    // spot-check the first and last tenants against gold
+    for t in [0usize, tenants - 1] {
+        let d = domain(900 + t as u64, &[8, 8]);
+        let want = gold::run(&s, &d, 4 * rounds).unwrap();
+        assert_eq!(states[t], want.data, "tenant {t} diverged under multiplexing");
+    }
+    let m = farm.metrics();
+    assert_eq!(m.plane_batches, (tenants * rounds) as u64);
+    assert_eq!(m.sched_lock_acquisitions, m.plane_batches);
+    assert_eq!(m.plane_sheds, 0);
+    assert_eq!(m.plane_timeouts, 0);
+}
+
+/// The session layer rides the plane too: `batch_epochs` turns every
+/// advance into one graph batch, keeps the bits, and surfaces the plane
+/// counters through `Report`.
+#[test]
+fn session_batch_epochs_keeps_bits_and_reports_plane_counters() {
+    use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+    let build = |farm: Option<&SolverFarm>, batch: usize| {
+        let mut b = SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+            .mode(ExecMode::Persistent)
+            .temporal(2)
+            .seed(42);
+        if let Some(f) = farm {
+            b = b.farm(f);
+        }
+        b.batch_epochs(batch).build()
+    };
+    let mut solo = build(None, 0).unwrap();
+    solo.advance(12).unwrap();
+
+    let farm = SolverFarm::spawn(2).unwrap();
+    let mut batched = build(Some(&farm), 3).unwrap();
+    batched.advance(12).unwrap();
+    assert_eq!(batched.state_f64().unwrap(), solo.state_f64().unwrap());
+    let rep = batched.report();
+    assert_eq!(rep.plane_batches, Some(1), "one advance = one graph batch");
+    assert_eq!(rep.plane_sheds, Some(0));
+    assert_eq!(rep.plane_timeouts, Some(0));
+    // solo sessions don't fabricate plane numbers
+    assert_eq!(solo.report().plane_batches, None);
+    // batching without a farm is a build-time contract error
+    assert!(build(None, 3).is_err());
+}
