@@ -1,0 +1,90 @@
+//! Resilience overhead + recovery bench: sweep the checkpoint cadence
+//! over a farm stencil tenant and a farm CG tenant (clean arms — the
+//! <5%-overhead acceptance bar for the default cadence), then run one
+//! seeded fault-recovery arm per workload (panic/NaN injected mid-run,
+//! recovered from the last checkpoint, final state asserted
+//! bit-identical to the clean run inside the harness). Emits
+//! `BENCH_resilience.json` (+ a `BENCH {...}` stdout line) for the CI
+//! perf-regression gate (`tools: bench_check`).
+//!
+//! Run: `cargo bench --bench resilience` (`-- --quick` for the CI smoke
+//! configuration).
+
+use perks::util::fmt::Table;
+use perks::{harness, runtime};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // cadence 0 first: it is the overhead reference every other arm is
+    // gated against (and the bit-identity reference inside the sweep)
+    let cadences: &[u64] = &[0, runtime::DEFAULT_CHECKPOINT_EVERY, 4, 1];
+    let (interior, steps, bt, grid, iters, workers, reps) =
+        if quick { ("48x48", 32usize, 2usize, 16usize, 24usize, 4usize, 2usize) }
+        else { ("64x64", 96, 2, 23, 60, 8, 3) };
+
+    println!(
+        "Resilience: checkpoint cadence sweep + seeded fault recovery \
+         (stencil 2d5pt {interior} x{steps} steps bt={bt}; CG poisson {g}x{g} x{iters} iters; \
+         {workers} workers)\n",
+        g = grid
+    );
+
+    let mut rows = harness::stencil_cadence_sweep("2d5pt", interior, steps, bt, workers, cadences, reps)
+        .unwrap();
+    rows.extend(harness::cg_cadence_sweep(grid, iters, workers, cadences, reps).unwrap());
+    rows.push(harness::stencil_recovery_row("2d5pt", interior, steps, bt, workers, 11).unwrap());
+    rows.push(harness::cg_recovery_row(grid, iters, workers, 17).unwrap());
+
+    let mut t = Table::new(&[
+        "case",
+        "cadence",
+        "wall ms",
+        "overhead",
+        "recoveries",
+        "replayed",
+        "ckpt KiB",
+        "injected",
+    ]);
+    for row in &rows {
+        // overhead vs the same case's cadence-0 reference arm
+        let base = rows
+            .iter()
+            .find(|r| r.case == row.case && r.cadence == 0)
+            .map(|r| r.wall_seconds)
+            .unwrap_or(row.wall_seconds);
+        let overhead = if row.injected > 0 {
+            "-".to_string()
+        } else {
+            format!("{:+.1}%", (row.wall_seconds / base - 1.0) * 100.0)
+        };
+        t.row(&[
+            row.case.clone(),
+            row.cadence.to_string(),
+            format!("{:.2}", row.wall_seconds * 1e3),
+            overhead,
+            row.recoveries.to_string(),
+            row.replayed_epochs.to_string(),
+            format!("{:.1}", row.checkpoint_bytes as f64 / 1024.0),
+            row.injected.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nclean arms must never recover; the recovery arms replay from the last\n\
+         checkpoint and land bit-identically on the clean run's state (asserted\n\
+         in the harness before any number is reported)."
+    );
+
+    let json: Vec<String> = rows.iter().map(|r| r.json()).collect();
+    let payload = format!(
+        "{{\"bench\":\"resilience\",\"interior\":\"{interior}\",\"steps\":{steps},\
+         \"bt\":{bt},\"grid\":{grid},\"iters\":{iters},\"workers\":{workers},\
+         \"reps\":{reps},\"rows\":[{}]}}",
+        json.join(",")
+    );
+    println!("BENCH {payload}");
+    match std::fs::write("BENCH_resilience.json", format!("{payload}\n")) {
+        Ok(()) => println!("wrote BENCH_resilience.json"),
+        Err(e) => eprintln!("could not write BENCH_resilience.json: {e}"),
+    }
+}

@@ -2,8 +2,8 @@
 //! artifacts (the `tools/bench_check` binary of the perf-smoke job).
 //!
 //! Reads the `BENCH_stencil.json` / `BENCH_temporal.json` /
-//! `BENCH_farm.json` / `BENCH_plane.json` files the quick-mode benches
-//! emit and fails (exit 1) on:
+//! `BENCH_farm.json` / `BENCH_plane.json` / `BENCH_resilience.json`
+//! files the quick-mode benches emit and fails (exit 1) on:
 //!
 //! * **counter-invariant breaks** — machine-independent, always checked:
 //!   any pooled/persistent arm with `advance_spawns > 0` (a resident
@@ -15,7 +15,11 @@
 //!   (default 1.5, `--min-farm-speedup`), and any plane row whose
 //!   batched path leaks (`sched_lock_acquisitions != plane_batches`) or
 //!   that sheds / times out / spawns under the quick load (all must be
-//!   0 — the unbounded quick config admits everything);
+//!   0 — the unbounded quick config admits everything), any resilience
+//!   row that recovers without an injected fault (or fails to recover
+//!   with one), a cadence-0 arm that copies checkpoint bytes, and a
+//!   default-cadence clean arm costing more than 5% over its cadence-0
+//!   reference (skipped below a small noise-floor wall);
 //! * **wall regressions** — current wall > baseline wall * (1 + tol)
 //!   (default tolerance 0.25, `--tolerance`), compared against the
 //!   checked-in `bench/baselines/*.json` entry with the *same workload
@@ -36,8 +40,22 @@ use std::process::ExitCode;
 
 use perks::util::json::Json;
 
-const FILES: [&str; 4] =
-    ["BENCH_stencil.json", "BENCH_temporal.json", "BENCH_farm.json", "BENCH_plane.json"];
+const FILES: [&str; 5] = [
+    "BENCH_stencil.json",
+    "BENCH_temporal.json",
+    "BENCH_farm.json",
+    "BENCH_plane.json",
+    "BENCH_resilience.json",
+];
+
+/// Checkpoint-overhead acceptance bar: the default-cadence clean arm may
+/// cost at most this much over the cadence-0 arm of the same case.
+const MAX_CHECKPOINT_OVERHEAD: f64 = 0.05;
+
+/// Walls shorter than this are too noisy for the within-artifact
+/// overhead ratio; the gate notes and skips them (the checked-in
+/// baseline wall gate still applies).
+const OVERHEAD_GATE_MIN_WALL: f64 = 0.005;
 
 struct Config {
     dir: PathBuf,
@@ -149,7 +167,7 @@ fn config_key(doc: &Json) -> String {
     for key in ["bench", "case", "interior"] {
         parts.push(s(doc, key).to_string());
     }
-    for key in ["steps", "segments", "threads", "rounds", "workers"] {
+    for key in ["steps", "segments", "threads", "rounds", "workers", "bt", "grid", "iters", "reps"] {
         parts.push(int(doc, key).map(|v| v.to_string()).unwrap_or_default());
     }
     parts.join("/")
@@ -190,6 +208,12 @@ fn wall_entries(doc: &Json) -> Vec<(String, f64)> {
                 (int(r, "tenants"), int(r, "frontend_threads"), num(r, "wall_seconds"))
             {
                 out.push((format!("tenants{t}/fe{fe}/plane"), w));
+            }
+            // resilience rows: keyed by case + checkpoint cadence
+            if let (Some(cad), Some(w)) = (int(r, "cadence"), num(r, "wall_seconds")) {
+                if !s(r, "case").is_empty() {
+                    out.push((format!("{}/cad{cad}", s(r, "case")), w));
+                }
             }
         }
     }
@@ -269,6 +293,76 @@ fn check_file(cfg: &Config, name: &str, fails: &mut Vec<String>) {
                                 "{name}: tenants={tenants} row has nonzero {key} under quick load"
                             ));
                         }
+                    }
+                }
+            }
+            None => fails.push(format!("{name}: no rows array")),
+        },
+        "resilience" => match doc.get("rows").and_then(Json::as_array) {
+            Some(rows) => {
+                for r in rows {
+                    let case = s(r, "case").to_string();
+                    let cadence = int(r, "cadence").unwrap_or(0);
+                    let injected = int(r, "injected").unwrap_or(0);
+                    let recoveries = int(r, "recoveries");
+                    if injected == 0 && recoveries != Some(0) {
+                        fails.push(format!(
+                            "{name}: clean row {case}/cad{cadence} reports {recoveries:?} \
+                             recoveries (must be 0 without injected faults)"
+                        ));
+                    }
+                    if injected > 0 && recoveries.unwrap_or(0) == 0 {
+                        fails.push(format!(
+                            "{name}: recovery row {case} injected {injected} fault(s) but \
+                             never recovered — injection or supervision is broken"
+                        ));
+                    }
+                    if cadence == 0 && injected == 0 && int(r, "checkpoint_bytes") != Some(0) {
+                        fails.push(format!(
+                            "{name}: cadence-0 clean row {case} copied checkpoint bytes \
+                             (cadence off must cost nothing)"
+                        ));
+                    }
+                }
+                // checkpoint-overhead gate: default cadence vs cadence 0,
+                // within this artifact (same machine, same run)
+                let wall_of = |case: &str, cadence: u64| {
+                    rows.iter()
+                        .filter(|r| {
+                            s(r, "case") == case
+                                && int(r, "cadence") == Some(cadence)
+                                && int(r, "injected") == Some(0)
+                        })
+                        .find_map(|r| num(r, "wall_seconds"))
+                };
+                let mut cases: Vec<&str> = rows
+                    .iter()
+                    .filter(|r| int(r, "injected") == Some(0))
+                    .map(|r| s(r, "case"))
+                    .collect();
+                cases.sort_unstable();
+                cases.dedup();
+                for case in cases {
+                    let (Some(base), Some(walled)) = (
+                        wall_of(case, 0),
+                        wall_of(case, perks::runtime::DEFAULT_CHECKPOINT_EVERY),
+                    ) else {
+                        continue;
+                    };
+                    if base < OVERHEAD_GATE_MIN_WALL {
+                        println!(
+                            "note: {name}: {case} cadence-0 wall {base:.6}s below the \
+                             {OVERHEAD_GATE_MIN_WALL}s noise floor; overhead gate skipped"
+                        );
+                        continue;
+                    }
+                    let limit = base * (1.0 + MAX_CHECKPOINT_OVERHEAD);
+                    if walled > limit {
+                        fails.push(format!(
+                            "{name}: {case} default-cadence wall {walled:.6}s exceeds the \
+                             cadence-0 wall {base:.6}s by more than {:.0}%",
+                            MAX_CHECKPOINT_OVERHEAD * 100.0
+                        ));
                     }
                 }
             }

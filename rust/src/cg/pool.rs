@@ -516,6 +516,13 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
             }
         }
         let pap = sh.barrier.sync_sum();
+        if !pap.is_finite() {
+            // non-finite guard: NaN/Inf in p or Ap poisons the fold,
+            // identically on every worker — a collective break, before
+            // alpha can spread the poison into x/r
+            error = Some(format!("non-finite p·Ap ({pap}) at iteration {}", done + 1));
+            break;
+        }
         if pap <= 0.0 {
             // identical pap on every worker: a collective break
             error = Some(format!("matrix not positive definite (pAp={pap})"));
@@ -542,6 +549,13 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
             }
         }
         let rr_new = sh.barrier.sync_sum();
+        if !rr_new.is_finite() {
+            // same guard on the r·r recurrence: the fold is identical on
+            // every worker, so the break is collective and leaves x/r at
+            // the failing iteration's update (p not yet touched)
+            error = Some(format!("non-finite r·r ({rr_new}) at iteration {}", done + 1));
+            break;
+        }
         let beta = rr_new / rr;
         // -- fused pass B, part 2: p update (still resident rows) --------
         // SAFETY: p writes go through the raw pointer inside our rows; r
@@ -696,6 +710,33 @@ mod tests {
         a.spmv_gold(&x, &mut ax);
         let err = b.iter().zip(&ax).map(|(bi, ai)| (bi - ai).abs()).fold(0.0, f64::max);
         assert!(err < 1e-5, "true residual {err}");
+    }
+
+    /// Satellite: the hot-path reductions guard against non-finite
+    /// folds. A NaN smuggled into `p` poisons the p·Ap fold, and the
+    /// collective break names the iteration instead of iterating NaNs
+    /// to the cap; the pool stays usable afterwards.
+    #[test]
+    fn non_finite_reductions_fail_naming_the_iteration() {
+        let a = gen::poisson2d(8);
+        let b = gen::rhs(a.n_rows, 3);
+        let plan = MergePlan::new(&a, 4);
+        let mut pool = CgPool::spawn(Arc::new(a.clone()), plan, 2).unwrap();
+        let n = a.n_rows;
+        let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        p[n / 2] = f64::NAN;
+        let run = pool.run(&mut x, &mut r, &mut p, rr0, 0.0, 10).unwrap();
+        assert_eq!(run.iters, 0, "the poisoned fold fires before any state update");
+        let err = run.into_result().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("non-finite p·Ap"), "{msg}");
+        assert!(msg.contains("iteration 1"), "{msg}");
+        // the pool survives the collective break: a clean run converges
+        let (mut x, mut r, mut p) = (vec![0.0; n], b.clone(), b.clone());
+        let clean = pool.run(&mut x, &mut r, &mut p, rr0, 1e-10 * rr0, 10_000).unwrap();
+        assert!(clean.error.is_none());
+        assert!(clean.iters < 10_000);
     }
 
     #[test]

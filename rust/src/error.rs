@@ -45,6 +45,37 @@ pub enum Error {
     /// `util::counters::plane_timeouts`.
     #[error("timeout: {0}")]
     Timeout(String),
+
+    /// A farm worker panicked (or an injected panic fault fired) while
+    /// running one shard of a command, with the exact (phase, shard,
+    /// epoch) coordinate attached so supervisors can classify and
+    /// replay without string matching. Retryable: a
+    /// `runtime::resilience::RetryPolicy` restores the last checkpoint
+    /// and replays instead of surfacing this. Counted by
+    /// `util::counters::farm_recoveries` when recovered.
+    #[error("fault: worker panicked at phase {phase}, shard {shard}, epoch {epoch}")]
+    Fault {
+        /// Phase constant of the failing engine (`runtime::farm::P_*`).
+        phase: usize,
+        /// Shard index within the phase.
+        shard: usize,
+        /// The tenant's lifetime epoch counter at the failure.
+        epoch: u64,
+    },
+
+    /// A blocking wait's watchdog deadline expired while the command was
+    /// still in flight (`runtime::resilience::ResilienceConfig::
+    /// deadline`). The command keeps draining; releasing the session
+    /// reaps it as a zombie through the farm's release path.
+    #[error("stuck: command exceeded {waited_ms} ms deadline (phase {phase}, epoch {epoch})")]
+    Stuck {
+        /// Phase the command was in when the deadline expired.
+        phase: usize,
+        /// The tenant's lifetime epoch counter at expiry.
+        epoch: u64,
+        /// The deadline that was exceeded, in milliseconds.
+        waited_ms: u64,
+    },
 }
 
 /// Convenience alias used across the crate.
@@ -54,5 +85,18 @@ impl Error {
     /// Shorthand for `Error::Invalid` with a formatted message.
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::Invalid(msg.into())
+    }
+
+    /// Would retrying the failed operation plausibly succeed? True for
+    /// transient scheduling/fault classes (a panicked shard, a stuck
+    /// command, admission backpressure), false for deterministic
+    /// input/configuration/solver errors, where a replay would fail
+    /// identically. This is the classification the farm's
+    /// `RetryPolicy` uses to decide checkpoint-restore-replay.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            Error::Fault { .. } | Error::Stuck { .. } | Error::Shed(_) | Error::Timeout(_)
+        )
     }
 }

@@ -1,0 +1,406 @@
+//! Resilience experiment builders: checkpoint-cadence overhead sweeps
+//! and injected-fault recovery arms over the farm runtime — the
+//! measurement protocol behind `benches/resilience.rs` and the
+//! `BENCH_resilience.json` gate. Two invariants are *asserted* here, not
+//! just reported: clean runs recover zero times, and a recovered run's
+//! final state is bit-identical to an uninjected one.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::farm::SolverFarm;
+use crate::runtime::resilience::{FaultPlan, ResilienceConfig, RetryPolicy};
+use crate::sparse::gen;
+use crate::spmv::merge::MergePlan;
+use crate::stencil::{self, Domain};
+
+/// One arm of the resilience sweep: a workload run at one checkpoint
+/// cadence (clean), or one seeded-fault recovery run (`injected > 0`).
+///
+/// `wall_seconds` is the min-over-reps wall of a single command (the
+/// overhead-gate number); the counters are totals over the whole arm.
+#[derive(Clone, Debug)]
+pub struct ResilienceRow {
+    /// Workload label (`stencil-2d5pt`, `cg-poisson`, ...).
+    pub case: String,
+    /// Checkpoint cadence in epochs (0 = cadence checkpoints off).
+    pub cadence: u64,
+    pub wall_seconds: f64,
+    /// Supervised recoveries performed — **must be 0 when `injected`
+    /// is 0** (`bench_check` gates on it).
+    pub recoveries: u64,
+    /// Epochs re-executed by those recoveries.
+    pub replayed_epochs: u64,
+    /// Bytes copied into resident-state checkpoints.
+    pub checkpoint_bytes: u64,
+    /// Faults the installed plan held (0 on clean arms).
+    pub injected: u64,
+}
+
+impl ResilienceRow {
+    /// Stable BENCH-json fragment (the resilience counterpart of
+    /// `FarmSweepRow::json`).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"case\":\"{}\",\"cadence\":{},\"wall_seconds\":{:.6},\
+             \"recoveries\":{},\"replayed_epochs\":{},\
+             \"checkpoint_bytes\":{},\"injected\":{}}}",
+            self.case,
+            self.cadence,
+            self.wall_seconds,
+            self.recoveries,
+            self.replayed_epochs,
+            self.checkpoint_bytes,
+            self.injected
+        )
+    }
+}
+
+/// Measure the checkpoint-overhead curve for a farm stencil tenant: one
+/// row per cadence, each running `reps` commands of `steps` steps on a
+/// fresh farm of `workers` residents. The first cadence (conventionally
+/// 0 — checkpoints off) is the reference arm; every other cadence's
+/// final state must match it bit-for-bit, and every arm must report
+/// zero recoveries — checkpointing is observation, not perturbation.
+pub fn stencil_cadence_sweep(
+    bench: &str,
+    interior: &str,
+    steps: usize,
+    bt: usize,
+    workers: usize,
+    cadences: &[u64],
+    reps: usize,
+) -> Result<Vec<ResilienceRow>> {
+    let spec = stencil::spec(bench)
+        .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+    let dims = crate::session::parse_interior(interior)?;
+    if cadences.is_empty() || reps == 0 {
+        return Err(Error::invalid("cadences and reps must be non-empty"));
+    }
+    let mut d = Domain::for_spec(&spec, &dims)?;
+    d.randomize(100);
+
+    let mut rows = Vec::with_capacity(cadences.len());
+    let mut reference: Option<Vec<f64>> = None;
+    for &cadence in cadences {
+        let farm = SolverFarm::spawn(workers)?;
+        farm.install_faults(FaultPlan::new()); // hermetic: override any env plan
+        let mut tenant = farm.handle().admit_stencil(&spec, &d, workers, bt)?;
+        tenant.configure_resilience(ResilienceConfig::disabled().every(cadence))?;
+        let mut wall = f64::INFINITY;
+        let (mut recoveries, mut replayed, mut ck_bytes) = (0u64, 0u64, 0u64);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let run = tenant.advance(steps, None)?;
+            wall = wall.min(t0.elapsed().as_secs_f64());
+            recoveries += run.recoveries;
+            replayed += run.replayed_epochs;
+            ck_bytes += run.checkpoint_bytes;
+        }
+        let state = tenant.state()?;
+        drop(tenant);
+        drop(farm);
+        match &reference {
+            None => reference = Some(state),
+            Some(want) if *want != state => {
+                return Err(Error::Solver(format!(
+                    "cadence {cadence} changed the stencil result (bit-identity broken)"
+                )));
+            }
+            Some(_) => {}
+        }
+        if recoveries != 0 {
+            return Err(Error::Solver(format!(
+                "clean stencil arm at cadence {cadence} recovered {recoveries} times"
+            )));
+        }
+        rows.push(ResilienceRow {
+            case: format!("stencil-{bench}"),
+            cadence,
+            wall_seconds: wall,
+            recoveries,
+            replayed_epochs: replayed,
+            checkpoint_bytes: ck_bytes,
+            injected: 0,
+        });
+    }
+    Ok(rows)
+}
+
+/// The CG twin of [`stencil_cadence_sweep`]: a `grid`×`grid` Poisson
+/// system solved for `iters` fixed iterations per command. State
+/// round-trips through the caller, so every rep restarts from the same
+/// x/r/p — identical work per command at every cadence.
+pub fn cg_cadence_sweep(
+    grid: usize,
+    iters: usize,
+    workers: usize,
+    cadences: &[u64],
+    reps: usize,
+) -> Result<Vec<ResilienceRow>> {
+    if cadences.is_empty() || reps == 0 {
+        return Err(Error::invalid("cadences and reps must be non-empty"));
+    }
+    let a = Arc::new(gen::poisson2d(grid));
+    let b = gen::rhs(a.n_rows, 7);
+    let plan = MergePlan::new(&a, workers);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+
+    let mut rows = Vec::with_capacity(cadences.len());
+    let mut reference: Option<Vec<f64>> = None;
+    for &cadence in cadences {
+        let farm = SolverFarm::spawn(workers)?;
+        farm.install_faults(FaultPlan::new()); // hermetic: override any env plan
+        let mut tenant = farm.handle().admit_cg(a.clone(), plan.clone())?;
+        tenant.configure_resilience(ResilienceConfig::disabled().every(cadence))?;
+        let mut wall = f64::INFINITY;
+        let (mut recoveries, mut replayed, mut ck_bytes) = (0u64, 0u64, 0u64);
+        let mut x = vec![0.0; a.n_rows];
+        for _ in 0..reps {
+            x.iter_mut().for_each(|v| *v = 0.0);
+            let mut r = b.clone();
+            let mut p = b.clone();
+            let t0 = Instant::now();
+            let run = tenant.run(&mut x, &mut r, &mut p, rr0, 0.0, iters)?;
+            wall = wall.min(t0.elapsed().as_secs_f64());
+            if let Some(msg) = run.error {
+                return Err(Error::Solver(msg));
+            }
+            recoveries += run.recoveries;
+            replayed += run.replayed_epochs;
+            ck_bytes += run.checkpoint_bytes;
+        }
+        drop(tenant);
+        drop(farm);
+        match &reference {
+            None => reference = Some(x),
+            Some(want) if *want != x => {
+                return Err(Error::Solver(format!(
+                    "cadence {cadence} changed the CG iterates (bit-identity broken)"
+                )));
+            }
+            Some(_) => {}
+        }
+        if recoveries != 0 {
+            return Err(Error::Solver(format!(
+                "clean CG arm at cadence {cadence} recovered {recoveries} times"
+            )));
+        }
+        rows.push(ResilienceRow {
+            case: "cg-poisson".into(),
+            cadence,
+            wall_seconds: wall,
+            recoveries,
+            replayed_epochs: replayed,
+            checkpoint_bytes: ck_bytes,
+            injected: 0,
+        });
+    }
+    Ok(rows)
+}
+
+/// Shared resilience shape of the recovery arms: cadence-4 checkpoints
+/// with two replay attempts — tight enough that replays stay short,
+/// loose enough that recovery is exercised from a *cadence* checkpoint
+/// (not just the command-entry one) for most fault epochs.
+fn recovery_cfg() -> ResilienceConfig {
+    ResilienceConfig::disabled().every(4).with_retry(RetryPolicy::attempts(2))
+}
+
+/// Run a farm stencil command with one seeded fault (panic or NaN at a
+/// random epoch/shard — [`FaultPlan::seeded`]) under the recovery
+/// config, and assert the recovered run lands bit-identically on the
+/// clean run's state. The returned row reports the *faulted* arm's wall
+/// and counters with `injected = 1`.
+///
+/// Residual tracking is forced (an unreachable tolerance) so NaN
+/// poisoning is detected at the next epoch fold — the same guard
+/// production tolerance-tracked runs rely on.
+pub fn stencil_recovery_row(
+    bench: &str,
+    interior: &str,
+    steps: usize,
+    bt: usize,
+    workers: usize,
+    seed: u64,
+) -> Result<ResilienceRow> {
+    let spec = stencil::spec(bench)
+        .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+    let dims = crate::session::parse_interior(interior)?;
+    let mut d = Domain::for_spec(&spec, &dims)?;
+    d.randomize(200 + seed);
+    let never = Some(-1.0); // residual >= 0 never reaches it: track, don't stop
+
+    // clean arm: same config, empty plan — the bit-identity reference
+    let farm = SolverFarm::spawn(workers)?;
+    farm.install_faults(FaultPlan::new());
+    let mut tenant = farm.handle().admit_stencil(&spec, &d, workers, bt)?;
+    tenant.configure_resilience(recovery_cfg())?;
+    let clean_run = tenant.advance(steps, never)?;
+    let want = tenant.state()?;
+    drop(tenant);
+    drop(farm);
+    if clean_run.recoveries != 0 {
+        return Err(Error::Solver("clean stencil arm recovered".into()));
+    }
+
+    // faulted arm: one seeded panic/NaN somewhere in the schedule
+    let epochs = (steps.div_ceil(bt.max(1))) as u64;
+    let plan = FaultPlan::seeded(seed, epochs, workers);
+    let injected = plan.len() as u64;
+    let farm = SolverFarm::spawn(workers)?;
+    farm.install_faults(plan);
+    let mut tenant = farm.handle().admit_stencil(&spec, &d, workers, bt)?;
+    tenant.configure_resilience(recovery_cfg())?;
+    let t0 = Instant::now();
+    let run = tenant.advance(steps, never)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let got = tenant.state()?;
+    drop(tenant);
+    drop(farm);
+
+    if run.recoveries == 0 {
+        return Err(Error::Solver(format!(
+            "seeded stencil fault (seed {seed}) never triggered a recovery"
+        )));
+    }
+    if got != want {
+        return Err(Error::Solver(format!(
+            "stencil recovery diverged from the clean run (seed {seed})"
+        )));
+    }
+    Ok(ResilienceRow {
+        case: format!("stencil-{bench}-recovery"),
+        cadence: recovery_cfg().checkpoint_every,
+        wall_seconds: wall,
+        recoveries: run.recoveries,
+        replayed_epochs: run.replayed_epochs,
+        checkpoint_bytes: run.checkpoint_bytes,
+        injected,
+    })
+}
+
+/// The CG twin of [`stencil_recovery_row`]: one seeded fault in a
+/// fixed-iteration Poisson solve, recovered and checked bit-identical
+/// (x, r, p and the recurrence scalar all compared).
+pub fn cg_recovery_row(
+    grid: usize,
+    iters: usize,
+    workers: usize,
+    seed: u64,
+) -> Result<ResilienceRow> {
+    let a = Arc::new(gen::poisson2d(grid));
+    let b = gen::rhs(a.n_rows, 300 + seed);
+    let plan = MergePlan::new(&a, workers);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+    let fresh = |x: &mut Vec<f64>, r: &mut Vec<f64>, p: &mut Vec<f64>| {
+        x.iter_mut().for_each(|v| *v = 0.0);
+        r.copy_from_slice(&b);
+        p.copy_from_slice(&b);
+    };
+
+    // clean arm
+    let (mut x, mut r, mut p) = (vec![0.0; a.n_rows], b.clone(), b.clone());
+    let farm = SolverFarm::spawn(workers)?;
+    farm.install_faults(FaultPlan::new());
+    let mut tenant = farm.handle().admit_cg(a.clone(), plan.clone())?;
+    tenant.configure_resilience(recovery_cfg())?;
+    let clean = tenant.run(&mut x, &mut r, &mut p, rr0, 0.0, iters)?;
+    drop(tenant);
+    drop(farm);
+    if let Some(msg) = clean.error {
+        return Err(Error::Solver(msg));
+    }
+    if clean.recoveries != 0 {
+        return Err(Error::Solver("clean CG arm recovered".into()));
+    }
+    let (want_x, want_r, want_p, want_rr) = (x.clone(), r.clone(), p.clone(), clean.rr);
+
+    // faulted arm
+    let fplan = FaultPlan::seeded(seed, iters as u64, workers);
+    let injected = fplan.len() as u64;
+    let farm = SolverFarm::spawn(workers)?;
+    farm.install_faults(fplan);
+    let mut tenant = farm.handle().admit_cg(a.clone(), plan.clone())?;
+    tenant.configure_resilience(recovery_cfg())?;
+    fresh(&mut x, &mut r, &mut p);
+    let t0 = Instant::now();
+    let run = tenant.run(&mut x, &mut r, &mut p, rr0, 0.0, iters)?;
+    let wall = t0.elapsed().as_secs_f64();
+    drop(tenant);
+    drop(farm);
+    if let Some(msg) = run.error {
+        return Err(Error::Solver(msg));
+    }
+
+    if run.recoveries == 0 {
+        return Err(Error::Solver(format!(
+            "seeded CG fault (seed {seed}) never triggered a recovery"
+        )));
+    }
+    if x != want_x || r != want_r || p != want_p || run.rr.to_bits() != want_rr.to_bits() {
+        return Err(Error::Solver(format!(
+            "CG recovery diverged from the clean run (seed {seed})"
+        )));
+    }
+    Ok(ResilienceRow {
+        case: "cg-poisson-recovery".into(),
+        cadence: recovery_cfg().checkpoint_every,
+        wall_seconds: wall,
+        recoveries: run.recoveries,
+        replayed_epochs: run.replayed_epochs,
+        checkpoint_bytes: run.checkpoint_bytes,
+        injected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadence_sweeps_are_clean_and_serialize() {
+        let rows = stencil_cadence_sweep("2d5pt", "12x12", 8, 1, 2, &[0, 2], 1).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.recoveries == 0 && r.injected == 0));
+        assert_eq!(rows[0].checkpoint_bytes, 0, "cadence 0 must not checkpoint");
+        assert!(rows[1].checkpoint_bytes > 0, "cadence 2 must checkpoint");
+        let j = rows[1].json();
+        for key in [
+            "\"case\"",
+            "\"cadence\"",
+            "\"wall_seconds\"",
+            "\"recoveries\"",
+            "\"replayed_epochs\"",
+            "\"checkpoint_bytes\"",
+            "\"injected\"",
+        ] {
+            assert!(j.contains(key), "{j}");
+        }
+
+        let rows = cg_cadence_sweep(8, 6, 2, &[0, 2], 1).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.recoveries == 0));
+        assert!(rows[1].checkpoint_bytes > 0);
+    }
+
+    #[test]
+    fn recovery_rows_recover_bit_identically() {
+        let row = stencil_recovery_row("2d5pt", "12x12", 12, 1, 2, 3).unwrap();
+        assert!(row.recoveries >= 1);
+        assert_eq!(row.injected, 1);
+        let row = cg_recovery_row(8, 8, 2, 5).unwrap();
+        assert!(row.recoveries >= 1);
+        assert_eq!(row.injected, 1);
+    }
+
+    #[test]
+    fn sweeps_reject_bad_configs() {
+        assert!(stencil_cadence_sweep("17d99pt", "8x8", 4, 1, 1, &[0], 1).is_err());
+        assert!(stencil_cadence_sweep("2d5pt", "8x8", 4, 1, 1, &[], 1).is_err());
+        assert!(stencil_cadence_sweep("2d5pt", "8x8", 4, 1, 1, &[0], 0).is_err());
+        assert!(cg_cadence_sweep(8, 4, 1, &[], 1).is_err());
+        assert!(cg_cadence_sweep(8, 4, 1, &[0], 0).is_err());
+    }
+}

@@ -100,6 +100,27 @@
 //! changes what a shard computes, so the bit-identity bar below is
 //! untouched; it only changes when work is enqueued and who waits.
 //!
+//! # Resilience
+//!
+//! The farm carries the recovery machinery of
+//! [`crate::runtime::resilience`]: tenants configured with a checkpoint
+//! cadence snapshot their resident state inside the completion
+//! transition (under the already-held scheduler lock — no extra phase or
+//! barrier), an installed [`FaultPlan`] injects panics / NaN poisoning /
+//! stalls at exact (tenant, epoch, phase, shard) coordinates when the
+//! scheduler claims them (one `Option` check when disabled), and a
+//! [`RetryPolicy`] turns a retryable failure into checkpoint-restore +
+//! replay instead of a command error — bit-identical to an uninjected
+//! run, because every reduction folds fixed slots in slot order.
+//! Failures that do surface are structured: a panicked shard is
+//! [`Error::Fault`] with its exact coordinates, a non-finite
+//! residual / `p·Ap` / `r·r` fold is an `Error::Solver` naming the
+//! epoch (instead of silently iterating on NaN to `max_steps`), and a
+//! blocking wait armed with a watchdog deadline surfaces
+//! [`Error::Stuck`]. Recoveries, replayed epochs, and checkpoint bytes
+//! are counted per command ([`StencilFarmRun`]/[`CgFarmRun`]), per farm
+//! ([`FarmMetrics`]), and process-wide (`util::counters`).
+//!
 //! # Teardown
 //!
 //! Shutdown is a dedicated flag checked on every condvar wake — never a
@@ -114,7 +135,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::task::{Poll, Waker};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cg::pool::SharedBuf;
 use crate::error::{Error, Result};
@@ -122,6 +143,9 @@ use crate::runtime::plane::admission::{AdmissionPolicy, PlaneConfig};
 use crate::runtime::plane::future::{CgCompletion, StencilCompletion};
 use crate::runtime::plane::graph::CommandGraph;
 use crate::runtime::plane::reactor::block_on;
+use crate::runtime::resilience::{
+    Checkpoint, CheckpointPayload, FaultKind, FaultPlan, ResilienceConfig, RetryPolicy,
+};
 use crate::sparse::csr::Csr;
 use crate::spmv::merge::{self, MergePlan};
 use crate::stencil::grid::Domain;
@@ -148,16 +172,22 @@ const QUEUE_SAMPLE_CAP: usize = 1 << 16;
 // Engines: the numeric state of one admitted tenant
 // ---------------------------------------------------------------------
 
-/// Stencil phases.
-const P_LOAD: u8 = 0;
-const P_COMPUTE: u8 = 1;
-const P_HALO: u8 = 2;
-const P_FINAL: u8 = 3;
-/// CG phases.
-const P_SPMV: u8 = 0;
-const P_FIXUP: u8 = 1;
-const P_XR: u8 = 2;
-const P_PUP: u8 = 3;
+/// Stencil phase: one-time slab load (first command of a tenant).
+pub const P_LOAD: u8 = 0;
+/// Stencil phase: advance `bt` sub-steps + store the boundary union.
+pub const P_COMPUTE: u8 = 1;
+/// Stencil phase: reload neighbor halos.
+pub const P_HALO: u8 = 2;
+/// Stencil phase: store whole bands so the client can observe state.
+pub const P_FINAL: u8 = 3;
+/// CG phase: merge-share SpMV consumption.
+pub const P_SPMV: u8 = 0;
+/// CG phase: carry fixup + partial `p·Ap`.
+pub const P_FIXUP: u8 = 1;
+/// CG phase: x/r update + partial `r·r`.
+pub const P_XR: u8 = 2;
+/// CG phase: direction update.
+pub const P_PUP: u8 = 3;
 
 /// Resident slab pair of one stencil band (the worker-local state of the
 /// solo pool, hoisted into the tenant so any worker can run the band).
@@ -525,6 +555,85 @@ impl EngineKind {
             },
         }
     }
+
+    /// Inject NaN contamination into the shard's resident output (the
+    /// `FaultKind::Nan` payload): the poisoned value propagates into the
+    /// next residual / `p·Ap` fold, which the non-finite guards catch.
+    /// SAFETY: same single-owner claim as `run_shard` — called by the
+    /// worker that owns the shard this phase, after the shard ran.
+    unsafe fn poison_shard(&self, shard: usize) {
+        match self {
+            EngineKind::Stencil(e) => {
+                let plan = &e.plans[shard];
+                let slab = &mut *e.slabs[shard].0.get();
+                // poison an interior cell of the owned band (and its
+                // ping-pong partner, so any sub-step grouping carries it)
+                let mid = ((plan.band.start + plan.band.end) / 2 - plan.slab.start / e.plane)
+                    * e.plane
+                    + e.plane / 2;
+                if let Some(v) = slab.cur.get_mut(mid) {
+                    *v = f64::NAN;
+                }
+                if let Some(v) = slab.nxt.get_mut(mid) {
+                    *v = f64::NAN;
+                }
+            }
+            EngineKind::Cg(e) => {
+                // poison one residual row of the owned block: r is
+                // read-modify-written every iteration (never rebuilt from
+                // scratch like ap), so the NaN reaches the next r·r or
+                // p·Ap fold from *any* phase the fault fires in. During
+                // P_XR the row belongs to this shard's block; in every
+                // other phase r has no writer at all.
+                let (s, _) = e.blocks[shard];
+                e.r.ptr().add(s).write(f64::NAN);
+            }
+        }
+    }
+}
+
+/// Classified failure of an in-flight command (tenant-side error state),
+/// structured so the retry policy and the harvest path can classify
+/// without string matching.
+#[derive(Clone, Debug)]
+enum Failure {
+    /// A worker panicked running a shard (real or injected).
+    Panic { phase: u8, shard: usize, epoch: u64 },
+    /// A reduction fold produced NaN/Inf (state corruption — injected
+    /// poisoning, or a genuinely diverged run; the latter fails
+    /// identically on every replay and so exhausts retries quickly).
+    NonFinite { what: &'static str, value: f64, epoch: u64 },
+    /// Deterministic solver error (not positive definite, ...): a
+    /// replay would fail identically, so never retried.
+    Solver(String),
+}
+
+impl Failure {
+    fn retryable(&self) -> bool {
+        !matches!(self, Failure::Solver(_))
+    }
+
+    fn message(&self) -> String {
+        match self {
+            Failure::Panic { phase, shard, epoch } => {
+                format!("farm worker panicked (phase {phase}, shard {shard}, epoch {epoch})")
+            }
+            Failure::NonFinite { what, value, epoch } => {
+                format!("non-finite {what} ({value}) at epoch {epoch}")
+            }
+            Failure::Solver(msg) => msg.clone(),
+        }
+    }
+
+    fn into_error(self) -> Error {
+        match self {
+            Failure::Panic { phase, shard, epoch } => {
+                Error::Fault { phase: phase as usize, shard, epoch }
+            }
+            f @ Failure::NonFinite { .. } => Error::Solver(f.message()),
+            Failure::Solver(msg) => Error::Solver(msg),
+        }
+    }
 }
 
 /// Fold reduction slots in slot-index order (left-to-right from 0.0) —
@@ -562,9 +671,26 @@ struct Tenant {
     first_dispatch: bool,
     enqueued_at: f64,
     queue_wait_cmd: f64,
-    error: Option<String>,
+    failure: Option<Failure>,
     moved: u64,
     computed: u64,
+    // --- resilience ---
+    /// Per-tenant checkpoint/retry/watchdog knobs (set between commands).
+    res_cfg: ResilienceConfig,
+    /// Lifetime completed-epoch counter (stencil exchange epochs + CG
+    /// iterations) — the coordinate fault plans and checkpoints use.
+    epoch: u64,
+    /// Last resident-state snapshot (command-entry or cadence).
+    checkpoint: Option<Checkpoint>,
+    /// Recovery attempts consumed by the current command.
+    attempts: u32,
+    /// Backoff gate: the scheduler defers claims until this farm-clock
+    /// time (0.0 = claimable now; set on restore when backoff > 0).
+    resume_at: f64,
+    /// Per-command recovery accounting, harvested into the run structs.
+    recoveries_cmd: u64,
+    replayed_cmd: u64,
+    ckpt_bytes_cmd: u64,
     // --- submission plane ---
     /// Completion hook of a pending async waiter; fired by the worker
     /// that completes the command (and by shutdown).
@@ -613,9 +739,17 @@ impl Tenant {
             first_dispatch: false,
             enqueued_at: 0.0,
             queue_wait_cmd: 0.0,
-            error: None,
+            failure: None,
             moved: 0,
             computed: 0,
+            res_cfg: ResilienceConfig::disabled(),
+            epoch: 0,
+            checkpoint: None,
+            attempts: 0,
+            resume_at: 0.0,
+            recoveries_cmd: 0,
+            replayed_cmd: 0,
+            ckpt_bytes_cmd: 0,
             waker: None,
             slots_held: 0,
             graph_segs: VecDeque::new(),
@@ -659,6 +793,10 @@ struct FarmState {
     /// All-time peak of `plane_inflight` — the sustained-concurrency
     /// figure the stress bench asserts.
     plane_peak: usize,
+    /// Installed fault-injection schedule, consulted (and mutated: specs
+    /// fire once) at claim time under this very lock. `None` — the
+    /// overwhelmingly common case — costs one branch per claim.
+    faults: Option<FaultPlan>,
 }
 
 struct FarmShared {
@@ -682,6 +820,10 @@ struct FarmShared {
     sched_locks: AtomicU64,
     plane_sheds: AtomicU64,
     plane_timeouts: AtomicU64,
+    faults_injected: AtomicU64,
+    recoveries: AtomicU64,
+    replayed_epochs: AtomicU64,
+    checkpoint_bytes: AtomicU64,
 }
 
 impl FarmShared {
@@ -704,6 +846,11 @@ struct Task {
     sub: usize,
     track: bool,
     scalar: f64,
+    /// Tenant's lifetime epoch at claim time (fault/failure coordinate).
+    epoch: u64,
+    /// Fault to inject while running this shard (claimed from the
+    /// installed `FaultPlan`; `None` on every normal claim).
+    inject: Option<FaultKind>,
     engine: Arc<EngineKind>,
 }
 
@@ -755,6 +902,17 @@ pub struct FarmMetrics {
     /// All-time peak of concurrently held plane slots — the sustained
     /// in-flight concurrency the stress bench asserts.
     pub plane_inflight_peak: usize,
+    /// Faults injected from an installed `FaultPlan` (0 on clean farms —
+    /// the invariant clean benches assert).
+    pub faults_injected: u64,
+    /// Supervised recoveries: retryable failures restored from a
+    /// checkpoint and replayed instead of surfacing.
+    pub recoveries: u64,
+    /// Epochs re-executed by those replays (checkpoint-to-failure
+    /// distance, summed — what the cadence bounds).
+    pub replayed_epochs: u64,
+    /// Bytes copied into resident-state checkpoints.
+    pub checkpoint_bytes: u64,
 }
 
 impl FarmMetrics {
@@ -806,6 +964,9 @@ impl SolverFarm {
                 queue_max: 0.0,
                 plane_inflight: 0,
                 plane_peak: 0,
+                // CI replay hook: a fault plan in the environment arms
+                // injection on every farm the process spawns
+                faults: FaultPlan::from_env(),
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
@@ -821,6 +982,10 @@ impl SolverFarm {
             sched_locks: AtomicU64::new(0),
             plane_sheds: AtomicU64::new(0),
             plane_timeouts: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            replayed_epochs: AtomicU64::new(0),
+            checkpoint_bytes: AtomicU64::new(0),
         });
         counters::note_thread_spawns(workers as u64);
         let mut handles = Vec::with_capacity(workers);
@@ -870,6 +1035,12 @@ impl SolverFarm {
     /// Farm-level metrics snapshot.
     pub fn metrics(&self) -> FarmMetrics {
         self.handle().metrics()
+    }
+
+    /// Install (or replace) a deterministic fault-injection schedule.
+    /// See [`FarmHandle::install_faults`].
+    pub fn install_faults(&self, plan: FaultPlan) {
+        self.handle().install_faults(plan)
     }
 
     /// Shut the workers down and join them. Idempotent; `drop` calls it.
@@ -995,7 +1166,43 @@ impl FarmHandle {
             plane_sheds: sh.plane_sheds.load(Ordering::Relaxed),
             plane_timeouts: sh.plane_timeouts.load(Ordering::Relaxed),
             plane_inflight_peak: peak,
+            faults_injected: sh.faults_injected.load(Ordering::Relaxed),
+            recoveries: sh.recoveries.load(Ordering::Relaxed),
+            replayed_epochs: sh.replayed_epochs.load(Ordering::Relaxed),
+            checkpoint_bytes: sh.checkpoint_bytes.load(Ordering::Relaxed),
         }
+    }
+
+    /// Install (or replace) a deterministic fault-injection schedule on
+    /// the farm: each [`crate::runtime::resilience::FaultSpec`] fires
+    /// exactly once when the scheduler claims its (tenant, epoch, phase,
+    /// shard) coordinate. The plan is also picked up automatically from
+    /// the `PERKS_FAULT_PLAN` environment variable at spawn, so CI can
+    /// replay any failure without code changes.
+    pub fn install_faults(&self, plan: FaultPlan) {
+        let mut g = self.shared.lock();
+        g.faults = Some(plan);
+    }
+
+    /// Set a tenant's resilience knobs (checkpoint cadence, retry
+    /// policy, watchdog deadline). Errors if the tenant has a command in
+    /// flight — the knobs feed the completion transition and must not
+    /// change under it.
+    fn set_resilience(&self, tid: usize, cfg: ResilienceConfig) -> Result<()> {
+        let mut g = self.shared.lock();
+        if g.shutdown {
+            return Err(Error::Solver("solver farm is shut down".into()));
+        }
+        let Some(t) = g.tenants[tid].as_mut() else {
+            return Err(Error::Solver("farm tenant released".into()));
+        };
+        if t.active {
+            return Err(Error::Solver(
+                "resilience config change with a command in flight".into(),
+            ));
+        }
+        t.res_cfg = cfg;
+        Ok(())
     }
 
     // ----- command plumbing shared by the session handles -----
@@ -1046,7 +1253,7 @@ impl FarmHandle {
         let t = g.tenants[tid].as_mut().expect("tenant released");
         t.active = true;
         t.done_flag = false;
-        t.error = None;
+        t.failure = None;
         t.moved = 0;
         t.computed = 0;
         t.steps_target = steps;
@@ -1056,6 +1263,11 @@ impl FarmHandle {
         t.first_dispatch = true;
         t.enqueued_at = now;
         t.queue_wait_cmd = 0.0;
+        t.attempts = 0;
+        t.resume_at = 0.0;
+        t.recoveries_cmd = 0;
+        t.replayed_cmd = 0;
+        t.ckpt_bytes_cmd = 0;
         t.graph_segs.clear();
         t.graph_segs.extend(rest.iter().copied());
         t.graph_schedule.clear();
@@ -1063,6 +1275,14 @@ impl FarmHandle {
         if resubmits > 0 {
             t.graph_schedule.push(steps);
             t.graph_schedule.extend_from_slice(rest);
+        }
+        // command-entry checkpoint: with a retry policy armed, recovery
+        // must be possible at *any* epoch, not just past the first
+        // cadence boundary — snapshot the pre-command resident state
+        // (and the whole segment schedule, so a restored replay
+        // re-dequeues segments exactly like the clean run)
+        if t.res_cfg.retry.max_attempts > 0 {
+            take_checkpoint(t, sh);
         }
         // first phase: one-time slab load, else straight into the first
         // epoch (or the final store for a 0-step command — the solo pool
@@ -1087,8 +1307,57 @@ impl FarmHandle {
 
     fn wait_stencil(&self, tid: usize) -> Result<StencilFarmRun> {
         // the blocking wrapper is the async path driven by a parking
-        // waker: one code path for harvest, shutdown, and error handling
+        // waker: one code path for harvest, shutdown, and error handling.
+        // The watchdog runs first; once it passes, the future resolves
+        // without parking.
+        self.deadline_guard(tid)?;
         block_on(StencilCompletion::new(self.clone(), tid))
+    }
+
+    /// Watchdog for the blocking wait paths: with a tenant deadline
+    /// armed ([`crate::runtime::resilience::ResilienceConfig::deadline`]),
+    /// park on the completion condvar until the command finishes or the
+    /// deadline expires, surfacing [`Error::Stuck`] with phase/epoch
+    /// context on expiry. Without a deadline this is one lock + branch.
+    /// An expired command keeps draining (its workers are not
+    /// interruptible mid-shard); releasing the tenant reaps it through
+    /// the existing zombie path.
+    fn deadline_guard(&self, tid: usize) -> Result<()> {
+        let sh = &self.shared;
+        let mut g = sh.lock();
+        let deadline = {
+            let Some(t) = g.tenants[tid].as_ref() else { return Ok(()) };
+            match t.res_cfg.deadline {
+                Some(d) if t.active && !t.done_flag => d,
+                _ => return Ok(()),
+            }
+        };
+        let start = Instant::now();
+        loop {
+            if g.shutdown {
+                return Ok(()); // the completion future surfaces shutdown
+            }
+            let (phase, epoch) = {
+                let Some(t) = g.tenants[tid].as_ref() else { return Ok(()) };
+                if !t.active || t.done_flag {
+                    return Ok(());
+                }
+                (t.phase, t.epoch)
+            };
+            let waited = start.elapsed();
+            if waited >= deadline {
+                return Err(Error::Stuck {
+                    phase: phase as usize,
+                    epoch,
+                    waited_ms: waited.as_millis() as u64,
+                });
+            }
+            let (guard, _) = sh
+                .done_cv
+                .wait_timeout(g, deadline - waited)
+                .unwrap_or_else(|p| p.into_inner());
+            g = guard;
+        }
     }
 
     /// Poll an in-flight stencil command (the completion-future core).
@@ -1123,9 +1392,12 @@ impl FarmHandle {
                     global_bytes: t.moved,
                     computed_cells: t.computed,
                     queue_wait_seconds: t.queue_wait_cmd,
+                    recoveries: t.recoveries_cmd,
+                    replayed_epochs: t.replayed_cmd,
+                    checkpoint_bytes: t.ckpt_bytes_cmd,
                 };
-                Out::Done(match t.error.take() {
-                    Some(msg) => Err(Error::Solver(msg)),
+                Out::Done(match t.failure.take() {
+                    Some(f) => Err(f.into_error()),
                     None => Ok(run),
                 })
             } else if !t.active {
@@ -1257,7 +1529,7 @@ impl FarmHandle {
         }
         t.active = true;
         t.done_flag = false;
-        t.error = None;
+        t.failure = None;
         t.moved = 0;
         t.computed = 0;
         t.iters_target = iters;
@@ -1267,6 +1539,11 @@ impl FarmHandle {
         t.first_dispatch = true;
         t.enqueued_at = now;
         t.queue_wait_cmd = 0.0;
+        t.attempts = 0;
+        t.resume_at = 0.0;
+        t.recoveries_cmd = 0;
+        t.replayed_cmd = 0;
+        t.ckpt_bytes_cmd = 0;
         t.graph_segs.clear();
         t.graph_segs.extend(rest.iter().copied());
         t.graph_schedule.clear();
@@ -1284,6 +1561,11 @@ impl FarmHandle {
             t.done_flag = true;
             sh.done_cv.notify_all();
             return Ok(());
+        }
+        // command-entry checkpoint (see submit_stencil_cmd) — after the
+        // short circuit: a command that never iterates never recovers
+        if t.res_cfg.retry.max_attempts > 0 {
+            take_checkpoint(t, sh);
         }
         t.phase = P_SPMV;
         t.next_shard = 0;
@@ -1303,7 +1585,8 @@ impl FarmHandle {
         p: &mut [f64],
     ) -> Result<CgFarmRun> {
         // blocking wrapper over the async completion path (see
-        // wait_stencil)
+        // wait_stencil), watchdog first
+        self.deadline_guard(tid)?;
         block_on(CgCompletion::new(self.clone(), tid, x, r, p))
     }
 
@@ -1319,6 +1602,9 @@ impl FarmHandle {
     ) -> Poll<Result<CgFarmRun>> {
         enum Out {
             Done(CgFarmRun),
+            /// A fault (panicked shard) — structured error, state torn
+            /// mid-iteration, nothing copied out.
+            Fault(Error),
             Inactive,
             Shutdown,
             Pending,
@@ -1334,21 +1620,39 @@ impl FarmHandle {
                 t.done_flag = false;
                 t.active = false;
                 t.waker = None;
-                let run = CgFarmRun {
-                    iters: t.iters_done,
-                    rr: t.rr,
-                    error: t.error.take(),
-                    queue_wait_seconds: t.queue_wait_cmd,
-                };
-                let engine = t.engine.clone();
-                let EngineKind::Cg(ref e) = *engine else { unreachable!() };
-                // SAFETY: command done — workers re-parked, buffers quiescent.
-                unsafe {
-                    x.copy_from_slice(e.x.whole());
-                    r.copy_from_slice(e.r.whole());
-                    p.copy_from_slice(e.p.whole());
+                match t.failure.take() {
+                    Some(f @ Failure::Panic { .. }) => {
+                        // torn mid-iteration: the resident vectors are in
+                        // an unknown phase state — surface the structured
+                        // fault and leave the caller's buffers untouched
+                        Out::Fault(f.into_error())
+                    }
+                    other => {
+                        let run = CgFarmRun {
+                            iters: t.iters_done,
+                            rr: t.rr,
+                            // collective errors (non-PD, non-finite) fire
+                            // at the transition, before any state update
+                            // of the failing iteration: completed
+                            // iterations remain valid and observable
+                            error: other.map(|f| f.message()),
+                            queue_wait_seconds: t.queue_wait_cmd,
+                            recoveries: t.recoveries_cmd,
+                            replayed_epochs: t.replayed_cmd,
+                            checkpoint_bytes: t.ckpt_bytes_cmd,
+                        };
+                        let engine = t.engine.clone();
+                        let EngineKind::Cg(ref e) = *engine else { unreachable!() };
+                        // SAFETY: command done — workers re-parked,
+                        // buffers quiescent.
+                        unsafe {
+                            x.copy_from_slice(e.x.whole());
+                            r.copy_from_slice(e.r.whole());
+                            p.copy_from_slice(e.p.whole());
+                        }
+                        Out::Done(run)
+                    }
                 }
-                Out::Done(run)
             } else if !t.active {
                 Out::Inactive
             } else if down {
@@ -1365,6 +1669,10 @@ impl FarmHandle {
             Out::Done(run) => {
                 release_plane_slots(&mut g, sh, tid);
                 Poll::Ready(Ok(run))
+            }
+            Out::Fault(err) => {
+                release_plane_slots(&mut g, sh, tid);
+                Poll::Ready(Err(err))
             }
             Out::Inactive => {
                 Poll::Ready(Err(Error::Solver("no farm command in flight to wait for".into())))
@@ -1438,6 +1746,14 @@ pub struct StencilFarmRun {
     pub computed_cells: u64,
     /// Time this command waited from enqueue to first shard dispatch.
     pub queue_wait_seconds: f64,
+    /// Supervised recoveries this command performed (0 on a clean run —
+    /// the invariant clean benches assert).
+    pub recoveries: u64,
+    /// Epochs re-executed by those recoveries (checkpoint-to-failure
+    /// distance, what the cadence bounds).
+    pub replayed_epochs: u64,
+    /// Bytes copied into resident-state checkpoints by this command.
+    pub checkpoint_bytes: u64,
 }
 
 /// Result of one CG farm command (the farm analog of
@@ -1446,10 +1762,19 @@ pub struct StencilFarmRun {
 pub struct CgFarmRun {
     pub iters: usize,
     pub rr: f64,
-    /// Collective solver error (not positive definite) — completed
-    /// iterations are still valid, as in the serial/pooled paths.
+    /// Collective solver error (not positive definite, or a non-finite
+    /// reduction that exhausted its retries) — completed iterations are
+    /// still valid, as in the serial/pooled paths. A *panicked* shard is
+    /// different: it surfaces as `Err(Error::Fault)` from the wait, with
+    /// no state copied out (the iteration was torn mid-phase).
     pub error: Option<String>,
     pub queue_wait_seconds: f64,
+    /// Supervised recoveries this command performed (0 on a clean run).
+    pub recoveries: u64,
+    /// Iterations re-executed by those recoveries.
+    pub replayed_epochs: u64,
+    /// Bytes copied into resident-state checkpoints by this command.
+    pub checkpoint_bytes: u64,
 }
 
 /// An admitted stencil session: submit/wait (or the blocking `advance`)
@@ -1525,6 +1850,15 @@ impl FarmStencil {
     /// Snapshot the padded domain data (between commands only).
     pub fn state(&self) -> Result<Vec<f64>> {
         self.farm.stencil_state(self.tid)
+    }
+
+    /// Set this tenant's resilience knobs (checkpoint cadence, retry
+    /// policy, watchdog deadline — see
+    /// [`crate::runtime::resilience::ResilienceConfig`]). Errors with a
+    /// command in flight: the knobs feed the completion transition and
+    /// must not change under it.
+    pub fn configure_resilience(&mut self, cfg: ResilienceConfig) -> Result<()> {
+        self.farm.set_resilience(self.tid, cfg)
     }
 }
 
@@ -1672,6 +2006,12 @@ impl FarmCg {
     ) -> Result<CgFarmRun> {
         self.submit_graph_async(x, r, p, rr, graph)?.await
     }
+
+    /// Set this tenant's resilience knobs (see
+    /// [`FarmStencil::configure_resilience`]).
+    pub fn configure_resilience(&mut self, cfg: ResilienceConfig) -> Result<()> {
+        self.farm.set_resilience(self.tid, cfg)
+    }
 }
 
 impl Drop for FarmCg {
@@ -1692,20 +2032,46 @@ fn worker_main(sh: &FarmShared) {
                 if g.shutdown {
                     return;
                 }
-                if let Some(t) = claim(&mut g, sh) {
+                let mut next_due: Option<f64> = None;
+                if let Some(t) = claim(&mut g, sh, &mut next_due) {
                     break t;
                 }
-                g = sh.work_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+                g = match next_due {
+                    // a restored tenant is backing off: park with a
+                    // timeout so its replay resumes even if no other
+                    // work arrives to wake us
+                    Some(due) => {
+                        let wait = (due - sh.now()).max(0.0);
+                        sh.work_cv
+                            .wait_timeout(g, Duration::from_secs_f64(wait))
+                            .unwrap_or_else(|p| p.into_inner())
+                            .0
+                    }
+                    None => sh.work_cv.wait(g).unwrap_or_else(|p| p.into_inner()),
+                };
             }
         };
+        // injected stall: sleep outside the scheduler lock, before the
+        // shard runs — peers keep claiming, only this command slows
+        if let Some(FaultKind::Stall(d)) = task.inject {
+            std::thread::sleep(d);
+        }
         // A panic in the numeric shard must not leave the countdown short
         // (that would hang the client's wait): surface it as a command
-        // error instead. Unlike the barrier pools, a panicking shard
+        // failure instead. Unlike the barrier pools, a panicking shard
         // strands nothing — the other shards complete independently.
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
-            task.engine.run_shard(task.phase, task.shard, task.sub, task.track, task.scalar)
+            if matches!(task.inject, Some(FaultKind::Panic)) {
+                panic!("injected fault");
+            }
+            let out =
+                task.engine.run_shard(task.phase, task.shard, task.sub, task.track, task.scalar);
+            if matches!(task.inject, Some(FaultKind::Nan)) {
+                task.engine.poison_shard(task.shard);
+            }
+            out
         }))
-        .map_err(|_| format!("farm worker panicked (phase {}, shard {})", task.phase, task.shard));
+        .map_err(|_| Failure::Panic { phase: task.phase, shard: task.shard, epoch: task.epoch });
         let waker = {
             let mut g = sh.lock();
             complete(&mut g, sh, &task, res)
@@ -1719,18 +2085,28 @@ fn worker_main(sh: &FarmShared) {
 }
 
 /// Claim one shard from the front ready session (round-robin with the
-/// age bound — see module docs). Returns `None` when nothing is ready.
-fn claim(g: &mut FarmState, sh: &FarmShared) -> Option<Task> {
-    loop {
-        let tid = g.ready.pop_front()?;
+/// age bound — see module docs). Returns `None` when nothing is ready;
+/// tenants deferred by a recovery backoff report their earliest resume
+/// time through `next_due` so the caller can park with a timeout.
+fn claim(g: &mut FarmState, sh: &FarmShared, next_due: &mut Option<f64>) -> Option<Task> {
+    // tenants backing off after a restore are stashed aside (order
+    // preserved) instead of claimed — one bounded scan, no rotation spin
+    let mut deferred: Vec<usize> = Vec::new();
+    let mut out = None;
+    while let Some(tid) = g.ready.pop_front() {
         let tick = g.tick;
         let now = sh.now();
-        let (task, more, aged, sample) = {
+        let (mut task, more, aged, sample) = {
             let Some(t) = g.tenants[tid].as_mut() else {
                 continue; // released while queued (defensive)
             };
             if t.next_shard >= t.nshards {
                 continue; // stale entry (defensive)
+            }
+            if t.resume_at > now {
+                *next_due = Some(next_due.map_or(t.resume_at, |d| d.min(t.resume_at)));
+                deferred.push(tid);
+                continue;
             }
             let shard = t.next_shard;
             t.next_shard += 1;
@@ -1754,12 +2130,23 @@ fn claim(g: &mut FarmState, sh: &FarmShared) -> Option<Task> {
                     (EngineKind::Cg(_), P_PUP) => t.beta,
                     _ => 0.0,
                 },
+                epoch: t.epoch,
+                inject: None,
                 engine: t.engine.clone(),
             };
             let more = t.next_shard < t.nshards;
             let aged = tick.saturating_sub(t.enqueue_tick) > FAIRNESS_BOUND;
             (task, more, aged, sample)
         };
+        // fault injection: consult the installed plan under the lock the
+        // claim already holds (one branch when no plan is installed)
+        if let Some(plan) = g.faults.as_mut() {
+            if let Some(k) = plan.claim(tid, task.epoch, task.phase, task.shard) {
+                task.inject = Some(k);
+                sh.faults_injected.fetch_add(1, Ordering::Relaxed);
+                counters::note_faults_injected(1);
+            }
+        }
         g.tick = tick + 1;
         if let Some(wait) = sample {
             g.queue_max = g.queue_max.max(wait);
@@ -1778,8 +2165,14 @@ fn claim(g: &mut FarmState, sh: &FarmShared) -> Option<Task> {
                 g.ready.push_back(tid);
             }
         }
-        return Some(task);
+        out = Some(task);
+        break;
     }
+    // put deferred tenants back at the head, preserving their order
+    for tid in deferred.into_iter().rev() {
+        g.ready.push_front(tid);
+    }
+    out
 }
 
 /// Retire an in-flight command whose farm has shut down, so the tenant
@@ -1903,7 +2296,7 @@ fn complete(
     g: &mut FarmState,
     sh: &FarmShared,
     task: &Task,
-    res: std::result::Result<ShardOut, String>,
+    res: std::result::Result<ShardOut, Failure>,
 ) -> Option<Waker> {
     sh.tasks.fetch_add(1, Ordering::Relaxed);
     counters::note_farm_tasks(1);
@@ -1920,16 +2313,30 @@ fn complete(
                 t.moved += o.moved;
                 t.computed += o.computed;
             }
-            Err(msg) => {
-                if t.error.is_none() {
-                    t.error = Some(msg);
+            Err(f) => {
+                if t.failure.is_none() {
+                    t.failure = Some(f);
                 }
             }
         }
         if t.outstanding > 0 || t.next_shard < t.nshards {
             return None; // phase still in flight
         }
-        let step = if t.error.is_some() { Step::Done } else { transition(t, sh) };
+        let mut step = if t.failure.is_some() { Step::Done } else { transition(t, sh) };
+        // supervised recovery: classify *after* the transition ran — the
+        // transition itself raises failures (non-finite folds), and by
+        // this point the phase is fully drained, so the engine buffers
+        // are exclusively ours to restore
+        if let Some(f) = t.failure.as_ref() {
+            if f.retryable()
+                && !t.zombie
+                && t.attempts < t.res_cfg.retry.max_attempts
+                && t.checkpoint.is_some()
+            {
+                t.attempts += 1;
+                step = Step::Phase(restore_tenant(t, sh));
+            }
+        }
         match step {
             Step::Phase(p) => {
                 t.phase = p;
@@ -1982,7 +2389,21 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
                     t.residual = Some(fold_slots(&e.slots));
                 }
                 t.done_steps += t.sub;
+                t.epoch += 1;
                 sh.epochs.fetch_add(1, Ordering::Relaxed);
+                // non-finite guard: a poisoned slab (injected, or a
+                // genuinely diverged run) fails naming its epoch instead
+                // of silently iterating NaN to max_steps
+                if let Some(res) = t.residual {
+                    if !res.is_finite() {
+                        t.failure = Some(Failure::NonFinite {
+                            what: "residual",
+                            value: res,
+                            epoch: t.epoch,
+                        });
+                        return Step::Done;
+                    }
+                }
                 Step::Phase(P_HALO)
             }
             P_HALO => {
@@ -1995,6 +2416,11 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
                         return Step::Phase(P_FINAL);
                     }
                 }
+                // cadence checkpoint at the epoch boundary: halos freshly
+                // consistent, boundary unions stored — exactly the state
+                // an epoch restart needs (taken before the next segment
+                // dequeues, so a restore re-dequeues like the clean run)
+                maybe_cadence_checkpoint(t, sh);
                 stencil_next_epoch(t, e)
             }
             P_FINAL => Step::Done,
@@ -2004,10 +2430,23 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
             P_SPMV => Step::Phase(P_FIXUP),
             P_FIXUP => {
                 let pap = fold_slots(&e.slots);
+                if !pap.is_finite() {
+                    // NaN contamination (injected poisoning, or genuine
+                    // divergence) — detected before any x/r update of
+                    // this iteration, so a restore replays cleanly
+                    t.failure = Some(Failure::NonFinite {
+                        what: "p·Ap",
+                        value: pap,
+                        epoch: t.epoch,
+                    });
+                    return Step::Done;
+                }
                 if pap <= 0.0 {
                     // detected before any state update of the failing
                     // iteration — the serial/pooled error point
-                    t.error = Some(format!("matrix not positive definite (pAp={pap})"));
+                    t.failure = Some(Failure::Solver(format!(
+                        "matrix not positive definite (pAp={pap})"
+                    )));
                     return Step::Done;
                 }
                 t.alpha = t.rr / pap;
@@ -2015,12 +2454,21 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
             }
             P_XR => {
                 t.rr_next = fold_slots(&e.slots);
+                if !t.rr_next.is_finite() {
+                    t.failure = Some(Failure::NonFinite {
+                        what: "r·r",
+                        value: t.rr_next,
+                        epoch: t.epoch,
+                    });
+                    return Step::Done;
+                }
                 t.beta = t.rr_next / t.rr;
                 Step::Phase(P_PUP)
             }
             P_PUP => {
                 t.rr = t.rr_next;
                 t.iters_done += 1;
+                t.epoch += 1;
                 sh.epochs.fetch_add(1, Ordering::Relaxed);
                 if t.rr <= t.threshold || t.rr <= 0.0 {
                     // convergence retires the whole graph
@@ -2033,11 +2481,16 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
                     match next_graph_segment(t) {
                         Some(seg) => {
                             t.iters_target += seg;
+                            // checkpoint *after* the dequeue: a CG restore
+                            // resumes straight at P_SPMV, so the snapshot
+                            // must carry the post-dequeue schedule
+                            maybe_cadence_checkpoint(t, sh);
                             Step::Phase(P_SPMV)
                         }
                         None => Step::Done,
                     }
                 } else {
+                    maybe_cadence_checkpoint(t, sh);
                     Step::Phase(P_SPMV)
                 }
             }
@@ -2075,6 +2528,186 @@ fn next_graph_segment(t: &mut Tenant) -> Option<usize> {
         return t.graph_segs.pop_front();
     }
     None
+}
+
+// ---------------------------------------------------------------------
+// Resilience: checkpoint, restore, replay
+// ---------------------------------------------------------------------
+
+/// Take a cadence checkpoint when the tenant's lifetime epoch lands on
+/// its configured boundary. The `c.epoch < t.epoch` guard makes the
+/// cadence idempotent per boundary (a snapshot already at this epoch is
+/// never re-copied).
+fn maybe_cadence_checkpoint(t: &mut Tenant, sh: &FarmShared) {
+    let every = t.res_cfg.checkpoint_every;
+    if every > 0
+        && t.epoch % every == 0
+        && t.checkpoint.as_ref().map_or(true, |c| c.epoch < t.epoch)
+    {
+        take_checkpoint(t, sh);
+    }
+}
+
+/// Snapshot the tenant's resident state — numeric buffers, progress
+/// counters, traffic accounting, and the remaining command schedule —
+/// into its checkpoint slot. Called under the scheduler lock at points
+/// where the engine buffers are quiescent: command entry (no command in
+/// flight) and phase transitions (`outstanding == 0` with every shard
+/// dispatched — the claim/complete handshake ordered all shard writes
+/// before this read). No extra barrier or phase is ever added; the copy
+/// rides the transition the countdown already runs.
+fn take_checkpoint(t: &mut Tenant, sh: &FarmShared) {
+    let engine = t.engine.clone();
+    let payload = match &*engine {
+        EngineKind::Stencil(e) => {
+            let mut grid = vec![0.0; e.grid.len()];
+            // SAFETY: buffers quiescent (see above).
+            unsafe { e.grid.read(0..grid.len(), &mut grid) };
+            let slabs = if t.loaded {
+                e.slabs
+                    .iter()
+                    .map(|cell| {
+                        // SAFETY: quiescent — no shard owns any slab now.
+                        let slab = unsafe { &*cell.0.get() };
+                        (slab.cur.clone(), slab.nxt.clone())
+                    })
+                    .collect()
+            } else {
+                // pre-load snapshot: the grid alone is the whole state
+                Vec::new()
+            };
+            CheckpointPayload::Stencil {
+                grid,
+                slabs,
+                done_steps: t.done_steps,
+                residual: t.residual,
+                loaded: t.loaded,
+                moved: t.moved,
+                computed: t.computed,
+                steps_target: t.steps_target,
+                segs: t.graph_segs.iter().copied().collect(),
+                resubmits: t.graph_resubmits,
+            }
+        }
+        EngineKind::Cg(e) => {
+            // SAFETY: buffers quiescent (see above).
+            let (x, r, p) = unsafe {
+                (e.x.whole().to_vec(), e.r.whole().to_vec(), e.p.whole().to_vec())
+            };
+            CheckpointPayload::Cg {
+                x,
+                r,
+                p,
+                rr: t.rr,
+                iters_done: t.iters_done,
+                iters_target: t.iters_target,
+                segs: t.graph_segs.iter().copied().collect(),
+                resubmits: t.graph_resubmits,
+            }
+        }
+    };
+    let ck = Checkpoint::new(t.epoch, payload);
+    t.ckpt_bytes_cmd += ck.bytes;
+    sh.checkpoint_bytes.fetch_add(ck.bytes, Ordering::Relaxed);
+    counters::note_checkpoint_bytes(ck.bytes);
+    t.checkpoint = Some(ck);
+}
+
+/// Restore the tenant's last checkpoint — state bytes, progress and
+/// traffic counters, and the remaining segment schedule — clearing the
+/// failure and accounting the recovery. Returns the phase to resume at.
+/// Called under the scheduler lock with the failed command's phase fully
+/// drained (`outstanding == 0`), so the engine buffers are exclusively
+/// ours; because every reduction folds fixed slots in slot order, the
+/// replay from here is bit-identical to an uninjected run.
+fn restore_tenant(t: &mut Tenant, sh: &FarmShared) -> u8 {
+    let ck = t.checkpoint.take().expect("restore without a checkpoint");
+    let replayed = t.epoch.saturating_sub(ck.epoch);
+    t.failure = None;
+    t.recoveries_cmd += 1;
+    t.replayed_cmd += replayed;
+    sh.recoveries.fetch_add(1, Ordering::Relaxed);
+    sh.replayed_epochs.fetch_add(replayed, Ordering::Relaxed);
+    counters::note_farm_recoveries(1);
+    counters::note_replayed_epochs(replayed);
+    t.epoch = ck.epoch;
+    let backoff = t.res_cfg.retry.backoff;
+    if backoff > Duration::ZERO {
+        // defer this tenant's *claims*, never a worker: the scheduler
+        // skips it (and parks with a timeout) until the farm clock
+        // passes resume_at
+        t.resume_at = sh.now() + backoff.as_secs_f64();
+    }
+    let engine = t.engine.clone();
+    let resume = match (&*engine, &ck.payload) {
+        (
+            EngineKind::Stencil(e),
+            CheckpointPayload::Stencil {
+                grid,
+                slabs,
+                done_steps,
+                residual,
+                loaded,
+                moved,
+                computed,
+                steps_target,
+                segs,
+                resubmits,
+            },
+        ) => {
+            // SAFETY: exclusive access (see above).
+            unsafe {
+                e.grid.write(0, grid);
+                for (cell, (cur, nxt)) in e.slabs.iter().zip(slabs) {
+                    let slab = &mut *cell.0.get();
+                    slab.cur.copy_from_slice(cur);
+                    slab.nxt.copy_from_slice(nxt);
+                }
+            }
+            t.done_steps = *done_steps;
+            t.residual = *residual;
+            t.loaded = *loaded;
+            t.moved = *moved;
+            t.computed = *computed;
+            t.steps_target = *steps_target;
+            t.graph_segs.clear();
+            t.graph_segs.extend(segs.iter().copied());
+            t.graph_resubmits = *resubmits;
+            if !t.loaded {
+                // pre-load snapshot: replay the load itself
+                P_LOAD
+            } else {
+                // re-enter the epoch loop exactly where the snapshot was
+                // taken (re-dequeuing segments like the clean run did)
+                match stencil_next_epoch(t, e) {
+                    Step::Phase(p) => p,
+                    Step::Done => P_FINAL,
+                }
+            }
+        }
+        (
+            EngineKind::Cg(e),
+            CheckpointPayload::Cg { x, r, p, rr, iters_done, iters_target, segs, resubmits },
+        ) => {
+            // SAFETY: exclusive access (see above).
+            unsafe {
+                e.x.whole_mut().copy_from_slice(x);
+                e.r.whole_mut().copy_from_slice(r);
+                e.p.whole_mut().copy_from_slice(p);
+            }
+            t.rr = *rr;
+            t.iters_done = *iters_done;
+            t.iters_target = *iters_target;
+            t.graph_segs.clear();
+            t.graph_segs.extend(segs.iter().copied());
+            t.graph_resubmits = *resubmits;
+            P_SPMV
+        }
+        _ => unreachable!("checkpoint payload kind matches the engine"),
+    };
+    // the same snapshot serves every remaining attempt
+    t.checkpoint = Some(ck);
+    resume
 }
 
 #[cfg(test)]

@@ -1,6 +1,7 @@
 //! Runtime layer: the execution substrates sessions run on, split into a
-//! back-end (where shards compute) and a front-end (how commands get in
-//! and results get out).
+//! back-end (where shards compute), a front-end (how commands get in and
+//! results get out), and a supervision layer (what happens when a shard
+//! fails).
 //!
 //! * [`client`]/[`manifest`]/[`tensor`] — load AOT-compiled HLO artifacts
 //!   (produced once by `python/compile/aot.py`) and execute them on the
@@ -18,17 +19,31 @@
 //!   entire `advance_until` schedule under a single scheduler-lock
 //!   acquisition, and bounded admission control with block/shed/timeout
 //!   backpressure ([`plane::PlaneConfig`], `SolverFarm::spawn_with`).
+//! * [`resilience`] — the supervision layer: epoch-boundary
+//!   checkpointing of resident tenant state (a cheap copy under the
+//!   scheduler lock the completion transition already holds), seeded
+//!   deterministic fault injection ([`resilience::FaultPlan`]: panics,
+//!   NaN poisoning, stalls at exact tenant/epoch/phase/shard
+//!   coordinates, replayable from the `PERKS_FAULT_PLAN` environment
+//!   variable), and supervised recovery ([`resilience::RetryPolicy`]:
+//!   checkpoint-restore + bit-identical replay instead of a command
+//!   error, with a watchdog deadline for stuck commands).
 //!
 //! The split mirrors the paper's host/device boundary: the farm is the
 //! persistent "device" (resident workers, resident tenant state), the
 //! plane is the launch path whose per-command host cost the batching
-//! collapses — and neither side ever changes what a shard computes, so
-//! the farm's bit-identity guarantees survive every front-end mode.
+//! collapses, and the resilience layer is what makes long-resident state
+//! survivable — the blast radius of keeping hours of progress resident
+//! is a panic away from a full re-solve without it. None of the three
+//! ever changes what a shard computes, so the farm's bit-identity
+//! guarantees survive every front-end mode *and* every recovery replay
+//! (which is exactly what makes recovery checkable).
 
 pub mod client;
 pub mod farm;
 pub mod manifest;
 pub mod plane;
+pub mod resilience;
 pub mod tensor;
 
 pub use client::{Executable, Runtime, RuntimeMetrics};
@@ -36,5 +51,9 @@ pub use farm::{FarmHandle, FarmMetrics, SolverFarm};
 pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
 pub use plane::{
     block_on, AdmissionPolicy, CommandGraph, CommandGraphBuilder, LocalExecutor, PlaneConfig,
+};
+pub use resilience::{
+    Checkpoint, FaultKind, FaultPlan, FaultSpec, ResilienceConfig, RetryPolicy,
+    DEFAULT_CHECKPOINT_EVERY,
 };
 pub use tensor::HostTensor;

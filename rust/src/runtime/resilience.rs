@@ -1,0 +1,620 @@
+//! Resident-state resilience: checkpointing, deterministic fault
+//! injection, and supervised recovery for the farm/plane runtime.
+//!
+//! # Why this layer exists
+//!
+//! PERKS' whole premise is moving the time loop *into* a persistent
+//! runtime so solver state stays resident ([`crate::runtime::farm`]) —
+//! which means a single worker panic, NaN contamination, or stuck shard
+//! now destroys hours of resident progress instead of one kernel launch.
+//! Batching an entire `advance_until` schedule into one
+//! [`crate::runtime::plane::CommandGraph`] widens that blast radius
+//! further: the longer the resident schedule, the more there is to lose.
+//! This module is the in-process recovery machinery that closes the gap,
+//! in three pieces:
+//!
+//! 1. **Epoch-boundary checkpointing.** A tenant configured with a
+//!    [`ResilienceConfig::checkpoint_every`] cadence snapshots its
+//!    resident state (stencil: grid + slab pairs + step counters; CG:
+//!    x/r/p + recurrence scalars) into a per-tenant [`Checkpoint`] —
+//!    a cheap copy taken *under the already-held scheduler lock* at the
+//!    existing countdown transition, so no extra barrier or phase is
+//!    ever added. A command-entry checkpoint is taken whenever a
+//!    [`RetryPolicy`] is armed, so recovery is possible at **any**
+//!    epoch, not just past the first cadence boundary.
+//!
+//! 2. **Deterministic fault injection.** A [`FaultPlan`] names exact
+//!    (tenant, epoch, phase, shard) coordinates at which to inject a
+//!    worker panic, NaN poisoning of resident state, or an artificial
+//!    stall. The plan is consulted at task-claim time, under the
+//!    scheduler lock the claim already holds — when no plan is
+//!    installed the entire feature is one `Option` check (zero cost on
+//!    the hot path). Plans are seeded/replayable: build them in code
+//!    ([`FaultSpec`] builders, [`FaultPlan::seeded`]) or from the
+//!    `PERKS_FAULT_PLAN` environment variable so CI can replay any
+//!    failure coordinate verbatim ([`FaultPlan::from_env`]).
+//!
+//! 3. **Supervised recovery.** With a [`RetryPolicy`] armed, a panicked
+//!    or NaN-tripped command no longer errors the session: the farm
+//!    restores the last checkpoint (state bytes *and* traffic
+//!    accounting) and replays the remaining schedule. Because every
+//!    farm reduction folds fixed slots in slot order, the replay is
+//!    **bit-identical** to an uninjected run — the determinism story of
+//!    PRs 2–6 is exactly what makes recovery checkable. Exhausted
+//!    retries (or a disabled policy) surface the structured
+//!    [`crate::Error::Fault`] / non-finite `Error::Solver` instead; a
+//!    blocking wait with a [`ResilienceConfig::deadline`] watchdog
+//!    surfaces [`crate::Error::Stuck`] when a command exceeds it, and
+//!    the stuck command is reaped through the existing zombie path when
+//!    the client releases the tenant.
+//!
+//! Failure classes injectable (and recoverable) here:
+//!
+//! * [`FaultKind::Panic`] — the shard closure panics; caught by the
+//!   worker, surfaced as `Error::Fault { phase, shard, epoch }`.
+//! * [`FaultKind::Nan`] — the shard's resident output is poisoned with
+//!   a NaN after it runs; the non-finite guards on the residual /
+//!   `p·Ap` / `r·r` folds detect it at the next reduction.
+//! * [`FaultKind::Stall`] — the worker sleeps before running the
+//!   shard, exercising the wait-side watchdog deadline.
+//!
+//! The solo pools participate too: [`crate::stencil::pool::StencilPool`]
+//! exposes `checkpoint`/`restore` over the same [`Checkpoint`] type
+//! (its grid is whole-band-stored at every park, so a snapshot between
+//! runs is always consistent). `CgPool` needs no pool-side checkpoint:
+//! its x/r/p state round-trips through the caller on every `run`, so a
+//! caller-side clone of those vectors *is* the checkpoint.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Default checkpoint cadence, in epochs (stencil exchange epochs / CG
+/// iterations). Chosen so the copy cost stays well under the 5%-of-wall
+/// acceptance bar on the bench workloads while bounding replay work.
+pub const DEFAULT_CHECKPOINT_EVERY: u64 = 16;
+
+// ---------------------------------------------------------------------
+// Retry policy + per-tenant config
+// ---------------------------------------------------------------------
+
+/// Supervised-recovery policy: how many times a retryable failure
+/// (injected or real panic, non-finite reduction) restores the last
+/// checkpoint and replays, and how long to back off before each replay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Restore-and-replay attempts per command; 0 disables recovery
+    /// (failures surface immediately as structured errors).
+    pub max_attempts: u32,
+    /// Delay before a restored tenant becomes claimable again. The
+    /// scheduler defers the tenant without blocking any worker; zero
+    /// (the default) replays immediately.
+    pub backoff: Duration,
+}
+
+impl RetryPolicy {
+    /// No recovery: failures surface as errors (the pre-resilience
+    /// behavior, minus the stringly errors).
+    pub const fn disabled() -> Self {
+        Self { max_attempts: 0, backoff: Duration::ZERO }
+    }
+
+    /// Recover up to `max_attempts` times with no backoff.
+    pub const fn attempts(max_attempts: u32) -> Self {
+        Self { max_attempts, backoff: Duration::ZERO }
+    }
+
+    /// Set the replay backoff.
+    pub const fn with_backoff(mut self, backoff: Duration) -> Self {
+        self.backoff = backoff;
+        self
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// Per-tenant resilience knobs, set through
+/// `FarmStencil::configure_resilience` / `FarmCg::configure_resilience`
+/// (or `SessionBuilder::{checkpoint_every, retry, command_deadline}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResilienceConfig {
+    /// Checkpoint the resident state every this many completed epochs
+    /// (stencil exchange epochs / CG iterations); 0 disables cadence
+    /// checkpoints. Independent of `retry`: a command-entry checkpoint
+    /// is always taken when `retry.max_attempts > 0`, so recovery works
+    /// even with the cadence off (it just replays from the command
+    /// boundary).
+    pub checkpoint_every: u64,
+    /// Supervised-recovery policy for retryable failures.
+    pub retry: RetryPolicy,
+    /// Watchdog deadline for the *blocking* wait paths: a command still
+    /// in flight after this long fails the wait with
+    /// [`crate::Error::Stuck`] (phase/epoch context attached). The
+    /// command itself keeps draining; releasing the tenant reaps it as
+    /// a zombie through the farm's existing release path.
+    pub deadline: Option<Duration>,
+}
+
+impl ResilienceConfig {
+    /// Everything off — the zero-overhead default.
+    pub const fn disabled() -> Self {
+        Self { checkpoint_every: 0, retry: RetryPolicy::disabled(), deadline: None }
+    }
+
+    /// Cadence checkpoints at [`DEFAULT_CHECKPOINT_EVERY`], recovery and
+    /// watchdog off — the checkpoint-overhead bench arm.
+    pub const fn checkpointed() -> Self {
+        Self {
+            checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
+            retry: RetryPolicy::disabled(),
+            deadline: None,
+        }
+    }
+
+    /// The production serving shape: default cadence plus recovery with
+    /// `attempts` replays.
+    pub const fn recovering(attempts: u32) -> Self {
+        Self {
+            checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
+            retry: RetryPolicy::attempts(attempts),
+            deadline: None,
+        }
+    }
+
+    /// Set the checkpoint cadence.
+    pub const fn every(mut self, epochs: u64) -> Self {
+        self.checkpoint_every = epochs;
+        self
+    }
+
+    /// Set the retry policy.
+    pub const fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Set the blocking-wait watchdog deadline.
+    pub const fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Any knob armed? (Used by `SessionBuilder` validation: these are
+    /// farm-session knobs, meaningless on solo substrates.)
+    pub fn enabled(&self) -> bool {
+        self.checkpoint_every > 0 || self.retry.max_attempts > 0 || self.deadline.is_some()
+    }
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Checkpoints
+// ---------------------------------------------------------------------
+
+/// A point-in-time snapshot of one tenant's resident state, restorable
+/// bit-for-bit. Construction is internal (the farm and the solo stencil
+/// pool take them); the public surface is the metadata plus restore
+/// entry points on the owning substrate.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Completed-epoch coordinate the snapshot was taken at (stencil
+    /// exchange epochs / CG iterations, counted over the tenant's
+    /// lifetime).
+    pub epoch: u64,
+    /// Payload size in bytes (what `checkpoint_bytes` counters count).
+    pub bytes: u64,
+    pub(crate) payload: CheckpointPayload,
+}
+
+/// The engine-specific bytes of a checkpoint.
+#[derive(Clone, Debug)]
+pub(crate) enum CheckpointPayload {
+    Stencil {
+        grid: Vec<f64>,
+        /// (cur, nxt) per band; empty while the slabs were never loaded
+        /// (a command-entry snapshot before the first `P_LOAD`).
+        slabs: Vec<(Vec<f64>, Vec<f64>)>,
+        done_steps: usize,
+        residual: Option<f64>,
+        loaded: bool,
+        /// Traffic accounting at the snapshot point, restored with the
+        /// state so a recovered run reports the same bytes/cells as a
+        /// clean one.
+        moved: u64,
+        computed: u64,
+        /// Command schedule at the snapshot point: target step count and
+        /// the remaining graph segments (+ resubmit count). Replaying
+        /// with the *same* segment schedule keeps sub-step grouping —
+        /// and hence per-epoch accounting — identical to the clean run.
+        steps_target: usize,
+        segs: Vec<usize>,
+        resubmits: u32,
+    },
+    Cg {
+        x: Vec<f64>,
+        r: Vec<f64>,
+        p: Vec<f64>,
+        rr: f64,
+        iters_done: usize,
+        /// Command schedule at the snapshot point (see the stencil arm).
+        iters_target: usize,
+        segs: Vec<usize>,
+        resubmits: u32,
+    },
+}
+
+impl CheckpointPayload {
+    fn bytes(&self) -> u64 {
+        match self {
+            CheckpointPayload::Stencil { grid, slabs, .. } => {
+                let slab: usize = slabs.iter().map(|(c, n)| c.len() + n.len()).sum();
+                ((grid.len() + slab) * 8) as u64
+            }
+            CheckpointPayload::Cg { x, r, p, .. } => ((x.len() + r.len() + p.len()) * 8) as u64,
+        }
+    }
+}
+
+impl Checkpoint {
+    pub(crate) fn new(epoch: u64, payload: CheckpointPayload) -> Self {
+        let bytes = payload.bytes();
+        Self { epoch, bytes, payload }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------
+
+/// What an injected fault does when its coordinate is claimed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker panics inside the shard closure (caught, surfaced as
+    /// [`crate::Error::Fault`] or recovered under the retry policy).
+    Panic,
+    /// The shard runs normally, then its resident output is poisoned
+    /// with a NaN — detected by the non-finite guards at the next
+    /// residual / `p·Ap` / `r·r` fold.
+    Nan,
+    /// The worker sleeps this long before running the shard, exercising
+    /// the blocking-wait watchdog ([`ResilienceConfig::deadline`]).
+    Stall(Duration),
+}
+
+/// One fault coordinate. `epoch` is always explicit; tenant/phase/shard
+/// default to wildcards so a plan can say "panic whichever shard runs
+/// first in epoch 3" or pin every coordinate for exact CI replay.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Completed-epoch coordinate (the tenant's lifetime epoch counter
+    /// at claim time; CG iterations count as epochs).
+    pub epoch: u64,
+    /// Tenant slot id (admission order in a fresh farm), `None` = any.
+    pub tenant: Option<usize>,
+    /// Phase constant of the target engine (`farm::P_*`), `None` = any.
+    pub phase: Option<u8>,
+    /// Shard index, `None` = any.
+    pub shard: Option<usize>,
+    /// Fired flag: every spec injects exactly once, so a recovered
+    /// replay of the same coordinates runs clean — which is what makes
+    /// the recovered-equals-clean property testable.
+    fired: bool,
+}
+
+impl FaultSpec {
+    /// A worker panic at `epoch` (wildcard tenant/phase/shard).
+    pub fn panic_at(epoch: u64) -> Self {
+        Self { kind: FaultKind::Panic, epoch, tenant: None, phase: None, shard: None, fired: false }
+    }
+
+    /// NaN poisoning at `epoch`.
+    pub fn nan_at(epoch: u64) -> Self {
+        Self { kind: FaultKind::Nan, epoch, tenant: None, phase: None, shard: None, fired: false }
+    }
+
+    /// An artificial stall of `d` at `epoch`.
+    pub fn stall_at(epoch: u64, d: Duration) -> Self {
+        Self {
+            kind: FaultKind::Stall(d),
+            epoch,
+            tenant: None,
+            phase: None,
+            shard: None,
+            fired: false,
+        }
+    }
+
+    /// Pin the tenant slot.
+    pub fn tenant(mut self, tid: usize) -> Self {
+        self.tenant = Some(tid);
+        self
+    }
+
+    /// Pin the phase (`farm::P_*` constants).
+    pub fn phase(mut self, phase: u8) -> Self {
+        self.phase = Some(phase);
+        self
+    }
+
+    /// Pin the shard.
+    pub fn shard(mut self, shard: usize) -> Self {
+        self.shard = Some(shard);
+        self
+    }
+
+    fn matches(&self, tenant: usize, epoch: u64, phase: u8, shard: usize) -> bool {
+        !self.fired
+            && self.epoch == epoch
+            && self.tenant.map_or(true, |t| t == tenant)
+            && self.phase.map_or(true, |p| p == phase)
+            && self.shard.map_or(true, |s| s == shard)
+    }
+}
+
+/// A deterministic injection schedule: a list of [`FaultSpec`]s, each
+/// firing exactly once when its coordinate is claimed. Installed on a
+/// farm with `SolverFarm::install_faults` (or automatically from the
+/// `PERKS_FAULT_PLAN` environment variable at spawn), consulted under
+/// the scheduler lock at task-claim time — no plan, no cost.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one fault coordinate (builder style).
+    pub fn inject(mut self, spec: FaultSpec) -> Self {
+        self.faults.push(spec);
+        self
+    }
+
+    /// Derive one panic-or-NaN fault from a seed, uniformly over
+    /// `epoch < epochs` and `shard < shards` (wildcard tenant/phase) —
+    /// the property-test generator: any seed names a replayable fault.
+    pub fn seeded(seed: u64, epochs: u64, shards: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let epoch = rng.below(epochs.max(1));
+        let shard = rng.index(shards.max(1));
+        let spec = match rng.below(2) {
+            0 => FaultSpec::panic_at(epoch),
+            _ => FaultSpec::nan_at(epoch),
+        };
+        Self::new().inject(spec.shard(shard))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Faults that have not fired yet.
+    pub fn pending(&self) -> usize {
+        self.faults.iter().filter(|f| !f.fired).count()
+    }
+
+    /// Claim the first unfired fault matching the coordinate, marking it
+    /// fired. Called by the farm scheduler under its lock.
+    pub(crate) fn claim(
+        &mut self,
+        tenant: usize,
+        epoch: u64,
+        phase: u8,
+        shard: usize,
+    ) -> Option<FaultKind> {
+        let spec = self.faults.iter_mut().find(|f| f.matches(tenant, epoch, phase, shard))?;
+        spec.fired = true;
+        Some(spec.kind)
+    }
+
+    /// Parse a plan from the `PERKS_FAULT_PLAN` environment variable.
+    /// Returns `None` when unset; a malformed value is reported on
+    /// stderr and ignored (a typo in CI must not change the workload's
+    /// semantics silently — the warning makes it loud).
+    pub fn from_env() -> Option<FaultPlan> {
+        let raw = std::env::var("PERKS_FAULT_PLAN").ok()?;
+        if raw.trim().is_empty() {
+            return None;
+        }
+        match Self::parse(&raw) {
+            Ok(plan) => Some(plan),
+            Err(e) => {
+                eprintln!("PERKS_FAULT_PLAN ignored: {e}");
+                None
+            }
+        }
+    }
+
+    /// Parse the env-variable syntax: `;`-separated entries of
+    /// `kind@key=value,...` where kind is `panic`, `nan` or `stall`
+    /// (stall requires `ms=<millis>`), and keys are `epoch` (required),
+    /// `tenant`, `phase`, `shard`.
+    ///
+    /// ```text
+    /// PERKS_FAULT_PLAN="panic@epoch=2,phase=1,shard=0;nan@epoch=3,tenant=1"
+    /// ```
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for entry in s.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = entry
+                .split_once('@')
+                .ok_or_else(|| Error::Config(format!("fault entry missing '@': {entry:?}")))?;
+            let mut epoch = None;
+            let mut tenant = None;
+            let mut phase = None;
+            let mut shard = None;
+            let mut ms = None;
+            for kv in rest.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| Error::Config(format!("fault key missing '=': {kv:?}")))?;
+                let parse_u64 = |v: &str| {
+                    v.trim()
+                        .parse::<u64>()
+                        .map_err(|_| Error::Config(format!("bad fault value {v:?} for {k:?}")))
+                };
+                match k.trim() {
+                    "epoch" => epoch = Some(parse_u64(v)?),
+                    "tenant" => tenant = Some(parse_u64(v)? as usize),
+                    "phase" => phase = Some(parse_u64(v)? as u8),
+                    "shard" => shard = Some(parse_u64(v)? as usize),
+                    "ms" => ms = Some(parse_u64(v)?),
+                    other => {
+                        return Err(Error::Config(format!("unknown fault key {other:?}")));
+                    }
+                }
+            }
+            let epoch =
+                epoch.ok_or_else(|| Error::Config(format!("fault entry needs epoch=: {entry:?}")))?;
+            let kind = match kind.trim() {
+                "panic" => FaultKind::Panic,
+                "nan" => FaultKind::Nan,
+                "stall" => FaultKind::Stall(Duration::from_millis(ms.ok_or_else(|| {
+                    Error::Config(format!("stall entry needs ms=: {entry:?}"))
+                })?)),
+                other => return Err(Error::Config(format!("unknown fault kind {other:?}"))),
+            };
+            plan.faults.push(FaultSpec { kind, epoch, tenant, phase, shard, fired: false });
+        }
+        if plan.is_empty() {
+            return Err(Error::Config("fault plan has no entries".into()));
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_kind_and_key() {
+        let plan =
+            FaultPlan::parse("panic@epoch=2,phase=1,shard=0; nan@epoch=3,tenant=1; stall@epoch=0,ms=25")
+                .unwrap();
+        assert_eq!(plan.len(), 3);
+        let f = &plan.faults[0];
+        assert_eq!(f.kind, FaultKind::Panic);
+        assert_eq!((f.epoch, f.phase, f.shard, f.tenant), (2, Some(1), Some(0), None));
+        let f = &plan.faults[1];
+        assert_eq!(f.kind, FaultKind::Nan);
+        assert_eq!((f.epoch, f.tenant), (3, Some(1)));
+        assert_eq!(plan.faults[2].kind, FaultKind::Stall(Duration::from_millis(25)));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "panic",                 // no coordinates
+            "panic@phase=1",         // missing epoch
+            "stall@epoch=1",         // stall without ms
+            "meteor@epoch=1",        // unknown kind
+            "panic@epoch=x",         // bad number
+            "panic@epoch=1,zz=2",    // unknown key
+            "panic@epoch",           // key without value
+            "",                      // empty plan
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn claim_matches_wildcards_and_fires_once() {
+        let mut plan = FaultPlan::new()
+            .inject(FaultSpec::panic_at(2).tenant(1).phase(1).shard(0))
+            .inject(FaultSpec::nan_at(3));
+        // wrong coordinates never fire
+        assert!(plan.claim(0, 2, 1, 0).is_none(), "wrong tenant");
+        assert!(plan.claim(1, 1, 1, 0).is_none(), "wrong epoch");
+        assert!(plan.claim(1, 2, 0, 0).is_none(), "wrong phase");
+        assert!(plan.claim(1, 2, 1, 1).is_none(), "wrong shard");
+        assert_eq!(plan.pending(), 2);
+        // exact match fires exactly once
+        assert_eq!(plan.claim(1, 2, 1, 0), Some(FaultKind::Panic));
+        assert!(plan.claim(1, 2, 1, 0).is_none(), "specs fire once");
+        // wildcard entry matches any tenant/phase/shard at its epoch
+        assert_eq!(plan.claim(7, 3, 2, 5), Some(FaultKind::Nan));
+        assert_eq!(plan.pending(), 0);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_in_range() {
+        let a = FaultPlan::seeded(42, 8, 4);
+        let b = FaultPlan::seeded(42, 8, 4);
+        assert_eq!(a.faults[0].epoch, b.faults[0].epoch);
+        assert_eq!(a.faults[0].shard, b.faults[0].shard);
+        assert_eq!(a.faults[0].kind, b.faults[0].kind);
+        for seed in 0..64u64 {
+            let p = FaultPlan::seeded(seed, 8, 4);
+            assert!(p.faults[0].epoch < 8);
+            assert!(p.faults[0].shard.unwrap() < 4);
+            assert!(matches!(p.faults[0].kind, FaultKind::Panic | FaultKind::Nan));
+        }
+    }
+
+    #[test]
+    fn retry_policy_and_config_defaults_are_disabled() {
+        assert_eq!(RetryPolicy::default(), RetryPolicy::disabled());
+        assert!(!ResilienceConfig::default().enabled());
+        assert!(ResilienceConfig::checkpointed().enabled());
+        let cfg = ResilienceConfig::recovering(3);
+        assert_eq!(cfg.checkpoint_every, DEFAULT_CHECKPOINT_EVERY);
+        assert_eq!(cfg.retry.max_attempts, 3);
+        assert!(cfg.enabled());
+        let cfg = cfg.every(4).with_deadline(Duration::from_millis(50));
+        assert_eq!(cfg.checkpoint_every, 4);
+        assert_eq!(cfg.deadline, Some(Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn checkpoint_bytes_account_the_payload() {
+        let ck = Checkpoint::new(
+            5,
+            CheckpointPayload::Cg {
+                x: vec![0.0; 10],
+                r: vec![0.0; 10],
+                p: vec![0.0; 10],
+                rr: 1.0,
+                iters_done: 5,
+                iters_target: 20,
+                segs: Vec::new(),
+                resubmits: 0,
+            },
+        );
+        assert_eq!(ck.epoch, 5);
+        assert_eq!(ck.bytes, 240);
+        let ck = Checkpoint::new(
+            2,
+            CheckpointPayload::Stencil {
+                grid: vec![0.0; 100],
+                slabs: vec![(vec![0.0; 20], vec![0.0; 20]); 2],
+                done_steps: 2,
+                residual: None,
+                loaded: true,
+                moved: 0,
+                computed: 0,
+                steps_target: 8,
+                segs: vec![2, 2],
+                resubmits: 0,
+            },
+        );
+        assert_eq!(ck.bytes, (100 + 80) * 8);
+    }
+}

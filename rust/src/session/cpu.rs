@@ -12,6 +12,7 @@ use crate::coordinator::executor::ExecMode;
 use crate::error::{Error, Result};
 use crate::runtime::farm::{FarmCg, FarmHandle, FarmStencil};
 use crate::runtime::plane::graph::CommandGraph;
+use crate::runtime::resilience::ResilienceConfig;
 use crate::session::{Report, Solver};
 use crate::sparse::csr::Csr;
 use crate::sparse::gen;
@@ -46,6 +47,10 @@ pub struct StencilOptions {
     /// `batch_epochs * bt`-step segments enqueued under a single
     /// scheduler-lock acquisition. Bit-identical either way.
     pub batch_epochs: usize,
+    /// Supervision config applied to the admitted tenant on the farm
+    /// path (checkpoint cadence / retry policy / watchdog deadline);
+    /// disabled by default and ignored off-farm.
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for StencilOptions {
@@ -57,13 +62,22 @@ impl Default for StencilOptions {
             temporal: 1,
             farm: None,
             batch_epochs: 0,
+            resilience: ResilienceConfig::disabled(),
         }
     }
 }
 
 impl StencilOptions {
     pub fn new(threads: usize, mode: ExecMode, seed: u64) -> Self {
-        Self { threads, mode, seed, temporal: 1, farm: None, batch_epochs: 0 }
+        Self {
+            threads,
+            mode,
+            seed,
+            temporal: 1,
+            farm: None,
+            batch_epochs: 0,
+            resilience: ResilienceConfig::disabled(),
+        }
     }
 
     /// Set the temporal-blocking degree `bt` (see [`StencilOptions::temporal`]).
@@ -81,6 +95,12 @@ impl StencilOptions {
     /// Set the batched-graph granularity (see [`StencilOptions::batch_epochs`]).
     pub fn batch_epochs(mut self, epochs: usize) -> Self {
         self.batch_epochs = epochs;
+        self
+    }
+
+    /// Set the supervision config (see [`StencilOptions::resilience`]).
+    pub fn resilience(mut self, cfg: ResilienceConfig) -> Self {
+        self.resilience = cfg;
         self
     }
 }
@@ -137,6 +157,12 @@ pub struct CpuStencil {
     plane_batches: u64,
     plane_sheds: u64,
     plane_timeouts: u64,
+    /// Supervision config applied to the admitted tenant (farm only).
+    resilience: ResilienceConfig,
+    /// Recovery telemetry since `prepare` (farm-backed only).
+    recoveries: u64,
+    replayed_epochs: u64,
+    checkpoint_bytes: u64,
 }
 
 impl CpuStencil {
@@ -166,6 +192,11 @@ impl CpuStencil {
                 "batched command graphs (batch_epochs > 0) require a farm",
             ));
         }
+        if opts.resilience.enabled() && opts.farm.is_none() {
+            return Err(Error::invalid(
+                "resilience (checkpoint/retry/deadline) requires a farm",
+            ));
+        }
         let x0 = crate::session::stencil_domain(&spec, dims, opts.seed, init)?;
         Ok(Self {
             spec,
@@ -190,6 +221,10 @@ impl CpuStencil {
             plane_batches: 0,
             plane_sheds: 0,
             plane_timeouts: 0,
+            resilience: opts.resilience,
+            recoveries: 0,
+            replayed_epochs: 0,
+            checkpoint_bytes: 0,
         })
     }
 
@@ -224,12 +259,12 @@ impl CpuStencil {
                     // resident workers — zero thread spawns, slabs stay
                     // resident in the admitted tenant between commands
                     if self.farm_session.is_none() {
-                        self.farm_session = Some(farm.admit_stencil(
-                            &self.spec,
-                            &self.x0,
-                            self.threads,
-                            self.bt,
-                        )?);
+                        let mut tenant =
+                            farm.admit_stencil(&self.spec, &self.x0, self.threads, self.bt)?;
+                        if self.resilience.enabled() {
+                            tenant.configure_resilience(self.resilience)?;
+                        }
+                        self.farm_session = Some(tenant);
                     }
                     let tenant = self.farm_session.as_mut().expect("admitted above");
                     let t0 = std::time::Instant::now();
@@ -269,6 +304,9 @@ impl CpuStencil {
                     self.useful_cells +=
                         (self.x0.interior_cells() * run.steps) as u64;
                     self.queue_wait_seconds += run.queue_wait_seconds;
+                    self.recoveries += run.recoveries;
+                    self.replayed_epochs += run.replayed_epochs;
+                    self.checkpoint_bytes += run.checkpoint_bytes;
                     if run.residual.is_some() {
                         self.residual = run.residual;
                     }
@@ -354,8 +392,12 @@ impl Solver for CpuStencil {
             if let Some(farm) = &self.farm {
                 // multi-tenant admission: registers resident state on the
                 // farm's spawn-once workers — zero thread spawns
-                self.farm_session =
-                    Some(farm.admit_stencil(&self.spec, &self.x0, self.threads, self.bt)?);
+                let mut tenant =
+                    farm.admit_stencil(&self.spec, &self.x0, self.threads, self.bt)?;
+                if self.resilience.enabled() {
+                    tenant.configure_resilience(self.resilience)?;
+                }
+                self.farm_session = Some(tenant);
             } else {
                 // spawn-once worker pool: the only thread creation of the
                 // whole solve; every subsequent `advance` is spawn-free
@@ -381,6 +423,9 @@ impl Solver for CpuStencil {
         self.plane_batches = 0;
         self.plane_sheds = 0;
         self.plane_timeouts = 0;
+        self.recoveries = 0;
+        self.replayed_epochs = 0;
+        self.checkpoint_bytes = 0;
         Ok(())
     }
 
@@ -419,6 +464,9 @@ impl Solver for CpuStencil {
             rep.plane_batches = Some(self.plane_batches);
             rep.plane_sheds = Some(self.plane_sheds);
             rep.plane_timeouts = Some(self.plane_timeouts);
+            rep.recoveries = Some(self.recoveries);
+            rep.replayed_epochs = Some(self.replayed_epochs);
+            rep.checkpoint_bytes = Some(self.checkpoint_bytes);
         }
         rep
     }
@@ -476,6 +524,12 @@ pub struct CpuCg {
     plane_batches: u64,
     plane_sheds: u64,
     plane_timeouts: u64,
+    /// Supervision config applied to the admitted tenant (farm only).
+    resilience: ResilienceConfig,
+    /// Recovery telemetry since `prepare` (farm-backed only).
+    recoveries: u64,
+    replayed_epochs: u64,
+    checkpoint_bytes: u64,
     x: Vec<f64>,
     r: Vec<f64>,
     p: Vec<f64>,
@@ -551,6 +605,10 @@ impl CpuCg {
             plane_batches: 0,
             plane_sheds: 0,
             plane_timeouts: 0,
+            resilience: ResilienceConfig::disabled(),
+            recoveries: 0,
+            replayed_epochs: 0,
+            checkpoint_bytes: 0,
             x: vec![0.0; n],
             r: vec![0.0; n],
             p: vec![0.0; n],
@@ -575,6 +633,14 @@ impl CpuCg {
     /// path only; 0 = monolithic commands).
     pub(crate) fn with_batch_iters(mut self, iters: usize) -> Self {
         self.batch_iters = iters;
+        self
+    }
+
+    /// Set the supervision config (checkpoint cadence / retry policy /
+    /// watchdog deadline) applied to the admitted tenant (farm path
+    /// only; set before `prepare`).
+    pub(crate) fn with_resilience(mut self, cfg: ResilienceConfig) -> Self {
+        self.resilience = cfg;
         self
     }
 
@@ -627,6 +693,14 @@ impl CpuCg {
         for &(s, l) in &self.blocks {
             pap += crate::cg::block_partial(s, l, |i| self.p[i] * self.ap[i]);
         }
+        if !pap.is_finite() {
+            // fail before alpha spreads the poison into x/r — the caller
+            // can restore a checkpoint and replay from clean iterates
+            return Err(Error::Solver(format!(
+                "non-finite p·Ap ({pap}) at iteration {}",
+                self.iters + 1
+            )));
+        }
         if pap <= 0.0 {
             return Err(Error::Solver(format!(
                 "matrix not positive definite (pAp={pap})"
@@ -642,6 +716,12 @@ impl CpuCg {
                 r[i] = ri;
                 ri * ri
             });
+        }
+        if !rr_new.is_finite() {
+            return Err(Error::Solver(format!(
+                "non-finite r·r ({rr_new}) at iteration {}",
+                self.iters + 1
+            )));
         }
         let beta = rr_new / self.rr;
         for i in 0..self.p.len() {
@@ -695,6 +775,9 @@ impl CpuCg {
             self.rr = run.rr;
             self.iters += run.iters;
             self.queue_wait_seconds += run.queue_wait_seconds;
+            self.recoveries += run.recoveries;
+            self.replayed_epochs += run.replayed_epochs;
+            self.checkpoint_bytes += run.checkpoint_bytes;
             done = run.iters;
             if let Some(msg) = run.error {
                 failure = Some(Error::Solver(msg));
@@ -760,7 +843,11 @@ impl Solver for CpuCg {
             if let Some(farm) = &self.farm {
                 // multi-tenant admission: resident vectors registered on
                 // the farm's spawn-once workers — zero thread spawns
-                self.farm_session = Some(farm.admit_cg(self.a.clone(), self.plan.clone())?);
+                let mut tenant = farm.admit_cg(self.a.clone(), self.plan.clone())?;
+                if self.resilience.enabled() {
+                    tenant.configure_resilience(self.resilience)?;
+                }
+                self.farm_session = Some(tenant);
             } else if self.threaded {
                 // spawn-once worker pool: the only thread creation of the
                 // whole solve; every subsequent `advance` is spawn-free
@@ -778,6 +865,9 @@ impl Solver for CpuCg {
         self.plane_batches = 0;
         self.plane_sheds = 0;
         self.plane_timeouts = 0;
+        self.recoveries = 0;
+        self.replayed_epochs = 0;
+        self.checkpoint_bytes = 0;
         Ok(())
     }
 
@@ -806,6 +896,9 @@ impl Solver for CpuCg {
             rep.plane_batches = Some(self.plane_batches);
             rep.plane_sheds = Some(self.plane_sheds);
             rep.plane_timeouts = Some(self.plane_timeouts);
+            rep.recoveries = Some(self.recoveries);
+            rep.replayed_epochs = Some(self.replayed_epochs);
+            rep.checkpoint_bytes = Some(self.checkpoint_bytes);
         }
         rep
     }

@@ -73,6 +73,17 @@
 //! count. [`Report::queue_wait_seconds`] surfaces the per-session queue
 //! latency; farm-level throughput/latency/fairness live in
 //! [`crate::runtime::farm::FarmMetrics`]. Solo pools remain the default.
+//!
+//! Farm sessions can additionally opt into the supervision layer
+//! (`runtime::resilience`): [`SessionBuilder::checkpoint_every`] sets the
+//! epoch cadence at which the farm snapshots the session's resident
+//! state, [`SessionBuilder::retry`] makes retryable failures (a panicked
+//! shard, an injected fault, a NaN-tripped reduction) restore the last
+//! checkpoint and replay bit-identically instead of erroring the
+//! command, and [`SessionBuilder::command_deadline`] arms a watchdog
+//! that fails blocking waits with `Error::Stuck` instead of hanging.
+//! [`Report::recoveries`] / [`Report::replayed_epochs`] /
+//! [`Report::checkpoint_bytes`] surface what the supervision did.
 
 pub mod cpu;
 pub mod pjrt;
@@ -85,6 +96,7 @@ use crate::coordinator::autotune;
 pub use crate::coordinator::executor::ExecMode;
 use crate::error::{Error, Result};
 use crate::runtime::farm::{FarmHandle, SolverFarm};
+use crate::runtime::resilience::{ResilienceConfig, RetryPolicy};
 use crate::runtime::Runtime;
 use crate::simgpu::device::DeviceSpec;
 use crate::sparse::csr::Csr;
@@ -247,6 +259,9 @@ pub struct SessionBuilder {
     /// graph segment for stencils, iterations per segment for CG);
     /// `0` = monolithic commands (default).
     batch_epochs: usize,
+    /// Supervision config on the farm path: checkpoint cadence, retry
+    /// policy, watchdog deadline. Disabled (all zero) by default.
+    resilience: ResilienceConfig,
 }
 
 impl Default for SessionBuilder {
@@ -268,6 +283,7 @@ impl SessionBuilder {
             init: None,
             farm: None,
             batch_epochs: 0,
+            resilience: ResilienceConfig::disabled(),
         }
     }
 
@@ -345,6 +361,60 @@ impl SessionBuilder {
     /// submits monolithic commands. Requires [`SessionBuilder::farm`].
     pub fn batch_epochs(mut self, epochs: usize) -> Self {
         self.batch_epochs = epochs;
+        self
+    }
+
+    /// Checkpoint cadence on the farm path: every `epochs` exchange
+    /// epochs (stencil) or iterations (CG) the farm snapshots this
+    /// session's resident state — slabs/vectors plus progress and
+    /// traffic counters — into a restorable
+    /// [`crate::runtime::resilience::Checkpoint`]. The copy happens
+    /// inside the completion transition, under the scheduler lock the
+    /// transition already holds, so it adds **no barriers**; its cost is
+    /// the memcpy, bounded by the `< 5%` overhead gate in
+    /// `BENCH_resilience.json`. `runtime::resilience::
+    /// DEFAULT_CHECKPOINT_EVERY` (16) is the gated default; `0` disables
+    /// cadence snapshots (a [`SessionBuilder::retry`] policy still takes
+    /// one snapshot at each command entry). Requires
+    /// [`SessionBuilder::farm`]. Accounted in
+    /// [`Report::checkpoint_bytes`].
+    pub fn checkpoint_every(mut self, epochs: u64) -> Self {
+        self.resilience.checkpoint_every = epochs;
+        self
+    }
+
+    /// Supervised recovery on the farm path: when a retryable failure
+    /// hits this session's command — a worker panic (injected or real),
+    /// a non-finite reduction — the farm restores the session's last
+    /// checkpoint and replays the lost epochs instead of erroring the
+    /// command, up to `policy.max_attempts` times per command (with
+    /// `policy.backoff` between attempts). Replays are **bit-identical**
+    /// to an uninjected run: shard math is deterministic and the restore
+    /// rewinds state, schedule, and traffic accounting together.
+    /// [`Report::recoveries`] / [`Report::replayed_epochs`] count what
+    /// happened; `RetryPolicy::disabled()` (the default) surfaces
+    /// `Error::Fault` instead. Requires [`SessionBuilder::farm`].
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.resilience.retry = policy;
+        self
+    }
+
+    /// Watchdog deadline for this session's blocking waits on the farm
+    /// path: a `wait()` whose command is still in flight after `d`
+    /// returns `Error::Stuck { phase, epoch, waited_ms }` instead of
+    /// blocking forever (the command keeps draining; releasing the
+    /// session reaps it). Off by default. Requires
+    /// [`SessionBuilder::farm`].
+    pub fn command_deadline(mut self, d: std::time::Duration) -> Self {
+        self.resilience.deadline = Some(d);
+        self
+    }
+
+    /// Set the whole supervision config at once (see
+    /// [`SessionBuilder::checkpoint_every`], [`SessionBuilder::retry`],
+    /// [`SessionBuilder::command_deadline`] for the individual knobs).
+    pub fn resilience(mut self, cfg: ResilienceConfig) -> Self {
+        self.resilience = cfg;
         self
     }
 
@@ -436,6 +506,12 @@ impl SessionBuilder {
                 "batched command graphs (batch_epochs > 0) require a farm session",
             ));
         }
+        if self.resilience.enabled() && self.farm.is_none() {
+            return Err(Error::invalid(
+                "resilience (checkpoint_every / retry / command_deadline) requires \
+                 a farm session",
+            ));
+        }
         // resolve the CPU thread count before any mode probing. Farm
         // sessions skip the *measured* autotune: a probe would build solo
         // pools (thread spawns) for a session whose whole point is to
@@ -463,6 +539,7 @@ impl SessionBuilder {
                 self.init.as_deref(),
                 Some(farm),
                 self.batch_epochs,
+                self.resilience,
             )?;
             solver.prepare()?;
             return Ok(Session {
@@ -511,6 +588,7 @@ impl SessionBuilder {
                         self.init.as_deref(),
                         None,
                         0,
+                        ResilienceConfig::disabled(),
                     )?;
                     probe.prepare()?;
                     // probe at steady-state depth (chunk-aligned): the
@@ -571,6 +649,7 @@ impl SessionBuilder {
             self.init.as_deref(),
             None,
             0,
+            ResilienceConfig::disabled(),
         )?;
         solver.prepare()?;
         Ok(Session { solver, mode, temporal, backend_name: backend.name() })
@@ -865,6 +944,7 @@ fn make_solver(
     init: Option<&[f64]>,
     farm: Option<FarmHandle>,
     batch_epochs: usize,
+    resilience: ResilienceConfig,
 ) -> Result<Box<dyn Solver>> {
     match (backend, workload) {
         (Backend::Pjrt(rt), Workload::Stencil { bench, interior, dtype }) => Ok(Box::new(
@@ -878,13 +958,21 @@ fn make_solver(
         }
         (Backend::CpuPersistent { threads }, Workload::Stencil { bench, interior, .. }) => {
             let dims = parse_interior(interior)?;
-            let opts = cpu::StencilOptions { threads: *threads, mode, seed, temporal, farm, batch_epochs };
+            let opts = cpu::StencilOptions {
+                threads: *threads,
+                mode,
+                seed,
+                temporal,
+                farm,
+                batch_epochs,
+                resilience,
+            };
             Ok(Box::new(cpu::CpuStencil::new(bench, &dims, &opts, init)?))
         }
         (Backend::CpuPersistent { threads }, Workload::Cg { n }) => {
             let mut s = cpu::CpuCg::poisson(*n, seed, cg_parts, *threads, cg_threaded, mode)?;
             if let Some(h) = farm {
-                s = s.with_farm(h).with_batch_iters(batch_epochs);
+                s = s.with_farm(h).with_batch_iters(batch_epochs).with_resilience(resilience);
             }
             Ok(Box::new(s))
         }
@@ -892,7 +980,7 @@ fn make_solver(
             let mut s =
                 cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, *threads, cg_threaded, mode)?;
             if let Some(h) = farm {
-                s = s.with_farm(h).with_batch_iters(batch_epochs);
+                s = s.with_farm(h).with_batch_iters(batch_epochs).with_resilience(resilience);
             }
             Ok(Box::new(s))
         }
@@ -1142,6 +1230,46 @@ mod tests {
             .unwrap();
         assert_eq!(s.mode(), ExecMode::Persistent);
         assert_eq!(s.temporal_degree(), 2);
+    }
+
+    #[test]
+    fn resilience_knobs_require_a_farm_session() {
+        // each knob alone trips the validation off-farm
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+                .retry(RetryPolicy::attempts(2))
+                .build()
+        )
+        .contains("farm"));
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::cg(64))
+                .checkpoint_every(8)
+                .build()
+        )
+        .contains("farm"));
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+                .command_deadline(std::time::Duration::from_secs(5))
+                .build()
+        )
+        .contains("farm"));
+        // on a farm the knobs build (and a disabled config is always fine)
+        let farm = SolverFarm::spawn(1).unwrap();
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(1))
+            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            .farm(&farm)
+            .checkpoint_every(4)
+            .retry(RetryPolicy::attempts(2))
+            .build()
+            .unwrap();
+        assert_eq!(s.mode(), ExecMode::Persistent);
     }
 
     #[test]

@@ -55,6 +55,18 @@ pub struct Report {
     /// Submissions of this session that timed out waiting for a plane
     /// slot (`Timeout` admission policy). Farm-backed only.
     pub plane_timeouts: Option<u64>,
+    /// Supervised recoveries this session's commands went through
+    /// (checkpoint-restore replays under
+    /// `runtime::resilience::RetryPolicy`). Farm-backed sessions only;
+    /// `None` on solo substrates. Clean runs report `Some(0)`.
+    pub recoveries: Option<u64>,
+    /// Epochs/iterations re-executed by those recovery replays (the
+    /// work between the restored checkpoint and the failure point).
+    /// Farm-backed only.
+    pub replayed_epochs: Option<u64>,
+    /// Bytes copied into resident-state checkpoints on behalf of this
+    /// session (cadence + command-entry snapshots). Farm-backed only.
+    pub checkpoint_bytes: Option<u64>,
 }
 
 impl Report {
@@ -87,6 +99,9 @@ impl Report {
             plane_batches: None,
             plane_sheds: None,
             plane_timeouts: None,
+            recoveries: None,
+            replayed_epochs: None,
+            checkpoint_bytes: None,
         }
     }
 }

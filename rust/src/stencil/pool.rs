@@ -92,12 +92,31 @@
 //! checked on every condvar wake — never a value raced through the
 //! command slot — so `drop`'s join cannot hang on a worker parked while
 //! the epoch stamp advances.
+//!
+//! # Checkpoint / restore
+//!
+//! The solo pool participates in the resilience layer
+//! (`runtime::resilience`) with the same [`Checkpoint`] type the farm
+//! uses: every run ends with a whole-band store, so between runs the
+//! shared grid alone *is* the resident state, and
+//! [`StencilPool::checkpoint`] snapshots it (grid-only payload — no slab
+//! copies needed). [`StencilPool::restore`] rewrites the grid and bumps a
+//! reload generation that forces every worker's resident slab pair to
+//! reload from the restored grid on its next run, so a restored replay
+//! walks the same bits as the original. Tracked runs additionally guard
+//! the residual fold: a non-finite norm (NaN/Inf state) fails the run
+//! with `Error::Solver` naming the step and epoch instead of silently
+//! iterating poisoned state to the step cap — and because the fold is
+//! replicated identically on every worker, the failure break is as
+//! collective as a tolerance stop.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::coordinator::barrier::GridBarrier;
 use crate::error::{Error, Result};
+use crate::runtime::resilience::{Checkpoint, CheckpointPayload};
 use crate::stencil::grid::Domain;
 use crate::stencil::parallel::{
     bands_for, boundary_union_planes, plans, slab_delta_partials, SharedGrid, ThreadPlan,
@@ -179,6 +198,11 @@ struct Shared {
     grid: SharedGrid,
     barrier: GridBarrier,
     ctl: Control,
+    /// Slab-reload generation: bumped by [`StencilPool::restore`] after
+    /// rewriting the grid. Workers compare it against a local copy at
+    /// the top of every run and drop their `loaded` flag on a mismatch,
+    /// so stale resident slabs are re-read from the restored grid.
+    reload: AtomicU64,
 }
 
 /// Result of one [`StencilPool::run`].
@@ -216,6 +240,9 @@ pub struct StencilPool {
     handles: Vec<JoinHandle<()>>,
     workers: usize,
     spawned: u64,
+    /// Time steps completed over the pool's lifetime — the epoch
+    /// coordinate stamped on [`StencilPool::checkpoint`] snapshots.
+    advanced: u64,
 }
 
 impl StencilPool {
@@ -280,6 +307,7 @@ impl StencilPool {
                 cmd_cv: Condvar::new(),
                 done_cv: Condvar::new(),
             },
+            reload: AtomicU64::new(0),
         });
         counters::note_thread_spawns(workers as u64);
         let mut handles = Vec::with_capacity(workers);
@@ -308,7 +336,7 @@ impl StencilPool {
                 }
             }
         }
-        Ok(Self { shared, handles, workers, spawned: workers as u64 })
+        Ok(Self { shared, handles, workers, spawned: workers as u64, advanced: 0 })
     }
 
     /// Resident worker count (threads clamped to the band count).
@@ -381,6 +409,7 @@ impl StencilPool {
         if let Some(msg) = outcome.error {
             return Err(Error::Solver(msg));
         }
+        self.advanced += outcome.steps as u64;
         Ok(StencilRun {
             steps: outcome.steps,
             residual: outcome.residual,
@@ -405,6 +434,62 @@ impl StencilPool {
         let mut d = self.shared.meta.clone();
         d.data = self.state();
         d
+    }
+
+    /// Snapshot the pool's resident state into a restorable
+    /// [`Checkpoint`], stamped with the lifetime step count. Callable
+    /// only between runs (same contract as [`StencilPool::state`]). The
+    /// payload is grid-only: every run ends with a whole-band store, so
+    /// the shared grid already holds everything the workers' slabs do —
+    /// no per-band copies needed. Snapshot traffic is accounted in
+    /// `util::counters::checkpoint_bytes`.
+    pub fn checkpoint(&self) -> Checkpoint {
+        let ck = Checkpoint::new(
+            self.advanced,
+            CheckpointPayload::Stencil {
+                grid: self.state(),
+                slabs: Vec::new(),
+                done_steps: 0,
+                residual: None,
+                loaded: false,
+                moved: 0,
+                computed: 0,
+                steps_target: 0,
+                segs: Vec::new(),
+                resubmits: 0,
+            },
+        );
+        counters::note_checkpoint_bytes(ck.bytes);
+        ck
+    }
+
+    /// Restore a [`StencilPool::checkpoint`] snapshot: rewrite the
+    /// shared grid and invalidate every worker's resident slab pair (a
+    /// reload-generation bump — the next run's first epoch re-reads the
+    /// slabs from the restored grid, paying one initial-load sync like a
+    /// first run). A subsequent `run` replays bit-identically to the
+    /// original post-checkpoint run. Rejects checkpoints from a
+    /// different engine or geometry.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        let CheckpointPayload::Stencil { grid, .. } = &ck.payload else {
+            return Err(Error::invalid("checkpoint does not hold stencil state"));
+        };
+        if grid.len() != self.shared.grid.len() {
+            return Err(Error::invalid(format!(
+                "checkpoint grid has {} cells, pool expects {}",
+                grid.len(),
+                self.shared.grid.len()
+            )));
+        }
+        // SAFETY: pool idle between runs (the completion handshake of
+        // the previous run happened-before this call) — no concurrent
+        // accessor, exactly as in `state`.
+        unsafe { self.shared.grid.write(0, grid) };
+        // order the grid rewrite before the generation becomes visible
+        // to a worker's Acquire load at its next run
+        self.shared.reload.fetch_add(1, Ordering::Release);
+        self.advanced = ck.epoch;
+        Ok(())
     }
 
     /// Shut the workers down and join them, leaving the grid readable:
@@ -453,6 +538,7 @@ fn worker_main(sh: &Shared, w: usize) {
     let deltas =
         crate::stencil::gold::linear_deltas(&sh.spec, sh.meta.padded[1], sh.meta.padded[2]);
     let mut loaded = false;
+    let mut reload_seen = 0u64;
 
     let mut seen = 0u64;
     loop {
@@ -476,6 +562,14 @@ fn worker_main(sh: &Shared, w: usize) {
         match cmd {
             Cmd::Idle => {}
             Cmd::Run { steps, tol } => {
+                // a restore since the last run rewrote the shared grid:
+                // drop the resident slabs and reload them (the Acquire
+                // pairs with restore's Release, ordering the grid bytes)
+                let gen = sh.reload.load(Ordering::Acquire);
+                if gen != reload_seen {
+                    reload_seen = gen;
+                    loaded = false;
+                }
                 // A panic inside the resident loop would otherwise leave
                 // `finished` forever short and hang `run()`. Catching it
                 // lets a *collective* panic (all workers fail at the same
@@ -553,6 +647,7 @@ fn run_steps(
 
     let mut done = 0usize;
     let mut residual = None;
+    let mut error = None;
     while done < steps {
         // a trailing partial epoch advances fewer sub-steps; the slab's
         // bt*r halo depth covers any sub <= bt
@@ -638,6 +733,19 @@ fn run_steps(
         // slots (next epoch's store/put) before all neighbors read them
         sh.barrier.sync();
         done += sub;
+        if let Some(res) = residual {
+            // non-finite guard: NaN/Inf anywhere in the interior poisons
+            // the squared step delta, and the slot-ordered fold
+            // replicates the poisoned norm identically on every worker —
+            // so this break is exactly as collective as a tolerance stop
+            if !res.is_finite() {
+                error = Some(format!(
+                    "non-finite residual ({res}) at step {done} (epoch {})",
+                    done.div_ceil(bt)
+                ));
+                break;
+            }
+        }
         if let (Some(t), Some(res)) = (tol, residual) {
             if res <= t {
                 break; // identical residual everywhere: a collective break
@@ -652,7 +760,7 @@ fn run_steps(
     // handshake orders these stores before any main-thread read.
     unsafe { sh.grid.write(plan.band.start * plane, &cur[band_off..band_off + band_len]) };
     moved += (band_len * 8) as u64;
-    Outcome { steps: done, residual, moved, computed, error: None }
+    Outcome { steps: done, residual, moved, computed, error }
 }
 
 #[cfg(test)]
@@ -987,6 +1095,60 @@ mod tests {
             drop(pool);
             assert_eq!(weak.strong_count(), 0, "cycle {cycle}: workers not joined");
         }
+    }
+
+    /// Satellite: solo-pool participation in the resilience layer — a
+    /// grid-only checkpoint taken between runs restores bit-identically,
+    /// with the reload generation forcing the workers' resident slabs to
+    /// re-read the restored grid.
+    #[test]
+    fn checkpoint_restore_replays_bit_identically() {
+        let s = spec("2d9pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[16, 14]).unwrap();
+        d.randomize(11);
+        let mut pool = StencilPool::spawn_temporal(&s, &d, 3, 2).unwrap();
+        pool.run(4, None).unwrap();
+        let ck = pool.checkpoint();
+        assert_eq!(ck.epoch, 4, "checkpoint stamps the lifetime step count");
+        assert!(ck.bytes >= (d.data.len() * 8) as u64);
+        pool.run(6, None).unwrap();
+        let want = pool.state();
+        pool.restore(&ck).unwrap();
+        let replay = pool.run(6, None).unwrap();
+        assert_eq!(replay.steps, 6);
+        assert_eq!(pool.state(), want, "restored replay must walk the same bits");
+        // a checkpoint from a different geometry is rejected, not mangled
+        let mut other = Domain::for_spec(&s, &[8, 8]).unwrap();
+        other.randomize(1);
+        let small = StencilPool::spawn(&s, &other, 2).unwrap();
+        assert!(pool.restore(&small.checkpoint()).is_err());
+    }
+
+    /// Satellite: the in-loop residual fold guards against non-finite
+    /// state — a tracked run over NaN-poisoned data fails with a solver
+    /// error naming the step/epoch instead of silently iterating to the
+    /// step cap, and the pool stays usable (restorable) afterwards.
+    #[test]
+    fn non_finite_residual_fails_naming_the_epoch() {
+        let s = spec("2d5pt").unwrap();
+        let mut d = Domain::for_spec(&s, &[8, 8]).unwrap();
+        d.randomize(13);
+        let clean = d.clone();
+        let plane = d.padded[2];
+        d.data[(d.padded[1] / 2) * plane + plane / 2] = f64::NAN; // interior cell
+        let mut pool = StencilPool::spawn(&s, &d, 2).unwrap();
+        let err = pool.run(50, Some(1e-12)).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("non-finite residual"), "{msg}");
+        assert!(msg.contains("epoch 1"), "{msg}");
+        // the failure break is collective, so the pool survives: restore
+        // clean state and the same pool runs (and converges) again
+        let reference = StencilPool::spawn(&s, &clean, 2).unwrap();
+        pool.restore(&reference.checkpoint()).unwrap();
+        let run = pool.run(3, Some(-1.0)).unwrap();
+        assert!(run.residual.unwrap().is_finite());
+        let want = gold::run(&s, &clean, 3).unwrap();
+        assert_eq!(pool.state(), want.data);
     }
 
     #[test]

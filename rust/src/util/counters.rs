@@ -16,6 +16,13 @@
 //! than per epoch, and [`plane_sheds`] / [`plane_timeouts`] count
 //! admission-control backpressure.
 //!
+//! The resilience layer (`runtime::resilience`) adds the recovery
+//! family: [`faults_injected`] counts `FaultPlan` coordinates claimed,
+//! [`farm_recoveries`] / [`replayed_epochs`] count checkpoint-restore
+//! replays and the epochs they re-execute, and [`checkpoint_bytes`]
+//! counts resident-state snapshot traffic. Clean benches assert
+//! recoveries stay 0; `bench_check` gates it.
+//!
 //! The counters are global and monotonic; concurrent test threads may
 //! interleave increments, so tests that need an exact attribution use the
 //! per-pool counters (`cg::pool::CgPool::spawn_count`,
@@ -34,6 +41,10 @@ static PLANE_BATCHES: AtomicU64 = AtomicU64::new(0);
 static SCHED_LOCK_ACQUISITIONS: AtomicU64 = AtomicU64::new(0);
 static PLANE_SHEDS: AtomicU64 = AtomicU64::new(0);
 static PLANE_TIMEOUTS: AtomicU64 = AtomicU64::new(0);
+static FAULTS_INJECTED: AtomicU64 = AtomicU64::new(0);
+static FARM_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+static REPLAYED_EPOCHS: AtomicU64 = AtomicU64::new(0);
+static CHECKPOINT_BYTES: AtomicU64 = AtomicU64::new(0);
 
 /// Record `n` OS threads spawned by a solver substrate.
 pub fn note_thread_spawns(n: u64) {
@@ -137,6 +148,55 @@ pub fn plane_timeouts() -> u64 {
     PLANE_TIMEOUTS.load(Ordering::Relaxed)
 }
 
+/// Record `n` faults injected by an installed
+/// `runtime::resilience::FaultPlan` (panic / NaN / stall coordinates
+/// claimed by the farm scheduler). Clean benches assert this stays 0.
+pub fn note_faults_injected(n: u64) {
+    FAULTS_INJECTED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total injected faults since process start.
+pub fn faults_injected() -> u64 {
+    FAULTS_INJECTED.load(Ordering::Relaxed)
+}
+
+/// Record `n` supervised recoveries: a retryable failure (panicked or
+/// NaN-tripped command) restored from its last checkpoint and replayed
+/// under a `runtime::resilience::RetryPolicy`.
+pub fn note_farm_recoveries(n: u64) {
+    FARM_RECOVERIES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total supervised recoveries since process start. The clean-bench
+/// invariant gated by `bench_check` is that this stays 0 without
+/// injection.
+pub fn farm_recoveries() -> u64 {
+    FARM_RECOVERIES.load(Ordering::Relaxed)
+}
+
+/// Record `n` epochs re-executed by recovery replays (the distance from
+/// the restored checkpoint to the failure point — the work the
+/// checkpoint cadence bounds).
+pub fn note_replayed_epochs(n: u64) {
+    REPLAYED_EPOCHS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total replayed epochs since process start.
+pub fn replayed_epochs() -> u64 {
+    REPLAYED_EPOCHS.load(Ordering::Relaxed)
+}
+
+/// Record `n` bytes copied into resident-state checkpoints (cadence
+/// snapshots and command-entry snapshots alike).
+pub fn note_checkpoint_bytes(n: u64) {
+    CHECKPOINT_BYTES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total checkpointed bytes since process start.
+pub fn checkpoint_bytes() -> u64 {
+    CHECKPOINT_BYTES.load(Ordering::Relaxed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +231,20 @@ mod tests {
         assert!(sched_lock_acquisitions() >= l + 2);
         assert!(plane_sheds() >= s + 1);
         assert!(plane_timeouts() >= t + 1);
+    }
+
+    #[test]
+    fn resilience_counters_are_monotonic() {
+        let (f, r, e, b) =
+            (faults_injected(), farm_recoveries(), replayed_epochs(), checkpoint_bytes());
+        note_faults_injected(1);
+        note_farm_recoveries(1);
+        note_replayed_epochs(5);
+        note_checkpoint_bytes(4096);
+        assert!(faults_injected() >= f + 1);
+        assert!(farm_recoveries() >= r + 1);
+        assert!(replayed_epochs() >= e + 5);
+        assert!(checkpoint_bytes() >= b + 4096);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Failure-injection tests: the runtime and manifest layers must fail
-//! loudly and precisely on corrupted inputs — not crash inside XLA.
+//! loudly and precisely on corrupted inputs — not crash inside XLA —
+//! and the farm/plane runtime must contain injected faults to the
+//! owning tenant without leaking admission slots.
 
 use std::io::Write;
 
@@ -107,4 +109,96 @@ fn solver_guards_fire() {
             .unwrap_err();
         assert!(matches!(err, perks::Error::Invalid(_)), "{err}");
     }
+}
+
+/// A worker panic on one farm tenant errors only the owning session:
+/// the concurrently-running peer tenant harvests normally and its final
+/// state stays bit-identical to the solo gold run.
+#[test]
+fn farm_panic_errors_only_the_owning_session() {
+    use perks::runtime::{FaultPlan, FaultSpec, SolverFarm};
+    use perks::stencil::{gold, spec, Domain};
+
+    let s = spec("2d5pt").unwrap();
+    let mut d = Domain::for_spec(&s, &[12, 12]).unwrap();
+    d.randomize(33);
+    let want = gold::run(&s, &d, 6).unwrap().data;
+
+    let farm = SolverFarm::spawn(2).unwrap();
+    farm.install_faults(FaultPlan::new().inject(FaultSpec::panic_at(1).tenant(0)));
+    let h = farm.handle();
+    let mut victim = h.admit_stencil(&s, &d, 2, 1).unwrap(); // slot 0
+    let mut peer = h.admit_stencil(&s, &d, 2, 1).unwrap(); // slot 1
+    victim.submit(6, None).unwrap();
+    peer.submit(6, None).unwrap();
+
+    match victim.wait() {
+        Err(perks::Error::Fault { epoch, .. }) => assert_eq!(epoch, 1),
+        other => panic!("expected Error::Fault on the victim, got {other:?}"),
+    }
+    let run = peer.wait().unwrap();
+    assert_eq!(run.steps, 6);
+    assert_eq!(run.recoveries, 0, "the fault bled into the peer tenant");
+    assert_eq!(peer.state().unwrap(), want, "peer diverged while its neighbor panicked");
+}
+
+/// Waiting again after a fault has been harvested is a structured error
+/// ("nothing in flight"), not a hang and not a stale replay of the
+/// first failure.
+#[test]
+fn farm_wait_after_fault_is_a_structured_error() {
+    use perks::runtime::{FaultPlan, FaultSpec, SolverFarm};
+    use perks::stencil::{spec, Domain};
+
+    let s = spec("2d5pt").unwrap();
+    let mut d = Domain::for_spec(&s, &[10, 10]).unwrap();
+    d.randomize(35);
+    let farm = SolverFarm::spawn(1).unwrap();
+    farm.install_faults(FaultPlan::new().inject(FaultSpec::panic_at(0)));
+    let mut t = farm.handle().admit_stencil(&s, &d, 1, 1).unwrap();
+    assert!(matches!(t.advance(4, None), Err(perks::Error::Fault { .. })));
+    match t.wait() {
+        Err(perks::Error::Solver(msg)) => {
+            assert!(msg.contains("no farm command in flight"), "unexpected message: {msg}");
+        }
+        other => panic!("expected a no-command-in-flight error, got {other:?}"),
+    }
+}
+
+/// Admission failures must not leak plane slots: after a shed rejection
+/// and a harvested fault, the bounded plane still has its full capacity
+/// and a fresh submission goes through.
+#[test]
+fn farm_shed_and_fault_leak_no_plane_slots() {
+    use perks::runtime::{AdmissionPolicy, FaultPlan, FaultSpec, PlaneConfig, SolverFarm};
+    use perks::stencil::{gold, spec, Domain};
+
+    let s = spec("2d5pt").unwrap();
+    let mut d = Domain::for_spec(&s, &[10, 10]).unwrap();
+    d.randomize(37);
+    let want = gold::run(&s, &d, 3).unwrap().data;
+
+    let farm =
+        SolverFarm::spawn_with(1, PlaneConfig::bounded(1).policy(AdmissionPolicy::Shed)).unwrap();
+    farm.install_faults(FaultPlan::new().inject(FaultSpec::panic_at(0).tenant(0)));
+    let h = farm.handle();
+    let mut a = h.admit_stencil(&s, &d, 1, 1).unwrap(); // slot 0: will fault
+    let mut b = h.admit_stencil(&s, &d, 1, 1).unwrap();
+    a.submit(4, None).unwrap(); // holds the only plane slot
+    match b.submit(1, None) {
+        Err(perks::Error::Shed(_)) => {} // rejected, must not consume the slot
+        other => panic!("expected Shed on the full plane, got {other:?}"),
+    }
+    // harvesting the fault releases the holder's slot
+    assert!(matches!(a.wait(), Err(perks::Error::Fault { .. })));
+    // both the shed tenant and the faulted tenant can use the plane again
+    let run = b.advance(3, None).unwrap();
+    assert_eq!(run.steps, 3);
+    assert_eq!(b.state().unwrap(), want, "post-shed run diverged from gold");
+    // the panic hit the first LOAD claim, so nothing was resident yet:
+    // the rerun reloads from x0 and lands exactly on gold
+    let rerun = a.advance(3, None).unwrap(); // the fault spec already fired
+    assert_eq!(rerun.steps, 3);
+    assert_eq!(a.state().unwrap(), want, "faulted tenant's rerun diverged from gold");
+    assert_eq!(farm.metrics().plane_sheds, 1, "exactly the one rejected submit shed");
 }

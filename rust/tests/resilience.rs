@@ -1,0 +1,397 @@
+//! Fault-injection / recovery integration tests for the farm runtime:
+//! seeded and pinned faults (panic / NaN / stall) recover from the last
+//! epoch-boundary checkpoint and land bit-identically on the clean run's
+//! state; retry-disabled tenants surface structured, retryable errors;
+//! the watchdog deadline turns silent hangs into `Error::Stuck`.
+//!
+//! CI runs this suite three ways (see `.github/workflows/ci.yml`):
+//! plain, under a `PERKS_FAULT_SEED` matrix (drives the property test's
+//! base seed), and once more with `PERKS_FAULT_PLAN` set so the
+//! env-driven test actually executes. Clean-arm farms install an empty
+//! plan explicitly so a stray `PERKS_FAULT_PLAN` in the environment
+//! cannot poison reference runs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use perks::runtime::farm::{P_COMPUTE, P_LOAD, P_SPMV};
+use perks::runtime::{FaultPlan, FaultSpec, ResilienceConfig, SolverFarm};
+use perks::sparse::gen;
+use perks::spmv::merge::MergePlan;
+use perks::stencil::{gold, spec, Domain};
+use perks::util::check::{forall, Prop};
+use perks::util::counters;
+use perks::Error;
+
+/// Residual tolerance that residuals (always >= 0, NaN excepted) can
+/// never meet: forces the per-epoch residual fold — the stencil engine's
+/// NaN detector — without ever triggering an early stop.
+const TRACK: Option<f64> = Some(-1.0);
+
+/// Clean farm CG reference run: x=0, r=p=b, fixed iteration count.
+fn cg_reference(
+    grid: usize,
+    iters: usize,
+    parts: usize,
+    workers: usize,
+    seed: u64,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64) {
+    let a = Arc::new(gen::poisson2d(grid));
+    let b = gen::rhs(a.n_rows, seed);
+    let plan = MergePlan::new(&a, parts);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+    let farm = SolverFarm::spawn(workers).unwrap();
+    farm.install_faults(FaultPlan::new()); // hermetic: override any env plan
+    let mut t = farm.handle().admit_cg(a, plan).unwrap();
+    let (mut x, mut r, mut p) = (vec![0.0; b.len()], b.clone(), b.clone());
+    let run = t.run(&mut x, &mut r, &mut p, rr0, 0.0, iters).unwrap();
+    assert!(run.error.is_none(), "clean CG reference errored: {:?}", run.error);
+    assert_eq!(run.iters, iters);
+    (x, r, p, run.rr)
+}
+
+/// An injected panic on one tenant is recovered from the checkpoint and
+/// replayed to a bit-identical final state, while an unconfigured peer
+/// tenant on the same farm never notices. Counters account for exactly
+/// what happened.
+#[test]
+fn injected_panic_recovers_bit_identically_with_peer_tenants() {
+    let s = spec("2d9pt").unwrap();
+    let mut d = Domain::for_spec(&s, &[14, 14]).unwrap();
+    d.randomize(21);
+    let want = gold::run(&s, &d, 12).unwrap().data;
+
+    let base_faults = counters::faults_injected();
+    let base_recov = counters::farm_recoveries();
+
+    let farm = SolverFarm::spawn(3).unwrap();
+    // tenant slot 0 is the first admission in a fresh farm
+    farm.install_faults(FaultPlan::new().inject(FaultSpec::panic_at(2).tenant(0)));
+    let h = farm.handle();
+    let mut victim = h.admit_stencil(&s, &d, 3, 1).unwrap();
+    victim.configure_resilience(ResilienceConfig::recovering(2).every(3)).unwrap();
+    let mut peer = h.admit_stencil(&s, &d, 3, 1).unwrap();
+
+    let vr = victim.advance(12, None).unwrap();
+    let pr = peer.advance(12, None).unwrap();
+
+    assert!(vr.recoveries >= 1, "the injected panic was never recovered");
+    assert!(vr.replayed_epochs >= 1, "recovery replayed no epochs");
+    assert!(vr.checkpoint_bytes > 0, "recovery ran without any checkpoint traffic");
+    assert_eq!(pr.recoveries, 0, "the fault leaked to the peer tenant");
+    assert_eq!(victim.state().unwrap(), want, "recovered state diverged from gold");
+    assert_eq!(peer.state().unwrap(), want, "peer state diverged from gold");
+
+    let m = farm.metrics();
+    assert_eq!(m.faults_injected, 1);
+    assert!(m.recoveries >= 1);
+    assert!(m.checkpoint_bytes > 0);
+    assert!(counters::faults_injected() >= base_faults + 1);
+    assert!(counters::farm_recoveries() >= base_recov + 1);
+}
+
+/// The tentpole acceptance bar: a run that panics at epoch 1 and NaNs at
+/// epoch 3 recovers to the exact gold bits at every tested worker count
+/// (deterministic slot-order folds make replay worker-count invariant).
+#[test]
+fn recovered_state_is_bit_identical_at_every_worker_count() {
+    let s = spec("2d9pt").unwrap();
+    let mut d = Domain::for_spec(&s, &[14, 14]).unwrap();
+    d.randomize(5);
+    let want = gold::run(&s, &d, 10).unwrap().data;
+    for workers in [1usize, 2, 3, 8] {
+        let farm = SolverFarm::spawn(workers).unwrap();
+        farm.install_faults(
+            FaultPlan::new().inject(FaultSpec::panic_at(1)).inject(FaultSpec::nan_at(3)),
+        );
+        let mut t = farm.handle().admit_stencil(&s, &d, 3, 2).unwrap();
+        t.configure_resilience(ResilienceConfig::recovering(3).every(2)).unwrap();
+        // TRACK forces the residual fold, which is where NaN is detected
+        let run = t.advance(10, TRACK).unwrap();
+        assert_eq!(run.recoveries, 2, "workers={workers}: expected both faults recovered");
+        assert_eq!(farm.metrics().faults_injected, 2, "workers={workers}");
+        assert_eq!(t.state().unwrap(), want, "workers={workers}: recovered state vs gold");
+    }
+}
+
+/// CG: NaN poisoning of the residual vector is caught at the next r·r
+/// fold and recovered to bit-identical iterates; without a retry policy
+/// the same fault surfaces in-band as a structured solver error with the
+/// completed iteration count intact.
+#[test]
+fn nan_poisoning_is_detected_and_recovered_for_cg() {
+    let (grid, iters, parts, workers) = (12usize, 15usize, 4usize, 2usize);
+    let (want_x, want_r, want_p, want_rr) = cg_reference(grid, iters, parts, workers, 9);
+
+    let a = Arc::new(gen::poisson2d(grid));
+    let b = gen::rhs(a.n_rows, 9);
+    let plan = MergePlan::new(&a, parts);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+
+    // recovered arm
+    let farm = SolverFarm::spawn(workers).unwrap();
+    farm.install_faults(FaultPlan::new().inject(FaultSpec::nan_at(4)));
+    let mut t = farm.handle().admit_cg(a.clone(), plan.clone()).unwrap();
+    t.configure_resilience(ResilienceConfig::recovering(2).every(3)).unwrap();
+    let (mut x, mut r, mut p) = (vec![0.0; b.len()], b.clone(), b.clone());
+    let run = t.run(&mut x, &mut r, &mut p, rr0, 0.0, iters).unwrap();
+    assert!(run.error.is_none(), "recovered run still errored: {:?}", run.error);
+    assert!(run.recoveries >= 1, "the injected NaN was never recovered");
+    assert_eq!(farm.metrics().faults_injected, 1);
+    for (got, want, name) in [(&x, &want_x, "x"), (&r, &want_r, "r"), (&p, &want_p, "p")] {
+        let same = got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "recovered CG {name} diverged from the clean run");
+    }
+    assert_eq!(run.rr.to_bits(), want_rr.to_bits(), "recovered rr diverged");
+
+    // retry-disabled arm: the NaN fired at SPMV@2 is detected at the r·r
+    // fold of the same iteration — two iterations complete, then the
+    // error surfaces in-band
+    let farm2 = SolverFarm::spawn(workers).unwrap();
+    farm2.install_faults(FaultPlan::new().inject(FaultSpec::nan_at(2)));
+    let mut t2 = farm2.handle().admit_cg(a, plan).unwrap();
+    let (mut x2, mut r2, mut p2) = (vec![0.0; b.len()], b.clone(), b.clone());
+    let run2 = t2.run(&mut x2, &mut r2, &mut p2, rr0, 0.0, iters).unwrap();
+    let err = run2.error.expect("unrecovered NaN must surface in-band");
+    assert!(err.contains("non-finite"), "unexpected error text: {err}");
+    assert_eq!(run2.iters, 2, "iterations completed before the poisoned fold");
+    assert_eq!(run2.recoveries, 0);
+}
+
+/// Without a retry policy a worker panic surfaces as the structured
+/// `Error::Fault` carrying the exact (phase, shard, epoch) coordinate,
+/// classified retryable — and the farm keeps serving fresh tenants.
+#[test]
+fn retry_disabled_panic_surfaces_structured_fault() {
+    let s = spec("2d5pt").unwrap();
+    let mut d = Domain::for_spec(&s, &[12, 12]).unwrap();
+    d.randomize(17);
+    let want = gold::run(&s, &d, 8).unwrap().data;
+
+    let farm = SolverFarm::spawn(2).unwrap();
+    farm.install_faults(
+        FaultPlan::new().inject(FaultSpec::panic_at(2).phase(P_COMPUTE).shard(0)),
+    );
+    let mut t = farm.handle().admit_stencil(&s, &d, 2, 1).unwrap();
+    match t.advance(8, None) {
+        Err(e) => {
+            assert!(e.is_retryable(), "a panicked shard must classify retryable");
+            match e {
+                Error::Fault { phase, shard, epoch } => {
+                    assert_eq!(phase, P_COMPUTE as usize);
+                    assert_eq!(shard, 0);
+                    assert_eq!(epoch, 2);
+                }
+                other => panic!("expected Error::Fault, got {other:?}"),
+            }
+        }
+        Ok(run) => panic!("expected Error::Fault, got {run:?}"),
+    }
+    drop(t);
+
+    // the farm survives the fault: a fresh tenant runs clean to gold
+    let mut fresh = farm.handle().admit_stencil(&s, &d, 2, 1).unwrap();
+    fresh.advance(8, None).unwrap();
+    assert_eq!(fresh.state().unwrap(), want, "farm corrupted after a tenant fault");
+
+    // CG panics surface the same structured error from the blocking run
+    let a = Arc::new(gen::poisson2d(10));
+    let b = gen::rhs(a.n_rows, 3);
+    let plan = MergePlan::new(&a, 3);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+    let farm2 = SolverFarm::spawn(2).unwrap();
+    farm2.install_faults(FaultPlan::new().inject(FaultSpec::panic_at(1).phase(P_SPMV)));
+    let mut c = farm2.handle().admit_cg(a.clone(), plan.clone()).unwrap();
+    let (mut x, mut r, mut p) = (vec![0.0; b.len()], b.clone(), b.clone());
+    match c.run(&mut x, &mut r, &mut p, rr0, 0.0, 8) {
+        Err(Error::Fault { phase, epoch, .. }) => {
+            assert_eq!(phase, P_SPMV as usize);
+            assert_eq!(epoch, 1);
+        }
+        other => panic!("expected Error::Fault from CG run, got {other:?}"),
+    }
+    drop(c);
+    let mut c2 = farm2.handle().admit_cg(a, plan).unwrap();
+    let (mut x2, mut r2, mut p2) = (vec![0.0; b.len()], b.clone(), b.clone());
+    let run = c2.run(&mut x2, &mut r2, &mut p2, rr0, 0.0, 8).unwrap();
+    assert!(run.error.is_none());
+    assert_eq!(run.iters, 8);
+}
+
+/// A stalled worker trips the blocking wait's watchdog into
+/// `Error::Stuck` instead of hanging; the command keeps draining and a
+/// later wait harvests the full, correct result.
+#[test]
+fn watchdog_deadline_surfaces_stuck_then_command_drains() {
+    let s = spec("2d5pt").unwrap();
+    let mut d = Domain::for_spec(&s, &[12, 12]).unwrap();
+    d.randomize(29);
+
+    let farm = SolverFarm::spawn(2).unwrap();
+    farm.install_faults(
+        FaultPlan::new().inject(FaultSpec::stall_at(0, Duration::from_millis(150)).phase(P_LOAD)),
+    );
+    let mut t = farm.handle().admit_stencil(&s, &d, 2, 1).unwrap();
+    t.configure_resilience(ResilienceConfig::disabled().with_deadline(Duration::from_millis(10)))
+        .unwrap();
+    match t.advance(4, None) {
+        Err(e) => {
+            assert!(e.is_retryable(), "a stuck command must classify retryable");
+            match e {
+                Error::Stuck { waited_ms, .. } => {
+                    assert!(waited_ms >= 10, "watchdog fired before its deadline: {waited_ms} ms")
+                }
+                other => panic!("expected Error::Stuck, got {other:?}"),
+            }
+        }
+        Ok(run) => panic!("expected Error::Stuck, got {run:?}"),
+    }
+    // the command is still draining: re-waiting re-arms the deadline and
+    // eventually harvests the completed run
+    let mut run = None;
+    for _ in 0..400 {
+        match t.wait() {
+            Ok(r) => {
+                run = Some(r);
+                break;
+            }
+            Err(Error::Stuck { .. }) => continue,
+            Err(other) => panic!("unexpected error while draining: {other:?}"),
+        }
+    }
+    let run = run.expect("stalled command never drained");
+    assert_eq!(run.steps, 4);
+    assert_eq!(t.state().unwrap(), gold::run(&s, &d, 4).unwrap().data);
+    // the tenant is fully reusable after the stall (deadline cleared so
+    // a loaded CI machine cannot trip the watchdog on the clean run)
+    t.configure_resilience(ResilienceConfig::disabled()).unwrap();
+    t.advance(2, None).unwrap();
+    assert_eq!(t.state().unwrap(), gold::run(&s, &d, 6).unwrap().data);
+}
+
+/// `PERKS_FAULT_PLAN` drives injection with zero code: a farm spawned
+/// with the variable set picks the plan up itself. Skips (loudly) when
+/// the variable is unset — CI's fault-matrix job sets it and runs this
+/// test alone with `--exact`, so the rest of the suite stays hermetic.
+#[test]
+fn env_fault_plan_drives_recovery_when_set() {
+    let Some(raw) = std::env::var("PERKS_FAULT_PLAN").ok().filter(|v| !v.trim().is_empty()) else {
+        eprintln!("skipping: PERKS_FAULT_PLAN not set (CI fault-matrix sets it)");
+        return;
+    };
+    let Some(plan) = FaultPlan::from_env() else {
+        panic!("PERKS_FAULT_PLAN is set ({raw:?}) but parsed to no plan");
+    };
+    assert!(!plan.is_empty());
+
+    let s = spec("2d5pt").unwrap();
+    let mut d = Domain::for_spec(&s, &[12, 12]).unwrap();
+    d.randomize(41);
+    let want = gold::run(&s, &d, 10).unwrap().data;
+
+    // no install_faults: the farm reads the env plan at spawn
+    let farm = SolverFarm::spawn(3).unwrap();
+    let mut t = farm.handle().admit_stencil(&s, &d, 3, 1).unwrap();
+    t.configure_resilience(ResilienceConfig::recovering(3).every(2)).unwrap();
+    let run = t.advance(10, TRACK).unwrap();
+    assert_eq!(t.state().unwrap(), want, "env-injected run diverged from gold");
+    let injected = farm.metrics().faults_injected;
+    // stall faults delay without failing; only panic/NaN plans must recover
+    if injected > 0 && (raw.contains("panic") || raw.contains("nan")) {
+        assert!(run.recoveries >= 1, "env plan injected {injected} faults, none recovered");
+    }
+}
+
+#[derive(Debug)]
+struct FaultCase {
+    seed: u64,
+    workers: usize,
+    kind: u64,
+    cadence: u64,
+}
+
+/// Property: for random (seed, worker count, workload, checkpoint
+/// cadence), a run with one seeded panic-or-NaN fault recovers to the
+/// exact bits of the clean run — stencils in 2D and 3D at bt ∈ {1, 2}
+/// and CG. `PERKS_FAULT_SEED` (CI matrix) rotates the case stream.
+#[test]
+fn seeded_faults_recover_bit_identically_property() {
+    let base = std::env::var("PERKS_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7u64);
+    forall(
+        base,
+        10,
+        |rng| FaultCase {
+            seed: rng.next_u64(),
+            workers: 1 + rng.index(4),
+            kind: rng.below(5),
+            cadence: rng.below(5),
+        },
+        |case| {
+            let cfg = ResilienceConfig::recovering(2).every(case.cadence);
+            if case.kind == 4 {
+                // CG over the 2D Poisson operator
+                let (grid, iters, parts) = (10usize, 12usize, 5usize);
+                let (want_x, _, _, want_rr) = cg_reference(grid, iters, parts, case.workers, 13);
+                let a = Arc::new(gen::poisson2d(grid));
+                let b = gen::rhs(a.n_rows, 13);
+                let rr0: f64 = b.iter().map(|v| v * v).sum();
+                let farm = SolverFarm::spawn(case.workers).unwrap();
+                farm.install_faults(FaultPlan::seeded(case.seed, iters as u64, parts));
+                let mut t =
+                    farm.handle().admit_cg(a.clone(), MergePlan::new(&a, parts)).unwrap();
+                t.configure_resilience(cfg).unwrap();
+                let (mut x, mut r, mut p) = (vec![0.0; b.len()], b.clone(), b.clone());
+                let run = match t.run(&mut x, &mut r, &mut p, rr0, 0.0, iters) {
+                    Ok(run) => run,
+                    Err(e) => return Prop::Fail(format!("faulted CG run failed: {e}")),
+                };
+                if let Some(e) = run.error {
+                    return Prop::Fail(format!("faulted CG run errored in-band: {e}"));
+                }
+                if farm.metrics().faults_injected != 1 {
+                    return Prop::Fail("seeded fault never fired".into());
+                }
+                let same = x.iter().zip(&want_x).all(|(a, b)| a.to_bits() == b.to_bits());
+                Prop::check(
+                    same && run.rr.to_bits() == want_rr.to_bits(),
+                    "recovered CG diverged from the clean run",
+                )
+            } else {
+                let (name, interior, steps, bt): (&str, &[usize], usize, usize) = match case.kind {
+                    0 => ("2d5pt", &[10, 12], 8, 1),
+                    1 => ("2d5pt", &[10, 12], 8, 2),
+                    2 => ("3d13pt", &[6, 6, 6], 6, 1),
+                    _ => ("3d13pt", &[6, 6, 6], 6, 2),
+                };
+                let s = spec(name).unwrap();
+                let mut d = Domain::for_spec(&s, interior).unwrap();
+                d.randomize(case.seed ^ 0x5eed);
+                let want = gold::run(&s, &d, steps).unwrap().data;
+                let shards = 3usize;
+                let epochs = steps.div_ceil(bt) as u64;
+                let farm = SolverFarm::spawn(case.workers).unwrap();
+                farm.install_faults(FaultPlan::seeded(case.seed, epochs, shards));
+                let mut t = farm.handle().admit_stencil(&s, &d, shards, bt).unwrap();
+                t.configure_resilience(cfg).unwrap();
+                // TRACK forces the residual fold that detects NaN faults
+                let run = match t.advance(steps, TRACK) {
+                    Ok(run) => run,
+                    Err(e) => return Prop::Fail(format!("faulted stencil run failed: {e}")),
+                };
+                if farm.metrics().faults_injected != 1 {
+                    return Prop::Fail("seeded fault never fired".into());
+                }
+                if run.recoveries < 1 {
+                    return Prop::Fail("fault fired but no recovery was counted".into());
+                }
+                Prop::check(
+                    t.state().unwrap() == want,
+                    "recovered stencil state diverged from gold",
+                )
+            }
+        },
+    );
+}
