@@ -33,7 +33,12 @@
 //! Usage:
 //!   bench_check [--dir .] [--baseline-dir ../bench/baselines]
 //!               [--tolerance 0.25] [--min-farm-speedup 1.5]
-//!               [--no-wall] [--update]
+//!               [--no-wall] [--update] [--list-invariants]
+//!
+//! `--list-invariants` prints every machine-independent invariant this
+//! gate enforces (one per line, `name: statement`) and exits 0 — the
+//! human-auditable twin of `perks_lint --list-rules`; the catalogue in
+//! `docs/INVARIANTS.md` is generated from the same set.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -56,6 +61,48 @@ const MAX_CHECKPOINT_OVERHEAD: f64 = 0.05;
 /// overhead ratio; the gate notes and skips them (the checked-in
 /// baseline wall gate still applies).
 const OVERHEAD_GATE_MIN_WALL: f64 = 0.005;
+
+/// The machine-independent invariants this gate enforces, as
+/// `(name, statement)` pairs for `--list-invariants`. Keep in sync with
+/// the checks in `check_modes`/`check_file` and `docs/INVARIANTS.md`.
+const INVARIANTS: [(&str, &str); 9] = [
+    (
+        "zero-spawn-advance",
+        "persistent/pooled arms and farm admissions perform 0 thread spawns (advance_spawns == 0, admission_spawns == 0)",
+    ),
+    (
+        "exact-barrier-count",
+        "a pooled arm's first advance syncs exactly 2*ceil(steps/bt)+1 barrier generations",
+    ),
+    (
+        "host-loop-respawns",
+        "the host-loop baseline reports nonzero advance spawns (otherwise the measurement is broken)",
+    ),
+    (
+        "farm-speedup-floor",
+        "farm rows at >= 16 tenants keep farm-vs-pool-per-session speedup above the --min-farm-speedup floor",
+    ),
+    (
+        "one-lock-per-batch",
+        "plane rows take exactly one enqueue-side scheduler-lock acquisition per batch (sched_lock_acquisitions == plane_batches)",
+    ),
+    (
+        "quiet-quick-plane",
+        "plane rows under the unbounded quick load never shed, time out, or spawn",
+    ),
+    (
+        "no-spurious-recovery",
+        "resilience rows recover if and only if a fault was injected",
+    ),
+    (
+        "cadence-zero-is-free",
+        "cadence-0 clean rows copy 0 checkpoint bytes",
+    ),
+    (
+        "checkpoint-overhead-bound",
+        "the default-cadence clean arm costs at most 5% wall over its cadence-0 reference (above the noise floor)",
+    ),
+];
 
 struct Config {
     dir: PathBuf,
@@ -95,6 +142,12 @@ fn parse_args() -> Result<Config, String> {
             }
             "--no-wall" => cfg.no_wall = true,
             "--update" => cfg.update = true,
+            "--list-invariants" => {
+                for (name, statement) in INVARIANTS {
+                    println!("{name}: {statement}");
+                }
+                std::process::exit(0);
+            }
             other => return Err(format!("unknown flag {other:?} (see --help in module docs)")),
         }
     }

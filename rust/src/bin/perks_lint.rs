@@ -1,0 +1,90 @@
+//! `perks_lint` — the project's static analysis gate for persistent-
+//! runtime concurrency invariants (see `perks::lint` and
+//! `docs/INVARIANTS.md`).
+//!
+//! ```text
+//! cargo run --bin perks_lint                  # lint rust/src (run from rust/)
+//! cargo run --bin perks_lint -- --root src    # explicit tree root
+//! cargo run --bin perks_lint -- --list-rules  # print the rule catalogue
+//! cargo run --bin perks_lint -- file.rs …     # lint specific files only
+//! ```
+//!
+//! Exit status: 0 clean, 1 violations found, 2 usage or I/O error. CI
+//! runs this as a blocking step in the `lint` job.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use perks::lint::{self, FileCtx, Violation};
+
+struct Args {
+    root: PathBuf,
+    files: Vec<PathBuf>,
+    list_rules: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args =
+        Args { root: PathBuf::from("src"), files: Vec::new(), list_rules: false };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                args.root =
+                    PathBuf::from(it.next().ok_or("--root needs a directory argument")?);
+            }
+            "--list-rules" => args.list_rules = true,
+            "--help" | "-h" => {
+                return Err("usage: perks_lint [--root DIR] [--list-rules] [FILE…]".into())
+            }
+            f if !f.starts_with('-') => args.files.push(PathBuf::from(f)),
+            other => return Err(format!("unknown flag `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.list_rules {
+        println!("perks-lint rules (suppress with `// lint: allow(rule) -- justification`):");
+        for (name, desc) in lint::RULES {
+            println!("  {name:<18} {desc}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let result: std::io::Result<Vec<Violation>> = if args.files.is_empty() {
+        lint::lint_root(&args.root)
+    } else {
+        // explicit file mode: per-file rules only (counter coverage is a
+        // whole-tree property)
+        args.files
+            .iter()
+            .map(|f| FileCtx::load(f).map(|ctx| lint::lint_file(&ctx)))
+            .collect::<std::io::Result<Vec<_>>>()
+            .map(|vs| vs.into_iter().flatten().collect())
+    };
+    match result {
+        Ok(violations) if violations.is_empty() => {
+            println!("perks-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            println!("perks-lint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("perks-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

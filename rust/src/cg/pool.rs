@@ -360,6 +360,7 @@ impl CgPool {
         let outcome = {
             let mut g = self.shared.ctl.lock();
             while g.finished < self.workers {
+                // lint: allow(condvar-shutdown) -- client-side completion wait; the pool is torn down only by this same thread's Drop, so no concurrent shutdown can strand it
                 g = self.shared.ctl.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
             }
             g.outcome.clone()
@@ -470,6 +471,8 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
     let mut rr = rr_in;
     let mut done = 0usize;
     let mut error = None;
+    // hot-path: begin -- the resident CG iteration loop: every epoch is
+    // barrier sync + raw-pointer arithmetic, no allocation allowed
     for _ in 0..max_iters {
         if rr <= threshold || rr <= 0.0 {
             break;
@@ -510,6 +513,8 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
             }
             for k in k_lo..k_hi {
                 let (s, l) = sh.blocks[k];
+                // SAFETY: ap has no writer this phase (fixups above are
+                // barrier-ordered before the dot-product reads).
                 let part =
                     crate::cg::block_partial(s, l, |i| p_v[i] * unsafe { ap.add(i).read() });
                 sh.barrier.put(k, part);
@@ -520,11 +525,13 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
             // non-finite guard: NaN/Inf in p or Ap poisons the fold,
             // identically on every worker — a collective break, before
             // alpha can spread the poison into x/r
+            // lint: allow(hot-path-alloc) -- cold error exit: the format! runs once, right before the loop breaks
             error = Some(format!("non-finite p·Ap ({pap}) at iteration {}", done + 1));
             break;
         }
         if pap <= 0.0 {
             // identical pap on every worker: a collective break
+            // lint: allow(hot-path-alloc) -- cold error exit: the format! runs once, right before the loop breaks
             error = Some(format!("matrix not positive definite (pAp={pap})"));
             break;
         }
@@ -539,6 +546,8 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
             let ap = sh.ap.whole();
             for k in k_lo..k_hi {
                 let (s, l) = sh.blocks[k];
+                // SAFETY: block k's rows belong to this worker alone, so
+                // the x/r read-modify-writes cannot race another writer.
                 let part = crate::cg::block_partial(s, l, |i| unsafe {
                     x.add(i).write(x.add(i).read() + alpha * p_v[i]);
                     let ri = r.add(i).read() - alpha * ap[i];
@@ -553,6 +562,7 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
             // same guard on the r·r recurrence: the fold is identical on
             // every worker, so the break is collective and leaves x/r at
             // the failing iteration's update (p not yet touched)
+            // lint: allow(hot-path-alloc) -- cold error exit: the format! runs once, right before the loop breaks
             error = Some(format!("non-finite r·r ({rr_new}) at iteration {}", done + 1));
             break;
         }
@@ -572,6 +582,7 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
         // next iteration's SpMV reads p globally: wait for all p writes
         sh.barrier.sync();
     }
+    // hot-path: end
     Outcome { iters: done, rr, error }
 }
 

@@ -78,6 +78,15 @@
 //! The pre-`session` entrypoints (`coordinator::StencilDriver::new`,
 //! `coordinator::CgDriver::new`) remain as deprecated shims.
 //!
+//! ## Invariants and their gates
+//!
+//! The hand-rolled synchronization above (parked condvars, slot-ordered
+//! barrier folds, countdown transitions, zero-alloc hot loops) is held
+//! together by named invariants, catalogued in `docs/INVARIANTS.md` and
+//! enforced three ways: statically by [`lint`] (`bin/perks_lint`, a
+//! blocking CI step), dynamically by `util::counters` asserts, and at
+//! the perf level by `bin/bench_check` against `bench/baselines/`.
+//!
 //! See DESIGN.md for the architecture and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
@@ -86,6 +95,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod harness;
+pub mod lint;
 pub mod runtime;
 pub mod session;
 pub mod simgpu;

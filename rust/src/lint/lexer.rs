@@ -1,0 +1,297 @@
+//! A dependency-free, line-oriented scanner for Rust source.
+//!
+//! The lint rules are deliberately *heuristic*: they reason about lines
+//! of code, comment text, and brace depth — not a full AST. This module
+//! does the one part that must be exact for the heuristics to be sound:
+//! separating **code** from **comments and literals**. Rule patterns
+//! (`.unwrap()`, `unsafe`, `.lock()`, …) are matched only against code
+//! with every string/char literal blanked out, so a doc example or an
+//! error message can never trip a rule; marker comments
+//! (`// SAFETY:`, `// hot-path: begin`, `// lint: allow(...)`) are read
+//! only from comment text, so code can never forge one.
+//!
+//! The scanner handles line comments, nested block comments, string and
+//! byte-string literals with escapes, raw strings (`r#"…"#`), char
+//! literals, and the char-vs-lifetime ambiguity (`'a'` vs `'static`).
+//! It is the same hand-rolled spirit as `util::json`: small, exact
+//! about its state machine, and dependency-free.
+
+/// One physical source line, split into its code and comment parts.
+#[derive(Debug, Clone)]
+pub struct SourceLine {
+    /// Code text with comments removed and every string/char literal
+    /// replaced by spaces (quotes kept, contents blanked). Safe to
+    /// pattern-match without literal false positives.
+    pub code: String,
+    /// Concatenated text of every comment on the line (line comments,
+    /// block comments, doc comments — markers `//`, `/*` stripped).
+    pub comment: String,
+    /// Brace depth (count of `{` minus `}` in *code*) at line start.
+    pub depth_start: usize,
+    /// Brace depth at line end.
+    pub depth_end: usize,
+}
+
+/// Scanner state carried across lines.
+enum Mode {
+    Code,
+    /// Inside `/* … */`; the payload is the nesting level (Rust block
+    /// comments nest).
+    Block(usize),
+}
+
+/// Scan a whole source file into per-line code/comment splits.
+pub fn scan(src: &str) -> Vec<SourceLine> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    let mut depth: usize = 0;
+    for raw in src.lines() {
+        let depth_start = depth;
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let bytes: Vec<char> = raw.chars().collect();
+        let n = bytes.len();
+        let mut i = 0;
+        while i < n {
+            match mode {
+                Mode::Block(ref mut level) => {
+                    if bytes[i] == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                        *level += 1;
+                        i += 2;
+                    } else if bytes[i] == '*' && i + 1 < n && bytes[i + 1] == '/' {
+                        if *level == 1 {
+                            mode = Mode::Code;
+                        } else {
+                            *level -= 1;
+                        }
+                        i += 2;
+                    } else {
+                        comment.push(bytes[i]);
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = bytes[i];
+                    if c == '/' && i + 1 < n && bytes[i + 1] == '/' {
+                        // line comment (incl. doc comments): rest of line
+                        let mut j = i + 2;
+                        while j < n && (bytes[j] == '/' || bytes[j] == '!') {
+                            j += 1; // strip `///`, `//!` markers
+                        }
+                        comment.push_str(&raw.chars().skip(j).collect::<String>());
+                        i = n;
+                    } else if c == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                        mode = Mode::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        i = skip_string(&bytes, i + 1, &mut code);
+                    } else if c == 'r' && is_raw_start(&bytes, i) {
+                        i = skip_raw_string(&bytes, i, &mut code);
+                    } else if c == 'b' && i + 1 < n && bytes[i + 1] == '"' {
+                        code.push_str("b\"");
+                        i = skip_string(&bytes, i + 2, &mut code);
+                    } else if c == 'b' && i + 1 < n && bytes[i + 1] == 'r' && is_raw_start(&bytes, i + 1) {
+                        code.push('b');
+                        i = skip_raw_string(&bytes, i + 1, &mut code);
+                    } else if c == '\'' {
+                        i = char_or_lifetime(&bytes, i, &mut code);
+                    } else {
+                        if c == '{' {
+                            depth += 1;
+                        } else if c == '}' {
+                            depth = depth.saturating_sub(1);
+                        }
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(SourceLine {
+            code,
+            comment: comment.trim().to_string(),
+            depth_start,
+            depth_end: depth,
+        });
+    }
+    out
+}
+
+/// Consume a (non-raw) string literal body starting just past the open
+/// quote; blank the contents, keep the closing quote. A string that runs
+/// past end-of-line (multi-line literal) is treated as closed at EOL —
+/// good enough for the patterns the rules match, and it keeps the
+/// scanner line-oriented.
+fn skip_string(bytes: &[char], mut i: usize, code: &mut String) -> usize {
+    let n = bytes.len();
+    while i < n {
+        match bytes[i] {
+            '\\' => {
+                code.push(' ');
+                if i + 1 < n {
+                    code.push(' ');
+                }
+                i += 2;
+            }
+            '"' => {
+                code.push('"');
+                return i + 1;
+            }
+            _ => {
+                code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Is `bytes[i] == 'r'` the start of a raw string (`r"`, `r#"`, …)?
+fn is_raw_start(bytes: &[char], i: usize) -> bool {
+    let mut j = i + 1;
+    while j < bytes.len() && bytes[j] == '#' {
+        j += 1;
+    }
+    j < bytes.len() && bytes[j] == '"'
+}
+
+/// Consume a raw string `r##"…"##` starting at the `r`; blanks contents.
+/// Like `skip_string`, treats end-of-line as closing.
+fn skip_raw_string(bytes: &[char], i: usize, code: &mut String) -> usize {
+    let n = bytes.len();
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while j < n && bytes[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    code.push('r');
+    for _ in 0..hashes {
+        code.push('#');
+    }
+    code.push('"');
+    j += 1; // past the open quote
+    while j < n {
+        if bytes[j] == '"' {
+            let mut k = 0;
+            while k < hashes && j + 1 + k < n && bytes[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                code.push('"');
+                for _ in 0..hashes {
+                    code.push('#');
+                }
+                return j + 1 + hashes;
+            }
+        }
+        code.push(' ');
+        j += 1;
+    }
+    j
+}
+
+/// Disambiguate `'a'` (char literal — blank it) from `'static`
+/// (lifetime — plain code). Escapes (`'\n'`, `'\u{..}'`) are always
+/// char literals.
+fn char_or_lifetime(bytes: &[char], i: usize, code: &mut String) -> usize {
+    let n = bytes.len();
+    if i + 1 < n && bytes[i + 1] == '\\' {
+        // escaped char literal: consume to the closing quote
+        code.push('\'');
+        let mut j = i + 2;
+        while j < n && bytes[j] != '\'' {
+            code.push(' ');
+            j += 1;
+        }
+        code.push(' '); // the backslash position
+        if j < n {
+            code.push('\'');
+            return j + 1;
+        }
+        return j;
+    }
+    // `'x'` exactly: char literal
+    if i + 2 < n && bytes[i + 2] == '\'' && bytes[i + 1] != '\'' {
+        code.push_str("' '");
+        return i + 3;
+    }
+    // otherwise: lifetime (or stray quote) — pass through as code
+    code.push('\'');
+    i + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comments() {
+        let l = &scan("let x = 1; // SAFETY: fine")[0];
+        assert_eq!(l.code.trim(), "let x = 1;");
+        assert!(l.comment.contains("SAFETY"));
+    }
+
+    #[test]
+    fn blanks_string_contents() {
+        let l = &scan(r#"let s = "unsafe .unwrap()";"#)[0];
+        assert!(!l.code.contains("unsafe"));
+        assert!(!l.code.contains("unwrap"));
+        assert!(l.code.contains('"'));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* x /* y */ z */ b\nc";
+        let lines = scan(src);
+        assert_eq!(lines[0].code.replace(' ', ""), "ab");
+        assert_eq!(lines[1].code, "c");
+    }
+
+    #[test]
+    fn block_comment_across_lines() {
+        let src = "start /* one\ntwo\nthree */ end";
+        let lines = scan(src);
+        assert_eq!(lines[0].code.trim(), "start");
+        assert_eq!(lines[1].code, "");
+        assert!(lines[1].comment.contains("two"));
+        assert_eq!(lines[2].code.trim(), "end");
+    }
+
+    #[test]
+    fn tracks_brace_depth() {
+        let src = "fn f() {\n    if x {\n    }\n}";
+        let lines = scan(src);
+        assert_eq!(lines[0].depth_start, 0);
+        assert_eq!(lines[0].depth_end, 1);
+        assert_eq!(lines[1].depth_end, 2);
+        assert_eq!(lines[3].depth_end, 0);
+    }
+
+    #[test]
+    fn braces_in_strings_do_not_count() {
+        let src = "let s = \"{{{\";\nlet t = 1;";
+        let lines = scan(src);
+        assert_eq!(lines[1].depth_start, 0);
+    }
+
+    #[test]
+    fn lifetime_is_not_a_char_literal() {
+        let l = &scan("fn f<'a>(x: &'a str) { x.wait(); }")[0];
+        assert!(l.code.contains(".wait("));
+    }
+
+    #[test]
+    fn char_literal_is_blanked() {
+        let l = &scan("let c = '{';\nlet d = 1;")[0];
+        assert_eq!(l.depth_end, 0);
+    }
+
+    #[test]
+    fn raw_string_blanked() {
+        let l = &scan(r##"let s = r#"unsafe { panic!() }"#;"##)[0];
+        assert!(!l.code.contains("unsafe"));
+        assert!(!l.code.contains("panic"));
+    }
+}

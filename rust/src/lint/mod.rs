@@ -1,0 +1,234 @@
+//! `perks-lint`: project-specific static analysis for the persistent
+//! runtime's concurrency invariants.
+//!
+//! The PERKS execution model lives and dies by hand-rolled
+//! synchronization — workers parked on condvars, slot-ordered barrier
+//! folds, countdown transitions under one scheduler lock — and by
+//! zero-alloc hot loops. Those invariants were previously enforced only
+//! dynamically (`util::counters` asserts), and one whole defect class
+//! (the condvar-wake-without-shutdown-check teardown race) was found by
+//! luck. This module is the static gate: a dependency-free,
+//! line-oriented analysis (see [`lexer`]) with named, suppressible
+//! rules, run over `rust/src/**` by `bin/perks_lint` as a blocking CI
+//! step. The full invariant catalogue lives in `docs/INVARIANTS.md`.
+//!
+//! ## Rules
+//!
+//! | rule | defect class |
+//! |------|--------------|
+//! | `condvar-shutdown` | condvar wait loop that cannot observe teardown |
+//! | `lock-order`       | acquisition order inverting a declared hierarchy |
+//! | `hot-path-alloc`   | allocation inside a `// hot-path:` fenced region |
+//! | `unsafe-safety`    | `unsafe` without a `// SAFETY:` justification |
+//! | `no-panic`         | `unwrap`/`expect`/`panic!` in recoverable runtime code |
+//! | `counter-coverage` | `util::counters` counter never incremented or never asserted |
+//!
+//! ## Suppression
+//!
+//! Any finding can be silenced on its own line or the line above with
+//!
+//! ```text
+//! // lint: allow(rule-name) -- why this site is sound
+//! ```
+//!
+//! The justification after `--` is mandatory: an `allow` without one is
+//! itself a violation (`lint-allow`). This keeps every suppression a
+//! reviewed, written-down argument — the same contract as `// SAFETY:`.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::SourceLine;
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub path: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule name (usable in `lint: allow(...)`).
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path.display(), self.line, self.rule, self.msg)
+    }
+}
+
+/// Rule registry: `(name, one-line description)` for `--list-rules` and
+/// the docs. Order is display order.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "condvar-shutdown",
+        "every Condvar wait loop must re-check a shutdown flag on wake (teardown race)",
+    ),
+    (
+        "lock-order",
+        "lock acquisitions must respect the file's declared `// lock-order: a < b` hierarchy",
+    ),
+    (
+        "hot-path-alloc",
+        "no allocating calls inside `// hot-path: begin/end` fenced regions",
+    ),
+    ("unsafe-safety", "every `unsafe` site carries a `// SAFETY:` comment"),
+    (
+        "no-panic",
+        "no unwrap/expect/panic! in non-test runtime/, cg/pool, stencil/pool code",
+    ),
+    (
+        "counter-coverage",
+        "every util::counters counter is both incremented and asserted outside its module",
+    ),
+    ("lint-allow", "every `lint: allow(...)` suppression carries a `--` justification"),
+];
+
+/// A scanned file plus its suppression table — the input every per-file
+/// rule consumes.
+pub struct FileCtx {
+    pub path: PathBuf,
+    pub lines: Vec<SourceLine>,
+    /// Per line (0-based): rules allowed on that line, with whether a
+    /// justification was written.
+    allows: Vec<Vec<(String, bool)>>,
+}
+
+impl FileCtx {
+    pub fn from_source(path: impl Into<PathBuf>, src: &str) -> Self {
+        let lines = lexer::scan(src);
+        let allows = lines.iter().map(|l| parse_allows(&l.comment)).collect();
+        Self { path: path.into(), lines, allows }
+    }
+
+    pub fn load(path: &Path) -> io::Result<Self> {
+        let src = fs::read_to_string(path)?;
+        Ok(Self::from_source(path, &src))
+    }
+
+    /// Is `rule` suppressed at 0-based line `i`? An allow applies to its
+    /// own line and the line directly below it (so it can sit above the
+    /// flagged statement).
+    pub fn suppressed(&self, rule: &str, i: usize) -> bool {
+        let hit = |idx: usize| self.allows[idx].iter().any(|(r, _)| r == rule);
+        hit(i) || (i > 0 && hit(i - 1))
+    }
+
+    fn violation(&self, i: usize, rule: &'static str, msg: String) -> Violation {
+        Violation { path: self.path.clone(), line: i + 1, rule, msg }
+    }
+}
+
+/// Parse a `lint: allow(rule)` suppression. The marker must *start*
+/// the comment (suppressions are standalone comments by convention —
+/// prose that merely mentions the syntax does not suppress anything).
+/// Returns the rule with whether a justification was written; the
+/// justification is anything non-empty after a `--` separator.
+fn parse_allows(comment: &str) -> Vec<(String, bool)> {
+    let Some(tail) = comment.trim_start().strip_prefix("lint: allow(") else {
+        return Vec::new();
+    };
+    let Some(close) = tail.find(')') else { return Vec::new() };
+    let rule = tail[..close].trim().to_string();
+    if rule.is_empty() {
+        return Vec::new();
+    }
+    let after = &tail[close + 1..];
+    let justified =
+        after.find("--").map(|d| !after[d + 2..].trim().is_empty()).unwrap_or(false);
+    vec![(rule, justified)]
+}
+
+/// Run every per-file rule over one file.
+pub fn lint_file(ctx: &FileCtx) -> Vec<Violation> {
+    let mut v = Vec::new();
+    rules::condvar_shutdown(ctx, &mut v);
+    rules::lock_order(ctx, &mut v);
+    rules::hot_path_alloc(ctx, &mut v);
+    rules::unsafe_safety(ctx, &mut v);
+    rules::no_panic(ctx, &mut v);
+    // a suppression without a justification is itself a finding — and is
+    // deliberately not suppressible
+    for (i, allows) in ctx.allows.iter().enumerate() {
+        for (rule, justified) in allows {
+            if !justified {
+                v.push(ctx.violation(
+                    i,
+                    "lint-allow",
+                    format!("allow({rule}) has no `-- justification`"),
+                ));
+            }
+        }
+    }
+    v
+}
+
+/// Lint a source tree: every `.rs` file under `root` gets the per-file
+/// rules, then the cross-file `counter-coverage` rule runs over the
+/// whole tree (plus the sibling `tests/` and `benches/` dirs, where the
+/// counter asserts live).
+pub fn lint_root(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let ctx = FileCtx::load(f)?;
+        out.extend(lint_file(&ctx));
+    }
+    rules::counter_coverage(root, &files, &mut out)?;
+    Ok(out)
+}
+
+/// Collect `.rs` files under `dir`, recursively, skipping lint fixture
+/// trees (they are known-bad by construction).
+pub(crate) fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if dir.file_name().map_or(false, |n| n == "lint_fixtures") {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().map_or(false, |e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_parsing() {
+        let a = parse_allows("lint: allow(no-panic) -- injected fault, test-only");
+        assert_eq!(a, vec![("no-panic".to_string(), true)]);
+        let b = parse_allows("lint: allow(hot-path-alloc)");
+        assert_eq!(b, vec![("hot-path-alloc".to_string(), false)]);
+        assert!(parse_allows("nothing here").is_empty());
+    }
+
+    #[test]
+    fn unjustified_allow_is_flagged() {
+        let ctx = FileCtx::from_source("x.rs", "// lint: allow(no-panic)\nlet x = 1;\n");
+        let v = lint_file(&ctx);
+        assert!(v.iter().any(|v| v.rule == "lint-allow"), "{v:?}");
+    }
+
+    #[test]
+    fn suppression_reaches_next_line() {
+        let ctx = FileCtx::from_source(
+            "x.rs",
+            "// lint: allow(unsafe-safety) -- covered by module invariant\nunsafe { x() };\n",
+        );
+        assert!(ctx.suppressed("unsafe-safety", 1));
+        assert!(!ctx.suppressed("no-panic", 1));
+    }
+}

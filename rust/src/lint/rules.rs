@@ -1,0 +1,612 @@
+//! The six perks-lint rules.
+//!
+//! Every rule here is a *heuristic* over the [`lexer`](super::lexer)
+//! line model — deliberately so: a full AST would need a dependency or
+//! thousands of lines, and the runtime's code style (one statement per
+//! line, rustfmt-enforced) makes line-level reasoning reliable. Each
+//! rule documents exactly what it matches so false positives are
+//! predictable and suppressible with a written justification.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::lexer::SourceLine;
+use super::{FileCtx, Violation};
+
+// ---------------------------------------------------------------------
+// shared text helpers
+// ---------------------------------------------------------------------
+
+fn ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Word-boundary substring search over code text.
+fn has_word(code: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || !ident_char(code[..at].chars().next_back().unwrap());
+        let after = at + word.len();
+        let after_ok = after >= code.len() || !ident_char(code[after..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return true;
+        }
+        from = after;
+    }
+    false
+}
+
+/// The dotted receiver chain ending just before byte `at` in `code`,
+/// e.g. `sh.work_cv` for `sh.work_cv.wait(...)` with `at` pointing at
+/// the final `.`.
+fn receiver_before(code: &str, at: usize) -> &str {
+    let bytes = code.as_bytes();
+    let mut start = at;
+    while start > 0 {
+        let c = bytes[start - 1] as char;
+        if ident_char(c) || c == '.' {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    &code[start..at]
+}
+
+/// Last `.`-separated segment of a receiver chain.
+fn last_segment(recv: &str) -> &str {
+    recv.rsplit('.').next().unwrap_or(recv)
+}
+
+/// First line after `open` whose end depth returns to at most the depth
+/// the block at `open` started from — i.e. the line closing that block.
+fn block_end(lines: &[SourceLine], open: usize) -> usize {
+    let base = lines[open].depth_start;
+    for (k, line) in lines.iter().enumerate().skip(open + 1) {
+        if line.depth_end <= base {
+            return k;
+        }
+    }
+    lines.len() - 1
+}
+
+/// Innermost enclosing `loop`/`while`/`for` block of line `i`:
+/// `(header_line, end_line)`. Walks outward one block at a time; a block
+/// whose header line carries no loop keyword is skipped (plain scope,
+/// `if`, match arm, …).
+fn enclosing_loop(lines: &[SourceLine], i: usize) -> Option<(usize, usize)> {
+    let mut level = lines[i].depth_start;
+    for j in (0..i).rev() {
+        if lines[j].depth_start < level && lines[j].depth_end >= lines[j].depth_start {
+            // line j opened the block we are inside of
+            let header = &lines[j].code;
+            if has_word(header, "loop") || has_word(header, "while") || has_word(header, "for") {
+                return Some((j, block_end(lines, j)));
+            }
+            level = lines[j].depth_start;
+            if level == 0 {
+                return None;
+            }
+        }
+    }
+    None
+}
+
+/// 0-based mask of lines inside `#[cfg(test)]`-gated items (the
+/// attribute line through the close of the item's block).
+fn test_mask(lines: &[SourceLine]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].code.contains("#[cfg(test)]") {
+            let base = lines[i].depth_start;
+            // find where the gated item's block opens (attribute and
+            // item header may span a few lines), then mark through its
+            // close; an unbraced item (e.g. a gated `use`) marks itself
+            let mut open = None;
+            for (k, line) in lines.iter().enumerate().skip(i).take(8) {
+                if line.depth_end > base {
+                    open = Some(k);
+                    break;
+                }
+            }
+            let end = match open {
+                Some(k) => block_end(lines, k),
+                None => i,
+            };
+            for m in mask.iter_mut().take(end + 1).skip(i) {
+                *m = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------
+// rule 1: condvar-shutdown
+// ---------------------------------------------------------------------
+
+/// Words whose presence in a wait loop's body counts as "re-checks a
+/// shutdown flag". Substring match, so `g.shutdown`, `shutdown_flag`,
+/// `stop_requested` all qualify.
+const SHUTDOWN_WORDS: &[&str] = &["shutdown", "stop"];
+
+/// Every `Condvar::wait`/`wait_timeout`/`wait_while` call — recognized
+/// by its receiver naming a condvar (`*cv*`/`*condvar*`) — must sit in
+/// a loop whose body also consults a shutdown flag. This is the PR-5
+/// teardown-race class: a worker parked across epoch stamps misses
+/// teardown forever if the wake path only checks the work predicate.
+pub(super) fn condvar_shutdown(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    const CALLS: &[&str] = &[".wait(", ".wait_timeout(", ".wait_while("];
+    for (i, line) in ctx.lines.iter().enumerate() {
+        let code = &line.code;
+        let Some(at) = CALLS.iter().filter_map(|c| code.find(c)).min() else { continue };
+        let mut recv = last_segment(receiver_before(code, at)).to_ascii_lowercase();
+        if recv.is_empty() && i > 0 {
+            // rustfmt splits long chains: `sh.done_cv` / `.wait_timeout(..)`
+            // — the receiver is the previous line's trailing segment
+            let prev = ctx.lines[i - 1].code.trim_end();
+            recv = last_segment(receiver_before(prev, prev.len())).to_ascii_lowercase();
+        }
+        if !(recv.contains("cv") || recv.contains("condvar")) {
+            continue; // not a condvar (std Barrier::wait, futures, …)
+        }
+        if ctx.suppressed("condvar-shutdown", i) {
+            continue;
+        }
+        let ok = match enclosing_loop(&ctx.lines, i) {
+            Some((start, end)) => ctx.lines[start..=end]
+                .iter()
+                .any(|l| SHUTDOWN_WORDS.iter().any(|w| l.code.to_ascii_lowercase().contains(w))),
+            None => false,
+        };
+        if !ok {
+            out.push(ctx.violation(
+                i,
+                "condvar-shutdown",
+                format!(
+                    "condvar wait on `{recv}` in a loop that never re-checks a \
+                     shutdown/stop flag (teardown can strand this thread)"
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule 2: lock-order
+// ---------------------------------------------------------------------
+
+/// A currently-held lock guard.
+struct Hold {
+    name: String,
+    rank: usize,
+    depth: usize,
+    guard: Option<String>,
+}
+
+/// Enforce the file's declared lock hierarchy. A file opts in with
+///
+/// ```text
+/// // lock-order: sched < tenant < slab
+/// ```
+///
+/// naming mutex *fields* in acquisition order (lower first). Every
+/// `name.lock()` whose receiver's final segment is a declared name is
+/// tracked as a hold until its scope closes (brace depth drops below
+/// the acquisition depth) or the guard is explicitly `drop(..)`ed.
+/// Acquiring a lower- or equally-ranked lock while a higher one is held
+/// is an inversion (or a self-deadlock) and is flagged.
+pub(super) fn lock_order(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    // the declaration must *start* its comment, like every lint marker
+    let mut ranks: Vec<String> = Vec::new();
+    for line in &ctx.lines {
+        if let Some(decl) = line.comment.trim_start().strip_prefix("lock-order:") {
+            ranks = decl
+                .split('<')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty() && s.chars().all(ident_char))
+                .collect();
+            break;
+        }
+    }
+    if ranks.len() < 2 {
+        return; // no (meaningful) hierarchy declared
+    }
+    let rank_of = |name: &str| ranks.iter().position(|r| r == name);
+    let mut holds: Vec<Hold> = Vec::new();
+    for (i, line) in ctx.lines.iter().enumerate() {
+        // scope-based release
+        holds.retain(|h| line.depth_start >= h.depth);
+        // explicit drop(guard) release
+        if line.code.contains("drop(") {
+            holds.retain(|h| match &h.guard {
+                Some(g) => !line.code.contains(&format!("drop({g})")),
+                None => true,
+            });
+        }
+        let code = &line.code;
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(".lock()") {
+            let at = from + pos;
+            from = at + ".lock()".len();
+            let name = last_segment(receiver_before(code, at)).to_string();
+            let Some(rank) = rank_of(&name) else { continue };
+            if !ctx.suppressed("lock-order", i) {
+                for h in &holds {
+                    if h.rank > rank {
+                        out.push(ctx.violation(
+                            i,
+                            "lock-order",
+                            format!(
+                                "acquiring `{name}` while holding `{}` inverts the declared \
+                                 order `{}`",
+                                h.name,
+                                ranks.join(" < "),
+                            ),
+                        ));
+                    } else if h.rank == rank {
+                        out.push(ctx.violation(
+                            i,
+                            "lock-order",
+                            format!("re-acquiring `{name}` while already held (self-deadlock)"),
+                        ));
+                    }
+                }
+            }
+            let guard = line
+                .code
+                .trim_start()
+                .strip_prefix("let ")
+                .map(|r| r.trim_start().trim_start_matches("mut "))
+                .map(|r| r.chars().take_while(|&c| ident_char(c)).collect::<String>())
+                .filter(|g| !g.is_empty());
+            holds.push(Hold { name, rank, depth: line.depth_start, guard });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule 3: hot-path-alloc
+// ---------------------------------------------------------------------
+
+/// Allocating (or otherwise per-iteration-cost) constructs banned
+/// between `// hot-path: begin` and `// hot-path: end` markers.
+const BANNED_ALLOCS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    ".to_vec()",
+    ".clone()",
+    ".collect()",
+    ".collect::",
+    "Box::new",
+    "format!",
+    ".to_string()",
+    "String::new",
+    "String::from",
+    "with_capacity",
+    "Arc::new",
+    "Rc::new",
+];
+
+/// The pool/farm advance loops are the product: the paper's speedup is
+/// exactly "nothing allocates, nothing spawns, per iteration". The
+/// fences make that reviewable: any allocating call inside one is
+/// flagged unless suppressed with a justification (e.g. a cold error
+/// path that only runs once on failure).
+pub(super) fn hot_path_alloc(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    // markers must *start* the comment — prose that merely mentions the
+    // syntax (like this module's docs) is not a fence
+    let mut open: Option<usize> = None;
+    for (i, line) in ctx.lines.iter().enumerate() {
+        if line.comment.trim_start().starts_with("hot-path: begin") {
+            if let Some(prev) = open {
+                out.push(ctx.violation(
+                    i,
+                    "hot-path-alloc",
+                    format!("nested `hot-path: begin` (previous fence opened on line {})", prev + 1),
+                ));
+            }
+            open = Some(i);
+            continue;
+        }
+        if line.comment.trim_start().starts_with("hot-path: end") {
+            if open.is_none() {
+                out.push(ctx.violation(
+                    i,
+                    "hot-path-alloc",
+                    "`hot-path: end` without a matching begin".to_string(),
+                ));
+            }
+            open = None;
+            continue;
+        }
+        if open.is_none() || ctx.suppressed("hot-path-alloc", i) {
+            continue;
+        }
+        for b in BANNED_ALLOCS {
+            if line.code.contains(b) {
+                out.push(ctx.violation(
+                    i,
+                    "hot-path-alloc",
+                    format!("`{}` inside a hot-path fence", b.trim_matches('.')),
+                ));
+            }
+        }
+    }
+    if let Some(prev) = open {
+        out.push(ctx.violation(
+            prev,
+            "hot-path-alloc",
+            "`hot-path: begin` fence never closed".to_string(),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule 4: unsafe-safety
+// ---------------------------------------------------------------------
+
+/// How many lines above an `unsafe` site a `SAFETY` comment may sit
+/// (doc comments on `unsafe fn`s span a few lines).
+const SAFETY_WINDOW: usize = 6;
+
+/// Every `unsafe` keyword — block, fn, or impl — needs a comment
+/// containing `SAFETY` on the same line or within the preceding few
+/// lines. The comment *is* the proof obligation: the runtime's unsafe
+/// sites are all justified by a protocol (claim/complete handshake,
+/// band ownership between barriers), and the argument must be written
+/// where the site is.
+pub(super) fn unsafe_safety(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    for (i, line) in ctx.lines.iter().enumerate() {
+        if !has_word(&line.code, "unsafe") || ctx.suppressed("unsafe-safety", i) {
+            continue;
+        }
+        let lo = i.saturating_sub(SAFETY_WINDOW);
+        let covered =
+            ctx.lines[lo..=i].iter().any(|l| l.comment.contains("SAFETY"));
+        if !covered {
+            out.push(ctx.violation(
+                i,
+                "unsafe-safety",
+                "`unsafe` without a `// SAFETY:` comment nearby".to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule 5: no-panic
+// ---------------------------------------------------------------------
+
+/// Is this file in the no-panic scope: code the resilience layer must
+/// be able to recover, where a panic means a stranded countdown or a
+/// poisoned pool instead of a structured `Error::Fault`.
+fn no_panic_scope(path: &Path) -> bool {
+    let p = path.to_string_lossy().replace('\\', "/");
+    p.contains("/runtime/") || p.ends_with("cg/pool.rs") || p.ends_with("stencil/pool.rs")
+}
+
+/// No `.unwrap()` / `.expect(` / `panic!` in non-test runtime, cg-pool,
+/// or stencil-pool code. `unwrap_or_else(|p| p.into_inner())` — the
+/// repo-wide poison-recovery idiom — is *not* a panic site and is not
+/// matched. `unreachable!` on exhaustive phase matches is likewise out
+/// of scope (it documents impossibility, not a recoverable failure).
+pub(super) fn no_panic(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    if !no_panic_scope(&ctx.path) {
+        return;
+    }
+    let mask = test_mask(&ctx.lines);
+    for (i, line) in ctx.lines.iter().enumerate() {
+        if mask[i] || ctx.suppressed("no-panic", i) {
+            continue;
+        }
+        let code = &line.code;
+        for pat in [".unwrap()", ".expect(", "panic!"] {
+            if code.contains(pat) {
+                out.push(ctx.violation(
+                    i,
+                    "no-panic",
+                    format!(
+                        "`{}` in recoverable runtime code (surface a structured Error instead)",
+                        pat.trim_matches('.'),
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule 6: counter-coverage
+// ---------------------------------------------------------------------
+
+/// Cross-file rule: every counter declared in `util/counters.rs` (one
+/// `note_*` incrementer + one getter) must be incremented somewhere
+/// *and* read/asserted somewhere outside the counters module itself —
+/// a counter nobody asserts is an invariant nobody checks. The scan
+/// covers `root` plus the sibling `tests/` and `benches/` trees, where
+/// the integration asserts live.
+pub(super) fn counter_coverage(
+    root: &Path,
+    root_files: &[PathBuf],
+    out: &mut Vec<Violation>,
+) -> io::Result<()> {
+    let counters_path = root.join("util").join("counters.rs");
+    if !counters_path.exists() {
+        return Ok(());
+    }
+    let ctr = FileCtx::load(&counters_path)?;
+    // declared counters: (name, 0-based decl line)
+    let mut names: Vec<(String, usize)> = Vec::new();
+    for (i, line) in ctr.lines.iter().enumerate() {
+        let code = line.code.trim();
+        if let Some(rest) = code.strip_prefix("pub fn note_") {
+            let name: String = rest.chars().take_while(|&c| ident_char(c)).collect();
+            if !name.is_empty() {
+                names.push((name, i));
+            }
+        }
+    }
+    // scan set: the linted tree plus sibling tests/ and benches/
+    let mut files: Vec<PathBuf> = root_files.to_vec();
+    if let Some(parent) = root.parent() {
+        for sib in ["tests", "benches"] {
+            let dir = parent.join(sib);
+            if dir.is_dir() {
+                super::walk(&dir, &mut files)?;
+            }
+        }
+    }
+    let mut bodies = Vec::new();
+    for f in &files {
+        if f.ends_with(Path::new("util").join("counters.rs").as_path()) {
+            continue;
+        }
+        let ctx = FileCtx::load(f)?;
+        let code: String =
+            ctx.lines.iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n");
+        bodies.push(code);
+    }
+    for (name, decl) in names {
+        let incremented = bodies.iter().any(|b| b.contains(&format!("note_{name}(")));
+        let asserted = bodies.iter().any(|b| has_word(b, &name) && b.contains(&format!("{name}()")));
+        if !incremented {
+            out.push(Violation {
+                path: counters_path.clone(),
+                line: decl + 1,
+                rule: "counter-coverage",
+                msg: format!("counter `{name}` is never incremented outside util::counters"),
+            });
+        }
+        if !asserted {
+            out.push(Violation {
+                path: counters_path.clone(),
+                line: decl + 1,
+                rule: "counter-coverage",
+                msg: format!(
+                    "counter `{name}` is never read/asserted outside util::counters \
+                     (an unasserted counter checks nothing)"
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lint_file;
+
+    fn lint(src: &str) -> Vec<Violation> {
+        lint_file(&FileCtx::from_source("src/runtime/x.rs", src))
+    }
+
+    fn rules_of(v: &[Violation]) -> Vec<&str> {
+        v.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn wait_without_shutdown_flagged() {
+        let src = "fn f() {\n    loop {\n        g = work_cv.wait(g);\n    }\n}\n";
+        assert!(rules_of(&lint(src)).contains(&"condvar-shutdown"), "{:?}", lint(src));
+    }
+
+    #[test]
+    fn wait_with_shutdown_passes() {
+        let src = "fn f() {\n    loop {\n        if g.shutdown { return; }\n        g = work_cv.wait(g);\n    }\n}\n";
+        assert!(!rules_of(&lint(src)).contains(&"condvar-shutdown"));
+    }
+
+    #[test]
+    fn wait_outside_loop_flagged() {
+        let src = "fn f() {\n    g = done_cv.wait(g);\n}\n";
+        assert!(rules_of(&lint(src)).contains(&"condvar-shutdown"));
+    }
+
+    #[test]
+    fn non_condvar_wait_ignored() {
+        let src = "fn f() {\n    barrier.wait();\n    handle.wait();\n}\n";
+        assert!(!rules_of(&lint(src)).contains(&"condvar-shutdown"));
+    }
+
+    #[test]
+    fn lock_inversion_flagged() {
+        let src = "// lock-order: sched < slab\nfn f() {\n    let g = slab.lock();\n    let h = sched.lock();\n}\n";
+        let v = lint(src);
+        assert!(rules_of(&v).contains(&"lock-order"), "{v:?}");
+    }
+
+    #[test]
+    fn lock_in_declared_order_passes() {
+        let src = "// lock-order: sched < slab\nfn f() {\n    let g = sched.lock();\n    let h = slab.lock();\n}\n";
+        assert!(!rules_of(&lint(src)).contains(&"lock-order"));
+    }
+
+    #[test]
+    fn lock_released_by_scope_and_drop() {
+        let src = "// lock-order: sched < slab\nfn f() {\n    {\n        let g = slab.lock();\n    }\n    let h = sched.lock();\n    drop(h);\n    let g2 = slab.lock();\n    let h2 = slab.lock();\n}\n";
+        // h dropped before g2; but h2 re-acquires slab while g2 held
+        let v = lint(src);
+        assert_eq!(v.iter().filter(|v| v.rule == "lock-order").count(), 1, "{v:?}");
+    }
+
+    #[test]
+    fn hot_path_alloc_flagged_and_fence_balance() {
+        let src = "fn f() {\n    // hot-path: begin\n    let v = Vec::new();\n    let s = format!(\"x\");\n    // hot-path: end\n}\n";
+        let v = lint(src);
+        assert_eq!(v.iter().filter(|v| v.rule == "hot-path-alloc").count(), 2, "{v:?}");
+        let unclosed = "fn f() {\n    // hot-path: begin\n}\n";
+        assert!(rules_of(&lint(unclosed)).contains(&"hot-path-alloc"));
+    }
+
+    #[test]
+    fn hot_path_suppression_honored() {
+        let src = "fn f() {\n    // hot-path: begin\n    // lint: allow(hot-path-alloc) -- cold error path\n    let s = format!(\"x\");\n    // hot-path: end\n}\n";
+        let v = lint(src);
+        assert!(!rules_of(&v).contains(&"hot-path-alloc"), "{v:?}");
+    }
+
+    #[test]
+    fn unsafe_without_safety_flagged() {
+        let src = "fn f() {\n    unsafe { g() };\n}\n";
+        assert!(rules_of(&lint(src)).contains(&"unsafe-safety"));
+        let ok = "fn f() {\n    // SAFETY: g is only called while parked\n    unsafe { g() };\n}\n";
+        assert!(!rules_of(&lint(ok)).contains(&"unsafe-safety"));
+    }
+
+    #[test]
+    fn safety_in_doc_comment_counts() {
+        let src = "/// Run one shard. SAFETY: claimed by one worker.\npub unsafe fn run(&self) {}\n";
+        assert!(!rules_of(&lint(src)).contains(&"unsafe-safety"));
+    }
+
+    #[test]
+    fn no_panic_in_scope_flagged() {
+        let src = "fn f() {\n    let x = y.unwrap();\n    let z = w.expect(\"set\");\n    panic!(\"boom\");\n}\n";
+        let v = lint(src);
+        assert_eq!(v.iter().filter(|v| v.rule == "no-panic").count(), 3, "{v:?}");
+    }
+
+    #[test]
+    fn no_panic_skips_tests_poison_idiom_and_out_of_scope() {
+        let src = "fn f() {\n    let g = m.lock().unwrap_or_else(|p| p.into_inner());\n}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(!rules_of(&lint(src)).contains(&"no-panic"));
+        let out_of_scope = lint_file(&FileCtx::from_source(
+            "src/util/json.rs",
+            "fn f() { x.unwrap(); }\n",
+        ));
+        assert!(!rules_of(&out_of_scope).contains(&"no-panic"));
+    }
+
+    #[test]
+    fn string_literals_never_trip_rules() {
+        let src = "fn f() {\n    let s = \"unsafe panic! .unwrap() Vec::new\";\n}\n";
+        assert!(lint(src).is_empty(), "{:?}", lint(src));
+    }
+}

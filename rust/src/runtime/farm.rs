@@ -799,6 +799,12 @@ struct FarmState {
     faults: Option<FaultPlan>,
 }
 
+// lock-order: ready < ctl
+// The executor wake-queue lock (`ready`, in plane::reactor) must never
+// be acquired while holding the scheduler lock (`ctl`): completions
+// defer their wakers and fire them only after the scheduler guard
+// drops. Declared here so perks-lint flags any future `.ready.lock()`
+// under `ctl` in this file.
 struct FarmShared {
     ctl: Mutex<FarmState>,
     work_cv: Condvar,
@@ -1236,6 +1242,7 @@ impl FarmHandle {
         // contract errors come before admission: a double submit must
         // fail loudly, never park on the gate it can only deadlock
         let bt = {
+            // lint: allow(no-panic) -- the session owning `tid` is alive (it called us by &self), so its tenant slot cannot have been released
             let t = g.tenants[tid].as_ref().expect("tenant released");
             if t.active {
                 return Err(Error::Solver(
@@ -1250,6 +1257,7 @@ impl FarmHandle {
         let mut g = acquire_plane_slots(sh, g, tid, 1 + rest.len())?;
         let now = sh.now();
         let tick = g.tick;
+        // lint: allow(no-panic) -- the session owning `tid` is alive (it called us by &self), so its tenant slot cannot have been released
         let t = g.tenants[tid].as_mut().expect("tenant released");
         t.active = true;
         t.done_flag = false;
@@ -1500,6 +1508,7 @@ impl FarmHandle {
         }
         // contract errors before admission (see submit_stencil_cmd)
         {
+            // lint: allow(no-panic) -- the session owning `tid` is alive (it called us by &self), so its tenant slot cannot have been released
             let t = g.tenants[tid].as_ref().expect("tenant released");
             if t.active {
                 return Err(Error::Solver(
@@ -1517,6 +1526,7 @@ impl FarmHandle {
         let mut g = acquire_plane_slots(sh, g, tid, 1 + rest.len())?;
         let now = sh.now();
         let tick = g.tick;
+        // lint: allow(no-panic) -- the session owning `tid` is alive (it called us by &self), so its tenant slot cannot have been released
         let t = g.tenants[tid].as_mut().expect("tenant released");
         let engine = t.engine.clone();
         let EngineKind::Cg(ref e) = *engine else { unreachable!() };
@@ -1691,6 +1701,7 @@ impl FarmHandle {
     /// Snapshot a stencil tenant's padded domain (between commands only).
     fn stencil_state(&self, tid: usize) -> Result<Vec<f64>> {
         let g = self.shared.lock();
+        // lint: allow(no-panic) -- the session owning `tid` is alive (it called us by &self), so its tenant slot cannot have been released
         let t = g.tenants[tid].as_ref().expect("tenant released");
         if t.active {
             return Err(Error::Solver(
@@ -2060,8 +2071,12 @@ fn worker_main(sh: &FarmShared) {
         // (that would hang the client's wait): surface it as a command
         // failure instead. Unlike the barrier pools, a panicking shard
         // strands nothing — the other shards complete independently.
+        // SAFETY: the claim/complete handshake hands this worker exclusive
+        // ownership of `task.shard` until `complete` runs, so the raw
+        // shard access inside `run_shard` cannot race a peer.
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             if matches!(task.inject, Some(FaultKind::Panic)) {
+                // lint: allow(no-panic) -- deliberate fault injection; caught by the catch_unwind directly above and surfaced as a command failure
                 panic!("injected fault");
             }
             let out =
@@ -2089,8 +2104,11 @@ fn worker_main(sh: &FarmShared) {
 /// tenants deferred by a recovery backoff report their earliest resume
 /// time through `next_due` so the caller can park with a timeout.
 fn claim(g: &mut FarmState, sh: &FarmShared, next_due: &mut Option<f64>) -> Option<Task> {
+    // hot-path: begin -- runs under the scheduler lock on every worker
+    // wake; anything allocating here serializes the whole farm
     // tenants backing off after a restore are stashed aside (order
     // preserved) instead of claimed — one bounded scan, no rotation spin
+    // lint: allow(hot-path-alloc) -- empty Vec: no heap touch until a deferral actually occurs, which only happens on the cold recovery-backoff path
     let mut deferred: Vec<usize> = Vec::new();
     let mut out = None;
     while let Some(tid) = g.ready.pop_front() {
@@ -2132,6 +2150,7 @@ fn claim(g: &mut FarmState, sh: &FarmShared, next_due: &mut Option<f64>) -> Opti
                 },
                 epoch: t.epoch,
                 inject: None,
+                // lint: allow(hot-path-alloc) -- Arc refcount bump, not a heap allocation; the engine itself is shared, never copied
                 engine: t.engine.clone(),
             };
             let more = t.next_shard < t.nshards;
@@ -2172,6 +2191,7 @@ fn claim(g: &mut FarmState, sh: &FarmShared, next_due: &mut Option<f64>) -> Opti
     for tid in deferred.into_iter().rev() {
         g.ready.push_front(tid);
     }
+    // hot-path: end
     out
 }
 
@@ -2241,6 +2261,7 @@ fn acquire_plane_slots<'a>(
         if g.plane_inflight.saturating_add(need) <= cap && held.saturating_add(need) <= per {
             g.plane_inflight += need;
             g.plane_peak = g.plane_peak.max(g.plane_inflight);
+            // lint: allow(no-panic) -- tenant presence was checked a few lines up under the same uninterrupted lock hold
             g.tenants[tid].as_mut().expect("tenant checked above").slots_held += need;
             return Ok(g);
         }
@@ -2254,6 +2275,7 @@ fn acquire_plane_slots<'a>(
                 g = sh.gate_cv.wait(g).unwrap_or_else(|p| p.into_inner());
             }
             AdmissionPolicy::Timeout(_) => {
+                // lint: allow(no-panic) -- `deadline` is Some whenever the policy is Timeout; both are set together at admission entry
                 let deadline = deadline.expect("deadline set for Timeout policy");
                 let now = Instant::now();
                 if now >= deadline {
@@ -2621,6 +2643,7 @@ fn take_checkpoint(t: &mut Tenant, sh: &FarmShared) {
 /// ours; because every reduction folds fixed slots in slot order, the
 /// replay from here is bit-identical to an uninjected run.
 fn restore_tenant(t: &mut Tenant, sh: &FarmShared) -> u8 {
+    // lint: allow(no-panic) -- callers only reach restore after observing a checkpoint for this tenant under the scheduler lock
     let ck = t.checkpoint.take().expect("restore without a checkpoint");
     let replayed = t.epoch.saturating_sub(ck.epoch);
     t.failure = None;

@@ -218,6 +218,8 @@ pub fn spmv_parallel(csr: &Csr, plan: &MergePlan, x: &[f64], y: &mut [f64], work
 
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f64);
+// SAFETY: the pointer targets a buffer that outlives the scoped threads,
+// and each thread writes only its own disjoint `[lo, hi)` share.
 unsafe impl Send for SendPtr {}
 
 impl SendPtr {

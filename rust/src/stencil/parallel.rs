@@ -69,6 +69,9 @@ pub(crate) struct SharedGrid {
     len: usize,
 }
 
+// SAFETY: all cross-thread access goes through `read`/`write`, whose
+// callers hold disjoint band ownership between barriers; the UnsafeCell
+// is never touched outside those accessors while threads are live.
 unsafe impl Sync for SharedGrid {}
 
 impl SharedGrid {
@@ -81,16 +84,20 @@ impl SharedGrid {
         self.len
     }
 
-    /// Read a range. Caller must guarantee no concurrent writer overlaps
-    /// the range (enforced by the band ownership + barrier protocol).
+    /// Read a range.
+    ///
+    /// SAFETY: caller must guarantee no concurrent writer overlaps the
+    /// range (enforced by the band ownership + barrier protocol).
     pub(crate) unsafe fn read(&self, range: std::ops::Range<usize>, dst: &mut [f64]) {
         debug_assert!(range.end <= self.len && range.len() == dst.len());
         let base = (*self.data.get()).as_ptr();
         std::ptr::copy_nonoverlapping(base.add(range.start), dst.as_mut_ptr(), range.len());
     }
 
-    /// Write a range. Caller must guarantee exclusive ownership of the
-    /// range between barriers.
+    /// Write a range.
+    ///
+    /// SAFETY: caller must guarantee exclusive ownership of the range
+    /// between barriers.
     pub(crate) unsafe fn write(&self, offset: usize, src: &[f64]) {
         debug_assert!(offset + src.len() <= self.len);
         let base = (*self.data.get()).as_mut_ptr();
@@ -487,6 +494,8 @@ pub fn host_loop(
                 scope.spawn(move || {
                     // load slab from global each step
                     let mut local = vec![0.0f64; plan.slab.len()];
+                    // SAFETY: src is read-only this step; writers only
+                    // touch dst, and the swap happens after scope join.
                     unsafe { src_ref.read(plan.slab.clone(), &mut local) };
                     let slab_first = plan.slab.start / plane;
                     let band_planes = plan.band.len();
@@ -513,6 +522,9 @@ pub fn host_loop(
                         &mut band_new,
                         plan.band.start,
                     );
+                    // SAFETY: bands partition the interior, so this
+                    // thread owns [band.start*plane, +band_len) of dst
+                    // exclusively until the scope joins.
                     unsafe { dst_ref.write(plan.band.start * plane, &band_new) };
                 });
             }
@@ -523,6 +535,8 @@ pub fn host_loop(
             .map(|p| (p.slab.len() + p.band.len() * plane) as u64 * 8)
             .sum::<u64>();
         // halo planes of dst keep the Dirichlet values: copy from src once
+        // SAFETY: the worker scope has joined, so this thread is the
+        // sole accessor of both grids; halo ranges are in bounds.
         unsafe {
             src.read(0..halo_lo.len(), &mut halo_lo);
             dst.write(0, &halo_lo);

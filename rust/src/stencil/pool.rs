@@ -402,6 +402,7 @@ impl StencilPool {
         let outcome = {
             let mut g = self.shared.ctl.lock();
             while g.finished < self.workers {
+                // lint: allow(condvar-shutdown) -- client-side completion wait; the pool is torn down only by this same thread's Drop, so no concurrent shutdown can strand it
                 g = self.shared.ctl.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
             }
             g.outcome.clone()
@@ -648,6 +649,8 @@ fn run_steps(
     let mut done = 0usize;
     let mut residual = None;
     let mut error = None;
+    // hot-path: begin -- the resident epoch loop: slab-local compute,
+    // boundary exchange, and barrier folds, with no allocation allowed
     while done < steps {
         // a trailing partial epoch advances fewer sub-steps; the slab's
         // bt*r halo depth covers any sub <= bt
@@ -698,6 +701,7 @@ fn run_steps(
         if hi_first < plan.band.end {
             let hi_off = (hi_first - slab_first) * plane;
             let hi_len = (plan.band.end - hi_first) * plane;
+            // SAFETY: band-owned planes; no reader until the barrier below.
             unsafe { sh.grid.write(hi_first * plane, &cur[hi_off..hi_off + hi_len]) };
         }
         moved += (boundary_union_planes(depth, band_planes) * plane * 8) as u64;
@@ -724,6 +728,7 @@ fn run_steps(
             let off = halo_hi.start * plane;
             let len = halo_hi.len() * plane;
             let loff = (halo_hi.start - slab_first) * plane;
+            // SAFETY: read-only phase between the two barriers.
             unsafe {
                 sh.grid.read(off..off + len, &mut cur[loff..loff + len]);
             }
@@ -739,6 +744,7 @@ fn run_steps(
             // replicates the poisoned norm identically on every worker —
             // so this break is exactly as collective as a tolerance stop
             if !res.is_finite() {
+                // lint: allow(hot-path-alloc) -- cold error exit: the format! runs once, right before the loop breaks
                 error = Some(format!(
                     "non-finite residual ({res}) at step {done} (epoch {})",
                     done.div_ceil(bt)
@@ -752,6 +758,7 @@ fn run_steps(
             }
         }
     }
+    // hot-path: end
     // --- final store: whole band back to global, so the main thread can
     // observe the advanced state between runs ---
     let band_off = (plan.band.start - slab_first) * plane;

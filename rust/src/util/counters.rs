@@ -29,6 +29,26 @@
 //! `stencil::pool::StencilPool::spawn_count`,
 //! `stencil::pool::StencilPool::barrier_syncs`) instead and benches
 //! (single-threaded mains) read these.
+//!
+//! ## Memory ordering
+//!
+//! Two regimes, chosen per counter family (each `note_*` documents its
+//! own pairing the way a loom model would name its interleavings):
+//!
+//! - **Relaxed** for [`thread_spawns`] and [`barrier_syncs`]: every
+//!   reader observes them only after a join or a completion handshake
+//!   (scope exit, pool `finished` countdown), which already publishes
+//!   the increments with a stronger edge. Relaxed still guarantees a
+//!   per-counter total modification order, so monotonicity asserts
+//!   (`after >= before + n`) can never observe a decrease.
+//! - **Release increments / Acquire loads** for the farm, plane, and
+//!   resilience families: integration tests assert their deltas while
+//!   *other* tests' farms are still running workers that increment the
+//!   same statics. The Release/Acquire pairing makes each counted
+//!   event's side effects (the shed error, the restored state, the
+//!   checkpoint copy) visible to any reader that observes its count, so
+//!   an assert that sees `plane_sheds() >= base + 1` is also entitled
+//!   to see the `Error::Shed` that paid for it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -72,44 +92,48 @@ pub fn barrier_syncs() -> u64 {
 /// [`thread_spawns`] does **not**: admissions reuse the farm's resident
 /// workers instead of building pools.
 pub fn note_farm_admissions(n: u64) {
-    FARM_ADMISSIONS.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: client thread at admit; reader: any test thread auditing admissions (Acquire load below).
+    FARM_ADMISSIONS.fetch_add(n, Ordering::Release);
 }
 
 /// Total farm session admissions since process start.
 pub fn farm_admissions() -> u64 {
-    FARM_ADMISSIONS.load(Ordering::Relaxed)
+    FARM_ADMISSIONS.load(Ordering::Acquire)
 }
 
 /// Record `n` commands (advance/advance_until/run) enqueued to farms.
 pub fn note_farm_commands(n: u64) {
-    FARM_COMMANDS.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: client thread at submit; reader: any test thread auditing commands (Acquire load below).
+    FARM_COMMANDS.fetch_add(n, Ordering::Release);
 }
 
 /// Total farm commands since process start.
 pub fn farm_commands() -> u64 {
-    FARM_COMMANDS.load(Ordering::Relaxed)
+    FARM_COMMANDS.load(Ordering::Acquire)
 }
 
 /// Record `n` completed farm shard tasks (the farm's unit of scheduled
 /// work — band or block shards of one phase).
 pub fn note_farm_tasks(n: u64) {
-    FARM_TASKS.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: farm worker at task completion; reader: racing test assert (Acquire load below).
+    FARM_TASKS.fetch_add(n, Ordering::Release);
 }
 
 /// Total farm shard tasks since process start.
 pub fn farm_tasks() -> u64 {
-    FARM_TASKS.load(Ordering::Relaxed)
+    FARM_TASKS.load(Ordering::Acquire)
 }
 
 /// Record `n` batches enqueued to the submission plane (one per
 /// `submit`/`submit_graph`, however many segments the batch chains).
 pub fn note_plane_batches(n: u64) {
-    PLANE_BATCHES.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: submitting client under the scheduler lock; reader: racing test assert (Acquire load below).
+    PLANE_BATCHES.fetch_add(n, Ordering::Release);
 }
 
 /// Total submission-plane batches since process start.
 pub fn plane_batches() -> u64 {
-    PLANE_BATCHES.load(Ordering::Relaxed)
+    PLANE_BATCHES.load(Ordering::Acquire)
 }
 
 /// Record `n` scheduler-lock acquisitions taken to *enqueue* work. The
@@ -118,83 +142,90 @@ pub fn plane_batches() -> u64 {
 /// transition under the already-held lock, never by a client re-acquire
 /// per epoch.
 pub fn note_sched_lock_acquisitions(n: u64) {
-    SCHED_LOCK_ACQUISITIONS.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: submitting client at enqueue; reader: racing test assert (Acquire load below).
+    SCHED_LOCK_ACQUISITIONS.fetch_add(n, Ordering::Release);
 }
 
 /// Total enqueue-side scheduler-lock acquisitions since process start.
 pub fn sched_lock_acquisitions() -> u64 {
-    SCHED_LOCK_ACQUISITIONS.load(Ordering::Relaxed)
+    SCHED_LOCK_ACQUISITIONS.load(Ordering::Acquire)
 }
 
 /// Record `n` submissions shed by admission control (`Shed` policy or a
 /// batch larger than the configured caps).
 pub fn note_plane_sheds(n: u64) {
-    PLANE_SHEDS.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: rejected submitter; reader: a test pairing the count with the Shed error (Acquire load below).
+    PLANE_SHEDS.fetch_add(n, Ordering::Release);
 }
 
 /// Total shed submissions since process start.
 pub fn plane_sheds() -> u64 {
-    PLANE_SHEDS.load(Ordering::Relaxed)
+    PLANE_SHEDS.load(Ordering::Acquire)
 }
 
 /// Record `n` submissions that timed out waiting for a plane slot
 /// (`Timeout` admission policy).
 pub fn note_plane_timeouts(n: u64) {
-    PLANE_TIMEOUTS.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: expired submitter; reader: a test pairing the count with the Timeout error (Acquire load below).
+    PLANE_TIMEOUTS.fetch_add(n, Ordering::Release);
 }
 
 /// Total timed-out submissions since process start.
 pub fn plane_timeouts() -> u64 {
-    PLANE_TIMEOUTS.load(Ordering::Relaxed)
+    PLANE_TIMEOUTS.load(Ordering::Acquire)
 }
 
 /// Record `n` faults injected by an installed
 /// `runtime::resilience::FaultPlan` (panic / NaN / stall coordinates
 /// claimed by the farm scheduler). Clean benches assert this stays 0.
 pub fn note_faults_injected(n: u64) {
-    FAULTS_INJECTED.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: farm scheduler at claim; reader: racing clean-bench/test assert (Acquire load below).
+    FAULTS_INJECTED.fetch_add(n, Ordering::Release);
 }
 
 /// Total injected faults since process start.
 pub fn faults_injected() -> u64 {
-    FAULTS_INJECTED.load(Ordering::Relaxed)
+    FAULTS_INJECTED.load(Ordering::Acquire)
 }
 
 /// Record `n` supervised recoveries: a retryable failure (panicked or
 /// NaN-tripped command) restored from its last checkpoint and replayed
 /// under a `runtime::resilience::RetryPolicy`.
 pub fn note_farm_recoveries(n: u64) {
-    FARM_RECOVERIES.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: farm transition during restore; reader: racing test assert (Acquire load below).
+    FARM_RECOVERIES.fetch_add(n, Ordering::Release);
 }
 
 /// Total supervised recoveries since process start. The clean-bench
 /// invariant gated by `bench_check` is that this stays 0 without
 /// injection.
 pub fn farm_recoveries() -> u64 {
-    FARM_RECOVERIES.load(Ordering::Relaxed)
+    FARM_RECOVERIES.load(Ordering::Acquire)
 }
 
 /// Record `n` epochs re-executed by recovery replays (the distance from
 /// the restored checkpoint to the failure point — the work the
 /// checkpoint cadence bounds).
 pub fn note_replayed_epochs(n: u64) {
-    REPLAYED_EPOCHS.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: farm transition during restore; reader: racing test assert (Acquire load below).
+    REPLAYED_EPOCHS.fetch_add(n, Ordering::Release);
 }
 
 /// Total replayed epochs since process start.
 pub fn replayed_epochs() -> u64 {
-    REPLAYED_EPOCHS.load(Ordering::Relaxed)
+    REPLAYED_EPOCHS.load(Ordering::Acquire)
 }
 
 /// Record `n` bytes copied into resident-state checkpoints (cadence
 /// snapshots and command-entry snapshots alike).
 pub fn note_checkpoint_bytes(n: u64) {
-    CHECKPOINT_BYTES.fetch_add(n, Ordering::Relaxed);
+    // pairing: writer: checkpointing worker/transition; reader: racing test assert (Acquire load below).
+    CHECKPOINT_BYTES.fetch_add(n, Ordering::Release);
 }
 
 /// Total checkpointed bytes since process start.
 pub fn checkpoint_bytes() -> u64 {
-    CHECKPOINT_BYTES.load(Ordering::Relaxed)
+    CHECKPOINT_BYTES.load(Ordering::Acquire)
 }
 
 #[cfg(test)]

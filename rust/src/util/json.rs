@@ -39,6 +39,11 @@ impl Json {
     }
 
     /// Object field lookup (`None` on non-objects / missing keys).
+    ///
+    /// Duplicate keys are kept as parsed (emission order); lookup
+    /// returns the **first** occurrence. The bench emitters never
+    /// duplicate keys, so this is a documented tie-break for hand-edited
+    /// artifacts, not a schema feature.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -280,6 +285,40 @@ mod tests {
         ] {
             assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
         }
+    }
+
+    #[test]
+    fn truncated_documents_error_without_panicking() {
+        // every prefix of a real artifact line must produce Err, never a
+        // panic — bench_check reads whatever half-written file CI left
+        let doc = r#"{"bench":"farm","rows":[{"tenants":1,"ok":true}]}"#;
+        for cut in 1..doc.len() {
+            let prefix = &doc[..cut];
+            assert!(Json::parse(prefix).is_err(), "truncated {prefix:?} should fail");
+        }
+    }
+
+    #[test]
+    fn bare_nan_and_infinity_are_rejected() {
+        // Rust's f64 parser would happily read "NaN"/"inf"; the number
+        // scanner must never hand them to it (JSON has no such literals)
+        for bad in ["NaN", "nan", "Infinity", "-Infinity", "inf", "-inf",
+                    r#"{"wall_seconds":NaN}"#, "[1,Infinity]"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_keep_first_occurrence() {
+        let v = Json::parse(r#"{"a":1,"a":2,"b":3}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1), "lookup is first-wins");
+        assert_eq!(v.get("b").unwrap().as_u64(), Some(3));
+        // both fields are preserved in parse order
+        assert_eq!(v, Json::Obj(vec![
+            ("a".into(), Json::Num(1.0)),
+            ("a".into(), Json::Num(2.0)),
+            ("b".into(), Json::Num(3.0)),
+        ]));
     }
 
     #[test]

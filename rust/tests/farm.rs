@@ -6,6 +6,7 @@
 
 use perks::runtime::farm::SolverFarm;
 use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::util::counters;
 
 fn solo_stencil(interior: &str, seed: u64, bt: usize) -> perks::Session {
     SessionBuilder::new()
@@ -34,6 +35,11 @@ fn farm_stencil(farm: &SolverFarm, interior: &str, seed: u64, bt: usize) -> perk
 /// worker counts {1, 2, 3, 8}, across resumed advances, at bt ∈ {1, 2}.
 #[test]
 fn farm_sessions_are_bit_identical_to_solo_sessions_across_worker_counts() {
+    // process-global monotonic counters: other tests run concurrently, so
+    // assert deltas with >=, never ==
+    let base_admissions = counters::farm_admissions();
+    let base_commands = counters::farm_commands();
+    let base_tasks = counters::farm_tasks();
     for bt in [1usize, 2] {
         let mut solo = solo_stencil("16x16", 7, bt);
         solo.advance(5).unwrap();
@@ -59,6 +65,11 @@ fn farm_sessions_are_bit_identical_to_solo_sessions_across_worker_counts() {
             assert_eq!(farm.spawn_count(), workers as u64);
         }
     }
+    // 2 bt values x 4 worker counts: 8 admissions, 2 commands each, and
+    // every command fans out into at least one worker task
+    assert!(counters::farm_admissions() >= base_admissions + 8);
+    assert!(counters::farm_commands() >= base_commands + 16);
+    assert!(counters::farm_tasks() >= base_tasks + 16);
 }
 
 /// Mixed stencil + CG tenants sharing one farm, driven through the

@@ -1,0 +1,125 @@
+//! perks-lint regression suite: the tree must be clean, and every
+//! checked-in known-bad fixture must fire its rule — both through the
+//! library API and through the `perks_lint` binary CI actually runs.
+
+use std::path::Path;
+use std::process::Command;
+
+use perks::lint::{self, FileCtx};
+
+fn lint_fixture(name: &str) -> Vec<lint::Violation> {
+    let path = Path::new("tests/lint_fixtures").join(name);
+    let ctx = FileCtx::load(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    lint::lint_file(&ctx)
+}
+
+fn rules_of(v: &[lint::Violation]) -> Vec<&str> {
+    v.iter().map(|v| v.rule).collect()
+}
+
+// ------------------------------------------------------------------
+// the tree itself is clean
+// ------------------------------------------------------------------
+
+#[test]
+fn source_tree_is_lint_clean() {
+    let v = lint::lint_root(Path::new("src")).expect("lint src tree");
+    assert!(
+        v.is_empty(),
+        "rust/src must be perks-lint clean; fix or `lint: allow(..) -- why`:\n{}",
+        v.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n"),
+    );
+}
+
+// ------------------------------------------------------------------
+// every rule fires on its fixture
+// ------------------------------------------------------------------
+
+#[test]
+fn fixture_condvar_shutdown_fires() {
+    let v = lint_fixture("bad_condvar.rs");
+    let hits = v.iter().filter(|v| v.rule == "condvar-shutdown").count();
+    assert_eq!(hits, 2, "epoch-only loop + un-looped wait: {v:?}");
+}
+
+#[test]
+fn fixture_lock_order_fires() {
+    let v = lint_fixture("bad_lock_order.rs");
+    let msgs: Vec<_> =
+        v.iter().filter(|v| v.rule == "lock-order").map(|v| v.msg.clone()).collect();
+    assert_eq!(msgs.len(), 2, "inversion + reentrant acquisition: {v:?}");
+    assert!(msgs.iter().any(|m| m.contains("inverts")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("self-deadlock")), "{msgs:?}");
+}
+
+#[test]
+fn fixture_hot_path_alloc_fires() {
+    let v = lint_fixture("bad_hot_path.rs");
+    let hits = v.iter().filter(|v| v.rule == "hot-path-alloc").count();
+    assert_eq!(hits, 4, "Vec::new, clone, format!, unclosed fence: {v:?}");
+}
+
+#[test]
+fn fixture_unsafe_safety_fires() {
+    let v = lint_fixture("bad_unsafe.rs");
+    let hits = v.iter().filter(|v| v.rule == "unsafe-safety").count();
+    assert_eq!(hits, 2, "bare unsafe impl + bare unsafe block (the commented one passes): {v:?}");
+}
+
+#[test]
+fn fixture_no_panic_fires() {
+    let v = lint_fixture("runtime/bad_panic.rs");
+    let hits = v.iter().filter(|v| v.rule == "no-panic").count();
+    assert_eq!(hits, 3, "unwrap + expect + panic!, test module exempt: {v:?}");
+}
+
+#[test]
+fn fixture_unjustified_allow_fires() {
+    let v = lint_fixture("bad_allow.rs");
+    assert_eq!(rules_of(&v), vec!["lint-allow"], "allow silences the rule but owes a reason");
+}
+
+#[test]
+fn fixture_counter_coverage_fires() {
+    let v = lint::lint_root(Path::new("tests/lint_fixtures/counter_tree")).expect("lint fixture");
+    let orphaned: Vec<_> = v.iter().filter(|v| v.rule == "counter-coverage").collect();
+    assert_eq!(orphaned.len(), 2, "orphan never incremented + never asserted: {v:?}");
+    assert!(orphaned.iter().all(|v| v.msg.contains("orphan_counter")), "{orphaned:?}");
+}
+
+// ------------------------------------------------------------------
+// the binary CI runs agrees with the library
+// ------------------------------------------------------------------
+
+#[test]
+fn binary_exits_zero_on_tree_nonzero_on_fixtures() {
+    let bin = env!("CARGO_BIN_EXE_perks_lint");
+    let clean = Command::new(bin).output().expect("run perks_lint");
+    assert!(
+        clean.status.success(),
+        "perks_lint must exit 0 on the tree:\n{}",
+        String::from_utf8_lossy(&clean.stdout),
+    );
+    for fixture in [
+        "tests/lint_fixtures/bad_condvar.rs",
+        "tests/lint_fixtures/bad_lock_order.rs",
+        "tests/lint_fixtures/bad_hot_path.rs",
+        "tests/lint_fixtures/bad_unsafe.rs",
+        "tests/lint_fixtures/runtime/bad_panic.rs",
+        "tests/lint_fixtures/bad_allow.rs",
+    ] {
+        let out = Command::new(bin).arg(fixture).output().expect("run perks_lint");
+        assert_eq!(out.status.code(), Some(1), "{fixture} must fail the lint");
+    }
+    let counters = Command::new(bin)
+        .args(["--root", "tests/lint_fixtures/counter_tree"])
+        .output()
+        .expect("run perks_lint");
+    assert_eq!(counters.status.code(), Some(1), "counter fixture tree must fail the lint");
+    let listing = Command::new(bin).arg("--list-rules").output().expect("run perks_lint");
+    assert!(listing.status.success());
+    let text = String::from_utf8_lossy(&listing.stdout).to_string();
+    for (name, _) in lint::RULES {
+        assert!(text.contains(name), "--list-rules must mention {name}");
+    }
+}

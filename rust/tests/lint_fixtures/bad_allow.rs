@@ -1,0 +1,8 @@
+//! Known-bad fixture for `lint-allow`: a suppression with no written
+//! justification. Every `allow` must carry the argument for why the
+//! site is sound — same contract as `// SAFETY:`.
+
+fn f(buf: &SharedBuf) -> usize {
+    // lint: allow(unsafe-safety)
+    unsafe { (*buf.0.get()).len() }
+}

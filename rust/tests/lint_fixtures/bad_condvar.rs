@@ -1,0 +1,23 @@
+//! Known-bad fixture for `condvar-shutdown`: the PR-5 teardown race.
+//! The worker re-checks only the epoch stamp on wake — a shutdown
+//! signalled while it is parked across stamp changes is never observed
+//! and the thread is stranded forever.
+
+fn worker_main(sh: &Shared, mut seen: u64) {
+    let mut g = sh.ctl.lock().unwrap_or_else(|p| p.into_inner());
+    loop {
+        if g.epoch != seen {
+            break;
+        }
+        // BAD: wake path never consults a teardown flag
+        g = sh.cmd_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+    }
+    seen = g.epoch;
+    let _ = seen;
+}
+
+fn wait_outside_any_loop(sh: &Shared) {
+    let g = sh.ctl.lock().unwrap_or_else(|p| p.into_inner());
+    // BAD: a single un-looped wait also misses spurious wakeups
+    let _g = sh.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+}

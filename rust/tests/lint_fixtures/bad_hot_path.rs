@@ -1,0 +1,23 @@
+//! Known-bad fixture for `hot-path-alloc`: allocating calls inside a
+//! fenced advance loop. The PERKS story is zero alloc / zero spawn per
+//! iteration — each of these pays per epoch.
+
+fn advance(state: &mut State, steps: usize) {
+    // hot-path: begin
+    for _ in 0..steps {
+        // BAD: fresh vector every iteration
+        let scratch: Vec<f64> = Vec::new();
+        // BAD: clone of the resident buffer
+        let snapshot = state.grid.clone();
+        // BAD: formatting allocates even when the string is discarded
+        let label = format!("epoch {}", state.epoch);
+        state.consume(scratch, snapshot, label);
+    }
+    // hot-path: end
+}
+
+fn unbalanced(state: &mut State) {
+    // hot-path: begin
+    state.step();
+    // BAD: fence never closed before end of file
+}

@@ -1,0 +1,28 @@
+//! Known-bad fixture for `lock-order`: acquisitions inverting the
+//! declared hierarchy, plus a same-level re-acquisition (std mutexes
+//! are not reentrant — that one is a guaranteed self-deadlock).
+
+// lock-order: sched < tenant < slab
+
+fn inverted(f: &Farm) {
+    let slab = f.slab.lock().unwrap_or_else(|p| p.into_inner());
+    // BAD: sched ranks below slab, so it must be taken first
+    let sched = f.sched.lock().unwrap_or_else(|p| p.into_inner());
+    drop(sched);
+    drop(slab);
+}
+
+fn reentrant(f: &Farm) {
+    let a = f.tenant.lock().unwrap_or_else(|p| p.into_inner());
+    // BAD: tenant is already held — self-deadlock
+    let b = f.tenant.lock().unwrap_or_else(|p| p.into_inner());
+    drop(b);
+    drop(a);
+}
+
+fn fine(f: &Farm) {
+    let sched = f.sched.lock().unwrap_or_else(|p| p.into_inner());
+    let slab = f.slab.lock().unwrap_or_else(|p| p.into_inner());
+    drop(slab);
+    drop(sched);
+}

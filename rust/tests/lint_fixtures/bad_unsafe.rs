@@ -1,0 +1,21 @@
+//! Known-bad fixture for `unsafe-safety`: unsafe sites with no written
+//! proof obligation. Every unsafe site in the runtime is justified by a
+//! protocol (claim/complete handshake, band ownership between barriers)
+//! and the argument must be written where the site is.
+
+struct SharedBuf(std::cell::UnsafeCell<Vec<f64>>);
+
+// BAD: cross-thread sharing asserted with no argument
+unsafe impl Sync for SharedBuf {}
+
+fn read_slab(buf: &SharedBuf, out: &mut [f64]) {
+    // BAD: raw access with no written justification
+    let data = unsafe { &*buf.0.get() };
+    out.copy_from_slice(&data[..out.len()]);
+}
+
+fn fine(buf: &SharedBuf) -> usize {
+    // SAFETY: len is immutable after construction; no aliasing write
+    // can race this read.
+    unsafe { (*buf.0.get()).len() }
+}

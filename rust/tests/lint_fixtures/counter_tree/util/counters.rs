@@ -1,0 +1,24 @@
+//! Known-bad fixture tree for `counter-coverage`: `orphan_counter` is
+//! declared with the full note/getter pair but nothing outside this
+//! module ever increments or asserts it — an invariant nobody checks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static USED: AtomicU64 = AtomicU64::new(0);
+static ORPHAN: AtomicU64 = AtomicU64::new(0);
+
+pub fn note_used_counter(n: u64) {
+    USED.fetch_add(n, Ordering::Release);
+}
+
+pub fn used_counter() -> u64 {
+    USED.load(Ordering::Acquire)
+}
+
+pub fn note_orphan_counter(n: u64) {
+    ORPHAN.fetch_add(n, Ordering::Release);
+}
+
+pub fn orphan_counter() -> u64 {
+    ORPHAN.load(Ordering::Acquire)
+}

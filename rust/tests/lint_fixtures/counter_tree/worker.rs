@@ -1,0 +1,11 @@
+//! Companion file in the counter-coverage fixture tree: exercises
+//! `used_counter` on both sides (incremented and asserted) so only the
+//! orphan is flagged.
+
+fn spawn_worker() {
+    crate::util::counters::note_used_counter(1);
+}
+
+fn audit() {
+    assert!(crate::util::counters::used_counter() >= 1);
+}

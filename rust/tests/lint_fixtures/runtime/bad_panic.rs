@@ -1,0 +1,24 @@
+//! Known-bad fixture for `no-panic` (lives under a `runtime/` path, so
+//! the rule is in scope). A panic here strands a countdown or poisons a
+//! pool instead of surfacing a structured, recoverable `Error::Fault`.
+
+fn harvest(g: &mut FarmState, tid: usize) -> Run {
+    // BAD: released-tenant race becomes an abort, not an error
+    let t = g.tenants[tid].as_mut().unwrap();
+    // BAD: same class, with prose attached
+    let ck = t.checkpoint.take().expect("restore without a checkpoint");
+    if t.zombie {
+        // BAD: bare panic in recoverable code
+        panic!("zombie tenant harvested");
+    }
+    t.finish(ck)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let x: Option<u32> = Some(1);
+        assert_eq!(x.unwrap(), 1);
+    }
+}

@@ -16,6 +16,7 @@ use perks::runtime::plane::{
 use perks::sparse::gen;
 use perks::spmv::merge::MergePlan;
 use perks::stencil::{gold, spec, Domain};
+use perks::util::counters;
 
 fn domain(seed: u64, dims: &[usize]) -> Domain {
     let s = spec("2d5pt").unwrap();
@@ -88,6 +89,10 @@ fn graph_run_matches_monolithic_including_traffic_and_lock_accounting() {
     let mrun = mono.advance(12, None).unwrap();
 
     let m0 = farm.metrics();
+    // the process-global counters must move with the per-farm metrics
+    // (deltas with >=: other tests' farms bump them concurrently)
+    let c_batches = counters::plane_batches();
+    let c_locks = counters::sched_lock_acquisitions();
     let mut batched = h.admit_stencil(&s, &d, 2, 2).unwrap();
     let graph = CommandGraph::schedule(12, 5, None).unwrap(); // 5 + 5 + 2
     assert_eq!(graph.segments(), &[5, 5, 2]);
@@ -106,6 +111,8 @@ fn graph_run_matches_monolithic_including_traffic_and_lock_accounting() {
         "graph segments must chain inside completion transitions"
     );
     assert_eq!(m1.sched_lock_acquisitions, m1.plane_batches);
+    assert!(counters::plane_batches() >= c_batches + 1);
+    assert!(counters::sched_lock_acquisitions() >= c_locks + 1);
 }
 
 /// Satellite: double submit is a contract error on the stencil path too
@@ -201,12 +208,14 @@ fn shed_policy_rejects_on_a_full_queue_then_recovers() {
     let h = farm.handle();
     let mut a = h.admit_stencil(&s, &da, 1, 1).unwrap();
     let mut b = h.admit_stencil(&s, &db, 1, 1).unwrap();
+    let c_sheds = counters::plane_sheds();
     a.submit(4, None).unwrap(); // holds the only slot until harvested
     match b.submit(1, None) {
         Err(perks::Error::Shed(msg)) => assert!(msg.contains("full"), "{msg}"),
         other => panic!("expected Shed, got {other:?}"),
     }
     assert_eq!(farm.metrics().plane_sheds, 1);
+    assert!(counters::plane_sheds() >= c_sheds + 1, "global shed counter must move too");
     a.wait().unwrap(); // harvest releases the slot
     let run = b.advance(1, None).unwrap();
     assert_eq!(run.steps, 1);
@@ -225,12 +234,14 @@ fn timeout_policy_expires_then_recovers_after_harvest() {
     let h = farm.handle();
     let mut a = h.admit_stencil(&s, &da, 1, 1).unwrap();
     let mut b = h.admit_stencil(&s, &db, 1, 1).unwrap();
+    let c_timeouts = counters::plane_timeouts();
     a.submit(4, None).unwrap();
     match b.submit(1, None) {
         Err(perks::Error::Timeout(msg)) => assert!(msg.contains("slot"), "{msg}"),
         other => panic!("expected Timeout, got {other:?}"),
     }
     assert_eq!(farm.metrics().plane_timeouts, 1);
+    assert!(counters::plane_timeouts() >= c_timeouts + 1, "global timeout counter must move too");
     a.wait().unwrap();
     b.advance(1, None).unwrap();
     assert_eq!(farm.metrics().plane_timeouts, 1);

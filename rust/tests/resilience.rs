@@ -63,6 +63,8 @@ fn injected_panic_recovers_bit_identically_with_peer_tenants() {
 
     let base_faults = counters::faults_injected();
     let base_recov = counters::farm_recoveries();
+    let base_replay = counters::replayed_epochs();
+    let base_ckpt = counters::checkpoint_bytes();
 
     let farm = SolverFarm::spawn(3).unwrap();
     // tenant slot 0 is the first admission in a fresh farm
@@ -88,6 +90,8 @@ fn injected_panic_recovers_bit_identically_with_peer_tenants() {
     assert!(m.checkpoint_bytes > 0);
     assert!(counters::faults_injected() >= base_faults + 1);
     assert!(counters::farm_recoveries() >= base_recov + 1);
+    assert!(counters::replayed_epochs() >= base_replay + 1);
+    assert!(counters::checkpoint_bytes() > base_ckpt);
 }
 
 /// The tentpole acceptance bar: a run that panics at epoch 1 and NaNs at
