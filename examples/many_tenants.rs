@@ -16,26 +16,63 @@
 //! schedule as a single batched `CommandGraph` — one scheduler-lock
 //! acquisition per tenant, asserted from the farm's plane counters.
 //!
-//! The final section injects deterministic faults (a worker panic and
+//! The third section injects deterministic faults (a worker panic and
 //! NaN poisoning) into one tenant of a "chaos" farm and shows the
 //! supervisor recovering both from epoch-boundary checkpoints to a
 //! bit-identical final state, while an unconfigured peer tenant runs
 //! undisturbed.
+//!
+//! The final section survives *process death*: the example re-executes
+//! itself as a child whose multi-tenant farm (a stencil session and a
+//! CG session, both built with `SessionBuilder::durable`) is killed by
+//! `FaultKind::Kill` — a hard `process::abort` mid-`advance`. The
+//! parent then rebuilds both tenants from the snapshot directory alone
+//! (the frames are self-describing), finishes the interrupted work, and
+//! verifies both final states are bit-identical to uninterrupted runs.
+//! See `docs/RECOVERY.md` and the `perks_recover` binary for the same
+//! drill as an operator workflow.
 //!
 //! ```bash
 //! cargo run --release --example many_tenants            # full demo
 //! cargo run --release --example many_tenants -- --quick # CI smoke
 //! ```
 
+use std::path::Path;
+use std::sync::Arc;
+
 use perks::runtime::farm::SolverFarm;
 use perks::runtime::plane::{CommandGraph, LocalExecutor};
-use perks::runtime::{FaultPlan, FaultSpec, ResilienceConfig};
+use perks::runtime::{FaultPlan, FaultSpec, ResilienceConfig, SnapshotStore, WorkloadMeta};
 use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::sparse::gen;
+use perks::spmv::merge::MergePlan;
 use perks::stencil::{self, Domain};
 use perks::util::counters;
 use perks::util::fmt::Table;
 
+// ---- durable-restart drill parameters (shared by parent and child) ----
+const DUR_INTERIOR: &str = "20x20";
+const DUR_BT: usize = 2;
+const DUR_SEED: u64 = 21;
+const DUR_S1: usize = 8; // clean first command (steps)
+const DUR_S2: usize = 8; // the command the kill interrupts
+const DUR_CG_N: usize = 256;
+const DUR_CG_SEED: u64 = 5;
+const DUR_CG_S1: usize = 8; // CG iterations committed before the crash
+const DUR_CG_S2: usize = 8; // CG iterations finished by the parent
+const DUR_CADENCE: u64 = 2;
+const DUR_KILL_EPOCH: u64 = 6; // lifetime epoch inside stencil command 2
+
 fn main() -> perks::Result<()> {
+    // Hidden child mode for the durable-restart drill: the parent below
+    // re-executes this binary with `--crash-child <dir>`, and this run
+    // dies by a hard abort mid-advance. Nothing after this block runs.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.first().map(String::as_str) == Some("--crash-child") {
+        let dir = argv.get(1).expect("--crash-child needs a snapshot directory");
+        return durable_crash_child(Path::new(dir));
+    }
+
     let quick = std::env::args().any(|a| a == "--quick");
     let steps = if quick { 8 } else { 48 };
     let cg_iters = if quick { 10 } else { 40 };
@@ -191,6 +228,17 @@ fn main() -> perks::Result<()> {
         vrun.checkpoint_bytes as f64 / 1024.0
     );
 
+    // ---- durable restart: survive process death, resume bit-identical ----
+    //
+    // Everything above recovers from faults *inside* a live process.
+    // This section kills the whole process: a child re-execution of this
+    // binary runs a stencil tenant and a CG tenant with
+    // `SessionBuilder::durable` (every cadence checkpoint also committed
+    // crash-consistently to disk, off the scheduler lock) and dies by
+    // `FaultKind::Kill` mid-advance. The parent restores both tenants
+    // from the directory the corpse left behind and finishes their work.
+    durable_restart_demo()?;
+
     println!("{} tenants served by {} resident workers\n", tenants.len() + 1, workers);
     let mut t = Table::new(&["tenant", "steps", "wall s", "queue wait s", "launches"]);
     for (name, s) in tenants.iter() {
@@ -240,5 +288,135 @@ fn main() -> perks::Result<()> {
     println!("\nevery tenant's iterates are bit-identical to its solo-pool session;");
     println!("the farm batches small solves onto one resident worker set instead of");
     println!("building (and tearing down) a pool per session.");
+    Ok(())
+}
+
+/// The child half of the durable-restart drill: a two-tenant durable
+/// farm (stencil `t0`, CG `t1`) with a pinned kill fault. Runs one clean
+/// command per tenant, waits until both have a durable frame on disk
+/// (the write-out is off the scheduler lock), then issues the command
+/// the kill aborts. This function never returns `Ok`.
+fn durable_crash_child(dir: &Path) -> perks::Result<()> {
+    let farm = SolverFarm::spawn(2)?;
+    farm.install_faults(FaultPlan::new().inject(FaultSpec::kill_at(DUR_KILL_EPOCH).tenant(0)));
+    let mut st = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::stencil("2d5pt", DUR_INTERIOR, "f64"))
+        .mode(ExecMode::Persistent)
+        .temporal(DUR_BT)
+        .seed(DUR_SEED)
+        .farm(&farm)
+        .checkpoint_every(DUR_CADENCE)
+        .durable(dir)
+        .build()?;
+    let mut cg = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::cg(DUR_CG_N))
+        .mode(ExecMode::Persistent)
+        .seed(DUR_CG_SEED)
+        .farm(&farm)
+        .checkpoint_every(DUR_CADENCE)
+        .durable(dir)
+        .build()?;
+    st.advance(DUR_S1)?;
+    cg.advance(DUR_CG_S1)?;
+    let store = SnapshotStore::open(dir)?;
+    let t0 = std::time::Instant::now();
+    while !["t0", "t1"]
+        .iter()
+        .all(|t| store.entries(t).map(|e| !e.is_empty()).unwrap_or(false))
+    {
+        if t0.elapsed() > std::time::Duration::from_secs(10) {
+            return Err(perks::Error::Snapshot(
+                "no durable frames appeared within 10s of the clean commands".into(),
+            ));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    st.advance(DUR_S2)?; // FaultKind::Kill aborts the process here
+    Err(perks::Error::Solver("crash child survived its kill fault".into()))
+}
+
+/// The parent half: compute uninterrupted references, crash a child,
+/// rebuild both tenants from the snapshot directory alone, finish their
+/// interrupted work, and require the reference bits.
+fn durable_restart_demo() -> perks::Result<()> {
+    // references: the same two sessions, never interrupted
+    let clean = SolverFarm::spawn(2)?;
+    clean.install_faults(FaultPlan::new());
+    let mut st = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::stencil("2d5pt", DUR_INTERIOR, "f64"))
+        .mode(ExecMode::Persistent)
+        .temporal(DUR_BT)
+        .seed(DUR_SEED)
+        .farm(&clean)
+        .build()?;
+    st.advance(DUR_S1 + DUR_S2)?;
+    let want_st = st.state_f64()?;
+    let mut cg = SessionBuilder::new()
+        .backend(Backend::cpu(2))
+        .workload(Workload::cg(DUR_CG_N))
+        .mode(ExecMode::Persistent)
+        .seed(DUR_CG_SEED)
+        .farm(&clean)
+        .build()?;
+    cg.advance(DUR_CG_S1 + DUR_CG_S2)?;
+    let want_cg = cg.state_f64()?;
+    drop(st);
+    drop(cg);
+
+    // crash the child; it must die abnormally, not exit
+    let dir =
+        std::env::temp_dir().join(format!("perks-many-tenants-durable-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let exe = std::env::current_exe()
+        .map_err(|e| perks::Error::Solver(format!("cannot locate own executable: {e}")))?;
+    let status = std::process::Command::new(&exe)
+        .arg("--crash-child")
+        .arg(&dir)
+        .status()
+        .map_err(|e| perks::Error::Solver(format!("spawning crash child: {e}")))?;
+    assert!(!status.success(), "the crash child must die by its kill fault");
+
+    // restore both tenants from disk; the frames are self-describing
+    let store = SnapshotStore::open(&dir)?;
+    let farm = SolverFarm::spawn(2)?;
+    farm.install_faults(FaultPlan::new());
+
+    let r0 = store.restore("t0")?;
+    let WorkloadMeta::Stencil { bench, dims, bt, shards } = &r0.meta else {
+        return Err(perks::Error::Snapshot("t0 should be the stencil tenant".into()));
+    };
+    let sp = stencil::spec(bench).expect("persisted bench is built in");
+    let d = Domain::for_spec(&sp, dims)?;
+    let mut t = farm.handle().admit_stencil(&sp, &d, *shards, *bt)?;
+    t.restore_from(&r0.checkpoint)?;
+    let st_done = r0.checkpoint.epoch as usize * bt;
+    t.advance(DUR_S1 + DUR_S2 - st_done, None)?;
+    assert_eq!(t.state()?, want_st, "resumed stencil tenant diverged from the clean run");
+
+    let r1 = store.restore("t1")?;
+    let WorkloadMeta::Cg { n, shards } = &r1.meta else {
+        return Err(perks::Error::Snapshot("t1 should be the CG tenant".into()));
+    };
+    let g = (*n as f64).sqrt().round() as usize;
+    let a = Arc::new(gen::poisson2d(g));
+    let plan = MergePlan::new(&a, *shards);
+    let mut tcg = farm.handle().admit_cg(a, plan)?;
+    let (mut x, mut r, mut p, rr, _) =
+        r1.checkpoint.cg_state().expect("CG tenant persists a CG payload");
+    let cg_done = r1.checkpoint.epoch as usize;
+    let run = tcg.run(&mut x, &mut r, &mut p, rr, 0.0, DUR_CG_S1 + DUR_CG_S2 - cg_done)?;
+    assert!(run.error.is_none(), "resumed CG run errored: {:?}", run.error);
+    assert_eq!(x, want_cg, "resumed CG tenant diverged from the clean run");
+
+    println!(
+        "durable restart: child killed at epoch {DUR_KILL_EPOCH} -> stencil restored gen {} \
+         (epoch {}, {} fallback(s)), CG restored gen {} (epoch {}) -> both resumed to the \
+         clean run's exact bits\n",
+        r0.generation, r0.checkpoint.epoch, r0.fallbacks, r1.generation, r1.checkpoint.epoch,
+    );
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }

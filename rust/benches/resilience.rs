@@ -1,9 +1,15 @@
 //! Resilience overhead + recovery bench: sweep the checkpoint cadence
 //! over a farm stencil tenant and a farm CG tenant (clean arms — the
-//! <5%-overhead acceptance bar for the default cadence), then run one
-//! seeded fault-recovery arm per workload (panic/NaN injected mid-run,
+//! <5%-overhead acceptance bar for the default cadence), run one seeded
+//! fault-recovery arm per workload (panic/NaN injected mid-run,
 //! recovered from the last checkpoint, final state asserted
-//! bit-identical to the clean run inside the harness). Emits
+//! bit-identical to the clean run inside the harness), then repeat the
+//! cadence sweep with **durable** crash-consistent snapshot persistence
+//! enabled (`ResilienceConfig::durable` — tmp-write + fsync + atomic
+//! rename per frame, off the scheduler lock). Durable rows carry
+//! `"durable":1` and their own gates in `bench_check`: cadence 0
+//! commits zero frames, clean arms never restore, and the default
+//! cadence stays within 10% wall of its cadence-0 reference. Emits
 //! `BENCH_resilience.json` (+ a `BENCH {...}` stdout line) for the CI
 //! perf-regression gate (`tools: bench_check`).
 //!
@@ -23,7 +29,7 @@ fn main() {
         else { ("64x64", 96, 2, 23, 60, 8, 3) };
 
     println!(
-        "Resilience: checkpoint cadence sweep + seeded fault recovery \
+        "Resilience: checkpoint cadence sweep + seeded fault recovery + durable arm \
          (stencil 2d5pt {interior} x{steps} steps bt={bt}; CG poisson {g}x{g} x{iters} iters; \
          {workers} workers)\n",
         g = grid
@@ -35,21 +41,41 @@ fn main() {
     rows.push(harness::stencil_recovery_row("2d5pt", interior, steps, bt, workers, 11).unwrap());
     rows.push(harness::cg_recovery_row(grid, iters, workers, 17).unwrap());
 
+    // durable arm: same workloads and cadences, every checkpoint also
+    // persisted crash-consistently; the harness asserts bit-identity and
+    // the zero-frames-at-cadence-0 invariant before reporting
+    let snap_dir = std::env::temp_dir().join(format!("perks-bench-durable-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&snap_dir);
+    rows.extend(
+        harness::stencil_durable_sweep(
+            "2d5pt", interior, steps, bt, workers, cadences, reps, &snap_dir.join("stencil"),
+        )
+        .unwrap(),
+    );
+    rows.extend(
+        harness::cg_durable_sweep(grid, iters, workers, cadences, reps, &snap_dir.join("cg"))
+            .unwrap(),
+    );
+    let _ = std::fs::remove_dir_all(&snap_dir);
+
     let mut t = Table::new(&[
         "case",
+        "durable",
         "cadence",
         "wall ms",
         "overhead",
         "recoveries",
         "replayed",
         "ckpt KiB",
+        "frames",
         "injected",
     ]);
     for row in &rows {
-        // overhead vs the same case's cadence-0 reference arm
+        // overhead vs the same case's cadence-0 reference arm (durable
+        // rows compare against the durable cadence-0 arm)
         let base = rows
             .iter()
-            .find(|r| r.case == row.case && r.cadence == 0)
+            .find(|r| r.case == row.case && r.cadence == 0 && r.durable == row.durable)
             .map(|r| r.wall_seconds)
             .unwrap_or(row.wall_seconds);
         let overhead = if row.injected > 0 {
@@ -59,20 +85,24 @@ fn main() {
         };
         t.row(&[
             row.case.clone(),
+            if row.durable { "yes" } else { "-" }.to_string(),
             row.cadence.to_string(),
             format!("{:.2}", row.wall_seconds * 1e3),
             overhead,
             row.recoveries.to_string(),
             row.replayed_epochs.to_string(),
             format!("{:.1}", row.checkpoint_bytes as f64 / 1024.0),
+            row.durable_frames.to_string(),
             row.injected.to_string(),
         ]);
     }
     print!("{}", t.render());
     println!(
         "\nclean arms must never recover; the recovery arms replay from the last\n\
-         checkpoint and land bit-identically on the clean run's state (asserted\n\
-         in the harness before any number is reported)."
+         checkpoint and land bit-identically on the clean run's state; the durable\n\
+         arms additionally commit every checkpoint to disk (tmp + fsync + rename)\n\
+         off the scheduler lock and must not change a single bit (all asserted in\n\
+         the harness before any number is reported)."
     );
 
     let json: Vec<String> = rows.iter().map(|r| r.json()).collect();

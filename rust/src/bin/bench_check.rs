@@ -57,6 +57,11 @@ const FILES: [&str; 5] = [
 /// cost at most this much over the cadence-0 arm of the same case.
 const MAX_CHECKPOINT_OVERHEAD: f64 = 0.05;
 
+/// Durable-write acceptance bar: the default-cadence **durable** arm
+/// (crash-consistent frame persistence on — `"durable":1` rows) may cost
+/// at most this much over the durable cadence-0 arm of the same case.
+const MAX_DURABLE_OVERHEAD: f64 = 0.10;
+
 /// Walls shorter than this are too noisy for the within-artifact
 /// overhead ratio; the gate notes and skips them (the checked-in
 /// baseline wall gate still applies).
@@ -65,7 +70,7 @@ const OVERHEAD_GATE_MIN_WALL: f64 = 0.005;
 /// The machine-independent invariants this gate enforces, as
 /// `(name, statement)` pairs for `--list-invariants`. Keep in sync with
 /// the checks in `check_modes`/`check_file` and `docs/INVARIANTS.md`.
-const INVARIANTS: [(&str, &str); 9] = [
+const INVARIANTS: [(&str, &str); 12] = [
     (
         "zero-spawn-advance",
         "persistent/pooled arms and farm admissions perform 0 thread spawns (advance_spawns == 0, admission_spawns == 0)",
@@ -101,6 +106,18 @@ const INVARIANTS: [(&str, &str); 9] = [
     (
         "checkpoint-overhead-bound",
         "the default-cadence clean arm costs at most 5% wall over its cadence-0 reference (above the noise floor)",
+    ),
+    (
+        "durable-cadence-zero-writes-nothing",
+        "cadence-0 durable rows commit 0 durable frames and 0 durable bytes",
+    ),
+    (
+        "durable-clean-never-restores",
+        "clean durable rows perform 0 snapshot restores",
+    ),
+    (
+        "durable-overhead-bound",
+        "the default-cadence durable arm costs at most 10% wall over its durable cadence-0 reference (above the noise floor)",
     ),
 ];
 
@@ -262,10 +279,13 @@ fn wall_entries(doc: &Json) -> Vec<(String, f64)> {
             {
                 out.push((format!("tenants{t}/fe{fe}/plane"), w));
             }
-            // resilience rows: keyed by case + checkpoint cadence
+            // resilience rows: keyed by case + checkpoint cadence, with a
+            // `/durable` suffix on the durable-persistence arm
             if let (Some(cad), Some(w)) = (int(r, "cadence"), num(r, "wall_seconds")) {
                 if !s(r, "case").is_empty() {
-                    out.push((format!("{}/cad{cad}", s(r, "case")), w));
+                    let durable =
+                        if int(r, "durable").unwrap_or(0) == 1 { "/durable" } else { "" };
+                    out.push((format!("{}/cad{cad}{durable}", s(r, "case")), w));
                 }
             }
         }
@@ -358,6 +378,30 @@ fn check_file(cfg: &Config, name: &str, fails: &mut Vec<String>) {
                     let cadence = int(r, "cadence").unwrap_or(0);
                     let injected = int(r, "injected").unwrap_or(0);
                     let recoveries = int(r, "recoveries");
+                    let durable = int(r, "durable").unwrap_or(0) == 1;
+                    if durable && cadence == 0 && injected == 0 {
+                        if int(r, "durable_frames") != Some(0) {
+                            fails.push(format!(
+                                "{name}: cadence-0 durable row {case} committed {:?} frames \
+                                 (durability off the cadence path must write nothing)",
+                                int(r, "durable_frames")
+                            ));
+                        }
+                        if int(r, "durable_bytes") != Some(0) {
+                            fails.push(format!(
+                                "{name}: cadence-0 durable row {case} wrote {:?} durable bytes \
+                                 (must be 0)",
+                                int(r, "durable_bytes")
+                            ));
+                        }
+                    }
+                    if durable && injected == 0 && int(r, "restores") != Some(0) {
+                        fails.push(format!(
+                            "{name}: clean durable row {case}/cad{cadence} reports {:?} \
+                             snapshot restores (clean runs must restore 0 times)",
+                            int(r, "restores")
+                        ));
+                    }
                     if injected == 0 && recoveries != Some(0) {
                         fails.push(format!(
                             "{name}: clean row {case}/cad{cadence} reports {recoveries:?} \
@@ -377,14 +421,17 @@ fn check_file(cfg: &Config, name: &str, fails: &mut Vec<String>) {
                         ));
                     }
                 }
-                // checkpoint-overhead gate: default cadence vs cadence 0,
-                // within this artifact (same machine, same run)
-                let wall_of = |case: &str, cadence: u64| {
+                // overhead gates: default cadence vs cadence 0, within
+                // this artifact (same machine, same run). The in-memory
+                // gate (5%) and the durable gate (10%) each compare
+                // against their own cadence-0 reference arm.
+                let wall_of = |case: &str, cadence: u64, durable: u64| {
                     rows.iter()
                         .filter(|r| {
                             s(r, "case") == case
                                 && int(r, "cadence") == Some(cadence)
                                 && int(r, "injected") == Some(0)
+                                && int(r, "durable").unwrap_or(0) == durable
                         })
                         .find_map(|r| num(r, "wall_seconds"))
                 };
@@ -396,26 +443,31 @@ fn check_file(cfg: &Config, name: &str, fails: &mut Vec<String>) {
                 cases.sort_unstable();
                 cases.dedup();
                 for case in cases {
-                    let (Some(base), Some(walled)) = (
-                        wall_of(case, 0),
-                        wall_of(case, perks::runtime::DEFAULT_CHECKPOINT_EVERY),
-                    ) else {
-                        continue;
-                    };
-                    if base < OVERHEAD_GATE_MIN_WALL {
-                        println!(
-                            "note: {name}: {case} cadence-0 wall {base:.6}s below the \
-                             {OVERHEAD_GATE_MIN_WALL}s noise floor; overhead gate skipped"
-                        );
-                        continue;
-                    }
-                    let limit = base * (1.0 + MAX_CHECKPOINT_OVERHEAD);
-                    if walled > limit {
-                        fails.push(format!(
-                            "{name}: {case} default-cadence wall {walled:.6}s exceeds the \
-                             cadence-0 wall {base:.6}s by more than {:.0}%",
-                            MAX_CHECKPOINT_OVERHEAD * 100.0
-                        ));
+                    for (durable, bar, what) in [
+                        (0u64, MAX_CHECKPOINT_OVERHEAD, "default-cadence"),
+                        (1u64, MAX_DURABLE_OVERHEAD, "default-cadence durable"),
+                    ] {
+                        let (Some(base), Some(walled)) = (
+                            wall_of(case, 0, durable),
+                            wall_of(case, perks::runtime::DEFAULT_CHECKPOINT_EVERY, durable),
+                        ) else {
+                            continue;
+                        };
+                        if base < OVERHEAD_GATE_MIN_WALL {
+                            println!(
+                                "note: {name}: {case} {what} cadence-0 wall {base:.6}s below \
+                                 the {OVERHEAD_GATE_MIN_WALL}s noise floor; overhead gate skipped"
+                            );
+                            continue;
+                        }
+                        let limit = base * (1.0 + bar);
+                        if walled > limit {
+                            fails.push(format!(
+                                "{name}: {case} {what} wall {walled:.6}s exceeds the \
+                                 cadence-0 wall {base:.6}s by more than {:.0}%",
+                                bar * 100.0
+                            ));
+                        }
                     }
                 }
             }

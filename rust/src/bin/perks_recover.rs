@@ -1,0 +1,489 @@
+//! `perks_recover` — list, verify, and resume durable snapshot
+//! directories written by `runtime::resilience::snapshot::SnapshotStore`
+//! (see `docs/RECOVERY.md` for the on-disk layout and the
+//! crash-consistency argument).
+//!
+//! ```text
+//! perks_recover list <dir>                  # tenants + generations
+//! perks_recover verify <dir>                # checksum every frame
+//! perks_recover resume <dir> [--workers N]  # finish interrupted commands
+//! perks_recover crash-demo <dir> [--workers N] [--case C]
+//! ```
+//!
+//! `resume` rebuilds each tenant from its self-describing
+//! [`WorkloadMeta`], restores the newest generation that verifies
+//! (falling back past torn frames), finishes the command the snapshot
+//! was taken in, and prints a bit-level fingerprint of the final state.
+//!
+//! `crash-demo` is the end-to-end acceptance drill CI's `crash-restart`
+//! job runs: for each workload case it computes an uninterrupted
+//! reference in-process, re-executes itself as a child process that runs
+//! the same workload with durable checkpoints and a `FaultKind::Kill`
+//! fault (a hard `process::abort` mid-`advance` — the SIGKILL stand-in),
+//! asserts the child died abnormally, restores from the snapshot
+//! directory the child left behind, resumes the remaining epochs, and
+//! requires the final state to match the reference **bit for bit**.
+//! Cases: `stencil2d` (2d5pt, bt=2), `stencil3d` (3d7pt, bt=2), `cg`
+//! (Poisson), or `all` (default).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use perks::runtime::farm::SolverFarm;
+use perks::runtime::{
+    FaultPlan, FaultSpec, ResilienceConfig, Restored, SnapshotStore, WorkloadMeta,
+};
+use perks::sparse::gen;
+use perks::spmv::merge::MergePlan;
+use perks::stencil::{spec, Domain};
+use perks::util::codec::{fnv1a64, Encoder};
+use perks::{Error, Result};
+
+const USAGE: &str = "usage: perks_recover <list|verify|resume|crash-demo|crash-child> <dir> \
+                     [--workers N] [--case stencil2d|stencil3d|cg|all]";
+
+/// One crash-demo workload: two commands (`s1` then `s2`), a kill fault
+/// pinned mid-command-2, and a checkpoint cadence that guarantees
+/// durable frames exist before the kill epoch.
+struct DemoCase {
+    name: &'static str,
+    /// `None` = CG over the Poisson operator; `Some` = stencil bench.
+    stencil: Option<(&'static str, &'static [usize], usize)>, // (bench, interior, bt)
+    cg_grid: usize,
+    shards: usize,
+    s1: usize,
+    s2: usize,
+    kill_epoch: u64,
+    cadence: u64,
+    seed: u64,
+}
+
+const CASES: [DemoCase; 3] = [
+    DemoCase {
+        name: "stencil2d",
+        stencil: Some(("2d5pt", &[16, 16], 2)),
+        cg_grid: 0,
+        shards: 3,
+        s1: 8,
+        s2: 8,
+        kill_epoch: 6,
+        cadence: 2,
+        seed: 2026,
+    },
+    DemoCase {
+        name: "stencil3d",
+        stencil: Some(("3d7pt", &[6, 6, 6], 2)),
+        cg_grid: 0,
+        shards: 3,
+        s1: 8,
+        s2: 8,
+        kill_epoch: 6,
+        cadence: 2,
+        seed: 2027,
+    },
+    DemoCase {
+        name: "cg",
+        stencil: None,
+        cg_grid: 12,
+        shards: 3,
+        s1: 8,
+        s2: 8,
+        kill_epoch: 12,
+        cadence: 3,
+        seed: 7,
+    },
+];
+
+fn case_named(name: &str) -> Option<&'static DemoCase> {
+    CASES.iter().find(|c| c.name == name)
+}
+
+/// Bit-level fingerprint of a state vector (FNV-1a 64 over the exact
+/// f64 bytes — two states print the same fingerprint iff bit-identical).
+fn fingerprint(state: &[f64]) -> u64 {
+    let mut e = Encoder::with_capacity(state.len() * 8);
+    e.put_f64s(state);
+    fnv1a64(&e.finish())
+}
+
+struct Args {
+    cmd: String,
+    dir: PathBuf,
+    workers: usize,
+    case: String,
+}
+
+fn parse_args() -> std::result::Result<Args, String> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().ok_or(USAGE)?;
+    let dir = PathBuf::from(it.next().ok_or(USAGE)?);
+    let mut args = Args { cmd, dir, workers: 2, case: "all".into() };
+    while let Some(tok) = it.next() {
+        match tok.as_str() {
+            "--workers" => {
+                args.workers = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .filter(|&w| w > 0)
+                    .ok_or("--workers needs a positive integer")?;
+            }
+            "--case" => args.case = it.next().ok_or("--case needs a value")?,
+            other => return Err(format!("unknown flag {other:?}\n{USAGE}")),
+        }
+    }
+    Ok(args)
+}
+
+fn cmd_list(store: &SnapshotStore) -> Result<()> {
+    let tenants = store.tenants()?;
+    if tenants.is_empty() {
+        println!("{}: no tenants", store.root().display());
+        return Ok(());
+    }
+    for t in tenants {
+        let entries = store.entries(&t)?;
+        // peek the newest restorable generation for the workload line
+        let desc = store
+            .restore(&t)
+            .map(|r| r.meta.describe())
+            .unwrap_or_else(|e| format!("unrestorable: {e}"));
+        println!("{t}: {desc}");
+        for e in entries {
+            println!(
+                "  gen {:>4}  epoch {:>6}  {:>9} B  checksum {:016x}",
+                e.generation, e.epoch, e.frame_len, e.checksum
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(store: &SnapshotStore) -> Result<bool> {
+    let mut all_ok = true;
+    for t in store.tenants()? {
+        for st in store.verify(&t)? {
+            match st.problem {
+                None => println!("{t} gen {} epoch {}: ok", st.generation, st.epoch),
+                Some(p) => {
+                    all_ok = false;
+                    println!("{t} gen {} epoch {}: FAIL {p}", st.generation, st.epoch);
+                }
+            }
+        }
+    }
+    Ok(all_ok)
+}
+
+/// Rebuild the tenant a restored frame describes on a fresh farm and
+/// finish the command the snapshot was taken in. Returns the final
+/// state vector (stencil grid or CG iterate).
+fn resume_tenant(farm: &SolverFarm, restored: &Restored) -> Result<Vec<f64>> {
+    let ck = &restored.checkpoint;
+    let (done, target) = ck.progress();
+    let remaining = target.saturating_sub(done);
+    match &restored.meta {
+        WorkloadMeta::Stencil { bench, dims, bt, shards } => {
+            let s = spec(bench)
+                .ok_or_else(|| Error::Snapshot(format!("unknown stencil bench {bench:?}")))?;
+            let d = Domain::for_spec(&s, dims)?;
+            let mut t = farm.handle().admit_stencil(&s, &d, *shards, *bt)?;
+            t.restore_from(ck)?;
+            if remaining > 0 {
+                t.advance(remaining, None)?;
+            }
+            t.state()
+        }
+        WorkloadMeta::Cg { n, shards } => {
+            let grid = (*n as f64).sqrt().round() as usize;
+            if grid * grid != *n {
+                return Err(Error::Snapshot(format!(
+                    "cannot rebuild a non-square CG system (n = {n}); resume it from the \
+                     owning application via Checkpoint::cg_state"
+                )));
+            }
+            let a = Arc::new(gen::poisson2d(grid));
+            let plan = MergePlan::new(&a, *shards);
+            let mut t = farm.handle().admit_cg(a, plan)?;
+            let (mut x, mut r, mut p, rr, _) = ck
+                .cg_state()
+                .ok_or_else(|| Error::Snapshot("CG meta with a stencil payload".into()))?;
+            if remaining > 0 {
+                let run = t.run(&mut x, &mut r, &mut p, rr, 0.0, remaining)?;
+                if let Some(msg) = run.error {
+                    return Err(Error::Solver(msg));
+                }
+            }
+            Ok(x)
+        }
+    }
+}
+
+fn cmd_resume(store: &SnapshotStore, workers: usize) -> Result<()> {
+    let tenants = store.tenants()?;
+    if tenants.is_empty() {
+        return Err(Error::Snapshot(format!(
+            "{}: no tenants to resume",
+            store.root().display()
+        )));
+    }
+    let farm = SolverFarm::spawn(workers)?;
+    farm.install_faults(FaultPlan::new()); // hermetic: recovery never re-injects
+    for t in tenants {
+        let restored = store.restore(&t)?;
+        let (done, target) = restored.checkpoint.progress();
+        println!(
+            "{t}: {} @ gen {} epoch {} ({}{} of command {done}/{target})",
+            restored.meta.describe(),
+            restored.generation,
+            restored.checkpoint.epoch,
+            if restored.fallbacks > 0 { "fell back " } else { "newest frame, " },
+            if restored.fallbacks > 0 {
+                format!("{} generation(s)", restored.fallbacks)
+            } else {
+                "resuming".into()
+            },
+        );
+        let state = resume_tenant(&farm, &restored)?;
+        println!("{t}: resumed to completion; state fingerprint {:016x}", fingerprint(&state));
+    }
+    Ok(())
+}
+
+/// Uninterrupted in-process reference run of one demo case (clean farm,
+/// empty fault plan): the bits the crashed-and-resumed run must land on.
+fn reference_state(case: &DemoCase, workers: usize) -> Result<Vec<f64>> {
+    let farm = SolverFarm::spawn(workers)?;
+    farm.install_faults(FaultPlan::new());
+    match case.stencil {
+        Some((bench, interior, bt)) => {
+            let s = spec(bench)
+                .ok_or_else(|| Error::invalid(format!("unknown stencil bench {bench:?}")))?;
+            let mut d = Domain::for_spec(&s, interior)?;
+            d.randomize(case.seed);
+            let mut t = farm.handle().admit_stencil(&s, &d, case.shards, bt)?;
+            t.advance(case.s1 + case.s2, None)?;
+            t.state()
+        }
+        None => {
+            let a = Arc::new(gen::poisson2d(case.cg_grid));
+            let b = gen::rhs(a.n_rows, case.seed);
+            let plan = MergePlan::new(&a, case.shards);
+            let rr0: f64 = b.iter().map(|v| v * v).sum();
+            let mut t = farm.handle().admit_cg(a.clone(), plan)?;
+            let (mut x, mut r, mut p) = (vec![0.0; a.n_rows], b.clone(), b);
+            let run = t.run(&mut x, &mut r, &mut p, rr0, 0.0, case.s1 + case.s2)?;
+            if let Some(msg) = run.error {
+                return Err(Error::Solver(msg));
+            }
+            Ok(x)
+        }
+    }
+}
+
+/// The child half of `crash-demo`: run the case's workload with durable
+/// checkpoints and a pinned `FaultKind::Kill`, and die mid-command-2.
+/// Command 1 runs clean; the child then *waits until at least one frame
+/// is committed on disk* before issuing the doomed command, so the
+/// parent's restore can never race the off-lock write-out.
+fn cmd_crash_child(dir: &Path, case: &DemoCase, workers: usize) -> Result<()> {
+    let farm = SolverFarm::spawn(workers)?;
+    farm.install_faults(
+        FaultPlan::new().inject(FaultSpec::kill_at(case.kill_epoch).tenant(0)),
+    );
+    let cfg = ResilienceConfig::disabled().every(case.cadence).durable(dir);
+    let store = SnapshotStore::open(dir)?;
+    let wait_for_frame = || -> Result<()> {
+        let t0 = Instant::now();
+        while store.entries("t0").map(|e| e.is_empty()).unwrap_or(true) {
+            if t0.elapsed() > Duration::from_secs(10) {
+                return Err(Error::Snapshot(
+                    "no durable frame appeared within 10s of the clean command".into(),
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        Ok(())
+    };
+    match case.stencil {
+        Some((bench, interior, bt)) => {
+            let s = spec(bench)
+                .ok_or_else(|| Error::invalid(format!("unknown stencil bench {bench:?}")))?;
+            let mut d = Domain::for_spec(&s, interior)?;
+            d.randomize(case.seed);
+            let mut t = farm.handle().admit_stencil(&s, &d, case.shards, bt)?;
+            t.configure_resilience(cfg)?;
+            t.advance(case.s1, None)?;
+            wait_for_frame()?;
+            t.advance(case.s2, None)?; // aborts at kill_epoch: never returns
+        }
+        None => {
+            let a = Arc::new(gen::poisson2d(case.cg_grid));
+            let b = gen::rhs(a.n_rows, case.seed);
+            let plan = MergePlan::new(&a, case.shards);
+            let rr0: f64 = b.iter().map(|v| v * v).sum();
+            let mut t = farm.handle().admit_cg(a.clone(), plan)?;
+            t.configure_resilience(cfg)?;
+            let (mut x, mut r, mut p) = (vec![0.0; a.n_rows], b.clone(), b);
+            let run1 = t.run(&mut x, &mut r, &mut p, rr0, 0.0, case.s1)?;
+            if let Some(msg) = run1.error {
+                return Err(Error::Solver(msg));
+            }
+            wait_for_frame()?;
+            t.run(&mut x, &mut r, &mut p, run1.rr, 0.0, case.s2)?; // aborts
+        }
+    }
+    Err(Error::Solver(
+        "crash-child survived its kill fault — the injection never fired".into(),
+    ))
+}
+
+/// The parent half of `crash-demo` for one case: reference run, child
+/// crash, restore, resume, bit-compare.
+fn crash_demo_case(exe: &Path, dir: &Path, case: &DemoCase, workers: usize) -> Result<()> {
+    let case_dir = dir.join(case.name);
+    let _ = std::fs::remove_dir_all(&case_dir); // fresh directory per drill
+    let want = reference_state(case, workers)?;
+
+    let status = std::process::Command::new(exe)
+        .arg("crash-child")
+        .arg(&case_dir)
+        .arg("--case")
+        .arg(case.name)
+        .arg("--workers")
+        .arg(workers.to_string())
+        .status()
+        .map_err(|e| Error::Solver(format!("spawning crash child: {e}")))?;
+    if status.success() {
+        return Err(Error::Solver(format!(
+            "{}: crash child exited cleanly — the kill fault never fired",
+            case.name
+        )));
+    }
+
+    let store = SnapshotStore::open(&case_dir)?;
+    let restored = store.restore("t0")?;
+    // global progress: stencil epochs each cover bt steps, CG epochs are
+    // iterations — either way `epoch * unit` steps of the total are done
+    let unit = case.stencil.map(|(_, _, bt)| bt).unwrap_or(1);
+    let total = case.s1 + case.s2;
+    let done = restored.checkpoint.epoch as usize * unit;
+    if done == 0 || done >= total {
+        return Err(Error::Snapshot(format!(
+            "{}: restored epoch {} implies {done}/{total} steps done — outside the crash window",
+            case.name, restored.checkpoint.epoch
+        )));
+    }
+
+    let farm = SolverFarm::spawn(workers)?;
+    farm.install_faults(FaultPlan::new());
+    let got = match &restored.meta {
+        WorkloadMeta::Stencil { bench, dims, bt, shards } => {
+            let s = spec(bench)
+                .ok_or_else(|| Error::Snapshot(format!("unknown stencil bench {bench:?}")))?;
+            let d = Domain::for_spec(&s, dims)?;
+            let mut t = farm.handle().admit_stencil(&s, &d, *shards, *bt)?;
+            t.restore_from(&restored.checkpoint)?;
+            t.advance(total - done, None)?;
+            t.state()?
+        }
+        WorkloadMeta::Cg { shards, .. } => {
+            let a = Arc::new(gen::poisson2d(case.cg_grid));
+            let plan = MergePlan::new(&a, *shards);
+            let mut t = farm.handle().admit_cg(a, plan)?;
+            let (mut x, mut r, mut p, rr, _) = restored
+                .checkpoint
+                .cg_state()
+                .ok_or_else(|| Error::Snapshot("CG meta with a stencil payload".into()))?;
+            let run = t.run(&mut x, &mut r, &mut p, rr, 0.0, total - done)?;
+            if let Some(msg) = run.error {
+                return Err(Error::Solver(msg));
+            }
+            x
+        }
+    };
+
+    let identical =
+        got.len() == want.len() && got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+    if !identical {
+        return Err(Error::Solver(format!(
+            "{}: resumed state diverged from the uninterrupted reference \
+             (fingerprints {:016x} vs {:016x})",
+            case.name,
+            fingerprint(&got),
+            fingerprint(&want)
+        )));
+    }
+    println!(
+        "{}: killed at epoch {} -> restored gen {} (epoch {}, {} fallback(s)) -> resumed \
+         {} steps -> bit-identical (fingerprint {:016x}, workers={workers})",
+        case.name,
+        case.kill_epoch,
+        restored.generation,
+        restored.checkpoint.epoch,
+        restored.fallbacks,
+        total - done,
+        fingerprint(&got),
+    );
+    Ok(())
+}
+
+fn cmd_crash_demo(dir: &Path, which: &str, workers: usize) -> Result<()> {
+    let exe = std::env::current_exe()
+        .map_err(|e| Error::Solver(format!("cannot locate own executable: {e}")))?;
+    let cases: Vec<&DemoCase> = if which == "all" {
+        CASES.iter().collect()
+    } else {
+        vec![case_named(which)
+            .ok_or_else(|| Error::invalid(format!("unknown crash-demo case {which:?}")))?]
+    };
+    for case in cases {
+        crash_demo_case(&exe, dir, case, workers)?;
+    }
+    println!("crash-demo: every case resumed bit-identically after process death");
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<bool> {
+    match args.cmd.as_str() {
+        "list" => {
+            cmd_list(&SnapshotStore::open(&args.dir)?)?;
+            Ok(true)
+        }
+        "verify" => cmd_verify(&SnapshotStore::open(&args.dir)?),
+        "resume" => {
+            cmd_resume(&SnapshotStore::open(&args.dir)?, args.workers)?;
+            Ok(true)
+        }
+        "crash-demo" => {
+            cmd_crash_demo(&args.dir, &args.case, args.workers)?;
+            Ok(true)
+        }
+        "crash-child" => {
+            let case = case_named(&args.case)
+                .ok_or_else(|| Error::invalid(format!("unknown case {:?}", args.case)))?;
+            cmd_crash_child(&args.dir, case, args.workers)?;
+            Ok(true)
+        }
+        other => Err(Error::invalid(format!("unknown subcommand {other:?}\n{USAGE}"))),
+    }
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("perks_recover: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("perks_recover: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -63,6 +63,16 @@ pub enum Error {
         epoch: u64,
     },
 
+    /// A durable snapshot frame failed to decode, verify, or restore:
+    /// a torn write, a checksum mismatch, an unmanifested or missing
+    /// generation, or a snapshot directory with no restorable frame at
+    /// all. Structured — the snapshot store classifies and falls back a
+    /// generation on its own; this surfaces only when no generation
+    /// survives (or a durable write-out itself fails). Not retryable:
+    /// the bytes on disk will not change on their own.
+    #[error("snapshot: {0}")]
+    Snapshot(String),
+
     /// A blocking wait's watchdog deadline expired while the command was
     /// still in flight (`runtime::resilience::ResilienceConfig::
     /// deadline`). The command keeps draining; releasing the session

@@ -16,7 +16,8 @@ pub use cg_exp::{
 pub use farm_exp::{farm_vs_pool_per_session, FarmSweepRow};
 pub use plane_exp::{plane_stress, PlaneStressRow};
 pub use resilience_exp::{
-    cg_cadence_sweep, cg_recovery_row, stencil_cadence_sweep, stencil_recovery_row, ResilienceRow,
+    cg_cadence_sweep, cg_durable_sweep, cg_recovery_row, stencil_cadence_sweep,
+    stencil_durable_sweep, stencil_recovery_row, ResilienceRow,
 };
 pub use stencil_exp::{
     measure_cpu_stencil_modes, measure_cpu_stencil_temporal, modeled_run, speedup_row,

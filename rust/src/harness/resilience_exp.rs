@@ -4,7 +4,18 @@
 //! `BENCH_resilience.json` gate. Two invariants are *asserted* here, not
 //! just reported: clean runs recover zero times, and a recovered run's
 //! final state is bit-identical to an uninjected one.
+//!
+//! The durable sweeps ([`stencil_durable_sweep`] / [`cg_durable_sweep`])
+//! repeat the cadence sweep with crash-consistent snapshot persistence
+//! enabled (`ResilienceConfig::durable`), asserting two more invariants
+//! before reporting a single number: cadence 0 commits **zero** durable
+//! frames (durability off the cadence path costs nothing), and enabling
+//! the write-out never changes the solution bits. `bench_check` gates
+//! the reported rows (`durable` = 1): clean durable arms restore zero
+//! times and the default cadence stays within 10% wall of its cadence-0
+//! reference.
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -14,6 +25,7 @@ use crate::runtime::resilience::{FaultPlan, ResilienceConfig, RetryPolicy};
 use crate::sparse::gen;
 use crate::spmv::merge::MergePlan;
 use crate::stencil::{self, Domain};
+use crate::util::counters;
 
 /// One arm of the resilience sweep: a workload run at one checkpoint
 /// cadence (clean), or one seeded-fault recovery run (`injected > 0`).
@@ -36,6 +48,17 @@ pub struct ResilienceRow {
     pub checkpoint_bytes: u64,
     /// Faults the installed plan held (0 on clean arms).
     pub injected: u64,
+    /// Whether this arm persisted checkpoints to a durable snapshot
+    /// directory (`ResilienceConfig::durable`).
+    pub durable: bool,
+    /// Durable frames committed by this arm's farm — **must be 0 at
+    /// cadence 0** (`bench_check` gates on it; asserted here first).
+    pub durable_frames: u64,
+    /// Checkpoint payload bytes handed to the durable write-out.
+    pub durable_bytes: u64,
+    /// Snapshot restores observed during the arm (process-wide counter
+    /// delta) — clean arms never restore.
+    pub restores: u64,
 }
 
 impl ResilienceRow {
@@ -45,14 +68,19 @@ impl ResilienceRow {
         format!(
             "{{\"case\":\"{}\",\"cadence\":{},\"wall_seconds\":{:.6},\
              \"recoveries\":{},\"replayed_epochs\":{},\
-             \"checkpoint_bytes\":{},\"injected\":{}}}",
+             \"checkpoint_bytes\":{},\"injected\":{},\"durable\":{},\
+             \"durable_frames\":{},\"durable_bytes\":{},\"restores\":{}}}",
             self.case,
             self.cadence,
             self.wall_seconds,
             self.recoveries,
             self.replayed_epochs,
             self.checkpoint_bytes,
-            self.injected
+            self.injected,
+            self.durable as u64,
+            self.durable_frames,
+            self.durable_bytes,
+            self.restores
         )
     }
 }
@@ -123,6 +151,10 @@ pub fn stencil_cadence_sweep(
             replayed_epochs: replayed,
             checkpoint_bytes: ck_bytes,
             injected: 0,
+            durable: false,
+            durable_frames: 0,
+            durable_bytes: 0,
+            restores: 0,
         });
     }
     Ok(rows)
@@ -195,6 +227,202 @@ pub fn cg_cadence_sweep(
             replayed_epochs: replayed,
             checkpoint_bytes: ck_bytes,
             injected: 0,
+            durable: false,
+            durable_frames: 0,
+            durable_bytes: 0,
+            restores: 0,
+        });
+    }
+    Ok(rows)
+}
+
+/// The durable arm of [`stencil_cadence_sweep`]: the same cadence sweep
+/// with every checkpoint additionally persisted crash-consistently
+/// under `dir` (one subdirectory per cadence, so generations never mix
+/// across arms). Durable write-out happens off the scheduler lock, so
+/// the farm is shut down — joining the workers and draining any
+/// in-flight write — before its frame counters are read. Asserted
+/// before any row is returned: bit-identity across every cadence,
+/// zero recoveries, zero frames at cadence 0, and at least one frame
+/// per command at every nonzero cadence.
+#[allow(clippy::too_many_arguments)]
+pub fn stencil_durable_sweep(
+    bench: &str,
+    interior: &str,
+    steps: usize,
+    bt: usize,
+    workers: usize,
+    cadences: &[u64],
+    reps: usize,
+    dir: &Path,
+) -> Result<Vec<ResilienceRow>> {
+    let spec = stencil::spec(bench)
+        .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+    let dims = crate::session::parse_interior(interior)?;
+    if cadences.is_empty() || reps == 0 {
+        return Err(Error::invalid("cadences and reps must be non-empty"));
+    }
+    let mut d = Domain::for_spec(&spec, &dims)?;
+    d.randomize(100);
+
+    let mut rows = Vec::with_capacity(cadences.len());
+    let mut reference: Option<Vec<f64>> = None;
+    for &cadence in cadences {
+        let restores_before = counters::restores();
+        let mut farm = SolverFarm::spawn(workers)?;
+        farm.install_faults(FaultPlan::new()); // hermetic: override any env plan
+        let mut tenant = farm.handle().admit_stencil(&spec, &d, workers, bt)?;
+        tenant.configure_resilience(
+            ResilienceConfig::disabled()
+                .every(cadence)
+                .durable(dir.join(format!("cad{cadence}"))),
+        )?;
+        let mut wall = f64::INFINITY;
+        let (mut recoveries, mut replayed, mut ck_bytes) = (0u64, 0u64, 0u64);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let run = tenant.advance(steps, None)?;
+            wall = wall.min(t0.elapsed().as_secs_f64());
+            recoveries += run.recoveries;
+            replayed += run.replayed_epochs;
+            ck_bytes += run.checkpoint_bytes;
+        }
+        let state = tenant.state()?;
+        drop(tenant);
+        farm.shutdown(); // join workers: every claimed frame is on disk
+        let m = farm.metrics();
+        drop(farm);
+        match &reference {
+            None => reference = Some(state),
+            Some(want) if *want != state => {
+                return Err(Error::Solver(format!(
+                    "durable cadence {cadence} changed the stencil result (bit-identity broken)"
+                )));
+            }
+            Some(_) => {}
+        }
+        if recoveries != 0 {
+            return Err(Error::Solver(format!(
+                "clean durable stencil arm at cadence {cadence} recovered {recoveries} times"
+            )));
+        }
+        if cadence == 0 && m.durable_frames != 0 {
+            return Err(Error::Solver(format!(
+                "cadence-0 durable stencil arm committed {} frames (must be 0)",
+                m.durable_frames
+            )));
+        }
+        if cadence > 0 && steps.div_ceil(bt.max(1)) as u64 >= cadence && m.durable_frames == 0 {
+            return Err(Error::Solver(format!(
+                "durable stencil arm at cadence {cadence} committed no frames"
+            )));
+        }
+        rows.push(ResilienceRow {
+            case: format!("stencil-{bench}"),
+            cadence,
+            wall_seconds: wall,
+            recoveries,
+            replayed_epochs: replayed,
+            checkpoint_bytes: ck_bytes,
+            injected: 0,
+            durable: true,
+            durable_frames: m.durable_frames,
+            durable_bytes: m.durable_bytes,
+            restores: counters::restores().saturating_sub(restores_before),
+        });
+    }
+    Ok(rows)
+}
+
+/// The CG twin of [`stencil_durable_sweep`]: the [`cg_cadence_sweep`]
+/// workload with crash-consistent persistence enabled, under the same
+/// asserted invariants.
+pub fn cg_durable_sweep(
+    grid: usize,
+    iters: usize,
+    workers: usize,
+    cadences: &[u64],
+    reps: usize,
+    dir: &Path,
+) -> Result<Vec<ResilienceRow>> {
+    if cadences.is_empty() || reps == 0 {
+        return Err(Error::invalid("cadences and reps must be non-empty"));
+    }
+    let a = Arc::new(gen::poisson2d(grid));
+    let b = gen::rhs(a.n_rows, 7);
+    let plan = MergePlan::new(&a, workers);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+
+    let mut rows = Vec::with_capacity(cadences.len());
+    let mut reference: Option<Vec<f64>> = None;
+    for &cadence in cadences {
+        let restores_before = counters::restores();
+        let mut farm = SolverFarm::spawn(workers)?;
+        farm.install_faults(FaultPlan::new()); // hermetic: override any env plan
+        let mut tenant = farm.handle().admit_cg(a.clone(), plan.clone())?;
+        tenant.configure_resilience(
+            ResilienceConfig::disabled()
+                .every(cadence)
+                .durable(dir.join(format!("cad{cadence}"))),
+        )?;
+        let mut wall = f64::INFINITY;
+        let (mut recoveries, mut replayed, mut ck_bytes) = (0u64, 0u64, 0u64);
+        let mut x = vec![0.0; a.n_rows];
+        for _ in 0..reps {
+            x.iter_mut().for_each(|v| *v = 0.0);
+            let mut r = b.clone();
+            let mut p = b.clone();
+            let t0 = Instant::now();
+            let run = tenant.run(&mut x, &mut r, &mut p, rr0, 0.0, iters)?;
+            wall = wall.min(t0.elapsed().as_secs_f64());
+            if let Some(msg) = run.error {
+                return Err(Error::Solver(msg));
+            }
+            recoveries += run.recoveries;
+            replayed += run.replayed_epochs;
+            ck_bytes += run.checkpoint_bytes;
+        }
+        drop(tenant);
+        farm.shutdown(); // join workers: every claimed frame is on disk
+        let m = farm.metrics();
+        drop(farm);
+        match &reference {
+            None => reference = Some(x.clone()),
+            Some(want) if *want != x => {
+                return Err(Error::Solver(format!(
+                    "durable cadence {cadence} changed the CG iterates (bit-identity broken)"
+                )));
+            }
+            Some(_) => {}
+        }
+        if recoveries != 0 {
+            return Err(Error::Solver(format!(
+                "clean durable CG arm at cadence {cadence} recovered {recoveries} times"
+            )));
+        }
+        if cadence == 0 && m.durable_frames != 0 {
+            return Err(Error::Solver(format!(
+                "cadence-0 durable CG arm committed {} frames (must be 0)",
+                m.durable_frames
+            )));
+        }
+        if cadence > 0 && iters as u64 >= cadence && m.durable_frames == 0 {
+            return Err(Error::Solver(format!(
+                "durable CG arm at cadence {cadence} committed no frames"
+            )));
+        }
+        rows.push(ResilienceRow {
+            case: "cg-poisson".into(),
+            cadence,
+            wall_seconds: wall,
+            recoveries,
+            replayed_epochs: replayed,
+            checkpoint_bytes: ck_bytes,
+            injected: 0,
+            durable: true,
+            durable_frames: m.durable_frames,
+            durable_bytes: m.durable_bytes,
+            restores: counters::restores().saturating_sub(restores_before),
         });
     }
     Ok(rows)
@@ -278,6 +506,10 @@ pub fn stencil_recovery_row(
         replayed_epochs: run.replayed_epochs,
         checkpoint_bytes: run.checkpoint_bytes,
         injected,
+        durable: false,
+        durable_frames: 0,
+        durable_bytes: 0,
+        restores: 0,
     })
 }
 
@@ -352,6 +584,10 @@ pub fn cg_recovery_row(
         replayed_epochs: run.replayed_epochs,
         checkpoint_bytes: run.checkpoint_bytes,
         injected,
+        durable: false,
+        durable_frames: 0,
+        durable_bytes: 0,
+        restores: 0,
     })
 }
 
@@ -383,6 +619,32 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert!(rows.iter().all(|r| r.recoveries == 0));
         assert!(rows[1].checkpoint_bytes > 0);
+    }
+
+    #[test]
+    fn durable_sweeps_write_frames_and_stay_bit_identical() {
+        let dir = std::env::temp_dir()
+            .join(format!("perks-durable-harness-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let rows =
+            stencil_durable_sweep("2d5pt", "12x12", 8, 1, 2, &[0, 2], 1, &dir.join("st"))
+                .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.durable && r.recoveries == 0 && r.injected == 0));
+        assert_eq!(rows[0].durable_frames, 0, "cadence 0 must commit no durable frames");
+        assert_eq!(rows[0].durable_bytes, 0);
+        assert!(rows[1].durable_frames >= 1, "cadence 2 must commit durable frames");
+        assert!(rows[1].durable_bytes > 0);
+        let j = rows[1].json();
+        for key in ["\"durable\":1", "\"durable_frames\"", "\"durable_bytes\"", "\"restores\""] {
+            assert!(j.contains(key), "{j}");
+        }
+
+        let rows = cg_durable_sweep(8, 6, 2, &[0, 2], 1, &dir.join("cg")).unwrap();
+        assert_eq!(rows[0].durable_frames, 0);
+        assert!(rows[1].durable_frames >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -62,6 +62,23 @@
 //! pool-per-session and feeds the CI perf-regression gate
 //! (`bin/bench_check` vs `bench/baselines/`).
 //!
+//! ## Surviving process death: durable checkpoints
+//!
+//! A farm session built with `SessionBuilder::durable(dir)` commits
+//! every epoch-boundary checkpoint crash-consistently to disk
+//! ([`runtime::resilience::snapshot::SnapshotStore`]: tmp write + fsync
+//! + atomic rename into generation-numbered, checksummed frames — off
+//! the scheduler lock, so the hot loop never blocks on I/O). After a
+//! SIGKILL-class death the `perks_recover` binary (or
+//! [`SnapshotStore::restore`](runtime::resilience::snapshot::SnapshotStore::restore)
+//! plus `FarmStencil::restore_from` / `Checkpoint::cg_state`) rebuilds
+//! each tenant from the self-describing frames and resumes
+//! **bit-identically** to the uninterrupted run; torn or corrupt frames
+//! fall back one generation instead of failing. The on-disk format,
+//! crash-consistency argument, and operator walkthrough live in
+//! `docs/RECOVERY.md`; `benches/resilience.rs` gates the write-out
+//! overhead.
+//!
 //! ## Layers
 //!
 //! * **L1** (`python/compile/kernels/`): Pallas stencil + fused CG kernels,

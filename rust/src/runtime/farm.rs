@@ -121,6 +121,21 @@
 //! are counted per command ([`StencilFarmRun`]/[`CgFarmRun`]), per farm
 //! ([`FarmMetrics`]), and process-wide (`util::counters`).
 //!
+//! Tenants configured with a durable snapshot directory
+//! (`ResilienceConfig::durable`) additionally persist every checkpoint
+//! through a [`SnapshotStore`]: the transition only parks the fresh
+//! checkpoint in a pending slot under the lock; the worker that drained
+//! the phase claims it after the scheduler guard drops and runs the
+//! crash-consistent write-out (tmp + fsync + atomic rename) entirely
+//! outside the lock, so disk latency never serializes claims. A killed
+//! process ([`FaultKind::Kill`], a SIGKILL stand-in) resumes from the
+//! last durable frame via [`SnapshotStore::restore`] +
+//! [`FarmStencil::restore_from`] (CG resumes through its
+//! command-boundary state), bit-identical to an uninterrupted run — see
+//! `docs/RECOVERY.md`. A failed write-out surfaces as
+//! [`Error::Snapshot`] on the tenant's next submit, never as a torn
+//! frame: restore verifies checksums and falls back a generation.
+//!
 //! # Teardown
 //!
 //! Shutdown is a dedicated flag checked on every condvar wake — never a
@@ -143,6 +158,7 @@ use crate::runtime::plane::admission::{AdmissionPolicy, PlaneConfig};
 use crate::runtime::plane::future::{CgCompletion, StencilCompletion};
 use crate::runtime::plane::graph::CommandGraph;
 use crate::runtime::plane::reactor::block_on;
+use crate::runtime::resilience::snapshot::{SnapshotStore, WorkloadMeta};
 use crate::runtime::resilience::{
     Checkpoint, CheckpointPayload, FaultKind, FaultPlan, ResilienceConfig, RetryPolicy,
 };
@@ -680,8 +696,24 @@ struct Tenant {
     /// Lifetime completed-epoch counter (stencil exchange epochs + CG
     /// iterations) — the coordinate fault plans and checkpoints use.
     epoch: u64,
-    /// Last resident-state snapshot (command-entry or cadence).
-    checkpoint: Option<Checkpoint>,
+    /// Last resident-state snapshot (command-entry or cadence). Shared
+    /// with the durable write-out path, which persists the same bytes
+    /// outside the lock — hence the `Arc`, never a second copy.
+    checkpoint: Option<Arc<Checkpoint>>,
+    /// Durable write-out plumbing (`ResilienceConfig::durable`); `None`
+    /// — the common case — costs one branch per checkpoint.
+    durable: Option<Arc<DurableSink>>,
+    /// Newest checkpoint awaiting durable write-out. Overwritten, never
+    /// queued: only the latest epoch matters on disk, so a slow disk
+    /// coalesces frames instead of building a backlog.
+    durable_pending: Option<Arc<Checkpoint>>,
+    /// A worker is persisting this tenant's frame outside the lock
+    /// (claim guard: at most one write-out per tenant in flight).
+    durable_writing: bool,
+    /// A durable write-out failed; surfaced as [`Error::Snapshot`] on
+    /// the next submit (the failing command itself already completed).
+    /// Cleared by `configure_resilience`.
+    durable_error: Option<String>,
     /// Recovery attempts consumed by the current command.
     attempts: u32,
     /// Backoff gate: the scheduler defers claims until this farm-clock
@@ -745,6 +777,10 @@ impl Tenant {
             res_cfg: ResilienceConfig::disabled(),
             epoch: 0,
             checkpoint: None,
+            durable: None,
+            durable_pending: None,
+            durable_writing: false,
+            durable_error: None,
             attempts: 0,
             resume_at: 0.0,
             recoveries_cmd: 0,
@@ -769,6 +805,38 @@ impl Tenant {
             alpha: 0.0,
             beta: 0.0,
         }
+    }
+}
+
+/// Where one tenant's checkpoints go when durability is configured:
+/// the opened store, the tenant's directory name, and the workload
+/// descriptor stamped into every frame (so a recovering process can
+/// rebuild the right engine before restoring bytes into it). Built by
+/// `set_resilience` (store opened *before* the scheduler lock — directory
+/// creation is filesystem I/O); shared by `Arc` so the off-lock writer
+/// never clones the path buffers.
+struct DurableSink {
+    store: SnapshotStore,
+    name: String,
+    meta: WorkloadMeta,
+}
+
+/// Workload descriptor for a tenant's durable frames (see
+/// [`WorkloadMeta`]): enough to re-admit an equivalent tenant in a fresh
+/// process and have `restore` reject frames from a different workload.
+fn workload_meta(engine: &EngineKind) -> WorkloadMeta {
+    match engine {
+        EngineKind::Stencil(e) => WorkloadMeta::Stencil {
+            bench: e.spec.name.to_string(),
+            dims: if e.spec.dims == 2 {
+                vec![e.meta.interior[1], e.meta.interior[2]]
+            } else {
+                e.meta.interior.to_vec()
+            },
+            bt: e.bt,
+            shards: e.plans.len(),
+        },
+        EngineKind::Cg(e) => WorkloadMeta::Cg { n: e.a.n_rows, shards: e.blocks.len() },
     }
 }
 
@@ -830,6 +898,8 @@ struct FarmShared {
     recoveries: AtomicU64,
     replayed_epochs: AtomicU64,
     checkpoint_bytes: AtomicU64,
+    durable_frames: AtomicU64,
+    durable_bytes: AtomicU64,
 }
 
 impl FarmShared {
@@ -919,6 +989,12 @@ pub struct FarmMetrics {
     pub replayed_epochs: u64,
     /// Bytes copied into resident-state checkpoints.
     pub checkpoint_bytes: u64,
+    /// Snapshot frames this farm persisted durably (0 unless a tenant
+    /// configured `ResilienceConfig::durable` — and always 0 at
+    /// checkpoint cadence 0, the invariant `bench_check` asserts).
+    pub durable_frames: u64,
+    /// Checkpoint payload bytes those frames carried to disk.
+    pub durable_bytes: u64,
 }
 
 impl FarmMetrics {
@@ -958,6 +1034,11 @@ impl SolverFarm {
             return Err(Error::invalid("farm workers must be > 0"));
         }
         plane.validate()?;
+        // CI replay hook: a fault plan in the environment arms injection
+        // on every farm the process spawns. A malformed plan fails the
+        // spawn loudly — silently running *without* the injection CI
+        // asked for would make a red test quietly green.
+        let env_faults = FaultPlan::from_env()?;
         let shared = Arc::new(FarmShared {
             ctl: Mutex::new(FarmState {
                 shutdown: false,
@@ -970,9 +1051,7 @@ impl SolverFarm {
                 queue_max: 0.0,
                 plane_inflight: 0,
                 plane_peak: 0,
-                // CI replay hook: a fault plan in the environment arms
-                // injection on every farm the process spawns
-                faults: FaultPlan::from_env(),
+                faults: env_faults,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
@@ -992,6 +1071,8 @@ impl SolverFarm {
             recoveries: AtomicU64::new(0),
             replayed_epochs: AtomicU64::new(0),
             checkpoint_bytes: AtomicU64::new(0),
+            durable_frames: AtomicU64::new(0),
+            durable_bytes: AtomicU64::new(0),
         });
         counters::note_thread_spawns(workers as u64);
         let mut handles = Vec::with_capacity(workers);
@@ -1176,6 +1257,8 @@ impl FarmHandle {
             recoveries: sh.recoveries.load(Ordering::Relaxed),
             replayed_epochs: sh.replayed_epochs.load(Ordering::Relaxed),
             checkpoint_bytes: sh.checkpoint_bytes.load(Ordering::Relaxed),
+            durable_frames: sh.durable_frames.load(Ordering::Relaxed),
+            durable_bytes: sh.durable_bytes.load(Ordering::Relaxed),
         }
     }
 
@@ -1195,6 +1278,12 @@ impl FarmHandle {
     /// flight — the knobs feed the completion transition and must not
     /// change under it.
     fn set_resilience(&self, tid: usize, cfg: ResilienceConfig) -> Result<()> {
+        // open the snapshot store *before* taking the scheduler lock:
+        // directory creation is filesystem I/O and must never ride `ctl`
+        let store = match cfg.durable.as_deref() {
+            Some(dir) => Some(SnapshotStore::open(dir)?),
+            None => None,
+        };
         let mut g = self.shared.lock();
         if g.shutdown {
             return Err(Error::Solver("solver farm is shut down".into()));
@@ -1207,6 +1296,20 @@ impl FarmHandle {
                 "resilience config change with a command in flight".into(),
             ));
         }
+        t.durable = store.map(|store| {
+            Arc::new(DurableSink {
+                store,
+                // slot index as the on-disk tenant name: stable across a
+                // kill + restart that re-admits tenants in the same order
+                // (the recovery contract `perks_recover` documents)
+                name: format!("t{tid}"),
+                meta: workload_meta(&t.engine),
+            })
+        });
+        // reconfiguring is the reset point for a failed write-out: the
+        // new config names a (possibly different, possibly fixed)
+        // directory, so the stale error must not poison it
+        t.durable_error = None;
         t.res_cfg = cfg;
         Ok(())
     }
@@ -1248,6 +1351,12 @@ impl FarmHandle {
                 return Err(Error::Solver(
                     "farm session already has a command in flight".into(),
                 ));
+            }
+            // a durable write-out failed after an earlier command
+            // completed: fail the next submit loudly instead of silently
+            // advancing state the disk can no longer recover
+            if let Some(msg) = t.durable_error.as_ref() {
+                return Err(Error::Snapshot(msg.clone()));
             }
             match &*t.engine {
                 EngineKind::Stencil(e) => e.bt,
@@ -1515,6 +1624,11 @@ impl FarmHandle {
                     "farm session already has a command in flight".into(),
                 ));
             }
+            // failed durable write-out: loud on the next submit (see
+            // submit_stencil_cmd)
+            if let Some(msg) = t.durable_error.as_ref() {
+                return Err(Error::Snapshot(msg.clone()));
+            }
             let EngineKind::Cg(ref e) = *t.engine else {
                 return Err(Error::Solver("not a cg tenant".into()));
             };
@@ -1718,6 +1832,78 @@ impl FarmHandle {
         Ok(out)
     }
 
+    /// Install a durable checkpoint's resident state into an idle
+    /// stencil tenant — the disk-restore twin of the in-memory
+    /// `restore_tenant`: grid, slab pairs, the load flag, and the
+    /// lifetime epoch coordinate. Shape mismatches are structured
+    /// [`Error::Snapshot`]s (the frame belongs to a different workload),
+    /// never a panic.
+    fn restore_stencil(&self, tid: usize, ck: &Checkpoint) -> Result<()> {
+        let mut g = self.shared.lock();
+        if g.shutdown {
+            return Err(Error::Solver("solver farm is shut down".into()));
+        }
+        let Some(t) = g.tenants[tid].as_mut() else {
+            return Err(Error::Solver("farm tenant released".into()));
+        };
+        if t.active {
+            return Err(Error::Solver(
+                "farm state restore with a command in flight".into(),
+            ));
+        }
+        let engine = t.engine.clone();
+        let EngineKind::Stencil(ref e) = *engine else {
+            return Err(Error::Solver("not a stencil tenant".into()));
+        };
+        let CheckpointPayload::Stencil { grid, slabs, residual, loaded, .. } = &ck.payload
+        else {
+            return Err(Error::Snapshot("checkpoint is not a stencil snapshot".into()));
+        };
+        if grid.len() != e.grid.len() {
+            return Err(Error::Snapshot(format!(
+                "snapshot grid has {} cells, tenant expects {}",
+                grid.len(),
+                e.grid.len()
+            )));
+        }
+        if *loaded {
+            if slabs.len() != e.plans.len() {
+                return Err(Error::Snapshot(format!(
+                    "snapshot has {} slab pairs, tenant expects {}",
+                    slabs.len(),
+                    e.plans.len()
+                )));
+            }
+            for (i, (plan, (cur, nxt))) in e.plans.iter().zip(slabs).enumerate() {
+                if cur.len() != plan.slab.len() || nxt.len() != plan.slab.len() {
+                    return Err(Error::Snapshot(format!(
+                        "snapshot slab {i} is {}/{} cells, tenant expects {}",
+                        cur.len(),
+                        nxt.len(),
+                        plan.slab.len()
+                    )));
+                }
+            }
+        }
+        // SAFETY: tenant idle (checked above under the scheduler lock) —
+        // exclusive access to the resident buffers, and every length was
+        // validated structurally just above.
+        unsafe {
+            e.grid.write(0, grid);
+            if *loaded {
+                for (cell, (cur, nxt)) in e.slabs.iter().zip(slabs) {
+                    let slab = &mut *cell.0.get();
+                    slab.cur.copy_from_slice(cur);
+                    slab.nxt.copy_from_slice(nxt);
+                }
+            }
+        }
+        t.loaded = *loaded;
+        t.residual = *residual;
+        t.epoch = ck.epoch;
+        Ok(())
+    }
+
     fn release(&self, tid: usize) {
         let sh = &self.shared;
         let mut g = sh.lock();
@@ -1870,6 +2056,17 @@ impl FarmStencil {
     /// must not change under it.
     pub fn configure_resilience(&mut self, cfg: ResilienceConfig) -> Result<()> {
         self.farm.set_resilience(self.tid, cfg)
+    }
+
+    /// Restore this tenant's resident state from a durable checkpoint
+    /// (between commands only): grid, slab pairs, and the lifetime epoch
+    /// coordinate, so the next `advance` resumes the time loop
+    /// bit-identically to the uninterrupted run. Pair with
+    /// [`crate::runtime::resilience::snapshot::SnapshotStore::restore`]
+    /// and [`Checkpoint::progress`] to compute the remaining steps —
+    /// the recovery walkthrough lives in `docs/RECOVERY.md`.
+    pub fn restore_from(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.farm.restore_stencil(self.tid, ck)
     }
 }
 
@@ -2067,6 +2264,14 @@ fn worker_main(sh: &FarmShared) {
         if let Some(FaultKind::Stall(d)) = task.inject {
             std::thread::sleep(d);
         }
+        // injected hard kill: a SIGKILL stand-in — the process dies
+        // right here, mid-command, no unwinding, no Drop, no flush.
+        // In-memory recovery cannot survive this; only a durable
+        // snapshot already renamed into place can (docs/RECOVERY.md,
+        // the `crash-restart` CI job).
+        if matches!(task.inject, Some(FaultKind::Kill)) {
+            std::process::abort();
+        }
         // A panic in the numeric shard must not leave the countdown short
         // (that would hang the client's wait): surface it as a command
         // failure instead. Unlike the barrier pools, a panicking shard
@@ -2087,14 +2292,24 @@ fn worker_main(sh: &FarmShared) {
             out
         }))
         .map_err(|_| Failure::Panic { phase: task.phase, shard: task.shard, epoch: task.epoch });
-        let waker = {
+        let (waker, durable_job) = {
             let mut g = sh.lock();
-            complete(&mut g, sh, &task, res)
+            let waker = complete(&mut g, sh, &task, res);
+            // claim this tenant's pending durable frame (if the
+            // transition just parked one) under the lock we already
+            // hold; the write itself runs after the guard drops
+            let job = claim_durable(&mut g, task.tid);
+            (waker, job)
         };
         // fire the completion waker outside the scheduler lock — the woken
         // executor immediately re-polls, which needs the lock itself
         if let Some(w) = waker {
             w.wake();
+        }
+        // durable write-out: fsync + rename latency happens here, with
+        // no lock held — peers keep claiming while the disk works
+        if let Some((sink, ck)) = durable_job {
+            write_durable(sh, task.tid, sink, ck);
         }
     }
 }
@@ -2628,10 +2843,16 @@ fn take_checkpoint(t: &mut Tenant, sh: &FarmShared) {
             }
         }
     };
-    let ck = Checkpoint::new(t.epoch, payload);
+    let ck = Arc::new(Checkpoint::new(t.epoch, payload));
     t.ckpt_bytes_cmd += ck.bytes;
     sh.checkpoint_bytes.fetch_add(ck.bytes, Ordering::Relaxed);
     counters::note_checkpoint_bytes(ck.bytes);
+    // durable tenants park the same snapshot (an Arc, not a copy) for
+    // the off-lock write-out; overwriting a not-yet-claimed frame is the
+    // coalescing policy — only the newest epoch matters on disk
+    if t.durable.is_some() {
+        t.durable_pending = Some(ck.clone());
+    }
     t.checkpoint = Some(ck);
 }
 
@@ -2731,6 +2952,68 @@ fn restore_tenant(t: &mut Tenant, sh: &FarmShared) -> u8 {
     // the same snapshot serves every remaining attempt
     t.checkpoint = Some(ck);
     resume
+}
+
+/// Claim a tenant's pending durable frame for write-out, if one exists
+/// and no peer is already writing it (at most one write-out per tenant
+/// in flight, so generations land on disk in epoch order). Called under
+/// the scheduler lock; the returned sink + frame are persisted by the
+/// caller **after** the guard drops.
+fn claim_durable(
+    g: &mut FarmState,
+    tid: usize,
+) -> Option<(Arc<DurableSink>, Arc<Checkpoint>)> {
+    let t = g.tenants.get_mut(tid).and_then(|t| t.as_mut())?;
+    if t.durable_writing {
+        return None;
+    }
+    let ck = t.durable_pending.take()?;
+    let sink = t.durable.as_ref()?.clone();
+    t.durable_writing = true;
+    Some((sink, ck))
+}
+
+/// Persist a claimed checkpoint frame, then keep going while newer
+/// frames arrive (a slow disk coalesces to the newest epoch instead of
+/// building a backlog). Runs on a worker thread with **no** scheduler
+/// lock held around the filesystem work; the lock is re-taken only to
+/// record the outcome and claim the next frame. A failed write marks
+/// the tenant (`Error::Snapshot` on its next submit) — it never tears a
+/// frame: the store's tmp + fsync + rename protocol means a partial
+/// write is invisible to every restore.
+fn write_durable(
+    sh: &FarmShared,
+    tid: usize,
+    mut sink: Arc<DurableSink>,
+    mut ck: Arc<Checkpoint>,
+) {
+    loop {
+        let res = sink.store.persist(&sink.name, &sink.meta, &ck);
+        let mut g = sh.lock();
+        if res.is_ok() {
+            sh.durable_frames.fetch_add(1, Ordering::Relaxed);
+            sh.durable_bytes.fetch_add(ck.bytes, Ordering::Relaxed);
+        }
+        // tenant released mid-write: the frame (if written) is already
+        // durable; there is simply nobody left to report to
+        let Some(t) = g.tenants.get_mut(tid).and_then(|t| t.as_mut()) else { return };
+        if let Err(e) = res {
+            t.durable_error = Some(format!("durable write-out failed: {e}"));
+            t.durable_pending = None;
+            t.durable_writing = false;
+            return;
+        }
+        match (t.durable_pending.take(), t.durable.as_ref()) {
+            (Some(next), Some(s)) => {
+                sink = s.clone();
+                ck = next;
+            }
+            _ => {
+                t.durable_writing = false;
+                return;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

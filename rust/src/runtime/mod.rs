@@ -27,7 +27,12 @@
 //!   coordinates, replayable from the `PERKS_FAULT_PLAN` environment
 //!   variable), and supervised recovery ([`resilience::RetryPolicy`]:
 //!   checkpoint-restore + bit-identical replay instead of a command
-//!   error, with a watchdog deadline for stuck commands).
+//!   error, with a watchdog deadline for stuck commands). Its
+//!   [`resilience::snapshot`] submodule extends recovery past the
+//!   process boundary: crash-consistent, checksummed, generation-
+//!   numbered persistence of the same checkpoints
+//!   ([`resilience::snapshot::SnapshotStore`]), so a killed process
+//!   resumes bit-identical via the `perks_recover` binary.
 //!
 //! The split mirrors the paper's host/device boundary: the farm is the
 //! persistent "device" (resident workers, resident tenant state), the
@@ -52,6 +57,7 @@ pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
 pub use plane::{
     block_on, AdmissionPolicy, CommandGraph, CommandGraphBuilder, LocalExecutor, PlaneConfig,
 };
+pub use resilience::snapshot::{Restored, SnapshotStore, WorkloadMeta};
 pub use resilience::{
     Checkpoint, FaultKind, FaultPlan, FaultSpec, ResilienceConfig, RetryPolicy,
     DEFAULT_CHECKPOINT_EVERY,

@@ -48,6 +48,20 @@
 //!    the stuck command is reaped through the existing zombie path when
 //!    the client releases the tenant.
 //!
+//! 4. **Durable snapshots.** The [`snapshot`] submodule persists the
+//!    same [`Checkpoint`]s crash-consistently to disk (serialize to
+//!    `*.tmp`, fsync, atomic rename into a checksummed
+//!    generation-numbered frame, versioned manifest), armed per tenant
+//!    via [`ResilienceConfig::durable`] /
+//!    `SessionBuilder::durable(dir)`. That extends recovery past the
+//!    process boundary: a [`FaultKind::Kill`], SIGKILL, OOM kill, or
+//!    node reboot is survivable because a *fresh* process (the
+//!    `perks_recover` binary, or any client) restores the newest
+//!    verifiable generation and resumes bit-identical. The write-out
+//!    runs outside the scheduler lock so the hot path never waits on
+//!    `fsync`. See `docs/RECOVERY.md` for the on-disk format and the
+//!    crash-consistency argument.
+//!
 //! Failure classes injectable (and recoverable) here:
 //!
 //! * [`FaultKind::Panic`] — the shard closure panics; caught by the
@@ -57,6 +71,10 @@
 //!   `p·Ap` / `r·r` folds detect it at the next reduction.
 //! * [`FaultKind::Stall`] — the worker sleeps before running the
 //!   shard, exercising the wait-side watchdog deadline.
+//! * [`FaultKind::Kill`] — the worker hard-aborts the whole process
+//!   (`std::process::abort`) at the matched claim site: no unwinding,
+//!   no in-process recovery. Only a durable snapshot directory makes
+//!   this one survivable; it drives the crash-restart CI job.
 //!
 //! The solo pools participate too: [`crate::stencil::pool::StencilPool`]
 //! exposes `checkpoint`/`restore` over the same [`Checkpoint`] type
@@ -65,10 +83,13 @@
 //! its x/r/p state round-trips through the caller on every `run`, so a
 //! caller-side clone of those vectors *is* the checkpoint.
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::util::rng::Rng;
+
+pub mod snapshot;
 
 /// Default checkpoint cadence, in epochs (stencil exchange epochs / CG
 /// iterations). Chosen so the copy cost stays well under the 5%-of-wall
@@ -121,7 +142,7 @@ impl Default for RetryPolicy {
 /// Per-tenant resilience knobs, set through
 /// `FarmStencil::configure_resilience` / `FarmCg::configure_resilience`
 /// (or `SessionBuilder::{checkpoint_every, retry, command_deadline}`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ResilienceConfig {
     /// Checkpoint the resident state every this many completed epochs
     /// (stencil exchange epochs / CG iterations); 0 disables cadence
@@ -138,12 +159,24 @@ pub struct ResilienceConfig {
     /// command itself keeps draining; releasing the tenant reaps it as
     /// a zombie through the farm's existing release path.
     pub deadline: Option<Duration>,
+    /// Durable snapshot directory: when set, every checkpoint this
+    /// config takes (cadence and command-entry) is also persisted
+    /// crash-consistently under this directory by a
+    /// [`snapshot::SnapshotStore`], outside the scheduler lock. `None`
+    /// (the default) keeps checkpoints purely in-memory — the
+    /// zero-filesystem behavior of PR 7.
+    pub durable: Option<PathBuf>,
 }
 
 impl ResilienceConfig {
     /// Everything off — the zero-overhead default.
     pub const fn disabled() -> Self {
-        Self { checkpoint_every: 0, retry: RetryPolicy::disabled(), deadline: None }
+        Self {
+            checkpoint_every: 0,
+            retry: RetryPolicy::disabled(),
+            deadline: None,
+            durable: None,
+        }
     }
 
     /// Cadence checkpoints at [`DEFAULT_CHECKPOINT_EVERY`], recovery and
@@ -153,6 +186,7 @@ impl ResilienceConfig {
             checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
             retry: RetryPolicy::disabled(),
             deadline: None,
+            durable: None,
         }
     }
 
@@ -163,6 +197,7 @@ impl ResilienceConfig {
             checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
             retry: RetryPolicy::attempts(attempts),
             deadline: None,
+            durable: None,
         }
     }
 
@@ -184,10 +219,22 @@ impl ResilienceConfig {
         self
     }
 
+    /// Persist checkpoints crash-consistently under `dir` (see
+    /// [`snapshot`]). Durable frames are only written when a checkpoint
+    /// is actually taken, so this composes with [`Self::every`]: cadence
+    /// 0 plus a retry-disabled policy writes zero frames.
+    pub fn durable(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.durable = Some(dir.into());
+        self
+    }
+
     /// Any knob armed? (Used by `SessionBuilder` validation: these are
     /// farm-session knobs, meaningless on solo substrates.)
     pub fn enabled(&self) -> bool {
-        self.checkpoint_every > 0 || self.retry.max_attempts > 0 || self.deadline.is_some()
+        self.checkpoint_every > 0
+            || self.retry.max_attempts > 0
+            || self.deadline.is_some()
+            || self.durable.is_some()
     }
 }
 
@@ -270,6 +317,42 @@ impl Checkpoint {
         let bytes = payload.bytes();
         Self { epoch, bytes, payload }
     }
+
+    /// Which engine's payload this snapshot holds: `"stencil"` or
+    /// `"cg"`. Stable strings — `perks_recover list` prints them and
+    /// the snapshot manifest round-trips the same discriminant.
+    pub fn kind(&self) -> &'static str {
+        match self.payload {
+            CheckpointPayload::Stencil { .. } => "stencil",
+            CheckpointPayload::Cg { .. } => "cg",
+        }
+    }
+
+    /// `(completed, target)` progress of the command the snapshot was
+    /// taken in: stencil sub-steps done/target, or CG iterations
+    /// done/target.
+    pub fn progress(&self) -> (usize, usize) {
+        match &self.payload {
+            CheckpointPayload::Stencil { done_steps, steps_target, .. } => {
+                (*done_steps, *steps_target)
+            }
+            CheckpointPayload::Cg { iters_done, iters_target, .. } => (*iters_done, *iters_target),
+        }
+    }
+
+    /// Clone out a CG payload's caller-side state `(x, r, p, rr,
+    /// iters_done)` — exactly what `FarmCg::run` round-trips through
+    /// the caller, so a restored client resumes by handing these back.
+    /// `None` for a stencil snapshot (stencil state is resident; use
+    /// `FarmStencil::restore_from` instead).
+    pub fn cg_state(&self) -> Option<(Vec<f64>, Vec<f64>, Vec<f64>, f64, usize)> {
+        match &self.payload {
+            CheckpointPayload::Cg { x, r, p, rr, iters_done, .. } => {
+                Some((x.clone(), r.clone(), p.clone(), *rr, *iters_done))
+            }
+            CheckpointPayload::Stencil { .. } => None,
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -289,6 +372,13 @@ pub enum FaultKind {
     /// The worker sleeps this long before running the shard, exercising
     /// the blocking-wait watchdog ([`ResilienceConfig::deadline`]).
     Stall(Duration),
+    /// The worker hard-aborts the whole process (`std::process::abort`)
+    /// at the matched claim site — no unwinding, no destructor, no
+    /// in-process recovery possible. This is the SIGKILL stand-in for
+    /// the crash-restart path: only a durable snapshot directory
+    /// ([`snapshot`]) makes the tenant's progress survivable, restored
+    /// by a fresh process via `perks_recover`.
+    Kill,
 }
 
 /// One fault coordinate. `epoch` is always explicit; tenant/phase/shard
@@ -333,6 +423,12 @@ impl FaultSpec {
             shard: None,
             fired: false,
         }
+    }
+
+    /// A hard process abort at `epoch` (wildcard tenant/phase/shard).
+    /// Recoverable only through a durable snapshot directory.
+    pub fn kill_at(epoch: u64) -> Self {
+        Self { kind: FaultKind::Kill, epoch, tenant: None, phase: None, shard: None, fired: false }
     }
 
     /// Pin the tenant slot.
@@ -425,27 +521,26 @@ impl FaultPlan {
     }
 
     /// Parse a plan from the `PERKS_FAULT_PLAN` environment variable.
-    /// Returns `None` when unset; a malformed value is reported on
-    /// stderr and ignored (a typo in CI must not change the workload's
-    /// semantics silently — the warning makes it loud).
-    pub fn from_env() -> Option<FaultPlan> {
-        let raw = std::env::var("PERKS_FAULT_PLAN").ok()?;
+    /// Returns `Ok(None)` when unset or blank. A malformed value is a
+    /// hard [`Error::Config`] naming the offending token: a typo in a
+    /// CI matrix must fail the run, not silently execute the workload
+    /// with an empty (or partial) plan and report a vacuous pass.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        let Ok(raw) = std::env::var("PERKS_FAULT_PLAN") else {
+            return Ok(None);
+        };
         if raw.trim().is_empty() {
-            return None;
+            return Ok(None);
         }
-        match Self::parse(&raw) {
-            Ok(plan) => Some(plan),
-            Err(e) => {
-                eprintln!("PERKS_FAULT_PLAN ignored: {e}");
-                None
-            }
-        }
+        Self::parse(&raw)
+            .map(Some)
+            .map_err(|e| Error::Config(format!("PERKS_FAULT_PLAN rejected: {e}")))
     }
 
     /// Parse the env-variable syntax: `;`-separated entries of
-    /// `kind@key=value,...` where kind is `panic`, `nan` or `stall`
-    /// (stall requires `ms=<millis>`), and keys are `epoch` (required),
-    /// `tenant`, `phase`, `shard`.
+    /// `kind@key=value,...` where kind is `panic`, `nan`, `stall`
+    /// (stall requires `ms=<millis>`) or `kill`, and keys are `epoch`
+    /// (required), `tenant`, `phase`, `shard`.
     ///
     /// ```text
     /// PERKS_FAULT_PLAN="panic@epoch=2,phase=1,shard=0;nan@epoch=3,tenant=1"
@@ -489,6 +584,7 @@ impl FaultPlan {
                 "stall" => FaultKind::Stall(Duration::from_millis(ms.ok_or_else(|| {
                     Error::Config(format!("stall entry needs ms=: {entry:?}"))
                 })?)),
+                "kill" => FaultKind::Kill,
                 other => return Err(Error::Config(format!("unknown fault kind {other:?}"))),
             };
             plan.faults.push(FaultSpec { kind, epoch, tenant, phase, shard, fired: false });
@@ -506,10 +602,11 @@ mod tests {
 
     #[test]
     fn parse_roundtrips_every_kind_and_key() {
-        let plan =
-            FaultPlan::parse("panic@epoch=2,phase=1,shard=0; nan@epoch=3,tenant=1; stall@epoch=0,ms=25")
-                .unwrap();
-        assert_eq!(plan.len(), 3);
+        let plan = FaultPlan::parse(
+            "panic@epoch=2,phase=1,shard=0; nan@epoch=3,tenant=1; stall@epoch=0,ms=25; kill@epoch=5,tenant=0",
+        )
+        .unwrap();
+        assert_eq!(plan.len(), 4);
         let f = &plan.faults[0];
         assert_eq!(f.kind, FaultKind::Panic);
         assert_eq!((f.epoch, f.phase, f.shard, f.tenant), (2, Some(1), Some(0), None));
@@ -517,6 +614,9 @@ mod tests {
         assert_eq!(f.kind, FaultKind::Nan);
         assert_eq!((f.epoch, f.tenant), (3, Some(1)));
         assert_eq!(plan.faults[2].kind, FaultKind::Stall(Duration::from_millis(25)));
+        let f = &plan.faults[3];
+        assert_eq!(f.kind, FaultKind::Kill);
+        assert_eq!((f.epoch, f.tenant), (5, Some(0)));
     }
 
     #[test]
@@ -581,6 +681,19 @@ mod tests {
         let cfg = cfg.every(4).with_deadline(Duration::from_millis(50));
         assert_eq!(cfg.checkpoint_every, 4);
         assert_eq!(cfg.deadline, Some(Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn durable_knob_arms_the_config_and_composes_with_cadence_zero() {
+        let cfg = ResilienceConfig::disabled().durable("/tmp/perks-snap");
+        assert!(cfg.enabled(), "a durable dir alone arms the config");
+        assert_eq!(cfg.checkpoint_every, 0, "cadence stays off unless set");
+        assert_eq!(cfg.durable.as_deref(), Some(std::path::Path::new("/tmp/perks-snap")));
+        // kill specs build and claim like any other kind
+        let mut plan = FaultPlan::new().inject(FaultSpec::kill_at(4).tenant(2));
+        assert!(plan.claim(2, 3, 0, 0).is_none(), "wrong epoch");
+        assert_eq!(plan.claim(2, 4, 1, 3), Some(FaultKind::Kill));
+        assert_eq!(plan.pending(), 0);
     }
 
     #[test]

@@ -1,0 +1,874 @@
+//! Durable, crash-consistent persistence for [`Checkpoint`]s: the layer
+//! that lets resident solver state outlive the hosting process.
+//!
+//! # On-disk layout
+//!
+//! ```text
+//! <root>/                        # SnapshotStore::open(root)
+//!   <tenant>/                    # one directory per tenant name
+//!     MANIFEST                   # versioned, checksummed entry list
+//!     gen-7.frame                # generation-numbered frames
+//!     gen-8.frame
+//! ```
+//!
+//! A **frame** is a 24-byte header (magic, format version, body length,
+//! FNV-1a 64 body checksum) followed by the body: the tenant's
+//! [`WorkloadMeta`] (how to rebuild the tenant) plus the full
+//! [`Checkpoint`] payload, serialized by the dependency-free
+//! [`crate::util::codec`] — floats travel as raw IEEE-754 bit patterns,
+//! never through text, so a restored frame is **bit-identical** to the
+//! in-memory checkpoint it came from.
+//!
+//! The **manifest** lists the generations that are *committed*: per
+//! entry the generation number, epoch, frame length, and frame
+//! checksum, with its own trailing checksum over the whole encoding.
+//!
+//! # Crash-consistency argument
+//!
+//! Every file write goes through the same protocol: write `*.tmp`,
+//! `fsync` the file, atomically `rename` into place, then best-effort
+//! `fsync` the directory. A frame counts as committed **only once a
+//! manifest naming it has been renamed into place** — and the frame is
+//! always durable before that manifest write starts. So at every crash
+//! point the directory is recoverable:
+//!
+//! * crash mid-frame-write → a stale `*.tmp`; the manifest still names
+//!   only older, fully-durable frames. The leftover is ignored by
+//!   restore and deleted by the next persist.
+//! * crash after the frame rename but before the manifest rename → an
+//!   unmanifested `gen-N.frame`; restore never reads it (it walks the
+//!   manifest, not the directory), so the previous generation wins.
+//! * crash mid-manifest-write → the old manifest is intact (rename is
+//!   atomic); same as above.
+//! * bit rot / torn sectors after commit → the per-frame checksum (and
+//!   the manifest's own) fail verification and restore falls back one
+//!   generation; only when *no* generation verifies does a structured
+//!   [`Error::Snapshot`] surface. Restore never panics on corrupt bytes.
+//!
+//! Old generations are pruned only after the manifest that drops them
+//! is durable, keeping [`SnapshotStore::with_keep`] generations as
+//! fallback depth. Write-outs are counter-tracked via
+//! [`crate::util::counters::durable_frames`] / `durable_bytes`, and
+//! verified restores via `restores`. See `docs/RECOVERY.md` for the
+//! full format walkthrough and recovery procedure.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::codec::{fnv1a64, Decoder, Encoder};
+use crate::util::counters;
+
+use super::{Checkpoint, CheckpointPayload};
+
+/// Frame file magic: `PKSF` little-endian.
+const FRAME_MAGIC: u32 = 0x504b_5346;
+/// Manifest file magic: `PKSM` little-endian.
+const MANIFEST_MAGIC: u32 = 0x504b_534d;
+/// On-disk format version; bump on any layout change so old readers
+/// reject new frames loudly instead of misdecoding them.
+const FORMAT_VERSION: u32 = 1;
+/// Frame header length: magic + version + body length + body checksum.
+const HEADER_LEN: usize = 4 + 4 + 8 + 8;
+/// Manifest file name inside a tenant directory.
+const MANIFEST: &str = "MANIFEST";
+/// Default fallback depth: the committed generation plus one older one.
+pub const DEFAULT_KEEP: usize = 2;
+
+const TAG_STENCIL: u8 = 0;
+const TAG_CG: u8 = 1;
+
+/// Everything a fresh process needs to rebuild the tenant a frame
+/// belongs to, persisted alongside the checkpoint so a snapshot
+/// directory is self-describing (`perks_recover` resumes from the
+/// directory alone, no out-of-band config).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkloadMeta {
+    /// A farm stencil tenant: benchmark name (`2d5pt`, `3d7pt`, ...),
+    /// grid dimensions, temporal-block depth, and shard count.
+    Stencil {
+        bench: String,
+        dims: Vec<usize>,
+        bt: usize,
+        shards: usize,
+    },
+    /// A farm CG tenant: system size and shard count. The matrix itself
+    /// is rebuilt by the resuming client (the demo workloads use the
+    /// Poisson operators, which are fully determined by `n`).
+    Cg { n: usize, shards: usize },
+}
+
+impl WorkloadMeta {
+    /// One-line human description for `perks_recover list`.
+    pub fn describe(&self) -> String {
+        match self {
+            WorkloadMeta::Stencil { bench, dims, bt, shards } => {
+                let dims: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+                format!("stencil {bench} {} bt={bt} shards={shards}", dims.join("x"))
+            }
+            WorkloadMeta::Cg { n, shards } => format!("cg n={n} shards={shards}"),
+        }
+    }
+}
+
+/// One committed generation, as recorded in a tenant's manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Monotonic generation number (never reused within a directory).
+    pub generation: u64,
+    /// Tenant lifetime epoch the frame's checkpoint was taken at.
+    pub epoch: u64,
+    /// Expected frame file length in bytes (header + body).
+    pub frame_len: u64,
+    /// FNV-1a 64 checksum of the frame body, duplicated here so a
+    /// frame/manifest mismatch is detectable from either side.
+    pub checksum: u64,
+}
+
+/// Verification outcome for one manifested generation
+/// ([`SnapshotStore::verify`]).
+#[derive(Clone, Debug)]
+pub struct FrameStatus {
+    pub generation: u64,
+    pub epoch: u64,
+    /// `None` when the frame verified end-to-end; otherwise what failed.
+    pub problem: Option<String>,
+}
+
+/// A successful restore: which generation survived verification and how
+/// many newer ones had to be skipped to reach it.
+#[derive(Debug)]
+pub struct Restored {
+    pub generation: u64,
+    /// Newer manifested generations that failed verification (torn or
+    /// corrupt) before this one verified. 0 on a clean directory.
+    pub fallbacks: u64,
+    pub meta: WorkloadMeta,
+    pub checkpoint: Checkpoint,
+}
+
+/// Crash-consistent, generation-numbered checkpoint persistence rooted
+/// at one directory. Cheap to construct (two words); all state lives on
+/// disk, so any number of stores — in any number of processes — may
+/// point at the same root, as long as at most one writes per tenant.
+#[derive(Clone, Debug)]
+pub struct SnapshotStore {
+    root: PathBuf,
+    keep: usize,
+}
+
+impl SnapshotStore {
+    /// Open (creating if needed) a snapshot root directory.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(Self { root, keep: DEFAULT_KEEP })
+    }
+
+    /// Retain this many committed generations per tenant (minimum 1).
+    /// More generations mean deeper fallback at more disk.
+    pub fn with_keep(mut self, keep: usize) -> Self {
+        self.keep = keep.max(1);
+        self
+    }
+
+    /// The directory this store reads and writes.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Persist one checkpoint as the next generation for `tenant`,
+    /// crash-consistently (see the module docs for the protocol), and
+    /// prune generations beyond the retention depth. Returns the
+    /// committed generation number.
+    pub fn persist(&self, tenant: &str, meta: &WorkloadMeta, ck: &Checkpoint) -> Result<u64> {
+        let dir = self.tenant_dir(tenant)?;
+        fs::create_dir_all(&dir)?;
+        // A corrupt manifest forfeits its fallback chain (we cannot
+        // trust what it names) but never blocks new progress: start a
+        // fresh chain above every generation number ever used.
+        let mut entries = self.read_manifest(&dir).unwrap_or_default();
+        let last_listed = entries.last().map_or(0, |e| e.generation);
+        let generation = scan_max_generation(&dir).max(last_listed) + 1;
+
+        let body = encode_body(meta, ck);
+        let checksum = fnv1a64(&body);
+        let mut framed = Encoder::with_capacity(HEADER_LEN + body.len());
+        framed.put_u32(FRAME_MAGIC);
+        framed.put_u32(FORMAT_VERSION);
+        framed.put_u64(body.len() as u64);
+        framed.put_u64(checksum);
+        let mut frame = framed.finish();
+        frame.extend_from_slice(&body);
+        let frame_len = frame.len() as u64;
+
+        // Frame first: it must be durable before any manifest names it.
+        write_atomic(&dir, &frame_name(generation), &frame)?;
+        entries.push(ManifestEntry { generation, epoch: ck.epoch, frame_len, checksum });
+        if entries.len() > self.keep {
+            let drop = entries.len() - self.keep;
+            entries.drain(..drop);
+        }
+        write_atomic(&dir, MANIFEST, &encode_manifest(&entries))?;
+        // Only after the new manifest is durable is it safe to delete
+        // what it no longer names (plus any stale tmp from a dead
+        // writer). Best-effort: a leftover file is ignored by restore.
+        prune(&dir, &entries);
+
+        counters::note_durable_frames(1);
+        counters::note_durable_bytes(frame_len);
+        Ok(generation)
+    }
+
+    /// Restore the newest generation of `tenant` that verifies
+    /// end-to-end, falling back one generation at a time past torn or
+    /// corrupt frames. Structured [`Error::Snapshot`] when no manifested
+    /// generation survives — never a panic, never bad bits.
+    pub fn restore(&self, tenant: &str) -> Result<Restored> {
+        let dir = self.tenant_dir(tenant)?;
+        let entries = self.read_manifest(&dir)?;
+        let mut problems: Vec<String> = Vec::new();
+        for entry in entries.iter().rev() {
+            match check_frame(&dir, entry) {
+                Ok((meta, checkpoint)) => {
+                    counters::note_restores(1);
+                    return Ok(Restored {
+                        generation: entry.generation,
+                        fallbacks: problems.len() as u64,
+                        meta,
+                        checkpoint,
+                    });
+                }
+                Err(e) => problems.push(format!("gen {}: {e}", entry.generation)),
+            }
+        }
+        if problems.is_empty() {
+            return Err(Error::Snapshot(format!(
+                "tenant {tenant:?}: manifest lists no generations"
+            )));
+        }
+        Err(Error::Snapshot(format!(
+            "tenant {tenant:?}: no generation verified ({})",
+            problems.join("; ")
+        )))
+    }
+
+    /// The committed generations of `tenant`, oldest first, straight
+    /// from the manifest (no frame verification — see [`Self::verify`]).
+    pub fn entries(&self, tenant: &str) -> Result<Vec<ManifestEntry>> {
+        let dir = self.tenant_dir(tenant)?;
+        self.read_manifest(&dir)
+    }
+
+    /// Verify every manifested generation of `tenant`: header, length,
+    /// checksum, and full payload decode. Read-only.
+    pub fn verify(&self, tenant: &str) -> Result<Vec<FrameStatus>> {
+        let dir = self.tenant_dir(tenant)?;
+        let entries = self.read_manifest(&dir)?;
+        Ok(entries
+            .iter()
+            .map(|entry| FrameStatus {
+                generation: entry.generation,
+                epoch: entry.epoch,
+                problem: check_frame(&dir, entry).err().map(|e| e.to_string()),
+            })
+            .collect())
+    }
+
+    /// Tenant names with a manifest under this root, sorted.
+    pub fn tenants(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for e in fs::read_dir(&self.root)? {
+            let e = e?;
+            let name_os = e.file_name();
+            let Some(name) = name_os.to_str() else { continue };
+            if e.path().join(MANIFEST).is_file() {
+                out.push(name.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn tenant_dir(&self, tenant: &str) -> Result<PathBuf> {
+        let ok = !tenant.is_empty()
+            && tenant.len() <= 64
+            && !tenant.starts_with('.')
+            && tenant
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+        if !ok {
+            // Tenant names become path components; anything outside the
+            // safe alphabet (separators, leading dots, ..) is rejected
+            // rather than sanitized so two names can never collide.
+            return Err(Error::Snapshot(format!(
+                "invalid tenant name {tenant:?}: need 1-64 chars of [A-Za-z0-9._-], no leading dot"
+            )));
+        }
+        Ok(self.root.join(tenant))
+    }
+
+    fn read_manifest(&self, dir: &Path) -> Result<Vec<ManifestEntry>> {
+        let path = dir.join(MANIFEST);
+        let bytes = fs::read(&path)
+            .map_err(|e| Error::Snapshot(format!("no readable manifest at {}: {e}", path.display())))?;
+        decode_manifest(&bytes)
+            .map_err(|e| Error::Snapshot(format!("corrupt manifest at {}: {e}", path.display())))
+    }
+}
+
+fn frame_name(generation: u64) -> String {
+    format!("gen-{generation}.frame")
+}
+
+/// The write protocol every snapshot file uses: tmp + fsync + atomic
+/// rename + best-effort directory fsync. After `Ok`, the bytes are
+/// durable under `name` or the old content is untouched — never a mix.
+fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    let fin = dir.join(name);
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, &fin)?;
+    // The rename itself is only durable once the directory inode is
+    // synced; some filesystems refuse directory fsync, hence best-effort
+    // (on those, the OS orders the metadata itself).
+    if let Ok(d) = fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Highest generation number present as a frame *file* (manifested or
+/// not) — new generations allocate above this so an unmanifested
+/// leftover from a crashed writer is never overwritten in place.
+fn scan_max_generation(dir: &Path) -> u64 {
+    let Ok(rd) = fs::read_dir(dir) else { return 0 };
+    let mut max = 0;
+    for e in rd.flatten() {
+        let name_os = e.file_name();
+        let Some(name) = name_os.to_str() else { continue };
+        if let Some(num) = name.strip_prefix("gen-").and_then(|s| s.strip_suffix(".frame")) {
+            if let Ok(g) = num.parse::<u64>() {
+                max = max.max(g);
+            }
+        }
+    }
+    max
+}
+
+/// Delete frame files the durable manifest no longer names, and any
+/// stale `*.tmp` from a writer that died mid-protocol. Best-effort by
+/// design: a file that refuses deletion is simply ignored by restore.
+fn prune(dir: &Path, entries: &[ManifestEntry]) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    for e in rd.flatten() {
+        let name_os = e.file_name();
+        let Some(name) = name_os.to_str() else { continue };
+        let retain = if name == MANIFEST {
+            true
+        } else if name.ends_with(".tmp") {
+            false
+        } else if let Some(num) = name.strip_prefix("gen-").and_then(|s| s.strip_suffix(".frame")) {
+            num.parse::<u64>().map_or(false, |g| entries.iter().any(|en| en.generation == g))
+        } else {
+            // unknown files are someone else's; leave them alone
+            true
+        };
+        if !retain {
+            let _ = fs::remove_file(e.path());
+        }
+    }
+}
+
+fn encode_manifest(entries: &[ManifestEntry]) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(16 + entries.len() * 32 + 8);
+    e.put_u32(MANIFEST_MAGIC);
+    e.put_u32(FORMAT_VERSION);
+    e.put_usize(entries.len());
+    for en in entries {
+        e.put_u64(en.generation);
+        e.put_u64(en.epoch);
+        e.put_u64(en.frame_len);
+        e.put_u64(en.checksum);
+    }
+    let mut bytes = e.finish();
+    let sum = fnv1a64(&bytes);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+    bytes
+}
+
+fn decode_manifest(bytes: &[u8]) -> Result<Vec<ManifestEntry>> {
+    if bytes.len() < 8 {
+        return Err(Error::Snapshot(format!("manifest truncated to {} bytes", bytes.len())));
+    }
+    let (content, tail) = bytes.split_at(bytes.len() - 8);
+    let mut t = Decoder::new(tail);
+    if t.take_u64("manifest checksum")? != fnv1a64(content) {
+        return Err(Error::Snapshot("manifest checksum mismatch".into()));
+    }
+    let mut d = Decoder::new(content);
+    if d.take_u32("manifest magic")? != MANIFEST_MAGIC {
+        return Err(Error::Snapshot("bad manifest magic".into()));
+    }
+    let version = d.take_u32("manifest version")?;
+    if version != FORMAT_VERSION {
+        return Err(Error::Snapshot(format!(
+            "manifest format version {version} (this build reads {FORMAT_VERSION})"
+        )));
+    }
+    let count = d.take_usize("manifest entry count")?;
+    let need = count.checked_mul(32).ok_or_else(|| {
+        Error::Snapshot(format!("manifest entry count {count} overflows the byte count"))
+    })?;
+    if d.remaining() < need {
+        return Err(Error::Snapshot(format!(
+            "manifest truncated: {count} entries need {need} bytes, {} remain",
+            d.remaining()
+        )));
+    }
+    let mut entries = Vec::with_capacity(count);
+    for _ in 0..count {
+        entries.push(ManifestEntry {
+            generation: d.take_u64("manifest generation")?,
+            epoch: d.take_u64("manifest epoch")?,
+            frame_len: d.take_u64("manifest frame length")?,
+            checksum: d.take_u64("manifest frame checksum")?,
+        });
+    }
+    if !d.is_empty() {
+        return Err(Error::Snapshot(format!(
+            "manifest has {} trailing bytes past its entries",
+            d.remaining()
+        )));
+    }
+    Ok(entries)
+}
+
+/// Read, header-check, checksum, and fully decode one manifested frame.
+fn check_frame(dir: &Path, entry: &ManifestEntry) -> Result<(WorkloadMeta, Checkpoint)> {
+    let path = dir.join(frame_name(entry.generation));
+    let bytes = fs::read(&path)
+        .map_err(|e| Error::Snapshot(format!("unreadable frame {}: {e}", path.display())))?;
+    if bytes.len() as u64 != entry.frame_len {
+        return Err(Error::Snapshot(format!(
+            "torn frame: {} bytes on disk, manifest says {}",
+            bytes.len(),
+            entry.frame_len
+        )));
+    }
+    let mut d = Decoder::new(&bytes);
+    if d.take_u32("frame magic")? != FRAME_MAGIC {
+        return Err(Error::Snapshot("bad frame magic".into()));
+    }
+    let version = d.take_u32("frame version")?;
+    if version != FORMAT_VERSION {
+        return Err(Error::Snapshot(format!(
+            "frame format version {version} (this build reads {FORMAT_VERSION})"
+        )));
+    }
+    let body_len = d.take_u64("frame body length")?;
+    let checksum = d.take_u64("frame checksum")?;
+    if checksum != entry.checksum {
+        return Err(Error::Snapshot("frame header checksum disagrees with manifest".into()));
+    }
+    let body = &bytes[HEADER_LEN..];
+    if body.len() as u64 != body_len {
+        return Err(Error::Snapshot(format!(
+            "torn frame body: {} bytes after header, header says {body_len}",
+            body.len()
+        )));
+    }
+    if fnv1a64(body) != checksum {
+        return Err(Error::Snapshot("frame body checksum mismatch".into()));
+    }
+    let (meta, checkpoint) = decode_body(body)?;
+    if checkpoint.epoch != entry.epoch {
+        return Err(Error::Snapshot(format!(
+            "frame epoch {} disagrees with manifest epoch {}",
+            checkpoint.epoch, entry.epoch
+        )));
+    }
+    Ok((meta, checkpoint))
+}
+
+fn encode_body(meta: &WorkloadMeta, ck: &Checkpoint) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(ck.bytes as usize + 256);
+    match meta {
+        WorkloadMeta::Stencil { bench, dims, bt, shards } => {
+            e.put_u8(TAG_STENCIL);
+            e.put_str(bench);
+            e.put_usizes(dims);
+            e.put_usize(*bt);
+            e.put_usize(*shards);
+        }
+        WorkloadMeta::Cg { n, shards } => {
+            e.put_u8(TAG_CG);
+            e.put_usize(*n);
+            e.put_usize(*shards);
+        }
+    }
+    e.put_u64(ck.epoch);
+    match &ck.payload {
+        CheckpointPayload::Stencil {
+            grid,
+            slabs,
+            done_steps,
+            residual,
+            loaded,
+            moved,
+            computed,
+            steps_target,
+            segs,
+            resubmits,
+        } => {
+            e.put_u8(TAG_STENCIL);
+            e.put_f64s(grid);
+            e.put_usize(slabs.len());
+            for (cur, nxt) in slabs {
+                e.put_f64s(cur);
+                e.put_f64s(nxt);
+            }
+            e.put_usize(*done_steps);
+            e.put_bool(residual.is_some());
+            if let Some(r) = residual {
+                e.put_f64(*r);
+            }
+            e.put_bool(*loaded);
+            e.put_u64(*moved);
+            e.put_u64(*computed);
+            e.put_usize(*steps_target);
+            e.put_usizes(segs);
+            e.put_u32(*resubmits);
+        }
+        CheckpointPayload::Cg { x, r, p, rr, iters_done, iters_target, segs, resubmits } => {
+            e.put_u8(TAG_CG);
+            e.put_f64s(x);
+            e.put_f64s(r);
+            e.put_f64s(p);
+            e.put_f64(*rr);
+            e.put_usize(*iters_done);
+            e.put_usize(*iters_target);
+            e.put_usizes(segs);
+            e.put_u32(*resubmits);
+        }
+    }
+    e.finish()
+}
+
+fn decode_body(body: &[u8]) -> Result<(WorkloadMeta, Checkpoint)> {
+    let mut d = Decoder::new(body);
+    let meta = match d.take_u8("workload tag")? {
+        TAG_STENCIL => WorkloadMeta::Stencil {
+            bench: d.take_str("workload bench")?,
+            dims: d.take_usizes("workload dims")?,
+            bt: d.take_usize("workload bt")?,
+            shards: d.take_usize("workload shards")?,
+        },
+        TAG_CG => WorkloadMeta::Cg {
+            n: d.take_usize("workload n")?,
+            shards: d.take_usize("workload shards")?,
+        },
+        t => return Err(Error::Snapshot(format!("unknown workload tag {t:#04x}"))),
+    };
+    let epoch = d.take_u64("checkpoint epoch")?;
+    let payload = match d.take_u8("payload tag")? {
+        TAG_STENCIL => {
+            let grid = d.take_f64s("stencil grid")?;
+            let n_slabs = d.take_usize("stencil slab count")?;
+            // each slab is at least two 8-byte length prefixes: guard
+            // the count against the remaining bytes before allocating
+            let floor = n_slabs.checked_mul(16).ok_or_else(|| {
+                Error::Snapshot(format!("slab count {n_slabs} overflows the byte count"))
+            })?;
+            if d.remaining() < floor {
+                return Err(Error::Snapshot(format!(
+                    "truncated slabs: count {n_slabs} needs at least {floor} bytes, {} remain",
+                    d.remaining()
+                )));
+            }
+            let mut slabs = Vec::with_capacity(n_slabs);
+            for _ in 0..n_slabs {
+                let cur = d.take_f64s("stencil slab cur")?;
+                let nxt = d.take_f64s("stencil slab nxt")?;
+                slabs.push((cur, nxt));
+            }
+            let done_steps = d.take_usize("stencil done_steps")?;
+            let residual = if d.take_bool("stencil residual flag")? {
+                Some(d.take_f64("stencil residual")?)
+            } else {
+                None
+            };
+            CheckpointPayload::Stencil {
+                grid,
+                slabs,
+                done_steps,
+                residual,
+                loaded: d.take_bool("stencil loaded")?,
+                moved: d.take_u64("stencil moved")?,
+                computed: d.take_u64("stencil computed")?,
+                steps_target: d.take_usize("stencil steps_target")?,
+                segs: d.take_usizes("stencil segs")?,
+                resubmits: d.take_u32("stencil resubmits")?,
+            }
+        }
+        TAG_CG => CheckpointPayload::Cg {
+            x: d.take_f64s("cg x")?,
+            r: d.take_f64s("cg r")?,
+            p: d.take_f64s("cg p")?,
+            rr: d.take_f64("cg rr")?,
+            iters_done: d.take_usize("cg iters_done")?,
+            iters_target: d.take_usize("cg iters_target")?,
+            segs: d.take_usizes("cg segs")?,
+            resubmits: d.take_u32("cg resubmits")?,
+        },
+        t => return Err(Error::Snapshot(format!("unknown payload tag {t:#04x}"))),
+    };
+    if !d.is_empty() {
+        return Err(Error::Snapshot(format!(
+            "frame body has {} trailing bytes past the payload",
+            d.remaining()
+        )));
+    }
+    let meta_is_stencil = matches!(meta, WorkloadMeta::Stencil { .. });
+    let payload_is_stencil = matches!(payload, CheckpointPayload::Stencil { .. });
+    if meta_is_stencil != payload_is_stencil {
+        return Err(Error::Snapshot("workload meta and payload disagree on engine kind".into()));
+    }
+    Ok((meta, Checkpoint::new(epoch, payload)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_root(test: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("perks-snapstore-{test}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn stencil_ck(epoch: u64, seed: f64) -> (WorkloadMeta, Checkpoint) {
+        let meta = WorkloadMeta::Stencil {
+            bench: "2d5pt".into(),
+            dims: vec![8, 8],
+            bt: 2,
+            shards: 3,
+        };
+        let grid: Vec<f64> = (0..64).map(|i| seed + i as f64 * 0.125).collect();
+        let ck = Checkpoint::new(
+            epoch,
+            CheckpointPayload::Stencil {
+                grid,
+                slabs: vec![(vec![seed; 16], vec![-seed; 16]), (vec![0.0; 16], vec![1.0; 16])],
+                done_steps: 4,
+                residual: Some(f64::from_bits(0x7ff8_0000_0000_0001)), // NaN payload survives
+                loaded: true,
+                moved: 1234,
+                computed: 5678,
+                steps_target: 8,
+                segs: vec![2, 2],
+                resubmits: 1,
+            },
+        );
+        (meta, ck)
+    }
+
+    fn cg_ck(epoch: u64) -> (WorkloadMeta, Checkpoint) {
+        let meta = WorkloadMeta::Cg { n: 16, shards: 2 };
+        let ck = Checkpoint::new(
+            epoch,
+            CheckpointPayload::Cg {
+                x: (0..16).map(|i| (i as f64).sin()).collect(),
+                r: (0..16).map(|i| (i as f64).cos()).collect(),
+                p: vec![-0.0; 16],
+                rr: 3.25e-12,
+                iters_done: 7,
+                iters_target: 40,
+                segs: vec![16, 17],
+                resubmits: 0,
+            },
+        );
+        (meta, ck)
+    }
+
+    fn payload_bits(ck: &Checkpoint) -> Vec<u64> {
+        match &ck.payload {
+            CheckpointPayload::Stencil { grid, slabs, residual, .. } => {
+                let mut v: Vec<u64> = grid.iter().map(|x| x.to_bits()).collect();
+                for (c, n) in slabs {
+                    v.extend(c.iter().map(|x| x.to_bits()));
+                    v.extend(n.iter().map(|x| x.to_bits()));
+                }
+                v.push(residual.unwrap_or(0.0).to_bits());
+                v
+            }
+            CheckpointPayload::Cg { x, r, p, rr, .. } => {
+                let mut v: Vec<u64> = x.iter().map(|y| y.to_bits()).collect();
+                v.extend(r.iter().map(|y| y.to_bits()));
+                v.extend(p.iter().map(|y| y.to_bits()));
+                v.push(rr.to_bits());
+                v
+            }
+        }
+    }
+
+    #[test]
+    fn persist_restore_round_trips_bit_identically() {
+        let root = tmp_root("roundtrip");
+        let store = SnapshotStore::open(&root).unwrap();
+        let frames0 = counters::durable_frames();
+        let restores0 = counters::restores();
+
+        let (smeta, sck) = stencil_ck(16, 0.5);
+        let (cmeta, cck) = cg_ck(7);
+        assert_eq!(store.persist("stencil-0", &smeta, &sck).unwrap(), 1);
+        assert_eq!(store.persist("cg-1", &cmeta, &cck).unwrap(), 1);
+        assert!(counters::durable_frames() >= frames0 + 2);
+        assert!(counters::durable_bytes() > 0);
+
+        let got = store.restore("stencil-0").unwrap();
+        assert_eq!(got.generation, 1);
+        assert_eq!(got.fallbacks, 0);
+        assert_eq!(got.meta, smeta);
+        assert_eq!(got.checkpoint.epoch, 16);
+        assert_eq!(payload_bits(&got.checkpoint), payload_bits(&sck));
+
+        let got = store.restore("cg-1").unwrap();
+        assert_eq!(got.meta, cmeta);
+        assert_eq!(payload_bits(&got.checkpoint), payload_bits(&cck));
+        assert_eq!(got.checkpoint.progress(), (7, 40));
+        assert!(counters::restores() >= restores0 + 2);
+
+        assert_eq!(store.tenants().unwrap(), vec!["cg-1".to_string(), "stencil-0".to_string()]);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn generations_advance_and_prune_to_keep() {
+        let root = tmp_root("prune");
+        let store = SnapshotStore::open(&root).unwrap().with_keep(2);
+        for epoch in 1..=5u64 {
+            let (meta, ck) = cg_ck(epoch);
+            assert_eq!(store.persist("t", &meta, &ck).unwrap(), epoch);
+        }
+        let entries = store.entries("t").unwrap();
+        let gens: Vec<u64> = entries.iter().map(|e| e.generation).collect();
+        assert_eq!(gens, vec![4, 5], "keep=2 retains the newest two");
+        // pruned frame files are actually gone
+        assert!(!root.join("t").join(frame_name(1)).exists());
+        assert!(root.join("t").join(frame_name(5)).exists());
+        let got = store.restore("t").unwrap();
+        assert_eq!((got.generation, got.checkpoint.epoch), (5, 5));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn torn_and_corrupt_frames_fall_back_a_generation() {
+        let root = tmp_root("fallback");
+        let store = SnapshotStore::open(&root).unwrap();
+        let (meta, ck1) = cg_ck(8);
+        let (_, ck2) = cg_ck(16);
+        store.persist("t", &meta, &ck1).unwrap();
+        store.persist("t", &meta, &ck2).unwrap();
+
+        // truncate the newest frame (torn write that somehow got named)
+        let newest = root.join("t").join(frame_name(2));
+        let bytes = fs::read(&newest).unwrap();
+        fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let got = store.restore("t").unwrap();
+        assert_eq!((got.generation, got.fallbacks), (1, 1));
+        assert_eq!(payload_bits(&got.checkpoint), payload_bits(&ck1));
+
+        // flip one payload byte in the newest frame: checksum catches it
+        let mut bytes = bytes;
+        let at = HEADER_LEN + 40;
+        bytes[at] ^= 0x10;
+        fs::write(&newest, &bytes).unwrap();
+        let got = store.restore("t").unwrap();
+        assert_eq!((got.generation, got.fallbacks), (1, 1));
+
+        // verify() reports exactly which generation is sick
+        let statuses = store.verify("t").unwrap();
+        assert_eq!(statuses.len(), 2);
+        assert!(statuses.iter().any(|s| s.generation == 1 && s.problem.is_none()));
+        assert!(statuses.iter().any(|s| s.generation == 2 && s.problem.is_some()));
+
+        // both generations corrupt -> structured error, not a panic
+        let older = root.join("t").join(frame_name(1));
+        fs::write(&older, b"PKSF garbage").unwrap();
+        let err = store.restore("t").unwrap_err();
+        assert!(matches!(err, Error::Snapshot(_)), "{err}");
+        assert!(format!("{err}").contains("no generation verified"), "{err}");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unmanifested_frames_and_stale_tmps_are_ignored_then_cleaned() {
+        let root = tmp_root("stale");
+        let store = SnapshotStore::open(&root).unwrap();
+        let (meta, ck) = cg_ck(4);
+        store.persist("t", &meta, &ck).unwrap();
+
+        // an unmanifested frame (crash between frame and manifest
+        // renames) and a stale tmp (crash mid-write) appear
+        let dir = root.join("t");
+        fs::write(dir.join(frame_name(9)), b"not a committed frame").unwrap();
+        fs::write(dir.join("gen-10.frame.tmp"), b"torn tmp").unwrap();
+
+        // restore walks the manifest only: the garbage is invisible
+        let got = store.restore("t").unwrap();
+        assert_eq!((got.generation, got.fallbacks), (1, 0));
+
+        // the next persist allocates ABOVE the unmanifested file and
+        // cleans both leftovers
+        let (_, ck2) = cg_ck(8);
+        assert_eq!(store.persist("t", &meta, &ck2).unwrap(), 10);
+        assert!(!dir.join(frame_name(9)).exists(), "unmanifested frame pruned");
+        assert!(!dir.join("gen-10.frame.tmp").exists(), "stale tmp pruned");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn missing_or_corrupt_manifest_is_a_structured_error() {
+        let root = tmp_root("manifest");
+        let store = SnapshotStore::open(&root).unwrap();
+        // no directory at all
+        let err = store.restore("ghost").unwrap_err();
+        assert!(matches!(err, Error::Snapshot(_)), "{err}");
+        // corrupt manifest bytes
+        let (meta, ck) = cg_ck(2);
+        store.persist("t", &meta, &ck).unwrap();
+        fs::write(root.join("t").join(MANIFEST), b"scrambled").unwrap();
+        let err = store.restore("t").unwrap_err();
+        assert!(format!("{err}").contains("manifest"), "{err}");
+        // a fresh persist recovers the directory with a new chain
+        let gen = store.persist("t", &meta, &ck).unwrap();
+        assert!(gen >= 2, "new chain allocates above surviving frame files");
+        assert_eq!(store.restore("t").unwrap().generation, gen);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn tenant_names_cannot_escape_the_root() {
+        let root = tmp_root("names");
+        let store = SnapshotStore::open(&root).unwrap();
+        let (meta, ck) = cg_ck(1);
+        for bad in ["", "..", "../evil", "a/b", ".hidden", "x y", &"t".repeat(65)] {
+            let err = store.persist(bad, &meta, &ck).unwrap_err();
+            assert!(matches!(err, Error::Snapshot(_)), "{bad:?}: {err}");
+        }
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn workload_meta_describes_itself() {
+        let m = WorkloadMeta::Stencil { bench: "3d7pt".into(), dims: vec![8, 8, 8], bt: 2, shards: 4 };
+        assert_eq!(m.describe(), "stencil 3d7pt 8x8x8 bt=2 shards=4");
+        assert_eq!(WorkloadMeta::Cg { n: 64, shards: 2 }.describe(), "cg n=64 shards=2");
+    }
+}

@@ -221,7 +221,7 @@ impl CpuStencil {
             plane_batches: 0,
             plane_sheds: 0,
             plane_timeouts: 0,
-            resilience: opts.resilience,
+            resilience: opts.resilience.clone(),
             recoveries: 0,
             replayed_epochs: 0,
             checkpoint_bytes: 0,
@@ -262,7 +262,7 @@ impl CpuStencil {
                         let mut tenant =
                             farm.admit_stencil(&self.spec, &self.x0, self.threads, self.bt)?;
                         if self.resilience.enabled() {
-                            tenant.configure_resilience(self.resilience)?;
+                            tenant.configure_resilience(self.resilience.clone())?;
                         }
                         self.farm_session = Some(tenant);
                     }
@@ -395,7 +395,7 @@ impl Solver for CpuStencil {
                 let mut tenant =
                     farm.admit_stencil(&self.spec, &self.x0, self.threads, self.bt)?;
                 if self.resilience.enabled() {
-                    tenant.configure_resilience(self.resilience)?;
+                    tenant.configure_resilience(self.resilience.clone())?;
                 }
                 self.farm_session = Some(tenant);
             } else {
@@ -845,7 +845,7 @@ impl Solver for CpuCg {
                 // the farm's spawn-once workers — zero thread spawns
                 let mut tenant = farm.admit_cg(self.a.clone(), self.plan.clone())?;
                 if self.resilience.enabled() {
-                    tenant.configure_resilience(self.resilience)?;
+                    tenant.configure_resilience(self.resilience.clone())?;
                 }
                 self.farm_session = Some(tenant);
             } else if self.threaded {

@@ -82,6 +82,12 @@
 //! checkpoint and replay bit-identically instead of erroring the
 //! command, and [`SessionBuilder::command_deadline`] arms a watchdog
 //! that fails blocking waits with `Error::Stuck` instead of hanging.
+//! [`SessionBuilder::durable`] extends the checkpoints past the process
+//! boundary: every snapshot is also persisted to a directory with
+//! crash-consistent writes
+//! ([`crate::runtime::resilience::snapshot::SnapshotStore`]), so a
+//! killed process resumes bit-identical via the `perks_recover` binary
+//! (see `docs/RECOVERY.md`).
 //! [`Report::recoveries`] / [`Report::replayed_epochs`] /
 //! [`Report::checkpoint_bytes`] surface what the supervision did.
 
@@ -410,6 +416,24 @@ impl SessionBuilder {
         self
     }
 
+    /// Durable snapshots on the farm path: persist every checkpoint this
+    /// session takes (cadence and command-entry alike) into `dir` as
+    /// checksummed, generation-numbered frames written crash-consistently
+    /// — serialize to a temp file, fsync, atomically rename — by a
+    /// [`crate::runtime::resilience::snapshot::SnapshotStore`]. The
+    /// write-out runs on a farm worker *outside* the scheduler lock, so
+    /// disk latency never serializes scheduling; overhead at the default
+    /// cadence is gated at `<= 10%` by `BENCH_resilience.json`. Pair
+    /// with [`SessionBuilder::checkpoint_every`] (cadence `0` persists
+    /// nothing but the command-entry snapshots a retry policy takes) and
+    /// recover a killed process with the `perks_recover` binary — the
+    /// walkthrough lives in `docs/RECOVERY.md`. Requires
+    /// [`SessionBuilder::farm`].
+    pub fn durable(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.resilience = self.resilience.durable(dir);
+        self
+    }
+
     /// Set the whole supervision config at once (see
     /// [`SessionBuilder::checkpoint_every`], [`SessionBuilder::retry`],
     /// [`SessionBuilder::command_deadline`] for the individual knobs).
@@ -508,8 +532,8 @@ impl SessionBuilder {
         }
         if self.resilience.enabled() && self.farm.is_none() {
             return Err(Error::invalid(
-                "resilience (checkpoint_every / retry / command_deadline) requires \
-                 a farm session",
+                "resilience (checkpoint_every / retry / command_deadline / durable) \
+                 requires a farm session",
             ));
         }
         // resolve the CPU thread count before any mode probing. Farm
@@ -1256,6 +1280,14 @@ mod tests {
                 .backend(Backend::cpu(1))
                 .workload(Workload::stencil("2d5pt", "8x8", "f64"))
                 .command_deadline(std::time::Duration::from_secs(5))
+                .build()
+        )
+        .contains("farm"));
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::cg(64))
+                .durable(std::env::temp_dir().join("perks-session-durable-knob"))
                 .build()
         )
         .contains("farm"));

@@ -1,0 +1,327 @@
+//! Dependency-free little-endian binary codec for durable snapshot
+//! payloads (`runtime::resilience::snapshot`): slab/vector state is
+//! serialized as raw `f64::to_bits` words — never through text — so a
+//! persisted checkpoint restores **bit-identical** floats, NaN payloads
+//! and signed zeros included.
+//!
+//! The [`Encoder`] is infallible (it grows a `Vec<u8>`); the
+//! [`Decoder`] is fallible on every read — truncated or corrupt input
+//! surfaces a structured `Error::Snapshot` instead of panicking, which
+//! is what lets the snapshot store fall back a generation on a torn
+//! frame. Length prefixes are validated against the bytes actually
+//! remaining *before* any allocation, so a corrupt length word can
+//! never ask the decoder for gigabytes.
+
+use crate::error::{Error, Result};
+
+/// FNV-1a, 64-bit: the per-frame checksum of the snapshot store. Not
+/// cryptographic — it detects torn writes and bit rot, which is the
+/// crash-consistency threat model — but dependency-free, stable across
+/// platforms, and fast enough to run over every restored frame.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET_BASIS;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Append-only little-endian writer over a growable byte buffer.
+#[derive(Debug, Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as `u64` so frames are portable across word sizes.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Floats travel as their IEEE-754 bit pattern — no text round trip,
+    /// no rounding, NaN payloads preserved.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    /// Length-prefixed `f64` slice (the slab/vector workhorse).
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_usize(v.len());
+        self.buf.reserve(v.len() * 8);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    /// Length-prefixed `usize` slice (graph segment schedules).
+    pub fn put_usizes(&mut self, v: &[usize]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_usize(x);
+        }
+    }
+
+    /// Length-prefixed UTF-8 string (benchmark names).
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Fallible little-endian cursor over a byte slice. Every `take_*`
+/// validates the remaining length first and returns `Error::Snapshot`
+/// on truncation — the decoder never panics on corrupt input.
+#[derive(Debug)]
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Snapshot(format!(
+                "truncated {what} at byte {}: need {n} bytes, {} remain",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn take_u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn take_u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        let mut le = [0u8; 4];
+        le.copy_from_slice(b);
+        Ok(u32::from_le_bytes(le))
+    }
+
+    pub fn take_u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        let mut le = [0u8; 8];
+        le.copy_from_slice(b);
+        Ok(u64::from_le_bytes(le))
+    }
+
+    pub fn take_usize(&mut self, what: &str) -> Result<usize> {
+        let v = self.take_u64(what)?;
+        usize::try_from(v).map_err(|_| {
+            Error::Snapshot(format!("{what}: value {v} does not fit this platform's usize"))
+        })
+    }
+
+    pub fn take_f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64(what)?))
+    }
+
+    /// Strict bool: anything but 0/1 is corruption, not coercible truth.
+    pub fn take_bool(&mut self, what: &str) -> Result<bool> {
+        match self.take_u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(Error::Snapshot(format!("{what}: bad bool byte {v:#04x}"))),
+        }
+    }
+
+    /// Length-prefixed `f64` vector; the prefix is checked against the
+    /// remaining bytes *before* allocating.
+    pub fn take_f64s(&mut self, what: &str) -> Result<Vec<f64>> {
+        let n = self.take_usize(what)?;
+        let bytes = n.checked_mul(8).ok_or_else(|| {
+            Error::Snapshot(format!("{what}: length {n} overflows the byte count"))
+        })?;
+        if self.remaining() < bytes {
+            return Err(Error::Snapshot(format!(
+                "truncated {what}: length prefix {n} needs {bytes} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.take_f64(what)?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed `usize` vector, with the same pre-allocation guard.
+    pub fn take_usizes(&mut self, what: &str) -> Result<Vec<usize>> {
+        let n = self.take_usize(what)?;
+        let bytes = n.checked_mul(8).ok_or_else(|| {
+            Error::Snapshot(format!("{what}: length {n} overflows the byte count"))
+        })?;
+        if self.remaining() < bytes {
+            return Err(Error::Snapshot(format!(
+                "truncated {what}: length prefix {n} needs {bytes} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.take_usize(what)?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed UTF-8 string; invalid UTF-8 is corruption.
+    pub fn take_str(&mut self, what: &str) -> Result<String> {
+        let n = self.take_usize(what)?;
+        if self.remaining() < n {
+            return Err(Error::Snapshot(format!(
+                "truncated {what}: string length {n}, {} bytes remain",
+                self.remaining()
+            )));
+        }
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Snapshot(format!("{what}: invalid UTF-8")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_type_bit_exactly() {
+        let mut e = Encoder::new();
+        e.put_u8(7);
+        e.put_u32(0xdead_beef);
+        e.put_u64(u64::MAX - 1);
+        e.put_usize(42);
+        e.put_f64(-0.0);
+        e.put_f64(f64::from_bits(0x7ff8_dead_beef_cafe)); // NaN with payload
+        e.put_bool(true);
+        e.put_f64s(&[1.5, f64::NEG_INFINITY, 2.5e-300]);
+        e.put_usizes(&[0, 3, 9]);
+        e.put_str("2d5pt");
+        let bytes = e.finish();
+
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.take_u8("a").unwrap(), 7);
+        assert_eq!(d.take_u32("b").unwrap(), 0xdead_beef);
+        assert_eq!(d.take_u64("c").unwrap(), u64::MAX - 1);
+        assert_eq!(d.take_usize("d").unwrap(), 42);
+        assert_eq!(d.take_f64("e").unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(d.take_f64("f").unwrap().to_bits(), 0x7ff8_dead_beef_cafe);
+        assert!(d.take_bool("g").unwrap());
+        let v = d.take_f64s("h").unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].to_bits(), 1.5f64.to_bits());
+        assert_eq!(v[1].to_bits(), f64::NEG_INFINITY.to_bits());
+        assert_eq!(v[2].to_bits(), 2.5e-300f64.to_bits());
+        assert_eq!(d.take_usizes("i").unwrap(), vec![0, 3, 9]);
+        assert_eq!(d.take_str("j").unwrap(), "2d5pt");
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn truncation_errors_instead_of_panicking() {
+        let mut e = Encoder::new();
+        e.put_f64s(&[1.0, 2.0, 3.0]);
+        let bytes = e.finish();
+        // chop the last element off: the length prefix now overruns
+        let torn = &bytes[..bytes.len() - 8];
+        let err = Decoder::new(torn).take_f64s("slab").unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+        // empty input errors on the very first read
+        let err = Decoder::new(&[]).take_u64("hdr").unwrap_err();
+        assert!(format!("{err}").contains("hdr"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_length_prefix_is_guarded_before_allocation() {
+        // a length word claiming ~2^60 elements must be rejected by the
+        // remaining-bytes check, never fed to Vec::with_capacity
+        let mut e = Encoder::new();
+        e.put_u64(1 << 60);
+        let bytes = e.finish();
+        let err = Decoder::new(&bytes).take_f64s("grid").unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+        let err = Decoder::new(&bytes).take_usizes("segs").unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+        let err = Decoder::new(&bytes).take_str("name").unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn strict_bool_and_utf8_reject_corrupt_bytes() {
+        let err = Decoder::new(&[2]).take_bool("loaded").unwrap_err();
+        assert!(format!("{err}").contains("bad bool"), "{err}");
+        let mut e = Encoder::new();
+        e.put_usize(2);
+        let mut bytes = e.finish();
+        bytes.extend_from_slice(&[0xff, 0xfe]); // invalid UTF-8 pair
+        let err = Decoder::new(&bytes).take_str("bench").unwrap_err();
+        assert!(format!("{err}").contains("UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn fnv1a64_matches_the_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // sensitivity: one flipped bit changes the sum
+        let a = fnv1a64(&[0u8; 64]);
+        let mut flipped = [0u8; 64];
+        flipped[40] ^= 0x01;
+        assert_ne!(a, fnv1a64(&flipped));
+    }
+}

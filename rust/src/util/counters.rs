@@ -23,6 +23,13 @@
 //! counts resident-state snapshot traffic. Clean benches assert
 //! recoveries stay 0; `bench_check` gates it.
 //!
+//! The durable snapshot store (`runtime::resilience::snapshot`) adds
+//! the durability family: [`durable_frames`] / [`durable_bytes`] count
+//! crash-consistent frames (and their on-disk bytes) committed to a
+//! snapshot directory, and [`restores`] counts checkpoints successfully
+//! read back and verified from disk. Cadence-0 runs assert frames stay
+//! 0 and clean runs assert restores stay 0; `bench_check` gates both.
+//!
 //! The counters are global and monotonic; concurrent test threads may
 //! interleave increments, so tests that need an exact attribution use the
 //! per-pool counters (`cg::pool::CgPool::spawn_count`,
@@ -65,6 +72,9 @@ static FAULTS_INJECTED: AtomicU64 = AtomicU64::new(0);
 static FARM_RECOVERIES: AtomicU64 = AtomicU64::new(0);
 static REPLAYED_EPOCHS: AtomicU64 = AtomicU64::new(0);
 static CHECKPOINT_BYTES: AtomicU64 = AtomicU64::new(0);
+static DURABLE_FRAMES: AtomicU64 = AtomicU64::new(0);
+static DURABLE_BYTES: AtomicU64 = AtomicU64::new(0);
+static RESTORES: AtomicU64 = AtomicU64::new(0);
 
 /// Record `n` OS threads spawned by a solver substrate.
 pub fn note_thread_spawns(n: u64) {
@@ -228,6 +238,45 @@ pub fn checkpoint_bytes() -> u64 {
     CHECKPOINT_BYTES.load(Ordering::Acquire)
 }
 
+/// Record `n` durable snapshot frames committed (tmp-write + fsync +
+/// atomic rename + manifest commit completed). The cadence-0 invariant
+/// gated by `bench_check` is that this stays 0 with durability off.
+pub fn note_durable_frames(n: u64) {
+    // pairing: writer: off-lock durable write-out after commit; reader: racing test assert (Acquire load below).
+    DURABLE_FRAMES.fetch_add(n, Ordering::Release);
+}
+
+/// Total durable snapshot frames committed since process start.
+pub fn durable_frames() -> u64 {
+    DURABLE_FRAMES.load(Ordering::Acquire)
+}
+
+/// Record `n` bytes written to durable snapshot frames (frame header +
+/// encoded payload; manifest bytes excluded).
+pub fn note_durable_bytes(n: u64) {
+    // pairing: writer: off-lock durable write-out after commit; reader: racing test assert (Acquire load below).
+    DURABLE_BYTES.fetch_add(n, Ordering::Release);
+}
+
+/// Total durable snapshot bytes written since process start.
+pub fn durable_bytes() -> u64 {
+    DURABLE_BYTES.load(Ordering::Acquire)
+}
+
+/// Record `n` checkpoints successfully restored from a snapshot
+/// directory (checksum verified; fallback generations that failed
+/// verification are *not* counted). The clean-run invariant gated by
+/// `bench_check` is that this stays 0 without a restart.
+pub fn note_restores(n: u64) {
+    // pairing: writer: restoring client at verify success; reader: racing test assert (Acquire load below).
+    RESTORES.fetch_add(n, Ordering::Release);
+}
+
+/// Total verified snapshot restores since process start.
+pub fn restores() -> u64 {
+    RESTORES.load(Ordering::Acquire)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +325,17 @@ mod tests {
         assert!(farm_recoveries() >= r + 1);
         assert!(replayed_epochs() >= e + 5);
         assert!(checkpoint_bytes() >= b + 4096);
+    }
+
+    #[test]
+    fn durable_counters_are_monotonic() {
+        let (f, b, r) = (durable_frames(), durable_bytes(), restores());
+        note_durable_frames(1);
+        note_durable_bytes(8192);
+        note_restores(1);
+        assert!(durable_frames() >= f + 1);
+        assert!(durable_bytes() >= b + 8192);
+        assert!(restores() >= r + 1);
     }
 
     #[test]

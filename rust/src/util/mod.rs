@@ -5,6 +5,7 @@
 
 pub mod args;
 pub mod check;
+pub mod codec;
 pub mod counters;
 pub mod fmt;
 pub mod json;

@@ -283,8 +283,10 @@ fn env_fault_plan_drives_recovery_when_set() {
         eprintln!("skipping: PERKS_FAULT_PLAN not set (CI fault-matrix sets it)");
         return;
     };
-    let Some(plan) = FaultPlan::from_env() else {
-        panic!("PERKS_FAULT_PLAN is set ({raw:?}) but parsed to no plan");
+    let plan = match FaultPlan::from_env() {
+        Ok(Some(plan)) => plan,
+        Ok(None) => panic!("PERKS_FAULT_PLAN is set ({raw:?}) but parsed to no plan"),
+        Err(e) => panic!("PERKS_FAULT_PLAN is set ({raw:?}) but was rejected: {e}"),
     };
     assert!(!plan.is_empty());
 
@@ -304,6 +306,34 @@ fn env_fault_plan_drives_recovery_when_set() {
     if injected > 0 && (raw.contains("panic") || raw.contains("nan")) {
         assert!(run.recoveries >= 1, "env plan injected {injected} faults, none recovered");
     }
+}
+
+/// A malformed fault plan is a **hard error naming the offending
+/// token**, not a silently empty plan — a typo'd CI matrix entry must
+/// fail the run instead of executing the workload fault-free and
+/// reporting a vacuous pass. (`SolverFarm::spawn` surfaces the same
+/// error when `PERKS_FAULT_PLAN` itself is malformed, via
+/// `FaultPlan::from_env`.)
+#[test]
+fn malformed_fault_plans_fail_loudly_with_the_offending_token() {
+    for (bad, token) in [
+        ("meteor@epoch=1", "meteor"),              // unknown kind
+        ("panic@epoch=1,zz=2", "zz"),              // unknown key
+        ("panic@epoch=x", "x"),                    // non-numeric value
+        ("panic@phase=1", "panic@phase=1"),        // missing epoch
+        ("kill@epoch", "epoch"),                   // key without value
+        ("stall@epoch=1", "stall@epoch=1"),        // stall without ms
+    ] {
+        let err = FaultPlan::parse(bad).expect_err("malformed plan must not parse");
+        let msg = err.to_string();
+        assert!(
+            msg.contains(token),
+            "error for {bad:?} must name the offending token {token:?}, got: {msg}"
+        );
+    }
+    // `kill` is a first-class kind: it parses and round-trips coordinates
+    let plan = FaultPlan::parse("kill@epoch=5,tenant=1").unwrap();
+    assert_eq!(plan.len(), 1);
 }
 
 #[derive(Debug)]

@@ -1,0 +1,395 @@
+//! Durable snapshot integration suite: the crash-consistency contract
+//! end to end, on real farms and real directories.
+//!
+//! * durable farm runs commit frames (metrics + process counters agree,
+//!   `perks_recover verify` passes on what they wrote);
+//! * a clean shutdown + disk restore resumes **bit-identically** at
+//!   every worker count (the worker-count invariance the farm already
+//!   guarantees, now through the persistence layer);
+//! * the real thing: `perks_recover crash-demo` re-runs each workload
+//!   in a child process that dies by `FaultKind::Kill` (a hard
+//!   `process::abort` mid-`advance`) and must resume bit-identically
+//!   from the directory the corpse left behind, across workers
+//!   {1, 2, 3, 8};
+//! * corrupt, truncated, unmanifested, and stale-tmp frames fall back a
+//!   generation or surface a structured [`Error::Snapshot`] — never a
+//!   panic;
+//! * `restore_from` rejects mismatched checkpoints structurally.
+//!
+//! Every farm installs an empty fault plan so the suite stays hermetic
+//! under the CI fault-matrix (`PERKS_FAULT_PLAN` / seed sweeps).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use perks::runtime::farm::SolverFarm;
+use perks::runtime::{FaultPlan, ResilienceConfig, SnapshotStore};
+use perks::sparse::gen;
+use perks::spmv::merge::MergePlan;
+use perks::stencil::{spec, Domain};
+use perks::util::counters;
+use perks::Error;
+
+/// Fresh per-test scratch directory (unique per test name and process so
+/// parallel test threads and reruns never collide).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("perks-snapshot-it-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn farm(workers: usize) -> SolverFarm {
+    let f = SolverFarm::spawn(workers).expect("spawn farm");
+    f.install_faults(FaultPlan::new()); // hermetic under the CI fault matrix
+    f
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Run `steps` of a seeded stencil on a clean farm — the bit-level
+/// reference every restored run is compared against.
+fn stencil_reference(
+    bench: &str,
+    interior: &[usize],
+    bt: usize,
+    shards: usize,
+    seed: u64,
+    steps: usize,
+    workers: usize,
+) -> Vec<f64> {
+    let f = farm(workers);
+    let s = spec(bench).expect("bench");
+    let mut d = Domain::for_spec(&s, interior).expect("domain");
+    d.randomize(seed);
+    let mut t = f.handle().admit_stencil(&s, &d, shards, bt).expect("admit");
+    t.advance(steps, None).expect("advance");
+    t.state().expect("state")
+}
+
+/// Run `s1` steps durably (cadence `cadence`, snapshots under `dir`),
+/// shut the farm down (draining the off-lock write-out), and return the
+/// farm's durable metrics.
+fn stencil_durable_run(
+    bench: &str,
+    interior: &[usize],
+    bt: usize,
+    shards: usize,
+    seed: u64,
+    s1: usize,
+    cadence: u64,
+    dir: &Path,
+    workers: usize,
+) -> (u64, u64) {
+    let mut f = farm(workers);
+    let s = spec(bench).expect("bench");
+    let mut d = Domain::for_spec(&s, interior).expect("domain");
+    d.randomize(seed);
+    let mut t = f.handle().admit_stencil(&s, &d, shards, bt).expect("admit");
+    t.configure_resilience(ResilienceConfig::disabled().every(cadence).durable(dir))
+        .expect("configure durable");
+    t.advance(s1, None).expect("advance");
+    drop(t);
+    // metrics only after shutdown: durable write-out happens off the
+    // scheduler lock and can outlive the command's completion signal
+    f.shutdown();
+    let m = f.metrics();
+    (m.durable_frames, m.durable_bytes)
+}
+
+#[test]
+fn durable_runs_commit_verifiable_frames_and_counters_advance() {
+    let dir = scratch("frames");
+    let frames_before = counters::durable_frames();
+    let bytes_before = counters::durable_bytes();
+
+    let (frames, bytes) =
+        stencil_durable_run("2d5pt", &[12, 12], 2, 3, 11, 8, 2, &dir, 2);
+    assert!(frames > 0, "cadence 2 over 4 epochs must commit frames");
+    assert!(bytes > 0, "committed frames carry payload bytes");
+
+    // the process-wide counters are monotone and shared across parallel
+    // tests, so assert the delta covers at least this run's writes
+    assert!(
+        counters::durable_frames() >= frames_before + frames,
+        "util::counters::durable_frames must mirror the farm metric"
+    );
+    assert!(
+        counters::durable_bytes() >= bytes_before + bytes,
+        "util::counters::durable_bytes must mirror the farm metric"
+    );
+
+    // what landed on disk is a well-formed store: one tenant, a
+    // non-empty manifest, every frame passing checksum verification
+    let store = SnapshotStore::open(&dir).expect("open store");
+    assert_eq!(store.tenants().expect("tenants"), vec!["t0".to_string()]);
+    let entries = store.entries("t0").expect("entries");
+    assert!(!entries.is_empty());
+    for st in store.verify("t0").expect("verify") {
+        assert!(st.problem.is_none(), "gen {}: {:?}", st.generation, st.problem);
+    }
+
+    // cadence 0 + no retry writes exactly nothing (the bench_check
+    // `durable-cadence-zero-writes-nothing` invariant, in miniature)
+    let dir0 = scratch("frames-cad0");
+    let (frames0, bytes0) =
+        stencil_durable_run("2d5pt", &[12, 12], 2, 3, 11, 8, 0, &dir0, 2);
+    assert_eq!((frames0, bytes0), (0, 0));
+    assert!(
+        SnapshotStore::open(&dir0).expect("open").tenants().expect("tenants").is_empty(),
+        "cadence-0 store must stay empty"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir0);
+}
+
+/// Clean-shutdown disk round trip: persist during command 1, kill
+/// nothing, restore into a *fresh* farm, finish the remaining steps, and
+/// require the bits of the uninterrupted run — at 1, 2, 3, and 8 workers
+/// (restore feeds the same worker-count-invariant execution the farm
+/// guarantees for clean runs).
+#[test]
+fn disk_restore_resumes_bit_identically_across_worker_counts() {
+    let (bench, interior, bt, shards, seed) = ("2d5pt", &[14usize, 14][..], 2usize, 3usize, 5u64);
+    let (s1, s2) = (8usize, 6usize);
+    let total = s1 + s2;
+    let restores_before = counters::restores();
+
+    for &workers in &[1usize, 2, 3, 8] {
+        let want = stencil_reference(bench, interior, bt, shards, seed, total, workers);
+
+        let dir = scratch(&format!("roundtrip-w{workers}"));
+        stencil_durable_run(bench, interior, bt, shards, seed, s1, 2, &dir, workers);
+
+        let restored = SnapshotStore::open(&dir).expect("open").restore("t0").expect("restore");
+        assert_eq!(restored.fallbacks, 0, "clean frames need no fallback");
+        let done = restored.checkpoint.epoch as usize * bt;
+        assert!(done > 0 && done <= s1, "epoch {} out of range", restored.checkpoint.epoch);
+
+        let f = farm(workers);
+        let s = spec(bench).expect("bench");
+        let d = Domain::for_spec(&s, interior).expect("domain");
+        let mut t = f.handle().admit_stencil(&s, &d, shards, bt).expect("admit");
+        t.restore_from(&restored.checkpoint).expect("restore_from");
+        t.advance(total - done, None).expect("resume");
+        let got = t.state().expect("state");
+        assert!(bits_eq(&got, &want), "workers={workers}: resumed state diverged");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert!(
+        counters::restores() >= restores_before + 4,
+        "each round trip performs one snapshot restore"
+    );
+}
+
+/// CG twin of the round trip: the restored (x, r, p, rr) recurrence
+/// state must continue to the reference bits.
+#[test]
+fn cg_disk_restore_resumes_bit_identically() {
+    let (grid, shards, seed) = (10usize, 3usize, 7u64);
+    let (s1, s2) = (9usize, 6usize);
+    let a = Arc::new(gen::poisson2d(grid));
+    let b = gen::rhs(a.n_rows, seed);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+
+    for &workers in &[1usize, 8] {
+        // reference: one uninterrupted run
+        let f = farm(workers);
+        let mut t = f.handle().admit_cg(a.clone(), MergePlan::new(&a, shards)).expect("admit");
+        let (mut wx, mut wr, mut wp) = (vec![0.0; a.n_rows], b.clone(), b.clone());
+        let run = t.run(&mut wx, &mut wr, &mut wp, rr0, 0.0, s1 + s2).expect("run");
+        assert!(run.error.is_none());
+        drop(t);
+        drop(f);
+
+        // durable first leg
+        let dir = scratch(&format!("cg-roundtrip-w{workers}"));
+        let mut f1 = farm(workers);
+        let mut t1 = f1.handle().admit_cg(a.clone(), MergePlan::new(&a, shards)).expect("admit");
+        t1.configure_resilience(ResilienceConfig::disabled().every(3).durable(&dir))
+            .expect("configure durable");
+        let (mut x, mut r, mut p) = (vec![0.0; a.n_rows], b.clone(), b.clone());
+        let run1 = t1.run(&mut x, &mut r, &mut p, rr0, 0.0, s1).expect("run");
+        assert!(run1.error.is_none());
+        drop(t1);
+        f1.shutdown();
+
+        // restore into a fresh farm and finish
+        let restored = SnapshotStore::open(&dir).expect("open").restore("t0").expect("restore");
+        let done = restored.checkpoint.epoch as usize;
+        assert!(done > 0 && done <= s1);
+        let (mut gx, mut gr, mut gp, grr, _) =
+            restored.checkpoint.cg_state().expect("cg payload");
+        let f2 = farm(workers);
+        let mut t2 = f2.handle().admit_cg(a.clone(), MergePlan::new(&a, shards)).expect("admit");
+        let run2 = t2.run(&mut gx, &mut gr, &mut gp, grr, 0.0, s1 + s2 - done).expect("run");
+        assert!(run2.error.is_none());
+        assert!(bits_eq(&gx, &wx), "workers={workers}: resumed CG iterate diverged");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The acceptance drill: a child process killed mid-`advance` by
+/// `FaultKind::Kill` (hard abort — the SIGKILL stand-in), restarted from
+/// the snapshot directory alone, must land on the uninterrupted bits.
+/// Runs the real `perks_recover crash-demo` binary over all three
+/// workload cases (2D stencil bt=2, 3D stencil bt=2, CG) at every
+/// acceptance worker count.
+#[test]
+fn process_kill_and_resume_is_bit_identical_across_workers() {
+    let exe = env!("CARGO_BIN_EXE_perks_recover");
+    for &workers in &[1usize, 2, 3, 8] {
+        let dir = scratch(&format!("crash-w{workers}"));
+        let out = std::process::Command::new(exe)
+            .arg("crash-demo")
+            .arg(&dir)
+            .arg("--workers")
+            .arg(workers.to_string())
+            .arg("--case")
+            .arg("all")
+            .output()
+            .expect("run perks_recover crash-demo");
+        assert!(
+            out.status.success(),
+            "crash-demo --workers {workers} failed:\nstdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        for case in ["stencil2d", "stencil3d", "cg"] {
+            assert!(
+                text.contains(&format!("{case}: killed at epoch")),
+                "crash-demo output missing the {case} drill:\n{text}"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Corruption ladder on frames a real farm wrote: garbage the store
+/// never committed is invisible, a torn newest frame falls back one
+/// generation, and only when nothing verifies does a structured
+/// [`Error::Snapshot`] surface. No step panics.
+#[test]
+fn corrupt_frames_fall_back_and_exhaustion_is_a_structured_error() {
+    let dir = scratch("corrupt");
+    // cadence 1 over 4 epochs -> generations at every epoch, DEFAULT_KEEP
+    // retains the last two
+    stencil_durable_run("2d5pt", &[12, 12], 2, 3, 3, 8, 1, &dir, 2);
+    let store = SnapshotStore::open(&dir).expect("open");
+    let tdir = dir.join("t0");
+
+    let clean = store.restore("t0").expect("restore");
+    assert_eq!(clean.fallbacks, 0);
+    let entries = store.entries("t0").expect("entries");
+    assert!(entries.len() >= 2, "need a fallback generation, got {entries:?}");
+    let newest = entries.iter().map(|e| e.generation).max().unwrap();
+    let older = entries.iter().map(|e| e.generation).filter(|&g| g != newest).max().unwrap();
+
+    // stale tmp + unmanifested frame: restore walks the manifest only
+    std::fs::write(tdir.join("gen-99.frame.tmp"), b"writer died here").unwrap();
+    std::fs::write(tdir.join("gen-98.frame"), b"never manifested").unwrap();
+    let got = store.restore("t0").expect("restore ignores garbage");
+    assert_eq!((got.generation, got.fallbacks), (clean.generation, 0));
+
+    // flip one payload byte of the newest frame: checksum fails, restore
+    // falls back exactly one generation
+    let newest_path = tdir.join(format!("gen-{newest}.frame"));
+    let mut bytes = std::fs::read(&newest_path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff;
+    std::fs::write(&newest_path, &bytes).unwrap();
+    let fell = store.restore("t0").expect("fallback generation still verifies");
+    assert_eq!((fell.generation, fell.fallbacks), (older, 1));
+    assert!(fell.checkpoint.epoch < clean.checkpoint.epoch);
+    // verify() reports the torn frame without panicking
+    let statuses = store.verify("t0").expect("verify");
+    assert!(statuses.iter().any(|s| s.generation == newest && s.problem.is_some()));
+    assert!(statuses.iter().any(|s| s.generation == older && s.problem.is_none()));
+
+    // truncate the fallback too: every manifested generation is now bad
+    let older_path = tdir.join(format!("gen-{older}.frame"));
+    let blen = std::fs::read(&older_path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&older_path).unwrap();
+    f.set_len(blen as u64 / 2).unwrap();
+    drop(f);
+    let err = store.restore("t0").expect_err("no generation verifies");
+    assert!(matches!(err, Error::Snapshot(_)), "{err}");
+
+    // and a missing manifest is the same structured story
+    std::fs::remove_file(tdir.join("MANIFEST")).unwrap();
+    let err = store.restore("t0").expect_err("manifest gone");
+    assert!(matches!(err, Error::Snapshot(_)), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `restore_from` validates the checkpoint against the tenant it is fed
+/// into: wrong payload kind and wrong geometry are structured errors.
+#[test]
+fn restore_from_rejects_mismatched_checkpoints() {
+    // a real stencil checkpoint off disk
+    let sdir = scratch("mismatch-stencil");
+    stencil_durable_run("2d5pt", &[12, 12], 2, 3, 9, 8, 2, &sdir, 2);
+    let stencil_ck =
+        SnapshotStore::open(&sdir).expect("open").restore("t0").expect("restore").checkpoint;
+    assert!(stencil_ck.cg_state().is_none(), "stencil payload has no CG state");
+
+    // a real CG checkpoint off disk
+    let cdir = scratch("mismatch-cg");
+    let a = Arc::new(gen::poisson2d(8));
+    let b = gen::rhs(a.n_rows, 13);
+    let rr0: f64 = b.iter().map(|v| v * v).sum();
+    let mut f = farm(2);
+    let mut t = f.handle().admit_cg(a.clone(), MergePlan::new(&a, 3)).expect("admit");
+    t.configure_resilience(ResilienceConfig::disabled().every(2).durable(&cdir))
+        .expect("configure durable");
+    let (mut x, mut r, mut p) = (vec![0.0; a.n_rows], b.clone(), b);
+    t.run(&mut x, &mut r, &mut p, rr0, 0.0, 6).expect("run");
+    drop(t);
+    f.shutdown();
+    let cg_ck = SnapshotStore::open(&cdir).expect("open").restore("t0").expect("restore").checkpoint;
+
+    let f2 = farm(2);
+    let s = spec("2d5pt").expect("bench");
+    // wrong geometry: a 16x16 tenant fed a 12x12 snapshot
+    let d = Domain::for_spec(&s, &[16, 16]).expect("domain");
+    let mut wrong_dims = f2.handle().admit_stencil(&s, &d, 3, 2).expect("admit");
+    let err = wrong_dims.restore_from(&stencil_ck).expect_err("geometry mismatch");
+    assert!(matches!(err, Error::Snapshot(_)), "{err}");
+    assert!(err.to_string().contains("cells"), "{err}");
+    // wrong payload kind: a stencil tenant fed a CG snapshot
+    let err = wrong_dims.restore_from(&cg_ck).expect_err("payload kind mismatch");
+    assert!(matches!(err, Error::Snapshot(_)), "{err}");
+
+    let _ = std::fs::remove_dir_all(&sdir);
+    let _ = std::fs::remove_dir_all(&cdir);
+}
+
+/// An unopenable durable directory fails at `configure_resilience` time
+/// (the store opens eagerly, off the scheduler lock) — not mid-run.
+#[test]
+fn unopenable_durable_directory_fails_at_configure_time() {
+    let dir = scratch("notdir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let file = dir.join("occupied");
+    std::fs::write(&file, b"a file, not a directory").unwrap();
+
+    let f = farm(1);
+    let s = spec("2d5pt").expect("bench");
+    let d = Domain::for_spec(&s, &[8, 8]).expect("domain");
+    let mut t = f.handle().admit_stencil(&s, &d, 2, 1).expect("admit");
+    let err = t
+        .configure_resilience(
+            ResilienceConfig::disabled().every(1).durable(file.join("sub")),
+        )
+        .expect_err("snapshot root under a regular file cannot open");
+    let msg = err.to_string();
+    assert!(!msg.is_empty());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
