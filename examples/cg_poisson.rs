@@ -7,7 +7,7 @@
 //! cargo run --release --example cg_poisson
 //! ```
 
-use perks::session::{Backend, ExecMode, Session, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, Session, SessionBuilder};
 use perks::sparse::{datasets, gen};
 use perks::util::fmt::{secs, Table};
 
@@ -48,10 +48,9 @@ fn main() -> perks::Result<()> {
         let rr0: f64 = b.iter().map(|v| v * v).sum();
         let mut stats = Vec::new();
         for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-            let mut session = SessionBuilder::new()
+            let mut session = SessionBuilder::cg_system(a.clone(), b.clone())
+                .parts(32)
                 .backend(Backend::cpu(1))
-                .workload(Workload::cg_system(a.clone(), b.clone()))
-                .cg_parts(32)
                 .mode(mode)
                 .build()?;
             let iters = solve(&mut session, rr0, 1e-8, 3000)?;

@@ -26,7 +26,7 @@
 use std::rc::Rc;
 
 use perks::runtime::Runtime;
-use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, SessionBuilder};
 use perks::stencil::{self, gold, Domain};
 use perks::util::fmt::{gcells, secs};
 
@@ -43,10 +43,10 @@ fn main() -> perks::Result<()> {
     // build all sessions first: one chunk-aligned step count serves every
     // mode AND the gold oracle, so the states stay comparable
     let mut sessions = Vec::new();
-    for mode in ExecMode::all() {
-        let session = SessionBuilder::new()
+    // pipelined is CG-only — the stencil sweep runs the other three models
+    for mode in ExecMode::all().into_iter().filter(|m| *m != ExecMode::Pipelined) {
+        let session = SessionBuilder::stencil(bench, "128x128", "f32")
             .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::stencil(bench, "128x128", "f32"))
             .mode(mode)
             .seed(seed)
             .build()?;
@@ -89,9 +89,8 @@ fn main() -> perks::Result<()> {
     // ---------------------------------------------------------------
     println!("[2/3] CG: 5-point Poisson, n=1024, solve to rr < 1e-8 * rr0");
     for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-        let mut session = SessionBuilder::new()
+        let mut session = SessionBuilder::cg(1024)
             .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::cg(1024))
             .mode(mode)
             .seed(3)
             .build()?;
@@ -121,9 +120,8 @@ fn main() -> perks::Result<()> {
     let mut reports = Vec::new();
     let mut states = Vec::new();
     for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-        let mut session = SessionBuilder::new()
+        let mut session = SessionBuilder::stencil("2d5pt", "512x512", "f64")
             .backend(Backend::cpu(8))
-            .workload(Workload::stencil("2d5pt", "512x512", "f64"))
             .mode(mode)
             .seed(1)
             .build()?;

@@ -11,7 +11,7 @@
 use std::rc::Rc;
 
 use perks::runtime::Runtime;
-use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, SessionBuilder};
 use perks::util::fmt::secs;
 
 const N: usize = 128; // interior matches the lowered artifact
@@ -40,10 +40,9 @@ fn main() -> perks::Result<()> {
     println!("2D heat diffusion, hot top edge (T=100), {steps} steps, {N}x{N} grid\n");
     let mut fronts = Vec::new();
     for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-        let mut session = SessionBuilder::new()
-            .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::stencil("2d9pt", "128x128", "f32"))
+        let mut session = SessionBuilder::stencil("2d9pt", "128x128", "f32")
             .initial_domain(initial_field())
+            .backend(Backend::pjrt(rt.clone()))
             .mode(mode)
             .build()?;
         let rep = session.run(session.aligned_steps(steps))?;

@@ -43,7 +43,7 @@ use std::sync::Arc;
 use perks::runtime::farm::SolverFarm;
 use perks::runtime::plane::{CommandGraph, LocalExecutor};
 use perks::runtime::{FaultPlan, FaultSpec, ResilienceConfig, SnapshotStore, WorkloadMeta};
-use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, SessionBuilder};
 use perks::sparse::gen;
 use perks::spmv::merge::MergePlan;
 use perks::stencil::{self, Domain};
@@ -83,11 +83,10 @@ fn main() -> perks::Result<()> {
     let spawns_before = counters::thread_spawns();
 
     let stencil = |interior: &str, seed: u64, bt: usize| {
-        SessionBuilder::new()
-            .backend(Backend::cpu(2))
-            .workload(Workload::stencil("2d5pt", interior, "f64"))
-            .mode(ExecMode::Persistent)
+        SessionBuilder::stencil("2d5pt", interior, "f64")
             .temporal(bt)
+            .backend(Backend::cpu(2))
+            .mode(ExecMode::Persistent)
             .seed(seed)
             .farm(&farm)
             .build()
@@ -97,9 +96,8 @@ fn main() -> perks::Result<()> {
         ("2d5pt 48x32 bt=2", stencil("48x32", 2, 2)?),
         ("2d5pt 24x64 bt=4", stencil("24x64", 3, 4)?),
     ];
-    let mut cg = SessionBuilder::new()
+    let mut cg = SessionBuilder::cg(256)
         .backend(Backend::cpu(2))
-        .workload(Workload::cg(256))
         .mode(ExecMode::Persistent)
         .seed(4)
         .farm(&farm)
@@ -119,9 +117,8 @@ fn main() -> perks::Result<()> {
     );
 
     // bit-identity spot check: tenant 0 vs its solo-pool build
-    let mut solo = SessionBuilder::new()
+    let mut solo = SessionBuilder::stencil("2d5pt", "32x32", "f64")
         .backend(Backend::cpu(2))
-        .workload(Workload::stencil("2d5pt", "32x32", "f64"))
         .mode(ExecMode::Persistent)
         .seed(1)
         .build()?;
@@ -299,19 +296,17 @@ fn main() -> perks::Result<()> {
 fn durable_crash_child(dir: &Path) -> perks::Result<()> {
     let farm = SolverFarm::spawn(2)?;
     farm.install_faults(FaultPlan::new().inject(FaultSpec::kill_at(DUR_KILL_EPOCH).tenant(0)));
-    let mut st = SessionBuilder::new()
-        .backend(Backend::cpu(2))
-        .workload(Workload::stencil("2d5pt", DUR_INTERIOR, "f64"))
-        .mode(ExecMode::Persistent)
+    let mut st = SessionBuilder::stencil("2d5pt", DUR_INTERIOR, "f64")
         .temporal(DUR_BT)
+        .backend(Backend::cpu(2))
+        .mode(ExecMode::Persistent)
         .seed(DUR_SEED)
         .farm(&farm)
         .checkpoint_every(DUR_CADENCE)
         .durable(dir)
         .build()?;
-    let mut cg = SessionBuilder::new()
+    let mut cg = SessionBuilder::cg(DUR_CG_N)
         .backend(Backend::cpu(2))
-        .workload(Workload::cg(DUR_CG_N))
         .mode(ExecMode::Persistent)
         .seed(DUR_CG_SEED)
         .farm(&farm)
@@ -344,19 +339,17 @@ fn durable_restart_demo() -> perks::Result<()> {
     // references: the same two sessions, never interrupted
     let clean = SolverFarm::spawn(2)?;
     clean.install_faults(FaultPlan::new());
-    let mut st = SessionBuilder::new()
-        .backend(Backend::cpu(2))
-        .workload(Workload::stencil("2d5pt", DUR_INTERIOR, "f64"))
-        .mode(ExecMode::Persistent)
+    let mut st = SessionBuilder::stencil("2d5pt", DUR_INTERIOR, "f64")
         .temporal(DUR_BT)
+        .backend(Backend::cpu(2))
+        .mode(ExecMode::Persistent)
         .seed(DUR_SEED)
         .farm(&clean)
         .build()?;
     st.advance(DUR_S1 + DUR_S2)?;
     let want_st = st.state_f64()?;
-    let mut cg = SessionBuilder::new()
+    let mut cg = SessionBuilder::cg(DUR_CG_N)
         .backend(Backend::cpu(2))
-        .workload(Workload::cg(DUR_CG_N))
         .mode(ExecMode::Persistent)
         .seed(DUR_CG_SEED)
         .farm(&clean)

@@ -9,7 +9,7 @@
 use std::rc::Rc;
 
 use perks::runtime::Runtime;
-use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, SessionBuilder};
 use perks::util::fmt::{gcells, secs};
 
 fn main() -> perks::Result<()> {
@@ -22,10 +22,10 @@ fn main() -> perks::Result<()> {
     //    build all sessions first so one chunk-aligned step count serves
     //    every mode and the states stay comparable
     let mut sessions = Vec::new();
-    for mode in ExecMode::all() {
-        let session = SessionBuilder::new()
+    // pipelined is CG-only — the stencil loop runs the other three models
+    for mode in ExecMode::all().into_iter().filter(|m| *m != ExecMode::Pipelined) {
+        let session = SessionBuilder::stencil("2d5pt", "128x128", "f32")
             .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::stencil("2d5pt", "128x128", "f32"))
             .mode(mode)
             .seed(2026)
             .build()?;

@@ -16,7 +16,7 @@
 //! cargo run --release --example strong_scaling -- --quick # CI smoke
 //! ```
 
-use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, SessionBuilder};
 use perks::simgpu::device::{a100, v100};
 use perks::util::counters;
 use perks::util::fmt::{secs, Table};
@@ -42,9 +42,8 @@ fn main() -> perks::Result<()> {
         let mut walls = Vec::new();
         let mut pooled_spawns = 0u64;
         for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-            let mut session = SessionBuilder::new()
+            let mut session = SessionBuilder::stencil("2d5pt", &interior, "f64")
                 .backend(Backend::cpu(threads))
-                .workload(Workload::stencil("2d5pt", &interior, "f64"))
                 .mode(mode)
                 .seed(9)
                 .build()?;
@@ -83,9 +82,8 @@ fn main() -> perks::Result<()> {
         for interior in ["3072x3072", "1024x768"] {
             let mut walls = Vec::new();
             for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-                let mut session = SessionBuilder::new()
+                let mut session = SessionBuilder::stencil("2d5pt", interior, "f64")
                     .backend(Backend::simulated(dev.clone()))
-                    .workload(Workload::stencil("2d5pt", interior, "f64"))
                     .mode(mode)
                     .build()?;
                 walls.push(session.run(sim_steps)?.wall_seconds);

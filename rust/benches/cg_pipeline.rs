@@ -1,0 +1,83 @@
+//! The one-barrier-per-iteration claim, measured: classic pooled CG pays
+//! two slot-ordered reduction barriers per iteration (p·Ap, then r·r);
+//! pipelined CG (Ghysels–Vanroose fused recurrences) folds them into ONE
+//! combined generation at the price of four auxiliary vector recurrences.
+//! On small systems — where the barrier dominates the SpMV — the
+//! collapsed sync is a wall win; on large systems the extra vector
+//! traffic eats it, which is why `ExecPolicy::Auto` races the two.
+//!
+//! Both arms run through the session API on the persistent CPU pool, and
+//! the reduction accounting is counter-asserted at the source: exactly
+//! `2 * iters` generations for classic, exactly `iters` for pipelined,
+//! zero thread spawns per advance for either. Emits the result as
+//! `BENCH_cg_pipeline.json` (+ a `BENCH {...}` stdout line) for the
+//! `pipelined-single-reduction` / `pipelined-wall-win` bench_check gates.
+//!
+//! Run: `cargo bench --bench cg_pipeline` (`-- --quick` for the CI smoke
+//! configuration).
+
+use perks::harness;
+use perks::session::ExecMode;
+use perks::util::fmt::Table;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (ns, iters, threads, parts): (&[usize], usize, usize, usize) =
+        if quick { (&[256, 576], 400, 4, 8) } else { (&[576, 1024, 2304], 600, 8, 16) };
+
+    println!(
+        "Pipelined CG ablation: classic (2 reductions/iter) vs pipelined \
+         (1 reduction/iter), {iters} iters, {threads} threads, {parts} parts\n"
+    );
+    let mut t = Table::new(&["n", "mode", "wall s", "reductions", "reductions/iter", "iters/s"]);
+    let mut rows = Vec::new();
+    let mut headlines = Vec::new();
+    for &n in ns {
+        let arms = harness::measure_cpu_cg_pipeline(n, iters, threads, parts).unwrap();
+        for a in &arms {
+            // the invariant at the source, before it reaches bench_check:
+            // classic folds twice per iteration, pipelined exactly once
+            let want = match a.mode {
+                ExecMode::Pipelined => iters as u64,
+                _ => 2 * iters as u64,
+            };
+            assert_eq!(
+                a.barrier_reductions, want,
+                "n={n} {}: reduction accounting drifted",
+                a.mode.key()
+            );
+            assert_eq!(a.advance_spawns, 0, "n={n} {}: resident arm spawned", a.mode.key());
+            t.row(&[
+                n.to_string(),
+                a.mode.key().to_string(),
+                format!("{:.6}", a.wall_seconds),
+                a.barrier_reductions.to_string(),
+                format!("{:.1}", a.barrier_reductions as f64 / iters as f64),
+                format!("{:.3e}", a.iters_per_sec),
+            ]);
+            rows.push(a.json(n));
+        }
+        let classic = &arms[0];
+        let pipe = &arms[1];
+        headlines.push(format!(
+            "  n={n}: pipelined is {:.2}x classic wall at half the reductions",
+            classic.wall_seconds / pipe.wall_seconds.max(1e-12)
+        ));
+    }
+    print!("{}", t.render());
+    println!();
+    for h in &headlines {
+        println!("{h}");
+    }
+
+    let payload = format!(
+        "{{\"bench\":\"cg_pipeline\",\"iters\":{iters},\"threads\":{threads},\
+         \"parts\":{parts},\"rows\":[{}]}}",
+        rows.join(",")
+    );
+    println!("BENCH {payload}");
+    match std::fs::write("BENCH_cg_pipeline.json", format!("{payload}\n")) {
+        Ok(()) => println!("wrote BENCH_cg_pipeline.json"),
+        Err(e) => eprintln!("could not write BENCH_cg_pipeline.json: {e}"),
+    }
+}

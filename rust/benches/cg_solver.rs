@@ -6,7 +6,7 @@
 //!
 //! Run: `cargo bench --bench cg_solver`
 
-use perks::session::{Backend, ExecMode, Session, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, Session, SessionBuilder};
 use perks::sparse::datasets;
 use perks::util::fmt::{secs, Table};
 use perks::util::stats::{median, time_n};
@@ -21,11 +21,10 @@ fn main() {
         let a = ds.generate(16).unwrap();
         let b = perks::sparse::gen::rhs(a.n_rows, 1);
         let build = |mode: ExecMode| -> Session {
-            SessionBuilder::new()
+            SessionBuilder::cg_system(a.clone(), b.clone())
+                .parts(64)
+                .threaded(a.n_rows > 20_000)
                 .backend(Backend::cpu(1))
-                .workload(Workload::cg_system(a.clone(), b.clone()))
-                .cg_parts(64)
-                .cg_threaded(a.n_rows > 20_000)
                 .mode(mode)
                 .build()
                 .unwrap()

@@ -13,7 +13,7 @@ use std::rc::Rc;
 
 use perks::harness;
 use perks::runtime::Runtime;
-use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, SessionBuilder};
 use perks::util::fmt::{secs, Table};
 use perks::util::stats::{median, time_n};
 
@@ -72,9 +72,8 @@ fn main() {
     ]);
     for (bench, interior, dtype, steps) in families {
         let measure = |mode: ExecMode| -> Option<f64> {
-            let mut session = SessionBuilder::new()
+            let mut session = SessionBuilder::stencil(bench, interior, dtype)
                 .backend(Backend::pjrt(rt.clone()))
-                .workload(Workload::stencil(bench, interior, dtype))
                 .mode(mode)
                 .seed(11)
                 .build()
@@ -106,9 +105,8 @@ fn main() {
     // CG
     println!("\nCG n=1024 (poisson 32x32), 64 iterations:");
     let measure_cg = |mode: ExecMode| -> Option<f64> {
-        let mut session = SessionBuilder::new()
+        let mut session = SessionBuilder::cg(1024)
             .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::cg(1024))
             .mode(mode)
             .seed(7)
             .build()

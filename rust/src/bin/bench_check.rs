@@ -2,8 +2,9 @@
 //! artifacts (the `tools/bench_check` binary of the perf-smoke job).
 //!
 //! Reads the `BENCH_stencil.json` / `BENCH_temporal.json` /
-//! `BENCH_farm.json` / `BENCH_plane.json` / `BENCH_resilience.json`
-//! files the quick-mode benches emit and fails (exit 1) on:
+//! `BENCH_farm.json` / `BENCH_plane.json` / `BENCH_resilience.json` /
+//! `BENCH_cg_pipeline.json` files the quick-mode benches emit and fails
+//! (exit 1) on:
 //!
 //! * **counter-invariant breaks** — machine-independent, always checked:
 //!   any pooled/persistent arm with `advance_spawns > 0` (a resident
@@ -17,9 +18,12 @@
 //!   that sheds / times out / spawns under the quick load (all must be
 //!   0 — the unbounded quick config admits everything), any resilience
 //!   row that recovers without an injected fault (or fails to recover
-//!   with one), a cadence-0 arm that copies checkpoint bytes, and a
+//!   with one), a cadence-0 arm that copies checkpoint bytes, a
 //!   default-cadence clean arm costing more than 5% over its cadence-0
-//!   reference (skipped below a small noise-floor wall);
+//!   reference (skipped below a small noise-floor wall), any cg_pipeline
+//!   arm whose barrier-reduction count is not exactly `iters` (pipelined)
+//!   or `2 * iters` (classic), and a pipelined arm losing to its classic
+//!   twin by more than the jitter allowance on the small-system sweep;
 //! * **wall regressions** — current wall > baseline wall * (1 + tol)
 //!   (default tolerance 0.25, `--tolerance`), compared against the
 //!   checked-in `bench/baselines/*.json` entry with the *same workload
@@ -45,12 +49,13 @@ use std::process::ExitCode;
 
 use perks::util::json::Json;
 
-const FILES: [&str; 5] = [
+const FILES: [&str; 6] = [
     "BENCH_stencil.json",
     "BENCH_temporal.json",
     "BENCH_farm.json",
     "BENCH_plane.json",
     "BENCH_resilience.json",
+    "BENCH_cg_pipeline.json",
 ];
 
 /// Checkpoint-overhead acceptance bar: the default-cadence clean arm may
@@ -67,10 +72,16 @@ const MAX_DURABLE_OVERHEAD: f64 = 0.10;
 /// baseline wall gate still applies).
 const OVERHEAD_GATE_MIN_WALL: f64 = 0.005;
 
+/// Pipelined-vs-classic acceptance bar: on the small-system sweep (where
+/// the barrier dominates the SpMV) the pipelined arm may lose to its
+/// classic twin by at most this much wall — any more and the collapsed
+/// barrier has stopped paying for its auxiliary recurrences.
+const MAX_PIPELINE_JITTER: f64 = 0.10;
+
 /// The machine-independent invariants this gate enforces, as
 /// `(name, statement)` pairs for `--list-invariants`. Keep in sync with
 /// the checks in `check_modes`/`check_file` and `docs/INVARIANTS.md`.
-const INVARIANTS: [(&str, &str); 12] = [
+const INVARIANTS: [(&str, &str); 14] = [
     (
         "zero-spawn-advance",
         "persistent/pooled arms and farm admissions perform 0 thread spawns (advance_spawns == 0, admission_spawns == 0)",
@@ -118,6 +129,14 @@ const INVARIANTS: [(&str, &str); 12] = [
     (
         "durable-overhead-bound",
         "the default-cadence durable arm costs at most 10% wall over its durable cadence-0 reference (above the noise floor)",
+    ),
+    (
+        "pipelined-single-reduction",
+        "a pipelined CG arm pays exactly one slot-ordered barrier reduction per iteration (barrier_reductions == iters); the classic arm pays exactly two",
+    ),
+    (
+        "pipelined-wall-win",
+        "on the small-system sweep the pipelined arm's wall stays within the jitter allowance of its classic twin (above the noise floor)",
     ),
 ];
 
@@ -278,6 +297,12 @@ fn wall_entries(doc: &Json) -> Vec<(String, f64)> {
                 (int(r, "tenants"), int(r, "frontend_threads"), num(r, "wall_seconds"))
             {
                 out.push((format!("tenants{t}/fe{fe}/plane"), w));
+            }
+            // cg_pipeline rows: keyed by system size + execution model
+            if let (Some(n), Some(w)) = (int(r, "n"), num(r, "wall_seconds")) {
+                if !s(r, "mode").is_empty() {
+                    out.push((format!("n{n}/{}", s(r, "mode")), w));
+                }
             }
             // resilience rows: keyed by case + checkpoint cadence, with a
             // `/durable` suffix on the durable-persistence arm
@@ -468,6 +493,73 @@ fn check_file(cfg: &Config, name: &str, fails: &mut Vec<String>) {
                                 bar * 100.0
                             ));
                         }
+                    }
+                }
+            }
+            None => fails.push(format!("{name}: no rows array")),
+        },
+        "cg_pipeline" => match doc.get("rows").and_then(Json::as_array) {
+            Some(rows) => {
+                let iters = int(&doc, "iters").unwrap_or(0);
+                for r in rows {
+                    let n = int(r, "n").unwrap_or(0);
+                    let mode = s(r, "mode");
+                    if int(r, "advance_spawns") != Some(0) {
+                        fails.push(format!(
+                            "{name}: n={n} {mode} arm spawned threads per advance \
+                             (both arms are resident pools; must be 0)"
+                        ));
+                    }
+                    let want = match mode {
+                        "pipelined" => Some(iters),
+                        "persistent" => Some(2 * iters),
+                        _ => None,
+                    };
+                    match want {
+                        Some(w) => {
+                            if int(r, "barrier_reductions") != Some(w) {
+                                fails.push(format!(
+                                    "{name}: n={n} {mode} arm paid {:?} barrier reductions \
+                                     for {iters} iterations, expected exactly {w}",
+                                    int(r, "barrier_reductions")
+                                ));
+                            }
+                        }
+                        None => fails.push(format!("{name}: unknown mode {mode:?}")),
+                    }
+                }
+                // wall win: pipelined vs classic within this artifact
+                // (same machine, same run)
+                let wall_of = |n: u64, mode: &str| {
+                    rows.iter()
+                        .filter(|r| int(r, "n") == Some(n) && s(r, "mode") == mode)
+                        .find_map(|r| num(r, "wall_seconds"))
+                };
+                let mut ns: Vec<u64> = rows.iter().filter_map(|r| int(r, "n")).collect();
+                ns.sort_unstable();
+                ns.dedup();
+                for n in ns {
+                    let (Some(classic), Some(pipe)) =
+                        (wall_of(n, "persistent"), wall_of(n, "pipelined"))
+                    else {
+                        fails.push(format!("{name}: n={n} sweep is missing an arm"));
+                        continue;
+                    };
+                    if classic < OVERHEAD_GATE_MIN_WALL {
+                        println!(
+                            "note: {name}: n={n} classic wall {classic:.6}s below the \
+                             {OVERHEAD_GATE_MIN_WALL}s noise floor; wall-win gate skipped"
+                        );
+                        continue;
+                    }
+                    let limit = classic * (1.0 + MAX_PIPELINE_JITTER);
+                    if pipe > limit {
+                        fails.push(format!(
+                            "{name}: n={n} pipelined wall {pipe:.6}s loses to classic \
+                             {classic:.6}s by more than {:.0}% — the collapsed barrier \
+                             must not regress the small-system sweep",
+                            MAX_PIPELINE_JITTER * 100.0
+                        ));
                     }
                 }
             }

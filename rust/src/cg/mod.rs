@@ -6,14 +6,20 @@
 //! physically).
 
 pub mod krylov;
+pub mod pipeline;
 pub mod policy;
 pub mod pool;
+pub mod precond;
 pub mod solver;
 pub mod stationary;
 
+pub use pipeline::{PipePool, PipeRun, PipeState};
 pub use policy::{CgPolicy, CgTraffic};
 pub use pool::{CgPool, PoolRun};
-pub use solver::{solve_host_loop, solve_persistent, solve_pooled, CgOptions, CgResult};
+pub use precond::{Precond, Preconditioner};
+pub use solver::{
+    solve_host_loop, solve_persistent, solve_pipelined, solve_pooled, CgOptions, CgResult,
+};
 
 /// The canonical per-block partial of the pooled reduction order: `f(i)`
 /// accumulated left-to-right over rows `[s, s + l)` from a fresh 0.0.
@@ -31,4 +37,45 @@ pub(crate) fn block_partial(s: usize, l: usize, mut f: impl FnMut(usize) -> f64)
         part += f(i);
     }
     part
+}
+
+/// Classic *preconditioned* CG, fused second half over one reduction
+/// block: the x/r updates, the row-local preconditioner solve
+/// `z = M⁻¹ r`, and the (r·z, r·r) partials, all left-to-right.
+/// Single-sourced so the serial `session::cpu::CpuCg` step and the
+/// pooled workers produce bit-identical iterates (the unpreconditioned
+/// path keeps its original one-loop arithmetic and never calls this).
+///
+/// # Safety
+///
+/// The caller must own rows `[s, s + l)` of `x`, `r` and `z`
+/// exclusively for the duration of the call; `p`/`ap` must have no
+/// concurrent writer; all pointers/slices cover the full vector length.
+#[inline]
+pub(crate) unsafe fn classic_precond_block_pass(
+    pc: &precond::Precond,
+    s: usize,
+    l: usize,
+    alpha: f64,
+    p: &[f64],
+    ap: &[f64],
+    x: *mut f64,
+    r: *mut f64,
+    z: *mut f64,
+) -> (f64, f64) {
+    for i in s..s + l {
+        x.add(i).write(x.add(i).read() + alpha * p[i]);
+        r.add(i).write(r.add(i).read() - alpha * ap[i]);
+    }
+    // z = M⁻¹ r needs the whole block's r updated first (block-Jacobi
+    // couples rows within a sub-block), hence the two-loop shape
+    pc.apply_raw(r as *const f64, z, s, l);
+    let mut prz = 0.0;
+    let mut prr = 0.0;
+    for i in s..s + l {
+        let ri = r.add(i).read();
+        prz += ri * z.add(i).read();
+        prr += ri * ri;
+    }
+    (prz, prr)
 }

@@ -1,0 +1,989 @@
+//! Pipelined preconditioned CG: **one barrier per iteration**.
+//!
+//! Classic pooled CG ([`crate::cg::pool`]) pays two slot-ordered
+//! reduction generations per iteration — p·Ap, then r·r — so on small
+//! systems sync cost, not bandwidth, bounds the iteration rate. This
+//! module implements the pipelined/fused formulation (Ghysels–Vanroose;
+//! cf. the pipelined solvers surveyed by Rupp et al., arXiv 1410.4054):
+//! auxiliary recurrences for `w = A u`, `s = A p`, `q = M⁻¹ s`, `z = A q`
+//! let the three dot products of an iteration (γ = r·u, δ = w·u, and the
+//! convergence norm r·r) fold through a **single**
+//! [`GridBarrier::sync_reduce`] generation, overlapped with the SpMV.
+//!
+//! # Recurrences
+//!
+//! With `u = M⁻¹ r`, `w = A u`, `m = M⁻¹ w`, `n = A m` and
+//! `γ = (r, u)`, `δ = (w, u)`:
+//!
+//! ```text
+//! β_i = γ_i / γ_{i-1}                 (0 on the first iteration)
+//! α_i = γ_i / (δ_i - β_i γ_i / α_{i-1})   (γ_i / δ_i first)
+//! z ← n + β z;  q ← m + β q;  s ← w + β s;  p ← u + β p
+//! x ← x + α p;  r ← r - α s;  u ← u - α q;  w ← w - α z
+//! m' = M⁻¹ w
+//! ```
+//!
+//! Every vector update is row-local, the SpMV `n = A m` is
+//! **row-partitioned** over the deterministic reduction blocks (each row
+//! accumulated left-to-right by its owner — no merge-path carries, so no
+//! fixup barrier), and the preconditioner is row-local by construction
+//! ([`crate::cg::precond`]). One iteration is therefore one fused pass
+//! per worker over its resident rows, one `put` triple per block, one
+//! barrier.
+//!
+//! # Determinism and the two parities
+//!
+//! Iterates are bit-identical to the serial [`advance_serial`] reference
+//! at every worker count. The per-row arithmetic is single-sourced in
+//! [`fused_block_pass`] (serial stepper, pool workers and farm shards
+//! all call it), partials fold in block-index order, and the scalar
+//! recurrences are replicated on every worker. Two double-buffers remove
+//! the cross-iteration races a single barrier would otherwise allow:
+//!
+//! * `m` is parity-buffered — iteration *i* reads `m[i%2]` (stable all
+//!   iteration) and writes `m' = M⁻¹ w` into `m[(i+1)%2]`;
+//! * the reduction slots are parity-buffered — iteration *i* publishes
+//!   its γ'/δ'/rr' partials into the other parity's slot range, which is
+//!   folded only *after* the iteration's barrier, so a fold never races
+//!   the next iteration's `put`s.
+//!
+//! The fold of iteration *i*'s partials happens at the top of iteration
+//! *i+1* (or after the loop, for the final iteration) — that is the
+//! pipelining: the reduction latency hides behind the next SpMV.
+
+use std::cell::UnsafeCell;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::cg::pool::PoolRun;
+use crate::cg::precond::Precond;
+use crate::coordinator::barrier::GridBarrier;
+use crate::error::{Error, Result};
+use crate::sparse::csr::Csr;
+use crate::stencil::parallel::partition;
+use crate::util::counters;
+
+/// Full resident state of a pipelined CG solve between advances. Owns
+/// every recurrence vector and scalar, so resumed advances (pool, farm,
+/// or serial) continue bit-identically from where the last one stopped.
+#[derive(Clone, Debug)]
+pub struct PipeState {
+    pub x: Vec<f64>,
+    pub r: Vec<f64>,
+    /// `u = M⁻¹ r`.
+    pub u: Vec<f64>,
+    /// `w = A u`.
+    pub w: Vec<f64>,
+    pub p: Vec<f64>,
+    /// `s = A p`.
+    pub s: Vec<f64>,
+    /// `q = M⁻¹ s`.
+    pub q: Vec<f64>,
+    /// `z = A q`.
+    pub z: Vec<f64>,
+    /// `m = M⁻¹ w` (current parity).
+    pub m: Vec<f64>,
+    /// `γ = (r, u)`.
+    pub gamma: f64,
+    /// `δ = (w, u)`.
+    pub delta: f64,
+    /// Convergence recurrence `r·r`.
+    pub rr: f64,
+    /// Previous iteration's γ (0.0 marks "no previous iteration").
+    pub gamma_prev: f64,
+    /// Previous iteration's α (unused while `gamma_prev == 0`).
+    pub alpha_prev: f64,
+}
+
+impl PipeState {
+    /// Prime the pipelined recurrences from `x0` (zeros when `None`):
+    /// one SpMV for `r = b - A x`, the preconditioner applies for `u`
+    /// and `m`, one SpMV for `w`, and the three initial dots. Runs on
+    /// the client thread, once per `prepare` — the pipelined analog of
+    /// classic CG's serial `rr = b·b` priming.
+    pub fn prime(a: &Csr, b: &[f64], x0: Option<&[f64]>, pc: &Precond) -> Result<Self> {
+        let n = a.n_rows;
+        let mut x = vec![0.0; n];
+        if let Some(x0) = x0 {
+            x.copy_from_slice(x0);
+        }
+        let mut r = vec![0.0; n];
+        spmv_rows(a, &x, &mut r, 0, n);
+        for i in 0..n {
+            r[i] = b[i] - r[i];
+        }
+        let mut u = vec![0.0; n];
+        pc.apply(&r, &mut u);
+        let mut w = vec![0.0; n];
+        spmv_rows(a, &u, &mut w, 0, n);
+        let mut m = vec![0.0; n];
+        pc.apply(&w, &mut m);
+        let gamma = dot(&r, &u);
+        let delta = dot(&w, &u);
+        let rr = dot(&r, &r);
+        if !gamma.is_finite() || !delta.is_finite() || !rr.is_finite() {
+            return Err(Error::Solver(format!(
+                "non-finite reduction while priming pipelined CG (r·u={gamma}, w·u={delta}, r·r={rr})"
+            )));
+        }
+        Ok(Self {
+            x,
+            r,
+            u,
+            w,
+            p: vec![0.0; n],
+            s: vec![0.0; n],
+            q: vec![0.0; n],
+            z: vec![0.0; n],
+            m,
+            gamma,
+            delta,
+            rr,
+            gamma_prev: 0.0,
+            alpha_prev: 0.0,
+        })
+    }
+
+    fn n(&self) -> usize {
+        self.x.len()
+    }
+}
+
+/// Result of a serial pipelined advance; `rr`/scalars live in the state.
+#[derive(Clone, Debug)]
+pub struct PipeRun {
+    /// Iterations whose folds completed cleanly.
+    pub iters: usize,
+    /// Collective solver error, detected identically at every
+    /// replication site (serial, every pool worker, the farm
+    /// transition).
+    pub error: Option<String>,
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Row-partitioned SpMV over rows `[lo, hi)`: each row accumulated
+/// left-to-right in column order. This — not the merge-path kernel — is
+/// the pipelined SpMV: per-row ownership needs no carry fixup (and so no
+/// extra barrier), and the per-row fold order is worker-count-invariant
+/// by construction.
+pub(crate) fn spmv_rows(a: &Csr, x: &[f64], y: &mut [f64], lo: usize, hi: usize) {
+    for row in lo..hi {
+        let (cols, vals) = a.row(row);
+        let mut acc = 0.0;
+        for (&c, &v) in cols.iter().zip(vals) {
+            acc += v * x[c];
+        }
+        y[row] = acc;
+    }
+}
+
+/// The pipelined scalar recurrence, replicated bit-identically at every
+/// site: β and α from (γ, δ, γ_prev, α_prev). `γ_prev == 0.0` marks the
+/// first iteration. Errors are strings so each site can wrap them in its
+/// own failure type.
+pub(crate) fn pipe_coeffs(
+    gamma: f64,
+    delta: f64,
+    gamma_prev: f64,
+    alpha_prev: f64,
+) -> std::result::Result<(f64, f64), String> {
+    let (beta, denom) = if gamma_prev == 0.0 {
+        (0.0, delta)
+    } else {
+        let beta = gamma / gamma_prev;
+        (beta, delta - beta * gamma / alpha_prev)
+    };
+    if !denom.is_finite() {
+        return Err(format!("non-finite pipelined denominator ({denom})"));
+    }
+    if denom <= 0.0 {
+        return Err(format!("matrix not positive definite (pipelined denom={denom})"));
+    }
+    Ok((beta, gamma / denom))
+}
+
+/// Guard the three folded reductions of iteration `iter` (1-based).
+/// Identical at every replication site, so the resulting break/failure
+/// is collective.
+pub(crate) fn check_folds(gamma: f64, delta: f64, rr: f64, iter: usize) -> Option<String> {
+    if !gamma.is_finite() || !delta.is_finite() || !rr.is_finite() {
+        return Some(format!(
+            "non-finite pipelined reduction (r·u={gamma}, w·u={delta}, r·r={rr}) at iteration {iter}"
+        ));
+    }
+    None
+}
+
+/// One fused pipelined pass over the rows of reduction block
+/// `[s, s + l)`: the row SpMV `n = A m_cur`, all eight vector
+/// recurrences, the preconditioner solve `m_next = M⁻¹ w` for the
+/// block, and the three scalar partials `(γ', δ', rr')` accumulated
+/// left-to-right. **Single-sourced**: the serial stepper, the pool
+/// workers and the farm shards all call this, which is what makes the
+/// bit-identity contract a property of one function.
+///
+/// # Safety
+///
+/// The caller must own rows `[s, s + l)` of every `*mut` vector
+/// exclusively for the duration of the call, `m_cur` must have no
+/// concurrent writer at all (it is read at arbitrary columns by the
+/// SpMV), and no other thread may read the caller's `m_next` rows until
+/// a synchronization point orders the writes. All pointers must cover
+/// the full vector length.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn fused_block_pass(
+    a: &Csr,
+    pc: &Precond,
+    s: usize,
+    l: usize,
+    alpha: f64,
+    beta: f64,
+    m_cur: &[f64],
+    x: *mut f64,
+    r: *mut f64,
+    u: *mut f64,
+    w: *mut f64,
+    p: *mut f64,
+    sv: *mut f64,
+    q: *mut f64,
+    z: *mut f64,
+    m_next: *mut f64,
+) -> (f64, f64, f64) {
+    let mut pg = 0.0;
+    let mut pd = 0.0;
+    let mut pt = 0.0;
+    for i in s..s + l {
+        // n_i = (A m)_i, row accumulation in column order
+        let (cols, vals) = a.row(i);
+        let mut ni = 0.0;
+        for (&c, &v) in cols.iter().zip(vals) {
+            ni += v * m_cur[c];
+        }
+        // search directions first (they read the pre-update u/w) ...
+        let zi = ni + beta * z.add(i).read();
+        z.add(i).write(zi);
+        let qi = m_cur[i] + beta * q.add(i).read();
+        q.add(i).write(qi);
+        let si = w.add(i).read() + beta * sv.add(i).read();
+        sv.add(i).write(si);
+        let pi = u.add(i).read() + beta * p.add(i).read();
+        p.add(i).write(pi);
+        // ... then the iterate updates, then the partials on the new
+        // r/u/w (γ' = r·u, δ' = w·u, rr' = r·r)
+        x.add(i).write(x.add(i).read() + alpha * pi);
+        let ri = r.add(i).read() - alpha * si;
+        r.add(i).write(ri);
+        let ui = u.add(i).read() - alpha * qi;
+        u.add(i).write(ui);
+        let wi = w.add(i).read() - alpha * zi;
+        w.add(i).write(wi);
+        pg += ri * ui;
+        pd += wi * ui;
+        pt += ri * ri;
+    }
+    // m' = M⁻¹ w over the updated block rows (row-local: reads only
+    // w[s..s+l], writes only m_next[s..s+l])
+    pc.apply_raw(w as *const f64, m_next, s, l);
+    (pg, pd, pt)
+}
+
+/// Serial pipelined advance: up to `max_iters` iterations on `st`,
+/// stopping early on `rr <= threshold` (or `rr <= 0`). This is the
+/// bit-identity reference for the pool and farm paths — same
+/// [`fused_block_pass`] per block, same block-order folds, same scalar
+/// recurrence and guard order.
+pub fn advance_serial(
+    a: &Csr,
+    blocks: &[(usize, usize)],
+    pc: &Precond,
+    st: &mut PipeState,
+    threshold: f64,
+    max_iters: usize,
+) -> PipeRun {
+    let n = st.n();
+    let mut mn = vec![0.0; n];
+    let mut done = 0usize;
+    let mut error = None;
+    while done < max_iters {
+        if st.rr <= threshold || st.rr <= 0.0 {
+            break;
+        }
+        let (beta, alpha) =
+            match pipe_coeffs(st.gamma, st.delta, st.gamma_prev, st.alpha_prev) {
+                Ok(v) => v,
+                Err(msg) => {
+                    error = Some(msg);
+                    break;
+                }
+            };
+        let mut g = 0.0;
+        let mut d = 0.0;
+        let mut t = 0.0;
+        {
+            let m_cur = st.m.as_slice();
+            let (x, r) = (st.x.as_mut_ptr(), st.r.as_mut_ptr());
+            let (u, w) = (st.u.as_mut_ptr(), st.w.as_mut_ptr());
+            let (p, sv) = (st.p.as_mut_ptr(), st.s.as_mut_ptr());
+            let (q, z) = (st.q.as_mut_ptr(), st.z.as_mut_ptr());
+            let m_next = mn.as_mut_ptr();
+            for &(s, l) in blocks {
+                // SAFETY: single-threaded — this thread owns every row
+                // of every vector, and m_cur/m_next are distinct Vecs.
+                let (pg, pd, pt) = unsafe {
+                    fused_block_pass(a, pc, s, l, alpha, beta, m_cur, x, r, u, w, p, sv, q, z, m_next)
+                };
+                g += pg;
+                d += pd;
+                t += pt;
+            }
+        }
+        std::mem::swap(&mut st.m, &mut mn);
+        if let Some(msg) = check_folds(g, d, t, done + 1) {
+            error = Some(msg);
+            break;
+        }
+        st.gamma_prev = st.gamma;
+        st.alpha_prev = alpha;
+        st.gamma = g;
+        st.delta = d;
+        st.rr = t;
+        done += 1;
+    }
+    PipeRun { iters: done, error }
+}
+
+// ---------------------------------------------------------------------
+// The persistent pipelined pool
+// ---------------------------------------------------------------------
+
+/// Command to the parked pipelined workers; epoch-stamped like
+/// [`crate::cg::pool`]'s (teardown is the separate shutdown flag,
+/// checked on every wake).
+#[derive(Clone, Copy)]
+enum Cmd {
+    Idle,
+    Run {
+        iters: usize,
+        threshold: f64,
+        gamma: f64,
+        delta: f64,
+        rr: f64,
+        gamma_prev: f64,
+        alpha_prev: f64,
+    },
+}
+
+/// Replicated outcome of one `Run`; worker 0 publishes it (an error —
+/// first wins — from any worker).
+#[derive(Clone, Default)]
+struct Outcome {
+    iters: usize,
+    /// Fused vector passes executed (≥ `iters`: a pass whose fold then
+    /// failed still moved the vectors) — determines the final m parity.
+    vec_iters: usize,
+    gamma: f64,
+    delta: f64,
+    rr: f64,
+    gamma_prev: f64,
+    alpha_prev: f64,
+    error: Option<String>,
+}
+
+struct CtlState {
+    epoch: u64,
+    cmd: Cmd,
+    finished: usize,
+    outcome: Outcome,
+    shutdown: bool,
+}
+
+struct Control {
+    state: Mutex<CtlState>,
+    cmd_cv: Condvar,
+    done_cv: Condvar,
+}
+
+impl Control {
+    /// Poison-recovering lock (plain data, same argument as the classic
+    /// pool's control).
+    fn lock(&self) -> std::sync::MutexGuard<'_, CtlState> {
+        self.state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Shared mutable buffer with phase-disjoint access — the pipelined
+/// pool's copy of [`crate::cg::pool::SharedBuf`]'s protocol, kept local
+/// so this pool stays self-contained (the farm reuses the crate-visible
+/// original).
+struct Buf {
+    _storage: UnsafeCell<Vec<f64>>,
+    ptr: *mut f64,
+    len: usize,
+}
+
+// SAFETY: access is coordinated by the control handshake + barrier
+// phases, exactly as in `cg::pool::SharedBuf`.
+unsafe impl Sync for Buf {}
+unsafe impl Send for Buf {}
+
+impl Buf {
+    fn new(mut v: Vec<f64>) -> Self {
+        let ptr = v.as_mut_ptr();
+        let len = v.len();
+        Self { _storage: UnsafeCell::new(v), ptr, len }
+    }
+
+    /// SAFETY: no concurrent writer may overlap the read (phase protocol).
+    unsafe fn whole(&self) -> &[f64] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+
+    fn ptr(&self) -> *mut f64 {
+        self.ptr
+    }
+
+    /// SAFETY: caller must be the only thread touching the buffer (the
+    /// main thread between runs).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn whole_mut(&self) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+}
+
+/// Everything the resident pipelined workers share.
+struct Shared {
+    a: Arc<Csr>,
+    pc: Arc<Precond>,
+    blocks: Vec<(usize, usize)>,
+    x: Buf,
+    r: Buf,
+    u: Buf,
+    w: Buf,
+    p: Buf,
+    s: Buf,
+    q: Buf,
+    z: Buf,
+    /// Parity-buffered m (see module docs): iteration i reads `m[i%2]`,
+    /// writes `m[(i+1)%2]`.
+    m: [Buf; 2],
+    /// Width `6 * nblocks`: two parity halves of (γ | δ | rr) block
+    /// ranges.
+    barrier: GridBarrier,
+    ctl: Control,
+}
+
+/// A pool of persistent pipelined-CG workers: spawned once, parked
+/// between runs, joined on drop; **one reduction barrier per
+/// iteration**.
+pub struct PipePool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    spawned: u64,
+}
+
+impl PipePool {
+    /// Spawn the resident workers. `threads == 0` resolves to
+    /// `available_parallelism`; the effective count is clamped to the
+    /// block count so no worker idles by construction.
+    pub fn spawn(a: Arc<Csr>, pc: Arc<Precond>, parts: usize, threads: usize) -> Result<Self> {
+        if a.n_rows != a.n_cols {
+            return Err(Error::Solver(format!(
+                "matrix not square: {}x{}",
+                a.n_rows, a.n_cols
+            )));
+        }
+        let n = a.n_rows;
+        let blocks = partition(n, parts);
+        let nblocks = blocks.len();
+        let workers = crate::util::resolve_workers(threads).min(nblocks);
+        let shared = Arc::new(Shared {
+            barrier: GridBarrier::with_reduction(workers, 6 * nblocks),
+            blocks,
+            x: Buf::new(vec![0.0; n]),
+            r: Buf::new(vec![0.0; n]),
+            u: Buf::new(vec![0.0; n]),
+            w: Buf::new(vec![0.0; n]),
+            p: Buf::new(vec![0.0; n]),
+            s: Buf::new(vec![0.0; n]),
+            q: Buf::new(vec![0.0; n]),
+            z: Buf::new(vec![0.0; n]),
+            m: [Buf::new(vec![0.0; n]), Buf::new(vec![0.0; n])],
+            a,
+            pc,
+            ctl: Control {
+                state: Mutex::new(CtlState {
+                    epoch: 0,
+                    cmd: Cmd::Idle,
+                    finished: 0,
+                    outcome: Outcome::default(),
+                    shutdown: false,
+                }),
+                cmd_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            },
+        });
+        counters::note_thread_spawns(workers as u64);
+        let mut handles = Vec::with_capacity(workers);
+        for wk in 0..workers {
+            let sh = shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("cg-pipe-{wk}"))
+                .spawn(move || worker_main(&sh, wk));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // join the workers that did start (parked on cmd_cv;
+                    // the barrier is not armed before the first Run)
+                    {
+                        let mut g = shared.ctl.lock();
+                        g.shutdown = true;
+                        shared.ctl.cmd_cv.notify_all();
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Solver(format!("pipe pool spawn failed: {e}")));
+                }
+            }
+        }
+        Ok(Self { shared, handles, workers, spawned: workers as u64 })
+    }
+
+    /// Resident worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// OS threads this pool has ever spawned — constant after `spawn`.
+    pub fn spawn_count(&self) -> u64 {
+        self.spawned
+    }
+
+    /// Total time workers spent blocked at the grid barrier (summed).
+    pub fn barrier_wait_seconds(&self) -> f64 {
+        self.shared.barrier.total_wait().as_secs_f64()
+    }
+
+    /// Completed grid-barrier **reduction** generations — exact per-pool
+    /// (unlike the process-global counter), so tests can assert the
+    /// tentpole invariant with equality: pipelined CG pays ONE
+    /// slot-ordered reduction per iteration.
+    pub fn barrier_reduction_generations(&self) -> u64 {
+        self.shared.barrier.reduction_generations()
+    }
+
+    /// Run up to `iters` pipelined iterations on `st`, stopping early
+    /// when `rr <= threshold`. State round-trips completely (all nine
+    /// vectors and the five scalars), so resumed advances are
+    /// bit-identical to one uninterrupted run. On a collective solver
+    /// error (`PoolRun::error`) the cleanly folded iterations are
+    /// counted in `iters`; the vectors may additionally hold the failing
+    /// iteration's updates (the state is then only good for diagnosis,
+    /// as with the serial reference).
+    pub fn run(&mut self, st: &mut PipeState, threshold: f64, iters: usize) -> Result<PoolRun> {
+        let n = self.shared.a.n_rows;
+        if st.n() != n {
+            return Err(Error::Solver("pipe pool state length mismatch".into()));
+        }
+        // SAFETY: workers are parked (previous completion handshake
+        // happened-before through the control mutex), so the main thread
+        // has exclusive access to the buffers.
+        unsafe {
+            self.shared.x.whole_mut().copy_from_slice(&st.x);
+            self.shared.r.whole_mut().copy_from_slice(&st.r);
+            self.shared.u.whole_mut().copy_from_slice(&st.u);
+            self.shared.w.whole_mut().copy_from_slice(&st.w);
+            self.shared.p.whole_mut().copy_from_slice(&st.p);
+            self.shared.s.whole_mut().copy_from_slice(&st.s);
+            self.shared.q.whole_mut().copy_from_slice(&st.q);
+            self.shared.z.whole_mut().copy_from_slice(&st.z);
+            self.shared.m[0].whole_mut().copy_from_slice(&st.m);
+        }
+        {
+            let mut g = self.shared.ctl.lock();
+            g.epoch += 1;
+            g.cmd = Cmd::Run {
+                iters,
+                threshold,
+                gamma: st.gamma,
+                delta: st.delta,
+                rr: st.rr,
+                gamma_prev: st.gamma_prev,
+                alpha_prev: st.alpha_prev,
+            };
+            g.finished = 0;
+            g.outcome = Outcome::default();
+            self.shared.ctl.cmd_cv.notify_all();
+        }
+        let outcome = {
+            let mut g = self.shared.ctl.lock();
+            while g.finished < self.workers {
+                // lint: allow(condvar-shutdown) -- client-side completion wait; the pool is torn down only by this same thread's Drop, so no concurrent shutdown can strand it
+                g = self.shared.ctl.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            }
+            g.outcome.clone()
+        };
+        // SAFETY: all workers reported done (handshake above), so they
+        // are parked again and the buffers are quiescent.
+        unsafe {
+            st.x.copy_from_slice(self.shared.x.whole());
+            st.r.copy_from_slice(self.shared.r.whole());
+            st.u.copy_from_slice(self.shared.u.whole());
+            st.w.copy_from_slice(self.shared.w.whole());
+            st.p.copy_from_slice(self.shared.p.whole());
+            st.s.copy_from_slice(self.shared.s.whole());
+            st.q.copy_from_slice(self.shared.q.whole());
+            st.z.copy_from_slice(self.shared.z.whole());
+            st.m.copy_from_slice(self.shared.m[outcome.vec_iters % 2].whole());
+        }
+        st.gamma = outcome.gamma;
+        st.delta = outcome.delta;
+        st.rr = outcome.rr;
+        st.gamma_prev = outcome.gamma_prev;
+        st.alpha_prev = outcome.alpha_prev;
+        // rz is classic-PCG bookkeeping; the pipelined recurrences carry
+        // γ/δ instead, so it mirrors rr here (the unpreconditioned identity)
+        Ok(PoolRun { iters: outcome.iters, rr: outcome.rr, rz: outcome.rr, error: outcome.error })
+    }
+
+    #[cfg(test)]
+    fn shared_weak(&self) -> std::sync::Weak<Shared> {
+        Arc::downgrade(&self.shared)
+    }
+}
+
+impl Drop for PipePool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.ctl.lock();
+            g.shutdown = true;
+            self.shared.ctl.cmd_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Park on the control condvar; execute each epoch's command; exit on
+/// shutdown — the classic pool's lifecycle with the pipelined loop
+/// inside.
+fn worker_main(sh: &Shared, wk: usize) {
+    let mut seen = 0u64;
+    loop {
+        let cmd = {
+            let mut g = sh.ctl.lock();
+            loop {
+                // shutdown is checked on every wake, independent of the
+                // epoch stamp, so teardown can never be missed
+                if g.shutdown {
+                    return;
+                }
+                if g.epoch != seen {
+                    break;
+                }
+                g = sh.ctl.cmd_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+            }
+            seen = g.epoch;
+            g.cmd
+        };
+        match cmd {
+            Cmd::Idle => {}
+            Cmd::Run { iters, threshold, gamma, delta, rr, gamma_prev, alpha_prev } => {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    iterate(sh, wk, iters, threshold, gamma, delta, rr, gamma_prev, alpha_prev)
+                }))
+                .unwrap_or_else(|_| Outcome {
+                    iters: 0,
+                    vec_iters: 0,
+                    gamma,
+                    delta,
+                    rr,
+                    gamma_prev,
+                    alpha_prev,
+                    error: Some(format!("pipe pool worker {wk} panicked during iterate")),
+                });
+                let mut g = sh.ctl.lock();
+                if g.outcome.error.is_none() && (wk == 0 || out.error.is_some()) {
+                    g.outcome = out;
+                }
+                g.finished += 1;
+                if g.finished == sh.barrier.participants() {
+                    sh.ctl.done_cv.notify_all();
+                }
+            }
+        }
+    }
+}
+
+/// The resident pipelined iteration loop of worker `wk`: one
+/// [`fused_block_pass`] per owned block, one `put` triple per block,
+/// one `sync_reduce` per iteration. All workers run the same control
+/// flow on identical scalars, so breaks are collective.
+#[allow(clippy::too_many_arguments)]
+fn iterate(
+    sh: &Shared,
+    wk: usize,
+    max_iters: usize,
+    threshold: f64,
+    mut gamma: f64,
+    mut delta: f64,
+    mut rr: f64,
+    mut gamma_prev: f64,
+    mut alpha_prev: f64,
+) -> Outcome {
+    let workers = sh.barrier.participants();
+    let nb = sh.blocks.len();
+    let (k_lo, k_hi) = (nb * wk / workers, nb * (wk + 1) / workers);
+    let mut done = 0usize;
+    let mut vec_iters = 0usize;
+    let mut last_alpha = alpha_prev;
+    let mut pending = false;
+    let mut error = None;
+    // hot-path: begin -- the resident pipelined loop: one barrier
+    // generation + raw-pointer arithmetic per iteration, no allocation
+    loop {
+        if pending {
+            // fold the previous pass's partials (its parity's slot
+            // ranges) — identical bits on every worker: slot-index order
+            let off = (vec_iters % 2) * 3 * nb;
+            let g = sh.barrier.read_sum_range(off, off + nb);
+            let d = sh.barrier.read_sum_range(off + nb, off + 2 * nb);
+            let t = sh.barrier.read_sum_range(off + 2 * nb, off + 3 * nb);
+            if let Some(msg) = check_folds(g, d, t, done + 1) {
+                error = Some(msg);
+                break;
+            }
+            gamma_prev = gamma;
+            alpha_prev = last_alpha;
+            gamma = g;
+            delta = d;
+            rr = t;
+            done += 1;
+            pending = false;
+        }
+        if done == max_iters || rr <= threshold || rr <= 0.0 {
+            break;
+        }
+        let (beta, alpha) = match pipe_coeffs(gamma, delta, gamma_prev, alpha_prev) {
+            Ok(v) => v,
+            Err(msg) => {
+                error = Some(msg);
+                break;
+            }
+        };
+        last_alpha = alpha;
+        let par = vec_iters % 2;
+        // SAFETY: m[par] has no writer this iteration (writes target
+        // m[1-par]); every *mut vector is written only at rows owned by
+        // this worker's blocks; the barrier below orders this
+        // iteration's writes before the next iteration's reads.
+        unsafe {
+            let m_cur = sh.m[par].whole();
+            let m_next = sh.m[1 - par].ptr();
+            let off_next = ((vec_iters + 1) % 2) * 3 * nb;
+            for k in k_lo..k_hi {
+                let (s, l) = sh.blocks[k];
+                let (pg, pd, pt) = fused_block_pass(
+                    &sh.a,
+                    &sh.pc,
+                    s,
+                    l,
+                    alpha,
+                    beta,
+                    m_cur,
+                    sh.x.ptr(),
+                    sh.r.ptr(),
+                    sh.u.ptr(),
+                    sh.w.ptr(),
+                    sh.p.ptr(),
+                    sh.s.ptr(),
+                    sh.q.ptr(),
+                    sh.z.ptr(),
+                    m_next,
+                );
+                sh.barrier.put(off_next + k, pg);
+                sh.barrier.put(off_next + nb + k, pd);
+                sh.barrier.put(off_next + 2 * nb + k, pt);
+            }
+        }
+        vec_iters += 1;
+        // THE barrier: the iteration's only sync, counted as one
+        // reduction generation
+        sh.barrier.sync_reduce();
+        pending = true;
+    }
+    // hot-path: end
+    Outcome { iters: done, vec_iters, gamma, delta, rr, gamma_prev, alpha_prev, error }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cg::precond::Preconditioner;
+    use crate::sparse::gen;
+
+    fn setup(
+        a: &Csr,
+        spec: Preconditioner,
+        parts: usize,
+    ) -> (Arc<Csr>, Arc<Precond>, Vec<(usize, usize)>) {
+        let blocks = partition(a.n_rows, parts);
+        let pc = Precond::build(spec, a, &blocks).unwrap();
+        (Arc::new(a.clone()), Arc::new(pc), blocks)
+    }
+
+    fn serial(
+        a: &Csr,
+        b: &[f64],
+        spec: Preconditioner,
+        parts: usize,
+        chunks: &[usize],
+    ) -> PipeState {
+        let (_, pc, blocks) = setup(a, spec, parts);
+        let mut st = PipeState::prime(a, b, None, &pc).unwrap();
+        for &c in chunks {
+            let run = advance_serial(a, &blocks, &pc, &mut st, 0.0, c);
+            assert!(run.error.is_none(), "{:?}", run.error);
+        }
+        st
+    }
+
+    fn pooled(
+        a: &Csr,
+        b: &[f64],
+        spec: Preconditioner,
+        parts: usize,
+        threads: usize,
+        chunks: &[usize],
+    ) -> (PipeState, u64) {
+        let (arc, pc, _) = setup(a, spec, parts);
+        let mut st = PipeState::prime(a, b, None, &pc).unwrap();
+        let mut pool = PipePool::spawn(arc, pc, parts, threads).unwrap();
+        for &c in chunks {
+            let run = pool.run(&mut st, 0.0, c).unwrap();
+            assert!(run.error.is_none(), "{:?}", run.error);
+        }
+        (st, pool.spawn_count())
+    }
+
+    fn assert_states_eq(a: &PipeState, b: &PipeState, what: &str) {
+        assert_eq!(a.x, b.x, "{what}: x");
+        assert_eq!(a.r, b.r, "{what}: r");
+        assert_eq!(a.u, b.u, "{what}: u");
+        assert_eq!(a.w, b.w, "{what}: w");
+        assert_eq!(a.p, b.p, "{what}: p");
+        assert_eq!(a.s, b.s, "{what}: s");
+        assert_eq!(a.q, b.q, "{what}: q");
+        assert_eq!(a.z, b.z, "{what}: z");
+        assert_eq!(a.m, b.m, "{what}: m");
+        assert_eq!(a.rr.to_bits(), b.rr.to_bits(), "{what}: rr");
+        assert_eq!(a.gamma.to_bits(), b.gamma.to_bits(), "{what}: gamma");
+        assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{what}: delta");
+    }
+
+    #[test]
+    fn pooled_is_bit_identical_to_serial_at_every_worker_count() {
+        let a = gen::poisson2d(14);
+        let b = gen::rhs(a.n_rows, 7);
+        for spec in [
+            Preconditioner::None,
+            Preconditioner::Jacobi,
+            Preconditioner::BlockJacobi { block: 7 },
+        ] {
+            let want = serial(&a, &b, spec, 8, &[23]);
+            for threads in [1, 2, 3, 8] {
+                let (got, _) = pooled(&a, &b, spec, 8, threads, &[23]);
+                assert_states_eq(&got, &want, &format!("{} threads={threads}", spec.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn resumed_advances_match_one_shot_bitwise() {
+        let a = gen::clustered_spd(300, 6, 24, 5).unwrap();
+        let b = gen::rhs(300, 2);
+        let spec = Preconditioner::Jacobi;
+        let want = serial(&a, &b, spec, 12, &[30]);
+        let split = serial(&a, &b, spec, 12, &[9, 13, 8]);
+        assert_states_eq(&split, &want, "serial resume");
+        let (res, spawned) = pooled(&a, &b, spec, 12, 4, &[9, 13, 8]);
+        assert_states_eq(&res, &want, "pooled resume");
+        assert_eq!(spawned, 4, "resumed runs reuse the same resident workers");
+    }
+
+    #[test]
+    fn one_reduction_and_one_sync_per_iteration() {
+        let a = gen::poisson2d(10);
+        let b = gen::rhs(a.n_rows, 1);
+        let (arc, pc, _) = setup(&a, Preconditioner::None, 8);
+        let mut st = PipeState::prime(&a, &b, None, &pc).unwrap();
+        let mut pool = PipePool::spawn(arc, pc, 8, 3).unwrap();
+        let syncs0 = counters::barrier_syncs();
+        let reds0 = counters::barrier_reductions();
+        let run = pool.run(&mut st, 0.0, 17).unwrap();
+        assert_eq!(run.iters, 17);
+        // per-pool barrier generations are exact even when other tests
+        // run concurrently: one generation per iteration
+        assert_eq!(pool.shared.barrier.generations(), 17);
+        assert!(counters::barrier_syncs() >= syncs0 + 17);
+        assert!(counters::barrier_reductions() >= reds0 + 17);
+    }
+
+    #[test]
+    fn converges_to_the_true_solution() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 4);
+        let (arc, pc, _) = setup(&a, Preconditioner::Jacobi, 8);
+        let mut st = PipeState::prime(&a, &b, None, &pc).unwrap();
+        let rr0 = st.rr;
+        let mut pool = PipePool::spawn(arc, pc, 8, 2).unwrap();
+        let run = pool.run(&mut st, 1e-14 * rr0, 10_000).unwrap();
+        assert!(run.error.is_none(), "{:?}", run.error);
+        assert!(run.iters < 10_000, "converged early");
+        let mut ax = vec![0.0; a.n_rows];
+        a.spmv_gold(&st.x, &mut ax);
+        let err = b.iter().zip(&ax).map(|(bi, ai)| (bi - ai).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-5, "true residual {err}");
+    }
+
+    #[test]
+    fn non_positive_definite_is_a_collective_error() {
+        let neg = Csr::from_coo(4, 4, (0..4).map(|i| (i, i, -1.0)).collect()).unwrap();
+        let b = vec![1.0; 4];
+        let blocks = partition(4, 2);
+        let pc = Precond::build(Preconditioner::None, &neg, &blocks).unwrap();
+        let mut st = PipeState::prime(&neg, &b, None, &pc).unwrap();
+        // serial and pooled agree on the error and the iteration count
+        let mut st2 = st.clone();
+        let srun = advance_serial(&neg, &blocks, &pc, &mut st2, 0.0, 10);
+        assert_eq!(srun.iters, 0);
+        let smsg = srun.error.expect("serial must fail");
+        assert!(smsg.contains("positive definite"), "{smsg}");
+        let mut pool = PipePool::spawn(Arc::new(neg), Arc::new(pc), 2, 2).unwrap();
+        let prun = pool.run(&mut st, 0.0, 10).unwrap();
+        assert_eq!(prun.iters, 0);
+        assert_eq!(prun.error.as_deref(), Some(smsg.as_str()));
+        // the pool survives the collective break
+        let again = pool.run(&mut st, f64::MAX, 1).unwrap();
+        assert!(again.error.is_none());
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let a = gen::poisson2d(6);
+        let (arc, pc, _) = setup(&a, Preconditioner::None, 4);
+        let pool = PipePool::spawn(arc, pc, 4, 4).unwrap();
+        let weak = pool.shared_weak();
+        drop(pool);
+        assert_eq!(weak.strong_count(), 0, "workers not joined on drop");
+    }
+}

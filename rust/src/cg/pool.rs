@@ -134,10 +134,11 @@ impl<T> SharedBuf<T> {
 #[derive(Clone, Copy)]
 enum Cmd {
     Idle,
-    /// Run up to `iters` iterations from recurrence state `rr`, stopping
-    /// early once `rr <= threshold` (or `rr <= 0`, the exact-solution
-    /// short-circuit of the serial path).
-    Run { iters: usize, rr: f64, threshold: f64 },
+    /// Run up to `iters` iterations from recurrence state `rr` (and
+    /// `rz = r·z`, equal to `rr` for the identity preconditioner),
+    /// stopping early once `rr <= threshold` (or `rr <= 0`, the
+    /// exact-solution short-circuit of the serial path).
+    Run { iters: usize, rr: f64, rz: f64, threshold: f64 },
 }
 
 /// What one `Run` produced. Every worker computes identical values; worker
@@ -146,6 +147,7 @@ enum Cmd {
 struct Outcome {
     iters: usize,
     rr: f64,
+    rz: f64,
     error: Option<String>,
 }
 
@@ -178,12 +180,18 @@ impl Control {
 struct Shared {
     a: Arc<Csr>,
     plan: MergePlan,
+    /// Row-local preconditioner; identity for classic unpreconditioned
+    /// CG, in which case `z` is untouched and the original one-loop
+    /// pass-B arithmetic runs byte-for-byte.
+    pc: Arc<crate::cg::precond::Precond>,
     /// Row blocks of the deterministic reduction (and of vector-update
     /// ownership): `partition(n, parts)`, identical to the serial path.
     blocks: Vec<(usize, usize)>,
     x: SharedBuf<f64>,
     r: SharedBuf<f64>,
     p: SharedBuf<f64>,
+    /// `z = M⁻¹ r`, resident like the rest (preconditioned pools only).
+    z: SharedBuf<f64>,
     ap: SharedBuf<f64>,
     /// Per-share partial-row carries, written by share owners, applied in
     /// share order by row owners (the serial fixup order).
@@ -200,6 +208,9 @@ pub struct PoolRun {
     pub iters: usize,
     /// Final `r·r` recurrence value after `iters` iterations.
     pub rr: f64,
+    /// Final `r·z` recurrence value (equals `rr` for unpreconditioned
+    /// runs); feed it back into the next `run_preconditioned` to resume.
+    pub rz: f64,
     /// Collective solver error (not positive definite), detected
     /// identically by every worker before any state update of the failing
     /// iteration — mirroring the serial `step()` error point.
@@ -231,6 +242,25 @@ impl CgPool {
     /// to `available_parallelism`; the effective worker count is clamped
     /// to the share/block counts so no worker is idle by construction.
     pub fn spawn(a: Arc<Csr>, plan: MergePlan, threads: usize) -> Result<Self> {
+        let blocks = partition(a.n_rows, plan.parts());
+        let pc = crate::cg::precond::Precond::build(
+            crate::cg::precond::Preconditioner::None,
+            &a,
+            &blocks,
+        )?;
+        Self::spawn_preconditioned(a, plan, threads, Arc::new(pc))
+    }
+
+    /// [`CgPool::spawn`] with a row-local preconditioner resident in the
+    /// workers (classic PCG: `z = M⁻¹ r` kept alongside x/r/p). Passing
+    /// the identity preserves the unpreconditioned arithmetic
+    /// byte-for-byte.
+    pub fn spawn_preconditioned(
+        a: Arc<Csr>,
+        plan: MergePlan,
+        threads: usize,
+        pc: Arc<crate::cg::precond::Precond>,
+    ) -> Result<Self> {
         if a.n_rows != a.n_cols {
             // x/p are indexed by column inside the share consumption: a
             // rectangular matrix would panic some workers mid-barrier
@@ -252,16 +282,21 @@ impl CgPool {
         let parts = plan.parts();
         let blocks = partition(n, parts);
         let workers = crate::util::resolve_workers(threads).min(parts).min(blocks.len());
+        // preconditioned pass B folds (r·z | r·r) through one combined
+        // generation, so those pools need two block ranges of slots
+        let width = if pc.is_identity() { blocks.len() } else { 2 * blocks.len() };
         let shared = Arc::new(Shared {
             carries: SharedBuf::new(vec![(0usize, 0.0f64); parts]),
-            barrier: GridBarrier::with_reduction(workers, blocks.len()),
+            barrier: GridBarrier::with_reduction(workers, width),
             blocks,
             x: SharedBuf::new(vec![0.0; n]),
             r: SharedBuf::new(vec![0.0; n]),
             p: SharedBuf::new(vec![0.0; n]),
+            z: SharedBuf::new(vec![0.0; n]),
             ap: SharedBuf::new(vec![0.0; n]),
             a,
             plan,
+            pc,
             ctl: Control {
                 state: Mutex::new(CtlState {
                     epoch: 0,
@@ -320,6 +355,14 @@ impl CgPool {
         self.shared.barrier.total_wait().as_secs_f64()
     }
 
+    /// Completed grid-barrier **reduction** generations — exact per-pool
+    /// (unlike the process-global counter), so tests can assert classic
+    /// CG's barriers-per-iteration invariant with equality: two
+    /// reductions (p·Ap, then r·z/r·r) per iteration.
+    pub fn barrier_reduction_generations(&self) -> u64 {
+        self.shared.barrier.reduction_generations()
+    }
+
     /// Run up to `iters` CG iterations on state (x, r, p, rr), stopping
     /// early when `rr <= threshold` (pass 0.0 for fixed-iteration /
     /// benchmark mode). State is copied into the resident buffers, the
@@ -337,8 +380,28 @@ impl CgPool {
         threshold: f64,
         iters: usize,
     ) -> Result<PoolRun> {
+        let mut z_scratch = vec![0.0; r.len()];
+        self.run_preconditioned(x, r, &mut z_scratch, p, rr, rr, threshold, iters)
+    }
+
+    /// Preconditioned [`CgPool::run`]: the resident state additionally
+    /// carries `z = M⁻¹ r` and the `rz = r·z` recurrence (pass `rz == rr`
+    /// and `z == r` for the identity). Same handshake, same
+    /// partial-progress semantics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_preconditioned(
+        &mut self,
+        x: &mut [f64],
+        r: &mut [f64],
+        z: &mut [f64],
+        p: &mut [f64],
+        rr: f64,
+        rz: f64,
+        threshold: f64,
+        iters: usize,
+    ) -> Result<PoolRun> {
         let n = self.shared.a.n_rows;
-        if x.len() != n || r.len() != n || p.len() != n {
+        if x.len() != n || r.len() != n || z.len() != n || p.len() != n {
             return Err(Error::Solver("pool state length mismatch".into()));
         }
         // SAFETY: workers are parked (previous completion handshake
@@ -347,12 +410,13 @@ impl CgPool {
         unsafe {
             self.shared.x.whole_mut().copy_from_slice(x);
             self.shared.r.whole_mut().copy_from_slice(r);
+            self.shared.z.whole_mut().copy_from_slice(z);
             self.shared.p.whole_mut().copy_from_slice(p);
         }
         {
             let mut g = self.shared.ctl.lock();
             g.epoch += 1;
-            g.cmd = Cmd::Run { iters, rr, threshold };
+            g.cmd = Cmd::Run { iters, rr, rz, threshold };
             g.finished = 0;
             g.outcome = Outcome::default(); // no stale error/iters carry over
             self.shared.ctl.cmd_cv.notify_all();
@@ -370,9 +434,15 @@ impl CgPool {
         unsafe {
             x.copy_from_slice(self.shared.x.whole());
             r.copy_from_slice(self.shared.r.whole());
+            z.copy_from_slice(self.shared.z.whole());
             p.copy_from_slice(self.shared.p.whole());
         }
-        Ok(PoolRun { iters: outcome.iters, rr: outcome.rr, error: outcome.error })
+        Ok(PoolRun {
+            iters: outcome.iters,
+            rr: outcome.rr,
+            rz: outcome.rz,
+            error: outcome.error,
+        })
     }
 
     #[cfg(test)]
@@ -420,7 +490,7 @@ fn worker_main(sh: &Shared, w: usize) {
         };
         match cmd {
             Cmd::Idle => {}
-            Cmd::Run { iters, rr, threshold } => {
+            Cmd::Run { iters, rr, rz, threshold } => {
                 // A panic inside the iteration loop would otherwise leave
                 // `finished` forever short and hang `run()`. Catching it
                 // lets a *collective* panic (all workers fail at the same
@@ -428,11 +498,12 @@ fn worker_main(sh: &Shared, w: usize) {
                 // bug takes) surface as an error; `spawn`'s plan/matrix
                 // validation closes the reachable asymmetric case.
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    iterate(sh, w, iters, rr, threshold)
+                    iterate(sh, w, iters, rr, rz, threshold)
                 }))
                 .unwrap_or_else(|_| Outcome {
                     iters: 0,
                     rr,
+                    rz,
                     error: Some(format!("pool worker {w} panicked during iterate")),
                 });
                 let mut g = sh.ctl.lock();
@@ -453,8 +524,21 @@ fn worker_main(sh: &Shared, w: usize) {
 
 /// The resident iteration loop of worker `w`. All workers execute the same
 /// control flow on identical scalars (see module docs, "Determinism"), so
-/// early breaks are collective and the barrier never deadlocks.
-fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) -> Outcome {
+/// early breaks are collective and the barrier never deadlocks. The
+/// identity-preconditioner path is the original unpreconditioned
+/// arithmetic, untouched; preconditioned pools branch into
+/// [`iterate_preconditioned`].
+fn iterate(
+    sh: &Shared,
+    w: usize,
+    max_iters: usize,
+    rr_in: f64,
+    rz_in: f64,
+    threshold: f64,
+) -> Outcome {
+    if !sh.pc.is_identity() {
+        return iterate_preconditioned(sh, w, max_iters, rr_in, rz_in, threshold);
+    }
     let workers = sh.barrier.participants();
     let parts = sh.plan.parts();
     let nblocks = sh.blocks.len();
@@ -583,7 +667,152 @@ fn iterate(sh: &Shared, w: usize, max_iters: usize, rr_in: f64, threshold: f64) 
         sh.barrier.sync();
     }
     // hot-path: end
-    Outcome { iters: done, rr, error }
+    Outcome { iters: done, rr, rz: rr, error }
+}
+
+/// Classic *preconditioned* CG iteration loop: same SpMV/carry phases as
+/// the identity path, but pass B runs the single-sourced
+/// [`crate::cg::classic_precond_block_pass`] (x/r update, `z = M⁻¹ r`,
+/// and the (r·z | r·r) partials) and folds both dot products through one
+/// combined reduction generation over the doubled slot width. Still two
+/// reductions and six barrier generations per iteration — pipelined CG
+/// ([`crate::cg::pipeline`]) is the one-reduction model.
+fn iterate_preconditioned(
+    sh: &Shared,
+    w: usize,
+    max_iters: usize,
+    rr_in: f64,
+    rz_in: f64,
+    threshold: f64,
+) -> Outcome {
+    let workers = sh.barrier.participants();
+    let parts = sh.plan.parts();
+    let nblocks = sh.blocks.len();
+    let (s_lo, s_hi) = (parts * w / workers, parts * (w + 1) / workers);
+    let (k_lo, k_hi) = (nblocks * w / workers, nblocks * (w + 1) / workers);
+    let row_lo = sh.blocks[k_lo].0;
+    let row_hi = {
+        let (s, l) = sh.blocks[k_hi - 1];
+        s + l
+    };
+
+    let mut rr = rr_in;
+    let mut rz = rz_in;
+    let mut done = 0usize;
+    let mut error = None;
+    // hot-path: begin -- the resident preconditioned CG loop: barrier
+    // sync + raw-pointer arithmetic per epoch, no allocation allowed
+    for _ in 0..max_iters {
+        if rr <= threshold || rr <= 0.0 {
+            break;
+        }
+        // -- fused pass A, part 1: consume my merge shares (SpMV) --------
+        // SAFETY: p is read-shared (no writer this phase); ap rows and
+        // carry slots are written through raw pointers, only by their
+        // share owner.
+        unsafe {
+            let p_v = sh.p.whole();
+            let ap = sh.ap.ptr();
+            let carries = sh.carries.ptr();
+            for i in s_lo..s_hi {
+                let c = merge::consume_share_raw(
+                    &sh.a,
+                    p_v,
+                    ap,
+                    sh.plan.shares[i],
+                    sh.plan.shares[i + 1],
+                );
+                carries.add(i).write(c);
+            }
+        }
+        sh.barrier.sync();
+        // -- fused pass A, part 2: carry fixup + partial p·Ap ------------
+        // SAFETY: carries are read-shared now; each worker touches only ap
+        // indices it owns (row_lo..row_hi).
+        unsafe {
+            let p_v = sh.p.whole();
+            let ap = sh.ap.ptr();
+            for &(row, carry) in sh.carries.whole() {
+                if row >= row_lo && row < row_hi && carry != 0.0 {
+                    ap.add(row).write(ap.add(row).read() + carry);
+                }
+            }
+            for k in k_lo..k_hi {
+                let (s, l) = sh.blocks[k];
+                // SAFETY: ap has no writer this phase (fixups above are
+                // barrier-ordered before the dot-product reads).
+                let part =
+                    crate::cg::block_partial(s, l, |i| p_v[i] * unsafe { ap.add(i).read() });
+                sh.barrier.put(k, part);
+            }
+        }
+        // the slot width is 2*nblocks here, so the p·Ap fold reads only
+        // its own block range (not the stale r·r half)
+        sh.barrier.sync_reduce();
+        let pap = sh.barrier.read_sum_range(0, nblocks);
+        sh.barrier.sync();
+        if !pap.is_finite() {
+            // lint: allow(hot-path-alloc) -- cold error exit: the format! runs once, right before the loop breaks
+            error = Some(format!("non-finite p·Ap ({pap}) at iteration {}", done + 1));
+            break;
+        }
+        if pap <= 0.0 {
+            // lint: allow(hot-path-alloc) -- cold error exit: the format! runs once, right before the loop breaks
+            error = Some(format!("matrix not positive definite (pAp={pap})"));
+            break;
+        }
+        let alpha = rz / pap;
+        // -- fused pass B, part 1: x/r update + z = M⁻¹r + (r·z | r·r) ---
+        // SAFETY: x/r/z writes go through raw pointers inside our rows
+        // (the preconditioner is row-local by construction); p and ap
+        // have no writer this phase.
+        unsafe {
+            let x = sh.x.ptr();
+            let r = sh.r.ptr();
+            let z = sh.z.ptr();
+            let p_v = sh.p.whole();
+            let ap = sh.ap.whole();
+            for k in k_lo..k_hi {
+                let (s, l) = sh.blocks[k];
+                let (prz, prr) = crate::cg::classic_precond_block_pass(
+                    &sh.pc, s, l, alpha, p_v, ap, x, r, z,
+                );
+                sh.barrier.put(k, prz);
+                sh.barrier.put(nblocks + k, prr);
+            }
+        }
+        // one combined generation folds both recurrences in slot order
+        sh.barrier.sync_reduce();
+        let rz_new = sh.barrier.read_sum_range(0, nblocks);
+        let rr_new = sh.barrier.read_sum_range(nblocks, 2 * nblocks);
+        sh.barrier.sync();
+        if !rz_new.is_finite() || !rr_new.is_finite() {
+            // lint: allow(hot-path-alloc) -- cold error exit: the format! runs once, right before the loop breaks
+            error = Some(format!(
+                "non-finite preconditioned reduction (r·z={rz_new}, r·r={rr_new}) at iteration {}",
+                done + 1
+            ));
+            break;
+        }
+        let beta = rz_new / rz;
+        // -- fused pass B, part 2: p = z + beta p (still resident rows) --
+        // SAFETY: p writes go through the raw pointer inside our rows; z
+        // has no writer this phase.
+        unsafe {
+            let p_v = sh.p.ptr();
+            let z = sh.z.whole();
+            for i in row_lo..row_hi {
+                p_v.add(i).write(z[i] + beta * p_v.add(i).read());
+            }
+        }
+        rr = rr_new;
+        rz = rz_new;
+        done += 1;
+        // next iteration's SpMV reads p globally: wait for all p writes
+        sh.barrier.sync();
+    }
+    // hot-path: end
+    Outcome { iters: done, rr, rz, error }
 }
 
 /// Best-effort CPU pinning hook (thread-per-core). A production deployment
@@ -685,6 +914,115 @@ mod tests {
         assert_eq!(one_rr.to_bits(), res_rr.to_bits());
         // resumed runs reuse the same resident workers: one spawn batch
         assert_eq!(spawned, 4);
+    }
+
+    /// Serial classic-PCG reference sharing the pooled arithmetic
+    /// ([`crate::cg::classic_precond_block_pass`]) and fold order.
+    #[allow(clippy::type_complexity)]
+    fn serial_pcg(
+        a: &Csr,
+        b: &[f64],
+        spec: crate::cg::precond::Preconditioner,
+        parts: usize,
+        chunks: &[usize],
+    ) -> (Vec<f64>, f64, f64) {
+        let n = a.n_rows;
+        let plan = MergePlan::new(a, parts);
+        let blocks = partition(n, parts);
+        let pc = crate::cg::precond::Precond::build(spec, a, &blocks).unwrap();
+        let mut x = vec![0.0; n];
+        let mut r = b.to_vec();
+        let mut z = vec![0.0; n];
+        pc.apply(&r, &mut z);
+        let mut p = z.clone();
+        let mut ap = vec![0.0; n];
+        let mut rr: f64 = b.iter().map(|v| v * v).sum();
+        let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+        for &c in chunks {
+            for _ in 0..c {
+                if rr <= 0.0 {
+                    break;
+                }
+                merge::spmv(a, &plan, &p, &mut ap);
+                let mut pap = 0.0;
+                for &(s, l) in &blocks {
+                    pap += crate::cg::block_partial(s, l, |i| p[i] * ap[i]);
+                }
+                let alpha = rz / pap;
+                let mut rz_new = 0.0;
+                let mut rr_new = 0.0;
+                for &(s, l) in &blocks {
+                    // SAFETY: single-threaded; the Vec pointers cover n
+                    // rows and nothing else aliases them.
+                    let (prz, prr) = unsafe {
+                        crate::cg::classic_precond_block_pass(
+                            &pc,
+                            s,
+                            l,
+                            alpha,
+                            &p,
+                            &ap,
+                            x.as_mut_ptr(),
+                            r.as_mut_ptr(),
+                            z.as_mut_ptr(),
+                        )
+                    };
+                    rz_new += prz;
+                    rr_new += prr;
+                }
+                let beta = rz_new / rz;
+                for i in 0..n {
+                    p[i] = z[i] + beta * p[i];
+                }
+                rr = rr_new;
+                rz = rz_new;
+            }
+        }
+        (x, rr, rz)
+    }
+
+    #[test]
+    fn preconditioned_pool_is_bit_identical_to_serial_pcg() {
+        let a = gen::poisson2d(14);
+        let b = gen::rhs(a.n_rows, 5);
+        let n = a.n_rows;
+        for spec in [
+            crate::cg::precond::Preconditioner::Jacobi,
+            crate::cg::precond::Preconditioner::BlockJacobi { block: 5 },
+        ] {
+            let (want_x, want_rr, want_rz) = serial_pcg(&a, &b, spec, 8, &[20]);
+            for threads in [1, 2, 3, 8] {
+                let blocks = partition(n, 8);
+                let pc = crate::cg::precond::Precond::build(spec, &a, &blocks).unwrap();
+                let plan = MergePlan::new(&a, 8);
+                let mut pool = CgPool::spawn_preconditioned(
+                    Arc::new(a.clone()),
+                    plan,
+                    threads,
+                    Arc::new(pc.clone()),
+                )
+                .unwrap();
+                let mut x = vec![0.0; n];
+                let mut r = b.clone();
+                let mut z = vec![0.0; n];
+                pc.apply(&r, &mut z);
+                let mut p = z.clone();
+                let mut rr: f64 = b.iter().map(|v| v * v).sum();
+                let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+                // resumed chunks must compose exactly like one shot
+                for c in [7, 9, 4] {
+                    let run = pool
+                        .run_preconditioned(&mut x, &mut r, &mut z, &mut p, rr, rz, 0.0, c)
+                        .unwrap();
+                    assert!(run.error.is_none(), "{:?}", run.error);
+                    rr = run.rr;
+                    rz = run.rz;
+                }
+                assert_eq!(x, want_x, "{} threads={threads}", spec.name());
+                assert_eq!(rr.to_bits(), want_rr.to_bits(), "threads={threads}");
+                assert_eq!(rz.to_bits(), want_rz.to_bits(), "threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,366 @@
+//! Preconditioners for the CG solvers: Jacobi and block-Jacobi.
+//!
+//! Both preconditioners are **row-local by construction**, which is what
+//! lets them run *inside* the fused persistent passes (pool workers and
+//! farm shards apply them to their own rows only, with no extra barrier):
+//!
+//! * Jacobi — `M⁻¹ = diag(A)⁻¹`; applying it touches one row at a time.
+//! * Block-Jacobi — dense Cholesky solves over principal sub-blocks of
+//!   `A`. The sub-blocks are carved **within** each reduction block of
+//!   `partition(n, parts)` (never straddling one), so every sub-block is
+//!   owned by exactly one pool worker / farm shard and the apply needs no
+//!   cross-owner reads. As a corollary the operator `M⁻¹` itself depends
+//!   on `parts` (the deterministic-reduction block count) but **not** on
+//!   the worker count — the same property the dot-product folds have —
+//!   so preconditioned iterates stay bit-identical at every thread count.
+//!
+//! The resolved operator ([`Precond`]) is built once per `prepare` and
+//! shared read-only by the resident workers; the spec ([`Preconditioner`])
+//! is the session-facing knob (`CgSessionBuilder::preconditioner`).
+
+use crate::error::{Error, Result};
+use crate::sparse::csr::Csr;
+
+/// Session-facing preconditioner selection (the spec; resolve with
+/// [`Precond::build`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Preconditioner {
+    /// Identity: plain CG. The resolved apply is a copy, so the pipelined
+    /// recurrences run unchanged (u = r, m = w).
+    #[default]
+    None,
+    /// Diagonal scaling `M = diag(A)`.
+    Jacobi,
+    /// Dense Cholesky solves over principal sub-blocks of at most `block`
+    /// rows, carved within each reduction block.
+    BlockJacobi {
+        /// Maximum sub-block size (rows); must be >= 1.
+        block: usize,
+    },
+}
+
+impl Preconditioner {
+    /// Short name for reports/logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Preconditioner::None => "none",
+            Preconditioner::Jacobi => "jacobi",
+            Preconditioner::BlockJacobi { .. } => "block-jacobi",
+        }
+    }
+
+    /// Extra n-length vector passes per iteration the apply costs, for
+    /// `CpuCg::bytes_per_iter` accounting: Jacobi streams `minv` once,
+    /// block-Jacobi's two triangular solves stream the factors twice.
+    pub fn extra_passes(&self) -> f64 {
+        match self {
+            Preconditioner::None => 0.0,
+            Preconditioner::Jacobi => 1.0,
+            Preconditioner::BlockJacobi { .. } => 2.0,
+        }
+    }
+}
+
+/// One factored sub-block of the block-Jacobi operator: rows
+/// `[start, start + size)`, lower-triangular Cholesky factor `L` stored
+/// row-major (`size * size`, upper half unused).
+#[derive(Clone, Debug)]
+struct CholBlock {
+    start: usize,
+    size: usize,
+    l: Vec<f64>,
+}
+
+/// A resolved, row-local preconditioner operator. Cheap to share
+/// (`Arc<Precond>`) and immutable after construction.
+#[derive(Clone, Debug)]
+pub struct Precond {
+    spec: Preconditioner,
+    /// Jacobi: 1/diag(A); empty otherwise.
+    minv: Vec<f64>,
+    /// Block-Jacobi: factored sub-blocks sorted by `start`, tiling
+    /// exactly the row ranges of the reduction blocks; empty otherwise.
+    chol: Vec<CholBlock>,
+}
+
+impl Precond {
+    /// Resolve `spec` against `a` and the deterministic reduction blocks
+    /// (`partition(n, parts)` — the same blocks the dot-product folds
+    /// use). Fails on a non-positive diagonal (Jacobi) or a Cholesky
+    /// breakdown (block-Jacobi), both of which certify the matrix is not
+    /// SPD before the solver ever runs.
+    pub fn build(spec: Preconditioner, a: &Csr, blocks: &[(usize, usize)]) -> Result<Self> {
+        match spec {
+            Preconditioner::None => Ok(Self { spec, minv: Vec::new(), chol: Vec::new() }),
+            Preconditioner::Jacobi => {
+                let mut minv = vec![0.0; a.n_rows];
+                for (i, m) in minv.iter_mut().enumerate() {
+                    let d = diag_of(a, i);
+                    if !(d > 0.0) {
+                        return Err(Error::Solver(format!(
+                            "Jacobi preconditioner needs a positive diagonal (row {i} has {d})"
+                        )));
+                    }
+                    *m = 1.0 / d;
+                }
+                Ok(Self { spec, minv, chol: Vec::new() })
+            }
+            Preconditioner::BlockJacobi { block } => {
+                if block == 0 {
+                    return Err(Error::Solver(
+                        "block-Jacobi block size must be at least 1".into(),
+                    ));
+                }
+                let mut chol = Vec::new();
+                for &(s, l) in blocks {
+                    let mut off = 0;
+                    while off < l {
+                        let size = block.min(l - off);
+                        chol.push(factor_block(a, s + off, size)?);
+                        off += size;
+                    }
+                }
+                Ok(Self { spec, minv: Vec::new(), chol })
+            }
+        }
+    }
+
+    /// The spec this operator was built from.
+    pub fn spec(&self) -> Preconditioner {
+        self.spec
+    }
+
+    /// Is this the identity (no preconditioning)?
+    pub fn is_identity(&self) -> bool {
+        matches!(self.spec, Preconditioner::None)
+    }
+
+    /// Apply `dst[s..s+l] = (M⁻¹ src)[s..s+l]` where `[s, s+l)` is a
+    /// union of whole reduction blocks (the caller's owned rows). Reads
+    /// only `src[s..s+l]` and writes only `dst[s..s+l]` — the row-local
+    /// contract that lets concurrent owners apply disjoint ranges.
+    ///
+    /// # Safety
+    ///
+    /// `src` and `dst` must be valid for the full vector length, the
+    /// caller must own rows `[s, s+l)` of `dst` exclusively, and no
+    /// concurrent writer may touch `src[s..s+l]` during the call.
+    pub unsafe fn apply_raw(&self, src: *const f64, dst: *mut f64, s: usize, l: usize) {
+        match self.spec {
+            Preconditioner::None => {
+                for i in s..s + l {
+                    dst.add(i).write(src.add(i).read());
+                }
+            }
+            Preconditioner::Jacobi => {
+                for i in s..s + l {
+                    dst.add(i).write(self.minv[i] * src.add(i).read());
+                }
+            }
+            Preconditioner::BlockJacobi { .. } => {
+                // sub-blocks tile the reduction blocks exactly, so the
+                // partition-point search finds the caller's sub-block run
+                let lo = self.chol.partition_point(|b| b.start < s);
+                let hi = self.chol.partition_point(|b| b.start < s + l);
+                for b in &self.chol[lo..hi] {
+                    solve_block(b, src, dst);
+                }
+            }
+        }
+    }
+
+    /// Safe whole-vector apply for the serial paths: `dst = M⁻¹ src`.
+    pub fn apply(&self, src: &[f64], dst: &mut [f64]) {
+        // SAFETY: exclusive &mut dst and shared &src uphold the raw
+        // contract trivially for the full row range on one thread.
+        unsafe { self.apply_raw(src.as_ptr(), dst.as_mut_ptr(), 0, src.len()) }
+    }
+}
+
+fn diag_of(a: &Csr, i: usize) -> f64 {
+    let (cols, vals) = a.row(i);
+    match cols.binary_search(&i) {
+        Ok(k) => vals[k],
+        Err(_) => 0.0,
+    }
+}
+
+/// Extract the dense principal sub-block `A[start..start+size)²` and
+/// Cholesky-factor it in place (lower triangle).
+fn factor_block(a: &Csr, start: usize, size: usize) -> Result<CholBlock> {
+    let mut m = vec![0.0; size * size];
+    for li in 0..size {
+        let (cols, vals) = a.row(start + li);
+        for (&c, &v) in cols.iter().zip(vals) {
+            if c >= start && c < start + size {
+                m[li * size + (c - start)] = v;
+            }
+        }
+    }
+    // in-place Cholesky: m becomes L (row-major, lower)
+    for j in 0..size {
+        let mut d = m[j * size + j];
+        for k in 0..j {
+            d -= m[j * size + k] * m[j * size + k];
+        }
+        if !(d > 0.0) || !d.is_finite() {
+            return Err(Error::Solver(format!(
+                "block-Jacobi Cholesky breakdown at row {} (pivot {d}): matrix not positive definite",
+                start + j
+            )));
+        }
+        let dj = d.sqrt();
+        m[j * size + j] = dj;
+        for i in j + 1..size {
+            let mut s = m[i * size + j];
+            for k in 0..j {
+                s -= m[i * size + k] * m[j * size + k];
+            }
+            m[i * size + j] = s / dj;
+        }
+    }
+    Ok(CholBlock { start, size, l: m })
+}
+
+/// Solve `L Lᵀ z = src_block` for one factored sub-block, writing `z`
+/// into `dst` rows. Deterministic: fixed forward/backward substitution
+/// order, no data-dependent branching.
+///
+/// # Safety
+///
+/// Caller (via [`Precond::apply_raw`]) guarantees exclusive ownership of
+/// the block's `dst` rows and no concurrent writer of its `src` rows.
+unsafe fn solve_block(b: &CholBlock, src: *const f64, dst: *mut f64) {
+    let n = b.size;
+    // forward solve L y = src, staging y in dst rows
+    for i in 0..n {
+        let mut acc = src.add(b.start + i).read();
+        for k in 0..i {
+            acc -= b.l[i * n + k] * dst.add(b.start + k).read();
+        }
+        dst.add(b.start + i).write(acc / b.l[i * n + i]);
+    }
+    // backward solve Lᵀ z = y, in place
+    for i in (0..n).rev() {
+        let mut acc = dst.add(b.start + i).read();
+        for k in i + 1..n {
+            acc -= b.l[k * n + i] * dst.add(b.start + k).read();
+        }
+        dst.add(b.start + i).write(acc / b.l[i * n + i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::stencil::parallel::partition;
+
+    fn spmv_dense(a: &Csr, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; a.n_rows];
+        a.spmv_gold(x, &mut y);
+        y
+    }
+
+    #[test]
+    fn jacobi_inverts_the_diagonal() {
+        let a = gen::poisson2d(6);
+        let blocks = partition(a.n_rows, 4);
+        let pc = Precond::build(Preconditioner::Jacobi, &a, &blocks).unwrap();
+        let src: Vec<f64> = (0..a.n_rows).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut dst = vec![0.0; a.n_rows];
+        pc.apply(&src, &mut dst);
+        for i in 0..a.n_rows {
+            assert_eq!(dst[i].to_bits(), (src[i] * 0.25).to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn block_jacobi_solves_each_subblock_exactly() {
+        let a = gen::clustered_spd(96, 5, 8, 11).unwrap();
+        let blocks = partition(a.n_rows, 4);
+        let pc = Precond::build(Preconditioner::BlockJacobi { block: 6 }, &a, &blocks).unwrap();
+        let src = gen::rhs(a.n_rows, 3);
+        let mut z = vec![0.0; a.n_rows];
+        pc.apply(&src, &mut z);
+        // check M z == src block-by-block: M is block-diagonal, so A's
+        // sub-block times z's sub-block must reproduce src's sub-block
+        for b in &pc.chol {
+            for li in 0..b.size {
+                let row = b.start + li;
+                let (cols, vals) = a.row(row);
+                let mut acc = 0.0;
+                for (&c, &v) in cols.iter().zip(vals) {
+                    if c >= b.start && c < b.start + b.size {
+                        acc += v * z[c];
+                    }
+                }
+                assert!((acc - src[row]).abs() < 1e-9, "row {row}: {acc} vs {}", src[row]);
+            }
+        }
+    }
+
+    #[test]
+    fn subblocks_never_straddle_reduction_blocks() {
+        let a = gen::poisson2d(7); // n = 49, awkward split
+        let blocks = partition(a.n_rows, 5);
+        let pc = Precond::build(Preconditioner::BlockJacobi { block: 8 }, &a, &blocks).unwrap();
+        for cb in &pc.chol {
+            let inside = blocks
+                .iter()
+                .any(|&(s, l)| cb.start >= s && cb.start + cb.size <= s + l);
+            assert!(inside, "sub-block at {} size {} straddles", cb.start, cb.size);
+        }
+        // and they tile the whole index space
+        let total: usize = pc.chol.iter().map(|b| b.size).sum();
+        assert_eq!(total, a.n_rows);
+    }
+
+    #[test]
+    fn identity_apply_is_a_copy_and_row_local_ranges_compose() {
+        let a = gen::tridiag(20);
+        let blocks = partition(20, 4);
+        let pc = Precond::build(Preconditioner::None, &a, &blocks).unwrap();
+        let src = gen::rhs(20, 5);
+        let mut dst = vec![9.0; 20];
+        // apply per reduction block, as the pool workers do
+        for &(s, l) in &blocks {
+            // SAFETY: single-threaded; disjoint row ranges per call.
+            unsafe { pc.apply_raw(src.as_ptr(), dst.as_mut_ptr(), s, l) }
+        }
+        assert_eq!(src, dst);
+    }
+
+    #[test]
+    fn non_spd_inputs_are_rejected_at_build() {
+        let blocks = partition(2, 1);
+        let bad = Csr::from_coo(2, 2, vec![(0, 0, -1.0), (1, 1, 2.0)]).unwrap();
+        let err = Precond::build(Preconditioner::Jacobi, &bad, &blocks).unwrap_err();
+        assert!(format!("{err}").contains("positive diagonal"), "{err}");
+        let err =
+            Precond::build(Preconditioner::BlockJacobi { block: 2 }, &bad, &blocks).unwrap_err();
+        assert!(format!("{err}").contains("not positive definite"), "{err}");
+        let err = Precond::build(Preconditioner::BlockJacobi { block: 0 }, &bad, &blocks)
+            .unwrap_err();
+        assert!(format!("{err}").contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn block_jacobi_beats_jacobi_on_a_coupled_block() {
+        // a 2x2-coupled SPD matrix: block-Jacobi with block >= 2 inverts
+        // it exactly, Jacobi does not
+        let a = Csr::from_coo(
+            2,
+            2,
+            vec![(0, 0, 4.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 3.0)],
+        )
+        .unwrap();
+        let blocks = partition(2, 1);
+        let pc = Precond::build(Preconditioner::BlockJacobi { block: 2 }, &a, &blocks).unwrap();
+        let src = vec![1.0, 2.0];
+        let mut z = vec![0.0; 2];
+        pc.apply(&src, &mut z);
+        let back = spmv_dense(&a, &z);
+        assert!((back[0] - 1.0).abs() < 1e-12 && (back[1] - 2.0).abs() < 1e-12, "{back:?}");
+    }
+}

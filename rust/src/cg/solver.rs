@@ -230,6 +230,45 @@ pub fn solve_pooled(a: &Csr, b: &[f64], opts: &CgOptions) -> Result<CgResult> {
     })
 }
 
+/// Pipelined preconditioned CG ([`crate::cg::pipeline`]): one fused
+/// vector pass and **one** reduction point per iteration. Serial here —
+/// this is the bit-identity reference the pooled ([`PipePool`]) and
+/// farm paths are validated against; the pooled variant is reached
+/// through `ExecMode::Pipelined` in the session layer. `threaded` is
+/// ignored (use the session/pool path for parallel pipelined CG).
+pub fn solve_pipelined(
+    a: &Csr,
+    b: &[f64],
+    precond: crate::cg::precond::Preconditioner,
+    opts: &CgOptions,
+) -> Result<CgResult> {
+    use crate::cg::pipeline::{advance_serial, PipeState};
+    use crate::cg::precond::Precond;
+    validate(a, b)?;
+    let blocks = crate::stencil::parallel::partition(a.n_rows, opts.parts);
+    let pc = Precond::build(precond, a, &blocks)?;
+    let t0 = std::time::Instant::now();
+    let mut st = PipeState::prime(a, b, None, &pc)?;
+    let rr0 = st.rr;
+    let threshold = opts.tol * opts.tol * rr0;
+    let run = advance_serial(a, &blocks, &pc, &mut st, threshold, opts.max_iters);
+    if let Some(msg) = run.error {
+        return Err(Error::Solver(msg));
+    }
+    Ok(CgResult {
+        x: st.x,
+        iters: run.iters,
+        rr_final: st.rr,
+        rr0,
+        converged: st.rr <= threshold,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        // x/r/u/w/p/s/q/z/m fused into one sweep + the m' solve + the
+        // SpMV read of m ≈ 3 effective vector passes
+        vector_passes_per_iter: 3.0 + pc.spec().extra_passes(),
+        plan_searches: 0,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -335,6 +374,27 @@ mod tests {
         a.spmv_gold(&conv.x, &mut ax);
         if let Prop::Fail(m) = allclose(&ax, &b, 1e-5, 1e-5) {
             panic!("{m}");
+        }
+    }
+
+    #[test]
+    fn pipelined_reaches_the_same_solution() {
+        use crate::cg::precond::Preconditioner;
+        let a = gen::poisson2d(14);
+        let b = gen::rhs(a.n_rows, 3);
+        let opts = CgOptions { max_iters: 5000, tol: 1e-10, ..Default::default() };
+        let classic = solve_persistent(&a, &b, &opts).unwrap();
+        for spec in [
+            Preconditioner::None,
+            Preconditioner::Jacobi,
+            Preconditioner::BlockJacobi { block: 4 },
+        ] {
+            let piped = solve_pipelined(&a, &b, spec, &opts).unwrap();
+            assert!(piped.converged, "{} did not converge", spec.name());
+            if let Prop::Fail(m) = allclose(&classic.x, &piped.x, 1e-6, 1e-6) {
+                panic!("{}: {m}", spec.name());
+            }
+            assert_eq!(piped.plan_searches, 0, "pipelined SpMV is row-partitioned");
         }
     }
 

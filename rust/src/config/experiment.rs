@@ -33,16 +33,20 @@ impl StencilJob {
     }
 }
 
-/// Parse a mode list like "host-loop,persistent" or "all".
+/// Parse a mode list like "host-loop,persistent" or "all". These are
+/// stencil experiment configs, so "all" means the three paper modes —
+/// `Pipelined` is CG-only and must be named explicitly (stencil drivers
+/// reject it with a clear error).
 pub fn parse_modes(s: &str) -> Result<Vec<ExecMode>> {
     if s == "all" {
-        return Ok(ExecMode::all().to_vec());
+        return Ok(vec![ExecMode::HostLoop, ExecMode::HostLoopResident, ExecMode::Persistent]);
     }
     s.split(',')
         .map(|m| match m.trim() {
             "host-loop" => Ok(ExecMode::HostLoop),
             "host-loop-resident" | "resident" => Ok(ExecMode::HostLoopResident),
             "persistent" | "perks" => Ok(ExecMode::Persistent),
+            "pipelined" | "pipe" => Ok(ExecMode::Pipelined),
             other => Err(Error::Config(format!("unknown mode {other:?}"))),
         })
         .collect()

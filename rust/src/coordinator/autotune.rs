@@ -182,11 +182,12 @@ mod tests {
             ExecMode::HostLoop => 3.0,
             ExecMode::HostLoopResident => 2.0,
             ExecMode::Persistent => 1.0,
+            ExecMode::Pipelined => 0.5,
         };
         let choice = tune_exec_mode(&ExecMode::all(), |m| Ok(costs(m))).unwrap();
-        assert_eq!(choice.mode, ExecMode::Persistent);
-        assert_eq!(choice.cost, 1.0);
-        assert_eq!(choice.sweep.len(), 3);
+        assert_eq!(choice.mode, ExecMode::Pipelined);
+        assert_eq!(choice.cost, 0.5);
+        assert_eq!(choice.sweep.len(), 4);
         assert!(tune_exec_mode(&[], |_| Ok(0.0)).is_err());
         // probe failures propagate
         assert!(tune_exec_mode(&[ExecMode::HostLoop], |_| {

@@ -25,6 +25,9 @@ use std::sync::{Barrier, Mutex};
 pub struct GridBarrier {
     inner: Barrier,
     generation: AtomicU64,
+    /// Reduction generations only ([`GridBarrier::sync_reduce`]) — the
+    /// per-barrier counter behind the barriers-per-iteration invariant.
+    reductions: AtomicU64,
     participants: usize,
     /// Cumulative nanoseconds threads spent waiting (summed over threads).
     wait_ns: AtomicU64,
@@ -46,6 +49,7 @@ impl GridBarrier {
         Self {
             inner: Barrier::new(participants),
             generation: AtomicU64::new(0),
+            reductions: AtomicU64::new(0),
             participants,
             wait_ns: AtomicU64::new(0),
             slots: (0..width).map(|_| AtomicU64::new(0)).collect(),
@@ -62,13 +66,7 @@ impl GridBarrier {
     /// process-wide [`crate::util::counters::barrier_syncs`] counter, the
     /// sync analog of the thread-spawn counter.
     pub fn sync(&self) -> u64 {
-        let t0 = std::time::Instant::now();
-        let res = self.inner.wait();
-        self.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        if res.is_leader() {
-            self.generation.fetch_add(1, Ordering::Relaxed);
-            crate::util::counters::note_barrier_syncs(1);
-        }
+        self.sync_is_leader();
         self.generation.load(Ordering::Relaxed)
     }
 
@@ -90,13 +88,53 @@ impl GridBarrier {
         self.slots[slot].store(value.to_bits(), Ordering::Release);
     }
 
+    /// Like [`GridBarrier::sync`], but the completed generation is a
+    /// **slot-ordered reduction generation**: every participant's `put`s
+    /// are published and will be folded after this sync. The leader
+    /// additionally reports the generation to
+    /// [`crate::util::counters::barrier_reductions`] — the counter behind
+    /// the barriers-per-iteration invariant (classic CG pays two
+    /// reduction generations per iteration, pipelined CG pays one).
+    pub fn sync_reduce(&self) -> u64 {
+        let led = self.sync_is_leader();
+        self.reductions.fetch_add(led, Ordering::Relaxed);
+        crate::util::counters::note_barrier_reductions(led);
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Completed **reduction** generations only (the `sync_reduce`
+    /// subset of [`GridBarrier::generations`]) — exact per barrier even
+    /// when other pools run concurrently, so tests assert the
+    /// barriers-per-iteration invariant with equality: classic CG pays
+    /// two reduction generations per iteration, pipelined CG pays one.
+    pub fn reduction_generations(&self) -> u64 {
+        self.reductions.load(Ordering::Relaxed)
+    }
+
+    /// `sync()` returning 1 exactly on the leader (0 elsewhere), so
+    /// leader-side accounting composes without re-deriving leadership.
+    fn sync_is_leader(&self) -> u64 {
+        let t0 = std::time::Instant::now();
+        let res = self.inner.wait();
+        self.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if res.is_leader() {
+            self.generation.fetch_add(1, Ordering::Relaxed);
+            crate::util::counters::note_barrier_syncs(1);
+            1
+        } else {
+            0
+        }
+    }
+
     /// Device-wide all-reduce: wait for every participant (so all `put`s
     /// are visible), fold **all** slots in slot-index order, then wait
     /// again so the slots may be reused by the next reduction. Every
     /// participant returns the same bit pattern, and the result does not
     /// depend on arrival order: the fold order is fixed by slot index.
+    /// The first sync is a reduction generation (see
+    /// [`GridBarrier::sync_reduce`]).
     pub fn sync_sum(&self) -> f64 {
-        self.sync();
+        self.sync_reduce();
         let acc = self.read_sum();
         self.sync();
         acc
@@ -112,8 +150,19 @@ impl GridBarrier {
     /// rewritten until every reader is done; `sync_sum` is exactly
     /// `sync(); read_sum(); sync()`.
     pub fn read_sum(&self) -> f64 {
+        self.read_sum_range(0, self.slots.len())
+    }
+
+    /// Fold reduction slots `[lo, hi)` in slot-index order without
+    /// synchronizing — the multi-dot variant of [`GridBarrier::read_sum`].
+    /// Callers that fold several logically distinct sums through one
+    /// barrier generation (the pipelined CG pool folds γ, δ and r·r out
+    /// of one `sync_reduce`) lay them out as disjoint slot ranges and
+    /// fold each range separately; the same `put`-before-fold protocol
+    /// as `read_sum` applies per range.
+    pub fn read_sum_range(&self, lo: usize, hi: usize) -> f64 {
         let mut acc = 0.0;
-        for s in &self.slots {
+        for s in &self.slots[lo..hi] {
             acc += f64::from_bits(s.load(Ordering::Acquire));
         }
         acc

@@ -17,10 +17,15 @@
 //! so the models are interchangeable in correctness and differ only in
 //! where the inter-step traffic goes — exactly the paper's claim.
 //!
+//! A fourth, CG-only model — `Pipelined` — lives in the session layer
+//! ([`crate::cg::pipeline`]): the pipelined/fused CG formulation with one
+//! grid-barrier reduction per iteration. The PJRT drivers below reject it
+//! (no pipelined artifact family exists), but the variant is defined here
+//! because `ExecMode` is the crate-wide execution-model vocabulary.
+//!
 //! The drivers here are the PJRT *engine*; the supported public entrypoint
 //! is [`crate::session::SessionBuilder`], which wraps them behind the
-//! backend-agnostic [`crate::session::Solver`] trait. `StencilDriver::new`
-//! and `CgDriver::new` remain as deprecated compatibility shims.
+//! backend-agnostic [`crate::session::Solver`] trait.
 
 use std::rc::Rc;
 
@@ -33,11 +38,20 @@ pub enum ExecMode {
     HostLoop,
     HostLoopResident,
     Persistent,
+    /// Pipelined CG (CG-only): the persistent model with the fused
+    /// Ghysels–Vanroose recurrences — one grid-barrier reduction per
+    /// iteration instead of two. Stencil drivers reject it.
+    Pipelined,
 }
 
 impl ExecMode {
-    pub fn all() -> [ExecMode; 3] {
-        [ExecMode::HostLoop, ExecMode::HostLoopResident, ExecMode::Persistent]
+    pub fn all() -> [ExecMode; 4] {
+        [
+            ExecMode::HostLoop,
+            ExecMode::HostLoopResident,
+            ExecMode::Persistent,
+            ExecMode::Pipelined,
+        ]
     }
 
     pub fn name(self) -> &'static str {
@@ -45,16 +59,31 @@ impl ExecMode {
             ExecMode::HostLoop => "host-loop",
             ExecMode::HostLoopResident => "host-loop-resident",
             ExecMode::Persistent => "persistent (PERKS)",
+            ExecMode::Pipelined => "pipelined",
+        }
+    }
+
+    /// Stable machine-readable spelling — the `"mode"` key of every
+    /// `BENCH_*.json` artifact, matched literally by `bench_check`.
+    /// [`ExecMode::parse`] round-trips every value; [`ExecMode::name`] is
+    /// the human display form and may carry annotations.
+    pub fn key(self) -> &'static str {
+        match self {
+            ExecMode::HostLoop => "host-loop",
+            ExecMode::HostLoopResident => "host-loop-resident",
+            ExecMode::Persistent => "persistent",
+            ExecMode::Pipelined => "pipelined",
         }
     }
 
     /// Parse a CLI spelling of a mode. Accepts the short aliases used by
-    /// the `perks` binary (`resident`, `perks`).
+    /// the `perks` binary (`resident`, `perks`, `pipe`).
     pub fn parse(s: &str) -> Option<ExecMode> {
         match s {
             "host-loop" => Some(ExecMode::HostLoop),
             "resident" | "host-loop-resident" => Some(ExecMode::HostLoopResident),
             "persistent" | "perks" => Some(ExecMode::Persistent),
+            "pipelined" | "pipe" => Some(ExecMode::Pipelined),
             _ => None,
         }
     }
@@ -96,14 +125,6 @@ pub struct StencilDriver {
 }
 
 impl StencilDriver {
-    /// Compatibility shim for the pre-`session` API.
-    #[deprecated(
-        note = "construct a stencil session via perks::session::SessionBuilder instead"
-    )]
-    pub fn new(rt: &Runtime, bench: &str, interior: &str, dtype: &str) -> Result<Self> {
-        Self::from_runtime(rt, bench, interior, dtype)
-    }
-
     /// Look up the artifact family for `bench`/`interior`/`dtype` in the
     /// runtime manifest. `interior` like "128x128", dtype "f32"|"f64".
     pub(crate) fn from_runtime(
@@ -162,6 +183,9 @@ impl StencilDriver {
             ExecMode::HostLoop => self.run_host_loop(x0, steps),
             ExecMode::HostLoopResident => self.run_host_loop_resident(x0, steps),
             ExecMode::Persistent => self.run_persistent(x0, steps),
+            ExecMode::Pipelined => Err(Error::invalid(
+                "pipelined is a CG-only execution model; stencils have no dot-product pipeline",
+            )),
         }
     }
 
@@ -274,12 +298,6 @@ pub struct CgReport {
 }
 
 impl CgDriver {
-    /// Compatibility shim for the pre-`session` API.
-    #[deprecated(note = "construct a CG session via perks::session::SessionBuilder instead")]
-    pub fn new(rt: &Runtime, n: usize) -> Result<Self> {
-        Self::from_runtime(rt, n)
-    }
-
     pub(crate) fn from_runtime(rt: &Runtime, n: usize) -> Result<Self> {
         let step = rt.load(&format!("cg_step_n{n}"))?;
         let nnz = step.meta.int("nnz")?;
@@ -331,6 +349,13 @@ impl CgDriver {
         }
         let exe = match mode {
             ExecMode::Persistent => &self.perks,
+            ExecMode::Pipelined => {
+                // no pipelined artifact family exists; the CPU backend is
+                // the pipelined engine ([`crate::cg::pipeline`])
+                return Err(Error::invalid(
+                    "pipelined CG is not available on the PJRT backend",
+                ));
+            }
             _ => &self.step,
         };
         let chunk = match mode {
@@ -392,5 +417,23 @@ impl CgDriver {
             HostTensor::f32(&[self.n], b.to_vec()),
         ])?;
         Ok(out[0].as_f32()?[0] as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ExecMode;
+
+    /// `key()` is the BENCH-json vocabulary: stable, annotation-free, and
+    /// round-tripped by `parse` for every mode (unlike `name()`, whose
+    /// display form may carry annotations like "persistent (PERKS)").
+    #[test]
+    fn mode_keys_round_trip_and_stay_annotation_free() {
+        for mode in ExecMode::all() {
+            assert_eq!(ExecMode::parse(mode.key()), Some(mode));
+            assert!(!mode.key().contains(' '), "json key {:?} must be bare", mode.key());
+        }
+        assert_eq!(ExecMode::parse("pipe"), Some(ExecMode::Pipelined));
+        assert_eq!(ExecMode::parse("perks"), Some(ExecMode::Persistent));
     }
 }

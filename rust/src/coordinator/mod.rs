@@ -1,8 +1,8 @@
 //! Layer-3 coordinator: the PERKS execution model.
 //!
 //! * `executor` — host-loop vs persistent drivers over PJRT artifacts
-//!   (the engine behind `session::Backend::Pjrt`; construct through
-//!   `session::SessionBuilder`, the drivers' `new` shims are deprecated);
+//!   (the engine behind `session::Backend::Pjrt`; constructed only
+//!   through `session::SessionBuilder`);
 //! * `autotune` — occupancy, thread-count and execution-model tuners
 //!   (the machinery behind `session::ExecPolicy::Auto`);
 //! * `caching`  — the paper's §III-B caching policy engine;

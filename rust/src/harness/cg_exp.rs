@@ -178,13 +178,21 @@ pub fn modeled_cg_run(
     let state_bytes = (4 * rows * elem) as f64; // x, r, p, Ap
     let matrix_bytes = (nnz * (elem + 4) + (rows + 1) * 4) as f64;
     match mode {
-        ExecMode::Persistent => {
+        ExecMode::Persistent | ExecMode::Pipelined => {
             let capacity = cg_cache_capacity(dev);
             let traffic = CgPolicy::all()
                 .into_iter()
                 .map(|p| policy_traffic_bytes(&a, elem, p, capacity))
                 .fold(f64::INFINITY, f64::min);
-            let barrier = iters as f64 * K_SYNCS * T_SYNC;
+            // classic persistent CG pays K_SYNCS grid syncs per
+            // iteration; the pipelined formulation folds everything
+            // through exactly one, trading ~1.5x vector traffic (the
+            // w/s/q/z/m auxiliary recurrences) for the collapsed syncs
+            let (syncs, traffic) = match mode {
+                ExecMode::Pipelined => (1.0, traffic * 1.5),
+                _ => (K_SYNCS, traffic),
+            };
+            let barrier = iters as f64 * syncs * T_SYNC;
             ModeledRun {
                 wall_seconds: iters as f64 * traffic / bw
                     + barrier
@@ -234,7 +242,7 @@ impl MeasuredCgMode {
     pub fn json(&self) -> String {
         format!(
             "{{\"mode\":\"{}\",\"wall_seconds\":{:.6},\"invocations\":{},\"advance_spawns\":{}}}",
-            self.mode.name(),
+            self.mode.key(),
             self.wall_seconds,
             self.invocations,
             self.advance_spawns
@@ -252,14 +260,13 @@ pub fn measure_cpu_cg_modes(
     threads: usize,
     parts: usize,
 ) -> crate::error::Result<Vec<MeasuredCgMode>> {
-    use crate::session::{Backend, SessionBuilder, Workload};
+    use crate::session::{Backend, SessionBuilder};
     let mut out = Vec::new();
     for mode in [ExecMode::HostLoop, ExecMode::Persistent] {
-        let mut s = SessionBuilder::new()
+        let mut s = SessionBuilder::cg(n)
+            .parts(parts)
+            .threaded(true)
             .backend(Backend::cpu(threads))
-            .workload(Workload::cg(n))
-            .cg_parts(parts)
-            .cg_threaded(true)
             .mode(mode)
             .build()?;
         // build() already prepared the solver — the pool (persistent
@@ -273,6 +280,80 @@ pub fn measure_cpu_cg_modes(
             wall_seconds: rep.wall_seconds,
             invocations: rep.invocations,
             advance_spawns,
+            iters_per_sec: rep.fom,
+        });
+    }
+    Ok(out)
+}
+
+/// One **measured** arm of the classic-vs-pipelined pooled CG ablation
+/// from [`measure_cpu_cg_pipeline`].
+#[derive(Clone, Debug)]
+pub struct MeasuredCgPipelineArm {
+    pub mode: ExecMode,
+    pub wall_seconds: f64,
+    /// Launches: 1 — both arms are resident pools.
+    pub invocations: u64,
+    /// OS threads spawned *during* `advance` — 0 for both arms (workers
+    /// spawn at `prepare`).
+    pub advance_spawns: u64,
+    /// Slot-ordered barrier reduction generations paid *during* `advance`:
+    /// exactly `2 * iters` for the classic arm (p·Ap, then r·r), exactly
+    /// `iters` for the pipelined arm. Exact only in a single-threaded
+    /// bench main — the counter is process-global.
+    pub barrier_reductions: u64,
+    pub iters_per_sec: f64,
+}
+
+impl MeasuredCgPipelineArm {
+    /// Stable BENCH-json row of `BENCH_cg_pipeline.json` (`n` is the
+    /// system size the arm ran at; the mode string is [`ExecMode::key`]).
+    pub fn json(&self, n: usize) -> String {
+        format!(
+            "{{\"n\":{n},\"mode\":\"{}\",\"wall_seconds\":{:.6},\"invocations\":{},\
+             \"advance_spawns\":{},\"barrier_reductions\":{}}}",
+            self.mode.key(),
+            self.wall_seconds,
+            self.invocations,
+            self.advance_spawns,
+            self.barrier_reductions
+        )
+    }
+}
+
+/// Measure classic pooled CG (two reduction barriers per iteration)
+/// against pipelined pooled CG (one) on an `n`-row Poisson system through
+/// the session API, snapshotting the thread-spawn AND barrier-reduction
+/// counters around each `advance`. The `benches/cg_pipeline` protocol
+/// behind the `pipelined-single-reduction` and `pipelined-wall-win`
+/// bench_check gates.
+pub fn measure_cpu_cg_pipeline(
+    n: usize,
+    iters: usize,
+    threads: usize,
+    parts: usize,
+) -> crate::error::Result<Vec<MeasuredCgPipelineArm>> {
+    use crate::session::{Backend, SessionBuilder};
+    let mut out = Vec::new();
+    for mode in [ExecMode::Persistent, ExecMode::Pipelined] {
+        let mut s = SessionBuilder::cg(n)
+            .parts(parts)
+            .threaded(true)
+            .backend(Backend::cpu(threads))
+            .mode(mode)
+            .build()?;
+        let spawns0 = crate::util::counters::thread_spawns();
+        let reductions0 = crate::util::counters::barrier_reductions();
+        s.advance(iters)?;
+        let advance_spawns = crate::util::counters::thread_spawns() - spawns0;
+        let barrier_reductions = crate::util::counters::barrier_reductions() - reductions0;
+        let rep = s.report();
+        out.push(MeasuredCgPipelineArm {
+            mode,
+            wall_seconds: rep.wall_seconds,
+            invocations: rep.invocations,
+            advance_spawns,
+            barrier_reductions,
             iters_per_sec: rep.fom,
         });
     }

@@ -11,7 +11,8 @@ pub mod resilience_exp;
 pub mod stencil_exp;
 
 pub use cg_exp::{
-    evaluate as cg_evaluate, fig7, measure_cpu_cg_modes, modeled_cg_run, CgRow, MeasuredCgMode,
+    evaluate as cg_evaluate, fig7, measure_cpu_cg_modes, measure_cpu_cg_pipeline,
+    modeled_cg_run, CgRow, MeasuredCgMode, MeasuredCgPipelineArm,
 };
 pub use farm_exp::{farm_vs_pool_per_session, FarmSweepRow};
 pub use plane_exp::{plane_stress, PlaneStressRow};

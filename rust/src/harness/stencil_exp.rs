@@ -200,6 +200,14 @@ pub fn modeled_run(dev: &DeviceSpec, exp: &StencilExperiment, mode: ExecMode) ->
     let d = s.domain_bytes();
     let steps = exp.steps as f64;
     match mode {
+        // CG-only model: every stencil entrypoint rejects it before
+        // reaching here; modeled as unrunnable so no tuner selects it
+        ExecMode::Pipelined => ModeledRun {
+            wall_seconds: f64::INFINITY,
+            invocations: 0,
+            host_bytes: 0,
+            barrier_wait_seconds: 0.0,
+        },
         ExecMode::HostLoop => ModeledRun {
             // relaunch every step; the whole state round-trips through the
             // host on top of the device-side stream time
@@ -290,7 +298,7 @@ impl MeasuredStencilMode {
             "{{\"mode\":\"{}\",\"bt\":{},\"wall_seconds\":{:.6},\"invocations\":{},\
              \"advance_spawns\":{},\"barrier_syncs\":{},\"global_bytes\":{},\
              \"redundancy\":{:.4}}}",
-            self.mode.name(),
+            self.mode.key(),
             self.bt,
             self.wall_seconds,
             self.invocations,
@@ -333,16 +341,15 @@ pub fn measure_cpu_stencil_temporal(
     threads: usize,
     degrees: &[usize],
 ) -> crate::error::Result<Vec<MeasuredStencilMode>> {
-    use crate::session::{Backend, SessionBuilder, Workload};
+    use crate::session::{Backend, SessionBuilder};
     let mut out = Vec::new();
     let arms = std::iter::once((ExecMode::HostLoop, 1usize))
         .chain(degrees.iter().map(|&bt| (ExecMode::Persistent, bt)));
     for (mode, bt) in arms {
-        let mut s = SessionBuilder::new()
-            .backend(Backend::cpu(threads))
-            .workload(Workload::stencil(bench, interior, "f64"))
-            .mode(mode)
+        let mut s = SessionBuilder::stencil(bench, interior, "f64")
             .temporal(bt)
+            .backend(Backend::cpu(threads))
+            .mode(mode)
             .build()?;
         // build() already prepared the solver — the pool (persistent
         // mode) spawned its workers there, not in advance

@@ -10,23 +10,42 @@
 //!
 //! ## Start here: [`session`]
 //!
-//! The public API is the [`session`] module: a [`SessionBuilder`] selects
-//! a **backend**, a **workload** and an **execution policy**, and yields a
-//! [`Session`] driving a backend-agnostic [`Solver`] with a unified
+//! The public API is the [`session`] module. Entry is one of two *typed
+//! sub-builders* — [`SessionBuilder::stencil`] or [`SessionBuilder::cg`]
+//! — so solver-specific knobs are compile-time scoped (`temporal` exists
+//! only on stencil sessions; `preconditioner`/`pipelined` only on CG
+//! sessions), while shared knobs (backend, mode/policy, farm, durable,
+//! resilience, threads) live on both. `build()` yields a [`Session`]
+//! driving a backend-agnostic [`Solver`] with a unified
 //! [`session::Report`]:
 //!
 //! ```no_run
-//! use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+//! use perks::session::{Backend, ExecMode, SessionBuilder};
 //! use perks::runtime::Runtime;
 //!
 //! let rt = Runtime::new(Runtime::default_dir())?;
-//! let mut session = SessionBuilder::new()
+//! let mut session = SessionBuilder::stencil("2d5pt", "128x128", "f32")
 //!     .backend(Backend::pjrt(rt))
-//!     .workload(Workload::stencil("2d5pt", "128x128", "f32"))
 //!     .mode(ExecMode::Persistent)
 //!     .build()?;
 //! let report = session.run(64)?;
 //! println!("{:.2e} {}", report.fom, report.fom_unit);
+//! # Ok::<(), perks::Error>(())
+//! ```
+//!
+//! A CG session, pipelined and preconditioned (one grid-barrier
+//! reduction per iteration instead of classic CG's two — [`cg::pipeline`]):
+//!
+//! ```
+//! use perks::session::{Preconditioner, SessionBuilder};
+//!
+//! let mut session = SessionBuilder::cg(1 << 10)
+//!     .pipelined(true)
+//!     .preconditioner(Preconditioner::Jacobi)
+//!     .threads(4)
+//!     .build()?;
+//! let report = session.run(200)?;
+//! assert!(report.residual.unwrap() >= 0.0);
 //! # Ok::<(), perks::Error>(())
 //! ```
 //!
@@ -92,9 +111,6 @@
 //!   depends on ([`stencil`] benchmarks, [`sparse`] matrices, merge-based
 //!   [`spmv`], a [`cg`] solver).
 //!
-//! The pre-`session` entrypoints (`coordinator::StencilDriver::new`,
-//! `coordinator::CgDriver::new`) remain as deprecated shims.
-//!
 //! ## Invariants and their gates
 //!
 //! The hand-rolled synchronization above (parked condvars, slot-ordered
@@ -122,4 +138,7 @@ pub mod stencil;
 pub mod util;
 
 pub use error::{Error, Result};
-pub use session::{Backend, ExecMode, ExecPolicy, Session, SessionBuilder, Solver, Workload};
+pub use session::{
+    Backend, CgSessionBuilder, ExecMode, ExecPolicy, Preconditioner, Session, SessionBuilder,
+    Solver, StencilSessionBuilder, Workload,
+};

@@ -17,7 +17,7 @@ use std::rc::Rc;
 
 use perks::harness;
 use perks::runtime::Runtime;
-use perks::session::{Backend, ExecMode, ExecPolicy, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, ExecPolicy, SessionBuilder};
 use perks::simgpu::device;
 use perks::stencil;
 use perks::util::args::ParsedArgs;
@@ -122,16 +122,19 @@ fn run_stencil(args: ParsedArgs) -> Result<()> {
     let dtype = args.get("dtype", "f32");
     let steps = args.get_usize("steps", 64)?;
     let seed = args.get_usize("seed", 42)? as u64;
-    let policies = policies(&args.get("mode", "all"), &ExecMode::all())?;
+    // pipelined is CG-only: `--mode all` sweeps the three stencil models
+    let policies = policies(
+        &args.get("mode", "all"),
+        &[ExecMode::HostLoop, ExecMode::HostLoopResident, ExecMode::Persistent],
+    )?;
 
     let rt = Rc::new(Runtime::new(Runtime::default_dir())?);
     // build every session first so one step count (aligned to the deepest
     // fused chunk) serves all modes — the states must stay comparable
     let mut sessions = Vec::new();
     for policy in policies {
-        let session = SessionBuilder::new()
+        let session = SessionBuilder::stencil(&bench, &interior, &dtype)
             .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::stencil(&bench, &interior, &dtype))
             .policy(policy)
             .seed(seed)
             .build()?;
@@ -193,9 +196,8 @@ fn run_cg(args: ParsedArgs) -> Result<()> {
     let rt = Rc::new(Runtime::new(Runtime::default_dir())?);
     let mut sessions = Vec::new();
     for policy in policies {
-        let session = SessionBuilder::new()
+        let session = SessionBuilder::cg(n)
             .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::cg(n))
             .policy(policy)
             .seed(7)
             .build()?;
@@ -261,9 +263,8 @@ fn cpu_perks(args: ParsedArgs) -> Result<()> {
     let mut states: Vec<Vec<f64>> = Vec::new();
     let mut walls: Vec<f64> = Vec::new();
     for policy in policies {
-        let mut session = SessionBuilder::new()
+        let mut session = SessionBuilder::stencil(&bench, &interior, "f64")
             .backend(Backend::cpu(threads))
-            .workload(Workload::stencil(&bench, &interior, "f64"))
             .policy(policy)
             .seed(1)
             .build()?;

@@ -152,7 +152,9 @@ use std::task::{Poll, Waker};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::cg::pipeline::{self, PipeState};
 use crate::cg::pool::SharedBuf;
+use crate::cg::precond::{Precond, Preconditioner};
 use crate::error::{Error, Result};
 use crate::runtime::plane::admission::{AdmissionPolicy, PlaneConfig};
 use crate::runtime::plane::future::{CgCompletion, StencilCompletion};
@@ -204,6 +206,11 @@ pub const P_FIXUP: u8 = 1;
 pub const P_XR: u8 = 2;
 /// CG phase: direction update.
 pub const P_PUP: u8 = 3;
+/// Pipelined-CG phase: the whole iteration — one fused pass per shard
+/// (row SpMV + all eight vector recurrences + preconditioner solve +
+/// the three dot partials), so a pipelined tenant schedules **one**
+/// phase per iteration where the classic CG tenant schedules four.
+pub const P_PIPE: u8 = 4;
 
 /// Resident slab pair of one stencil band (the worker-local state of the
 /// solo pool, hoisted into the tenant so any worker can run the band).
@@ -529,9 +536,108 @@ impl CgEngine {
     }
 }
 
+/// Resident state of a pipelined-CG tenant ([`crate::cg::pipeline`]):
+/// the nine recurrence vectors, the parity-buffered `m`, and one
+/// `(γ | δ | rr)` slot triple per reduction block. Unlike the solo
+/// [`crate::cg::pipeline::PipePool`], the slots need **no** parity
+/// halves here: the completion transition folds them under the
+/// scheduler lock before the next `P_PIPE` phase can be claimed, so a
+/// fold never races the next iteration's stores.
+struct CgPipeEngine {
+    a: Arc<Csr>,
+    pc: Arc<Precond>,
+    /// Reduction blocks == vector-update ownership == shard units.
+    blocks: Vec<(usize, usize)>,
+    x: SharedBuf<f64>,
+    r: SharedBuf<f64>,
+    u: SharedBuf<f64>,
+    w: SharedBuf<f64>,
+    p: SharedBuf<f64>,
+    s: SharedBuf<f64>,
+    q: SharedBuf<f64>,
+    z: SharedBuf<f64>,
+    /// Parity-buffered `m = M⁻¹ w`: the iteration at parity π reads
+    /// `m[π]` (stable all phase — the SpMV reads arbitrary columns) and
+    /// writes `m[1-π]` block-locally. The transition flips the parity.
+    m: [SharedBuf<f64>; 2],
+    /// Width `3 * blocks.len()`: γ partials, then δ, then rr.
+    slots: Vec<AtomicU64>,
+}
+
+impl CgPipeEngine {
+    fn new(a: Arc<Csr>, parts: usize, precond: Preconditioner) -> Result<Self> {
+        if a.n_rows != a.n_cols {
+            return Err(Error::Solver(format!(
+                "matrix not square: {}x{}",
+                a.n_rows, a.n_cols
+            )));
+        }
+        if a.n_rows == 0 {
+            return Err(Error::Solver("matrix has no rows (empty system)".into()));
+        }
+        let n = a.n_rows;
+        let blocks = crate::stencil::parallel::partition(n, parts);
+        let pc = Arc::new(Precond::build(precond, &a, &blocks)?);
+        Ok(Self {
+            slots: (0..3 * blocks.len()).map(|_| AtomicU64::new(0)).collect(),
+            x: SharedBuf::new(vec![0.0; n]),
+            r: SharedBuf::new(vec![0.0; n]),
+            u: SharedBuf::new(vec![0.0; n]),
+            w: SharedBuf::new(vec![0.0; n]),
+            p: SharedBuf::new(vec![0.0; n]),
+            s: SharedBuf::new(vec![0.0; n]),
+            q: SharedBuf::new(vec![0.0; n]),
+            z: SharedBuf::new(vec![0.0; n]),
+            m: [SharedBuf::new(vec![0.0; n]), SharedBuf::new(vec![0.0; n])],
+            blocks,
+            a,
+            pc,
+        })
+    }
+
+    /// One whole pipelined iteration for block `k` — the same
+    /// single-sourced [`pipeline::fused_block_pass`] the serial stepper
+    /// and the solo pool run, with the three partials published to this
+    /// block's slot triple.
+    ///
+    /// SAFETY: block-owned rows of every vector are written by their
+    /// owner only; `m[parity]` has no writer this phase (all writes
+    /// target `m[1-parity]`); slot stores are Release before the
+    /// countdown, folded after it.
+    unsafe fn pipe_shard(&self, k: usize, alpha: f64, beta: f64, parity: usize) -> ShardOut {
+        let (s, l) = self.blocks[k];
+        let m_cur = self.m[parity].whole();
+        let m_next = self.m[1 - parity].ptr();
+        let (pg, pd, pt) = pipeline::fused_block_pass(
+            &self.a,
+            &self.pc,
+            s,
+            l,
+            alpha,
+            beta,
+            m_cur,
+            self.x.ptr(),
+            self.r.ptr(),
+            self.u.ptr(),
+            self.w.ptr(),
+            self.p.ptr(),
+            self.s.ptr(),
+            self.q.ptr(),
+            self.z.ptr(),
+            m_next,
+        );
+        let nb = self.blocks.len();
+        self.slots[k].store(pg.to_bits(), Ordering::Release);
+        self.slots[nb + k].store(pd.to_bits(), Ordering::Release);
+        self.slots[2 * nb + k].store(pt.to_bits(), Ordering::Release);
+        ShardOut::default()
+    }
+}
+
 enum EngineKind {
     Stencil(StencilEngine),
     Cg(CgEngine),
+    CgPipe(CgPipeEngine),
 }
 
 impl EngineKind {
@@ -540,12 +646,16 @@ impl EngineKind {
         match self {
             EngineKind::Stencil(e) => e.plans.len(),
             EngineKind::Cg(e) => e.blocks.len(),
+            EngineKind::CgPipe(e) => e.blocks.len(),
         }
     }
 
     /// Execute one shard of one phase. SAFETY: the claim/complete
     /// handshake guarantees single ownership per shard per phase and
-    /// orders cross-phase handoffs (see module docs).
+    /// orders cross-phase handoffs (see module docs). `sub` is the
+    /// sub-step count for stencil compute phases and the `m` parity for
+    /// pipelined-CG phases; `scalar`/`scalar2` carry the phase's
+    /// iteration coefficients (α, and for pipelined CG also β).
     unsafe fn run_shard(
         &self,
         phase: u8,
@@ -553,6 +663,7 @@ impl EngineKind {
         sub: usize,
         track: bool,
         scalar: f64,
+        scalar2: f64,
     ) -> ShardOut {
         match self {
             EngineKind::Stencil(e) => match phase {
@@ -568,6 +679,10 @@ impl EngineKind {
                 P_XR => e.xr_shard(shard, scalar),
                 P_PUP => e.pup_shard(shard, scalar),
                 _ => unreachable!("bad cg phase {phase}"),
+            },
+            EngineKind::CgPipe(e) => match phase {
+                P_PIPE => e.pipe_shard(shard, scalar, scalar2, sub),
+                _ => unreachable!("bad pipelined cg phase {phase}"),
             },
         }
     }
@@ -601,6 +716,12 @@ impl EngineKind {
                 // p·Ap fold from *any* phase the fault fires in. During
                 // P_XR the row belongs to this shard's block; in every
                 // other phase r has no writer at all.
+                let (s, _) = e.blocks[shard];
+                e.r.ptr().add(s).write(f64::NAN);
+            }
+            EngineKind::CgPipe(e) => {
+                // same residual poisoning: r is carried by recurrence,
+                // so the NaN reaches the very next γ'/rr' fold
                 let (s, _) = e.blocks[shard];
                 e.r.ptr().add(s).write(f64::NAN);
             }
@@ -754,6 +875,12 @@ struct Tenant {
     rr_next: f64,
     alpha: f64,
     beta: f64,
+    // --- pipelined cg command (scalar recurrence state; `sub` carries
+    // the m parity, `rr`/`alpha`/`beta` are shared with classic CG) ---
+    pg_gamma: f64,
+    pg_delta: f64,
+    pg_gamma_prev: f64,
+    pg_alpha_prev: f64,
 }
 
 impl Tenant {
@@ -804,6 +931,10 @@ impl Tenant {
             rr_next: 0.0,
             alpha: 0.0,
             beta: 0.0,
+            pg_gamma: 0.0,
+            pg_delta: 0.0,
+            pg_gamma_prev: 0.0,
+            pg_alpha_prev: 0.0,
         }
     }
 }
@@ -837,6 +968,9 @@ fn workload_meta(engine: &EngineKind) -> WorkloadMeta {
             shards: e.plans.len(),
         },
         EngineKind::Cg(e) => WorkloadMeta::Cg { n: e.a.n_rows, shards: e.blocks.len() },
+        // unreachable in practice: pipelined tenants reject resilience
+        // configuration, so no durable sink is ever built for one
+        EngineKind::CgPipe(e) => WorkloadMeta::Cg { n: e.a.n_rows, shards: e.blocks.len() },
     }
 }
 
@@ -922,6 +1056,8 @@ struct Task {
     sub: usize,
     track: bool,
     scalar: f64,
+    /// Second phase coefficient (β for pipelined CG; 0.0 elsewhere).
+    scalar2: f64,
     /// Tenant's lifetime epoch at claim time (fault/failure coordinate).
     epoch: u64,
     /// Fault to inject while running this shard (claimed from the
@@ -1203,6 +1339,24 @@ impl FarmHandle {
         Ok(FarmCg { farm: self.clone(), tid })
     }
 
+    /// Admit a **pipelined** (optionally preconditioned) CG session
+    /// ([`crate::cg::pipeline`]): one scheduled phase — and one slot
+    /// fold — per iteration, where [`FarmHandle::admit_cg`] schedules
+    /// four. Iterates are bit-identical to
+    /// [`crate::cg::pipeline::advance_serial`] over the same `parts`
+    /// blocks at every farm worker count. Pipelined tenants do not
+    /// support resilience configuration or command graphs.
+    pub fn admit_cg_pipelined(
+        &self,
+        a: Arc<Csr>,
+        parts: usize,
+        precond: Preconditioner,
+    ) -> Result<FarmCgPipe> {
+        let engine = CgPipeEngine::new(a, parts, precond)?;
+        let tid = self.admit(EngineKind::CgPipe(engine))?;
+        Ok(FarmCgPipe { farm: self.clone(), tid })
+    }
+
     fn admit(&self, engine: EngineKind) -> Result<usize> {
         let mut g = self.shared.lock();
         if g.shutdown {
@@ -1296,6 +1450,16 @@ impl FarmHandle {
                 "resilience config change with a command in flight".into(),
             ));
         }
+        if matches!(&*t.engine, EngineKind::CgPipe(_)) {
+            // a pipelined iteration's state spans the whole recurrence
+            // pipeline (nine vectors + four scalars + the m parity);
+            // checkpoint/replay is a classic-path feature
+            return Err(Error::Solver(
+                "resilience is not supported for pipelined CG tenants; \
+                 use the classic CG farm path for checkpoint/replay"
+                    .into(),
+            ));
+        }
         t.durable = store.map(|store| {
             Arc::new(DurableSink {
                 store,
@@ -1360,7 +1524,9 @@ impl FarmHandle {
             }
             match &*t.engine {
                 EngineKind::Stencil(e) => e.bt,
-                EngineKind::Cg(_) => return Err(Error::Solver("not a stencil tenant".into())),
+                EngineKind::Cg(_) | EngineKind::CgPipe(_) => {
+                    return Err(Error::Solver("not a stencil tenant".into()))
+                }
             }
         };
         let mut g = acquire_plane_slots(sh, g, tid, 1 + rest.len())?;
@@ -1812,6 +1978,197 @@ impl FarmHandle {
         }
     }
 
+    /// Enqueue up to `iters` pipelined-CG iterations from the full
+    /// recurrence state `st` (copied into the tenant's resident
+    /// buffers; `m` lands at parity 0). The top-of-loop short circuit
+    /// and the first iteration's coefficients run here, host-side —
+    /// exactly where the solo pool computes them.
+    fn submit_cg_pipe(
+        &self,
+        tid: usize,
+        st: &PipeState,
+        threshold: f64,
+        iters: usize,
+    ) -> Result<()> {
+        let sh = &self.shared;
+        let g = sh.lock();
+        if g.shutdown {
+            return Err(Error::Solver("solver farm is shut down".into()));
+        }
+        // contract errors before admission (see submit_stencil_cmd)
+        {
+            // lint: allow(no-panic) -- the session owning `tid` is alive (it called us by &self), so its tenant slot cannot have been released
+            let t = g.tenants[tid].as_ref().expect("tenant released");
+            if t.active {
+                return Err(Error::Solver(
+                    "farm session already has a command in flight".into(),
+                ));
+            }
+            let EngineKind::CgPipe(ref e) = *t.engine else {
+                return Err(Error::Solver("not a pipelined cg tenant".into()));
+            };
+            if st.x.len() != e.a.n_rows {
+                return Err(Error::Solver("farm cg state length mismatch".into()));
+            }
+        }
+        let mut g = acquire_plane_slots(sh, g, tid, 1)?;
+        let now = sh.now();
+        let tick = g.tick;
+        // lint: allow(no-panic) -- the session owning `tid` is alive (it called us by &self), so its tenant slot cannot have been released
+        let t = g.tenants[tid].as_mut().expect("tenant released");
+        let engine = t.engine.clone();
+        let EngineKind::CgPipe(ref e) = *engine else { unreachable!() };
+        // SAFETY: tenant idle (no command in flight, checked above under
+        // the scheduler lock) — exclusive access to the resident buffers.
+        // m[1] needs no copy: every row is written before it is read.
+        unsafe {
+            e.x.whole_mut().copy_from_slice(&st.x);
+            e.r.whole_mut().copy_from_slice(&st.r);
+            e.u.whole_mut().copy_from_slice(&st.u);
+            e.w.whole_mut().copy_from_slice(&st.w);
+            e.p.whole_mut().copy_from_slice(&st.p);
+            e.s.whole_mut().copy_from_slice(&st.s);
+            e.q.whole_mut().copy_from_slice(&st.q);
+            e.z.whole_mut().copy_from_slice(&st.z);
+            e.m[0].whole_mut().copy_from_slice(&st.m);
+        }
+        t.active = true;
+        t.done_flag = false;
+        t.failure = None;
+        t.moved = 0;
+        t.computed = 0;
+        t.iters_target = iters;
+        t.threshold = threshold;
+        t.iters_done = 0;
+        t.rr = st.rr;
+        t.pg_gamma = st.gamma;
+        t.pg_delta = st.delta;
+        t.pg_gamma_prev = st.gamma_prev;
+        t.pg_alpha_prev = st.alpha_prev;
+        t.sub = 0; // m parity
+        t.first_dispatch = true;
+        t.enqueued_at = now;
+        t.queue_wait_cmd = 0.0;
+        t.attempts = 0;
+        t.resume_at = 0.0;
+        t.recoveries_cmd = 0;
+        t.replayed_cmd = 0;
+        t.ckpt_bytes_cmd = 0;
+        t.graph_segs.clear();
+        t.graph_schedule.clear();
+        t.graph_resubmits = 0;
+        note_batch_enqueued(sh);
+        if st.rr <= threshold || st.rr <= 0.0 || iters == 0 {
+            // nothing to iterate: the serial/pooled top-of-loop short
+            // circuit, completed immediately
+            t.done_flag = true;
+            sh.done_cv.notify_all();
+            return Ok(());
+        }
+        // first iteration's coefficients — the same host-side recurrence
+        // every replication site runs before its first fused pass
+        match pipeline::pipe_coeffs(st.gamma, st.delta, st.gamma_prev, st.alpha_prev) {
+            Ok((beta, alpha)) => {
+                t.alpha = alpha;
+                t.beta = beta;
+            }
+            Err(msg) => {
+                t.failure = Some(Failure::Solver(msg));
+                t.done_flag = true;
+                sh.done_cv.notify_all();
+                return Ok(());
+            }
+        }
+        t.phase = P_PIPE;
+        t.next_shard = 0;
+        t.outstanding = 0;
+        t.nshards = t.engine.shards();
+        t.enqueue_tick = tick;
+        g.ready.push_back(tid);
+        sh.work_cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until the submitted pipelined-CG command completes,
+    /// harvesting the advanced recurrence state back into `st` (`m`
+    /// from the tenant's current parity). Panicked shards surface as
+    /// [`Error::Fault`] with nothing copied out (the iteration was torn
+    /// mid-pass), exactly like the classic CG harvest.
+    fn wait_cg_pipe(&self, tid: usize, st: &mut PipeState) -> Result<CgFarmRun> {
+        self.deadline_guard(tid)?;
+        let sh = &self.shared;
+        let mut g = sh.lock();
+        loop {
+            let done = {
+                let Some(t) = g.tenants[tid].as_mut() else {
+                    return Err(Error::Solver("farm tenant released".into()));
+                };
+                if !t.active && !t.done_flag {
+                    return Err(Error::Solver(
+                        "no farm command in flight to wait for".into(),
+                    ));
+                }
+                t.done_flag
+            };
+            if done {
+                break;
+            }
+            if g.shutdown {
+                abandon_command(&mut g, tid);
+                release_plane_slots(&mut g, sh, tid);
+                return Err(Error::Solver(
+                    "solver farm shut down while a command was in flight".into(),
+                ));
+            }
+            // shutdown is re-checked on every wake (the loop head above)
+            // lint: allow(condvar-shutdown) -- client-side completion wait; the loop re-checks the shutdown flag before parking again, so a farm teardown wakes us into the error return above
+            g = sh.done_cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+        // lint: allow(no-panic) -- done_flag observed under this same uninterrupted lock hold
+        let t = g.tenants[tid].as_mut().expect("tenant released");
+        t.done_flag = false;
+        t.active = false;
+        t.waker = None;
+        let out = match t.failure.take() {
+            Some(f @ Failure::Panic { .. }) => Err(f.into_error()),
+            other => {
+                let run = CgFarmRun {
+                    iters: t.iters_done,
+                    rr: t.rr,
+                    error: other.map(|f| f.message()),
+                    queue_wait_seconds: t.queue_wait_cmd,
+                    recoveries: t.recoveries_cmd,
+                    replayed_epochs: t.replayed_cmd,
+                    checkpoint_bytes: t.ckpt_bytes_cmd,
+                };
+                let engine = t.engine.clone();
+                let EngineKind::CgPipe(ref e) = *engine else { unreachable!() };
+                let parity = t.sub;
+                // SAFETY: command done — workers re-parked, buffers
+                // quiescent; the current parity holds the freshest m.
+                unsafe {
+                    st.x.copy_from_slice(e.x.whole());
+                    st.r.copy_from_slice(e.r.whole());
+                    st.u.copy_from_slice(e.u.whole());
+                    st.w.copy_from_slice(e.w.whole());
+                    st.p.copy_from_slice(e.p.whole());
+                    st.s.copy_from_slice(e.s.whole());
+                    st.q.copy_from_slice(e.q.whole());
+                    st.z.copy_from_slice(e.z.whole());
+                    st.m.copy_from_slice(e.m[parity].whole());
+                }
+                st.gamma = t.pg_gamma;
+                st.delta = t.pg_delta;
+                st.rr = t.rr;
+                st.gamma_prev = t.pg_gamma_prev;
+                st.alpha_prev = t.pg_alpha_prev;
+                Ok(run)
+            }
+        };
+        release_plane_slots(&mut g, sh, tid);
+        out
+    }
+
     /// Snapshot a stencil tenant's padded domain (between commands only).
     fn stencil_state(&self, tid: usize) -> Result<Vec<f64>> {
         let g = self.shared.lock();
@@ -2228,6 +2585,54 @@ impl Drop for FarmCg {
     }
 }
 
+/// An admitted *pipelined* CG session ([`crate::cg::pipeline`]). The full
+/// nine-vector recurrence state moves in at submit and out at wait;
+/// between those boundaries each iteration is ONE scheduled farm phase
+/// (`P_PIPE`) where the classic CG tenant schedules four, and the
+/// advance is bit-identical to [`crate::cg::pipeline::advance_serial`]
+/// over the same partition. Command graphs and resilience are not
+/// supported on this path.
+pub struct FarmCgPipe {
+    farm: FarmHandle,
+    tid: usize,
+}
+
+impl FarmCgPipe {
+    /// Enqueue up to `iters` pipelined iterations from `st`, stopping
+    /// early once `rr <= threshold` (0.0 = fixed-iteration mode).
+    pub fn submit(&mut self, st: &PipeState, threshold: f64, iters: usize) -> Result<()> {
+        self.farm.submit_cg_pipe(self.tid, st, threshold, iters)
+    }
+
+    /// Block until the submitted command completes, copying the advanced
+    /// recurrence state back into `st` (including on a solver error,
+    /// whose completed iterations are still valid).
+    pub fn wait(&mut self, st: &mut PipeState) -> Result<CgFarmRun> {
+        self.farm.wait_cg_pipe(self.tid, st)
+    }
+
+    /// Blocking run: submit + wait (the farm mirror of
+    /// [`crate::cg::pipeline::PipePool::run`]).
+    pub fn run(&mut self, st: &mut PipeState, threshold: f64, iters: usize) -> Result<CgFarmRun> {
+        self.submit(st, threshold, iters)?;
+        self.wait(st)
+    }
+
+    /// Always errors: checkpoint/replay needs the classic CG farm path
+    /// (the pipelined tenant's mid-iteration state spans two `m`
+    /// parities and four recurrence scalars that the checkpoint format
+    /// does not carry).
+    pub fn configure_resilience(&mut self, cfg: ResilienceConfig) -> Result<()> {
+        self.farm.set_resilience(self.tid, cfg)
+    }
+}
+
+impl Drop for FarmCgPipe {
+    fn drop(&mut self) {
+        self.farm.release(self.tid);
+    }
+}
+
 // ---------------------------------------------------------------------
 // Worker loop + scheduler
 // ---------------------------------------------------------------------
@@ -2284,8 +2689,14 @@ fn worker_main(sh: &FarmShared) {
                 // lint: allow(no-panic) -- deliberate fault injection; caught by the catch_unwind directly above and surfaced as a command failure
                 panic!("injected fault");
             }
-            let out =
-                task.engine.run_shard(task.phase, task.shard, task.sub, task.track, task.scalar);
+            let out = task.engine.run_shard(
+                task.phase,
+                task.shard,
+                task.sub,
+                task.track,
+                task.scalar,
+                task.scalar2,
+            );
             if matches!(task.inject, Some(FaultKind::Nan)) {
                 task.engine.poison_shard(task.shard);
             }
@@ -2361,6 +2772,11 @@ fn claim(g: &mut FarmState, sh: &FarmShared, next_due: &mut Option<f64>) -> Opti
                 scalar: match (&*t.engine, t.phase) {
                     (EngineKind::Cg(_), P_XR) => t.alpha,
                     (EngineKind::Cg(_), P_PUP) => t.beta,
+                    (EngineKind::CgPipe(_), P_PIPE) => t.alpha,
+                    _ => 0.0,
+                },
+                scalar2: match (&*t.engine, t.phase) {
+                    (EngineKind::CgPipe(_), P_PIPE) => t.beta,
                     _ => 0.0,
                 },
                 epoch: t.epoch,
@@ -2733,6 +3149,55 @@ fn transition(t: &mut Tenant, sh: &FarmShared) -> Step {
             }
             p => unreachable!("bad cg phase {p}"),
         },
+        EngineKind::CgPipe(e) => match t.phase {
+            // one transition per iteration — the farm twin of the solo
+            // pipelined pool's single `sync_reduce`: fold the three slot
+            // ranges in slot order, rotate the scalar recurrence, flip
+            // the m parity, decide, and (usually) re-enqueue P_PIPE
+            P_PIPE => {
+                let nb = e.blocks.len();
+                let g = fold_slots(&e.slots[..nb]);
+                let d = fold_slots(&e.slots[nb..2 * nb]);
+                let rr = fold_slots(&e.slots[2 * nb..]);
+                // the vectors moved even if the fold is bad: flip the
+                // parity first so a harvest reads the freshly written m
+                t.sub = 1 - t.sub;
+                if let Some(msg) = pipeline::check_folds(g, d, rr, t.iters_done + 1) {
+                    // same collective message (and uncounted iteration)
+                    // as the serial/pooled replication sites
+                    t.failure = Some(Failure::Solver(msg));
+                    return Step::Done;
+                }
+                t.pg_gamma_prev = t.pg_gamma;
+                t.pg_alpha_prev = t.alpha;
+                t.pg_gamma = g;
+                t.pg_delta = d;
+                t.rr = rr;
+                t.iters_done += 1;
+                t.epoch += 1;
+                sh.epochs.fetch_add(1, Ordering::Relaxed);
+                if t.rr <= t.threshold || t.rr <= 0.0 || t.iters_done >= t.iters_target {
+                    return Step::Done;
+                }
+                match pipeline::pipe_coeffs(
+                    t.pg_gamma,
+                    t.pg_delta,
+                    t.pg_gamma_prev,
+                    t.pg_alpha_prev,
+                ) {
+                    Ok((beta, alpha)) => {
+                        t.alpha = alpha;
+                        t.beta = beta;
+                        Step::Phase(P_PIPE)
+                    }
+                    Err(msg) => {
+                        t.failure = Some(Failure::Solver(msg));
+                        Step::Done
+                    }
+                }
+            }
+            p => unreachable!("bad pipelined cg phase {p}"),
+        },
     }
 }
 
@@ -2842,6 +3307,10 @@ fn take_checkpoint(t: &mut Tenant, sh: &FarmShared) {
                 resubmits: t.graph_resubmits,
             }
         }
+        // defensive: pipelined tenants reject every resilience config,
+        // so neither the command-entry nor the cadence call sites can
+        // reach here with one
+        EngineKind::CgPipe(_) => return,
     };
     let ck = Arc::new(Checkpoint::new(t.epoch, payload));
     t.ckpt_bytes_cmd += ck.bytes;
@@ -3237,6 +3706,112 @@ mod tests {
         let again = t.run(&mut x, &mut r, &mut p, 0.0, 0.0, 1).unwrap();
         assert!(again.error.is_none());
         assert_eq!(again.iters, 0);
+    }
+
+    /// The pipelined-CG tentpole bar on the farm path: every worker
+    /// count and every preconditioner walks the bits of
+    /// [`pipeline::advance_serial`] over the same partition, including
+    /// across resumed advances.
+    #[test]
+    fn farm_cg_pipelined_is_bit_identical_to_serial_across_workers_and_resume() {
+        let a = gen::poisson2d(14);
+        let b = gen::rhs(a.n_rows, 5);
+        let parts = 6;
+        let blocks = crate::stencil::parallel::partition(a.n_rows, parts);
+        for spec in [
+            Preconditioner::None,
+            Preconditioner::Jacobi,
+            Preconditioner::BlockJacobi { block: 5 },
+        ] {
+            // one-shot serial reference: 22 iterations
+            let pc = Precond::build(spec, &a, &blocks).unwrap();
+            let mut want = PipeState::prime(&a, &b, None, &pc).unwrap();
+            let ser = pipeline::advance_serial(&a, &blocks, &pc, &mut want, 0.0, 22);
+            assert_eq!(ser.iters, 22, "{}: serial reference", spec.name());
+            for workers in [1usize, 2, 3, 8] {
+                let farm = SolverFarm::spawn(workers).unwrap();
+                let mut t = farm
+                    .handle()
+                    .admit_cg_pipelined(Arc::new(a.clone()), parts, spec)
+                    .unwrap();
+                let mut st = PipeState::prime(&a, &b, None, &pc).unwrap();
+                for chunk in [9usize, 13] {
+                    let run = t.run(&mut st, 0.0, chunk).unwrap();
+                    assert!(run.error.is_none(), "{}: workers={workers}", spec.name());
+                    assert_eq!(run.iters, chunk);
+                }
+                let tag = format!("{} workers={workers}", spec.name());
+                assert_eq!(st.x, want.x, "{tag}: x bits");
+                assert_eq!(st.r, want.r, "{tag}: r bits");
+                assert_eq!(st.p, want.p, "{tag}: p bits");
+                assert_eq!(st.rr.to_bits(), want.rr.to_bits(), "{tag}: rr bits");
+                assert_eq!(st.gamma.to_bits(), want.gamma.to_bits(), "{tag}: γ bits");
+                assert_eq!(st.delta.to_bits(), want.delta.to_bits(), "{tag}: δ bits");
+            }
+        }
+    }
+
+    /// The one-barrier-per-iteration claim, in farm units: a pipelined
+    /// iteration is ONE scheduled phase (`P_PIPE`, `shards` tasks) where
+    /// classic CG schedules four — counter-asserted on the shared task
+    /// and epoch tallies of a fresh farm.
+    #[test]
+    fn farm_cg_pipelined_schedules_one_phase_per_iteration() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 2);
+        let (parts, iters) = (5usize, 17usize);
+        let blocks = crate::stencil::parallel::partition(a.n_rows, parts);
+        let pc = Precond::build(Preconditioner::Jacobi, &a, &blocks).unwrap();
+        let farm = SolverFarm::spawn(3).unwrap();
+        let mut t = farm
+            .handle()
+            .admit_cg_pipelined(Arc::new(a.clone()), parts, Preconditioner::Jacobi)
+            .unwrap();
+        let mut st = PipeState::prime(&a, &b, None, &pc).unwrap();
+        let run = t.run(&mut st, 0.0, iters).unwrap();
+        assert!(run.error.is_none());
+        assert_eq!(run.iters, iters);
+        let m = farm.metrics();
+        assert_eq!(m.tasks, (parts * iters) as u64, "one phase of `parts` shards per iteration");
+        assert_eq!(m.epochs, iters as u64, "one epoch per iteration");
+    }
+
+    /// Solver-error and unsupported-feature paths: a non-SPD system is a
+    /// collective [`pipeline::check_folds`] error with the serial path's
+    /// exact message and zero counted iterations, the tenant stays
+    /// usable, and resilience is rejected at configure time.
+    #[test]
+    fn farm_cg_pipelined_error_paths_match_serial_and_reject_resilience() {
+        let neg = Csr::from_coo(6, 6, (0..6).map(|i| (i, i, -1.0)).collect()).unwrap();
+        let bneg = vec![1.0; 6];
+        let blocks = crate::stencil::parallel::partition(6, 2);
+        let pc = Precond::build(Preconditioner::None, &neg, &blocks).unwrap();
+        let mut want = PipeState::prime(&neg, &bneg, None, &pc).unwrap();
+        let ser = pipeline::advance_serial(&neg, &blocks, &pc, &mut want, 0.0, 10);
+        let want_err = ser.error.expect("serial run must error on a non-SPD system");
+        assert_eq!(ser.iters, 0);
+
+        let farm = SolverFarm::spawn(2).unwrap();
+        let mut t = farm
+            .handle()
+            .admit_cg_pipelined(Arc::new(neg.clone()), 2, Preconditioner::None)
+            .unwrap();
+        let mut st = PipeState::prime(&neg, &bneg, None, &pc).unwrap();
+        let run = t.run(&mut st, 0.0, 10).unwrap();
+        assert_eq!(run.iters, 0, "failing iteration is not counted");
+        assert_eq!(run.error.as_deref(), Some(want_err.as_str()), "farm vs serial error text");
+        // tenant stays usable after the solver error
+        let again = t.run(&mut st, 0.0, 0).unwrap();
+        assert!(again.error.is_none());
+        assert_eq!(again.iters, 0);
+        // resilience is a classic-CG-only feature on the farm
+        let err = t.configure_resilience(ResilienceConfig::checkpointed()).unwrap_err();
+        assert!(
+            format!("{err}").contains("pipelined"),
+            "unexpected rejection text: {err}"
+        );
+        // and a pipelined tenant rejects stencil submissions
+        assert!(farm.handle().submit_stencil_cmd(t.tid, 1, &[], None, 0).is_err());
     }
 
     /// Mixed stencil + CG tenants with interleaved in-flight commands:

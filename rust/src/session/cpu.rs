@@ -7,10 +7,12 @@
 
 use std::sync::Arc;
 
+use crate::cg::pipeline::{self, PipePool, PipeState};
 use crate::cg::pool::CgPool;
+use crate::cg::precond::{Precond, Preconditioner};
 use crate::coordinator::executor::ExecMode;
 use crate::error::{Error, Result};
-use crate::runtime::farm::{FarmCg, FarmHandle, FarmStencil};
+use crate::runtime::farm::{FarmCg, FarmCgPipe, FarmHandle, FarmStencil};
 use crate::runtime::plane::graph::CommandGraph;
 use crate::runtime::resilience::ResilienceConfig;
 use crate::session::{Report, Solver};
@@ -174,6 +176,12 @@ impl CpuStencil {
     ) -> Result<Self> {
         let spec = stencil::spec(bench)
             .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
+        if opts.mode == ExecMode::Pipelined {
+            return Err(Error::invalid(
+                "pipelined is a CG-only execution model; stencils have no \
+                 dot-product pipeline",
+            ));
+        }
         if opts.temporal == 0 {
             return Err(Error::invalid("temporal blocking degree must be >= 1"));
         }
@@ -376,6 +384,10 @@ impl CpuStencil {
             ExecMode::HostLoopResident => {
                 Err(Error::invalid("host-loop-resident is a PJRT-only execution model"))
             }
+            ExecMode::Pipelined => Err(Error::invalid(
+                "pipelined is a CG-only execution model; stencils have no \
+                 dot-product pipeline",
+            )),
         }
     }
 }
@@ -492,9 +504,14 @@ impl Solver for CpuStencil {
 /// every iteration; persistent mode caches the plan once, fuses the
 /// passes, and (when threaded) runs the whole iteration loop on the
 /// spawn-once [`CgPool`] with barrier-reduced dots — the paper's CG
-/// mechanisms. The iterates are identical across modes and thread counts:
-/// all reductions fold per-block partials in block-index order (the
-/// pool's canonical order), never full-vector or arrival order.
+/// mechanisms. [`ExecMode::Pipelined`] swaps the classic recurrence for
+/// the Ghysels–Vanroose pipelined PCG ([`crate::cg::pipeline`]): one
+/// fused pass and ONE slot-ordered barrier reduction per iteration
+/// (classic needs two), with the preconditioner folded into the same
+/// pass. The iterates are identical across paths and thread counts
+/// *within* each recurrence: all reductions fold per-block partials in
+/// block-index order (the pool's canonical order), never full-vector or
+/// arrival order.
 pub struct CpuCg {
     a: Arc<Csr>,
     b: Vec<f64>,
@@ -530,11 +547,31 @@ pub struct CpuCg {
     recoveries: u64,
     replayed_epochs: u64,
     checkpoint_bytes: u64,
+    /// Preconditioner spec, applied identically on every path (serial /
+    /// pooled / farm, classic and pipelined). Identity by default.
+    precond_spec: Preconditioner,
+    /// Built preconditioner; `Some` from `prepare` until the next
+    /// `prepare` (rebuilt there so a changed spec takes effect).
+    pc: Option<Arc<Precond>>,
+    /// Pipelined recurrence state (x,r,u,w,p,s,q,z,m + scalars); `Some`
+    /// iff `mode == Pipelined`, primed in `prepare`.
+    pipe: Option<PipeState>,
+    /// Spawn-once pipelined pool; `Some` iff threaded pipelined mode
+    /// without a farm.
+    pipe_pool: Option<PipePool>,
+    /// Admitted pipelined farm tenant; `Some` iff pipelined mode with a
+    /// farm.
+    farm_pipe: Option<FarmCgPipe>,
     x: Vec<f64>,
     r: Vec<f64>,
+    /// Preconditioned residual `z = M⁻¹r` for classic PCG (identity spec
+    /// leaves it shadowing `r`).
+    z: Vec<f64>,
     p: Vec<f64>,
     ap: Vec<f64>,
     rr: f64,
+    /// Classic-PCG recurrence scalar `r·z` (equals `rr` under identity).
+    rz: f64,
     iters: usize,
     wall_seconds: f64,
     invocations: u64,
@@ -609,11 +646,18 @@ impl CpuCg {
             recoveries: 0,
             replayed_epochs: 0,
             checkpoint_bytes: 0,
+            precond_spec: Preconditioner::None,
+            pc: None,
+            pipe: None,
+            pipe_pool: None,
+            farm_pipe: None,
             x: vec![0.0; n],
             r: vec![0.0; n],
+            z: vec![0.0; n],
             p: vec![0.0; n],
             ap: vec![0.0; n],
             rr: 0.0,
+            rz: 0.0,
             iters: 0,
             wall_seconds: 0.0,
             invocations: 0,
@@ -644,6 +688,13 @@ impl CpuCg {
         self
     }
 
+    /// Set the preconditioner spec (built in `prepare`; applied on every
+    /// execution path — serial, pooled, farm, classic and pipelined).
+    pub(crate) fn with_preconditioner(mut self, pc: Preconditioner) -> Self {
+        self.precond_spec = pc;
+        self
+    }
+
     /// OS threads the active pool has spawned (`None` when not pooled) —
     /// constant across `advance` calls, which the tests assert.
     #[cfg(test)]
@@ -652,19 +703,26 @@ impl CpuCg {
     }
 
     /// Global ("slow tier") bytes one iteration streams under this mode:
-    /// the matrix plus 5 (host-loop), 2 (fused persistent pool), or 4
-    /// (farm: the phase-split resident iteration un-fuses the two sweeps
-    /// into spmv / fixup+dot / update+dot / direction passes).
+    /// the matrix plus 3 (pipelined: one fused recurrence pass over the
+    /// widened vector set), 5 (host-loop), 2 (fused persistent pool), or
+    /// 4 (classic farm: the phase-split resident iteration un-fuses the
+    /// two sweeps into spmv / fixup+dot / update+dot / direction passes)
+    /// vector passes, plus the preconditioner's extra row-local passes
+    /// (0 identity, 1 Jacobi, 2 block-Jacobi).
     fn bytes_per_iter(&self) -> u64 {
         let matrix = (self.a.nnz() * 12 + (self.a.n_rows + 1) * 4) as u64;
-        let passes = if self.mode != ExecMode::Persistent {
-            5
+        // the if-else chain must stay parenthesized: without the parens
+        // the `+ extra_passes()` binds into the final else block
+        let passes = (if self.mode == ExecMode::Pipelined {
+            3.0
+        } else if self.mode != ExecMode::Persistent {
+            5.0
         } else if self.farm.is_some() {
-            4
+            4.0
         } else {
-            2
-        };
-        matrix + (passes * self.a.n_rows * 8) as u64
+            2.0
+        }) + self.precond_spec.extra_passes();
+        matrix + (passes * (self.a.n_rows * 8) as f64) as u64
     }
 
     /// One CG iteration; returns false once the residual is exactly zero
@@ -732,6 +790,78 @@ impl CpuCg {
         Ok(true)
     }
 
+    /// One classic *preconditioned* CG iteration, sharing the pooled
+    /// arithmetic ([`crate::cg::classic_precond_block_pass`]) and fold
+    /// order, so the serial path walks bit-identical iterates to the
+    /// preconditioned pool at every worker count.
+    fn step_precond(&mut self) -> Result<bool> {
+        if self.rr <= 0.0 {
+            return Ok(false);
+        }
+        if self.mode != ExecMode::Persistent {
+            self.plan = MergePlan::new(&self.a, self.parts);
+            self.plan_searches += 1;
+        }
+        if self.threaded {
+            merge::spmv_parallel(&self.a, &self.plan, &self.p, &mut self.ap, self.threads);
+        } else {
+            merge::spmv(&self.a, &self.plan, &self.p, &mut self.ap);
+        }
+        let mut pap = 0.0;
+        for &(s, l) in &self.blocks {
+            pap += crate::cg::block_partial(s, l, |i| self.p[i] * self.ap[i]);
+        }
+        if !pap.is_finite() {
+            return Err(Error::Solver(format!(
+                "non-finite p·Ap ({pap}) at iteration {}",
+                self.iters + 1
+            )));
+        }
+        if pap <= 0.0 {
+            return Err(Error::Solver(format!(
+                "matrix not positive definite (pAp={pap})"
+            )));
+        }
+        let alpha = self.rz / pap;
+        let pc = self.pc.as_ref().expect("preconditioner built in prepare");
+        let mut rz_new = 0.0;
+        let mut rr_new = 0.0;
+        for &(s, l) in &self.blocks {
+            // SAFETY: single caller thread — this solver exclusively owns
+            // x/r/z, the pointers cover all n rows, and p/ap have no
+            // concurrent writer; blocks partition [0, n) disjointly.
+            let (prz, prr) = unsafe {
+                crate::cg::classic_precond_block_pass(
+                    pc,
+                    s,
+                    l,
+                    alpha,
+                    &self.p,
+                    &self.ap,
+                    self.x.as_mut_ptr(),
+                    self.r.as_mut_ptr(),
+                    self.z.as_mut_ptr(),
+                )
+            };
+            rz_new += prz;
+            rr_new += prr;
+        }
+        if !rz_new.is_finite() || !rr_new.is_finite() {
+            return Err(Error::Solver(format!(
+                "non-finite preconditioned reduction (r·z={rz_new}, r·r={rr_new}) at iteration {}",
+                self.iters + 1
+            )));
+        }
+        let beta = rz_new / self.rz;
+        for i in 0..self.p.len() {
+            self.p[i] = self.z[i] + beta * self.p[i];
+        }
+        self.rr = rr_new;
+        self.rz = rz_new;
+        self.iters += 1;
+        Ok(true)
+    }
+
     /// Shared engine of `advance` (`threshold == 0.0`, fixed-iteration)
     /// and `advance_until` (`threshold == tol` on the `r·r` recurrence).
     ///
@@ -744,7 +874,60 @@ impl CpuCg {
         let t0 = std::time::Instant::now();
         let done;
         let mut failure: Option<Error> = None;
-        if let Some(tenant) = self.farm_session.as_mut() {
+        if let Some(tenant) = self.farm_pipe.as_mut() {
+            // pipelined multi-tenant path: one scheduled phase (and ONE
+            // barrier reduction) per iteration on the shared farm
+            // workers, same bits as the serial pipelined recurrence
+            let st = self.pipe.as_mut().expect("pipelined state primed in prepare");
+            let run = match tenant.run(st, threshold, iters) {
+                Ok(run) => {
+                    self.plane_batches += 1;
+                    run
+                }
+                Err(e) => {
+                    match &e {
+                        Error::Shed(_) => self.plane_sheds += 1,
+                        Error::Timeout(_) => self.plane_timeouts += 1,
+                        _ => {}
+                    }
+                    return Err(e);
+                }
+            };
+            self.rr = st.rr;
+            self.iters += run.iters;
+            self.queue_wait_seconds += run.queue_wait_seconds;
+            self.recoveries += run.recoveries;
+            self.replayed_epochs += run.replayed_epochs;
+            self.checkpoint_bytes += run.checkpoint_bytes;
+            done = run.iters;
+            if let Some(msg) = run.error {
+                failure = Some(Error::Solver(msg));
+            }
+        } else if let Some(pool) = self.pipe_pool.as_mut() {
+            // pipelined resident pool: the recurrence loop runs on the
+            // spawn-once workers with ONE slot-ordered barrier reduction
+            // per iteration (classic CG needs two)
+            let st = self.pipe.as_mut().expect("pipelined state primed in prepare");
+            let run = pool.run(st, threshold, iters)?;
+            self.rr = st.rr;
+            self.iters += run.iters;
+            done = run.iters;
+            if let Some(msg) = run.error {
+                failure = Some(Error::Solver(msg));
+            }
+        } else if self.mode == ExecMode::Pipelined {
+            // serial pipelined reference recurrence — the bit-identity
+            // oracle for the pooled and farm pipelined paths
+            let pc = self.pc.as_ref().expect("preconditioner built in prepare");
+            let st = self.pipe.as_mut().expect("pipelined state primed in prepare");
+            let run = pipeline::advance_serial(&self.a, &self.blocks, pc, st, threshold, iters);
+            self.rr = st.rr;
+            self.iters += run.iters;
+            done = run.iters;
+            if let Some(msg) = run.error {
+                failure = Some(Error::Solver(msg));
+            }
+        } else if let Some(tenant) = self.farm_session.as_mut() {
             // multi-tenant path: the command is enqueued into the shared
             // farm and the iteration loop runs resident on its workers —
             // zero spawns, same bits as the pooled/serial paths
@@ -784,10 +967,24 @@ impl CpuCg {
             }
         } else if let Some(pool) = self.pool.as_mut() {
             // resident time loop: state rides the pool's buffers, the
-            // workers iterate internally, zero spawns
-            let run =
-                pool.run(&mut self.x, &mut self.r, &mut self.p, self.rr, threshold, iters)?;
+            // workers iterate internally, zero spawns; preconditioned
+            // runs additionally carry z and the r·z recurrence
+            let run = if self.precond_spec == Preconditioner::None {
+                pool.run(&mut self.x, &mut self.r, &mut self.p, self.rr, threshold, iters)?
+            } else {
+                pool.run_preconditioned(
+                    &mut self.x,
+                    &mut self.r,
+                    &mut self.z,
+                    &mut self.p,
+                    self.rr,
+                    self.rz,
+                    threshold,
+                    iters,
+                )?
+            };
             self.rr = run.rr;
+            self.rz = run.rz;
             self.iters += run.iters;
             done = run.iters;
             if let Some(msg) = run.error {
@@ -801,7 +998,12 @@ impl CpuCg {
                 if self.rr <= threshold {
                     break;
                 }
-                match self.step() {
+                let stepped = if self.precond_spec == Preconditioner::None {
+                    self.step()
+                } else {
+                    self.step_precond()
+                };
+                match stepped {
                     Ok(true) => n += 1,
                     Ok(false) => break,
                     Err(e) => {
@@ -814,7 +1016,7 @@ impl CpuCg {
         }
         self.wall_seconds += t0.elapsed().as_secs_f64();
         self.invocations += match self.mode {
-            ExecMode::Persistent => 1,
+            ExecMode::Persistent | ExecMode::Pipelined => 1,
             _ => done as u64,
         };
         self.host_bytes += done as u64 * self.bytes_per_iter();
@@ -827,36 +1029,90 @@ impl CpuCg {
 
 impl Solver for CpuCg {
     fn prepare(&mut self) -> Result<()> {
-        // shut the previous solve's pool down first (workers joined) /
-        // release the previous farm tenant, so re-entry never leaks
+        // shut the previous solve's pools down first (workers joined) /
+        // release the previous farm tenants, so re-entry never leaks
         // resident threads or farm slots
         self.pool = None;
+        self.pipe_pool = None;
         self.farm_session = None;
-        self.x.iter_mut().for_each(|v| *v = 0.0);
-        self.r.copy_from_slice(&self.b);
-        self.p.copy_from_slice(&self.b);
-        self.rr = self.b.iter().map(|v| v * v).sum();
-        if self.mode == ExecMode::Persistent {
-            // the paper's TB-level "workload" cache: searched exactly once
-            self.plan = MergePlan::new(&self.a, self.parts);
-            self.plan_searches = 1;
+        self.farm_pipe = None;
+        self.pipe = None;
+        let pc = Arc::new(Precond::build(self.precond_spec, &self.a, &self.blocks)?);
+        if self.mode == ExecMode::Pipelined {
+            // the pipelined recurrence is primed serially once (two SpMVs
+            // + three dots); the widened vector set lives in PipeState
+            let st = PipeState::prime(&self.a, &self.b, None, &pc)?;
+            self.rr = st.rr;
+            self.rz = 0.0;
+            self.pipe = Some(st);
+            // row-partitioned SpMV inside the fused pass — no merge plan
+            self.plan_searches = 0;
             if let Some(farm) = &self.farm {
-                // multi-tenant admission: resident vectors registered on
-                // the farm's spawn-once workers — zero thread spawns
-                let mut tenant = farm.admit_cg(self.a.clone(), self.plan.clone())?;
+                if self.batch_iters > 0 {
+                    return Err(Error::invalid(
+                        "batched command graphs are not supported for pipelined CG \
+                         farm sessions",
+                    ));
+                }
+                let mut tenant =
+                    farm.admit_cg_pipelined(self.a.clone(), self.parts, self.precond_spec)?;
                 if self.resilience.enabled() {
+                    // FarmCgPipe rejects resilience; surface that here
+                    // instead of silently dropping the supervision config
                     tenant.configure_resilience(self.resilience.clone())?;
                 }
-                self.farm_session = Some(tenant);
+                self.farm_pipe = Some(tenant);
             } else if self.threaded {
-                // spawn-once worker pool: the only thread creation of the
-                // whole solve; every subsequent `advance` is spawn-free
-                self.pool =
-                    Some(CgPool::spawn(self.a.clone(), self.plan.clone(), self.threads)?);
+                self.pipe_pool = Some(PipePool::spawn(
+                    self.a.clone(),
+                    pc.clone(),
+                    self.parts,
+                    self.threads,
+                )?);
             }
         } else {
-            self.plan_searches = 0;
+            self.x.iter_mut().for_each(|v| *v = 0.0);
+            self.r.copy_from_slice(&self.b);
+            // classic PCG priming: z = M⁻¹r, p = z, rz = r·z (identity
+            // preconditioner reduces to the classic r=p=b, rz=rr start)
+            pc.apply(&self.r, &mut self.z);
+            self.p.copy_from_slice(&self.z);
+            self.rr = self.b.iter().map(|v| v * v).sum();
+            self.rz = self.r.iter().zip(&self.z).map(|(a, b)| a * b).sum();
+            if self.mode == ExecMode::Persistent {
+                // the paper's TB-level "workload" cache: searched exactly once
+                self.plan = MergePlan::new(&self.a, self.parts);
+                self.plan_searches = 1;
+                if let Some(farm) = &self.farm {
+                    if !pc.is_identity() {
+                        return Err(Error::invalid(
+                            "preconditioned CG on the farm requires the pipelined \
+                             execution model (CgSessionBuilder::pipelined): the \
+                             classic farm path has no preconditioner plumbing",
+                        ));
+                    }
+                    // multi-tenant admission: resident vectors registered on
+                    // the farm's spawn-once workers — zero thread spawns
+                    let mut tenant = farm.admit_cg(self.a.clone(), self.plan.clone())?;
+                    if self.resilience.enabled() {
+                        tenant.configure_resilience(self.resilience.clone())?;
+                    }
+                    self.farm_session = Some(tenant);
+                } else if self.threaded {
+                    // spawn-once worker pool: the only thread creation of the
+                    // whole solve; every subsequent `advance` is spawn-free
+                    self.pool = Some(CgPool::spawn_preconditioned(
+                        self.a.clone(),
+                        self.plan.clone(),
+                        self.threads,
+                        pc.clone(),
+                    )?);
+                }
+            } else {
+                self.plan_searches = 0;
+            }
         }
+        self.pc = Some(pc);
         self.iters = 0;
         self.wall_seconds = 0.0;
         self.invocations = 0;
@@ -889,7 +1145,10 @@ impl Solver for CpuCg {
             self.iters as f64,
             "iters/s",
             Some(self.rr),
-            self.pool.as_ref().map(|p| p.barrier_wait_seconds()),
+            self.pool
+                .as_ref()
+                .map(|p| p.barrier_wait_seconds())
+                .or_else(|| self.pipe_pool.as_ref().map(|p| p.barrier_wait_seconds())),
         );
         if self.farm.is_some() {
             rep.queue_wait_seconds = Some(self.queue_wait_seconds);
@@ -904,12 +1163,17 @@ impl Solver for CpuCg {
     }
 
     fn state_f64(&self) -> Result<Vec<f64>> {
-        Ok(self.x.clone())
+        // pipelined iterates live in the PipeState, not the classic x
+        Ok(match &self.pipe {
+            Some(st) => st.x.clone(),
+            None => self.x.clone(),
+        })
     }
 
     fn true_residual(&self) -> Result<Option<f64>> {
+        let x = self.pipe.as_ref().map(|st| st.x.as_slice()).unwrap_or(&self.x);
         let mut ax = vec![0.0; self.a.n_rows];
-        self.a.spmv_gold(&self.x, &mut ax);
+        self.a.spmv_gold(x, &mut ax);
         Ok(Some(
             self.b
                 .iter()
@@ -1108,6 +1372,209 @@ mod tests {
         assert_eq!(pooled_iters, iters);
         assert_eq!(pooled.rr.to_bits(), serial.rr.to_bits());
         assert_eq!(pooled.state_f64().unwrap(), serial.state_f64().unwrap());
+    }
+
+    // -----------------------------------------------------------------
+    // Preconditioned classic CG and pipelined CG through the solver seam
+    // -----------------------------------------------------------------
+
+    /// Tentpole acceptance: the pipelined solver walks the serial
+    /// pipelined recurrence bit-for-bit at workers {1, 2, 3, 8} and
+    /// across resumed advances, for every preconditioner, and the
+    /// threaded path pays exactly ONE barrier reduction per iteration.
+    #[test]
+    fn pipelined_cg_is_bit_identical_across_threads_resume_and_preconditioners() {
+        let a = gen::poisson2d(14);
+        let b = gen::rhs(a.n_rows, 5);
+        for spec in [
+            Preconditioner::None,
+            Preconditioner::Jacobi,
+            Preconditioner::BlockJacobi { block: 5 },
+        ] {
+            // oracle: the raw serial recurrence, one uninterrupted run
+            let blocks = parallel::partition(a.n_rows, 6);
+            let pc = Precond::build(spec, &a, &blocks).unwrap();
+            let mut want = PipeState::prime(&a, &b, None, &pc).unwrap();
+            let run = pipeline::advance_serial(&a, &blocks, &pc, &mut want, 0.0, 18);
+            assert_eq!(run.iters, 18, "spec={spec:?}");
+            for threads in [1usize, 2, 3, 8] {
+                let mut s = CpuCg::system(
+                    a.clone(),
+                    b.clone(),
+                    6,
+                    threads,
+                    threads > 1,
+                    ExecMode::Pipelined,
+                )
+                .unwrap()
+                .with_preconditioner(spec);
+                s.prepare().unwrap();
+                s.advance(7).unwrap();
+                s.advance(11).unwrap();
+                assert_eq!(
+                    s.state_f64().unwrap(),
+                    want.x,
+                    "spec={spec:?} threads={threads}"
+                );
+                assert_eq!(
+                    s.rr.to_bits(),
+                    want.rr.to_bits(),
+                    "spec={spec:?} threads={threads}"
+                );
+                let rep = s.report();
+                assert_eq!(rep.steps, 18);
+                assert_eq!(rep.invocations, 2, "one resident launch per advance");
+                if let Some(pool) = &s.pipe_pool {
+                    assert_eq!(
+                        pool.barrier_reduction_generations(),
+                        18,
+                        "spec={spec:?} threads={threads}: ONE reduction per iteration"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Classic PCG: the serial `step_precond` path and the widened-slot
+    /// pool walk identical bits at every worker count, across resumes;
+    /// the pool pays exactly TWO barrier reductions per iteration.
+    #[test]
+    fn preconditioned_classic_cg_is_bit_identical_serial_vs_pool() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 7);
+        for spec in [Preconditioner::Jacobi, Preconditioner::BlockJacobi { block: 4 }] {
+            let mut serial =
+                CpuCg::system(a.clone(), b.clone(), 8, 1, false, ExecMode::Persistent)
+                    .unwrap()
+                    .with_preconditioner(spec);
+            serial.prepare().unwrap();
+            serial.advance(9).unwrap();
+            serial.advance(6).unwrap();
+            let want = serial.state_f64().unwrap();
+            for threads in [2usize, 3, 8] {
+                let mut pooled =
+                    CpuCg::system(a.clone(), b.clone(), 8, threads, true, ExecMode::Persistent)
+                        .unwrap()
+                        .with_preconditioner(spec);
+                pooled.prepare().unwrap();
+                pooled.advance(9).unwrap();
+                pooled.advance(6).unwrap();
+                assert_eq!(
+                    pooled.state_f64().unwrap(),
+                    want,
+                    "spec={spec:?} threads={threads}"
+                );
+                assert_eq!(pooled.rr.to_bits(), serial.rr.to_bits(), "spec={spec:?}");
+                assert_eq!(pooled.rz.to_bits(), serial.rz.to_bits(), "spec={spec:?}");
+                let pool = pooled.pool.as_ref().expect("threaded persistent rides the pool");
+                assert_eq!(
+                    pool.barrier_reduction_generations(),
+                    2 * 15,
+                    "spec={spec:?} threads={threads}: TWO reductions per iteration"
+                );
+            }
+        }
+    }
+
+    /// Preconditioning must *do* something: on an ill-conditioned system
+    /// Jacobi reaches the tolerance in strictly fewer iterations than
+    /// identity, and pipelined agrees with classic on the iterate.
+    #[test]
+    fn preconditioning_cuts_iterations_on_an_ill_conditioned_system() {
+        let a = gen::ill_conditioned(220, 1e6, 11).unwrap();
+        let b = gen::rhs(a.n_rows, 3);
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        let tol = 1e-9 * rr0;
+        let mut run = |spec: Preconditioner, mode: ExecMode| {
+            let mut s = CpuCg::system(a.clone(), b.clone(), 8, 1, false, mode)
+                .unwrap()
+                .with_preconditioner(spec);
+            s.prepare().unwrap();
+            let iters = s.advance_until(tol, 50_000).unwrap();
+            assert!(iters < 50_000, "spec={spec:?} mode={mode:?} did not converge");
+            (iters, s.true_residual().unwrap().unwrap())
+        };
+        let (plain, _) = run(Preconditioner::None, ExecMode::Persistent);
+        let (jacobi, _) = run(Preconditioner::Jacobi, ExecMode::Persistent);
+        assert!(
+            jacobi < plain,
+            "Jacobi must cut iterations on an ill-conditioned diagonal ({jacobi} vs {plain})"
+        );
+        let (pipe_jacobi, res) = run(Preconditioner::Jacobi, ExecMode::Pipelined);
+        // same Krylov space, different recurrence roundoff: allow slack
+        assert!(
+            pipe_jacobi <= plain,
+            "pipelined Jacobi must also beat plain classic ({pipe_jacobi} vs {plain})"
+        );
+        assert!(res.is_finite());
+    }
+
+    /// Pipelined `advance_until` stops on the recurrence threshold with
+    /// the same iterate serial vs pooled, and the error path (a
+    /// not-positive-definite system) surfaces through the pipelined
+    /// solver while still recording the completed-iteration metrics.
+    #[test]
+    fn pipelined_advance_until_and_error_paths() {
+        let a = gen::poisson2d(12);
+        let b = gen::rhs(a.n_rows, 6);
+        let rr0: f64 = b.iter().map(|v| v * v).sum();
+        let tol = 1e-10 * rr0;
+        let mut serial = CpuCg::system(a.clone(), b.clone(), 8, 1, false, ExecMode::Pipelined)
+            .unwrap()
+            .with_preconditioner(Preconditioner::Jacobi);
+        serial.prepare().unwrap();
+        let iters = serial.advance_until(tol, 10_000).unwrap();
+        assert!(iters > 0 && iters < 10_000, "converged early ({iters})");
+        assert!(serial.rr <= tol);
+        let mut pooled = CpuCg::system(a, b, 8, 3, true, ExecMode::Pipelined)
+            .unwrap()
+            .with_preconditioner(Preconditioner::Jacobi);
+        pooled.prepare().unwrap();
+        let pooled_iters = pooled.advance_until(tol, 10_000).unwrap();
+        assert_eq!(pooled_iters, iters);
+        assert_eq!(pooled.rr.to_bits(), serial.rr.to_bits());
+        assert_eq!(pooled.state_f64().unwrap(), serial.state_f64().unwrap());
+
+        // indefinite system: the pipelined recurrence fails cleanly
+        let bad = Csr::from_coo(2, 2, vec![(0, 0, 2.0), (1, 1, -1.0)]).unwrap();
+        let mut s = CpuCg::system(bad, vec![1.0, 1.0], 2, 1, false, ExecMode::Pipelined).unwrap();
+        s.prepare().unwrap();
+        let err = s.advance(10).unwrap_err();
+        assert!(format!("{err}").contains("positive definite"), "{err}");
+        let rep = s.report();
+        assert_eq!(rep.invocations, 1, "the launch happened");
+        assert!(rep.wall_seconds > 0.0);
+    }
+
+    /// Pipelined streams fewer global bytes per iteration than the
+    /// host-loop path and accounts the preconditioner's extra row-local
+    /// passes; identity persistent stays exactly the fused two passes.
+    #[test]
+    fn cg_bytes_per_iter_accounts_mode_and_preconditioner() {
+        let a = gen::poisson2d(10);
+        let b = gen::rhs(a.n_rows, 2);
+        let n = a.n_rows as u64;
+        let mk = |mode: ExecMode, spec: Preconditioner| {
+            CpuCg::system(a.clone(), b.clone(), 4, 1, false, mode)
+                .unwrap()
+                .with_preconditioner(spec)
+        };
+        let persistent = mk(ExecMode::Persistent, Preconditioner::None).bytes_per_iter();
+        let pipelined = mk(ExecMode::Pipelined, Preconditioner::None).bytes_per_iter();
+        let host = mk(ExecMode::HostLoop, Preconditioner::None).bytes_per_iter();
+        assert!(persistent < pipelined && pipelined < host);
+        assert_eq!(pipelined - persistent, n * 8, "3 passes vs 2");
+        assert_eq!(
+            mk(ExecMode::Pipelined, Preconditioner::Jacobi).bytes_per_iter() - pipelined,
+            n * 8,
+            "Jacobi adds one row-local pass"
+        );
+        assert_eq!(
+            mk(ExecMode::Pipelined, Preconditioner::BlockJacobi { block: 4 }).bytes_per_iter()
+                - pipelined,
+            2 * n * 8,
+            "block-Jacobi adds two row-local passes"
+        );
     }
 
     // -----------------------------------------------------------------
@@ -1320,6 +1787,20 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err}").contains("persistent"), "{err}");
+    }
+
+    /// Pipelined is a CG-only execution model: stencil construction
+    /// rejects it up front.
+    #[test]
+    fn stencil_rejects_the_pipelined_model() {
+        let err = CpuStencil::new(
+            "2d5pt",
+            &[8, 8],
+            &StencilOptions::new(2, ExecMode::Pipelined, 1),
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("CG-only"), "{err}");
     }
 
     /// `prepare()` re-entry replaces the stencil pool cleanly (old

@@ -2,7 +2,7 @@
 //!
 //! The paper's central claim is that the PERKS execution model is "largely
 //! independent of the solver's implementation" (§III). This module is that
-//! independence made concrete: one builder, one [`Solver`] trait, one
+//! independence made concrete: typed builders, one [`Solver`] trait, one
 //! [`Report`] shape — over every backend the crate implements:
 //!
 //! * [`Backend::Pjrt`] — the AOT HLO artifacts executed through the PJRT
@@ -12,47 +12,93 @@
 //! * [`Backend::Simulated`] — the paper's analytical performance model on
 //!   the Table I device catalog (A100/V100/P100 at paper scale).
 //!
+//! ## Typed sub-builders
+//!
+//! Entry is one of two typed sub-builders, so solver-specific knobs are
+//! scoped at compile time instead of validated at `build()`:
+//!
+//! * [`SessionBuilder::stencil`]`(bench, interior, dtype)` →
+//!   [`StencilSessionBuilder`], which alone carries
+//!   [`temporal`](StencilSessionBuilder::temporal) and
+//!   [`initial_domain`](StencilSessionBuilder::initial_domain);
+//! * [`SessionBuilder::cg`]`(n)` / [`SessionBuilder::cg_system`]`(a, b)` →
+//!   [`CgSessionBuilder`], which alone carries
+//!   [`preconditioner`](CgSessionBuilder::preconditioner),
+//!   [`pipelined`](CgSessionBuilder::pipelined),
+//!   [`parts`](CgSessionBuilder::parts) and
+//!   [`threaded`](CgSessionBuilder::threaded).
+//!
+//! Shared knobs — backend/threads, mode/policy/auto, seed, farm,
+//! batch_epochs, and the resilience family — exist identically on both.
+//! The pre-existing flat knobs still compile as `#[deprecated]`
+//! forwarders; migration is mechanical:
+//!
+//! | flat (deprecated) | typed replacement |
+//! |---|---|
+//! | `.workload(Workload::stencil(b, i, d))` | [`SessionBuilder::stencil`]`(b, i, d)` |
+//! | `.workload(Workload::cg(n))` | [`SessionBuilder::cg`]`(n)` |
+//! | `.workload(Workload::cg_system(a, b))` | [`SessionBuilder::cg_system`]`(a, b)` |
+//! | `.temporal(bt)` | [`StencilSessionBuilder::temporal`] |
+//! | `.initial_domain(v)` | [`StencilSessionBuilder::initial_domain`] |
+//! | `.cg_parts(p)` | [`CgSessionBuilder::parts`] |
+//! | `.cg_threaded(t)` | [`CgSessionBuilder::threaded`] |
+//!
 //! The execution model is either fixed ([`ExecPolicy::Fixed`]) or chosen
 //! by measurement/projection ([`ExecPolicy::Auto`], which probes every
 //! candidate mode through `coordinator::autotune::tune_exec_mode` and, on
-//! the CPU backend, autotunes the thread count).
+//! the CPU backend, autotunes the thread count). CG sessions on the CPU
+//! backend additionally expose [`ExecMode::Pipelined`] — Ghysels–Vanroose
+//! pipelined CG, **one** grid-barrier reduction per iteration instead of
+//! classic CG's two ([`crate::cg::pipeline`]), optionally preconditioned
+//! (none / Jacobi / block-Jacobi, [`Preconditioner`]) — selected with
+//! [`CgSessionBuilder::pipelined`] or raced against the classic
+//! persistent pool by `Auto`. Iterates are bit-identical to the serial
+//! pipelined recurrence at every worker count.
 //!
 //! Stencil workloads on the CPU backend additionally compose PERKS with
-//! overlapped **temporal blocking** via [`SessionBuilder::temporal`]: at
-//! degree `bt` the resident workers advance `bt` sub-steps locally per
-//! boundary exchange (2 barriers per *epoch* instead of 2 per *step*),
-//! bit-identically to `bt = 1`, trading redundant trapezoid compute
-//! ([`Report::redundancy`]) for `bt`x fewer grid syncs. Left unset,
-//! `ExecPolicy::Auto` probes `bt ∈ {1, 2, 4}` by measurement,
-//! cross-checked against the analytic
+//! overlapped **temporal blocking** via
+//! [`StencilSessionBuilder::temporal`]: at degree `bt` the resident
+//! workers advance `bt` sub-steps locally per boundary exchange
+//! (2 barriers per *epoch* instead of 2 per *step*), bit-identically to
+//! `bt = 1`, trading redundant trapezoid compute ([`Report::redundancy`])
+//! for `bt`x fewer grid syncs. Left unset, `ExecPolicy::Auto` probes
+//! `bt ∈ {1, 2, 4}` by measurement, cross-checked against the analytic
 //! [`stencil::temporal::overlap_cost_banded`] model; the resolved degree
 //! is visible as [`Session::temporal_degree`].
 //!
 //! ## Quickstart
 //!
 //! ```no_run
-//! use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+//! use perks::session::{Backend, ExecMode, Preconditioner, SessionBuilder};
 //! use perks::runtime::Runtime;
 //!
 //! fn main() -> perks::Result<()> {
 //!     // a measured PJRT run of the 2d5pt stencil under the PERKS model
 //!     let rt = Runtime::new(Runtime::default_dir())?;
-//!     let mut session = SessionBuilder::new()
+//!     let mut session = SessionBuilder::stencil("2d5pt", "128x128", "f32")
 //!         .backend(Backend::pjrt(rt))
-//!         .workload(Workload::stencil("2d5pt", "128x128", "f32"))
 //!         .mode(ExecMode::Persistent)
 //!         .build()?;
 //!     let report = session.run(session.aligned_steps(64))?;
 //!     println!("{:.2e} {}", report.fom, report.fom_unit);
 //!
 //!     // the same workload, CPU persistent threads, auto-tuned
-//!     let mut cpu = SessionBuilder::new()
-//!         .backend(Backend::cpu(0)) // 0 = autotune the thread count
-//!         .workload(Workload::stencil("2d5pt", "128x128", "f64"))
+//!     let mut cpu = SessionBuilder::stencil("2d5pt", "128x128", "f64")
+//!         .threads(0) // 0 = autotune the thread count
 //!         .auto()
 //!         .build()?;
 //!     let rep = cpu.run(64)?;
 //!     println!("auto picked {} ({:.2e} cells/s)", rep.mode.name(), rep.fom);
+//!
+//!     // pipelined, Jacobi-preconditioned CG on the persistent pool
+//!     let mut cg = SessionBuilder::cg(256 * 256)
+//!         .threads(8)
+//!         .threaded(true)
+//!         .pipelined(true)
+//!         .preconditioner(Preconditioner::Jacobi)
+//!         .build()?;
+//!     let iters = cg.advance_until(1e-10, 10_000)?;
+//!     println!("converged in {iters} iterations");
 //!     Ok(())
 //! }
 //! ```
@@ -98,6 +144,7 @@ pub mod sim;
 
 use std::rc::Rc;
 
+pub use crate::cg::precond::Preconditioner;
 use crate::coordinator::autotune;
 pub use crate::coordinator::executor::ExecMode;
 use crate::error::{Error, Result};
@@ -255,6 +302,9 @@ pub struct SessionBuilder {
     seed: u64,
     cg_parts: usize,
     cg_threaded: bool,
+    /// CG preconditioner, applied identically on every CG execution path
+    /// (serial / pooled / farm); identity (`None`) by default.
+    precond: Preconditioner,
     /// Temporal-blocking degree: `None` = default (1, or auto-probed
     /// under `ExecPolicy::Auto` on the CPU stencil substrate).
     temporal: Option<usize>,
@@ -285,6 +335,7 @@ impl SessionBuilder {
             seed: 42,
             cg_parts: 8,
             cg_threaded: false,
+            precond: Preconditioner::None,
             temporal: None,
             init: None,
             farm: None,
@@ -293,11 +344,41 @@ impl SessionBuilder {
         }
     }
 
+    /// Typed entry for a stencil session: one of the Table III benchmarks
+    /// on a `"128x128"`-style interior with dtype `"f32"` or `"f64"`.
+    /// The returned [`StencilSessionBuilder`] scopes the stencil-only
+    /// knobs (`temporal`, `initial_domain`) at compile time.
+    pub fn stencil(bench: &str, interior: &str, dtype: &str) -> StencilSessionBuilder {
+        let mut inner = Self::new();
+        inner.workload = Some(Workload::stencil(bench, interior, dtype));
+        StencilSessionBuilder { inner }
+    }
+
+    /// Typed entry for a CG session on the 5-point Poisson system of a
+    /// `sqrt(n) x sqrt(n)` grid (`n` must be a perfect square). The
+    /// returned [`CgSessionBuilder`] scopes the CG-only knobs
+    /// (`preconditioner`, `pipelined`, `parts`, `threaded`) at compile
+    /// time.
+    pub fn cg(n: usize) -> CgSessionBuilder {
+        let mut inner = Self::new();
+        inner.workload = Some(Workload::cg(n));
+        CgSessionBuilder { inner }
+    }
+
+    /// Typed entry for a CG session on an explicit SPD system.
+    pub fn cg_system(a: Csr, b: Vec<f64>) -> CgSessionBuilder {
+        let mut inner = Self::new();
+        inner.workload = Some(Workload::CgSystem { a, b });
+        CgSessionBuilder { inner }
+    }
+
     pub fn backend(mut self, backend: Backend) -> Self {
         self.backend = Some(backend);
         self
     }
 
+    #[deprecated(note = "use the typed sub-builders: SessionBuilder::stencil / \
+                         SessionBuilder::cg / SessionBuilder::cg_system")]
     pub fn workload(mut self, workload: Workload) -> Self {
         self.workload = Some(workload);
         self
@@ -330,6 +411,7 @@ impl SessionBuilder {
     /// Left unset, [`ExecPolicy::Auto`] probes `bt ∈ {1, 2, 4}` by
     /// measured wall time, cross-checked against the
     /// [`stencil::temporal::overlap_cost_banded`] analytic model.
+    #[deprecated(note = "use StencilSessionBuilder::temporal (via SessionBuilder::stencil)")]
     pub fn temporal(mut self, bt: usize) -> Self {
         self.temporal = Some(bt);
         self
@@ -450,12 +532,14 @@ impl SessionBuilder {
 
     /// Explicit padded initial domain for stencil workloads (overrides the
     /// seeded randomization); length must match the padded extents.
+    #[deprecated(note = "use StencilSessionBuilder::initial_domain (via SessionBuilder::stencil)")]
     pub fn initial_domain(mut self, data: Vec<f64>) -> Self {
         self.init = Some(data);
         self
     }
 
     /// Worker shares for the CPU merge-SpMV (CG workloads).
+    #[deprecated(note = "use CgSessionBuilder::parts (via SessionBuilder::cg)")]
     pub fn cg_parts(mut self, parts: usize) -> Self {
         self.cg_parts = parts;
         self
@@ -466,6 +550,7 @@ impl SessionBuilder {
     /// persistent mode runs the backend's `threads` as a spawn-once
     /// worker pool with the iteration loop resident in the workers
     /// (`cg::pool`). Iterates are identical either way.
+    #[deprecated(note = "use CgSessionBuilder::threaded (via SessionBuilder::cg)")]
     pub fn cg_threaded(mut self, threaded: bool) -> Self {
         self.cg_threaded = threaded;
         self
@@ -511,17 +596,62 @@ impl SessionBuilder {
                 }
             }
         }
+        let is_cg = matches!(workload, Workload::Cg { .. } | Workload::CgSystem { .. });
+        // preconditioning is a feature of the native CG substrates (the
+        // serial recurrence, the persistent pool, the pipelined farm path)
+        if self.precond != Preconditioner::None {
+            if !is_cg {
+                return Err(Error::invalid("preconditioner only applies to CG workloads"));
+            }
+            if !matches!(backend, Backend::CpuPersistent { .. }) {
+                return Err(Error::invalid(
+                    "preconditioned CG is implemented on the CPU persistent-threads \
+                     backend",
+                ));
+            }
+        }
         // farm sessions: shared-worker execution is CPU-persistent-only,
-        // and the execution model is the persistent one by definition
+        // and the execution model is resident by definition — the classic
+        // persistent one, or (for CG) the pipelined one
+        let pipelined_farm =
+            self.farm.is_some() && matches!(self.policy, ExecPolicy::Fixed(ExecMode::Pipelined));
         if self.farm.is_some() {
             if !matches!(backend, Backend::CpuPersistent { .. }) {
                 return Err(Error::invalid(
                     "farm sessions run on the CPU persistent-threads backend",
                 ));
             }
-            if matches!(self.policy, ExecPolicy::Fixed(m) if m != ExecMode::Persistent) {
+            if matches!(self.policy, ExecPolicy::Fixed(m)
+                if m != ExecMode::Persistent && m != ExecMode::Pipelined)
+            {
                 return Err(Error::invalid(
                     "farm sessions require the persistent execution model",
+                ));
+            }
+            if pipelined_farm {
+                if !is_cg {
+                    return Err(Error::invalid(
+                        "pipelined is a CG-only execution model; stencils have no \
+                         dot-product pipeline",
+                    ));
+                }
+                if self.batch_epochs > 0 {
+                    return Err(Error::invalid(
+                        "batched command graphs are not supported for pipelined CG \
+                         farm sessions",
+                    ));
+                }
+                if self.resilience.enabled() {
+                    return Err(Error::invalid(
+                        "resilience is not supported for pipelined CG farm sessions; \
+                         use the classic CG farm path for checkpoint/replay",
+                    ));
+                }
+            } else if is_cg && self.precond != Preconditioner::None {
+                return Err(Error::invalid(
+                    "preconditioned CG on the farm requires the pipelined execution \
+                     model (CgSessionBuilder::pipelined): the classic farm path has \
+                     no preconditioner plumbing",
                 ));
             }
         }
@@ -552,13 +682,16 @@ impl SessionBuilder {
         if let Some(farm) = self.farm.clone() {
             // the farm decides scheduling; no mode/temporal probing
             let temporal = self.temporal.unwrap_or(1);
+            let mode =
+                if pipelined_farm { ExecMode::Pipelined } else { ExecMode::Persistent };
             let mut solver = make_solver(
                 &backend,
                 &workload,
-                ExecMode::Persistent,
+                mode,
                 self.seed,
                 self.cg_parts,
                 self.cg_threaded,
+                self.precond,
                 temporal,
                 self.init.as_deref(),
                 Some(farm),
@@ -566,12 +699,7 @@ impl SessionBuilder {
                 self.resilience,
             )?;
             solver.prepare()?;
-            return Ok(Session {
-                solver,
-                mode: ExecMode::Persistent,
-                temporal,
-                backend_name: backend.name(),
-            });
+            return Ok(Session { solver, mode, temporal, backend_name: backend.name() });
         }
         let candidates = mode_candidates(&backend, &workload);
         // a pinned bt > 1 narrows Auto's mode search to the persistent
@@ -608,6 +736,7 @@ impl SessionBuilder {
                         self.seed,
                         self.cg_parts,
                         self.cg_threaded,
+                        self.precond,
                         bt,
                         self.init.as_deref(),
                         None,
@@ -669,6 +798,7 @@ impl SessionBuilder {
             self.seed,
             self.cg_parts,
             self.cg_threaded,
+            self.precond,
             temporal,
             self.init.as_deref(),
             None,
@@ -679,6 +809,180 @@ impl SessionBuilder {
         Ok(Session { solver, mode, temporal, backend_name: backend.name() })
     }
 }
+
+/// Typed builder for stencil sessions (see [`SessionBuilder::stencil`]).
+/// Carries the stencil-only knobs; everything shared with CG sessions is
+/// generated by `shared_knobs!` below.
+pub struct StencilSessionBuilder {
+    inner: SessionBuilder,
+}
+
+impl StencilSessionBuilder {
+    /// Temporal-blocking degree `bt` — see the module docs. Stencil-only:
+    /// CG has no trapezoid overlap to batch.
+    pub fn temporal(mut self, bt: usize) -> Self {
+        self.inner.temporal = Some(bt);
+        self
+    }
+
+    /// Explicit padded initial domain (overrides the seeded
+    /// randomization); length must match the padded extents.
+    pub fn initial_domain(mut self, data: Vec<f64>) -> Self {
+        self.inner.init = Some(data);
+        self
+    }
+}
+
+/// Typed builder for CG sessions (see [`SessionBuilder::cg`] /
+/// [`SessionBuilder::cg_system`]). Carries the CG-only knobs; everything
+/// shared with stencil sessions is generated by `shared_knobs!` below.
+pub struct CgSessionBuilder {
+    inner: SessionBuilder,
+}
+
+impl CgSessionBuilder {
+    /// Preconditioner applied inside every execution path — the serial
+    /// recurrence, the spawn-once pool, and the pipelined farm — with
+    /// identical (bit-exact) iterates across them. Jacobi and
+    /// block-Jacobi cost one extra fused vector pass per iteration
+    /// (accounted in the traffic model); identity ([`Preconditioner::None`],
+    /// the default) costs nothing.
+    pub fn preconditioner(mut self, pc: Preconditioner) -> Self {
+        self.inner.precond = pc;
+        self
+    }
+
+    /// Pipelined CG ([`ExecMode::Pipelined`]): fold p·Ap, r·r and the
+    /// preconditioned pipeline terms through **one** grid-barrier
+    /// reduction per iteration instead of classic CG's two, at the price
+    /// of four auxiliary vectors. `pipelined(false)` restores the classic
+    /// persistent model. Equivalent to `.mode(ExecMode::Pipelined)`.
+    pub fn pipelined(mut self, on: bool) -> Self {
+        self.inner.policy =
+            ExecPolicy::Fixed(if on { ExecMode::Pipelined } else { ExecMode::Persistent });
+        self
+    }
+
+    /// Worker shares for the CPU merge-SpMV and the barrier-reduction
+    /// block partition.
+    pub fn parts(mut self, parts: usize) -> Self {
+        self.inner.cg_parts = parts;
+        self
+    }
+
+    /// Threaded execution for the CPU CG substrate: host-loop mode
+    /// respawns SpMV workers every iteration (the measured baseline),
+    /// resident modes run the backend's `threads` as a spawn-once worker
+    /// pool with the iteration loop inside the workers. Iterates are
+    /// identical either way.
+    pub fn threaded(mut self, threaded: bool) -> Self {
+        self.inner.cg_threaded = threaded;
+        self
+    }
+}
+
+/// The knobs shared by both typed sub-builders, generated once per
+/// sub-builder so the flat [`SessionBuilder`] stays the single source of
+/// truth for their semantics (each method forwards to its namesake
+/// there — see those docs).
+macro_rules! shared_knobs {
+    ($T:ident) => {
+        impl $T {
+            /// See [`SessionBuilder::backend`].
+            pub fn backend(mut self, backend: Backend) -> Self {
+                self.inner = self.inner.backend(backend);
+                self
+            }
+
+            /// Shorthand for `.backend(Backend::cpu(n))` — the CPU
+            /// persistent-threads backend; `n == 0` autotunes.
+            pub fn threads(mut self, n: usize) -> Self {
+                self.inner = self.inner.backend(Backend::cpu(n));
+                self
+            }
+
+            /// See [`SessionBuilder::mode`].
+            pub fn mode(mut self, mode: ExecMode) -> Self {
+                self.inner = self.inner.mode(mode);
+                self
+            }
+
+            /// See [`SessionBuilder::policy`].
+            pub fn policy(mut self, policy: ExecPolicy) -> Self {
+                self.inner = self.inner.policy(policy);
+                self
+            }
+
+            /// See [`SessionBuilder::auto`].
+            pub fn auto(mut self) -> Self {
+                self.inner = self.inner.auto();
+                self
+            }
+
+            /// See [`SessionBuilder::seed`].
+            pub fn seed(mut self, seed: u64) -> Self {
+                self.inner = self.inner.seed(seed);
+                self
+            }
+
+            /// See [`SessionBuilder::farm`].
+            pub fn farm(mut self, farm: &SolverFarm) -> Self {
+                self.inner = self.inner.farm(farm);
+                self
+            }
+
+            /// See [`SessionBuilder::farm_handle`].
+            pub fn farm_handle(mut self, handle: FarmHandle) -> Self {
+                self.inner = self.inner.farm_handle(handle);
+                self
+            }
+
+            /// See [`SessionBuilder::batch_epochs`].
+            pub fn batch_epochs(mut self, epochs: usize) -> Self {
+                self.inner = self.inner.batch_epochs(epochs);
+                self
+            }
+
+            /// See [`SessionBuilder::checkpoint_every`].
+            pub fn checkpoint_every(mut self, epochs: u64) -> Self {
+                self.inner = self.inner.checkpoint_every(epochs);
+                self
+            }
+
+            /// See [`SessionBuilder::retry`].
+            pub fn retry(mut self, policy: RetryPolicy) -> Self {
+                self.inner = self.inner.retry(policy);
+                self
+            }
+
+            /// See [`SessionBuilder::command_deadline`].
+            pub fn command_deadline(mut self, d: std::time::Duration) -> Self {
+                self.inner = self.inner.command_deadline(d);
+                self
+            }
+
+            /// See [`SessionBuilder::durable`].
+            pub fn durable(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+                self.inner = self.inner.durable(dir);
+                self
+            }
+
+            /// See [`SessionBuilder::resilience`].
+            pub fn resilience(mut self, cfg: ResilienceConfig) -> Self {
+                self.inner = self.inner.resilience(cfg);
+                self
+            }
+
+            /// See [`SessionBuilder::build`].
+            pub fn build(self) -> Result<Session> {
+                self.inner.build()
+            }
+        }
+    };
+}
+
+shared_knobs!(StencilSessionBuilder);
+shared_knobs!(CgSessionBuilder);
 
 /// A built, prepared solver plus its resolved execution model.
 pub struct Session {
@@ -855,8 +1159,10 @@ fn validate_workload(w: &Workload) -> Result<()> {
 }
 
 /// Candidate execution models for a backend/workload pair. The CPU
-/// substrate has no device-resident variant, and the CG substrates (AOT
-/// and native) distinguish only relaunch vs persistent.
+/// substrate has no device-resident variant; the AOT/simulated CG
+/// substrates distinguish only relaunch vs persistent, while the native
+/// CPU CG substrate adds the pipelined (one-barrier) model, so `Auto`
+/// races classic vs pipelined by measurement there.
 fn mode_candidates(backend: &Backend, workload: &Workload) -> Vec<ExecMode> {
     let is_stencil = matches!(workload, Workload::Stencil { .. });
     match backend {
@@ -865,6 +1171,9 @@ fn mode_candidates(backend: &Backend, workload: &Workload) -> Vec<ExecMode> {
         }
         Backend::CpuPersistent { .. } if is_stencil => {
             vec![ExecMode::HostLoop, ExecMode::Persistent]
+        }
+        Backend::CpuPersistent { .. } => {
+            vec![ExecMode::HostLoop, ExecMode::Persistent, ExecMode::Pipelined]
         }
         _ => vec![ExecMode::HostLoop, ExecMode::Persistent],
     }
@@ -964,6 +1273,7 @@ fn make_solver(
     seed: u64,
     cg_parts: usize,
     cg_threaded: bool,
+    precond: Preconditioner,
     temporal: usize,
     init: Option<&[f64]>,
     farm: Option<FarmHandle>,
@@ -994,7 +1304,8 @@ fn make_solver(
             Ok(Box::new(cpu::CpuStencil::new(bench, &dims, &opts, init)?))
         }
         (Backend::CpuPersistent { threads }, Workload::Cg { n }) => {
-            let mut s = cpu::CpuCg::poisson(*n, seed, cg_parts, *threads, cg_threaded, mode)?;
+            let mut s = cpu::CpuCg::poisson(*n, seed, cg_parts, *threads, cg_threaded, mode)?
+                .with_preconditioner(precond);
             if let Some(h) = farm {
                 s = s.with_farm(h).with_batch_iters(batch_epochs).with_resilience(resilience);
             }
@@ -1002,7 +1313,8 @@ fn make_solver(
         }
         (Backend::CpuPersistent { threads }, Workload::CgSystem { a, b }) => {
             let mut s =
-                cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, *threads, cg_threaded, mode)?;
+                cpu::CpuCg::system(a.clone(), b.clone(), cg_parts, *threads, cg_threaded, mode)?
+                    .with_preconditioner(precond);
             if let Some(h) = farm {
                 s = s.with_farm(h).with_batch_iters(batch_epochs).with_resilience(resilience);
             }
@@ -1037,94 +1349,71 @@ mod tests {
         assert!(msg(SessionBuilder::new().build()).contains("no backend"));
         assert!(msg(SessionBuilder::new().backend(Backend::cpu(2)).build())
             .contains("no workload"));
+        // typed sub-builders carry their workload, so only the backend can
+        // be missing
+        assert!(msg(SessionBuilder::cg(64).build()).contains("no backend"));
+        assert!(msg(SessionBuilder::stencil("2d5pt", "8x8", "f64").build())
+            .contains("no backend"));
     }
 
     #[test]
     fn build_rejects_bad_stencil_workloads() {
-        let b = || SessionBuilder::new().backend(Backend::cpu(2));
-        assert!(msg(b().workload(Workload::stencil("17d99pt", "8x8", "f64")).build())
+        assert!(msg(SessionBuilder::stencil("17d99pt", "8x8", "f64").threads(2).build())
             .contains("unknown stencil benchmark"));
-        assert!(msg(b().workload(Workload::stencil("2d5pt", "8x8x8", "f64")).build())
+        assert!(msg(SessionBuilder::stencil("2d5pt", "8x8x8", "f64").threads(2).build())
             .contains("rank"));
-        assert!(msg(b().workload(Workload::stencil("2d5pt", "8xbroken", "f64")).build())
+        assert!(msg(SessionBuilder::stencil("2d5pt", "8xbroken", "f64").threads(2).build())
             .contains("bad interior"));
-        assert!(msg(b().workload(Workload::stencil("2d5pt", "8x8", "f16")).build())
+        assert!(msg(SessionBuilder::stencil("2d5pt", "8x8", "f16").threads(2).build())
             .contains("bad dtype"));
     }
 
     #[test]
     fn build_rejects_bad_cg_and_mode_combos() {
         assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(1))
-                .workload(Workload::cg(1000)) // not a perfect square
+            SessionBuilder::cg(1000) // not a perfect square
+                .threads(1)
                 .mode(ExecMode::Persistent)
                 .build()
         )
         .contains("perfect square"));
         // the CPU substrate has no device-resident model
         assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(2))
-                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            SessionBuilder::stencil("2d5pt", "8x8", "f64")
+                .threads(2)
                 .mode(ExecMode::HostLoopResident)
                 .build()
         )
         .contains("not supported"));
-        // initial_domain is a stencil-only knob
-        assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(1))
-                .workload(Workload::cg(64))
-                .initial_domain(vec![0.0; 64])
-                .build()
-        )
-        .contains("initial_domain"));
     }
 
     #[test]
     fn build_rejects_bad_temporal_combos() {
         // bt == 0
         assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(2))
-                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
-                .temporal(0)
-                .build()
+            SessionBuilder::stencil("2d5pt", "8x8", "f64").threads(2).temporal(0).build()
         )
         .contains(">= 1"));
-        // bt > 1 on a non-stencil workload
-        assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(2))
-                .workload(Workload::cg(64))
-                .temporal(2)
-                .build()
-        )
-        .contains("stencil"));
         // bt > 1 on a backend without the composition
         assert!(msg(
-            SessionBuilder::new()
+            SessionBuilder::stencil("2d5pt", "64x64", "f64")
                 .backend(Backend::simulated(a100()))
-                .workload(Workload::stencil("2d5pt", "64x64", "f64"))
                 .temporal(2)
                 .build()
         )
         .contains("CPU"));
         // bt > 1 pinned to a per-step model
         assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(2))
-                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            SessionBuilder::stencil("2d5pt", "8x8", "f64")
+                .threads(2)
                 .mode(ExecMode::HostLoop)
                 .temporal(2)
                 .build()
         )
         .contains("persistent"));
         // bt == 1 is today's behavior and valid anywhere
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(2))
-            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+        let s = SessionBuilder::stencil("2d5pt", "8x8", "f64")
+            .threads(2)
             .mode(ExecMode::HostLoop)
             .temporal(1)
             .build()
@@ -1134,9 +1423,8 @@ mod tests {
 
     #[test]
     fn temporal_sessions_resolve_their_degree() {
-        let mut s = SessionBuilder::new()
-            .backend(Backend::cpu(3))
-            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+        let mut s = SessionBuilder::stencil("2d5pt", "16x16", "f64")
+            .threads(3)
             .mode(ExecMode::Persistent)
             .temporal(4)
             .build()
@@ -1146,9 +1434,8 @@ mod tests {
         assert_eq!(rep.steps, 8);
         assert!(rep.redundancy.unwrap() > 1.0, "epoch overlap work reported");
         // an Auto build with a pinned bt > 1 only considers persistent
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(2))
-            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+        let s = SessionBuilder::stencil("2d5pt", "16x16", "f64")
+            .threads(2)
             .auto()
             .temporal(2)
             .build()
@@ -1159,9 +1446,8 @@ mod tests {
 
     #[test]
     fn auto_probes_a_temporal_degree_on_cpu_stencils() {
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(2))
-            .workload(Workload::stencil("2d5pt", "24x24", "f64"))
+        let s = SessionBuilder::stencil("2d5pt", "24x24", "f64")
+            .threads(2)
             .auto()
             .build()
             .unwrap();
@@ -1175,45 +1461,33 @@ mod tests {
             assert_eq!(s.temporal_degree(), 1, "per-step models never batch epochs");
         }
         // non-stencil and non-CPU sessions always resolve bt = 1
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(1))
-            .workload(Workload::cg(64))
-            .auto()
-            .build()
-            .unwrap();
+        let s = SessionBuilder::cg(64).threads(1).auto().build().unwrap();
         assert_eq!(s.temporal_degree(), 1);
     }
 
     #[test]
     fn auto_picks_a_valid_mode_on_every_workload() {
         // CPU stencil
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(2))
-            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
+        let s = SessionBuilder::stencil("2d5pt", "16x16", "f64")
+            .threads(2)
             .auto()
             .build()
             .unwrap();
         assert!([ExecMode::HostLoop, ExecMode::Persistent].contains(&s.mode()));
-        // CPU CG
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(1))
-            .workload(Workload::cg(64))
-            .auto()
-            .build()
-            .unwrap();
-        assert!([ExecMode::HostLoop, ExecMode::Persistent].contains(&s.mode()));
+        // CPU CG races classic against pipelined too
+        let s = SessionBuilder::cg(64).threads(1).auto().build().unwrap();
+        assert!([ExecMode::HostLoop, ExecMode::Persistent, ExecMode::Pipelined]
+            .contains(&s.mode()));
         // simulated stencil: the model must prefer PERKS at paper scale
-        let s = SessionBuilder::new()
+        let s = SessionBuilder::stencil("2d5pt", "3072x3072", "f64")
             .backend(Backend::simulated(a100()))
-            .workload(Workload::stencil("2d5pt", "3072x3072", "f64"))
             .auto()
             .build()
             .unwrap();
         assert_eq!(s.mode(), ExecMode::Persistent);
         // simulated CG
-        let s = SessionBuilder::new()
+        let s = SessionBuilder::cg(1024)
             .backend(Backend::simulated(a100()))
-            .workload(Workload::cg(1024))
             .auto()
             .build()
             .unwrap();
@@ -1225,18 +1499,16 @@ mod tests {
         let farm = SolverFarm::spawn(1).unwrap();
         // non-CPU backend
         assert!(msg(
-            SessionBuilder::new()
+            SessionBuilder::stencil("2d5pt", "64x64", "f64")
                 .backend(Backend::simulated(a100()))
-                .workload(Workload::stencil("2d5pt", "64x64", "f64"))
                 .farm(&farm)
                 .build()
         )
         .contains("CPU"));
         // per-step execution model
         assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(2))
-                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            SessionBuilder::stencil("2d5pt", "8x8", "f64")
+                .threads(2)
                 .mode(ExecMode::HostLoop)
                 .farm(&farm)
                 .build()
@@ -1244,9 +1516,8 @@ mod tests {
         .contains("persistent"));
         // a valid farm session resolves to Persistent (Auto included) and
         // honors a pinned temporal degree without probing
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(2))
-            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+        let s = SessionBuilder::stencil("2d5pt", "8x8", "f64")
+            .threads(2)
             .auto()
             .temporal(2)
             .farm(&farm)
@@ -1260,42 +1531,32 @@ mod tests {
     fn resilience_knobs_require_a_farm_session() {
         // each knob alone trips the validation off-farm
         assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(1))
-                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            SessionBuilder::stencil("2d5pt", "8x8", "f64")
+                .threads(1)
                 .retry(RetryPolicy::attempts(2))
                 .build()
         )
         .contains("farm"));
+        assert!(msg(SessionBuilder::cg(64).threads(1).checkpoint_every(8).build())
+            .contains("farm"));
         assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(1))
-                .workload(Workload::cg(64))
-                .checkpoint_every(8)
-                .build()
-        )
-        .contains("farm"));
-        assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(1))
-                .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            SessionBuilder::stencil("2d5pt", "8x8", "f64")
+                .threads(1)
                 .command_deadline(std::time::Duration::from_secs(5))
                 .build()
         )
         .contains("farm"));
         assert!(msg(
-            SessionBuilder::new()
-                .backend(Backend::cpu(1))
-                .workload(Workload::cg(64))
+            SessionBuilder::cg(64)
+                .threads(1)
                 .durable(std::env::temp_dir().join("perks-session-durable-knob"))
                 .build()
         )
         .contains("farm"));
         // on a farm the knobs build (and a disabled config is always fine)
         let farm = SolverFarm::spawn(1).unwrap();
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(1))
-            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+        let s = SessionBuilder::stencil("2d5pt", "8x8", "f64")
+            .threads(1)
             .farm(&farm)
             .checkpoint_every(4)
             .retry(RetryPolicy::attempts(2))
@@ -1306,14 +1567,150 @@ mod tests {
 
     #[test]
     fn aligned_steps_rounds_up_to_the_chunk() {
-        let s = SessionBuilder::new()
-            .backend(Backend::cpu(1))
-            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+        let s = SessionBuilder::stencil("2d5pt", "8x8", "f64")
+            .threads(1)
             .mode(ExecMode::Persistent)
             .build()
             .unwrap();
         // CPU substrate has chunk 1: identity
         assert_eq!(s.fused_chunk(), 1);
         assert_eq!(s.aligned_steps(7), 7);
+    }
+
+    #[test]
+    fn pipelined_and_preconditioner_combos_validate() {
+        // pipelined is CG-only: never a stencil mode candidate...
+        assert!(msg(
+            SessionBuilder::stencil("2d5pt", "8x8", "f64")
+                .threads(2)
+                .mode(ExecMode::Pipelined)
+                .build()
+        )
+        .contains("not supported"));
+        // ...and not an AOT/simulated CG candidate either
+        assert!(msg(
+            SessionBuilder::cg(64)
+                .backend(Backend::simulated(a100()))
+                .pipelined(true)
+                .build()
+        )
+        .contains("not supported"));
+        // preconditioning is native-CPU-only
+        assert!(msg(
+            SessionBuilder::cg(64)
+                .backend(Backend::simulated(a100()))
+                .preconditioner(Preconditioner::Jacobi)
+                .build()
+        )
+        .contains("CPU"));
+        // the valid combination builds, resolves, and runs
+        let mut s = SessionBuilder::cg(64)
+            .threads(2)
+            .pipelined(true)
+            .preconditioner(Preconditioner::BlockJacobi { block: 4 })
+            .parts(3)
+            .build()
+            .unwrap();
+        assert_eq!(s.mode(), ExecMode::Pipelined);
+        let rep = s.run(8).unwrap();
+        assert_eq!(rep.steps, 8);
+        assert!(rep.residual.unwrap() >= 0.0);
+        // pipelined(false) restores the classic persistent model
+        let s = SessionBuilder::cg(64).threads(1).pipelined(false).build().unwrap();
+        assert_eq!(s.mode(), ExecMode::Persistent);
+    }
+
+    #[test]
+    fn pipelined_farm_sessions_validate_and_build() {
+        let farm = SolverFarm::spawn(1).unwrap();
+        // pipelined is CG-only, on the farm too
+        assert!(msg(
+            SessionBuilder::stencil("2d5pt", "8x8", "f64")
+                .threads(2)
+                .mode(ExecMode::Pipelined)
+                .farm(&farm)
+                .build()
+        )
+        .contains("CG-only"));
+        // batching and resilience stay classic-path features
+        assert!(msg(
+            SessionBuilder::cg(64)
+                .threads(2)
+                .pipelined(true)
+                .farm(&farm)
+                .batch_epochs(4)
+                .build()
+        )
+        .contains("batched"));
+        assert!(msg(
+            SessionBuilder::cg(64)
+                .threads(2)
+                .pipelined(true)
+                .farm(&farm)
+                .checkpoint_every(4)
+                .build()
+        )
+        .contains("resilience"));
+        // a classic farm CG session cannot silently drop a preconditioner
+        assert!(msg(
+            SessionBuilder::cg(64)
+                .threads(2)
+                .preconditioner(Preconditioner::Jacobi)
+                .farm(&farm)
+                .build()
+        )
+        .contains("pipelined"));
+        // and the valid combination builds and runs on the shared workers
+        let mut s = SessionBuilder::cg(64)
+            .threads(2)
+            .pipelined(true)
+            .preconditioner(Preconditioner::Jacobi)
+            .parts(3)
+            .farm(&farm)
+            .build()
+            .unwrap();
+        assert_eq!(s.mode(), ExecMode::Pipelined);
+        let rep = s.run(6).unwrap();
+        assert_eq!(rep.steps, 6);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_flat_knobs_still_build() {
+        // the flat knobs forward to the same fields as the typed surface
+        let s = SessionBuilder::new()
+            .backend(Backend::cpu(2))
+            .workload(Workload::stencil("2d5pt", "8x8", "f64"))
+            .temporal(1)
+            .build()
+            .unwrap();
+        assert_eq!(s.temporal_degree(), 1);
+        let mut flat = SessionBuilder::new()
+            .backend(Backend::cpu(1))
+            .workload(Workload::cg(64))
+            .cg_parts(3)
+            .cg_threaded(false)
+            .build()
+            .unwrap();
+        let rep = flat.run(4).unwrap();
+        assert_eq!(rep.steps, 4);
+        // flat cross-workload misuse is still caught at build() — the
+        // typed sub-builders make these states unrepresentable
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(1))
+                .workload(Workload::cg(64))
+                .initial_domain(vec![0.0; 64])
+                .build()
+        )
+        .contains("initial_domain"));
+        assert!(msg(
+            SessionBuilder::new()
+                .backend(Backend::cpu(2))
+                .workload(Workload::cg(64))
+                .temporal(2)
+                .build()
+        )
+        .contains("stencil"));
     }
 }

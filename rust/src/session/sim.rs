@@ -32,6 +32,11 @@ impl SimStencil {
         elem: usize,
         mode: ExecMode,
     ) -> Result<Self> {
+        if mode == ExecMode::Pipelined {
+            return Err(Error::invalid(
+                "pipelined is a CG-only execution model; stencils have no dot-product pipeline",
+            ));
+        }
         let spec = stencil::spec(bench)
             .ok_or_else(|| Error::invalid(format!("unknown stencil benchmark {bench:?}")))?;
         let exp = StencilExperiment { bench: spec, elem, domain: dims.to_vec(), steps: 0 };
@@ -183,7 +188,11 @@ mod tests {
     fn sim_stencil_persistent_is_fastest_and_accumulates() {
         let dev = crate::simgpu::device::a100();
         let mut walls = Vec::new();
-        for mode in ExecMode::all() {
+        // the three paper stencil modes; Pipelined is CG-only and is
+        // rejected by SimStencil::new
+        assert!(SimStencil::new(dev.clone(), "2d5pt", &[64, 64], 8, ExecMode::Pipelined)
+            .is_err());
+        for mode in [ExecMode::HostLoop, ExecMode::HostLoopResident, ExecMode::Persistent] {
             let mut s = SimStencil::new(dev.clone(), "2d5pt", &[3072, 3072], 8, mode).unwrap();
             s.prepare().unwrap();
             s.advance(500).unwrap();

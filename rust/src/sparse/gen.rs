@@ -124,6 +124,58 @@ pub fn tridiag(n: usize) -> Csr {
     Csr::from_coo(n, n, trip).expect("tridiag construction")
 }
 
+/// Ill-conditioned SPD matrix: a symmetric diagonal rescaling
+/// `A = S·B·S` of a well-conditioned base `B` (the [-1, 2, -1]
+/// tridiagonal Laplacian), with `s_i` swept geometrically from 1 to
+/// `sqrt(spread)` in a seed-shuffled row order. The congruence keeps `A`
+/// SPD while multiplying its condition number by roughly `spread` — so
+/// plain CG stalls as `spread` grows, while Jacobi/block-Jacobi
+/// preconditioning (which recovers `B`'s scaling exactly on the
+/// diagonal) restores the base convergence rate. This is the
+/// ill-conditioned scenario axis for the preconditioner tests/benches.
+///
+/// Deterministic in `(n, spread, seed)`. `spread` must be >= 1 and
+/// finite; `n` must be >= 2.
+pub fn ill_conditioned(n: usize, spread: f64, seed: u64) -> Result<Csr> {
+    use crate::error::Error;
+    if n < 2 {
+        return Err(Error::Solver(format!(
+            "ill_conditioned needs n >= 2 (got {n})"
+        )));
+    }
+    if !(spread.is_finite() && spread >= 1.0) {
+        return Err(Error::Solver(format!(
+            "ill_conditioned spread must be finite and >= 1 (got {spread})"
+        )));
+    }
+    // geometric scale ladder, assigned to rows in a shuffled order so the
+    // bad scales are not contiguous (contiguity would make block-Jacobi
+    // trivially exact)
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(seed);
+    for i in (1..n).rev() {
+        let j = rng.index(i + 1);
+        order.swap(i, j);
+    }
+    let root = spread.sqrt();
+    let step = root.powf(1.0 / (n - 1) as f64);
+    let mut scale = vec![0.0f64; n];
+    let mut s = 1.0;
+    for &row in &order {
+        scale[row] = s;
+        s *= step;
+    }
+    let base = tridiag(n);
+    let mut trip = Vec::with_capacity(base.nnz());
+    for i in 0..n {
+        let (cols, vals) = base.row(i);
+        for (&j, &v) in cols.iter().zip(vals) {
+            trip.push((i, j, scale[i] * v * scale[j]));
+        }
+    }
+    Csr::from_coo(n, n, trip)
+}
+
 /// Deterministic right-hand side for solver tests/benches.
 pub fn rhs(n: usize, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
@@ -177,6 +229,50 @@ mod tests {
         assert_eq!(a, b);
         let c = clustered_spd(100, 5, 10, 4).unwrap();
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ill_conditioned_is_spd_with_the_requested_spread() {
+        let a = ill_conditioned(200, 1e6, 11).unwrap();
+        a.validate().unwrap();
+        assert!(a.is_symmetric(1e-9));
+        let mut lo = f64::MAX;
+        let mut hi: f64 = 0.0;
+        for i in 0..200 {
+            let (cols, vals) = a.row(i);
+            let d = vals[cols.iter().position(|&c| c == i).unwrap()];
+            assert!(d > 0.0);
+            lo = lo.min(d);
+            hi = hi.max(d);
+        }
+        // diagonal spans ~spread (diag of A is 2·s_i², s_i up to √spread)
+        assert!(hi / lo > 1e5, "diagonal spread {:.3e} too small", hi / lo);
+        // deterministic
+        assert_eq!(a, ill_conditioned(200, 1e6, 11).unwrap());
+        assert_ne!(a, ill_conditioned(200, 1e6, 12).unwrap());
+        // degenerate inputs are rejected
+        assert!(ill_conditioned(1, 1e3, 0).is_err());
+        assert!(ill_conditioned(10, 0.5, 0).is_err());
+        assert!(ill_conditioned(10, f64::NAN, 0).is_err());
+    }
+
+    #[test]
+    fn jacobi_preconditioning_repairs_ill_conditioning() {
+        use crate::cg::precond::Preconditioner;
+        use crate::cg::solver::{solve_pipelined, CgOptions};
+        let a = ill_conditioned(300, 1e8, 3).unwrap();
+        let b = rhs(300, 4);
+        let opts = CgOptions { max_iters: 4000, tol: 1e-8, ..Default::default() };
+        let plain = solve_pipelined(&a, &b, Preconditioner::None, &opts).unwrap();
+        let jac = solve_pipelined(&a, &b, Preconditioner::Jacobi, &opts).unwrap();
+        assert!(jac.converged, "Jacobi-preconditioned run must converge");
+        assert!(
+            jac.iters * 2 < plain.iters || !plain.converged,
+            "Jacobi ({}) should need far fewer iterations than plain ({}, converged={})",
+            jac.iters,
+            plain.iters,
+            plain.converged
+        );
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! (`spmv::merge::spmv_parallel`, `stencil::parallel::host_loop`,
 //! `stencil::pool`, `cg::pool`) report every OS thread they spawn here,
 //! and `coordinator::barrier::GridBarrier` reports every completed sync
-//! generation. Benches snapshot [`thread_spawns`] / [`barrier_syncs`]
+//! generation — plus, separately, every slot-ordered *reduction*
+//! generation ([`barrier_reductions`]), which is how the CG solvers'
+//! barriers-per-iteration invariant is asserted (classic = 2/iter,
+//! pipelined = 1/iter). Benches snapshot [`thread_spawns`] / [`barrier_syncs`]
 //! around a measured region to show the spawn-per-iteration baseline
 //! against the spawn-once pools, and the barriers-per-step reduction of
 //! epoch-batched temporal blocking (2 per epoch instead of 2 per step).
@@ -61,6 +64,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
 static BARRIER_SYNCS: AtomicU64 = AtomicU64::new(0);
+static BARRIER_REDUCTIONS: AtomicU64 = AtomicU64::new(0);
 static FARM_ADMISSIONS: AtomicU64 = AtomicU64::new(0);
 static FARM_COMMANDS: AtomicU64 = AtomicU64::new(0);
 static FARM_TASKS: AtomicU64 = AtomicU64::new(0);
@@ -95,6 +99,24 @@ pub fn note_barrier_syncs(n: u64) {
 /// Total grid-barrier sync generations since process start.
 pub fn barrier_syncs() -> u64 {
     BARRIER_SYNCS.load(Ordering::Relaxed)
+}
+
+/// Record `n` completed slot-ordered **reduction** generations
+/// (`GridBarrier::sync_reduce`, reported once by the leader like
+/// [`note_barrier_syncs`]). This is the counter behind the
+/// barriers-per-iteration invariant of the CG solvers: a classic pooled
+/// CG iteration pays exactly two reduction generations (p·Ap, then r·r),
+/// a pipelined pooled iteration pays exactly one (γ/δ/r·r folded out of
+/// a single generation). Relaxed for the same reason as
+/// [`note_barrier_syncs`]: every reader is behind the pool's completion
+/// handshake.
+pub fn note_barrier_reductions(n: u64) {
+    BARRIER_REDUCTIONS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total slot-ordered reduction generations since process start.
+pub fn barrier_reductions() -> u64 {
+    BARRIER_REDUCTIONS.load(Ordering::Relaxed)
 }
 
 /// Record `n` sessions admitted to a [`crate::runtime::farm::SolverFarm`].
@@ -293,6 +315,13 @@ mod tests {
         let before = barrier_syncs();
         note_barrier_syncs(2);
         assert!(barrier_syncs() >= before + 2);
+    }
+
+    #[test]
+    fn reduction_counter_is_monotonic() {
+        let before = barrier_reductions();
+        note_barrier_reductions(2);
+        assert!(barrier_reductions() >= before + 2);
     }
 
     #[test]

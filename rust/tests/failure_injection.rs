@@ -96,19 +96,14 @@ fn solver_guards_fire() {
     let rect = Csr::from_coo(2, 3, vec![(0, 0, 1.0)]).unwrap();
     let err = perks::cg::solve_persistent(&rect, &[1.0, 1.0], &Default::default()).unwrap_err();
     assert!(matches!(err, perks::Error::Solver(_)));
-    // steps not a multiple of fused count (through the deprecated driver
-    // shim, which must keep compiling and guarding)
-    let dir = Runtime::default_dir();
-    if dir.join("manifest.txt").exists() {
-        let rt = Runtime::new(dir).unwrap();
-        #[allow(deprecated)]
-        let d = perks::coordinator::StencilDriver::new(&rt, "2d5pt", "128x128", "f32").unwrap();
-        let x0 = HostTensor::f32(&[130, 130], vec![0.0; 130 * 130]);
-        let err = d
-            .run(perks::coordinator::ExecMode::Persistent, &x0, d.fused_steps + 1)
-            .unwrap_err();
-        assert!(matches!(err, perks::Error::Invalid(_)), "{err}");
-    }
+    // pipelined is a CG-only execution model: a stencil session pinned to
+    // it must fail validation instead of reaching a driver
+    let err = perks::session::SessionBuilder::stencil("2d5pt", "16x16", "f64")
+        .backend(perks::session::Backend::cpu(2))
+        .mode(perks::session::ExecMode::Pipelined)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, perks::Error::Invalid(_)), "{err}");
 }
 
 /// A worker panic on one farm tenant errors only the owning session:

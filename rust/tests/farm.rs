@@ -5,26 +5,24 @@
 //! stencil + CG tenant populations and resumed advances.
 
 use perks::runtime::farm::SolverFarm;
-use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::session::{Backend, ExecMode, SessionBuilder};
 use perks::util::counters;
 
 fn solo_stencil(interior: &str, seed: u64, bt: usize) -> perks::Session {
-    SessionBuilder::new()
-        .backend(Backend::cpu(3))
-        .workload(Workload::stencil("2d5pt", interior, "f64"))
-        .mode(ExecMode::Persistent)
+    SessionBuilder::stencil("2d5pt", interior, "f64")
         .temporal(bt)
+        .backend(Backend::cpu(3))
+        .mode(ExecMode::Persistent)
         .seed(seed)
         .build()
         .unwrap()
 }
 
 fn farm_stencil(farm: &SolverFarm, interior: &str, seed: u64, bt: usize) -> perks::Session {
-    SessionBuilder::new()
-        .backend(Backend::cpu(3))
-        .workload(Workload::stencil("2d5pt", interior, "f64"))
-        .mode(ExecMode::Persistent)
+    SessionBuilder::stencil("2d5pt", interior, "f64")
         .temporal(bt)
+        .backend(Backend::cpu(3))
+        .mode(ExecMode::Persistent)
         .seed(seed)
         .farm(farm)
         .build()
@@ -80,9 +78,8 @@ fn mixed_stencil_and_cg_sessions_share_one_farm_bit_identically() {
     let mut solo_st = solo_stencil("14x14", 3, 1);
     solo_st.advance(8).unwrap();
     let want_st = solo_st.state_f64().unwrap();
-    let mut solo_cg = SessionBuilder::new()
+    let mut solo_cg = SessionBuilder::cg(144)
         .backend(Backend::cpu(2))
-        .workload(Workload::cg(144))
         .mode(ExecMode::Persistent)
         .seed(5)
         .build()
@@ -93,9 +90,8 @@ fn mixed_stencil_and_cg_sessions_share_one_farm_bit_identically() {
 
     let farm = SolverFarm::spawn(3).unwrap();
     let mut st = farm_stencil(&farm, "14x14", 3, 1);
-    let mut cg = SessionBuilder::new()
+    let mut cg = SessionBuilder::cg(144)
         .backend(Backend::cpu(2))
-        .workload(Workload::cg(144))
         .mode(ExecMode::Persistent)
         .seed(5)
         .farm(&farm)
@@ -144,9 +140,8 @@ fn farm_advance_until_stops_on_the_solo_epoch() {
         assert_eq!(s.state_f64().unwrap(), want_state, "workers={workers}: state bits");
     }
     // CG convergence path: same iterate count and recurrence bits
-    let mut solo_cg = SessionBuilder::new()
+    let mut solo_cg = SessionBuilder::cg(100)
         .backend(Backend::cpu(2))
-        .workload(Workload::cg(100))
         .mode(ExecMode::Persistent)
         .seed(6)
         .build()
@@ -154,9 +149,8 @@ fn farm_advance_until_stops_on_the_solo_epoch() {
     let solo_iters = solo_cg.advance_until(1e-10, 10_000).unwrap();
     assert!(solo_iters < 10_000);
     let farm = SolverFarm::spawn(2).unwrap();
-    let mut cg = SessionBuilder::new()
+    let mut cg = SessionBuilder::cg(100)
         .backend(Backend::cpu(2))
-        .workload(Workload::cg(100))
         .mode(ExecMode::Persistent)
         .seed(6)
         .farm(&farm)

@@ -11,8 +11,8 @@
 
 use std::rc::Rc;
 
-use perks::runtime::{HostTensor, Runtime};
-use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+use perks::runtime::Runtime;
+use perks::session::{Backend, ExecMode, SessionBuilder};
 use perks::sparse::gen;
 use perks::stencil::{self, gold, Domain};
 
@@ -57,10 +57,10 @@ fn check_stencil_family(
 
     let tol = if dtype == "f64" { 1e-11 } else { 2e-4 };
     let mut first: Option<Vec<f64>> = None;
-    for mode in ExecMode::all() {
-        let mut session = SessionBuilder::new()
+    // pipelined is a CG-only execution model; stencils reject it
+    for mode in ExecMode::all().into_iter().filter(|m| *m != ExecMode::Pipelined) {
+        let mut session = SessionBuilder::stencil(bench, interior, dtype)
             .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::stencil(bench, interior, dtype))
             .mode(mode)
             .seed(seed)
             .build()
@@ -122,10 +122,9 @@ fn impulse_response_reveals_correct_weights() {
     let mut field = vec![0.0f64; p * p];
     let (cy, cx) = (65usize, 65usize);
     field[cy * p + cx] = 1.0;
-    let mut session = SessionBuilder::new()
-        .backend(Backend::pjrt(rt.clone()))
-        .workload(Workload::stencil("2d5pt", "128x128", "f32"))
+    let mut session = SessionBuilder::stencil("2d5pt", "128x128", "f32")
         .initial_domain(field)
+        .backend(Backend::pjrt(rt.clone()))
         .mode(ExecMode::HostLoop)
         .build()
         .unwrap();
@@ -147,9 +146,8 @@ fn impulse_response_reveals_correct_weights() {
 fn cg_session_modes_agree_and_converge() {
     let Some(rt) = runtime() else { return };
     let build = |mode: ExecMode| {
-        SessionBuilder::new()
+        SessionBuilder::cg(1024)
             .backend(Backend::pjrt(rt.clone()))
-            .workload(Workload::cg(1024))
             .mode(mode)
             .seed(5)
             .build()
@@ -183,9 +181,8 @@ fn cg_session_matches_rust_native_solver() {
     // the PJRT CG (pallas fused update + jnp spmv) and the rust-native CG
     // (merge spmv + fused passes) must walk the same iterates
     let Some(rt) = runtime() else { return };
-    let mut session = SessionBuilder::new()
+    let mut session = SessionBuilder::cg(1024)
         .backend(Backend::pjrt(rt.clone()))
-        .workload(Workload::cg(1024))
         .mode(ExecMode::Persistent)
         .seed(5)
         .build()
@@ -209,9 +206,8 @@ fn cg_session_matches_rust_native_solver() {
 #[test]
 fn runtime_metrics_track_traffic() {
     let Some(rt) = runtime() else { return };
-    let mut session = SessionBuilder::new()
+    let mut session = SessionBuilder::stencil("2d5pt", "128x128", "f32")
         .backend(Backend::pjrt(rt.clone()))
-        .workload(Workload::stencil("2d5pt", "128x128", "f32"))
         .mode(ExecMode::HostLoop)
         .seed(1)
         .build()
@@ -227,35 +223,17 @@ fn runtime_metrics_track_traffic() {
 }
 
 #[test]
-fn legacy_driver_shims_still_work() {
-    // the deprecated pre-session constructors must keep compiling and
-    // producing the same numbers as the session API
+fn pjrt_backend_rejects_pipelined_cg() {
+    // no pipelined artifact family exists: the typed builder surfaces the
+    // driver's rejection instead of silently falling back to classic CG
     let Some(rt) = runtime() else { return };
-    #[allow(deprecated)]
-    let driver =
-        perks::coordinator::StencilDriver::new(&rt, "2d5pt", "128x128", "f32").unwrap();
-    let spec = stencil::spec("2d5pt").unwrap();
-    let mut dom = Domain::for_spec(&spec, &[128, 128]).unwrap();
-    dom.randomize(4242);
-    let x0 = HostTensor::f32(&[130, 130], dom.to_f32());
-    let rep = driver.run(ExecMode::HostLoop, &x0, 8).unwrap();
-    assert!(rep.cells_per_sec(driver.interior_cells()).is_finite());
-
-    let mut session = SessionBuilder::new()
+    let err = SessionBuilder::cg(1024)
+        .pipelined(true)
         .backend(Backend::pjrt(rt.clone()))
-        .workload(Workload::stencil("2d5pt", "128x128", "f32"))
-        .mode(ExecMode::HostLoop)
-        .seed(4242)
-        .build()
-        .unwrap();
-    session.run(8).unwrap();
-    let via_session = session.state_f64().unwrap();
-    let via_driver = rep.state[0].to_f64_vec().unwrap();
-    assert_eq!(via_driver, via_session, "shim and session must agree exactly");
-
-    #[allow(deprecated)]
-    let cg = perks::coordinator::CgDriver::new(&rt, 1024).unwrap();
-    assert_eq!(cg.n, 1024);
+        .seed(5)
+        .build();
+    let msg = format!("{}", err.err().expect("pjrt pipelined CG must be rejected"));
+    assert!(msg.contains("pipelined"), "unexpected rejection text: {msg}");
 }
 
 #[test]

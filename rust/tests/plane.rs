@@ -384,13 +384,12 @@ fn hundreds_of_tenants_multiplex_on_one_executor() {
 /// counters through `Report`.
 #[test]
 fn session_batch_epochs_keeps_bits_and_reports_plane_counters() {
-    use perks::session::{Backend, ExecMode, SessionBuilder, Workload};
+    use perks::session::{Backend, ExecMode, SessionBuilder};
     let build = |farm: Option<&SolverFarm>, batch: usize| {
-        let mut b = SessionBuilder::new()
-            .backend(Backend::cpu(2))
-            .workload(Workload::stencil("2d5pt", "16x16", "f64"))
-            .mode(ExecMode::Persistent)
+        let mut b = SessionBuilder::stencil("2d5pt", "16x16", "f64")
             .temporal(2)
+            .backend(Backend::cpu(2))
+            .mode(ExecMode::Persistent)
             .seed(42);
         if let Some(f) = farm {
             b = b.farm(f);
